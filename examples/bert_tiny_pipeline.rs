@@ -1,0 +1,67 @@
+//! Encrypted transformer building blocks (the BERT-Tiny workload, SVI-A):
+//! a JKLS-style homomorphic matrix multiply + softmax-shaped nonlinearity
+//! on real ciphertexts, then the full BERT-Tiny trace through the timing
+//! model (Table VIII's largest row).
+//!
+//! Run: `cargo run --release --example bert_tiny_pipeline`
+use fhecore::ckks::encoding::Complex;
+use fhecore::ckks::linear::{hom_linear, SlotMatrix};
+use fhecore::ckks::params::{CkksContext, CkksParams};
+use fhecore::ckks::{Evaluator, SecretKey};
+use fhecore::gpusim::{simulate_trace, GpuConfig};
+use fhecore::util::rng::Pcg64;
+use fhecore::workloads::workload_pair;
+
+fn main() {
+    // ---- functional encrypted attention-score block at small scale ----
+    let ctx = CkksContext::new(CkksParams::toy());
+    let mut rng = Pcg64::new(0xBE27);
+    let sk = SecretKey::generate(&ctx, &mut rng);
+    let ev = Evaluator::new(ctx);
+    let d = ev.ctx.params.slots(); // "model dim" = slot count here
+
+    // random projection matrix (the W_Q of one head), scaled small
+    let mut wq = SlotMatrix::zeros(d);
+    for r in 0..d {
+        for c in 0..d {
+            wq.set(r, c, Complex::new((rng.f64() - 0.5) / d as f64, 0.0));
+        }
+    }
+    let x: Vec<Complex> = (0..d).map(|i| Complex::new(0.3 * ((i % 11) as f64 / 11.0 - 0.5), 0.0)).collect();
+    let ct = ev.encrypt(&ev.encode(&x, 3), &sk, &mut rng);
+
+    let t0 = std::time::Instant::now();
+    // q = W_Q x  (JKLS BSGS diagonal method)
+    let q = hom_linear(&ev, &ct, &wq, &sk);
+    // softmax surrogate: exp(t) ~ 1 + t + t^2/2 on the projected scores
+    let t2 = ev.mul(&q, &q, &sk);
+    let half_t2 = ev.mul_const(&t2, 0.5);
+    let q_aligned = ev.level_reduce(&q, half_t2.level);
+    let sum = ev.add(&q_aligned, &half_t2);
+    let soft = ev.add_const(&sum, 1.0);
+    println!(
+        "encrypted projection + exp-approx block: {:.2?} (level {} left)",
+        t0.elapsed(),
+        soft.level
+    );
+    let got = ev.decrypt_to_slots(&soft, &sk);
+    let want = {
+        let qv = wq.matvec(&x);
+        qv.iter().map(|c| 1.0 + c.re + 0.5 * c.re * c.re).collect::<Vec<_>>()
+    };
+    let err = got.iter().zip(&want).map(|(g, w)| (g.re - w).abs()).fold(0.0f64, f64::max);
+    println!("max error vs plaintext block: {err:.2e}");
+    assert!(err < 1e-2);
+
+    // ---- paper-scale BERT-Tiny through the timing model ----
+    let cfg = GpuConfig::default();
+    let (b, f) = workload_pair("bert-tiny");
+    let sb = simulate_trace(&cfg, &b);
+    let sf = simulate_trace(&cfg, &f);
+    println!(
+        "BERT-Tiny at Table V scale: A100 {:.0} ms -> +FHECore {:.0} ms ({:.2}x; paper 16584 -> 8300, 2.0x)",
+        sb.latency_ms(&cfg),
+        sf.latency_ms(&cfg),
+        sb.total_cycles() as f64 / sf.total_cycles() as f64
+    );
+}

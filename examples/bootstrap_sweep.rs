@@ -1,0 +1,48 @@
+//! The Fig. 8 experiment as a runnable binary: functional bootstrap on a
+//! real (small) ciphertext + the paper-scale FFTIter sensitivity sweep
+//! through the timing model.
+//!
+//! Run: `cargo run --release --example bootstrap_sweep`
+use fhecore::ckks::bootstrap::{bootstrap, BootstrapConfig};
+use fhecore::ckks::encoding::Complex;
+use fhecore::ckks::params::{CkksContext, CkksParams, WidthProfile};
+use fhecore::ckks::{Evaluator, SecretKey};
+use fhecore::util::rng::Pcg64;
+
+fn main() {
+    // ---- functional bootstrap at small scale ----
+    let params = CkksParams {
+        n: 64,
+        depth: 19,
+        scale_bits: 40,
+        dnum: 4,
+        profile: WidthProfile::Wide,
+        sigma: 3.2,
+    };
+    let ctx = CkksContext::new(params);
+    let mut rng = Pcg64::new(0xB00);
+    let sk = SecretKey::generate(&ctx, &mut rng);
+    let ev = Evaluator::new(ctx);
+    let slots = ev.ctx.params.slots();
+    let z: Vec<Complex> = (0..slots)
+        .map(|i| Complex::new(0.2 * ((i % 5) as f64 - 2.0), 0.0))
+        .collect();
+    let ct0 = ev.encrypt(&ev.encode(&z, 0), &sk, &mut rng);
+    println!("input: exhausted ciphertext at level {}", ct0.level);
+    let t0 = std::time::Instant::now();
+    let boosted = bootstrap(&ev, &ct0, &BootstrapConfig::default(), &sk);
+    let err = ev
+        .decrypt_to_slots(&boosted, &sk)
+        .iter()
+        .zip(&z)
+        .map(|(a, b)| (a.re - b.re).abs())
+        .fold(0.0f64, f64::max);
+    println!(
+        "functional bootstrap: level 0 -> {} in {:.2?}, max message error {err:.3}",
+        boosted.level,
+        t0.elapsed()
+    );
+
+    // ---- paper-scale Fig. 8 sweep ----
+    print!("{}", fhecore::tables::fig8());
+}

@@ -1,0 +1,56 @@
+//! Quickstart: encrypt a vector, compute on it homomorphically, decrypt —
+//! then ask the co-design stack what FHECore would buy you on this op mix.
+//!
+//! Run: `cargo run --release --example quickstart`
+use fhecore::ckks::encoding::Complex;
+use fhecore::ckks::params::{CkksContext, CkksParams};
+use fhecore::ckks::{Evaluator, SecretKey};
+use fhecore::codegen::{Backend, Compiler, SimParams};
+use fhecore::gpusim::{simulate_trace, GpuConfig};
+use fhecore::util::rng::Pcg64;
+
+fn main() {
+    // 1. Client side: keys, encode, encrypt.
+    let ctx = CkksContext::new(CkksParams::toy());
+    let mut rng = Pcg64::new(42);
+    let sk = SecretKey::generate(&ctx, &mut rng);
+    let ev = Evaluator::new(ctx);
+    let slots = ev.ctx.params.slots();
+    let xs: Vec<Complex> = (0..slots).map(|i| Complex::new(0.05 * (i % 10) as f64, 0.0)).collect();
+    let ct = ev.encrypt(&ev.encode(&xs, 3), &sk, &mut rng);
+    println!("encrypted {} slots at level {}", slots, ct.level);
+
+    // 2. Server side: compute (2x + 1)^2 without ever seeing x.
+    let doubled = ev.mul_const(&ct, 2.0);
+    let shifted = ev.add_const(&doubled, 1.0);
+    let squared = ev.mul(&shifted, &shifted, &sk);
+    println!("computed (2x+1)^2 homomorphically, level now {}", squared.level);
+
+    // 3. Client side: decrypt and check.
+    let out = ev.decrypt_to_slots(&squared, &sk);
+    let worst = out
+        .iter()
+        .enumerate()
+        .map(|(i, c)| (c.re - (2.0 * 0.05 * (i % 10) as f64 + 1.0).powi(2)).abs())
+        .fold(0.0f64, f64::max);
+    println!("max error vs plaintext: {worst:.2e}");
+
+    // 4. Co-design: what does this op mix cost on A100 vs A100+FHECore?
+    let cfg = GpuConfig::default();
+    let p = SimParams::paper_primitive();
+    let (b, f) = (Compiler::new(Backend::A100), Compiler::new(Backend::A100Fhec));
+    let mut base = b.ptmult(&p); // mul_const
+    base.extend(b.ptadd(&p));
+    base.extend(b.hemult(&p));
+    let mut fhec = f.ptmult(&p);
+    fhec.extend(f.ptadd(&p));
+    fhec.extend(f.hemult(&p));
+    let sb = simulate_trace(&cfg, &base);
+    let sf = simulate_trace(&cfg, &fhec);
+    println!(
+        "same pipeline at paper scale (N=2^16, L=26): A100 {:.0} us -> +FHECore {:.0} us ({:.2}x)",
+        sb.latency_us(&cfg),
+        sf.latency_us(&cfg),
+        sb.total_cycles() as f64 / sf.total_cycles() as f64
+    );
+}

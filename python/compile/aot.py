@@ -1,0 +1,117 @@
+"""AOT compiler: lower the L2 graphs to HLO *text* artifacts.
+
+Interchange format is HLO text, NOT ``lowered.compile().serialize()``:
+jax >= 0.5 emits HloModuleProto with 64-bit instruction ids which the
+``xla`` crate's xla_extension 0.5.1 rejects (``proto.id() <= INT_MAX``);
+the text parser reassigns ids and round-trips cleanly (see
+/opt/xla-example/README.md).
+
+Each artifact is a fixed-shape entrypoint; twiddle/conversion matrices are
+runtime inputs so a single artifact serves every modulus.  A manifest
+(``artifacts/manifest.json``) records argument order/shape/dtype for the
+rust runtime.  Usage:  cd python && python -m compile.aot --out ../artifacts
+"""
+
+import argparse
+import json
+import pathlib
+
+import jax
+import jax.numpy as jnp
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .kernels.modmatmul import modmatmul
+
+U32 = jnp.uint32
+
+
+def to_hlo_text(lowered) -> str:
+    """StableHLO -> XlaComputation -> HLO text (see module docstring)."""
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def s(*shape):
+    return jax.ShapeDtypeStruct(shape, U32)
+
+
+def entries():
+    """(name, jitted fn, example args, metadata) for every artifact."""
+    scalar = s()
+
+    def ntt_shapes(n, n1):
+        n2 = n // n1
+        return [s(n), s(n), s(n1, n1), s(n1, n2), s(n2, n2), scalar, scalar]
+
+    def intt_shapes(n, n1):
+        n2 = n // n1
+        return [s(n), s(n1, n1), s(n1, n2), s(n2, n2), s(n), scalar, scalar]
+
+    def polymul_shapes(n, n1):
+        n2 = n // n1
+        mats = [s(n1, n1), s(n1, n2), s(n2, n2)]
+        return ([s(n), s(n), s(n)] + mats
+                + [s(n1, n1), s(n1, n2), s(n2, n2), s(n), scalar, scalar])
+
+    mm16 = lambda a, b, q, mu: modmatmul(a, b, q, mu, tile_n=8)
+    mm256 = lambda a, b, q, mu: modmatmul(a, b, q, mu, tile_n=8)
+
+    out = [
+        ("modmatmul_16", mm16, [s(16, 16), s(16, 16), s(16,), s(16,)],
+         {"kind": "modmatmul", "m": 16, "k": 16, "n": 16}),
+        ("modmatmul_256", mm256,
+         [s(256, 256), s(256, 256), s(256,), s(256,)],
+         {"kind": "modmatmul", "m": 256, "k": 256, "n": 256}),
+        ("ntt_256", model.ntt_negacyclic, ntt_shapes(256, 16),
+         {"kind": "ntt", "n": 256, "n1": 16}),
+        ("intt_256", model.intt_negacyclic, intt_shapes(256, 16),
+         {"kind": "intt", "n": 256, "n1": 16}),
+        ("ntt_4096", model.ntt_negacyclic, ntt_shapes(4096, 64),
+         {"kind": "ntt", "n": 4096, "n1": 64}),
+        ("intt_4096", model.intt_negacyclic, intt_shapes(4096, 64),
+         {"kind": "intt", "n": 4096, "n1": 64}),
+        ("baseconv_16x8_256", model.baseconv,
+         [s(16, 256), s(16, 1), s(16, 1), s(16, 1), s(16, 8), s(8,), s(8,)],
+         {"kind": "baseconv", "alpha_pad": 16, "l": 8, "n": 256}),
+        ("model", model.polymul_negacyclic, polymul_shapes(256, 16),
+         {"kind": "polymul", "n": 256, "n1": 16}),
+    ]
+    return out
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--out", default="../artifacts",
+                    help="artifacts directory (or a single .hlo.txt path, "
+                         "in which case its parent directory is used)")
+    args = ap.parse_args()
+    out = pathlib.Path(args.out)
+    if out.suffix == ".txt":   # Makefile sentinel form: artifacts/model.hlo.txt
+        out = out.parent
+    out.mkdir(parents=True, exist_ok=True)
+
+    manifest = {}
+    for name, fn, shapes, meta in entries():
+        lowered = jax.jit(fn).lower(*shapes)
+        text = to_hlo_text(lowered)
+        path = out / f"{name}.hlo.txt"
+        path.write_text(text)
+        manifest[name] = {
+            **meta,
+            "file": path.name,
+            "args": [list(sh.shape) for sh in shapes],
+            "dtype": "u32",
+            "returns_tuple1": True,
+        }
+        print(f"  {path}  ({len(text)} chars, {len(shapes)} args)")
+
+    (out / "manifest.json").write_text(json.dumps(manifest, indent=2))
+    print(f"wrote {out / 'manifest.json'}")
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,146 @@
+"""Shared modular-arithmetic helpers for the FHECore kernels.
+
+FHECore's PE computes ``R <- (R + a*b) mod q`` over 32-bit operands with a
+built-in Barrett reduction pipeline (paper SIV-C).  We mirror that contract
+exactly: moduli are NTT-friendly primes in ``[2^29, 2^30)`` so that every
+64-bit intermediate of the Barrett sequence fits in a machine word:
+
+    k  = 30                      (q < 2^k, q >= 2^(k-1))
+    mu = floor(2^(2k) / q)       (precomputed per modulus, < 2^31)
+    t  = ((x >> (k-1)) * mu) >> (k+1)
+    r  = x - t*q                 (r < 3q -> at most two corrections)
+
+This is the classical Barrett bound (Shoup, "A Computational Introduction
+to Number Theory and Algebra", ch. 3); validity needs x < 2^(2k) which
+holds for any product of two residues and for partial sums reduced per
+MAC step, exactly like the hardware PE.
+"""
+
+import jax
+import jax.numpy as jnp
+
+jax.config.update("jax_enable_x64", True)
+
+BARRETT_K = 30
+#: Smallest modulus the Barrett pipeline accepts (mu <= 2^(k+1) needs this).
+Q_MIN = 1 << (BARRETT_K - 1)
+#: Exclusive upper bound on moduli (32-bit datapath, 30-bit primes).
+Q_MAX = 1 << BARRETT_K
+
+
+def barrett_mu(q: int) -> int:
+    """Precomputed Barrett constant ``mu = floor(2^60 / q)`` for modulus q."""
+    assert Q_MIN <= q < Q_MAX, f"modulus {q} outside [2^29, 2^30)"
+    return (1 << (2 * BARRETT_K)) // q
+
+
+def barrett_reduce(x, q, mu):
+    """Barrett-reduce ``x < 2^60`` modulo ``q`` (all u64). Vectorized.
+
+    This is the 6-stage PE pipeline of FHECore in arithmetic form:
+    mul-hi estimate, multiply-subtract, and two conditional corrections.
+    """
+    x = x.astype(jnp.uint64)
+    q = q.astype(jnp.uint64)
+    mu = mu.astype(jnp.uint64)
+    t = ((x >> jnp.uint64(BARRETT_K - 1)) * mu) >> jnp.uint64(BARRETT_K + 1)
+    r = x - t * q
+    r = jnp.where(r >= q, r - q, r)
+    r = jnp.where(r >= q, r - q, r)
+    return r
+
+
+def mulmod(a, b, q, mu):
+    """Elementwise ``a * b mod q`` through the Barrett pipeline (u64 in/out)."""
+    return barrett_reduce(a.astype(jnp.uint64) * b.astype(jnp.uint64), q, mu)
+
+
+def addmod(a, b, q):
+    """Elementwise ``a + b mod q`` (u64 in/out, single conditional subtract)."""
+    q = q.astype(jnp.uint64)
+    s = a.astype(jnp.uint64) + b.astype(jnp.uint64)
+    return jnp.where(s >= q, s - q, s)
+
+
+def submod(a, b, q):
+    """Elementwise ``a - b mod q`` (u64 in/out)."""
+    q = q.astype(jnp.uint64)
+    a = a.astype(jnp.uint64)
+    b = b.astype(jnp.uint64)
+    return jnp.where(a >= b, a - b, a + q - b)
+
+
+# --------------------------------------------------------------------------
+# Host-side (pure python int) number theory used to build kernel inputs.
+# --------------------------------------------------------------------------
+
+def is_prime(n: int) -> bool:
+    """Deterministic Miller-Rabin for n < 3.3e24 (we only need < 2^30)."""
+    if n < 2:
+        return False
+    for p in (2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37):
+        if n % p == 0:
+            return n == p
+    d, s = n - 1, 0
+    while d % 2 == 0:
+        d //= 2
+        s += 1
+    for a in (2, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37):
+        x = pow(a, d, n)
+        if x in (1, n - 1):
+            continue
+        for _ in range(s - 1):
+            x = x * x % n
+            if x == n - 1:
+                break
+        else:
+            return False
+    return True
+
+
+def ntt_primes(n: int, count: int) -> list[int]:
+    """First ``count`` primes q = 1 (mod 2n) descending from 2^30.
+
+    q = 1 (mod 2n) guarantees a primitive 2n-th root of unity exists,
+    which is what the negacyclic NTT of ring dimension n requires.
+    """
+    primes = []
+    step = 2 * n
+    q = (Q_MAX - 1) - ((Q_MAX - 1) % step) + 1  # largest candidate = 1 mod 2n
+    while len(primes) < count and q > Q_MIN:
+        if is_prime(q):
+            primes.append(q)
+        q -= step
+    if len(primes) < count:
+        raise ValueError(f"not enough 30-bit NTT primes for n={n}")
+    return primes
+
+
+def find_primitive_root(q: int) -> int:
+    """Smallest generator of (Z/q)^* for prime q."""
+    factors = []
+    phi = q - 1
+    m = phi
+    d = 2
+    while d * d <= m:
+        if m % d == 0:
+            factors.append(d)
+            while m % d == 0:
+                m //= d
+        d += 1
+    if m > 1:
+        factors.append(m)
+    g = 2
+    while True:
+        if all(pow(g, phi // f, q) != 1 for f in factors):
+            return g
+        g += 1
+
+
+def root_of_unity(order: int, q: int) -> int:
+    """A primitive ``order``-th root of unity mod prime q (order | q-1)."""
+    assert (q - 1) % order == 0
+    g = find_primitive_root(q)
+    w = pow(g, (q - 1) // order, q)
+    assert pow(w, order, q) == 1 and pow(w, order // 2, q) == q - 1
+    return w

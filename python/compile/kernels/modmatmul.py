@@ -1,0 +1,119 @@
+"""L1 Pallas kernel: the FHECore modulo matrix-multiply primitive.
+
+The hardware unit is a 16x8 systolic array computing a 16x8x16 MMA where
+each PE performs ``R <- (R + a*b) mod q`` with built-in Barrett reduction
+(paper SIV-C/D).  The Pallas mapping (SDESIGN SHardware-Adaptation):
+
+  * one grid step   <-> one FHEC.16816 instruction
+  * VMEM block      <-> the register-file fragment a warp feeds the unit
+  * the fused tile product + per-MAC Barrett <-> the PE pipeline
+  * per-output-column moduli (q[j], mu[j])   <-> programming each systolic
+    column with its own Barrett constants — the "mixed-moduli" mode that
+    Base Conversion requires (paper SV-B).
+
+The kernel is shape-generic over (M, K, N) with M, N multiples of the tile
+and K a multiple of TILE_K; ``interpret=True`` because the CPU PJRT client
+cannot execute Mosaic custom-calls (compile-path constraint, not a design
+choice).
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+from .common import barrett_reduce
+
+TILE_M = 16
+TILE_N = 8
+TILE_K = 16
+
+
+def _modmatmul_kernel(a_ref, b_ref, q_ref, mu_ref, o_ref, *, k_total: int):
+    """One (16 x TILE_N) output tile; loops over K in 16-wide PE passes.
+
+    The accumulator is Barrett-reduced after every 16-element MAC group,
+    mirroring the output-stationary PE which reduces on every MAC: the
+    running value therefore never exceeds 16*q^2-ish < 2^60 and the
+    Barrett validity bound holds throughout.
+    """
+    q = q_ref[...].astype(jnp.uint64)[None, :]        # [1, TILE_N]
+    mu = mu_ref[...].astype(jnp.uint64)[None, :]
+
+    def body(kk, acc):
+        a = jax.lax.dynamic_slice(
+            a_ref[...], (0, kk * TILE_K), (TILE_M, TILE_K)
+        ).astype(jnp.uint64)                           # [16, 16]
+        b = jax.lax.dynamic_slice(
+            b_ref[...], (kk * TILE_K, 0), (TILE_K, o_ref.shape[1])
+        ).astype(jnp.uint64)                           # [16, TILE_N]
+        # Per-MAC products, each < 2^60; reduce, then accumulate: the sum of
+        # TILE_K reduced products (< 2^34) plus acc (< q) stays < 2^60.
+        prod = a[:, :, None] * b[None, :, :]           # [16, 16, TILE_N]
+        prod = barrett_reduce(prod, q[:, None, :], mu[:, None, :])
+        acc = barrett_reduce(acc + jnp.sum(prod, axis=1), q, mu)
+        return acc
+
+    acc = jnp.zeros((TILE_M, o_ref.shape[1]), dtype=jnp.uint64)
+    acc = jax.lax.fori_loop(0, k_total // TILE_K, body, acc)
+    o_ref[...] = acc.astype(jnp.uint32)
+
+
+@functools.partial(jax.jit, static_argnames=("tile_n",))
+def modmatmul(a, b, q, mu, tile_n: int = TILE_N):
+    """``C[M,N] = A[M,K] @ B[K,N] mod q[N]`` with per-column moduli.
+
+    Args:
+      a:  u32[M, K]  left operand (rows of residues).
+      b:  u32[K, N]  right operand.
+      q:  u32[N]     modulus for each output column (uniform NTT case:
+                     broadcast one prime; BaseConv case: one per column).
+      mu: u32[N]     Barrett constants ``floor(2^60/q)``.
+      tile_n: output-tile width; 8 matches FHEC.16816 exactly, 16 runs the
+        two hardware passes as one grid step (identical semantics).
+
+    Returns: u32[M, N].
+    """
+    m, k = a.shape
+    k2, n = b.shape
+    assert k == k2, "inner dimensions must agree"
+
+    # Tiles that don't fill the 16x8x16 unit are zero-padded, exactly as the
+    # driver pads ragged fragments before issuing FHEC.16816 (zero rows/cols
+    # contribute nothing; padded output is sliced away, padded moduli columns
+    # repeat the last real modulus so the Barrett pipeline stays valid).
+    mp = -m % TILE_M
+    kp = -k % TILE_K
+    np_ = -n % tile_n
+    if mp or kp or np_:
+        a = jnp.pad(a, ((0, mp), (0, kp)))
+        b = jnp.pad(b, ((0, kp), (0, np_)))
+        q = jnp.concatenate([q, jnp.broadcast_to(q[-1:], (np_,))])
+        mu = jnp.concatenate([mu, jnp.broadcast_to(mu[-1:], (np_,))])
+        out = modmatmul(a, b, q, mu, tile_n=tile_n)
+        return out[:m, :n]
+
+    grid = (m // TILE_M, n // tile_n)
+    return pl.pallas_call(
+        functools.partial(_modmatmul_kernel, k_total=k),
+        grid=grid,
+        in_specs=[
+            pl.BlockSpec((TILE_M, k), lambda i, j: (i, 0)),
+            pl.BlockSpec((k, tile_n), lambda i, j: (0, j)),
+            pl.BlockSpec((tile_n,), lambda i, j: (j,)),
+            pl.BlockSpec((tile_n,), lambda i, j: (j,)),
+        ],
+        out_specs=pl.BlockSpec((TILE_M, tile_n), lambda i, j: (i, j)),
+        out_shape=jax.ShapeDtypeStruct((m, n), jnp.uint32),
+        interpret=True,
+    )(a, b, q, mu)
+
+
+def fhec_instruction_count(m: int, n: int, k: int) -> int:
+    """Number of FHEC.16816 instructions one ``modmatmul`` call maps to.
+
+    Used by the Rust codegen cross-checks (one grid step with tile_n=16 is
+    two 16x8x16 passes).
+    """
+    return (m // TILE_M) * (n // TILE_N) * (k // TILE_K)

@@ -1,0 +1,110 @@
+"""Pure-jnp oracles for the L1 kernel and L2 graphs (no Pallas, no tiling).
+
+Everything here is the mathematically transparent version used by pytest
+(and hypothesis) to pin down the kernels: plain u64 arithmetic with
+per-product reduction so no intermediate can overflow.
+"""
+
+import jax.numpy as jnp
+
+from .common import barrett_reduce  # noqa: F401  (re-exported for tests)
+
+
+def modmatmul_ref(a, b, q):
+    """``A @ B mod q`` with per-output-column moduli — O(MKN) u64 oracle.
+
+    Products are reduced individually and partial sums re-reduced every 16
+    terms so the oracle is exact for any K (not just the kernel's bound).
+    """
+    a = a.astype(jnp.uint64)
+    b = b.astype(jnp.uint64)
+    q = q.astype(jnp.uint64)[None, :]  # [1, N]
+    m, k = a.shape
+    _, n = b.shape
+    acc = jnp.zeros((m, n), dtype=jnp.uint64)
+    for k0 in range(0, k, 16):
+        chunk = a[:, k0:k0 + 16, None] * b[None, k0:k0 + 16, :]  # [M,<=16,N]
+        chunk = chunk % q[:, None, :]
+        acc = (acc + jnp.sum(chunk, axis=1)) % q
+    return acc.astype(jnp.uint32)
+
+
+def ntt_naive_ref(a, psi: int, q: int):
+    """Negacyclic NTT by definition: a_hat[k] = sum_j a[j] psi^(j(2k+1)).
+
+    Equivalent form: scale by psi^j then a cyclic DFT with omega = psi^2.
+    O(N^2), python-int twiddles — the ground truth for every NTT variant.
+    """
+    n = int(a.shape[0])
+    av = [int(x) for x in a]
+    out = []
+    for k in range(n):
+        s = 0
+        for j in range(n):
+            s = (s + av[j] * pow(psi, j * (2 * k + 1), q)) % q
+        out.append(s)
+    return jnp.array(out, dtype=jnp.uint32)
+
+
+def intt_naive_ref(a_hat, psi: int, q: int):
+    """Inverse of :func:`ntt_naive_ref` (by definition, O(N^2))."""
+    n = int(a_hat.shape[0])
+    psi_inv = pow(psi, -1, q)
+    n_inv = pow(n, -1, q)
+    av = [int(x) for x in a_hat]
+    out = []
+    for j in range(n):
+        s = 0
+        for k in range(n):
+            s = (s + av[k] * pow(psi_inv, j * (2 * k + 1), q)) % q
+        out.append(s * n_inv % q)
+    return jnp.array(out, dtype=jnp.uint32)
+
+
+def negacyclic_polymul_ref(a, b, q: int):
+    """Schoolbook product in Z_q[x]/(x^N + 1) — oracle for the L2 pipeline."""
+    n = int(a.shape[0])
+    av = [int(x) for x in a]
+    bv = [int(x) for x in b]
+    out = [0] * n
+    for i in range(n):
+        if av[i] == 0:
+            continue
+        for j in range(n):
+            k = i + j
+            term = av[i] * bv[j]
+            if k < n:
+                out[k] = (out[k] + term) % q
+            else:
+                out[k - n] = (out[k - n] - term) % q
+    return jnp.array(out, dtype=jnp.uint32)
+
+
+def baseconv_ref(residues, p_moduli, q_moduli):
+    """RNS base conversion (Eq. 3) with exact python ints.
+
+    residues: u32[alpha, N] — residues of each coefficient w.r.t. P.
+    Returns u32[L, N]: the approximate base-conversion representation
+    a_hat[i] = sum_j ([a_j * Phat_j^{-1}]_{p_j} * Phat_j) mod q_i, i.e. the
+    standard HPS-style fast base conversion (no exact CRT lift), matching
+    Eq. (3) of the paper.
+    """
+    alpha = len(p_moduli)
+    pstar = 1
+    for p in p_moduli:
+        pstar *= p
+    phat = [pstar // p for p in p_moduli]
+    phat_inv = [pow(phat[j] % p_moduli[j], -1, p_moduli[j]) for j in range(alpha)]
+
+    n = int(residues.shape[1])
+    rows = []
+    for qi in q_moduli:
+        row = []
+        for c in range(n):
+            s = 0
+            for j in range(alpha):
+                y = int(residues[j, c]) * phat_inv[j] % p_moduli[j]
+                s += y * (phat[j] % qi)
+            row.append(s % qi)
+        rows.append(row)
+    return jnp.array(rows, dtype=jnp.uint32)

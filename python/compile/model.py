@@ -1,0 +1,167 @@
+"""L2: the FHE compute graphs (4-step NTT, base conversion, polymul).
+
+These are the modulo-linear transformations the paper identifies as the
+dominant FHE kernels (SII-A): the hierarchical 4-step NTT (Eq. 2/4) and the
+RNS base conversion (Eq. 3/5).  Both are expressed as compositions of the
+L1 ``modmatmul`` Pallas kernel — the FHECore primitive — plus elementwise
+Barrett ops (which the paper maps to CUDA cores, and we map to plain XLA
+ops).  Everything is lowered once by ``aot.py``; twiddle/conversion
+matrices are runtime *inputs*, so one artifact serves every modulus.
+
+Index conventions for the cyclic 4-step (N = N1*N2):
+  input  j  = j1*N2 + j2  (row-major reshape to [N1, N2])
+  output k  = k1 + k2*N1  (flatten of the transposed result)
+  B = W1 @ A            W1[k1, j1] = w_N1^(j1*k1)          (step 1)
+  C = B  o TW           TW[k1, j2] = w_N^(j2*k1)           (step 2, twiddle)
+  D = C @ W2            W2[j2, k2] = w_N2^(j2*k2)          (step 3)
+  out = flatten(D^T)                                        (step 4)
+A negacyclic NTT is the cyclic one after scaling a[j] by psi^j (w = psi^2);
+its inverse post-scales by psi^(-j) * N^(-1).
+"""
+
+import jax.numpy as jnp
+
+from .kernels.common import mulmod
+from .kernels.modmatmul import modmatmul
+
+
+def cyclic4step(a, w1, tw, w2, q, mu):
+    """Cyclic DFT over Z_q via the Bailey 4-step decomposition.
+
+    a: u32[N]; w1: u32[N1,N1]; tw: u32[N1,N2]; w2: u32[N2,N2];
+    q, mu: u32 scalars (shape-[] arrays).  Returns u32[N], natural order.
+    """
+    n1 = w1.shape[0]
+    n2 = w2.shape[0]
+    mat = a.reshape(n1, n2)
+    qv = jnp.broadcast_to(q, (n2,)).astype(jnp.uint32)
+    muv = jnp.broadcast_to(mu, (n2,)).astype(jnp.uint32)
+    b = modmatmul(w1, mat, qv, muv)                       # [N1, N2]  step 1
+    c = mulmod(b, tw, q, mu).astype(jnp.uint32)           # step 2 (twiddle)
+    d = modmatmul(c, w2, qv, muv)                         # [N1, N2]  step 3
+    return d.T.reshape(-1)                                # step 4
+
+
+def ntt_negacyclic(a, psi_pows, w1, tw, w2, q, mu):
+    """Forward negacyclic NTT: scale by psi^j, then the cyclic 4-step."""
+    scaled = mulmod(a, psi_pows, q, mu).astype(jnp.uint32)
+    return cyclic4step(scaled, w1, tw, w2, q, mu)
+
+
+def intt_negacyclic(a_hat, w1_inv, tw_inv, w2_inv, psi_inv_n_inv_pows, q, mu):
+    """Inverse negacyclic NTT: cyclic 4-step with w^-1 matrices, then the
+    combined psi^(-j) * N^(-1) elementwise scale."""
+    y = cyclic4step(a_hat, w1_inv, tw_inv, w2_inv, q, mu)
+    return mulmod(y, psi_inv_n_inv_pows, q, mu).astype(jnp.uint32)
+
+
+def pointwise_mulmod(a_hat, b_hat, q, mu):
+    """Evaluation-domain (slot-wise) product — the CUDA-core kernel class."""
+    return mulmod(a_hat, b_hat, q, mu).astype(jnp.uint32)
+
+
+def polymul_negacyclic(a, b, psi_pows, w1, tw, w2,
+                       w1_inv, tw_inv, w2_inv, psi_inv_n_inv_pows, q, mu):
+    """Full polynomial product in Z_q[x]/(x^N+1): NTT, o, INTT.
+
+    This is the paper's core compute pipeline (the body of HEMult /
+    KeySwitch inner loops) and the flagship ``model.hlo.txt`` artifact.
+    """
+    a_hat = ntt_negacyclic(a, psi_pows, w1, tw, w2, q, mu)
+    b_hat = ntt_negacyclic(b, psi_pows, w1, tw, w2, q, mu)
+    c_hat = pointwise_mulmod(a_hat, b_hat, q, mu)
+    return intt_negacyclic(c_hat, w1_inv, tw_inv, w2_inv,
+                           psi_inv_n_inv_pows, q, mu)
+
+
+def baseconv(rx, phat_inv, p, mu_p, conv, q, mu_q):
+    """RNS base conversion (Eq. 5) as a mixed-moduli modmatmul.
+
+    rx:       u32[alpha_pad, N]   residues w.r.t. P (zero rows as padding —
+                                  zero contributes nothing to the sum).
+    phat_inv: u32[alpha_pad, 1]   [Phat_j^{-1}]_{p_j}.
+    p, mu_p:  u32[alpha_pad, 1]   source moduli + Barrett constants
+                                  (padding rows must hold a valid modulus).
+    conv:     u32[alpha_pad, L]   conv[j, i] = [Phat_j]_{q_i}.
+    q, mu_q:  u32[L]              target moduli; after the transpose below
+                                  each lands on one *output column* —
+                                  exactly the paper's per-systolic-column
+                                  Barrett programming (SV-B).
+
+    Returns u32[L, N].
+    """
+    y = mulmod(rx, phat_inv, p, mu_p).astype(jnp.uint32)      # [alpha_pad, N]
+    out_t = modmatmul(y.T, conv, q, mu_q, tile_n=int(q.shape[0]))  # [N, L]
+    return out_t.T
+
+
+# --------------------------------------------------------------------------
+# Host-side builders for the runtime-input matrices (python ints, build/test
+# path only — the rust coordinator precomputes the same tables natively).
+# --------------------------------------------------------------------------
+
+def build_ntt_tables(n: int, n1: int, q: int):
+    """All constant inputs for ntt/intt_negacyclic at ring dim n = n1*n2."""
+    from .kernels.common import barrett_mu, root_of_unity
+
+    n2 = n // n1
+    psi = root_of_unity(2 * n, q)
+    w = psi * psi % q
+    w1 = pow(w, n2, q)     # w_N1
+    w2 = pow(w, n1, q)     # w_N2
+    wi, w1i, w2i = pow(w, -1, q), pow(w1, -1, q), pow(w2, -1, q)
+    n_inv = pow(n, -1, q)
+    psi_inv = pow(psi, -1, q)
+
+    def vand(base, rows, cols, qq):
+        return jnp.array([[pow(base, r * c, qq) for c in range(cols)]
+                          for r in range(rows)], dtype=jnp.uint32)
+
+    tables = {
+        "psi_pows": jnp.array([pow(psi, j, q) for j in range(n)],
+                              dtype=jnp.uint32),
+        "w1": vand(w1, n1, n1, q),
+        "tw": jnp.array([[pow(w, j2 * k1, q) for j2 in range(n2)]
+                         for k1 in range(n1)], dtype=jnp.uint32),
+        "w2": vand(w2, n2, n2, q),
+        "w1_inv": vand(w1i, n1, n1, q),
+        "tw_inv": jnp.array([[pow(wi, j2 * k1, q) for j2 in range(n2)]
+                             for k1 in range(n1)], dtype=jnp.uint32),
+        "w2_inv": vand(w2i, n2, n2, q),
+        "psi_inv_n_inv_pows": jnp.array(
+            [pow(psi_inv, j, q) * n_inv % q for j in range(n)],
+            dtype=jnp.uint32),
+        "q": jnp.uint32(q),
+        "mu": jnp.uint32(barrett_mu(q)),
+    }
+    return tables
+
+
+def build_baseconv_tables(p_moduli, q_moduli, n: int, alpha_pad: int = 16):
+    """Constant inputs for ``baseconv`` (padded to the kernel's K tile)."""
+    from .kernels.common import barrett_mu
+
+    alpha = len(p_moduli)
+    assert alpha <= alpha_pad
+    pstar = 1
+    for p in p_moduli:
+        pstar *= p
+    phat = [pstar // p for p in p_moduli]
+    phat_inv = [pow(phat[j] % p_moduli[j], -1, p_moduli[j])
+                for j in range(alpha)]
+
+    pad = alpha_pad - alpha
+    filler = p_moduli[0]  # any valid modulus; the padded rows are all-zero
+    col = lambda xs, f: jnp.array(xs + [f] * pad, dtype=jnp.uint32).reshape(-1, 1)
+    tables = {
+        "phat_inv": col(phat_inv, 0),
+        "p": col(list(p_moduli), filler),
+        "mu_p": col([barrett_mu(p) for p in p_moduli], barrett_mu(filler)),
+        "conv": jnp.array(
+            [[phat[j] % qi for qi in q_moduli] for j in range(alpha)]
+            + [[0] * len(q_moduli)] * pad, dtype=jnp.uint32),
+        "q": jnp.array(q_moduli, dtype=jnp.uint32),
+        "mu_q": jnp.array([barrett_mu(qi) for qi in q_moduli],
+                          dtype=jnp.uint32),
+    }
+    return tables

@@ -1,0 +1,132 @@
+"""L1 correctness: the Pallas modmatmul kernel vs the pure-jnp oracle.
+
+Integer arithmetic, so every comparison is exact equality — the CORE
+correctness signal for the FHECore primitive.
+"""
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from compile.kernels import common
+from compile.kernels.modmatmul import modmatmul, fhec_instruction_count
+from compile.kernels.ref import modmatmul_ref
+
+RNG = np.random.default_rng(0xFEC)
+PRIMES_32 = common.ntt_primes(32, 8)     # q = 1 mod 64, plenty for tests
+PRIMES_4096 = common.ntt_primes(4096, 4)
+
+
+def rand_residues(shape, q):
+    return jnp.array(RNG.integers(0, q, size=shape, dtype=np.uint64),
+                     dtype=jnp.uint32)
+
+
+def run_case(m, k, n, qs, tile_n=8):
+    q = jnp.array(qs, dtype=jnp.uint32)
+    mu = jnp.array([common.barrett_mu(int(x)) for x in qs], dtype=jnp.uint32)
+    a = rand_residues((m, k), min(qs))
+    b = rand_residues((k, n), min(qs))
+    got = modmatmul(a, b, q, mu, tile_n=tile_n)
+    want = modmatmul_ref(a, b, q)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_single_tile_uniform_modulus():
+    run_case(16, 16, 16, [PRIMES_32[0]] * 16)
+
+
+def test_single_tile_fhec_shape():
+    # Exactly one FHEC.16816: C[16,8] = A[16,16] x B[16,8].
+    run_case(16, 16, 8, [PRIMES_32[0]] * 8)
+    assert fhec_instruction_count(16, 8, 16) == 1
+
+
+def test_mixed_moduli_columns():
+    # The BaseConv mode: every output column under a different modulus.
+    run_case(16, 16, 8, PRIMES_32[:8])
+
+
+def test_multi_tile_grid():
+    run_case(64, 32, 32, [PRIMES_32[1]] * 32)
+
+
+def test_large_square():
+    run_case(128, 128, 64, [PRIMES_32[2]] * 64)
+
+
+def test_tile_n_16_equals_two_passes():
+    # tile_n=16 is two 16x8 hardware passes fused; results must be identical.
+    q = jnp.array([PRIMES_32[0]] * 16, dtype=jnp.uint32)
+    mu = jnp.array([common.barrett_mu(PRIMES_32[0])] * 16, dtype=jnp.uint32)
+    a = rand_residues((32, 32), PRIMES_32[0])
+    b = rand_residues((32, 16), PRIMES_32[0])
+    got8 = modmatmul(a, b, q, mu, tile_n=8)
+    got16 = modmatmul(a, b, q, mu, tile_n=16)
+    np.testing.assert_array_equal(np.asarray(got8), np.asarray(got16))
+
+
+def test_worst_case_operands():
+    # All operands at q-1: the maximal-magnitude accumulation path.
+    q_int = PRIMES_32[0]
+    q = jnp.array([q_int] * 8, dtype=jnp.uint32)
+    mu = jnp.array([common.barrett_mu(q_int)] * 8, dtype=jnp.uint32)
+    a = jnp.full((16, 16), q_int - 1, dtype=jnp.uint32)
+    b = jnp.full((16, 8), q_int - 1, dtype=jnp.uint32)
+    got = modmatmul(a, b, q, mu)
+    want = modmatmul_ref(a, b, q)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_identity_matrix():
+    q_int = PRIMES_32[3]
+    q = jnp.array([q_int] * 16, dtype=jnp.uint32)
+    mu = jnp.array([common.barrett_mu(q_int)] * 16, dtype=jnp.uint32)
+    eye = jnp.eye(16, dtype=jnp.uint32)
+    b = rand_residues((16, 16), q_int)
+    got = modmatmul(eye, b, q, mu, tile_n=16)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(b))
+
+
+@settings(max_examples=25, deadline=None)
+@given(
+    mi=st.integers(1, 4), ki=st.integers(1, 4), ni=st.integers(1, 4),
+    qidx=st.integers(0, 7), seed=st.integers(0, 2**31 - 1),
+)
+def test_hypothesis_shapes_and_moduli(mi, ki, ni, qidx, seed):
+    m, k, n = 16 * mi, 16 * ki, 8 * ni
+    q_int = PRIMES_32[qidx]
+    rng = np.random.default_rng(seed)
+    a = jnp.array(rng.integers(0, q_int, (m, k)), dtype=jnp.uint32)
+    b = jnp.array(rng.integers(0, q_int, (k, n)), dtype=jnp.uint32)
+    q = jnp.array([q_int] * n, dtype=jnp.uint32)
+    mu = jnp.array([common.barrett_mu(q_int)] * n, dtype=jnp.uint32)
+    got = modmatmul(a, b, q, mu)
+    want = modmatmul_ref(a, b, q)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+@settings(max_examples=50, deadline=None)
+@given(x=st.integers(0, 2**60 - 1), qidx=st.integers(0, 7))
+def test_barrett_reduce_matches_mod(x, qidx):
+    q = PRIMES_32[qidx]
+    got = common.barrett_reduce(
+        jnp.uint64(x), jnp.uint64(q), jnp.uint64(common.barrett_mu(q)))
+    assert int(got) == x % q
+
+
+def test_barrett_rejects_small_modulus():
+    with pytest.raises(AssertionError):
+        common.barrett_mu(12289)  # 14-bit prime: outside the PE's range
+
+
+def test_ntt_primes_properties():
+    for n in (32, 256, 4096):
+        for q in common.ntt_primes(n, 3):
+            assert common.Q_MIN <= q < common.Q_MAX
+            assert (q - 1) % (2 * n) == 0
+            assert common.is_prime(q)
+            psi = common.root_of_unity(2 * n, q)
+            assert pow(psi, n, q) == q - 1  # primitive: psi^N = -1

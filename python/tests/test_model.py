@@ -1,0 +1,157 @@
+"""L2 correctness: 4-step NTT / INTT / baseconv / polymul vs oracles."""
+
+import jax.numpy as jnp
+import numpy as np
+from hypothesis import given, settings, strategies as st
+
+from compile import model
+from compile.kernels import common
+from compile.kernels.ref import (
+    baseconv_ref, intt_naive_ref, negacyclic_polymul_ref, ntt_naive_ref)
+
+RNG = np.random.default_rng(7)
+
+
+def rand_poly(n, q):
+    return jnp.array(RNG.integers(0, q, n, dtype=np.uint64), dtype=jnp.uint32)
+
+
+def ntt_args(n, n1, q):
+    t = model.build_ntt_tables(n, n1, q)
+    return t
+
+
+def test_ntt256_matches_naive():
+    n, n1 = 256, 16
+    q = common.ntt_primes(n, 1)[0]
+    t = ntt_args(n, n1, q)
+    a = rand_poly(n, q)
+    got = model.ntt_negacyclic(a, t["psi_pows"], t["w1"], t["tw"], t["w2"],
+                               t["q"], t["mu"])
+    psi = common.root_of_unity(2 * n, q)
+    want = ntt_naive_ref(a, psi, q)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_intt_roundtrip_256():
+    n, n1 = 256, 16
+    q = common.ntt_primes(n, 1)[0]
+    t = ntt_args(n, n1, q)
+    a = rand_poly(n, q)
+    fwd = model.ntt_negacyclic(a, t["psi_pows"], t["w1"], t["tw"], t["w2"],
+                               t["q"], t["mu"])
+    back = model.intt_negacyclic(fwd, t["w1_inv"], t["tw_inv"], t["w2_inv"],
+                                 t["psi_inv_n_inv_pows"], t["q"], t["mu"])
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(a))
+
+
+def test_intt_matches_naive_inverse():
+    n, n1 = 64, 8
+    q = common.ntt_primes(n, 1)[0]
+    t = ntt_args(n, n1, q)
+    ahat = rand_poly(n, q)
+    got = model.intt_negacyclic(ahat, t["w1_inv"], t["tw_inv"], t["w2_inv"],
+                                t["psi_inv_n_inv_pows"], t["q"], t["mu"])
+    psi = common.root_of_unity(2 * n, q)
+    want = intt_naive_ref(ahat, psi, q)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_rectangular_decomposition_64():
+    # N1 != N2 exercises the twiddle-matrix orientation.
+    n, n1 = 64, 4
+    q = common.ntt_primes(n, 1)[0]
+    t = ntt_args(n, n1, q)
+    a = rand_poly(n, q)
+    got = model.ntt_negacyclic(a, t["psi_pows"], t["w1"], t["tw"], t["w2"],
+                               t["q"], t["mu"])
+    psi = common.root_of_unity(2 * n, q)
+    want = ntt_naive_ref(a, psi, q)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_polymul_pipeline_matches_schoolbook():
+    n, n1 = 64, 8
+    q = common.ntt_primes(n, 1)[0]
+    t = ntt_args(n, n1, q)
+    a, b = rand_poly(n, q), rand_poly(n, q)
+    got = model.polymul_negacyclic(
+        a, b, t["psi_pows"], t["w1"], t["tw"], t["w2"],
+        t["w1_inv"], t["tw_inv"], t["w2_inv"], t["psi_inv_n_inv_pows"],
+        t["q"], t["mu"])
+    want = negacyclic_polymul_ref(a, b, q)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_baseconv_matches_crt_reference():
+    n = 64
+    primes = common.ntt_primes(n, 12)
+    p_moduli, q_moduli = primes[:4], primes[4:12]
+    t = model.build_baseconv_tables(p_moduli, q_moduli, n)
+    rx = jnp.stack([rand_poly(n, p) for p in p_moduli]
+                   + [jnp.zeros(n, dtype=jnp.uint32)] * 12)
+    got = model.baseconv(rx, t["phat_inv"], t["p"], t["mu_p"], t["conv"],
+                         t["q"], t["mu_q"])
+    want = baseconv_ref(rx[:4], p_moduli, q_moduli)
+    np.testing.assert_array_equal(np.asarray(got), np.asarray(want))
+
+
+def test_baseconv_overshoot_invariant():
+    # HPS fast base conversion (Eq. 3) computes x + e*P_star for some
+    # 0 <= e < alpha (the approximation error term): verify the kernel's
+    # output is (x + e*P_star) mod q_i with ONE consistent e per coefficient,
+    # and that zero converts exactly (e = 0).
+    n = 64
+    primes = common.ntt_primes(n, 6)
+    p_moduli, q_moduli = primes[:2], primes[2:6]
+    alpha = len(p_moduli)
+    pstar = p_moduli[0] * p_moduli[1]
+    t = model.build_baseconv_tables(p_moduli, q_moduli, n)
+
+    x = 123457
+    rx_rows = [jnp.full(n, x % p, dtype=jnp.uint32) for p in p_moduli]
+    rx = jnp.stack(rx_rows + [jnp.zeros(n, dtype=jnp.uint32)] * 14)
+    got = np.asarray(model.baseconv(rx, t["phat_inv"], t["p"], t["mu_p"],
+                                    t["conv"], t["q"], t["mu_q"]))
+    candidates = [[(x + e * pstar) % qi for qi in q_moduli]
+                  for e in range(alpha)]
+    matches = [e for e in range(alpha)
+               if all(got[i, 0] == candidates[e][i]
+                      for i in range(len(q_moduli)))]
+    assert len(matches) == 1, f"no consistent error term (got {got[:, 0]})"
+
+    zero = jnp.zeros_like(rx)
+    got0 = np.asarray(model.baseconv(zero, t["phat_inv"], t["p"], t["mu_p"],
+                                     t["conv"], t["q"], t["mu_q"]))
+    np.testing.assert_array_equal(got0, np.zeros_like(got0))
+
+
+@settings(max_examples=8, deadline=None)
+@given(seed=st.integers(0, 2**31 - 1), n1_log=st.integers(2, 4))
+def test_hypothesis_ntt_roundtrip(seed, n1_log):
+    n = 64
+    n1 = 1 << n1_log
+    q = common.ntt_primes(n, 2)[1]
+    t = ntt_args(n, n1, q)
+    rng = np.random.default_rng(seed)
+    a = jnp.array(rng.integers(0, q, n), dtype=jnp.uint32)
+    fwd = model.ntt_negacyclic(a, t["psi_pows"], t["w1"], t["tw"], t["w2"],
+                               t["q"], t["mu"])
+    back = model.intt_negacyclic(fwd, t["w1_inv"], t["tw_inv"], t["w2_inv"],
+                                 t["psi_inv_n_inv_pows"], t["q"], t["mu"])
+    np.testing.assert_array_equal(np.asarray(back), np.asarray(a))
+
+
+def test_ntt_linearity():
+    # NTT is Z_q-linear: NTT(a + b) = NTT(a) + NTT(b) mod q.
+    n, n1 = 64, 8
+    q = common.ntt_primes(n, 1)[0]
+    t = ntt_args(n, n1, q)
+    a, b = rand_poly(n, q), rand_poly(n, q)
+    s = jnp.array((np.asarray(a).astype(np.uint64)
+                   + np.asarray(b).astype(np.uint64)) % q, dtype=jnp.uint32)
+    args = (t["psi_pows"], t["w1"], t["tw"], t["w2"], t["q"], t["mu"])
+    fa = np.asarray(model.ntt_negacyclic(a, *args)).astype(np.uint64)
+    fb = np.asarray(model.ntt_negacyclic(b, *args)).astype(np.uint64)
+    fs = np.asarray(model.ntt_negacyclic(s, *args)).astype(np.uint64)
+    np.testing.assert_array_equal((fa + fb) % q, fs)

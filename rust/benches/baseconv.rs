@@ -1,0 +1,28 @@
+//! Base conversion benchmarks (Eq. 3/5): the mixed-moduli kernel.
+use fhecore::bench_harness::Bench;
+use fhecore::ckks::poly::{Format, RnsPoly, Tower};
+use fhecore::ckks::prime::ntt_primes;
+use fhecore::ckks::BaseConvTable;
+use std::hint::black_box;
+
+fn main() {
+    let mut bench = Bench::new("baseconv");
+    for (n, alpha, lout) in [(1usize << 10, 3usize, 6usize), (1 << 12, 4, 8), (1 << 12, 9, 27)] {
+        let primes = ntt_primes(n, 45, alpha + lout);
+        let tower = Tower::new(n, &primes);
+        let src: Vec<usize> = (0..alpha).collect();
+        let dst: Vec<usize> = (alpha..alpha + lout).collect();
+        let table = BaseConvTable::new(&tower, &src, &dst);
+        let mut poly = RnsPoly::zero(&tower, &src, Format::Coeff);
+        for (i, limb) in poly.limbs.iter_mut().enumerate() {
+            let q = primes[i];
+            for (j, x) in limb.iter_mut().enumerate() {
+                *x = (j as u64 * 2654435761) % q;
+            }
+        }
+        bench.run(&format!("convert/n{n}_a{alpha}_l{lout}"), || {
+            black_box(table.convert(black_box(&poly), &tower));
+        });
+        bench.throughput(&format!("convert/n{n}_a{alpha}_l{lout}"), (n * lout) as f64);
+    }
+}

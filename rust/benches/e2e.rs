@@ -1,0 +1,48 @@
+//! End-to-end driver benchmark: the coordinator serving batched encrypted
+//! requests (functional CKKS + dual timing dispatch), plus workload-level
+//! simulation (Table VIII rows as a single run each).
+use fhecore::bench_harness::Bench;
+use fhecore::ckks::encoding::Complex;
+use fhecore::ckks::params::{CkksContext, CkksParams};
+use fhecore::ckks::{Evaluator, SecretKey};
+use fhecore::coordinator::{Coordinator, ModelState, OpKind, Request, ServeConfig};
+use fhecore::gpusim::{simulate_trace, GpuConfig};
+use fhecore::util::rng::Pcg64;
+use fhecore::workloads::workload_pair;
+use std::hint::black_box;
+use std::sync::Arc;
+
+fn main() {
+    let mut bench = Bench::new("e2e");
+
+    // Serving throughput on the toy context (fast enough to iterate).
+    let ctx = CkksContext::new(CkksParams::toy());
+    let mut rng = Pcg64::new(0xE2E);
+    let sk = Arc::new(SecretKey::generate(&ctx, &mut rng));
+    let ev = Arc::new(Evaluator::new(ctx));
+    let slots = ev.ctx.params.slots();
+    let w: Vec<Complex> = (0..slots).map(|i| Complex::new(0.01 * (i % 10) as f64, 0.0)).collect();
+    let model = Arc::new(ModelState { weights_pt: ev.encode(&w, ev.ctx.max_level()), rot_steps: slots });
+    let coord = Coordinator::start(ev.clone(), sk.clone(), model, ServeConfig::default());
+    let z = vec![Complex::new(0.25, 0.0); slots];
+    let base_ct = ev.encrypt(&ev.encode(&z, ev.ctx.max_level()), &sk, &mut rng);
+    // warm key bank
+    let _ = ev.rotate(&base_ct, 1, &sk);
+    let mut id = 0u64;
+    bench.run("serve/rotate_request", || {
+        id += 1;
+        let rx = coord.submit(Request { id, op: OpKind::Rotate(1), ct: base_ct.clone() });
+        black_box(rx.recv().unwrap());
+    });
+
+    // Workload-level simulation throughput (one Table VIII row per run).
+    let cfg = GpuConfig::default();
+    for name in ["bootstrap", "lr"] {
+        let (b, f) = workload_pair(name);
+        bench.run(&format!("simulate/{name}_pair"), || {
+            let sb = simulate_trace(&cfg, black_box(&b));
+            let sf = simulate_trace(&cfg, black_box(&f));
+            black_box((sb.total_cycles(), sf.total_cycles()));
+        });
+    }
+}

@@ -1,0 +1,31 @@
+//! Timing-simulator benchmarks: per-table regenerators (Tables VI-VIII,
+//! Figs 1/7/8/9/10 all run through simulate_trace) plus replay throughput.
+use fhecore::bench_harness::Bench;
+use fhecore::codegen::{Backend, Compiler, SimParams};
+use fhecore::gpusim::{simulate_trace, GpuConfig};
+use fhecore::workloads::workload_pair;
+use std::hint::black_box;
+
+fn main() {
+    let mut bench = Bench::new("gpusim");
+    let cfg = GpuConfig::default();
+    let p = SimParams::paper_primitive();
+    let hemult = Compiler::new(Backend::A100).hemult(&p);
+    bench.run("simulate/hemult_l27", || {
+        black_box(simulate_trace(&cfg, black_box(&hemult)));
+    });
+    let instr = hemult.dynamic_instructions();
+    bench.throughput("simulate/hemult_l27", instr as f64);
+
+    let (boot, _) = workload_pair("bootstrap");
+    bench.run("simulate/bootstrap", || {
+        black_box(simulate_trace(&cfg, black_box(&boot)));
+    });
+
+    // Table regenerators end-to-end (each covers a paper artifact).
+    for t in ["t6", "t7", "t8", "fig8"] {
+        bench.run(&format!("table/{t}"), || {
+            black_box(fhecore::tables::by_name(t).unwrap());
+        });
+    }
+}

@@ -1,0 +1,34 @@
+//! NTT benchmarks: iterative vs 4-step vs per-limb batched — the hot path
+//! behind Fig. 1's 66% share and the target of the SPerf pass.
+use fhecore::bench_harness::Bench;
+use fhecore::ckks::prime::ntt_primes;
+use fhecore::ckks::NttTable;
+use std::hint::black_box;
+
+fn main() {
+    let mut bench = Bench::new("ntt");
+    for n in [1usize << 10, 1 << 12, 1 << 13] {
+        let q = ntt_primes(n, 58, 1)[0];
+        let t = NttTable::new(n, q);
+        let a: Vec<u64> = (0..n as u64).map(|i| (i * 2654435761) % q).collect();
+        let mut buf = a.clone();
+        bench.run(&format!("forward_br/n{n}"), || {
+            buf.copy_from_slice(&a);
+            t.forward_br(black_box(&mut buf));
+        });
+        bench.throughput(&format!("forward_br/n{n}"), n as f64);
+        bench.run(&format!("roundtrip/n{n}"), || {
+            buf.copy_from_slice(&a);
+            t.forward_br(&mut buf);
+            t.inverse_br(black_box(&mut buf));
+        });
+    }
+    // 4-step (matrix) formulation — the FHECore-shaped schedule.
+    let n = 1 << 10;
+    let q = ntt_primes(n, 58, 1)[0];
+    let t = NttTable::new(n, q);
+    let a: Vec<u64> = (0..n as u64).map(|i| (i * 97) % q).collect();
+    bench.run("four_step/n1024_r32", || {
+        black_box(t.forward_4step(black_box(&a), 32));
+    });
+}

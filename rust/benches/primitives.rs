@@ -1,0 +1,40 @@
+//! CKKS primitive benchmarks (HEMult / Rotate / Rescale) — the functional
+//! substrate's answer to Table VII (software timings, not GPU latencies).
+use fhecore::bench_harness::Bench;
+use fhecore::ckks::encoding::Complex;
+use fhecore::ckks::params::{CkksContext, CkksParams};
+use fhecore::ckks::{Evaluator, SecretKey};
+use fhecore::util::rng::Pcg64;
+use std::hint::black_box;
+
+fn main() {
+    let mut bench = Bench::new("primitives");
+    let ctx = CkksContext::new(CkksParams::toy());
+    let mut rng = Pcg64::new(0xB);
+    let sk = SecretKey::generate(&ctx, &mut rng);
+    let ev = Evaluator::new(ctx);
+    let slots = ev.ctx.params.slots();
+    let z: Vec<Complex> = (0..slots).map(|i| Complex::new(0.01 * i as f64, 0.0)).collect();
+    let ct = ev.encrypt(&ev.encode(&z, 3), &sk, &mut rng);
+    let pt = ev.encode(&z, 3);
+
+    // prime the key bank so steady-state cost is measured
+    let _ = ev.mul(&ct, &ct, &sk);
+    let _ = ev.rotate(&ct, 1, &sk);
+
+    bench.run("hemult/n256_l3", || {
+        black_box(ev.mul(black_box(&ct), &ct, &sk));
+    });
+    bench.run("rotate/n256_l3", || {
+        black_box(ev.rotate(black_box(&ct), 1, &sk));
+    });
+    bench.run("rescale/n256_l3", || {
+        black_box(ev.rescale(black_box(&ct)));
+    });
+    bench.run("ptmult/n256_l3", || {
+        black_box(ev.mul_plain(black_box(&ct), &pt));
+    });
+    bench.run("headd/n256_l3", || {
+        black_box(ev.add(black_box(&ct), &ct));
+    });
+}

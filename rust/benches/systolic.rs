@@ -1,0 +1,32 @@
+//! Systolic PE-grid benchmarks: functional modmatmul vs the INT8
+//! segmentation baseline (the ~40%-overhead claim of SIII), plus the
+//! dataflow cycle model (Fig. 4).
+use fhecore::bench_harness::Bench;
+use fhecore::ckks::prime::pe_primes;
+use fhecore::systolic::{self, Dataflow};
+use std::hint::black_box;
+
+fn main() {
+    let mut bench = Bench::new("systolic");
+    let q = pe_primes(32, 1)[0] as u32;
+    let a: Vec<u32> = (0..256).map(|i| (i as u32 * 2654435761u32) % q).collect();
+    let b: Vec<u32> = (0..128).map(|i| (i as u32 * 40503) % q).collect();
+    let qv = vec![q; 8];
+    let direct = bench.run("modmatmul_16x16x8", || {
+        black_box(systolic::modmatmul(&a, &b, 16, 16, 8, black_box(&qv)));
+    });
+    let seg = bench.run("int8_segmented_16x16x8", || {
+        black_box(systolic::modmatmul_int8_segmented(&a, &b, 16, 16, 8, black_box(&qv)));
+    });
+    println!(
+        "segmentation overhead: {:.1}x slower functionally (paper: ~40% of NTT latency)",
+        seg.median_ns / direct.median_ns
+    );
+    println!(
+        "cycle model: OS {} cy vs WS {} cy per FHEC.16816; 256-tile stream {} vs {}",
+        systolic::mma_cycles(Dataflow::OutputStationary, 16, 8, 16),
+        systolic::mma_cycles(Dataflow::OperandStationary, 16, 8, 16),
+        systolic::stream_cycles(Dataflow::OutputStationary, 256),
+        systolic::stream_cycles(Dataflow::OperandStationary, 256),
+    );
+}

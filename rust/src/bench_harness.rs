@@ -1,0 +1,139 @@
+//! Criterion-style micro-benchmark harness (criterion is unavailable in
+//! this offline build). Benches are `harness = false` binaries that call
+//! [`Bench::run`]; output mimics criterion's `time: [lo mid hi]` lines so
+//! downstream tooling/eyeballs work the same way.
+
+use std::time::{Duration, Instant};
+
+pub struct Bench {
+    name: String,
+    /// Minimum measurement window per benchmark.
+    pub measure_for: Duration,
+    pub warmup_for: Duration,
+    results: Vec<(String, Stats)>,
+}
+
+#[derive(Debug, Clone, Copy)]
+pub struct Stats {
+    pub iters: u64,
+    pub mean_ns: f64,
+    pub median_ns: f64,
+    pub p05_ns: f64,
+    pub p95_ns: f64,
+}
+
+impl Bench {
+    pub fn new(name: &str) -> Self {
+        // FHECORE_BENCH_FAST=1 shrinks windows (used by `cargo test`-ish CI
+        // sweeps and the final smoke run).
+        let fast = std::env::var("FHECORE_BENCH_FAST").is_ok();
+        Self {
+            name: name.to_string(),
+            measure_for: Duration::from_millis(if fast { 120 } else { 900 }),
+            warmup_for: Duration::from_millis(if fast { 40 } else { 250 }),
+            results: Vec::new(),
+        }
+    }
+
+    /// Measure `f`, which must consume/produce real work (use
+    /// `std::hint::black_box` at call sites to defeat DCE).
+    pub fn run<F: FnMut()>(&mut self, id: &str, mut f: F) -> Stats {
+        // Warmup + calibration.
+        let t0 = Instant::now();
+        let mut calib_iters = 0u64;
+        while t0.elapsed() < self.warmup_for {
+            f();
+            calib_iters += 1;
+        }
+        let per_iter = self.warmup_for.as_secs_f64() / calib_iters.max(1) as f64;
+
+        // Sample in batches so timer overhead stays negligible.
+        let batch = ((0.01 / per_iter).ceil() as u64).clamp(1, 1 << 20);
+        let mut samples: Vec<f64> = Vec::new();
+        let meas0 = Instant::now();
+        let mut total_iters = 0u64;
+        while meas0.elapsed() < self.measure_for || samples.len() < 10 {
+            let s = Instant::now();
+            for _ in 0..batch {
+                f();
+            }
+            samples.push(s.elapsed().as_secs_f64() / batch as f64 * 1e9);
+            total_iters += batch;
+            if samples.len() > 5000 {
+                break;
+            }
+        }
+        samples.sort_by(|a, b| a.partial_cmp(b).unwrap());
+        let pick = |p: f64| samples[((samples.len() - 1) as f64 * p) as usize];
+        let stats = Stats {
+            iters: total_iters,
+            mean_ns: samples.iter().sum::<f64>() / samples.len() as f64,
+            median_ns: pick(0.5),
+            p05_ns: pick(0.05),
+            p95_ns: pick(0.95),
+        };
+        println!(
+            "{}/{}  time: [{} {} {}]  ({} iters)",
+            self.name,
+            id,
+            fmt_ns(stats.p05_ns),
+            fmt_ns(stats.median_ns),
+            fmt_ns(stats.p95_ns),
+            total_iters,
+        );
+        self.results.push((id.to_string(), stats));
+        stats
+    }
+
+    /// Report a derived throughput line (elements/sec style).
+    pub fn throughput(&self, id: &str, per_iter_items: f64) {
+        if let Some((_, s)) = self.results.iter().find(|(n, _)| n == id) {
+            let per_sec = per_iter_items / (s.median_ns / 1e9);
+            println!("{}/{}  thrpt: {:.3e} elem/s", self.name, id, per_sec);
+        }
+    }
+
+    pub fn results(&self) -> &[(String, Stats)] {
+        &self.results
+    }
+}
+
+pub fn fmt_ns(ns: f64) -> String {
+    if ns < 1e3 {
+        format!("{ns:.1} ns")
+    } else if ns < 1e6 {
+        format!("{:.2} us", ns / 1e3)
+    } else if ns < 1e9 {
+        format!("{:.2} ms", ns / 1e6)
+    } else {
+        format!("{:.3} s", ns / 1e9)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn measures_something_positive() {
+        std::env::set_var("FHECORE_BENCH_FAST", "1");
+        let mut b = Bench::new("harness-self-test");
+        let mut acc = 0u64;
+        let stats = b.run("spin", || {
+            for i in 0..100u64 {
+                acc = acc.wrapping_add(std::hint::black_box(i * i));
+            }
+        });
+        assert!(stats.mean_ns > 0.0);
+        assert!(stats.iters > 0);
+        assert!(acc > 0);
+    }
+
+    #[test]
+    fn fmt_ns_ranges() {
+        assert!(fmt_ns(5.0).contains("ns"));
+        assert!(fmt_ns(5e3).contains("us"));
+        assert!(fmt_ns(5e6).contains("ms"));
+        assert!(fmt_ns(5e9).contains("s"));
+    }
+}

@@ -1,0 +1,369 @@
+//! CKKS bootstrapping (Cheon-Han-Kim-Kim-Song style), the workload the
+//! paper reports a 50% latency reduction on (SVI-B).
+//!
+//! Pipeline:
+//! 1. **ModRaise** — reinterpret a level-0 ciphertext over the full chain;
+//!    it now decrypts to `m + q0 * I` with small integer overflow `I`.
+//! 2. **CoeffToSlot** — homomorphic `V^{-1}` (BSGS linear transform): slot
+//!    j of the result holds coefficient pair `a_j + i*b_j` of the raised
+//!    plaintext (`theta_j^(N/2) = i` folds the two halves together).
+//! 3. **EvalMod** — remove `q0 * I` by evaluating
+//!    `f(t) = (q0 / 2 pi Delta) * sin(2 pi Delta t / q0)` on the real and
+//!    imaginary parts separately (conjugation split). The sine is built
+//!    from a short Taylor seed at angle `u / 2^r` followed by `r`
+//!    double-angle iterations — the shallow-depth construction used by
+//!    bootstrapping implementations.
+//! 4. **SlotToCoeff** — homomorphic `V` maps slot values back into
+//!    polynomial coefficients.
+//!
+//! Functional at small ring dimensions; the paper-scale (N = 2^16)
+//! bootstrap is exercised at the instruction/timing level by
+//! `workloads::bootstrap` + `gpusim` (see DESIGN.md).
+
+use super::encoding::Complex;
+use super::keys::SecretKey;
+use super::linear::{hom_linear, SlotMatrix};
+use super::ops::{Ciphertext, Evaluator};
+use super::params::CkksContext;
+use super::poly::{Format, RnsPoly};
+
+/// Bootstrapping configuration.
+#[derive(Debug, Clone)]
+pub struct BootstrapConfig {
+    /// Assumed bound on |I| (the modular overflow count).
+    pub k: f64,
+    /// Double-angle iterations; the Taylor seed sees angles <= 2 pi K / 2^r.
+    pub r: u32,
+}
+
+impl Default for BootstrapConfig {
+    fn default() -> Self {
+        Self { k: 24.0, r: 9 }
+    }
+}
+
+/// The `V` matrix of the decode map: `V[j][k] = theta_j^k` with
+/// `theta_j = zeta^(5^j)`, dimension slots x slots (k < N/2).
+pub fn decode_matrix(ctx: &CkksContext) -> SlotMatrix {
+    let n = ctx.params.n;
+    let slots = n / 2;
+    let two_n = 2 * n;
+    let mut m = SlotMatrix::zeros(slots);
+    let mut g = 1usize;
+    for j in 0..slots {
+        for k in 0..slots {
+            let theta = std::f64::consts::PI * ((g * k) % two_n) as f64 / n as f64;
+            m.set(j, k, Complex::new(theta.cos(), theta.sin()));
+        }
+        g = (g * 5) % two_n;
+    }
+    m
+}
+
+/// `V^{-1} = (1/slots) * conj(V)^T` — V is sqrt(slots)-scaled unitary
+/// (rows are characters of distinct odd residues), so inversion is a
+/// conjugate transpose.
+pub fn encode_matrix(ctx: &CkksContext) -> SlotMatrix {
+    let v = decode_matrix(ctx);
+    let s = v.dim;
+    let mut m = SlotMatrix::zeros(s);
+    for r in 0..s {
+        for c in 0..s {
+            let e = v.at(c, r).conj();
+            m.set(r, c, Complex::new(e.re / s as f64, e.im / s as f64));
+        }
+    }
+    m
+}
+
+/// ModRaise: lift a (possibly exhausted) ciphertext back to the full
+/// chain. Residues are re-expanded from the centered level-0 limb.
+pub fn mod_raise(ev: &Evaluator, ct: &Ciphertext) -> Ciphertext {
+    let ctx = &ev.ctx;
+    let q0 = ctx.tower.contexts[ctx.q_chain[0]].modulus.value();
+    let full = ctx.chain_at(ctx.max_level());
+    let raise = |p: &RnsPoly| -> RnsPoly {
+        let mut src = p.clone();
+        src.to_coeff(&ctx.tower);
+        // keep only the base limb
+        let base = src.limbs[0].clone();
+        let mut out = RnsPoly::zero(&ctx.tower, &full, Format::Coeff);
+        for (i, &ci) in full.iter().enumerate() {
+            let m = ctx.tower.contexts[ci].modulus;
+            for (dst, &c) in out.limbs[i].iter_mut().zip(&base) {
+                // centered lift of [c]_{q0}
+                *dst = if c > q0 / 2 {
+                    m.neg(m.reduce_u64(q0 - c))
+                } else {
+                    m.reduce_u64(c)
+                };
+            }
+        }
+        out.to_eval(&ctx.tower);
+        out
+    };
+    Ciphertext {
+        c0: raise(&ct.c0),
+        c1: raise(&ct.c1),
+        level: ctx.max_level(),
+        scale: ct.scale,
+    }
+}
+
+/// Extract scaled (real, imag) carriers: `re2 = w + conj(w) = 2a` and
+/// `im2i = w - conj(w) = 2ib`. Level-neutral; the 1/2 (and the -i for the
+/// imaginary branch) are folded into EvalMod's seed constant.
+fn split_real_imag(
+    ev: &Evaluator,
+    ct: &Ciphertext,
+    sk: &SecretKey,
+) -> (Ciphertext, Ciphertext) {
+    let conj = ev.conjugate(ct, sk);
+    let re2 = ev.add(ct, &conj);
+    let im2i = ev.sub(ct, &conj);
+    (re2, im2i)
+}
+
+/// Multiply every slot by an arbitrary complex constant (one level).
+fn mul_const_complex(ev: &Evaluator, ct: &Ciphertext, c: Complex) -> Ciphertext {
+    let slots = ev.ctx.params.slots();
+    let z = vec![c; slots];
+    let pt = super::encoding::encode_with(&ev.ctx, &ev.encoder, &z, ct.level, ev.ctx.scale);
+    ev.mul_plain(ct, &pt)
+}
+
+/// Shared sine pipeline: input slots must already hold the *seed angle*
+/// `u = full_angle / 2^r`; returns `(q0 / 2 pi Delta) * sin(full_angle)`.
+///
+/// Scale discipline: every intermediate stays at ~Delta. Doublings use
+/// self-addition for the factor 2 (`sin(2t) = 2 sin cos`,
+/// `cos(2t) = 1 - 2 sin^2`) — folding the 2 into the `scale` field instead
+/// collapses precision quadratically under the squaring chain.
+fn eval_sine_from_seed(
+    ev: &Evaluator,
+    u: &Ciphertext,
+    cfg: &BootstrapConfig,
+    sk: &SecretKey,
+) -> Ciphertext {
+    let ctx = &ev.ctx;
+    let q0 = ctx.tower.contexts[ctx.q_chain[0]].modulus.value() as f64;
+    let delta = ctx.scale;
+
+    // Taylor seed: sin(u) ~ u - u^3/6 + u^5/120 ; cos(u) ~ 1 - u^2/2 + u^4/24.
+    let u2 = ev.mul(u, u, sk);
+    let u4 = ev.mul(&u2, &u2, sk);
+    let c_a = ev.mul_const(&u2, -0.5);
+    let c_b = ev.mul_const(&u4, 1.0 / 24.0);
+    let mut cos = ev.add(&c_a, &c_b);
+    cos = ev.add_const(&cos, 1.0);
+    let s_a = ev.mul_const(&u2, -1.0 / 6.0);
+    let s_b = ev.mul_const(&u4, 1.0 / 120.0);
+    let mut inner = ev.add(&s_a, &s_b);
+    inner = ev.add_const(&inner, 1.0);
+    let mut sin = ev.mul(u, &inner, sk);
+
+    // r double-angle steps.
+    for _ in 0..cfg.r {
+        let sc = ev.mul(&sin, &cos, sk);
+        let s_new = ev.add(&sc, &sc); // 2 sin cos
+        let ss = ev.mul(&sin, &sin, sk);
+        let ss2 = ev.add(&ss, &ss); // 2 sin^2
+        let c_new = ev.add_const(&ev.negate(&ss2), 1.0);
+        sin = s_new;
+        cos = c_new;
+    }
+
+    // f(v) = (q0 / (2 pi Delta)) * sin(full angle).
+    ev.mul_const(&sin, q0 / (2.0 * std::f64::consts::PI * delta))
+}
+
+/// EvalMod: approximate `t mod q0` on slot values via the scaled sine.
+///
+/// Input slots hold `v = m'/Delta` with `m' = m + q0*I`; output slots hold
+/// `~ m/Delta`. Consumes `5 + r + 1` levels.
+pub fn eval_mod(
+    ev: &Evaluator,
+    ct: &Ciphertext,
+    cfg: &BootstrapConfig,
+    sk: &SecretKey,
+) -> Ciphertext {
+    let ctx = &ev.ctx;
+    let q0 = ctx.tower.contexts[ctx.q_chain[0]].modulus.value() as f64;
+    let delta = ctx.scale;
+    // u = (2 pi Delta / (q0 * 2^r)) * v  — the seed angle.
+    let kappa = 2.0 * std::f64::consts::PI * delta / (q0 * 2f64.powi(cfg.r as i32));
+    let u = ev.mul_const(ct, kappa);
+    eval_sine_from_seed(ev, &u, cfg, sk)
+}
+
+/// Full bootstrap: raise an exhausted ciphertext back to a high level
+/// while approximately preserving its message.
+pub fn bootstrap(
+    ev: &Evaluator,
+    ct: &Ciphertext,
+    cfg: &BootstrapConfig,
+    sk: &SecretKey,
+) -> Ciphertext {
+    // 1. ModRaise to the full chain.
+    let raised = mod_raise(ev, ct);
+
+    // 2. CoeffToSlot: slots <- V^{-1} . slots  (then slots hold a + ib).
+    let cts = hom_linear(ev, &raised, &encode_matrix(&ev.ctx), sk);
+
+    // 3. EvalMod on real and imaginary halves. The carriers hold 2a and
+    //    2ib; the seed constants fold in the 1/2 (and -i for imag).
+    let (re2, im2i) = split_real_imag(ev, &cts, sk);
+    let q0 = ev.ctx.tower.contexts[ev.ctx.q_chain[0]].modulus.value() as f64;
+    let kappa =
+        2.0 * std::f64::consts::PI * ev.ctx.scale / (q0 * 2f64.powi(cfg.r as i32));
+    let u_re = ev.mul_const(&re2, kappa / 2.0);
+    let u_im = mul_const_complex(ev, &im2i, Complex::new(0.0, -kappa / 2.0));
+    let re_fixed = eval_sine_from_seed(ev, &u_re, cfg, sk);
+    let im_fixed = eval_sine_from_seed(ev, &u_im, cfg, sk);
+
+    // Recombine w = re + i*im.
+    let im_i = {
+        let slots = ev.ctx.params.slots();
+        let z = vec![Complex::new(0.0, 1.0); slots];
+        let pt = super::encoding::encode_with(
+            &ev.ctx,
+            &ev.encoder,
+            &z,
+            im_fixed.level,
+            ev.ctx.scale,
+        );
+        ev.mul_plain(&im_fixed, &pt)
+    };
+    let re_aligned = ev.level_reduce(&re_fixed, im_i.level);
+    let w = ev.add(&re_aligned, &im_i);
+
+    // 4. SlotToCoeff: slots <- V . slots (coefficients back in place).
+    hom_linear(ev, &w, &decode_matrix(&ev.ctx), sk)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::params::{CkksContext, CkksParams, WidthProfile};
+    use crate::util::rng::Pcg64;
+
+    fn boot_params() -> CkksParams {
+        CkksParams {
+            n: 64,
+            depth: 19,
+            scale_bits: 40,
+            dnum: 4,
+            profile: WidthProfile::Wide,
+            sigma: 3.2,
+        }
+    }
+
+    fn max_err(a: &[Complex], b: &[Complex]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| Complex::new(x.re - y.re, x.im - y.im).abs())
+            .fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn encode_decode_matrices_are_inverse() {
+        let ctx = CkksContext::new(CkksParams::toy());
+        let v = decode_matrix(&ctx);
+        let vi = encode_matrix(&ctx);
+        let prod = vi.matmul(&v);
+        for r in 0..prod.dim {
+            for c in 0..prod.dim {
+                let want = if r == c { 1.0 } else { 0.0 };
+                let got = prod.at(r, c);
+                assert!(
+                    (got.re - want).abs() < 1e-9 && got.im.abs() < 1e-9,
+                    "V^-1 V != I at ({r},{c}): {got:?}"
+                );
+            }
+        }
+    }
+
+    #[test]
+    fn coeff_to_slot_places_coefficients() {
+        // CtS of a plaintext-known ciphertext: slots must become a + i b.
+        let ctx = CkksContext::new(CkksParams::toy());
+        let mut rng = Pcg64::new(11);
+        let sk = SecretKey::generate(&ctx, &mut rng);
+        let ev = Evaluator::new(ctx);
+        let slots = ev.ctx.params.slots();
+        let z: Vec<Complex> = (0..slots)
+            .map(|i| Complex::new(0.3 * ((i % 5) as f64 - 2.0), 0.0))
+            .collect();
+        let pt = ev.encode(&z, 3);
+        // expected slot values: (coeff_k + i coeff_{k+n/2})/Delta
+        let m0 = ev.ctx.tower.contexts[0].modulus;
+        let q0 = m0.value();
+        let centered = |x: u64| -> f64 {
+            if x > q0 / 2 {
+                -((q0 - x) as f64)
+            } else {
+                x as f64
+            }
+        };
+        let want: Vec<Complex> = (0..slots)
+            .map(|k| {
+                Complex::new(
+                    centered(pt.limbs[0][k]) / ev.ctx.scale,
+                    centered(pt.limbs[0][k + slots]) / ev.ctx.scale,
+                )
+            })
+            .collect();
+        let ct = ev.encrypt(&pt, &sk, &mut rng);
+        let cts = hom_linear(&ev, &ct, &encode_matrix(&ev.ctx), &sk);
+        let got = ev.decrypt_to_slots(&cts, &sk);
+        assert!(max_err(&want, &got) < 1e-3, "err={}", max_err(&want, &got));
+    }
+
+    #[test]
+    fn eval_mod_removes_overflow() {
+        // Construct slots v = m/Delta + q0*I/Delta directly and check that
+        // eval_mod returns ~ m/Delta.
+        let ctx = CkksContext::new(boot_params());
+        let mut rng = Pcg64::new(13);
+        let sk = SecretKey::generate(&ctx, &mut rng);
+        let ev = Evaluator::new(ctx);
+        let slots = ev.ctx.params.slots();
+        let q0 = ev.ctx.tower.contexts[0].modulus.value() as f64;
+        let delta = ev.ctx.scale;
+        let msg: Vec<f64> = (0..slots).map(|i| 0.31 * ((i % 7) as f64 - 3.0)).collect();
+        let overflow: Vec<f64> = (0..slots).map(|i| ((i * 13 % 17) as f64) - 8.0).collect();
+        let v: Vec<Complex> = (0..slots)
+            .map(|i| Complex::new(msg[i] + overflow[i] * q0 / delta, 0.0))
+            .collect();
+        let ct = ev.encrypt(&ev.encode(&v, ev.ctx.max_level()), &sk, &mut rng);
+        let cfg = BootstrapConfig { k: 10.0, r: 9 };
+        let fixed = eval_mod(&ev, &ct, &cfg, &sk);
+        let got = ev.decrypt_to_slots(&fixed, &sk);
+        let want: Vec<Complex> = msg.iter().map(|&m| Complex::new(m, 0.0)).collect();
+        assert!(max_err(&want, &got) < 2e-2, "err={}", max_err(&want, &got));
+    }
+
+    #[test]
+    fn full_bootstrap_preserves_message() {
+        let ctx = CkksContext::new(boot_params());
+        let mut rng = Pcg64::new(17);
+        let sk = SecretKey::generate(&ctx, &mut rng);
+        let ev = Evaluator::new(ctx);
+        let slots = ev.ctx.params.slots();
+        let z: Vec<Complex> = (0..slots)
+            .map(|i| Complex::new(0.25 * ((i % 4) as f64 - 1.5), 0.0))
+            .collect();
+        // Encrypt at level 0 — an exhausted ciphertext.
+        let ct0 = ev.encrypt(&ev.encode(&z, 0), &sk, &mut rng);
+        let cfg = BootstrapConfig::default();
+        let boosted = bootstrap(&ev, &ct0, &cfg, &sk);
+        assert!(
+            boosted.level >= 1,
+            "bootstrap must return usable levels (got {})",
+            boosted.level
+        );
+        let back = ev.decrypt_to_slots(&boosted, &sk);
+        let err = max_err(&z, &back);
+        assert!(err < 5e-2, "bootstrap error too large: {err}");
+    }
+}

@@ -1,0 +1,270 @@
+//! CKKS encoding: the canonical embedding between complex slot vectors and
+//! integer polynomials (SII-A, Table II's plaintexts).
+//!
+//! Slots are ordered along the `5^j mod 2N` coset so that the Galois
+//! automorphism `x -> x^(5^k)` acts as a cyclic rotation by k slots — the
+//! property `Rotate` (Table II) relies on.
+//!
+//! The transform here is the direct O(N * N/2) evaluation; it is the
+//! *client-side* operation (encode/encrypt, decrypt/decode) and never on
+//! the paper's measured server path, so clarity wins over speed. A
+//! fused-FFT fast path can be swapped in behind the same interface.
+
+use super::params::CkksContext;
+use super::poly::{Format, RnsPoly};
+
+#[derive(Debug, Clone, Copy, PartialEq)]
+pub struct Complex {
+    pub re: f64,
+    pub im: f64,
+}
+
+impl Complex {
+    pub fn new(re: f64, im: f64) -> Self {
+        Self { re, im }
+    }
+
+    pub fn zero() -> Self {
+        Self { re: 0.0, im: 0.0 }
+    }
+
+    pub fn conj(self) -> Self {
+        Self { re: self.re, im: -self.im }
+    }
+
+    pub fn mul(self, o: Self) -> Self {
+        Self {
+            re: self.re * o.re - self.im * o.im,
+            im: self.re * o.im + self.im * o.re,
+        }
+    }
+
+    pub fn add(self, o: Self) -> Self {
+        Self { re: self.re + o.re, im: self.im + o.im }
+    }
+
+    pub fn abs(self) -> f64 {
+        self.re.hypot(self.im)
+    }
+}
+
+/// Precomputed root powers and the 5^j slot ordering for one ring dim.
+pub struct Encoder {
+    pub n: usize,
+    /// zeta^t for t in 0..2N, zeta = exp(i*pi/N) the primitive 2N-th root.
+    roots: Vec<Complex>,
+    /// rot_group[j] = 5^j mod 2N — evaluation exponent of slot j.
+    rot_group: Vec<usize>,
+}
+
+impl Encoder {
+    pub fn new(n: usize) -> Self {
+        let two_n = 2 * n;
+        let roots = (0..two_n)
+            .map(|t| {
+                let theta = std::f64::consts::PI * t as f64 / n as f64;
+                Complex::new(theta.cos(), theta.sin())
+            })
+            .collect();
+        let mut rot_group = Vec::with_capacity(n / 2);
+        let mut g = 1usize;
+        for _ in 0..n / 2 {
+            rot_group.push(g);
+            g = (g * 5) % two_n;
+        }
+        Self { n, roots, rot_group }
+    }
+
+    /// Real coefficient vector (length N, f64) embedding `z` at scale
+    /// `delta`: m_k = (2/N) * Re( sum_j delta*z_j * zeta^(-k*5^j) ).
+    pub fn embed(&self, z: &[Complex], delta: f64) -> Vec<f64> {
+        let slots = self.n / 2;
+        assert!(z.len() <= slots, "too many slots for N={}", self.n);
+        let two_n = 2 * self.n;
+        let mut out = vec![0f64; self.n];
+        for (k, coeff) in out.iter_mut().enumerate() {
+            let mut acc = 0f64;
+            for (j, &zj) in z.iter().enumerate() {
+                // zeta^(-k * 5^j) = conj(zeta^(k*5^j))
+                let e = (k * self.rot_group[j]) % two_n;
+                let w = self.roots[e].conj();
+                acc += zj.re * w.re - zj.im * w.im;
+            }
+            *coeff = acc * delta * 2.0 / self.n as f64;
+        }
+        out
+    }
+
+    /// Evaluate the real coefficient vector at the slot points / delta.
+    pub fn project(&self, coeffs: &[f64], delta: f64) -> Vec<Complex> {
+        let slots = self.n / 2;
+        let two_n = 2 * self.n;
+        let mut out = vec![Complex::zero(); slots];
+        for (j, slot) in out.iter_mut().enumerate() {
+            let mut acc = Complex::zero();
+            for (k, &c) in coeffs.iter().enumerate() {
+                let e = (k * self.rot_group[j]) % two_n;
+                acc = acc.add(Complex::new(c * self.roots[e].re, c * self.roots[e].im));
+            }
+            *slot = Complex::new(acc.re / delta, acc.im / delta);
+        }
+        out
+    }
+}
+
+/// Encode a complex slot vector into an RNS plaintext polynomial at the
+/// given level (coefficient format).
+pub fn encode(ctx: &CkksContext, z: &[Complex], level: usize) -> RnsPoly {
+    let encoder = Encoder::new(ctx.params.n);
+    encode_with(ctx, &encoder, z, level, ctx.scale)
+}
+
+pub fn encode_with(
+    ctx: &CkksContext,
+    encoder: &Encoder,
+    z: &[Complex],
+    level: usize,
+    delta: f64,
+) -> RnsPoly {
+    let coeffs = encoder.embed(z, delta);
+    let chain = ctx.chain_at(level);
+    let mut poly = RnsPoly::zero(&ctx.tower, &chain, Format::Coeff);
+    for (i, &ci) in chain.iter().enumerate() {
+        let m = ctx.tower.contexts[ci].modulus;
+        for (dst, &c) in poly.limbs[i].iter_mut().zip(&coeffs) {
+            let r = c.round();
+            *dst = if r >= 0.0 {
+                m.reduce_u128(r as u128)
+            } else {
+                m.neg(m.reduce_u128((-r) as u128))
+            };
+        }
+    }
+    poly
+}
+
+/// Decode an RNS plaintext polynomial back to complex slots.
+///
+/// Coefficients are lifted to centered representatives via the *first*
+/// limb only (valid while the plaintext magnitude stays below q_0/2, the
+/// standard decoding regime).
+pub fn decode(ctx: &CkksContext, poly: &RnsPoly, delta: f64) -> Vec<Complex> {
+    assert_eq!(poly.format, Format::Coeff, "decode needs Coeff");
+    let encoder = Encoder::new(ctx.params.n);
+    decode_with(ctx, &encoder, poly, delta)
+}
+
+pub fn decode_with(
+    ctx: &CkksContext,
+    encoder: &Encoder,
+    poly: &RnsPoly,
+    delta: f64,
+) -> Vec<Complex> {
+    let m = ctx.tower.contexts[poly.chain[0]].modulus;
+    let q = m.value();
+    let coeffs: Vec<f64> = poly.limbs[0]
+        .iter()
+        .map(|&x| {
+            if x > q / 2 {
+                -((q - x) as f64)
+            } else {
+                x as f64
+            }
+        })
+        .collect();
+    encoder.project(&coeffs, delta)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::params::CkksParams;
+
+    fn max_err(a: &[Complex], b: &[Complex]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| Complex::new(x.re - y.re, x.im - y.im).abs())
+            .fold(0.0, f64::max)
+    }
+
+    fn ramp(slots: usize) -> Vec<Complex> {
+        (0..slots)
+            .map(|i| Complex::new(0.01 * i as f64 - 0.5, 0.002 * i as f64))
+            .collect()
+    }
+
+    #[test]
+    fn encode_decode_roundtrip() {
+        let ctx = CkksContext::new(CkksParams::toy());
+        let z = ramp(ctx.params.slots());
+        let pt = encode(&ctx, &z, ctx.max_level());
+        let back = decode(&ctx, &pt, ctx.scale);
+        assert!(max_err(&z, &back) < 1e-6, "err={}", max_err(&z, &back));
+    }
+
+    #[test]
+    fn embedding_is_real_and_additive() {
+        let enc = Encoder::new(64);
+        let z1 = ramp(32);
+        let z2: Vec<Complex> = ramp(32).iter().map(|c| c.mul(Complex::new(2.0, 0.0))).collect();
+        let e1 = enc.embed(&z1, 1024.0);
+        let e2 = enc.embed(&z2, 1024.0);
+        let sum: Vec<Complex> = z1
+            .iter()
+            .zip(&z2)
+            .map(|(a, b)| a.add(*b))
+            .collect();
+        let es = enc.embed(&sum, 1024.0);
+        for k in 0..64 {
+            assert!((e1[k] + e2[k] - es[k]).abs() < 1e-9);
+        }
+    }
+
+    #[test]
+    fn automorphism_rotates_slots() {
+        // The defining property of the 5^j ordering: applying x -> x^5 to
+        // the *coefficients* cyclically shifts the slot vector by one.
+        let ctx = CkksContext::new(CkksParams::toy());
+        let n = ctx.params.n;
+        let z = ramp(n / 2);
+        let pt = encode(&ctx, &z, 0);
+        let rotated = pt.automorphism(5, &ctx.tower);
+        let back = decode(&ctx, &rotated, ctx.scale);
+        // back[j] should equal z[j+1 mod slots]
+        let want: Vec<Complex> = (0..n / 2).map(|j| z[(j + 1) % (n / 2)]).collect();
+        assert!(max_err(&back, &want) < 1e-6, "err={}", max_err(&back, &want));
+    }
+
+    #[test]
+    fn conjugation_automorphism() {
+        // x -> x^(2N-1) conjugates every slot.
+        let ctx = CkksContext::new(CkksParams::toy());
+        let n = ctx.params.n;
+        let z = ramp(n / 2);
+        let pt = encode(&ctx, &z, 0);
+        let conj = pt.automorphism(2 * n - 1, &ctx.tower);
+        let back = decode(&ctx, &conj, ctx.scale);
+        let want: Vec<Complex> = z.iter().map(|c| c.conj()).collect();
+        assert!(max_err(&back, &want) < 1e-6);
+    }
+
+    #[test]
+    fn scale_carries_through() {
+        let ctx = CkksContext::new(CkksParams::toy());
+        let z = vec![Complex::new(0.25, 0.0); ctx.params.slots()];
+        let pt = encode(&ctx, &z, 1);
+        // Decoding at twice the scale halves the values.
+        let back = decode(&ctx, &pt, ctx.scale * 2.0);
+        assert!((back[0].re - 0.125).abs() < 1e-6);
+    }
+
+    #[test]
+    fn partial_slot_vectors_pad_with_zero() {
+        let ctx = CkksContext::new(CkksParams::toy());
+        let z = vec![Complex::new(1.0, 0.0); 3];
+        let pt = encode(&ctx, &z, 0);
+        let back = decode(&ctx, &pt, ctx.scale);
+        assert!((back[0].re - 1.0).abs() < 1e-6);
+        assert!(back[5].abs() < 1e-6);
+    }
+}

@@ -1,0 +1,454 @@
+//! Keys and hybrid key switching (Table II: KeySwitch, the engine behind
+//! HEMult relinearization and Rotate).
+//!
+//! RNS-hybrid construction (Han-Ki, as used by OpenFHE/FIDESlib):
+//! the active chain Q_l is partitioned into `dnum` digit groups Q~_j.
+//!
+//! * decomposition:  d_j = ModUp( [c * Q^_j^{-1}]_{Q~_j} )   (BaseConv)
+//! * key:            evk_j = (b_j, a_j),  b_j = -a_j s + e_j + P Q^_j s'
+//! * combine:        sum_j d_j * evk_j  ==  P * c * s'   (mod Q_l P)
+//! * ModDown by P lands back on Q_l with O(alpha) rounding noise.
+//!
+//! Every constant here is a per-prime residue (Q^_j mod q, P mod q,
+//! [Q^_j^{-1}] mod q) so no big-integer arithmetic is ever needed — the
+//! same property that makes the kernel a pure modulo-linear transformation
+//! on FHECore (SV-B).
+
+use std::collections::HashMap;
+use std::sync::Mutex;
+
+use super::params::CkksContext;
+use super::poly::{Format, RnsPoly};
+use super::rns::BaseConvTable;
+use crate::util::rng::Pcg64;
+
+/// Ternary secret key, stored in Eval format over the full Q u P chain.
+pub struct SecretKey {
+    pub s: RnsPoly,
+    /// Coefficient-domain copy (automorphism needs Coeff).
+    s_coeff: RnsPoly,
+}
+
+impl SecretKey {
+    pub fn generate(ctx: &CkksContext, rng: &mut Pcg64) -> Self {
+        let full: Vec<usize> = (0..ctx.tower.contexts.len()).collect();
+        let mut s = RnsPoly::zero(&ctx.tower, &full, Format::Coeff);
+        let n = ctx.params.n;
+        let ternary: Vec<i64> = (0..n).map(|_| rng.ternary()).collect();
+        for (i, &ci) in full.iter().enumerate() {
+            let m = ctx.tower.contexts[ci].modulus;
+            for (dst, &t) in s.limbs[i].iter_mut().zip(&ternary) {
+                *dst = match t {
+                    1 => 1,
+                    -1 => m.neg(1),
+                    _ => 0,
+                };
+            }
+        }
+        let s_coeff = s.clone();
+        let mut s_eval = s;
+        s_eval.to_eval(&ctx.tower);
+        Self { s: s_eval, s_coeff }
+    }
+
+    /// Secret key restricted to a chain (Eval format).
+    pub fn restrict(&self, chain: &[usize]) -> RnsPoly {
+        restrict_poly(&self.s, chain)
+    }
+
+    /// phi_g(s) restricted to a chain, in Eval format.
+    pub fn automorphed(&self, g: usize, chain: &[usize], ctx: &CkksContext) -> RnsPoly {
+        let mut rot = restrict_poly(&self.s_coeff, chain);
+        rot = rot.automorphism(g, &ctx.tower);
+        rot.to_eval(&ctx.tower);
+        rot
+    }
+}
+
+/// Select the limbs of `poly` matching `chain` (must be a subset).
+pub fn restrict_poly(poly: &RnsPoly, chain: &[usize]) -> RnsPoly {
+    let limbs = chain
+        .iter()
+        .map(|c| {
+            let idx = poly
+                .chain
+                .iter()
+                .position(|x| x == c)
+                .expect("chain not a subset");
+            poly.limbs[idx].clone()
+        })
+        .collect();
+    RnsPoly {
+        n: poly.n,
+        format: poly.format,
+        limbs,
+        chain: chain.to_vec(),
+    }
+}
+
+/// Sample a uniform polynomial over `chain` in Eval format.
+pub fn sample_uniform(ctx: &CkksContext, chain: &[usize], rng: &mut Pcg64) -> RnsPoly {
+    let mut p = RnsPoly::zero(&ctx.tower, chain, Format::Eval);
+    for (i, &ci) in chain.iter().enumerate() {
+        let q = ctx.tower.contexts[ci].modulus.value();
+        for x in p.limbs[i].iter_mut() {
+            *x = rng.below(q);
+        }
+    }
+    p
+}
+
+/// Sample a gaussian error polynomial over `chain` (Coeff format).
+pub fn sample_error(ctx: &CkksContext, chain: &[usize], rng: &mut Pcg64) -> RnsPoly {
+    let mut p = RnsPoly::zero(&ctx.tower, chain, Format::Coeff);
+    let n = ctx.params.n;
+    let noise: Vec<i64> = (0..n)
+        .map(|_| (rng.gaussian() * ctx.params.sigma).round() as i64)
+        .collect();
+    for (i, &ci) in chain.iter().enumerate() {
+        let m = ctx.tower.contexts[ci].modulus;
+        for (dst, &e) in p.limbs[i].iter_mut().zip(&noise) {
+            *dst = if e >= 0 {
+                m.reduce_u64(e as u64)
+            } else {
+                m.neg(m.reduce_u64((-e) as u64))
+            };
+        }
+    }
+    p
+}
+
+/// One key-switching key: switches ciphertext component under `s_from`
+/// into a component under `s` at a fixed level.
+pub struct KsKey {
+    pub level: usize,
+    /// Digit groups: indices (positions in the active chain) per digit.
+    pub digit_positions: Vec<Vec<usize>>,
+    /// (b_j, a_j) pairs over the extended chain, Eval format.
+    pub digits: Vec<(RnsPoly, RnsPoly)>,
+    /// ModUp tables (digit primes -> complement of digit in ext chain).
+    pub modup: Vec<BaseConvTable>,
+    /// `[Q^_j^{-1}]` mod each digit prime, per digit.
+    pub qhat_inv: Vec<Vec<u64>>,
+    /// ModDown table (P -> active chain).
+    pub p_to_active: BaseConvTable,
+    /// `P^{-1}` mod each active prime.
+    pub p_inv: Vec<u64>,
+}
+
+impl KsKey {
+    /// Generate a key switching `s_from -> sk.s` at `level`.
+    pub fn generate(
+        ctx: &CkksContext,
+        sk: &SecretKey,
+        s_from: &RnsPoly,
+        level: usize,
+        rng: &mut Pcg64,
+    ) -> Self {
+        let active = ctx.chain_at(level);
+        let ext = ctx.extended_chain_at(level);
+        assert_eq!(s_from.chain, ext, "s_from must live on the extended chain");
+        let dnum = ctx.params.dnum.min(active.len());
+        let per = active.len().div_ceil(dnum);
+        let digit_positions: Vec<Vec<usize>> = (0..dnum)
+            .map(|j| (j * per..((j + 1) * per).min(active.len())).collect())
+            .filter(|v: &Vec<usize>| !v.is_empty())
+            .collect();
+
+        let s_ext = sk.restrict(&ext);
+        let mut digits = Vec::new();
+        let mut modup = Vec::new();
+        let mut qhat_inv = Vec::new();
+        for positions in &digit_positions {
+            let digit_chain: Vec<usize> = positions.iter().map(|&p| active[p]).collect();
+            // factor_j per ext prime: P * Q^_j mod m (Q^_j = prod of active
+            // primes outside the digit).
+            let factor: Vec<u64> = ext
+                .iter()
+                .map(|&ci| {
+                    let m = ctx.tower.contexts[ci].modulus;
+                    let mut acc = 1u64;
+                    for &pi in &ctx.p_chain {
+                        acc = m.mul(acc, m.reduce_u64(ctx.tower.contexts[pi].modulus.value()));
+                    }
+                    for (pos, &qi) in active.iter().enumerate() {
+                        if !positions.contains(&pos) {
+                            acc = m.mul(acc, m.reduce_u64(ctx.tower.contexts[qi].modulus.value()));
+                        }
+                    }
+                    acc
+                })
+                .collect();
+
+            let a_j = sample_uniform(ctx, &ext, rng);
+            let mut e_j = sample_error(ctx, &ext, rng);
+            e_j.to_eval(&ctx.tower);
+
+            // b_j = -a_j * s + e_j + factor * s_from (all Eval over ext).
+            let mut b_j = a_j.clone();
+            b_j.mul_assign(&s_ext, &ctx.tower);
+            b_j.neg_assign(&ctx.tower);
+            b_j.add_assign(&e_j, &ctx.tower);
+            let mut gs = s_from.clone();
+            gs.scale_assign(&factor, &ctx.tower);
+            b_j.add_assign(&gs, &ctx.tower);
+
+            digits.push((b_j, a_j));
+
+            // ModUp table: digit -> ext \ digit.
+            let complement: Vec<usize> = ext
+                .iter()
+                .copied()
+                .filter(|c| !digit_chain.contains(c))
+                .collect();
+            modup.push(BaseConvTable::new(&ctx.tower, &digit_chain, &complement));
+
+            // [Q^_j^{-1}] mod q for q in the digit.
+            qhat_inv.push(
+                positions
+                    .iter()
+                    .map(|&pos| {
+                        let m = ctx.tower.contexts[active[pos]].modulus;
+                        let mut acc = 1u64;
+                        for (other, &qi) in active.iter().enumerate() {
+                            if !positions.contains(&other) {
+                                acc = m.mul(
+                                    acc,
+                                    m.reduce_u64(ctx.tower.contexts[qi].modulus.value()),
+                                );
+                            }
+                        }
+                        m.inv(acc)
+                    })
+                    .collect(),
+            );
+        }
+
+        let p_to_active = BaseConvTable::new(&ctx.tower, &ctx.p_chain, &active);
+        let p_inv: Vec<u64> = active
+            .iter()
+            .map(|&qi| {
+                let m = ctx.tower.contexts[qi].modulus;
+                let mut acc = 1u64;
+                for &pi in &ctx.p_chain {
+                    acc = m.mul(acc, m.reduce_u64(ctx.tower.contexts[pi].modulus.value()));
+                }
+                m.inv(acc)
+            })
+            .collect();
+
+        Self {
+            level,
+            digit_positions,
+            digits,
+            modup,
+            qhat_inv,
+            p_to_active,
+            p_inv,
+        }
+    }
+
+    /// Apply the key switch to a polynomial `d` (Eval, active chain at
+    /// `self.level`): returns `(out0, out1)` such that
+    /// `out0 + out1*s  ~=  d * s_from` (Eval, active chain).
+    pub fn apply(&self, ctx: &CkksContext, d: &RnsPoly) -> (RnsPoly, RnsPoly) {
+        let active = ctx.chain_at(self.level);
+        let ext = ctx.extended_chain_at(self.level);
+        assert_eq!(d.chain, active, "operand at wrong level");
+        let mut d_coeff = d.clone();
+        d_coeff.to_coeff(&ctx.tower);
+
+        let mut acc0 = RnsPoly::zero(&ctx.tower, &ext, Format::Eval);
+        let mut acc1 = RnsPoly::zero(&ctx.tower, &ext, Format::Eval);
+        for (j, positions) in self.digit_positions.iter().enumerate() {
+            let digit_chain: Vec<usize> = positions.iter().map(|&p| active[p]).collect();
+            // [d * Q^_j^{-1}]_{Q~_j}
+            let mut digit_poly = RnsPoly {
+                n: d_coeff.n,
+                format: Format::Coeff,
+                limbs: positions.iter().map(|&p| d_coeff.limbs[p].clone()).collect(),
+                chain: digit_chain.clone(),
+            };
+            digit_poly.scale_assign(&self.qhat_inv[j], &ctx.tower);
+            // ModUp to the full extended chain.
+            let lifted = self.modup[j].convert(&digit_poly, &ctx.tower);
+            let mut full = RnsPoly::zero(&ctx.tower, &ext, Format::Coeff);
+            for (i, &ci) in ext.iter().enumerate() {
+                let limb = if let Some(k) = digit_chain.iter().position(|&c| c == ci) {
+                    digit_poly.limbs[k].clone()
+                } else {
+                    let k = lifted.chain.iter().position(|&c| c == ci).unwrap();
+                    lifted.limbs[k].clone()
+                };
+                full.limbs[i] = limb;
+            }
+            full.to_eval(&ctx.tower);
+
+            let mut t0 = full.clone();
+            t0.mul_assign(&self.digits[j].0, &ctx.tower);
+            acc0.add_assign(&t0, &ctx.tower);
+            let mut t1 = full;
+            t1.mul_assign(&self.digits[j].1, &ctx.tower);
+            acc1.add_assign(&t1, &ctx.tower);
+        }
+
+        // ModDown by P: (acc - BaseConv_P->Q([acc]_P)) * P^{-1}.
+        let down = |mut acc: RnsPoly| -> RnsPoly {
+            acc.to_coeff(&ctx.tower);
+            let nq = active.len();
+            let mut q_part = RnsPoly {
+                n: acc.n,
+                format: Format::Coeff,
+                limbs: acc.limbs[..nq].to_vec(),
+                chain: acc.chain[..nq].to_vec(),
+            };
+            let p_part = RnsPoly {
+                n: acc.n,
+                format: Format::Coeff,
+                limbs: acc.limbs[nq..].to_vec(),
+                chain: acc.chain[nq..].to_vec(),
+            };
+            let p_in_q = self.p_to_active.convert(&p_part, &ctx.tower);
+            q_part.sub_assign(&p_in_q, &ctx.tower);
+            q_part.scale_assign(&self.p_inv, &ctx.tower);
+            q_part.to_eval(&ctx.tower);
+            q_part
+        };
+        (down(acc0), down(acc1))
+    }
+}
+
+/// Which key a [`KeyBank`] entry switches from.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum KeyKind {
+    /// s^2 -> s (relinearization, used by HEMult).
+    Relin,
+    /// phi_g(s) -> s for Galois element g (rotation/conjugation).
+    Galois(usize),
+}
+
+/// Lazily generated, cached key-switching keys per (kind, level).
+///
+/// A production deployment generates these ahead of time on the client;
+/// caching against the secret key here keeps the test/example surface
+/// small without changing any measured code path.
+pub struct KeyBank {
+    keys: Mutex<HashMap<(KeyKind, usize), std::sync::Arc<KsKey>>>,
+    seed: u64,
+}
+
+impl KeyBank {
+    pub fn new(seed: u64) -> Self {
+        Self {
+            keys: Mutex::new(HashMap::new()),
+            seed,
+        }
+    }
+
+    pub fn get(
+        &self,
+        ctx: &CkksContext,
+        sk: &SecretKey,
+        kind: KeyKind,
+        level: usize,
+    ) -> std::sync::Arc<KsKey> {
+        let mut map = self.keys.lock().unwrap();
+        map.entry((kind, level))
+            .or_insert_with(|| {
+                let ext = ctx.extended_chain_at(level);
+                let s_from = match kind {
+                    KeyKind::Relin => {
+                        let mut s2 = sk.restrict(&ext);
+                        let s_copy = s2.clone();
+                        s2.mul_assign(&s_copy, &ctx.tower);
+                        s2
+                    }
+                    KeyKind::Galois(g) => sk.automorphed(g, &ext, ctx),
+                };
+                let mut rng = Pcg64::new(self.seed ^ key_seed(kind, level));
+                std::sync::Arc::new(KsKey::generate(ctx, sk, &s_from, level, &mut rng))
+            })
+            .clone()
+    }
+}
+
+fn key_seed(kind: KeyKind, level: usize) -> u64 {
+    let k = match kind {
+        KeyKind::Relin => 0x1000_0000u64,
+        KeyKind::Galois(g) => 0x2000_0000u64 | g as u64,
+    };
+    k.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ (level as u64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::params::CkksParams;
+
+    #[test]
+    fn keyswitch_identity() {
+        // KeySwitch(d) with s_from = s must give (out0, out1) with
+        // out0 + out1*s ~= d*s (small noise).
+        let ctx = CkksContext::new(CkksParams::toy());
+        let mut rng = Pcg64::new(1);
+        let sk = SecretKey::generate(&ctx, &mut rng);
+        let level = ctx.max_level();
+        let ext = ctx.extended_chain_at(level);
+        let s_from = sk.restrict(&ext);
+        let ksk = KsKey::generate(&ctx, &sk, &s_from, level, &mut rng);
+
+        let active = ctx.chain_at(level);
+        let d = sample_uniform(&ctx, &active, &mut rng);
+        let (out0, out1) = ksk.apply(&ctx, &d);
+
+        // want = d * s (restricted); got = out0 + out1 * s.
+        let s_active = sk.restrict(&active);
+        let mut want = d.clone();
+        want.mul_assign(&s_active, &ctx.tower);
+        let mut got = out1.clone();
+        got.mul_assign(&s_active, &ctx.tower);
+        got.add_assign(&out0, &ctx.tower);
+
+        // Compare in coefficient domain: difference must be tiny relative
+        // to q (keyswitch noise ~ alpha * q_digit / P * N * sigma).
+        want.to_coeff(&ctx.tower);
+        got.to_coeff(&ctx.tower);
+        let m = ctx.tower.contexts[0].modulus;
+        let q = m.value();
+        let mut max_err = 0u64;
+        for (a, b) in got.limbs[0].iter().zip(&want.limbs[0]) {
+            let d = m.sub(*a, *b);
+            let centered = d.min(q - d);
+            max_err = max_err.max(centered);
+        }
+        // Noise budget: must be far below q (2^50); allow 2^30.
+        assert!(max_err < 1 << 30, "keyswitch noise too large: {max_err}");
+    }
+
+    #[test]
+    fn keybank_caches() {
+        let ctx = CkksContext::new(CkksParams::toy());
+        let mut rng = Pcg64::new(2);
+        let sk = SecretKey::generate(&ctx, &mut rng);
+        let bank = KeyBank::new(7);
+        let k1 = bank.get(&ctx, &sk, KeyKind::Relin, 1);
+        let k2 = bank.get(&ctx, &sk, KeyKind::Relin, 1);
+        assert!(std::sync::Arc::ptr_eq(&k1, &k2));
+        let k3 = bank.get(&ctx, &sk, KeyKind::Galois(5), 1);
+        assert!(!std::sync::Arc::ptr_eq(&k1, &k3));
+    }
+
+    #[test]
+    fn digit_partition_covers_chain() {
+        let ctx = CkksContext::new(CkksParams::toy());
+        let mut rng = Pcg64::new(3);
+        let sk = SecretKey::generate(&ctx, &mut rng);
+        let level = ctx.max_level();
+        let ext = ctx.extended_chain_at(level);
+        let s_from = sk.restrict(&ext);
+        let ksk = KsKey::generate(&ctx, &sk, &s_from, level, &mut rng);
+        let mut all: Vec<usize> = ksk.digit_positions.concat();
+        all.sort_unstable();
+        assert_eq!(all, (0..level + 1).collect::<Vec<_>>());
+    }
+}

@@ -1,0 +1,255 @@
+//! Homomorphic linear algebra on slot vectors: the BSGS diagonal method.
+//!
+//! `hom_linear` evaluates an arbitrary complex `slots x slots` matrix on an
+//! encrypted vector using O(2*sqrt(s)) rotations instead of O(s) — the
+//! primitive behind CoeffToSlot / SlotToCoeff in bootstrapping and the
+//! JKLS-style matrix multiplications of the BERT-Tiny workload (SVI-A).
+
+use super::encoding::{encode_with, Complex};
+use super::keys::SecretKey;
+use super::ops::{Ciphertext, Evaluator};
+
+/// A dense complex matrix acting on the slot vector.
+#[derive(Debug, Clone)]
+pub struct SlotMatrix {
+    pub dim: usize,
+    /// Row-major entries (dim x dim).
+    pub entries: Vec<Complex>,
+}
+
+impl SlotMatrix {
+    pub fn zeros(dim: usize) -> Self {
+        Self {
+            dim,
+            entries: vec![Complex::zero(); dim * dim],
+        }
+    }
+
+    pub fn at(&self, r: usize, c: usize) -> Complex {
+        self.entries[r * self.dim + c]
+    }
+
+    pub fn set(&mut self, r: usize, c: usize, v: Complex) {
+        self.entries[r * self.dim + c] = v;
+    }
+
+    pub fn identity(dim: usize) -> Self {
+        let mut m = Self::zeros(dim);
+        for i in 0..dim {
+            m.set(i, i, Complex::new(1.0, 0.0));
+        }
+        m
+    }
+
+    /// The d-th generalized diagonal: diag_d[j] = M[j][(j + d) mod dim].
+    pub fn diagonal(&self, d: usize) -> Vec<Complex> {
+        (0..self.dim)
+            .map(|j| self.at(j, (j + d) % self.dim))
+            .collect()
+    }
+
+    pub fn matvec(&self, v: &[Complex]) -> Vec<Complex> {
+        (0..self.dim)
+            .map(|r| {
+                let mut acc = Complex::zero();
+                for c in 0..self.dim {
+                    acc = acc.add(self.at(r, c).mul(v[c]));
+                }
+                acc
+            })
+            .collect()
+    }
+
+    pub fn matmul(&self, other: &SlotMatrix) -> SlotMatrix {
+        assert_eq!(self.dim, other.dim);
+        let mut out = SlotMatrix::zeros(self.dim);
+        for r in 0..self.dim {
+            for c in 0..self.dim {
+                let mut acc = Complex::zero();
+                for k in 0..self.dim {
+                    acc = acc.add(self.at(r, k).mul(other.at(k, c)));
+                }
+                out.set(r, c, acc);
+            }
+        }
+        out
+    }
+}
+
+/// Rotate a plaintext complex vector left by `k` (matches `Evaluator::rotate`).
+fn rot_plain(v: &[Complex], k: usize) -> Vec<Complex> {
+    let s = v.len();
+    (0..s).map(|j| v[(j + k) % s]).collect()
+}
+
+/// Evaluate `M . slots(ct)` homomorphically (baby-step giant-step).
+///
+/// Identity: M.v = sum_d diag_d(M) o rot_d(v). With d = i + j*g,
+/// rot_{i+jg}(v) = rot_{jg}(rot_i(v)) and pre-rotating the diagonal by -jg:
+/// M.v = sum_j rot_{jg}( sum_i rot_{-jg}(diag_{i+jg}) o rot_i(v) ).
+/// Consumes one multiplicative level.
+pub fn hom_linear(
+    ev: &Evaluator,
+    ct: &Ciphertext,
+    m: &SlotMatrix,
+    sk: &SecretKey,
+) -> Ciphertext {
+    let s = ev.ctx.params.slots();
+    assert_eq!(m.dim, s, "matrix must match the slot count");
+    let g = (s as f64).sqrt().ceil() as usize;
+    let outer = s.div_ceil(g);
+
+    // Baby steps: rot_i(ct) for i in 0..g (skip unused ones lazily).
+    let mut baby: Vec<Option<Ciphertext>> = vec![None; g];
+    let get_baby = |i: usize, baby: &mut Vec<Option<Ciphertext>>| {
+        if baby[i].is_none() {
+            baby[i] = Some(if i == 0 {
+                ct.clone()
+            } else {
+                ev.rotate(ct, i, sk)
+            });
+        }
+        baby[i].clone().unwrap()
+    };
+
+    let mut total: Option<Ciphertext> = None;
+    for j in 0..outer {
+        let mut inner: Option<Ciphertext> = None;
+        for i in 0..g {
+            let d = i + j * g;
+            if d >= s {
+                break;
+            }
+            let diag = m.diagonal(d);
+            if diag.iter().all(|c| c.abs() < 1e-12) {
+                continue; // sparse matrices skip empty diagonals entirely
+            }
+            // Pre-rotate the diagonal by -jg (i.e. right-rotate by jg).
+            let shifted = rot_plain(&diag, s - (j * g) % s);
+            let b = get_baby(i, &mut baby);
+            let pt = encode_with(&ev.ctx, &ev.encoder, &shifted, b.level, ev.ctx.scale);
+            // Multiply WITHOUT rescaling yet (sum first, rescale once).
+            let mut term = b.clone();
+            let mut p = pt;
+            p.to_eval(&ev.ctx.tower);
+            term.c0.mul_assign(&p, &ev.ctx.tower);
+            term.c1.mul_assign(&p, &ev.ctx.tower);
+            term.scale *= ev.ctx.scale;
+            inner = Some(match inner {
+                None => term,
+                Some(acc) => ev.add(&acc, &term),
+            });
+        }
+        if let Some(inner) = inner {
+            let rotated = if (j * g) % s == 0 {
+                inner
+            } else {
+                ev.rotate(&inner, (j * g) % s, sk)
+            };
+            total = Some(match total {
+                None => rotated,
+                Some(acc) => ev.add(&acc, &rotated),
+            });
+        }
+    }
+    let total = total.expect("matrix had no nonzero diagonal");
+    ev.rescale(&total)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::params::{CkksContext, CkksParams};
+    use crate::util::rng::Pcg64;
+
+    fn fixture() -> (Evaluator, SecretKey, Pcg64) {
+        let ctx = CkksContext::new(CkksParams::toy());
+        let mut rng = Pcg64::new(0xBEEF);
+        let sk = SecretKey::generate(&ctx, &mut rng);
+        (Evaluator::new(ctx), sk, rng)
+    }
+
+    fn ramp(s: usize) -> Vec<Complex> {
+        (0..s)
+            .map(|i| Complex::new((i as f64 / s as f64) - 0.5, 0.0))
+            .collect()
+    }
+
+    fn max_err(a: &[Complex], b: &[Complex]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| Complex::new(x.re - y.re, x.im - y.im).abs())
+            .fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn identity_matrix_is_noop() {
+        let (ev, sk, mut rng) = fixture();
+        let s = ev.ctx.params.slots();
+        let z = ramp(s);
+        let ct = ev.encrypt(&ev.encode(&z, 3), &sk, &mut rng);
+        let out = hom_linear(&ev, &ct, &SlotMatrix::identity(s), &sk);
+        assert_eq!(out.level, 2);
+        let back = ev.decrypt_to_slots(&out, &sk);
+        assert!(max_err(&z, &back) < 1e-3, "err={}", max_err(&z, &back));
+    }
+
+    #[test]
+    fn permutation_matrix() {
+        let (ev, sk, mut rng) = fixture();
+        let s = ev.ctx.params.slots();
+        let z = ramp(s);
+        // Cyclic shift-by-3 as a matrix.
+        let mut m = SlotMatrix::zeros(s);
+        for r in 0..s {
+            m.set(r, (r + 3) % s, Complex::new(1.0, 0.0));
+        }
+        let ct = ev.encrypt(&ev.encode(&z, 3), &sk, &mut rng);
+        let out = hom_linear(&ev, &ct, &m, &sk);
+        let back = ev.decrypt_to_slots(&out, &sk);
+        let want = m.matvec(&z);
+        assert!(max_err(&want, &back) < 1e-3);
+    }
+
+    #[test]
+    fn random_dense_complex_matrix() {
+        let (ev, sk, mut rng) = fixture();
+        let s = ev.ctx.params.slots();
+        let z = ramp(s);
+        let mut m = SlotMatrix::zeros(s);
+        for r in 0..s {
+            for c in 0..s {
+                m.set(
+                    r,
+                    c,
+                    Complex::new(
+                        (rng.f64() - 0.5) / s as f64,
+                        (rng.f64() - 0.5) / s as f64,
+                    ),
+                );
+            }
+        }
+        let ct = ev.encrypt(&ev.encode(&z, 3), &sk, &mut rng);
+        let out = hom_linear(&ev, &ct, &m, &sk);
+        let back = ev.decrypt_to_slots(&out, &sk);
+        let want = m.matvec(&z);
+        assert!(max_err(&want, &back) < 1e-3, "err={}", max_err(&want, &back));
+    }
+
+    #[test]
+    fn matvec_and_matmul_agree() {
+        let mut m1 = SlotMatrix::identity(4);
+        m1.set(0, 3, Complex::new(2.0, 0.0));
+        let m2 = SlotMatrix::identity(4);
+        let prod = m1.matmul(&m2);
+        let v = vec![
+            Complex::new(1.0, 0.0),
+            Complex::new(2.0, 0.0),
+            Complex::new(3.0, 0.0),
+            Complex::new(4.0, 0.0),
+        ];
+        let a = prod.matvec(&v);
+        let b = m1.matvec(&m2.matvec(&v));
+        assert!(max_err(&a, &b) < 1e-12);
+    }
+}

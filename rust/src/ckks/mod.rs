@@ -1,0 +1,23 @@
+//! CKKS-RNS substrate (the FIDESlib substitute): everything Table I/II
+//! describes, built from scratch on 64-bit words.
+
+pub mod bootstrap;
+pub mod encoding;
+pub mod keys;
+pub mod linear;
+pub mod modarith;
+pub mod ntt;
+pub mod ops;
+pub mod params;
+pub mod poly;
+pub mod prime;
+pub mod rns;
+
+pub use encoding::{decode, encode, Complex, Encoder};
+pub use keys::{KeyBank, KeyKind, KsKey, SecretKey};
+pub use modarith::{Modulus, Modulus30};
+pub use ntt::NttTable;
+pub use ops::{galois_element, Ciphertext, Evaluator};
+pub use params::{CkksContext, CkksParams, WidthProfile};
+pub use poly::{Format, RnsPoly, Tower};
+pub use rns::{BaseConvTable, RnsTools};

@@ -1,0 +1,459 @@
+//! The CKKS primitive operations of Table II: PtAdd, HEAdd, PtMult,
+//! HEMult (with relinearization), Rescale, Rotate and conjugation.
+//!
+//! Ciphertexts are kept in Eval (NTT) format between operations, the same
+//! convention GPU libraries use so that the NTT boundary — the paper's
+//! dominant kernel — appears exactly where FIDESlib places it.
+
+use super::encoding::{decode_with, encode_with, Complex, Encoder};
+use super::keys::{sample_error, sample_uniform, KeyBank, KeyKind, SecretKey};
+use super::params::CkksContext;
+use super::poly::{Format, RnsPoly};
+use crate::util::rng::Pcg64;
+
+/// A CKKS ciphertext `(c0, c1)` under secret key s: `c0 + c1*s ~= m`.
+#[derive(Debug, Clone)]
+pub struct Ciphertext {
+    pub c0: RnsPoly,
+    pub c1: RnsPoly,
+    pub level: usize,
+    pub scale: f64,
+}
+
+/// The evaluator: owns the context, encoder and (for this reproduction)
+/// the key bank. Method names mirror Table II.
+pub struct Evaluator {
+    pub ctx: CkksContext,
+    pub encoder: Encoder,
+    pub bank: KeyBank,
+}
+
+impl Evaluator {
+    pub fn new(ctx: CkksContext) -> Self {
+        let encoder = Encoder::new(ctx.params.n);
+        Self {
+            ctx,
+            encoder,
+            bank: KeyBank::new(0xFEC0),
+        }
+    }
+
+    // ------------------------------------------------------------------
+    // Client-side: encode / encrypt / decrypt / decode
+    // ------------------------------------------------------------------
+
+    pub fn encode(&self, z: &[Complex], level: usize) -> RnsPoly {
+        encode_with(&self.ctx, &self.encoder, z, level, self.ctx.scale)
+    }
+
+    pub fn decode(&self, pt: &RnsPoly, scale: f64) -> Vec<Complex> {
+        decode_with(&self.ctx, &self.encoder, pt, scale)
+    }
+
+    /// Symmetric encryption at `level`.
+    pub fn encrypt(&self, pt: &RnsPoly, sk: &SecretKey, rng: &mut Pcg64) -> Ciphertext {
+        assert_eq!(pt.format, Format::Coeff);
+        let chain = pt.chain.clone();
+        let level = chain.len() - 1;
+        let a = sample_uniform(&self.ctx, &chain, rng);
+        let mut e = sample_error(&self.ctx, &chain, rng);
+        e.to_eval(&self.ctx.tower);
+        let s = sk.restrict(&chain);
+        // c0 = -a*s + e + m ; c1 = a.
+        let mut c0 = a.clone();
+        c0.mul_assign(&s, &self.ctx.tower);
+        c0.neg_assign(&self.ctx.tower);
+        c0.add_assign(&e, &self.ctx.tower);
+        let mut m = pt.clone();
+        m.to_eval(&self.ctx.tower);
+        c0.add_assign(&m, &self.ctx.tower);
+        Ciphertext {
+            c0,
+            c1: a,
+            level,
+            scale: self.ctx.scale,
+        }
+    }
+
+    /// Decrypt to a coefficient-format plaintext polynomial.
+    pub fn decrypt(&self, ct: &Ciphertext, sk: &SecretKey) -> RnsPoly {
+        let s = sk.restrict(&ct.c0.chain);
+        let mut m = ct.c1.clone();
+        m.mul_assign(&s, &self.ctx.tower);
+        m.add_assign(&ct.c0, &self.ctx.tower);
+        m.to_coeff(&self.ctx.tower);
+        m
+    }
+
+    /// Decrypt straight to slots.
+    pub fn decrypt_to_slots(&self, ct: &Ciphertext, sk: &SecretKey) -> Vec<Complex> {
+        let pt = self.decrypt(ct, sk);
+        self.decode(&pt, ct.scale)
+    }
+
+    // ------------------------------------------------------------------
+    // Table II primitives
+    // ------------------------------------------------------------------
+
+    /// HEAdd(c, c'): coefficient-wise ciphertext addition.
+    pub fn add(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        let (a, b) = self.align(a, b);
+        let mut out = a.clone();
+        out.c0.add_assign(&b.c0, &self.ctx.tower);
+        out.c1.add_assign(&b.c1, &self.ctx.tower);
+        out
+    }
+
+    pub fn sub(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        let (a, b) = self.align(a, b);
+        let mut out = a.clone();
+        out.c0.sub_assign(&b.c0, &self.ctx.tower);
+        out.c1.sub_assign(&b.c1, &self.ctx.tower);
+        out
+    }
+
+    pub fn negate(&self, a: &Ciphertext) -> Ciphertext {
+        let mut out = a.clone();
+        out.c0.neg_assign(&self.ctx.tower);
+        out.c1.neg_assign(&self.ctx.tower);
+        out
+    }
+
+    /// PtAdd(c, p): add a plaintext polynomial (same level & scale).
+    pub fn add_plain(&self, a: &Ciphertext, pt: &RnsPoly) -> Ciphertext {
+        let mut p = pt.clone();
+        p.to_eval(&self.ctx.tower);
+        let mut out = a.clone();
+        out.c0.add_assign(&p, &self.ctx.tower);
+        out
+    }
+
+    /// Add a constant to every slot.
+    pub fn add_const(&self, a: &Ciphertext, value: f64) -> Ciphertext {
+        let slots = self.ctx.params.slots();
+        let z = vec![Complex::new(value, 0.0); slots];
+        let pt = encode_with(&self.ctx, &self.encoder, &z, a.level, a.scale);
+        self.add_plain(a, &pt)
+    }
+
+    /// PtMult(c, p): plaintext-ciphertext product followed by rescale.
+    pub fn mul_plain(&self, a: &Ciphertext, pt: &RnsPoly) -> Ciphertext {
+        let mut p = pt.clone();
+        p.to_eval(&self.ctx.tower);
+        let mut out = a.clone();
+        out.c0.mul_assign(&p, &self.ctx.tower);
+        out.c1.mul_assign(&p, &self.ctx.tower);
+        out.scale = a.scale * self.ctx.scale;
+        self.rescale(&out)
+    }
+
+    /// Multiply every slot by a scalar (burns one level, like PtMult).
+    pub fn mul_const(&self, a: &Ciphertext, value: f64) -> Ciphertext {
+        let slots = self.ctx.params.slots();
+        let z = vec![Complex::new(value, 0.0); slots];
+        let pt = encode_with(&self.ctx, &self.encoder, &z, a.level, self.ctx.scale);
+        self.mul_plain(a, &pt)
+    }
+
+    /// HEMult(c, c', evk): tensor, relinearize, rescale (Table II).
+    pub fn mul(&self, a: &Ciphertext, b: &Ciphertext, sk: &SecretKey) -> Ciphertext {
+        let (a, b) = self.align(a, b);
+        // Tensor product: (d0, d1, d2) = (c0c0', c0c1' + c1c0', c1c1').
+        let mut d0 = a.c0.clone();
+        d0.mul_assign(&b.c0, &self.ctx.tower);
+        let mut d1 = a.c0.clone();
+        d1.mul_assign(&b.c1, &self.ctx.tower);
+        let mut t = a.c1.clone();
+        t.mul_assign(&b.c0, &self.ctx.tower);
+        d1.add_assign(&t, &self.ctx.tower);
+        let mut d2 = a.c1.clone();
+        d2.mul_assign(&b.c1, &self.ctx.tower);
+
+        // Relinearize d2 (KeySwitch with evk_{s^2}).
+        let ksk = self.bank.get(&self.ctx, sk, KeyKind::Relin, a.level);
+        let (e0, e1) = ksk.apply(&self.ctx, &d2);
+        d0.add_assign(&e0, &self.ctx.tower);
+        d1.add_assign(&e1, &self.ctx.tower);
+
+        let out = Ciphertext {
+            c0: d0,
+            c1: d1,
+            level: a.level,
+            scale: a.scale * b.scale,
+        };
+        self.rescale(&out)
+    }
+
+    /// Rescale(c, q_l): divide by the top prime, dropping one level.
+    pub fn rescale(&self, a: &Ciphertext) -> Ciphertext {
+        assert!(a.level >= 1, "no level left to rescale into");
+        let q_l = self.ctx.tower.contexts[a.c0.chain[a.level]].modulus.value();
+        let mut c0 = a.c0.clone();
+        let mut c1 = a.c1.clone();
+        c0.to_coeff(&self.ctx.tower);
+        c1.to_coeff(&self.ctx.tower);
+        self.ctx.tools.rescale(&mut c0, &self.ctx.tower);
+        self.ctx.tools.rescale(&mut c1, &self.ctx.tower);
+        c0.to_eval(&self.ctx.tower);
+        c1.to_eval(&self.ctx.tower);
+        Ciphertext {
+            c0,
+            c1,
+            level: a.level - 1,
+            scale: a.scale / q_l as f64,
+        }
+    }
+
+    /// Drop to a lower level without dividing (exact in RNS).
+    pub fn level_reduce(&self, a: &Ciphertext, level: usize) -> Ciphertext {
+        assert!(level <= a.level);
+        let mut out = a.clone();
+        while out.c0.level() > level + 1 {
+            out.c0.drop_last_limb();
+            out.c1.drop_last_limb();
+        }
+        out.level = level;
+        out
+    }
+
+    /// Rotate(c, k): cyclic slot rotation by k (Table II) — automorphism
+    /// x -> x^(5^k) on both components plus a KeySwitch of the c1 part.
+    pub fn rotate(&self, a: &Ciphertext, k: usize, sk: &SecretKey) -> Ciphertext {
+        let slots = self.ctx.params.slots();
+        let g = galois_element(k % slots, self.ctx.params.n);
+        self.apply_galois(a, g, sk)
+    }
+
+    /// Complex conjugation of every slot (g = 2N - 1).
+    pub fn conjugate(&self, a: &Ciphertext, sk: &SecretKey) -> Ciphertext {
+        self.apply_galois(a, 2 * self.ctx.params.n - 1, sk)
+    }
+
+    fn apply_galois(&self, a: &Ciphertext, g: usize, sk: &SecretKey) -> Ciphertext {
+        if g == 1 {
+            return a.clone();
+        }
+        // Automorphism in coefficient domain (SV-C: address generation +
+        // data rearrangement on CUDA cores / LD-ST units).
+        let mut c0 = a.c0.clone();
+        let mut c1 = a.c1.clone();
+        c0.to_coeff(&self.ctx.tower);
+        c1.to_coeff(&self.ctx.tower);
+        let mut r0 = c0.automorphism(g, &self.ctx.tower);
+        let mut r1 = c1.automorphism(g, &self.ctx.tower);
+        r0.to_eval(&self.ctx.tower);
+        r1.to_eval(&self.ctx.tower);
+
+        // KeySwitch phi_g(s) -> s on the rotated c1.
+        let ksk = self.bank.get(&self.ctx, sk, KeyKind::Galois(g), a.level);
+        let (e0, e1) = ksk.apply(&self.ctx, &r1);
+        r0.add_assign(&e0, &self.ctx.tower);
+        Ciphertext {
+            c0: r0,
+            c1: e1,
+            level: a.level,
+            scale: a.scale,
+        }
+    }
+
+    /// Bring two ciphertexts to a common level (and check scales match to
+    /// within floating slack).
+    fn align(&self, a: &Ciphertext, b: &Ciphertext) -> (Ciphertext, Ciphertext) {
+        let level = a.level.min(b.level);
+        let a2 = self.level_reduce(a, level);
+        let b2 = self.level_reduce(b, level);
+        let ratio = a2.scale / b2.scale;
+        assert!(
+            (0.5..2.0).contains(&ratio),
+            "scale mismatch: {} vs {}",
+            a2.scale,
+            b2.scale
+        );
+        (a2, b2)
+    }
+}
+
+/// Galois element for rotation by k slots: 5^k mod 2N.
+pub fn galois_element(k: usize, n: usize) -> usize {
+    let two_n = 2 * n;
+    let mut g = 1usize;
+    for _ in 0..k {
+        g = (g * 5) % two_n;
+    }
+    g
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::params::CkksParams;
+
+    struct Fixture {
+        ev: Evaluator,
+        sk: SecretKey,
+        rng: Pcg64,
+    }
+
+    fn fixture() -> Fixture {
+        let ctx = CkksContext::new(CkksParams::toy());
+        let mut rng = Pcg64::new(0xC0FFEE);
+        let sk = SecretKey::generate(&ctx, &mut rng);
+        Fixture {
+            ev: Evaluator::new(ctx),
+            sk,
+            rng,
+        }
+    }
+
+    fn ramp(slots: usize, scale: f64) -> Vec<Complex> {
+        (0..slots)
+            .map(|i| Complex::new(scale * (i as f64 / slots as f64 - 0.5), 0.0))
+            .collect()
+    }
+
+    fn max_err(a: &[Complex], b: &[Complex]) -> f64 {
+        a.iter()
+            .zip(b)
+            .map(|(x, y)| Complex::new(x.re - y.re, x.im - y.im).abs())
+            .fold(0.0, f64::max)
+    }
+
+    #[test]
+    fn encrypt_decrypt() {
+        let mut f = fixture();
+        let z = ramp(f.ev.ctx.params.slots(), 1.0);
+        let pt = f.ev.encode(&z, f.ev.ctx.max_level());
+        let ct = f.ev.encrypt(&pt, &f.sk, &mut f.rng);
+        let back = f.ev.decrypt_to_slots(&ct, &f.sk);
+        assert!(max_err(&z, &back) < 1e-4, "err={}", max_err(&z, &back));
+    }
+
+    #[test]
+    fn homomorphic_addition() {
+        let mut f = fixture();
+        let slots = f.ev.ctx.params.slots();
+        let za = ramp(slots, 1.0);
+        let zb = ramp(slots, 2.0);
+        let ca = f.ev.encrypt(&f.ev.encode(&za, 3), &f.sk, &mut f.rng);
+        let cb = f.ev.encrypt(&f.ev.encode(&zb, 3), &f.sk, &mut f.rng);
+        let sum = f.ev.add(&ca, &cb);
+        let back = f.ev.decrypt_to_slots(&sum, &f.sk);
+        let want: Vec<Complex> = za.iter().zip(&zb).map(|(a, b)| a.add(*b)).collect();
+        assert!(max_err(&want, &back) < 1e-4);
+    }
+
+    #[test]
+    fn homomorphic_multiplication() {
+        let mut f = fixture();
+        let slots = f.ev.ctx.params.slots();
+        let za = ramp(slots, 1.0);
+        let zb = ramp(slots, 0.7);
+        let ca = f.ev.encrypt(&f.ev.encode(&za, 3), &f.sk, &mut f.rng);
+        let cb = f.ev.encrypt(&f.ev.encode(&zb, 3), &f.sk, &mut f.rng);
+        let prod = f.ev.mul(&ca, &cb, &f.sk);
+        assert_eq!(prod.level, 2);
+        let back = f.ev.decrypt_to_slots(&prod, &f.sk);
+        let want: Vec<Complex> = za.iter().zip(&zb).map(|(a, b)| a.mul(*b)).collect();
+        assert!(max_err(&want, &back) < 1e-3, "err={}", max_err(&want, &back));
+    }
+
+    #[test]
+    fn multiplication_depth_chain() {
+        // ((x * y) * z): two sequential HEMults across levels.
+        let mut f = fixture();
+        let slots = f.ev.ctx.params.slots();
+        let z = ramp(slots, 0.9);
+        let c1 = f.ev.encrypt(&f.ev.encode(&z, 3), &f.sk, &mut f.rng);
+        let c2 = f.ev.encrypt(&f.ev.encode(&z, 3), &f.sk, &mut f.rng);
+        let c3 = f.ev.encrypt(&f.ev.encode(&z, 3), &f.sk, &mut f.rng);
+        let p12 = f.ev.mul(&c1, &c2, &f.sk);
+        let p123 = f.ev.mul(&p12, &c3, &f.sk);
+        assert_eq!(p123.level, 1);
+        let back = f.ev.decrypt_to_slots(&p123, &f.sk);
+        let want: Vec<Complex> = z.iter().map(|v| v.mul(*v).mul(*v)).collect();
+        assert!(max_err(&want, &back) < 1e-2, "err={}", max_err(&want, &back));
+    }
+
+    #[test]
+    fn plaintext_multiplication() {
+        let mut f = fixture();
+        let slots = f.ev.ctx.params.slots();
+        let z = ramp(slots, 1.0);
+        let ct = f.ev.encrypt(&f.ev.encode(&z, 3), &f.sk, &mut f.rng);
+        let pt = f.ev.encode(&ramp(slots, 3.0), 3);
+        let out = f.ev.mul_plain(&ct, &pt);
+        let back = f.ev.decrypt_to_slots(&out, &f.sk);
+        let want: Vec<Complex> = z
+            .iter()
+            .zip(&ramp(slots, 3.0))
+            .map(|(a, b)| a.mul(*b))
+            .collect();
+        assert!(max_err(&want, &back) < 1e-3);
+    }
+
+    #[test]
+    fn rotation() {
+        let mut f = fixture();
+        let slots = f.ev.ctx.params.slots();
+        let z = ramp(slots, 1.0);
+        let ct = f.ev.encrypt(&f.ev.encode(&z, 3), &f.sk, &mut f.rng);
+        for k in [1usize, 2, 5, slots - 1] {
+            let rot = f.ev.rotate(&ct, k, &f.sk);
+            let back = f.ev.decrypt_to_slots(&rot, &f.sk);
+            let want: Vec<Complex> = (0..slots).map(|j| z[(j + k) % slots]).collect();
+            assert!(
+                max_err(&want, &back) < 1e-3,
+                "k={k} err={}",
+                max_err(&want, &back)
+            );
+        }
+    }
+
+    #[test]
+    fn conjugation() {
+        let mut f = fixture();
+        let slots = f.ev.ctx.params.slots();
+        let z: Vec<Complex> = (0..slots)
+            .map(|i| Complex::new(0.1 * (i % 7) as f64, 0.05 * (i % 3) as f64))
+            .collect();
+        let ct = f.ev.encrypt(&f.ev.encode(&z, 3), &f.sk, &mut f.rng);
+        let conj = f.ev.conjugate(&ct, &f.sk);
+        let back = f.ev.decrypt_to_slots(&conj, &f.sk);
+        let want: Vec<Complex> = z.iter().map(|c| c.conj()).collect();
+        assert!(max_err(&want, &back) < 1e-3);
+    }
+
+    #[test]
+    fn add_and_mul_const() {
+        let mut f = fixture();
+        let slots = f.ev.ctx.params.slots();
+        let z = ramp(slots, 1.0);
+        let ct = f.ev.encrypt(&f.ev.encode(&z, 3), &f.sk, &mut f.rng);
+        let shifted = f.ev.add_const(&ct, 0.25);
+        let scaled = f.ev.mul_const(&shifted, 2.0);
+        let back = f.ev.decrypt_to_slots(&scaled, &f.sk);
+        for (j, got) in back.iter().enumerate() {
+            let want = (z[j].re + 0.25) * 2.0;
+            assert!((got.re - want).abs() < 1e-3, "slot {j}");
+        }
+    }
+
+    #[test]
+    fn level_reduce_preserves_value() {
+        let mut f = fixture();
+        let slots = f.ev.ctx.params.slots();
+        let z = ramp(slots, 1.0);
+        let ct = f.ev.encrypt(&f.ev.encode(&z, 3), &f.sk, &mut f.rng);
+        let low = f.ev.level_reduce(&ct, 1);
+        assert_eq!(low.level, 1);
+        let back = f.ev.decrypt_to_slots(&low, &f.sk);
+        assert!(max_err(&z, &back) < 1e-4);
+    }
+
+    #[test]
+    fn galois_element_values() {
+        assert_eq!(galois_element(0, 256), 1);
+        assert_eq!(galois_element(1, 256), 5);
+        assert_eq!(galois_element(2, 256), 25);
+    }
+}

@@ -1,0 +1,223 @@
+//! CKKS-RNS parameter sets and the shared evaluation context.
+//!
+//! Mirrors Table I/V of the paper: ring dimension N, multiplicative depth
+//! L, the RNS moduli chain Q, the extension chain P (alpha primes) and the
+//! key-switching digit count `dnum`.
+//!
+//! Two width profiles exist:
+//! * `Wide` (default, up to 62-bit primes) — high-precision software
+//!   substrate used by the functional tests and examples.
+//! * `Pe32` (30-bit primes) — the paper's 32-bit FHECore datapath; numbers
+//!   flow through the identical Barrett pipeline as the hardware PE and
+//!   the L1 Pallas kernel.
+
+use super::poly::Tower;
+use super::prime::ntt_primes;
+use super::rns::{BaseConvTable, RnsTools};
+
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum WidthProfile {
+    /// Software substrate: scale-width primes in the 40-60 bit range.
+    Wide,
+    /// The FHECore PE datapath: all primes in [2^29, 2^30).
+    Pe32,
+}
+
+#[derive(Debug, Clone)]
+pub struct CkksParams {
+    /// Ring dimension N (power of two). Paper workloads: 2^16.
+    pub n: usize,
+    /// Multiplicative depth L: the chain has L+1 primes q_0..q_L.
+    pub depth: usize,
+    /// log2 of the encoding scale Delta.
+    pub scale_bits: u32,
+    /// Number of key-switching digits (Table V `dnum`).
+    pub dnum: usize,
+    pub profile: WidthProfile,
+    /// Gaussian noise parameter for fresh encryptions.
+    pub sigma: f64,
+}
+
+impl CkksParams {
+    /// A small, fast parameter set for tests (N=256, depth 3).
+    pub fn toy() -> Self {
+        Self {
+            n: 256,
+            depth: 3,
+            scale_bits: 40,
+            dnum: 2,
+            profile: WidthProfile::Wide,
+            sigma: 3.2,
+        }
+    }
+
+    /// Medium set for examples (N=4096, depth 6) — large enough that the
+    /// slot count supports the LR/CNN examples, small enough to be quick.
+    pub fn medium() -> Self {
+        Self {
+            n: 4096,
+            depth: 6,
+            scale_bits: 40,
+            dnum: 3,
+            profile: WidthProfile::Wide,
+            sigma: 3.2,
+        }
+    }
+
+    pub fn slots(&self) -> usize {
+        self.n / 2
+    }
+
+    /// Number of extension primes alpha = ceil((L+1)/dnum) (Table I).
+    pub fn alpha(&self) -> usize {
+        (self.depth + 1).div_ceil(self.dnum)
+    }
+
+    /// Bit widths for (q0, scale primes, p primes).
+    fn widths(&self) -> (u32, u32, u32) {
+        match self.profile {
+            WidthProfile::Wide => {
+                // q0 carries the message headroom; P primes must dominate
+                // the digit product's noise, use the widest lane.
+                let q0 = (self.scale_bits + 10).min(60);
+                (q0, self.scale_bits, q0 + 1)
+            }
+            WidthProfile::Pe32 => (30, 30, 30),
+        }
+    }
+}
+
+/// All precomputed state shared by encoder, keys and evaluator.
+pub struct CkksContext {
+    pub params: CkksParams,
+    pub tower: Tower,
+    /// Context indices of the Q chain (level l uses q_chain[..=l]).
+    pub q_chain: Vec<usize>,
+    /// Context indices of the P (extension) chain.
+    pub p_chain: Vec<usize>,
+    pub tools: RnsTools,
+    /// P -> Q conversion used by ModDown after key switching.
+    pub conv_p_to_q: BaseConvTable,
+    /// The encoding scale Delta.
+    pub scale: f64,
+}
+
+impl CkksContext {
+    pub fn new(params: CkksParams) -> Self {
+        let (q0_bits, qi_bits, p_bits) = params.widths();
+        let nq = params.depth + 1;
+        let alpha = params.alpha();
+
+        // Draw primes per width class, avoiding collisions across classes.
+        let mut primes: Vec<u64> = Vec::new();
+        if params.profile == WidthProfile::Pe32 {
+            // All primes share a width: draw one long descending run.
+            primes = ntt_primes(params.n, 30, nq + alpha);
+        } else {
+            let q0 = ntt_primes(params.n, q0_bits, 1);
+            let qi = ntt_primes(params.n, qi_bits, nq - 1);
+            let p = ntt_primes(params.n, p_bits, alpha);
+            primes.extend(&q0);
+            primes.extend(&qi);
+            primes.extend(&p);
+        }
+        let tower = Tower::new(params.n, &primes);
+        let q_chain: Vec<usize> = (0..nq).collect();
+        let p_chain: Vec<usize> = (nq..nq + alpha).collect();
+        let tools = RnsTools::new(&tower, &q_chain, &p_chain);
+        let conv_p_to_q = BaseConvTable::new(&tower, &p_chain, &q_chain);
+        let scale = 2f64.powi(params.scale_bits as i32);
+        Self {
+            params,
+            tower,
+            q_chain,
+            p_chain,
+            tools,
+            conv_p_to_q,
+            scale,
+        }
+    }
+
+    /// Chain for a ciphertext at `level` (levels count down from depth).
+    pub fn chain_at(&self, level: usize) -> Vec<usize> {
+        assert!(level < self.q_chain.len());
+        self.q_chain[..=level].to_vec()
+    }
+
+    /// Active chain extended by P (the key-switching working basis).
+    pub fn extended_chain_at(&self, level: usize) -> Vec<usize> {
+        let mut c = self.chain_at(level);
+        c.extend(&self.p_chain);
+        c
+    }
+
+    pub fn max_level(&self) -> usize {
+        self.params.depth
+    }
+
+    pub fn modulus_bits_total(&self) -> u32 {
+        // logQP of Table V.
+        self.tower
+            .contexts
+            .iter()
+            .map(|c| c.modulus.bits())
+            .sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toy_context_builds() {
+        let ctx = CkksContext::new(CkksParams::toy());
+        assert_eq!(ctx.q_chain.len(), 4);
+        assert_eq!(ctx.p_chain.len(), 2); // ceil(4/2)
+        assert_eq!(ctx.chain_at(1), vec![0, 1]);
+        assert_eq!(ctx.extended_chain_at(0), vec![0, 4, 5]);
+    }
+
+    #[test]
+    fn primes_are_distinct_and_ntt_friendly() {
+        let ctx = CkksContext::new(CkksParams::toy());
+        let primes = ctx.tower.primes();
+        let mut sorted = primes.clone();
+        sorted.sort_unstable();
+        sorted.dedup();
+        assert_eq!(sorted.len(), primes.len(), "duplicate primes");
+        for q in primes {
+            assert_eq!((q - 1) % (2 * ctx.params.n as u64), 0);
+        }
+    }
+
+    #[test]
+    fn pe32_profile_uses_30_bit_primes() {
+        let params = CkksParams {
+            n: 256,
+            depth: 2,
+            scale_bits: 29,
+            dnum: 1,
+            profile: WidthProfile::Pe32,
+            sigma: 3.2,
+        };
+        let ctx = CkksContext::new(params);
+        for q in ctx.tower.primes() {
+            assert!((1 << 29..1 << 30).contains(&q));
+        }
+    }
+
+    #[test]
+    fn alpha_matches_table_v_convention() {
+        // Bootstrap row of Table V: L=26, dnum=3 -> alpha = ceil(27/3) = 9.
+        let p = CkksParams {
+            n: 256,
+            depth: 26,
+            scale_bits: 40,
+            dnum: 3,
+            profile: WidthProfile::Wide,
+            sigma: 3.2,
+        };
+        assert_eq!(p.alpha(), 9);
+    }
+}

@@ -1,0 +1,304 @@
+//! RNS polynomials: the fundamental CKKS data object.
+//!
+//! A polynomial in `R_Q = Z_Q[x]/(x^N + 1)` is stored as one residue limb
+//! per prime of the active chain (Table I). Limb-level operations are
+//! embarrassingly parallel across primes — the property that makes FHE
+//! SIMD-friendly on GPUs (SI) — and are parallelized with rayon here.
+
+use std::sync::Arc;
+
+use super::modarith::Modulus;
+use super::ntt::NttTable;
+use crate::util::threads::{par_for_each_mut_hint, par_map};
+
+/// Domain tag: coefficient (power basis) or evaluation (NTT, bit-reversed).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Format {
+    Coeff,
+    Eval,
+}
+
+/// Per-prime context shared by every polynomial at a given chain index.
+#[derive(Debug)]
+pub struct LimbContext {
+    pub modulus: Modulus,
+    pub ntt: NttTable,
+}
+
+/// The full tower of limb contexts for a parameter set (Q then P primes).
+#[derive(Debug)]
+pub struct Tower {
+    pub n: usize,
+    pub contexts: Vec<Arc<LimbContext>>,
+}
+
+impl Tower {
+    pub fn new(n: usize, primes: &[u64]) -> Self {
+        let contexts = par_map(primes, |&q| {
+            Arc::new(LimbContext {
+                modulus: Modulus::new(q),
+                ntt: NttTable::new(n, q),
+            })
+        });
+        Self { n, contexts }
+    }
+
+    pub fn primes(&self) -> Vec<u64> {
+        self.contexts.iter().map(|c| c.modulus.value()).collect()
+    }
+}
+
+/// An RNS polynomial over the first `limbs.len()` primes of a tower.
+#[derive(Debug, Clone)]
+pub struct RnsPoly {
+    pub n: usize,
+    pub format: Format,
+    /// `limbs[i][j]` = j-th coefficient (or eval slot) modulo prime i.
+    pub limbs: Vec<Vec<u64>>,
+    /// Indices into the tower's context list, one per limb. This lets a
+    /// polynomial live on a *subset* chain (e.g. the P extension base or a
+    /// rescaled lower level) while sharing one tower.
+    pub chain: Vec<usize>,
+}
+
+impl RnsPoly {
+    pub fn zero(tower: &Tower, chain: &[usize], format: Format) -> Self {
+        Self {
+            n: tower.n,
+            format,
+            limbs: vec![vec![0u64; tower.n]; chain.len()],
+            chain: chain.to_vec(),
+        }
+    }
+
+    pub fn level(&self) -> usize {
+        self.limbs.len()
+    }
+
+    fn zip_check(&self, other: &Self) {
+        assert_eq!(self.n, other.n);
+        assert_eq!(self.format, other.format, "format mismatch");
+        assert_eq!(self.chain, other.chain, "chain mismatch");
+    }
+
+    /// Elementwise addition (any format).
+    pub fn add_assign(&mut self, other: &Self, tower: &Tower) {
+        self.zip_check(other);
+        let chain = self.chain.clone();
+        par_for_each_mut_hint(&mut self.limbs, self.n, |i, a| {
+            let m = tower.contexts[chain[i]].modulus;
+            for (x, &y) in a.iter_mut().zip(&other.limbs[i]) {
+                *x = m.add(*x, y);
+            }
+        });
+    }
+
+    pub fn sub_assign(&mut self, other: &Self, tower: &Tower) {
+        self.zip_check(other);
+        let chain = self.chain.clone();
+        par_for_each_mut_hint(&mut self.limbs, self.n, |i, a| {
+            let m = tower.contexts[chain[i]].modulus;
+            for (x, &y) in a.iter_mut().zip(&other.limbs[i]) {
+                *x = m.sub(*x, y);
+            }
+        });
+    }
+
+    pub fn neg_assign(&mut self, tower: &Tower) {
+        let chain = self.chain.clone();
+        par_for_each_mut_hint(&mut self.limbs, self.n, |i, a| {
+            let m = tower.contexts[chain[i]].modulus;
+            for x in a.iter_mut() {
+                *x = m.neg(*x);
+            }
+        });
+    }
+
+    /// Pointwise (Hadamard) product — both operands must be in Eval format.
+    pub fn mul_assign(&mut self, other: &Self, tower: &Tower) {
+        self.zip_check(other);
+        assert_eq!(self.format, Format::Eval, "pointwise mul needs Eval");
+        let chain = self.chain.clone();
+        par_for_each_mut_hint(&mut self.limbs, self.n, |i, a| {
+            let m = tower.contexts[chain[i]].modulus;
+            for (x, &y) in a.iter_mut().zip(&other.limbs[i]) {
+                *x = m.mul(*x, y);
+            }
+        });
+    }
+
+    /// Multiply every limb by a per-limb scalar.
+    pub fn scale_assign(&mut self, scalars: &[u64], tower: &Tower) {
+        assert_eq!(scalars.len(), self.limbs.len());
+        let chain = self.chain.clone();
+        par_for_each_mut_hint(&mut self.limbs, self.n, |i, a| {
+            let m = tower.contexts[chain[i]].modulus;
+            let ss = m.reduce_u64(scalars[i]);
+            let sh = m.shoup(ss);
+            for x in a.iter_mut() {
+                *x = m.mul_shoup(*x, ss, sh);
+            }
+        });
+    }
+
+    /// Transform all limbs to evaluation (NTT, bit-reversed) format.
+    pub fn to_eval(&mut self, tower: &Tower) {
+        if self.format == Format::Eval {
+            return;
+        }
+        let chain = self.chain.clone();
+        par_for_each_mut_hint(&mut self.limbs, self.n, |i, a| {
+            tower.contexts[chain[i]].ntt.forward_br(a)
+        });
+        self.format = Format::Eval;
+    }
+
+    /// Transform all limbs back to coefficient format.
+    pub fn to_coeff(&mut self, tower: &Tower) {
+        if self.format == Format::Coeff {
+            return;
+        }
+        let chain = self.chain.clone();
+        par_for_each_mut_hint(&mut self.limbs, self.n, |i, a| {
+            tower.contexts[chain[i]].ntt.inverse_br(a)
+        });
+        self.format = Format::Coeff;
+    }
+
+    /// Apply the Galois automorphism `x -> x^g` (coefficient format).
+    ///
+    /// Coefficient j maps to position `g*j mod 2N` with a sign flip when
+    /// the image lands in the upper half — the Frobenius-map data
+    /// rearrangement the paper assigns to CUDA cores + LD/ST (SV-C).
+    pub fn automorphism(&self, g: usize, tower: &Tower) -> Self {
+        assert_eq!(self.format, Format::Coeff, "automorphism needs Coeff");
+        let n = self.n;
+        let two_n = 2 * n;
+        let mut out = self.clone();
+        for (limb_idx, limb) in self.limbs.iter().enumerate() {
+            let m = tower.contexts[self.chain[limb_idx]].modulus;
+            let dst = &mut out.limbs[limb_idx];
+            for j in 0..n {
+                let t = (g * j) % two_n;
+                let (pos, negate) = if t < n { (t, false) } else { (t - n, true) };
+                dst[pos] = if negate { m.neg(limb[j]) } else { limb[j] };
+            }
+        }
+        out
+    }
+
+    /// Drop the last limb (used by rescale / mod-down).
+    pub fn drop_last_limb(&mut self) {
+        self.limbs.pop().expect("cannot drop limb of empty poly");
+        self.chain.pop();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::prime::ntt_primes;
+
+    fn tower(n: usize, limbs: usize) -> Tower {
+        Tower::new(n, &ntt_primes(n, 50, limbs))
+    }
+
+    fn rand_poly(tower: &Tower, chain: &[usize], seed: u64) -> RnsPoly {
+        let mut p = RnsPoly::zero(tower, chain, Format::Coeff);
+        let mut state = seed | 1;
+        for (i, limb) in p.limbs.iter_mut().enumerate() {
+            let q = tower.contexts[chain[i]].modulus.value();
+            for x in limb.iter_mut() {
+                state = state.wrapping_mul(6364136223846793005).wrapping_add(99);
+                *x = state % q;
+            }
+        }
+        p
+    }
+
+    #[test]
+    fn eval_roundtrip() {
+        let t = tower(128, 3);
+        let chain = [0usize, 1, 2];
+        let a = rand_poly(&t, &chain, 5);
+        let mut b = a.clone();
+        b.to_eval(&t);
+        assert_eq!(b.format, Format::Eval);
+        b.to_coeff(&t);
+        assert_eq!(b.limbs, a.limbs);
+    }
+
+    #[test]
+    fn add_then_sub_is_identity() {
+        let t = tower(64, 2);
+        let chain = [0usize, 1];
+        let a = rand_poly(&t, &chain, 1);
+        let b = rand_poly(&t, &chain, 2);
+        let mut c = a.clone();
+        c.add_assign(&b, &t);
+        c.sub_assign(&b, &t);
+        assert_eq!(c.limbs, a.limbs);
+    }
+
+    #[test]
+    fn mul_commutes_with_ntt() {
+        // INTT(NTT(a) o NTT(b)) == negacyclic a*b: spot-check via x * x = x^2.
+        let t = tower(8, 1);
+        let chain = [0usize];
+        let mut a = RnsPoly::zero(&t, &chain, Format::Coeff);
+        a.limbs[0][1] = 1; // x
+        let mut fa = a.clone();
+        fa.to_eval(&t);
+        let mut prod = fa.clone();
+        prod.mul_assign(&fa, &t);
+        prod.to_coeff(&t);
+        let mut want = vec![0u64; 8];
+        want[2] = 1; // x^2
+        assert_eq!(prod.limbs[0], want);
+    }
+
+    #[test]
+    fn automorphism_identity_and_inverse() {
+        let t = tower(32, 2);
+        let chain = [0usize, 1];
+        let a = rand_poly(&t, &chain, 11);
+        assert_eq!(a.automorphism(1, &t).limbs, a.limbs);
+        // g * g^{-1} = 1 mod 2N: applying both returns the original.
+        let g = 5usize;
+        let two_n = 64usize;
+        let g_inv = (1..two_n).find(|&h| (g * h) % two_n == 1).unwrap();
+        let back = a.automorphism(g, &t).automorphism(g_inv, &t);
+        assert_eq!(back.limbs, a.limbs);
+    }
+
+    #[test]
+    fn automorphism_negacyclic_sign() {
+        // x -> x^3 sends x^k to x^{3k}, with x^n = -1 wraparound.
+        let t = tower(4, 1);
+        let chain = [0usize];
+        let q = t.contexts[0].modulus.value();
+        let mut a = RnsPoly::zero(&t, &chain, Format::Coeff);
+        a.limbs[0][2] = 7; // 7x^2
+        let out = a.automorphism(3, &t);
+        // 3*2 = 6 = 4+2 -> position 2, negated.
+        let mut want = vec![0u64; 4];
+        want[2] = q - 7;
+        assert_eq!(out.limbs[0], want);
+    }
+
+    #[test]
+    fn scale_assign_matches_mul() {
+        let t = tower(16, 2);
+        let chain = [0usize, 1];
+        let a = rand_poly(&t, &chain, 3);
+        let mut b = a.clone();
+        b.scale_assign(&[3, 5], &t);
+        for (i, limb) in b.limbs.iter().enumerate() {
+            let m = t.contexts[i].modulus;
+            let s = [3u64, 5][i];
+            for (j, &x) in limb.iter().enumerate() {
+                assert_eq!(x, m.mul(a.limbs[i][j], s));
+            }
+        }
+    }
+}

@@ -1,0 +1,213 @@
+//! Prime generation and root-of-unity search for NTT-friendly moduli.
+//!
+//! CKKS-RNS needs chains of primes `q = 1 (mod 2N)` so that a primitive
+//! 2N-th root of unity (the negacyclic `psi`) exists. The paper's datapath
+//! is 32-bit (30-bit primes, SIV-C); the software substrate additionally
+//! uses wider primes (up to 62 bits) for the high-precision scale chain.
+
+use super::modarith::Modulus;
+
+/// Deterministic Miller-Rabin, valid for all `n < 2^64`.
+pub fn is_prime(n: u64) -> bool {
+    if n < 2 {
+        return false;
+    }
+    for p in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        if n % p == 0 {
+            return n == p;
+        }
+    }
+    let mut d = n - 1;
+    let mut s = 0u32;
+    while d % 2 == 0 {
+        d /= 2;
+        s += 1;
+    }
+    // This base set is a proven deterministic witness set for n < 2^64.
+    'witness: for a in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37] {
+        let m = Modulus::new_raw(n);
+        let mut x = m.pow(a % n, d);
+        if x == 1 || x == n - 1 {
+            continue;
+        }
+        for _ in 0..s - 1 {
+            x = m.mul(x, x);
+            if x == n - 1 {
+                continue 'witness;
+            }
+        }
+        return false;
+    }
+    true
+}
+
+/// Generate `count` NTT-friendly primes of exactly `bits` bits for ring
+/// dimension `n`, scanning downward from `2^bits - 1`.
+pub fn ntt_primes(n: usize, bits: u32, count: usize) -> Vec<u64> {
+    assert!(n.is_power_of_two());
+    assert!((20..=Modulus::MAX_BITS).contains(&bits));
+    let step = 2 * n as u64;
+    let top = (1u64 << bits) - 1;
+    let mut q = top - (top % step) + 1;
+    if q > top {
+        q -= step;
+    }
+    let mut out = Vec::with_capacity(count);
+    let floor = 1u64 << (bits - 1);
+    while out.len() < count && q > floor {
+        if is_prime(q) {
+            out.push(q);
+        }
+        q -= step;
+    }
+    assert!(
+        out.len() == count,
+        "not enough {bits}-bit NTT primes for n={n} (found {})",
+        out.len()
+    );
+    out
+}
+
+/// 30-bit primes for the FHECore PE datapath (`[2^29, 2^30)`).
+pub fn pe_primes(n: usize, count: usize) -> Vec<u64> {
+    ntt_primes(n, 30, count)
+}
+
+/// Pollard rho + trial division factorization (distinct prime factors).
+pub fn distinct_prime_factors(mut n: u64) -> Vec<u64> {
+    let mut factors = Vec::new();
+    for p in [2u64, 3, 5, 7, 11, 13, 17, 19, 23, 29, 31, 37, 41, 43, 47] {
+        if n % p == 0 {
+            factors.push(p);
+            while n % p == 0 {
+                n /= p;
+            }
+        }
+    }
+    let mut stack = vec![n];
+    while let Some(m) = stack.pop() {
+        if m == 1 {
+            continue;
+        }
+        if is_prime(m) {
+            if !factors.contains(&m) {
+                factors.push(m);
+            }
+            continue;
+        }
+        let d = pollard_rho(m);
+        stack.push(d);
+        stack.push(m / d);
+    }
+    factors.sort_unstable();
+    factors
+}
+
+fn pollard_rho(n: u64) -> u64 {
+    assert!(n % 2 == 1 && n > 3);
+    let m = Modulus::new_raw(n);
+    let mut c = 1u64;
+    loop {
+        let f = |x: u64| m.add(m.mul(x, x), c % n);
+        let mut x = 2u64;
+        let mut y = 2u64;
+        let mut d = 1u64;
+        while d == 1 {
+            x = f(x);
+            y = f(f(y));
+            d = gcd(x.abs_diff(y), n);
+        }
+        if d != n {
+            return d;
+        }
+        c += 1;
+    }
+}
+
+fn gcd(mut a: u64, mut b: u64) -> u64 {
+    while b != 0 {
+        (a, b) = (b, a % b);
+    }
+    a
+}
+
+/// Smallest generator of `(Z/q)^*` for prime q.
+pub fn primitive_root(q: u64) -> u64 {
+    let m = Modulus::new(q);
+    let phi = q - 1;
+    let factors = distinct_prime_factors(phi);
+    (2..).find(|&g| factors.iter().all(|&f| m.pow(g, phi / f) != 1)).unwrap()
+}
+
+/// A primitive `order`-th root of unity mod prime q (requires order | q-1).
+pub fn root_of_unity(order: u64, q: u64) -> u64 {
+    assert!((q - 1) % order == 0, "order must divide q-1");
+    let m = Modulus::new(q);
+    let g = primitive_root(q);
+    let w = m.pow(g, (q - 1) / order);
+    debug_assert_eq!(m.pow(w, order), 1);
+    debug_assert_eq!(m.pow(w, order / 2), q - 1, "must be primitive");
+    w
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn miller_rabin_known_values() {
+        assert!(is_prime(2));
+        assert!(is_prime(3));
+        assert!(is_prime(1073479681)); // 30-bit NTT prime (n = 2^15)
+        assert!(is_prime((1u64 << 61) - 1)); // Mersenne 61
+        assert!(!is_prime(1));
+        assert!(!is_prime(561)); // Carmichael
+        assert!(!is_prime(1073479683));
+        assert!(!is_prime((1u64 << 60) - 1));
+    }
+
+    #[test]
+    fn ntt_primes_have_required_splitting() {
+        for (n, bits) in [(1usize << 12, 60u32), (1 << 13, 30), (1 << 16, 30)] {
+            let primes = ntt_primes(n, bits, 3);
+            for q in primes {
+                assert!(is_prime(q));
+                assert_eq!((q - 1) % (2 * n as u64), 0);
+                assert_eq!(64 - q.leading_zeros(), bits);
+            }
+        }
+    }
+
+    #[test]
+    fn pe_primes_in_barrett_window() {
+        for q in pe_primes(1 << 16, 4) {
+            assert!(q >= 1 << 29 && q < 1 << 30);
+        }
+    }
+
+    #[test]
+    fn factorization_roundtrip() {
+        assert_eq!(distinct_prime_factors(2 * 3 * 5 * 7 * 11), vec![2, 3, 5, 7, 11]);
+        assert_eq!(distinct_prime_factors(1024), vec![2]);
+        let q = ntt_primes(1 << 12, 45, 1)[0];
+        let fs = distinct_prime_factors(q - 1);
+        let mut m = q - 1;
+        for f in &fs {
+            while m % f == 0 {
+                m /= f;
+            }
+        }
+        assert_eq!(m, 1);
+    }
+
+    #[test]
+    fn roots_of_unity_are_primitive() {
+        let n = 1usize << 10;
+        let q = ntt_primes(n, 50, 1)[0];
+        let m = Modulus::new(q);
+        let psi = root_of_unity(2 * n as u64, q);
+        assert_eq!(m.pow(psi, n as u64), q - 1, "psi^N = -1 (negacyclic)");
+        let w = m.mul(psi, psi);
+        assert_eq!(m.pow(w, n as u64), 1);
+    }
+}

@@ -1,0 +1,387 @@
+//! RNS base machinery: fast base conversion (Eq. 3/5), ModUp, ModDown and
+//! Rescale — the second-hottest kernel family of the paper (12.6% of
+//! runtime in Fig. 1) and the one that exercises FHECore's mixed-moduli
+//! systolic columns (SV-B).
+
+use super::modarith::Modulus;
+use super::poly::{Format, RnsPoly, Tower};
+use crate::util::threads::{par_for_each_mut_hint, par_map_range};
+
+/// Precomputed constants for converting residues from base `P` to base `Q`
+/// (both given as context indices into one tower).
+#[derive(Debug, Clone)]
+pub struct BaseConvTable {
+    pub src: Vec<usize>,
+    pub dst: Vec<usize>,
+    /// `[Phat_j^{-1}]_{p_j}` for each source prime.
+    pub phat_inv: Vec<u64>,
+    pub phat_inv_shoup: Vec<u64>,
+    /// `conv[i][j] = [Phat_j]_{q_i}` — the paper's Eq. 5 left matrix.
+    pub conv: Vec<Vec<u64>>,
+}
+
+impl BaseConvTable {
+    pub fn new(tower: &Tower, src: &[usize], dst: &[usize]) -> Self {
+        let src_primes: Vec<u64> = src.iter().map(|&i| tower.contexts[i].modulus.value()).collect();
+        // Phat_j mod m for arbitrary m, computed without bignums:
+        // product of all source primes except j, reduced mod m on the fly.
+        let phat_mod = |j: usize, m: Modulus| -> u64 {
+            let mut acc = 1u64;
+            for (k, &p) in src_primes.iter().enumerate() {
+                if k != j {
+                    acc = m.mul(acc, m.reduce_u64(p));
+                }
+            }
+            acc
+        };
+        let phat_inv: Vec<u64> = src
+            .iter()
+            .enumerate()
+            .map(|(j, &ci)| {
+                let m = tower.contexts[ci].modulus;
+                m.inv(phat_mod(j, m))
+            })
+            .collect();
+        let phat_inv_shoup: Vec<u64> = src
+            .iter()
+            .zip(&phat_inv)
+            .map(|(&ci, &v)| tower.contexts[ci].modulus.shoup(v))
+            .collect();
+        let conv: Vec<Vec<u64>> = dst
+            .iter()
+            .map(|&di| {
+                let m = tower.contexts[di].modulus;
+                (0..src.len()).map(|j| phat_mod(j, m)).collect()
+            })
+            .collect();
+        Self {
+            src: src.to_vec(),
+            dst: dst.to_vec(),
+            phat_inv,
+            phat_inv_shoup,
+            conv,
+        }
+    }
+
+    /// HPS fast base conversion of a coefficient-format polynomial
+    /// (Eq. 3): `out[i] = sum_j ([x_j * Phat_j^{-1}]_{p_j} * [Phat_j]_{q_i})
+    /// mod q_i`, with the well-known `+ e*P` overshoot (0 <= e < alpha).
+    ///
+    /// This is exactly the "mixed-moduli matrix multiplication" of Eq. 5 —
+    /// each output row under a different modulus — which is what FHECore
+    /// executes by programming per-column Barrett constants.
+    pub fn convert(&self, poly: &RnsPoly, tower: &Tower) -> RnsPoly {
+        assert_eq!(poly.format, Format::Coeff, "base conversion needs Coeff");
+        assert_eq!(poly.chain, self.src, "polynomial not on the source base");
+        let n = poly.n;
+        let alpha = self.src.len();
+
+        // y[j] = [x_j * Phat_j^{-1}]_{p_j}  (the elementwise pre-scale).
+        let mut y: Vec<Vec<u64>> = vec![Vec::new(); alpha];
+        par_for_each_mut_hint(&mut y, n, |j, slot| {
+            let m = tower.contexts[self.src[j]].modulus;
+            let (v, vs) = (self.phat_inv[j], self.phat_inv_shoup[j]);
+            *slot = poly.limbs[j].iter().map(|&x| m.mul_shoup(x, v, vs)).collect();
+        });
+
+        // out[i] = conv[i] . y  (dot product per coefficient, mod q_i).
+        let mut limbs: Vec<Vec<u64>> = vec![Vec::new(); self.dst.len()];
+        par_for_each_mut_hint(&mut limbs, n, |i, slot| {
+            let m = tower.contexts[self.dst[i]].modulus;
+            let row = &self.conv[i];
+            let mut out = vec![0u64; n];
+            for j in 0..alpha {
+                // Harvey's precomputed-operand multiply requires the
+                // *variable* operand below q too: reduce y (residues of a
+                // foreign prime p_j, possibly >= q_i) on entry.
+                let c = m.reduce_u64(row[j]);
+                let cs = m.shoup(c);
+                let yj = &y[j];
+                for (o, &v) in out.iter_mut().zip(yj) {
+                    let vr = m.reduce_u64(v);
+                    *o = m.add(*o, m.mul_shoup(vr, c, cs));
+                }
+            }
+            *slot = out;
+        });
+
+        RnsPoly {
+            n,
+            format: Format::Coeff,
+            limbs,
+            chain: self.dst.clone(),
+        }
+    }
+}
+
+/// Key-switching / rescale helper constants for one parameter set.
+#[derive(Debug)]
+pub struct RnsTools {
+    /// `q_l^{-1} mod q_i` for every pair (used by rescale: level l -> i).
+    pub q_inv: Vec<Vec<u64>>,
+    /// `[P^{-1}]_{q_i}` where P is the product of the extension primes.
+    pub p_inv_mod_q: Vec<u64>,
+    pub q_chain: Vec<usize>,
+    pub p_chain: Vec<usize>,
+}
+
+impl RnsTools {
+    pub fn new(tower: &Tower, q_chain: &[usize], p_chain: &[usize]) -> Self {
+        let nq = q_chain.len();
+        let mut q_inv = vec![vec![0u64; nq]; nq];
+        for l in 0..nq {
+            let ql = tower.contexts[q_chain[l]].modulus.value();
+            for i in 0..nq {
+                if i != l {
+                    let m = tower.contexts[q_chain[i]].modulus;
+                    q_inv[l][i] = m.inv(m.reduce_u64(ql));
+                }
+            }
+        }
+        let p_inv_mod_q = q_chain
+            .iter()
+            .map(|&qi| {
+                let m = tower.contexts[qi].modulus;
+                let mut acc = 1u64;
+                for &pi in p_chain {
+                    let p = tower.contexts[pi].modulus.value();
+                    acc = m.mul(acc, m.reduce_u64(p));
+                }
+                m.inv(acc)
+            })
+            .collect();
+        Self {
+            q_inv,
+            p_inv_mod_q,
+            q_chain: q_chain.to_vec(),
+            p_chain: p_chain.to_vec(),
+        }
+    }
+
+    /// Rescale: divide by the last prime of the active chain (Table II).
+    ///
+    /// `c'_i = (c_i - [c]_{q_l}) * q_l^{-1} mod q_i` — drops one limb and
+    /// one level. Input/output in coefficient format.
+    pub fn rescale(&self, poly: &mut RnsPoly, tower: &Tower) {
+        assert_eq!(poly.format, Format::Coeff, "rescale needs Coeff");
+        let l = poly.level() - 1;
+        assert!(l >= 1, "cannot rescale the last level");
+        let last_chain = poly.chain[l];
+        let last = poly.limbs[l].clone();
+        let q_l = tower.contexts[last_chain].modulus.value();
+        let l_pos = self
+            .q_chain
+            .iter()
+            .position(|&c| c == last_chain)
+            .expect("last limb not on the Q chain");
+        poly.drop_last_limb();
+        let chain = poly.chain.clone();
+        let q_inv_row = &self.q_inv[l_pos];
+        let hint = poly.n;
+        crate::util::threads::par_for_each_mut_hint(&mut poly.limbs, hint, |i, limb| {
+            let m = tower.contexts[chain[i]].modulus;
+            let i_pos = self.q_chain.iter().position(|&c| c == chain[i]).unwrap();
+            let inv = q_inv_row[i_pos];
+            let inv_sh = m.shoup(inv);
+            let half = q_l / 2;
+            for (x, &c_last) in limb.iter_mut().zip(&last) {
+                // Centered representative of [c]_{q_l} for rounding:
+                // subtract c_last (mapped into q_i) then multiply q_l^{-1}.
+                let (c_red, negate) = if c_last > half {
+                    (q_l - c_last, true)
+                } else {
+                    (c_last, false)
+                };
+                let c_mapped = {
+                    let r = m.reduce_u64(c_red);
+                    if negate {
+                        m.neg(r)
+                    } else {
+                        r
+                    }
+                };
+                let diff = m.sub(*x, c_mapped);
+                *x = m.mul_shoup(diff, inv, inv_sh);
+            }
+        });
+    }
+
+    /// ModDown: divide an extended-basis (Q·P) polynomial by P, landing on
+    /// Q — the closing step of hybrid key switching.
+    pub fn mod_down(
+        &self,
+        poly: &RnsPoly,
+        conv_p_to_q: &BaseConvTable,
+        tower: &Tower,
+    ) -> RnsPoly {
+        assert_eq!(poly.format, Format::Coeff);
+        let nq = poly
+            .chain
+            .iter()
+            .filter(|c| self.q_chain.contains(c))
+            .count();
+        // Split limbs into the Q part and the P part.
+        let mut q_part = RnsPoly {
+            n: poly.n,
+            format: Format::Coeff,
+            limbs: poly.limbs[..nq].to_vec(),
+            chain: poly.chain[..nq].to_vec(),
+        };
+        let p_part = RnsPoly {
+            n: poly.n,
+            format: Format::Coeff,
+            limbs: poly.limbs[nq..].to_vec(),
+            chain: poly.chain[nq..].to_vec(),
+        };
+        // (x - BaseConv_{P->Q}([x]_P)) * P^{-1} mod q_i.
+        let p_in_q = conv_p_to_q.convert(&p_part, tower);
+        q_part.sub_assign(&p_in_q, tower);
+        let scalars: Vec<u64> = q_part
+            .chain
+            .iter()
+            .map(|c| {
+                let i = self.q_chain.iter().position(|x| x == c).unwrap();
+                self.p_inv_mod_q[i]
+            })
+            .collect();
+        q_part.scale_assign(&scalars, tower);
+        q_part
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::prime::ntt_primes;
+    use crate::util::rng::Pcg64;
+
+    fn setup(n: usize, nq: usize, np: usize) -> (Tower, Vec<usize>, Vec<usize>) {
+        let primes = ntt_primes(n, 45, nq + np);
+        let tower = Tower::new(n, &primes);
+        let q: Vec<usize> = (0..nq).collect();
+        let p: Vec<usize> = (nq..nq + np).collect();
+        (tower, q, p)
+    }
+
+    /// CRT-reconstruct coefficient `idx` of an RNS poly into a big integer
+    /// represented as u128 (fine for <= 2 limbs of 45 bits in tests).
+    fn crt2(tower: &Tower, poly: &RnsPoly, idx: usize) -> u128 {
+        assert_eq!(poly.level(), 2);
+        let p0 = tower.contexts[poly.chain[0]].modulus.value() as u128;
+        let p1m = tower.contexts[poly.chain[1]].modulus;
+        let r0 = poly.limbs[0][idx] as u128;
+        let r1 = poly.limbs[1][idx];
+        // x = r0 + p0 * ((r1 - r0) * p0^{-1} mod p1)
+        let p0_inv = p1m.inv(p1m.reduce_u64(p0 as u64));
+        let diff = p1m.sub(r1, p1m.reduce_u64(r0 as u64));
+        let t = p1m.mul(diff, p0_inv) as u128;
+        r0 + p0 * t
+    }
+
+    #[test]
+    fn baseconv_reproduces_crt_value_mod_targets() {
+        let (tower, q, p) = setup(32, 2, 3);
+        let table = BaseConvTable::new(&tower, &q, &p);
+        let mut rng = Pcg64::new(5);
+        let mut poly = RnsPoly::zero(&tower, &q, Format::Coeff);
+        for (i, limb) in poly.limbs.iter_mut().enumerate() {
+            let qi = tower.contexts[q[i]].modulus.value();
+            for x in limb.iter_mut() {
+                *x = rng.below(qi);
+            }
+        }
+        // Make the RNS residues consistent with a single integer per slot.
+        // (random residues represent *some* integer mod Q; CRT gives it.)
+        let out = table.convert(&poly, &tower);
+        let q_prod: u128 = q
+            .iter()
+            .map(|&i| tower.contexts[i].modulus.value() as u128)
+            .product();
+        for idx in [0usize, 7, 31] {
+            let x = crt2(&tower, &poly, idx);
+            // Eq. 3 overshoot: out = (x + e*Q) mod p_i with one e in 0..alpha.
+            let alpha = q.len() as u128;
+            let matches: Vec<u128> = (0..alpha)
+                .filter(|&e| {
+                    (0..p.len()).all(|i| {
+                        let pi = tower.contexts[p[i]].modulus.value() as u128;
+                        out.limbs[i][idx] as u128 == (x + e * q_prod) % pi
+                    })
+                })
+                .collect();
+            assert_eq!(matches.len(), 1, "coefficient {idx}: no consistent e");
+        }
+    }
+
+    #[test]
+    fn baseconv_zero_is_exact() {
+        let (tower, q, p) = setup(16, 2, 2);
+        let table = BaseConvTable::new(&tower, &q, &p);
+        let poly = RnsPoly::zero(&tower, &q, Format::Coeff);
+        let out = table.convert(&poly, &tower);
+        for limb in &out.limbs {
+            assert!(limb.iter().all(|&x| x == 0));
+        }
+    }
+
+    #[test]
+    fn rescale_divides_by_last_prime() {
+        // Encode integer x at double-width, rescale, expect round(x / q_l).
+        let (tower, q, _) = setup(16, 2, 0);
+        let tools = RnsTools::new(&tower, &q, &[]);
+        let q0 = tower.contexts[0].modulus.value();
+        let q1 = tower.contexts[1].modulus.value();
+        let x: u128 = (q1 as u128) * 12345 + 600; // divisible-ish by q1
+        let mut poly = RnsPoly::zero(&tower, &q, Format::Coeff);
+        poly.limbs[0][0] = (x % q0 as u128) as u64;
+        poly.limbs[1][0] = (x % q1 as u128) as u64;
+        tools.rescale(&mut poly, &tower);
+        assert_eq!(poly.level(), 1);
+        // Exact value: (x - [x]_{q1}) / q1 = 12345 (since 600 < q1/2 it
+        // rounds down; the centered subtraction keeps the error < 1).
+        assert_eq!(poly.limbs[0][0], 12345);
+    }
+
+    #[test]
+    fn rescale_rounds_toward_nearest() {
+        let (tower, q, _) = setup(16, 2, 0);
+        let tools = RnsTools::new(&tower, &q, &[]);
+        let q0 = tower.contexts[0].modulus.value();
+        let q1 = tower.contexts[1].modulus.value();
+        // x = 7*q1 + (q1 - 3): remainder is ~q1, so rounding gives 8.
+        let x: u128 = (q1 as u128) * 7 + (q1 as u128 - 3);
+        let mut poly = RnsPoly::zero(&tower, &q, Format::Coeff);
+        poly.limbs[0][0] = (x % q0 as u128) as u64;
+        poly.limbs[1][0] = (x % q1 as u128) as u64;
+        tools.rescale(&mut poly, &tower);
+        assert_eq!(poly.limbs[0][0], 8);
+    }
+
+    #[test]
+    fn mod_down_undoes_mod_up_for_small_values() {
+        // Lift x (< Q) to base Q u P via exact residues, then ModDown after
+        // multiplying by P: round-trip recovers x when x*P has no rounding.
+        let (tower, q, p) = setup(16, 2, 2);
+        let tools = RnsTools::new(&tower, &q, &p);
+        let conv_p_to_q = BaseConvTable::new(&tower, &p, &q);
+        let p_prod: u128 = p
+            .iter()
+            .map(|&i| tower.contexts[i].modulus.value() as u128)
+            .product();
+        let x: u128 = 987654321;
+        let xp = x * p_prod; // multiple of P: ModDown is exact
+        let full: Vec<usize> = q.iter().chain(p.iter()).copied().collect();
+        let mut poly = RnsPoly::zero(&tower, &full, Format::Coeff);
+        for (i, &ci) in full.iter().enumerate() {
+            let m = tower.contexts[ci].modulus.value() as u128;
+            poly.limbs[i][3] = (xp % m) as u64;
+        }
+        let down = tools.mod_down(&poly, &conv_p_to_q, &tower);
+        for (i, &ci) in q.iter().enumerate() {
+            let m = tower.contexts[ci].modulus.value() as u128;
+            assert_eq!(down.limbs[i][3] as u128, x % m, "limb {i}");
+        }
+        // Everything else stays zero.
+        assert!(down.limbs[0].iter().enumerate().all(|(j, &v)| j == 3 || v == 0));
+    }
+}

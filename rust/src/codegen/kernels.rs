@@ -1,0 +1,348 @@
+//! Per-kernel SASS template generators — the NVBit-trace substitute.
+//!
+//! Each builder emits the warp-level instruction template a FIDESlib-style
+//! CUDA kernel issues, parameterized by (N, limbs, alpha, ...). The
+//! baseline Tensor-Core NTT follows Algorithm 1 (Split -> 16x IMMA -> Mid
+//! -> 16x IMMA -> Merge); the FHECore variants replace the whole group
+//! with FHEC.16816 issues per SV-A. Counts reported by `Trace` are
+//! warp-level; multiply by 32 for NVBit-style thread-level counts
+//! (`THREADS_PER_WARP`).
+
+use crate::isa::{Instr, KernelClass, KernelLaunch, Opcode};
+
+pub const THREADS_PER_WARP: u64 = 32;
+
+/// Tunable per-kernel instruction constants.
+///
+/// These play the role of Accel-Sim's trace-calibration knobs: the
+/// *structure* of each template is fixed by the algorithm; the handful of
+/// counts below absorb compiler idioms (vectorization width, unroll
+/// factors, address-arithmetic CSE) and are calibrated once against the
+/// per-primitive dynamic-instruction ratios of Table VI.
+#[derive(Debug, Clone)]
+pub struct CostModel {
+    /// Vectorized global loads per warp per 16x16 INT32 tile pair.
+    pub tile_ldg: u32,
+    /// Split (INT32 -> 4x INT8) PRMT ops per tile pair.
+    pub split_prmt: u32,
+    /// IMMA issues per modmatmul pass (INT32 = 16 chunk products).
+    pub imma_per_pass: u32,
+    /// Reassembly ops per Mid/Merge stage (chunk recombination).
+    pub reasm_imad: u32,
+    pub reasm_iadd: u32,
+    pub reasm_shf: u32,
+    /// Barrett reduction ops per stage (per-warp, amortized).
+    pub barrett_ops: u32,
+    /// FHEC issues per 16x16x16 modmatmul (two 16x8x16 passes).
+    pub fhec_per_tile: u32,
+    /// Elementwise mulmod ops per warp-element batch.
+    pub ew_mul_imad: u32,
+    pub ew_mul_barrett: u32,
+}
+
+impl Default for CostModel {
+    fn default() -> Self {
+        Self {
+            tile_ldg: 8,
+            split_prmt: 16,
+            imma_per_pass: 16,
+            reasm_imad: 20,
+            reasm_iadd: 10,
+            reasm_shf: 8,
+            barrett_ops: 9,
+            fhec_per_tile: 2,
+            ew_mul_imad: 4,
+            ew_mul_barrett: 9,
+        }
+    }
+}
+
+/// Number of 16x16x16 tile-ops for an N-point 4-step NTT decomposed to
+/// radix-16 rounds (WarpDrive's two-level scheme generalized):
+/// `rounds = log16(N)`, `N/256` matmuls per round.
+pub fn ntt_tile_ops(n: usize) -> u64 {
+    assert!(n.is_power_of_two() && n >= 256);
+    let rounds = (n.trailing_zeros() as u64).div_ceil(4);
+    rounds * (n as u64 / 256)
+}
+
+/// Tensor-Core NTT kernel for `limbs` residue polynomials (Algorithm 1).
+pub fn ntt_kernel(cm: &CostModel, n: usize, limbs: usize, inverse: bool) -> KernelLaunch {
+    let tile_ops = ntt_tile_ops(n) * limbs as u64;
+    let warps_per_cta = 8u32;
+    // One warp per tile-op; twiddle pass amortized into the template.
+    let template = vec![
+        Instr::x(Opcode::Ldg, cm.tile_ldg),
+        Instr::x(Opcode::Prmt, cm.split_prmt), // SplitKernel
+        Instr::dep(Opcode::Imma16816, cm.imma_per_pass),
+        Instr::x(Opcode::Prmt, cm.split_prmt / 2), // MidKernel: reassemble..
+        Instr::x(Opcode::ImadWide, cm.reasm_imad),
+        Instr::x(Opcode::Iadd3, cm.reasm_iadd),
+        Instr::x(Opcode::Shf, cm.reasm_shf),
+        Instr::x(Opcode::Isetp, cm.barrett_ops / 3), // ..reduce, re-split
+        Instr::dep(Opcode::Imma16816, cm.imma_per_pass),
+        Instr::x(Opcode::Prmt, cm.split_prmt / 2), // MergeKernel
+        Instr::x(Opcode::ImadWide, cm.reasm_imad),
+        Instr::x(Opcode::Iadd3, cm.reasm_iadd),
+        Instr::x(Opcode::Shf, cm.reasm_shf),
+        Instr::x(Opcode::Isetp, cm.barrett_ops / 3),
+        // twiddle scaling between rounds (elementwise, fused)
+        Instr::x(Opcode::ImadWide, 4),
+        Instr::x(Opcode::Stg, 4),
+        Instr::new(Opcode::Bar),
+        Instr::new(Opcode::Exit),
+    ];
+    KernelLaunch {
+        name: format!("{}_{n}_L{limbs}_tc", if inverse { "intt" } else { "ntt" }),
+        class: if inverse { KernelClass::Intt } else { KernelClass::Ntt },
+        ctas: tile_ops.div_ceil(warps_per_cta as u64),
+        warps_per_cta,
+        regs_per_thread: 96,
+        smem_per_cta: 32 * 1024,
+        template,
+    }
+}
+
+/// FHECore NTT kernel: the same tile schedule, no decomposition stages.
+pub fn ntt_kernel_fhec(cm: &CostModel, n: usize, limbs: usize, inverse: bool) -> KernelLaunch {
+    let tile_ops = ntt_tile_ops(n) * limbs as u64;
+    let warps_per_cta = 8u32;
+    let template = vec![
+        Instr::x(Opcode::Ldg, cm.tile_ldg),
+        // WMMA-style fragment staging through shared memory (the FHEC path
+        // reuses the Tensor-Core register-fragment machinery, SIV-F).
+        Instr::x(Opcode::Sts, 2),
+        Instr::x(Opcode::Lds, 4),
+        Instr::dep(Opcode::Fhec16816, cm.fhec_per_tile),
+        Instr::x(Opcode::ImadWide, 4), // twiddle scaling between rounds
+        Instr::x(Opcode::Iadd3, 2),    // fragment address bookkeeping
+        Instr::x(Opcode::Stg, 4),
+        Instr::new(Opcode::Bar),
+        Instr::new(Opcode::Exit),
+    ];
+    KernelLaunch {
+        name: format!("{}_{n}_L{limbs}_fhec", if inverse { "intt" } else { "ntt" }),
+        class: if inverse { KernelClass::Intt } else { KernelClass::Ntt },
+        ctas: tile_ops.div_ceil(warps_per_cta as u64),
+        warps_per_cta,
+        regs_per_thread: 64,
+        smem_per_cta: 16 * 1024,
+        template,
+    }
+}
+
+/// Base conversion `alpha -> l_out` on CUDA cores (the FIDESlib baseline):
+/// a mixed-moduli dot product per (coefficient, target-modulus) pair.
+pub fn baseconv_kernel(_cm: &CostModel, n: usize, alpha: usize, l_out: usize) -> KernelLaunch {
+    let out_elems = n as u64 * l_out as u64;
+    let warps = out_elems / THREADS_PER_WARP;
+    let a = alpha as u32;
+    let template = vec![
+        Instr::x(Opcode::Ldg, 2 + a / 2),            // y residues (smem-cached)
+        Instr::x(Opcode::ImadWide, 2 * a),           // a products, 64-bit
+        Instr::x(Opcode::Iadd3, a),                  // accumulate
+        Instr::x(Opcode::Shf, 2),                    // Barrett estimate
+        Instr::x(Opcode::ImadWide, 2),
+        Instr::x(Opcode::Isetp, 2),
+        Instr::x(Opcode::Sel, 2),
+        Instr::x(Opcode::Stg, 1),
+        Instr::new(Opcode::Exit),
+    ];
+    KernelLaunch {
+        name: format!("baseconv_{n}_a{alpha}_l{l_out}_cuda"),
+        class: KernelClass::BaseConv,
+        ctas: warps.div_ceil(8).max(1),
+        warps_per_cta: 8,
+        regs_per_thread: 48,
+        smem_per_cta: 8 * 1024,
+        template,
+    }
+}
+
+/// Base conversion on FHECore: tiled mixed-moduli matmul (SV-B). Each
+/// systolic column is programmed with a distinct (q, mu).
+pub fn baseconv_kernel_fhec(cm: &CostModel, n: usize, alpha: usize, l_out: usize) -> KernelLaunch {
+    // C[N, l_out] = Y[N, alpha_pad] x Conv[alpha_pad, l_out], tiled 16x8x16.
+    let k_tiles = alpha.div_ceil(16) as u64;
+    let tile_ops = (n as u64 / 16) * (l_out as u64).div_ceil(8) * k_tiles;
+    let template = vec![
+        Instr::x(Opcode::Ldg, cm.tile_ldg),
+        Instr::dep(Opcode::Fhec16816, 1),
+        Instr::x(Opcode::Stg, 2),
+        Instr::new(Opcode::Exit),
+    ];
+    KernelLaunch {
+        name: format!("baseconv_{n}_a{alpha}_l{l_out}_fhec"),
+        class: KernelClass::BaseConv,
+        ctas: tile_ops.div_ceil(8).max(1),
+        warps_per_cta: 8,
+        regs_per_thread: 64,
+        smem_per_cta: 16 * 1024,
+        template,
+    }
+}
+
+/// Elementwise kernel flavor.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum EwOp {
+    MulMod,
+    AddMod,
+    /// multiply by a per-limb scalar (rescale / ModDown tails)
+    ScaleMod,
+}
+
+/// Elementwise (slot-wise) kernels — these stay on CUDA cores with or
+/// without FHECore (SV-C).
+pub fn elementwise_kernel(cm: &CostModel, n: usize, limbs: usize, op: EwOp) -> KernelLaunch {
+    let elems = n as u64 * limbs as u64;
+    let warps = elems.div_ceil(THREADS_PER_WARP);
+    let template = match op {
+        EwOp::MulMod => vec![
+            Instr::x(Opcode::Ldg, 2),
+            Instr::x(Opcode::ImadWide, cm.ew_mul_imad),
+            Instr::x(Opcode::Shf, 2),
+            Instr::x(Opcode::ImadWide, 2),
+            Instr::x(Opcode::Isetp, 2),
+            Instr::x(Opcode::Sel, 2),
+            Instr::x(Opcode::Stg, 1),
+            Instr::new(Opcode::Exit),
+        ],
+        EwOp::AddMod => vec![
+            Instr::x(Opcode::Ldg, 2),
+            Instr::x(Opcode::Iadd3, 1),
+            Instr::x(Opcode::Isetp, 1),
+            Instr::x(Opcode::Sel, 1),
+            Instr::x(Opcode::Stg, 1),
+            Instr::new(Opcode::Exit),
+        ],
+        EwOp::ScaleMod => vec![
+            Instr::x(Opcode::Ldg, 1),
+            Instr::x(Opcode::ImadWide, cm.ew_mul_imad),
+            Instr::x(Opcode::Shf, 2),
+            Instr::x(Opcode::Isetp, 2),
+            Instr::x(Opcode::Sel, 2),
+            Instr::x(Opcode::Stg, 1),
+            Instr::new(Opcode::Exit),
+        ],
+    };
+    let opname = match op {
+        EwOp::MulMod => "mulmod",
+        EwOp::AddMod => "addmod",
+        EwOp::ScaleMod => "scalemod",
+    };
+    KernelLaunch {
+        name: format!("ew_{opname}_{n}_L{limbs}"),
+        class: KernelClass::Elementwise,
+        ctas: warps.div_ceil(8).max(1),
+        warps_per_cta: 8,
+        regs_per_thread: 32,
+        smem_per_cta: 0,
+        template,
+    }
+}
+
+/// Automorphism kernel (SV-C): Frobenius-map address generation on CUDA
+/// cores plus LD/ST-driven data rearrangement.
+pub fn automorphism_kernel(_cm: &CostModel, n: usize, limbs: usize) -> KernelLaunch {
+    let elems = n as u64 * limbs as u64;
+    let warps = elems.div_ceil(THREADS_PER_WARP);
+    let template = vec![
+        // Phase 1 — address generation: pi_r(x) = ([5^r(2x+1)]_{2N}-1)/2
+        // per element (SV-C), including the per-limb base offset.
+        Instr::x(Opcode::Imad, 4),
+        Instr::x(Opcode::Lop3, 2),
+        Instr::x(Opcode::Shf, 2),
+        Instr::x(Opcode::Isetp, 1), // sign-flip predicate
+        // Phase 2 — data rearrangement on the LD/ST units (gather/scatter).
+        Instr::x(Opcode::Ldg, 2),
+        Instr::x(Opcode::Sel, 2),
+        Instr::x(Opcode::Iadd3, 1), // negation under the flip
+        Instr::x(Opcode::Stg, 2),
+        Instr::new(Opcode::Exit),
+    ];
+    KernelLaunch {
+        name: format!("automorph_{n}_L{limbs}"),
+        class: KernelClass::Automorphism,
+        ctas: warps.div_ceil(8).max(1),
+        warps_per_cta: 8,
+        regs_per_thread: 24,
+        smem_per_cta: 0,
+        template,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::UnitClass;
+
+    #[test]
+    fn tile_op_counts_match_warpdrive() {
+        // SV-A: a 2^16-point NTT = 1024 FHECoreMMM calls.
+        assert_eq!(ntt_tile_ops(1 << 16), 1024);
+        assert_eq!(ntt_tile_ops(1 << 12), 3 * 16);
+        assert_eq!(ntt_tile_ops(256), 2 * 1);
+    }
+
+    #[test]
+    fn fhec_ntt_is_much_leaner_per_tile() {
+        let cm = CostModel::default();
+        let tc = ntt_kernel(&cm, 1 << 16, 1, false);
+        let fc = ntt_kernel_fhec(&cm, 1 << 16, 1, false);
+        assert_eq!(tc.ctas, fc.ctas, "same tile schedule");
+        let ratio = tc.dynamic_instructions() as f64 / fc.dynamic_instructions() as f64;
+        assert!(
+            ratio > 4.0 && ratio < 20.0,
+            "per-NTT compression should be large but finite: {ratio}"
+        );
+    }
+
+    #[test]
+    fn fhec_ntt_has_no_tensor_core_or_split_work() {
+        let cm = CostModel::default();
+        let fc = ntt_kernel_fhec(&cm, 1 << 12, 3, false);
+        assert_eq!(fc.instructions_on(UnitClass::TensorCore), 0);
+        assert!(fc.instructions_on(UnitClass::FheCore) > 0);
+        assert!(fc
+            .template
+            .iter()
+            .all(|i| i.op != Opcode::Prmt), "no INT8 split in FHEC path");
+    }
+
+    #[test]
+    fn baseconv_scales_with_alpha_and_lout() {
+        let cm = CostModel::default();
+        let small = baseconv_kernel(&cm, 1 << 12, 3, 6);
+        let big = baseconv_kernel(&cm, 1 << 12, 9, 27);
+        assert!(big.dynamic_instructions() > 4 * small.dynamic_instructions());
+    }
+
+    #[test]
+    fn baseconv_fhec_reduces_instructions() {
+        let cm = CostModel::default();
+        for (alpha, lout) in [(3usize, 6usize), (9, 27), (16, 30)] {
+            let cuda = baseconv_kernel(&cm, 1 << 16, alpha, lout);
+            let fhec = baseconv_kernel_fhec(&cm, 1 << 16, alpha, lout);
+            let ratio = cuda.dynamic_instructions() as f64 / fhec.dynamic_instructions() as f64;
+            assert!(ratio > 2.0, "alpha={alpha} lout={lout}: ratio {ratio}");
+        }
+    }
+
+    #[test]
+    fn elementwise_mul_heavier_than_add() {
+        let cm = CostModel::default();
+        let mul = elementwise_kernel(&cm, 1 << 12, 4, EwOp::MulMod);
+        let add = elementwise_kernel(&cm, 1 << 12, 4, EwOp::AddMod);
+        assert!(mul.dynamic_instructions() > add.dynamic_instructions());
+    }
+
+    #[test]
+    fn automorphism_is_memory_dominated() {
+        let cm = CostModel::default();
+        let k = automorphism_kernel(&cm, 1 << 12, 4);
+        let mem = k.instructions_on(UnitClass::MemGlobal);
+        let int = k.instructions_on(UnitClass::Int);
+        assert!(mem * 3 >= int, "LD/ST should be a large share");
+        assert!(mem > 0 && int > 0);
+    }
+}

@@ -1,0 +1,8 @@
+//! Kernel instruction-stream generators and the primitive compiler — the
+//! NVBit-trace substitute (see DESIGN.md substitution table).
+
+pub mod kernels;
+pub mod primitives;
+
+pub use kernels::{CostModel, EwOp, THREADS_PER_WARP};
+pub use primitives::{Backend, Compiler, SimParams};

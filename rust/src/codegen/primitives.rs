@@ -1,0 +1,293 @@
+//! CKKS primitive -> kernel-sequence compiler (the FIDESlib call graph).
+//!
+//! Each primitive of Table II expands into the exact kernel sequence the
+//! software library executes (matching `ckks::ops`/`ckks::keys`), so the
+//! dynamic instruction mix — and therefore the FHECore speedup — emerges
+//! from the algorithm rather than from assumed constants.
+
+use super::kernels::{
+    automorphism_kernel, baseconv_kernel, baseconv_kernel_fhec, elementwise_kernel,
+    ntt_kernel, ntt_kernel_fhec, CostModel, EwOp,
+};
+use crate::isa::Trace;
+
+/// Parameters a primitive executes under (a slice of Table I/V).
+#[derive(Debug, Clone, Copy)]
+pub struct SimParams {
+    /// Ring dimension N.
+    pub n: usize,
+    /// Active limb count (level + 1) at execution time.
+    pub l: usize,
+    /// Extension limbs alpha.
+    pub alpha: usize,
+    /// Key-switching digits.
+    pub dnum: usize,
+}
+
+impl SimParams {
+    pub fn paper_primitive() -> Self {
+        // Primitives in Table VII run on fresh full-chain ciphertexts
+        // (L = 26, dnum = 3 -> alpha = 9, Table V) on N = 2^16.
+        Self { n: 1 << 16, l: 27, alpha: 9, dnum: 3 }
+    }
+
+    pub fn ext(&self) -> usize {
+        self.l + self.alpha
+    }
+
+    pub fn digit_size(&self) -> usize {
+        self.l.div_ceil(self.dnum)
+    }
+}
+
+/// Backend selector: baseline Tensor-Core path vs the FHECore extension.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Backend {
+    A100,
+    A100Fhec,
+}
+
+pub struct Compiler {
+    pub cm: CostModel,
+    pub backend: Backend,
+}
+
+impl Compiler {
+    pub fn new(backend: Backend) -> Self {
+        Self { cm: CostModel::default(), backend }
+    }
+
+    fn ntt(&self, t: &mut Trace, n: usize, limbs: usize, inverse: bool) {
+        if limbs == 0 {
+            return;
+        }
+        t.push(match self.backend {
+            Backend::A100 => ntt_kernel(&self.cm, n, limbs, inverse),
+            Backend::A100Fhec => ntt_kernel_fhec(&self.cm, n, limbs, inverse),
+        });
+    }
+
+    fn baseconv(&self, t: &mut Trace, n: usize, alpha: usize, lout: usize) {
+        if alpha == 0 || lout == 0 {
+            return;
+        }
+        t.push(match self.backend {
+            Backend::A100 => baseconv_kernel(&self.cm, n, alpha, lout),
+            Backend::A100Fhec => baseconv_kernel_fhec(&self.cm, n, alpha, lout),
+        });
+    }
+
+    fn ew(&self, t: &mut Trace, n: usize, limbs: usize, op: EwOp) {
+        if limbs == 0 {
+            return;
+        }
+        t.push(elementwise_kernel(&self.cm, n, limbs, op));
+    }
+
+    /// Hybrid key switch applied to one polynomial (the inner loop of both
+    /// HEMult relinearization and Rotate) — mirrors `KsKey::apply`.
+    pub fn keyswitch(&self, p: &SimParams) -> Trace {
+        let mut t = Trace::default();
+        let d = p.digit_size();
+        // operand to coefficient domain
+        self.ntt(&mut t, p.n, p.l, true);
+        for _ in 0..p.dnum.min(p.l) {
+            // digit pre-scale [d * Qhat^-1], ModUp, forward NTT of lifted limbs
+            self.ew(&mut t, p.n, d, EwOp::ScaleMod);
+            self.baseconv(&mut t, p.n, d, p.ext() - d);
+            self.ntt(&mut t, p.n, p.ext() - d, false);
+            // dot with evk (two components)
+            self.ew(&mut t, p.n, p.ext(), EwOp::MulMod);
+            self.ew(&mut t, p.n, p.ext(), EwOp::AddMod);
+            self.ew(&mut t, p.n, p.ext(), EwOp::MulMod);
+            self.ew(&mut t, p.n, p.ext(), EwOp::AddMod);
+        }
+        // ModDown both accumulator components: INTT(ext), BaseConv(P->Q),
+        // sub + scale, NTT back to Eval.
+        for _ in 0..2 {
+            self.ntt(&mut t, p.n, p.ext(), true);
+            self.baseconv(&mut t, p.n, p.alpha, p.l);
+            self.ew(&mut t, p.n, p.l, EwOp::AddMod); // subtraction
+            self.ew(&mut t, p.n, p.l, EwOp::ScaleMod);
+            self.ntt(&mut t, p.n, p.l, false);
+        }
+        t
+    }
+
+    /// Rescale (Table II), eval-domain formulation (the GPU-library trick):
+    /// INTT only the dropped limb, re-NTT its centered lift under each of
+    /// the remaining primes, then subtract + scale in Eval — per component.
+    pub fn rescale(&self, p: &SimParams) -> Trace {
+        let mut t = Trace::default();
+        for _ in 0..2 {
+            self.ntt(&mut t, p.n, 1, true); // bring [c]_{q_l} to Coeff
+            self.ew(&mut t, p.n, p.l - 1, EwOp::ScaleMod); // centered lift per prime
+            self.ntt(&mut t, p.n, p.l - 1, false); // its NTT under each prime
+            self.ew(&mut t, p.n, p.l - 1, EwOp::AddMod); // subtract
+            self.ew(&mut t, p.n, p.l - 1, EwOp::ScaleMod); // * q_l^{-1}
+            // scale/limb bookkeeping pass (FIDESlib's scalar management —
+            // the "scalar ops" class of Fig. 1).
+            self.ew(&mut t, p.n, p.l - 1, EwOp::ScaleMod);
+        }
+        t
+    }
+
+    /// HEMult (Table II): tensor product, relinearize, rescale.
+    pub fn hemult(&self, p: &SimParams) -> Trace {
+        let mut t = Trace::default();
+        // d0 = c0c0', d2 = c1c1', d1 = c0c1' + c1c0'
+        self.ew(&mut t, p.n, p.l, EwOp::MulMod);
+        self.ew(&mut t, p.n, p.l, EwOp::MulMod);
+        self.ew(&mut t, p.n, p.l, EwOp::MulMod);
+        self.ew(&mut t, p.n, p.l, EwOp::MulMod);
+        self.ew(&mut t, p.n, p.l, EwOp::AddMod);
+        // relinearization keyswitch of d2 + combine
+        t.extend(self.keyswitch(p));
+        self.ew(&mut t, p.n, p.l, EwOp::AddMod);
+        self.ew(&mut t, p.n, p.l, EwOp::AddMod);
+        // rescale
+        t.extend(self.rescale(p));
+        t
+    }
+
+    /// Rotate (Table II): automorphism on both components + keyswitch.
+    ///
+    /// The automorphism is applied directly in the evaluation domain (it
+    /// commutes with the NTT up to an index permutation), as GPU libraries
+    /// do — no NTT round trip (SV-C maps it to CUDA cores + LD/ST only).
+    pub fn rotate(&self, p: &SimParams) -> Trace {
+        let mut t = Trace::default();
+        t.push(automorphism_kernel(&self.cm, p.n, 2 * p.l));
+        t.extend(self.keyswitch(p));
+        self.ew(&mut t, p.n, p.l, EwOp::AddMod);
+        t
+    }
+
+    /// PtMult + rescale (Table II).
+    pub fn ptmult(&self, p: &SimParams) -> Trace {
+        let mut t = Trace::default();
+        self.ew(&mut t, p.n, p.l, EwOp::MulMod);
+        self.ew(&mut t, p.n, p.l, EwOp::MulMod);
+        t.extend(self.rescale(p));
+        t
+    }
+
+    /// HEAdd (Table II).
+    pub fn headd(&self, p: &SimParams) -> Trace {
+        let mut t = Trace::default();
+        self.ew(&mut t, p.n, p.l, EwOp::AddMod);
+        self.ew(&mut t, p.n, p.l, EwOp::AddMod);
+        t
+    }
+
+    /// PtAdd (Table II).
+    pub fn ptadd(&self, p: &SimParams) -> Trace {
+        let mut t = Trace::default();
+        self.ew(&mut t, p.n, p.l, EwOp::AddMod);
+        t
+    }
+
+    /// Scalar-management passes (scale fixes, masks, copies, constant
+    /// folds) — the "scalar ops" class of Fig. 1 that no FHECore offload
+    /// touches. `count` alternating mul/add elementwise passes.
+    pub fn scalar_ops(&self, p: &SimParams, count: usize) -> Trace {
+        let mut t = Trace::default();
+        for i in 0..count {
+            self.ew(
+                &mut t,
+                p.n,
+                p.l,
+                if i % 2 == 0 { EwOp::MulMod } else { EwOp::AddMod },
+            );
+        }
+        t
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::UnitClass;
+
+    fn ratio(f: impl Fn(&Compiler, &SimParams) -> Trace, p: &SimParams) -> f64 {
+        let base = f(&Compiler::new(Backend::A100), p);
+        let fhec = f(&Compiler::new(Backend::A100Fhec), p);
+        base.dynamic_instructions() as f64 / fhec.dynamic_instructions() as f64
+    }
+
+    #[test]
+    fn primitive_instruction_reductions_match_table_vi_shape() {
+        // Table VI: HEMult 2.42x, Rotate 2.56x, Rescale 2.26x. We accept
+        // +-30% — the shape requirement is "all primitives compress by
+        // roughly 2-3x, Rotate > HEMult > Rescale is not strictly ordered
+        // but all in band".
+        let p = SimParams::paper_primitive();
+        let hemult = ratio(|c, p| c.hemult(p), &p);
+        let rotate = ratio(|c, p| c.rotate(p), &p);
+        let rescale = ratio(|c, p| c.rescale(p), &p);
+        println!("ratios: hemult={hemult:.2} rotate={rotate:.2} rescale={rescale:.2}");
+        for (name, r, want) in [
+            ("hemult", hemult, 2.42),
+            ("rotate", rotate, 2.56),
+            ("rescale", rescale, 2.26),
+        ] {
+            assert!(
+                (r / want - 1.0).abs() < 0.25,
+                "{name}: got {r:.2}, paper {want:.2}"
+            );
+        }
+        // Geometric mean across primitives: paper reports 2.41x.
+        let geomean = (hemult * rotate * rescale).powf(1.0 / 3.0);
+        assert!(
+            (geomean / 2.41 - 1.0).abs() < 0.15,
+            "primitive geomean {geomean:.2} vs paper 2.41"
+        );
+    }
+
+    #[test]
+    fn headd_is_unchanged_by_fhec() {
+        let p = SimParams::paper_primitive();
+        assert!((ratio(|c, p| c.headd(p), &p) - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn fhec_backend_emits_fhec_only() {
+        let p = SimParams::paper_primitive();
+        let t = Compiler::new(Backend::A100Fhec).hemult(&p);
+        assert_eq!(t.instructions_on(UnitClass::TensorCore), 0);
+        assert!(t.instructions_on(UnitClass::FheCore) > 0);
+        let tb = Compiler::new(Backend::A100).hemult(&p);
+        assert_eq!(tb.instructions_on(UnitClass::FheCore), 0);
+    }
+
+    #[test]
+    fn absolute_magnitude_in_paper_ballpark() {
+        // Table VI reports HEMult = 139.4M SASS instructions issued per SM
+        // stream (warp-level issues — NVBit "records the SASS instruction
+        // issued"). Our generator should land within ~3x either side — it
+        // is a model, not a replay.
+        let p = SimParams::paper_primitive();
+        let t = Compiler::new(Backend::A100).hemult(&p);
+        let issued = t.dynamic_instructions();
+        assert!(
+            issued > 45_000_000 && issued < 420_000_000,
+            "HEMult warp-level count {issued} outside plausible band"
+        );
+    }
+
+    #[test]
+    fn keyswitch_dominated_by_ntt_class() {
+        use crate::isa::KernelClass;
+        let p = SimParams::paper_primitive();
+        let t = Compiler::new(Backend::A100).keyswitch(&p);
+        let by = t.instructions_by_class();
+        let ntt = by.get(&KernelClass::Ntt).copied().unwrap_or(0)
+            + by.get(&KernelClass::Intt).copied().unwrap_or(0);
+        let total = t.dynamic_instructions();
+        assert!(
+            ntt as f64 / total as f64 > 0.5,
+            "NTT share {:.2} should dominate keyswitch",
+            ntt as f64 / total as f64
+        );
+    }
+}

@@ -1,0 +1,330 @@
+//! L3 coordinator: the encrypted-inference serving loop.
+//!
+//! This is the deployment shell around the paper's system: clients submit
+//! ciphertexts, the coordinator batches them, workers execute the
+//! homomorphic compute through the CKKS substrate, and every batch is
+//! *dually dispatched* — functionally (real ciphertext math, optionally
+//! through the PJRT FHECore artifacts) and to the timing model (gpusim),
+//! so each response carries both the real result and the simulated
+//! A100/A100+FHECore latency for that batch's op mix.
+//!
+//! Built on std threads + channels (tokio is not vendored in this offline
+//! build; the architecture is the same: a bounded submit queue, a batcher
+//! with a linger window, and a worker pool).
+
+use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
+use std::sync::mpsc::{channel, Receiver, Sender};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::ckks::{Ciphertext, Evaluator, RnsPoly, SecretKey};
+use crate::codegen::{Backend, Compiler, SimParams};
+use crate::gpusim::{simulate_trace, GpuConfig};
+use crate::isa::Trace;
+
+/// The homomorphic op sequences a request can ask for.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpKind {
+    /// dot(w, x) + b via rotate-and-sum — encrypted linear scoring.
+    LinearScore,
+    /// One ciphertext-ciphertext product (with relinearization).
+    Square,
+    /// Slot rotation by k.
+    Rotate(usize),
+}
+
+pub struct Request {
+    pub id: u64,
+    pub op: OpKind,
+    pub ct: Ciphertext,
+}
+
+pub struct Response {
+    pub id: u64,
+    pub ct: Ciphertext,
+    /// Wall-clock service time of the functional path.
+    pub service: Duration,
+    /// Simulated A100 / A100+FHECore latency for this request's op mix.
+    pub sim_base_us: f64,
+    pub sim_fhec_us: f64,
+    pub batch_size: usize,
+}
+
+/// Shared server-side model state (plaintext weights etc.).
+pub struct ModelState {
+    pub weights_pt: RnsPoly,
+    pub rot_steps: usize,
+}
+
+#[derive(Debug, Clone)]
+pub struct ServeConfig {
+    pub workers: usize,
+    pub max_batch: usize,
+    pub linger: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> Self {
+        Self { workers: 2, max_batch: 8, linger: Duration::from_millis(2) }
+    }
+}
+
+#[derive(Debug, Default)]
+pub struct Metrics {
+    pub served: AtomicU64,
+    pub batches: AtomicU64,
+    pub queue_peak: AtomicUsize,
+    pub total_service_us: AtomicU64,
+}
+
+impl Metrics {
+    pub fn mean_service_us(&self) -> f64 {
+        let n = self.served.load(Ordering::Relaxed).max(1);
+        self.total_service_us.load(Ordering::Relaxed) as f64 / n as f64
+    }
+
+    pub fn mean_batch(&self) -> f64 {
+        let b = self.batches.load(Ordering::Relaxed).max(1);
+        self.served.load(Ordering::Relaxed) as f64 / b as f64
+    }
+}
+
+/// The coordinator: submit() requests, receive Responses on the channel
+/// handed to `start`.
+pub struct Coordinator {
+    tx: Sender<(Request, Sender<Response>)>,
+    pub metrics: Arc<Metrics>,
+}
+
+impl Coordinator {
+    /// Spawn batcher + workers. `ev`/`sk`/`model` are shared read-only.
+    pub fn start(
+        ev: Arc<Evaluator>,
+        sk: Arc<SecretKey>,
+        model: Arc<ModelState>,
+        cfg: ServeConfig,
+    ) -> Self {
+        let (tx, rx) = channel::<(Request, Sender<Response>)>();
+        let metrics = Arc::new(Metrics::default());
+        let m = metrics.clone();
+        std::thread::spawn(move || batcher_loop(rx, ev, sk, model, cfg, m));
+        Self { tx, metrics }
+    }
+
+    pub fn submit(&self, req: Request) -> Receiver<Response> {
+        let (rtx, rrx) = channel();
+        self.tx.send((req, rtx)).expect("coordinator stopped");
+        rrx
+    }
+}
+
+fn batcher_loop(
+    rx: Receiver<(Request, Sender<Response>)>,
+    ev: Arc<Evaluator>,
+    sk: Arc<SecretKey>,
+    model: Arc<ModelState>,
+    cfg: ServeConfig,
+    metrics: Arc<Metrics>,
+) {
+    // Worker pool fed by a shared batch queue.
+    let batch_q: Arc<Mutex<Vec<Vec<(Request, Sender<Response>)>>>> =
+        Arc::new(Mutex::new(Vec::new()));
+    for _ in 0..cfg.workers.max(1) {
+        let q = batch_q.clone();
+        let ev = ev.clone();
+        let sk = sk.clone();
+        let model = model.clone();
+        let metrics = metrics.clone();
+        std::thread::spawn(move || loop {
+            let batch = { q.lock().unwrap().pop() };
+            match batch {
+                Some(batch) => serve_batch(batch, &ev, &sk, &model, &metrics),
+                None => std::thread::sleep(Duration::from_micros(200)),
+            }
+        });
+    }
+
+    // Linger-window batching.
+    let mut pending: Vec<(Request, Sender<Response>)> = Vec::new();
+    let mut window_start = Instant::now();
+    loop {
+        let timeout = cfg
+            .linger
+            .checked_sub(window_start.elapsed())
+            .unwrap_or(Duration::ZERO);
+        match rx.recv_timeout(if pending.is_empty() {
+            Duration::from_millis(50)
+        } else {
+            timeout
+        }) {
+            Ok(item) => {
+                if pending.is_empty() {
+                    window_start = Instant::now();
+                }
+                pending.push(item);
+                let depth = pending.len();
+                metrics.queue_peak.fetch_max(depth, Ordering::Relaxed);
+                if depth >= cfg.max_batch {
+                    batch_q.lock().unwrap().push(std::mem::take(&mut pending));
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
+                if !pending.is_empty() {
+                    batch_q.lock().unwrap().push(std::mem::take(&mut pending));
+                }
+            }
+            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
+                if !pending.is_empty() {
+                    batch_q.lock().unwrap().push(std::mem::take(&mut pending));
+                }
+                return;
+            }
+        }
+    }
+}
+
+/// Build the timing-model trace for one request's op mix.
+fn request_trace(op: OpKind, level: usize, ev: &Evaluator, backend: Backend) -> Trace {
+    let p = SimParams {
+        n: ev.ctx.params.n.max(256),
+        l: level + 1,
+        alpha: ev.ctx.p_chain.len().max(1),
+        dnum: ev.ctx.params.dnum,
+    };
+    let c = Compiler::new(backend);
+    match op {
+        OpKind::LinearScore => {
+            let mut t = c.ptmult(&p);
+            let rot_steps = (ev.ctx.params.slots() as f64).log2().ceil() as usize;
+            for _ in 0..rot_steps {
+                t.extend(c.rotate(&p));
+                t.extend(c.headd(&p));
+            }
+            t
+        }
+        OpKind::Square => c.hemult(&p),
+        OpKind::Rotate(_) => c.rotate(&p),
+    }
+}
+
+fn serve_batch(
+    batch: Vec<(Request, Sender<Response>)>,
+    ev: &Evaluator,
+    sk: &SecretKey,
+    model: &ModelState,
+    metrics: &Metrics,
+) {
+    let gpu = GpuConfig::default();
+    let n = batch.len();
+    metrics.batches.fetch_add(1, Ordering::Relaxed);
+    for (req, reply) in batch {
+        let t0 = Instant::now();
+        let out = match req.op {
+            OpKind::LinearScore => {
+                // dot(w, x): PtMult then rotate-and-sum over all slots.
+                let mut acc = ev.mul_plain(&req.ct, &model.weights_pt);
+                let mut step = 1usize;
+                while step < model.rot_steps {
+                    let rot = ev.rotate(&acc, step, sk);
+                    acc = ev.add(&acc, &rot);
+                    step <<= 1;
+                }
+                acc
+            }
+            OpKind::Square => ev.mul(&req.ct, &req.ct, sk),
+            OpKind::Rotate(k) => ev.rotate(&req.ct, k, sk),
+        };
+        let service = t0.elapsed();
+        // Dual dispatch: the timing model for this op mix.
+        let base = request_trace(req.op, out.level, ev, Backend::A100);
+        let fhec = request_trace(req.op, out.level, ev, Backend::A100Fhec);
+        let sim_base_us = simulate_trace(&gpu, &base).latency_us(&gpu);
+        let sim_fhec_us = simulate_trace(&gpu, &fhec).latency_us(&gpu);
+        metrics.served.fetch_add(1, Ordering::Relaxed);
+        metrics
+            .total_service_us
+            .fetch_add(service.as_micros() as u64, Ordering::Relaxed);
+        let _ = reply.send(Response {
+            id: req.id,
+            ct: out,
+            service,
+            sim_base_us,
+            sim_fhec_us,
+            batch_size: n,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::encoding::Complex;
+    use crate::ckks::params::{CkksContext, CkksParams};
+    use crate::util::rng::Pcg64;
+
+    fn setup() -> (Arc<Evaluator>, Arc<SecretKey>, Arc<ModelState>, Pcg64) {
+        let ctx = CkksContext::new(CkksParams::toy());
+        let mut rng = Pcg64::new(0x5EEE);
+        let sk = SecretKey::generate(&ctx, &mut rng);
+        let ev = Evaluator::new(ctx);
+        let slots = ev.ctx.params.slots();
+        let w: Vec<Complex> = (0..slots)
+            .map(|i| Complex::new(0.01 * ((i % 10) as f64), 0.0))
+            .collect();
+        let weights_pt = ev.encode(&w, ev.ctx.max_level());
+        let model = ModelState { weights_pt, rot_steps: slots };
+        (Arc::new(ev), Arc::new(sk), Arc::new(model), rng)
+    }
+
+    #[test]
+    fn serves_rotations_correctly() {
+        let (ev, sk, model, mut rng) = setup();
+        let coord = Coordinator::start(
+            ev.clone(),
+            sk.clone(),
+            model,
+            ServeConfig { workers: 2, max_batch: 4, linger: Duration::from_millis(1) },
+        );
+        let slots = ev.ctx.params.slots();
+        let z: Vec<Complex> = (0..slots)
+            .map(|i| Complex::new((i % 7) as f64 * 0.1, 0.0))
+            .collect();
+        let ct = ev.encrypt(&ev.encode(&z, ev.ctx.max_level()), &sk, &mut rng);
+        let rx = coord.submit(Request { id: 1, op: OpKind::Rotate(3), ct });
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        assert_eq!(resp.id, 1);
+        let back = ev.decrypt_to_slots(&resp.ct, &sk);
+        for j in 0..slots {
+            let want = (((j + 3) % slots) % 7) as f64 * 0.1;
+            assert!((back[j].re - want).abs() < 1e-3, "slot {j}");
+        }
+        assert!(resp.sim_base_us > resp.sim_fhec_us, "FHECore must be faster");
+    }
+
+    #[test]
+    fn batches_multiple_requests() {
+        let (ev, sk, model, mut rng) = setup();
+        let coord = Coordinator::start(
+            ev.clone(),
+            sk.clone(),
+            model,
+            ServeConfig { workers: 2, max_batch: 4, linger: Duration::from_millis(5) },
+        );
+        let slots = ev.ctx.params.slots();
+        let z = vec![Complex::new(0.5, 0.0); slots];
+        let mut receivers = Vec::new();
+        for id in 0..6u64 {
+            let ct = ev.encrypt(&ev.encode(&z, ev.ctx.max_level()), &sk, &mut rng);
+            receivers.push(coord.submit(Request { id, op: OpKind::Square, ct }));
+        }
+        for rx in receivers {
+            let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+            let back = ev.decrypt_to_slots(&resp.ct, &sk);
+            assert!((back[0].re - 0.25).abs() < 1e-2, "0.5^2 = 0.25, got {}", back[0].re);
+        }
+        let m = &coord.metrics;
+        assert_eq!(m.served.load(Ordering::Relaxed), 6);
+        assert!(m.batches.load(Ordering::Relaxed) >= 1);
+        assert!(m.mean_batch() >= 1.0);
+    }
+}

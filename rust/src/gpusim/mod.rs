@@ -1,0 +1,466 @@
+//! Trace-driven A100 timing simulator — the Accel-Sim substitute.
+//!
+//! Modelling level (matches how Accel-Sim treats Tensor-Core ops — fixed
+//! latency units behind scoreboarded warp schedulers):
+//!
+//! * Each SM has 4 warp schedulers issuing at most one warp-instruction
+//!   per cycle each (GTO pick among ready warps of its partition).
+//! * Functional units are fixed-latency: a dependent follow-up stalls the
+//!   warp by the unit latency (`FHEC.16816` = 44 cycles per SIV-D,
+//!   `IMMA.16816` = 64 per Raihan et al., the values SVI-A plugs into
+//!   Accel-Sim's `SPECIALIZED_UNIT_3_OP`).
+//! * Units also have issue (initiation) intervals per SM, modelling port
+//!   counts (4 TCs / 4 FHECores per SM share the register-file ports,
+//!   SIV-B) and a DRAM-bandwidth token bucket behind `LDG`.
+//! * A kernel is simulated as one **representative resident wave** of
+//!   CTAs, cycle by cycle; full-kernel time scales by the wave count
+//!   (exact for homogeneous FHE kernels, which these all are).
+//!
+//! Occupancy comes from the standard limiter math (warp slots, registers,
+//! shared memory, CTA slots) — the quantity Fig. 7 reports.
+
+use crate::isa::{KernelClass, KernelLaunch, Opcode, Trace, UnitClass};
+
+/// A100 (GA100) configuration — SII-B of the paper.
+#[derive(Debug, Clone)]
+pub struct GpuConfig {
+    pub sms: u32,
+    pub schedulers_per_sm: u32,
+    pub max_warps_per_sm: u32,
+    pub max_ctas_per_sm: u32,
+    pub regfile_per_sm: u32,
+    pub smem_per_sm: u32,
+    /// Average dynamic clock the paper assumes (SVI-C): 1087.5 MHz.
+    pub freq_mhz: f64,
+    /// Result latency of an FHEC.16816 (44 = output-stationary 16x8 array,
+    /// SIV-D; set to 64 to model the "Enhanced Tensor Core" alternative
+    /// of SIV-G).
+    pub fhec_latency: u32,
+    pub imma_latency: u32,
+    pub mem_latency: u32,
+    /// Serviced memory bandwidth per SM (bytes/cycle). The paper's
+    /// baseline applies MAD's memory-aware optimizations first ("FIDESlib
+    /// resolves the memory boundedness ... then we shift our focus to
+    /// compute", Fig. 1), so kernels run largely L2-resident: this is
+    /// L2-class bandwidth, not raw DRAM.
+    pub mem_bytes_per_cycle: f64,
+}
+
+impl Default for GpuConfig {
+    fn default() -> Self {
+        Self {
+            sms: 108,
+            schedulers_per_sm: 4,
+            max_warps_per_sm: 64,
+            max_ctas_per_sm: 32,
+            regfile_per_sm: 65536,
+            smem_per_sm: 164 * 1024,
+            freq_mhz: 1087.5,
+            fhec_latency: 44,
+            imma_latency: 64,
+            mem_latency: 350,
+            mem_bytes_per_cycle: 32.0,
+        }
+    }
+}
+
+impl GpuConfig {
+    /// Result latency per opcode (cycles).
+    pub fn latency(&self, op: Opcode) -> u32 {
+        match op.unit() {
+            UnitClass::Int | UnitClass::Fp => 4,
+            UnitClass::Sfu => 16,
+            UnitClass::MemGlobal => self.mem_latency,
+            UnitClass::MemShared => 25,
+            UnitClass::TensorCore => self.imma_latency,
+            UnitClass::FheCore => self.fhec_latency,
+            UnitClass::Control => 2,
+        }
+    }
+
+    /// Issue (initiation) interval per unit class per SM partition.
+    pub fn initiation(&self, unit: UnitClass) -> u32 {
+        match unit {
+            UnitClass::Int | UnitClass::Fp => 1,
+            UnitClass::Sfu => 4,
+            // LDG: 128B per warp access / bandwidth budget per partition.
+            UnitClass::MemGlobal => {
+                (128.0 / (self.mem_bytes_per_cycle / self.schedulers_per_sm as f64)).ceil() as u32
+            }
+            UnitClass::MemShared => 2,
+            // 4 TCs/FHECores per SM = 1 per scheduler partition; the unit
+            // accepts a new MMA every `interval` cycles (pipelined array).
+            UnitClass::TensorCore => 8,
+            UnitClass::FheCore => 8,
+            UnitClass::Control => 1,
+        }
+    }
+
+    /// CTAs resident per SM for a kernel (occupancy limiters).
+    pub fn ctas_per_sm(&self, k: &KernelLaunch) -> u32 {
+        let by_warps = self.max_warps_per_sm / k.warps_per_cta.max(1);
+        let regs_per_cta = k.regs_per_thread * 32 * k.warps_per_cta;
+        let by_regs = if regs_per_cta == 0 {
+            u32::MAX
+        } else {
+            self.regfile_per_sm / regs_per_cta
+        };
+        let by_smem = if k.smem_per_cta == 0 {
+            u32::MAX
+        } else {
+            self.smem_per_sm / k.smem_per_cta
+        };
+        by_warps.min(by_regs).min(by_smem).min(self.max_ctas_per_sm).max(1)
+    }
+}
+
+/// Per-kernel simulation result.
+#[derive(Debug, Clone)]
+pub struct KernelStats {
+    pub name: String,
+    pub class: KernelClass,
+    pub cycles: u64,
+    pub instructions: u64,
+    /// Warp-instructions issued per cycle per SM (max = schedulers).
+    pub ipc: f64,
+    /// Resident warps / warp slots.
+    pub occupancy: f64,
+    pub waves: u64,
+}
+
+/// Whole-trace result.
+#[derive(Debug, Clone, Default)]
+pub struct TraceStats {
+    pub kernels: Vec<KernelStats>,
+}
+
+impl TraceStats {
+    pub fn total_cycles(&self) -> u64 {
+        self.kernels.iter().map(|k| k.cycles).sum()
+    }
+
+    pub fn total_instructions(&self) -> u64 {
+        self.kernels.iter().map(|k| k.instructions).sum()
+    }
+
+    pub fn latency_ms(&self, cfg: &GpuConfig) -> f64 {
+        self.total_cycles() as f64 / (cfg.freq_mhz * 1e3)
+    }
+
+    pub fn latency_us(&self, cfg: &GpuConfig) -> f64 {
+        self.total_cycles() as f64 / cfg.freq_mhz
+    }
+
+    /// Cycle-weighted mean IPC (per SM).
+    pub fn mean_ipc(&self) -> f64 {
+        let cyc = self.total_cycles().max(1) as f64;
+        self.kernels.iter().map(|k| k.ipc * k.cycles as f64).sum::<f64>() / cyc
+    }
+
+    /// Cycle-weighted mean occupancy.
+    pub fn mean_occupancy(&self) -> f64 {
+        let cyc = self.total_cycles().max(1) as f64;
+        self.kernels
+            .iter()
+            .map(|k| k.occupancy * k.cycles as f64)
+            .sum::<f64>()
+            / cyc
+    }
+
+    /// Cycles per kernel class (Fig. 1 / Fig. 9 breakdowns).
+    pub fn cycles_by_class(&self) -> std::collections::BTreeMap<KernelClass, u64> {
+        let mut m = std::collections::BTreeMap::new();
+        for k in &self.kernels {
+            *m.entry(k.class).or_insert(0) += k.cycles;
+        }
+        m
+    }
+}
+
+#[derive(Clone)]
+struct WarpState {
+    pos: usize,
+    rep_left: u32,
+    ready: u64,
+    done: bool,
+}
+
+/// Simulate one kernel on one SM's representative wave; scale by waves.
+pub fn simulate_kernel(cfg: &GpuConfig, k: &KernelLaunch) -> KernelStats {
+    let ctas_resident = cfg.ctas_per_sm(k).min(k.ctas.max(1) as u32);
+    let resident_warps = (ctas_resident * k.warps_per_cta) as usize;
+    let total_ctas = k.ctas.max(1);
+    let waves = total_ctas
+        .div_ceil((ctas_resident as u64) * cfg.sms as u64)
+        .max(1);
+
+    let first = &k.template[0];
+    let mut warps: Vec<WarpState> = (0..resident_warps)
+        .map(|_| WarpState {
+            pos: 0,
+            rep_left: first.repeat,
+            ready: 0,
+            done: k.template.is_empty(),
+        })
+        .collect();
+
+    let sched = cfg.schedulers_per_sm as usize;
+    let unit_ids = [
+        UnitClass::Int,
+        UnitClass::Fp,
+        UnitClass::Sfu,
+        UnitClass::MemGlobal,
+        UnitClass::MemShared,
+        UnitClass::TensorCore,
+        UnitClass::FheCore,
+        UnitClass::Control,
+    ];
+    let unit_index = |u: UnitClass| unit_ids.iter().position(|&x| x == u).unwrap();
+    let mut unit_free = vec![0u64; sched * unit_ids.len()];
+
+    let mut cycle: u64 = 0;
+    let mut issued: u64 = 0;
+    let mut remaining = resident_warps;
+    let mut last_pick = vec![0usize; sched];
+
+    let safety_cap = 2_000_000_000u64;
+    while remaining > 0 && cycle < safety_cap {
+        let mut next_event = u64::MAX;
+        let mut issued_this_cycle = false;
+        for s in 0..sched {
+            let part: Vec<usize> = (s..warps.len()).step_by(sched).collect();
+            if part.is_empty() {
+                continue;
+            }
+            let mut picked = None;
+            for off in 0..part.len() {
+                let wi = part[(last_pick[s] + off) % part.len()];
+                let w = &warps[wi];
+                if w.done {
+                    continue;
+                }
+                if w.ready > cycle {
+                    next_event = next_event.min(w.ready);
+                    continue;
+                }
+                let instr = k.template[w.pos];
+                let ui = s * unit_ids.len() + unit_index(instr.op.unit());
+                if unit_free[ui] > cycle {
+                    next_event = next_event.min(unit_free[ui]);
+                    continue;
+                }
+                picked = Some((wi, ui));
+                break;
+            }
+            if let Some((wi, ui)) = picked {
+                let w = &mut warps[wi];
+                let instr = k.template[w.pos];
+                issued += 1;
+                issued_this_cycle = true;
+                unit_free[ui] = cycle + cfg.initiation(instr.op.unit()) as u64;
+                let completes = cycle + cfg.latency(instr.op) as u64;
+                w.rep_left -= 1;
+                let next_dependent = if w.rep_left == 0 {
+                    w.pos += 1;
+                    if w.pos >= k.template.len() {
+                        w.done = true;
+                        remaining -= 1;
+                        false
+                    } else {
+                        w.rep_left = k.template[w.pos].repeat;
+                        k.template[w.pos].dependent
+                    }
+                } else {
+                    // repeats of a dependent instruction form a serial chain
+                    instr.dependent
+                };
+                if !w.done {
+                    w.ready = if next_dependent { completes } else { cycle + 1 };
+                    next_event = next_event.min(w.ready);
+                }
+                last_pick[s] = part.iter().position(|&x| x == wi).unwrap();
+            }
+        }
+        // Advance time: next cycle if anything issued, else jump to the
+        // next event (fast-forward through long stalls).
+        if issued_this_cycle || next_event == u64::MAX {
+            cycle += 1;
+        } else {
+            cycle = next_event.max(cycle + 1);
+        }
+    }
+
+    let wave_cycles = cycle.max(1);
+    KernelStats {
+        name: k.name.clone(),
+        class: k.class,
+        cycles: wave_cycles * waves,
+        instructions: k.dynamic_instructions(),
+        ipc: issued as f64 / wave_cycles as f64,
+        occupancy: resident_warps as f64 / cfg.max_warps_per_sm as f64,
+        waves,
+    }
+}
+
+/// Simulate a whole trace (kernels serialized, as FIDESlib's stream order).
+/// Identical kernel shapes are memoized — FHE traces repeat a handful of
+/// shapes thousands of times.
+pub fn simulate_trace(cfg: &GpuConfig, t: &Trace) -> TraceStats {
+    use std::collections::HashMap;
+    let mut memo: HashMap<String, KernelStats> = HashMap::new();
+    let mut out = TraceStats::default();
+    for k in &t.launches {
+        let key = format!("{}:{}:{}", k.name, k.ctas, k.warps_per_cta);
+        let stats = memo
+            .entry(key)
+            .or_insert_with(|| simulate_kernel(cfg, k))
+            .clone();
+        out.kernels.push(stats);
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::codegen::{Backend, Compiler, SimParams};
+    use crate::isa::Instr;
+
+    fn mini_kernel(op: Opcode, repeat: u32, dependent: bool) -> KernelLaunch {
+        // Single resident warp: exposes latency (not throughput) effects.
+        KernelLaunch {
+            name: "mini".into(),
+            class: KernelClass::Other,
+            ctas: 1,
+            warps_per_cta: 1,
+            regs_per_thread: 32,
+            smem_per_cta: 0,
+            template: vec![
+                if dependent {
+                    Instr::dep(op, repeat)
+                } else {
+                    Instr::x(op, repeat)
+                },
+                Instr::new(Opcode::Exit),
+            ],
+        }
+    }
+
+    #[test]
+    fn dependent_chains_serialize_by_latency() {
+        let cfg = GpuConfig::default();
+        let fast = simulate_kernel(&cfg, &mini_kernel(Opcode::Imma16816, 16, false));
+        let slow = simulate_kernel(&cfg, &mini_kernel(Opcode::Imma16816, 16, true));
+        assert!(
+            slow.cycles > fast.cycles,
+            "dependent IMMA chain must be slower: {} vs {}",
+            slow.cycles,
+            fast.cycles
+        );
+        assert!(slow.cycles >= 15 * 64, "chain >= 15 latencies: {}", slow.cycles);
+    }
+
+    #[test]
+    fn fhec_latency_beats_imma_latency() {
+        let cfg = GpuConfig::default();
+        let imma = simulate_kernel(&cfg, &mini_kernel(Opcode::Imma16816, 16, true));
+        let fhec = simulate_kernel(&cfg, &mini_kernel(Opcode::Fhec16816, 16, true));
+        assert!(fhec.cycles < imma.cycles, "44 < 64 cycles per issue");
+    }
+
+    #[test]
+    fn occupancy_limited_by_registers() {
+        let cfg = GpuConfig::default();
+        let mut k = mini_kernel(Opcode::Imad, 8, false);
+        k.ctas = 1024;
+        k.warps_per_cta = 8;
+        k.regs_per_thread = 255;
+        let s = simulate_kernel(&cfg, &k);
+        assert!(s.occupancy <= 0.15, "occupancy {} should be tiny", s.occupancy);
+    }
+
+    #[test]
+    fn waves_scale_cycles_linearly_high_occupancy() {
+        let cfg = GpuConfig::default();
+        let mut k = mini_kernel(Opcode::Imad, 64, false);
+        k.warps_per_cta = 8;
+        k.ctas = 108 * 8;
+        let one = simulate_kernel(&cfg, &k);
+        assert!(one.occupancy > 0.9);
+    }
+
+    #[test]
+    fn waves_scale_cycles_linearly() {
+        let cfg = GpuConfig::default();
+        let mut k = mini_kernel(Opcode::Imad, 64, false);
+        k.warps_per_cta = 8;
+        let one = simulate_kernel(&cfg, &{
+            let mut kk = k.clone();
+            kk.ctas = 108 * 8;
+            kk
+        });
+        let two = simulate_kernel(&cfg, &{
+            let mut kk = k.clone();
+            kk.ctas = 2 * 108 * 8;
+            kk
+        });
+        assert_eq!(two.cycles, 2 * one.cycles);
+    }
+
+    #[test]
+    fn ipc_bounded_by_scheduler_count() {
+        let cfg = GpuConfig::default();
+        let s = simulate_kernel(&cfg, &mini_kernel(Opcode::Imad, 128, false));
+        assert!(s.ipc <= cfg.schedulers_per_sm as f64 + 1e-9);
+        assert!(s.ipc > 0.5, "an ALU-only kernel should sustain issue: {}", s.ipc);
+    }
+
+    #[test]
+    fn primitive_speedups_match_table_vii_shape() {
+        // Table VII: Rescale 1.28x, Rotate 1.70x, HEMult 1.77x.
+        let cfg = GpuConfig::default();
+        let p = SimParams::paper_primitive();
+        let speedup = |f: &dyn Fn(&Compiler, &SimParams) -> crate::isa::Trace| {
+            let b = simulate_trace(&cfg, &f(&Compiler::new(Backend::A100), &p));
+            let h = simulate_trace(&cfg, &f(&Compiler::new(Backend::A100Fhec), &p));
+            b.total_cycles() as f64 / h.total_cycles() as f64
+        };
+        let rescale = speedup(&|c, p| c.rescale(p));
+        let rotate = speedup(&|c, p| c.rotate(p));
+        let hemult = speedup(&|c, p| c.hemult(p));
+        println!("speedups: rescale={rescale:.2} rotate={rotate:.2} hemult={hemult:.2}");
+        // Our model's primitive speedups run ~25-60% above the paper's
+        // (its isolated primitives are launch-overhead-diluted on real
+        // hardware, which a representative-wave model does not charge);
+        // the shape requirement is "all primitives speed up, rotate is
+        // not below rescale, geomean in the 1.3-2.3 band around 1.57".
+        assert!(rescale > 1.05 && rescale < 2.4, "rescale {rescale}");
+        assert!(hemult > 1.2 && hemult < 2.6, "hemult {hemult}");
+        assert!(rotate > 1.2 && rotate < 2.6, "rotate {rotate}");
+        assert!(rotate >= rescale, "keyswitch-heavy rotate must not lose to rescale");
+        let geo = (rescale * rotate * hemult).powf(1.0 / 3.0);
+        assert!((1.3..2.3).contains(&geo), "primitive speedup geomean {geo:.2} (paper 1.57)");
+    }
+
+    #[test]
+    fn memoization_returns_same_stats() {
+        let cfg = GpuConfig::default();
+        let p = SimParams::paper_primitive();
+        let t = Compiler::new(Backend::A100).rescale(&p);
+        let s1 = simulate_trace(&cfg, &t);
+        let s2 = simulate_trace(&cfg, &t);
+        assert_eq!(s1.total_cycles(), s2.total_cycles());
+    }
+
+    #[test]
+    fn enhanced_tensor_core_config_is_slower_than_fhec() {
+        // SIV-G: extending TCs inherits the 64-cycle constraint.
+        let p = SimParams::paper_primitive();
+        let trace = Compiler::new(Backend::A100Fhec).hemult(&p);
+        let fhec_cfg = GpuConfig::default();
+        let etc_cfg = GpuConfig { fhec_latency: 64, ..GpuConfig::default() };
+        let fhec = simulate_trace(&fhec_cfg, &trace);
+        let etc = simulate_trace(&etc_cfg, &trace);
+        assert!(fhec.total_cycles() <= etc.total_cycles());
+    }
+}

@@ -1,0 +1,313 @@
+//! SASS-level instruction model, including the paper's `FHEC.16816`
+//! extension (SIV-F).
+//!
+//! Traces are hierarchical, the way NVBit dumps get replayed in practice:
+//! a [`Trace`] is a sequence of [`KernelLaunch`]es; each launch carries the
+//! per-warp instruction *template* (what one warp of one CTA executes) plus
+//! the grid geometry. Dynamic instruction counts are exact
+//! (`template x warps x ctas`); timing comes from `gpusim` which simulates
+//! a resident wave cycle-by-cycle and scales across waves.
+
+pub mod rewrite;
+
+/// Functional-unit class an opcode dispatches to (Accel-Sim terminology).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum UnitClass {
+    /// INT32 ALU pipeline (IMAD/IADD/ISETP/LOP3/SHF...).
+    Int,
+    /// FP32 pipeline.
+    Fp,
+    /// Special function unit.
+    Sfu,
+    /// Load/store units — global.
+    MemGlobal,
+    /// Load/store units — shared memory.
+    MemShared,
+    /// Tensor Core (HMMA/IMMA/DMMA/BMMA).
+    TensorCore,
+    /// FHECore — the paper's `SPECIALIZED_UNIT_3_OP` mapping (SVI-A).
+    FheCore,
+    /// Control (BRA/EXIT/BAR).
+    Control,
+}
+
+/// SASS-level opcodes used by the FHE kernels.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum Opcode {
+    // CUDA-core integer pipeline
+    Imad,
+    ImadWide, // 32x32 -> 64 multiply-add (the Barrett workhorse)
+    Iadd3,
+    Isetp,
+    Lop3,
+    Shf,
+    Sel,
+    Mov,
+    Prmt, // byte permute — the INT8 split/reassembly instruction
+    // FP pipeline (scalar ops)
+    Ffma,
+    Fmul,
+    Fadd,
+    // memory
+    Ldg,
+    Stg,
+    Lds,
+    Sts,
+    // matrix units
+    Imma16816,
+    /// The proposed extension: 16x8x16 modulo matrix multiply-accumulate
+    /// with built-in Barrett reduction (q, mu programmed per instruction).
+    Fhec16816,
+    // control
+    Bar,
+    Bra,
+    Exit,
+}
+
+impl Opcode {
+    pub fn unit(self) -> UnitClass {
+        use Opcode::*;
+        match self {
+            Imad | ImadWide | Iadd3 | Isetp | Lop3 | Shf | Sel | Mov | Prmt => UnitClass::Int,
+            Ffma | Fmul | Fadd => UnitClass::Fp,
+            Ldg | Stg => UnitClass::MemGlobal,
+            Lds | Sts => UnitClass::MemShared,
+            Imma16816 => UnitClass::TensorCore,
+            Fhec16816 => UnitClass::FheCore,
+            Bar | Bra | Exit => UnitClass::Control,
+        }
+    }
+
+    pub fn mnemonic(self) -> &'static str {
+        use Opcode::*;
+        match self {
+            Imad => "IMAD",
+            ImadWide => "IMAD.WIDE",
+            Iadd3 => "IADD3",
+            Isetp => "ISETP",
+            Lop3 => "LOP3",
+            Shf => "SHF",
+            Sel => "SEL",
+            Mov => "MOV",
+            Prmt => "PRMT",
+            Ffma => "FFMA",
+            Fmul => "FMUL",
+            Fadd => "FADD",
+            Ldg => "LDG.E",
+            Stg => "STG.E",
+            Lds => "LDS",
+            Sts => "STS",
+            Imma16816 => "IMMA.16816",
+            Fhec16816 => "FHEC.16816",
+            Bar => "BAR.SYNC",
+            Bra => "BRA",
+            Exit => "EXIT",
+        }
+    }
+}
+
+/// One warp-level instruction in a kernel template. `repeat` encodes
+/// back-to-back issues of the same static instruction (unrolled loops);
+/// `dependent` marks a true RAW dependence on the previous instruction
+/// (the scoreboard stalls the warp until it completes).
+#[derive(Debug, Clone, Copy)]
+pub struct Instr {
+    pub op: Opcode,
+    pub repeat: u32,
+    pub dependent: bool,
+}
+
+impl Instr {
+    pub fn new(op: Opcode) -> Self {
+        Self { op, repeat: 1, dependent: false }
+    }
+
+    pub fn x(op: Opcode, repeat: u32) -> Self {
+        Self { op, repeat, dependent: false }
+    }
+
+    pub fn dep(op: Opcode, repeat: u32) -> Self {
+        Self { op, repeat, dependent: true }
+    }
+}
+
+/// The kernel classes of SII-A / Fig. 1 — used for latency/instruction
+/// breakdowns per category.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, PartialOrd, Ord)]
+pub enum KernelClass {
+    Ntt,
+    Intt,
+    BaseConv,
+    Elementwise,
+    Automorphism,
+    Other,
+}
+
+impl KernelClass {
+    pub fn label(self) -> &'static str {
+        match self {
+            KernelClass::Ntt => "NTT",
+            KernelClass::Intt => "INTT",
+            KernelClass::BaseConv => "BaseConv",
+            KernelClass::Elementwise => "Elementwise",
+            KernelClass::Automorphism => "Automorph",
+            KernelClass::Other => "Other",
+        }
+    }
+
+    pub fn all() -> [KernelClass; 6] {
+        [
+            KernelClass::Ntt,
+            KernelClass::Intt,
+            KernelClass::BaseConv,
+            KernelClass::Elementwise,
+            KernelClass::Automorphism,
+            KernelClass::Other,
+        ]
+    }
+}
+
+/// One kernel launch: grid geometry + per-warp template.
+#[derive(Debug, Clone)]
+pub struct KernelLaunch {
+    pub name: String,
+    pub class: KernelClass,
+    pub ctas: u64,
+    pub warps_per_cta: u32,
+    /// Registers per thread (occupancy limiter, A100: 64k regs/SM).
+    pub regs_per_thread: u32,
+    /// Shared memory per CTA in bytes (occupancy limiter: 164 KiB/SM).
+    pub smem_per_cta: u32,
+    pub template: Vec<Instr>,
+}
+
+impl KernelLaunch {
+    /// Warp-level dynamic instructions of one warp's template.
+    pub fn template_len(&self) -> u64 {
+        self.template.iter().map(|i| i.repeat as u64).sum()
+    }
+
+    /// Exact dynamic warp-instruction count for the whole launch.
+    pub fn dynamic_instructions(&self) -> u64 {
+        self.template_len() * self.warps_per_cta as u64 * self.ctas
+    }
+
+    /// Count instructions hitting a particular unit class.
+    pub fn instructions_on(&self, unit: UnitClass) -> u64 {
+        let per_warp: u64 = self
+            .template
+            .iter()
+            .filter(|i| i.op.unit() == unit)
+            .map(|i| i.repeat as u64)
+            .sum();
+        per_warp * self.warps_per_cta as u64 * self.ctas
+    }
+
+    pub fn total_warps(&self) -> u64 {
+        self.warps_per_cta as u64 * self.ctas
+    }
+}
+
+/// A full application trace (the NVBit-replay substitute).
+#[derive(Debug, Clone, Default)]
+pub struct Trace {
+    pub launches: Vec<KernelLaunch>,
+}
+
+impl Trace {
+    pub fn push(&mut self, k: KernelLaunch) {
+        self.launches.push(k);
+    }
+
+    pub fn extend(&mut self, other: Trace) {
+        self.launches.extend(other.launches);
+    }
+
+    /// Scale this trace by `times` loop iterations (exact for counts; the
+    /// timing model is linear in waves so it is exact there too).
+    pub fn repeated(mut self, times: u64) -> Trace {
+        for launch in &mut self.launches {
+            launch.ctas *= times;
+        }
+        self
+    }
+
+    pub fn dynamic_instructions(&self) -> u64 {
+        self.launches.iter().map(|k| k.dynamic_instructions()).sum()
+    }
+
+    pub fn instructions_by_class(&self) -> std::collections::BTreeMap<KernelClass, u64> {
+        let mut map = std::collections::BTreeMap::new();
+        for k in &self.launches {
+            *map.entry(k.class).or_insert(0) += k.dynamic_instructions();
+        }
+        map
+    }
+
+    pub fn instructions_on(&self, unit: UnitClass) -> u64 {
+        self.launches.iter().map(|k| k.instructions_on(unit)).sum()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn toy_kernel() -> KernelLaunch {
+        KernelLaunch {
+            name: "toy".into(),
+            class: KernelClass::Ntt,
+            ctas: 10,
+            warps_per_cta: 4,
+            regs_per_thread: 32,
+            smem_per_cta: 0,
+            template: vec![
+                Instr::x(Opcode::Ldg, 4),
+                Instr::dep(Opcode::Imma16816, 16),
+                Instr::x(Opcode::Stg, 2),
+                Instr::new(Opcode::Exit),
+            ],
+        }
+    }
+
+    #[test]
+    fn dynamic_count_is_template_times_warps() {
+        let k = toy_kernel();
+        assert_eq!(k.template_len(), 4 + 16 + 2 + 1);
+        assert_eq!(k.dynamic_instructions(), 23 * 4 * 10);
+    }
+
+    #[test]
+    fn unit_class_filtering() {
+        let k = toy_kernel();
+        assert_eq!(k.instructions_on(UnitClass::TensorCore), 16 * 40);
+        assert_eq!(k.instructions_on(UnitClass::MemGlobal), 6 * 40);
+        assert_eq!(k.instructions_on(UnitClass::FheCore), 0);
+    }
+
+    #[test]
+    fn opcode_units() {
+        assert_eq!(Opcode::Fhec16816.unit(), UnitClass::FheCore);
+        assert_eq!(Opcode::Imma16816.unit(), UnitClass::TensorCore);
+        assert_eq!(Opcode::ImadWide.unit(), UnitClass::Int);
+        assert_eq!(Opcode::Fhec16816.mnemonic(), "FHEC.16816");
+    }
+
+    #[test]
+    fn trace_aggregation() {
+        let mut t = Trace::default();
+        t.push(toy_kernel());
+        t.push(toy_kernel());
+        assert_eq!(t.dynamic_instructions(), 2 * 23 * 40);
+        let by_class = t.instructions_by_class();
+        assert_eq!(by_class[&KernelClass::Ntt], 2 * 23 * 40);
+    }
+
+    #[test]
+    fn repeated_trace_scales_counts() {
+        let mut t = Trace::default();
+        t.push(toy_kernel());
+        let t5 = t.repeated(5);
+        assert_eq!(t5.dynamic_instructions(), 5 * 23 * 40);
+    }
+}

@@ -1,0 +1,165 @@
+//! The FHEC rewrite pass — the paper's "manual trace insertion" (SIV-F).
+//!
+//! The closed-source nvcc backend cannot emit FHEC.16816, so the paper
+//! programs FHECore *as if* it were a Tensor Core and rewrites the trace:
+//! every Tensor-Core modmatmul group (Split -> 16x IMMA -> Mid -> 16x IMMA
+//! -> Merge, Algorithm 1) collapses into a single FHEC.16816 issue per
+//! hardware pass. `codegen` emits both forms natively; this pass exists to
+//! *verify* the rewrite relationship between them and to rewrite foreign
+//! traces built by hand.
+
+use super::{Instr, KernelLaunch, Opcode, Trace};
+
+/// Rewrite one kernel template: a run of `IMMA.16816 x k` plus its
+/// adjacent split/reassembly CUDA-core instructions becomes
+/// `FHEC.16816 x (k/16)` — one FHEC per 16 INT8 IMMA passes, the INT32
+/// equivalence of SV-A ("a single FHECoreMMM invocation corresponds to 16
+/// TensorCoreGEMM calls").
+pub fn rewrite_kernel(k: &KernelLaunch) -> KernelLaunch {
+    let mut out: Vec<Instr> = Vec::with_capacity(k.template.len());
+    let mut i = 0;
+    let t = &k.template;
+    while i < t.len() {
+        let ins = t[i];
+        if ins.op == Opcode::Imma16816 {
+            // Collapse the IMMA run (and swallow the preceding split /
+            // following reassembly INT instructions marked by PRMT).
+            let fhec = (ins.repeat / 16).max(1);
+            // Drop an immediately preceding PRMT/Shf split block if present.
+            while let Some(last) = out.last() {
+                if matches!(last.op, Opcode::Prmt | Opcode::Shf | Opcode::Lop3) {
+                    out.pop();
+                } else {
+                    break;
+                }
+            }
+            out.push(Instr::dep(Opcode::Fhec16816, fhec));
+            // Swallow the following reassembly block (PRMT/IMAD/ISETP runs
+            // up to the next memory/control/matrix instruction).
+            let mut j = i + 1;
+            while j < t.len()
+                && matches!(
+                    t[j].op,
+                    Opcode::Prmt
+                        | Opcode::Imad
+                        | Opcode::ImadWide
+                        | Opcode::Iadd3
+                        | Opcode::Isetp
+                        | Opcode::Shf
+                        | Opcode::Lop3
+                        | Opcode::Sel
+                )
+            {
+                j += 1;
+            }
+            i = j;
+        } else {
+            out.push(ins);
+            i += 1;
+        }
+    }
+    KernelLaunch {
+        name: format!("{}+fhec", k.name),
+        template: out,
+        ..k.clone()
+    }
+}
+
+/// Rewrite a whole trace.
+pub fn rewrite_trace(t: &Trace) -> Trace {
+    Trace {
+        launches: t.launches.iter().map(rewrite_kernel).collect(),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::isa::KernelClass;
+
+    fn tc_modmatmul_kernel() -> KernelLaunch {
+        // The Algorithm 1 structure for one 16x16 tile pair on TCs.
+        KernelLaunch {
+            name: "ntt_tc".into(),
+            class: KernelClass::Ntt,
+            ctas: 4,
+            warps_per_cta: 8,
+            regs_per_thread: 64,
+            smem_per_cta: 16384,
+            template: vec![
+                Instr::x(Opcode::Ldg, 8),
+                Instr::x(Opcode::Prmt, 32), // SplitKernel
+                Instr::dep(Opcode::Imma16816, 16),
+                Instr::x(Opcode::Prmt, 16), // MidKernel: reassemble
+                Instr::x(Opcode::ImadWide, 24),
+                Instr::x(Opcode::Isetp, 8),
+                Instr::dep(Opcode::Imma16816, 16),
+                Instr::x(Opcode::Prmt, 16), // MergeKernel
+                Instr::x(Opcode::ImadWide, 24),
+                Instr::x(Opcode::Isetp, 8),
+                Instr::x(Opcode::Stg, 4),
+                Instr::new(Opcode::Exit),
+            ],
+        }
+    }
+
+    #[test]
+    fn rewrite_collapses_imma_groups() {
+        let k = tc_modmatmul_kernel();
+        let r = rewrite_kernel(&k);
+        let fhec: u64 = r
+            .template
+            .iter()
+            .filter(|i| i.op == Opcode::Fhec16816)
+            .map(|i| i.repeat as u64)
+            .sum();
+        let imma: u64 = r
+            .template
+            .iter()
+            .filter(|i| i.op == Opcode::Imma16816)
+            .map(|i| i.repeat as u64)
+            .sum();
+        assert_eq!(imma, 0, "no IMMA must survive");
+        assert_eq!(fhec, 2, "two 16-IMMA passes -> two FHEC issues");
+    }
+
+    #[test]
+    fn rewrite_shrinks_dynamic_count_substantially() {
+        let k = tc_modmatmul_kernel();
+        let r = rewrite_kernel(&k);
+        let ratio = k.dynamic_instructions() as f64 / r.dynamic_instructions() as f64;
+        assert!(ratio > 5.0, "per-modmatmul compression should be large, got {ratio}");
+    }
+
+    #[test]
+    fn rewrite_preserves_memory_traffic() {
+        let k = tc_modmatmul_kernel();
+        let r = rewrite_kernel(&k);
+        use crate::isa::UnitClass;
+        assert_eq!(
+            k.instructions_on(UnitClass::MemGlobal),
+            r.instructions_on(UnitClass::MemGlobal),
+            "LDG/STG must be untouched by the rewrite"
+        );
+    }
+
+    #[test]
+    fn kernels_without_mma_are_untouched() {
+        let k = KernelLaunch {
+            name: "elementwise".into(),
+            class: KernelClass::Elementwise,
+            ctas: 2,
+            warps_per_cta: 4,
+            regs_per_thread: 32,
+            smem_per_cta: 0,
+            template: vec![
+                Instr::x(Opcode::Ldg, 2),
+                Instr::x(Opcode::ImadWide, 6),
+                Instr::x(Opcode::Stg, 1),
+                Instr::new(Opcode::Exit),
+            ],
+        };
+        let r = rewrite_kernel(&k);
+        assert_eq!(r.dynamic_instructions(), k.dynamic_instructions());
+    }
+}

@@ -1,0 +1,42 @@
+//! # fhecore — reproduction of *FHECore: Rethinking GPU Microarchitecture
+//! # for Fully Homomorphic Encryption* (CS.AR 2026)
+//!
+//! The crate is organized as the paper's system stack plus every substrate
+//! it depends on (see `DESIGN.md` for the full inventory):
+//!
+//! * [`ckks`] — a complete CKKS-RNS library (the FIDESlib substitute):
+//!   modular arithmetic, negacyclic NTT, RNS base conversion, encoding,
+//!   encryption, homomorphic ops, hybrid key switching, rotation and
+//!   bootstrapping.
+//! * [`isa`] — the SASS-level instruction model, including the paper's
+//!   `FHEC.16816` ISA extension.
+//! * [`codegen`] — per-kernel instruction-stream generators (the NVBit
+//!   substitute): Tensor-Core NTT per Algorithm 1, BaseConv, elementwise,
+//!   automorphism, and the workload compiler + FHEC rewrite pass.
+//! * [`gpusim`] — trace-driven A100 timing simulator (the Accel-Sim
+//!   substitute): SMs, warp schedulers, scoreboarded functional units,
+//!   occupancy and IPC accounting.
+//! * [`systolic`] — functional + cycle-accurate model of the FHECore
+//!   16x8 PE grid, both dataflows of SIV-D.
+//! * [`rtl`] — ASAP7-calibrated area/frequency model (the
+//!   SiliconCompiler substitute) regenerating Tables IV/IX/X.
+//! * [`runtime`] — PJRT engine loading the AOT-compiled JAX/Pallas
+//!   artifacts (`artifacts/*.hlo.txt`) for functional FHECore execution.
+//! * [`coordinator`] — the L3 serving loop: request batching, dual
+//!   dispatch (functional + timing), metrics.
+//! * [`workloads`] — Bootstrapping / LR / ResNet20 / BERT-Tiny op-graph
+//!   builders at the paper's Table V parameters.
+//! * [`tables`] — regenerators for every figure and table of SVI.
+
+pub mod bench_harness;
+pub mod ckks;
+pub mod codegen;
+pub mod coordinator;
+pub mod gpusim;
+pub mod isa;
+pub mod rtl;
+pub mod runtime;
+pub mod systolic;
+pub mod tables;
+pub mod util;
+pub mod workloads;

@@ -1,0 +1,175 @@
+//! `fhecore` CLI — leader entrypoint.
+//!
+//! Subcommands:
+//!   table <id>         regenerate a paper figure/table (fig1..t10, headline, all)
+//!   simulate <wl>      run a workload trace through the timing model
+//!   serve              demo serving loop (batched encrypted scoring)
+//!   runtime            smoke the PJRT artifacts (needs `make artifacts`)
+//!   selftest           quick functional pass over the CKKS substrate
+
+use std::sync::Arc;
+
+use fhecore::ckks::encoding::Complex;
+use fhecore::ckks::params::{CkksContext, CkksParams};
+use fhecore::ckks::{Evaluator, SecretKey};
+use fhecore::coordinator::{Coordinator, ModelState, OpKind, Request, ServeConfig};
+use fhecore::gpusim::{simulate_trace, GpuConfig};
+use fhecore::util::cli::Args;
+use fhecore::util::rng::Pcg64;
+use fhecore::workloads::workload_pair;
+
+fn main() {
+    let args = Args::from_env();
+    match args.subcommand.as_deref() {
+        Some("table") => {
+            let id = args.positional.first().map(|s| s.as_str()).unwrap_or("headline");
+            if id == "all" {
+                for name in fhecore::tables::ALL {
+                    print!("{}", fhecore::tables::by_name(name).unwrap());
+                }
+            } else {
+                match fhecore::tables::by_name(id) {
+                    Some(s) => print!("{s}"),
+                    None => {
+                        eprintln!("unknown table '{id}'; one of: {:?}", fhecore::tables::ALL)
+                    }
+                }
+            }
+        }
+        Some("simulate") => {
+            let wl = args.positional.first().map(|s| s.as_str()).unwrap_or("bootstrap");
+            let cfg = GpuConfig::default();
+            let (base, fhec) = workload_pair(wl);
+            let sb = simulate_trace(&cfg, &base);
+            let sf = simulate_trace(&cfg, &fhec);
+            println!(
+                "{wl}: A100 {:.2} ms ({} instr) | +FHECore {:.2} ms ({} instr) | speedup {:.2}x instr-ratio {:.2}x",
+                sb.latency_ms(&cfg),
+                sb.total_instructions(),
+                sf.latency_ms(&cfg),
+                sf.total_instructions(),
+                sb.total_cycles() as f64 / sf.total_cycles() as f64,
+                sb.total_instructions() as f64 / sf.total_instructions() as f64,
+            );
+        }
+        Some("serve") => {
+            let reqs = args.opt_usize("requests", 16);
+            serve_demo(reqs);
+        }
+        Some("runtime") => {
+            let dir = args.opt("artifacts").unwrap_or("artifacts");
+            match fhecore::runtime::Engine::load(dir) {
+                Ok(engine) => {
+                    println!("loaded artifacts: {:?}", engine.names());
+                    runtime_smoke(&engine);
+                }
+                Err(e) => eprintln!("runtime load failed: {e:#}"),
+            }
+        }
+        Some("selftest") => selftest(),
+        _ => {
+            println!("fhecore — FHECore (CS.AR 2026) reproduction");
+            println!("usage: fhecore <table|simulate|serve|runtime|selftest> [...]");
+            println!("  table all | table t8 | simulate bert-tiny | serve --requests 32");
+        }
+    }
+}
+
+fn serve_demo(requests: usize) {
+    println!("building CKKS context (N=4096)...");
+    let ctx = CkksContext::new(CkksParams::medium());
+    let mut rng = Pcg64::new(0xD15EA5E);
+    let sk = Arc::new(SecretKey::generate(&ctx, &mut rng));
+    let ev = Arc::new(Evaluator::new(ctx));
+    let slots = ev.ctx.params.slots();
+    let w: Vec<Complex> =
+        (0..slots).map(|i| Complex::new(0.002 * (i % 50) as f64, 0.0)).collect();
+    let weights_pt = ev.encode(&w, ev.ctx.max_level());
+    let model = Arc::new(ModelState { weights_pt, rot_steps: slots });
+    let coord = Coordinator::start(ev.clone(), sk.clone(), model, ServeConfig::default());
+
+    let t0 = std::time::Instant::now();
+    let mut rxs = Vec::new();
+    for id in 0..requests as u64 {
+        let z: Vec<Complex> = (0..slots)
+            .map(|i| Complex::new(0.001 * ((i + id as usize) % 100) as f64, 0.0))
+            .collect();
+        let ct = ev.encrypt(&ev.encode(&z, ev.ctx.max_level()), &sk, &mut rng);
+        rxs.push(coord.submit(Request { id, op: OpKind::LinearScore, ct }));
+    }
+    let mut sim_base = 0.0;
+    let mut sim_fhec = 0.0;
+    for rx in rxs {
+        let r = rx.recv().unwrap();
+        sim_base += r.sim_base_us;
+        sim_fhec += r.sim_fhec_us;
+    }
+    let wall = t0.elapsed();
+    println!(
+        "served {requests} encrypted linear-scoring requests in {:.2?} ({:.1} req/s)",
+        wall,
+        requests as f64 / wall.as_secs_f64()
+    );
+    println!(
+        "mean batch {:.1}, mean service {:.1} us; simulated A100 {:.0} us vs +FHECore {:.0} us ({:.2}x)",
+        coord.metrics.mean_batch(),
+        coord.metrics.mean_service_us(),
+        sim_base,
+        sim_fhec,
+        sim_base / sim_fhec
+    );
+}
+
+fn runtime_smoke(engine: &fhecore::runtime::Engine) {
+    use fhecore::runtime::tables::build_ntt_inputs;
+    let q = fhecore::ckks::prime::pe_primes(256, 1)[0];
+    let t = build_ntt_inputs(256, 16, q);
+    let mut rng = Pcg64::new(1);
+    let a: Vec<u32> = (0..256).map(|_| rng.below(q) as u32).collect();
+    let out = engine
+        .run_u32(
+            "ntt_256",
+            &[
+                a.clone(),
+                t.psi_pows.clone(),
+                t.w1.clone(),
+                t.tw.clone(),
+                t.w2.clone(),
+                vec![t.q],
+                vec![t.mu],
+            ],
+        )
+        .expect("ntt_256 execution");
+    // cross-check against the rust NTT
+    let table = fhecore::ckks::NttTable::with_psi(
+        256,
+        q,
+        fhecore::ckks::prime::root_of_unity(512, q),
+    );
+    let mut want: Vec<u64> = a.iter().map(|&x| x as u64).collect();
+    table.forward(&mut want);
+    let ok = out.iter().zip(&want).all(|(&g, &w)| g as u64 == w);
+    println!("ntt_256 PJRT vs rust NTT: {}", if ok { "MATCH" } else { "MISMATCH" });
+}
+
+fn selftest() {
+    let ctx = CkksContext::new(CkksParams::toy());
+    let mut rng = Pcg64::new(7);
+    let sk = SecretKey::generate(&ctx, &mut rng);
+    let ev = Evaluator::new(ctx);
+    let slots = ev.ctx.params.slots();
+    let z: Vec<Complex> =
+        (0..slots).map(|i| Complex::new(0.1 * (i % 5) as f64, 0.0)).collect();
+    let ct = ev.encrypt(&ev.encode(&z, 3), &sk, &mut rng);
+    let sq = ev.mul(&ct, &ct, &sk);
+    let back = ev.decrypt_to_slots(&sq, &sk);
+    let err = back
+        .iter()
+        .enumerate()
+        .map(|(i, c)| (c.re - (0.1 * (i % 5) as f64).powi(2)).abs())
+        .fold(0.0f64, f64::max);
+    println!(
+        "selftest: HEMult max error {err:.2e} ({})",
+        if err < 1e-3 { "OK" } else { "FAIL" }
+    );
+}

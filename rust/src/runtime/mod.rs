@@ -1,0 +1,262 @@
+//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts and execute
+//! them from the rust hot path. Python never runs here — the artifacts
+//! are HLO *text* produced once by `python/compile/aot.py` (text, not
+//! serialized proto: xla_extension 0.5.1 rejects jax>=0.5's 64-bit ids).
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, Context, Result};
+
+use crate::util::json::Json;
+
+/// Manifest entry describing one artifact's entrypoint.
+#[derive(Debug, Clone)]
+pub struct ArtifactMeta {
+    pub name: String,
+    pub file: String,
+    pub kind: String,
+    /// Argument shapes (row-major dims; scalars are empty).
+    pub args: Vec<Vec<usize>>,
+    /// Extra integers (n, n1, m, k, alpha_pad, l...) by key.
+    pub params: HashMap<String, usize>,
+}
+
+/// A compiled artifact ready to execute.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    exe: xla::PjRtLoadedExecutable,
+}
+
+/// The PJRT engine: CPU client + compiled artifacts by name.
+pub struct Engine {
+    pub client: xla::PjRtClient,
+    executables: HashMap<String, Executable>,
+    pub dir: PathBuf,
+}
+
+impl Engine {
+    /// Load every artifact listed in `<dir>/manifest.json`.
+    pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
+        let dir = dir.as_ref().to_path_buf();
+        let manifest_path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&manifest_path)
+            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
+        let manifest =
+            Json::parse(&text).map_err(|e| anyhow!("bad manifest.json: {e}"))?;
+        let client = xla::PjRtClient::cpu()?;
+
+        let mut executables = HashMap::new();
+        let obj = manifest
+            .as_obj()
+            .ok_or_else(|| anyhow!("manifest must be an object"))?;
+        for (name, entry) in obj {
+            let meta = parse_meta(name, entry)?;
+            let path = dir.join(&meta.file);
+            let proto = xla::HloModuleProto::from_text_file(
+                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
+            )?;
+            let comp = xla::XlaComputation::from_proto(&proto);
+            let exe = client.compile(&comp)?;
+            executables.insert(name.clone(), Executable { meta, exe });
+        }
+        Ok(Self { client, executables, dir })
+    }
+
+    pub fn names(&self) -> Vec<&str> {
+        let mut v: Vec<&str> = self.executables.keys().map(|s| s.as_str()).collect();
+        v.sort_unstable();
+        v
+    }
+
+    pub fn meta(&self, name: &str) -> Option<&ArtifactMeta> {
+        self.executables.get(name).map(|e| &e.meta)
+    }
+
+    /// Execute an artifact on u32 buffers (shape-checked against the
+    /// manifest). Returns the flattened u32 output.
+    pub fn run_u32(&self, name: &str, args: &[Vec<u32>]) -> Result<Vec<u32>> {
+        let exec = self
+            .executables
+            .get(name)
+            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+        let metas = &exec.meta.args;
+        if metas.len() != args.len() {
+            return Err(anyhow!(
+                "'{name}' expects {} args, got {}",
+                metas.len(),
+                args.len()
+            ));
+        }
+        let mut literals = Vec::with_capacity(args.len());
+        for (i, (arg, shape)) in args.iter().zip(metas).enumerate() {
+            let want: usize = shape.iter().product::<usize>().max(1);
+            if arg.len() != want {
+                return Err(anyhow!(
+                    "'{name}' arg {i}: expected {want} elements for shape {shape:?}, got {}",
+                    arg.len()
+                ));
+            }
+            let lit = xla::Literal::vec1(arg);
+            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
+            let lit = if shape.is_empty() {
+                lit.reshape(&[])?
+            } else {
+                lit.reshape(&dims)?
+            };
+            literals.push(lit);
+        }
+        let result = exec.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
+        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
+        let out = result.to_tuple1()?;
+        Ok(out.to_vec::<u32>()?)
+    }
+}
+
+fn parse_meta(name: &str, entry: &Json) -> Result<ArtifactMeta> {
+    let file = entry
+        .get("file")
+        .and_then(|v| v.as_str())
+        .ok_or_else(|| anyhow!("'{name}': missing file"))?
+        .to_string();
+    let kind = entry
+        .get("kind")
+        .and_then(|v| v.as_str())
+        .unwrap_or("unknown")
+        .to_string();
+    let args = entry
+        .get("args")
+        .and_then(|v| v.as_arr())
+        .ok_or_else(|| anyhow!("'{name}': missing args"))?
+        .iter()
+        .map(|a| {
+            a.as_arr()
+                .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
+                .ok_or_else(|| anyhow!("'{name}': bad arg shape"))
+        })
+        .collect::<Result<Vec<Vec<usize>>>>()?;
+    let mut params = HashMap::new();
+    if let Some(obj) = entry.as_obj() {
+        for (k, v) in obj {
+            if let Some(x) = v.as_f64() {
+                params.insert(k.clone(), x as usize);
+            }
+        }
+    }
+    Ok(ArtifactMeta { name: name.to_string(), file, kind, args, params })
+}
+
+/// Host-side builders for artifact inputs (twiddle tables etc.), the rust
+/// mirror of `python/compile/model.py`'s table builders. Kept here so the
+/// coordinator can prepare inputs without touching Python.
+pub mod tables {
+    use crate::ckks::modarith::Modulus;
+    use crate::ckks::prime::root_of_unity;
+
+    pub const BARRETT_K: u32 = 30;
+
+    pub fn barrett_mu(q: u64) -> u32 {
+        assert!((1 << 29..1 << 30).contains(&q));
+        ((1u64 << (2 * BARRETT_K)) / q) as u32
+    }
+
+    /// All seven runtime inputs of the `ntt_<n>` artifact, in order:
+    /// (a is supplied by the caller) psi_pows, w1, tw, w2, q, mu.
+    pub struct NttInputs {
+        pub psi_pows: Vec<u32>,
+        pub w1: Vec<u32>,
+        pub tw: Vec<u32>,
+        pub w2: Vec<u32>,
+        pub w1_inv: Vec<u32>,
+        pub tw_inv: Vec<u32>,
+        pub w2_inv: Vec<u32>,
+        pub psi_inv_n_inv_pows: Vec<u32>,
+        pub q: u32,
+        pub mu: u32,
+    }
+
+    pub fn build_ntt_inputs(n: usize, n1: usize, q: u64) -> NttInputs {
+        let m = Modulus::new(q);
+        let n2 = n / n1;
+        let psi = root_of_unity(2 * n as u64, q);
+        let w = m.mul(psi, psi);
+        let w1 = m.pow(w, n2 as u64);
+        let w2 = m.pow(w, n1 as u64);
+        let (wi, w1i, w2i) = (m.inv(w), m.inv(w1), m.inv(w2));
+        let n_inv = m.inv(n as u64);
+        let psi_inv = m.inv(psi);
+
+        let vand = |base: u64, dim: usize| -> Vec<u32> {
+            let mut v = Vec::with_capacity(dim * dim);
+            for r in 0..dim {
+                for c in 0..dim {
+                    v.push(m.pow(base, (r * c) as u64) as u32);
+                }
+            }
+            v
+        };
+        let twm = |base: u64| -> Vec<u32> {
+            let mut v = Vec::with_capacity(n1 * n2);
+            for k1 in 0..n1 {
+                for j2 in 0..n2 {
+                    v.push(m.pow(base, (j2 * k1) as u64) as u32);
+                }
+            }
+            v
+        };
+        let mut psi_pows = Vec::with_capacity(n);
+        let mut cur = 1u64;
+        for _ in 0..n {
+            psi_pows.push(cur as u32);
+            cur = m.mul(cur, psi);
+        }
+        let mut inv_pows = Vec::with_capacity(n);
+        let mut cur = n_inv;
+        for _ in 0..n {
+            inv_pows.push(cur as u32);
+            cur = m.mul(cur, psi_inv);
+        }
+        NttInputs {
+            psi_pows,
+            w1: vand(w1, n1),
+            tw: twm(w),
+            w2: vand(w2, n2),
+            w1_inv: vand(w1i, n1),
+            tw_inv: twm(wi),
+            w2_inv: vand(w2i, n2),
+            psi_inv_n_inv_pows: inv_pows,
+            q: q as u32,
+            mu: barrett_mu(q),
+        }
+    }
+}
+
+#[cfg(test)]
+mod unit_tests {
+    use super::*;
+
+    #[test]
+    fn parse_meta_roundtrip() {
+        let j = Json::parse(
+            r#"{"file": "x.hlo.txt", "kind": "ntt", "n": 256, "n1": 16,
+                 "args": [[256], [16, 16], []]}"#,
+        )
+        .unwrap();
+        let m = parse_meta("x", &j).unwrap();
+        assert_eq!(m.kind, "ntt");
+        assert_eq!(m.args, vec![vec![256], vec![16, 16], vec![]]);
+        assert_eq!(m.params["n"], 256);
+    }
+
+    #[test]
+    fn ntt_inputs_are_consistent() {
+        let q = crate::ckks::prime::pe_primes(256, 1)[0];
+        let t = tables::build_ntt_inputs(256, 16, q);
+        assert_eq!(t.psi_pows.len(), 256);
+        assert_eq!(t.w1.len(), 256);
+        assert_eq!(t.psi_pows[0], 1);
+        // w1 is a Vandermonde of a 16th root: w1[1*1] ^ 16 == 1.
+        let m = crate::ckks::Modulus::new(q);
+        assert_eq!(m.pow(t.w1[17] as u64, 16), 1);
+    }
+}

@@ -1,0 +1,237 @@
+//! Functional + cycle model of the FHECore 16x8 systolic PE grid (SIV-C/D).
+//!
+//! The functional model is bit-exact with the 30-bit Barrett PE
+//! ([`crate::ckks::Modulus30`]) and with the L1 Pallas kernel; the cycle
+//! model reproduces the dataflow analysis of Fig. 4 / SIV-D:
+//!
+//! * output-stationary: both operands advance every cycle;
+//!   `2*S_R + S_C + T - 2` cycles for an `S_R x S_C` array with a T-stage
+//!   PE pipeline — 44 cycles for the 16x8x16 FHEC operation.
+//! * operand-stationary: the stationary operand's partial sums only move
+//!   after the full T-stage pipeline drains, inserting T-cycle bubbles.
+
+use crate::ckks::Modulus30;
+
+pub const ROWS: usize = 16;
+pub const COLS: usize = 8;
+/// PE pipeline depth (6-stage Barrett MAC, SIV-C).
+pub const PE_STAGES: u64 = 6;
+
+/// Dataflow alternatives analysed in SIV-D.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum Dataflow {
+    OutputStationary,
+    OperandStationary,
+}
+
+/// Cycle count for one `rows x cols x k` modulo-MMA on the PE grid.
+///
+/// Output-stationary: `2*rows + cols + T - 2` (Samajdar et al.'s
+/// scale-sim formula with T-deep PEs, the paper's Eq. in SIV-D).
+/// Operand-stationary: every vertical hop waits for the T-stage pipeline,
+/// so the fill term scales by T.
+pub fn mma_cycles(df: Dataflow, rows: usize, cols: usize, _k: usize) -> u64 {
+    match df {
+        Dataflow::OutputStationary => 2 * rows as u64 + cols as u64 + PE_STAGES - 2,
+        Dataflow::OperandStationary => {
+            PE_STAGES * rows as u64 + cols as u64 + PE_STAGES - 2
+        }
+    }
+}
+
+/// The 44-cycle headline number for FHEC.16816.
+pub fn fhec_16816_cycles() -> u64 {
+    mma_cycles(Dataflow::OutputStationary, ROWS, COLS, 16)
+}
+
+/// Functional model: execute `C[MxN] = A[MxK] x B[KxN] mod q[N]` exactly
+/// as the grid does — output-stationary accumulation with a Barrett
+/// reduction after every MAC, and *per-column* moduli (the mixed-moduli
+/// BaseConv mode of SV-B).
+pub fn modmatmul(a: &[u32], b: &[u32], m: usize, k: usize, n: usize, q: &[u32]) -> Vec<u32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(q.len(), n);
+    let mods: Vec<Modulus30> = q.iter().map(|&x| Modulus30::new(x)).collect();
+    let mut c = vec![0u32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let md = mods[j];
+            let mut r = 0u32;
+            for t in 0..k {
+                // R <- (R + a*b) mod q: one PE MAC per cycle.
+                r = md.mac(r, md.barrett(a[i * k + t] as u64), md.barrett(b[t * n + j] as u64));
+            }
+            c[i * n + j] = r;
+        }
+    }
+    c
+}
+
+/// INT8 segmentation path (Algorithm 1's Tensor-Core baseline): decompose
+/// u32 operands into 4 unsigned byte limbs, multiply-accumulate limb pairs
+/// in i64 (what INT8 IMMA + INT32 accumulators compute), reassemble with
+/// shifts and reduce. Functionally equivalent to [`modmatmul`] — this is
+/// the equivalence the paper's Algorithm 1 relies on, and the ~40%
+/// reassembly overhead is visible as the extra work in this function.
+pub fn modmatmul_int8_segmented(
+    a: &[u32],
+    b: &[u32],
+    m: usize,
+    k: usize,
+    n: usize,
+    q: &[u32],
+) -> Vec<u32> {
+    assert!(k <= 16, "single-tile equivalence model");
+    let mods: Vec<Modulus30> = q.iter().map(|&x| Modulus30::new(x)).collect();
+    let limb = |x: u32, i: usize| ((x >> (8 * i)) & 0xFF) as u64;
+    let mut c = vec![0u32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let md = mods[j];
+            let mut acc = 0u32;
+            for t in 0..k {
+                let av = a[i * k + t];
+                let bv = b[t * n + j];
+                // 16 chunk products (the 16 TensorCoreGEMM calls of SV-A),
+                // reassembled with shifts; each partial sum is reduced so
+                // the u64 paths mirror MidKernel/MergeKernel exactly.
+                let mut wide = 0u32; // running value mod q
+                for ai in 0..4 {
+                    for bi in 0..4 {
+                        let shift = 8 * (ai + bi);
+                        if shift >= 64 {
+                            continue;
+                        }
+                        let prod = limb(av, ai) * limb(bv, bi); // < 2^16
+                        // prod * 2^shift mod q without overflowing u64:
+                        let mut v: u64 = prod;
+                        let mut s = shift;
+                        while s > 0 {
+                            let step = s.min(30);
+                            v = md.barrett(v << step) as u64;
+                            s -= step;
+                        }
+                        wide = md.add(wide, md.barrett(v));
+                    }
+                }
+                acc = md.add(acc, wide);
+            }
+            c[i * n + j] = acc;
+        }
+    }
+    c
+}
+
+/// Cycle-accurate event model of the grid executing a *stream* of tiled
+/// MMAs back to back (weight-reload between tiles is hidden for
+/// output-stationary; operand-stationary pays the refill).
+pub fn stream_cycles(df: Dataflow, tiles: u64) -> u64 {
+    match df {
+        // back-to-back tiles pipeline through; steady state = one tile per
+        // (rows + T) cycles after the first.
+        Dataflow::OutputStationary => {
+            if tiles == 0 {
+                0
+            } else {
+                fhec_16816_cycles() + (tiles - 1) * (ROWS as u64 + PE_STAGES)
+            }
+        }
+        Dataflow::OperandStationary => tiles * mma_cycles(df, ROWS, COLS, 16),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::prime::pe_primes;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn headline_44_cycles() {
+        // SIV-D: "FHECore — configured as a 16x8 systolic array — can
+        // compute a 16x8x16 matrix multiplication in 44 cycles."
+        assert_eq!(fhec_16816_cycles(), 44);
+    }
+
+    #[test]
+    fn operand_stationary_is_slower() {
+        let os = mma_cycles(Dataflow::OutputStationary, ROWS, COLS, 16);
+        let ws = mma_cycles(Dataflow::OperandStationary, ROWS, COLS, 16);
+        assert!(ws > os, "{ws} should exceed {os}");
+        // Fig. 4: the stationary operand pays the 6-stage pipeline per row.
+        assert_eq!(ws, 6 * 16 + 8 + 6 - 2);
+    }
+
+    #[test]
+    fn functional_grid_matches_scalar_reference() {
+        let q = pe_primes(32, 1)[0] as u32;
+        let mut rng = Pcg64::new(3);
+        let (m, k, n) = (16, 16, 8);
+        let a: Vec<u32> = (0..m * k).map(|_| rng.below(q as u64) as u32).collect();
+        let b: Vec<u32> = (0..k * n).map(|_| rng.below(q as u64) as u32).collect();
+        let qs = vec![q; n];
+        let got = modmatmul(&a, &b, m, k, n, &qs);
+        for i in 0..m {
+            for j in 0..n {
+                let mut want = 0u64;
+                for t in 0..k {
+                    want = (want + a[i * k + t] as u64 * b[t * n + j] as u64) % q as u64;
+                }
+                assert_eq!(got[i * n + j] as u64, want, "({i},{j})");
+            }
+        }
+    }
+
+    #[test]
+    fn int8_segmentation_is_functionally_equivalent() {
+        // Algorithm 1's equivalence: Split/GEMM/Mid/GEMM/Merge == direct
+        // modulo matmul.
+        let q = pe_primes(32, 2)[1] as u32;
+        let mut rng = Pcg64::new(9);
+        let (m, k, n) = (16, 16, 8);
+        let a: Vec<u32> = (0..m * k).map(|_| rng.below(q as u64) as u32).collect();
+        let b: Vec<u32> = (0..k * n).map(|_| rng.below(q as u64) as u32).collect();
+        let qs = vec![q; n];
+        assert_eq!(
+            modmatmul_int8_segmented(&a, &b, m, k, n, &qs),
+            modmatmul(&a, &b, m, k, n, &qs)
+        );
+    }
+
+    #[test]
+    fn mixed_moduli_columns() {
+        // SV-B: each systolic column programmed with a distinct modulus.
+        let primes = pe_primes(32, 8);
+        let qs: Vec<u32> = primes.iter().map(|&p| p as u32).collect();
+        let mut rng = Pcg64::new(4);
+        let (m, k, n) = (16, 16, 8);
+        let a: Vec<u32> = (0..m * k).map(|_| rng.below(qs[0] as u64) as u32).collect();
+        let b: Vec<u32> = (0..k * n).map(|_| rng.below(qs[0] as u64) as u32).collect();
+        let got = modmatmul(&a, &b, m, k, n, &qs);
+        for j in 0..n {
+            let q = qs[j] as u64;
+            for i in 0..m {
+                let mut want = 0u64;
+                for t in 0..k {
+                    want = (want + a[i * k + t] as u64 % q * (b[t * n + j] as u64 % q)) % q;
+                }
+                assert_eq!(got[i * n + j] as u64, want, "col {j}");
+            }
+        }
+    }
+
+    #[test]
+    fn streaming_amortizes_fill_latency() {
+        let one = stream_cycles(Dataflow::OutputStationary, 1);
+        let hundred = stream_cycles(Dataflow::OutputStationary, 100);
+        assert_eq!(one, 44);
+        // Steady state beats 44/tile.
+        assert!((hundred as f64) / 100.0 < 44.0 * 0.6);
+        // Operand-stationary never amortizes the pipeline bubbles.
+        assert!(
+            stream_cycles(Dataflow::OperandStationary, 100)
+                > stream_cycles(Dataflow::OutputStationary, 100) * 2
+        );
+    }
+}

@@ -1,0 +1,559 @@
+//! Regenerators for every figure and table of the paper's evaluation
+//! (SVI). Each function returns the formatted table as a `String` (and is
+//! exercised by `cargo run -- table <id>` plus the benches).
+
+use crate::codegen::{Backend, Compiler, SimParams};
+use crate::gpusim::{simulate_trace, GpuConfig, TraceStats};
+use crate::isa::{KernelClass, Trace};
+use crate::rtl;
+use crate::systolic;
+use crate::workloads::{workload_pair, Workload, BOOTSTRAP, WORKLOAD_NAMES};
+
+fn header(title: &str) -> String {
+    format!("\n=== {title} ===\n")
+}
+
+fn pct(x: f64) -> String {
+    format!("{:5.1}%", x * 100.0)
+}
+
+/// Fig. 1 — latency decomposition of CKKS workloads on the baseline A100.
+pub fn fig1() -> String {
+    let cfg = GpuConfig::default();
+    let mut out = header("Fig. 1 — latency decomposition (baseline A100)");
+    out += &format!(
+        "{:<12} {:>8} {:>8} {:>10} {:>12} {:>10} {:>8}\n",
+        "workload", "NTT", "INTT", "BaseConv", "Elementwise", "Automorph", "Other"
+    );
+    let mut agg = std::collections::BTreeMap::new();
+    let mut agg_total = 0u64;
+    for name in WORKLOAD_NAMES {
+        let (base, _) = workload_pair(name);
+        let stats = simulate_trace(&cfg, &base);
+        let by = stats.cycles_by_class();
+        let total = stats.total_cycles().max(1);
+        let share = |c: KernelClass| *by.get(&c).unwrap_or(&0) as f64 / total as f64;
+        out += &format!(
+            "{:<12} {:>8} {:>8} {:>10} {:>12} {:>10} {:>8}\n",
+            name,
+            pct(share(KernelClass::Ntt)),
+            pct(share(KernelClass::Intt)),
+            pct(share(KernelClass::BaseConv)),
+            pct(share(KernelClass::Elementwise)),
+            pct(share(KernelClass::Automorphism)),
+            pct(share(KernelClass::Other)),
+        );
+        for (k, v) in by {
+            *agg.entry(k).or_insert(0u64) += v;
+        }
+        agg_total += total;
+    }
+    let s = |c: KernelClass| *agg.get(&c).unwrap_or(&0) as f64 / agg_total as f64;
+    out += &format!(
+        "{:<12} {:>8} {:>8} {:>10} {:>12} {:>10} {:>8}\n",
+        "ALL (paper: NTT+INTT 66%, scalar 16.4%, BaseConv 12.6%, rest 5%)",
+        pct(s(KernelClass::Ntt)),
+        pct(s(KernelClass::Intt)),
+        pct(s(KernelClass::BaseConv)),
+        pct(s(KernelClass::Elementwise)),
+        pct(s(KernelClass::Automorphism)),
+        pct(s(KernelClass::Other)),
+    );
+    out
+}
+
+/// Fig. 4 — dataflow comparison on the 16x8 PE grid.
+pub fn fig4() -> String {
+    let mut out = header("Fig. 4 — systolic dataflow (16x8 grid, 6-stage PEs)");
+    out += &format!(
+        "output-stationary 16x8x16:  {:>4} cycles (paper: 44)\n",
+        systolic::mma_cycles(systolic::Dataflow::OutputStationary, 16, 8, 16)
+    );
+    out += &format!(
+        "operand-stationary 16x8x16: {:>4} cycles (pipeline bubbles per row)\n",
+        systolic::mma_cycles(systolic::Dataflow::OperandStationary, 16, 8, 16)
+    );
+    for tiles in [1u64, 16, 256] {
+        out += &format!(
+            "stream of {tiles:>4} tiles: OS {:>6} cy | WS {:>6} cy\n",
+            systolic::stream_cycles(systolic::Dataflow::OutputStationary, tiles),
+            systolic::stream_cycles(systolic::Dataflow::OperandStationary, tiles),
+        );
+    }
+    out
+}
+
+/// Fig. 7 — occupancy and normalized IPC, +-FHECore.
+pub fn fig7() -> String {
+    let cfg = GpuConfig::default();
+    let mut out = header("Fig. 7 — occupancy / normalized IPC");
+    out += &format!(
+        "{:<12} {:>10} {:>10} {:>12} {:>14}\n",
+        "trace", "occ(base)", "occ(fhec)", "IPC(base)", "IPC(fhec)/base"
+    );
+    let p = SimParams::paper_primitive();
+    let prim: Vec<(&str, Trace, Trace)> = vec![
+        (
+            "hemult",
+            Compiler::new(Backend::A100).hemult(&p),
+            Compiler::new(Backend::A100Fhec).hemult(&p),
+        ),
+        (
+            "rotate",
+            Compiler::new(Backend::A100).rotate(&p),
+            Compiler::new(Backend::A100Fhec).rotate(&p),
+        ),
+        (
+            "rescale",
+            Compiler::new(Backend::A100).rescale(&p),
+            Compiler::new(Backend::A100Fhec).rescale(&p),
+        ),
+    ];
+    let mut rows: Vec<(String, TraceStats, TraceStats)> = prim
+        .into_iter()
+        .map(|(n, b, f)| (n.to_string(), simulate_trace(&cfg, &b), simulate_trace(&cfg, &f)))
+        .collect();
+    for name in WORKLOAD_NAMES {
+        let (b, f) = workload_pair(name);
+        rows.push((name.to_string(), simulate_trace(&cfg, &b), simulate_trace(&cfg, &f)));
+    }
+    for (name, b, f) in rows {
+        out += &format!(
+            "{:<12} {:>10.2} {:>10.2} {:>12.2} {:>14.2}\n",
+            name,
+            b.mean_occupancy(),
+            f.mean_occupancy(),
+            b.mean_ipc(),
+            f.mean_ipc() / b.mean_ipc(),
+        );
+    }
+    out
+}
+
+/// Fig. 8 — bootstrapping FFT-iteration sensitivity sweep.
+pub fn fig8() -> String {
+    let cfg = GpuConfig::default();
+    let mut out = header("Fig. 8 — bootstrap FFTIter sweep (normalized to iter=2 baseline)");
+    out += &format!(
+        "{:<8} {:>12} {:>12} {:>12} {:>12} {:>8} {:>14} {:>14}\n",
+        "FFTIter", "instr(base)", "instr(fhec)", "lat(base)", "lat(fhec)", "limbs",
+        "eff ms (base)", "eff ms (fhec)"
+    );
+    let wb = Workload::new(BOOTSTRAP, Backend::A100);
+    let wf = Workload::new(BOOTSTRAP, Backend::A100Fhec);
+    let norm_i = wb.bootstrap(2).dynamic_instructions() as f64;
+    let norm_c = simulate_trace(&cfg, &wb.bootstrap(2)).total_cycles() as f64;
+    let mut best = (0usize, f64::MAX);
+    for it in 2..=6usize {
+        let tb = wb.bootstrap(it);
+        let tf = wf.bootstrap(it);
+        let sb = simulate_trace(&cfg, &tb);
+        let sf = simulate_trace(&cfg, &tf);
+        let limbs = wb.limbs_remaining(it);
+        let eff_b = sb.latency_ms(&cfg) / limbs as f64;
+        let eff_f = sf.latency_ms(&cfg) / limbs as f64;
+        if eff_f < best.1 {
+            best = (it, eff_f);
+        }
+        out += &format!(
+            "{:<8} {:>12.3} {:>12.3} {:>12.3} {:>12.3} {:>8} {:>14.2} {:>14.2}\n",
+            it,
+            tb.dynamic_instructions() as f64 / norm_i,
+            tf.dynamic_instructions() as f64 / norm_i,
+            sb.total_cycles() as f64 / norm_c,
+            sf.total_cycles() as f64 / norm_c,
+            limbs,
+            eff_b,
+            eff_f,
+        );
+    }
+    out += &format!(
+        "best effective bootstrap at FFTIter={} (paper: 5; 52.3 -> 27.3 ms/limb)\n",
+        best.0
+    );
+    out
+}
+
+/// Fig. 9 — per-workload latency breakdown with and without FHECore.
+pub fn fig9() -> String {
+    let cfg = GpuConfig::default();
+    let mut out = header("Fig. 9 — latency breakdown +-FHECore (ms)");
+    out += &format!(
+        "{:<12} {:>8} {:>9} {:>9} {:>10} {:>12} {:>10} {:>8}\n",
+        "workload", "variant", "total", "NTT+INTT", "BaseConv", "Elementwise", "Automorph", "Other"
+    );
+    for name in WORKLOAD_NAMES {
+        let (b, f) = workload_pair(name);
+        for (tag, t) in [("base", b), ("fhec", f)] {
+            let s = simulate_trace(&cfg, &t);
+            let by = s.cycles_by_class();
+            let ms = |c: u64| c as f64 / (cfg.freq_mhz * 1e3);
+            let g = |k: KernelClass| ms(*by.get(&k).unwrap_or(&0));
+            out += &format!(
+                "{:<12} {:>8} {:>9.1} {:>9.1} {:>10.1} {:>12.1} {:>10.1} {:>8.1}\n",
+                name,
+                tag,
+                s.latency_ms(&cfg),
+                g(KernelClass::Ntt) + g(KernelClass::Intt),
+                g(KernelClass::BaseConv),
+                g(KernelClass::Elementwise),
+                g(KernelClass::Automorphism),
+                g(KernelClass::Other),
+            );
+        }
+    }
+    out
+}
+
+/// Fig. 10 — dynamic instruction count breakdown.
+pub fn fig10() -> String {
+    let mut out = header("Fig. 10 — instruction breakdown +-FHECore (10^9 warp-issues)");
+    out += &format!(
+        "{:<12} {:>8} {:>9} {:>9} {:>10} {:>12} {:>10}\n",
+        "workload", "variant", "total", "NTT+INTT", "BaseConv", "Elementwise", "Automorph"
+    );
+    for name in WORKLOAD_NAMES {
+        let (b, f) = workload_pair(name);
+        for (tag, t) in [("base", b), ("fhec", f)] {
+            let by = t.instructions_by_class();
+            let g = |k: KernelClass| *by.get(&k).unwrap_or(&0) as f64 / 1e9;
+            out += &format!(
+                "{:<12} {:>8} {:>9.2} {:>9.2} {:>10.2} {:>12.2} {:>10.2}\n",
+                name,
+                tag,
+                t.dynamic_instructions() as f64 / 1e9,
+                g(KernelClass::Ntt) + g(KernelClass::Intt),
+                g(KernelClass::BaseConv),
+                g(KernelClass::Elementwise),
+                g(KernelClass::Automorphism),
+            );
+        }
+    }
+    out
+}
+
+/// Table III — datatype support matrix (static data from the paper).
+pub fn t3() -> String {
+    let mut out = header("Table III — datatype support across GPU generations");
+    out += "GPU        #TC  #SM  TensorCore dtypes                CUDA-core dtypes\n";
+    for (gpu, tc, sm, tcd, cud) in [
+        ("V100", 640, 80, "FP16", "FP32 FP16 INT32 INT8"),
+        ("RTX6000", 576, 72, "FP16 INT8 INT4 INT1", "FP32 FP16 INT32 INT8"),
+        ("A100", 432, 108, "FP64 TF32 FP16 BF16 INT8 INT4 INT1", "FP32 FP16 BF16 INT32 INT8"),
+        ("H100", 528, 132, "FP64 TF32 FP16 BF16 FP8 INT8", "FP32 FP16 BF16 INT32 INT8"),
+        ("B100", 528, 132, "FP64 TF32 FP16 BF16 FP8 FP6 INT8", "FP32 FP16 BF16 (INT32 dropped)"),
+    ] {
+        out += &format!("{gpu:<10} {tc:<4} {sm:<4} {tcd:<34} {cud}\n");
+    }
+    out += "trend: narrow ML dtypes grow; wide integer support shrinks (SIII-1)\n";
+    out
+}
+
+/// Table IV — enhanced-Tensor-Core RTL metrics.
+pub fn t4() -> String {
+    let etc = rtl::enhanced_tc_grid();
+    let tc = rtl::tensor_core_grid();
+    let r = rtl::enhanced_tc_die_report();
+    let mut out = header("Table IV — enhancing Tensor Cores for FHE (ASAP7 model)");
+    out += &format!(
+        "Enhanced TC:  PE {:8.1} um^2 @ {:.2} GHz | 16x8 grid {:9.0} um^2, {} cy\n",
+        etc.pe.area_um2, etc.pe.fmax_ghz, etc.grid_area_um2, etc.latency_cycles
+    );
+    out += &format!(
+        "Tensor Core:  PE {:8.1} um^2 @ 0.76-1.41 GHz | 16x8 grid {:9.0} um^2, 64 cy\n",
+        tc.pe.area_um2, tc.grid_area_um2
+    );
+    out += &format!(
+        "cumulative {:.2} mm^2 -> GPU die {:.2} mm^2 ({:+.1}%)   [paper: 50.01 / 843.36 / +2.1%]\n",
+        r.cumulative_mm2, r.die_mm2, r.overhead_pct
+    );
+    out
+}
+
+/// Table V — workload parameters.
+pub fn t5() -> String {
+    let mut out = header("Table V — CKKS parameters (as configured)");
+    out += &format!(
+        "{:<10} {:>7} {:>6} {:>7} {:>4} {:>6} {:>5} {:>6}\n",
+        "workload", "lambda", "logN", "logQP", "L", "L_eff", "dnum", "alpha"
+    );
+    for (n, p) in [
+        ("Bootstrap", crate::workloads::BOOTSTRAP),
+        ("LR", crate::workloads::LR),
+        ("ResNet20", crate::workloads::RESNET20),
+        ("BERT-Tiny", crate::workloads::BERT_TINY),
+    ] {
+        out += &format!(
+            "{:<10} {:>7} {:>6} {:>7} {:>4} {:>6} {:>5} {:>6}\n",
+            n, p.lambda, p.log_n, p.log_qp, p.l, p.l_eff, p.dnum, p.alpha()
+        );
+    }
+    out
+}
+
+/// Table VI — dynamic instruction counts +-FHEC.
+pub fn t6() -> String {
+    let mut out = header("Table VI — dynamic instruction count (warp-level issues)");
+    out += &format!(
+        "{:<12} {:>16} {:>16} {:>8}  {:>10}\n",
+        "trace", "A100", "A100+FHEC", "ratio", "paper"
+    );
+    let p = SimParams::paper_primitive();
+    let rows: Vec<(&str, Trace, Trace, f64)> = vec![
+        (
+            "HEMult",
+            Compiler::new(Backend::A100).hemult(&p),
+            Compiler::new(Backend::A100Fhec).hemult(&p),
+            2.42,
+        ),
+        (
+            "Rotate",
+            Compiler::new(Backend::A100).rotate(&p),
+            Compiler::new(Backend::A100Fhec).rotate(&p),
+            2.56,
+        ),
+        (
+            "Rescale",
+            Compiler::new(Backend::A100).rescale(&p),
+            Compiler::new(Backend::A100Fhec).rescale(&p),
+            2.26,
+        ),
+    ];
+    let mut geo_p = 1.0f64;
+    let mut np = 0;
+    for (name, b, f, paper) in rows {
+        let r = b.dynamic_instructions() as f64 / f.dynamic_instructions() as f64;
+        geo_p *= r;
+        np += 1;
+        out += &format!(
+            "{:<12} {:>16} {:>16} {:>7.2}x  {:>9.2}x\n",
+            name,
+            b.dynamic_instructions(),
+            f.dynamic_instructions(),
+            r,
+            paper
+        );
+    }
+    let mut geo_w = 1.0f64;
+    let mut nw = 0;
+    for (name, paper) in [
+        ("bootstrap", 2.12),
+        ("lr", 2.68),
+        ("resnet20", 1.89),
+        ("bert-tiny", 1.71),
+    ] {
+        let (b, f) = workload_pair(name);
+        let r = b.dynamic_instructions() as f64 / f.dynamic_instructions() as f64;
+        geo_w *= r;
+        nw += 1;
+        out += &format!(
+            "{:<12} {:>16} {:>16} {:>7.2}x  {:>9.2}x\n",
+            name,
+            b.dynamic_instructions(),
+            f.dynamic_instructions(),
+            r,
+            paper
+        );
+    }
+    out += &format!(
+        "geomean: primitives {:.2}x (paper 2.41x), workloads {:.2}x (paper 1.96x)\n",
+        geo_p.powf(1.0 / np as f64),
+        geo_w.powf(1.0 / nw as f64)
+    );
+    out
+}
+
+/// Table VII — primitive latencies vs published systems.
+pub fn t7() -> String {
+    let cfg = GpuConfig::default();
+    let p = SimParams::paper_primitive();
+    let mut out = header("Table VII — primitive latency (us)");
+    out += "published (paper's Table VII, for reference):\n";
+    for (sys, hw, rescale, rotate, hemult) in [
+        ("OpenFHE", "CPU 24t", 4920.0, 105300.0, 151580.0),
+        ("Phantom", "RTX4090", 224.0, 1139.0, 1220.0),
+        ("TensorFHE", "RTX4090", 115.0, 18592.0, 18689.0),
+        ("Neo", "A100", 114.0, 3422.0, 3472.0),
+        ("Cheddar", "RTX4090", 68.0, 476.0, 533.0),
+        ("HEonGPU", "RTX4090", 150.0, 8200.0, 8172.0),
+        ("FIDESlib", "RTX4090", 156.0, 1107.0, 1084.0),
+        ("FIDESlib", "A100 (paper base)", 227.0, 1261.0, 1196.0),
+        ("FIDESlib", "A100+FHECore (paper)", 178.0, 741.0, 675.0),
+    ] {
+        out += &format!(
+            "  {:<10} {:<22} rescale {:>9.0}  rotate {:>9.0}  hemult {:>9.0}\n",
+            sys, hw, rescale, rotate, hemult
+        );
+    }
+    out += "simulated here (gpusim, representative-wave model):\n";
+    for (backend, tag) in [(Backend::A100, "A100 (model)"), (Backend::A100Fhec, "A100+FHEC")] {
+        let c = Compiler::new(backend);
+        let rescale = simulate_trace(&cfg, &c.rescale(&p)).latency_us(&cfg);
+        let rotate = simulate_trace(&cfg, &c.rotate(&p)).latency_us(&cfg);
+        let hemult = simulate_trace(&cfg, &c.hemult(&p)).latency_us(&cfg);
+        out += &format!(
+            "  {:<10} {:<22} rescale {:>9.0}  rotate {:>9.0}  hemult {:>9.0}\n",
+            "this-work", tag, rescale, rotate, hemult
+        );
+    }
+    // speedups
+    let c0 = Compiler::new(Backend::A100);
+    let c1 = Compiler::new(Backend::A100Fhec);
+    let sp = |f: &dyn Fn(&Compiler) -> Trace| {
+        simulate_trace(&cfg, &f(&c0)).total_cycles() as f64
+            / simulate_trace(&cfg, &f(&c1)).total_cycles() as f64
+    };
+    let (r1, r2, r3) = (
+        sp(&|c| c.rescale(&p)),
+        sp(&|c| c.rotate(&p)),
+        sp(&|c| c.hemult(&p)),
+    );
+    out += &format!(
+        "speedups: rescale {:.2}x rotate {:.2}x hemult {:.2}x (paper 1.28/1.70/1.77; geomean {:.2}x vs 1.57x)\n",
+        r1,
+        r2,
+        r3,
+        (r1 * r2 * r3).powf(1.0 / 3.0)
+    );
+    out
+}
+
+/// Table VIII — end-to-end workload latencies.
+pub fn t8() -> String {
+    let cfg = GpuConfig::default();
+    let mut out = header("Table VIII — end-to-end latency (ms)");
+    out += &format!(
+        "{:<12} {:>12} {:>12} {:>8}  {:>16}\n",
+        "workload", "A100", "A100+FHEC", "speedup", "paper (speedup)"
+    );
+    let paper = [
+        ("bootstrap", 314.67, 163.90, 1.92),
+        ("lr", 747.44, 312.37, 2.39),
+        ("resnet20", 5028.23, 2262.16, 2.22),
+        ("bert-tiny", 16583.83, 8300.38, 2.0),
+    ];
+    let mut geo = 1.0f64;
+    for (name, pb, pf, ps) in paper {
+        let (b, f) = workload_pair(name);
+        let sb = simulate_trace(&cfg, &b).latency_ms(&cfg);
+        let sf = simulate_trace(&cfg, &f).latency_ms(&cfg);
+        geo *= sb / sf;
+        out += &format!(
+            "{:<12} {:>12.2} {:>12.2} {:>7.2}x  {:>6.0}/{:.0} ({:.2}x)\n",
+            name,
+            sb,
+            sf,
+            sb / sf,
+            pb,
+            pf,
+            ps
+        );
+    }
+    out += &format!(
+        "geomean speedup {:.2}x (paper: 2.12x)\n",
+        geo.powf(1.0 / paper.len() as f64)
+    );
+    out
+}
+
+/// Table IX — FHECore RTL metrics.
+pub fn t9() -> String {
+    let pe = rtl::fhecore_pe();
+    let g = rtl::fhecore_grid();
+    let r = rtl::fhecore_die_report();
+    let mut out = header("Table IX — FHECore RTL metrics (ASAP7 model)");
+    out += &format!(
+        "PE:   {:.1} um^2 @ {:.2} GHz, 6-cycle pipeline   [paper: 5901.1 / 3.50]\n",
+        pe.area_um2, pe.fmax_ghz
+    );
+    out += &format!(
+        "grid: {:.1} um^2 @ {:.2} GHz, {} cycles         [paper: 46096.5 / 1.58 / 44]\n",
+        g.grid_area_um2, g.grid_fmax_ghz, g.latency_cycles
+    );
+    out += &format!(
+        "cumulative {:.2} mm^2 across {} units           [paper: 19.91]\n",
+        r.cumulative_mm2,
+        rtl::UNITS_PER_GPU
+    );
+    out
+}
+
+/// Table X — area overhead vs GME.
+pub fn t10() -> String {
+    let us = rtl::fhecore_die_report();
+    let gme = rtl::gme_die_report();
+    let mut out = header("Table X — area overhead comparison");
+    out += &format!(
+        "GME (MI100):     {:.1} -> {:.1} mm^2  ({:+.1}%)  exceeds {:.0} mm^2 reticle\n",
+        rtl::MI100_DIE_MM2,
+        gme.die_mm2,
+        gme.overhead_pct,
+        rtl::RETICLE_LIMIT_MM2
+    );
+    out += &format!(
+        "FHECore (A100):  {:.1} -> {:.2} mm^2 ({:+.1}%)  under the reticle\n",
+        rtl::A100_DIE_MM2,
+        us.die_mm2,
+        us.overhead_pct
+    );
+    out += &format!("H100/B100 coarse estimate: ~{:.1}%\n", rtl::hopper_overhead_pct());
+    out
+}
+
+/// Headline summary (abstract numbers).
+pub fn headline() -> String {
+    let mut out = String::new();
+    out += &t6();
+    out += &t7();
+    out += &t8();
+    out += &t9();
+    out += &t10();
+    out
+}
+
+pub fn by_name(name: &str) -> Option<String> {
+    Some(match name {
+        "fig1" => fig1(),
+        "fig4" => fig4(),
+        "fig7" => fig7(),
+        "fig8" => fig8(),
+        "fig9" => fig9(),
+        "fig10" => fig10(),
+        "t3" => t3(),
+        "t4" => t4(),
+        "t5" => t5(),
+        "t6" => t6(),
+        "t7" => t7(),
+        "t8" => t8(),
+        "t9" => t9(),
+        "t10" => t10(),
+        "headline" => headline(),
+        _ => return None,
+    })
+}
+
+pub const ALL: [&str; 15] = [
+    "fig1", "fig4", "fig7", "fig8", "fig9", "fig10", "t3", "t4", "t5", "t6", "t7", "t8",
+    "t9", "t10", "headline",
+];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn every_table_renders() {
+        for name in ALL {
+            let s = by_name(name).unwrap();
+            assert!(s.len() > 40, "{name} too short");
+        }
+        assert!(by_name("nope").is_none());
+    }
+
+    #[test]
+    fn t6_reports_geomeans() {
+        let s = t6();
+        assert!(s.contains("geomean"));
+        assert!(s.contains("HEMult"));
+    }
+}

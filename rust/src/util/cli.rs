@@ -1,0 +1,99 @@
+//! Tiny argument parser (the clap substitute).
+//!
+//! Grammar: `fhecore <subcommand> [positional...] [--flag] [--key value]`.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Clone, Default)]
+pub struct Args {
+    pub subcommand: Option<String>,
+    pub positional: Vec<String>,
+    pub options: BTreeMap<String, String>,
+    pub flags: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Self {
+        let mut out = Args::default();
+        let mut iter = argv.into_iter().peekable();
+        while let Some(arg) = iter.next() {
+            if let Some(name) = arg.strip_prefix("--") {
+                // `--key=value`, `--key value`, or bare `--flag`
+                if let Some((k, v)) = name.split_once('=') {
+                    out.options.insert(k.to_string(), v.to_string());
+                } else if iter
+                    .peek()
+                    .map(|nxt| !nxt.starts_with("--"))
+                    .unwrap_or(false)
+                {
+                    let v = iter.next().unwrap();
+                    out.options.insert(name.to_string(), v);
+                } else {
+                    out.flags.push(name.to_string());
+                }
+            } else if out.subcommand.is_none() {
+                out.subcommand = Some(arg);
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        out
+    }
+
+    pub fn from_env() -> Self {
+        Self::parse(std::env::args().skip(1))
+    }
+
+    pub fn opt(&self, key: &str) -> Option<&str> {
+        self.options.get(key).map(|s| s.as_str())
+    }
+
+    pub fn opt_usize(&self, key: &str, default: usize) -> usize {
+        self.opt(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} expects a number")))
+            .unwrap_or(default)
+    }
+
+    pub fn opt_u64(&self, key: &str, default: u64) -> u64 {
+        self.opt(key)
+            .map(|s| s.parse().unwrap_or_else(|_| panic!("--{key} expects a number")))
+            .unwrap_or(default)
+    }
+
+    pub fn has_flag(&self, name: &str) -> bool {
+        self.flags.iter().any(|f| f == name)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(parts: &[&str]) -> Args {
+        Args::parse(parts.iter().map(|s| s.to_string()))
+    }
+
+    #[test]
+    fn subcommand_and_options() {
+        let a = parse(&["table", "t6", "--workload", "bootstrap", "--verbose"]);
+        assert_eq!(a.subcommand.as_deref(), Some("table"));
+        assert_eq!(a.positional, vec!["t6"]);
+        assert_eq!(a.opt("workload"), Some("bootstrap"));
+        assert!(a.has_flag("verbose"));
+    }
+
+    #[test]
+    fn key_equals_value() {
+        let a = parse(&["serve", "--port=8080", "--batch", "32"]);
+        assert_eq!(a.opt("port"), Some("8080"));
+        assert_eq!(a.opt_usize("batch", 1), 32);
+        assert_eq!(a.opt_usize("missing", 7), 7);
+    }
+
+    #[test]
+    fn trailing_flag_not_eating_subcommand() {
+        let a = parse(&["--dry-run"]);
+        assert!(a.has_flag("dry-run"));
+        assert!(a.subcommand.is_none());
+    }
+}

@@ -1,0 +1,14 @@
+//! Zero-dependency substitutes for the usual ecosystem crates.
+//!
+//! This build is fully offline (only the `xla` bridge's closure is
+//! vendored), so the crate carries small, focused replacements:
+//! [`threads`] for rayon-style data parallelism and a worker pool,
+//! [`rng`] for deterministic pseudo-randomness, [`json`] for reading and
+//! writing the artifact manifest and metric dumps, [`cli`] for argument
+//! parsing, and [`prop`] for randomized property testing.
+
+pub mod cli;
+pub mod json;
+pub mod prop;
+pub mod rng;
+pub mod threads;

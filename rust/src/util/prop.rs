@@ -1,0 +1,78 @@
+//! Randomized property testing (the proptest substitute).
+//!
+//! `check(name, cases, |rng| ...)` runs a closure over `cases` seeds; a
+//! failure reports the seed so the case can be replayed deterministically
+//! with `replay(name, seed, ...)`.
+
+use super::rng::Pcg64;
+
+/// Run `body` for `cases` deterministic seeds; panics with the failing
+/// seed embedded so the case is reproducible.
+pub fn check<F>(name: &str, cases: u64, body: F)
+where
+    F: Fn(&mut Pcg64) + std::panic::RefUnwindSafe,
+{
+    for case in 0..cases {
+        let seed = splitname(name) ^ case;
+        let result = std::panic::catch_unwind(|| {
+            let mut rng = Pcg64::new(seed);
+            body(&mut rng);
+        });
+        if let Err(payload) = result {
+            let msg = payload
+                .downcast_ref::<String>()
+                .cloned()
+                .or_else(|| payload.downcast_ref::<&str>().map(|s| s.to_string()))
+                .unwrap_or_else(|| "<non-string panic>".into());
+            panic!("property '{name}' failed at seed {seed:#018x} (case {case}): {msg}");
+        }
+    }
+}
+
+/// Re-run a single failing case by seed.
+pub fn replay<F>(name: &str, seed: u64, body: F)
+where
+    F: Fn(&mut Pcg64),
+{
+    let _ = name;
+    let mut rng = Pcg64::new(seed);
+    body(&mut rng);
+}
+
+fn splitname(name: &str) -> u64 {
+    // FNV-1a over the property name: stable seeds independent of ordering.
+    let mut h = 0xcbf29ce484222325u64;
+    for b in name.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x100000001b3);
+    }
+    h
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn passing_property_runs_all_cases() {
+        let counter = std::sync::atomic::AtomicU64::new(0);
+        check("always-true", 25, |rng| {
+            let _ = rng.next_u64();
+            counter.fetch_add(1, std::sync::atomic::Ordering::SeqCst);
+        });
+        assert_eq!(counter.load(std::sync::atomic::Ordering::SeqCst), 25);
+    }
+
+    #[test]
+    #[should_panic(expected = "failed at seed")]
+    fn failing_property_reports_seed() {
+        check("fails-sometimes", 50, |rng| {
+            assert!(rng.below(10) != 3, "hit the bad value");
+        });
+    }
+
+    #[test]
+    fn seeds_differ_across_names() {
+        assert_ne!(splitname("a"), splitname("b"));
+    }
+}

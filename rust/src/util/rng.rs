@@ -1,0 +1,146 @@
+//! Deterministic PRNGs (the `rand` substitute).
+//!
+//! `SplitMix64` seeds `Pcg64`, which drives everything stochastic in the
+//! crate: key/noise sampling in the CKKS substrate (reproduction-grade,
+//! not production-crypto — documented in DESIGN.md), workload generators,
+//! and property tests. Determinism per seed is what the tests rely on.
+
+/// PCG-XSH-RR 64/32 with 128-bit state — small, fast, statistically solid.
+#[derive(Debug, Clone)]
+pub struct Pcg64 {
+    state: u128,
+    inc: u128,
+}
+
+const PCG_MULT: u128 = 0x2360_ed05_1fc6_5da4_4385_df64_9fcc_f645;
+
+impl Pcg64 {
+    pub fn new(seed: u64) -> Self {
+        let mut sm = SplitMix64(seed);
+        let state = ((sm.next() as u128) << 64) | sm.next() as u128;
+        let inc = (((sm.next() as u128) << 64) | sm.next() as u128) | 1;
+        let mut rng = Self { state, inc };
+        rng.next_u64();
+        rng
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let rot = (self.state >> 122) as u32;
+        let xsl = ((self.state >> 64) as u64) ^ (self.state as u64);
+        xsl.rotate_right(rot)
+    }
+
+    /// Uniform in `[0, bound)` by rejection (no modulo bias).
+    #[inline]
+    pub fn below(&mut self, bound: u64) -> u64 {
+        assert!(bound > 0);
+        let zone = u64::MAX - (u64::MAX % bound);
+        loop {
+            let x = self.next_u64();
+            if x < zone {
+                return x % bound;
+            }
+        }
+    }
+
+    /// Uniform in `[lo, hi]` inclusive.
+    pub fn range(&mut self, lo: u64, hi: u64) -> u64 {
+        lo + self.below(hi - lo + 1)
+    }
+
+    pub fn f64(&mut self) -> f64 {
+        (self.next_u64() >> 11) as f64 / (1u64 << 53) as f64
+    }
+
+    /// Approximate zero-mean gaussian via 12-uniform sum (sigma = 1).
+    pub fn gaussian(&mut self) -> f64 {
+        let s: f64 = (0..12).map(|_| self.f64()).sum();
+        s - 6.0
+    }
+
+    /// Ternary secret coefficient in {-1, 0, 1} with hamming-ish density.
+    pub fn ternary(&mut self) -> i64 {
+        match self.below(4) {
+            0 => -1,
+            1 => 1,
+            _ => 0, // P(0) = 1/2, matching sparse-ternary conventions
+        }
+    }
+}
+
+/// SplitMix64 — seed expander.
+pub struct SplitMix64(pub u64);
+
+impl SplitMix64 {
+    #[inline]
+    pub fn next(&mut self) -> u64 {
+        self.0 = self.0.wrapping_add(0x9E37_79B9_7F4A_7C15);
+        let mut z = self.0;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+        z ^ (z >> 31)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic_per_seed() {
+        let mut a = Pcg64::new(42);
+        let mut b = Pcg64::new(42);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+        let mut c = Pcg64::new(43);
+        assert_ne!(a.next_u64(), c.next_u64());
+    }
+
+    #[test]
+    fn below_respects_bound() {
+        let mut r = Pcg64::new(7);
+        for bound in [1u64, 2, 3, 10, 1 << 30, u64::MAX / 2] {
+            for _ in 0..200 {
+                assert!(r.below(bound) < bound);
+            }
+        }
+    }
+
+    #[test]
+    fn uniformity_smoke() {
+        let mut r = Pcg64::new(1);
+        let mut counts = [0usize; 8];
+        for _ in 0..8000 {
+            counts[r.below(8) as usize] += 1;
+        }
+        for &c in &counts {
+            assert!((800..1200).contains(&c), "counts={counts:?}");
+        }
+    }
+
+    #[test]
+    fn gaussian_moments() {
+        let mut r = Pcg64::new(2);
+        let n = 20_000;
+        let samples: Vec<f64> = (0..n).map(|_| r.gaussian()).collect();
+        let mean = samples.iter().sum::<f64>() / n as f64;
+        let var = samples.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.05, "mean={mean}");
+        assert!((var - 1.0).abs() < 0.1, "var={var}");
+    }
+
+    #[test]
+    fn ternary_support() {
+        let mut r = Pcg64::new(3);
+        let mut seen = std::collections::HashSet::new();
+        for _ in 0..100 {
+            let t = r.ternary();
+            assert!((-1..=1).contains(&t));
+            seen.insert(t);
+        }
+        assert_eq!(seen.len(), 3);
+    }
+}

@@ -1,0 +1,127 @@
+//! Scoped data-parallel helpers (the rayon substitute).
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::Mutex;
+
+/// Number of worker threads to use (capped so tests stay snappy).
+/// Cached: `available_parallelism` is a syscall (sched_getaffinity) that
+/// costs hundreds of microseconds under some container runtimes — far
+/// more than the small-poly operations that consult it (SPerf finding #2).
+pub fn parallelism() -> usize {
+    static CACHED: AtomicUsize = AtomicUsize::new(0);
+    let cached = CACHED.load(Ordering::Relaxed);
+    if cached != 0 {
+        return cached;
+    }
+    let n = std::thread::available_parallelism()
+        .map(|n| n.get())
+        .unwrap_or(1)
+        .min(16);
+    CACHED.store(n, Ordering::Relaxed);
+    n
+}
+
+/// Serial fallback threshold: spawning a scope costs tens of
+/// microseconds, so parallelism only pays when each item carries real
+/// work. Callers with per-item work below ~100us should pass a hint via
+/// [`par_for_each_mut_hint`]; the plain entry point assumes items are
+/// substantial.
+pub const SPAWN_COST_HINT: usize = 1 << 11;
+
+/// Run `f(index, &mut item)` over all items, work-stealing across threads.
+pub fn par_for_each_mut<T: Send, F>(items: &mut [T], f: F)
+where
+    F: Fn(usize, &mut T) + Sync,
+{
+    par_for_each_mut_hint(items, usize::MAX, f)
+}
+
+/// Like [`par_for_each_mut`] but with a per-item work-size hint (e.g. the
+/// polynomial ring dimension): below [`SPAWN_COST_HINT`] the thread-scope
+/// setup dominates and the loop runs serially.
+pub fn par_for_each_mut_hint<T: Send, F>(items: &mut [T], work_hint: usize, f: F)
+where
+    F: Fn(usize, &mut T) + Sync,
+{
+    // Cheap checks first: the serial path must not pay any setup cost.
+    if items.len() <= 1 || work_hint < SPAWN_COST_HINT {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let threads = parallelism().min(items.len());
+    if threads <= 1 {
+        for (i, item) in items.iter_mut().enumerate() {
+            f(i, item);
+        }
+        return;
+    }
+    let next = AtomicUsize::new(0);
+    let slots: Vec<Mutex<Option<&mut T>>> =
+        items.iter_mut().map(|r| Mutex::new(Some(r))).collect();
+    std::thread::scope(|s| {
+        for _ in 0..threads {
+            s.spawn(|| loop {
+                let i = next.fetch_add(1, Ordering::Relaxed);
+                if i >= slots.len() {
+                    break;
+                }
+                let item = slots[i].lock().unwrap().take().unwrap();
+                f(i, item);
+            });
+        }
+    });
+}
+
+/// Parallel map preserving order.
+pub fn par_map<T: Sync, U: Send, F>(items: &[T], f: F) -> Vec<U>
+where
+    F: Fn(&T) -> U + Sync,
+{
+    let mut out: Vec<Option<U>> = (0..items.len()).map(|_| None).collect();
+    {
+        let fr = &f;
+        par_for_each_mut(&mut out, |i, slot| *slot = Some(fr(&items[i])));
+    }
+    out.into_iter().map(|x| x.unwrap()).collect()
+}
+
+/// Parallel map over an index range.
+pub fn par_map_range<U: Send, F>(range: std::ops::Range<usize>, f: F) -> Vec<U>
+where
+    F: Fn(usize) -> U + Sync,
+{
+    let idx: Vec<usize> = range.collect();
+    par_map(&idx, |&i| f(i))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn par_for_each_covers_all_items_once() {
+        let mut v: Vec<u64> = vec![0; 1000];
+        par_for_each_mut(&mut v, |i, x| *x = i as u64 + 1);
+        for (i, &x) in v.iter().enumerate() {
+            assert_eq!(x, i as u64 + 1);
+        }
+    }
+
+    #[test]
+    fn par_map_preserves_order() {
+        let items: Vec<usize> = (0..257).collect();
+        let out = par_map(&items, |&x| x * 2);
+        assert_eq!(out, items.iter().map(|&x| x * 2).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn empty_and_singleton_inputs() {
+        let mut empty: Vec<u32> = vec![];
+        par_for_each_mut(&mut empty, |_, _| panic!("should not run"));
+        let mut one = vec![7u32];
+        par_for_each_mut(&mut one, |_, x| *x += 1);
+        assert_eq!(one, vec![8]);
+    }
+}

@@ -1,0 +1,403 @@
+//! End-to-end workload builders at the paper's Table V parameters:
+//! Bootstrapping, Logistic-Regression training, ResNet20 inference and
+//! BERT-Tiny inference. Each builder compiles the application's CKKS op
+//! graph into the kernel-launch trace the corresponding FIDESlib program
+//! would execute, using `codegen::Compiler` for the primitive expansions.
+//!
+//! Op-count derivations are documented inline; they follow the reference
+//! implementations the paper cites (CHKKS bootstrapping, Han-style LR,
+//! Rovida's ResNet20, JKLS matmuls + Chebyshev nonlinearities for
+//! BERT-Tiny). DESIGN.md records these as modelled approximations.
+
+use crate::codegen::{Backend, Compiler, SimParams};
+use crate::isa::Trace;
+
+/// Table V rows.
+#[derive(Debug, Clone, Copy)]
+pub struct WorkloadParams {
+    pub log_n: u32,
+    pub l: usize,
+    pub dnum: usize,
+    pub l_eff: usize,
+    pub log_qp: u32,
+    pub lambda: u32,
+}
+
+pub const BOOTSTRAP: WorkloadParams =
+    WorkloadParams { log_n: 16, l: 26, dnum: 3, l_eff: 6, log_qp: 1743, lambda: 128 };
+pub const LR: WorkloadParams =
+    WorkloadParams { log_n: 16, l: 29, dnum: 4, l_eff: 6, log_qp: 1675, lambda: 128 };
+pub const RESNET20: WorkloadParams =
+    WorkloadParams { log_n: 16, l: 26, dnum: 4, l_eff: 8, log_qp: 1714, lambda: 128 };
+pub const BERT_TINY: WorkloadParams =
+    WorkloadParams { log_n: 16, l: 26, dnum: 5, l_eff: 7, log_qp: 1740, lambda: 128 };
+
+impl WorkloadParams {
+    pub fn alpha(&self) -> usize {
+        (self.l + 1).div_ceil(self.dnum)
+    }
+
+    pub fn sim_at(&self, level: usize) -> SimParams {
+        SimParams {
+            n: 1usize << self.log_n,
+            l: level + 1,
+            alpha: self.alpha(),
+            dnum: self.dnum,
+        }
+    }
+}
+
+/// A workload trace builder bound to one backend.
+pub struct Workload {
+    pub c: Compiler,
+    pub p: WorkloadParams,
+}
+
+impl Workload {
+    pub fn new(p: WorkloadParams, backend: Backend) -> Self {
+        Self { c: Compiler::new(backend), p }
+    }
+
+    // ------------------------------------------------------------------
+    // Bootstrapping (SVI-B, Fig. 8)
+    // ------------------------------------------------------------------
+
+    /// Depth the sine-evaluation pipeline consumes (Taylor seed + 2
+    /// squarings + r=6 doublings + final scale — the r used at paper scale).
+    pub const EVALMOD_LEVELS: usize = 9;
+
+    /// CHKKS bootstrap with the CoeffToSlot/SlotToCoeff DFT factored into
+    /// `fft_iter` sparse stages (the Fig. 8 sweep knob).
+    ///
+    /// Per stage of radix `r = slots^(1/fft_iter)`: a BSGS linear
+    /// transform with ~2*sqrt(r) rotations, r diagonal PtMults and r-1
+    /// additions, consuming one level. EvalMod runs twice (real/imag
+    /// split via one conjugation each).
+    pub fn bootstrap(&self, fft_iter: usize) -> Trace {
+        let slots = (1usize << self.p.log_n) / 2;
+        let radix = (slots as f64).powf(1.0 / fft_iter as f64).ceil() as usize;
+        let bsgs_rot = 2 * (radix as f64).sqrt().ceil() as usize;
+
+        let mut t = Trace::default();
+        let mut level = self.p.l;
+
+        // ModRaise: limb re-expansion, elementwise over the full chain.
+        t.extend(self.c.ptadd(&self.p.sim_at(level)));
+
+        // CoeffToSlot stages.
+        for _ in 0..fft_iter {
+            let sp = self.p.sim_at(level);
+            for _ in 0..bsgs_rot {
+                t.extend(self.c.rotate(&sp));
+            }
+            for _ in 0..radix {
+                t.extend(self.c.ptmult(&sp));
+            }
+            for _ in 0..radix.saturating_sub(1) {
+                t.extend(self.c.headd(&sp));
+            }
+            t.extend(self.c.scalar_ops(&sp, 6)); // BSGS scale fixes
+            level -= 1;
+        }
+
+        // EvalMod on both halves (conjugation = 1 rotation each).
+        for _ in 0..2 {
+            let sp = self.p.sim_at(level);
+            t.extend(self.c.rotate(&sp)); // conjugate
+            let mut l = level;
+            // u, u^2, u^4, sin/cos seeds, doublings, final scale:
+            for step in 0..Self::EVALMOD_LEVELS {
+                let spl = self.p.sim_at(l);
+                t.extend(self.c.hemult(&spl));
+                if step % 2 == 0 {
+                    t.extend(self.c.ptmult(&spl));
+                }
+                t.extend(self.c.headd(&spl));
+                // scale-management / constant-fold passes (Fig. 1 scalar)
+                t.extend(self.c.scalar_ops(&spl, 4));
+                l -= 1;
+            }
+        }
+        level -= Self::EVALMOD_LEVELS;
+
+        // SlotToCoeff stages.
+        for _ in 0..fft_iter {
+            let sp = self.p.sim_at(level);
+            for _ in 0..bsgs_rot {
+                t.extend(self.c.rotate(&sp));
+            }
+            for _ in 0..radix {
+                t.extend(self.c.ptmult(&sp));
+            }
+            level -= 1;
+        }
+        t
+    }
+
+    /// Levels a bootstrap at `fft_iter` consumes; the limbs that remain
+    /// determine the *effective* bootstrap time of Fig. 8.
+    pub fn bootstrap_levels_used(&self, fft_iter: usize) -> usize {
+        2 * fft_iter + Self::EVALMOD_LEVELS
+    }
+
+    pub fn limbs_remaining(&self, fft_iter: usize) -> usize {
+        self.p.l.saturating_sub(self.bootstrap_levels_used(fft_iter)) + 1
+    }
+
+    // ------------------------------------------------------------------
+    // Logistic Regression training (downsampled MNIST, 196 features)
+    // ------------------------------------------------------------------
+
+    /// One LR epoch over the packed batch: encrypted dot products via
+    /// rotate-and-sum (log2(256) rotations), sigmoid via a degree-3
+    /// polynomial, and the weight update. 30 iterations + one bootstrap
+    /// (Han et al.'s schedule at these parameters).
+    pub fn lr_training(&self) -> Trace {
+        let mut t = self.bootstrap(5);
+        let iters = 30;
+        for _ in 0..iters {
+            let lvl = 4 + (self.p.l_eff.saturating_sub(4)) / 2; // mid-budget
+            let sp = self.p.sim_at(lvl);
+            // forward: X^T w — rotate-and-sum over 196->256 features
+            for _ in 0..8 {
+                t.extend(self.c.rotate(&sp));
+                t.extend(self.c.headd(&sp));
+            }
+            t.extend(self.c.ptmult(&sp));
+            // sigmoid(x) ~ a0 + a1 x + a3 x^3: 2 HEMult + 2 PtMult
+            t.extend(self.c.hemult(&sp));
+            t.extend(self.c.hemult(&sp));
+            t.extend(self.c.ptmult(&sp));
+            t.extend(self.c.ptmult(&sp));
+            // gradient: X (y - p) — another rotate-and-sum + update
+            for _ in 0..8 {
+                t.extend(self.c.rotate(&sp));
+                t.extend(self.c.headd(&sp));
+            }
+            t.extend(self.c.hemult(&sp));
+            t.extend(self.c.headd(&sp));
+        }
+        t
+    }
+
+    // ------------------------------------------------------------------
+    // ResNet20 inference (Rovida-style packing)
+    // ------------------------------------------------------------------
+
+    /// 20 convolutional layers: each 3x3 conv is 9 rotations + 9 PtMults
+    /// per packed channel group (~4 groups), ReLU approximated by a
+    /// degree-2 square-based polynomial (2 HEMult), plus 9 bootstraps
+    /// across the network (every other layer pair at these parameters).
+    pub fn resnet20(&self) -> Trace {
+        let mut t = Trace::default();
+        for layer in 0..20 {
+            let lvl = 3 + (layer % 4); // cycling level budget between boots
+            let sp = self.p.sim_at(lvl);
+            let groups = 4;
+            for _ in 0..groups {
+                for _ in 0..9 {
+                    t.extend(self.c.rotate(&sp));
+                    t.extend(self.c.ptmult(&sp));
+                    t.extend(self.c.headd(&sp));
+                }
+            }
+            // ReLU approx
+            t.extend(self.c.hemult(&sp));
+            t.extend(self.c.hemult(&sp));
+            t.extend(self.c.ptadd(&sp));
+            // channel-mask + residual + repacking passes (Rovida's
+            // encoding does heavy slot masking between layers)
+            t.extend(self.c.scalar_ops(&sp, 24));
+            if layer % 2 == 1 {
+                t.extend(self.bootstrap(5));
+            }
+        }
+        t
+    }
+
+    // ------------------------------------------------------------------
+    // BERT-Tiny inference (2 encoder layers, d=128, 2 heads, JKLS matmul)
+    // ------------------------------------------------------------------
+
+    /// Per encoder layer: QKV + output projections (4 JKLS matmuls at
+    /// d=128: ~2*sqrt(d) rotations + d PtMults each), QK^T and PV per head,
+    /// softmax (exp via degree-7 Chebyshev + Newton-Raphson reciprocal),
+    /// LayerNorm (rotate-sum mean/var + 3 NR iterations), GELU (Chebyshev),
+    /// FFN (d->4d->d: 2 matmuls), plus bootstraps between blocks.
+    pub fn bert_tiny(&self) -> Trace {
+        let mut t = Trace::default();
+        let d = 128usize;
+        let heads = 2usize;
+        let bsgs = 2 * (d as f64).sqrt().ceil() as usize; // 24 rotations
+        let sp_at = |l: usize| self.p.sim_at(l);
+
+        // seq_len=128 tokens pack into 4 slot blocks at these parameters
+        for _layer in 0..2 {
+          for _block in 0..4 {
+            let sp = sp_at(5);
+            // 4 projection matmuls (JKLS)
+            for _ in 0..4 {
+                for _ in 0..bsgs {
+                    t.extend(self.c.rotate(&sp));
+                }
+                for _ in 0..d / 4 {
+                    t.extend(self.c.ptmult(&sp));
+                    t.extend(self.c.headd(&sp));
+                }
+            }
+            // attention scores + weighted values per head
+            for _ in 0..heads {
+                for _ in 0..bsgs {
+                    t.extend(self.c.rotate(&sp));
+                }
+                for _ in 0..d / 8 {
+                    t.extend(self.c.hemult(&sp));
+                    t.extend(self.c.headd(&sp));
+                }
+                // softmax: exp (Chebyshev deg 7 ~ 5 HEMult + 3 PtMult) +
+                // reciprocal (3 NR iterations ~ 6 HEMult)
+                for _ in 0..11 {
+                    t.extend(self.c.hemult(&sp));
+                }
+                for _ in 0..3 {
+                    t.extend(self.c.ptmult(&sp));
+                }
+            }
+            // LayerNorm x2: rotate-sum (log d) + 3 NR sqrt iterations
+            for _ in 0..2 {
+                for _ in 0..7 {
+                    t.extend(self.c.rotate(&sp));
+                    t.extend(self.c.headd(&sp));
+                }
+                for _ in 0..6 {
+                    t.extend(self.c.hemult(&sp));
+                }
+            }
+            // FFN: d -> 4d -> d (two matmuls, GELU between)
+            for _ in 0..2 {
+                for _ in 0..2 * bsgs {
+                    t.extend(self.c.rotate(&sp));
+                }
+                for _ in 0..d / 2 {
+                    t.extend(self.c.ptmult(&sp));
+                    t.extend(self.c.headd(&sp));
+                }
+            }
+            for _ in 0..8 {
+                t.extend(self.c.hemult(&sp)); // GELU Chebyshev
+            }
+            // mask/shift/scale chains around softmax-LN-GELU
+            t.extend(self.c.scalar_ops(&sp, 64));
+          }
+          // bootstraps to refresh the budget (4 per layer at L_eff=7)
+          for _ in 0..4 {
+              t.extend(self.bootstrap(5));
+          }
+        }
+        t
+    }
+}
+
+/// Convenience: build (baseline, fhec) traces for a named workload.
+pub fn workload_pair(name: &str) -> (Trace, Trace) {
+    let build = |backend: Backend| -> Trace {
+        match name {
+            "bootstrap" => Workload::new(BOOTSTRAP, backend).bootstrap(5),
+            "lr" => Workload::new(LR, backend).lr_training(),
+            "resnet20" => Workload::new(RESNET20, backend).resnet20(),
+            "bert-tiny" => Workload::new(BERT_TINY, backend).bert_tiny(),
+            _ => panic!("unknown workload {name}"),
+        }
+    };
+    (build(Backend::A100), build(Backend::A100Fhec))
+}
+
+pub const WORKLOAD_NAMES: [&str; 4] = ["bootstrap", "lr", "resnet20", "bert-tiny"];
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn table_v_parameters() {
+        assert_eq!(BOOTSTRAP.alpha(), 9);
+        assert_eq!(LR.alpha(), 8);
+        assert_eq!(RESNET20.alpha(), 7);
+        assert_eq!(BERT_TINY.alpha(), 6);
+        for p in [BOOTSTRAP, LR, RESNET20, BERT_TINY] {
+            assert_eq!(p.log_n, 16);
+            assert_eq!(p.lambda, 128);
+        }
+    }
+
+    #[test]
+    fn workload_instruction_ratios_match_table_vi_shape() {
+        // Table VI: Bootstrap 2.12x, LR 2.68x, ResNet 1.89x, BERT 1.71x
+        // (geomean 1.96x). Our model reproduces the headline shape — every
+        // workload compresses by ~2-2.7x — but is flatter across workloads
+        // than the paper (the per-workload spread comes from baseline
+        // kernel details our calibrated templates average out; see
+        // EXPERIMENTS.md). Assert the honest band + geomean proximity.
+        let mut geo = 1.0;
+        for (name, want) in [
+            ("bootstrap", 2.12),
+            ("lr", 2.68),
+            ("resnet20", 1.89),
+            ("bert-tiny", 1.71),
+        ] {
+            let (base, fhec) = workload_pair(name);
+            let r = base.dynamic_instructions() as f64 / fhec.dynamic_instructions() as f64;
+            geo *= r;
+            println!("{name}: ratio {r:.2} (paper {want})");
+            assert!(
+                (1.6..=3.0).contains(&r),
+                "{name}: ratio {r:.2} outside the paper's band"
+            );
+        }
+        let geo = geo.powf(0.25);
+        assert!(
+            (geo / 1.96 - 1.0).abs() < 0.35,
+            "workload geomean {geo:.2} too far from paper 1.96"
+        );
+    }
+
+    #[test]
+    fn workload_size_ordering_matches_table_vi() {
+        // Table VI ordering: Bootstrap < LR < ResNet < BERT.
+        let counts: Vec<u64> = WORKLOAD_NAMES
+            .iter()
+            .map(|n| workload_pair(n).0.dynamic_instructions())
+            .collect();
+        assert!(counts[0] < counts[1], "bootstrap < lr");
+        assert!(counts[1] < counts[2], "lr < resnet");
+        assert!(counts[2] < counts[3], "resnet < bert");
+    }
+
+    #[test]
+    fn fft_iter_sweep_has_interior_optimum() {
+        // Fig. 8: the *effective* bootstrap cost (per remaining limb)
+        // should be minimized strictly inside the sweep (paper: iter=5).
+        let w = Workload::new(BOOTSTRAP, Backend::A100Fhec);
+        let eff: Vec<f64> = (2..=6)
+            .map(|it| {
+                let instr = w.bootstrap(it).dynamic_instructions() as f64;
+                instr / w.limbs_remaining(it) as f64
+            })
+            .collect();
+        let best = eff
+            .iter()
+            .enumerate()
+            .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+            .unwrap()
+            .0;
+        println!("effective instr/limb over iters 2..6: {eff:?} best={}", best + 2);
+        assert!(best > 0 && best < 4, "optimum should be interior (got iter={})", best + 2);
+    }
+
+    #[test]
+    fn bootstrap_levels_accounting() {
+        let w = Workload::new(BOOTSTRAP, Backend::A100);
+        assert_eq!(w.bootstrap_levels_used(5), 19);
+        assert_eq!(w.limbs_remaining(5), 26 - 19 + 1);
+    }
+}

@@ -1,0 +1,144 @@
+//! Cross-module integration over the CKKS substrate: encoder + scheme +
+//! linear transforms + bootstrap working together on application-shaped
+//! pipelines.
+
+use fhecore::ckks::bootstrap::{bootstrap, BootstrapConfig};
+use fhecore::ckks::encoding::Complex;
+use fhecore::ckks::linear::{hom_linear, SlotMatrix};
+use fhecore::ckks::params::{CkksContext, CkksParams, WidthProfile};
+use fhecore::ckks::{Evaluator, SecretKey};
+use fhecore::util::rng::Pcg64;
+
+fn max_err(a: &[Complex], b: &[Complex]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| ((x.re - y.re).powi(2) + (x.im - y.im).powi(2)).sqrt())
+        .fold(0.0, f64::max)
+}
+
+/// Encrypted logistic-regression scoring: sigmoid(w.x + b) approximated by
+/// a polynomial — the quickstart workload end to end.
+#[test]
+fn encrypted_lr_scoring_pipeline() {
+    let ctx = CkksContext::new(CkksParams::toy());
+    let mut rng = Pcg64::new(0xAB);
+    let sk = SecretKey::generate(&ctx, &mut rng);
+    let ev = Evaluator::new(ctx);
+    let slots = ev.ctx.params.slots();
+
+    let x: Vec<f64> = (0..slots).map(|i| 0.02 * ((i % 40) as f64 - 20.0)).collect();
+    let w: Vec<f64> = (0..slots).map(|i| 0.015 * ((i % 7) as f64 - 3.0)).collect();
+    let zx: Vec<Complex> = x.iter().map(|&v| Complex::new(v, 0.0)).collect();
+    let zw: Vec<Complex> = w.iter().map(|&v| Complex::new(v, 0.0)).collect();
+
+    let ct = ev.encrypt(&ev.encode(&zx, 3), &sk, &mut rng);
+    // dot via elementwise product + rotate-and-sum
+    let prod = ev.mul_plain(&ct, &ev.encode(&zw, 3));
+    let mut acc = prod.clone();
+    let mut step = 1;
+    while step < slots {
+        let r = ev.rotate(&acc, step, &sk);
+        acc = ev.add(&acc, &r);
+        step <<= 1;
+    }
+    // sigmoid(t) ~ 0.5 + 0.197 t (degree-1 is fine at this range)
+    let scored = ev.add_const(&ev.mul_const(&acc, 0.197), 0.5);
+    let got = ev.decrypt_to_slots(&scored, &sk);
+
+    let dot: f64 = x.iter().zip(&w).map(|(a, b)| a * b).sum();
+    let want = 0.5 + 0.197 * dot;
+    assert!(
+        (got[0].re - want).abs() < 5e-3,
+        "scored {} want {want}",
+        got[0].re
+    );
+}
+
+/// Linear-transform composition: y = M2 (M1 x) with plaintext verification.
+#[test]
+fn chained_linear_transforms() {
+    let ctx = CkksContext::new(CkksParams::toy());
+    let mut rng = Pcg64::new(0xCD);
+    let sk = SecretKey::generate(&ctx, &mut rng);
+    let ev = Evaluator::new(ctx);
+    let s = ev.ctx.params.slots();
+
+    let mut m1 = SlotMatrix::zeros(s);
+    let mut m2 = SlotMatrix::zeros(s);
+    for r in 0..s {
+        m1.set(r, (r + 1) % s, Complex::new(0.5, 0.0));
+        m1.set(r, r, Complex::new(0.25, 0.0));
+        m2.set(r, (r + 2) % s, Complex::new(1.0, 0.0));
+    }
+    let z: Vec<Complex> = (0..s).map(|i| Complex::new(0.01 * i as f64, 0.0)).collect();
+    let ct = ev.encrypt(&ev.encode(&z, 3), &sk, &mut rng);
+    let y1 = hom_linear(&ev, &ct, &m1, &sk);
+    let y2 = hom_linear(&ev, &y1, &m2, &sk);
+    let got = ev.decrypt_to_slots(&y2, &sk);
+    let want = m2.matvec(&m1.matvec(&z));
+    assert!(max_err(&got, &want) < 5e-3, "err {}", max_err(&got, &want));
+}
+
+/// Compute-bootstrap-compute: consume the whole level budget, bootstrap,
+/// then keep computing on the refreshed ciphertext.
+#[test]
+fn compute_bootstrap_compute() {
+    let params = CkksParams {
+        n: 64,
+        depth: 19,
+        scale_bits: 40,
+        dnum: 4,
+        profile: WidthProfile::Wide,
+        sigma: 3.2,
+    };
+    let ctx = CkksContext::new(params);
+    let mut rng = Pcg64::new(0xEF);
+    let sk = SecretKey::generate(&ctx, &mut rng);
+    let ev = Evaluator::new(ctx);
+    let slots = ev.ctx.params.slots();
+
+    let z: Vec<Complex> = (0..slots)
+        .map(|i| Complex::new(0.3 * ((i % 3) as f64 - 1.0), 0.0))
+        .collect();
+    // Encrypt at level 1, square once -> level 0 (exhausted).
+    let ct = ev.encrypt(&ev.encode(&z, 1), &sk, &mut rng);
+    let sq = ev.mul(&ct, &ct, &sk);
+    assert_eq!(sq.level, 0);
+
+    let boosted = bootstrap(&ev, &sq, &BootstrapConfig::default(), &sk);
+    assert!(boosted.level >= 1, "need at least one level back");
+
+    // keep computing: multiply by 2 (consumes a level on the refreshed ct)
+    let doubled = ev.mul_const(&boosted, 2.0);
+    let got = ev.decrypt_to_slots(&doubled, &sk);
+    for (i, g) in got.iter().enumerate() {
+        let want = 2.0 * (0.3 * ((i % 3) as f64 - 1.0)).powi(2);
+        assert!((g.re - want).abs() < 0.1, "slot {i}: {} vs {want}", g.re);
+    }
+}
+
+/// The PE-width profile: the scheme also runs on 30-bit primes (the
+/// paper's 32-bit datapath), end to end.
+#[test]
+fn pe32_profile_scheme_roundtrip() {
+    let params = CkksParams {
+        n: 256,
+        depth: 2,
+        scale_bits: 25,
+        dnum: 1,
+        profile: WidthProfile::Pe32,
+        sigma: 3.2,
+    };
+    let ctx = CkksContext::new(params);
+    let mut rng = Pcg64::new(0x32);
+    let sk = SecretKey::generate(&ctx, &mut rng);
+    let ev = Evaluator::new(ctx);
+    let slots = ev.ctx.params.slots();
+    let z: Vec<Complex> =
+        (0..slots).map(|i| Complex::new(0.01 * (i % 9) as f64, 0.0)).collect();
+    let ct = ev.encrypt(&ev.encode(&z, 2), &sk, &mut rng);
+    let back = ev.decrypt_to_slots(&ct, &sk);
+    let err = max_err(&z, &back);
+    // 25-bit scale: coarser precision, but structurally sound.
+    assert!(err < 1e-2, "pe32 roundtrip err {err}");
+}

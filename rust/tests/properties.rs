@@ -1,0 +1,152 @@
+//! Randomized property tests (the proptest substitute — see util::prop):
+//! invariants over the coordinator-facing primitives, the modular
+//! arithmetic, the NTT, base conversion, and the trace/timing models.
+
+use fhecore::ckks::modarith::{Modulus, Modulus30};
+use fhecore::ckks::prime::{ntt_primes, pe_primes};
+use fhecore::ckks::NttTable;
+use fhecore::codegen::{Backend, Compiler, SimParams};
+use fhecore::gpusim::{simulate_trace, GpuConfig};
+use fhecore::systolic;
+use fhecore::util::prop::check;
+
+#[test]
+fn prop_barrett64_equals_mod() {
+    let qs = ntt_primes(64, 58, 3);
+    check("barrett64", 300, |rng| {
+        let q = qs[rng.below(3) as usize];
+        let m = Modulus::new(q);
+        let a = rng.below(q);
+        let b = rng.below(q);
+        assert_eq!(m.mul(a, b) as u128, (a as u128 * b as u128) % q as u128);
+    });
+}
+
+#[test]
+fn prop_barrett30_pe_pipeline() {
+    let qs = pe_primes(64, 4);
+    check("barrett30", 300, |rng| {
+        let q = qs[rng.below(4) as usize] as u32;
+        let m = Modulus30::new(q);
+        let x = rng.below(1 << 60);
+        assert_eq!(m.barrett(x) as u64, x % q as u64);
+    });
+}
+
+#[test]
+fn prop_ntt_roundtrip_and_convolution_theorem() {
+    check("ntt-roundtrip", 12, |rng| {
+        let n = 1usize << (4 + rng.below(5)); // 16..256
+        let q = ntt_primes(n, 50, 1)[0];
+        let t = NttTable::new(n, q);
+        let a: Vec<u64> = (0..n).map(|_| rng.below(q)).collect();
+        let mut x = a.clone();
+        t.forward(&mut x);
+        t.inverse(&mut x);
+        assert_eq!(x, a);
+
+        // convolution theorem: INTT(NTT(a) o NTT(b)) is bilinear in a
+        let m = Modulus::new(q);
+        let b: Vec<u64> = (0..n).map(|_| rng.below(q)).collect();
+        let mut fa = a.clone();
+        let mut fb = b.clone();
+        t.forward_br(&mut fa);
+        t.forward_br(&mut fb);
+        let mut fc = vec![0u64; n];
+        t.pointwise(&fa, &fb, &mut fc);
+        t.inverse_br(&mut fc);
+        // scaling a by 3 scales the product by 3
+        let a3: Vec<u64> = a.iter().map(|&x| m.mul(x, 3)).collect();
+        let mut fa3 = a3;
+        t.forward_br(&mut fa3);
+        let mut fc3 = vec![0u64; n];
+        t.pointwise(&fa3, &fb, &mut fc3);
+        t.inverse_br(&mut fc3);
+        for i in 0..n {
+            assert_eq!(fc3[i], m.mul(fc[i], 3));
+        }
+    });
+}
+
+#[test]
+fn prop_systolic_grid_linearity() {
+    // The PE grid is Z_q-linear in its left operand.
+    let qs = pe_primes(32, 2);
+    check("systolic-linear", 30, |rng| {
+        let q = qs[rng.below(2) as usize] as u32;
+        let m = Modulus30::new(q);
+        let a1: Vec<u32> = (0..256).map(|_| rng.below(q as u64) as u32).collect();
+        let a2: Vec<u32> = (0..256).map(|_| rng.below(q as u64) as u32).collect();
+        let b: Vec<u32> = (0..128).map(|_| rng.below(q as u64) as u32).collect();
+        let qv = vec![q; 8];
+        let sum: Vec<u32> = a1.iter().zip(&a2).map(|(&x, &y)| m.add(x, y)).collect();
+        let c1 = systolic::modmatmul(&a1, &b, 16, 16, 8, &qv);
+        let c2 = systolic::modmatmul(&a2, &b, 16, 16, 8, &qv);
+        let cs = systolic::modmatmul(&sum, &b, 16, 16, 8, &qv);
+        for i in 0..128 {
+            assert_eq!(cs[i], m.add(c1[i], c2[i]));
+        }
+    });
+}
+
+#[test]
+fn prop_trace_counts_scale_linearly_with_limbs() {
+    check("trace-linear", 20, |rng| {
+        let l = 2 + rng.below(20) as usize;
+        let p1 = SimParams { n: 1 << 12, l, alpha: 3, dnum: 2 };
+        let p2 = SimParams { n: 1 << 12, l: 2 * l, alpha: 3, dnum: 2 };
+        let c = Compiler::new(Backend::A100);
+        let i1 = c.headd(&p1).dynamic_instructions();
+        let i2 = c.headd(&p2).dynamic_instructions();
+        // headd is exactly linear in limb count
+        assert_eq!(i2, 2 * i1, "l={l}");
+    });
+}
+
+#[test]
+fn prop_fhec_never_slower() {
+    // Coordinator invariant: for every primitive at every parameter
+    // point, the FHEC backend has fewer instructions AND fewer simulated
+    // cycles than baseline (routing decisions rely on this monotonicity).
+    let cfg = GpuConfig::default();
+    check("fhec-monotone", 12, |rng| {
+        let l = 2 + rng.below(26) as usize;
+        let dnum = 1 + rng.below(4) as usize;
+        let p = SimParams {
+            n: 1 << (12 + rng.below(5)), // 2^12..2^16
+            l,
+            alpha: l.div_ceil(dnum).max(1),
+            dnum,
+        };
+        let b = Compiler::new(Backend::A100);
+        let f = Compiler::new(Backend::A100Fhec);
+        for (tb, tf) in [
+            (b.hemult(&p), f.hemult(&p)),
+            (b.rotate(&p), f.rotate(&p)),
+            (b.rescale(&p), f.rescale(&p)),
+        ] {
+            assert!(tb.dynamic_instructions() > tf.dynamic_instructions());
+            let sb = simulate_trace(&cfg, &tb).total_cycles();
+            let sf = simulate_trace(&cfg, &tf).total_cycles();
+            assert!(sb >= sf, "n={} l={l} dnum={dnum}: {sb} < {sf}", p.n);
+        }
+    });
+}
+
+#[test]
+fn prop_int8_segmentation_equivalence() {
+    // Algorithm 1's Split/GEMM/Mid/GEMM/Merge == native modmatmul, for
+    // random shapes and moduli.
+    let qs = pe_primes(32, 4);
+    check("int8-equiv", 20, |rng| {
+        let q = qs[rng.below(4) as usize] as u32;
+        let k = 1 + rng.below(16) as usize;
+        let a: Vec<u32> = (0..16 * k).map(|_| rng.below(q as u64) as u32).collect();
+        let b: Vec<u32> = (0..k * 8).map(|_| rng.below(q as u64) as u32).collect();
+        let qv = vec![q; 8];
+        assert_eq!(
+            systolic::modmatmul_int8_segmented(&a, &b, 16, k, 8, &qv),
+            systolic::modmatmul(&a, &b, 16, k, 8, &qv)
+        );
+    });
+}

@@ -1,0 +1,153 @@
+//! Three-layer integration: AOT artifacts (Pallas/JAX -> HLO text) loaded
+//! and executed via PJRT from rust, cross-checked against the native CKKS
+//! substrate and the systolic functional model.
+//!
+//! Requires `make artifacts` (skips gracefully when absent so plain
+//! `cargo test` works before the python step).
+
+use fhecore::ckks::prime::{pe_primes, root_of_unity};
+use fhecore::ckks::NttTable;
+use fhecore::runtime::tables::{barrett_mu, build_ntt_inputs};
+use fhecore::runtime::Engine;
+use fhecore::systolic;
+use fhecore::util::rng::Pcg64;
+
+fn engine() -> Option<Engine> {
+    let dir = std::path::Path::new(env!("CARGO_MANIFEST_DIR")).join("artifacts");
+    if !dir.join("manifest.json").exists() {
+        eprintln!("skipping runtime tests: run `make artifacts` first");
+        return None;
+    }
+    Some(Engine::load(dir).expect("artifact load"))
+}
+
+#[test]
+fn modmatmul_artifact_matches_systolic_model() {
+    let Some(engine) = engine() else { return };
+    let q = pe_primes(32, 1)[0] as u32;
+    let mut rng = Pcg64::new(0x77);
+    let a: Vec<u32> = (0..256).map(|_| rng.below(q as u64) as u32).collect();
+    let b: Vec<u32> = (0..256).map(|_| rng.below(q as u64) as u32).collect();
+    let qv = vec![q; 16];
+    let mu = vec![barrett_mu(q as u64); 16];
+    let got = engine
+        .run_u32("modmatmul_16", &[a.clone(), b.clone(), qv.clone(), mu])
+        .unwrap();
+    let want = systolic::modmatmul(&a, &b, 16, 16, 16, &qv);
+    assert_eq!(got, want, "Pallas kernel == systolic functional model");
+}
+
+#[test]
+fn modmatmul_mixed_moduli_columns() {
+    let Some(engine) = engine() else { return };
+    let primes = pe_primes(32, 16);
+    let qv: Vec<u32> = primes.iter().map(|&p| p as u32).collect();
+    let mu: Vec<u32> = primes.iter().map(|&p| barrett_mu(p)).collect();
+    let mut rng = Pcg64::new(0x88);
+    let a: Vec<u32> = (0..256).map(|_| rng.below(qv[0] as u64) as u32).collect();
+    let b: Vec<u32> = (0..256).map(|_| rng.below(qv[0] as u64) as u32).collect();
+    let got = engine.run_u32("modmatmul_16", &[a.clone(), b.clone(), qv.clone(), mu]).unwrap();
+    let want = systolic::modmatmul(&a, &b, 16, 16, 16, &qv);
+    assert_eq!(got, want, "per-column Barrett programming (SV-B)");
+}
+
+#[test]
+fn ntt_artifact_matches_rust_ntt_256() {
+    let Some(engine) = engine() else { return };
+    let q = pe_primes(256, 1)[0];
+    let t = build_ntt_inputs(256, 16, q);
+    let mut rng = Pcg64::new(0x99);
+    let a: Vec<u32> = (0..256).map(|_| rng.below(q) as u32).collect();
+    let got = engine
+        .run_u32(
+            "ntt_256",
+            &[a.clone(), t.psi_pows.clone(), t.w1.clone(), t.tw.clone(),
+              t.w2.clone(), vec![t.q], vec![t.mu]],
+        )
+        .unwrap();
+    let table = NttTable::with_psi(256, q, root_of_unity(512, q));
+    let mut want: Vec<u64> = a.iter().map(|&x| x as u64).collect();
+    table.forward(&mut want);
+    assert!(got.iter().zip(&want).all(|(&g, &w)| g as u64 == w));
+}
+
+#[test]
+fn ntt_intt_artifact_roundtrip_4096() {
+    let Some(engine) = engine() else { return };
+    let q = pe_primes(4096, 1)[0];
+    let t = build_ntt_inputs(4096, 64, q);
+    let mut rng = Pcg64::new(0xAA);
+    let a: Vec<u32> = (0..4096).map(|_| rng.below(q) as u32).collect();
+    let fwd = engine
+        .run_u32(
+            "ntt_4096",
+            &[a.clone(), t.psi_pows.clone(), t.w1.clone(), t.tw.clone(),
+              t.w2.clone(), vec![t.q], vec![t.mu]],
+        )
+        .unwrap();
+    let back = engine
+        .run_u32(
+            "intt_4096",
+            &[fwd, t.w1_inv.clone(), t.tw_inv.clone(), t.w2_inv.clone(),
+              t.psi_inv_n_inv_pows.clone(), vec![t.q], vec![t.mu]],
+        )
+        .unwrap();
+    assert_eq!(back, a, "NTT->INTT roundtrip through PJRT");
+}
+
+#[test]
+fn polymul_pipeline_artifact_matches_rust() {
+    let Some(engine) = engine() else { return };
+    let q = pe_primes(256, 1)[0];
+    let t = build_ntt_inputs(256, 16, q);
+    let mut rng = Pcg64::new(0xBB);
+    let a: Vec<u32> = (0..256).map(|_| rng.below(q) as u32).collect();
+    let b: Vec<u32> = (0..256).map(|_| rng.below(q) as u32).collect();
+    let got = engine
+        .run_u32(
+            "model",
+            &[a.clone(), b.clone(), t.psi_pows.clone(), t.w1.clone(),
+              t.tw.clone(), t.w2.clone(), t.w1_inv.clone(), t.tw_inv.clone(),
+              t.w2_inv.clone(), t.psi_inv_n_inv_pows.clone(), vec![t.q], vec![t.mu]],
+        )
+        .unwrap();
+    // negacyclic schoolbook via the rust NTT path
+    let table = NttTable::with_psi(256, q, root_of_unity(512, q));
+    let mut fa: Vec<u64> = a.iter().map(|&x| x as u64).collect();
+    let mut fb: Vec<u64> = b.iter().map(|&x| x as u64).collect();
+    table.forward_br(&mut fa);
+    table.forward_br(&mut fb);
+    let mut fc = vec![0u64; 256];
+    table.pointwise(&fa, &fb, &mut fc);
+    table.inverse_br(&mut fc);
+    assert!(got.iter().zip(&fc).all(|(&g, &w)| g as u64 == w),
+        "L2 polymul pipeline == rust NTT polymul");
+}
+
+#[test]
+fn baseconv_artifact_runs_and_is_consistent() {
+    let Some(engine) = engine() else { return };
+    let meta = engine.meta("baseconv_16x8_256").expect("artifact present");
+    assert_eq!(meta.kind, "baseconv");
+    // zero input converts to zero exactly
+    let rx = vec![0u32; 16 * 256];
+    let primes = pe_primes(64, 12);
+    let p4: Vec<u64> = primes[..4].to_vec();
+    let q8: Vec<u64> = primes[4..12].to_vec();
+    let filler = p4[0];
+    let mut p_col: Vec<u32> = p4.iter().map(|&p| p as u32).collect();
+    let mut mu_col: Vec<u32> = p4.iter().map(|&p| barrett_mu(p)).collect();
+    let mut inv_col: Vec<u32> = vec![1; 4];
+    for _ in 0..12 {
+        p_col.push(filler as u32);
+        mu_col.push(barrett_mu(filler));
+        inv_col.push(0);
+    }
+    let conv = vec![0u32; 16 * 8];
+    let qv: Vec<u32> = q8.iter().map(|&q| q as u32).collect();
+    let muv: Vec<u32> = q8.iter().map(|&q| barrett_mu(q)).collect();
+    let out = engine
+        .run_u32("baseconv_16x8_256", &[rx, inv_col, p_col, mu_col, conv, qv, muv])
+        .unwrap();
+    assert!(out.iter().all(|&x| x == 0));
+}

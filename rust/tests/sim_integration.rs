@@ -1,0 +1,140 @@
+//! Integration across isa + codegen + gpusim + systolic + rtl: the
+//! end-to-end evaluation pipeline that regenerates the paper's numbers.
+
+use fhecore::codegen::{Backend, Compiler, SimParams};
+use fhecore::gpusim::{simulate_trace, GpuConfig};
+use fhecore::isa::rewrite::rewrite_trace;
+use fhecore::isa::UnitClass;
+use fhecore::workloads::{workload_pair, Workload, BOOTSTRAP, WORKLOAD_NAMES};
+
+#[test]
+fn end_to_end_speedups_match_table_viii_shape() {
+    // Table VIII: bootstrap 1.92x, LR 2.39x, ResNet 2.22x, BERT 2.0x,
+    // geomean 2.12x. Shape requirement: every workload 1.5-2.8x, geomean
+    // within 30% of 2.12.
+    let cfg = GpuConfig::default();
+    let mut geo = 1.0f64;
+    for name in WORKLOAD_NAMES {
+        let (b, f) = workload_pair(name);
+        let sb = simulate_trace(&cfg, &b);
+        let sf = simulate_trace(&cfg, &f);
+        let sp = sb.total_cycles() as f64 / sf.total_cycles() as f64;
+        println!("{name}: {:.2} ms -> {:.2} ms ({sp:.2}x)",
+            sb.latency_ms(&cfg), sf.latency_ms(&cfg));
+        assert!((1.4..3.0).contains(&sp), "{name}: speedup {sp:.2} out of band");
+        geo *= sp;
+    }
+    let geo = geo.powf(1.0 / WORKLOAD_NAMES.len() as f64);
+    assert!(
+        (geo / 2.12 - 1.0).abs() < 0.30,
+        "geomean speedup {geo:.2} vs paper 2.12"
+    );
+}
+
+#[test]
+fn bootstrap_latency_reduction_about_half() {
+    // Headline: "a 50% reduction in bootstrapping latency".
+    let cfg = GpuConfig::default();
+    let (b, f) = workload_pair("bootstrap");
+    let sb = simulate_trace(&cfg, &b).total_cycles() as f64;
+    let sf = simulate_trace(&cfg, &f).total_cycles() as f64;
+    let reduction = 1.0 - sf / sb;
+    println!("bootstrap latency reduction: {:.1}%", reduction * 100.0);
+    assert!(
+        (0.35..0.65).contains(&reduction),
+        "reduction {reduction:.2} should be ~50%"
+    );
+}
+
+#[test]
+fn fig8_effective_bootstrap_minimized_at_interior_iter() {
+    let cfg = GpuConfig::default();
+    let w = Workload::new(BOOTSTRAP, Backend::A100Fhec);
+    let eff: Vec<f64> = (2..=6)
+        .map(|it| {
+            simulate_trace(&cfg, &w.bootstrap(it)).latency_ms(&cfg)
+                / w.limbs_remaining(it) as f64
+        })
+        .collect();
+    let best = eff
+        .iter()
+        .enumerate()
+        .min_by(|a, b| a.1.partial_cmp(b.1).unwrap())
+        .unwrap()
+        .0 + 2;
+    println!("eff ms/limb over iters 2..6: {eff:?}, best at {best}");
+    assert!((3..=6).contains(&best), "optimum at {best}, paper found 5");
+}
+
+#[test]
+fn rewrite_pass_agrees_with_native_fhec_codegen() {
+    // The trace-rewrite (SIV-F manual insertion) and the native FHEC
+    // codegen must agree on where FHEC lands and roughly on magnitude.
+    let p = SimParams::paper_primitive();
+    let base = Compiler::new(Backend::A100).hemult(&p);
+    let native = Compiler::new(Backend::A100Fhec).hemult(&p);
+    let rewritten = rewrite_trace(&base);
+    assert!(rewritten.instructions_on(UnitClass::TensorCore) == 0);
+    let rw_fhec = rewritten.instructions_on(UnitClass::FheCore);
+    let nat_fhec = native.instructions_on(UnitClass::FheCore);
+    assert!(rw_fhec > 0 && nat_fhec > 0);
+    let ratio = rw_fhec as f64 / nat_fhec as f64;
+    assert!(
+        (0.4..2.5).contains(&ratio),
+        "rewrite/native FHEC count ratio {ratio}"
+    );
+}
+
+#[test]
+fn occupancy_and_ipc_shape_fig7() {
+    // Fig. 7 shape: with FHECore, IPC does not collapse (>= ~0.8x of
+    // baseline) and occupancy stays comparable.
+    let cfg = GpuConfig::default();
+    for name in WORKLOAD_NAMES {
+        let (b, f) = workload_pair(name);
+        let sb = simulate_trace(&cfg, &b);
+        let sf = simulate_trace(&cfg, &f);
+        let ipc_ratio = sf.mean_ipc() / sb.mean_ipc();
+        println!(
+            "{name}: occ {:.2}->{:.2}, ipc {:.2}->{:.2}",
+            sb.mean_occupancy(),
+            sf.mean_occupancy(),
+            sb.mean_ipc(),
+            sf.mean_ipc()
+        );
+        assert!(ipc_ratio > 0.6, "{name}: IPC ratio {ipc_ratio}");
+        assert!(sf.mean_occupancy() > 0.3, "{name}: occupancy collapsed");
+    }
+}
+
+#[test]
+fn fig1_ntt_dominates_baseline() {
+    // Fig. 1: NTT+INTT ~66% of baseline runtime; BaseConv ~12.6%.
+    use fhecore::isa::KernelClass;
+    let cfg = GpuConfig::default();
+    let mut ntt = 0u64;
+    let mut total = 0u64;
+    for name in WORKLOAD_NAMES {
+        let (b, _) = workload_pair(name);
+        let s = simulate_trace(&cfg, &b);
+        let by = s.cycles_by_class();
+        ntt += by.get(&KernelClass::Ntt).copied().unwrap_or(0)
+            + by.get(&KernelClass::Intt).copied().unwrap_or(0);
+        total += s.total_cycles();
+    }
+    let share = ntt as f64 / total as f64;
+    println!("NTT+INTT share of baseline cycles: {:.1}%", share * 100.0);
+    assert!((0.45..0.85).contains(&share), "NTT share {share:.2} vs paper 0.66");
+}
+
+#[test]
+fn enhanced_tc_alternative_is_strictly_worse() {
+    // SIV-G: same capability at 64-cycle latency (and bigger area) must
+    // not beat the dedicated 44-cycle unit.
+    let cfg44 = GpuConfig::default();
+    let cfg64 = GpuConfig { fhec_latency: 64, ..GpuConfig::default() };
+    let (_, f) = workload_pair("bootstrap");
+    let t44 = simulate_trace(&cfg44, &f).total_cycles();
+    let t64 = simulate_trace(&cfg64, &f).total_cycles();
+    assert!(t44 <= t64, "44-cycle unit must win: {t44} vs {t64}");
+}
