@@ -1,13 +1,31 @@
 //! Base conversion benchmarks (Eq. 3/5): the mixed-moduli kernel.
+//!
+//! Each case measures both the MLT-backed hot path (`convert`, with a
+//! scratch-reusing `convert_into` variant) and the pre-refactor per-term
+//! path (`convert_reference`), so `BENCH_baseconv.json` records the
+//! before/after pair for regression tracking. The `n4096_a9_l27` case is
+//! the headline (bootstrapping digit geometry at Table V's alpha = 9,
+//! L = 27); `n8192_a9_l27` is the bootstrapping-scale case.
 use fhecore::bench_harness::Bench;
 use fhecore::ckks::poly::{Format, RnsPoly, Tower};
 use fhecore::ckks::prime::ntt_primes;
-use fhecore::ckks::BaseConvTable;
+use fhecore::ckks::{BaseConvScratch, BaseConvTable};
 use std::hint::black_box;
 
 fn main() {
     let mut bench = Bench::new("baseconv");
-    for (n, alpha, lout) in [(1usize << 10, 3usize, 6usize), (1 << 12, 4, 8), (1 << 12, 9, 27)] {
+    let fast = std::env::var("FHECORE_BENCH_FAST").is_ok();
+    let cases: &[(usize, usize, usize)] = if fast {
+        &[(1 << 10, 3, 6), (1 << 12, 9, 27)]
+    } else {
+        &[
+            (1 << 10, 3, 6),
+            (1 << 12, 4, 8),
+            (1 << 12, 9, 27),
+            (1 << 13, 9, 27), // bootstrapping scale
+        ]
+    };
+    for &(n, alpha, lout) in cases {
         let primes = ntt_primes(n, 45, alpha + lout);
         let tower = Tower::new(n, &primes);
         let src: Vec<usize> = (0..alpha).collect();
@@ -20,9 +38,25 @@ fn main() {
                 *x = (j as u64 * 2654435761) % q;
             }
         }
-        bench.run(&format!("convert/n{n}_a{alpha}_l{lout}"), || {
+        let id = format!("convert/n{n}_a{alpha}_l{lout}");
+        bench.run(&id, || {
             black_box(table.convert(black_box(&poly), &tower));
         });
-        bench.throughput(&format!("convert/n{n}_a{alpha}_l{lout}"), (n * lout) as f64);
+        bench.throughput(&id, (n * lout) as f64);
+
+        // Allocation-free hot-loop variant (scratch + output reused).
+        let mut scratch = BaseConvScratch::default();
+        let mut out = RnsPoly::zero(&tower, &dst, Format::Coeff);
+        bench.run(&format!("convert_into/n{n}_a{alpha}_l{lout}"), || {
+            table.convert_into(black_box(&poly), &tower, &mut scratch, &mut out);
+            black_box(&out);
+        });
+
+        // Pre-refactor path (per-term reduce + Shoup mul + modular add):
+        // the "before" number of the MLT speedup claim.
+        bench.run(&format!("convert_ref/n{n}_a{alpha}_l{lout}"), || {
+            black_box(table.convert_reference(black_box(&poly), &tower));
+        });
     }
+    bench.write_json().expect("bench json dump");
 }

@@ -45,4 +45,5 @@ fn main() {
             black_box((sb.total_cycles(), sf.total_cycles()));
         });
     }
+    bench.write_json().expect("bench json dump");
 }

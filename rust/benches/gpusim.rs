@@ -28,4 +28,5 @@ fn main() {
             black_box(fhecore::tables::by_name(t).unwrap());
         });
     }
+    bench.write_json().expect("bench json dump");
 }

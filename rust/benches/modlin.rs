@@ -1,0 +1,70 @@
+//! ModLinKernel micro-benchmarks: the unified modulo-linear transform
+//! engine in isolation — lazy u128 accumulation + tiling + (row, tile)
+//! parallelism vs a straight per-term reduce/multiply/add loop.
+use fhecore::bench_harness::Bench;
+use fhecore::ckks::prime::ntt_primes;
+use fhecore::ckks::{ModLinKernel, Modulus};
+use std::hint::black_box;
+
+/// The pre-refactor formulation: reduce + Shoup multiply + modular add
+/// per term, limb-axis parallelism only (serial here: single transform).
+fn per_term_reference(
+    moduli: &[Modulus],
+    rows: &[Vec<u64>],
+    x: &[Vec<u64>],
+    out: &mut [Vec<u64>],
+) {
+    for (i, m) in moduli.iter().enumerate() {
+        let row = &rows[i];
+        let o = &mut out[i];
+        for v in o.iter_mut() {
+            *v = 0;
+        }
+        for (j, xr) in x.iter().enumerate() {
+            let c = m.reduce_u64(row[j]);
+            let cs = m.shoup(c);
+            for (ov, &xv) in o.iter_mut().zip(xr) {
+                *ov = m.add(*ov, m.mul_shoup(m.reduce_u64(xv), c, cs));
+            }
+        }
+    }
+}
+
+fn main() {
+    let mut bench = Bench::new("modlin");
+    for (n, k, rows_out, bits, tight_bound) in [
+        (1usize << 12, 9usize, 27usize, 45u32, true), // BConv geometry
+        (1 << 13, 9, 27, 45, true),                   // bootstrapping scale
+        // Wide primes with the loosest declared input bound: flush
+        // capacity drops below k, so mid-loop exact reductions run.
+        (1 << 12, 24, 16, 58, false),
+    ] {
+        let src = ntt_primes(16, bits, k);
+        let dstp = ntt_primes(16, bits.min(57) + 2, rows_out);
+        let moduli: Vec<Modulus> = dstp.iter().map(|&q| Modulus::new(q)).collect();
+        let x_bound = if tight_bound {
+            *src.iter().max().unwrap()
+        } else {
+            u64::MAX
+        };
+        let rows: Vec<Vec<u64>> = (0..rows_out)
+            .map(|i| (0..k).map(|j| (i as u64 * 77 + j as u64 * 131) % x_bound).collect())
+            .collect();
+        let x: Vec<Vec<u64>> = (0..k)
+            .map(|j| (0..n).map(|t| (t as u64 * 2654435761) % src[j]).collect())
+            .collect();
+        let kernel = ModLinKernel::from_rows(&moduli, &rows, x_bound);
+        let mut out = vec![vec![0u64; n]; rows_out];
+        let id = format!("mlt/n{n}_k{k}_r{rows_out}_b{bits}");
+        bench.run(&id, || {
+            kernel.apply_vecs(black_box(&x), &mut out);
+            black_box(&out);
+        });
+        bench.throughput(&id, (n * rows_out) as f64);
+        bench.run(&format!("per_term/n{n}_k{k}_r{rows_out}_b{bits}"), || {
+            per_term_reference(&moduli, &rows, black_box(&x), &mut out);
+            black_box(&out);
+        });
+    }
+    bench.write_json().expect("bench json dump");
+}

@@ -37,4 +37,5 @@ fn main() {
     bench.run("headd/n256_l3", || {
         black_box(ev.add(black_box(&ct), &ct));
     });
+    bench.write_json().expect("bench json dump");
 }

@@ -29,4 +29,5 @@ fn main() {
         systolic::stream_cycles(Dataflow::OutputStationary, 256),
         systolic::stream_cycles(Dataflow::OperandStationary, 256),
     );
+    bench.write_json().expect("bench json dump");
 }

@@ -1,9 +1,13 @@
 //! Criterion-style micro-benchmark harness (criterion is unavailable in
 //! this offline build). Benches are `harness = false` binaries that call
 //! [`Bench::run`]; output mimics criterion's `time: [lo mid hi]` lines so
-//! downstream tooling/eyeballs work the same way.
+//! downstream tooling/eyeballs work the same way. [`Bench::write_json`]
+//! additionally dumps machine-readable `BENCH_<name>.json` files (name,
+//! median, p05/p95 per case) for regression tracking and PR evidence.
 
 use std::time::{Duration, Instant};
+
+use crate::util::json::Json;
 
 pub struct Bench {
     name: String,
@@ -96,6 +100,47 @@ impl Bench {
     pub fn results(&self) -> &[(String, Stats)] {
         &self.results
     }
+
+    /// Serialize all recorded cases as a JSON object.
+    pub fn to_json(&self) -> Json {
+        use std::collections::BTreeMap;
+        let case = |s: &Stats| {
+            let mut m = BTreeMap::new();
+            m.insert("iters".to_string(), Json::Num(s.iters as f64));
+            m.insert("mean_ns".to_string(), Json::Num(s.mean_ns));
+            m.insert("median_ns".to_string(), Json::Num(s.median_ns));
+            m.insert("p05_ns".to_string(), Json::Num(s.p05_ns));
+            m.insert("p95_ns".to_string(), Json::Num(s.p95_ns));
+            Json::Obj(m)
+        };
+        let results = self
+            .results
+            .iter()
+            .map(|(id, s)| {
+                let mut m = match case(s) {
+                    Json::Obj(m) => m,
+                    _ => unreachable!(),
+                };
+                m.insert("id".to_string(), Json::Str(id.clone()));
+                Json::Obj(m)
+            })
+            .collect();
+        let mut top = std::collections::BTreeMap::new();
+        top.insert("name".to_string(), Json::Str(self.name.clone()));
+        top.insert("results".to_string(), Json::Arr(results));
+        Json::Obj(top)
+    }
+
+    /// Dump `BENCH_<name>.json` next to the criterion-style text output.
+    /// The directory defaults to the working directory and can be
+    /// overridden with `FHECORE_BENCH_DIR`.
+    pub fn write_json(&self) -> std::io::Result<std::path::PathBuf> {
+        let dir = std::env::var("FHECORE_BENCH_DIR").unwrap_or_else(|_| ".".to_string());
+        let path = std::path::Path::new(&dir).join(format!("BENCH_{}.json", self.name));
+        std::fs::write(&path, self.to_json().to_string_pretty())?;
+        println!("wrote {}", path.display());
+        Ok(path)
+    }
 }
 
 pub fn fmt_ns(ns: f64) -> String {
@@ -114,10 +159,20 @@ pub fn fmt_ns(ns: f64) -> String {
 mod tests {
     use super::*;
 
+    /// Short-window harness for tests — avoids mutating process-global
+    /// env (`set_var` is UB-prone under the multithreaded test runner).
+    fn fast_bench(name: &str) -> Bench {
+        Bench {
+            name: name.to_string(),
+            measure_for: Duration::from_millis(30),
+            warmup_for: Duration::from_millis(10),
+            results: Vec::new(),
+        }
+    }
+
     #[test]
     fn measures_something_positive() {
-        std::env::set_var("FHECORE_BENCH_FAST", "1");
-        let mut b = Bench::new("harness-self-test");
+        let mut b = fast_bench("harness-self-test");
         let mut acc = 0u64;
         let stats = b.run("spin", || {
             for i in 0..100u64 {
@@ -127,6 +182,23 @@ mod tests {
         assert!(stats.mean_ns > 0.0);
         assert!(stats.iters > 0);
         assert!(acc > 0);
+    }
+
+    #[test]
+    fn json_dump_roundtrips() {
+        let mut b = fast_bench("json-self-test");
+        b.run("noop", || {
+            std::hint::black_box(1 + 1);
+        });
+        let j = b.to_json();
+        assert_eq!(j.get("name").unwrap().as_str(), Some("json-self-test"));
+        let results = j.get("results").unwrap().as_arr().unwrap();
+        assert_eq!(results.len(), 1);
+        assert_eq!(results[0].get("id").unwrap().as_str(), Some("noop"));
+        assert!(results[0].get("median_ns").unwrap().as_f64().unwrap() >= 0.0);
+        // reparse what we print
+        let printed = j.to_string_pretty();
+        assert_eq!(Json::parse(&printed).unwrap(), j);
     }
 
     #[test]

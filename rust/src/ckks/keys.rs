@@ -19,7 +19,7 @@ use std::sync::Mutex;
 
 use super::params::CkksContext;
 use super::poly::{Format, RnsPoly};
-use super::rns::BaseConvTable;
+use super::rns::{BaseConvScratch, BaseConvTable};
 use crate::util::rng::Pcg64;
 
 /// Ternary secret key, stored in Eval format over the full Q u P chain.
@@ -260,6 +260,9 @@ impl KsKey {
 
         let mut acc0 = RnsPoly::zero(&ctx.tower, &ext, Format::Eval);
         let mut acc1 = RnsPoly::zero(&ctx.tower, &ext, Format::Eval);
+        // One staging buffer serves every ModUp digit and both ModDowns —
+        // the per-call allocation the MLT engine's convert_into removes.
+        let mut conv_scratch = BaseConvScratch::default();
         for (j, positions) in self.digit_positions.iter().enumerate() {
             let digit_chain: Vec<usize> = positions.iter().map(|&p| active[p]).collect();
             // [d * Q^_j^{-1}]_{Q~_j}
@@ -271,7 +274,7 @@ impl KsKey {
             };
             digit_poly.scale_assign(&self.qhat_inv[j], &ctx.tower);
             // ModUp to the full extended chain.
-            let lifted = self.modup[j].convert(&digit_poly, &ctx.tower);
+            let lifted = self.modup[j].convert_with(&digit_poly, &ctx.tower, &mut conv_scratch);
             let mut full = RnsPoly::zero(&ctx.tower, &ext, Format::Coeff);
             for (i, &ci) in ext.iter().enumerate() {
                 let limb = if let Some(k) = digit_chain.iter().position(|&c| c == ci) {
@@ -293,7 +296,7 @@ impl KsKey {
         }
 
         // ModDown by P: (acc - BaseConv_P->Q([acc]_P)) * P^{-1}.
-        let down = |mut acc: RnsPoly| -> RnsPoly {
+        let mut down = |mut acc: RnsPoly| -> RnsPoly {
             acc.to_coeff(&ctx.tower);
             let nq = active.len();
             let mut q_part = RnsPoly {
@@ -308,7 +311,9 @@ impl KsKey {
                 limbs: acc.limbs[nq..].to_vec(),
                 chain: acc.chain[nq..].to_vec(),
             };
-            let p_in_q = self.p_to_active.convert(&p_part, &ctx.tower);
+            let p_in_q = self
+                .p_to_active
+                .convert_with(&p_part, &ctx.tower, &mut conv_scratch);
             q_part.sub_assign(&p_in_q, &ctx.tower);
             q_part.scale_assign(&self.p_inv, &ctx.tower);
             q_part.to_eval(&ctx.tower);

@@ -6,6 +6,7 @@ pub mod encoding;
 pub mod keys;
 pub mod linear;
 pub mod modarith;
+pub mod modlin;
 pub mod ntt;
 pub mod ops;
 pub mod params;
@@ -16,8 +17,9 @@ pub mod rns;
 pub use encoding::{decode, encode, Complex, Encoder};
 pub use keys::{KeyBank, KeyKind, KsKey, SecretKey};
 pub use modarith::{Modulus, Modulus30};
+pub use modlin::{MltDims, ModLinKernel};
 pub use ntt::NttTable;
 pub use ops::{galois_element, Ciphertext, Evaluator};
 pub use params::{CkksContext, CkksParams, WidthProfile};
 pub use poly::{Format, RnsPoly, Tower};
-pub use rns::{BaseConvTable, RnsTools};
+pub use rns::{BaseConvScratch, BaseConvTable, RnsTools};

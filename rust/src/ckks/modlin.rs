@@ -1,0 +1,484 @@
+//! The unified **modulo-linear transform** (MLT) engine.
+//!
+//! The paper's central observation (SII-A, Eq. 2-5) is that the two
+//! dominant FHE kernels — the 4-step NTT and the RNS base conversion —
+//! are the *same* computation: a matrix-vector product where every output
+//! row is reduced by a (possibly row-specific) prime modulus,
+//!
+//! ```text
+//!     out[i][t] = sum_j  M[i][j] * x[j][t]   (mod q_i)
+//! ```
+//!
+//! with `t` ranging over the `n` polynomial coefficients. FHECore
+//! executes exactly this shape on one 16x8 PE grid by programming a
+//! `(q, mu)` Barrett pair per systolic column (SV-B); GME and Cheddar
+//! get their GPU performance from the same cache-blocked modular-matmul
+//! formulation. [`ModLinKernel`] is the software mirror: one engine
+//! behind [`super::rns::BaseConvTable::convert`], the cached
+//! [`super::ntt::NttTable::forward_4step`] path, the systolic functional
+//! model ([`modmatmul_pe`]) and the `codegen` tile accounting
+//! ([`MltDims`]), so the simulated FHECore unit and the measured software
+//! hot path share **one definition of the transform**.
+//!
+//! Performance structure (the measured wins, see `benches/modlin.rs` and
+//! `benches/baseconv.rs`):
+//!
+//! * **Build-time Shoup pairs** — matrix entries are reduced modulo their
+//!   row's prime once, with Harvey/Shoup companion words precomputed, at
+//!   kernel construction instead of per call.
+//! * **Lazy accumulation** — the dot product over `k` terms accumulates
+//!   raw 64x64-bit products in a `u128` and pays a *single* Barrett
+//!   reduction per output coefficient (with exact overflow-capacity
+//!   flushing for wide primes), instead of a reduce + Shoup multiply +
+//!   modular add per term.
+//! * **Cache-blocked tiling** — the coefficient axis is walked in
+//!   [`COL_TILE`]-sized tiles so the `k` input rows stay resident while
+//!   every output row consumes them.
+//! * **Two-level parallelism** — work items are `(output row, tile)`
+//!   pairs, so a BConv with few output limbs still fans out across the
+//!   whole thread pool via the coefficient axis.
+
+use super::modarith::{Modulus, Modulus30};
+use crate::util::threads::par_for_each_mut_hint;
+
+/// Coefficient-axis tile width (u64 out tile 8 KiB + u128 accumulator
+/// tile 16 KiB: comfortably L1/L2-resident per core).
+pub const COL_TILE: usize = 1024;
+
+/// FHECore's native tile shape: 16x8 PE grid consuming 16-deep operand
+/// streams per pass (`FHEC.16816`, SIV-D).
+pub const TILE_M: usize = 16;
+pub const TILE_N: usize = 8;
+pub const TILE_K: usize = 16;
+
+/// Logical dimensions of one modulo-linear transform
+/// `out[M x N] = M[M x K] . x[K x N] (mod q per output row/column)`.
+///
+/// Shared by the software kernel and the `codegen` instruction-stream
+/// generators so tile-op accounting has a single source of truth.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MltDims {
+    pub m: usize,
+    pub k: usize,
+    pub n: usize,
+}
+
+impl MltDims {
+    /// Tile-op count for arbitrary tile geometry.
+    pub fn tile_ops(&self, tm: usize, tk: usize, tn: usize) -> u64 {
+        (self.m.div_ceil(tm) as u64)
+            * (self.k.div_ceil(tk) as u64)
+            * (self.n.div_ceil(tn) as u64)
+    }
+
+    /// Tile-ops on the FHECore 16x8x16 grid (`FHEC.16816` issues).
+    pub fn fhec_tile_ops(&self) -> u64 {
+        self.tile_ops(TILE_M, TILE_K, TILE_N)
+    }
+}
+
+/// A compiled modulo-linear transform: reduced matrix entries, Shoup
+/// companions and lazy-accumulation flush capacity, all precomputed once.
+#[derive(Debug, Clone)]
+pub struct ModLinKernel {
+    /// Reduction length (input rows).
+    k: usize,
+    /// One modulus per output row (the per-column Barrett programming of
+    /// SV-B, transposed into software row-major order).
+    moduli: Vec<Modulus>,
+    /// Row-major reduced entries: `mat[i*k + j] = M[i][j] mod q_i`.
+    mat: Vec<u64>,
+    /// Harvey/Shoup companion words for `mat` (same layout). Only the
+    /// short-reduction path (`k <= 2`) consumes them — per-term Shoup
+    /// multiplies beat setting up the lazy accumulator there — so for
+    /// `k > 2` the vector is left empty rather than doubling the matrix
+    /// footprint (the lazy path reduces once per output, no companions).
+    mat_shoup: Vec<u64>,
+    /// How many raw `u128` products can be accumulated before an exact
+    /// flush reduction is required (conservative, derived from the input
+    /// bound and the widest row modulus).
+    flush: usize,
+}
+
+impl ModLinKernel {
+    /// Build a kernel from per-row moduli and an entry generator.
+    /// `x_bound` is an exclusive upper bound on the *input* values the
+    /// kernel will see (e.g. the largest source prime of a base
+    /// conversion); it sizes the lazy-accumulation flush capacity.
+    pub fn new(
+        moduli: &[Modulus],
+        k: usize,
+        x_bound: u64,
+        entry: impl Fn(usize, usize) -> u64,
+    ) -> Self {
+        assert!(!moduli.is_empty() && k > 0, "degenerate transform");
+        assert!(x_bound > 1, "input bound must be positive");
+        let shoup_used = k <= 2;
+        let mut mat = Vec::with_capacity(moduli.len() * k);
+        let mut mat_shoup = Vec::with_capacity(if shoup_used { moduli.len() * k } else { 0 });
+        for (i, m) in moduli.iter().enumerate() {
+            for j in 0..k {
+                let e = m.reduce_u64(entry(i, j));
+                mat.push(e);
+                if shoup_used {
+                    mat_shoup.push(m.shoup(e));
+                }
+            }
+        }
+        // Largest single product the accumulator can absorb: inputs are
+        // < x_bound, entries < q_i. Keep a 1-bit safety margin so the
+        // flush bound is robust independent of rounding on the division.
+        let max_q = moduli.iter().map(|m| m.value()).max().unwrap();
+        let prod_max = (x_bound as u128 - 1) * (max_q as u128 - 1);
+        let flush = ((u128::MAX >> 1) / prod_max.max(1)).min(usize::MAX as u128) as usize;
+        Self {
+            k,
+            moduli: moduli.to_vec(),
+            mat,
+            mat_shoup,
+            flush: flush.max(1),
+        }
+    }
+
+    /// Build from explicit row vectors (`rows[i].len() == k`).
+    pub fn from_rows(moduli: &[Modulus], rows: &[Vec<u64>], x_bound: u64) -> Self {
+        assert_eq!(moduli.len(), rows.len());
+        let k = rows[0].len();
+        assert!(rows.iter().all(|r| r.len() == k), "ragged matrix");
+        Self::new(moduli, k, x_bound, |i, j| rows[i][j])
+    }
+
+    pub fn out_rows(&self) -> usize {
+        self.moduli.len()
+    }
+
+    pub fn k(&self) -> usize {
+        self.k
+    }
+
+    pub fn modulus(&self, row: usize) -> Modulus {
+        self.moduli[row]
+    }
+
+    /// Reduced matrix entry (row-major).
+    pub fn entry(&self, i: usize, j: usize) -> u64 {
+        self.mat[i * self.k + j]
+    }
+
+    /// Shoup companion of [`Self::entry`]. Only materialized for the
+    /// short-reduction kernels (`k <= 2`) that consume it.
+    pub fn entry_shoup(&self, i: usize, j: usize) -> u64 {
+        assert!(self.k <= 2, "Shoup companions are only kept for k <= 2");
+        self.mat_shoup[i * self.k + j]
+    }
+
+    /// Execute the transform: `out[i][t] = sum_j M[i][j]*x[j][t] mod q_i`.
+    ///
+    /// `x` holds the `k` input rows (each of length `n`), `out` the
+    /// `out_rows()` output rows (each of length `n`). Work is tiled over
+    /// the coefficient axis and parallelized over `(row, tile)` pairs.
+    pub fn apply(&self, x: &[&[u64]], out: &mut [&mut [u64]]) {
+        assert_eq!(x.len(), self.k, "input row count");
+        assert_eq!(out.len(), self.moduli.len(), "output row count");
+        let n = out.first().map(|r| r.len()).unwrap_or(0);
+        if n == 0 {
+            return;
+        }
+        assert!(x.iter().all(|r| r.len() == n), "ragged input rows");
+        assert!(out.iter().all(|r| r.len() == n), "ragged output rows");
+
+        struct Tile<'a> {
+            row: usize,
+            col: usize,
+            buf: &'a mut [u64],
+        }
+        let mut tiles: Vec<Tile<'_>> = Vec::with_capacity(out.len() * n.div_ceil(COL_TILE));
+        for (i, row) in out.iter_mut().enumerate() {
+            for (c, chunk) in row.chunks_mut(COL_TILE).enumerate() {
+                tiles.push(Tile {
+                    row: i,
+                    col: c * COL_TILE,
+                    buf: chunk,
+                });
+            }
+        }
+        // Per-tile work is tile_len * k multiply-accumulates; the hint
+        // keeps tiny transforms (small n * small k) on the serial path.
+        let hint = COL_TILE.min(n).saturating_mul(self.k);
+        par_for_each_mut_hint(&mut tiles, hint, |_, tile| {
+            self.compute_tile(tile.row, tile.col, x, tile.buf);
+        });
+    }
+
+    /// Convenience wrapper over owned row vectors.
+    pub fn apply_vecs(&self, x: &[Vec<u64>], out: &mut [Vec<u64>]) {
+        let xr: Vec<&[u64]> = x.iter().map(|v| v.as_slice()).collect();
+        let mut or: Vec<&mut [u64]> = out.iter_mut().map(|v| v.as_mut_slice()).collect();
+        self.apply(&xr, &mut or);
+    }
+
+    /// One `(output row, coefficient tile)` work item.
+    fn compute_tile(&self, row: usize, col: usize, x: &[&[u64]], out: &mut [u64]) {
+        let m = self.moduli[row];
+        let len = out.len();
+        let mrow = &self.mat[row * self.k..(row + 1) * self.k];
+
+        if self.k <= 2 {
+            // Short reductions: the Shoup path wins (no accumulator setup,
+            // one precomputed-operand multiply per term). Inputs may carry
+            // residues of foreign primes >= q_i, so reduce on entry —
+            // Harvey's multiply needs the variable operand below q.
+            let srow = &self.mat_shoup[row * self.k..(row + 1) * self.k];
+            let x0 = &x[0][col..col + len];
+            if self.k == 1 {
+                for (o, &v) in out.iter_mut().zip(x0) {
+                    *o = m.mul_shoup(m.reduce_u64(v), mrow[0], srow[0]);
+                }
+            } else {
+                let x1 = &x[1][col..col + len];
+                for ((o, &v0), &v1) in out.iter_mut().zip(x0).zip(x1) {
+                    let a = m.mul_shoup(m.reduce_u64(v0), mrow[0], srow[0]);
+                    let b = m.mul_shoup(m.reduce_u64(v1), mrow[1], srow[1]);
+                    *o = m.add(a, b);
+                }
+            }
+            return;
+        }
+
+        // Lazy accumulation: defer the Barrett reduction across the whole
+        // k-term dot product; each output coefficient pays one
+        // `reduce_u128` instead of k reductions. `flush` bounds how many
+        // raw products fit before an exact intermediate reduction.
+        let mut acc_store = [0u128; COL_TILE];
+        let acc = &mut acc_store[..len];
+        let mut since_flush = 0usize;
+        for (j, &w) in mrow.iter().enumerate() {
+            if w == 0 {
+                continue; // zero rows/entries (padding) contribute nothing
+            }
+            // `>=`, not `==`: after a flush the counter restarts at 1 and
+            // is then incremented past it, so with flush == 1 an equality
+            // check would never fire again and the accumulator could wrap.
+            if since_flush >= self.flush {
+                for a in acc.iter_mut() {
+                    *a = m.reduce_u128(*a) as u128;
+                }
+                since_flush = 1; // the reduced carry counts as one term
+            }
+            let w128 = w as u128;
+            let xr = &x[j][col..col + len];
+            for (a, &v) in acc.iter_mut().zip(xr) {
+                *a += w128 * v as u128;
+            }
+            since_flush += 1;
+        }
+        for (o, &a) in out.iter_mut().zip(acc.iter()) {
+            *o = m.reduce_u128(a);
+        }
+    }
+}
+
+/// Functional model of the FHECore PE grid executing one MLT tile stream:
+/// `C[M x N] = A[M x K] x B[K x N] mod q[N]` with *per-column* moduli —
+/// output-stationary accumulation through the 30-bit Barrett MAC pipeline
+/// ([`Modulus30`]), bit-exact with the hardware PE of SIV-C and the L1
+/// Pallas kernel. [`crate::systolic::modmatmul`] and the native artifact
+/// executor in [`crate::runtime`] both delegate here, so the simulated
+/// unit and the software path share this single definition.
+pub fn modmatmul_pe(a: &[u32], b: &[u32], m: usize, k: usize, n: usize, q: &[u32]) -> Vec<u32> {
+    assert_eq!(a.len(), m * k);
+    assert_eq!(b.len(), k * n);
+    assert_eq!(q.len(), n);
+    let mods: Vec<Modulus30> = q.iter().map(|&x| Modulus30::new(x)).collect();
+    let mut c = vec![0u32; m * n];
+    for i in 0..m {
+        for j in 0..n {
+            let md = mods[j];
+            let mut r = 0u32;
+            for t in 0..k {
+                // R <- (R + a*b) mod q: one PE MAC per cycle.
+                r = md.mac(
+                    r,
+                    md.barrett(a[i * k + t] as u64),
+                    md.barrett(b[t * n + j] as u64),
+                );
+            }
+            c[i * n + j] = r;
+        }
+    }
+    c
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::prime::{ntt_primes, pe_primes};
+    use crate::util::rng::Pcg64;
+
+    /// Straight per-term reference: reduce + multiply + add per term.
+    fn reference(
+        moduli: &[Modulus],
+        rows: &[Vec<u64>],
+        x: &[Vec<u64>],
+    ) -> Vec<Vec<u64>> {
+        let n = x[0].len();
+        moduli
+            .iter()
+            .enumerate()
+            .map(|(i, m)| {
+                (0..n)
+                    .map(|t| {
+                        let mut acc = 0u64;
+                        for (j, xr) in x.iter().enumerate() {
+                            let c = m.reduce_u64(rows[i][j]);
+                            acc = m.add(acc, m.mul(c, m.reduce_u64(xr[t])));
+                        }
+                        acc
+                    })
+                    .collect()
+            })
+            .collect()
+    }
+
+    fn rand_rows(k: usize, n: usize, bound: u64, rng: &mut Pcg64) -> Vec<Vec<u64>> {
+        (0..k)
+            .map(|_| (0..n).map(|_| rng.below(bound)).collect())
+            .collect()
+    }
+
+    #[test]
+    fn matches_reference_across_widths_and_shapes() {
+        let mut rng = Pcg64::new(0x40D11);
+        for bits in [30u32, 45, 58] {
+            for (k, rows_out, n) in [(1usize, 4usize, 33usize), (2, 3, 100), (3, 6, 257), (9, 27, 64)] {
+                let src = ntt_primes(16, bits, k);
+                let dst = ntt_primes(16, bits.min(57) + 2, rows_out);
+                let moduli: Vec<Modulus> = dst.iter().map(|&q| Modulus::new(q)).collect();
+                let x_bound = *src.iter().max().unwrap();
+                let mat = rand_rows(rows_out, k, x_bound, &mut rng);
+                let x = {
+                    let mut v = Vec::new();
+                    for j in 0..k {
+                        v.push((0..n).map(|_| rng.below(src[j])).collect::<Vec<u64>>());
+                    }
+                    v
+                };
+                let kernel = ModLinKernel::from_rows(&moduli, &mat, x_bound);
+                let mut out = vec![vec![0u64; n]; rows_out];
+                kernel.apply_vecs(&x, &mut out);
+                assert_eq!(out, reference(&moduli, &mat, &x), "bits={bits} k={k} n={n}");
+            }
+        }
+    }
+
+    #[test]
+    fn lazy_flush_handles_wide_primes_and_long_reductions() {
+        // 58-bit primes, k large enough that several flushes are forced.
+        let mut rng = Pcg64::new(7);
+        let k = 64;
+        let primes = ntt_primes(16, 58, k);
+        let dstp = ntt_primes(16, 58, k + 2);
+        let moduli = vec![Modulus::new(dstp[k]), Modulus::new(dstp[k + 1])];
+        let x_bound = *primes.iter().max().unwrap();
+        let mat = rand_rows(2, k, x_bound, &mut rng);
+        let x: Vec<Vec<u64>> = (0..k)
+            .map(|j| (0..37).map(|_| rng.below(primes[j])).collect())
+            .collect();
+        // Declare the loosest possible input bound (caller doesn't know the
+        // source primes): the flush capacity shrinks below k, forcing the
+        // mid-loop exact reductions to actually run.
+        let kernel = ModLinKernel::from_rows(&moduli, &mat, u64::MAX);
+        assert!(kernel.flush < k, "flush {} should force mid-loop reductions", kernel.flush);
+        let mut out = vec![vec![0u64; 37]; 2];
+        kernel.apply_vecs(&x, &mut out);
+        assert_eq!(out, reference(&moduli, &mat, &x));
+    }
+
+    #[test]
+    fn zero_matrix_and_zero_input() {
+        let q = ntt_primes(16, 40, 1)[0];
+        let m = Modulus::new(q);
+        let kernel = ModLinKernel::new(&[m, m], 3, q, |_, _| 0);
+        let x = vec![vec![5u64; 16]; 3];
+        let mut out = vec![vec![1u64; 16]; 2];
+        kernel.apply_vecs(&x, &mut out);
+        assert!(out.iter().all(|r| r.iter().all(|&v| v == 0)));
+    }
+
+    #[test]
+    fn entries_are_reduced_with_shoup_pairs() {
+        let q = ntt_primes(16, 30, 1)[0];
+        let m = Modulus::new(q);
+        // Short-reduction kernel: Shoup companions are materialized.
+        let kernel = ModLinKernel::new(&[m], 2, q, |_, j| q + j as u64 + 1);
+        for j in 0..2 {
+            let e = kernel.entry(0, j);
+            assert_eq!(e, j as u64 + 1, "reduced at build time");
+            assert_eq!(kernel.entry_shoup(0, j), m.shoup(e));
+        }
+        // Lazy-path kernel: entries still reduced, no Shoup copies kept.
+        let lazy = ModLinKernel::new(&[m], 4, q, |_, j| q + j as u64 + 1);
+        assert_eq!(lazy.entry(0, 3), 4);
+        assert!(lazy.mat_shoup.is_empty(), "no Shoup footprint for k > 2");
+    }
+
+    #[test]
+    fn tile_boundaries_are_seamless() {
+        // n straddling multiple COL_TILE tiles with a ragged tail.
+        let mut rng = Pcg64::new(99);
+        let n = COL_TILE * 2 + 17;
+        let primes = ntt_primes(16, 45, 5);
+        let moduli: Vec<Modulus> = primes[3..5].iter().map(|&q| Modulus::new(q)).collect();
+        let x_bound = primes[2];
+        let mat = rand_rows(2, 3, x_bound, &mut rng);
+        let x: Vec<Vec<u64>> = (0..3)
+            .map(|j| (0..n).map(|_| rng.below(primes[j])).collect())
+            .collect();
+        let kernel = ModLinKernel::from_rows(&moduli, &mat, x_bound);
+        let mut out = vec![vec![0u64; n]; 2];
+        kernel.apply_vecs(&x, &mut out);
+        assert_eq!(out, reference(&moduli, &mat, &x));
+    }
+
+    #[test]
+    fn fhec_tile_ops_match_grid_geometry() {
+        // BaseConv at bootstrapping scale: C[N x L] = Y[N x alpha] . Conv.
+        let d = MltDims { m: 1 << 16, k: 9, n: 27 };
+        assert_eq!(d.fhec_tile_ops(), (1u64 << 12) * 1 * 4);
+        // One radix-16 NTT round over N points: [16x16] @ [16 x N/16].
+        let n = 1usize << 16;
+        let round = MltDims { m: 16, k: 16, n: n / 16 };
+        assert_eq!(round.tile_ops(16, 16, 16), (n / 256) as u64);
+    }
+
+    #[test]
+    fn pe_grid_modmatmul_matches_lazy_kernel() {
+        // The PE functional model (chained Barrett MACs) and the lazy
+        // ModLinKernel agree bit-for-bit: same transform, two engines.
+        let q = pe_primes(32, 8);
+        let qv: Vec<u32> = q.iter().map(|&p| p as u32).collect();
+        let mut rng = Pcg64::new(5);
+        let (mm, kk, nn) = (16usize, 16usize, 8usize);
+        let a: Vec<u32> = (0..mm * kk).map(|_| rng.below(q[0]) as u32).collect();
+        let b: Vec<u32> = (0..kk * nn).map(|_| rng.below(q[0]) as u32).collect();
+        let pe = modmatmul_pe(&a, &b, mm, kk, nn, &qv);
+
+        // Express the same product as an MLT: out rows are the N columns
+        // (per-column modulus), x rows are the K rows of A^T view.
+        let moduli: Vec<Modulus> = q.iter().map(|&p| Modulus::new(p)).collect();
+        let rows: Vec<Vec<u64>> = (0..nn)
+            .map(|j| (0..kk).map(|t| b[t * nn + j] as u64).collect())
+            .collect();
+        let kernel = ModLinKernel::from_rows(&moduli, &rows, 1 << 30);
+        let x: Vec<Vec<u64>> = (0..kk)
+            .map(|t| (0..mm).map(|i| a[i * kk + t] as u64).collect())
+            .collect();
+        let mut out = vec![vec![0u64; mm]; nn];
+        kernel.apply_vecs(&x, &mut out);
+        for i in 0..mm {
+            for j in 0..nn {
+                assert_eq!(out[j][i], pe[i * nn + j] as u64, "({i},{j})");
+            }
+        }
+    }
+}

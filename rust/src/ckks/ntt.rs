@@ -7,7 +7,10 @@
 //!   This is the software hot path (what CUDA cores run in FIDESlib).
 //! * [`NttTable::forward_4step`] — the Bailey 4-step matrix formulation
 //!   (Eq. 2/4): the layout TensorFHE/WarpDrive/FHECore map onto matrix
-//!   units. Bit-identical output to `forward`.
+//!   units. Bit-identical output to `forward`. The matrix passes execute
+//!   on the shared MLT engine via a cached [`FourStepPlan`]
+//!   (Vandermonde/twiddle tables built once per (table, N1));
+//!   [`NttTable::forward_4step_reference`] keeps the uncached original.
 //! * `ntt_naive` (tests) — the O(N^2) definition, the ground truth.
 //!
 //! Convention: `forward` consumes natural (coefficient) order and produces
@@ -17,8 +20,41 @@
 //! explicit reorder pass is needed for the roundtrip; pointwise products
 //! are order-agnostic either way.
 
+use std::collections::HashMap;
+use std::sync::{Arc, Mutex, OnceLock};
+
 use super::modarith::Modulus;
+use super::modlin::ModLinKernel;
 use super::prime::root_of_unity;
+
+/// Cached constants for one `N = N1 x N2` factorization of the 4-step
+/// NTT: the two Vandermonde matrices compiled as [`ModLinKernel`]s (Shoup
+/// pairs + lazy accumulation), plus the step-2 twiddle matrix and the
+/// negacyclic pre-twist powers with their Shoup companions. Built once
+/// per (table, N1) and shared across calls — the seed recomputed every
+/// `m.pow` per element per call.
+#[derive(Debug)]
+pub struct FourStepPlan {
+    pub n1: usize,
+    pub n2: usize,
+    /// Step 1: `B = W1 @ A`, `W1[k1][j1] = w_N1^(j1*k1)` (N1 output rows).
+    w1: ModLinKernel,
+    /// Step 3 (transposed): `D^T = W2 @ C^T`, `W2[k2][j2] = w_N2^(j2*k2)`.
+    w2: ModLinKernel,
+    /// Step 2 twiddles `tw[k1*N2 + j2] = w_N^(j2*k1)` with Shoup words.
+    tw: Vec<u64>,
+    tw_shoup: Vec<u64>,
+}
+
+type PlanCache = Arc<Mutex<HashMap<usize, Arc<FourStepPlan>>>>;
+
+/// Negacyclic pre-twist `psi^j` with Shoup words — N1-independent, so
+/// cached once per table (not per plan) and shared across all splits.
+#[derive(Debug)]
+struct TwistTable {
+    pows: Vec<u64>,
+    shoup: Vec<u64>,
+}
 
 /// Precomputed twiddles for one (N, q) pair.
 #[derive(Debug, Clone)]
@@ -35,6 +71,10 @@ pub struct NttTable {
     n_inv_shoup: u64,
     /// 2N-th root used to build all tables (kept for the 4-step path).
     pub psi: u64,
+    /// Lazily built [`FourStepPlan`]s keyed by N1 (shared across clones).
+    plans: PlanCache,
+    /// Lazily built pre-twist table (shared across plans and clones).
+    twist: Arc<OnceLock<TwistTable>>,
 }
 
 fn bitrev(x: usize, bits: u32) -> usize {
@@ -86,6 +126,8 @@ impl NttTable {
             n_inv,
             n_inv_shoup: m.shoup(n_inv),
             psi,
+            plans: Arc::new(Mutex::new(HashMap::new())),
+            twist: Arc::new(OnceLock::new()),
         }
     }
 
@@ -168,10 +210,145 @@ impl NttTable {
         }
     }
 
+    /// Build (or fetch) the cached 4-step plan for a given N1.
+    ///
+    /// A plan holds the dense N1xN1 and N2xN2 Vandermonde kernels, so its
+    /// footprint is O(N1^2 + N2^2) u64s — minimized by balanced splits
+    /// (N1 ~ sqrt(N)). Strongly skewed splits of large rings (e.g.
+    /// N1 = 16 at N = 2^16) materialize a huge N2^2 matrix; prefer the
+    /// iterative [`Self::forward`] or a balanced split there.
+    pub fn four_step_plan(&self, n1: usize) -> Arc<FourStepPlan> {
+        let n = self.n;
+        let n2 = n / n1;
+        assert_eq!(n1 * n2, n, "n1 must divide n");
+        let mut cache = self.plans.lock().unwrap();
+        cache
+            .entry(n1)
+            .or_insert_with(|| Arc::new(self.build_plan(n1, n2)))
+            .clone()
+    }
+
+    fn build_plan(&self, n1: usize, n2: usize) -> FourStepPlan {
+        let m = self.m;
+        let q = m.value();
+        let w = m.mul(self.psi, self.psi); // w_N = psi^2
+        let w1 = m.pow(w, n2 as u64); // w_N1
+        let w2 = m.pow(w, n1 as u64); // w_N2
+
+        // Vandermonde rows by iterated multiplication (no per-entry pow):
+        // row r of V(base, dim) is the powers of base^r.
+        let vand_rows = |base: u64, dim: usize| -> Vec<Vec<u64>> {
+            let mut rows = Vec::with_capacity(dim);
+            let mut row_base = 1u64; // base^r
+            for _ in 0..dim {
+                let mut row = Vec::with_capacity(dim);
+                let mut cur = 1u64;
+                for _ in 0..dim {
+                    row.push(cur);
+                    cur = m.mul(cur, row_base);
+                }
+                rows.push(row);
+                row_base = m.mul(row_base, base);
+            }
+            rows
+        };
+        let w1_kernel = ModLinKernel::from_rows(&vec![m; n1], &vand_rows(w1, n1), q);
+        let w2_kernel = ModLinKernel::from_rows(&vec![m; n2], &vand_rows(w2, n2), q);
+
+        // Step-2 twiddles tw[k1*N2 + j2] = w^(j2*k1).
+        let mut tw = Vec::with_capacity(n1 * n2);
+        let mut w_k1 = 1u64; // w^k1
+        for _ in 0..n1 {
+            let mut cur = 1u64;
+            for _ in 0..n2 {
+                tw.push(cur);
+                cur = m.mul(cur, w_k1);
+            }
+            w_k1 = m.mul(w_k1, w);
+        }
+        let tw_shoup = tw.iter().map(|&t| m.shoup(t)).collect();
+
+        FourStepPlan {
+            n1,
+            n2,
+            w1: w1_kernel,
+            w2: w2_kernel,
+            tw,
+            tw_shoup,
+        }
+    }
+
+    /// Negacyclic pre-twist powers `psi^j` (built once per table).
+    fn twist_table(&self) -> &TwistTable {
+        self.twist.get_or_init(|| {
+            let m = self.m;
+            let mut pows = Vec::with_capacity(self.n);
+            let mut cur = 1u64;
+            for _ in 0..self.n {
+                pows.push(cur);
+                cur = m.mul(cur, self.psi);
+            }
+            let shoup = pows.iter().map(|&p| m.shoup(p)).collect();
+            TwistTable { pows, shoup }
+        })
+    }
+
     /// The Bailey 4-step NTT (Eq. 2/4): reshape N = N1 x N2, matrix pass,
     /// twiddle pass, matrix pass, transpose. This is the formulation that
     /// maps onto Tensor Cores / FHECore; output is identical to `forward`.
+    ///
+    /// Both matrix passes run on the shared MLT engine through the cached
+    /// [`FourStepPlan`] — the same kernel that executes base conversion —
+    /// and the final transpose is folded into the step-3 orientation
+    /// (`D^T = W2 @ C^T` flattens directly into the output layout).
     pub fn forward_4step(&self, a: &[u64], n1: usize) -> Vec<u64> {
+        let n = self.n;
+        let plan = self.four_step_plan(n1);
+        let n2 = plan.n2;
+        let m = self.m;
+
+        // Negacyclic pre-twist: a[j] *= psi^j (cached Shoup pairs).
+        let twist = self.twist_table();
+        let mut scaled = vec![0u64; n];
+        for (j, (s, &x)) in scaled.iter_mut().zip(a).enumerate() {
+            *s = m.mul_shoup(x, twist.pows[j], twist.shoup[j]);
+        }
+
+        // Step 1: B[k1, j2] = sum_j1 W1[k1, j1] A[j1, j2]  (MLT, N2 cols).
+        let mut b = vec![0u64; n];
+        {
+            let x: Vec<&[u64]> = scaled.chunks(n2).collect();
+            let mut out: Vec<&mut [u64]> = b.chunks_mut(n2).collect();
+            plan.w1.apply(&x, &mut out);
+        }
+
+        // Step 2: twiddle C[k1, j2] = B[k1, j2] * w^(j2 k1) (cached).
+        for (c, (&t, &ts)) in b.iter_mut().zip(plan.tw.iter().zip(&plan.tw_shoup)) {
+            *c = m.mul_shoup(*c, t, ts);
+        }
+
+        // Step 3 + 4 fused: D^T = W2 @ C^T. Row k2 of D^T is
+        // out[k2*N1 .. (k2+1)*N1], i.e. out[k1 + k2*N1] = D[k1, k2] —
+        // exactly the transpose-flatten of the classic step 4.
+        let mut ct = vec![0u64; n]; // C^T: [N2 x N1]
+        for k1 in 0..n1 {
+            for j2 in 0..n2 {
+                ct[j2 * n1 + k1] = b[k1 * n2 + j2];
+            }
+        }
+        let mut out = vec![0u64; n];
+        {
+            let x: Vec<&[u64]> = ct.chunks(n1).collect();
+            let mut rows: Vec<&mut [u64]> = out.chunks_mut(n1).collect();
+            plan.w2.apply(&x, &mut rows);
+        }
+        out
+    }
+
+    /// The original uncached 4-step formulation (per-element `m.pow`
+    /// twiddle generation, per-term modular reduction). Kept as the
+    /// bit-exactness oracle for the plan-cached path.
+    pub fn forward_4step_reference(&self, a: &[u64], n1: usize) -> Vec<u64> {
         let n = self.n;
         let n2 = n / n1;
         assert_eq!(n1 * n2, n, "n1 must divide n");
@@ -342,6 +519,37 @@ mod tests {
         for n1 in [2usize, 4, 16, 64] {
             assert_eq!(t.forward_4step(&a, n1), iterative, "n1={n1}");
         }
+    }
+
+    #[test]
+    fn four_step_cached_is_bit_identical_to_reference() {
+        for (n, bits) in [(64usize, 30u32), (256, 45), (128, 58)] {
+            let q = ntt_primes(n, bits, 1)[0];
+            let t = NttTable::new(n, q);
+            let a = rand_poly(n, q, 0x45 + n as u64);
+            let mut n1 = 1usize;
+            while n1 <= n {
+                assert_eq!(
+                    t.forward_4step(&a, n1),
+                    t.forward_4step_reference(&a, n1),
+                    "n={n} bits={bits} n1={n1}"
+                );
+                n1 *= 4;
+            }
+        }
+    }
+
+    #[test]
+    fn four_step_plan_is_cached_and_shared_across_clones() {
+        let n = 64;
+        let q = ntt_primes(n, 40, 1)[0];
+        let t = NttTable::new(n, q);
+        let p1 = t.four_step_plan(8);
+        let p2 = t.four_step_plan(8);
+        assert!(std::sync::Arc::ptr_eq(&p1, &p2), "plan rebuilt");
+        let t2 = t.clone();
+        let p3 = t2.four_step_plan(8);
+        assert!(std::sync::Arc::ptr_eq(&p1, &p3), "clone must share the cache");
     }
 
     #[test]

@@ -2,10 +2,18 @@
 //! Rescale — the second-hottest kernel family of the paper (12.6% of
 //! runtime in Fig. 1) and the one that exercises FHECore's mixed-moduli
 //! systolic columns (SV-B).
+//!
+//! The conversion itself executes on the shared modulo-linear-transform
+//! engine ([`ModLinKernel`]): the Eq. 5 matrix is compiled once at table
+//! build (entries reduced per destination prime, Shoup companions
+//! precomputed) and applied with lazy u128 accumulation and coefficient-
+//! axis tiling. [`BaseConvTable::convert_reference`] keeps the original
+//! per-term formulation as the bit-exactness oracle.
 
 use super::modarith::Modulus;
+use super::modlin::ModLinKernel;
 use super::poly::{Format, RnsPoly, Tower};
-use crate::util::threads::{par_for_each_mut_hint, par_map_range};
+use crate::util::threads::par_for_each_mut_hint;
 
 /// Precomputed constants for converting residues from base `P` to base `Q`
 /// (both given as context indices into one tower).
@@ -16,8 +24,20 @@ pub struct BaseConvTable {
     /// `[Phat_j^{-1}]_{p_j}` for each source prime.
     pub phat_inv: Vec<u64>,
     pub phat_inv_shoup: Vec<u64>,
-    /// `conv[i][j] = [Phat_j]_{q_i}` — the paper's Eq. 5 left matrix.
+    /// `conv[i][j] = [Phat_j]_{q_i}` — the paper's Eq. 5 left matrix
+    /// (kept in row form for the reference path and table inspection).
     pub conv: Vec<Vec<u64>>,
+    /// The compiled MLT: reduced `conv` entries + Shoup pairs + lazy
+    /// accumulation plan, built once here instead of per `convert` call.
+    kernel: ModLinKernel,
+}
+
+/// Caller-provided scratch for [`BaseConvTable::convert_into`]: reusing it
+/// across calls removes the per-call `alpha * N` staging allocation from
+/// the ModUp/ModDown hot loops.
+#[derive(Debug, Default)]
+pub struct BaseConvScratch {
+    y: Vec<Vec<u64>>,
 }
 
 impl BaseConvTable {
@@ -54,12 +74,17 @@ impl BaseConvTable {
                 (0..src.len()).map(|j| phat_mod(j, m)).collect()
             })
             .collect();
+        let dst_moduli: Vec<Modulus> = dst.iter().map(|&di| tower.contexts[di].modulus).collect();
+        // Inputs to the MLT are the pre-scaled residues y_j < p_j.
+        let x_bound = src_primes.iter().copied().max().expect("empty source base");
+        let kernel = ModLinKernel::from_rows(&dst_moduli, &conv, x_bound);
         Self {
             src: src.to_vec(),
             dst: dst.to_vec(),
             phat_inv,
             phat_inv_shoup,
             conv,
+            kernel,
         }
     }
 
@@ -69,14 +94,84 @@ impl BaseConvTable {
     ///
     /// This is exactly the "mixed-moduli matrix multiplication" of Eq. 5 —
     /// each output row under a different modulus — which is what FHECore
-    /// executes by programming per-column Barrett constants.
+    /// executes by programming per-column Barrett constants, and what the
+    /// [`ModLinKernel`] executes here.
     pub fn convert(&self, poly: &RnsPoly, tower: &Tower) -> RnsPoly {
+        let mut scratch = BaseConvScratch::default();
+        self.convert_with(poly, tower, &mut scratch)
+    }
+
+    /// [`Self::convert`] with caller-provided scratch (hot-loop variant).
+    pub fn convert_with(
+        &self,
+        poly: &RnsPoly,
+        tower: &Tower,
+        scratch: &mut BaseConvScratch,
+    ) -> RnsPoly {
+        let mut out = RnsPoly {
+            n: poly.n,
+            format: Format::Coeff,
+            limbs: Vec::new(),
+            chain: Vec::new(),
+        };
+        self.convert_into(poly, tower, scratch, &mut out);
+        out
+    }
+
+    /// Fully in-place variant: both the `alpha * N` staging buffer and the
+    /// `L_out * N` output reuse caller allocations across calls.
+    pub fn convert_into(
+        &self,
+        poly: &RnsPoly,
+        tower: &Tower,
+        scratch: &mut BaseConvScratch,
+        out: &mut RnsPoly,
+    ) {
         assert_eq!(poly.format, Format::Coeff, "base conversion needs Coeff");
         assert_eq!(poly.chain, self.src, "polynomial not on the source base");
         let n = poly.n;
         let alpha = self.src.len();
 
-        // y[j] = [x_j * Phat_j^{-1}]_{p_j}  (the elementwise pre-scale).
+        // Stage 1 — elementwise pre-scale: y[j] = [x_j * Phat_j^{-1}]_{p_j}
+        // (Shoup pairs precomputed at table build).
+        if scratch.y.len() < alpha {
+            scratch.y.resize_with(alpha, Vec::new);
+        }
+        let y = &mut scratch.y[..alpha];
+        par_for_each_mut_hint(y, n, |j, buf| {
+            let m = tower.contexts[self.src[j]].modulus;
+            let (v, vs) = (self.phat_inv[j], self.phat_inv_shoup[j]);
+            buf.clear();
+            buf.extend(poly.limbs[j].iter().map(|&x| m.mul_shoup(x, v, vs)));
+        });
+
+        // Stage 2 — the mixed-moduli MLT: out = Conv . y, one lazy-reduced
+        // dot product per (destination limb, coefficient), tiled and
+        // parallelized over (limb, tile) pairs by the kernel.
+        out.n = n;
+        out.format = Format::Coeff;
+        out.chain.clear();
+        out.chain.extend_from_slice(&self.dst);
+        if out.limbs.len() != self.dst.len() {
+            out.limbs.resize_with(self.dst.len(), Vec::new);
+        }
+        for limb in &mut out.limbs {
+            limb.resize(n, 0);
+        }
+        let xr: Vec<&[u64]> = y.iter().map(|v| v.as_slice()).collect();
+        let mut or: Vec<&mut [u64]> = out.limbs.iter_mut().map(|v| v.as_mut_slice()).collect();
+        self.kernel.apply(&xr, &mut or);
+    }
+
+    /// The original per-term Eq. 3 formulation (reduce + Shoup multiply +
+    /// modular add per term). Kept as the bit-exactness oracle for the
+    /// MLT-backed path; not used on the hot path.
+    pub fn convert_reference(&self, poly: &RnsPoly, tower: &Tower) -> RnsPoly {
+        assert_eq!(poly.format, Format::Coeff, "base conversion needs Coeff");
+        assert_eq!(poly.chain, self.src, "polynomial not on the source base");
+        let n = poly.n;
+        let alpha = self.src.len();
+
         let mut y: Vec<Vec<u64>> = vec![Vec::new(); alpha];
         par_for_each_mut_hint(&mut y, n, |j, slot| {
             let m = tower.contexts[self.src[j]].modulus;
@@ -84,7 +179,6 @@ impl BaseConvTable {
             *slot = poly.limbs[j].iter().map(|&x| m.mul_shoup(x, v, vs)).collect();
         });
 
-        // out[i] = conv[i] . y  (dot product per coefficient, mod q_i).
         let mut limbs: Vec<Vec<u64>> = vec![Vec::new(); self.dst.len()];
         par_for_each_mut_hint(&mut limbs, n, |i, slot| {
             let m = tower.contexts[self.dst[i]].modulus;
@@ -119,22 +213,31 @@ impl BaseConvTable {
 pub struct RnsTools {
     /// `q_l^{-1} mod q_i` for every pair (used by rescale: level l -> i).
     pub q_inv: Vec<Vec<u64>>,
+    /// Shoup companions of `q_inv`, precomputed at build so rescale's
+    /// per-limb loop does no 128-bit division.
+    pub q_inv_shoup: Vec<Vec<u64>>,
     /// `[P^{-1}]_{q_i}` where P is the product of the extension primes.
     pub p_inv_mod_q: Vec<u64>,
     pub q_chain: Vec<usize>,
     pub p_chain: Vec<usize>,
+    /// Tower context index -> position in `q_chain` (usize::MAX when the
+    /// context is not on the Q chain). Replaces the per-limb linear
+    /// `position()` scans in rescale/mod_down.
+    chain_pos: Vec<usize>,
 }
 
 impl RnsTools {
     pub fn new(tower: &Tower, q_chain: &[usize], p_chain: &[usize]) -> Self {
         let nq = q_chain.len();
         let mut q_inv = vec![vec![0u64; nq]; nq];
+        let mut q_inv_shoup = vec![vec![0u64; nq]; nq];
         for l in 0..nq {
             let ql = tower.contexts[q_chain[l]].modulus.value();
             for i in 0..nq {
                 if i != l {
                     let m = tower.contexts[q_chain[i]].modulus;
                     q_inv[l][i] = m.inv(m.reduce_u64(ql));
+                    q_inv_shoup[l][i] = m.shoup(q_inv[l][i]);
                 }
             }
         }
@@ -150,18 +253,38 @@ impl RnsTools {
                 m.inv(acc)
             })
             .collect();
+        let mut chain_pos = vec![usize::MAX; tower.contexts.len()];
+        for (i, &c) in q_chain.iter().enumerate() {
+            chain_pos[c] = i;
+        }
         Self {
             q_inv,
+            q_inv_shoup,
             p_inv_mod_q,
             q_chain: q_chain.to_vec(),
             p_chain: p_chain.to_vec(),
+            chain_pos,
         }
+    }
+
+    /// Position of a tower context index on the Q chain.
+    #[inline]
+    fn q_pos(&self, ctx_index: usize) -> usize {
+        let pos = self
+            .chain_pos
+            .get(ctx_index)
+            .copied()
+            .unwrap_or(usize::MAX);
+        assert!(pos != usize::MAX, "context {ctx_index} not on the Q chain");
+        pos
     }
 
     /// Rescale: divide by the last prime of the active chain (Table II).
     ///
     /// `c'_i = (c_i - [c]_{q_l}) * q_l^{-1} mod q_i` — drops one limb and
-    /// one level. Input/output in coefficient format.
+    /// one level. Input/output in coefficient format. The chain-index
+    /// lookup and the Shoup companion of `q_l^{-1}` are precomputed at
+    /// table build; the per-limb closure only indexes.
     pub fn rescale(&self, poly: &mut RnsPoly, tower: &Tower) {
         assert_eq!(poly.format, Format::Coeff, "rescale needs Coeff");
         let l = poly.level() - 1;
@@ -169,21 +292,18 @@ impl RnsTools {
         let last_chain = poly.chain[l];
         let last = poly.limbs[l].clone();
         let q_l = tower.contexts[last_chain].modulus.value();
-        let l_pos = self
-            .q_chain
-            .iter()
-            .position(|&c| c == last_chain)
-            .expect("last limb not on the Q chain");
+        let l_pos = self.q_pos(last_chain);
         poly.drop_last_limb();
         let chain = poly.chain.clone();
         let q_inv_row = &self.q_inv[l_pos];
+        let q_inv_shoup_row = &self.q_inv_shoup[l_pos];
+        let half = q_l / 2;
         let hint = poly.n;
-        crate::util::threads::par_for_each_mut_hint(&mut poly.limbs, hint, |i, limb| {
+        par_for_each_mut_hint(&mut poly.limbs, hint, |i, limb| {
             let m = tower.contexts[chain[i]].modulus;
-            let i_pos = self.q_chain.iter().position(|&c| c == chain[i]).unwrap();
+            let i_pos = self.q_pos(chain[i]);
             let inv = q_inv_row[i_pos];
-            let inv_sh = m.shoup(inv);
-            let half = q_l / 2;
+            let inv_sh = q_inv_shoup_row[i_pos];
             for (x, &c_last) in limb.iter_mut().zip(&last) {
                 // Centered representative of [c]_{q_l} for rounding:
                 // subtract c_last (mapped into q_i) then multiply q_l^{-1}.
@@ -239,10 +359,7 @@ impl RnsTools {
         let scalars: Vec<u64> = q_part
             .chain
             .iter()
-            .map(|c| {
-                let i = self.q_chain.iter().position(|x| x == c).unwrap();
-                self.p_inv_mod_q[i]
-            })
+            .map(|&c| self.p_inv_mod_q[self.q_pos(c)])
             .collect();
         q_part.scale_assign(&scalars, tower);
         q_part
@@ -261,6 +378,18 @@ mod tests {
         let q: Vec<usize> = (0..nq).collect();
         let p: Vec<usize> = (nq..nq + np).collect();
         (tower, q, p)
+    }
+
+    fn rand_src_poly(tower: &Tower, chain: &[usize], seed: u64) -> RnsPoly {
+        let mut rng = Pcg64::new(seed);
+        let mut poly = RnsPoly::zero(tower, chain, Format::Coeff);
+        for (i, limb) in poly.limbs.iter_mut().enumerate() {
+            let qi = tower.contexts[chain[i]].modulus.value();
+            for x in limb.iter_mut() {
+                *x = rng.below(qi);
+            }
+        }
+        poly
     }
 
     /// CRT-reconstruct coefficient `idx` of an RNS poly into a big integer
@@ -282,14 +411,7 @@ mod tests {
     fn baseconv_reproduces_crt_value_mod_targets() {
         let (tower, q, p) = setup(32, 2, 3);
         let table = BaseConvTable::new(&tower, &q, &p);
-        let mut rng = Pcg64::new(5);
-        let mut poly = RnsPoly::zero(&tower, &q, Format::Coeff);
-        for (i, limb) in poly.limbs.iter_mut().enumerate() {
-            let qi = tower.contexts[q[i]].modulus.value();
-            for x in limb.iter_mut() {
-                *x = rng.below(qi);
-            }
-        }
+        let poly = rand_src_poly(&tower, &q, 5);
         // Make the RNS residues consistent with a single integer per slot.
         // (random residues represent *some* integer mod Q; CRT gives it.)
         let out = table.convert(&poly, &tower);
@@ -321,6 +443,39 @@ mod tests {
         let out = table.convert(&poly, &tower);
         for limb in &out.limbs {
             assert!(limb.iter().all(|&x| x == 0));
+        }
+    }
+
+    #[test]
+    fn mlt_convert_is_bit_identical_to_reference() {
+        for (n, nq, np) in [(32usize, 3usize, 6usize), (64, 1, 4), (16, 4, 1), (16, 1, 1)] {
+            let (tower, q, p) = setup(n, nq, np);
+            let table = BaseConvTable::new(&tower, &q, &p);
+            let poly = rand_src_poly(&tower, &q, 0xE0 + n as u64);
+            let fast = table.convert(&poly, &tower);
+            let slow = table.convert_reference(&poly, &tower);
+            assert_eq!(fast.limbs, slow.limbs, "n={n} alpha={nq} lout={np}");
+            assert_eq!(fast.chain, slow.chain);
+        }
+    }
+
+    #[test]
+    fn convert_into_reuses_scratch_and_output() {
+        let (tower, q, p) = setup(32, 2, 3);
+        let table = BaseConvTable::new(&tower, &q, &p);
+        let mut scratch = BaseConvScratch::default();
+        let mut out = RnsPoly::zero(&tower, &p, Format::Coeff);
+        // Poison the output to prove every element is overwritten.
+        for limb in &mut out.limbs {
+            for x in limb.iter_mut() {
+                *x = u64::MAX;
+            }
+        }
+        for seed in [1u64, 2, 3] {
+            let poly = rand_src_poly(&tower, &q, seed);
+            table.convert_into(&poly, &tower, &mut scratch, &mut out);
+            let want = table.convert_reference(&poly, &tower);
+            assert_eq!(out.limbs, want.limbs, "seed {seed}");
         }
     }
 

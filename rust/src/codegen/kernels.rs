@@ -8,6 +8,7 @@
 //! warp-level; multiply by 32 for NVBit-style thread-level counts
 //! (`THREADS_PER_WARP`).
 
+use crate::ckks::modlin::MltDims;
 use crate::isa::{Instr, KernelClass, KernelLaunch, Opcode};
 
 pub const THREADS_PER_WARP: u64 = 32;
@@ -59,11 +60,14 @@ impl Default for CostModel {
 
 /// Number of 16x16x16 tile-ops for an N-point 4-step NTT decomposed to
 /// radix-16 rounds (WarpDrive's two-level scheme generalized):
-/// `rounds = log16(N)`, `N/256` matmuls per round.
+/// `rounds = log16(N)`, each round a `[16x16] @ [16 x N/16]` MLT. Tile
+/// accounting comes from the shared [`MltDims`] so the instruction model
+/// and the software kernel agree on the transform's shape.
 pub fn ntt_tile_ops(n: usize) -> u64 {
     assert!(n.is_power_of_two() && n >= 256);
     let rounds = (n.trailing_zeros() as u64).div_ceil(4);
-    rounds * (n as u64 / 256)
+    let round = MltDims { m: 16, k: 16, n: n / 16 };
+    rounds * round.tile_ops(16, 16, 16)
 }
 
 /// Tensor-Core NTT kernel for `limbs` residue polynomials (Algorithm 1).
@@ -162,9 +166,9 @@ pub fn baseconv_kernel(_cm: &CostModel, n: usize, alpha: usize, l_out: usize) ->
 /// Base conversion on FHECore: tiled mixed-moduli matmul (SV-B). Each
 /// systolic column is programmed with a distinct (q, mu).
 pub fn baseconv_kernel_fhec(cm: &CostModel, n: usize, alpha: usize, l_out: usize) -> KernelLaunch {
-    // C[N, l_out] = Y[N, alpha_pad] x Conv[alpha_pad, l_out], tiled 16x8x16.
-    let k_tiles = alpha.div_ceil(16) as u64;
-    let tile_ops = (n as u64 / 16) * (l_out as u64).div_ceil(8) * k_tiles;
+    // C[N, l_out] = Y[N, alpha_pad] x Conv[alpha_pad, l_out]: the same
+    // MLT the software BConv executes, tiled on the FHEC.16816 grid.
+    let tile_ops = MltDims { m: n, k: alpha, n: l_out }.fhec_tile_ops();
     let template = vec![
         Instr::x(Opcode::Ldg, cm.tile_ldg),
         Instr::dep(Opcode::Fhec16816, 1),

@@ -1,14 +1,43 @@
-//! PJRT runtime: load the AOT-compiled JAX/Pallas artifacts and execute
-//! them from the rust hot path. Python never runs here — the artifacts
-//! are HLO *text* produced once by `python/compile/aot.py` (text, not
-//! serialized proto: xla_extension 0.5.1 rejects jax>=0.5's 64-bit ids).
+//! Artifact runtime: load the AOT-compiled JAX/Pallas artifact manifest
+//! and execute the entrypoints from the rust hot path.
+//!
+//! The interchange format is HLO *text* produced once by
+//! `python/compile/aot.py` (text, not serialized proto: xla_extension
+//! 0.5.1 rejects jax>=0.5's 64-bit ids). In a tree that vendors the `xla`
+//! bridge crate, the `pjrt` cargo feature marks where PJRT compilation
+//! slots in; this fully offline build ships a **native executor**
+//! instead: every artifact kind the compiler emits (`modmatmul`, `ntt`,
+//! `intt`, `baseconv`, `polymul`) is a modulo-linear transform, so the
+//! executor runs them through the same MLT definition as the systolic
+//! functional model ([`crate::ckks::modlin::modmatmul_pe`]) and the
+//! 30-bit Barrett PE pipeline ([`Modulus30`]) — bit-exact with what the
+//! Pallas kernels compute, shape-checked against the manifest.
 
 use std::collections::HashMap;
+use std::fmt;
 use std::path::{Path, PathBuf};
 
-use anyhow::{anyhow, Context, Result};
-
+use crate::ckks::modarith::Modulus30;
+use crate::ckks::modlin::modmatmul_pe;
 use crate::util::json::Json;
+
+/// Runtime error (the offline substitute for `anyhow::Error`).
+#[derive(Debug, Clone)]
+pub struct RuntimeError(pub String);
+
+impl fmt::Display for RuntimeError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        f.write_str(&self.0)
+    }
+}
+
+impl std::error::Error for RuntimeError {}
+
+pub type Result<T> = std::result::Result<T, RuntimeError>;
+
+fn err(msg: impl Into<String>) -> RuntimeError {
+    RuntimeError(msg.into())
+}
 
 /// Manifest entry describing one artifact's entrypoint.
 #[derive(Debug, Clone)]
@@ -22,15 +51,30 @@ pub struct ArtifactMeta {
     pub params: HashMap<String, usize>,
 }
 
-/// A compiled artifact ready to execute.
-pub struct Executable {
-    pub meta: ArtifactMeta,
-    exe: xla::PjRtLoadedExecutable,
+/// The program the native executor runs for one artifact kind. Every
+/// variant is an MLT composition mirroring `python/compile/model.py`.
+#[derive(Debug, Clone, Copy)]
+enum NativeProgram {
+    /// `C = A @ B mod q[col]` (the L1 Pallas kernel's contract).
+    ModMatmul { m: usize, k: usize, n: usize },
+    /// Negacyclic 4-step forward NTT (Eq. 2/4).
+    Ntt { n: usize, n1: usize },
+    /// Negacyclic 4-step inverse NTT.
+    Intt { n: usize, n1: usize },
+    /// Eq. 5 base conversion, padded to the kernel's K tile.
+    BaseConv { alpha_pad: usize, l: usize, n: usize },
+    /// NTT -> pointwise -> INTT (the `model` artifact).
+    Polymul { n: usize, n1: usize },
 }
 
-/// The PJRT engine: CPU client + compiled artifacts by name.
+/// A loaded artifact ready to execute.
+pub struct Executable {
+    pub meta: ArtifactMeta,
+    program: NativeProgram,
+}
+
+/// The engine: artifact metadata + native executors by name.
 pub struct Engine {
-    pub client: xla::PjRtClient,
     executables: HashMap<String, Executable>,
     pub dir: PathBuf,
 }
@@ -40,27 +84,25 @@ impl Engine {
     pub fn load(dir: impl AsRef<Path>) -> Result<Self> {
         let dir = dir.as_ref().to_path_buf();
         let manifest_path = dir.join("manifest.json");
-        let text = std::fs::read_to_string(&manifest_path)
-            .with_context(|| format!("reading {manifest_path:?} — run `make artifacts`"))?;
-        let manifest =
-            Json::parse(&text).map_err(|e| anyhow!("bad manifest.json: {e}"))?;
-        let client = xla::PjRtClient::cpu()?;
+        let text = std::fs::read_to_string(&manifest_path).map_err(|e| {
+            err(format!("reading {manifest_path:?} — run `make artifacts`: {e}"))
+        })?;
+        let manifest = Json::parse(&text).map_err(|e| err(format!("bad manifest.json: {e}")))?;
 
         let mut executables = HashMap::new();
         let obj = manifest
             .as_obj()
-            .ok_or_else(|| anyhow!("manifest must be an object"))?;
+            .ok_or_else(|| err("manifest must be an object"))?;
         for (name, entry) in obj {
             let meta = parse_meta(name, entry)?;
             let path = dir.join(&meta.file);
-            let proto = xla::HloModuleProto::from_text_file(
-                path.to_str().ok_or_else(|| anyhow!("non-utf8 path"))?,
-            )?;
-            let comp = xla::XlaComputation::from_proto(&proto);
-            let exe = client.compile(&comp)?;
-            executables.insert(name.clone(), Executable { meta, exe });
+            if !path.exists() {
+                return Err(err(format!("'{name}': artifact file {path:?} missing")));
+            }
+            let program = resolve_program(&meta)?;
+            executables.insert(name.clone(), Executable { meta, program });
         }
-        Ok(Self { client, executables, dir })
+        Ok(Self { executables, dir })
     }
 
     pub fn names(&self) -> Vec<&str> {
@@ -79,37 +121,227 @@ impl Engine {
         let exec = self
             .executables
             .get(name)
-            .ok_or_else(|| anyhow!("unknown artifact '{name}'"))?;
+            .ok_or_else(|| err(format!("unknown artifact '{name}'")))?;
         let metas = &exec.meta.args;
         if metas.len() != args.len() {
-            return Err(anyhow!(
+            return Err(err(format!(
                 "'{name}' expects {} args, got {}",
                 metas.len(),
                 args.len()
-            ));
+            )));
         }
-        let mut literals = Vec::with_capacity(args.len());
         for (i, (arg, shape)) in args.iter().zip(metas).enumerate() {
             let want: usize = shape.iter().product::<usize>().max(1);
             if arg.len() != want {
-                return Err(anyhow!(
+                return Err(err(format!(
                     "'{name}' arg {i}: expected {want} elements for shape {shape:?}, got {}",
                     arg.len()
-                ));
+                )));
             }
-            let lit = xla::Literal::vec1(arg);
-            let dims: Vec<i64> = shape.iter().map(|&d| d as i64).collect();
-            let lit = if shape.is_empty() {
-                lit.reshape(&[])?
-            } else {
-                lit.reshape(&dims)?
-            };
-            literals.push(lit);
         }
-        let result = exec.exe.execute::<xla::Literal>(&literals)?[0][0].to_literal_sync()?;
-        // aot.py lowers with return_tuple=True: unwrap the 1-tuple.
-        let out = result.to_tuple1()?;
-        Ok(out.to_vec::<u32>()?)
+        execute(&exec.program, args).map_err(|e| err(format!("'{name}': {e}")))
+    }
+}
+
+fn resolve_program(meta: &ArtifactMeta) -> Result<NativeProgram> {
+    let p = |key: &str| -> Result<usize> {
+        meta.params
+            .get(key)
+            .copied()
+            .ok_or_else(|| err(format!("'{}': missing param '{key}'", meta.name)))
+    };
+    let program = match meta.kind.as_str() {
+        "modmatmul" => NativeProgram::ModMatmul { m: p("m")?, k: p("k")?, n: p("n")? },
+        "ntt" => NativeProgram::Ntt { n: p("n")?, n1: p("n1")? },
+        "intt" => NativeProgram::Intt { n: p("n")?, n1: p("n1")? },
+        "baseconv" => NativeProgram::BaseConv {
+            alpha_pad: p("alpha_pad")?,
+            l: p("l")?,
+            n: p("n")?,
+        },
+        "polymul" => NativeProgram::Polymul { n: p("n")?, n1: p("n1")? },
+        other => return Err(err(format!("'{}': unknown artifact kind '{other}'", meta.name))),
+    };
+    // The executor indexes arguments positionally and trusts their sizes
+    // (the aot.py calling convention); an inconsistent manifest must fail
+    // at load, not panic or silently truncate mid-execution. Element
+    // counts are what the executor relies on (run_u32 re-checks caller
+    // buffers against these same declared shapes).
+    if let NativeProgram::Ntt { n, n1 }
+    | NativeProgram::Intt { n, n1 }
+    | NativeProgram::Polymul { n, n1 } = program
+    {
+        if n1 == 0 || n % n1 != 0 {
+            return Err(err(format!("'{}': n1 {n1} must divide n {n}", meta.name)));
+        }
+    }
+    let want_elems: Vec<usize> = match program {
+        NativeProgram::ModMatmul { m, k, n } => vec![m * k, k * n, n, n],
+        NativeProgram::Ntt { n, n1 } => {
+            let n2 = n / n1;
+            vec![n, n, n1 * n1, n1 * n2, n2 * n2, 1, 1]
+        }
+        NativeProgram::Intt { n, n1 } => {
+            let n2 = n / n1;
+            vec![n, n1 * n1, n1 * n2, n2 * n2, n, 1, 1]
+        }
+        NativeProgram::BaseConv { alpha_pad, l, n } => vec![
+            alpha_pad * n,
+            alpha_pad,
+            alpha_pad,
+            alpha_pad,
+            alpha_pad * l,
+            l,
+            l,
+        ],
+        NativeProgram::Polymul { n, n1 } => {
+            let n2 = n / n1;
+            vec![n, n, n, n1 * n1, n1 * n2, n2 * n2, n1 * n1, n1 * n2, n2 * n2, n, 1, 1]
+        }
+    };
+    if meta.args.len() != want_elems.len() {
+        return Err(err(format!(
+            "'{}': kind '{}' takes {} args, manifest declares {}",
+            meta.name,
+            meta.kind,
+            want_elems.len(),
+            meta.args.len()
+        )));
+    }
+    for (i, (shape, &want)) in meta.args.iter().zip(&want_elems).enumerate() {
+        let got: usize = shape.iter().product::<usize>().max(1);
+        if got != want {
+            return Err(err(format!(
+                "'{}': arg {i} shape {shape:?} has {got} elements, kind '{}' needs {want}",
+                meta.name, meta.kind
+            )));
+        }
+    }
+    Ok(program)
+}
+
+// ---------------------------------------------------------------------------
+// Native executor: the MLT compositions of python/compile/model.py.
+// ---------------------------------------------------------------------------
+
+fn scalar(v: &[u32]) -> RtResult<u32> {
+    v.first().copied().ok_or_else(|| "empty scalar argument".to_string())
+}
+
+type RtResult<T> = std::result::Result<T, String>;
+
+/// Elementwise `a[i] * b[i] mod q` through the 30-bit Barrett pipeline.
+fn mulmod_vec(a: &[u32], b: &[u32], md: Modulus30) -> Vec<u32> {
+    a.iter()
+        .zip(b)
+        .map(|(&x, &y)| md.barrett(x as u64 * y as u64))
+        .collect()
+}
+
+/// Cyclic 4-step DFT (steps 1-4 of Eq. 2/4), mirroring `cyclic4step`.
+fn cyclic4step(
+    a: &[u32],
+    w1: &[u32],
+    tw: &[u32],
+    w2: &[u32],
+    q: u32,
+    n1: usize,
+    n2: usize,
+) -> Vec<u32> {
+    let md = Modulus30::new(q);
+    let qv1 = vec![q; n2];
+    // Step 1: B[N1, N2] = W1[N1, N1] @ A[N1, N2].
+    let b = modmatmul_pe(w1, a, n1, n1, n2, &qv1);
+    // Step 2: twiddle.
+    let c = mulmod_vec(&b, tw, md);
+    // Step 3: D[N1, N2] = C @ W2[N2, N2].
+    let qv2 = vec![q; n2];
+    let d = modmatmul_pe(&c, w2, n1, n2, n2, &qv2);
+    // Step 4: out[k1 + k2*N1] = D[k1, k2].
+    let mut out = vec![0u32; n1 * n2];
+    for k1 in 0..n1 {
+        for k2 in 0..n2 {
+            out[k1 + k2 * n1] = d[k1 * n2 + k2];
+        }
+    }
+    out
+}
+
+fn exec_ntt(n: usize, n1: usize, args: &[Vec<u32>]) -> RtResult<Vec<u32>> {
+    // args: a, psi_pows, w1, tw, w2, q, mu (mu is implied by q here).
+    let n2 = n / n1;
+    let q = scalar(&args[5])?;
+    let md = Modulus30::new(q);
+    let scaled = mulmod_vec(&args[0], &args[1], md);
+    Ok(cyclic4step(&scaled, &args[2], &args[3], &args[4], q, n1, n2))
+}
+
+fn exec_intt(n: usize, n1: usize, args: &[Vec<u32>]) -> RtResult<Vec<u32>> {
+    // args: a_hat, w1_inv, tw_inv, w2_inv, psi_inv_n_inv_pows, q, mu.
+    let n2 = n / n1;
+    let q = scalar(&args[5])?;
+    let md = Modulus30::new(q);
+    let y = cyclic4step(&args[0], &args[1], &args[2], &args[3], q, n1, n2);
+    Ok(mulmod_vec(&y, &args[4], md))
+}
+
+fn exec_baseconv(alpha_pad: usize, l: usize, n: usize, args: &[Vec<u32>]) -> RtResult<Vec<u32>> {
+    // args: rx[alpha_pad, n], phat_inv[alpha_pad, 1], p[alpha_pad, 1],
+    //       mu_p[alpha_pad, 1], conv[alpha_pad, l], q[l], mu_q[l].
+    let (rx, phat_inv, p, conv, q) = (&args[0], &args[1], &args[2], &args[4], &args[5]);
+    // Stage 1 — pre-scale per source row: y[j] = rx[j] * phat_inv[j] mod p_j.
+    let mut y = vec![0u32; alpha_pad * n];
+    for j in 0..alpha_pad {
+        let md = Modulus30::new(p[j]);
+        let inv = phat_inv[j] as u64;
+        for t in 0..n {
+            y[j * n + t] = md.barrett(rx[j * n + t] as u64 * inv);
+        }
+    }
+    // Stage 2 — the mixed-moduli MLT: out^T[N, L] = y^T[N, alpha] @ conv,
+    // one modulus per output column (SV-B's per-column programming).
+    let mut yt = vec![0u32; n * alpha_pad];
+    for j in 0..alpha_pad {
+        for t in 0..n {
+            yt[t * alpha_pad + j] = y[j * n + t];
+        }
+    }
+    let out_t = modmatmul_pe(&yt, conv, n, alpha_pad, l, q);
+    // Transpose back to [L, N] row-major.
+    let mut out = vec![0u32; l * n];
+    for t in 0..n {
+        for i in 0..l {
+            out[i * n + t] = out_t[t * l + i];
+        }
+    }
+    Ok(out)
+}
+
+fn execute(program: &NativeProgram, args: &[Vec<u32>]) -> RtResult<Vec<u32>> {
+    match *program {
+        NativeProgram::ModMatmul { m, k, n } => {
+            // args: a[m,k], b[k,n], q[n], mu[n] (mu implied by q).
+            Ok(modmatmul_pe(&args[0], &args[1], m, k, n, &args[2]))
+        }
+        NativeProgram::Ntt { n, n1 } => exec_ntt(n, n1, args),
+        NativeProgram::Intt { n, n1 } => exec_intt(n, n1, args),
+        NativeProgram::BaseConv { alpha_pad, l, n } => exec_baseconv(alpha_pad, l, n, args),
+        NativeProgram::Polymul { n, n1 } => {
+            // args: a, b, psi_pows, w1, tw, w2, w1_inv, tw_inv, w2_inv,
+            //       psi_inv_n_inv_pows, q, mu.
+            let q = scalar(&args[10])?;
+            let md = Modulus30::new(q);
+            let n2 = n / n1;
+            let fwd = |x: &[u32]| -> Vec<u32> {
+                let scaled = mulmod_vec(x, &args[2], md);
+                cyclic4step(&scaled, &args[3], &args[4], &args[5], q, n1, n2)
+            };
+            let a_hat = fwd(&args[0]);
+            let b_hat = fwd(&args[1]);
+            let c_hat = mulmod_vec(&a_hat, &b_hat, md);
+            let y = cyclic4step(&c_hat, &args[6], &args[7], &args[8], q, n1, n2);
+            Ok(mulmod_vec(&y, &args[9], md))
+        }
     }
 }
 
@@ -117,7 +349,7 @@ fn parse_meta(name: &str, entry: &Json) -> Result<ArtifactMeta> {
     let file = entry
         .get("file")
         .and_then(|v| v.as_str())
-        .ok_or_else(|| anyhow!("'{name}': missing file"))?
+        .ok_or_else(|| err(format!("'{name}': missing file")))?
         .to_string();
     let kind = entry
         .get("kind")
@@ -127,12 +359,12 @@ fn parse_meta(name: &str, entry: &Json) -> Result<ArtifactMeta> {
     let args = entry
         .get("args")
         .and_then(|v| v.as_arr())
-        .ok_or_else(|| anyhow!("'{name}': missing args"))?
+        .ok_or_else(|| err(format!("'{name}': missing args")))?
         .iter()
         .map(|a| {
             a.as_arr()
                 .map(|dims| dims.iter().filter_map(|d| d.as_usize()).collect())
-                .ok_or_else(|| anyhow!("'{name}': bad arg shape"))
+                .ok_or_else(|| err(format!("'{name}': bad arg shape")))
         })
         .collect::<Result<Vec<Vec<usize>>>>()?;
     let mut params = HashMap::new();
@@ -234,6 +466,9 @@ pub mod tables {
 #[cfg(test)]
 mod unit_tests {
     use super::*;
+    use crate::ckks::prime::pe_primes;
+    use crate::ckks::NttTable;
+    use crate::util::rng::Pcg64;
 
     #[test]
     fn parse_meta_roundtrip() {
@@ -249,6 +484,25 @@ mod unit_tests {
     }
 
     #[test]
+    fn malformed_manifest_is_rejected_at_resolve() {
+        // Wrong arg count for the kind: must fail at load, not panic later.
+        let j = Json::parse(
+            r#"{"file": "x.hlo.txt", "kind": "ntt", "n": 256, "n1": 16,
+                 "args": [[256], [256], [16, 16], [16, 16], [16, 16]]}"#,
+        )
+        .unwrap();
+        let m = parse_meta("x", &j).unwrap();
+        assert!(resolve_program(&m).is_err(), "5 args declared, ntt takes 7");
+        // n1 not dividing n: also a load-time error.
+        let j2 = Json::parse(
+            r#"{"file": "x.hlo.txt", "kind": "ntt", "n": 256, "n1": 24,
+                 "args": [[256], [256], [24, 24], [24, 11], [11, 11], [], []]}"#,
+        )
+        .unwrap();
+        assert!(resolve_program(&parse_meta("x", &j2).unwrap()).is_err());
+    }
+
+    #[test]
     fn ntt_inputs_are_consistent() {
         let q = crate::ckks::prime::pe_primes(256, 1)[0];
         let t = tables::build_ntt_inputs(256, 16, q);
@@ -258,5 +512,114 @@ mod unit_tests {
         // w1 is a Vandermonde of a 16th root: w1[1*1] ^ 16 == 1.
         let m = crate::ckks::Modulus::new(q);
         assert_eq!(m.pow(t.w1[17] as u64, 16), 1);
+    }
+
+    #[test]
+    fn native_ntt_program_matches_rust_ntt() {
+        // The native executor's 4-step path is bit-exact with the
+        // iterative NTT — the same equivalence the PJRT artifacts are
+        // tested against when present.
+        let n = 256usize;
+        let n1 = 16usize;
+        let q = pe_primes(n, 1)[0];
+        let t = tables::build_ntt_inputs(n, n1, q);
+        let mut rng = Pcg64::new(0x11A);
+        let a: Vec<u32> = (0..n).map(|_| rng.below(q) as u32).collect();
+        let args = vec![
+            a.clone(),
+            t.psi_pows.clone(),
+            t.w1.clone(),
+            t.tw.clone(),
+            t.w2.clone(),
+            vec![t.q],
+            vec![t.mu],
+        ];
+        let got = execute(&NativeProgram::Ntt { n, n1 }, &args).unwrap();
+        let table = NttTable::with_psi(n, q, crate::ckks::prime::root_of_unity(2 * n as u64, q));
+        let mut want: Vec<u64> = a.iter().map(|&x| x as u64).collect();
+        table.forward(&mut want);
+        assert!(got.iter().zip(&want).all(|(&g, &w)| g as u64 == w));
+    }
+
+    #[test]
+    fn native_ntt_intt_roundtrip() {
+        let n = 256usize;
+        let n1 = 16usize;
+        let q = pe_primes(n, 1)[0];
+        let t = tables::build_ntt_inputs(n, n1, q);
+        let mut rng = Pcg64::new(0x22B);
+        let a: Vec<u32> = (0..n).map(|_| rng.below(q) as u32).collect();
+        let fwd = execute(
+            &NativeProgram::Ntt { n, n1 },
+            &[a.clone(), t.psi_pows.clone(), t.w1.clone(), t.tw.clone(),
+              t.w2.clone(), vec![t.q], vec![t.mu]],
+        )
+        .unwrap();
+        let back = execute(
+            &NativeProgram::Intt { n, n1 },
+            &[fwd, t.w1_inv.clone(), t.tw_inv.clone(), t.w2_inv.clone(),
+              t.psi_inv_n_inv_pows.clone(), vec![t.q], vec![t.mu]],
+        )
+        .unwrap();
+        assert_eq!(back, a);
+    }
+
+    #[test]
+    fn native_baseconv_matches_ckks_table() {
+        // Compare the padded artifact-shaped BConv against the CKKS
+        // BaseConvTable on a 30-bit tower (bit-exact).
+        use crate::ckks::poly::{Format, RnsPoly, Tower};
+        use crate::ckks::BaseConvTable;
+        let n = 64usize;
+        let alpha = 4usize;
+        let l = 8usize;
+        let alpha_pad = 16usize;
+        let primes = pe_primes(n, alpha + l);
+        let tower = Tower::new(n, &primes);
+        let src: Vec<usize> = (0..alpha).collect();
+        let dst: Vec<usize> = (alpha..alpha + l).collect();
+        let table = BaseConvTable::new(&tower, &src, &dst);
+
+        let mut rng = Pcg64::new(0x33C);
+        let mut poly = RnsPoly::zero(&tower, &src, Format::Coeff);
+        for (j, limb) in poly.limbs.iter_mut().enumerate() {
+            for x in limb.iter_mut() {
+                *x = rng.below(primes[j]);
+            }
+        }
+        let want = table.convert(&poly, &tower);
+
+        // Build the artifact-shaped inputs (python build_baseconv_tables).
+        let filler = primes[0];
+        let mut rx = vec![0u32; alpha_pad * n];
+        for j in 0..alpha {
+            for t in 0..n {
+                rx[j * n + t] = poly.limbs[j][t] as u32;
+            }
+        }
+        let mut phat_inv: Vec<u32> = table.phat_inv.iter().map(|&v| v as u32).collect();
+        phat_inv.resize(alpha_pad, 0);
+        let mut p: Vec<u32> = primes[..alpha].iter().map(|&v| v as u32).collect();
+        p.resize(alpha_pad, filler as u32);
+        let mut mu_p: Vec<u32> = primes[..alpha].iter().map(|&v| tables::barrett_mu(v)).collect();
+        mu_p.resize(alpha_pad, tables::barrett_mu(filler));
+        let mut conv = vec![0u32; alpha_pad * l];
+        for (i, row) in table.conv.iter().enumerate() {
+            for (j, &v) in row.iter().enumerate() {
+                conv[j * l + i] = v as u32; // python layout: conv[j][i]
+            }
+        }
+        let q: Vec<u32> = primes[alpha..].iter().map(|&v| v as u32).collect();
+        let mu_q: Vec<u32> = primes[alpha..].iter().map(|&v| tables::barrett_mu(v)).collect();
+        let got = execute(
+            &NativeProgram::BaseConv { alpha_pad, l, n },
+            &[rx, phat_inv, p, mu_p, conv, q, mu_q],
+        )
+        .unwrap();
+        for i in 0..l {
+            for t in 0..n {
+                assert_eq!(got[i * n + t] as u64, want.limbs[i][t], "({i},{t})");
+            }
+        }
     }
 }

@@ -10,10 +10,14 @@
 //! * operand-stationary: the stationary operand's partial sums only move
 //!   after the full T-stage pipeline drains, inserting T-cycle bubbles.
 
+use crate::ckks::modlin;
 use crate::ckks::Modulus30;
 
-pub const ROWS: usize = 16;
-pub const COLS: usize = 8;
+/// Grid geometry is the MLT engine's native tile shape (one definition of
+/// the transform across the systolic model, codegen and the software
+/// kernel — see [`crate::ckks::modlin`]).
+pub const ROWS: usize = modlin::TILE_M;
+pub const COLS: usize = modlin::TILE_N;
 /// PE pipeline depth (6-stage Barrett MAC, SIV-C).
 pub const PE_STAGES: u64 = 6;
 
@@ -47,25 +51,11 @@ pub fn fhec_16816_cycles() -> u64 {
 /// Functional model: execute `C[MxN] = A[MxK] x B[KxN] mod q[N]` exactly
 /// as the grid does — output-stationary accumulation with a Barrett
 /// reduction after every MAC, and *per-column* moduli (the mixed-moduli
-/// BaseConv mode of SV-B).
+/// BaseConv mode of SV-B). Delegates to the shared MLT definition in
+/// [`crate::ckks::modlin::modmatmul_pe`], which the native artifact
+/// executor in [`crate::runtime`] also runs.
 pub fn modmatmul(a: &[u32], b: &[u32], m: usize, k: usize, n: usize, q: &[u32]) -> Vec<u32> {
-    assert_eq!(a.len(), m * k);
-    assert_eq!(b.len(), k * n);
-    assert_eq!(q.len(), n);
-    let mods: Vec<Modulus30> = q.iter().map(|&x| Modulus30::new(x)).collect();
-    let mut c = vec![0u32; m * n];
-    for i in 0..m {
-        for j in 0..n {
-            let md = mods[j];
-            let mut r = 0u32;
-            for t in 0..k {
-                // R <- (R + a*b) mod q: one PE MAC per cycle.
-                r = md.mac(r, md.barrett(a[i * k + t] as u64), md.barrett(b[t * n + j] as u64));
-            }
-            c[i * n + j] = r;
-        }
-    }
-    c
+    modlin::modmatmul_pe(a, b, m, k, n, q)
 }
 
 /// INT8 segmentation path (Algorithm 1's Tensor-Core baseline): decompose

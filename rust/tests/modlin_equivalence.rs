@@ -1,0 +1,133 @@
+//! Bit-exactness properties for the unified MLT engine: the modlin-backed
+//! base conversion must equal the Eq. 3 per-term reference, and the
+//! plan-cached 4-step NTT must equal both the uncached reference and the
+//! iterative transform — across ring sizes, prime widths (30/45/58 bits)
+//! and degenerate chains (alpha = 1, L = 1).
+
+use fhecore::ckks::poly::{Format, RnsPoly, Tower};
+use fhecore::ckks::prime::ntt_primes;
+use fhecore::ckks::{BaseConvScratch, BaseConvTable, NttTable};
+use fhecore::util::prop::check;
+use fhecore::util::rng::Pcg64;
+
+fn rand_src_poly(tower: &Tower, chain: &[usize], rng: &mut Pcg64) -> RnsPoly {
+    let mut poly = RnsPoly::zero(tower, chain, Format::Coeff);
+    for (i, limb) in poly.limbs.iter_mut().enumerate() {
+        let q = tower.contexts[chain[i]].modulus.value();
+        for x in limb.iter_mut() {
+            *x = rng.below(q);
+        }
+    }
+    poly
+}
+
+#[test]
+fn prop_baseconv_mlt_bit_identical_to_reference() {
+    check("baseconv-mlt-equiv", 18, |rng| {
+        let n = 1usize << (4 + rng.below(4)); // 16..128
+        let bits = [30u32, 45, 58][rng.below(3) as usize];
+        let alpha = 1 + rng.below(6) as usize; // includes alpha = 1
+        let lout = 1 + rng.below(8) as usize; // includes L = 1
+        let primes = ntt_primes(n, bits, alpha + lout);
+        let tower = Tower::new(n, &primes);
+        let src: Vec<usize> = (0..alpha).collect();
+        let dst: Vec<usize> = (alpha..alpha + lout).collect();
+        let table = BaseConvTable::new(&tower, &src, &dst);
+        let poly = rand_src_poly(&tower, &src, rng);
+        let fast = table.convert(&poly, &tower);
+        let slow = table.convert_reference(&poly, &tower);
+        assert_eq!(
+            fast.limbs, slow.limbs,
+            "n={n} bits={bits} alpha={alpha} lout={lout}"
+        );
+    });
+}
+
+#[test]
+fn prop_convert_into_matches_convert_across_reuse() {
+    // One scratch + one output buffer reused across differently-sized
+    // conversions must still be bit-identical to the reference.
+    check("baseconv-scratch-reuse", 8, |rng| {
+        let n = 32usize;
+        let bits = [30u32, 45, 58][rng.below(3) as usize];
+        let primes = ntt_primes(n, bits, 12);
+        let tower = Tower::new(n, &primes);
+        let mut scratch = BaseConvScratch::default();
+        let mut out = RnsPoly::zero(&tower, &[0], Format::Coeff);
+        for _ in 0..3 {
+            let alpha = 1 + rng.below(4) as usize;
+            let lout = 1 + rng.below(6) as usize;
+            let src: Vec<usize> = (0..alpha).collect();
+            let dst: Vec<usize> = (alpha..alpha + lout).collect();
+            let table = BaseConvTable::new(&tower, &src, &dst);
+            let poly = rand_src_poly(&tower, &src, rng);
+            table.convert_into(&poly, &tower, &mut scratch, &mut out);
+            let want = table.convert_reference(&poly, &tower);
+            assert_eq!(out.limbs, want.limbs, "bits={bits} alpha={alpha} lout={lout}");
+            assert_eq!(out.chain, want.chain);
+        }
+    });
+}
+
+#[test]
+fn prop_four_step_cached_matches_reference_and_iterative() {
+    check("four-step-equiv", 12, |rng| {
+        let n = 1usize << (4 + rng.below(5)); // 16..256
+        let bits = [30u32, 45, 58][rng.below(3) as usize];
+        let q = ntt_primes(n, bits, 1)[0];
+        let t = NttTable::new(n, q);
+        let a: Vec<u64> = (0..n).map(|_| rng.below(q)).collect();
+
+        let mut iterative = a.clone();
+        t.forward(&mut iterative);
+
+        // Every power-of-two factorization, including the degenerate
+        // N1 = 1 and N1 = N splits.
+        let mut n1 = 1usize;
+        while n1 <= n {
+            let cached = t.forward_4step(&a, n1);
+            assert_eq!(
+                cached,
+                t.forward_4step_reference(&a, n1),
+                "n={n} bits={bits} n1={n1}: cached != reference"
+            );
+            assert_eq!(cached, iterative, "n={n} bits={bits} n1={n1}: != iterative");
+            n1 <<= 2;
+        }
+    });
+}
+
+#[test]
+fn prop_keyswitch_pipeline_unchanged_by_mlt_rewiring() {
+    // End-to-end invariant: ModUp -> ModDown through the rewired
+    // conversion still reproduces small values exactly (the hybrid
+    // key-switching contract that `mod_down` closes).
+    use fhecore::ckks::RnsTools;
+    check("modup-moddown-roundtrip", 6, |rng| {
+        let n = 16usize;
+        let bits = [30u32, 45][rng.below(2) as usize];
+        let primes = ntt_primes(n, bits, 4);
+        let tower = Tower::new(n, &primes);
+        let q: Vec<usize> = vec![0, 1];
+        let p: Vec<usize> = vec![2, 3];
+        let tools = RnsTools::new(&tower, &q, &p);
+        let conv_p_to_q = BaseConvTable::new(&tower, &p, &q);
+        let p_prod: u128 = p
+            .iter()
+            .map(|&i| tower.contexts[i].modulus.value() as u128)
+            .product();
+        let x: u128 = rng.below(1 << 30) as u128;
+        let xp = x * p_prod;
+        let full: Vec<usize> = q.iter().chain(p.iter()).copied().collect();
+        let mut poly = RnsPoly::zero(&tower, &full, Format::Coeff);
+        for (i, &ci) in full.iter().enumerate() {
+            let m = tower.contexts[ci].modulus.value() as u128;
+            poly.limbs[i][7] = (xp % m) as u64;
+        }
+        let down = tools.mod_down(&poly, &conv_p_to_q, &tower);
+        for (i, &ci) in q.iter().enumerate() {
+            let m = tower.contexts[ci].modulus.value() as u128;
+            assert_eq!(down.limbs[i][7] as u128, x % m, "limb {i} bits={bits}");
+        }
+    });
+}
