@@ -4,7 +4,7 @@
 use fhecore::bench_harness::Bench;
 use fhecore::ckks::encoding::Complex;
 use fhecore::ckks::params::{CkksContext, CkksParams};
-use fhecore::ckks::{Evaluator, SecretKey};
+use fhecore::ckks::{EvalKeySpec, Evaluator, KeyGen};
 use fhecore::coordinator::{Coordinator, ModelState, OpKind, Request, ServeConfig};
 use fhecore::gpusim::{simulate_trace, GpuConfig};
 use fhecore::util::rng::Pcg64;
@@ -16,22 +16,28 @@ fn main() {
     let mut bench = Bench::new("e2e");
 
     // Serving throughput on the toy context (fast enough to iterate).
+    // Keys are generated once, client-side; workers hold only the public
+    // set, so there is no key bank to warm.
     let ctx = CkksContext::new(CkksParams::toy());
     let mut rng = Pcg64::new(0xE2E);
-    let sk = Arc::new(SecretKey::generate(&ctx, &mut rng));
-    let ev = Arc::new(Evaluator::new(ctx));
+    let keygen = KeyGen::new(&ctx, &mut rng);
+    // The benched Rotate(1) requests run at max_level only.
+    let spec = EvalKeySpec::serving(ctx.params.slots()).at_levels(vec![ctx.max_level()]);
+    let keys = keygen.eval_key_set(&ctx, &spec, &mut rng);
+    let enc = keygen.encryptor();
+    let ev = Arc::new(Evaluator::new(ctx, Arc::new(keys)));
     let slots = ev.ctx.params.slots();
     let w: Vec<Complex> = (0..slots).map(|i| Complex::new(0.01 * (i % 10) as f64, 0.0)).collect();
     let model = Arc::new(ModelState { weights_pt: ev.encode(&w, ev.ctx.max_level()), rot_steps: slots });
-    let coord = Coordinator::start(ev.clone(), sk.clone(), model, ServeConfig::default());
+    let coord = Coordinator::start(ev.clone(), model, ServeConfig::default());
     let z = vec![Complex::new(0.25, 0.0); slots];
-    let base_ct = ev.encrypt(&ev.encode(&z, ev.ctx.max_level()), &sk, &mut rng);
-    // warm key bank
-    let _ = ev.rotate(&base_ct, 1, &sk);
+    let base_ct = enc.encrypt_slots(&ev.ctx, &z, ev.ctx.max_level(), &mut rng);
     let mut id = 0u64;
     bench.run("serve/rotate_request", || {
         id += 1;
-        let rx = coord.submit(Request { id, op: OpKind::Rotate(1), ct: base_ct.clone() });
+        let rx = coord
+            .submit(Request { id, op: OpKind::Rotate(1), ct: base_ct.clone() })
+            .expect("one in flight at a time");
         black_box(rx.recv().unwrap());
     });
 

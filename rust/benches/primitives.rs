@@ -1,9 +1,18 @@
 //! CKKS primitive benchmarks (HEMult / Rotate / Rescale) — the functional
 //! substrate's answer to Table VII (software timings, not GPU latencies).
+//!
+//! The `keyswitch/*` pair is the before/after record of the key-switch
+//! scratch refactor: `alloc_reference` is the old per-digit-allocating
+//! pipeline, `scratch` the `KeySwitchScratch`-backed one behind
+//! `Evaluator::{mul, rotate}` today. `bench_archive` copies both medians
+//! into EXPERIMENTS.md.
+use std::sync::Arc;
+
 use fhecore::bench_harness::Bench;
 use fhecore::ckks::encoding::Complex;
+use fhecore::ckks::keys::{sample_uniform, KeySwitchScratch};
 use fhecore::ckks::params::{CkksContext, CkksParams};
-use fhecore::ckks::{Evaluator, SecretKey};
+use fhecore::ckks::{EvalKeySpec, Evaluator, KeyGen, KeyKind};
 use fhecore::util::rng::Pcg64;
 use std::hint::black_box;
 
@@ -11,22 +20,24 @@ fn main() {
     let mut bench = Bench::new("primitives");
     let ctx = CkksContext::new(CkksParams::toy());
     let mut rng = Pcg64::new(0xB);
-    let sk = SecretKey::generate(&ctx, &mut rng);
-    let ev = Evaluator::new(ctx);
+    // Client-side keygen: the public EvalKeySet is generated once, up
+    // front — steady-state op cost includes no key derivation at all.
+    let keygen = KeyGen::new(&ctx, &mut rng);
+    // All benched ops run on level-3 ciphertexts.
+    let spec = EvalKeySpec::serving(ctx.params.slots()).at_levels(vec![3]);
+    let keys = keygen.eval_key_set(&ctx, &spec, &mut rng);
+    let enc = keygen.encryptor();
+    let ev = Evaluator::new(ctx, Arc::new(keys));
     let slots = ev.ctx.params.slots();
     let z: Vec<Complex> = (0..slots).map(|i| Complex::new(0.01 * i as f64, 0.0)).collect();
-    let ct = ev.encrypt(&ev.encode(&z, 3), &sk, &mut rng);
+    let ct = enc.encrypt_slots(&ev.ctx, &z, 3, &mut rng);
     let pt = ev.encode(&z, 3);
 
-    // prime the key bank so steady-state cost is measured
-    let _ = ev.mul(&ct, &ct, &sk);
-    let _ = ev.rotate(&ct, 1, &sk);
-
     bench.run("hemult/n256_l3", || {
-        black_box(ev.mul(black_box(&ct), &ct, &sk));
+        black_box(ev.mul(black_box(&ct), &ct).unwrap());
     });
     bench.run("rotate/n256_l3", || {
-        black_box(ev.rotate(black_box(&ct), 1, &sk));
+        black_box(ev.rotate(black_box(&ct), 1).unwrap());
     });
     bench.run("rescale/n256_l3", || {
         black_box(ev.rescale(black_box(&ct)));
@@ -36,6 +47,18 @@ fn main() {
     });
     bench.run("headd/n256_l3", || {
         black_box(ev.add(black_box(&ct), &ct));
+    });
+
+    // Key-switch before/after: same key, same operand, allocating vs
+    // scratch-reusing pipeline.
+    let ksk = ev.keys().get(KeyKind::Relin, 3).expect("relin key").clone();
+    let d = sample_uniform(&ev.ctx, &ev.ctx.chain_at(3), &mut rng);
+    let mut scratch = KeySwitchScratch::default();
+    bench.run("keyswitch/scratch/n256_l3", || {
+        black_box(ksk.apply_with(&ev.ctx, black_box(&d), &mut scratch));
+    });
+    bench.run("keyswitch/alloc_reference/n256_l3", || {
+        black_box(ksk.apply_reference(&ev.ctx, black_box(&d)));
     });
     bench.write_json().expect("bench json dump");
 }

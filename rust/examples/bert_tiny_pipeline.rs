@@ -4,10 +4,13 @@
 //! model (Table VIII's largest row).
 //!
 //! Run: `cargo run --release --example bert_tiny_pipeline`
+use std::sync::Arc;
+
 use fhecore::ckks::encoding::Complex;
+use fhecore::ckks::keys::bsgs_steps;
 use fhecore::ckks::linear::{hom_linear, SlotMatrix};
 use fhecore::ckks::params::{CkksContext, CkksParams};
-use fhecore::ckks::{Evaluator, SecretKey};
+use fhecore::ckks::{EvalKeySpec, Evaluator, KeyGen};
 use fhecore::gpusim::{simulate_trace, GpuConfig};
 use fhecore::util::rng::Pcg64;
 use fhecore::workloads::workload_pair;
@@ -16,8 +19,14 @@ fn main() {
     // ---- functional encrypted attention-score block at small scale ----
     let ctx = CkksContext::new(CkksParams::toy());
     let mut rng = Pcg64::new(0xBE27);
-    let sk = SecretKey::generate(&ctx, &mut rng);
-    let ev = Evaluator::new(ctx);
+    // Client: relin + the BSGS rotations the JKLS matmul consumes.
+    let keygen = KeyGen::new(&ctx, &mut rng);
+    let spec = EvalKeySpec::relin_only().with_rotations(&bsgs_steps(ctx.params.slots()));
+    let eval_keys = keygen.eval_key_set(&ctx, &spec, &mut rng);
+    let enc = keygen.encryptor();
+    let dec = keygen.decryptor();
+    // Server: public keys only.
+    let ev = Evaluator::new(ctx, Arc::new(eval_keys));
     let d = ev.ctx.params.slots(); // "model dim" = slot count here
 
     // random projection matrix (the W_Q of one head), scaled small
@@ -28,13 +37,13 @@ fn main() {
         }
     }
     let x: Vec<Complex> = (0..d).map(|i| Complex::new(0.3 * ((i % 11) as f64 / 11.0 - 0.5), 0.0)).collect();
-    let ct = ev.encrypt(&ev.encode(&x, 3), &sk, &mut rng);
+    let ct = enc.encrypt_slots(&ev.ctx, &x, 3, &mut rng);
 
     let t0 = std::time::Instant::now();
     // q = W_Q x  (JKLS BSGS diagonal method)
-    let q = hom_linear(&ev, &ct, &wq, &sk);
+    let q = hom_linear(&ev, &ct, &wq).expect("BSGS keys declared");
     // softmax surrogate: exp(t) ~ 1 + t + t^2/2 on the projected scores
-    let t2 = ev.mul(&q, &q, &sk);
+    let t2 = ev.mul(&q, &q).expect("relin key declared");
     let half_t2 = ev.mul_const(&t2, 0.5);
     let q_aligned = ev.level_reduce(&q, half_t2.level);
     let sum = ev.add(&q_aligned, &half_t2);
@@ -44,7 +53,7 @@ fn main() {
         t0.elapsed(),
         soft.level
     );
-    let got = ev.decrypt_to_slots(&soft, &sk);
+    let got = dec.decrypt_to_slots(&ev.ctx, &soft);
     let want = {
         let qv = wq.matvec(&x);
         qv.iter().map(|c| 1.0 + c.re + 0.5 * c.re * c.re).collect::<Vec<_>>()

@@ -3,10 +3,12 @@
 //! through the timing model.
 //!
 //! Run: `cargo run --release --example bootstrap_sweep`
+use std::sync::Arc;
+
 use fhecore::ckks::bootstrap::{bootstrap, BootstrapConfig};
 use fhecore::ckks::encoding::Complex;
 use fhecore::ckks::params::{CkksContext, CkksParams, WidthProfile};
-use fhecore::ckks::{Evaluator, SecretKey};
+use fhecore::ckks::{EvalKeySpec, Evaluator, KeyGen};
 use fhecore::util::rng::Pcg64;
 
 fn main() {
@@ -21,18 +23,27 @@ fn main() {
     };
     let ctx = CkksContext::new(params);
     let mut rng = Pcg64::new(0xB00);
-    let sk = SecretKey::generate(&ctx, &mut rng);
-    let ev = Evaluator::new(ctx);
+    // Client: EvalKeySpec::bootstrap declares relin, conjugation and the
+    // BSGS matrix rotations — everything the server-side bootstrap needs.
+    let keygen = KeyGen::new(&ctx, &mut rng);
+    let kt = std::time::Instant::now();
+    let eval_keys =
+        keygen.eval_key_set(&ctx, &EvalKeySpec::bootstrap(ctx.params.slots()), &mut rng);
+    println!("generated {} public eval keys in {:.2?}", eval_keys.len(), kt.elapsed());
+    let enc = keygen.encryptor();
+    let dec = keygen.decryptor();
+    let ev = Evaluator::new(ctx, Arc::new(eval_keys));
     let slots = ev.ctx.params.slots();
     let z: Vec<Complex> = (0..slots)
         .map(|i| Complex::new(0.2 * ((i % 5) as f64 - 2.0), 0.0))
         .collect();
-    let ct0 = ev.encrypt(&ev.encode(&z, 0), &sk, &mut rng);
+    let ct0 = enc.encrypt_slots(&ev.ctx, &z, 0, &mut rng);
     println!("input: exhausted ciphertext at level {}", ct0.level);
     let t0 = std::time::Instant::now();
-    let boosted = bootstrap(&ev, &ct0, &BootstrapConfig::default(), &sk);
-    let err = ev
-        .decrypt_to_slots(&boosted, &sk)
+    let boosted =
+        bootstrap(&ev, &ct0, &BootstrapConfig::default()).expect("bootstrap key set");
+    let err = dec
+        .decrypt_to_slots(&ev.ctx, &boosted)
         .iter()
         .zip(&z)
         .map(|(a, b)| (a.re - b.re).abs())

@@ -12,7 +12,7 @@
 //! Run: `cargo run --release --example encrypted_lr_serving`
 use fhecore::ckks::encoding::Complex;
 use fhecore::ckks::params::{CkksContext, CkksParams};
-use fhecore::ckks::{Evaluator, SecretKey};
+use fhecore::ckks::{EvalKeySpec, Evaluator, KeyGen};
 use fhecore::coordinator::{Coordinator, ModelState, OpKind, Request, ServeConfig};
 use fhecore::util::rng::Pcg64;
 use std::sync::Arc;
@@ -66,8 +66,13 @@ fn main() {
     let ctx = CkksContext::new(CkksParams::toy()); // N=256, 128 slots >= 196? pack 2 cts? use 128-feature slice
     let slots = ctx.params.slots();
     let used = FEATURES.min(slots);
-    let sk = Arc::new(SecretKey::generate(&ctx, &mut rng));
-    let ev = Arc::new(Evaluator::new(ctx));
+    // Client side: secret key stays here; the server gets only the public
+    // EvalKeySet (relin + conjugation + rotate-and-sum steps).
+    let keygen = KeyGen::new(&ctx, &mut rng);
+    let eval_keys = keygen.eval_key_set(&ctx, &EvalKeySpec::serving(slots), &mut rng);
+    let enc = keygen.encryptor();
+    let dec = keygen.decryptor();
+    let ev = Arc::new(Evaluator::new(ctx, Arc::new(eval_keys)));
     let wz: Vec<Complex> = (0..slots)
         .map(|j| Complex::new(if j < used { w[j] } else { 0.0 }, 0.0))
         .collect();
@@ -75,7 +80,7 @@ fn main() {
         weights_pt: ev.encode(&wz, ev.ctx.max_level()),
         rot_steps: slots,
     });
-    let coord = Coordinator::start(ev.clone(), sk.clone(), model, ServeConfig::default());
+    let coord = Coordinator::start(ev.clone(), model, ServeConfig::default());
 
     let n_test = 24;
     let t0 = std::time::Instant::now();
@@ -90,14 +95,19 @@ fn main() {
         let z: Vec<Complex> = (0..slots)
             .map(|j| Complex::new(if j < used { x[j] } else { 0.0 }, 0.0))
             .collect();
-        let ct = ev.encrypt(&ev.encode(&z, ev.ctx.max_level()), &sk, &mut rng);
-        rxs.push(coord.submit(Request { id: i as u64, op: OpKind::LinearScore, ct }));
+        let ct = enc.encrypt_slots(&ev.ctx, &z, ev.ctx.max_level(), &mut rng);
+        rxs.push(
+            coord
+                .submit(Request { id: i as u64, op: OpKind::LinearScore, ct })
+                .expect("under the queue bound"),
+        );
         let plain_z: f64 = w[..used].iter().zip(&x[..used]).map(|(a, b)| a * b).sum();
         truths.push((y, plain_z));
     }
     for (rx, &(y, plain_z)) in rxs.iter().zip(&truths) {
         let resp = rx.recv().unwrap();
-        let scored = ev.decrypt_to_slots(&resp.ct, &sk);
+        let out = resp.ct.as_ref().expect("serving key set covers LinearScore");
+        let scored = dec.decrypt_to_slots(&ev.ctx, out);
         let enc_z = scored[0].re; // rotate-and-sum leaves the dot in every slot
         if (enc_z > 0.0) == (y > 0.5) {
             correct += 1;

@@ -1,33 +1,45 @@
-//! Quickstart: encrypt a vector, compute on it homomorphically, decrypt —
-//! then ask the co-design stack what FHECore would buy you on this op mix.
+//! Quickstart: the client/server key model end to end. The client
+//! generates the secret key and a public evaluation-key set, encrypts a
+//! vector; the server computes on it holding *only* the public keys; the
+//! client decrypts — then we ask the co-design stack what FHECore would
+//! buy on this op mix.
 //!
 //! Run: `cargo run --release --example quickstart`
+use std::sync::Arc;
+
 use fhecore::ckks::encoding::Complex;
 use fhecore::ckks::params::{CkksContext, CkksParams};
-use fhecore::ckks::{Evaluator, SecretKey};
+use fhecore::ckks::{EvalKeySpec, Evaluator, KeyGen};
 use fhecore::codegen::{Backend, Compiler, SimParams};
 use fhecore::gpusim::{simulate_trace, GpuConfig};
 use fhecore::util::rng::Pcg64;
 
 fn main() {
-    // 1. Client side: keys, encode, encrypt.
+    // 1. Client side: KeyGen owns the secret key and derives the public
+    //    EvalKeySet up front ((2x+1)^2 only needs the relin key).
     let ctx = CkksContext::new(CkksParams::toy());
     let mut rng = Pcg64::new(42);
-    let sk = SecretKey::generate(&ctx, &mut rng);
-    let ev = Evaluator::new(ctx);
+    let keygen = KeyGen::new(&ctx, &mut rng);
+    let eval_keys = keygen.eval_key_set(&ctx, &EvalKeySpec::relin_only(), &mut rng);
+    let enc = keygen.encryptor();
+    let dec = keygen.decryptor();
+
+    // 2. Server side: the Evaluator is built from the public keys alone —
+    //    no SecretKey in scope past this point.
+    let ev = Evaluator::new(ctx, Arc::new(eval_keys));
     let slots = ev.ctx.params.slots();
     let xs: Vec<Complex> = (0..slots).map(|i| Complex::new(0.05 * (i % 10) as f64, 0.0)).collect();
-    let ct = ev.encrypt(&ev.encode(&xs, 3), &sk, &mut rng);
+    let ct = enc.encrypt_slots(&ev.ctx, &xs, 3, &mut rng);
     println!("encrypted {} slots at level {}", slots, ct.level);
 
-    // 2. Server side: compute (2x + 1)^2 without ever seeing x.
+    // Compute (2x + 1)^2 without ever seeing x.
     let doubled = ev.mul_const(&ct, 2.0);
     let shifted = ev.add_const(&doubled, 1.0);
-    let squared = ev.mul(&shifted, &shifted, &sk);
+    let squared = ev.mul(&shifted, &shifted).expect("relin key was declared");
     println!("computed (2x+1)^2 homomorphically, level now {}", squared.level);
 
     // 3. Client side: decrypt and check.
-    let out = ev.decrypt_to_slots(&squared, &sk);
+    let out = dec.decrypt_to_slots(&ev.ctx, &squared);
     let worst = out
         .iter()
         .enumerate()

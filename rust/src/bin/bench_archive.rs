@@ -1,0 +1,178 @@
+//! Append the medians from `BENCH_*.json` dumps to the bench-trajectory
+//! table in EXPERIMENTS.md — the persistent before/after record the
+//! ROADMAP asks for. CI runs it after the bench smoke; locally:
+//!
+//! ```text
+//! FHECORE_BENCH_FAST=1 cargo bench --bench primitives
+//! cargo run --release --bin bench_archive -- --dir rust --out EXPERIMENTS.md
+//! ```
+//!
+//! Each row records (UTC date, commit, bench, case id, median, p05, p95),
+//! so successive runs of e.g. `keyswitch/scratch` vs
+//! `keyswitch/alloc_reference` build the HEMult before/after trajectory.
+
+use std::fmt::Write as _;
+use std::time::{SystemTime, UNIX_EPOCH};
+
+use fhecore::util::cli::Args;
+use fhecore::util::json::Json;
+
+const HEADING: &str = "## Bench trajectory";
+const TABLE_HEAD: &str =
+    "| date | commit | bench | case | median | p05 | p95 |\n|---|---|---|---|---|---|---|\n";
+
+fn main() {
+    let args = Args::from_env();
+    let dir = args.opt("dir").unwrap_or(".").to_string();
+    let out_path = args.opt("out").unwrap_or("EXPERIMENTS.md").to_string();
+
+    let mut dumps: Vec<(String, Json)> = Vec::new();
+    let entries = match std::fs::read_dir(&dir) {
+        Ok(e) => e,
+        Err(e) => {
+            eprintln!("bench_archive: cannot read {dir}: {e}");
+            std::process::exit(1);
+        }
+    };
+    for entry in entries.flatten() {
+        let name = entry.file_name().to_string_lossy().to_string();
+        if !(name.starts_with("BENCH_") && name.ends_with(".json")) {
+            continue;
+        }
+        match std::fs::read_to_string(entry.path()) {
+            Ok(text) => match Json::parse(&text) {
+                Ok(j) => dumps.push((name, j)),
+                Err(e) => eprintln!("bench_archive: skipping {name}: bad json ({e})"),
+            },
+            Err(e) => eprintln!("bench_archive: skipping {name}: {e}"),
+        }
+    }
+    dumps.sort_by(|a, b| a.0.cmp(&b.0));
+    if dumps.is_empty() {
+        eprintln!("bench_archive: no BENCH_*.json under {dir}; run a bench first");
+        std::process::exit(1);
+    }
+
+    let date = utc_date();
+    let commit = commit_id();
+    let existing = std::fs::read_to_string(&out_path).unwrap_or_default();
+    let mut rows = String::new();
+    let mut count = 0usize;
+    let mut skipped = 0usize;
+    for (_, dump) in &dumps {
+        let bench = dump.get("name").and_then(|n| n.as_str()).unwrap_or("?").to_string();
+        let results = dump
+            .get("results")
+            .and_then(|r| r.as_arr())
+            .map(|s| s.to_vec())
+            .unwrap_or_default();
+        for case in &results {
+            let id = case.get("id").and_then(|i| i.as_str()).unwrap_or("?");
+            // Idempotent: a (commit, bench, case) triple is archived once.
+            let key = format!("| {commit} | {bench} | {id} |");
+            if existing.contains(&key) || rows.contains(&key) {
+                skipped += 1;
+                continue;
+            }
+            let med = case.get("median_ns").and_then(|x| x.as_f64()).unwrap_or(0.0);
+            let p05 = case.get("p05_ns").and_then(|x| x.as_f64()).unwrap_or(0.0);
+            let p95 = case.get("p95_ns").and_then(|x| x.as_f64()).unwrap_or(0.0);
+            let _ = writeln!(
+                rows,
+                "| {date} {key} {} | {} | {} |",
+                fhecore::bench_harness::fmt_ns(med),
+                fhecore::bench_harness::fmt_ns(p05),
+                fhecore::bench_harness::fmt_ns(p95),
+            );
+            count += 1;
+        }
+    }
+
+    let updated = match existing.find(HEADING) {
+        Some(pos) => {
+            // Insert at the end of the heading's table block (the last
+            // consecutive '|' line after it), not at the end of the file
+            // — sections added below the table stay untouched.
+            let after_heading = pos + HEADING.len();
+            let mut cursor = after_heading;
+            let mut last_pipe_end: Option<usize> = None;
+            for line in existing[after_heading..].split_inclusive('\n') {
+                let t = line.trim();
+                if t.starts_with('|') {
+                    last_pipe_end = Some(cursor + line.len());
+                } else if !t.is_empty() {
+                    break; // the next section begins
+                }
+                cursor += line.len();
+            }
+            let (insert_at, prefix) = match last_pipe_end {
+                Some(at) => (at, String::new()),
+                // Heading exists but its table is missing: re-seed it.
+                None => (after_heading, format!("\n\n{TABLE_HEAD}")),
+            };
+            let mut s = String::with_capacity(existing.len() + prefix.len() + rows.len());
+            s.push_str(&existing[..insert_at]);
+            if !s.ends_with('\n') && prefix.is_empty() {
+                s.push('\n');
+            }
+            s.push_str(&prefix);
+            s.push_str(&rows);
+            s.push_str(&existing[insert_at..]);
+            s
+        }
+        None => {
+            let mut s = existing;
+            if !s.is_empty() && !s.ends_with("\n\n") {
+                s.push('\n');
+            }
+            s.push_str(HEADING);
+            s.push_str("\n\n");
+            s.push_str(TABLE_HEAD);
+            s.push_str(&rows);
+            s
+        }
+    };
+    if let Err(e) = std::fs::write(&out_path, updated) {
+        eprintln!("bench_archive: cannot write {out_path}: {e}");
+        std::process::exit(1);
+    }
+    println!(
+        "archived {count} bench rows ({skipped} already present) ({date}, {commit}) into {out_path}"
+    );
+}
+
+/// `GITHUB_SHA` (short) in CI, `git rev-parse --short HEAD` locally.
+/// Both truncated to 7 chars so the (commit, bench, case) dedup key
+/// matches across environments.
+fn commit_id() -> String {
+    if let Ok(sha) = std::env::var("GITHUB_SHA") {
+        return sha.chars().take(7).collect();
+    }
+    std::process::Command::new("git")
+        .args(["rev-parse", "--short=7", "HEAD"])
+        .output()
+        .ok()
+        .filter(|o| o.status.success())
+        .map(|o| String::from_utf8_lossy(&o.stdout).trim().to_string())
+        .unwrap_or_else(|| "worktree".to_string())
+}
+
+/// UTC date as YYYY-MM-DD (Howard Hinnant's civil-from-days algorithm;
+/// no chrono in this offline build).
+fn utc_date() -> String {
+    let secs = SystemTime::now()
+        .duration_since(UNIX_EPOCH)
+        .map(|d| d.as_secs())
+        .unwrap_or(0);
+    let z = (secs / 86_400) as i64 + 719_468;
+    let era = z.div_euclid(146_097);
+    let doe = z.rem_euclid(146_097) as u64;
+    let yoe = (doe - doe / 1460 + doe / 36_524 - doe / 146_096) / 365;
+    let y = yoe as i64 + era * 400;
+    let doy = doe - (365 * yoe + yoe / 4 - yoe / 100);
+    let mp = (5 * doy + 2) / 153;
+    let d = doy - (153 * mp + 2) / 5 + 1;
+    let m = if mp < 10 { mp + 3 } else { mp - 9 };
+    let y = if m <= 2 { y + 1 } else { y };
+    format!("{y:04}-{m:02}-{d:02}")
+}

@@ -21,7 +21,7 @@
 //! `workloads::bootstrap` + `gpusim` (see DESIGN.md).
 
 use super::encoding::Complex;
-use super::keys::SecretKey;
+use super::keys::MissingKey;
 use super::linear::{hom_linear, SlotMatrix};
 use super::ops::{Ciphertext, Evaluator};
 use super::params::CkksContext;
@@ -116,12 +116,11 @@ pub fn mod_raise(ev: &Evaluator, ct: &Ciphertext) -> Ciphertext {
 fn split_real_imag(
     ev: &Evaluator,
     ct: &Ciphertext,
-    sk: &SecretKey,
-) -> (Ciphertext, Ciphertext) {
-    let conj = ev.conjugate(ct, sk);
+) -> Result<(Ciphertext, Ciphertext), MissingKey> {
+    let conj = ev.conjugate(ct)?;
     let re2 = ev.add(ct, &conj);
     let im2i = ev.sub(ct, &conj);
-    (re2, im2i)
+    Ok((re2, im2i))
 }
 
 /// Multiply every slot by an arbitrary complex constant (one level).
@@ -143,15 +142,14 @@ fn eval_sine_from_seed(
     ev: &Evaluator,
     u: &Ciphertext,
     cfg: &BootstrapConfig,
-    sk: &SecretKey,
-) -> Ciphertext {
+) -> Result<Ciphertext, MissingKey> {
     let ctx = &ev.ctx;
     let q0 = ctx.tower.contexts[ctx.q_chain[0]].modulus.value() as f64;
     let delta = ctx.scale;
 
     // Taylor seed: sin(u) ~ u - u^3/6 + u^5/120 ; cos(u) ~ 1 - u^2/2 + u^4/24.
-    let u2 = ev.mul(u, u, sk);
-    let u4 = ev.mul(&u2, &u2, sk);
+    let u2 = ev.mul(u, u)?;
+    let u4 = ev.mul(&u2, &u2)?;
     let c_a = ev.mul_const(&u2, -0.5);
     let c_b = ev.mul_const(&u4, 1.0 / 24.0);
     let mut cos = ev.add(&c_a, &c_b);
@@ -160,13 +158,13 @@ fn eval_sine_from_seed(
     let s_b = ev.mul_const(&u4, 1.0 / 120.0);
     let mut inner = ev.add(&s_a, &s_b);
     inner = ev.add_const(&inner, 1.0);
-    let mut sin = ev.mul(u, &inner, sk);
+    let mut sin = ev.mul(u, &inner)?;
 
     // r double-angle steps.
     for _ in 0..cfg.r {
-        let sc = ev.mul(&sin, &cos, sk);
+        let sc = ev.mul(&sin, &cos)?;
         let s_new = ev.add(&sc, &sc); // 2 sin cos
-        let ss = ev.mul(&sin, &sin, sk);
+        let ss = ev.mul(&sin, &sin)?;
         let ss2 = ev.add(&ss, &ss); // 2 sin^2
         let c_new = ev.add_const(&ev.negate(&ss2), 1.0);
         sin = s_new;
@@ -174,7 +172,7 @@ fn eval_sine_from_seed(
     }
 
     // f(v) = (q0 / (2 pi Delta)) * sin(full angle).
-    ev.mul_const(&sin, q0 / (2.0 * std::f64::consts::PI * delta))
+    Ok(ev.mul_const(&sin, q0 / (2.0 * std::f64::consts::PI * delta)))
 }
 
 /// EvalMod: approximate `t mod q0` on slot values via the scaled sine.
@@ -185,41 +183,41 @@ pub fn eval_mod(
     ev: &Evaluator,
     ct: &Ciphertext,
     cfg: &BootstrapConfig,
-    sk: &SecretKey,
-) -> Ciphertext {
+) -> Result<Ciphertext, MissingKey> {
     let ctx = &ev.ctx;
     let q0 = ctx.tower.contexts[ctx.q_chain[0]].modulus.value() as f64;
     let delta = ctx.scale;
     // u = (2 pi Delta / (q0 * 2^r)) * v  — the seed angle.
     let kappa = 2.0 * std::f64::consts::PI * delta / (q0 * 2f64.powi(cfg.r as i32));
     let u = ev.mul_const(ct, kappa);
-    eval_sine_from_seed(ev, &u, cfg, sk)
+    eval_sine_from_seed(ev, &u, cfg)
 }
 
 /// Full bootstrap: raise an exhausted ciphertext back to a high level
-/// while approximately preserving its message.
+/// while approximately preserving its message. Runs entirely on the
+/// public key set (`EvalKeySpec::bootstrap` declares everything needed:
+/// relin, conjugation and the BSGS matrix rotations).
 pub fn bootstrap(
     ev: &Evaluator,
     ct: &Ciphertext,
     cfg: &BootstrapConfig,
-    sk: &SecretKey,
-) -> Ciphertext {
+) -> Result<Ciphertext, MissingKey> {
     // 1. ModRaise to the full chain.
     let raised = mod_raise(ev, ct);
 
     // 2. CoeffToSlot: slots <- V^{-1} . slots  (then slots hold a + ib).
-    let cts = hom_linear(ev, &raised, &encode_matrix(&ev.ctx), sk);
+    let cts = hom_linear(ev, &raised, &encode_matrix(&ev.ctx))?;
 
     // 3. EvalMod on real and imaginary halves. The carriers hold 2a and
     //    2ib; the seed constants fold in the 1/2 (and -i for imag).
-    let (re2, im2i) = split_real_imag(ev, &cts, sk);
+    let (re2, im2i) = split_real_imag(ev, &cts)?;
     let q0 = ev.ctx.tower.contexts[ev.ctx.q_chain[0]].modulus.value() as f64;
     let kappa =
         2.0 * std::f64::consts::PI * ev.ctx.scale / (q0 * 2f64.powi(cfg.r as i32));
     let u_re = ev.mul_const(&re2, kappa / 2.0);
     let u_im = mul_const_complex(ev, &im2i, Complex::new(0.0, -kappa / 2.0));
-    let re_fixed = eval_sine_from_seed(ev, &u_re, cfg, sk);
-    let im_fixed = eval_sine_from_seed(ev, &u_im, cfg, sk);
+    let re_fixed = eval_sine_from_seed(ev, &u_re, cfg)?;
+    let im_fixed = eval_sine_from_seed(ev, &u_im, cfg)?;
 
     // Recombine w = re + i*im.
     let im_i = {
@@ -238,14 +236,29 @@ pub fn bootstrap(
     let w = ev.add(&re_aligned, &im_i);
 
     // 4. SlotToCoeff: slots <- V . slots (coefficients back in place).
-    hom_linear(ev, &w, &decode_matrix(&ev.ctx), sk)
+    hom_linear(ev, &w, &decode_matrix(&ev.ctx))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ckks::client::{Decryptor, Encryptor, KeyGen};
+    use crate::ckks::keys::EvalKeySpec;
     use crate::ckks::params::{CkksContext, CkksParams, WidthProfile};
     use crate::util::rng::Pcg64;
+    use std::sync::Arc;
+
+    /// Client-side keygen + server-side evaluator for a parameter set.
+    fn split(params: CkksParams, seed: u64, spec: fn(usize) -> EvalKeySpec)
+        -> (Evaluator, Encryptor, Decryptor, Pcg64) {
+        let ctx = CkksContext::new(params);
+        let mut rng = Pcg64::new(seed);
+        let kg = KeyGen::new(&ctx, &mut rng);
+        let keys = kg.eval_key_set(&ctx, &spec(ctx.params.slots()), &mut rng);
+        let enc = kg.encryptor();
+        let dec = kg.decryptor();
+        (Evaluator::new(ctx, Arc::new(keys)), enc, dec, rng)
+    }
 
     fn boot_params() -> CkksParams {
         CkksParams {
@@ -286,15 +299,12 @@ mod tests {
     #[test]
     fn coeff_to_slot_places_coefficients() {
         // CtS of a plaintext-known ciphertext: slots must become a + i b.
-        let ctx = CkksContext::new(CkksParams::toy());
-        let mut rng = Pcg64::new(11);
-        let sk = SecretKey::generate(&ctx, &mut rng);
-        let ev = Evaluator::new(ctx);
+        let (ev, enc, dec, mut rng) = split(CkksParams::toy(), 11, EvalKeySpec::bootstrap);
         let slots = ev.ctx.params.slots();
         let z: Vec<Complex> = (0..slots)
             .map(|i| Complex::new(0.3 * ((i % 5) as f64 - 2.0), 0.0))
             .collect();
-        let pt = ev.encode(&z, 3);
+        let pt = enc.encode(&ev.ctx, &z, 3);
         // expected slot values: (coeff_k + i coeff_{k+n/2})/Delta
         let m0 = ev.ctx.tower.contexts[0].modulus;
         let q0 = m0.value();
@@ -313,9 +323,9 @@ mod tests {
                 )
             })
             .collect();
-        let ct = ev.encrypt(&pt, &sk, &mut rng);
-        let cts = hom_linear(&ev, &ct, &encode_matrix(&ev.ctx), &sk);
-        let got = ev.decrypt_to_slots(&cts, &sk);
+        let ct = enc.encrypt(&ev.ctx, &pt, &mut rng);
+        let cts = hom_linear(&ev, &ct, &encode_matrix(&ev.ctx)).unwrap();
+        let got = dec.decrypt_to_slots(&ev.ctx, &cts);
         assert!(max_err(&want, &got) < 1e-3, "err={}", max_err(&want, &got));
     }
 
@@ -323,10 +333,8 @@ mod tests {
     fn eval_mod_removes_overflow() {
         // Construct slots v = m/Delta + q0*I/Delta directly and check that
         // eval_mod returns ~ m/Delta.
-        let ctx = CkksContext::new(boot_params());
-        let mut rng = Pcg64::new(13);
-        let sk = SecretKey::generate(&ctx, &mut rng);
-        let ev = Evaluator::new(ctx);
+        let (ev, enc, dec, mut rng) =
+            split(boot_params(), 13, |_| EvalKeySpec::relin_only());
         let slots = ev.ctx.params.slots();
         let q0 = ev.ctx.tower.contexts[0].modulus.value() as f64;
         let delta = ev.ctx.scale;
@@ -335,34 +343,31 @@ mod tests {
         let v: Vec<Complex> = (0..slots)
             .map(|i| Complex::new(msg[i] + overflow[i] * q0 / delta, 0.0))
             .collect();
-        let ct = ev.encrypt(&ev.encode(&v, ev.ctx.max_level()), &sk, &mut rng);
+        let ct = enc.encrypt_slots(&ev.ctx, &v, ev.ctx.max_level(), &mut rng);
         let cfg = BootstrapConfig { k: 10.0, r: 9 };
-        let fixed = eval_mod(&ev, &ct, &cfg, &sk);
-        let got = ev.decrypt_to_slots(&fixed, &sk);
+        let fixed = eval_mod(&ev, &ct, &cfg).unwrap();
+        let got = dec.decrypt_to_slots(&ev.ctx, &fixed);
         let want: Vec<Complex> = msg.iter().map(|&m| Complex::new(m, 0.0)).collect();
         assert!(max_err(&want, &got) < 2e-2, "err={}", max_err(&want, &got));
     }
 
     #[test]
     fn full_bootstrap_preserves_message() {
-        let ctx = CkksContext::new(boot_params());
-        let mut rng = Pcg64::new(17);
-        let sk = SecretKey::generate(&ctx, &mut rng);
-        let ev = Evaluator::new(ctx);
+        let (ev, enc, dec, mut rng) = split(boot_params(), 17, EvalKeySpec::bootstrap);
         let slots = ev.ctx.params.slots();
         let z: Vec<Complex> = (0..slots)
             .map(|i| Complex::new(0.25 * ((i % 4) as f64 - 1.5), 0.0))
             .collect();
         // Encrypt at level 0 — an exhausted ciphertext.
-        let ct0 = ev.encrypt(&ev.encode(&z, 0), &sk, &mut rng);
+        let ct0 = enc.encrypt_slots(&ev.ctx, &z, 0, &mut rng);
         let cfg = BootstrapConfig::default();
-        let boosted = bootstrap(&ev, &ct0, &cfg, &sk);
+        let boosted = bootstrap(&ev, &ct0, &cfg).expect("bootstrap key set");
         assert!(
             boosted.level >= 1,
             "bootstrap must return usable levels (got {})",
             boosted.level
         );
-        let back = ev.decrypt_to_slots(&boosted, &sk);
+        let back = dec.decrypt_to_slots(&ev.ctx, &boosted);
         let err = max_err(&z, &back);
         assert!(err < 5e-2, "bootstrap error too large: {err}");
     }

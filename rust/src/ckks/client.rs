@@ -1,0 +1,201 @@
+//! Client-side key material: [`KeyGen`] owns the [`SecretKey`] and is the
+//! only place evaluation keys are ever derived from it.
+//!
+//! The deployment story of the paper (FHECore serving encrypted inference
+//! for clients who never reveal their data) maps onto three roles:
+//!
+//! * [`KeyGen`] — generates the secret key and, **up front**, the complete
+//!   public [`EvalKeySet`] declared by an [`EvalKeySpec`] (relinearization
+//!   key, conjugation key, Galois keys for the declared rotation steps).
+//! * [`Encryptor`] / [`Decryptor`] — encode+encrypt requests and decrypt
+//!   responses. Both stay on the client.
+//! * `ops::Evaluator` — the server side: holds `Arc<EvalKeySet>` and *no*
+//!   secret material; an op whose key was never declared fails with the
+//!   typed `MissingKey` error instead of silently regenerating.
+
+use std::sync::Arc;
+
+use super::encoding::{decode_with, encode_with, Complex, Encoder};
+use super::keys::{sample_error, sample_uniform, EvalKeySet, EvalKeySpec, SecretKey};
+use super::ops::Ciphertext;
+use super::params::CkksContext;
+use super::poly::{Format, RnsPoly};
+use crate::util::rng::Pcg64;
+
+/// Client-side key generator: the sole owner of secret material.
+pub struct KeyGen {
+    sk: Arc<SecretKey>,
+    /// One root-table build shared by every Encryptor/Decryptor handed out.
+    encoder: Arc<Encoder>,
+}
+
+impl KeyGen {
+    /// Generate a fresh secret key. All randomness — here and in
+    /// [`Self::eval_key_set`] — comes from the caller's `rng`; there is no
+    /// baked-in seed anywhere on the key path.
+    pub fn new(ctx: &CkksContext, rng: &mut Pcg64) -> Self {
+        Self {
+            sk: Arc::new(SecretKey::generate(ctx, rng)),
+            encoder: Arc::new(Encoder::new(ctx.params.n)),
+        }
+    }
+
+    /// Wrap an existing secret key (its ring dimension fixes the encoder).
+    pub fn from_secret(sk: SecretKey) -> Self {
+        let n = sk.s.n;
+        Self {
+            sk: Arc::new(sk),
+            encoder: Arc::new(Encoder::new(n)),
+        }
+    }
+
+    /// The secret key (client-side use only: tests, serialization).
+    pub fn secret_key(&self) -> &SecretKey {
+        &self.sk
+    }
+
+    /// Generate the complete public evaluation-key set declared by `spec`.
+    /// The result contains no secret material and is what the server's
+    /// `Evaluator` is constructed from.
+    pub fn eval_key_set(
+        &self,
+        ctx: &CkksContext,
+        spec: &EvalKeySpec,
+        rng: &mut Pcg64,
+    ) -> EvalKeySet {
+        EvalKeySet::generate(ctx, &self.sk, spec, rng)
+    }
+
+    pub fn encryptor(&self) -> Encryptor {
+        Encryptor {
+            sk: self.sk.clone(),
+            encoder: self.encoder.clone(),
+        }
+    }
+
+    pub fn decryptor(&self) -> Decryptor {
+        Decryptor {
+            sk: self.sk.clone(),
+            encoder: self.encoder.clone(),
+        }
+    }
+}
+
+/// Client-side symmetric encryption.
+pub struct Encryptor {
+    sk: Arc<SecretKey>,
+    encoder: Arc<Encoder>,
+}
+
+impl Encryptor {
+    /// Encode a complex slot vector at `level` (coefficient format).
+    pub fn encode(&self, ctx: &CkksContext, z: &[Complex], level: usize) -> RnsPoly {
+        encode_with(ctx, &self.encoder, z, level, ctx.scale)
+    }
+
+    /// Symmetric encryption of a coefficient-format plaintext.
+    pub fn encrypt(&self, ctx: &CkksContext, pt: &RnsPoly, rng: &mut Pcg64) -> Ciphertext {
+        assert_eq!(pt.format, Format::Coeff);
+        let chain = pt.chain.clone();
+        let level = chain.len() - 1;
+        let a = sample_uniform(ctx, &chain, rng);
+        let mut e = sample_error(ctx, &chain, rng);
+        e.to_eval(&ctx.tower);
+        let s = self.sk.restrict(&chain);
+        // c0 = -a*s + e + m ; c1 = a.
+        let mut c0 = a.clone();
+        c0.mul_assign(&s, &ctx.tower);
+        c0.neg_assign(&ctx.tower);
+        c0.add_assign(&e, &ctx.tower);
+        let mut m = pt.clone();
+        m.to_eval(&ctx.tower);
+        c0.add_assign(&m, &ctx.tower);
+        Ciphertext {
+            c0,
+            c1: a,
+            level,
+            scale: ctx.scale,
+        }
+    }
+
+    /// Encode + encrypt in one step.
+    pub fn encrypt_slots(
+        &self,
+        ctx: &CkksContext,
+        z: &[Complex],
+        level: usize,
+        rng: &mut Pcg64,
+    ) -> Ciphertext {
+        self.encrypt(ctx, &self.encode(ctx, z, level), rng)
+    }
+}
+
+/// Client-side decryption.
+pub struct Decryptor {
+    sk: Arc<SecretKey>,
+    encoder: Arc<Encoder>,
+}
+
+impl Decryptor {
+    /// Decrypt to a coefficient-format plaintext polynomial.
+    pub fn decrypt(&self, ctx: &CkksContext, ct: &Ciphertext) -> RnsPoly {
+        let s = self.sk.restrict(&ct.c0.chain);
+        let mut m = ct.c1.clone();
+        m.mul_assign(&s, &ctx.tower);
+        m.add_assign(&ct.c0, &ctx.tower);
+        m.to_coeff(&ctx.tower);
+        m
+    }
+
+    /// Decrypt straight to slots.
+    pub fn decrypt_to_slots(&self, ctx: &CkksContext, ct: &Ciphertext) -> Vec<Complex> {
+        let pt = self.decrypt(ctx, ct);
+        decode_with(ctx, &self.encoder, &pt, ct.scale)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::params::CkksParams;
+
+    #[test]
+    fn encrypt_decrypt_roundtrip_without_evaluator() {
+        let ctx = CkksContext::new(CkksParams::toy());
+        let mut rng = Pcg64::new(0x11);
+        let kg = KeyGen::new(&ctx, &mut rng);
+        let enc = kg.encryptor();
+        let dec = kg.decryptor();
+        let slots = ctx.params.slots();
+        let z: Vec<Complex> = (0..slots)
+            .map(|i| Complex::new(0.02 * ((i % 9) as f64 - 4.0), 0.0))
+            .collect();
+        let ct = enc.encrypt_slots(&ctx, &z, ctx.max_level(), &mut rng);
+        let back = dec.decrypt_to_slots(&ctx, &ct);
+        let err = z
+            .iter()
+            .zip(&back)
+            .map(|(a, b)| Complex::new(a.re - b.re, a.im - b.im).abs())
+            .fold(0.0f64, f64::max);
+        assert!(err < 1e-4, "roundtrip err {err}");
+    }
+
+    #[test]
+    fn keygen_randomness_comes_from_caller() {
+        // Same caller seed -> identical ciphertexts; different seed ->
+        // different ones. (No hidden baked-in RNG seed on the key path.)
+        let ctx = CkksContext::new(CkksParams::toy());
+        let slots = ctx.params.slots();
+        let z = vec![Complex::new(0.25, 0.0); slots];
+        let run = |seed: u64| {
+            let mut rng = Pcg64::new(seed);
+            let kg = KeyGen::new(&ctx, &mut rng);
+            kg.encryptor().encrypt_slots(&ctx, &z, 1, &mut rng)
+        };
+        let a = run(7);
+        let b = run(7);
+        let c = run(8);
+        assert_eq!(a.c1.limbs, b.c1.limbs);
+        assert_ne!(a.c1.limbs, c.c1.limbs);
+    }
+}

@@ -13,9 +13,18 @@
 //! [Q^_j^{-1}] mod q) so no big-integer arithmetic is ever needed — the
 //! same property that makes the kernel a pure modulo-linear transformation
 //! on FHECore (SV-B).
+//!
+//! **Key model (client/server split).** The [`SecretKey`] never leaves the
+//! client: `client::KeyGen` derives a complete *public* [`EvalKeySet`] —
+//! relinearization key, conjugation key and the Galois keys for a declared
+//! rotation set ([`EvalKeySpec`]) — which is all the server-side
+//! `Evaluator` ever holds. A lookup for an undeclared key fails with the
+//! typed [`MissingKey`] error; nothing is ever re-derived from the secret
+//! at evaluation time.
 
+use std::cell::RefCell;
 use std::collections::HashMap;
-use std::sync::Mutex;
+use std::sync::Arc;
 
 use super::params::CkksContext;
 use super::poly::{Format, RnsPoly};
@@ -118,8 +127,19 @@ pub fn sample_error(ctx: &CkksContext, chain: &[usize], rng: &mut Pcg64) -> RnsP
     p
 }
 
+/// Galois element for rotation by k slots: 5^k mod 2N.
+pub fn galois_element(k: usize, n: usize) -> usize {
+    let two_n = 2 * n;
+    let mut g = 1usize;
+    for _ in 0..k {
+        g = (g * 5) % two_n;
+    }
+    g
+}
+
 /// One key-switching key: switches ciphertext component under `s_from`
 /// into a component under `s` at a fixed level.
+#[derive(Debug)]
 pub struct KsKey {
     pub level: usize,
     /// Digit groups: indices (positions in the active chain) per digit.
@@ -134,6 +154,45 @@ pub struct KsKey {
     pub p_to_active: BaseConvTable,
     /// `P^{-1}` mod each active prime.
     pub p_inv: Vec<u64>,
+}
+
+/// Reusable buffers for [`KsKey::apply_with`]: one staging buffer per
+/// pipeline stage (decomposed digit, ModUp output, assembled extended
+/// polynomial, Eval product, ModDown split) so the whole hybrid key
+/// switch runs without per-digit allocation — the `convert_into`
+/// discipline extended from BaseConv to the full pipeline.
+#[derive(Debug)]
+pub struct KeySwitchScratch {
+    conv: BaseConvScratch,
+    d_coeff: RnsPoly,
+    digit: RnsPoly,
+    lifted: RnsPoly,
+    full: RnsPoly,
+    prod: RnsPoly,
+    p_part: RnsPoly,
+    p_in_q: RnsPoly,
+}
+
+impl Default for KeySwitchScratch {
+    fn default() -> Self {
+        Self {
+            conv: BaseConvScratch::default(),
+            d_coeff: RnsPoly::empty(),
+            digit: RnsPoly::empty(),
+            lifted: RnsPoly::empty(),
+            full: RnsPoly::empty(),
+            prod: RnsPoly::empty(),
+            p_part: RnsPoly::empty(),
+            p_in_q: RnsPoly::empty(),
+        }
+    }
+}
+
+thread_local! {
+    /// Per-thread scratch backing [`KsKey::apply`]: buffers persist across
+    /// calls, so steady-state key switching allocates only its two output
+    /// polynomials.
+    static KS_SCRATCH: RefCell<KeySwitchScratch> = RefCell::new(KeySwitchScratch::default());
 }
 
 impl KsKey {
@@ -248,10 +307,150 @@ impl KsKey {
         }
     }
 
+    /// Generate the key for a [`KeyKind`] at `level`: relinearization
+    /// switches `s^2 -> s`, a Galois key switches `phi_g(s) -> s`.
+    pub fn generate_for(
+        ctx: &CkksContext,
+        sk: &SecretKey,
+        kind: KeyKind,
+        level: usize,
+        rng: &mut Pcg64,
+    ) -> Self {
+        let ext = ctx.extended_chain_at(level);
+        let s_from = match kind {
+            KeyKind::Relin => {
+                let mut s2 = sk.restrict(&ext);
+                let s_copy = s2.clone();
+                s2.mul_assign(&s_copy, &ctx.tower);
+                s2
+            }
+            KeyKind::Galois(g) => sk.automorphed(g, &ext, ctx),
+        };
+        Self::generate(ctx, sk, &s_from, level, rng)
+    }
+
     /// Apply the key switch to a polynomial `d` (Eval, active chain at
     /// `self.level`): returns `(out0, out1)` such that
     /// `out0 + out1*s  ~=  d * s_from` (Eval, active chain).
+    ///
+    /// Uses a per-thread [`KeySwitchScratch`], so repeated calls allocate
+    /// only the two output polynomials.
     pub fn apply(&self, ctx: &CkksContext, d: &RnsPoly) -> (RnsPoly, RnsPoly) {
+        KS_SCRATCH.with(|s| self.apply_with(ctx, d, &mut s.borrow_mut()))
+    }
+
+    /// [`Self::apply`] with caller-provided scratch (hot-loop variant).
+    pub fn apply_with(
+        &self,
+        ctx: &CkksContext,
+        d: &RnsPoly,
+        scratch: &mut KeySwitchScratch,
+    ) -> (RnsPoly, RnsPoly) {
+        let active = ctx.chain_at(self.level);
+        let ext = ctx.extended_chain_at(self.level);
+        assert_eq!(d.chain, active, "operand at wrong level");
+        let n = d.n;
+        scratch.d_coeff.copy_from(d);
+        scratch.d_coeff.to_coeff(&ctx.tower);
+
+        // The accumulators double as the outputs (ModDown runs in place),
+        // so they are the only per-call allocations.
+        let mut acc0 = RnsPoly::zero(&ctx.tower, &ext, Format::Eval);
+        let mut acc1 = RnsPoly::zero(&ctx.tower, &ext, Format::Eval);
+        for (j, positions) in self.digit_positions.iter().enumerate() {
+            // The ModUp table's source base IS the digit chain.
+            let digit_chain = &self.modup[j].src;
+            // [d * Q^_j^{-1}]_{Q~_j}: gather the digit limbs, pre-scale.
+            scratch.digit.n = n;
+            scratch.digit.format = Format::Coeff;
+            scratch.digit.chain.clear();
+            scratch.digit.chain.extend_from_slice(digit_chain);
+            if scratch.digit.limbs.len() != positions.len() {
+                scratch.digit.limbs.resize_with(positions.len(), Vec::new);
+            }
+            for (dst, &p) in scratch.digit.limbs.iter_mut().zip(positions) {
+                dst.clear();
+                dst.extend_from_slice(&scratch.d_coeff.limbs[p]);
+            }
+            scratch.digit.scale_assign(&self.qhat_inv[j], &ctx.tower);
+
+            // ModUp to the complement, then assemble the full ext chain.
+            self.modup[j].convert_into(
+                &scratch.digit,
+                &ctx.tower,
+                &mut scratch.conv,
+                &mut scratch.lifted,
+            );
+            scratch.full.n = n;
+            scratch.full.format = Format::Coeff;
+            scratch.full.chain.clear();
+            scratch.full.chain.extend_from_slice(&ext);
+            if scratch.full.limbs.len() != ext.len() {
+                scratch.full.limbs.resize_with(ext.len(), Vec::new);
+            }
+            for (i, &ci) in ext.iter().enumerate() {
+                let src: &[u64] = if let Some(k) = digit_chain.iter().position(|&c| c == ci) {
+                    &scratch.digit.limbs[k]
+                } else {
+                    let k = scratch.lifted.chain.iter().position(|&c| c == ci).unwrap();
+                    &scratch.lifted.limbs[k]
+                };
+                let dst = &mut scratch.full.limbs[i];
+                dst.clear();
+                dst.extend_from_slice(src);
+            }
+            scratch.full.to_eval(&ctx.tower);
+
+            scratch.prod.copy_from(&scratch.full);
+            scratch.prod.mul_assign(&self.digits[j].0, &ctx.tower);
+            acc0.add_assign(&scratch.prod, &ctx.tower);
+            scratch.prod.copy_from(&scratch.full);
+            scratch.prod.mul_assign(&self.digits[j].1, &ctx.tower);
+            acc1.add_assign(&scratch.prod, &ctx.tower);
+        }
+
+        let nq = active.len();
+        self.mod_down_in_place(ctx, &mut acc0, nq, scratch);
+        self.mod_down_in_place(ctx, &mut acc1, nq, scratch);
+        (acc0, acc1)
+    }
+
+    /// ModDown by P in place: `acc <- (acc_Q - BaseConv_P->Q([acc]_P)) *
+    /// P^{-1}`, truncating the extended chain back to the active one.
+    fn mod_down_in_place(
+        &self,
+        ctx: &CkksContext,
+        acc: &mut RnsPoly,
+        nq: usize,
+        scratch: &mut KeySwitchScratch,
+    ) {
+        acc.to_coeff(&ctx.tower);
+        let np = acc.limbs.len() - nq;
+        scratch.p_part.n = acc.n;
+        scratch.p_part.format = Format::Coeff;
+        scratch.p_part.chain.clear();
+        scratch.p_part.chain.extend_from_slice(&acc.chain[nq..]);
+        if scratch.p_part.limbs.len() != np {
+            scratch.p_part.limbs.resize_with(np, Vec::new);
+        }
+        for (dst, src) in scratch.p_part.limbs.iter_mut().zip(&acc.limbs[nq..]) {
+            dst.clear();
+            dst.extend_from_slice(src);
+        }
+        acc.limbs.truncate(nq);
+        acc.chain.truncate(nq);
+        self.p_to_active
+            .convert_into(&scratch.p_part, &ctx.tower, &mut scratch.conv, &mut scratch.p_in_q);
+        acc.sub_assign(&scratch.p_in_q, &ctx.tower);
+        acc.scale_assign(&self.p_inv, &ctx.tower);
+        acc.to_eval(&ctx.tower);
+    }
+
+    /// The original allocating formulation of [`Self::apply`]: fresh
+    /// staging polynomials per digit and per ModDown. Kept as the
+    /// bit-exactness oracle and the "before" side of the key-switch
+    /// scratch benchmark; not used on the hot path.
+    pub fn apply_reference(&self, ctx: &CkksContext, d: &RnsPoly) -> (RnsPoly, RnsPoly) {
         let active = ctx.chain_at(self.level);
         let ext = ctx.extended_chain_at(self.level);
         assert_eq!(d.chain, active, "operand at wrong level");
@@ -260,8 +459,6 @@ impl KsKey {
 
         let mut acc0 = RnsPoly::zero(&ctx.tower, &ext, Format::Eval);
         let mut acc1 = RnsPoly::zero(&ctx.tower, &ext, Format::Eval);
-        // One staging buffer serves every ModUp digit and both ModDowns —
-        // the per-call allocation the MLT engine's convert_into removes.
         let mut conv_scratch = BaseConvScratch::default();
         for (j, positions) in self.digit_positions.iter().enumerate() {
             let digit_chain: Vec<usize> = positions.iter().map(|&p| active[p]).collect();
@@ -323,7 +520,7 @@ impl KsKey {
     }
 }
 
-/// Which key a [`KeyBank`] entry switches from.
+/// Which key an [`EvalKeySet`] entry switches from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum KeyKind {
     /// s^2 -> s (relinearization, used by HEMult).
@@ -332,57 +529,221 @@ pub enum KeyKind {
     Galois(usize),
 }
 
-/// Lazily generated, cached key-switching keys per (kind, level).
-///
-/// A production deployment generates these ahead of time on the client;
-/// caching against the secret key here keeps the test/example surface
-/// small without changing any measured code path.
-pub struct KeyBank {
-    keys: Mutex<HashMap<(KeyKind, usize), std::sync::Arc<KsKey>>>,
-    seed: u64,
+/// Typed failure of a server-side op: the public key set does not contain
+/// the requested key. The server never regenerates keys (it holds no
+/// secret material); the client must extend its [`EvalKeySpec`].
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct MissingKey {
+    pub kind: KeyKind,
+    pub level: usize,
 }
 
-impl KeyBank {
-    pub fn new(seed: u64) -> Self {
+impl std::fmt::Display for MissingKey {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.kind {
+            KeyKind::Relin => {
+                write!(f, "missing relinearization key at level {}", self.level)
+            }
+            KeyKind::Galois(g) => write!(
+                f,
+                "missing Galois key for element {} at level {}",
+                g, self.level
+            ),
+        }
+    }
+}
+
+impl std::error::Error for MissingKey {}
+
+/// Rotation steps used by rotate-and-sum reductions: 1, 2, 4, ... slots/2.
+pub fn rotate_and_sum_steps(slots: usize) -> Vec<usize> {
+    let mut v = Vec::new();
+    let mut s = 1usize;
+    while s < slots {
+        v.push(s);
+        s <<= 1;
+    }
+    v
+}
+
+/// BSGS split at this slot count: (baby-step count g, giant-step count).
+/// The single source of truth shared by `linear::hom_linear` (which walks
+/// this geometry) and [`bsgs_steps`] (which declares its keys) — tuning
+/// one cannot silently strand the other.
+pub fn bsgs_geometry(slots: usize) -> (usize, usize) {
+    let g = (slots as f64).sqrt().ceil() as usize;
+    (g, slots.div_ceil(g))
+}
+
+/// Rotation steps consumed by the BSGS diagonal method (`linear::hom_linear`)
+/// at this slot count: baby steps 1..g and giant steps j*g mod slots.
+pub fn bsgs_steps(slots: usize) -> Vec<usize> {
+    let (g, outer) = bsgs_geometry(slots);
+    let mut v: Vec<usize> = (1..g).collect();
+    for j in 1..outer {
+        let r = (j * g) % slots;
+        if r != 0 {
+            v.push(r);
+        }
+    }
+    v.sort_unstable();
+    v.dedup();
+    v
+}
+
+/// Declaration of the evaluation keys a client generates up front.
+#[derive(Debug, Clone)]
+pub struct EvalKeySpec {
+    /// Generate the relinearization key (required by HEMult).
+    pub relin: bool,
+    /// Generate the conjugation key (Galois element 2N-1).
+    pub conjugation: bool,
+    /// Slot-rotation steps to support (reduced mod slots; multiples of the
+    /// slot count need no key).
+    pub rotations: Vec<usize>,
+    /// Levels to generate keys at; `None` = every level 0..=max.
+    pub levels: Option<Vec<usize>>,
+}
+
+impl EvalKeySpec {
+    /// No keys at all (encrypt/add/PtMult-only servers).
+    pub fn none() -> Self {
         Self {
-            keys: Mutex::new(HashMap::new()),
-            seed,
+            relin: false,
+            conjugation: false,
+            rotations: Vec::new(),
+            levels: None,
         }
     }
 
-    pub fn get(
-        &self,
-        ctx: &CkksContext,
-        sk: &SecretKey,
-        kind: KeyKind,
-        level: usize,
-    ) -> std::sync::Arc<KsKey> {
-        let mut map = self.keys.lock().unwrap();
-        map.entry((kind, level))
-            .or_insert_with(|| {
-                let ext = ctx.extended_chain_at(level);
-                let s_from = match kind {
-                    KeyKind::Relin => {
-                        let mut s2 = sk.restrict(&ext);
-                        let s_copy = s2.clone();
-                        s2.mul_assign(&s_copy, &ctx.tower);
-                        s2
-                    }
-                    KeyKind::Galois(g) => sk.automorphed(g, &ext, ctx),
-                };
-                let mut rng = Pcg64::new(self.seed ^ key_seed(kind, level));
-                std::sync::Arc::new(KsKey::generate(ctx, sk, &s_from, level, &mut rng))
-            })
-            .clone()
+    /// Relinearization only (HEMult, no rotations).
+    pub fn relin_only() -> Self {
+        Self {
+            relin: true,
+            ..Self::none()
+        }
+    }
+
+    /// The standard serving kit: relinearization, conjugation and the
+    /// power-of-two steps behind rotate-and-sum dot products.
+    pub fn serving(slots: usize) -> Self {
+        Self {
+            relin: true,
+            conjugation: true,
+            rotations: rotate_and_sum_steps(slots),
+            levels: None,
+        }
+    }
+
+    /// Everything `bootstrap` (and any slots-sized `hom_linear`) needs:
+    /// the serving kit plus the BSGS baby/giant steps — the matrix
+    /// rotations of CoeffToSlot / SlotToCoeff.
+    pub fn bootstrap(slots: usize) -> Self {
+        Self::serving(slots).with_rotations(&bsgs_steps(slots))
+    }
+
+    /// Add rotation steps to the declared set.
+    pub fn with_rotations(mut self, steps: &[usize]) -> Self {
+        self.rotations.extend_from_slice(steps);
+        self.rotations.sort_unstable();
+        self.rotations.dedup();
+        self
+    }
+
+    /// Restrict key generation to the given levels.
+    pub fn at_levels(mut self, levels: Vec<usize>) -> Self {
+        self.levels = Some(levels);
+        self
     }
 }
 
-fn key_seed(kind: KeyKind, level: usize) -> u64 {
-    let k = match kind {
-        KeyKind::Relin => 0x1000_0000u64,
-        KeyKind::Galois(g) => 0x2000_0000u64 | g as u64,
-    };
-    k.wrapping_mul(0x9E37_79B9_7F4A_7C15) ^ (level as u64)
+/// The complete public evaluation-key set: everything a secret-key-free
+/// server needs to run Table II. Generated once, client-side, by
+/// `client::KeyGen` from an [`EvalKeySpec`]; shared read-only
+/// (`Arc<EvalKeySet>`) across evaluator instances and worker threads.
+pub struct EvalKeySet {
+    keys: HashMap<(KeyKind, usize), Arc<KsKey>>,
+    /// The declared rotation steps (introspection / capability checks).
+    rotations: Vec<usize>,
+}
+
+impl EvalKeySet {
+    /// A key set with no keys: key-free ops only.
+    pub fn empty() -> Self {
+        Self {
+            keys: HashMap::new(),
+            rotations: Vec::new(),
+        }
+    }
+
+    /// Generate the full set declared by `spec`. All randomness comes from
+    /// the caller's `rng` — there is no baked-in seed.
+    pub fn generate(
+        ctx: &CkksContext,
+        sk: &SecretKey,
+        spec: &EvalKeySpec,
+        rng: &mut Pcg64,
+    ) -> Self {
+        let slots = ctx.params.slots();
+        let mut kinds: Vec<KeyKind> = Vec::new();
+        if spec.relin {
+            kinds.push(KeyKind::Relin);
+        }
+        if spec.conjugation {
+            kinds.push(KeyKind::Galois(2 * ctx.params.n - 1));
+        }
+        let mut gs: Vec<usize> = spec
+            .rotations
+            .iter()
+            .map(|&k| galois_element(k % slots, ctx.params.n))
+            .filter(|&g| g != 1)
+            .collect();
+        gs.sort_unstable();
+        gs.dedup();
+        kinds.extend(gs.into_iter().map(KeyKind::Galois));
+
+        let levels: Vec<usize> = match &spec.levels {
+            Some(ls) => ls.clone(),
+            None => (0..=ctx.max_level()).collect(),
+        };
+        let mut keys = HashMap::new();
+        for &level in &levels {
+            for &kind in &kinds {
+                let ksk = KsKey::generate_for(ctx, sk, kind, level, rng);
+                keys.insert((kind, level), Arc::new(ksk));
+            }
+        }
+        Self {
+            keys,
+            rotations: spec.rotations.clone(),
+        }
+    }
+
+    /// Look up a key; fails with the typed [`MissingKey`] error when the
+    /// spec never declared it.
+    pub fn get(&self, kind: KeyKind, level: usize) -> Result<&Arc<KsKey>, MissingKey> {
+        self.keys
+            .get(&(kind, level))
+            .ok_or(MissingKey { kind, level })
+    }
+
+    pub fn contains(&self, kind: KeyKind, level: usize) -> bool {
+        self.keys.contains_key(&(kind, level))
+    }
+
+    /// Number of key-switching keys held.
+    pub fn len(&self) -> usize {
+        self.keys.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.keys.is_empty()
+    }
+
+    /// The rotation steps the client declared at generation time.
+    pub fn rotations(&self) -> &[usize] {
+        &self.rotations
+    }
 }
 
 #[cfg(test)]
@@ -431,16 +792,62 @@ mod tests {
     }
 
     #[test]
-    fn keybank_caches() {
+    fn apply_scratch_is_bit_identical_to_reference() {
+        let ctx = CkksContext::new(CkksParams::toy());
+        let mut rng = Pcg64::new(9);
+        let sk = SecretKey::generate(&ctx, &mut rng);
+        for level in [1usize, ctx.max_level()] {
+            let ksk = KsKey::generate_for(&ctx, &sk, KeyKind::Relin, level, &mut rng);
+            let active = ctx.chain_at(level);
+            let mut scratch = KeySwitchScratch::default();
+            for seed in [3u64, 4] {
+                let mut r2 = Pcg64::new(seed);
+                let d = sample_uniform(&ctx, &active, &mut r2);
+                let (f0, f1) = ksk.apply_with(&ctx, &d, &mut scratch);
+                let (r0, r1) = ksk.apply_reference(&ctx, &d);
+                assert_eq!(f0.limbs, r0.limbs, "level {level} seed {seed} out0");
+                assert_eq!(f1.limbs, r1.limbs, "level {level} seed {seed} out1");
+                assert_eq!(f0.chain, r0.chain);
+                assert_eq!(f1.format, r1.format);
+            }
+        }
+    }
+
+    #[test]
+    fn eval_key_set_lookup_and_missing() {
         let ctx = CkksContext::new(CkksParams::toy());
         let mut rng = Pcg64::new(2);
         let sk = SecretKey::generate(&ctx, &mut rng);
-        let bank = KeyBank::new(7);
-        let k1 = bank.get(&ctx, &sk, KeyKind::Relin, 1);
-        let k2 = bank.get(&ctx, &sk, KeyKind::Relin, 1);
-        assert!(std::sync::Arc::ptr_eq(&k1, &k2));
-        let k3 = bank.get(&ctx, &sk, KeyKind::Galois(5), 1);
-        assert!(!std::sync::Arc::ptr_eq(&k1, &k3));
+        let spec = EvalKeySpec::relin_only()
+            .with_rotations(&[1])
+            .at_levels(vec![1, 2]);
+        let keys = EvalKeySet::generate(&ctx, &sk, &spec, &mut rng);
+        let g1 = galois_element(1, ctx.params.n);
+        assert!(keys.get(KeyKind::Relin, 1).is_ok());
+        assert!(keys.get(KeyKind::Relin, 2).is_ok());
+        assert!(keys.get(KeyKind::Galois(g1), 2).is_ok());
+        // Undeclared level and undeclared rotation: typed errors.
+        assert_eq!(
+            keys.get(KeyKind::Relin, 3).unwrap_err(),
+            MissingKey { kind: KeyKind::Relin, level: 3 }
+        );
+        let g5 = galois_element(5, ctx.params.n);
+        let err = keys.get(KeyKind::Galois(g5), 1).unwrap_err();
+        assert_eq!(err.kind, KeyKind::Galois(g5));
+        assert!(err.to_string().contains("Galois"));
+        // 2 levels x (relin + conj? no + 1 galois) = 4 keys.
+        assert_eq!(keys.len(), 4);
+        assert!(EvalKeySet::empty().is_empty());
+    }
+
+    #[test]
+    fn spec_step_helpers() {
+        assert_eq!(rotate_and_sum_steps(8), vec![1, 2, 4]);
+        // slots=16: g=4, outer=4 -> baby {1,2,3}, giant {4,8,12}.
+        assert_eq!(bsgs_steps(16), vec![1, 2, 3, 4, 8, 12]);
+        let spec = EvalKeySpec::bootstrap(16);
+        assert!(spec.relin && spec.conjugation);
+        assert_eq!(spec.rotations, vec![1, 2, 3, 4, 8, 12]);
     }
 
     #[test]

@@ -6,7 +6,7 @@
 //! JKLS-style matrix multiplications of the BERT-Tiny workload (SVI-A).
 
 use super::encoding::{encode_with, Complex};
-use super::keys::SecretKey;
+use super::keys::{bsgs_geometry, MissingKey};
 use super::ops::{Ciphertext, Evaluator};
 
 /// A dense complex matrix acting on the slot vector.
@@ -87,30 +87,27 @@ fn rot_plain(v: &[Complex], k: usize) -> Vec<Complex> {
 /// Identity: M.v = sum_d diag_d(M) o rot_d(v). With d = i + j*g,
 /// rot_{i+jg}(v) = rot_{jg}(rot_i(v)) and pre-rotating the diagonal by -jg:
 /// M.v = sum_j rot_{jg}( sum_i rot_{-jg}(diag_{i+jg}) o rot_i(v) ).
-/// Consumes one multiplicative level.
+/// Consumes one multiplicative level. Needs the BSGS Galois keys (see
+/// `keys::bsgs_steps`) in the evaluator's public key set; fails with the
+/// typed [`MissingKey`] error otherwise.
 pub fn hom_linear(
     ev: &Evaluator,
     ct: &Ciphertext,
     m: &SlotMatrix,
-    sk: &SecretKey,
-) -> Ciphertext {
+) -> Result<Ciphertext, MissingKey> {
     let s = ev.ctx.params.slots();
     assert_eq!(m.dim, s, "matrix must match the slot count");
-    let g = (s as f64).sqrt().ceil() as usize;
-    let outer = s.div_ceil(g);
+    let (g, outer) = bsgs_geometry(s);
 
     // Baby steps: rot_i(ct) for i in 0..g (skip unused ones lazily).
     let mut baby: Vec<Option<Ciphertext>> = vec![None; g];
-    let get_baby = |i: usize, baby: &mut Vec<Option<Ciphertext>>| {
-        if baby[i].is_none() {
-            baby[i] = Some(if i == 0 {
-                ct.clone()
-            } else {
-                ev.rotate(ct, i, sk)
-            });
-        }
-        baby[i].clone().unwrap()
-    };
+    let get_baby =
+        |i: usize, baby: &mut Vec<Option<Ciphertext>>| -> Result<Ciphertext, MissingKey> {
+            if baby[i].is_none() {
+                baby[i] = Some(if i == 0 { ct.clone() } else { ev.rotate(ct, i)? });
+            }
+            Ok(baby[i].clone().unwrap())
+        };
 
     let mut total: Option<Ciphertext> = None;
     for j in 0..outer {
@@ -126,7 +123,7 @@ pub fn hom_linear(
             }
             // Pre-rotate the diagonal by -jg (i.e. right-rotate by jg).
             let shifted = rot_plain(&diag, s - (j * g) % s);
-            let b = get_baby(i, &mut baby);
+            let b = get_baby(i, &mut baby)?;
             let pt = encode_with(&ev.ctx, &ev.encoder, &shifted, b.level, ev.ctx.scale);
             // Multiply WITHOUT rescaling yet (sum first, rescale once).
             let mut term = b.clone();
@@ -144,7 +141,7 @@ pub fn hom_linear(
             let rotated = if (j * g) % s == 0 {
                 inner
             } else {
-                ev.rotate(&inner, (j * g) % s, sk)
+                ev.rotate(&inner, (j * g) % s)?
             };
             total = Some(match total {
                 None => rotated,
@@ -153,20 +150,27 @@ pub fn hom_linear(
         }
     }
     let total = total.expect("matrix had no nonzero diagonal");
-    ev.rescale(&total)
+    Ok(ev.rescale(&total))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ckks::client::{Decryptor, Encryptor, KeyGen};
+    use crate::ckks::keys::{bsgs_steps, EvalKeySpec};
     use crate::ckks::params::{CkksContext, CkksParams};
     use crate::util::rng::Pcg64;
+    use std::sync::Arc;
 
-    fn fixture() -> (Evaluator, SecretKey, Pcg64) {
+    fn fixture() -> (Evaluator, Encryptor, Decryptor, Pcg64) {
         let ctx = CkksContext::new(CkksParams::toy());
         let mut rng = Pcg64::new(0xBEEF);
-        let sk = SecretKey::generate(&ctx, &mut rng);
-        (Evaluator::new(ctx), sk, rng)
+        let kg = KeyGen::new(&ctx, &mut rng);
+        let spec = EvalKeySpec::none().with_rotations(&bsgs_steps(ctx.params.slots()));
+        let keys = kg.eval_key_set(&ctx, &spec, &mut rng);
+        let enc = kg.encryptor();
+        let dec = kg.decryptor();
+        (Evaluator::new(ctx, Arc::new(keys)), enc, dec, rng)
     }
 
     fn ramp(s: usize) -> Vec<Complex> {
@@ -184,19 +188,19 @@ mod tests {
 
     #[test]
     fn identity_matrix_is_noop() {
-        let (ev, sk, mut rng) = fixture();
+        let (ev, enc, dec, mut rng) = fixture();
         let s = ev.ctx.params.slots();
         let z = ramp(s);
-        let ct = ev.encrypt(&ev.encode(&z, 3), &sk, &mut rng);
-        let out = hom_linear(&ev, &ct, &SlotMatrix::identity(s), &sk);
+        let ct = enc.encrypt_slots(&ev.ctx, &z, 3, &mut rng);
+        let out = hom_linear(&ev, &ct, &SlotMatrix::identity(s)).unwrap();
         assert_eq!(out.level, 2);
-        let back = ev.decrypt_to_slots(&out, &sk);
+        let back = dec.decrypt_to_slots(&ev.ctx, &out);
         assert!(max_err(&z, &back) < 1e-3, "err={}", max_err(&z, &back));
     }
 
     #[test]
     fn permutation_matrix() {
-        let (ev, sk, mut rng) = fixture();
+        let (ev, enc, dec, mut rng) = fixture();
         let s = ev.ctx.params.slots();
         let z = ramp(s);
         // Cyclic shift-by-3 as a matrix.
@@ -204,16 +208,31 @@ mod tests {
         for r in 0..s {
             m.set(r, (r + 3) % s, Complex::new(1.0, 0.0));
         }
-        let ct = ev.encrypt(&ev.encode(&z, 3), &sk, &mut rng);
-        let out = hom_linear(&ev, &ct, &m, &sk);
-        let back = ev.decrypt_to_slots(&out, &sk);
+        let ct = enc.encrypt_slots(&ev.ctx, &z, 3, &mut rng);
+        let out = hom_linear(&ev, &ct, &m).unwrap();
+        let back = dec.decrypt_to_slots(&ev.ctx, &out);
         let want = m.matvec(&z);
         assert!(max_err(&want, &back) < 1e-3);
     }
 
     #[test]
+    fn missing_bsgs_key_surfaces_as_error() {
+        // An evaluator with no Galois keys cannot run a dense transform.
+        let (ev, enc, _dec, mut rng) = fixture();
+        let s = ev.ctx.params.slots();
+        let z = ramp(s);
+        let ct = enc.encrypt_slots(&ev.ctx, &z, 3, &mut rng);
+        let bare = Evaluator::without_keys(CkksContext::new(CkksParams::toy()));
+        let mut m = SlotMatrix::zeros(s);
+        for r in 0..s {
+            m.set(r, (r + 1) % s, Complex::new(1.0, 0.0));
+        }
+        assert!(hom_linear(&bare, &ct, &m).is_err());
+    }
+
+    #[test]
     fn random_dense_complex_matrix() {
-        let (ev, sk, mut rng) = fixture();
+        let (ev, enc, dec, mut rng) = fixture();
         let s = ev.ctx.params.slots();
         let z = ramp(s);
         let mut m = SlotMatrix::zeros(s);
@@ -229,9 +248,9 @@ mod tests {
                 );
             }
         }
-        let ct = ev.encrypt(&ev.encode(&z, 3), &sk, &mut rng);
-        let out = hom_linear(&ev, &ct, &m, &sk);
-        let back = ev.decrypt_to_slots(&out, &sk);
+        let ct = enc.encrypt_slots(&ev.ctx, &z, 3, &mut rng);
+        let out = hom_linear(&ev, &ct, &m).unwrap();
+        let back = dec.decrypt_to_slots(&ev.ctx, &out);
         let want = m.matvec(&z);
         assert!(max_err(&want, &back) < 1e-3, "err={}", max_err(&want, &back));
     }

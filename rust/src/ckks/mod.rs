@@ -2,6 +2,7 @@
 //! describes, built from scratch on 64-bit words.
 
 pub mod bootstrap;
+pub mod client;
 pub mod encoding;
 pub mod keys;
 pub mod linear;
@@ -14,12 +15,16 @@ pub mod poly;
 pub mod prime;
 pub mod rns;
 
+pub use client::{Decryptor, Encryptor, KeyGen};
 pub use encoding::{decode, encode, Complex, Encoder};
-pub use keys::{KeyBank, KeyKind, KsKey, SecretKey};
+pub use keys::{
+    bsgs_geometry, bsgs_steps, galois_element, rotate_and_sum_steps, EvalKeySet, EvalKeySpec, KeyKind,
+    KeySwitchScratch, KsKey, MissingKey, SecretKey,
+};
 pub use modarith::{Modulus, Modulus30};
 pub use modlin::{MltDims, ModLinKernel};
 pub use ntt::NttTable;
-pub use ops::{galois_element, Ciphertext, Evaluator};
+pub use ops::{Ciphertext, Evaluator};
 pub use params::{CkksContext, CkksParams, WidthProfile};
 pub use poly::{Format, RnsPoly, Tower};
 pub use rns::{BaseConvScratch, BaseConvTable, RnsTools};

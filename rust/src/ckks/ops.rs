@@ -4,12 +4,21 @@
 //! Ciphertexts are kept in Eval (NTT) format between operations, the same
 //! convention GPU libraries use so that the NTT boundary — the paper's
 //! dominant kernel — appears exactly where FIDESlib places it.
+//!
+//! The [`Evaluator`] is the **server side** of the client/server key
+//! split: it holds the context, the encoder and an `Arc<EvalKeySet>` of
+//! public keys — never a `SecretKey`. Ops that key-switch (`mul`,
+//! `rotate`, `conjugate`) return `Result` and fail with the typed
+//! [`MissingKey`] error when the client never declared the needed key.
+//! Encryption and decryption live in `client::{Encryptor, Decryptor}`.
+
+use std::sync::Arc;
 
 use super::encoding::{decode_with, encode_with, Complex, Encoder};
-use super::keys::{sample_error, sample_uniform, KeyBank, KeyKind, SecretKey};
+pub use super::keys::galois_element;
+use super::keys::{EvalKeySet, KeyKind, MissingKey};
 use super::params::CkksContext;
 use super::poly::{Format, RnsPoly};
-use crate::util::rng::Pcg64;
 
 /// A CKKS ciphertext `(c0, c1)` under secret key s: `c0 + c1*s ~= m`.
 #[derive(Debug, Clone)]
@@ -20,26 +29,32 @@ pub struct Ciphertext {
     pub scale: f64,
 }
 
-/// The evaluator: owns the context, encoder and (for this reproduction)
-/// the key bank. Method names mirror Table II.
+/// The server-side evaluator: owns the context, the encoder and the
+/// shared *public* evaluation keys. Method names mirror Table II.
 pub struct Evaluator {
     pub ctx: CkksContext,
     pub encoder: Encoder,
-    pub bank: KeyBank,
+    keys: Arc<EvalKeySet>,
 }
 
 impl Evaluator {
-    pub fn new(ctx: CkksContext) -> Self {
+    pub fn new(ctx: CkksContext, keys: Arc<EvalKeySet>) -> Self {
         let encoder = Encoder::new(ctx.params.n);
-        Self {
-            ctx,
-            encoder,
-            bank: KeyBank::new(0xFEC0),
-        }
+        Self { ctx, encoder, keys }
+    }
+
+    /// An evaluator restricted to key-free ops (add, PtMult, rescale...).
+    pub fn without_keys(ctx: CkksContext) -> Self {
+        Self::new(ctx, Arc::new(EvalKeySet::empty()))
+    }
+
+    /// The public key set this evaluator serves with.
+    pub fn keys(&self) -> &Arc<EvalKeySet> {
+        &self.keys
     }
 
     // ------------------------------------------------------------------
-    // Client-side: encode / encrypt / decrypt / decode
+    // Encoding (public — plaintexts carry no secret material)
     // ------------------------------------------------------------------
 
     pub fn encode(&self, z: &[Complex], level: usize) -> RnsPoly {
@@ -48,47 +63,6 @@ impl Evaluator {
 
     pub fn decode(&self, pt: &RnsPoly, scale: f64) -> Vec<Complex> {
         decode_with(&self.ctx, &self.encoder, pt, scale)
-    }
-
-    /// Symmetric encryption at `level`.
-    pub fn encrypt(&self, pt: &RnsPoly, sk: &SecretKey, rng: &mut Pcg64) -> Ciphertext {
-        assert_eq!(pt.format, Format::Coeff);
-        let chain = pt.chain.clone();
-        let level = chain.len() - 1;
-        let a = sample_uniform(&self.ctx, &chain, rng);
-        let mut e = sample_error(&self.ctx, &chain, rng);
-        e.to_eval(&self.ctx.tower);
-        let s = sk.restrict(&chain);
-        // c0 = -a*s + e + m ; c1 = a.
-        let mut c0 = a.clone();
-        c0.mul_assign(&s, &self.ctx.tower);
-        c0.neg_assign(&self.ctx.tower);
-        c0.add_assign(&e, &self.ctx.tower);
-        let mut m = pt.clone();
-        m.to_eval(&self.ctx.tower);
-        c0.add_assign(&m, &self.ctx.tower);
-        Ciphertext {
-            c0,
-            c1: a,
-            level,
-            scale: self.ctx.scale,
-        }
-    }
-
-    /// Decrypt to a coefficient-format plaintext polynomial.
-    pub fn decrypt(&self, ct: &Ciphertext, sk: &SecretKey) -> RnsPoly {
-        let s = sk.restrict(&ct.c0.chain);
-        let mut m = ct.c1.clone();
-        m.mul_assign(&s, &self.ctx.tower);
-        m.add_assign(&ct.c0, &self.ctx.tower);
-        m.to_coeff(&self.ctx.tower);
-        m
-    }
-
-    /// Decrypt straight to slots.
-    pub fn decrypt_to_slots(&self, ct: &Ciphertext, sk: &SecretKey) -> Vec<Complex> {
-        let pt = self.decrypt(ct, sk);
-        self.decode(&pt, ct.scale)
     }
 
     // ------------------------------------------------------------------
@@ -155,8 +129,12 @@ impl Evaluator {
         self.mul_plain(a, &pt)
     }
 
-    /// HEMult(c, c', evk): tensor, relinearize, rescale (Table II).
-    pub fn mul(&self, a: &Ciphertext, b: &Ciphertext, sk: &SecretKey) -> Ciphertext {
+    /// HEMult(c, c'): tensor, relinearize with the public evk, rescale
+    /// (Table II). Fails if the key set lacks the relin key at this level.
+    pub fn mul(&self, a: &Ciphertext, b: &Ciphertext) -> Result<Ciphertext, MissingKey> {
+        // Look the key up first (relin happens at the common level): fail
+        // before align clones or any tensor work runs.
+        let ksk = self.keys.get(KeyKind::Relin, a.level.min(b.level))?;
         let (a, b) = self.align(a, b);
         // Tensor product: (d0, d1, d2) = (c0c0', c0c1' + c1c0', c1c1').
         let mut d0 = a.c0.clone();
@@ -170,7 +148,6 @@ impl Evaluator {
         d2.mul_assign(&b.c1, &self.ctx.tower);
 
         // Relinearize d2 (KeySwitch with evk_{s^2}).
-        let ksk = self.bank.get(&self.ctx, sk, KeyKind::Relin, a.level);
         let (e0, e1) = ksk.apply(&self.ctx, &d2);
         d0.add_assign(&e0, &self.ctx.tower);
         d1.add_assign(&e1, &self.ctx.tower);
@@ -181,7 +158,7 @@ impl Evaluator {
             level: a.level,
             scale: a.scale * b.scale,
         };
-        self.rescale(&out)
+        Ok(self.rescale(&out))
     }
 
     /// Rescale(c, q_l): divide by the top prime, dropping one level.
@@ -217,22 +194,26 @@ impl Evaluator {
     }
 
     /// Rotate(c, k): cyclic slot rotation by k (Table II) — automorphism
-    /// x -> x^(5^k) on both components plus a KeySwitch of the c1 part.
-    pub fn rotate(&self, a: &Ciphertext, k: usize, sk: &SecretKey) -> Ciphertext {
+    /// x -> x^(5^k) on both components plus a KeySwitch of the c1 part
+    /// with the public Galois key. Fails if the client never declared
+    /// rotation step k.
+    pub fn rotate(&self, a: &Ciphertext, k: usize) -> Result<Ciphertext, MissingKey> {
         let slots = self.ctx.params.slots();
         let g = galois_element(k % slots, self.ctx.params.n);
-        self.apply_galois(a, g, sk)
+        self.apply_galois(a, g)
     }
 
     /// Complex conjugation of every slot (g = 2N - 1).
-    pub fn conjugate(&self, a: &Ciphertext, sk: &SecretKey) -> Ciphertext {
-        self.apply_galois(a, 2 * self.ctx.params.n - 1, sk)
+    pub fn conjugate(&self, a: &Ciphertext) -> Result<Ciphertext, MissingKey> {
+        self.apply_galois(a, 2 * self.ctx.params.n - 1)
     }
 
-    fn apply_galois(&self, a: &Ciphertext, g: usize, sk: &SecretKey) -> Ciphertext {
+    fn apply_galois(&self, a: &Ciphertext, g: usize) -> Result<Ciphertext, MissingKey> {
         if g == 1 {
-            return a.clone();
+            return Ok(a.clone());
         }
+        // Look the key up first: fail before doing any work.
+        let ksk = self.keys.get(KeyKind::Galois(g), a.level)?;
         // Automorphism in coefficient domain (SV-C: address generation +
         // data rearrangement on CUDA cores / LD-ST units).
         let mut c0 = a.c0.clone();
@@ -245,15 +226,14 @@ impl Evaluator {
         r1.to_eval(&self.ctx.tower);
 
         // KeySwitch phi_g(s) -> s on the rotated c1.
-        let ksk = self.bank.get(&self.ctx, sk, KeyKind::Galois(g), a.level);
         let (e0, e1) = ksk.apply(&self.ctx, &r1);
         r0.add_assign(&e0, &self.ctx.tower);
-        Ciphertext {
+        Ok(Ciphertext {
             c0: r0,
             c1: e1,
             level: a.level,
             scale: a.scale,
-        }
+        })
     }
 
     /// Bring two ciphertexts to a common level (and check scales match to
@@ -273,34 +253,35 @@ impl Evaluator {
     }
 }
 
-/// Galois element for rotation by k slots: 5^k mod 2N.
-pub fn galois_element(k: usize, n: usize) -> usize {
-    let two_n = 2 * n;
-    let mut g = 1usize;
-    for _ in 0..k {
-        g = (g * 5) % two_n;
-    }
-    g
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ckks::client::{Decryptor, Encryptor, KeyGen};
+    use crate::ckks::keys::EvalKeySpec;
     use crate::ckks::params::CkksParams;
+    use crate::util::rng::Pcg64;
 
     struct Fixture {
         ev: Evaluator,
-        sk: SecretKey,
+        enc: Encryptor,
+        dec: Decryptor,
         rng: Pcg64,
     }
 
     fn fixture() -> Fixture {
         let ctx = CkksContext::new(CkksParams::toy());
         let mut rng = Pcg64::new(0xC0FFEE);
-        let sk = SecretKey::generate(&ctx, &mut rng);
+        let kg = KeyGen::new(&ctx, &mut rng);
+        let slots = ctx.params.slots();
+        // Serving kit + the extra steps the rotation test exercises.
+        let spec = EvalKeySpec::serving(slots).with_rotations(&[5, slots - 1]);
+        let keys = kg.eval_key_set(&ctx, &spec, &mut rng);
+        let enc = kg.encryptor();
+        let dec = kg.decryptor();
         Fixture {
-            ev: Evaluator::new(ctx),
-            sk,
+            ev: Evaluator::new(ctx, Arc::new(keys)),
+            enc,
+            dec,
             rng,
         }
     }
@@ -322,9 +303,8 @@ mod tests {
     fn encrypt_decrypt() {
         let mut f = fixture();
         let z = ramp(f.ev.ctx.params.slots(), 1.0);
-        let pt = f.ev.encode(&z, f.ev.ctx.max_level());
-        let ct = f.ev.encrypt(&pt, &f.sk, &mut f.rng);
-        let back = f.ev.decrypt_to_slots(&ct, &f.sk);
+        let ct = f.enc.encrypt_slots(&f.ev.ctx, &z, f.ev.ctx.max_level(), &mut f.rng);
+        let back = f.dec.decrypt_to_slots(&f.ev.ctx, &ct);
         assert!(max_err(&z, &back) < 1e-4, "err={}", max_err(&z, &back));
     }
 
@@ -334,10 +314,10 @@ mod tests {
         let slots = f.ev.ctx.params.slots();
         let za = ramp(slots, 1.0);
         let zb = ramp(slots, 2.0);
-        let ca = f.ev.encrypt(&f.ev.encode(&za, 3), &f.sk, &mut f.rng);
-        let cb = f.ev.encrypt(&f.ev.encode(&zb, 3), &f.sk, &mut f.rng);
+        let ca = f.enc.encrypt_slots(&f.ev.ctx, &za, 3, &mut f.rng);
+        let cb = f.enc.encrypt_slots(&f.ev.ctx, &zb, 3, &mut f.rng);
         let sum = f.ev.add(&ca, &cb);
-        let back = f.ev.decrypt_to_slots(&sum, &f.sk);
+        let back = f.dec.decrypt_to_slots(&f.ev.ctx, &sum);
         let want: Vec<Complex> = za.iter().zip(&zb).map(|(a, b)| a.add(*b)).collect();
         assert!(max_err(&want, &back) < 1e-4);
     }
@@ -348,11 +328,11 @@ mod tests {
         let slots = f.ev.ctx.params.slots();
         let za = ramp(slots, 1.0);
         let zb = ramp(slots, 0.7);
-        let ca = f.ev.encrypt(&f.ev.encode(&za, 3), &f.sk, &mut f.rng);
-        let cb = f.ev.encrypt(&f.ev.encode(&zb, 3), &f.sk, &mut f.rng);
-        let prod = f.ev.mul(&ca, &cb, &f.sk);
+        let ca = f.enc.encrypt_slots(&f.ev.ctx, &za, 3, &mut f.rng);
+        let cb = f.enc.encrypt_slots(&f.ev.ctx, &zb, 3, &mut f.rng);
+        let prod = f.ev.mul(&ca, &cb).unwrap();
         assert_eq!(prod.level, 2);
-        let back = f.ev.decrypt_to_slots(&prod, &f.sk);
+        let back = f.dec.decrypt_to_slots(&f.ev.ctx, &prod);
         let want: Vec<Complex> = za.iter().zip(&zb).map(|(a, b)| a.mul(*b)).collect();
         assert!(max_err(&want, &back) < 1e-3, "err={}", max_err(&want, &back));
     }
@@ -363,13 +343,13 @@ mod tests {
         let mut f = fixture();
         let slots = f.ev.ctx.params.slots();
         let z = ramp(slots, 0.9);
-        let c1 = f.ev.encrypt(&f.ev.encode(&z, 3), &f.sk, &mut f.rng);
-        let c2 = f.ev.encrypt(&f.ev.encode(&z, 3), &f.sk, &mut f.rng);
-        let c3 = f.ev.encrypt(&f.ev.encode(&z, 3), &f.sk, &mut f.rng);
-        let p12 = f.ev.mul(&c1, &c2, &f.sk);
-        let p123 = f.ev.mul(&p12, &c3, &f.sk);
+        let c1 = f.enc.encrypt_slots(&f.ev.ctx, &z, 3, &mut f.rng);
+        let c2 = f.enc.encrypt_slots(&f.ev.ctx, &z, 3, &mut f.rng);
+        let c3 = f.enc.encrypt_slots(&f.ev.ctx, &z, 3, &mut f.rng);
+        let p12 = f.ev.mul(&c1, &c2).unwrap();
+        let p123 = f.ev.mul(&p12, &c3).unwrap();
         assert_eq!(p123.level, 1);
-        let back = f.ev.decrypt_to_slots(&p123, &f.sk);
+        let back = f.dec.decrypt_to_slots(&f.ev.ctx, &p123);
         let want: Vec<Complex> = z.iter().map(|v| v.mul(*v).mul(*v)).collect();
         assert!(max_err(&want, &back) < 1e-2, "err={}", max_err(&want, &back));
     }
@@ -379,10 +359,10 @@ mod tests {
         let mut f = fixture();
         let slots = f.ev.ctx.params.slots();
         let z = ramp(slots, 1.0);
-        let ct = f.ev.encrypt(&f.ev.encode(&z, 3), &f.sk, &mut f.rng);
+        let ct = f.enc.encrypt_slots(&f.ev.ctx, &z, 3, &mut f.rng);
         let pt = f.ev.encode(&ramp(slots, 3.0), 3);
         let out = f.ev.mul_plain(&ct, &pt);
-        let back = f.ev.decrypt_to_slots(&out, &f.sk);
+        let back = f.dec.decrypt_to_slots(&f.ev.ctx, &out);
         let want: Vec<Complex> = z
             .iter()
             .zip(&ramp(slots, 3.0))
@@ -396,10 +376,10 @@ mod tests {
         let mut f = fixture();
         let slots = f.ev.ctx.params.slots();
         let z = ramp(slots, 1.0);
-        let ct = f.ev.encrypt(&f.ev.encode(&z, 3), &f.sk, &mut f.rng);
+        let ct = f.enc.encrypt_slots(&f.ev.ctx, &z, 3, &mut f.rng);
         for k in [1usize, 2, 5, slots - 1] {
-            let rot = f.ev.rotate(&ct, k, &f.sk);
-            let back = f.ev.decrypt_to_slots(&rot, &f.sk);
+            let rot = f.ev.rotate(&ct, k).unwrap();
+            let back = f.dec.decrypt_to_slots(&f.ev.ctx, &rot);
             let want: Vec<Complex> = (0..slots).map(|j| z[(j + k) % slots]).collect();
             assert!(
                 max_err(&want, &back) < 1e-3,
@@ -410,15 +390,39 @@ mod tests {
     }
 
     #[test]
+    fn missing_galois_key_is_typed_error() {
+        let mut f = fixture();
+        let slots = f.ev.ctx.params.slots();
+        let z = ramp(slots, 1.0);
+        let ct = f.enc.encrypt_slots(&f.ev.ctx, &z, 3, &mut f.rng);
+        // Step 3 was never declared in the fixture spec.
+        let err = f.ev.rotate(&ct, 3).unwrap_err();
+        let g = galois_element(3, f.ev.ctx.params.n);
+        assert_eq!(err, MissingKey { kind: KeyKind::Galois(g), level: 3 });
+    }
+
+    #[test]
+    fn keyless_evaluator_rejects_mul() {
+        let mut f = fixture();
+        let slots = f.ev.ctx.params.slots();
+        let z = ramp(slots, 1.0);
+        let ct = f.enc.encrypt_slots(&f.ev.ctx, &z, 3, &mut f.rng);
+        let bare = Evaluator::without_keys(CkksContext::new(CkksParams::toy()));
+        let err = bare.mul(&ct, &ct).unwrap_err();
+        assert_eq!(err.kind, KeyKind::Relin);
+        assert_eq!(err.level, 3);
+    }
+
+    #[test]
     fn conjugation() {
         let mut f = fixture();
         let slots = f.ev.ctx.params.slots();
         let z: Vec<Complex> = (0..slots)
             .map(|i| Complex::new(0.1 * (i % 7) as f64, 0.05 * (i % 3) as f64))
             .collect();
-        let ct = f.ev.encrypt(&f.ev.encode(&z, 3), &f.sk, &mut f.rng);
-        let conj = f.ev.conjugate(&ct, &f.sk);
-        let back = f.ev.decrypt_to_slots(&conj, &f.sk);
+        let ct = f.enc.encrypt_slots(&f.ev.ctx, &z, 3, &mut f.rng);
+        let conj = f.ev.conjugate(&ct).unwrap();
+        let back = f.dec.decrypt_to_slots(&f.ev.ctx, &conj);
         let want: Vec<Complex> = z.iter().map(|c| c.conj()).collect();
         assert!(max_err(&want, &back) < 1e-3);
     }
@@ -428,10 +432,10 @@ mod tests {
         let mut f = fixture();
         let slots = f.ev.ctx.params.slots();
         let z = ramp(slots, 1.0);
-        let ct = f.ev.encrypt(&f.ev.encode(&z, 3), &f.sk, &mut f.rng);
+        let ct = f.enc.encrypt_slots(&f.ev.ctx, &z, 3, &mut f.rng);
         let shifted = f.ev.add_const(&ct, 0.25);
         let scaled = f.ev.mul_const(&shifted, 2.0);
-        let back = f.ev.decrypt_to_slots(&scaled, &f.sk);
+        let back = f.dec.decrypt_to_slots(&f.ev.ctx, &scaled);
         for (j, got) in back.iter().enumerate() {
             let want = (z[j].re + 0.25) * 2.0;
             assert!((got.re - want).abs() < 1e-3, "slot {j}");
@@ -443,10 +447,10 @@ mod tests {
         let mut f = fixture();
         let slots = f.ev.ctx.params.slots();
         let z = ramp(slots, 1.0);
-        let ct = f.ev.encrypt(&f.ev.encode(&z, 3), &f.sk, &mut f.rng);
+        let ct = f.enc.encrypt_slots(&f.ev.ctx, &z, 3, &mut f.rng);
         let low = f.ev.level_reduce(&ct, 1);
         assert_eq!(low.level, 1);
-        let back = f.ev.decrypt_to_slots(&low, &f.sk);
+        let back = f.dec.decrypt_to_slots(&f.ev.ctx, &low);
         assert!(max_err(&z, &back) < 1e-4);
     }
 

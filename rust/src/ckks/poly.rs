@@ -71,6 +71,33 @@ impl RnsPoly {
         }
     }
 
+    /// A zero-limb placeholder, used to initialize reusable scratch slots
+    /// (see `keys::KeySwitchScratch`) before their first `copy_from`.
+    pub fn empty() -> Self {
+        Self {
+            n: 0,
+            format: Format::Coeff,
+            limbs: Vec::new(),
+            chain: Vec::new(),
+        }
+    }
+
+    /// Overwrite `self` with the shape and contents of `src`, reusing the
+    /// existing limb allocations where possible (hot-loop `clone`).
+    pub fn copy_from(&mut self, src: &RnsPoly) {
+        self.n = src.n;
+        self.format = src.format;
+        self.chain.clear();
+        self.chain.extend_from_slice(&src.chain);
+        if self.limbs.len() != src.limbs.len() {
+            self.limbs.resize_with(src.limbs.len(), Vec::new);
+        }
+        for (dst, s) in self.limbs.iter_mut().zip(&src.limbs) {
+            dst.clear();
+            dst.extend_from_slice(s);
+        }
+    }
+
     pub fn level(&self) -> usize {
         self.limbs.len()
     }

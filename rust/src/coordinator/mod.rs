@@ -8,16 +8,26 @@
 //! so each response carries both the real result and the simulated
 //! A100/A100+FHECore latency for that batch's op mix.
 //!
-//! Built on std threads + channels (tokio is not vendored in this offline
-//! build; the architecture is the same: a bounded submit queue, a batcher
-//! with a linger window, and a worker pool).
+//! **Workers hold no secret material.** They are constructed from an
+//! `Arc<Evaluator>` whose only key state is the shared public
+//! `Arc<EvalKeySet>`; an op whose key the client never declared comes
+//! back as a typed [`MissingKey`] in the response instead of being
+//! silently derived server-side.
+//!
+//! Built on std threads + a Condvar-signalled batch queue (tokio is not
+//! vendored in this offline build; the architecture is the same): submit
+//! is *bounded* — beyond `ServeConfig::max_queue` in-flight requests it
+//! rejects with [`SubmitError::QueueFull`] (backpressure) — a linger
+//! window accumulates batches, and whichever worker wakes first flushes
+//! the window. No thread ever sleep-polls.
 
+use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
 use std::sync::mpsc::{channel, Receiver, Sender};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::ckks::{Ciphertext, Evaluator, RnsPoly, SecretKey};
+use crate::ckks::{Ciphertext, Evaluator, MissingKey, RnsPoly};
 use crate::codegen::{Backend, Compiler, SimParams};
 use crate::gpusim::{simulate_trace, GpuConfig};
 use crate::isa::Trace;
@@ -33,6 +43,7 @@ pub enum OpKind {
     Rotate(usize),
 }
 
+#[derive(Debug)]
 pub struct Request {
     pub id: u64,
     pub op: OpKind,
@@ -41,7 +52,9 @@ pub struct Request {
 
 pub struct Response {
     pub id: u64,
-    pub ct: Ciphertext,
+    /// The homomorphic result — or the typed failure when the public key
+    /// set lacks a key the op needs.
+    pub ct: Result<Ciphertext, MissingKey>,
     /// Wall-clock service time of the functional path.
     pub service: Duration,
     /// Simulated A100 / A100+FHECore latency for this request's op mix.
@@ -61,11 +74,19 @@ pub struct ServeConfig {
     pub workers: usize,
     pub max_batch: usize,
     pub linger: Duration,
+    /// Bound on admitted-but-unclaimed requests (pending window + queued
+    /// batches). `submit` rejects beyond this — backpressure, not OOM.
+    pub max_queue: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
-        Self { workers: 2, max_batch: 8, linger: Duration::from_millis(2) }
+        Self {
+            workers: 2,
+            max_batch: 8,
+            linger: Duration::from_millis(2),
+            max_queue: 64,
+        }
     }
 }
 
@@ -75,6 +96,8 @@ pub struct Metrics {
     pub batches: AtomicU64,
     pub queue_peak: AtomicUsize,
     pub total_service_us: AtomicU64,
+    /// Submissions rejected by backpressure.
+    pub rejected: AtomicU64,
 }
 
 impl Metrics {
@@ -89,97 +112,180 @@ impl Metrics {
     }
 }
 
-/// The coordinator: submit() requests, receive Responses on the channel
-/// handed to `start`.
+/// Why a submission was not admitted.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SubmitError {
+    /// The bounded queue is at `max_queue` — shed load or retry later.
+    QueueFull { depth: usize },
+    /// The coordinator is shutting down.
+    Stopped,
+}
+
+impl std::fmt::Display for SubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            SubmitError::QueueFull { depth } => {
+                write!(f, "serving queue full ({depth} in flight)")
+            }
+            SubmitError::Stopped => write!(f, "coordinator stopped"),
+        }
+    }
+}
+
+impl std::error::Error for SubmitError {}
+
+type Item = (Request, Sender<Response>);
+
+struct QueueState {
+    /// The open linger window.
+    pending: Vec<Item>,
+    window_start: Instant,
+    /// Batches ready for a worker.
+    batches: VecDeque<Vec<Item>>,
+    /// pending.len() + sum of queued batch sizes (the bounded quantity).
+    depth: usize,
+    shutdown: bool,
+}
+
+struct Shared {
+    state: Mutex<QueueState>,
+    cv: Condvar,
+}
+
+/// The coordinator: `submit()` requests, receive [`Response`]s on the
+/// returned channel. Dropping it drains queued batches and joins the
+/// worker threads.
 pub struct Coordinator {
-    tx: Sender<(Request, Sender<Response>)>,
+    shared: Arc<Shared>,
     pub metrics: Arc<Metrics>,
+    cfg: ServeConfig,
+    workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Spawn batcher + workers. `ev`/`sk`/`model` are shared read-only.
-    pub fn start(
-        ev: Arc<Evaluator>,
-        sk: Arc<SecretKey>,
-        model: Arc<ModelState>,
-        cfg: ServeConfig,
-    ) -> Self {
-        let (tx, rx) = channel::<(Request, Sender<Response>)>();
+    /// Spawn the worker pool. `ev` (context + public `EvalKeySet`) and
+    /// `model` are shared read-only; no secret key is ever handed over.
+    pub fn start(ev: Arc<Evaluator>, model: Arc<ModelState>, cfg: ServeConfig) -> Self {
+        let shared = Arc::new(Shared {
+            state: Mutex::new(QueueState {
+                pending: Vec::new(),
+                window_start: Instant::now(),
+                batches: VecDeque::new(),
+                depth: 0,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+        });
         let metrics = Arc::new(Metrics::default());
-        let m = metrics.clone();
-        std::thread::spawn(move || batcher_loop(rx, ev, sk, model, cfg, m));
-        Self { tx, metrics }
+        let mut workers = Vec::new();
+        for _ in 0..cfg.workers.max(1) {
+            let shared = shared.clone();
+            let ev = ev.clone();
+            let model = model.clone();
+            let metrics = metrics.clone();
+            let cfg = cfg.clone();
+            workers.push(std::thread::spawn(move || {
+                worker_loop(&shared, &ev, &model, &cfg, &metrics)
+            }));
+        }
+        Self {
+            shared,
+            metrics,
+            cfg,
+            workers,
+        }
     }
 
-    pub fn submit(&self, req: Request) -> Receiver<Response> {
+    /// Admit a request into the bounded queue. Returns the response
+    /// channel, or — with [`SubmitError::QueueFull`] when `max_queue`
+    /// requests are already in flight — hands the request back so the
+    /// caller can shed or retry it.
+    pub fn submit(&self, req: Request) -> Result<Receiver<Response>, (Request, SubmitError)> {
         let (rtx, rrx) = channel();
-        self.tx.send((req, rtx)).expect("coordinator stopped");
-        rrx
+        let mut st = self.shared.state.lock().unwrap();
+        if st.shutdown {
+            return Err((req, SubmitError::Stopped));
+        }
+        if st.depth >= self.cfg.max_queue {
+            self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err((req, SubmitError::QueueFull { depth: st.depth }));
+        }
+        if st.pending.is_empty() {
+            st.window_start = Instant::now();
+        }
+        st.pending.push((req, rtx));
+        st.depth += 1;
+        self.metrics.queue_peak.fetch_max(st.depth, Ordering::Relaxed);
+        if st.pending.len() >= self.cfg.max_batch {
+            let batch = std::mem::take(&mut st.pending);
+            st.batches.push_back(batch);
+        }
+        drop(st);
+        // One worker suffices: it either claims a promoted batch or
+        // becomes the timed waiter that flushes the linger window.
+        // (notify_all here would stampede every idle worker per request.)
+        self.shared.cv.notify_one();
+        Ok(rrx)
     }
 }
 
-fn batcher_loop(
-    rx: Receiver<(Request, Sender<Response>)>,
-    ev: Arc<Evaluator>,
-    sk: Arc<SecretKey>,
-    model: Arc<ModelState>,
-    cfg: ServeConfig,
-    metrics: Arc<Metrics>,
-) {
-    // Worker pool fed by a shared batch queue.
-    let batch_q: Arc<Mutex<Vec<Vec<(Request, Sender<Response>)>>>> =
-        Arc::new(Mutex::new(Vec::new()));
-    for _ in 0..cfg.workers.max(1) {
-        let q = batch_q.clone();
-        let ev = ev.clone();
-        let sk = sk.clone();
-        let model = model.clone();
-        let metrics = metrics.clone();
-        std::thread::spawn(move || loop {
-            let batch = { q.lock().unwrap().pop() };
-            match batch {
-                Some(batch) => serve_batch(batch, &ev, &sk, &model, &metrics),
-                None => std::thread::sleep(Duration::from_micros(200)),
-            }
-        });
-    }
-
-    // Linger-window batching.
-    let mut pending: Vec<(Request, Sender<Response>)> = Vec::new();
-    let mut window_start = Instant::now();
-    loop {
-        let timeout = cfg
-            .linger
-            .checked_sub(window_start.elapsed())
-            .unwrap_or(Duration::ZERO);
-        match rx.recv_timeout(if pending.is_empty() {
-            Duration::from_millis(50)
-        } else {
-            timeout
-        }) {
-            Ok(item) => {
-                if pending.is_empty() {
-                    window_start = Instant::now();
-                }
-                pending.push(item);
-                let depth = pending.len();
-                metrics.queue_peak.fetch_max(depth, Ordering::Relaxed);
-                if depth >= cfg.max_batch {
-                    batch_q.lock().unwrap().push(std::mem::take(&mut pending));
-                }
-            }
-            Err(std::sync::mpsc::RecvTimeoutError::Timeout) => {
-                if !pending.is_empty() {
-                    batch_q.lock().unwrap().push(std::mem::take(&mut pending));
-                }
-            }
-            Err(std::sync::mpsc::RecvTimeoutError::Disconnected) => {
-                if !pending.is_empty() {
-                    batch_q.lock().unwrap().push(std::mem::take(&mut pending));
-                }
-                return;
+impl Drop for Coordinator {
+    fn drop(&mut self) {
+        {
+            let mut st = self.shared.state.lock().unwrap();
+            st.shutdown = true;
+            // Graceful drain: promote the open window so nothing admitted
+            // is silently dropped.
+            if !st.pending.is_empty() {
+                let batch = std::mem::take(&mut st.pending);
+                st.batches.push_back(batch);
             }
         }
+        self.shared.cv.notify_all();
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Claim the next batch: a full/queued one immediately, the open linger
+/// window once it ages past `linger`, or `None` on shutdown with an empty
+/// queue. Blocks on the condvar — no sleep-polling.
+fn claim_batch(shared: &Shared, cfg: &ServeConfig) -> Option<Vec<Item>> {
+    let mut st = shared.state.lock().unwrap();
+    loop {
+        if let Some(b) = st.batches.pop_front() {
+            st.depth -= b.len();
+            return Some(b);
+        }
+        if !st.pending.is_empty() {
+            let elapsed = st.window_start.elapsed();
+            if elapsed >= cfg.linger {
+                let batch = std::mem::take(&mut st.pending);
+                st.depth -= batch.len();
+                return Some(batch);
+            }
+            // Sleep exactly until the window closes (or new work arrives).
+            let (guard, _) = shared.cv.wait_timeout(st, cfg.linger - elapsed).unwrap();
+            st = guard;
+            continue;
+        }
+        if st.shutdown {
+            return None;
+        }
+        st = shared.cv.wait(st).unwrap();
+    }
+}
+
+fn worker_loop(
+    shared: &Shared,
+    ev: &Evaluator,
+    model: &ModelState,
+    cfg: &ServeConfig,
+    metrics: &Metrics,
+) {
+    while let Some(batch) = claim_batch(shared, cfg) {
+        serve_batch(batch, ev, model, metrics);
     }
 }
 
@@ -207,37 +313,37 @@ fn request_trace(op: OpKind, level: usize, ev: &Evaluator, backend: Backend) -> 
     }
 }
 
-fn serve_batch(
-    batch: Vec<(Request, Sender<Response>)>,
-    ev: &Evaluator,
-    sk: &SecretKey,
-    model: &ModelState,
-    metrics: &Metrics,
-) {
+/// Execute one request against the public key set.
+fn execute(ev: &Evaluator, model: &ModelState, req: &Request) -> Result<Ciphertext, MissingKey> {
+    match req.op {
+        OpKind::LinearScore => {
+            // dot(w, x): PtMult then rotate-and-sum over all slots.
+            let mut acc = ev.mul_plain(&req.ct, &model.weights_pt);
+            let mut step = 1usize;
+            while step < model.rot_steps {
+                let rot = ev.rotate(&acc, step)?;
+                acc = ev.add(&acc, &rot);
+                step <<= 1;
+            }
+            Ok(acc)
+        }
+        OpKind::Square => ev.mul(&req.ct, &req.ct),
+        OpKind::Rotate(k) => ev.rotate(&req.ct, k),
+    }
+}
+
+fn serve_batch(batch: Vec<Item>, ev: &Evaluator, model: &ModelState, metrics: &Metrics) {
     let gpu = GpuConfig::default();
     let n = batch.len();
     metrics.batches.fetch_add(1, Ordering::Relaxed);
     for (req, reply) in batch {
         let t0 = Instant::now();
-        let out = match req.op {
-            OpKind::LinearScore => {
-                // dot(w, x): PtMult then rotate-and-sum over all slots.
-                let mut acc = ev.mul_plain(&req.ct, &model.weights_pt);
-                let mut step = 1usize;
-                while step < model.rot_steps {
-                    let rot = ev.rotate(&acc, step, sk);
-                    acc = ev.add(&acc, &rot);
-                    step <<= 1;
-                }
-                acc
-            }
-            OpKind::Square => ev.mul(&req.ct, &req.ct, sk),
-            OpKind::Rotate(k) => ev.rotate(&req.ct, k, sk),
-        };
+        let out = execute(ev, model, &req);
         let service = t0.elapsed();
         // Dual dispatch: the timing model for this op mix.
-        let base = request_trace(req.op, out.level, ev, Backend::A100);
-        let fhec = request_trace(req.op, out.level, ev, Backend::A100Fhec);
+        let level = out.as_ref().map(|c| c.level).unwrap_or(req.ct.level);
+        let base = request_trace(req.op, level, ev, Backend::A100);
+        let fhec = request_trace(req.op, level, ev, Backend::A100Fhec);
         let sim_base_us = simulate_trace(&gpu, &base).latency_us(&gpu);
         let sim_fhec_us = simulate_trace(&gpu, &fhec).latency_us(&gpu);
         metrics.served.fetch_add(1, Ordering::Relaxed);
@@ -260,40 +366,53 @@ mod tests {
     use super::*;
     use crate::ckks::encoding::Complex;
     use crate::ckks::params::{CkksContext, CkksParams};
+    use crate::ckks::{Decryptor, Encryptor, EvalKeySpec, KeyGen, KeyKind};
     use crate::util::rng::Pcg64;
 
-    fn setup() -> (Arc<Evaluator>, Arc<SecretKey>, Arc<ModelState>, Pcg64) {
+    fn setup() -> (Arc<Evaluator>, Encryptor, Decryptor, Arc<ModelState>, Pcg64) {
         let ctx = CkksContext::new(CkksParams::toy());
         let mut rng = Pcg64::new(0x5EEE);
-        let sk = SecretKey::generate(&ctx, &mut rng);
-        let ev = Evaluator::new(ctx);
-        let slots = ev.ctx.params.slots();
+        let kg = KeyGen::new(&ctx, &mut rng);
+        let slots = ctx.params.slots();
+        // Serving kit + the explicit step the Rotate(3) test uses.
+        let spec = EvalKeySpec::serving(slots).with_rotations(&[3]);
+        let keys = kg.eval_key_set(&ctx, &spec, &mut rng);
+        let enc = kg.encryptor();
+        let dec = kg.decryptor();
+        let ev = Evaluator::new(ctx, Arc::new(keys));
         let w: Vec<Complex> = (0..slots)
             .map(|i| Complex::new(0.01 * ((i % 10) as f64), 0.0))
             .collect();
         let weights_pt = ev.encode(&w, ev.ctx.max_level());
         let model = ModelState { weights_pt, rot_steps: slots };
-        (Arc::new(ev), Arc::new(sk), Arc::new(model), rng)
+        (Arc::new(ev), enc, dec, Arc::new(model), rng)
     }
 
     #[test]
     fn serves_rotations_correctly() {
-        let (ev, sk, model, mut rng) = setup();
+        let (ev, enc, dec, model, mut rng) = setup();
         let coord = Coordinator::start(
             ev.clone(),
-            sk.clone(),
             model,
-            ServeConfig { workers: 2, max_batch: 4, linger: Duration::from_millis(1) },
+            ServeConfig {
+                workers: 2,
+                max_batch: 4,
+                linger: Duration::from_millis(1),
+                max_queue: 64,
+            },
         );
         let slots = ev.ctx.params.slots();
         let z: Vec<Complex> = (0..slots)
             .map(|i| Complex::new((i % 7) as f64 * 0.1, 0.0))
             .collect();
-        let ct = ev.encrypt(&ev.encode(&z, ev.ctx.max_level()), &sk, &mut rng);
-        let rx = coord.submit(Request { id: 1, op: OpKind::Rotate(3), ct });
+        let ct = enc.encrypt_slots(&ev.ctx, &z, ev.ctx.max_level(), &mut rng);
+        let rx = coord
+            .submit(Request { id: 1, op: OpKind::Rotate(3), ct })
+            .unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
         assert_eq!(resp.id, 1);
-        let back = ev.decrypt_to_slots(&resp.ct, &sk);
+        let out = resp.ct.expect("rotation key declared");
+        let back = dec.decrypt_to_slots(&ev.ctx, &out);
         for j in 0..slots {
             let want = (((j + 3) % slots) % 7) as f64 * 0.1;
             assert!((back[j].re - want).abs() < 1e-3, "slot {j}");
@@ -303,28 +422,97 @@ mod tests {
 
     #[test]
     fn batches_multiple_requests() {
-        let (ev, sk, model, mut rng) = setup();
+        let (ev, enc, dec, model, mut rng) = setup();
         let coord = Coordinator::start(
             ev.clone(),
-            sk.clone(),
             model,
-            ServeConfig { workers: 2, max_batch: 4, linger: Duration::from_millis(5) },
+            ServeConfig {
+                workers: 2,
+                max_batch: 4,
+                linger: Duration::from_millis(5),
+                max_queue: 64,
+            },
         );
         let slots = ev.ctx.params.slots();
         let z = vec![Complex::new(0.5, 0.0); slots];
         let mut receivers = Vec::new();
         for id in 0..6u64 {
-            let ct = ev.encrypt(&ev.encode(&z, ev.ctx.max_level()), &sk, &mut rng);
-            receivers.push(coord.submit(Request { id, op: OpKind::Square, ct }));
+            let ct = enc.encrypt_slots(&ev.ctx, &z, ev.ctx.max_level(), &mut rng);
+            receivers.push(coord.submit(Request { id, op: OpKind::Square, ct }).unwrap());
         }
         for rx in receivers {
             let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
-            let back = ev.decrypt_to_slots(&resp.ct, &sk);
+            let out = resp.ct.expect("relin key declared");
+            let back = dec.decrypt_to_slots(&ev.ctx, &out);
             assert!((back[0].re - 0.25).abs() < 1e-2, "0.5^2 = 0.25, got {}", back[0].re);
         }
         let m = &coord.metrics;
         assert_eq!(m.served.load(Ordering::Relaxed), 6);
         assert!(m.batches.load(Ordering::Relaxed) >= 1);
         assert!(m.mean_batch() >= 1.0);
+    }
+
+    #[test]
+    fn bounded_queue_rejects_when_full() {
+        let (ev, enc, _dec, model, mut rng) = setup();
+        // A linger window far longer than any CI scheduling hiccup + a
+        // huge max_batch: nothing can be claimed while we fill the
+        // window, so the third submit must bounce deterministically.
+        let coord = Coordinator::start(
+            ev.clone(),
+            model,
+            ServeConfig {
+                workers: 1,
+                max_batch: 100,
+                linger: Duration::from_secs(60),
+                max_queue: 2,
+            },
+        );
+        let slots = ev.ctx.params.slots();
+        let z = vec![Complex::new(0.1, 0.0); slots];
+        let ct = enc.encrypt_slots(&ev.ctx, &z, ev.ctx.max_level(), &mut rng);
+        let r1 = coord.submit(Request { id: 1, op: OpKind::Rotate(3), ct: ct.clone() });
+        let r2 = coord.submit(Request { id: 2, op: OpKind::Rotate(3), ct: ct.clone() });
+        assert!(r1.is_ok() && r2.is_ok());
+        let r3 = coord.submit(Request { id: 3, op: OpKind::Rotate(3), ct });
+        let (bounced, err) = r3.err().expect("third submit must bounce");
+        assert_eq!(bounced.id, 3, "rejected request is handed back");
+        assert_eq!(err, SubmitError::QueueFull { depth: 2 });
+        assert_eq!(coord.metrics.rejected.load(Ordering::Relaxed), 1);
+        // Dropping the coordinator drains gracefully: the open window is
+        // promoted, the worker serves it, and the join completes — the
+        // admitted two get responses without waiting out the linger.
+        drop(coord);
+        for rx in [r1.unwrap(), r2.unwrap()] {
+            let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            assert!(resp.ct.is_ok());
+        }
+    }
+
+    #[test]
+    fn undeclared_rotation_returns_typed_error() {
+        let (ev, enc, _dec, model, mut rng) = setup();
+        let coord = Coordinator::start(
+            ev.clone(),
+            model,
+            ServeConfig {
+                workers: 1,
+                max_batch: 1,
+                linger: Duration::from_millis(1),
+                max_queue: 8,
+            },
+        );
+        let slots = ev.ctx.params.slots();
+        let z = vec![Complex::new(0.1, 0.0); slots];
+        let ct = enc.encrypt_slots(&ev.ctx, &z, ev.ctx.max_level(), &mut rng);
+        // Step 7 was never declared in the key spec.
+        let rx = coord.submit(Request { id: 9, op: OpKind::Rotate(7), ct }).unwrap();
+        let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+        let err = resp.ct.unwrap_err();
+        match err.kind {
+            KeyKind::Galois(_) => {}
+            other => panic!("expected Galois MissingKey, got {other:?}"),
+        }
+        assert_eq!(err.level, ev.ctx.max_level());
     }
 }

@@ -11,7 +11,7 @@ use std::sync::Arc;
 
 use fhecore::ckks::encoding::Complex;
 use fhecore::ckks::params::{CkksContext, CkksParams};
-use fhecore::ckks::{Evaluator, SecretKey};
+use fhecore::ckks::{EvalKeySpec, Evaluator, KeyGen};
 use fhecore::coordinator::{Coordinator, ModelState, OpKind, Request, ServeConfig};
 use fhecore::gpusim::{simulate_trace, GpuConfig};
 use fhecore::util::cli::Args;
@@ -79,14 +79,23 @@ fn serve_demo(requests: usize) {
     println!("building CKKS context (N=4096)...");
     let ctx = CkksContext::new(CkksParams::medium());
     let mut rng = Pcg64::new(0xD15EA5E);
-    let sk = Arc::new(SecretKey::generate(&ctx, &mut rng));
-    let ev = Arc::new(Evaluator::new(ctx));
+    // Client side: secret key + public evaluation keys, generated once.
+    // Every demo op runs at max_level, so declare only that level.
+    let keygen = KeyGen::new(&ctx, &mut rng);
+    let keys = keygen.eval_key_set(
+        &ctx,
+        &EvalKeySpec::serving(ctx.params.slots()).at_levels(vec![ctx.max_level()]),
+        &mut rng,
+    );
+    let enc = keygen.encryptor();
+    // Server side: evaluator + workers hold only the public key set.
+    let ev = Arc::new(Evaluator::new(ctx, Arc::new(keys)));
     let slots = ev.ctx.params.slots();
     let w: Vec<Complex> =
         (0..slots).map(|i| Complex::new(0.002 * (i % 50) as f64, 0.0)).collect();
     let weights_pt = ev.encode(&w, ev.ctx.max_level());
     let model = Arc::new(ModelState { weights_pt, rot_steps: slots });
-    let coord = Coordinator::start(ev.clone(), sk.clone(), model, ServeConfig::default());
+    let coord = Coordinator::start(ev.clone(), model, ServeConfig::default());
 
     let t0 = std::time::Instant::now();
     let mut rxs = Vec::new();
@@ -94,13 +103,26 @@ fn serve_demo(requests: usize) {
         let z: Vec<Complex> = (0..slots)
             .map(|i| Complex::new(0.001 * ((i + id as usize) % 100) as f64, 0.0))
             .collect();
-        let ct = ev.encrypt(&ev.encode(&z, ev.ctx.max_level()), &sk, &mut rng);
-        rxs.push(coord.submit(Request { id, op: OpKind::LinearScore, ct }));
+        let ct = enc.encrypt_slots(&ev.ctx, &z, ev.ctx.max_level(), &mut rng);
+        let mut req = Request { id, op: OpKind::LinearScore, ct };
+        // Bounded queue: on backpressure, wait briefly and resubmit.
+        let rx = loop {
+            match coord.submit(req) {
+                Ok(rx) => break rx,
+                Err((bounced, e)) => {
+                    println!("backpressure on request {id}: {e}; retrying");
+                    std::thread::sleep(std::time::Duration::from_millis(2));
+                    req = bounced;
+                }
+            }
+        };
+        rxs.push(rx);
     }
     let mut sim_base = 0.0;
     let mut sim_fhec = 0.0;
     for rx in rxs {
         let r = rx.recv().unwrap();
+        r.ct.expect("serving key set covers LinearScore");
         sim_base += r.sim_base_us;
         sim_fhec += r.sim_fhec_us;
     }
@@ -155,14 +177,17 @@ fn runtime_smoke(engine: &fhecore::runtime::Engine) {
 fn selftest() {
     let ctx = CkksContext::new(CkksParams::toy());
     let mut rng = Pcg64::new(7);
-    let sk = SecretKey::generate(&ctx, &mut rng);
-    let ev = Evaluator::new(ctx);
+    let keygen = KeyGen::new(&ctx, &mut rng);
+    let keys = keygen.eval_key_set(&ctx, &EvalKeySpec::relin_only(), &mut rng);
+    let enc = keygen.encryptor();
+    let dec = keygen.decryptor();
+    let ev = Evaluator::new(ctx, Arc::new(keys));
     let slots = ev.ctx.params.slots();
     let z: Vec<Complex> =
         (0..slots).map(|i| Complex::new(0.1 * (i % 5) as f64, 0.0)).collect();
-    let ct = ev.encrypt(&ev.encode(&z, 3), &sk, &mut rng);
-    let sq = ev.mul(&ct, &ct, &sk);
-    let back = ev.decrypt_to_slots(&sq, &sk);
+    let ct = enc.encrypt_slots(&ev.ctx, &z, 3, &mut rng);
+    let sq = ev.mul(&ct, &ct).expect("relin key generated");
+    let back = dec.decrypt_to_slots(&ev.ctx, &sq);
     let err = back
         .iter()
         .enumerate()

@@ -1,12 +1,16 @@
 //! Cross-module integration over the CKKS substrate: encoder + scheme +
 //! linear transforms + bootstrap working together on application-shaped
-//! pipelines.
+//! pipelines, all through the client/server key split (KeyGen ->
+//! EvalKeySet -> secret-key-free Evaluator).
+
+use std::sync::Arc;
 
 use fhecore::ckks::bootstrap::{bootstrap, BootstrapConfig};
 use fhecore::ckks::encoding::Complex;
+use fhecore::ckks::keys::bsgs_steps;
 use fhecore::ckks::linear::{hom_linear, SlotMatrix};
 use fhecore::ckks::params::{CkksContext, CkksParams, WidthProfile};
-use fhecore::ckks::{Evaluator, SecretKey};
+use fhecore::ckks::{Decryptor, Encryptor, EvalKeySpec, Evaluator, KeyGen};
 use fhecore::util::rng::Pcg64;
 
 fn max_err(a: &[Complex], b: &[Complex]) -> f64 {
@@ -16,34 +20,47 @@ fn max_err(a: &[Complex], b: &[Complex]) -> f64 {
         .fold(0.0, f64::max)
 }
 
+/// Client keygen + server evaluator for one parameter set.
+fn split(
+    params: CkksParams,
+    seed: u64,
+    spec: &EvalKeySpec,
+) -> (Evaluator, Encryptor, Decryptor, Pcg64) {
+    let ctx = CkksContext::new(params);
+    let mut rng = Pcg64::new(seed);
+    let kg = KeyGen::new(&ctx, &mut rng);
+    let keys = kg.eval_key_set(&ctx, spec, &mut rng);
+    let enc = kg.encryptor();
+    let dec = kg.decryptor();
+    (Evaluator::new(ctx, Arc::new(keys)), enc, dec, rng)
+}
+
 /// Encrypted logistic-regression scoring: sigmoid(w.x + b) approximated by
 /// a polynomial — the quickstart workload end to end.
 #[test]
 fn encrypted_lr_scoring_pipeline() {
-    let ctx = CkksContext::new(CkksParams::toy());
-    let mut rng = Pcg64::new(0xAB);
-    let sk = SecretKey::generate(&ctx, &mut rng);
-    let ev = Evaluator::new(ctx);
-    let slots = ev.ctx.params.slots();
+    let slots = CkksParams::toy().slots();
+    let (ev, enc, dec, mut rng) =
+        split(CkksParams::toy(), 0xAB, &EvalKeySpec::serving(slots));
 
     let x: Vec<f64> = (0..slots).map(|i| 0.02 * ((i % 40) as f64 - 20.0)).collect();
     let w: Vec<f64> = (0..slots).map(|i| 0.015 * ((i % 7) as f64 - 3.0)).collect();
     let zx: Vec<Complex> = x.iter().map(|&v| Complex::new(v, 0.0)).collect();
     let zw: Vec<Complex> = w.iter().map(|&v| Complex::new(v, 0.0)).collect();
 
-    let ct = ev.encrypt(&ev.encode(&zx, 3), &sk, &mut rng);
+    let ct = enc.encrypt_slots(&ev.ctx, &zx, 3, &mut rng);
     // dot via elementwise product + rotate-and-sum
     let prod = ev.mul_plain(&ct, &ev.encode(&zw, 3));
     let mut acc = prod.clone();
     let mut step = 1;
     while step < slots {
-        let r = ev.rotate(&acc, step, &sk);
+        let r = ev.rotate(&acc, step).expect("pow2 steps declared");
         acc = ev.add(&acc, &r);
         step <<= 1;
     }
     // sigmoid(t) ~ 0.5 + 0.197 t (degree-1 is fine at this range)
     let scored = ev.add_const(&ev.mul_const(&acc, 0.197), 0.5);
-    let got = ev.decrypt_to_slots(&scored, &sk);
+    let got = dec.decrypt_to_slots(&ev.ctx, &scored);
 
     let dot: f64 = x.iter().zip(&w).map(|(a, b)| a * b).sum();
     let want = 0.5 + 0.197 * dot;
@@ -57,10 +74,9 @@ fn encrypted_lr_scoring_pipeline() {
 /// Linear-transform composition: y = M2 (M1 x) with plaintext verification.
 #[test]
 fn chained_linear_transforms() {
-    let ctx = CkksContext::new(CkksParams::toy());
-    let mut rng = Pcg64::new(0xCD);
-    let sk = SecretKey::generate(&ctx, &mut rng);
-    let ev = Evaluator::new(ctx);
+    let slots = CkksParams::toy().slots();
+    let spec = EvalKeySpec::none().with_rotations(&bsgs_steps(slots));
+    let (ev, enc, dec, mut rng) = split(CkksParams::toy(), 0xCD, &spec);
     let s = ev.ctx.params.slots();
 
     let mut m1 = SlotMatrix::zeros(s);
@@ -71,10 +87,10 @@ fn chained_linear_transforms() {
         m2.set(r, (r + 2) % s, Complex::new(1.0, 0.0));
     }
     let z: Vec<Complex> = (0..s).map(|i| Complex::new(0.01 * i as f64, 0.0)).collect();
-    let ct = ev.encrypt(&ev.encode(&z, 3), &sk, &mut rng);
-    let y1 = hom_linear(&ev, &ct, &m1, &sk);
-    let y2 = hom_linear(&ev, &y1, &m2, &sk);
-    let got = ev.decrypt_to_slots(&y2, &sk);
+    let ct = enc.encrypt_slots(&ev.ctx, &z, 3, &mut rng);
+    let y1 = hom_linear(&ev, &ct, &m1).unwrap();
+    let y2 = hom_linear(&ev, &y1, &m2).unwrap();
+    let got = dec.decrypt_to_slots(&ev.ctx, &y2);
     let want = m2.matvec(&m1.matvec(&z));
     assert!(max_err(&got, &want) < 5e-3, "err {}", max_err(&got, &want));
 }
@@ -91,26 +107,23 @@ fn compute_bootstrap_compute() {
         profile: WidthProfile::Wide,
         sigma: 3.2,
     };
-    let ctx = CkksContext::new(params);
-    let mut rng = Pcg64::new(0xEF);
-    let sk = SecretKey::generate(&ctx, &mut rng);
-    let ev = Evaluator::new(ctx);
-    let slots = ev.ctx.params.slots();
+    let slots = params.slots();
+    let (ev, enc, dec, mut rng) = split(params, 0xEF, &EvalKeySpec::bootstrap(slots));
 
     let z: Vec<Complex> = (0..slots)
         .map(|i| Complex::new(0.3 * ((i % 3) as f64 - 1.0), 0.0))
         .collect();
     // Encrypt at level 1, square once -> level 0 (exhausted).
-    let ct = ev.encrypt(&ev.encode(&z, 1), &sk, &mut rng);
-    let sq = ev.mul(&ct, &ct, &sk);
+    let ct = enc.encrypt_slots(&ev.ctx, &z, 1, &mut rng);
+    let sq = ev.mul(&ct, &ct).unwrap();
     assert_eq!(sq.level, 0);
 
-    let boosted = bootstrap(&ev, &sq, &BootstrapConfig::default(), &sk);
+    let boosted = bootstrap(&ev, &sq, &BootstrapConfig::default()).unwrap();
     assert!(boosted.level >= 1, "need at least one level back");
 
     // keep computing: multiply by 2 (consumes a level on the refreshed ct)
     let doubled = ev.mul_const(&boosted, 2.0);
-    let got = ev.decrypt_to_slots(&doubled, &sk);
+    let got = dec.decrypt_to_slots(&ev.ctx, &doubled);
     for (i, g) in got.iter().enumerate() {
         let want = 2.0 * (0.3 * ((i % 3) as f64 - 1.0)).powi(2);
         assert!((g.re - want).abs() < 0.1, "slot {i}: {} vs {want}", g.re);
@@ -118,7 +131,8 @@ fn compute_bootstrap_compute() {
 }
 
 /// The PE-width profile: the scheme also runs on 30-bit primes (the
-/// paper's 32-bit datapath), end to end.
+/// paper's 32-bit datapath), end to end — pure client-side roundtrip,
+/// no evaluation keys needed at all.
 #[test]
 fn pe32_profile_scheme_roundtrip() {
     let params = CkksParams {
@@ -131,13 +145,14 @@ fn pe32_profile_scheme_roundtrip() {
     };
     let ctx = CkksContext::new(params);
     let mut rng = Pcg64::new(0x32);
-    let sk = SecretKey::generate(&ctx, &mut rng);
-    let ev = Evaluator::new(ctx);
-    let slots = ev.ctx.params.slots();
+    let kg = KeyGen::new(&ctx, &mut rng);
+    let enc = kg.encryptor();
+    let dec = kg.decryptor();
+    let slots = ctx.params.slots();
     let z: Vec<Complex> =
         (0..slots).map(|i| Complex::new(0.01 * (i % 9) as f64, 0.0)).collect();
-    let ct = ev.encrypt(&ev.encode(&z, 2), &sk, &mut rng);
-    let back = ev.decrypt_to_slots(&ct, &sk);
+    let ct = enc.encrypt_slots(&ctx, &z, 2, &mut rng);
+    let back = dec.decrypt_to_slots(&ctx, &ct);
     let err = max_err(&z, &back);
     // 25-bit scale: coarser precision, but structurally sound.
     assert!(err < 1e-2, "pe32 roundtrip err {err}");

@@ -1,0 +1,127 @@
+//! The client/server key split, end to end: server-side evaluation runs
+//! on the public `EvalKeySet` alone, in a scope where every handle to the
+//! `SecretKey` (the `KeyGen`) has been dropped; undeclared keys surface
+//! as the typed `MissingKey` error instead of being silently re-derived.
+
+use std::sync::Arc;
+
+use fhecore::ckks::bootstrap::{bootstrap, BootstrapConfig};
+use fhecore::ckks::encoding::Complex;
+use fhecore::ckks::params::{CkksContext, CkksParams, WidthProfile};
+use fhecore::ckks::{
+    galois_element, Ciphertext, Decryptor, EvalKeySpec, Evaluator, KeyGen, KeyKind, MissingKey,
+};
+use fhecore::util::rng::Pcg64;
+
+fn max_err(a: &[Complex], b: &[Complex]) -> f64 {
+    a.iter()
+        .zip(b)
+        .map(|(x, y)| ((x.re - y.re).powi(2) + (x.im - y.im).powi(2)).sqrt())
+        .fold(0.0, f64::max)
+}
+
+/// The "server": sees the evaluator (public keys) and a ciphertext —
+/// the `SecretKey` type is not even reachable from these arguments.
+fn server_square_rotate_conj(ev: &Evaluator, ct: &Ciphertext) -> Ciphertext {
+    let sq = ev.mul(ct, ct).expect("relin key in the public set");
+    let rot = ev.rotate(&sq, 4).expect("rotation step 4 declared");
+    ev.conjugate(&rot).expect("conjugation key declared")
+}
+
+#[test]
+fn hemult_rotate_run_with_secret_key_dropped() {
+    let ctx = CkksContext::new(CkksParams::toy());
+    let slots = ctx.params.slots();
+    let z: Vec<Complex> = (0..slots)
+        .map(|i| Complex::new(0.1 * ((i % 6) as f64 - 2.5), 0.0))
+        .collect();
+
+    // Client scope: generate keys, encrypt, keep only the Decryptor.
+    // The KeyGen — and with it the last general handle to the secret —
+    // is dropped before any server-side evaluation happens.
+    let (eval_keys, ct, dec): (_, Ciphertext, Decryptor) = {
+        let mut rng = Pcg64::new(0x5E0);
+        let kg = KeyGen::new(&ctx, &mut rng);
+        let keys = kg.eval_key_set(&ctx, &EvalKeySpec::serving(slots), &mut rng);
+        let enc = kg.encryptor();
+        let ct = enc.encrypt_slots(&ctx, &z, 3, &mut rng);
+        (keys, ct, kg.decryptor())
+    };
+
+    // Server scope: public material only.
+    let ev = Evaluator::new(ctx, Arc::new(eval_keys));
+    let out = server_square_rotate_conj(&ev, &ct);
+
+    // Client verifies: conj(rot_4(z^2)) — all slots real, so conj is id.
+    let back = dec.decrypt_to_slots(&ev.ctx, &out);
+    let want: Vec<Complex> = (0..slots)
+        .map(|j| {
+            let v = z[(j + 4) % slots].re;
+            Complex::new(v * v, 0.0)
+        })
+        .collect();
+    assert!(max_err(&want, &back) < 1e-2, "err {}", max_err(&want, &back));
+}
+
+#[test]
+fn bootstrap_runs_with_secret_key_dropped() {
+    let params = CkksParams {
+        n: 64,
+        depth: 19,
+        scale_bits: 40,
+        dnum: 4,
+        profile: WidthProfile::Wide,
+        sigma: 3.2,
+    };
+    let ctx = CkksContext::new(params);
+    let slots = ctx.params.slots();
+    let z: Vec<Complex> = (0..slots)
+        .map(|i| Complex::new(0.25 * ((i % 4) as f64 - 1.5), 0.0))
+        .collect();
+
+    let (eval_keys, ct0, dec) = {
+        let mut rng = Pcg64::new(0xB57);
+        let kg = KeyGen::new(&ctx, &mut rng);
+        let keys = kg.eval_key_set(&ctx, &EvalKeySpec::bootstrap(slots), &mut rng);
+        let ct0 = kg.encryptor().encrypt_slots(&ctx, &z, 0, &mut rng);
+        (keys, ct0, kg.decryptor())
+    };
+
+    let ev = Evaluator::new(ctx, Arc::new(eval_keys));
+    let boosted =
+        bootstrap(&ev, &ct0, &BootstrapConfig::default()).expect("bootstrap key set complete");
+    assert!(boosted.level >= 1);
+    let back = dec.decrypt_to_slots(&ev.ctx, &boosted);
+    let err = max_err(&z, &back);
+    assert!(err < 5e-2, "bootstrap error too large: {err}");
+}
+
+#[test]
+fn undeclared_rotation_step_is_missing_key() {
+    let ctx = CkksContext::new(CkksParams::toy());
+    let slots = ctx.params.slots();
+    let n = ctx.params.n;
+    let mut rng = Pcg64::new(0xE44);
+    let kg = KeyGen::new(&ctx, &mut rng);
+    // Declare only steps 1 and 2, at every level.
+    let spec = EvalKeySpec::none().with_rotations(&[1, 2]);
+    let keys = kg.eval_key_set(&ctx, &spec, &mut rng);
+    let z = vec![Complex::new(0.5, 0.0); slots];
+    let ct = kg.encryptor().encrypt_slots(&ctx, &z, 2, &mut rng);
+    let ev = Evaluator::new(ctx, Arc::new(keys));
+
+    // Declared steps work...
+    assert!(ev.rotate(&ct, 1).is_ok());
+    assert!(ev.rotate(&ct, 2).is_ok());
+    // ...an undeclared step is a typed error naming the Galois element.
+    let err = ev.rotate(&ct, 6).unwrap_err();
+    assert_eq!(
+        err,
+        MissingKey { kind: KeyKind::Galois(galois_element(6, n)), level: 2 }
+    );
+    // HEMult without a relin key is typed the same way.
+    let err = ev.mul(&ct, &ct).unwrap_err();
+    assert_eq!(err, MissingKey { kind: KeyKind::Relin, level: 2 });
+    // Rotation by a multiple of the slot count is the identity: no key.
+    assert!(ev.rotate(&ct, slots).is_ok());
+}
