@@ -36,7 +36,7 @@ fn main() {
     bench.run("serve/rotate_request", || {
         id += 1;
         let rx = coord
-            .submit(Request { id, op: OpKind::Rotate(1), ct: base_ct.clone() })
+            .submit(Request::new(id, OpKind::Rotate(1), base_ct.clone()))
             .expect("one in flight at a time");
         black_box(rx.recv().unwrap());
     });

@@ -1,0 +1,92 @@
+//! Wire-subsystem benchmark: ciphertext encode/decode throughput and the
+//! framed loopback round-trip latency. Dumps `BENCH_wire.json` for the
+//! bench-archive trajectory.
+
+use std::hint::black_box;
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fhecore::bench_harness::Bench;
+use fhecore::ckks::encoding::Complex;
+use fhecore::ckks::params::{CkksContext, CkksParams};
+use fhecore::ckks::{EvalKeySpec, KeyGen};
+use fhecore::coordinator::ServeConfig;
+use fhecore::util::rng::Pcg64;
+use fhecore::wire::codec::{
+    decode_ciphertext, encode_ciphertext, encode_eval_key_set, params_fingerprint,
+};
+use fhecore::wire::{serve, RemoteEvaluator, ServeOptions};
+
+fn main() {
+    let mut bench = Bench::new("wire");
+
+    let params = CkksParams::toy();
+    let fp = params_fingerprint(&params);
+    let ctx = CkksContext::new(params.clone());
+    let mut rng = Pcg64::new(0x3157);
+    let kg = KeyGen::new(&ctx, &mut rng);
+    let keys = Arc::new(kg.eval_key_set(
+        &ctx,
+        &EvalKeySpec::relin_only().with_rotations(&[1]),
+        &mut rng,
+    ));
+    let enc = kg.encryptor();
+    let slots = ctx.params.slots();
+    let z: Vec<Complex> = (0..slots)
+        .map(|i| Complex::new(0.01 * (i % 50) as f64, 0.0))
+        .collect();
+    let ct = enc.encrypt_slots(&ctx, &z, ctx.max_level(), &mut rng);
+
+    // Ciphertext serialization throughput (bytes/s via thrpt lines).
+    let blob = encode_ciphertext(&ct, fp);
+    let ct_bytes = blob.len() as f64;
+    bench.run("ct_encode/toy", || {
+        black_box(encode_ciphertext(black_box(&ct), fp));
+    });
+    bench.throughput("ct_encode/toy", ct_bytes);
+    bench.run("ct_decode/toy", || {
+        black_box(decode_ciphertext(black_box(&blob), fp).unwrap());
+    });
+    bench.throughput("ct_decode/toy", ct_bytes);
+
+    // Eval-key-set encoding: the seed-compressed vs naive byte sizes.
+    let compact = encode_eval_key_set(&keys, fp, true);
+    let naive = encode_eval_key_set(&keys, fp, false);
+    println!(
+        "eval key set: compact {} B vs naive {} B ({:.1}%)",
+        compact.len(),
+        naive.len(),
+        100.0 * compact.len() as f64 / naive.len() as f64
+    );
+    bench.run("keys_encode_compact/toy", || {
+        black_box(encode_eval_key_set(black_box(&keys), fp, true));
+    });
+    bench.throughput("keys_encode_compact/toy", compact.len() as f64);
+
+    // Loopback round trip: rotate(1) through a real socket + coordinator.
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = ServeOptions {
+        params: params.clone(),
+        serve: ServeConfig {
+            fhec_workers: 2,
+            cuda_workers: 1,
+            max_batch: 1,
+            linger: Duration::from_micros(100),
+            max_queue: 32,
+        },
+        verbose: false,
+    };
+    let server = std::thread::spawn(move || serve(listener, opts));
+    let remote = RemoteEvaluator::connect_retry(&addr, params, Duration::from_secs(10))
+        .expect("loopback connect");
+    remote.push_keys(&keys).expect("push keys");
+    bench.run("loopback/rotate_roundtrip", || {
+        black_box(remote.rotate(black_box(&ct), 1).expect("remote rotate"));
+    });
+    remote.shutdown().expect("shutdown");
+    let _ = server.join();
+
+    bench.write_json().expect("bench json dump");
+}

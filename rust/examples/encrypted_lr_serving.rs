@@ -98,7 +98,7 @@ fn main() {
         let ct = enc.encrypt_slots(&ev.ctx, &z, ev.ctx.max_level(), &mut rng);
         rxs.push(
             coord
-                .submit(Request { id: i as u64, op: OpKind::LinearScore, ct })
+                .submit(Request::new(i as u64, OpKind::LinearScore, ct))
                 .expect("under the queue bound"),
         );
         let plain_z: f64 = w[..used].iter().zip(&x[..used]).map(|(a, b)| a * b).sum();

@@ -1,0 +1,47 @@
+//! Quickstart over the wire: the same (2x+1)^2 pipeline as
+//! `examples/quickstart.rs`, but with the server half behind a real TCP
+//! socket. The client owns the secret key, pushes a seed-compressed
+//! public `EvalKeySet`, and the socket-backed `RemoteEvaluator` mirrors
+//! the local `Evaluator`'s signatures.
+//!
+//! The pipeline + bit-for-bit verification live in
+//! `wire::cli::quickstart` — the single implementation the `fhecore
+//! client quickstart` subcommand (and the CI loopback smoke) also runs;
+//! this example adds the in-process server half and the metrics RPC.
+//!
+//! Run: `cargo run --release --example wire_quickstart`
+use std::net::TcpListener;
+use std::time::Duration;
+
+use fhecore::ckks::params::CkksParams;
+use fhecore::wire::cli::quickstart;
+use fhecore::wire::{serve, RemoteEvaluator, ServeOptions};
+
+fn main() {
+    // Server half: bind an ephemeral loopback port and serve. In a real
+    // deployment this is `fhecore-serve --listen ...` on another host.
+    let params = CkksParams::toy();
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind loopback");
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = ServeOptions::new(params.clone());
+    let server = std::thread::spawn(move || serve(listener, opts));
+    println!("server listening on {addr}");
+
+    // Client half: generate keys, push them, run the remote pipeline and
+    // verify it is bit-identical to a local evaluator.
+    let pass = quickstart(&addr, params.clone(), Duration::from_secs(10))
+        .expect("loopback quickstart run");
+
+    // Server-side serving stats via the Metrics RPC, then shut down.
+    let remote = RemoteEvaluator::connect_retry(&addr, params, Duration::from_secs(10))
+        .expect("connect for metrics");
+    let m = remote.metrics().expect("metrics RPC");
+    println!(
+        "server metrics: served {} (fhec {}, cuda {}), mean service {:.1} us",
+        m.served, m.fhec_served, m.cuda_served, m.mean_service_us
+    );
+    remote.shutdown().expect("shutdown");
+    let _ = server.join();
+
+    assert!(pass, "wire quickstart must PASS (bit-exact + correct decryption)");
+}

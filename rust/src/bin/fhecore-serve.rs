@@ -1,0 +1,38 @@
+//! `fhecore-serve` — the standalone wire TCP server fronting the
+//! `Coordinator` (and a thin ops client for a running instance).
+//!
+//! Serve (blocks until a client sends Shutdown):
+//!
+//! ```text
+//! fhecore-serve --listen 127.0.0.1:7009 --params toy \
+//!     [--fhec-workers 2] [--cuda-workers 1] [--max-batch 8] \
+//!     [--max-queue 64] [--linger-ms 2] [--verbose]
+//! ```
+//!
+//! Ops against a running server:
+//!
+//! ```text
+//! fhecore-serve --stats --connect 127.0.0.1:7009      # print Metrics RPC
+//! fhecore-serve --shutdown --connect 127.0.0.1:7009   # graceful stop
+//! ```
+
+use fhecore::util::cli::Args;
+use fhecore::wire::cli;
+
+fn main() {
+    let args = Args::from_env();
+    // Flag-only grammar: `--stats` / `--shutdown` flip this binary into
+    // client mode against --connect; otherwise it serves on --listen.
+    let code = if args.has_flag("stats") {
+        let mut client_args = args.clone();
+        client_args.positional = vec!["metrics".to_string()];
+        cli::run_client(&client_args)
+    } else if args.has_flag("shutdown") {
+        let mut client_args = args.clone();
+        client_args.positional = vec!["shutdown".to_string()];
+        cli::run_client(&client_args)
+    } else {
+        cli::run_serve(&args)
+    };
+    std::process::exit(code);
+}

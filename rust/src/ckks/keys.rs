@@ -107,6 +107,14 @@ pub fn sample_uniform(ctx: &CkksContext, chain: &[usize], rng: &mut Pcg64) -> Rn
     p
 }
 
+/// Deterministically expand a key's public `a` polynomial from its 8-byte
+/// seed (Eval format over `chain`). Used at generation time and again by
+/// the wire layer when loading a seed-compressed [`KsKey`] — both sides
+/// must produce bit-identical polynomials.
+pub fn expand_a(ctx: &CkksContext, chain: &[usize], seed: u64) -> RnsPoly {
+    sample_uniform(ctx, chain, &mut Pcg64::new(seed))
+}
+
 /// Sample a gaussian error polynomial over `chain` (Coeff format).
 pub fn sample_error(ctx: &CkksContext, chain: &[usize], rng: &mut Pcg64) -> RnsPoly {
     let mut p = RnsPoly::zero(&ctx.tower, chain, Format::Coeff);
@@ -146,6 +154,11 @@ pub struct KsKey {
     pub digit_positions: Vec<Vec<usize>>,
     /// (b_j, a_j) pairs over the extended chain, Eval format.
     pub digits: Vec<(RnsPoly, RnsPoly)>,
+    /// PRNG seed each `a_j` was expanded from (`None` when the key came
+    /// from an expanded wire encoding). The public `a` half is uniform, so
+    /// shipping the 8-byte seed instead of the polynomial halves key bytes
+    /// — the standard seed-compression trick; `wire` re-expands on load.
+    pub a_seeds: Vec<Option<u64>>,
     /// ModUp tables (digit primes -> complement of digit in ext chain).
     pub modup: Vec<BaseConvTable>,
     /// `[Q^_j^{-1}]` mod each digit prime, per digit.
@@ -154,6 +167,94 @@ pub struct KsKey {
     pub p_to_active: BaseConvTable,
     /// `P^{-1}` mod each active prime.
     pub p_inv: Vec<u64>,
+}
+
+/// The secret-independent part of a [`KsKey`]: digit partition, ModUp /
+/// ModDown tables and scaling constants. A pure function of the context
+/// and the level, so wire deserialization can rebuild it without shipping
+/// any of it ([`KsKey::from_digits`]).
+struct KsStructure {
+    digit_positions: Vec<Vec<usize>>,
+    modup: Vec<BaseConvTable>,
+    qhat_inv: Vec<Vec<u64>>,
+    p_to_active: BaseConvTable,
+    p_inv: Vec<u64>,
+}
+
+/// Number of digit groups the hybrid partition produces at `level` —
+/// cheap (no table builds), used by wire deserialization to reject a
+/// blob whose digit count disagrees with the context *before* the
+/// structural rebuild.
+pub fn digit_count_at(ctx: &CkksContext, level: usize) -> usize {
+    let active = level + 1;
+    let dnum = ctx.params.dnum.min(active);
+    let per = active.div_ceil(dnum);
+    active.div_ceil(per)
+}
+
+fn ks_structure(ctx: &CkksContext, level: usize) -> KsStructure {
+    let active = ctx.chain_at(level);
+    let ext = ctx.extended_chain_at(level);
+    let dnum = ctx.params.dnum.min(active.len());
+    let per = active.len().div_ceil(dnum);
+    let digit_positions: Vec<Vec<usize>> = (0..dnum)
+        .map(|j| (j * per..((j + 1) * per).min(active.len())).collect())
+        .filter(|v: &Vec<usize>| !v.is_empty())
+        .collect();
+
+    let mut modup = Vec::new();
+    let mut qhat_inv = Vec::new();
+    for positions in &digit_positions {
+        let digit_chain: Vec<usize> = positions.iter().map(|&p| active[p]).collect();
+        // ModUp table: digit -> ext \ digit.
+        let complement: Vec<usize> = ext
+            .iter()
+            .copied()
+            .filter(|c| !digit_chain.contains(c))
+            .collect();
+        modup.push(BaseConvTable::new(&ctx.tower, &digit_chain, &complement));
+
+        // [Q^_j^{-1}] mod q for q in the digit.
+        qhat_inv.push(
+            positions
+                .iter()
+                .map(|&pos| {
+                    let m = ctx.tower.contexts[active[pos]].modulus;
+                    let mut acc = 1u64;
+                    for (other, &qi) in active.iter().enumerate() {
+                        if !positions.contains(&other) {
+                            acc = m.mul(
+                                acc,
+                                m.reduce_u64(ctx.tower.contexts[qi].modulus.value()),
+                            );
+                        }
+                    }
+                    m.inv(acc)
+                })
+                .collect(),
+        );
+    }
+
+    let p_to_active = BaseConvTable::new(&ctx.tower, &ctx.p_chain, &active);
+    let p_inv: Vec<u64> = active
+        .iter()
+        .map(|&qi| {
+            let m = ctx.tower.contexts[qi].modulus;
+            let mut acc = 1u64;
+            for &pi in &ctx.p_chain {
+                acc = m.mul(acc, m.reduce_u64(ctx.tower.contexts[pi].modulus.value()));
+            }
+            m.inv(acc)
+        })
+        .collect();
+
+    KsStructure {
+        digit_positions,
+        modup,
+        qhat_inv,
+        p_to_active,
+        p_inv,
+    }
 }
 
 /// Reusable buffers for [`KsKey::apply_with`]: one staging buffer per
@@ -197,6 +298,11 @@ thread_local! {
 
 impl KsKey {
     /// Generate a key switching `s_from -> sk.s` at `level`.
+    ///
+    /// Each digit's public `a_j` is expanded from an 8-byte seed (recorded
+    /// in [`Self::a_seeds`]) so the wire encoding can ship the seed instead
+    /// of the polynomial; the seeds come from a dedicated stream keyed by
+    /// one draw of the caller's `rng`.
     pub fn generate(
         ctx: &CkksContext,
         sk: &SecretKey,
@@ -207,19 +313,20 @@ impl KsKey {
         let active = ctx.chain_at(level);
         let ext = ctx.extended_chain_at(level);
         assert_eq!(s_from.chain, ext, "s_from must live on the extended chain");
-        let dnum = ctx.params.dnum.min(active.len());
-        let per = active.len().div_ceil(dnum);
-        let digit_positions: Vec<Vec<usize>> = (0..dnum)
-            .map(|j| (j * per..((j + 1) * per).min(active.len())).collect())
-            .filter(|v: &Vec<usize>| !v.is_empty())
-            .collect();
+        let st = ks_structure(ctx, level);
+
+        // The per-digit seeds end up verbatim in the *public* wire
+        // encoding, so they must not be raw outputs of the same stream
+        // that sampled the secret key (Pcg64 is reproduction-grade, not a
+        // CSPRNG — see util::rng): key a dedicated seed stream off a
+        // single draw instead of publishing one main-stream output per
+        // digit.
+        let mut seed_stream = Pcg64::new(rng.next_u64());
 
         let s_ext = sk.restrict(&ext);
         let mut digits = Vec::new();
-        let mut modup = Vec::new();
-        let mut qhat_inv = Vec::new();
-        for positions in &digit_positions {
-            let digit_chain: Vec<usize> = positions.iter().map(|&p| active[p]).collect();
+        let mut a_seeds = Vec::new();
+        for positions in &st.digit_positions {
             // factor_j per ext prime: P * Q^_j mod m (Q^_j = prod of active
             // primes outside the digit).
             let factor: Vec<u64> = ext
@@ -239,7 +346,8 @@ impl KsKey {
                 })
                 .collect();
 
-            let a_j = sample_uniform(ctx, &ext, rng);
+            let a_seed = seed_stream.next_u64();
+            let a_j = expand_a(ctx, &ext, a_seed);
             let mut e_j = sample_error(ctx, &ext, rng);
             e_j.to_eval(&ctx.tower);
 
@@ -253,57 +361,46 @@ impl KsKey {
             b_j.add_assign(&gs, &ctx.tower);
 
             digits.push((b_j, a_j));
-
-            // ModUp table: digit -> ext \ digit.
-            let complement: Vec<usize> = ext
-                .iter()
-                .copied()
-                .filter(|c| !digit_chain.contains(c))
-                .collect();
-            modup.push(BaseConvTable::new(&ctx.tower, &digit_chain, &complement));
-
-            // [Q^_j^{-1}] mod q for q in the digit.
-            qhat_inv.push(
-                positions
-                    .iter()
-                    .map(|&pos| {
-                        let m = ctx.tower.contexts[active[pos]].modulus;
-                        let mut acc = 1u64;
-                        for (other, &qi) in active.iter().enumerate() {
-                            if !positions.contains(&other) {
-                                acc = m.mul(
-                                    acc,
-                                    m.reduce_u64(ctx.tower.contexts[qi].modulus.value()),
-                                );
-                            }
-                        }
-                        m.inv(acc)
-                    })
-                    .collect(),
-            );
+            a_seeds.push(Some(a_seed));
         }
-
-        let p_to_active = BaseConvTable::new(&ctx.tower, &ctx.p_chain, &active);
-        let p_inv: Vec<u64> = active
-            .iter()
-            .map(|&qi| {
-                let m = ctx.tower.contexts[qi].modulus;
-                let mut acc = 1u64;
-                for &pi in &ctx.p_chain {
-                    acc = m.mul(acc, m.reduce_u64(ctx.tower.contexts[pi].modulus.value()));
-                }
-                m.inv(acc)
-            })
-            .collect();
 
         Self {
             level,
-            digit_positions,
+            digit_positions: st.digit_positions,
             digits,
-            modup,
-            qhat_inv,
-            p_to_active,
-            p_inv,
+            a_seeds,
+            modup: st.modup,
+            qhat_inv: st.qhat_inv,
+            p_to_active: st.p_to_active,
+            p_inv: st.p_inv,
+        }
+    }
+
+    /// Rebuild a key from its transported parts: the `(b_j, a_j)` digit
+    /// pairs plus (when seed-compressed) the seeds they were expanded
+    /// from. Everything secret-independent is recomputed from the context.
+    pub fn from_digits(
+        ctx: &CkksContext,
+        level: usize,
+        digits: Vec<(RnsPoly, RnsPoly)>,
+        a_seeds: Vec<Option<u64>>,
+    ) -> Self {
+        let st = ks_structure(ctx, level);
+        assert_eq!(
+            digits.len(),
+            st.digit_positions.len(),
+            "digit count must match the context's partition at this level"
+        );
+        assert_eq!(digits.len(), a_seeds.len());
+        Self {
+            level,
+            digit_positions: st.digit_positions,
+            digits,
+            a_seeds,
+            modup: st.modup,
+            qhat_inv: st.qhat_inv,
+            p_to_active: st.p_to_active,
+            p_inv: st.p_inv,
         }
     }
 
@@ -744,6 +841,29 @@ impl EvalKeySet {
     pub fn rotations(&self) -> &[usize] {
         &self.rotations
     }
+
+    /// Iterate over every held key (unordered; the wire layer sorts for
+    /// canonical bytes).
+    pub fn iter(&self) -> impl Iterator<Item = (KeyKind, usize, &Arc<KsKey>)> {
+        self.keys.iter().map(|(&(kind, level), k)| (kind, level, k))
+    }
+
+    /// Insert (or replace) one key.
+    pub fn insert(&mut self, kind: KeyKind, level: usize, key: Arc<KsKey>) {
+        self.keys.insert((kind, level), key);
+    }
+
+    /// Assemble a set from transported parts (wire deserialization).
+    pub fn from_entries(
+        entries: Vec<(KeyKind, usize, Arc<KsKey>)>,
+        rotations: Vec<usize>,
+    ) -> Self {
+        let mut keys = HashMap::new();
+        for (kind, level, k) in entries {
+            keys.insert((kind, level), k);
+        }
+        Self { keys, rotations }
+    }
 }
 
 #[cfg(test)]
@@ -851,6 +971,41 @@ mod tests {
     }
 
     #[test]
+    fn a_polys_reexpand_bit_exactly_from_seeds() {
+        // The seed-compression contract: expand_a(seed) must reproduce the
+        // generated a_j limb-for-limb, and from_digits must rebuild the
+        // identical structural tables.
+        let ctx = CkksContext::new(CkksParams::toy());
+        let mut rng = Pcg64::new(0xA5EED);
+        let sk = SecretKey::generate(&ctx, &mut rng);
+        let level = ctx.max_level();
+        let ksk = KsKey::generate_for(&ctx, &sk, KeyKind::Relin, level, &mut rng);
+        let ext = ctx.extended_chain_at(level);
+        for (j, (_, a_j)) in ksk.digits.iter().enumerate() {
+            let seed = ksk.a_seeds[j].expect("generate records every seed");
+            let re = expand_a(&ctx, &ext, seed);
+            assert_eq!(re.limbs, a_j.limbs, "digit {j}");
+            assert_eq!(re.format, a_j.format);
+        }
+        let rebuilt = KsKey::from_digits(
+            &ctx,
+            level,
+            ksk.digits.clone(),
+            ksk.a_seeds.clone(),
+        );
+        assert_eq!(rebuilt.digit_positions, ksk.digit_positions);
+        assert_eq!(rebuilt.qhat_inv, ksk.qhat_inv);
+        assert_eq!(rebuilt.p_inv, ksk.p_inv);
+        // The rebuilt key must key-switch identically.
+        let active = ctx.chain_at(level);
+        let d = sample_uniform(&ctx, &active, &mut rng);
+        let (f0, f1) = ksk.apply_reference(&ctx, &d);
+        let (r0, r1) = rebuilt.apply_reference(&ctx, &d);
+        assert_eq!(f0.limbs, r0.limbs);
+        assert_eq!(f1.limbs, r1.limbs);
+    }
+
+    #[test]
     fn digit_partition_covers_chain() {
         let ctx = CkksContext::new(CkksParams::toy());
         let mut rng = Pcg64::new(3);
@@ -862,5 +1017,11 @@ mod tests {
         let mut all: Vec<usize> = ksk.digit_positions.concat();
         all.sort_unstable();
         assert_eq!(all, (0..level + 1).collect::<Vec<_>>());
+        // The cheap count helper agrees with the real partition at every
+        // level (the wire layer relies on this to pre-validate blobs).
+        for l in 0..=ctx.max_level() {
+            let k = KsKey::generate(&ctx, &sk, &sk.restrict(&ctx.extended_chain_at(l)), l, &mut rng);
+            assert_eq!(k.digits.len(), digit_count_at(&ctx, l), "level {l}");
+        }
     }
 }

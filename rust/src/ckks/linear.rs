@@ -10,7 +10,7 @@ use super::keys::{bsgs_geometry, MissingKey};
 use super::ops::{Ciphertext, Evaluator};
 
 /// A dense complex matrix acting on the slot vector.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct SlotMatrix {
     pub dim: usize,
     /// Row-major entries (dim x dim).

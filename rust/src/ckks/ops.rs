@@ -20,8 +20,13 @@ use super::keys::{EvalKeySet, KeyKind, MissingKey};
 use super::params::CkksContext;
 use super::poly::{Format, RnsPoly};
 
+/// Scale-ratio window `align` tolerates between two operands. Shared with
+/// the coordinator's admission checks so rejection and the assert below
+/// can never drift apart.
+pub const SCALE_RATIO_TOLERANCE: std::ops::Range<f64> = 0.5..2.0;
+
 /// A CKKS ciphertext `(c0, c1)` under secret key s: `c0 + c1*s ~= m`.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct Ciphertext {
     pub c0: RnsPoly,
     pub c1: RnsPoly,
@@ -244,7 +249,7 @@ impl Evaluator {
         let b2 = self.level_reduce(b, level);
         let ratio = a2.scale / b2.scale;
         assert!(
-            (0.5..2.0).contains(&ratio),
+            SCALE_RATIO_TOLERANCE.contains(&ratio),
             "scale mismatch: {} vs {}",
             a2.scale,
             b2.scale

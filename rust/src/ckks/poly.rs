@@ -49,7 +49,7 @@ impl Tower {
 }
 
 /// An RNS polynomial over the first `limbs.len()` primes of a tower.
-#[derive(Debug, Clone)]
+#[derive(Debug, Clone, PartialEq)]
 pub struct RnsPoly {
     pub n: usize,
     pub format: Format,

@@ -14,12 +14,22 @@
 //! back as a typed [`MissingKey`] in the response instead of being
 //! silently derived server-side.
 //!
-//! Built on std threads + a Condvar-signalled batch queue (tokio is not
+//! **Per-op routing.** Every [`OpKind`] is classified by the hardware it
+//! exercises ([`OpClass`]): key-switch-heavy ops (mul, rotate, conjugate,
+//! the linear transforms) are *FHEC-class* — on the paper's accelerator
+//! they occupy the modified Tensor Cores — while add/rescale-only ops are
+//! *CUDA-class* elementwise work. The two classes run on separate queues
+//! with their own worker shares, so a burst of cheap adds can never starve
+//! behind a deep key-switch batch (and vice versa). Queue depths per lane
+//! are exported through [`Coordinator::snapshot`] / the wire `Metrics`
+//! RPC.
+//!
+//! Built on std threads + Condvar-signalled batch queues (tokio is not
 //! vendored in this offline build; the architecture is the same): submit
-//! is *bounded* — beyond `ServeConfig::max_queue` in-flight requests it
-//! rejects with [`SubmitError::QueueFull`] (backpressure) — a linger
-//! window accumulates batches, and whichever worker wakes first flushes
-//! the window. No thread ever sleep-polls.
+//! is *bounded* — beyond `ServeConfig::max_queue` in-flight requests per
+//! lane it rejects with [`SubmitError::QueueFull`] (backpressure) — a
+//! linger window accumulates batches, and whichever worker wakes first
+//! flushes the window. No thread ever sleep-polls.
 
 use std::collections::VecDeque;
 use std::sync::atomic::{AtomicU64, AtomicUsize, Ordering};
@@ -27,7 +37,8 @@ use std::sync::mpsc::{channel, Receiver, Sender};
 use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
-use crate::ckks::{Ciphertext, Evaluator, MissingKey, RnsPoly};
+use crate::ckks::linear::{hom_linear, SlotMatrix};
+use crate::ckks::{bsgs_geometry, Ciphertext, Evaluator, MissingKey, RnsPoly};
 use crate::codegen::{Backend, Compiler, SimParams};
 use crate::gpusim::{simulate_trace, GpuConfig};
 use crate::isa::Trace;
@@ -35,12 +46,84 @@ use crate::isa::Trace;
 /// The homomorphic op sequences a request can ask for.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum OpKind {
-    /// dot(w, x) + b via rotate-and-sum — encrypted linear scoring.
+    /// dot(w, x) + b via rotate-and-sum — encrypted linear scoring
+    /// against the server-side model weights.
     LinearScore,
-    /// One ciphertext-ciphertext product (with relinearization).
+    /// One ciphertext-ciphertext self-product (with relinearization).
     Square,
     /// Slot rotation by k.
     Rotate(usize),
+    /// Complex conjugation of every slot.
+    Conjugate,
+    /// Ciphertext-ciphertext product (binary: needs `Request::ct2`).
+    Mul,
+    /// Ciphertext-ciphertext addition (binary: needs `Request::ct2`).
+    Add,
+    /// Drop one level by dividing out the top prime.
+    Rescale,
+    /// BSGS dense linear transform (needs `Request::matrix`).
+    HomLinear,
+}
+
+/// Which hardware class an op exercises (the paper's split: key-switch
+/// pipelines on the FHEC Tensor-Core path, elementwise ops on CUDA cores).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum OpClass {
+    /// Key-switch heavy: mul / rotate / conjugate / linear transforms.
+    Fhec,
+    /// Elementwise only: add / rescale.
+    Cuda,
+}
+
+impl OpClass {
+    pub const COUNT: usize = 2;
+
+    pub fn index(self) -> usize {
+        match self {
+            OpClass::Fhec => 0,
+            OpClass::Cuda => 1,
+        }
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            OpClass::Fhec => "fhec",
+            OpClass::Cuda => "cuda",
+        }
+    }
+}
+
+impl OpKind {
+    /// Routing classification: everything that key-switches is FHEC-class.
+    pub fn class(self) -> OpClass {
+        match self {
+            OpKind::Add | OpKind::Rescale => OpClass::Cuda,
+            _ => OpClass::Fhec,
+        }
+    }
+
+    /// Binary ops consume a second ciphertext operand.
+    pub fn needs_ct2(self) -> bool {
+        matches!(self, OpKind::Mul | OpKind::Add)
+    }
+
+    /// Matrix ops consume a slot matrix operand.
+    pub fn needs_matrix(self) -> bool {
+        matches!(self, OpKind::HomLinear)
+    }
+
+    /// Ops that rescale somewhere in their pipeline: they consume one
+    /// level and are inadmissible at level 0.
+    pub fn consumes_level(self) -> bool {
+        matches!(
+            self,
+            OpKind::LinearScore
+                | OpKind::Square
+                | OpKind::Mul
+                | OpKind::Rescale
+                | OpKind::HomLinear
+        )
+    }
 }
 
 #[derive(Debug)]
@@ -48,6 +131,26 @@ pub struct Request {
     pub id: u64,
     pub op: OpKind,
     pub ct: Ciphertext,
+    /// Second operand for binary ops (`Mul`, `Add`).
+    pub ct2: Option<Ciphertext>,
+    /// Matrix operand for `HomLinear`.
+    pub matrix: Option<SlotMatrix>,
+}
+
+impl Request {
+    pub fn new(id: u64, op: OpKind, ct: Ciphertext) -> Self {
+        Self { id, op, ct, ct2: None, matrix: None }
+    }
+
+    pub fn with_ct2(mut self, ct2: Ciphertext) -> Self {
+        self.ct2 = Some(ct2);
+        self
+    }
+
+    pub fn with_matrix(mut self, matrix: SlotMatrix) -> Self {
+        self.matrix = Some(matrix);
+        self
+    }
 }
 
 pub struct Response {
@@ -64,6 +167,9 @@ pub struct Response {
 }
 
 /// Shared server-side model state (plaintext weights etc.).
+///
+/// `weights_pt` must be encoded at the context's max level; `LinearScore`
+/// truncates its chain down to each request's level.
 pub struct ModelState {
     pub weights_pt: RnsPoly,
     pub rot_steps: usize,
@@ -71,18 +177,23 @@ pub struct ModelState {
 
 #[derive(Debug, Clone)]
 pub struct ServeConfig {
-    pub workers: usize,
+    /// Workers on the FHEC-class (key-switch) lane.
+    pub fhec_workers: usize,
+    /// Workers on the CUDA-class (elementwise) lane.
+    pub cuda_workers: usize,
     pub max_batch: usize,
     pub linger: Duration,
-    /// Bound on admitted-but-unclaimed requests (pending window + queued
-    /// batches). `submit` rejects beyond this — backpressure, not OOM.
+    /// Per-lane bound on admitted-but-unclaimed requests (pending window +
+    /// queued batches). `submit` rejects beyond this — backpressure, not
+    /// OOM.
     pub max_queue: usize,
 }
 
 impl Default for ServeConfig {
     fn default() -> Self {
         Self {
-            workers: 2,
+            fhec_workers: 2,
+            cuda_workers: 1,
             max_batch: 8,
             linger: Duration::from_millis(2),
             max_queue: 64,
@@ -98,6 +209,9 @@ pub struct Metrics {
     pub total_service_us: AtomicU64,
     /// Submissions rejected by backpressure.
     pub rejected: AtomicU64,
+    /// Requests served per lane.
+    pub fhec_served: AtomicU64,
+    pub cuda_served: AtomicU64,
 }
 
 impl Metrics {
@@ -112,11 +226,33 @@ impl Metrics {
     }
 }
 
+/// A plain-data copy of the serving counters plus the instantaneous
+/// per-lane queue depths — what the wire `Metrics` RPC ships and the CLI
+/// prints.
+#[derive(Debug, Clone, Copy, Default, PartialEq)]
+pub struct MetricsSnapshot {
+    pub served: u64,
+    pub batches: u64,
+    pub rejected: u64,
+    pub queue_peak: u64,
+    pub mean_service_us: f64,
+    pub mean_batch: f64,
+    /// Current depth of the FHEC-class queue.
+    pub fhec_depth: u64,
+    /// Current depth of the CUDA-class queue.
+    pub cuda_depth: u64,
+    pub fhec_served: u64,
+    pub cuda_served: u64,
+}
+
 /// Why a submission was not admitted.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SubmitError {
-    /// The bounded queue is at `max_queue` — shed load or retry later.
+    /// The op's lane is at `max_queue` — shed load or retry later.
     QueueFull { depth: usize },
+    /// The request is structurally invalid (missing operand, level 0
+    /// rescale...). Retrying the same request can never succeed.
+    BadRequest(&'static str),
     /// The coordinator is shutting down.
     Stopped,
 }
@@ -127,6 +263,7 @@ impl std::fmt::Display for SubmitError {
             SubmitError::QueueFull { depth } => {
                 write!(f, "serving queue full ({depth} in flight)")
             }
+            SubmitError::BadRequest(why) => write!(f, "bad request: {why}"),
             SubmitError::Stopped => write!(f, "coordinator stopped"),
         }
     }
@@ -152,57 +289,110 @@ struct Shared {
     cv: Condvar,
 }
 
+fn new_shared() -> Arc<Shared> {
+    Arc::new(Shared {
+        state: Mutex::new(QueueState {
+            pending: Vec::new(),
+            window_start: Instant::now(),
+            batches: VecDeque::new(),
+            depth: 0,
+            shutdown: false,
+        }),
+        cv: Condvar::new(),
+    })
+}
+
 /// The coordinator: `submit()` requests, receive [`Response`]s on the
 /// returned channel. Dropping it drains queued batches and joins the
 /// worker threads.
 pub struct Coordinator {
-    shared: Arc<Shared>,
+    /// One queue per [`OpClass`], indexed by `OpClass::index()`.
+    lanes: [Arc<Shared>; OpClass::COUNT],
     pub metrics: Arc<Metrics>,
     cfg: ServeConfig,
+    /// Slot count of the served context (admission checks on matrices).
+    slots: usize,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
 impl Coordinator {
-    /// Spawn the worker pool. `ev` (context + public `EvalKeySet`) and
-    /// `model` are shared read-only; no secret key is ever handed over.
+    /// Spawn both lanes' worker pools. `ev` (context + public
+    /// `EvalKeySet`) and `model` are shared read-only; no secret key is
+    /// ever handed over.
     pub fn start(ev: Arc<Evaluator>, model: Arc<ModelState>, cfg: ServeConfig) -> Self {
-        let shared = Arc::new(Shared {
-            state: Mutex::new(QueueState {
-                pending: Vec::new(),
-                window_start: Instant::now(),
-                batches: VecDeque::new(),
-                depth: 0,
-                shutdown: false,
-            }),
-            cv: Condvar::new(),
-        });
+        let lanes = [new_shared(), new_shared()];
         let metrics = Arc::new(Metrics::default());
+        let slots = ev.ctx.params.slots();
         let mut workers = Vec::new();
-        for _ in 0..cfg.workers.max(1) {
-            let shared = shared.clone();
-            let ev = ev.clone();
-            let model = model.clone();
-            let metrics = metrics.clone();
-            let cfg = cfg.clone();
-            workers.push(std::thread::spawn(move || {
-                worker_loop(&shared, &ev, &model, &cfg, &metrics)
-            }));
+        for class in [OpClass::Fhec, OpClass::Cuda] {
+            let count = match class {
+                OpClass::Fhec => cfg.fhec_workers.max(1),
+                OpClass::Cuda => cfg.cuda_workers.max(1),
+            };
+            for _ in 0..count {
+                let shared = lanes[class.index()].clone();
+                let ev = ev.clone();
+                let model = model.clone();
+                let metrics = metrics.clone();
+                let cfg = cfg.clone();
+                workers.push(std::thread::spawn(move || {
+                    worker_loop(&shared, &ev, &model, &cfg, &metrics, class)
+                }));
+            }
         }
         Self {
-            shared,
+            lanes,
             metrics,
             cfg,
+            slots,
             workers,
         }
     }
 
-    /// Admit a request into the bounded queue. Returns the response
-    /// channel, or — with [`SubmitError::QueueFull`] when `max_queue`
-    /// requests are already in flight — hands the request back so the
-    /// caller can shed or retry it.
+    /// Admit a request into its lane's bounded queue. Returns the response
+    /// channel, or hands the request back with the typed [`SubmitError`]
+    /// so the caller can shed or retry it.
+    ///
+    /// Structural validation happens here, at admission: anything that
+    /// would trip an assert deep inside a worker (and kill the lane
+    /// thread) bounces as [`SubmitError::BadRequest`] instead.
     pub fn submit(&self, req: Request) -> Result<Receiver<Response>, (Request, SubmitError)> {
+        if req.op.needs_ct2() && req.ct2.is_none() {
+            return Err((req, SubmitError::BadRequest("binary op without ct2")));
+        }
+        if req.op.needs_matrix() && req.matrix.is_none() {
+            return Err((req, SubmitError::BadRequest("HomLinear without matrix")));
+        }
+        // Level-consuming ops run at the operands' *common* (minimum)
+        // level after alignment — that is what must be nonzero.
+        let effective_level = req
+            .ct2
+            .as_ref()
+            .map(|c| c.level.min(req.ct.level))
+            .unwrap_or(req.ct.level);
+        if req.op.consumes_level() && effective_level == 0 {
+            return Err((req, SubmitError::BadRequest("no level left to rescale into")));
+        }
+        if let Some(ct2) = &req.ct2 {
+            // The same window `Evaluator::align` asserts on.
+            let ratio = req.ct.scale / ct2.scale;
+            if !crate::ckks::ops::SCALE_RATIO_TOLERANCE.contains(&ratio) {
+                return Err((req, SubmitError::BadRequest("operand scale mismatch")));
+            }
+        }
+        if let Some(m) = &req.matrix {
+            if m.dim != self.slots {
+                return Err((req, SubmitError::BadRequest("matrix dim != slot count")));
+            }
+            // hom_linear skips empty diagonals and panics if *none* are
+            // nonzero (same epsilon); an all-zero matrix has no answer.
+            if m.entries.iter().all(|c| c.abs() < 1e-12) {
+                return Err((req, SubmitError::BadRequest("matrix has no nonzero entry")));
+            }
+        }
+        let lane = &self.lanes[req.op.class().index()];
         let (rtx, rrx) = channel();
-        let mut st = self.shared.state.lock().unwrap();
+        let mut st = lane.state.lock().unwrap();
         if st.shutdown {
             return Err((req, SubmitError::Stopped));
         }
@@ -224,15 +414,43 @@ impl Coordinator {
         // One worker suffices: it either claims a promoted batch or
         // becomes the timed waiter that flushes the linger window.
         // (notify_all here would stampede every idle worker per request.)
-        self.shared.cv.notify_one();
+        lane.cv.notify_one();
         Ok(rrx)
+    }
+
+    /// Instantaneous queue depth per lane, `[fhec, cuda]`.
+    pub fn queue_depths(&self) -> [usize; OpClass::COUNT] {
+        let mut out = [0usize; OpClass::COUNT];
+        for (i, lane) in self.lanes.iter().enumerate() {
+            out[i] = lane.state.lock().unwrap().depth;
+        }
+        out
+    }
+
+    /// Plain-data snapshot of the counters + live queue depths (the wire
+    /// `Metrics` RPC payload).
+    pub fn snapshot(&self) -> MetricsSnapshot {
+        let m = &self.metrics;
+        let depths = self.queue_depths();
+        MetricsSnapshot {
+            served: m.served.load(Ordering::Relaxed),
+            batches: m.batches.load(Ordering::Relaxed),
+            rejected: m.rejected.load(Ordering::Relaxed),
+            queue_peak: m.queue_peak.load(Ordering::Relaxed) as u64,
+            mean_service_us: m.mean_service_us(),
+            mean_batch: m.mean_batch(),
+            fhec_depth: depths[OpClass::Fhec.index()] as u64,
+            cuda_depth: depths[OpClass::Cuda.index()] as u64,
+            fhec_served: m.fhec_served.load(Ordering::Relaxed),
+            cuda_served: m.cuda_served.load(Ordering::Relaxed),
+        }
     }
 }
 
 impl Drop for Coordinator {
     fn drop(&mut self) {
-        {
-            let mut st = self.shared.state.lock().unwrap();
+        for lane in &self.lanes {
+            let mut st = lane.state.lock().unwrap();
             st.shutdown = true;
             // Graceful drain: promote the open window so nothing admitted
             // is silently dropped.
@@ -240,8 +458,9 @@ impl Drop for Coordinator {
                 let batch = std::mem::take(&mut st.pending);
                 st.batches.push_back(batch);
             }
+            drop(st);
+            lane.cv.notify_all();
         }
-        self.shared.cv.notify_all();
         for h in self.workers.drain(..) {
             let _ = h.join();
         }
@@ -283,9 +502,10 @@ fn worker_loop(
     model: &ModelState,
     cfg: &ServeConfig,
     metrics: &Metrics,
+    class: OpClass,
 ) {
     while let Some(batch) = claim_batch(shared, cfg) {
-        serve_batch(batch, ev, model, metrics);
+        serve_batch(batch, ev, model, metrics, class);
     }
 }
 
@@ -308,8 +528,24 @@ fn request_trace(op: OpKind, level: usize, ev: &Evaluator, backend: Backend) -> 
             }
             t
         }
-        OpKind::Square => c.hemult(&p),
-        OpKind::Rotate(_) => c.rotate(&p),
+        OpKind::Square | OpKind::Mul => c.hemult(&p),
+        OpKind::Rotate(_) | OpKind::Conjugate => c.rotate(&p),
+        OpKind::Add => c.headd(&p),
+        OpKind::Rescale => c.rescale(&p),
+        OpKind::HomLinear => {
+            // BSGS: g-1 baby + outer-1 giant rotations, one PtMult+HEAdd
+            // per non-empty diagonal group.
+            let (g, outer) = bsgs_geometry(ev.ctx.params.slots());
+            let mut t = Trace::default();
+            for _ in 0..(g - 1) + (outer.saturating_sub(1)) {
+                t.extend(c.rotate(&p));
+            }
+            for _ in 0..outer {
+                t.extend(c.ptmult(&p));
+                t.extend(c.headd(&p));
+            }
+            t
+        }
     }
 }
 
@@ -317,8 +553,18 @@ fn request_trace(op: OpKind, level: usize, ev: &Evaluator, backend: Backend) -> 
 fn execute(ev: &Evaluator, model: &ModelState, req: &Request) -> Result<Ciphertext, MissingKey> {
     match req.op {
         OpKind::LinearScore => {
-            // dot(w, x): PtMult then rotate-and-sum over all slots.
-            let mut acc = ev.mul_plain(&req.ct, &model.weights_pt);
+            // dot(w, x): PtMult then rotate-and-sum over all slots. The
+            // weights are encoded at max_level; take only the limbs the
+            // request's level needs (exact in RNS) so any level serves
+            // without copying the full-depth polynomial.
+            let nl = req.ct.level + 1;
+            let w = RnsPoly {
+                n: model.weights_pt.n,
+                format: model.weights_pt.format,
+                limbs: model.weights_pt.limbs[..nl].to_vec(),
+                chain: model.weights_pt.chain[..nl].to_vec(),
+            };
+            let mut acc = ev.mul_plain(&req.ct, &w);
             let mut step = 1usize;
             while step < model.rot_steps {
                 let rot = ev.rotate(&acc, step)?;
@@ -329,16 +575,43 @@ fn execute(ev: &Evaluator, model: &ModelState, req: &Request) -> Result<Cipherte
         }
         OpKind::Square => ev.mul(&req.ct, &req.ct),
         OpKind::Rotate(k) => ev.rotate(&req.ct, k),
+        OpKind::Conjugate => ev.conjugate(&req.ct),
+        // Operand presence is validated at `submit` admission.
+        OpKind::Mul => ev.mul(&req.ct, req.ct2.as_ref().expect("validated at submit")),
+        OpKind::Add => Ok(ev.add(&req.ct, req.ct2.as_ref().expect("validated at submit"))),
+        OpKind::Rescale => Ok(ev.rescale(&req.ct)),
+        OpKind::HomLinear => {
+            hom_linear(ev, &req.ct, req.matrix.as_ref().expect("validated at submit"))
+        }
     }
 }
 
-fn serve_batch(batch: Vec<Item>, ev: &Evaluator, model: &ModelState, metrics: &Metrics) {
+fn serve_batch(
+    batch: Vec<Item>,
+    ev: &Evaluator,
+    model: &ModelState,
+    metrics: &Metrics,
+    class: OpClass,
+) {
     let gpu = GpuConfig::default();
     let n = batch.len();
     metrics.batches.fetch_add(1, Ordering::Relaxed);
     for (req, reply) in batch {
         let t0 = Instant::now();
-        let out = execute(ev, model, &req);
+        // Containment: admission validates everything we know can trip an
+        // assert, but a panic from a bug must cost one request, not the
+        // lane thread (a dead lane hangs every queued + future request).
+        // Dropping `reply` without sending surfaces as a typed
+        // "worker dropped the request" error on the wire path.
+        let out = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            execute(ev, model, &req)
+        })) {
+            Ok(r) => r,
+            Err(_) => {
+                eprintln!("coordinator: request {} ({:?}) panicked; dropped", req.id, req.op);
+                continue;
+            }
+        };
         let service = t0.elapsed();
         // Dual dispatch: the timing model for this op mix.
         let level = out.as_ref().map(|c| c.level).unwrap_or(req.ct.level);
@@ -347,6 +620,10 @@ fn serve_batch(batch: Vec<Item>, ev: &Evaluator, model: &ModelState, metrics: &M
         let sim_base_us = simulate_trace(&gpu, &base).latency_us(&gpu);
         let sim_fhec_us = simulate_trace(&gpu, &fhec).latency_us(&gpu);
         metrics.served.fetch_add(1, Ordering::Relaxed);
+        match class {
+            OpClass::Fhec => metrics.fhec_served.fetch_add(1, Ordering::Relaxed),
+            OpClass::Cuda => metrics.cuda_served.fetch_add(1, Ordering::Relaxed),
+        };
         metrics
             .total_service_us
             .fetch_add(service.as_micros() as u64, Ordering::Relaxed);
@@ -395,7 +672,8 @@ mod tests {
             ev.clone(),
             model,
             ServeConfig {
-                workers: 2,
+                fhec_workers: 2,
+                cuda_workers: 1,
                 max_batch: 4,
                 linger: Duration::from_millis(1),
                 max_queue: 64,
@@ -407,7 +685,7 @@ mod tests {
             .collect();
         let ct = enc.encrypt_slots(&ev.ctx, &z, ev.ctx.max_level(), &mut rng);
         let rx = coord
-            .submit(Request { id: 1, op: OpKind::Rotate(3), ct })
+            .submit(Request::new(1, OpKind::Rotate(3), ct))
             .unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
         assert_eq!(resp.id, 1);
@@ -427,7 +705,8 @@ mod tests {
             ev.clone(),
             model,
             ServeConfig {
-                workers: 2,
+                fhec_workers: 2,
+                cuda_workers: 1,
                 max_batch: 4,
                 linger: Duration::from_millis(5),
                 max_queue: 64,
@@ -438,7 +717,7 @@ mod tests {
         let mut receivers = Vec::new();
         for id in 0..6u64 {
             let ct = enc.encrypt_slots(&ev.ctx, &z, ev.ctx.max_level(), &mut rng);
-            receivers.push(coord.submit(Request { id, op: OpKind::Square, ct }).unwrap());
+            receivers.push(coord.submit(Request::new(id, OpKind::Square, ct)).unwrap());
         }
         for rx in receivers {
             let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
@@ -450,6 +729,9 @@ mod tests {
         assert_eq!(m.served.load(Ordering::Relaxed), 6);
         assert!(m.batches.load(Ordering::Relaxed) >= 1);
         assert!(m.mean_batch() >= 1.0);
+        // All six squares are FHEC-class.
+        assert_eq!(m.fhec_served.load(Ordering::Relaxed), 6);
+        assert_eq!(m.cuda_served.load(Ordering::Relaxed), 0);
     }
 
     #[test]
@@ -462,7 +744,8 @@ mod tests {
             ev.clone(),
             model,
             ServeConfig {
-                workers: 1,
+                fhec_workers: 1,
+                cuda_workers: 1,
                 max_batch: 100,
                 linger: Duration::from_secs(60),
                 max_queue: 2,
@@ -471,19 +754,23 @@ mod tests {
         let slots = ev.ctx.params.slots();
         let z = vec![Complex::new(0.1, 0.0); slots];
         let ct = enc.encrypt_slots(&ev.ctx, &z, ev.ctx.max_level(), &mut rng);
-        let r1 = coord.submit(Request { id: 1, op: OpKind::Rotate(3), ct: ct.clone() });
-        let r2 = coord.submit(Request { id: 2, op: OpKind::Rotate(3), ct: ct.clone() });
+        let r1 = coord.submit(Request::new(1, OpKind::Rotate(3), ct.clone()));
+        let r2 = coord.submit(Request::new(2, OpKind::Rotate(3), ct.clone()));
         assert!(r1.is_ok() && r2.is_ok());
-        let r3 = coord.submit(Request { id: 3, op: OpKind::Rotate(3), ct });
+        let r3 = coord.submit(Request::new(3, OpKind::Rotate(3), ct.clone()));
         let (bounced, err) = r3.err().expect("third submit must bounce");
         assert_eq!(bounced.id, 3, "rejected request is handed back");
         assert_eq!(err, SubmitError::QueueFull { depth: 2 });
         assert_eq!(coord.metrics.rejected.load(Ordering::Relaxed), 1);
-        // Dropping the coordinator drains gracefully: the open window is
-        // promoted, the worker serves it, and the join completes — the
-        // admitted two get responses without waiting out the linger.
+        // The bound is per lane: the CUDA lane still admits.
+        let r4 = coord.submit(Request::new(4, OpKind::Add, ct.clone()).with_ct2(ct));
+        assert!(r4.is_ok(), "CUDA lane has its own bound");
+        assert_eq!(coord.queue_depths(), [2, 1]);
+        // Dropping the coordinator drains gracefully: the open windows are
+        // promoted, the workers serve them, and the joins complete — the
+        // admitted three get responses without waiting out the linger.
         drop(coord);
-        for rx in [r1.unwrap(), r2.unwrap()] {
+        for rx in [r1.unwrap(), r2.unwrap(), r4.unwrap()] {
             let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
             assert!(resp.ct.is_ok());
         }
@@ -496,7 +783,8 @@ mod tests {
             ev.clone(),
             model,
             ServeConfig {
-                workers: 1,
+                fhec_workers: 1,
+                cuda_workers: 1,
                 max_batch: 1,
                 linger: Duration::from_millis(1),
                 max_queue: 8,
@@ -506,7 +794,7 @@ mod tests {
         let z = vec![Complex::new(0.1, 0.0); slots];
         let ct = enc.encrypt_slots(&ev.ctx, &z, ev.ctx.max_level(), &mut rng);
         // Step 7 was never declared in the key spec.
-        let rx = coord.submit(Request { id: 9, op: OpKind::Rotate(7), ct }).unwrap();
+        let rx = coord.submit(Request::new(9, OpKind::Rotate(7), ct)).unwrap();
         let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
         let err = resp.ct.unwrap_err();
         match err.kind {
@@ -514,5 +802,116 @@ mod tests {
             other => panic!("expected Galois MissingKey, got {other:?}"),
         }
         assert_eq!(err.level, ev.ctx.max_level());
+    }
+
+    #[test]
+    fn cuda_lane_serves_elementwise_ops() {
+        let (ev, enc, dec, model, mut rng) = setup();
+        let coord = Coordinator::start(
+            ev.clone(),
+            model,
+            ServeConfig {
+                fhec_workers: 1,
+                cuda_workers: 2,
+                max_batch: 2,
+                linger: Duration::from_millis(1),
+                max_queue: 16,
+            },
+        );
+        let slots = ev.ctx.params.slots();
+        let z = vec![Complex::new(0.2, 0.0); slots];
+        let ca = enc.encrypt_slots(&ev.ctx, &z, ev.ctx.max_level(), &mut rng);
+        let cb = enc.encrypt_slots(&ev.ctx, &z, ev.ctx.max_level(), &mut rng);
+        let rx = coord
+            .submit(Request::new(1, OpKind::Add, ca.clone()).with_ct2(cb))
+            .unwrap();
+        let sum = rx
+            .recv_timeout(Duration::from_secs(60))
+            .unwrap()
+            .ct
+            .expect("add is key-free");
+        let back = dec.decrypt_to_slots(&ev.ctx, &sum);
+        assert!((back[0].re - 0.4).abs() < 1e-3, "0.2+0.2, got {}", back[0].re);
+        // Rescale rides the CUDA lane too.
+        let rx = coord.submit(Request::new(2, OpKind::Rescale, ca)).unwrap();
+        let low = rx
+            .recv_timeout(Duration::from_secs(60))
+            .unwrap()
+            .ct
+            .expect("rescale is key-free");
+        assert_eq!(low.level, ev.ctx.max_level() - 1);
+        let m = coord.snapshot();
+        assert_eq!(m.cuda_served, 2);
+        assert_eq!(m.fhec_served, 0);
+        assert_eq!(m.served, 2);
+    }
+
+    #[test]
+    fn structurally_invalid_requests_bounce_at_admission() {
+        let (ev, enc, _dec, model, mut rng) = setup();
+        let coord = Coordinator::start(ev.clone(), model, ServeConfig::default());
+        let slots = ev.ctx.params.slots();
+        let z = vec![Complex::new(0.1, 0.0); slots];
+        let ct = enc.encrypt_slots(&ev.ctx, &z, ev.ctx.max_level(), &mut rng);
+        // Binary op without its second operand.
+        let (_, err) = coord
+            .submit(Request::new(1, OpKind::Mul, ct.clone()))
+            .err()
+            .expect("Mul without ct2 must bounce");
+        assert!(matches!(err, SubmitError::BadRequest(_)));
+        // HomLinear without a matrix.
+        let (_, err) = coord
+            .submit(Request::new(2, OpKind::HomLinear, ct.clone()))
+            .err()
+            .expect("HomLinear without matrix must bounce");
+        assert!(matches!(err, SubmitError::BadRequest(_)));
+        // Level-consuming ops with no level left.
+        let bottom = ev.level_reduce(&ct, 0);
+        for op in [OpKind::Rescale, OpKind::Square, OpKind::LinearScore] {
+            let (_, err) = coord
+                .submit(Request::new(3, op, bottom.clone()))
+                .err()
+                .expect("level-0 rescaling op must bounce");
+            assert!(matches!(err, SubmitError::BadRequest(_)), "{op:?}");
+        }
+        // Matrix whose dimension disagrees with the slot count.
+        let tiny = crate::ckks::linear::SlotMatrix::identity(4);
+        let (_, err) = coord
+            .submit(Request::new(4, OpKind::HomLinear, ct.clone()).with_matrix(tiny))
+            .err()
+            .expect("mis-sized matrix must bounce");
+        assert!(matches!(err, SubmitError::BadRequest(_)));
+        // All-zero matrix: hom_linear has no nonzero diagonal to sum.
+        let zero = crate::ckks::linear::SlotMatrix::zeros(slots);
+        let (_, err) = coord
+            .submit(Request::new(6, OpKind::HomLinear, ct.clone()).with_matrix(zero))
+            .err()
+            .expect("all-zero matrix must bounce");
+        assert!(matches!(err, SubmitError::BadRequest(_)));
+        // Binary op whose operand scales can never align.
+        let mut skewed = ct.clone();
+        skewed.scale *= 8.0;
+        let (_, err) = coord
+            .submit(Request::new(5, OpKind::Add, ct.clone()).with_ct2(skewed))
+            .err()
+            .expect("scale-mismatched operands must bounce");
+        assert!(matches!(err, SubmitError::BadRequest(_)));
+        // Structural rejections are not backpressure.
+        assert_eq!(coord.metrics.rejected.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn op_classification() {
+        assert_eq!(OpKind::Mul.class(), OpClass::Fhec);
+        assert_eq!(OpKind::Square.class(), OpClass::Fhec);
+        assert_eq!(OpKind::Rotate(1).class(), OpClass::Fhec);
+        assert_eq!(OpKind::Conjugate.class(), OpClass::Fhec);
+        assert_eq!(OpKind::LinearScore.class(), OpClass::Fhec);
+        assert_eq!(OpKind::HomLinear.class(), OpClass::Fhec);
+        assert_eq!(OpKind::Add.class(), OpClass::Cuda);
+        assert_eq!(OpKind::Rescale.class(), OpClass::Cuda);
+        assert!(OpKind::Mul.needs_ct2() && OpKind::Add.needs_ct2());
+        assert!(!OpKind::Square.needs_ct2());
+        assert!(OpKind::HomLinear.needs_matrix());
     }
 }

@@ -22,8 +22,12 @@
 //!   SiliconCompiler substitute) regenerating Tables IV/IX/X.
 //! * [`runtime`] — PJRT engine loading the AOT-compiled JAX/Pallas
 //!   artifacts (`artifacts/*.hlo.txt`) for functional FHECore execution.
-//! * [`coordinator`] — the L3 serving loop: request batching, dual
-//!   dispatch (functional + timing), metrics.
+//! * [`coordinator`] — the L3 serving loop: request batching, per-op
+//!   FHEC/CUDA lane routing, dual dispatch (functional + timing),
+//!   metrics.
+//! * [`wire`] — canonical binary serialization (seed-compressed eval
+//!   keys) + the framed TCP protocol: `fhecore-serve` server front and
+//!   the `RemoteEvaluator` client mirroring the local `Evaluator`.
 //! * [`workloads`] — Bootstrapping / LR / ResNet20 / BERT-Tiny op-graph
 //!   builders at the paper's Table V parameters.
 //! * [`tables`] — regenerators for every figure and table of SVI.
@@ -39,4 +43,5 @@ pub mod runtime;
 pub mod systolic;
 pub mod tables;
 pub mod util;
+pub mod wire;
 pub mod workloads;

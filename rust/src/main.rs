@@ -3,7 +3,10 @@
 //! Subcommands:
 //!   table <id>         regenerate a paper figure/table (fig1..t10, headline, all)
 //!   simulate <wl>      run a workload trace through the timing model
-//!   serve              demo serving loop (batched encrypted scoring)
+//!   serve              demo serving loop (batched encrypted scoring);
+//!                      with --listen <addr> it becomes a wire TCP server
+//!   client <mode>      remote client: quickstart | metrics | shutdown
+//!                      (--connect <addr>, --params toy|medium)
 //!   runtime            smoke the PJRT artifacts (needs `make artifacts`)
 //!   selftest           quick functional pass over the CKKS substrate
 
@@ -53,8 +56,15 @@ fn main() {
             );
         }
         Some("serve") => {
+            if args.opt("listen").is_some() {
+                // Wire mode: front the coordinator with the TCP server.
+                std::process::exit(fhecore::wire::cli::run_serve(&args));
+            }
             let reqs = args.opt_usize("requests", 16);
             serve_demo(reqs);
+        }
+        Some("client") => {
+            std::process::exit(fhecore::wire::cli::run_client(&args));
         }
         Some("runtime") => {
             let dir = args.opt("artifacts").unwrap_or("artifacts");
@@ -69,8 +79,11 @@ fn main() {
         Some("selftest") => selftest(),
         _ => {
             println!("fhecore — FHECore (CS.AR 2026) reproduction");
-            println!("usage: fhecore <table|simulate|serve|runtime|selftest> [...]");
+            println!("usage: fhecore <table|simulate|serve|client|runtime|selftest> [...]");
             println!("  table all | table t8 | simulate bert-tiny | serve --requests 32");
+            println!("  serve --listen 127.0.0.1:7009 --params toy   (wire TCP server)");
+            println!("  client quickstart --connect 127.0.0.1:7009   (remote pipeline)");
+            println!("  client metrics | client shutdown             (ops RPCs)");
         }
     }
 }
@@ -80,11 +93,14 @@ fn serve_demo(requests: usize) {
     let ctx = CkksContext::new(CkksParams::medium());
     let mut rng = Pcg64::new(0xD15EA5E);
     // Client side: secret key + public evaluation keys, generated once.
-    // Every demo op runs at max_level, so declare only that level.
+    // LinearScore's PtMult rescales before the rotate-and-sum, so the
+    // rotation keys are consumed one level below the request level —
+    // declare both.
     let keygen = KeyGen::new(&ctx, &mut rng);
     let keys = keygen.eval_key_set(
         &ctx,
-        &EvalKeySpec::serving(ctx.params.slots()).at_levels(vec![ctx.max_level()]),
+        &EvalKeySpec::serving(ctx.params.slots())
+            .at_levels(vec![ctx.max_level(), ctx.max_level() - 1]),
         &mut rng,
     );
     let enc = keygen.encryptor();
@@ -104,7 +120,7 @@ fn serve_demo(requests: usize) {
             .map(|i| Complex::new(0.001 * ((i + id as usize) % 100) as f64, 0.0))
             .collect();
         let ct = enc.encrypt_slots(&ev.ctx, &z, ev.ctx.max_level(), &mut rng);
-        let mut req = Request { id, op: OpKind::LinearScore, ct };
+        let mut req = Request::new(id, OpKind::LinearScore, ct);
         // Bounded queue: on backpressure, wait briefly and resubmit.
         let rx = loop {
             match coord.submit(req) {
@@ -139,6 +155,11 @@ fn serve_demo(requests: usize) {
         sim_base,
         sim_fhec,
         sim_base / sim_fhec
+    );
+    let snap = coord.snapshot();
+    println!(
+        "lane split: fhec served {} (depth {}), cuda served {} (depth {})",
+        snap.fhec_served, snap.fhec_depth, snap.cuda_served, snap.cuda_depth
     );
 }
 

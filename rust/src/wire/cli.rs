@@ -1,0 +1,230 @@
+//! The `serve` / `client` subcommand bodies, shared by the `fhecore` CLI
+//! (`fhecore serve --listen ...`, `fhecore client ...`) and the
+//! standalone `fhecore-serve` binary. Everything returns a process exit
+//! code instead of calling `exit` so callers stay testable.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+use super::client::RemoteEvaluator;
+use super::codec::params_fingerprint;
+use super::server::{serve, ServeOptions};
+use super::WireError;
+use crate::ckks::encoding::Complex;
+use crate::ckks::params::{CkksContext, CkksParams};
+use crate::ckks::{EvalKeySpec, Evaluator, KeyGen};
+use crate::coordinator::ServeConfig;
+use crate::util::cli::Args;
+use crate::util::rng::Pcg64;
+
+pub const DEFAULT_ADDR: &str = "127.0.0.1:7009";
+
+/// Parameter presets addressable from the command line.
+pub fn parse_params(name: &str) -> Option<CkksParams> {
+    match name {
+        "toy" => Some(CkksParams::toy()),
+        "medium" => Some(CkksParams::medium()),
+        _ => None,
+    }
+}
+
+fn serve_config(args: &Args) -> ServeConfig {
+    let d = ServeConfig::default();
+    ServeConfig {
+        fhec_workers: args.opt_usize("fhec-workers", d.fhec_workers),
+        cuda_workers: args.opt_usize("cuda-workers", d.cuda_workers),
+        max_batch: args.opt_usize("max-batch", d.max_batch),
+        linger: Duration::from_millis(args.opt_u64("linger-ms", d.linger.as_millis() as u64)),
+        max_queue: args.opt_usize("max-queue", d.max_queue),
+    }
+}
+
+/// `serve --listen <addr> [--params toy|medium] [--fhec-workers N]
+/// [--cuda-workers N] [--max-batch N] [--max-queue N] [--linger-ms N]`
+pub fn run_serve(args: &Args) -> i32 {
+    let listen = args.opt("listen").unwrap_or(DEFAULT_ADDR);
+    let pname = args.opt("params").unwrap_or("toy");
+    let Some(params) = parse_params(pname) else {
+        eprintln!("unknown params preset '{pname}' (toy|medium)");
+        return 2;
+    };
+    let listener = match TcpListener::bind(listen) {
+        Ok(l) => l,
+        Err(e) => {
+            eprintln!("cannot bind {listen}: {e}");
+            return 1;
+        }
+    };
+    println!(
+        "fhecore-serve: listening on {listen} (params {pname}, N={}, depth={}, \
+         fingerprint {:#018x})",
+        params.n,
+        params.depth,
+        params_fingerprint(&params)
+    );
+    let opts = ServeOptions {
+        params,
+        serve: serve_config(args),
+        verbose: args.has_flag("verbose"),
+    };
+    match serve(listener, opts) {
+        Ok(()) => {
+            println!("fhecore-serve: stopped");
+            0
+        }
+        Err(e) => {
+            eprintln!("fhecore-serve: {e}");
+            1
+        }
+    }
+}
+
+/// `client [quickstart|metrics|shutdown] --connect <addr> [--params ...]`
+pub fn run_client(args: &Args) -> i32 {
+    let addr = args.opt("connect").unwrap_or(DEFAULT_ADDR).to_string();
+    let pname = args.opt("params").unwrap_or("toy");
+    let Some(params) = parse_params(pname) else {
+        eprintln!("unknown params preset '{pname}' (toy|medium)");
+        return 2;
+    };
+    let mode = args
+        .positional
+        .first()
+        .map(String::as_str)
+        .unwrap_or("quickstart");
+    let timeout = Duration::from_secs(args.opt_u64("connect-timeout", 15));
+    match mode {
+        "quickstart" => match quickstart(&addr, params, timeout) {
+            Ok(pass) => {
+                if pass {
+                    0
+                } else {
+                    1
+                }
+            }
+            Err(e) => {
+                eprintln!("client quickstart failed: {e}");
+                1
+            }
+        },
+        "metrics" => match fetch_metrics(&addr, params, timeout) {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("client metrics failed: {e}");
+                1
+            }
+        },
+        "shutdown" => {
+            match RemoteEvaluator::connect_retry(&addr, params, timeout)
+                .and_then(|r| r.shutdown())
+            {
+                Ok(()) => {
+                    println!("sent shutdown to {addr}");
+                    0
+                }
+                Err(e) => {
+                    eprintln!("client shutdown failed: {e}");
+                    1
+                }
+            }
+        }
+        other => {
+            eprintln!("unknown client mode '{other}' (quickstart|metrics|shutdown)");
+            2
+        }
+    }
+}
+
+/// Print the server's metrics snapshot (the `Metrics` RPC).
+fn fetch_metrics(addr: &str, params: CkksParams, timeout: Duration) -> Result<(), WireError> {
+    let remote = RemoteEvaluator::connect_retry(addr, params, timeout)?;
+    let m = remote.metrics()?;
+    println!("server metrics @ {addr}:");
+    println!("  served         {}", m.served);
+    println!("  batches        {} (mean batch {:.2})", m.batches, m.mean_batch);
+    println!("  rejected       {} (backpressure)", m.rejected);
+    println!("  queue peak     {}", m.queue_peak);
+    println!("  mean service   {:.1} us", m.mean_service_us);
+    println!("  fhec lane      depth {}  served {}", m.fhec_depth, m.fhec_served);
+    println!("  cuda lane      depth {}  served {}", m.cuda_depth, m.cuda_served);
+    Ok(())
+}
+
+/// The quickstart pipeline — (2x+1)^2 then rotate-by-3 — executed against
+/// the remote server and against a local reference evaluator holding the
+/// same key set; PASS requires the two ciphertexts to match **bit for
+/// bit** plus a correct decryption.
+///
+/// Returns `Ok(true)` on PASS. This is the single implementation behind
+/// `fhecore client quickstart` (the CI loopback smoke gates on its exit
+/// code) and `examples/wire_quickstart.rs`.
+pub fn quickstart(
+    addr: &str,
+    params: CkksParams,
+    timeout: Duration,
+) -> Result<bool, WireError> {
+    // Client side: the only place secret material exists.
+    let ctx = CkksContext::new(params.clone());
+    let mut rng = Pcg64::new(42);
+    let keygen = KeyGen::new(&ctx, &mut rng);
+    let spec = EvalKeySpec::relin_only().with_rotations(&[3]);
+    let keys = Arc::new(keygen.eval_key_set(&ctx, &spec, &mut rng));
+    let enc = keygen.encryptor();
+    let dec = keygen.decryptor();
+
+    let fp = params_fingerprint(&params);
+    let compact = super::codec::encode_eval_key_set(&keys, fp, true).len();
+    let naive = super::codec::encode_eval_key_set(&keys, fp, false).len();
+    println!(
+        "eval keys: {} keys, {compact} B seed-compressed vs {naive} B naive ({:.1}%)",
+        keys.len(),
+        100.0 * compact as f64 / naive as f64
+    );
+
+    let remote = RemoteEvaluator::connect_retry(addr, params.clone(), timeout)?;
+    let pushed = remote.push_keys(&keys)?;
+    println!("pushed {pushed} public evaluation keys to {addr}");
+
+    let slots = ctx.params.slots();
+    let xs: Vec<Complex> = (0..slots)
+        .map(|i| Complex::new(0.05 * (i % 10) as f64, 0.0))
+        .collect();
+    let ct = enc.encrypt_slots(&ctx, &xs, ctx.max_level(), &mut rng);
+
+    // Remote: plaintext ops run locally (key-free, deterministic), the
+    // key-switch ops cross the socket.
+    let doubled = remote.local().mul_const(&ct, 2.0);
+    let shifted = remote.local().add_const(&doubled, 1.0);
+    let squared = remote.mul(&shifted, &shifted)?;
+    let rotated = remote.rotate(&squared, 3)?;
+    println!("remote (2x+1)^2 then rotate(3): level {}", rotated.level);
+
+    // Local reference over the identical key set.
+    let ev = Evaluator::new(CkksContext::new(params), keys.clone());
+    let d = ev.mul_const(&ct, 2.0);
+    let s = ev.add_const(&d, 1.0);
+    let sq = ev.mul(&s, &s).map_err(WireError::MissingKey)?;
+    let reference = ev.rotate(&sq, 3).map_err(WireError::MissingKey)?;
+
+    let bit_exact = rotated == reference;
+    println!(
+        "remote vs local ciphertext: {}",
+        if bit_exact { "bit-exact" } else { "MISMATCH" }
+    );
+
+    let back = dec.decrypt_to_slots(&ctx, &rotated);
+    let worst = back
+        .iter()
+        .enumerate()
+        .map(|(j, c)| {
+            let x = 0.05 * (((j + 3) % slots) % 10) as f64;
+            (c.re - (2.0 * x + 1.0).powi(2)).abs()
+        })
+        .fold(0.0f64, f64::max);
+    println!("decrypted max error vs plaintext: {worst:.2e}");
+
+    let pass = bit_exact && worst < 1e-2;
+    println!("loopback quickstart: {}", if pass { "PASS" } else { "FAIL" });
+    Ok(pass)
+}

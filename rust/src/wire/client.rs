@@ -1,0 +1,267 @@
+//! [`RemoteEvaluator`] — the socket-backed twin of the local `Evaluator`.
+//!
+//! Key-switch ops (`mul`, `rotate`, `conjugate`, `hom_linear`, ...) ship
+//! the operands to a `fhecore-serve` instance and block for the framed
+//! response; their signatures mirror `ckks::ops::Evaluator`, so a
+//! pipeline written against one runs against the other. Key-free
+//! plaintext ops (encode, `mul_const`, `add_const`...) run locally
+//! through [`RemoteEvaluator::local`], an embedded key-less evaluator
+//! over the same parameter set — they are deterministic, so local and
+//! server execution produce bit-identical ciphertexts.
+//!
+//! Backpressure: a server `Busy` frame is retried with a small backoff
+//! (`busy_retries` x `busy_backoff`) before surfacing as
+//! [`WireError::Busy`].
+
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+use super::codec::encode_eval_key_set;
+use super::protocol::{encode_op_request, Message, WireOp};
+use super::{params_fingerprint, Frame, WireError, WIRE_VERSION};
+use crate::ckks::linear::SlotMatrix;
+use crate::ckks::params::{CkksContext, CkksParams};
+use crate::ckks::{Ciphertext, EvalKeySet, Evaluator};
+use crate::coordinator::MetricsSnapshot;
+
+struct Channel {
+    reader: BufReader<TcpStream>,
+    writer: TcpStream,
+}
+
+impl Channel {
+    fn send(&mut self, msg: &Message) -> Result<(), WireError> {
+        self.send_frame(&msg.encode())
+    }
+
+    fn send_frame(&mut self, frame: &Frame) -> Result<(), WireError> {
+        frame.write_to(&mut self.writer)?;
+        self.writer.flush()?;
+        Ok(())
+    }
+
+    fn recv(&mut self) -> Result<Message, WireError> {
+        Message::decode(&Frame::read_from(&mut self.reader)?)
+    }
+}
+
+/// A connected, handshaken client session.
+pub struct RemoteEvaluator {
+    io: Mutex<Channel>,
+    next_id: AtomicU64,
+    fingerprint: u64,
+    /// Key-less evaluator over the same params: encoding and plaintext
+    /// ops stay client-side (`self.local().mul_const(..)` etc.).
+    local: Evaluator,
+    /// How many times a `Busy` response is retried before surfacing.
+    pub busy_retries: u32,
+    pub busy_backoff: Duration,
+}
+
+impl RemoteEvaluator {
+    /// Connect and handshake once. Fails fast on version or parameter
+    /// mismatch.
+    pub fn connect(addr: &str, params: CkksParams) -> Result<Self, WireError> {
+        Self::connect_retry(addr, params, Duration::ZERO)
+    }
+
+    /// Connect, retrying refused/unreachable sockets until `timeout`
+    /// elapses (covers the server's startup race in scripts and CI), then
+    /// handshake. Handshake failures are terminal — they cannot heal by
+    /// retrying.
+    pub fn connect_retry(
+        addr: &str,
+        params: CkksParams,
+        timeout: Duration,
+    ) -> Result<Self, WireError> {
+        let deadline = Instant::now() + timeout;
+        let stream = loop {
+            match TcpStream::connect(addr) {
+                Ok(s) => break s,
+                Err(e) => {
+                    if Instant::now() >= deadline {
+                        return Err(WireError::Io(e));
+                    }
+                    std::thread::sleep(Duration::from_millis(100));
+                }
+            }
+        };
+        let _ = stream.set_nodelay(true);
+        let reader = BufReader::new(stream.try_clone()?);
+        let mut ch = Channel { reader, writer: stream };
+        let fingerprint = params_fingerprint(&params);
+        ch.send(&Message::hello(fingerprint))?;
+        match ch.recv()? {
+            Message::HelloAck { version, fingerprint: fp } => {
+                if version != WIRE_VERSION {
+                    return Err(WireError::Version { got: version, want: WIRE_VERSION });
+                }
+                if fp != fingerprint {
+                    return Err(WireError::Params { got: fp, want: fingerprint });
+                }
+            }
+            Message::Error { code, detail } => {
+                return Err(WireError::Remote { code, detail })
+            }
+            other => {
+                return Err(WireError::Protocol(format!(
+                    "expected HelloAck, got tag {:#04x}",
+                    other.tag()
+                )))
+            }
+        }
+        Ok(Self {
+            io: Mutex::new(ch),
+            next_id: AtomicU64::new(1),
+            fingerprint,
+            local: Evaluator::without_keys(CkksContext::new(params)),
+            busy_retries: 50,
+            busy_backoff: Duration::from_millis(4),
+        })
+    }
+
+    /// The negotiated parameter-set fingerprint.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// The shared CKKS context (same tower as the server's, by the
+    /// fingerprint handshake).
+    pub fn ctx(&self) -> &CkksContext {
+        &self.local.ctx
+    }
+
+    /// The embedded key-less evaluator for client-side plaintext ops
+    /// (encode, `add_const`, `mul_const`, `add`, `rescale`...).
+    pub fn local(&self) -> &Evaluator {
+        &self.local
+    }
+
+    /// Serialize (seed-compressed) and push the public key set; the
+    /// server builds its evaluator + coordinator from it. Returns the
+    /// server-confirmed key count.
+    pub fn push_keys(&self, keys: &EvalKeySet) -> Result<u32, WireError> {
+        let blob = encode_eval_key_set(keys, self.fingerprint, true);
+        let mut ch = self.io.lock().unwrap();
+        ch.send(&Message::PushKeys { blob })?;
+        match ch.recv()? {
+            Message::KeysAck { keys } => Ok(keys),
+            Message::Error { code, detail } => Err(WireError::Remote { code, detail }),
+            other => Err(WireError::Protocol(format!(
+                "expected KeysAck, got tag {:#04x}",
+                other.tag()
+            ))),
+        }
+    }
+
+    /// Fetch the server's serving counters + per-lane queue depths.
+    pub fn metrics(&self) -> Result<MetricsSnapshot, WireError> {
+        let mut ch = self.io.lock().unwrap();
+        ch.send(&Message::MetricsReq)?;
+        match ch.recv()? {
+            Message::MetricsResp(snap) => Ok(snap),
+            Message::Error { code, detail } => Err(WireError::Remote { code, detail }),
+            other => Err(WireError::Protocol(format!(
+                "expected MetricsResp, got tag {:#04x}",
+                other.tag()
+            ))),
+        }
+    }
+
+    /// Ask the server process to stop accepting and drain (best-effort).
+    pub fn shutdown(&self) -> Result<(), WireError> {
+        let mut ch = self.io.lock().unwrap();
+        ch.send(&Message::Shutdown)
+    }
+
+    // ------------------------------------------------------------------
+    // Remote Table II ops — signatures mirror `Evaluator`
+    // ------------------------------------------------------------------
+
+    /// HEMult (with relinearization + rescale), server-side.
+    pub fn mul(&self, a: &Ciphertext, b: &Ciphertext) -> Result<Ciphertext, WireError> {
+        self.call(WireOp::Mul, a, Some(b))
+    }
+
+    /// Slot rotation by `k`, server-side.
+    pub fn rotate(&self, a: &Ciphertext, k: usize) -> Result<Ciphertext, WireError> {
+        self.call(WireOp::Rotate(k), a, None)
+    }
+
+    /// Complex conjugation, server-side.
+    pub fn conjugate(&self, a: &Ciphertext) -> Result<Ciphertext, WireError> {
+        self.call(WireOp::Conjugate, a, None)
+    }
+
+    /// BSGS dense linear transform, server-side.
+    pub fn hom_linear(&self, a: &Ciphertext, m: &SlotMatrix) -> Result<Ciphertext, WireError> {
+        self.call(WireOp::HomLinear(m.clone()), a, None)
+    }
+
+    /// `a * a` with relinearization, server-side.
+    pub fn square(&self, a: &Ciphertext) -> Result<Ciphertext, WireError> {
+        self.call(WireOp::Square, a, None)
+    }
+
+    /// Encrypted linear scoring against the server-side model weights.
+    pub fn linear_score(&self, a: &Ciphertext) -> Result<Ciphertext, WireError> {
+        self.call(WireOp::LinearScore, a, None)
+    }
+
+    /// HEAdd on the server's CUDA-class lane.
+    pub fn add(&self, a: &Ciphertext, b: &Ciphertext) -> Result<Ciphertext, WireError> {
+        self.call(WireOp::Add, a, Some(b))
+    }
+
+    /// Rescale on the server's CUDA-class lane.
+    pub fn rescale(&self, a: &Ciphertext) -> Result<Ciphertext, WireError> {
+        self.call(WireOp::Rescale, a, None)
+    }
+
+    /// One synchronous op round trip, retrying through `Busy` frames.
+    /// The request is serialized exactly once, straight from the borrowed
+    /// operands (no clone); retries resend the same frame bytes.
+    fn call(
+        &self,
+        op: WireOp,
+        ct: &Ciphertext,
+        ct2: Option<&Ciphertext>,
+    ) -> Result<Ciphertext, WireError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let frame = encode_op_request(id, &op, ct, ct2);
+        let mut ch = self.io.lock().unwrap();
+        let mut attempt = 0u32;
+        loop {
+            ch.send_frame(&frame)?;
+            match ch.recv()? {
+                Message::OpResponse { id: rid, result, .. } => {
+                    if rid != id {
+                        return Err(WireError::Protocol(format!(
+                            "response id {rid} for request {id}"
+                        )));
+                    }
+                    return result.map_err(WireError::MissingKey);
+                }
+                Message::Busy { depth, .. } => {
+                    if attempt >= self.busy_retries {
+                        return Err(WireError::Busy { depth });
+                    }
+                    attempt += 1;
+                    std::thread::sleep(self.busy_backoff);
+                }
+                Message::Error { code, detail } => {
+                    return Err(WireError::Remote { code, detail })
+                }
+                other => {
+                    return Err(WireError::Protocol(format!(
+                        "expected OpResponse, got tag {:#04x}",
+                        other.tag()
+                    )))
+                }
+            }
+        }
+    }
+}

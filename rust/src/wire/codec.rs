@@ -1,0 +1,750 @@
+//! Canonical little-endian binary encoding of the CKKS types.
+//!
+//! Every top-level blob is `magic(4) | version(u16) | obj-tag(u8) |
+//! params-fingerprint(u64) | payload`. The fingerprint is the FNV-1a 64
+//! hash of the canonically encoded `CkksParams` — two peers agree on it
+//! iff they derive the identical prime tower, so every object is bound to
+//! the parameter set it was produced under. Readers reject unknown
+//! versions, wrong tags, wrong fingerprints and trailing bytes.
+//!
+//! **Canonical** means: one valid encoding per value. Integers are
+//! fixed-width little-endian, floats are IEEE-754 bit patterns,
+//! collections are length-prefixed, and `EvalKeySet` entries are sorted
+//! by (kind, galois element, level) so equal sets produce equal bytes.
+//!
+//! **Seed compression.** A key-switching key's public `a_j` polynomials
+//! are uniform and were expanded from recorded 8-byte PRNG seeds
+//! (`KsKey::a_seeds`); the compact encoding stores the seed (mode 1) and
+//! the reader re-expands bit-exactly via `keys::expand_a`. Keys whose
+//! seed is unknown fall back to shipping the polynomial (mode 0).
+
+use std::sync::Arc;
+
+use super::{fnv1a64, key_kind_from_parts, key_kind_parts, WireError, WIRE_MAGIC, WIRE_VERSION};
+use crate::ckks::keys::{digit_count_at, expand_a};
+use crate::ckks::linear::SlotMatrix;
+use crate::ckks::params::{CkksContext, CkksParams, WidthProfile};
+use crate::ckks::{Ciphertext, EvalKeySet, Format, KeyKind, KsKey, MissingKey, RnsPoly};
+use crate::coordinator::MetricsSnapshot;
+
+/// Hard ceilings a reader enforces before allocating (corrupt or hostile
+/// lengths must not OOM the process).
+const MAX_N: u32 = 1 << 22;
+const MAX_CHAIN: u16 = 1024;
+const MAX_KEYS: u32 = 1 << 16;
+const MAX_DIGITS: u16 = 256;
+const MAX_ROTATIONS: u32 = 1 << 20;
+const MAX_MATRIX_DIM: u32 = 1 << 16;
+
+/// Object tag inside a blob header.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum ObjTag {
+    Params = 1,
+    Plaintext = 2,
+    Ciphertext = 3,
+    KsKey = 4,
+    EvalKeySet = 5,
+}
+
+impl ObjTag {
+    fn from_u8(v: u8) -> Result<Self, WireError> {
+        Ok(match v {
+            1 => ObjTag::Params,
+            2 => ObjTag::Plaintext,
+            3 => ObjTag::Ciphertext,
+            4 => ObjTag::KsKey,
+            5 => ObjTag::EvalKeySet,
+            other => return Err(WireError::Corrupt(format!("unknown object tag {other}"))),
+        })
+    }
+}
+
+// ---------------------------------------------------------------------
+// Primitive writers (append to a Vec<u8>) and the bounds-checked Reader
+// ---------------------------------------------------------------------
+
+pub fn put_u8(out: &mut Vec<u8>, v: u8) {
+    out.push(v);
+}
+
+pub fn put_u16(out: &mut Vec<u8>, v: u16) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u32(out: &mut Vec<u8>, v: u32) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_u64(out: &mut Vec<u8>, v: u64) {
+    out.extend_from_slice(&v.to_le_bytes());
+}
+
+pub fn put_f64(out: &mut Vec<u8>, v: f64) {
+    out.extend_from_slice(&v.to_bits().to_le_bytes());
+}
+
+/// Length-prefixed byte string (u32 length).
+pub fn put_bytes(out: &mut Vec<u8>, b: &[u8]) {
+    put_u32(out, b.len() as u32);
+    out.extend_from_slice(b);
+}
+
+/// A bounds-checked cursor over a byte slice. Every read either returns
+/// the value or a typed [`WireError::Corrupt`] — no panics on truncated
+/// input.
+pub struct Reader<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Reader<'a> {
+    pub fn new(buf: &'a [u8]) -> Self {
+        Self { buf, pos: 0 }
+    }
+
+    pub fn remaining(&self) -> usize {
+        self.buf.len() - self.pos
+    }
+
+    /// Peek at the unread remainder without consuming it.
+    pub fn rest(&self) -> &'a [u8] {
+        &self.buf[self.pos..]
+    }
+
+    pub fn take(&mut self, n: usize) -> Result<&'a [u8], WireError> {
+        if self.remaining() < n {
+            return Err(WireError::Corrupt(format!(
+                "truncated: wanted {n} bytes, {} left",
+                self.remaining()
+            )));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    pub fn u8(&mut self) -> Result<u8, WireError> {
+        Ok(self.take(1)?[0])
+    }
+
+    pub fn u16(&mut self) -> Result<u16, WireError> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    pub fn u32(&mut self) -> Result<u32, WireError> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    pub fn u64(&mut self) -> Result<u64, WireError> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    pub fn f64(&mut self) -> Result<f64, WireError> {
+        Ok(f64::from_bits(self.u64()?))
+    }
+
+    /// Length-prefixed byte string (u32 length).
+    pub fn bytes(&mut self) -> Result<&'a [u8], WireError> {
+        let n = self.u32()? as usize;
+        self.take(n)
+    }
+
+    /// Canonical encodings have no trailing garbage.
+    pub fn expect_done(&self) -> Result<(), WireError> {
+        if self.remaining() != 0 {
+            return Err(WireError::Corrupt(format!(
+                "{} trailing bytes after payload",
+                self.remaining()
+            )));
+        }
+        Ok(())
+    }
+}
+
+// ---------------------------------------------------------------------
+// Blob headers
+// ---------------------------------------------------------------------
+
+fn write_header(out: &mut Vec<u8>, tag: ObjTag, fingerprint: u64) {
+    out.extend_from_slice(&WIRE_MAGIC);
+    put_u16(out, WIRE_VERSION);
+    put_u8(out, tag as u8);
+    put_u64(out, fingerprint);
+}
+
+/// Read and validate a blob header, returning the fingerprint it carries.
+fn read_header(r: &mut Reader, want_tag: ObjTag) -> Result<u64, WireError> {
+    let magic = r.take(4)?;
+    if magic != WIRE_MAGIC {
+        return Err(WireError::Corrupt(format!("bad magic {magic:02x?}")));
+    }
+    let version = r.u16()?;
+    if version != WIRE_VERSION {
+        return Err(WireError::Version { got: version, want: WIRE_VERSION });
+    }
+    let tag = ObjTag::from_u8(r.u8()?)?;
+    if tag != want_tag {
+        return Err(WireError::Corrupt(format!(
+            "object tag mismatch: got {tag:?}, wanted {want_tag:?}"
+        )));
+    }
+    r.u64()
+}
+
+fn check_fingerprint(got: u64, want: u64) -> Result<(), WireError> {
+    if got != want {
+        return Err(WireError::Params { got, want });
+    }
+    Ok(())
+}
+
+// ---------------------------------------------------------------------
+// Body-level traits
+// ---------------------------------------------------------------------
+
+/// Append the canonical body encoding of `self` (no blob header).
+pub trait WireWrite {
+    fn wire_write(&self, out: &mut Vec<u8>);
+}
+
+/// Read a body encoding that needs no context to rebuild.
+pub trait WireRead: Sized {
+    fn wire_read(r: &mut Reader) -> Result<Self, WireError>;
+}
+
+/// Read a body encoding that rebuilds derived state from the context
+/// (key-switching keys and key sets).
+pub trait WireReadCtx: Sized {
+    fn wire_read_ctx(ctx: &CkksContext, r: &mut Reader) -> Result<Self, WireError>;
+}
+
+// --------------------------- CkksParams ------------------------------
+
+impl WireWrite for CkksParams {
+    fn wire_write(&self, out: &mut Vec<u8>) {
+        put_u32(out, self.n as u32);
+        put_u16(out, self.depth as u16);
+        put_u32(out, self.scale_bits);
+        put_u16(out, self.dnum as u16);
+        put_u8(
+            out,
+            match self.profile {
+                WidthProfile::Wide => 0,
+                WidthProfile::Pe32 => 1,
+            },
+        );
+        put_f64(out, self.sigma);
+    }
+}
+
+impl WireRead for CkksParams {
+    fn wire_read(r: &mut Reader) -> Result<Self, WireError> {
+        let n = r.u32()?;
+        if n == 0 || n > MAX_N || !n.is_power_of_two() {
+            return Err(WireError::Corrupt(format!("bad ring dimension {n}")));
+        }
+        let depth = r.u16()? as usize;
+        let scale_bits = r.u32()?;
+        let dnum = r.u16()? as usize;
+        if dnum == 0 {
+            return Err(WireError::Corrupt("dnum must be positive".into()));
+        }
+        let profile = match r.u8()? {
+            0 => WidthProfile::Wide,
+            1 => WidthProfile::Pe32,
+            other => {
+                return Err(WireError::Corrupt(format!("unknown width profile {other}")))
+            }
+        };
+        let sigma = r.f64()?;
+        Ok(CkksParams { n: n as usize, depth, scale_bits, dnum, profile, sigma })
+    }
+}
+
+/// The parameter-set fingerprint every other blob is bound to: FNV-1a 64
+/// over the canonical `CkksParams` body. Peers derive the identical prime
+/// tower iff their params bodies (and thus fingerprints) match.
+pub fn params_fingerprint(p: &CkksParams) -> u64 {
+    let mut body = Vec::with_capacity(21);
+    p.wire_write(&mut body);
+    fnv1a64(&body)
+}
+
+/// Full params blob (self-fingerprinting: the header fingerprint is the
+/// hash of the payload that follows).
+pub fn encode_params(p: &CkksParams) -> Vec<u8> {
+    let mut out = Vec::new();
+    write_header(&mut out, ObjTag::Params, params_fingerprint(p));
+    p.wire_write(&mut out);
+    out
+}
+
+pub fn decode_params(bytes: &[u8]) -> Result<CkksParams, WireError> {
+    let mut r = Reader::new(bytes);
+    let fp = read_header(&mut r, ObjTag::Params)?;
+    check_fingerprint(fnv1a64(r.rest()), fp)?;
+    let p = CkksParams::wire_read(&mut r)?;
+    r.expect_done()?;
+    Ok(p)
+}
+
+// ----------------------- RnsPoly (plaintexts) ------------------------
+
+impl WireWrite for RnsPoly {
+    fn wire_write(&self, out: &mut Vec<u8>) {
+        put_u32(out, self.n as u32);
+        put_u8(out, match self.format {
+            Format::Coeff => 0,
+            Format::Eval => 1,
+        });
+        put_u16(out, self.chain.len() as u16);
+        for &c in &self.chain {
+            put_u16(out, c as u16);
+        }
+        for limb in &self.limbs {
+            debug_assert_eq!(limb.len(), self.n);
+            for &x in limb {
+                put_u64(out, x);
+            }
+        }
+    }
+}
+
+impl WireRead for RnsPoly {
+    fn wire_read(r: &mut Reader) -> Result<Self, WireError> {
+        let n = r.u32()?;
+        if n == 0 || n > MAX_N {
+            return Err(WireError::Corrupt(format!("bad poly dimension {n}")));
+        }
+        let n = n as usize;
+        let format = match r.u8()? {
+            0 => Format::Coeff,
+            1 => Format::Eval,
+            other => return Err(WireError::Corrupt(format!("unknown format tag {other}"))),
+        };
+        let chain_len = r.u16()?;
+        if chain_len > MAX_CHAIN {
+            return Err(WireError::Corrupt(format!("chain too long ({chain_len})")));
+        }
+        let mut chain = Vec::with_capacity(chain_len as usize);
+        for _ in 0..chain_len {
+            chain.push(r.u16()? as usize);
+        }
+        let mut limbs = Vec::with_capacity(chain_len as usize);
+        for _ in 0..chain_len {
+            let raw = r.take(n * 8)?;
+            let mut limb = Vec::with_capacity(n);
+            for w in raw.chunks_exact(8) {
+                limb.push(u64::from_le_bytes(w.try_into().unwrap()));
+            }
+            limbs.push(limb);
+        }
+        Ok(RnsPoly { n, format, limbs, chain })
+    }
+}
+
+pub fn encode_plaintext(p: &RnsPoly, fingerprint: u64) -> Vec<u8> {
+    let mut out = Vec::new();
+    write_header(&mut out, ObjTag::Plaintext, fingerprint);
+    p.wire_write(&mut out);
+    out
+}
+
+pub fn decode_plaintext(bytes: &[u8], fingerprint: u64) -> Result<RnsPoly, WireError> {
+    let mut r = Reader::new(bytes);
+    check_fingerprint(read_header(&mut r, ObjTag::Plaintext)?, fingerprint)?;
+    let p = RnsPoly::wire_read(&mut r)?;
+    r.expect_done()?;
+    Ok(p)
+}
+
+// --------------------------- Ciphertext ------------------------------
+
+impl WireWrite for Ciphertext {
+    fn wire_write(&self, out: &mut Vec<u8>) {
+        self.c0.wire_write(out);
+        self.c1.wire_write(out);
+        put_u16(out, self.level as u16);
+        put_f64(out, self.scale);
+    }
+}
+
+impl WireRead for Ciphertext {
+    fn wire_read(r: &mut Reader) -> Result<Self, WireError> {
+        let c0 = RnsPoly::wire_read(r)?;
+        let c1 = RnsPoly::wire_read(r)?;
+        if c0.chain != c1.chain || c0.n != c1.n {
+            return Err(WireError::Corrupt("ciphertext halves disagree on chain".into()));
+        }
+        let level = r.u16()? as usize;
+        if level + 1 != c0.chain.len() {
+            return Err(WireError::Corrupt(format!(
+                "level {level} inconsistent with {}-limb chain",
+                c0.chain.len()
+            )));
+        }
+        let scale = r.f64()?;
+        if !scale.is_finite() || scale <= 0.0 {
+            return Err(WireError::Corrupt(format!("bad ciphertext scale {scale}")));
+        }
+        Ok(Ciphertext { c0, c1, level, scale })
+    }
+}
+
+pub fn encode_ciphertext(ct: &Ciphertext, fingerprint: u64) -> Vec<u8> {
+    let mut out = Vec::new();
+    write_header(&mut out, ObjTag::Ciphertext, fingerprint);
+    ct.wire_write(&mut out);
+    out
+}
+
+pub fn decode_ciphertext(bytes: &[u8], fingerprint: u64) -> Result<Ciphertext, WireError> {
+    let mut r = Reader::new(bytes);
+    check_fingerprint(read_header(&mut r, ObjTag::Ciphertext)?, fingerprint)?;
+    let ct = Ciphertext::wire_read(&mut r)?;
+    r.expect_done()?;
+    Ok(ct)
+}
+
+// ----------------------------- KsKey ---------------------------------
+
+/// Per-digit `a` encodings.
+const A_EXPANDED: u8 = 0;
+const A_SEED: u8 = 1;
+
+fn write_kskey_body(k: &KsKey, out: &mut Vec<u8>, compress: bool) {
+    put_u16(out, k.level as u16);
+    put_u16(out, k.digits.len() as u16);
+    for (j, (b_j, a_j)) in k.digits.iter().enumerate() {
+        b_j.wire_write(out);
+        match (compress, k.a_seeds.get(j).copied().flatten()) {
+            (true, Some(seed)) => {
+                put_u8(out, A_SEED);
+                put_u64(out, seed);
+            }
+            _ => {
+                put_u8(out, A_EXPANDED);
+                a_j.wire_write(out);
+            }
+        }
+    }
+}
+
+fn read_kskey_body(ctx: &CkksContext, r: &mut Reader) -> Result<KsKey, WireError> {
+    let level = r.u16()? as usize;
+    if level >= ctx.q_chain.len() {
+        return Err(WireError::Corrupt(format!(
+            "key level {level} beyond chain depth {}",
+            ctx.q_chain.len() - 1
+        )));
+    }
+    let ext = ctx.extended_chain_at(level);
+    let ndigits = r.u16()?;
+    if ndigits == 0 || ndigits > MAX_DIGITS {
+        return Err(WireError::Corrupt(format!("bad digit count {ndigits}")));
+    }
+    // Reject a count that disagrees with this context's partition before
+    // the structural rebuild (whose internal assert is not for untrusted
+    // input).
+    if ndigits as usize != digit_count_at(ctx, level) {
+        return Err(WireError::Corrupt(format!(
+            "digit count {ndigits} != partition count {} at level {level}",
+            digit_count_at(ctx, level)
+        )));
+    }
+    let mut digits = Vec::with_capacity(ndigits as usize);
+    let mut a_seeds = Vec::with_capacity(ndigits as usize);
+    // Key digits live in Eval format on the level's extended chain over
+    // this context's ring, every residue canonical — anything else would
+    // trip asserts (or silently wrap) inside the key-switch pipeline
+    // instead of a typed decode error here.
+    let digit_ok = |p: &RnsPoly| {
+        p.chain == ext
+            && p.n == ctx.params.n
+            && p.format == Format::Eval
+            && p.chain.iter().enumerate().all(|(i, &ci)| {
+                let q = ctx.tower.contexts[ci].modulus.value();
+                p.limbs[i].iter().all(|&x| x < q)
+            })
+    };
+    for _ in 0..ndigits {
+        let b_j = RnsPoly::wire_read(r)?;
+        if !digit_ok(&b_j) {
+            return Err(WireError::Corrupt(
+                "key digit not Eval-format on this context's ring/extended chain".into(),
+            ));
+        }
+        let (a_j, seed) = match r.u8()? {
+            A_SEED => {
+                let seed = r.u64()?;
+                (expand_a(ctx, &ext, seed), Some(seed))
+            }
+            A_EXPANDED => {
+                let a_j = RnsPoly::wire_read(r)?;
+                if !digit_ok(&a_j) {
+                    return Err(WireError::Corrupt(
+                        "key digit not Eval-format on this context's ring/extended chain".into(),
+                    ));
+                }
+                (a_j, None)
+            }
+            other => {
+                return Err(WireError::Corrupt(format!("unknown a-encoding mode {other}")))
+            }
+        };
+        digits.push((b_j, a_j));
+        a_seeds.push(seed);
+    }
+    Ok(KsKey::from_digits(ctx, level, digits, a_seeds))
+}
+
+impl WireWrite for KsKey {
+    fn wire_write(&self, out: &mut Vec<u8>) {
+        write_kskey_body(self, out, true);
+    }
+}
+
+impl WireReadCtx for KsKey {
+    fn wire_read_ctx(ctx: &CkksContext, r: &mut Reader) -> Result<Self, WireError> {
+        read_kskey_body(ctx, r)
+    }
+}
+
+/// Standalone key blob. `compress` selects the seed encoding for the `a`
+/// halves (the default everywhere; `false` is the naive baseline the size
+/// tests and benchmarks compare against).
+pub fn encode_kskey(k: &KsKey, fingerprint: u64, compress: bool) -> Vec<u8> {
+    let mut out = Vec::new();
+    write_header(&mut out, ObjTag::KsKey, fingerprint);
+    write_kskey_body(k, &mut out, compress);
+    out
+}
+
+pub fn decode_kskey(
+    ctx: &CkksContext,
+    bytes: &[u8],
+    fingerprint: u64,
+) -> Result<KsKey, WireError> {
+    let mut r = Reader::new(bytes);
+    check_fingerprint(read_header(&mut r, ObjTag::KsKey)?, fingerprint)?;
+    let k = read_kskey_body(ctx, &mut r)?;
+    r.expect_done()?;
+    Ok(k)
+}
+
+// --------------------------- EvalKeySet ------------------------------
+
+fn write_eval_key_set_body(ks: &EvalKeySet, out: &mut Vec<u8>, compress: bool) {
+    // Canonical order: (kind tag, galois element, level).
+    let mut entries: Vec<(u8, u64, usize, &Arc<KsKey>)> = ks
+        .iter()
+        .map(|(kind, level, k)| {
+            let (tag, g) = key_kind_parts(kind);
+            (tag, g, level, k)
+        })
+        .collect();
+    entries.sort_by_key(|&(tag, g, level, _)| (tag, g, level));
+    put_u32(out, entries.len() as u32);
+    for (tag, g, level, k) in entries {
+        put_u8(out, tag);
+        put_u64(out, g);
+        put_u16(out, level as u16);
+        write_kskey_body(k, out, compress);
+    }
+    put_u32(out, ks.rotations().len() as u32);
+    for &s in ks.rotations() {
+        put_u32(out, s as u32);
+    }
+}
+
+fn read_eval_key_set_body(ctx: &CkksContext, r: &mut Reader) -> Result<EvalKeySet, WireError> {
+    let nkeys = r.u32()?;
+    if nkeys > MAX_KEYS {
+        return Err(WireError::Corrupt(format!("too many keys ({nkeys})")));
+    }
+    let mut entries: Vec<(KeyKind, usize, Arc<KsKey>)> = Vec::with_capacity(nkeys as usize);
+    for _ in 0..nkeys {
+        let tag = r.u8()?;
+        let g = r.u64()?;
+        let kind = key_kind_from_parts(tag, g)?;
+        let level = r.u16()? as usize;
+        let k = read_kskey_body(ctx, r)?;
+        if k.level != level {
+            return Err(WireError::Corrupt(format!(
+                "entry level {level} disagrees with key level {}",
+                k.level
+            )));
+        }
+        entries.push((kind, level, Arc::new(k)));
+    }
+    let nrot = r.u32()?;
+    if nrot > MAX_ROTATIONS {
+        return Err(WireError::Corrupt(format!("too many rotations ({nrot})")));
+    }
+    let mut rotations = Vec::with_capacity(nrot as usize);
+    for _ in 0..nrot {
+        rotations.push(r.u32()? as usize);
+    }
+    Ok(EvalKeySet::from_entries(entries, rotations))
+}
+
+impl WireWrite for EvalKeySet {
+    fn wire_write(&self, out: &mut Vec<u8>) {
+        write_eval_key_set_body(self, out, true);
+    }
+}
+
+impl WireReadCtx for EvalKeySet {
+    fn wire_read_ctx(ctx: &CkksContext, r: &mut Reader) -> Result<Self, WireError> {
+        read_eval_key_set_body(ctx, r)
+    }
+}
+
+pub fn encode_eval_key_set(ks: &EvalKeySet, fingerprint: u64, compress: bool) -> Vec<u8> {
+    let mut out = Vec::new();
+    write_header(&mut out, ObjTag::EvalKeySet, fingerprint);
+    write_eval_key_set_body(ks, &mut out, compress);
+    out
+}
+
+pub fn decode_eval_key_set(
+    ctx: &CkksContext,
+    bytes: &[u8],
+    fingerprint: u64,
+) -> Result<EvalKeySet, WireError> {
+    let mut r = Reader::new(bytes);
+    check_fingerprint(read_header(&mut r, ObjTag::EvalKeySet)?, fingerprint)?;
+    let ks = read_eval_key_set_body(ctx, &mut r)?;
+    r.expect_done()?;
+    Ok(ks)
+}
+
+// ------------------- protocol payload helper types -------------------
+
+impl WireWrite for SlotMatrix {
+    fn wire_write(&self, out: &mut Vec<u8>) {
+        put_u32(out, self.dim as u32);
+        for c in &self.entries {
+            put_f64(out, c.re);
+            put_f64(out, c.im);
+        }
+    }
+}
+
+impl WireRead for SlotMatrix {
+    fn wire_read(r: &mut Reader) -> Result<Self, WireError> {
+        let dim = r.u32()?;
+        if dim == 0 || dim > MAX_MATRIX_DIM {
+            return Err(WireError::Corrupt(format!("bad matrix dim {dim}")));
+        }
+        let dim = dim as usize;
+        let raw = r.take(dim * dim * 16)?;
+        let mut entries = Vec::with_capacity(dim * dim);
+        for pair in raw.chunks_exact(16) {
+            let re = f64::from_bits(u64::from_le_bytes(pair[..8].try_into().unwrap()));
+            let im = f64::from_bits(u64::from_le_bytes(pair[8..].try_into().unwrap()));
+            entries.push(crate::ckks::Complex::new(re, im));
+        }
+        Ok(SlotMatrix { dim, entries })
+    }
+}
+
+impl WireWrite for MissingKey {
+    fn wire_write(&self, out: &mut Vec<u8>) {
+        let (tag, g) = key_kind_parts(self.kind);
+        put_u8(out, tag);
+        put_u64(out, g);
+        put_u64(out, self.level as u64);
+    }
+}
+
+impl WireRead for MissingKey {
+    fn wire_read(r: &mut Reader) -> Result<Self, WireError> {
+        let tag = r.u8()?;
+        let g = r.u64()?;
+        let kind = key_kind_from_parts(tag, g)?;
+        let level = r.u64()? as usize;
+        Ok(MissingKey { kind, level })
+    }
+}
+
+impl WireWrite for MetricsSnapshot {
+    fn wire_write(&self, out: &mut Vec<u8>) {
+        put_u64(out, self.served);
+        put_u64(out, self.batches);
+        put_u64(out, self.rejected);
+        put_u64(out, self.queue_peak);
+        put_f64(out, self.mean_service_us);
+        put_f64(out, self.mean_batch);
+        put_u64(out, self.fhec_depth);
+        put_u64(out, self.cuda_depth);
+        put_u64(out, self.fhec_served);
+        put_u64(out, self.cuda_served);
+    }
+}
+
+impl WireRead for MetricsSnapshot {
+    fn wire_read(r: &mut Reader) -> Result<Self, WireError> {
+        Ok(MetricsSnapshot {
+            served: r.u64()?,
+            batches: r.u64()?,
+            rejected: r.u64()?,
+            queue_peak: r.u64()?,
+            mean_service_us: r.f64()?,
+            mean_batch: r.f64()?,
+            fhec_depth: r.u64()?,
+            cuda_depth: r.u64()?,
+            fhec_served: r.u64()?,
+            cuda_served: r.u64()?,
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn params_blob_roundtrip_and_self_fingerprint() {
+        let p = CkksParams::toy();
+        let blob = encode_params(&p);
+        let back = decode_params(&blob).unwrap();
+        assert_eq!(back.n, p.n);
+        assert_eq!(back.depth, p.depth);
+        assert_eq!(back.scale_bits, p.scale_bits);
+        assert_eq!(back.dnum, p.dnum);
+        assert_eq!(back.profile, p.profile);
+        assert_eq!(back.sigma, p.sigma);
+        assert_eq!(params_fingerprint(&back), params_fingerprint(&p));
+        // Different params -> different fingerprint.
+        assert_ne!(
+            params_fingerprint(&CkksParams::toy()),
+            params_fingerprint(&CkksParams::medium())
+        );
+    }
+
+    #[test]
+    fn reader_rejects_truncation() {
+        let mut r = Reader::new(&[1, 2, 3]);
+        assert!(r.u16().is_ok());
+        assert!(matches!(r.u16(), Err(WireError::Corrupt(_))));
+    }
+
+    #[test]
+    fn header_rejects_bad_magic_and_tag() {
+        let p = CkksParams::toy();
+        let mut blob = encode_params(&p);
+        blob[0] ^= 0xFF;
+        assert!(matches!(decode_params(&blob), Err(WireError::Corrupt(_))));
+        // Right magic, wrong object tag.
+        let ct_hdr_as_params = {
+            let mut out = Vec::new();
+            write_header(&mut out, ObjTag::Ciphertext, 7);
+            out
+        };
+        assert!(matches!(
+            decode_params(&ct_hdr_as_params),
+            Err(WireError::Corrupt(_))
+        ));
+    }
+}

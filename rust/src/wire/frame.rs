@@ -1,0 +1,157 @@
+//! Length-prefixed frames with an integrity checksum — the unit the TCP
+//! protocol moves.
+//!
+//! Layout on the wire (all little-endian):
+//!
+//! ```text
+//! u32 len      — byte count of everything after this field
+//!                (1 tag + body + 8 checksum)
+//! u8  tag      — message tag (see `protocol`)
+//! ..  body     — message payload (codec encoding)
+//! u64 checksum — FNV-1a 64 over (tag || body)
+//! ```
+//!
+//! Readers bound `len` before allocating and verify the checksum before
+//! handing the body to the protocol layer, so a corrupted or truncated
+//! stream surfaces as a typed [`WireError::Corrupt`] instead of a
+//! mis-decoded message.
+
+use std::io::{Read, Write};
+
+use super::{fnv1a64, fnv1a64_seeded, WireError, FNV1A64_OFFSET};
+
+/// Maximum accepted frame payload (tag + body + checksum). Big enough for
+/// a bootstrap-grade `EvalKeySet` at N=2^16, small enough that a corrupt
+/// length field cannot OOM the process.
+pub const MAX_FRAME: u32 = 1 << 30;
+
+/// Overhead after the length field: 1 tag byte + 8 checksum bytes.
+const FRAME_OVERHEAD: u32 = 9;
+
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct Frame {
+    pub tag: u8,
+    pub body: Vec<u8>,
+}
+
+impl Frame {
+    pub fn new(tag: u8, body: Vec<u8>) -> Self {
+        Self { tag, body }
+    }
+
+    /// Serialize to any writer (does not flush).
+    pub fn write_to<W: Write>(&self, w: &mut W) -> Result<(), WireError> {
+        if self.body.len() as u64 > (MAX_FRAME - FRAME_OVERHEAD) as u64 {
+            return Err(WireError::Corrupt(format!(
+                "frame body too large ({} bytes)",
+                self.body.len()
+            )));
+        }
+        let len = FRAME_OVERHEAD + self.body.len() as u32;
+        // Streaming checksum over tag || body — no materialized copy of
+        // the (potentially key-set-sized) concatenation.
+        let checksum =
+            fnv1a64_seeded(fnv1a64_seeded(FNV1A64_OFFSET, &[self.tag]), &self.body);
+        w.write_all(&len.to_le_bytes())?;
+        w.write_all(&[self.tag])?;
+        w.write_all(&self.body)?;
+        w.write_all(&checksum.to_le_bytes())?;
+        Ok(())
+    }
+
+    /// Read one frame, verifying length bounds and the checksum.
+    pub fn read_from<R: Read>(r: &mut R) -> Result<Self, WireError> {
+        let mut len_bytes = [0u8; 4];
+        r.read_exact(&mut len_bytes)?;
+        let len = u32::from_le_bytes(len_bytes);
+        if len < FRAME_OVERHEAD || len > MAX_FRAME {
+            return Err(WireError::Corrupt(format!("bad frame length {len}")));
+        }
+        // Grow with the bytes that actually arrive instead of committing
+        // `len` up front: an attacker sending only a huge length prefix
+        // pins a chunk, not a gigabyte, per connection.
+        const CHUNK: usize = 64 * 1024;
+        let mut payload = Vec::with_capacity((len as usize).min(CHUNK));
+        let mut buf = [0u8; CHUNK];
+        let mut remaining = len as usize;
+        while remaining > 0 {
+            let take = remaining.min(CHUNK);
+            r.read_exact(&mut buf[..take])?;
+            payload.extend_from_slice(&buf[..take]);
+            remaining -= take;
+        }
+        let (tagged_body, check_bytes) = payload.split_at(len as usize - 8);
+        let want = u64::from_le_bytes(check_bytes.try_into().unwrap());
+        let got = fnv1a64(tagged_body);
+        if got != want {
+            return Err(WireError::Corrupt(format!(
+                "frame checksum mismatch (got {got:#018x}, want {want:#018x})"
+            )));
+        }
+        Ok(Frame {
+            tag: tagged_body[0],
+            body: tagged_body[1..].to_vec(),
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn roundtrip() {
+        let f = Frame::new(7, vec![1, 2, 3, 4, 5]);
+        let mut buf = Vec::new();
+        f.write_to(&mut buf).unwrap();
+        let back = Frame::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn empty_body_roundtrip() {
+        let f = Frame::new(0, Vec::new());
+        let mut buf = Vec::new();
+        f.write_to(&mut buf).unwrap();
+        assert_eq!(buf.len(), 4 + 9);
+        let back = Frame::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(back, f);
+    }
+
+    #[test]
+    fn corrupted_body_is_rejected() {
+        let f = Frame::new(3, vec![9; 64]);
+        let mut buf = Vec::new();
+        f.write_to(&mut buf).unwrap();
+        buf[10] ^= 0x01; // flip one body bit
+        let err = Frame::read_from(&mut buf.as_slice()).unwrap_err();
+        assert!(matches!(err, WireError::Corrupt(_)), "{err}");
+    }
+
+    #[test]
+    fn corrupted_tag_is_rejected() {
+        let f = Frame::new(3, vec![9; 8]);
+        let mut buf = Vec::new();
+        f.write_to(&mut buf).unwrap();
+        buf[4] ^= 0xFF; // the tag byte
+        assert!(Frame::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn truncated_stream_is_rejected() {
+        let f = Frame::new(1, vec![2; 32]);
+        let mut buf = Vec::new();
+        f.write_to(&mut buf).unwrap();
+        buf.truncate(buf.len() - 5);
+        assert!(Frame::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn oversized_length_is_rejected_before_allocation() {
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME + 1).to_le_bytes());
+        buf.extend_from_slice(&[0; 16]);
+        let err = Frame::read_from(&mut buf.as_slice()).unwrap_err();
+        assert!(matches!(err, WireError::Corrupt(_)));
+    }
+}

@@ -1,0 +1,174 @@
+//! The wire subsystem: canonical serialization + framed TCP serving for
+//! the client/server key model.
+//!
+//! PR 2 split the system into a client half (`KeyGen`/`Encryptor`, the
+//! only holders of secret material) and a secret-key-free server half
+//! (`Evaluator` + `Coordinator`). This module lets the two halves meet
+//! across a process/network boundary — the premise of the paper's
+//! deployment story (a server computing on data it can never decrypt):
+//!
+//! * [`codec`] — a versioned, canonical little-endian binary format:
+//!   every blob starts with a 4-byte magic, a format version, an object
+//!   tag and the parameter-set fingerprint, followed by the payload.
+//!   `WireWrite`/`WireRead` impls cover `CkksParams`, plaintext
+//!   polynomials, `Ciphertext`, `KsKey` and `EvalKeySet`. Evaluation
+//!   keys use *seed compression*: the uniform `a_j` half of each digit
+//!   is stored as the 8-byte PRNG seed it was expanded from and
+//!   re-expanded bit-exactly on load, roughly halving key bytes.
+//! * [`frame`] — length-prefixed frames (`u32 len | u8 tag | body |
+//!   u64 fnv-1a checksum`) over any `Read`/`Write` pair.
+//! * [`protocol`] — the request/response messages: `Hello` handshake
+//!   (version + params fingerprint negotiation), `PushKeys`, op
+//!   requests mirroring `coordinator::OpKind`, `Busy` backpressure,
+//!   `Metrics` and `Shutdown`.
+//! * [`server`] — a TCP front for the existing `Coordinator`: one
+//!   reader thread per connection feeds `submit`, a writer thread
+//!   streams responses back in admission order, and `QueueFull`
+//!   backpressure maps to a typed `Busy` frame instead of a stall.
+//! * [`client`] — [`client::RemoteEvaluator`], whose
+//!   `mul`/`rotate`/`conjugate`/`hom_linear` signatures mirror the
+//!   local `Evaluator`, so example pipelines run unchanged against
+//!   either an in-process evaluator or a socket.
+//! * [`cli`] — the `serve`/`client` subcommand bodies shared by the
+//!   `fhecore` CLI and the `fhecore-serve` binary.
+
+pub mod cli;
+pub mod client;
+pub mod codec;
+pub mod frame;
+pub mod protocol;
+pub mod server;
+
+pub use client::RemoteEvaluator;
+pub use codec::{params_fingerprint, ObjTag, Reader, WireRead, WireWrite};
+pub use frame::Frame;
+pub use protocol::{Message, WireOp};
+pub use server::{serve, ServeOptions};
+
+use crate::ckks::{KeyKind, MissingKey};
+
+/// Wire format magic: the first four bytes of every serialized blob.
+pub const WIRE_MAGIC: [u8; 4] = *b"FHEC";
+
+/// Wire format version. Bump on any incompatible layout change; readers
+/// reject mismatches with [`WireError::Version`].
+pub const WIRE_VERSION: u16 = 1;
+
+/// Everything that can go wrong on the wire.
+#[derive(Debug)]
+pub enum WireError {
+    /// Socket / stream failure.
+    Io(std::io::Error),
+    /// Bad magic, bad checksum, truncated or over-long data, trailing
+    /// garbage — the bytes are not a well-formed wire object.
+    Corrupt(String),
+    /// The peer speaks a different wire format version.
+    Version { got: u16, want: u16 },
+    /// The peer's parameter set differs from ours (fingerprints).
+    Params { got: u64, want: u64 },
+    /// Structurally valid frames in an order or shape the protocol does
+    /// not allow (e.g. an op before any keys were pushed).
+    Protocol(String),
+    /// The server's queue is full; retry later (backpressure).
+    Busy { depth: u32 },
+    /// The server executed the op but the public key set lacks a key.
+    MissingKey(MissingKey),
+    /// A typed error frame from the peer.
+    Remote { code: u16, detail: String },
+}
+
+impl std::fmt::Display for WireError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            WireError::Io(e) => write!(f, "wire io: {e}"),
+            WireError::Corrupt(why) => write!(f, "corrupt wire data: {why}"),
+            WireError::Version { got, want } => {
+                write!(f, "wire version mismatch: peer {got}, ours {want}")
+            }
+            WireError::Params { got, want } => write!(
+                f,
+                "parameter fingerprint mismatch: peer {got:#018x}, ours {want:#018x}"
+            ),
+            WireError::Protocol(why) => write!(f, "protocol violation: {why}"),
+            WireError::Busy { depth } => write!(f, "server busy ({depth} in flight)"),
+            WireError::MissingKey(mk) => write!(f, "{mk}"),
+            WireError::Remote { code, detail } => {
+                write!(f, "remote error {code}: {detail}")
+            }
+        }
+    }
+}
+
+impl std::error::Error for WireError {}
+
+impl From<std::io::Error> for WireError {
+    fn from(e: std::io::Error) -> Self {
+        WireError::Io(e)
+    }
+}
+
+impl From<MissingKey> for WireError {
+    fn from(mk: MissingKey) -> Self {
+        WireError::MissingKey(mk)
+    }
+}
+
+/// FNV-1a 64-bit — the checksum/fingerprint hash of the wire format
+/// (dependency-free, stable across platforms, not cryptographic; the
+/// frame checksum guards against corruption, not tampering).
+pub fn fnv1a64(bytes: &[u8]) -> u64 {
+    fnv1a64_seeded(FNV1A64_OFFSET, bytes)
+}
+
+/// The FNV-1a 64 offset basis (initial state).
+pub const FNV1A64_OFFSET: u64 = 0xcbf2_9ce4_8422_2325;
+
+/// Streaming form: fold `bytes` into an existing hash state `h`. Lets the
+/// frame writer checksum `tag || body` without materializing the
+/// concatenation.
+pub fn fnv1a64_seeded(h: u64, bytes: &[u8]) -> u64 {
+    let mut h = h;
+    for &b in bytes {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01b3);
+    }
+    h
+}
+
+/// Stable numeric tag for a [`KeyKind`] (wire encoding).
+pub(crate) fn key_kind_parts(kind: KeyKind) -> (u8, u64) {
+    match kind {
+        KeyKind::Relin => (0, 0),
+        KeyKind::Galois(g) => (1, g as u64),
+    }
+}
+
+pub(crate) fn key_kind_from_parts(tag: u8, g: u64) -> Result<KeyKind, WireError> {
+    match tag {
+        0 => Ok(KeyKind::Relin),
+        1 => Ok(KeyKind::Galois(g as usize)),
+        other => Err(WireError::Corrupt(format!("unknown key kind tag {other}"))),
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn fnv_vectors() {
+        // Published FNV-1a 64 test vectors.
+        assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
+        assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
+        assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn key_kind_roundtrip() {
+        for kind in [KeyKind::Relin, KeyKind::Galois(5), KeyKind::Galois(511)] {
+            let (t, g) = key_kind_parts(kind);
+            assert_eq!(key_kind_from_parts(t, g).unwrap(), kind);
+        }
+        assert!(key_kind_from_parts(9, 0).is_err());
+    }
+}

@@ -1,0 +1,365 @@
+//! The framed RPC messages the client and server exchange.
+//!
+//! Message tags (one per [`Frame::tag`]):
+//!
+//! | tag  | message       | direction | body |
+//! |------|---------------|-----------|------|
+//! | 0x01 | `Hello`       | c -> s    | version u16, params fingerprint u64 |
+//! | 0x02 | `HelloAck`    | s -> c    | version u16, params fingerprint u64 |
+//! | 0x03 | `PushKeys`    | c -> s    | `EvalKeySet` blob (seed-compressed) |
+//! | 0x04 | `KeysAck`     | s -> c    | key count u32 |
+//! | 0x05 | `OpRequest`   | c -> s    | id u64, op, ct, optional ct2 |
+//! | 0x06 | `OpResponse`  | s -> c    | id u64, ok/err, ct or MissingKey, timings |
+//! | 0x07 | `Busy`        | s -> c    | id u64, lane depth u32 (backpressure) |
+//! | 0x08 | `MetricsReq`  | c -> s    | (empty) |
+//! | 0x09 | `MetricsResp` | s -> c    | `MetricsSnapshot` |
+//! | 0x0A | `Error`       | s -> c    | code u16, utf-8 detail |
+//! | 0x0B | `Shutdown`    | c -> s    | (empty) |
+//!
+//! `WireOp` mirrors `coordinator::OpKind` one-for-one, carrying the
+//! matrix operand for `HomLinear` inline; the second ciphertext operand
+//! of the binary ops travels in the enclosing `OpRequest`.
+
+use super::codec::{put_bytes, put_f64, put_u16, put_u32, put_u64, put_u8, Reader};
+use super::codec::{WireRead, WireWrite};
+use super::{Frame, WireError, WIRE_VERSION};
+use crate::ckks::linear::SlotMatrix;
+use crate::ckks::{Ciphertext, MissingKey};
+use crate::coordinator::{MetricsSnapshot, OpKind};
+
+/// Error codes carried by `Message::Error`.
+pub mod error_code {
+    /// Handshake failed (version or params fingerprint mismatch).
+    pub const HANDSHAKE: u16 = 1;
+    /// An op arrived before any `EvalKeySet` was pushed.
+    pub const NO_KEYS: u16 = 2;
+    /// The request was structurally invalid (missing operand etc.).
+    pub const BAD_REQUEST: u16 = 3;
+    /// The server could not decode the payload.
+    pub const DECODE: u16 = 4;
+    /// The coordinator is shutting down.
+    pub const STOPPED: u16 = 5;
+}
+
+/// Wire-level op selector mirroring `coordinator::OpKind`.
+#[derive(Debug, Clone, PartialEq)]
+pub enum WireOp {
+    LinearScore,
+    Square,
+    Rotate(usize),
+    Conjugate,
+    Mul,
+    Add,
+    Rescale,
+    HomLinear(SlotMatrix),
+}
+
+impl WireOp {
+    /// The coordinator-side kind (the matrix payload is carried
+    /// separately into `Request::matrix`).
+    pub fn kind(&self) -> OpKind {
+        match self {
+            WireOp::LinearScore => OpKind::LinearScore,
+            WireOp::Square => OpKind::Square,
+            WireOp::Rotate(k) => OpKind::Rotate(*k),
+            WireOp::Conjugate => OpKind::Conjugate,
+            WireOp::Mul => OpKind::Mul,
+            WireOp::Add => OpKind::Add,
+            WireOp::Rescale => OpKind::Rescale,
+            WireOp::HomLinear(_) => OpKind::HomLinear,
+        }
+    }
+
+    fn write(&self, out: &mut Vec<u8>) {
+        match self {
+            WireOp::LinearScore => put_u8(out, 0),
+            WireOp::Square => put_u8(out, 1),
+            WireOp::Rotate(k) => {
+                put_u8(out, 2);
+                put_u32(out, *k as u32);
+            }
+            WireOp::Conjugate => put_u8(out, 3),
+            WireOp::Mul => put_u8(out, 4),
+            WireOp::Add => put_u8(out, 5),
+            WireOp::Rescale => put_u8(out, 6),
+            WireOp::HomLinear(m) => {
+                put_u8(out, 7);
+                m.wire_write(out);
+            }
+        }
+    }
+
+    fn read(r: &mut Reader) -> Result<Self, WireError> {
+        Ok(match r.u8()? {
+            0 => WireOp::LinearScore,
+            1 => WireOp::Square,
+            2 => WireOp::Rotate(r.u32()? as usize),
+            3 => WireOp::Conjugate,
+            4 => WireOp::Mul,
+            5 => WireOp::Add,
+            6 => WireOp::Rescale,
+            7 => WireOp::HomLinear(SlotMatrix::wire_read(r)?),
+            other => return Err(WireError::Corrupt(format!("unknown op tag {other}"))),
+        })
+    }
+}
+
+/// One protocol message (see the module table for tags and directions).
+#[derive(Debug, Clone, PartialEq)]
+pub enum Message {
+    Hello { version: u16, fingerprint: u64 },
+    HelloAck { version: u16, fingerprint: u64 },
+    /// Body is a full `EvalKeySet` blob (header + payload); it is decoded
+    /// lazily at the point where a context is available.
+    PushKeys { blob: Vec<u8> },
+    KeysAck { keys: u32 },
+    OpRequest {
+        id: u64,
+        op: WireOp,
+        ct: Ciphertext,
+        ct2: Option<Ciphertext>,
+    },
+    OpResponse {
+        id: u64,
+        result: Result<Ciphertext, MissingKey>,
+        service_us: u64,
+        sim_base_us: f64,
+        sim_fhec_us: f64,
+        batch_size: u32,
+    },
+    Busy { id: u64, depth: u32 },
+    MetricsReq,
+    MetricsResp(MetricsSnapshot),
+    Error { code: u16, detail: String },
+    Shutdown,
+}
+
+/// Encode an `OpRequest` frame directly from borrowed operands — the
+/// single source of the request layout (`Message::encode` delegates
+/// here); the client hot path uses it to serialize without cloning the
+/// ciphertexts into an owned [`Message`].
+pub fn encode_op_request(
+    id: u64,
+    op: &WireOp,
+    ct: &Ciphertext,
+    ct2: Option<&Ciphertext>,
+) -> Frame {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    op.write(&mut body);
+    ct.wire_write(&mut body);
+    match ct2 {
+        Some(c) => {
+            put_u8(&mut body, 1);
+            c.wire_write(&mut body);
+        }
+        None => put_u8(&mut body, 0),
+    }
+    Frame::new(TAG_OP_REQUEST, body)
+}
+
+pub const TAG_HELLO: u8 = 0x01;
+pub const TAG_HELLO_ACK: u8 = 0x02;
+pub const TAG_PUSH_KEYS: u8 = 0x03;
+pub const TAG_KEYS_ACK: u8 = 0x04;
+pub const TAG_OP_REQUEST: u8 = 0x05;
+pub const TAG_OP_RESPONSE: u8 = 0x06;
+pub const TAG_BUSY: u8 = 0x07;
+pub const TAG_METRICS_REQ: u8 = 0x08;
+pub const TAG_METRICS_RESP: u8 = 0x09;
+pub const TAG_ERROR: u8 = 0x0A;
+pub const TAG_SHUTDOWN: u8 = 0x0B;
+
+impl Message {
+    /// The Hello this build sends.
+    pub fn hello(fingerprint: u64) -> Self {
+        Message::Hello { version: WIRE_VERSION, fingerprint }
+    }
+
+    pub fn tag(&self) -> u8 {
+        match self {
+            Message::Hello { .. } => TAG_HELLO,
+            Message::HelloAck { .. } => TAG_HELLO_ACK,
+            Message::PushKeys { .. } => TAG_PUSH_KEYS,
+            Message::KeysAck { .. } => TAG_KEYS_ACK,
+            Message::OpRequest { .. } => TAG_OP_REQUEST,
+            Message::OpResponse { .. } => TAG_OP_RESPONSE,
+            Message::Busy { .. } => TAG_BUSY,
+            Message::MetricsReq => TAG_METRICS_REQ,
+            Message::MetricsResp(_) => TAG_METRICS_RESP,
+            Message::Error { .. } => TAG_ERROR,
+            Message::Shutdown => TAG_SHUTDOWN,
+        }
+    }
+
+    pub fn encode(&self) -> Frame {
+        let mut body = Vec::new();
+        match self {
+            Message::Hello { version, fingerprint }
+            | Message::HelloAck { version, fingerprint } => {
+                put_u16(&mut body, *version);
+                put_u64(&mut body, *fingerprint);
+            }
+            Message::PushKeys { blob } => {
+                put_bytes(&mut body, blob);
+            }
+            Message::KeysAck { keys } => {
+                put_u32(&mut body, *keys);
+            }
+            Message::OpRequest { id, op, ct, ct2 } => {
+                return encode_op_request(*id, op, ct, ct2.as_ref());
+            }
+            Message::OpResponse {
+                id,
+                result,
+                service_us,
+                sim_base_us,
+                sim_fhec_us,
+                batch_size,
+            } => {
+                put_u64(&mut body, *id);
+                match result {
+                    Ok(ct) => {
+                        put_u8(&mut body, 1);
+                        ct.wire_write(&mut body);
+                    }
+                    Err(mk) => {
+                        put_u8(&mut body, 0);
+                        mk.wire_write(&mut body);
+                    }
+                }
+                put_u64(&mut body, *service_us);
+                put_f64(&mut body, *sim_base_us);
+                put_f64(&mut body, *sim_fhec_us);
+                put_u32(&mut body, *batch_size);
+            }
+            Message::Busy { id, depth } => {
+                put_u64(&mut body, *id);
+                put_u32(&mut body, *depth);
+            }
+            Message::MetricsReq | Message::Shutdown => {}
+            Message::MetricsResp(snap) => {
+                snap.wire_write(&mut body);
+            }
+            Message::Error { code, detail } => {
+                put_u16(&mut body, *code);
+                put_bytes(&mut body, detail.as_bytes());
+            }
+        }
+        Frame::new(self.tag(), body)
+    }
+
+    pub fn decode(frame: &Frame) -> Result<Self, WireError> {
+        let mut r = Reader::new(&frame.body);
+        let msg = match frame.tag {
+            TAG_HELLO => Message::Hello { version: r.u16()?, fingerprint: r.u64()? },
+            TAG_HELLO_ACK => {
+                Message::HelloAck { version: r.u16()?, fingerprint: r.u64()? }
+            }
+            TAG_PUSH_KEYS => Message::PushKeys { blob: r.bytes()?.to_vec() },
+            TAG_KEYS_ACK => Message::KeysAck { keys: r.u32()? },
+            TAG_OP_REQUEST => {
+                let id = r.u64()?;
+                let op = WireOp::read(&mut r)?;
+                let ct = Ciphertext::wire_read(&mut r)?;
+                let ct2 = match r.u8()? {
+                    0 => None,
+                    1 => Some(Ciphertext::wire_read(&mut r)?),
+                    other => {
+                        return Err(WireError::Corrupt(format!(
+                            "bad ct2 presence flag {other}"
+                        )))
+                    }
+                };
+                Message::OpRequest { id, op, ct, ct2 }
+            }
+            TAG_OP_RESPONSE => {
+                let id = r.u64()?;
+                let result = match r.u8()? {
+                    1 => Ok(Ciphertext::wire_read(&mut r)?),
+                    0 => Err(MissingKey::wire_read(&mut r)?),
+                    other => {
+                        return Err(WireError::Corrupt(format!(
+                            "bad result flag {other}"
+                        )))
+                    }
+                };
+                Message::OpResponse {
+                    id,
+                    result,
+                    service_us: r.u64()?,
+                    sim_base_us: r.f64()?,
+                    sim_fhec_us: r.f64()?,
+                    batch_size: r.u32()?,
+                }
+            }
+            TAG_BUSY => Message::Busy { id: r.u64()?, depth: r.u32()? },
+            TAG_METRICS_REQ => Message::MetricsReq,
+            TAG_METRICS_RESP => Message::MetricsResp(MetricsSnapshot::wire_read(&mut r)?),
+            TAG_ERROR => {
+                let code = r.u16()?;
+                let detail = String::from_utf8_lossy(r.bytes()?).into_owned();
+                Message::Error { code, detail }
+            }
+            TAG_SHUTDOWN => Message::Shutdown,
+            other => return Err(WireError::Corrupt(format!("unknown message tag {other}"))),
+        };
+        r.expect_done()?;
+        Ok(msg)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scalar_messages_roundtrip() {
+        let msgs = [
+            Message::hello(0xABCD),
+            Message::HelloAck { version: WIRE_VERSION, fingerprint: 7 },
+            Message::KeysAck { keys: 12 },
+            Message::Busy { id: 9, depth: 64 },
+            Message::MetricsReq,
+            Message::MetricsResp(MetricsSnapshot {
+                served: 10,
+                batches: 3,
+                rejected: 1,
+                queue_peak: 5,
+                mean_service_us: 123.5,
+                mean_batch: 3.3,
+                fhec_depth: 2,
+                cuda_depth: 0,
+                fhec_served: 8,
+                cuda_served: 2,
+            }),
+            Message::Error { code: 2, detail: "no keys".into() },
+            Message::Shutdown,
+            Message::PushKeys { blob: vec![1, 2, 3] },
+        ];
+        for m in msgs {
+            let frame = m.encode();
+            // Through real frame bytes, not just the struct.
+            let mut buf = Vec::new();
+            frame.write_to(&mut buf).unwrap();
+            let back = Frame::read_from(&mut buf.as_slice()).unwrap();
+            assert_eq!(Message::decode(&back).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn unknown_tag_is_rejected() {
+        let f = Frame::new(0x7F, Vec::new());
+        assert!(matches!(
+            Message::decode(&f),
+            Err(WireError::Corrupt(_))
+        ));
+    }
+
+    #[test]
+    fn trailing_bytes_are_rejected() {
+        let mut f = Message::KeysAck { keys: 1 }.encode();
+        f.body.push(0);
+        assert!(matches!(Message::decode(&f), Err(WireError::Corrupt(_))));
+    }
+}

@@ -1,0 +1,355 @@
+//! The TCP front for the `Coordinator`: `fhecore-serve`'s engine room.
+//!
+//! Thread model: the accept loop spawns one **reader** thread per
+//! connection, which decodes frames and feeds `Coordinator::submit`
+//! directly, plus one **writer** thread that streams responses back in
+//! admission order (workers answer on per-request channels; the writer
+//! blocks on each in turn, so a slow op never reorders the stream).
+//! `QueueFull` backpressure becomes a typed [`Message::Busy`] frame the
+//! client can retry on — the socket never stalls on an overloaded queue.
+//!
+//! The server is **secret-key-free by construction**: it is configured
+//! with a parameter set only. The `Evaluator` + `Coordinator` pair is
+//! built the moment a client pushes its public `EvalKeySet` (replacing
+//! any previous engine); ops arriving before that get a typed
+//! `Error{NO_KEYS}`.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Receiver as MpscReceiver, Sender as MpscSender};
+use std::sync::{Arc, Mutex};
+
+use super::codec::decode_eval_key_set;
+use super::protocol::{error_code, Message, WireOp};
+use super::{params_fingerprint, Frame, WireError, WIRE_VERSION};
+use crate::ckks::encoding::Complex;
+use crate::ckks::params::{CkksContext, CkksParams};
+use crate::ckks::{Ciphertext, Evaluator, Format};
+use crate::coordinator::{
+    Coordinator, ModelState, Request, Response, ServeConfig, SubmitError,
+};
+
+#[derive(Debug, Clone)]
+pub struct ServeOptions {
+    pub params: CkksParams,
+    pub serve: ServeConfig,
+    /// Per-connection log lines on stdout.
+    pub verbose: bool,
+}
+
+impl ServeOptions {
+    pub fn new(params: CkksParams) -> Self {
+        Self { params, serve: ServeConfig::default(), verbose: false }
+    }
+}
+
+/// The installed serving engine (built on `PushKeys`).
+struct Engine {
+    ev: Arc<Evaluator>,
+    coord: Coordinator,
+}
+
+struct ServerShared {
+    params: CkksParams,
+    fingerprint: u64,
+    serve: ServeConfig,
+    engine: Mutex<Option<Engine>>,
+    stop: AtomicBool,
+    verbose: bool,
+}
+
+/// The default server-side model for `LinearScore` requests: the same
+/// demo weight ramp the in-process `serve` demo uses.
+fn default_model(ev: &Evaluator) -> ModelState {
+    let slots = ev.ctx.params.slots();
+    let w: Vec<Complex> = (0..slots)
+        .map(|i| Complex::new(0.002 * (i % 50) as f64, 0.0))
+        .collect();
+    let weights_pt = ev.encode(&w, ev.ctx.max_level());
+    ModelState { weights_pt, rot_steps: slots }
+}
+
+/// Run the server on an already-bound listener until a client sends
+/// `Shutdown`. Returns after the accept loop exits; dropping the engine
+/// drains the coordinator gracefully.
+pub fn serve(listener: TcpListener, opts: ServeOptions) -> std::io::Result<()> {
+    let addr = listener.local_addr()?;
+    let shared = Arc::new(ServerShared {
+        fingerprint: params_fingerprint(&opts.params),
+        params: opts.params,
+        serve: opts.serve,
+        engine: Mutex::new(None),
+        stop: AtomicBool::new(false),
+        verbose: opts.verbose,
+    });
+    loop {
+        let (stream, peer) = match listener.accept() {
+            Ok(x) => x,
+            Err(e) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                eprintln!("fhecore-serve: accept failed: {e}");
+                continue;
+            }
+        };
+        if shared.stop.load(Ordering::SeqCst) {
+            // The wake-up connection a shutting-down handler makes.
+            break;
+        }
+        if shared.verbose {
+            println!("fhecore-serve: connection from {peer}");
+        }
+        let shared = shared.clone();
+        std::thread::spawn(move || handle_conn(stream, shared, addr));
+    }
+    // Tear the engine down before returning so queued work drains.
+    shared.engine.lock().unwrap().take();
+    Ok(())
+}
+
+/// What the writer thread sends next: an immediate message, or a pending
+/// coordinator response to block on.
+enum WriterItem {
+    Now(Message),
+    Pending(u64, std::sync::mpsc::Receiver<Response>),
+}
+
+fn response_message(id: u64, resp: Response) -> Message {
+    Message::OpResponse {
+        id,
+        result: resp.ct,
+        service_us: resp.service.as_micros() as u64,
+        sim_base_us: resp.sim_base_us,
+        sim_fhec_us: resp.sim_fhec_us,
+        batch_size: resp.batch_size as u32,
+    }
+}
+
+fn writer_loop(stream: TcpStream, rx: MpscReceiver<WriterItem>) {
+    use std::io::Write;
+    let mut w = std::io::BufWriter::new(stream);
+    while let Ok(item) = rx.recv() {
+        let msg = match item {
+            WriterItem::Now(m) => m,
+            WriterItem::Pending(id, rrx) => match rrx.recv() {
+                Ok(resp) => response_message(id, resp),
+                Err(_) => Message::Error {
+                    code: error_code::STOPPED,
+                    detail: "worker dropped the request".into(),
+                },
+            },
+        };
+        if msg.encode().write_to(&mut w).is_err() || w.flush().is_err() {
+            break;
+        }
+    }
+}
+
+/// A ciphertext is only admissible if it lives on exactly the chain this
+/// server's context assigns to its level (in Eval format, the op
+/// convention) with every residue canonical (below its modulus) —
+/// anything else would panic or silently wrap deep inside a worker.
+fn validate_ct(ctx: &CkksContext, ct: &Ciphertext) -> Result<(), String> {
+    if ct.c0.n != ctx.params.n {
+        return Err(format!("ring dim {} != {}", ct.c0.n, ctx.params.n));
+    }
+    if ct.level >= ctx.q_chain.len() {
+        return Err(format!("level {} beyond depth {}", ct.level, ctx.q_chain.len() - 1));
+    }
+    if ct.c0.chain != ctx.chain_at(ct.level) {
+        return Err("chain does not match the level's prime chain".into());
+    }
+    if ct.c0.format != Format::Eval || ct.c1.format != Format::Eval {
+        return Err("ciphertexts travel in Eval format".into());
+    }
+    for half in [&ct.c0, &ct.c1] {
+        for (i, &ci) in half.chain.iter().enumerate() {
+            let q = ctx.tower.contexts[ci].modulus.value();
+            if half.limbs[i].iter().any(|&x| x >= q) {
+                return Err(format!("non-canonical residue in limb {i} (>= modulus)"));
+            }
+        }
+    }
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, shared: Arc<ServerShared>, listen_addr: SocketAddr) {
+    let _ = stream.set_nodelay(true);
+    let reader_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("fhecore-serve: cannot split stream: {e}");
+            return;
+        }
+    };
+    let (tx, rx) = channel::<WriterItem>();
+    let writer = std::thread::spawn(move || writer_loop(stream, rx));
+    let shutdown = reader_loop(reader_stream, &shared, &tx);
+    drop(tx);
+    let _ = writer.join();
+    if shutdown {
+        if shared.verbose {
+            println!("fhecore-serve: shutdown requested");
+        }
+        // Unblock the accept loop so `serve` can return.
+        let _ = TcpStream::connect(listen_addr);
+    }
+}
+
+/// Decode and dispatch frames until EOF / error / `Shutdown`. Returns
+/// whether a shutdown was requested.
+fn reader_loop(
+    stream: TcpStream,
+    shared: &ServerShared,
+    tx: &MpscSender<WriterItem>,
+) -> bool {
+    let mut r = std::io::BufReader::new(stream);
+    let send = |m: Message| {
+        let _ = tx.send(WriterItem::Now(m));
+    };
+    loop {
+        let frame = match Frame::read_from(&mut r) {
+            Ok(f) => f,
+            Err(WireError::Io(_)) => return false, // EOF / peer gone
+            Err(e) => {
+                send(Message::Error { code: error_code::DECODE, detail: e.to_string() });
+                return false;
+            }
+        };
+        let msg = match Message::decode(&frame) {
+            Ok(m) => m,
+            Err(e) => {
+                send(Message::Error { code: error_code::DECODE, detail: e.to_string() });
+                continue;
+            }
+        };
+        match msg {
+            Message::Hello { version, fingerprint } => {
+                if version != WIRE_VERSION {
+                    send(Message::Error {
+                        code: error_code::HANDSHAKE,
+                        detail: format!(
+                            "wire version mismatch: client {version}, server {WIRE_VERSION}"
+                        ),
+                    });
+                    return false;
+                }
+                if fingerprint != shared.fingerprint {
+                    send(Message::Error {
+                        code: error_code::HANDSHAKE,
+                        detail: format!(
+                            "params fingerprint mismatch: client {fingerprint:#018x}, \
+                             server {:#018x}",
+                            shared.fingerprint
+                        ),
+                    });
+                    return false;
+                }
+                send(Message::HelloAck {
+                    version: WIRE_VERSION,
+                    fingerprint: shared.fingerprint,
+                });
+            }
+            Message::PushKeys { blob } => {
+                // Derive a fresh context deterministically from the
+                // configured params (identical tower by construction).
+                let ctx = CkksContext::new(shared.params.clone());
+                match decode_eval_key_set(&ctx, &blob, shared.fingerprint) {
+                    Ok(keys) => {
+                        let nkeys = keys.len() as u32;
+                        let ev = Arc::new(Evaluator::new(ctx, Arc::new(keys)));
+                        let model = Arc::new(default_model(&ev));
+                        let coord =
+                            Coordinator::start(ev.clone(), model, shared.serve.clone());
+                        // Swap under the lock, but drop (drain + join) the
+                        // previous engine outside it so other connections
+                        // never block on the old coordinator's teardown.
+                        let old = shared
+                            .engine
+                            .lock()
+                            .unwrap()
+                            .replace(Engine { ev, coord });
+                        drop(old);
+                        if shared.verbose {
+                            println!("fhecore-serve: installed key set ({nkeys} keys)");
+                        }
+                        send(Message::KeysAck { keys: nkeys });
+                    }
+                    Err(e) => send(Message::Error {
+                        code: error_code::DECODE,
+                        detail: format!("bad key set: {e}"),
+                    }),
+                }
+            }
+            Message::OpRequest { id, op, ct, ct2 } => {
+                let guard = shared.engine.lock().unwrap();
+                let Some(engine) = guard.as_ref() else {
+                    send(Message::Error {
+                        code: error_code::NO_KEYS,
+                        detail: "no evaluation keys pushed yet".into(),
+                    });
+                    continue;
+                };
+                let mut invalid = validate_ct(&engine.ev.ctx, &ct).err();
+                if invalid.is_none() {
+                    if let Some(c2) = &ct2 {
+                        invalid = validate_ct(&engine.ev.ctx, c2).err();
+                    }
+                }
+                if let Some(why) = invalid {
+                    send(Message::Error { code: error_code::BAD_REQUEST, detail: why });
+                    continue;
+                }
+                let kind = op.kind();
+                let matrix = match op {
+                    WireOp::HomLinear(m) => Some(m),
+                    _ => None,
+                };
+                let mut req = Request::new(id, kind, ct);
+                if let Some(c2) = ct2 {
+                    req = req.with_ct2(c2);
+                }
+                if let Some(m) = matrix {
+                    req = req.with_matrix(m);
+                }
+                match engine.coord.submit(req) {
+                    Ok(rrx) => {
+                        let _ = tx.send(WriterItem::Pending(id, rrx));
+                    }
+                    Err((_, SubmitError::QueueFull { depth })) => {
+                        send(Message::Busy { id, depth: depth as u32 })
+                    }
+                    Err((_, SubmitError::BadRequest(why))) => send(Message::Error {
+                        code: error_code::BAD_REQUEST,
+                        detail: why.to_string(),
+                    }),
+                    Err((_, SubmitError::Stopped)) => send(Message::Error {
+                        code: error_code::STOPPED,
+                        detail: "coordinator stopped".into(),
+                    }),
+                }
+            }
+            Message::MetricsReq => {
+                let snap = shared
+                    .engine
+                    .lock()
+                    .unwrap()
+                    .as_ref()
+                    .map(|e| e.coord.snapshot())
+                    .unwrap_or_default();
+                send(Message::MetricsResp(snap));
+            }
+            Message::Shutdown => {
+                shared.stop.store(true, Ordering::SeqCst);
+                return true;
+            }
+            other => {
+                send(Message::Error {
+                    code: error_code::BAD_REQUEST,
+                    detail: format!("unexpected message tag {:#04x}", other.tag()),
+                });
+            }
+        }
+    }
+}

@@ -1,0 +1,162 @@
+//! Loopback integration: a real TCP round trip through `wire::serve`.
+//!
+//! The client process-half (the only holder of the `SecretKey`) pushes a
+//! seed-compressed `EvalKeySet` over the socket; the server executes
+//! HEMult + Rotate through the `Coordinator`; the decrypted result must
+//! match a local-`Evaluator` reference **bit for bit**.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fhecore::ckks::encoding::Complex;
+use fhecore::ckks::params::{CkksContext, CkksParams};
+use fhecore::ckks::{EvalKeySpec, Evaluator, KeyGen};
+use fhecore::coordinator::ServeConfig;
+use fhecore::util::rng::Pcg64;
+use fhecore::wire::{serve, RemoteEvaluator, ServeOptions, WireError};
+
+/// Bind an ephemeral loopback port and run the server on a thread.
+fn spawn_server(params: CkksParams) -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = ServeOptions {
+        params,
+        serve: ServeConfig {
+            fhec_workers: 2,
+            cuda_workers: 1,
+            max_batch: 4,
+            linger: Duration::from_millis(1),
+            max_queue: 32,
+        },
+        verbose: false,
+    };
+    let handle = std::thread::spawn(move || {
+        serve(listener, opts).expect("server run");
+    });
+    (addr, handle)
+}
+
+#[test]
+fn loopback_hemult_rotate_matches_local_reference_bit_for_bit() {
+    let params = CkksParams::toy();
+    let (addr, server) = spawn_server(params.clone());
+
+    // Client half: secret key + public eval keys, never sent raw.
+    let ctx = CkksContext::new(params.clone());
+    let mut rng = Pcg64::new(0x10CA1);
+    let kg = KeyGen::new(&ctx, &mut rng);
+    let spec = EvalKeySpec::relin_only().with_rotations(&[1, 3]);
+    let keys = Arc::new(kg.eval_key_set(&ctx, &spec, &mut rng));
+    let enc = kg.encryptor();
+    let dec = kg.decryptor();
+
+    let remote = RemoteEvaluator::connect_retry(&addr, params.clone(), Duration::from_secs(10))
+        .expect("connect to loopback server");
+    let pushed = remote.push_keys(&keys).expect("push keys");
+    assert_eq!(pushed as usize, keys.len());
+
+    let slots = ctx.params.slots();
+    let z: Vec<Complex> = (0..slots)
+        .map(|i| Complex::new(0.05 * (i % 10) as f64, 0.0))
+        .collect();
+    let ct = enc.encrypt_slots(&ctx, &z, ctx.max_level(), &mut rng);
+
+    // Remote: HEMult then Rotate(3), through the coordinator.
+    let squared = remote.mul(&ct, &ct).expect("remote HEMult");
+    let rotated = remote.rotate(&squared, 3).expect("remote Rotate");
+
+    // Local reference over the same public key set.
+    let ev = Evaluator::new(CkksContext::new(params), keys.clone());
+    let sq_ref = ev.mul(&ct, &ct).expect("local HEMult");
+    let rot_ref = ev.rotate(&sq_ref, 3).expect("local Rotate");
+
+    assert_eq!(squared, sq_ref, "remote HEMult must be bit-identical to local");
+    assert_eq!(rotated, rot_ref, "remote Rotate must be bit-identical to local");
+
+    // And the decryption is actually correct.
+    let back = dec.decrypt_to_slots(&ctx, &rotated);
+    let worst = back
+        .iter()
+        .enumerate()
+        .map(|(j, c)| {
+            let x = 0.05 * (((j + 3) % slots) % 10) as f64;
+            (c.re - x * x).abs()
+        })
+        .fold(0.0f64, f64::max);
+    assert!(worst < 1e-2, "decrypted x^2 rotated, max err {worst}");
+
+    // Metrics RPC saw the two FHEC-class ops.
+    let m = remote.metrics().expect("metrics RPC");
+    assert!(m.served >= 2, "served {}", m.served);
+    assert!(m.fhec_served >= 2);
+    assert_eq!(m.cuda_served, 0);
+
+    remote.shutdown().expect("shutdown frame");
+    server.join().expect("server thread exits after shutdown");
+}
+
+#[test]
+fn loopback_cuda_lane_and_missing_key_error() {
+    let params = CkksParams::toy();
+    let (addr, server) = spawn_server(params.clone());
+
+    let ctx = CkksContext::new(params.clone());
+    let mut rng = Pcg64::new(0x2CA11);
+    let kg = KeyGen::new(&ctx, &mut rng);
+    // Only the relin key: rotations must fail with the typed error.
+    let keys = Arc::new(kg.eval_key_set(&ctx, &EvalKeySpec::relin_only(), &mut rng));
+    let enc = kg.encryptor();
+    let dec = kg.decryptor();
+
+    let remote = RemoteEvaluator::connect_retry(&addr, params.clone(), Duration::from_secs(10))
+        .expect("connect");
+    remote.push_keys(&keys).expect("push keys");
+
+    let slots = ctx.params.slots();
+    let z = vec![Complex::new(0.25, 0.0); slots];
+    let ca = enc.encrypt_slots(&ctx, &z, ctx.max_level(), &mut rng);
+    let cb = enc.encrypt_slots(&ctx, &z, ctx.max_level(), &mut rng);
+
+    // CUDA-class remote op: HEAdd.
+    let sum = remote.add(&ca, &cb).expect("remote add is key-free");
+    let back = dec.decrypt_to_slots(&ctx, &sum);
+    assert!((back[0].re - 0.5).abs() < 1e-3, "0.25+0.25, got {}", back[0].re);
+
+    // Undeclared rotation: the MissingKey travels the wire typed.
+    match remote.rotate(&ca, 1) {
+        Err(WireError::MissingKey(mk)) => assert_eq!(mk.level, ctx.max_level()),
+        other => panic!("expected MissingKey over the wire, got {other:?}"),
+    }
+
+    let m = remote.metrics().expect("metrics");
+    assert!(m.cuda_served >= 1, "the add must ride the CUDA lane");
+
+    remote.shutdown().expect("shutdown");
+    server.join().expect("server exits");
+}
+
+#[test]
+fn handshake_rejects_params_mismatch() {
+    let (addr, server) = spawn_server(CkksParams::toy());
+    // A client configured for the medium preset must be turned away.
+    let err = RemoteEvaluator::connect_retry(
+        &addr,
+        CkksParams::medium(),
+        Duration::from_secs(10),
+    )
+    .err()
+    .expect("mismatched params must not handshake");
+    match err {
+        WireError::Remote { code, .. } => {
+            assert_eq!(code, fhecore::wire::protocol::error_code::HANDSHAKE)
+        }
+        other => panic!("expected Remote handshake error, got {other:?}"),
+    }
+    // The server is still healthy afterwards: a matching client works.
+    let remote =
+        RemoteEvaluator::connect_retry(&addr, CkksParams::toy(), Duration::from_secs(10))
+            .expect("matching params handshake");
+    remote.shutdown().expect("shutdown");
+    server.join().expect("server exits");
+}

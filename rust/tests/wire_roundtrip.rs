@@ -1,0 +1,254 @@
+//! Wire-format property tests: serialize -> deserialize bit-exactness for
+//! every object class, seed-compressed eval-key re-expansion, the
+//! compression-ratio acceptance bound, and rejection of corrupted /
+//! version-mismatched / wrong-fingerprint bytes.
+
+use std::sync::Arc;
+
+use fhecore::ckks::encoding::Complex;
+use fhecore::ckks::params::{CkksContext, CkksParams};
+use fhecore::ckks::{EvalKeySpec, Evaluator, KeyGen, KeyKind};
+use fhecore::util::rng::Pcg64;
+use fhecore::wire::codec::{
+    decode_ciphertext, decode_eval_key_set, decode_kskey, decode_params, decode_plaintext,
+    encode_ciphertext, encode_eval_key_set, encode_kskey, encode_params, encode_plaintext,
+    params_fingerprint,
+};
+use fhecore::wire::{Frame, Message, WireError};
+
+fn toy_fixture() -> (CkksContext, KeyGen, Pcg64, u64) {
+    let params = CkksParams::toy();
+    let fp = params_fingerprint(&params);
+    let ctx = CkksContext::new(params);
+    let mut rng = Pcg64::new(0x17E57);
+    let kg = KeyGen::new(&ctx, &mut rng);
+    (ctx, kg, rng, fp)
+}
+
+#[test]
+fn params_roundtrip_all_presets() {
+    for params in [CkksParams::toy(), CkksParams::medium()] {
+        let blob = encode_params(&params);
+        let back = decode_params(&blob).unwrap();
+        assert_eq!(params_fingerprint(&back), params_fingerprint(&params));
+        // The fingerprint pins the tower: same params -> same primes.
+        let a = CkksContext::new(params);
+        let b = CkksContext::new(back);
+        assert_eq!(a.tower.primes(), b.tower.primes());
+    }
+}
+
+#[test]
+fn plaintext_roundtrip_is_bit_exact() {
+    let (ctx, _kg, _rng, fp) = toy_fixture();
+    let ev = Evaluator::without_keys(CkksContext::new(CkksParams::toy()));
+    let slots = ctx.params.slots();
+    let z: Vec<Complex> = (0..slots)
+        .map(|i| Complex::new(0.3 * (i % 11) as f64, -0.1 * (i % 5) as f64))
+        .collect();
+    let pt = ev.encode(&z, ctx.max_level());
+    let blob = encode_plaintext(&pt, fp);
+    let back = decode_plaintext(&blob, fp).unwrap();
+    assert_eq!(back, pt, "plaintext round trip must be bit-exact");
+}
+
+#[test]
+fn ciphertext_roundtrip_is_bit_exact() {
+    let (ctx, kg, mut rng, fp) = toy_fixture();
+    let enc = kg.encryptor();
+    let slots = ctx.params.slots();
+    let z: Vec<Complex> = (0..slots)
+        .map(|i| Complex::new(0.05 * (i % 9) as f64, 0.0))
+        .collect();
+    for level in [1usize, ctx.max_level()] {
+        let ct = enc.encrypt_slots(&ctx, &z, level, &mut rng);
+        let blob = encode_ciphertext(&ct, fp);
+        let back = decode_ciphertext(&blob, fp).unwrap();
+        assert_eq!(back, ct, "level {level} ciphertext must round trip bit-exactly");
+    }
+}
+
+#[test]
+fn kskey_roundtrip_reexpands_seeds_bit_exactly() {
+    let (ctx, kg, mut rng, fp) = toy_fixture();
+    let spec = EvalKeySpec::relin_only().at_levels(vec![ctx.max_level()]);
+    let keys = kg.eval_key_set(&ctx, &spec, &mut rng);
+    let (_, _, k) = keys.iter().next().unwrap();
+    for compress in [true, false] {
+        let blob = encode_kskey(k, fp, compress);
+        let back = decode_kskey(&ctx, &blob, fp).unwrap();
+        assert_eq!(back.level, k.level);
+        assert_eq!(back.digit_positions, k.digit_positions);
+        for (j, ((b0, a0), (b1, a1))) in k.digits.iter().zip(&back.digits).enumerate() {
+            assert_eq!(b0, b1, "digit {j} b half (compress={compress})");
+            assert_eq!(a0, a1, "digit {j} a half (compress={compress})");
+        }
+        if compress {
+            assert_eq!(back.a_seeds, k.a_seeds, "seeds survive the compact encoding");
+        } else {
+            assert!(back.a_seeds.iter().all(Option::is_none));
+        }
+    }
+}
+
+#[test]
+fn eval_key_set_roundtrip_and_functional_equivalence() {
+    let (ctx, kg, mut rng, fp) = toy_fixture();
+    let slots = ctx.params.slots();
+    let spec = EvalKeySpec::serving(slots).with_rotations(&[3]).at_levels(vec![2, 3]);
+    let keys = kg.eval_key_set(&ctx, &spec, &mut rng);
+    let blob = encode_eval_key_set(&keys, fp, true);
+    let back = decode_eval_key_set(&CkksContext::new(CkksParams::toy()), &blob, fp).unwrap();
+    assert_eq!(back.len(), keys.len());
+    assert_eq!(back.rotations(), keys.rotations());
+    for (kind, level, k) in keys.iter() {
+        let rk = back.get(kind, level).expect("every key survives");
+        assert_eq!(rk.digits.len(), k.digits.len());
+        for (j, ((b0, a0), (b1, a1))) in k.digits.iter().zip(&rk.digits).enumerate() {
+            assert_eq!(b0, b1, "{kind:?} level {level} digit {j} b");
+            assert_eq!(a0, a1, "{kind:?} level {level} digit {j} a (seed re-expansion)");
+        }
+    }
+    // Functional check: an evaluator over the deserialized set computes
+    // bit-identically to one over the original.
+    let enc = kg.encryptor();
+    let z: Vec<Complex> = (0..slots)
+        .map(|i| Complex::new(0.04 * (i % 8) as f64, 0.0))
+        .collect();
+    let ct = enc.encrypt_slots(&ctx, &z, 3, &mut rng);
+    let ev_orig = Evaluator::new(CkksContext::new(CkksParams::toy()), Arc::new(keys));
+    let ev_back = Evaluator::new(CkksContext::new(CkksParams::toy()), Arc::new(back));
+    let a = ev_orig.mul(&ct, &ct).unwrap();
+    let b = ev_back.mul(&ct, &ct).unwrap();
+    assert_eq!(a, b, "HEMult over deserialized keys must match bit-for-bit");
+    let ra = ev_orig.rotate(&a, 3).unwrap();
+    let rb = ev_back.rotate(&b, 3).unwrap();
+    assert_eq!(ra, rb, "Rotate over deserialized keys must match bit-for-bit");
+}
+
+#[test]
+fn seed_compression_meets_the_size_bound() {
+    let (ctx, kg, mut rng, fp) = toy_fixture();
+    let slots = ctx.params.slots();
+    let spec = EvalKeySpec::serving(slots);
+    let keys = kg.eval_key_set(&ctx, &spec, &mut rng);
+    let compact = encode_eval_key_set(&keys, fp, true);
+    let naive = encode_eval_key_set(&keys, fp, false);
+    let ratio = compact.len() as f64 / naive.len() as f64;
+    assert!(
+        ratio <= 0.60,
+        "seed-compressed set must be <= 60% of naive ({} vs {} bytes, ratio {ratio:.3})",
+        compact.len(),
+        naive.len()
+    );
+    // And the compact form still decodes to a working set.
+    let back = decode_eval_key_set(&ctx, &compact, fp).unwrap();
+    assert_eq!(back.len(), keys.len());
+}
+
+#[test]
+fn undeclared_keys_stay_undeclared_after_roundtrip() {
+    let (ctx, kg, mut rng, fp) = toy_fixture();
+    let spec = EvalKeySpec::relin_only().at_levels(vec![3]);
+    let keys = kg.eval_key_set(&ctx, &spec, &mut rng);
+    let blob = encode_eval_key_set(&keys, fp, true);
+    let back = decode_eval_key_set(&ctx, &blob, fp).unwrap();
+    assert!(back.get(KeyKind::Relin, 3).is_ok());
+    assert!(back.get(KeyKind::Relin, 2).is_err(), "levels don't appear from thin air");
+    assert!(back.get(KeyKind::Galois(5), 3).is_err());
+}
+
+#[test]
+fn corrupted_blob_is_rejected() {
+    let (ctx, kg, mut rng, fp) = toy_fixture();
+    let enc = kg.encryptor();
+    let slots = ctx.params.slots();
+    let z = vec![Complex::new(0.1, 0.0); slots];
+    let ct = enc.encrypt_slots(&ctx, &z, 2, &mut rng);
+    let blob = encode_ciphertext(&ct, fp);
+    // Truncation anywhere must error, not panic.
+    for cut in [3usize, 10, blob.len() / 2, blob.len() - 1] {
+        assert!(
+            decode_ciphertext(&blob[..cut], fp).is_err(),
+            "truncation at {cut} must be rejected"
+        );
+    }
+    // Magic corruption.
+    let mut bad = blob.clone();
+    bad[0] ^= 0xFF;
+    assert!(matches!(decode_ciphertext(&bad, fp), Err(WireError::Corrupt(_))));
+    // Trailing garbage.
+    let mut long = blob;
+    long.push(0);
+    assert!(matches!(decode_ciphertext(&long, fp), Err(WireError::Corrupt(_))));
+}
+
+#[test]
+fn corrupted_frame_is_rejected() {
+    let msg = Message::KeysAck { keys: 42 };
+    let mut buf = Vec::new();
+    msg.encode().write_to(&mut buf).unwrap();
+    // Pristine bytes round trip.
+    let back = Frame::read_from(&mut buf.as_slice()).unwrap();
+    assert_eq!(Message::decode(&back).unwrap(), msg);
+    // Any single flipped payload bit fails the checksum.
+    for i in 4..buf.len() {
+        let mut bad = buf.clone();
+        bad[i] ^= 0x10;
+        assert!(
+            Frame::read_from(&mut bad.as_slice()).is_err(),
+            "flip at byte {i} must be caught"
+        );
+    }
+}
+
+#[test]
+fn version_mismatch_is_rejected() {
+    let params = CkksParams::toy();
+    let mut blob = encode_params(&params);
+    // The version field sits right after the 4-byte magic (LE u16).
+    blob[4] = blob[4].wrapping_add(1);
+    match decode_params(&blob) {
+        Err(WireError::Version { got, want }) => {
+            assert_eq!(want, fhecore::wire::WIRE_VERSION);
+            assert_ne!(got, want);
+        }
+        other => panic!("expected Version error, got {other:?}"),
+    }
+}
+
+#[test]
+fn fingerprint_mismatch_is_rejected() {
+    let (ctx, kg, mut rng, fp) = toy_fixture();
+    let enc = kg.encryptor();
+    let slots = ctx.params.slots();
+    let z = vec![Complex::new(0.2, 0.0); slots];
+    let ct = enc.encrypt_slots(&ctx, &z, 1, &mut rng);
+    let blob = encode_ciphertext(&ct, fp);
+    let other_fp = params_fingerprint(&CkksParams::medium());
+    match decode_ciphertext(&blob, other_fp) {
+        Err(WireError::Params { got, want }) => {
+            assert_eq!(got, fp);
+            assert_eq!(want, other_fp);
+        }
+        other => panic!("expected Params error, got {other:?}"),
+    }
+}
+
+#[test]
+fn eval_key_set_encoding_is_canonical() {
+    // Same logical set -> same bytes, regardless of hash-map iteration
+    // order (two independent generations with the same seed).
+    let params = CkksParams::toy();
+    let fp = params_fingerprint(&params);
+    let make = || {
+        let ctx = CkksContext::new(CkksParams::toy());
+        let mut rng = Pcg64::new(0xCAFE);
+        let kg = KeyGen::new(&ctx, &mut rng);
+        let spec = EvalKeySpec::serving(ctx.params.slots()).at_levels(vec![2, 3]);
+        kg.eval_key_set(&ctx, &spec, &mut rng)
+    };
+    let a = encode_eval_key_set(&make(), fp, true);
+    let b = encode_eval_key_set(&make(), fp, true);
+    assert_eq!(a, b, "canonical encoding must be deterministic");
+}
