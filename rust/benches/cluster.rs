@@ -1,0 +1,89 @@
+//! Cluster benchmark: pipelined out-of-order submission vs one-at-a-time
+//! synchronous ops over an in-process 2-shard ring, plus the routing
+//! microbench. Dumps `BENCH_cluster_pool.json` — the CI cluster smoke
+//! produces the companion `BENCH_cluster.json` against real processes
+//! through the gateway.
+
+use std::hint::black_box;
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fhecore::bench_harness::Bench;
+use fhecore::ckks::params::{CkksContext, CkksParams};
+use fhecore::ckks::{EvalKeySpec, Evaluator, KeyGen};
+use fhecore::cluster::{
+    demo_workload, run_pipelined, run_sync, ClusterClient, ClusterOptions, HashRing,
+};
+use fhecore::coordinator::ServeConfig;
+use fhecore::util::rng::Pcg64;
+use fhecore::wire::{serve, ServeOptions};
+
+fn spawn_shard(params: CkksParams) -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = ServeOptions {
+        params,
+        serve: ServeConfig {
+            fhec_workers: 2,
+            cuda_workers: 1,
+            max_batch: 4,
+            linger: Duration::from_micros(200),
+            max_queue: 64,
+        },
+        verbose: false,
+    };
+    let handle = std::thread::spawn(move || serve(listener, opts).expect("shard run"));
+    (addr, handle)
+}
+
+fn main() {
+    let mut bench = Bench::new("cluster_pool");
+
+    // Ring routing: pure hashing + binary search, no sockets.
+    let names: Vec<String> = (0..8).map(|i| format!("shard-{i}")).collect();
+    let ring = HashRing::new(&names, 128);
+    let mut key = 0u64;
+    bench.run("ring/route", || {
+        key = key.wrapping_add(1);
+        black_box(ring.route(black_box(key)));
+    });
+    bench.throughput("ring/route", 1.0);
+
+    // Two real loopback shards behind a ClusterClient.
+    let params = CkksParams::toy();
+    let (addr_a, shard_a) = spawn_shard(params.clone());
+    let (addr_b, shard_b) = spawn_shard(params.clone());
+    let shards = vec![addr_a, addr_b];
+
+    let ctx = CkksContext::new(params.clone());
+    let mut rng = Pcg64::new(0xC1A5);
+    let kg = KeyGen::new(&ctx, &mut rng);
+    let keys = Arc::new(kg.eval_key_set(
+        &ctx,
+        &EvalKeySpec::relin_only().with_rotations(&[3]),
+        &mut rng,
+    ));
+
+    let cluster = ClusterClient::connect(&shards, params.clone(), ClusterOptions::default())
+        .expect("cluster connect");
+    cluster.push_keys(&keys).expect("replicate keys");
+
+    let ev = Evaluator::new(CkksContext::new(params), keys.clone());
+    let wl = demo_workload(&ev, &kg.encryptor(), &mut rng, 16);
+
+    bench.run("pipelined/ops16_shards2", || {
+        black_box(run_pipelined(&cluster, &wl).expect("pipelined"));
+    });
+    bench.throughput("pipelined/ops16_shards2", 16.0);
+    bench.run("sync/ops16_shards2", || {
+        black_box(run_sync(&cluster, &wl).expect("sync"));
+    });
+    bench.throughput("sync/ops16_shards2", 16.0);
+
+    cluster.shutdown().expect("shutdown shards");
+    let _ = shard_a.join();
+    let _ = shard_b.join();
+
+    bench.write_json().expect("bench json dump");
+}

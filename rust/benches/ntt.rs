@@ -36,5 +36,47 @@ fn main() {
     bench.run("four_step_ref/n1024_r32", || {
         black_box(t.forward_4step_reference(black_box(&a), 32));
     });
+
+    // Iterative butterflies vs the limb-batched MLT formulation — the
+    // re-pointed `forward`/`inverse` pair vs its bit-exactness oracle.
+    // `*_mlt_batch8` runs 8 same-modulus polys through ONE kernel call
+    // per matrix pass (divide its time by 8 for the per-poly cost).
+    let n = 1 << 12;
+    let q = ntt_primes(n, 58, 1)[0];
+    let t = NttTable::new(n, q);
+    let polys: Vec<Vec<u64>> = (0..8u64)
+        .map(|p| (0..n as u64).map(|i| (i * 2654435761 + p * 977) % q).collect())
+        .collect();
+    let n1 = NttTable::balanced_split(n);
+    let _ = t.plan_dir(n1, false); // warm both direction plans
+    let _ = t.plan_dir(n1, true);
+    let mut buf = polys[0].clone();
+    bench.run("forward_iterative/n4096", || {
+        buf.copy_from_slice(&polys[0]);
+        t.forward_iterative(black_box(&mut buf));
+    });
+    bench.run("forward_mlt/n4096", || {
+        buf.copy_from_slice(&polys[0]);
+        t.forward(black_box(&mut buf));
+    });
+    let mut batch = polys.clone();
+    bench.run("forward_mlt_batch8/n4096", || {
+        for (b, p) in batch.iter_mut().zip(&polys) {
+            b.copy_from_slice(p);
+        }
+        let mut refs: Vec<&mut [u64]> =
+            batch.iter_mut().map(|p| p.as_mut_slice()).collect();
+        t.forward_batch(black_box(&mut refs));
+    });
+    bench.throughput("forward_mlt_batch8/n4096", (8 * n) as f64);
+    bench.run("inverse_mlt_batch8/n4096", || {
+        for (b, p) in batch.iter_mut().zip(&polys) {
+            b.copy_from_slice(p);
+        }
+        let mut refs: Vec<&mut [u64]> =
+            batch.iter_mut().map(|p| p.as_mut_slice()).collect();
+        t.inverse_batch(black_box(&mut refs));
+    });
+
     bench.write_json().expect("bench json dump");
 }

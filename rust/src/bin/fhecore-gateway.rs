@@ -1,0 +1,26 @@
+//! `fhecore-gateway` — the standalone sharded gateway fronting N
+//! `fhecore-serve` backends over the wire protocol.
+//!
+//! Serve (blocks until a client sends Shutdown, which is fanned out to
+//! every shard first):
+//!
+//! ```text
+//! fhecore-gateway --listen 127.0.0.1:7050 \
+//!     --shards 127.0.0.1:7051,127.0.0.1:7052 --params toy \
+//!     [--window 16] [--vnodes 128] [--connect-timeout 15] [--verbose]
+//! ```
+//!
+//! Downstream it speaks the exact protocol of a single `fhecore-serve`,
+//! so `fhecore client quickstart --connect <gateway>` and
+//! `fhecore cluster quickstart --connect <gateway>` both run unchanged.
+
+use fhecore::util::cli::Args;
+use fhecore::wire::cli;
+
+fn main() {
+    let mut args = Args::from_env();
+    // The binary is serve-only; the subcommand grammar expects the mode
+    // as the first positional.
+    args.positional.insert(0, "serve".to_string());
+    std::process::exit(cli::run_cluster(&args));
+}

@@ -2,14 +2,24 @@
 //!
 //! Three implementations coexist, matching the paper's framing:
 //!
-//! * [`NttTable::forward`]/[`NttTable::inverse`] — the iterative O(N log N)
-//!   Cooley-Tukey / Gentleman-Sande pair with Harvey/Shoup butterflies.
-//!   This is the software hot path (what CUDA cores run in FIDESlib).
-//! * [`NttTable::forward_4step`] — the Bailey 4-step matrix formulation
-//!   (Eq. 2/4): the layout TensorFHE/WarpDrive/FHECore map onto matrix
-//!   units. Bit-identical output to `forward`. The matrix passes execute
-//!   on the shared MLT engine via a cached [`FourStepPlan`]
-//!   (Vandermonde/twiddle tables built once per (table, N1));
+//! * [`NttTable::forward`]/[`NttTable::inverse`] — the natural-order
+//!   entry points. They ride the **limb-batched MLT formulation** (see
+//!   below) through [`NttTable::forward_batch`]/[`NttTable::inverse_batch`],
+//!   which accept any number of same-modulus polynomials and execute both
+//!   matrix passes of the Bailey 4-step decomposition as one
+//!   `ModLinKernel` call over the concatenated column blocks — the
+//!   schedule TensorFHE/WarpDrive/FHECore map onto matrix units.
+//! * [`NttTable::forward_iterative`]/[`NttTable::inverse_iterative`] — the
+//!   iterative O(N log N) Cooley-Tukey / Gentleman-Sande pair with
+//!   Harvey/Shoup butterflies, kept as the bit-exactness oracle for the
+//!   MLT path (and still the engine behind the bit-reversed
+//!   [`NttTable::forward_br`]/[`NttTable::inverse_br`] pair that
+//!   `RnsPoly::to_eval`/`to_coeff` run per limb — what CUDA cores run in
+//!   FIDESlib).
+//! * [`NttTable::forward_4step`] — the single-poly 4-step wrapper
+//!   (Eq. 2/4) over the batch core. The matrix passes execute on the
+//!   shared MLT engine via a cached [`FourStepPlan`] (Vandermonde/twiddle
+//!   tables built once per (table, N1, direction));
 //!   [`NttTable::forward_4step_reference`] keeps the uncached original.
 //! * `ntt_naive` (tests) — the O(N^2) definition, the ground truth.
 //!
@@ -29,10 +39,10 @@ use super::prime::root_of_unity;
 
 /// Cached constants for one `N = N1 x N2` factorization of the 4-step
 /// NTT: the two Vandermonde matrices compiled as [`ModLinKernel`]s (Shoup
-/// pairs + lazy accumulation), plus the step-2 twiddle matrix and the
-/// negacyclic pre-twist powers with their Shoup companions. Built once
-/// per (table, N1) and shared across calls — the seed recomputed every
-/// `m.pow` per element per call.
+/// pairs + lazy accumulation), plus the step-2 twiddle matrix with Shoup
+/// companions. Built once per (table, N1, direction) and shared across
+/// calls — the seed recomputed every `m.pow` per element per call. The
+/// inverse-direction plan holds the same structures over `w^-1`.
 #[derive(Debug)]
 pub struct FourStepPlan {
     pub n1: usize,
@@ -46,7 +56,9 @@ pub struct FourStepPlan {
     tw_shoup: Vec<u64>,
 }
 
-type PlanCache = Arc<Mutex<HashMap<usize, Arc<FourStepPlan>>>>;
+/// Keyed by `(N1, inverse)` — forward and inverse directions cache
+/// independent Vandermonde/twiddle sets.
+type PlanCache = Arc<Mutex<HashMap<(usize, bool), Arc<FourStepPlan>>>>;
 
 /// Negacyclic pre-twist `psi^j` with Shoup words — N1-independent, so
 /// cached once per table (not per plan) and shared across all splits.
@@ -71,10 +83,13 @@ pub struct NttTable {
     n_inv_shoup: u64,
     /// 2N-th root used to build all tables (kept for the 4-step path).
     pub psi: u64,
-    /// Lazily built [`FourStepPlan`]s keyed by N1 (shared across clones).
+    /// Lazily built [`FourStepPlan`]s keyed by (N1, direction) (shared
+    /// across clones).
     plans: PlanCache,
     /// Lazily built pre-twist table (shared across plans and clones).
     twist: Arc<OnceLock<TwistTable>>,
+    /// Inverse post-twist `n^-1 * psi^-j` (shared like `twist`).
+    itwist: Arc<OnceLock<TwistTable>>,
 }
 
 fn bitrev(x: usize, bits: u32) -> usize {
@@ -128,16 +143,45 @@ impl NttTable {
             psi,
             plans: Arc::new(Mutex::new(HashMap::new())),
             twist: Arc::new(OnceLock::new()),
+            itwist: Arc::new(OnceLock::new()),
         }
     }
 
-    /// In-place forward negacyclic NTT (natural in, natural out).
+    /// The balanced `N1 ~ sqrt(N)` split the batch entry points default
+    /// to — it minimizes the cached plan footprint (O(N1^2 + N2^2)).
+    pub fn balanced_split(n: usize) -> usize {
+        1usize << (n.trailing_zeros() / 2)
+    }
+
+    /// In-place forward negacyclic NTT (natural in, natural out), riding
+    /// the limb-batched MLT formulation (batch of one). Bit-identical to
+    /// [`Self::forward_iterative`], the oracle.
+    pub fn forward(&self, a: &mut [u64]) {
+        self.forward_batch(&mut [a]);
+    }
+
+    /// Forward-transform a batch of same-modulus polynomials through the
+    /// 4-step decomposition, with each matrix pass executed as **one**
+    /// [`ModLinKernel`] call over the concatenation of every polynomial's
+    /// column block — the limb-batched schedule the MLT engine tiles and
+    /// parallelizes across `(row, tile)` pairs.
+    pub fn forward_batch(&self, polys: &mut [&mut [u64]]) {
+        self.dft4_batch(polys, Self::balanced_split(self.n), false);
+    }
+
+    /// [`Self::forward_batch`] with an explicit `N1` split.
+    pub fn forward_batch_with(&self, polys: &mut [&mut [u64]], n1: usize) {
+        self.dft4_batch(polys, n1, false);
+    }
+
+    /// The iterative Cooley-Tukey path (natural in, natural out) — the
+    /// bit-exactness oracle for the MLT-backed [`Self::forward`].
     ///
-    /// Cooley-Tukey decimation-in-time with the psi-fold (Longa-Naehrig):
-    /// the negacyclic twist is folded into the twiddle table so no
+    /// Decimation-in-time with the psi-fold (Longa-Naehrig): the
+    /// negacyclic twist is folded into the twiddle table so no
     /// pre-scaling pass is needed. The body produces the bit-reversed
     /// spectrum; a final permutation restores natural order.
-    pub fn forward(&self, a: &mut [u64]) {
+    pub fn forward_iterative(&self, a: &mut [u64]) {
         self.forward_br(a);
         bitrev_permute(a);
     }
@@ -172,8 +216,28 @@ impl NttTable {
         }
     }
 
-    /// In-place inverse negacyclic NTT (natural in, natural out).
+    /// In-place inverse negacyclic NTT (natural in, natural out), riding
+    /// the limb-batched MLT formulation (batch of one). Bit-identical to
+    /// [`Self::inverse_iterative`], the oracle.
     pub fn inverse(&self, a: &mut [u64]) {
+        self.inverse_batch(&mut [a]);
+    }
+
+    /// Inverse-transform a batch of same-modulus polynomials:
+    /// `a[j] = n^-1 psi^-j sum_k a_hat[k] w^-jk`, i.e. the 4-step DFT
+    /// over `w^-1` followed by the cached `n^-1 psi^-j` post-twist.
+    pub fn inverse_batch(&self, polys: &mut [&mut [u64]]) {
+        self.dft4_batch(polys, Self::balanced_split(self.n), true);
+    }
+
+    /// [`Self::inverse_batch`] with an explicit `N1` split.
+    pub fn inverse_batch_with(&self, polys: &mut [&mut [u64]], n1: usize) {
+        self.dft4_batch(polys, n1, true);
+    }
+
+    /// The iterative Gentleman-Sande path (natural in, natural out) — the
+    /// bit-exactness oracle for the MLT-backed [`Self::inverse`].
+    pub fn inverse_iterative(&self, a: &mut [u64]) {
         bitrev_permute(a);
         self.inverse_br(a);
     }
@@ -210,28 +274,34 @@ impl NttTable {
         }
     }
 
-    /// Build (or fetch) the cached 4-step plan for a given N1.
+    /// Build (or fetch) the cached forward 4-step plan for a given N1.
     ///
     /// A plan holds the dense N1xN1 and N2xN2 Vandermonde kernels, so its
     /// footprint is O(N1^2 + N2^2) u64s — minimized by balanced splits
     /// (N1 ~ sqrt(N)). Strongly skewed splits of large rings (e.g.
     /// N1 = 16 at N = 2^16) materialize a huge N2^2 matrix; prefer the
-    /// iterative [`Self::forward`] or a balanced split there.
+    /// iterative [`Self::forward_iterative`] or a balanced split there.
     pub fn four_step_plan(&self, n1: usize) -> Arc<FourStepPlan> {
+        self.plan_dir(n1, false)
+    }
+
+    /// Build (or fetch) the cached plan for one `(N1, direction)` pair.
+    pub fn plan_dir(&self, n1: usize, inverse: bool) -> Arc<FourStepPlan> {
         let n = self.n;
         let n2 = n / n1;
         assert_eq!(n1 * n2, n, "n1 must divide n");
         let mut cache = self.plans.lock().unwrap();
         cache
-            .entry(n1)
-            .or_insert_with(|| Arc::new(self.build_plan(n1, n2)))
+            .entry((n1, inverse))
+            .or_insert_with(|| Arc::new(self.build_plan(n1, n2, inverse)))
             .clone()
     }
 
-    fn build_plan(&self, n1: usize, n2: usize) -> FourStepPlan {
+    fn build_plan(&self, n1: usize, n2: usize, inverse: bool) -> FourStepPlan {
         let m = self.m;
         let q = m.value();
-        let w = m.mul(self.psi, self.psi); // w_N = psi^2
+        let w_fwd = m.mul(self.psi, self.psi); // w_N = psi^2
+        let w = if inverse { m.inv(w_fwd) } else { w_fwd };
         let w1 = m.pow(w, n2 as u64); // w_N1
         let w2 = m.pow(w, n1 as u64); // w_N2
 
@@ -293,56 +363,124 @@ impl NttTable {
         })
     }
 
+    /// Inverse post-twist `n^-1 * psi^-j` (built once per table).
+    fn itwist_table(&self) -> &TwistTable {
+        self.itwist.get_or_init(|| {
+            let m = self.m;
+            let ipsi = m.inv(self.psi);
+            let mut pows = Vec::with_capacity(self.n);
+            let mut cur = self.n_inv;
+            for _ in 0..self.n {
+                pows.push(cur);
+                cur = m.mul(cur, ipsi);
+            }
+            let shoup = pows.iter().map(|&p| m.shoup(p)).collect();
+            TwistTable { pows, shoup }
+        })
+    }
+
     /// The Bailey 4-step NTT (Eq. 2/4): reshape N = N1 x N2, matrix pass,
     /// twiddle pass, matrix pass, transpose. This is the formulation that
-    /// maps onto Tensor Cores / FHECore; output is identical to `forward`.
-    ///
-    /// Both matrix passes run on the shared MLT engine through the cached
-    /// [`FourStepPlan`] — the same kernel that executes base conversion —
-    /// and the final transpose is folded into the step-3 orientation
-    /// (`D^T = W2 @ C^T` flattens directly into the output layout).
+    /// maps onto Tensor Cores / FHECore; output is identical to
+    /// [`Self::forward_iterative`]. Single-poly wrapper over the batch
+    /// core ([`Self::forward_batch_with`]).
     pub fn forward_4step(&self, a: &[u64], n1: usize) -> Vec<u64> {
+        let mut out = a.to_vec();
+        self.forward_batch_with(&mut [&mut out], n1);
+        out
+    }
+
+    /// The limb-batched 4-step DFT core behind every MLT-path entry
+    /// point. Both matrix passes run on the shared MLT engine through the
+    /// cached [`FourStepPlan`] — the same kernel that executes base
+    /// conversion — with all `B` polynomials' column blocks concatenated
+    /// into a single `apply` per pass, and the final transpose folded
+    /// into the step-3 orientation (`D^T = W2 @ C^T` flattens directly
+    /// into the output layout). `inverse` swaps the Vandermonde base to
+    /// `w^-1`, drops the pre-twist and applies the `n^-1 psi^-j`
+    /// post-twist instead.
+    fn dft4_batch(&self, polys: &mut [&mut [u64]], n1: usize, inverse: bool) {
+        if polys.is_empty() {
+            return;
+        }
         let n = self.n;
-        let plan = self.four_step_plan(n1);
-        let n2 = plan.n2;
+        debug_assert!(polys.iter().all(|p| p.len() == n), "poly length != N");
+        let plan = self.plan_dir(n1, inverse);
+        let (n1, n2) = (plan.n1, plan.n2);
+        let b = polys.len();
+        let (bn1, bn2) = (b * n1, b * n2);
         let m = self.m;
 
-        // Negacyclic pre-twist: a[j] *= psi^j (cached Shoup pairs).
-        let twist = self.twist_table();
-        let mut scaled = vec![0u64; n];
-        for (j, (s, &x)) in scaled.iter_mut().zip(a).enumerate() {
-            *s = m.mul_shoup(x, twist.pows[j], twist.shoup[j]);
+        // Reshape every poly into its [N1 x N2] block of X (+ the
+        // negacyclic pre-twist a[j] *= psi^j on the forward direction).
+        let mut xrows = vec![0u64; n1 * bn2];
+        for (p, poly) in polys.iter().enumerate() {
+            for j1 in 0..n1 {
+                let src = &poly[j1 * n2..(j1 + 1) * n2];
+                let dst = &mut xrows[j1 * bn2 + p * n2..][..n2];
+                if inverse {
+                    dst.copy_from_slice(src);
+                } else {
+                    let tw = self.twist_table();
+                    for (j2, (d, &x)) in dst.iter_mut().zip(src).enumerate() {
+                        let j = j1 * n2 + j2;
+                        *d = m.mul_shoup(x, tw.pows[j], tw.shoup[j]);
+                    }
+                }
+            }
         }
 
-        // Step 1: B[k1, j2] = sum_j1 W1[k1, j1] A[j1, j2]  (MLT, N2 cols).
-        let mut b = vec![0u64; n];
+        // Step 1: B = W1 @ X — one MLT call over all B*N2 columns.
+        let mut brows = vec![0u64; n1 * bn2];
         {
-            let x: Vec<&[u64]> = scaled.chunks(n2).collect();
-            let mut out: Vec<&mut [u64]> = b.chunks_mut(n2).collect();
+            let x: Vec<&[u64]> = xrows.chunks(bn2).collect();
+            let mut out: Vec<&mut [u64]> = brows.chunks_mut(bn2).collect();
             plan.w1.apply(&x, &mut out);
         }
 
-        // Step 2: twiddle C[k1, j2] = B[k1, j2] * w^(j2 k1) (cached).
-        for (c, (&t, &ts)) in b.iter_mut().zip(plan.tw.iter().zip(&plan.tw_shoup)) {
-            *c = m.mul_shoup(*c, t, ts);
-        }
-
-        // Step 3 + 4 fused: D^T = W2 @ C^T. Row k2 of D^T is
-        // out[k2*N1 .. (k2+1)*N1], i.e. out[k1 + k2*N1] = D[k1, k2] —
-        // exactly the transpose-flatten of the classic step 4.
-        let mut ct = vec![0u64; n]; // C^T: [N2 x N1]
+        // Step 2: twiddle C[k1, j2] = B[k1, j2] * w^(j2 k1) (cached, the
+        // same N2-long row serves every poly's block).
         for k1 in 0..n1 {
-            for j2 in 0..n2 {
-                ct[j2 * n1 + k1] = b[k1 * n2 + j2];
+            let row = &mut brows[k1 * bn2..(k1 + 1) * bn2];
+            let tws = &plan.tw[k1 * n2..(k1 + 1) * n2];
+            let tss = &plan.tw_shoup[k1 * n2..(k1 + 1) * n2];
+            for blk in row.chunks_mut(n2) {
+                for ((x, &t), &ts) in blk.iter_mut().zip(tws).zip(tss) {
+                    *x = m.mul_shoup(*x, t, ts);
+                }
             }
         }
-        let mut out = vec![0u64; n];
-        {
-            let x: Vec<&[u64]> = ct.chunks(n1).collect();
-            let mut rows: Vec<&mut [u64]> = out.chunks_mut(n1).collect();
-            plan.w2.apply(&x, &mut rows);
+
+        // Per-poly transpose: C^T[j2][p*N1 + k1] = C[k1][p*N2 + j2].
+        let mut crows = vec![0u64; n2 * bn1];
+        for k1 in 0..n1 {
+            for p in 0..b {
+                for j2 in 0..n2 {
+                    crows[j2 * bn1 + p * n1 + k1] = brows[k1 * bn2 + p * n2 + j2];
+                }
+            }
         }
-        out
+
+        // Step 3 + 4 fused: D^T = W2 @ C^T — row k2 of each poly's block
+        // is out[k2*N1 .. (k2+1)*N1], the transpose-flatten of step 4.
+        let mut orows = vec![0u64; n2 * bn1];
+        {
+            let x: Vec<&[u64]> = crows.chunks(bn1).collect();
+            let mut out: Vec<&mut [u64]> = orows.chunks_mut(bn1).collect();
+            plan.w2.apply(&x, &mut out);
+        }
+        for (p, poly) in polys.iter_mut().enumerate() {
+            for k2 in 0..n2 {
+                poly[k2 * n1..(k2 + 1) * n1]
+                    .copy_from_slice(&orows[k2 * bn1 + p * n1..][..n1]);
+            }
+            if inverse {
+                let itw = self.itwist_table();
+                for (j, x) in poly.iter_mut().enumerate() {
+                    *x = m.mul_shoup(*x, itw.pows[j], itw.shoup[j]);
+                }
+            }
+        }
     }
 
     /// The original uncached 4-step formulation (per-element `m.pow`
@@ -477,9 +615,52 @@ mod tests {
             let q = ntt_primes(n, 50, 1)[0];
             let t = NttTable::new(n, q);
             let a = rand_poly(n, q, 0xABCD);
+            let want = naive_negacyclic(&a, t.psi, q);
+            // The MLT-backed default path and the iterative oracle must
+            // both reproduce the O(N^2) definition.
             let mut got = a.clone();
             t.forward(&mut got);
-            assert_eq!(got, naive_negacyclic(&a, t.psi, q), "n={n}");
+            assert_eq!(got, want, "mlt n={n}");
+            let mut got_it = a.clone();
+            t.forward_iterative(&mut got_it);
+            assert_eq!(got_it, want, "iterative n={n}");
+        }
+    }
+
+    #[test]
+    fn batched_mlt_matches_iterative_bit_for_bit() {
+        for n in [16usize, 128, 1024] {
+            let q = ntt_primes(n, 55, 1)[0];
+            let t = NttTable::new(n, q);
+            let polys: Vec<Vec<u64>> =
+                (0..5).map(|i| rand_poly(n, q, 0xB00 + i as u64)).collect();
+
+            // Forward: one batched MLT call vs per-poly butterflies.
+            let mut batch: Vec<Vec<u64>> = polys.clone();
+            {
+                let mut refs: Vec<&mut [u64]> =
+                    batch.iter_mut().map(|p| p.as_mut_slice()).collect();
+                t.forward_batch(&mut refs);
+            }
+            for (p, poly) in polys.iter().enumerate() {
+                let mut want = poly.clone();
+                t.forward_iterative(&mut want);
+                assert_eq!(batch[p], want, "forward n={n} poly={p}");
+            }
+
+            // Inverse: batched MLT must undo it (and match the oracle).
+            let spectra = batch.clone();
+            {
+                let mut refs: Vec<&mut [u64]> =
+                    batch.iter_mut().map(|p| p.as_mut_slice()).collect();
+                t.inverse_batch(&mut refs);
+            }
+            assert_eq!(batch, polys, "batched roundtrip n={n}");
+            for (p, spec) in spectra.iter().enumerate() {
+                let mut want = spec.clone();
+                t.inverse_iterative(&mut want);
+                assert_eq!(batch[p], want, "inverse n={n} poly={p}");
+            }
         }
     }
 
@@ -515,7 +696,7 @@ mod tests {
         let t = NttTable::new(n, q);
         let a = rand_poly(n, q, 99);
         let mut iterative = a.clone();
-        t.forward(&mut iterative);
+        t.forward_iterative(&mut iterative);
         for n1 in [2usize, 4, 16, 64] {
             assert_eq!(t.forward_4step(&a, n1), iterative, "n1={n1}");
         }

@@ -1,0 +1,236 @@
+//! The `fhecore-gateway` engine room: a wire-protocol server that fronts
+//! N `fhecore-serve` shards through one [`ClusterClient`].
+//!
+//! To a downstream client the gateway **is** a shard — same `Hello`
+//! handshake, same `PushKeys`/`OpRequest`/`Metrics`/`Shutdown` surface —
+//! so `RemoteEvaluator`, `ClusterClient` and every example pipeline run
+//! against it unchanged. Behind it:
+//!
+//! * `PushKeys` blobs are **replicated verbatim** to every shard, each
+//!   `KeysAck` fingerprint is compared against the pushed bytes, and a
+//!   single ack (count + fingerprint) goes back downstream.
+//! * Each `OpRequest` is routed over the consistent-hash ring **by the
+//!   upstream request id** (so placement is a deterministic function of
+//!   the client-visible id), pipelined into the owning shard's window,
+//!   and answered in completion order — a forwarder thread per in-flight
+//!   op carries the shard's response back under the upstream id.
+//! * `MetricsReq` returns the summed [`MetricsSnapshot`] across shards.
+//! * `Shutdown` fans out to every shard, then stops the gateway itself.
+//!
+//! Backpressure composes: when the owning shard's window is full the
+//! gateway's reader blocks on `submit` (TCP pushback upstream), and
+//! shard-side `Busy` bounces are absorbed by the cluster client's
+//! capped-exponential retries.
+
+use std::net::{SocketAddr, TcpListener, TcpStream};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::mpsc::{channel, Sender as MpscSender};
+use std::sync::Arc;
+
+use super::pool::{ClusterClient, ClusterError, ClusterOptions};
+use crate::ckks::params::CkksParams;
+use crate::wire::protocol::error_code;
+use crate::wire::server::{hello_reply, read_inbound, writer_loop, Inbound};
+use crate::wire::{params_fingerprint, Message};
+
+#[derive(Debug, Clone)]
+pub struct GatewayOptions {
+    pub params: CkksParams,
+    /// Shard addresses — the ring names; every gateway (and any client
+    /// routing directly) must use the identical list.
+    pub shards: Vec<String>,
+    pub cluster: ClusterOptions,
+    pub verbose: bool,
+}
+
+struct GatewayShared {
+    fingerprint: u64,
+    cluster: ClusterClient,
+    stop: AtomicBool,
+    verbose: bool,
+}
+
+/// Map a cluster-level failure onto a wire error frame for `op_id` —
+/// shard-typed codes pass through, everything else (all replicas
+/// down...) is a serving failure. `ClusterError::Busy` is handled
+/// before this: it stays a typed `Message::Busy`, never an error.
+fn cluster_error_message(op_id: u64, e: ClusterError) -> Message {
+    let code = match &e {
+        ClusterError::Remote { code, .. } if *code != 0 => *code,
+        _ => error_code::STOPPED,
+    };
+    Message::Error { id: op_id, code, detail: e.to_string() }
+}
+
+/// Run the gateway on an already-bound listener until a client sends
+/// `Shutdown` (which is fanned out to every shard first).
+pub fn serve_gateway(listener: TcpListener, opts: GatewayOptions) -> std::io::Result<()> {
+    let addr = listener.local_addr()?;
+    let cluster =
+        ClusterClient::connect(&opts.shards, opts.params.clone(), opts.cluster.clone())
+            .map_err(|e| {
+                std::io::Error::new(
+                    std::io::ErrorKind::ConnectionRefused,
+                    format!("cannot reach shards: {e}"),
+                )
+            })?;
+    let shared = Arc::new(GatewayShared {
+        fingerprint: params_fingerprint(&opts.params),
+        cluster,
+        stop: AtomicBool::new(false),
+        verbose: opts.verbose,
+    });
+    loop {
+        let (stream, peer) = match listener.accept() {
+            Ok(x) => x,
+            Err(e) => {
+                if shared.stop.load(Ordering::SeqCst) {
+                    break;
+                }
+                eprintln!("fhecore-gateway: accept failed: {e}");
+                continue;
+            }
+        };
+        if shared.stop.load(Ordering::SeqCst) {
+            break; // the wake-up connection from a shutting-down handler
+        }
+        if shared.verbose {
+            println!("fhecore-gateway: connection from {peer}");
+        }
+        let shared = shared.clone();
+        std::thread::spawn(move || handle_conn(stream, shared, addr));
+    }
+    Ok(())
+}
+
+fn handle_conn(stream: TcpStream, shared: Arc<GatewayShared>, listen_addr: SocketAddr) {
+    let _ = stream.set_nodelay(true);
+    let reader_stream = match stream.try_clone() {
+        Ok(s) => s,
+        Err(e) => {
+            eprintln!("fhecore-gateway: cannot split stream: {e}");
+            return;
+        }
+    };
+    let (tx, rx) = channel::<Message>();
+    let writer = std::thread::spawn(move || writer_loop(stream, rx));
+    let shutdown = reader_loop(reader_stream, &shared, &tx);
+    drop(tx);
+    let _ = writer.join();
+    if shutdown {
+        if shared.verbose {
+            println!("fhecore-gateway: shutdown requested; stopping shards");
+        }
+        let _ = shared.cluster.shutdown();
+        // Unblock the accept loop so `serve_gateway` can return.
+        let _ = TcpStream::connect(listen_addr);
+    }
+}
+
+fn reader_loop(
+    stream: TcpStream,
+    shared: &Arc<GatewayShared>,
+    tx: &MpscSender<Message>,
+) -> bool {
+    let mut r = std::io::BufReader::new(stream);
+    let send = |m: Message| {
+        let _ = tx.send(m);
+    };
+    loop {
+        let msg = match read_inbound(&mut r) {
+            Inbound::Msg(m) => m,
+            Inbound::Gone => return false, // EOF / peer gone
+            Inbound::Garbled(err) => {
+                send(err);
+                continue;
+            }
+            Inbound::Fatal(err) => {
+                send(err);
+                return false;
+            }
+        };
+        match msg {
+            Message::Hello { version, fingerprint } => {
+                match hello_reply(version, fingerprint, shared.fingerprint, "gateway") {
+                    Ok(ack) => send(ack),
+                    Err(err) => {
+                        send(err);
+                        return false;
+                    }
+                }
+            }
+            Message::PushKeys { blob } => match shared.cluster.push_keys_blob(&blob) {
+                Ok(keys) => {
+                    if shared.verbose {
+                        println!(
+                            "fhecore-gateway: replicated key set ({keys} keys) to {} shards",
+                            shared.cluster.live_shards().len()
+                        );
+                    }
+                    send(Message::KeysAck {
+                        keys,
+                        fingerprint: crate::wire::fnv1a64(&blob),
+                    });
+                }
+                Err(e) => send(Message::Error {
+                    id: 0,
+                    code: error_code::DECODE,
+                    detail: format!("key replication failed: {e}"),
+                }),
+            },
+            Message::OpRequest { id, op, ct, ct2 } => {
+                // Route by the upstream id (deterministic placement);
+                // block here if the owner's window is full — that TCP
+                // pushback *is* the gateway's admission control.
+                match shared.cluster.submit_keyed(id, &op, &ct, ct2.as_ref()) {
+                    Ok(ticket) => {
+                        let shared = shared.clone();
+                        let tx = tx.clone();
+                        std::thread::spawn(move || {
+                            let msg = match shared.cluster.wait(ticket) {
+                                Ok(o) => Message::OpResponse {
+                                    id,
+                                    result: o.result,
+                                    service_us: o.service_us,
+                                    sim_base_us: o.sim_base_us,
+                                    sim_fhec_us: o.sim_fhec_us,
+                                    batch_size: o.batch_size,
+                                },
+                                // Exhausted Busy retries are still
+                                // transient load, not failure: keep the
+                                // typed backpressure signal so a
+                                // downstream client retries on its own
+                                // schedule instead of aborting.
+                                Err(ClusterError::Busy { depth, .. }) => {
+                                    Message::Busy { id, depth }
+                                }
+                                Err(e) => cluster_error_message(id, e),
+                            };
+                            let _ = tx.send(msg);
+                        });
+                    }
+                    Err(e) => send(cluster_error_message(id, e)),
+                }
+            }
+            Message::MetricsReq => match shared.cluster.metrics() {
+                Ok(m) => send(Message::MetricsResp(m.total())),
+                Err(e) => send(Message::Error {
+                    id: 0,
+                    code: error_code::STOPPED,
+                    detail: e.to_string(),
+                }),
+            },
+            Message::Shutdown => {
+                shared.stop.store(true, Ordering::SeqCst);
+                return true;
+            }
+            other => {
+                send(Message::Error {
+                    id: 0,
+                    code: error_code::BAD_REQUEST,
+                    detail: format!("unexpected message tag {:#04x}", other.tag()),
+                });
+            }
+        }
+    }
+}

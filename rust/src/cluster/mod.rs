@@ -1,0 +1,134 @@
+//! The cluster subsystem: sharded serving over the wire layer.
+//!
+//! PR 3 gave the repo a single-node TCP front (`wire::serve`) and a
+//! synchronous `RemoteEvaluator`. This module is the scale-out layer the
+//! ROADMAP's "millions of users" north star needs — once per-device
+//! kernel throughput is fixed, end-to-end FHE serving is bounded by how
+//! work is distributed across devices and how much of it is kept in
+//! flight (cf. Cheddar, arXiv:2407.13055):
+//!
+//! * [`ring`] — a consistent-hash ring with virtual nodes and
+//!   deterministic FNV+SplitMix64 placement: any process building the
+//!   ring from the same shard list routes every session/ciphertext id
+//!   identically, and removing one of K shards remaps only the ~1/K of
+//!   keys it owned.
+//! * [`pool`] — [`ClusterClient`], the pipelined out-of-order client: a
+//!   window of in-flight ops per shard, protocol-v2 id-matched
+//!   completion, capped-exponential `Busy` backoff (shared schedule with
+//!   `RemoteEvaluator`), and failover of unfinished ops to the next ring
+//!   replica when a shard connection dies. Evaluation keys are
+//!   **replicated** to every shard with per-shard blob-fingerprint
+//!   verification, which is exactly what makes failover safe; metrics
+//!   aggregate across shards ([`ClusterMetrics`]).
+//! * [`gateway`] — `fhecore-gateway`: a wire-protocol server fronting N
+//!   `fhecore-serve` backends. Downstream it is indistinguishable from a
+//!   single shard, so every existing pipeline (examples, CLI quickstart,
+//!   `RemoteEvaluator`) runs unchanged against one node or a cluster.
+//!
+//! The demo workload helpers at the bottom drive the same mixed
+//! FHEC/CUDA-class op list through a cluster synchronously and
+//! pipelined, with bit-exactness checked against a local `Evaluator` —
+//! shared by `fhecore cluster quickstart`, the `cluster` bench and the
+//! loopback integration tests.
+
+pub mod gateway;
+pub mod pool;
+pub mod ring;
+
+pub use gateway::{serve_gateway, GatewayOptions};
+pub use pool::{
+    ClusterClient, ClusterError, ClusterMetrics, ClusterOptions, FailoverEvent, OpOutcome,
+};
+pub use ring::HashRing;
+
+use crate::ckks::{Ciphertext, Encryptor, Evaluator};
+use crate::util::rng::Pcg64;
+use crate::wire::WireOp;
+
+/// A deterministic mixed-class op list with locally computed expected
+/// results: `Square` / `Rotate(3)` (FHEC lane) interleaved with `Add` /
+/// `Rescale` (CUDA lane), each over a fresh encrypted input.
+pub struct DemoWorkload {
+    pub ops: Vec<WireOp>,
+    pub inputs: Vec<Ciphertext>,
+    pub ct2: Vec<Option<Ciphertext>>,
+    /// What a local `Evaluator` over the identical key set produces —
+    /// remote results must match **bit for bit**.
+    pub expected: Vec<Ciphertext>,
+}
+
+/// Build an `n_ops`-long workload. `ev` must hold the relin key and the
+/// rotation-by-3 key at the top level.
+pub fn demo_workload(
+    ev: &Evaluator,
+    enc: &Encryptor,
+    rng: &mut Pcg64,
+    n_ops: usize,
+) -> DemoWorkload {
+    use crate::ckks::encoding::Complex;
+    let slots = ev.ctx.params.slots();
+    let level = ev.ctx.max_level();
+    let mut wl = DemoWorkload {
+        ops: Vec::with_capacity(n_ops),
+        inputs: Vec::with_capacity(n_ops),
+        ct2: Vec::with_capacity(n_ops),
+        expected: Vec::with_capacity(n_ops),
+    };
+    for i in 0..n_ops {
+        let z: Vec<Complex> = (0..slots)
+            .map(|j| Complex::new(0.01 * ((i + j) % 20) as f64, 0.0))
+            .collect();
+        let ct = enc.encrypt_slots(&ev.ctx, &z, level, rng);
+        let (op, ct2, want) = match i % 4 {
+            0 => (WireOp::Square, None, ev.mul(&ct, &ct).expect("relin key")),
+            1 => (WireOp::Rotate(3), None, ev.rotate(&ct, 3).expect("rot key")),
+            2 => {
+                let z2: Vec<Complex> = (0..slots)
+                    .map(|j| Complex::new(0.005 * ((2 * i + j) % 10) as f64, 0.0))
+                    .collect();
+                let c2 = enc.encrypt_slots(&ev.ctx, &z2, level, rng);
+                let want = ev.add(&ct, &c2);
+                (WireOp::Add, Some(c2), want)
+            }
+            _ => (WireOp::Rescale, None, ev.rescale(&ct)),
+        };
+        wl.ops.push(op);
+        wl.inputs.push(ct);
+        wl.ct2.push(ct2);
+        wl.expected.push(want);
+    }
+    wl
+}
+
+/// One-at-a-time execution (submit, wait, next) — the synchronous
+/// baseline the pipelined path is benchmarked against.
+pub fn run_sync(
+    cluster: &ClusterClient,
+    wl: &DemoWorkload,
+) -> Result<Vec<Ciphertext>, ClusterError> {
+    let mut out = Vec::with_capacity(wl.ops.len());
+    for i in 0..wl.ops.len() {
+        let id = cluster.submit(&wl.ops[i], &wl.inputs[i], wl.ct2[i].as_ref())?;
+        out.push(cluster.wait(id)?.result?);
+    }
+    Ok(out)
+}
+
+/// Pipelined execution: every op is submitted before any completion is
+/// consumed, and completions are collected in **reverse** submission
+/// order — deliberately out of admission order, exercising protocol
+/// v2's id-matched delivery. Results are returned in submission order.
+pub fn run_pipelined(
+    cluster: &ClusterClient,
+    wl: &DemoWorkload,
+) -> Result<Vec<Ciphertext>, ClusterError> {
+    let mut tickets = Vec::with_capacity(wl.ops.len());
+    for i in 0..wl.ops.len() {
+        tickets.push(cluster.submit(&wl.ops[i], &wl.inputs[i], wl.ct2[i].as_ref())?);
+    }
+    let mut out: Vec<Option<Ciphertext>> = vec![None; wl.ops.len()];
+    for (i, &id) in tickets.iter().enumerate().rev() {
+        out[i] = Some(cluster.wait(id)?.result?);
+    }
+    Ok(out.into_iter().map(|c| c.expect("all waited")).collect())
+}

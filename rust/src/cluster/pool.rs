@@ -1,0 +1,809 @@
+//! [`ClusterClient`] — the pipelined, shard-aware twin of
+//! `wire::RemoteEvaluator`.
+//!
+//! One [`ShardConn`] per backend holds a dedicated socket with a reader
+//! thread that matches protocol-v2 responses to in-flight requests by
+//! id, so any number of ops can be in flight per shard (bounded by
+//! [`ClusterOptions::window`]). Ops are routed over the consistent-hash
+//! [`HashRing`] by their routing key; `Busy` bounces are resent on the
+//! capped-exponential [`wire::busy_backoff_delay`] schedule shared with
+//! the synchronous client; a shard whose connection dies is marked dead
+//! and its unfinished ops **fail over** to the next ring replica —
+//! correct because `PushKeys` replicates the evaluation keys to every
+//! shard, and bit-exact because CKKS evaluation is deterministic.
+//!
+//! The synchronous surface (`mul`/`rotate`/`conjugate`/`hom_linear`/
+//! `add`/`rescale`/...) mirrors the local `Evaluator`, so every example
+//! pipeline runs unchanged against one node or a cluster; the pipelined
+//! surface is `submit` (returns a ticket id immediately) + `wait`
+//! (id-matched completion, in any order).
+
+use std::collections::HashMap;
+use std::io::{BufReader, Write};
+use std::net::TcpStream;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use super::ring::{HashRing, DEFAULT_VNODES};
+use crate::ckks::linear::SlotMatrix;
+use crate::ckks::params::{CkksContext, CkksParams};
+use crate::ckks::{Ciphertext, EvalKeySet, Evaluator, MissingKey};
+use crate::coordinator::MetricsSnapshot;
+use crate::wire::client::connect_handshake;
+use crate::wire::codec::encode_eval_key_set;
+use crate::wire::protocol::encode_op_request;
+use crate::wire::{
+    busy_backoff_delay, fnv1a64, params_fingerprint, Frame, Message, WireError, WireOp,
+};
+
+/// Tuning for the pipelined cluster client.
+#[derive(Debug, Clone)]
+pub struct ClusterOptions {
+    /// Max ops in flight per shard; `submit` blocks beyond this.
+    pub window: usize,
+    /// Virtual nodes per shard on the routing ring.
+    pub vnodes: usize,
+    /// `Busy` retry schedule (shared shape with `RemoteEvaluator`).
+    pub busy_retries: u32,
+    pub busy_backoff: Duration,
+    pub busy_backoff_cap: Duration,
+    /// How long to retry refused/unreachable sockets at connect time.
+    pub connect_timeout: Duration,
+}
+
+impl Default for ClusterOptions {
+    fn default() -> Self {
+        Self {
+            window: 16,
+            vnodes: DEFAULT_VNODES,
+            busy_retries: 50,
+            busy_backoff: Duration::from_millis(1),
+            busy_backoff_cap: Duration::from_millis(50),
+            connect_timeout: Duration::from_secs(15),
+        }
+    }
+}
+
+/// Everything that can go wrong talking to the cluster.
+#[derive(Debug)]
+pub enum ClusterError {
+    Wire(WireError),
+    /// The op's key set lacks a key it needs (typed, from the shard).
+    MissingKey(MissingKey),
+    /// A shard answered with a typed error frame.
+    Remote { shard: String, code: u16, detail: String },
+    /// Every ring replica for the op is dead.
+    AllShardsDown,
+    /// `Busy` retries exhausted on the owning shard.
+    Busy { shard: String, depth: u32 },
+    /// A shard acknowledged a key blob whose fingerprint differs from
+    /// what was pushed — replication is not bit-identical.
+    KeyMismatch { shard: String, got: u64, want: u64 },
+    /// Shards disagree on the installed key count.
+    KeyCountSkew { counts: Vec<(String, u32)> },
+    Protocol(String),
+}
+
+impl std::fmt::Display for ClusterError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ClusterError::Wire(e) => write!(f, "{e}"),
+            ClusterError::MissingKey(mk) => write!(f, "{mk}"),
+            ClusterError::Remote { shard, code, detail } => {
+                write!(f, "shard {shard} error {code}: {detail}")
+            }
+            ClusterError::AllShardsDown => write!(f, "every ring replica is down"),
+            ClusterError::Busy { shard, depth } => {
+                write!(f, "shard {shard} busy ({depth} in flight), retries exhausted")
+            }
+            ClusterError::KeyMismatch { shard, got, want } => write!(
+                f,
+                "shard {shard} installed key blob {got:#018x}, pushed {want:#018x}"
+            ),
+            ClusterError::KeyCountSkew { counts } => {
+                write!(f, "shards disagree on key count: {counts:?}")
+            }
+            ClusterError::Protocol(why) => write!(f, "cluster protocol violation: {why}"),
+        }
+    }
+}
+
+impl std::error::Error for ClusterError {}
+
+impl From<WireError> for ClusterError {
+    fn from(e: WireError) -> Self {
+        ClusterError::Wire(e)
+    }
+}
+
+impl From<MissingKey> for ClusterError {
+    fn from(mk: MissingKey) -> Self {
+        ClusterError::MissingKey(mk)
+    }
+}
+
+/// One completed op as the shard reported it (mirrors `OpResponse`).
+#[derive(Debug, Clone)]
+pub struct OpOutcome {
+    pub result: Result<Ciphertext, MissingKey>,
+    pub service_us: u64,
+    pub sim_base_us: f64,
+    pub sim_fhec_us: f64,
+    pub batch_size: u32,
+}
+
+/// A surfaced failover: which op moved, from where, to where.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub struct FailoverEvent {
+    pub id: u64,
+    pub from: String,
+    pub to: String,
+}
+
+/// Terminal per-op outcomes recorded by the reader thread.
+enum OpResult {
+    Done(OpOutcome),
+    /// Busy retries exhausted at this depth.
+    BusyExhausted(u32),
+    Remote { code: u16, detail: String },
+}
+
+struct PendingOp {
+    frame: Arc<Frame>,
+    attempts: u32,
+    /// `Some(when)`: bounced `Busy`, resend once `when` passes.
+    resend_at: Option<Instant>,
+}
+
+#[derive(Default)]
+struct ConnState {
+    inflight: HashMap<u64, PendingOp>,
+    done: HashMap<u64, OpResult>,
+    keys_ack: Option<(u32, u64)>,
+    metrics: Option<MetricsSnapshot>,
+    /// An `Error{id: 0}` frame answering the in-progress RPC (bad key
+    /// blob, unexpected message...). The shard keeps serving after
+    /// sending these — they fail the RPC, not the connection.
+    rpc_error: Option<String>,
+    /// Set once the socket is gone; every waiter re-routes.
+    dead: Option<String>,
+}
+
+/// How waiting on one shard for one op ended.
+enum WaitOutcome {
+    Finished(OpResult),
+    /// The connection died before the op completed; the frame (if the op
+    /// was still in flight here) is handed back for failover.
+    Dead { frame: Option<Arc<Frame>> },
+}
+
+/// A pipelined connection to one shard.
+struct ShardConn {
+    addr: String,
+    writer: Mutex<TcpStream>,
+    state: Mutex<ConnState>,
+    cv: Condvar,
+    /// Serializes the single-slot RPCs (`PushKeys`, `Metrics`): the
+    /// response lands in a one-deep mailbox, so a second concurrent
+    /// caller would otherwise clear/steal the first caller's reply.
+    rpc: Mutex<()>,
+    opts: ClusterOptions,
+}
+
+impl ShardConn {
+    /// Connect + handshake (synchronously, via the shared
+    /// `wire::client::connect_handshake`), then hand the read half to a
+    /// reader thread that demultiplexes responses by id.
+    fn connect(
+        addr: &str,
+        fingerprint: u64,
+        opts: ClusterOptions,
+    ) -> Result<Arc<Self>, WireError> {
+        let stream = connect_handshake(addr, fingerprint, opts.connect_timeout)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        let conn = Arc::new(Self {
+            addr: addr.to_string(),
+            writer: Mutex::new(stream),
+            state: Mutex::new(ConnState::default()),
+            cv: Condvar::new(),
+            rpc: Mutex::new(()),
+            opts,
+        });
+        let rc = conn.clone();
+        std::thread::spawn(move || rc.reader_loop(reader));
+        Ok(conn)
+    }
+
+    fn reader_loop(&self, mut reader: BufReader<TcpStream>) {
+        loop {
+            let msg = match Frame::read_from(&mut reader).and_then(|f| Message::decode(&f)) {
+                Ok(m) => m,
+                Err(e) => {
+                    self.mark_dead(format!("read failed: {e}"));
+                    return;
+                }
+            };
+            let mut st = self.state.lock().unwrap();
+            match msg {
+                Message::OpResponse {
+                    id,
+                    result,
+                    service_us,
+                    sim_base_us,
+                    sim_fhec_us,
+                    batch_size,
+                } => {
+                    st.inflight.remove(&id);
+                    st.done.insert(
+                        id,
+                        OpResult::Done(OpOutcome {
+                            result,
+                            service_us,
+                            sim_base_us,
+                            sim_fhec_us,
+                            batch_size,
+                        }),
+                    );
+                }
+                Message::Busy { id, depth } => {
+                    // A bounced op stays in its window slot (it is still
+                    // the client's to deliver) but is scheduled for a
+                    // capped-exponential resend, serviced by whichever
+                    // thread waits on this connection next.
+                    if let Some(p) = st.inflight.get_mut(&id) {
+                        if p.attempts >= self.opts.busy_retries {
+                            st.inflight.remove(&id);
+                            st.done.insert(id, OpResult::BusyExhausted(depth));
+                        } else {
+                            let delay = busy_backoff_delay(
+                                p.attempts,
+                                self.opts.busy_backoff,
+                                self.opts.busy_backoff_cap,
+                            );
+                            p.attempts += 1;
+                            p.resend_at = Some(Instant::now() + delay);
+                        }
+                    }
+                }
+                Message::Error { id, code, detail } => {
+                    if id != 0 && st.inflight.remove(&id).is_some() {
+                        st.done.insert(id, OpResult::Remote { code, detail });
+                    } else {
+                        // id-0 errors answer an RPC (e.g. a bad PushKeys
+                        // blob) — the shard stays up and keeps serving,
+                        // so fail the RPC, never the connection. If the
+                        // shard considered the stream unusable it closes
+                        // it, which we observe as EOF above.
+                        st.rpc_error = Some(format!("remote error {code}: {detail}"));
+                    }
+                }
+                Message::KeysAck { keys, fingerprint } => {
+                    st.keys_ack = Some((keys, fingerprint));
+                }
+                Message::MetricsResp(snap) => {
+                    st.metrics = Some(snap);
+                }
+                // Anything else is noise at this layer.
+                _ => {}
+            }
+            self.cv.notify_all();
+        }
+    }
+
+    fn mark_dead(&self, why: String) {
+        let mut st = self.state.lock().unwrap();
+        if st.dead.is_none() {
+            st.dead = Some(why);
+        }
+        self.cv.notify_all();
+    }
+
+    fn is_dead(&self) -> bool {
+        self.state.lock().unwrap().dead.is_some()
+    }
+
+    fn write_frame(&self, frame: &Frame) -> Result<(), String> {
+        let mut w = self.writer.lock().unwrap();
+        frame
+            .write_to(&mut *w)
+            .and_then(|()| w.flush().map_err(WireError::Io))
+            .map_err(|e| e.to_string())
+    }
+
+    /// Service one due `Busy` resend under the caller's lock, or report
+    /// how long until the earliest scheduled one. Returns the reacquired
+    /// guard and whether a resend happened (callers then re-check state
+    /// from the top). Both the window-blocked submitter and waiters run
+    /// this, so bounced ops make progress no matter which side is
+    /// parked.
+    fn pump_resends<'a>(
+        &'a self,
+        mut st: std::sync::MutexGuard<'a, ConnState>,
+    ) -> (std::sync::MutexGuard<'a, ConnState>, bool) {
+        let now = Instant::now();
+        let mut due: Option<Arc<Frame>> = None;
+        let mut earliest: Option<Instant> = None;
+        for p in st.inflight.values_mut() {
+            if let Some(at) = p.resend_at {
+                if at <= now {
+                    p.resend_at = None;
+                    due = Some(p.frame.clone());
+                    break;
+                }
+                earliest = Some(earliest.map_or(at, |e: Instant| e.min(at)));
+            }
+        }
+        if let Some(frame) = due {
+            drop(st);
+            if let Err(why) = self.write_frame(&frame) {
+                self.mark_dead(why);
+            }
+            return (self.state.lock().unwrap(), true);
+        }
+        let st = match earliest {
+            Some(at) => self.cv.wait_timeout(st, at - now).unwrap().0,
+            // Re-check periodically as a belt-and-braces against a
+            // missed wakeup; the reader thread notifies on every state
+            // change, including death.
+            None => self.cv.wait_timeout(st, Duration::from_millis(500)).unwrap().0,
+        };
+        (st, false)
+    }
+
+    /// Register `id` in the window (blocking while the window is full,
+    /// servicing due resends meanwhile) and send its frame. `Err` means
+    /// this shard cannot take the op — the caller fails over.
+    fn send_op(&self, id: u64, frame: Arc<Frame>) -> Result<(), String> {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(why) = &st.dead {
+                return Err(why.clone());
+            }
+            if st.inflight.len() < self.opts.window {
+                break;
+            }
+            st = self.pump_resends(st).0;
+        }
+        st.inflight
+            .insert(id, PendingOp { frame: frame.clone(), attempts: 0, resend_at: None });
+        drop(st);
+        if let Err(why) = self.write_frame(&frame) {
+            self.state.lock().unwrap().inflight.remove(&id);
+            self.mark_dead(why.clone());
+            return Err(why);
+        }
+        Ok(())
+    }
+
+    /// Block until `id` completes on this connection (servicing due
+    /// `Busy` resends for *any* op here while waiting) or the
+    /// connection dies.
+    fn wait_op(&self, id: u64) -> WaitOutcome {
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(r) = st.done.remove(&id) {
+                self.cv.notify_all(); // a window slot freed
+                return WaitOutcome::Finished(r);
+            }
+            if st.dead.is_some() {
+                let frame = st.inflight.remove(&id).map(|p| p.frame);
+                return WaitOutcome::Dead { frame };
+            }
+            st = self.pump_resends(st).0;
+        }
+    }
+
+    /// Synchronous `PushKeys` round trip; returns `(count, blob fp)`.
+    /// Serialized via `self.rpc`; times out rather than waiting forever
+    /// on a reply that will never come (the mailbox is one-deep).
+    fn push_keys_blob(&self, blob: Vec<u8>) -> Result<(u32, u64), String> {
+        let _rpc = self.rpc.lock().unwrap();
+        {
+            let mut st = self.state.lock().unwrap();
+            st.keys_ack = None;
+            st.rpc_error = None;
+        }
+        self.write_frame(&Message::PushKeys { blob }.encode())
+            .inspect_err(|why| self.mark_dead(why.clone()))?;
+        // Generous: the shard decodes + re-expands the whole key set
+        // before acking.
+        self.await_mailbox(Duration::from_secs(120), "KeysAck", |st| st.keys_ack.take())
+    }
+
+    /// Synchronous `Metrics` round trip (serialized via `self.rpc`).
+    fn fetch_metrics(&self) -> Result<MetricsSnapshot, String> {
+        let _rpc = self.rpc.lock().unwrap();
+        {
+            let mut st = self.state.lock().unwrap();
+            st.metrics = None;
+            st.rpc_error = None;
+        }
+        self.write_frame(&Message::MetricsReq.encode())
+            .inspect_err(|why| self.mark_dead(why.clone()))?;
+        self.await_mailbox(Duration::from_secs(15), "MetricsResp", |st| st.metrics.take())
+    }
+
+    /// Wait for a one-deep RPC mailbox to fill, with a deadline.
+    fn await_mailbox<T>(
+        &self,
+        timeout: Duration,
+        what: &str,
+        mut take: impl FnMut(&mut ConnState) -> Option<T>,
+    ) -> Result<T, String> {
+        let deadline = Instant::now() + timeout;
+        let mut st = self.state.lock().unwrap();
+        loop {
+            if let Some(v) = take(&mut st) {
+                return Ok(v);
+            }
+            if let Some(why) = st.rpc_error.take() {
+                return Err(why);
+            }
+            if let Some(why) = &st.dead {
+                return Err(why.clone());
+            }
+            let now = Instant::now();
+            if now >= deadline {
+                return Err(format!("timed out waiting for {what} from {}", self.addr));
+            }
+            let wait = (deadline - now).min(Duration::from_millis(500));
+            st = self.cv.wait_timeout(st, wait).unwrap().0;
+        }
+    }
+}
+
+/// Per-cluster metrics: one snapshot per shard plus the summed view.
+#[derive(Debug, Clone)]
+pub struct ClusterMetrics {
+    /// `(shard address, snapshot)`; dead shards are omitted.
+    pub shards: Vec<(String, MetricsSnapshot)>,
+}
+
+impl ClusterMetrics {
+    /// The cluster-wide sum (lane depths and served counters added,
+    /// means served-weighted).
+    pub fn total(&self) -> MetricsSnapshot {
+        let mut out = MetricsSnapshot::default();
+        for (_, snap) in &self.shards {
+            out.absorb(snap);
+        }
+        out
+    }
+}
+
+/// The shard-aware, pipelined cluster client.
+pub struct ClusterClient {
+    conns: Vec<Arc<ShardConn>>,
+    ring: HashRing,
+    /// In-flight ticket bookkeeping: id -> (routing key, conn index).
+    route: Mutex<HashMap<u64, (u64, usize)>>,
+    next_id: AtomicU64,
+    fingerprint: u64,
+    local: Evaluator,
+    failovers: Mutex<Vec<FailoverEvent>>,
+}
+
+impl ClusterClient {
+    /// Connect to every shard and handshake. `addrs` are the ring names:
+    /// the same list (in any order per-entry, but identical strings)
+    /// yields the identical routing everywhere.
+    pub fn connect(
+        addrs: &[String],
+        params: CkksParams,
+        opts: ClusterOptions,
+    ) -> Result<Self, ClusterError> {
+        assert!(!addrs.is_empty(), "cluster needs at least one shard");
+        let fingerprint = params_fingerprint(&params);
+        let mut conns = Vec::with_capacity(addrs.len());
+        for addr in addrs {
+            conns.push(ShardConn::connect(addr, fingerprint, opts.clone())?);
+        }
+        Ok(Self {
+            conns,
+            ring: HashRing::new(addrs, opts.vnodes),
+            route: Mutex::new(HashMap::new()),
+            next_id: AtomicU64::new(1),
+            fingerprint,
+            local: Evaluator::without_keys(CkksContext::new(params)),
+            failovers: Mutex::new(Vec::new()),
+        })
+    }
+
+    /// The negotiated parameter-set fingerprint.
+    pub fn fingerprint(&self) -> u64 {
+        self.fingerprint
+    }
+
+    /// The shared CKKS context.
+    pub fn ctx(&self) -> &CkksContext {
+        &self.local.ctx
+    }
+
+    /// The embedded key-less evaluator for client-side plaintext ops —
+    /// same contract as `RemoteEvaluator::local`.
+    pub fn local(&self) -> &Evaluator {
+        &self.local
+    }
+
+    /// Addresses of shards whose connection is still up.
+    pub fn live_shards(&self) -> Vec<String> {
+        self.conns
+            .iter()
+            .filter(|c| !c.is_dead())
+            .map(|c| c.addr.clone())
+            .collect()
+    }
+
+    /// The shard address `key` routes to (ignoring liveness) — the
+    /// deterministic ring placement.
+    pub fn route_of(&self, key: u64) -> &str {
+        &self.conns[self.ring.route(key)].addr
+    }
+
+    /// Every failover that happened so far (typed, in order).
+    pub fn failover_events(&self) -> Vec<FailoverEvent> {
+        self.failovers.lock().unwrap().clone()
+    }
+
+    pub fn failovers(&self) -> usize {
+        self.failovers.lock().unwrap().len()
+    }
+
+    fn record_failover(&self, id: u64, from: usize, to: usize) {
+        let ev = FailoverEvent {
+            id,
+            from: self.conns[from].addr.clone(),
+            to: self.conns[to].addr.clone(),
+        };
+        eprintln!(
+            "cluster: failover op {} from {} to {}",
+            ev.id, ev.from, ev.to
+        );
+        self.failovers.lock().unwrap().push(ev);
+    }
+
+    /// Serialize the key set once and replicate it to **every** shard,
+    /// verifying each `KeysAck` echoes the identical blob fingerprint
+    /// and key count — after this, any shard can serve any op, which is
+    /// what makes failover safe.
+    pub fn push_keys(&self, keys: &EvalKeySet) -> Result<u32, ClusterError> {
+        self.push_keys_blob(&encode_eval_key_set(keys, self.fingerprint, true))
+    }
+
+    /// Replicate an already-encoded key blob (the gateway path: bytes
+    /// are forwarded verbatim, never re-encoded).
+    pub fn push_keys_blob(&self, blob: &[u8]) -> Result<u32, ClusterError> {
+        let want = fnv1a64(blob);
+        let mut counts = Vec::with_capacity(self.conns.len());
+        for conn in &self.conns {
+            let (keys, got) = conn.push_keys_blob(blob.to_vec()).map_err(|why| {
+                ClusterError::Remote {
+                    shard: conn.addr.clone(),
+                    code: 0,
+                    detail: why,
+                }
+            })?;
+            if got != want {
+                return Err(ClusterError::KeyMismatch {
+                    shard: conn.addr.clone(),
+                    got,
+                    want,
+                });
+            }
+            counts.push((conn.addr.clone(), keys));
+        }
+        if counts.windows(2).any(|w| w[0].1 != w[1].1) {
+            return Err(ClusterError::KeyCountSkew { counts });
+        }
+        Ok(counts[0].1)
+    }
+
+    /// Aggregate metrics across all live shards.
+    pub fn metrics(&self) -> Result<ClusterMetrics, ClusterError> {
+        let mut shards = Vec::new();
+        for conn in &self.conns {
+            if conn.is_dead() {
+                continue;
+            }
+            match conn.fetch_metrics() {
+                Ok(snap) => shards.push((conn.addr.clone(), snap)),
+                Err(_) => continue, // died mid-request: skip, like dead
+            }
+        }
+        if shards.is_empty() {
+            return Err(ClusterError::AllShardsDown);
+        }
+        Ok(ClusterMetrics { shards })
+    }
+
+    /// Ask every shard process to stop accepting and drain.
+    pub fn shutdown(&self) -> Result<(), ClusterError> {
+        let frame = Message::Shutdown.encode();
+        for conn in &self.conns {
+            if !conn.is_dead() {
+                let _ = conn.write_frame(&frame);
+            }
+        }
+        Ok(())
+    }
+
+    /// Pipelined submission routed by the fresh ticket id itself.
+    /// Returns the ticket; the op is in flight until [`Self::wait`].
+    pub fn submit(
+        &self,
+        op: &WireOp,
+        ct: &Ciphertext,
+        ct2: Option<&Ciphertext>,
+    ) -> Result<u64, ClusterError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.submit_inner(id, id, op, ct, ct2)
+    }
+
+    /// Pipelined submission with an explicit routing key (the gateway
+    /// passes the upstream request id, so placement is a deterministic
+    /// function of the client-visible id). Ticket ids are still
+    /// allocated internally and returned.
+    pub fn submit_keyed(
+        &self,
+        route_key: u64,
+        op: &WireOp,
+        ct: &Ciphertext,
+        ct2: Option<&Ciphertext>,
+    ) -> Result<u64, ClusterError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.submit_inner(route_key, id, op, ct, ct2)
+    }
+
+    fn submit_inner(
+        &self,
+        route_key: u64,
+        id: u64,
+        op: &WireOp,
+        ct: &Ciphertext,
+        ct2: Option<&Ciphertext>,
+    ) -> Result<u64, ClusterError> {
+        let frame = Arc::new(encode_op_request(id, op, ct, ct2));
+        let owner = self.ring.route(route_key);
+        let mut failed_over = false;
+        for idx in self.ring.replicas(route_key) {
+            if self.conns[idx].is_dead() {
+                failed_over = true;
+                continue;
+            }
+            match self.conns[idx].send_op(id, frame.clone()) {
+                Ok(()) => {
+                    if failed_over {
+                        self.record_failover(id, owner, idx);
+                    }
+                    self.route.lock().unwrap().insert(id, (route_key, idx));
+                    return Ok(id);
+                }
+                Err(_) => {
+                    failed_over = true;
+                    continue;
+                }
+            }
+        }
+        Err(ClusterError::AllShardsDown)
+    }
+
+    /// Block until the ticket completes, failing over to the next ring
+    /// replica if the owning shard dies mid-flight. Completion order is
+    /// whatever the shards produce — ids, not admission order.
+    pub fn wait(&self, id: u64) -> Result<OpOutcome, ClusterError> {
+        loop {
+            let (route_key, idx) = *self
+                .route
+                .lock()
+                .unwrap()
+                .get(&id)
+                .ok_or_else(|| ClusterError::Protocol(format!("unknown ticket {id}")))?;
+            match self.conns[idx].wait_op(id) {
+                WaitOutcome::Finished(r) => {
+                    self.route.lock().unwrap().remove(&id);
+                    return match r {
+                        OpResult::Done(outcome) => Ok(outcome),
+                        OpResult::BusyExhausted(depth) => Err(ClusterError::Busy {
+                            shard: self.conns[idx].addr.clone(),
+                            depth,
+                        }),
+                        OpResult::Remote { code, detail } => Err(ClusterError::Remote {
+                            shard: self.conns[idx].addr.clone(),
+                            code,
+                            detail,
+                        }),
+                    };
+                }
+                WaitOutcome::Dead { frame } => {
+                    let Some(frame) = frame else {
+                        self.route.lock().unwrap().remove(&id);
+                        return Err(ClusterError::Protocol(format!(
+                            "ticket {id} lost on dead shard {}",
+                            self.conns[idx].addr
+                        )));
+                    };
+                    // Re-home the op on the next live replica; the ring
+                    // order after the dead owner is the failover chain.
+                    let mut moved = false;
+                    for next in self.ring.replicas(route_key) {
+                        if next == idx || self.conns[next].is_dead() {
+                            continue;
+                        }
+                        if self.conns[next].send_op(id, frame.clone()).is_ok() {
+                            self.record_failover(id, idx, next);
+                            self.route.lock().unwrap().insert(id, (route_key, next));
+                            moved = true;
+                            break;
+                        }
+                    }
+                    if !moved {
+                        self.route.lock().unwrap().remove(&id);
+                        return Err(ClusterError::AllShardsDown);
+                    }
+                }
+            }
+        }
+    }
+
+    /// Submit + wait — the one-op synchronous path behind the
+    /// `Evaluator`-shaped methods.
+    fn call(
+        &self,
+        op: WireOp,
+        ct: &Ciphertext,
+        ct2: Option<&Ciphertext>,
+    ) -> Result<Ciphertext, ClusterError> {
+        let id = self.submit(&op, ct, ct2)?;
+        let outcome = self.wait(id)?;
+        outcome.result.map_err(ClusterError::MissingKey)
+    }
+
+    // ------------------------------------------------------------------
+    // Table II ops — signatures mirror `Evaluator` / `RemoteEvaluator`
+    // ------------------------------------------------------------------
+
+    /// HEMult (with relinearization + rescale), on the owning shard.
+    pub fn mul(&self, a: &Ciphertext, b: &Ciphertext) -> Result<Ciphertext, ClusterError> {
+        self.call(WireOp::Mul, a, Some(b))
+    }
+
+    /// Slot rotation by `k`.
+    pub fn rotate(&self, a: &Ciphertext, k: usize) -> Result<Ciphertext, ClusterError> {
+        self.call(WireOp::Rotate(k), a, None)
+    }
+
+    /// Complex conjugation of every slot.
+    pub fn conjugate(&self, a: &Ciphertext) -> Result<Ciphertext, ClusterError> {
+        self.call(WireOp::Conjugate, a, None)
+    }
+
+    /// BSGS dense linear transform.
+    pub fn hom_linear(
+        &self,
+        a: &Ciphertext,
+        m: &SlotMatrix,
+    ) -> Result<Ciphertext, ClusterError> {
+        self.call(WireOp::HomLinear(m.clone()), a, None)
+    }
+
+    /// `a * a` with relinearization.
+    pub fn square(&self, a: &Ciphertext) -> Result<Ciphertext, ClusterError> {
+        self.call(WireOp::Square, a, None)
+    }
+
+    /// Encrypted linear scoring against the shard-side model weights.
+    pub fn linear_score(&self, a: &Ciphertext) -> Result<Ciphertext, ClusterError> {
+        self.call(WireOp::LinearScore, a, None)
+    }
+
+    /// HEAdd on the owning shard's CUDA-class lane.
+    pub fn add(&self, a: &Ciphertext, b: &Ciphertext) -> Result<Ciphertext, ClusterError> {
+        self.call(WireOp::Add, a, Some(b))
+    }
+
+    /// Rescale on the owning shard's CUDA-class lane.
+    pub fn rescale(&self, a: &Ciphertext) -> Result<Ciphertext, ClusterError> {
+        self.call(WireOp::Rescale, a, None)
+    }
+}

@@ -1,0 +1,196 @@
+//! Consistent-hash ring: deterministic FNV placement with virtual nodes.
+//!
+//! Every shard contributes `vnodes` points on a 64-bit ring; a key is
+//! owned by the first point clockwise from its hash. Placement is a pure
+//! function of the shard *name* and the vnode index — two processes that
+//! build a ring from the same shard list route every key identically,
+//! which is what lets a gateway and its clients (or two gateways) agree
+//! on ownership without any coordination. Removing one of K shards
+//! remaps exactly the keys that shard owned (~1/K of the space); every
+//! other key keeps its owner because no other point moves.
+//!
+//! Raw FNV-1a clusters badly on short, similar inputs ("shard#0",
+//! "shard#1", ...), so every placement and key hash is finished with the
+//! SplitMix64 avalanche — still fully deterministic, but the points
+//! spread uniformly.
+
+use crate::wire::fnv1a64;
+
+/// SplitMix64 finalizer: a cheap, deterministic 64-bit avalanche.
+fn mix64(mut z: u64) -> u64 {
+    z = z.wrapping_add(0x9e37_79b9_7f4a_7c15);
+    z = (z ^ (z >> 30)).wrapping_mul(0xbf58_476d_1ce4_e5b9);
+    z = (z ^ (z >> 27)).wrapping_mul(0x94d0_49bb_1331_11eb);
+    z ^ (z >> 31)
+}
+
+/// Ring position of one virtual node (pure in `name` and `v`).
+fn place(name: &str, v: usize) -> u64 {
+    mix64(fnv1a64(format!("{name}#{v}").as_bytes()))
+}
+
+/// Default virtual nodes per shard: enough that a 2-shard ring splits
+/// the key space within a few percent of evenly.
+pub const DEFAULT_VNODES: usize = 128;
+
+/// A consistent-hash ring over named shards.
+#[derive(Debug, Clone)]
+pub struct HashRing {
+    /// `(ring position, shard index)`, sorted ascending.
+    points: Vec<(u64, usize)>,
+    names: Vec<String>,
+    vnodes: usize,
+}
+
+impl HashRing {
+    /// Build a ring from shard names with `vnodes` points per shard.
+    pub fn new(names: &[String], vnodes: usize) -> Self {
+        assert!(!names.is_empty(), "ring needs at least one shard");
+        assert!(vnodes > 0, "vnodes must be positive");
+        let mut ring = Self { points: Vec::new(), names: Vec::new(), vnodes };
+        for name in names {
+            ring.add_shard(name);
+        }
+        ring
+    }
+
+    /// The shard names, index-aligned with [`Self::route`]'s results.
+    pub fn names(&self) -> &[String] {
+        &self.names
+    }
+
+    pub fn len(&self) -> usize {
+        self.names.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.names.is_empty()
+    }
+
+    /// Hash a routing key (session / ciphertext / request id) onto the
+    /// ring. Canonical little-endian bytes, so every process agrees.
+    pub fn key_hash(key: u64) -> u64 {
+        mix64(fnv1a64(&key.to_le_bytes()))
+    }
+
+    /// Add a shard; returns its index. Only the new shard's `vnodes`
+    /// points appear — every existing key either keeps its owner or
+    /// moves to the new shard (minimal remap).
+    pub fn add_shard(&mut self, name: &str) -> usize {
+        assert!(
+            !self.names.iter().any(|n| n == name),
+            "duplicate shard name {name:?}"
+        );
+        let idx = self.names.len();
+        self.names.push(name.to_string());
+        for v in 0..self.vnodes {
+            self.points.push((place(name, v), idx));
+        }
+        self.points.sort_unstable();
+        idx
+    }
+
+    /// Remove a shard by name. Only the keys it owned remap (to the
+    /// next point clockwise); all other owners are untouched. Indices
+    /// above the removed shard shift down by one. Returns whether the
+    /// shard was present.
+    pub fn remove_shard(&mut self, name: &str) -> bool {
+        let Some(idx) = self.names.iter().position(|n| n == name) else {
+            return false;
+        };
+        self.names.remove(idx);
+        self.points.retain(|&(_, i)| i != idx);
+        for p in &mut self.points {
+            if p.1 > idx {
+                p.1 -= 1;
+            }
+        }
+        true
+    }
+
+    /// First point at or clockwise-after `h` (wrapping).
+    fn owner_of_hash(&self, h: u64) -> usize {
+        let i = self.points.partition_point(|&(p, _)| p < h);
+        let i = if i == self.points.len() { 0 } else { i };
+        self.points[i].1
+    }
+
+    /// The shard index owning `key`.
+    pub fn route(&self, key: u64) -> usize {
+        self.owner_of_hash(Self::key_hash(key))
+    }
+
+    /// Distinct shard indices in ring order starting at `key`'s owner —
+    /// the failover sequence: the owner first, then each next shard met
+    /// walking clockwise. Length = shard count.
+    pub fn replicas(&self, key: u64) -> Vec<usize> {
+        let h = Self::key_hash(key);
+        let start = self.points.partition_point(|&(p, _)| p < h);
+        let mut seen = vec![false; self.names.len()];
+        let mut out = Vec::with_capacity(self.names.len());
+        for off in 0..self.points.len() {
+            let (_, idx) = self.points[(start + off) % self.points.len()];
+            if !seen[idx] {
+                seen[idx] = true;
+                out.push(idx);
+                if out.len() == self.names.len() {
+                    break;
+                }
+            }
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn names(v: &[&str]) -> Vec<String> {
+        v.iter().map(|s| s.to_string()).collect()
+    }
+
+    #[test]
+    fn routing_is_a_pure_function_of_the_shard_list() {
+        let a = HashRing::new(&names(&["alpha", "beta", "gamma"]), 16);
+        let b = HashRing::new(&names(&["alpha", "beta", "gamma"]), 16);
+        for key in 0..4096u64 {
+            assert_eq!(a.route(key), b.route(key), "key {key}");
+        }
+    }
+
+    #[test]
+    fn golden_routes_pin_the_cross_process_contract() {
+        // Computed by an independent implementation of the spec
+        // (FNV-1a 64 over "name#v" / LE key bytes, SplitMix64 finalizer,
+        // first point clockwise). Any change to placement or key hashing
+        // breaks this vector — and with it, deployed rings.
+        let ring = HashRing::new(&names(&["alpha", "beta", "gamma"]), 16);
+        let got: Vec<usize> = (0..12u64).map(|k| ring.route(k)).collect();
+        assert_eq!(got, vec![1, 2, 2, 1, 1, 0, 2, 0, 2, 1, 2, 2]);
+    }
+
+    #[test]
+    fn replicas_start_at_owner_and_cover_all_shards() {
+        let ring = HashRing::new(&names(&["a", "b", "c", "d"]), 32);
+        for key in 0..256u64 {
+            let reps = ring.replicas(key);
+            assert_eq!(reps[0], ring.route(key), "key {key}");
+            let mut sorted = reps.clone();
+            sorted.sort_unstable();
+            sorted.dedup();
+            assert_eq!(sorted.len(), 4, "replicas must be distinct: {reps:?}");
+        }
+    }
+
+    #[test]
+    fn add_then_remove_is_the_identity() {
+        let base = HashRing::new(&names(&["a", "b", "c"]), 32);
+        let mut ring = base.clone();
+        ring.add_shard("d");
+        ring.remove_shard("d");
+        for key in 0..2048u64 {
+            assert_eq!(ring.route(key), base.route(key), "key {key}");
+        }
+    }
+}

@@ -245,6 +245,31 @@ pub struct MetricsSnapshot {
     pub cuda_served: u64,
 }
 
+impl MetricsSnapshot {
+    /// Fold another node's snapshot into this one — the cluster view is
+    /// the sum of its shards: counters and lane depths add, the peak is
+    /// the max of peaks, and the means are re-derived served-weighted.
+    pub fn absorb(&mut self, other: &MetricsSnapshot) {
+        let total_us = self.mean_service_us * self.served as f64
+            + other.mean_service_us * other.served as f64;
+        self.served += other.served;
+        self.batches += other.batches;
+        self.rejected += other.rejected;
+        self.queue_peak = self.queue_peak.max(other.queue_peak);
+        self.mean_service_us =
+            if self.served > 0 { total_us / self.served as f64 } else { 0.0 };
+        self.mean_batch = if self.batches > 0 {
+            self.served as f64 / self.batches as f64
+        } else {
+            0.0
+        };
+        self.fhec_depth += other.fhec_depth;
+        self.cuda_depth += other.cuda_depth;
+        self.fhec_served += other.fhec_served;
+        self.cuda_served += other.cuda_served;
+    }
+}
+
 /// Why a submission was not admitted.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
 pub enum SubmitError {
@@ -898,6 +923,50 @@ mod tests {
         assert!(matches!(err, SubmitError::BadRequest(_)));
         // Structural rejections are not backpressure.
         assert_eq!(coord.metrics.rejected.load(Ordering::Relaxed), 0);
+    }
+
+    #[test]
+    fn metrics_snapshot_absorb_sums_shards() {
+        let mut a = MetricsSnapshot {
+            served: 10,
+            batches: 5,
+            rejected: 1,
+            queue_peak: 4,
+            mean_service_us: 100.0,
+            mean_batch: 2.0,
+            fhec_depth: 2,
+            cuda_depth: 1,
+            fhec_served: 8,
+            cuda_served: 2,
+        };
+        let b = MetricsSnapshot {
+            served: 30,
+            batches: 10,
+            rejected: 3,
+            queue_peak: 9,
+            mean_service_us: 200.0,
+            mean_batch: 3.0,
+            fhec_depth: 1,
+            cuda_depth: 0,
+            fhec_served: 25,
+            cuda_served: 5,
+        };
+        a.absorb(&b);
+        assert_eq!(a.served, 40);
+        assert_eq!(a.batches, 15);
+        assert_eq!(a.rejected, 4);
+        assert_eq!(a.queue_peak, 9);
+        // Served-weighted: (10*100 + 30*200) / 40.
+        assert!((a.mean_service_us - 175.0).abs() < 1e-9);
+        assert!((a.mean_batch - 40.0 / 15.0).abs() < 1e-9);
+        assert_eq!(a.fhec_depth, 3);
+        assert_eq!(a.cuda_depth, 1);
+        assert_eq!(a.fhec_served, 33);
+        assert_eq!(a.cuda_served, 7);
+        // Absorbing an empty (Default) snapshot is the identity on counters.
+        let before = a;
+        a.absorb(&MetricsSnapshot::default());
+        assert_eq!(a, before);
     }
 
     #[test]

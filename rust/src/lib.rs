@@ -28,12 +28,17 @@
 //! * [`wire`] — canonical binary serialization (seed-compressed eval
 //!   keys) + the framed TCP protocol: `fhecore-serve` server front and
 //!   the `RemoteEvaluator` client mirroring the local `Evaluator`.
+//! * [`cluster`] — sharded serving over the wire layer: consistent-hash
+//!   ciphertext routing, key replication with per-shard fingerprint
+//!   verification, the pipelined out-of-order `ClusterClient` with ring
+//!   failover, and the `fhecore-gateway` front.
 //! * [`workloads`] — Bootstrapping / LR / ResNet20 / BERT-Tiny op-graph
 //!   builders at the paper's Table V parameters.
 //! * [`tables`] — regenerators for every figure and table of SVI.
 
 pub mod bench_harness;
 pub mod ckks;
+pub mod cluster;
 pub mod codegen;
 pub mod coordinator;
 pub mod gpusim;

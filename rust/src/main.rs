@@ -7,6 +7,10 @@
 //!                      with --listen <addr> it becomes a wire TCP server
 //!   client <mode>      remote client: quickstart | metrics | shutdown
 //!                      (--connect <addr>, --params toy|medium)
+//!   cluster <mode>     sharded serving: serve (gateway fronting
+//!                      --shards a,b,...) | quickstart (pipelined
+//!                      out-of-order workload, bit-exact vs local) |
+//!                      metrics | shutdown
 //!   runtime            smoke the PJRT artifacts (needs `make artifacts`)
 //!   selftest           quick functional pass over the CKKS substrate
 
@@ -66,6 +70,9 @@ fn main() {
         Some("client") => {
             std::process::exit(fhecore::wire::cli::run_client(&args));
         }
+        Some("cluster") => {
+            std::process::exit(fhecore::wire::cli::run_cluster(&args));
+        }
         Some("runtime") => {
             let dir = args.opt("artifacts").unwrap_or("artifacts");
             match fhecore::runtime::Engine::load(dir) {
@@ -79,11 +86,16 @@ fn main() {
         Some("selftest") => selftest(),
         _ => {
             println!("fhecore — FHECore (CS.AR 2026) reproduction");
-            println!("usage: fhecore <table|simulate|serve|client|runtime|selftest> [...]");
+            println!(
+                "usage: fhecore <table|simulate|serve|client|cluster|runtime|selftest> [...]"
+            );
             println!("  table all | table t8 | simulate bert-tiny | serve --requests 32");
             println!("  serve --listen 127.0.0.1:7009 --params toy   (wire TCP server)");
             println!("  client quickstart --connect 127.0.0.1:7009   (remote pipeline)");
             println!("  client metrics | client shutdown             (ops RPCs)");
+            println!("  cluster serve --listen 127.0.0.1:7050 --shards a,b  (gateway)");
+            println!("  cluster quickstart --connect 127.0.0.1:7050  (pipelined, OOO)");
+            println!("  cluster metrics | cluster shutdown           (cluster ops)");
         }
     }
 }

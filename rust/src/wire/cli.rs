@@ -1,7 +1,8 @@
-//! The `serve` / `client` subcommand bodies, shared by the `fhecore` CLI
-//! (`fhecore serve --listen ...`, `fhecore client ...`) and the
-//! standalone `fhecore-serve` binary. Everything returns a process exit
-//! code instead of calling `exit` so callers stay testable.
+//! The `serve` / `client` / `cluster` subcommand bodies, shared by the
+//! `fhecore` CLI (`fhecore serve --listen ...`, `fhecore client ...`,
+//! `fhecore cluster ...`) and the standalone `fhecore-serve` /
+//! `fhecore-gateway` binaries. Everything returns a process exit code
+//! instead of calling `exit` so callers stay testable.
 
 use std::net::TcpListener;
 use std::sync::Arc;
@@ -14,11 +15,16 @@ use super::WireError;
 use crate::ckks::encoding::Complex;
 use crate::ckks::params::{CkksContext, CkksParams};
 use crate::ckks::{EvalKeySpec, Evaluator, KeyGen};
+use crate::cluster::{
+    demo_workload, run_pipelined, run_sync, serve_gateway, ClusterClient, ClusterError,
+    ClusterOptions, GatewayOptions,
+};
 use crate::coordinator::ServeConfig;
 use crate::util::cli::Args;
 use crate::util::rng::Pcg64;
 
 pub const DEFAULT_ADDR: &str = "127.0.0.1:7009";
+pub const DEFAULT_GATEWAY_ADDR: &str = "127.0.0.1:7050";
 
 /// Parameter presets addressable from the command line.
 pub fn parse_params(name: &str) -> Option<CkksParams> {
@@ -134,6 +140,293 @@ pub fn run_client(args: &Args) -> i32 {
             2
         }
     }
+}
+
+/// Parse a `--shards a,b,c` list: trimmed, non-empty, duplicate-free —
+/// empty or repeated entries become a printable error instead of
+/// tripping asserts deeper in the ring/pool.
+fn parse_shards(list: &str) -> Result<Vec<String>, String> {
+    let shards: Vec<String> = list
+        .split(',')
+        .map(|s| s.trim().to_string())
+        .filter(|s| !s.is_empty())
+        .collect();
+    if shards.is_empty() {
+        return Err("--shards needs at least one address".into());
+    }
+    let mut seen = std::collections::BTreeSet::new();
+    for s in &shards {
+        if !seen.insert(s) {
+            return Err(format!("duplicate shard address '{s}' in --shards"));
+        }
+    }
+    Ok(shards)
+}
+
+/// Cluster endpoints: `--shards a,b,c` (direct ring) or `--connect addr`
+/// (a single endpoint — typically a gateway, which *is* a one-entry
+/// ring downstream).
+fn cluster_endpoints(args: &Args) -> Result<Vec<String>, String> {
+    if let Some(list) = args.opt("shards") {
+        return parse_shards(list);
+    }
+    Ok(vec![args.opt("connect").unwrap_or(DEFAULT_GATEWAY_ADDR).to_string()])
+}
+
+fn cluster_options(args: &Args) -> ClusterOptions {
+    let d = ClusterOptions::default();
+    ClusterOptions {
+        window: args.opt_usize("window", d.window),
+        vnodes: args.opt_usize("vnodes", d.vnodes),
+        connect_timeout: Duration::from_secs(args.opt_u64("connect-timeout", 15)),
+        ..d
+    }
+}
+
+/// `cluster <serve|quickstart|metrics|shutdown>`:
+///
+/// ```text
+/// fhecore cluster serve --listen 127.0.0.1:7050 \
+///     --shards 127.0.0.1:7051,127.0.0.1:7052 [--params toy] [--window N]
+/// fhecore cluster quickstart --connect 127.0.0.1:7050 [--ops 16]
+/// fhecore cluster quickstart --shards a,b        (ring directly, no gateway)
+/// fhecore cluster metrics  --connect ... | --shards ...
+/// fhecore cluster shutdown --connect ... | --shards ...
+/// ```
+pub fn run_cluster(args: &Args) -> i32 {
+    let pname = args.opt("params").unwrap_or("toy");
+    let Some(params) = parse_params(pname) else {
+        eprintln!("unknown params preset '{pname}' (toy|medium)");
+        return 2;
+    };
+    let mode = args.positional.first().map(String::as_str).unwrap_or("quickstart");
+    match mode {
+        "serve" => {
+            let listen = args.opt("listen").unwrap_or(DEFAULT_GATEWAY_ADDR);
+            let Some(shards_arg) = args.opt("shards") else {
+                eprintln!("cluster serve needs --shards a,b,...");
+                return 2;
+            };
+            let shards = match parse_shards(shards_arg) {
+                Ok(s) => s,
+                Err(why) => {
+                    eprintln!("cluster serve: {why}");
+                    return 2;
+                }
+            };
+            let listener = match TcpListener::bind(listen) {
+                Ok(l) => l,
+                Err(e) => {
+                    eprintln!("cannot bind {listen}: {e}");
+                    return 1;
+                }
+            };
+            println!(
+                "fhecore-gateway: listening on {listen}, fronting {} shard(s) {:?} \
+                 (params {pname}, fingerprint {:#018x})",
+                shards.len(),
+                shards,
+                params_fingerprint(&params)
+            );
+            let opts = GatewayOptions {
+                params,
+                shards,
+                cluster: cluster_options(args),
+                verbose: args.has_flag("verbose"),
+            };
+            match serve_gateway(listener, opts) {
+                Ok(()) => {
+                    println!("fhecore-gateway: stopped");
+                    0
+                }
+                Err(e) => {
+                    eprintln!("fhecore-gateway: {e}");
+                    1
+                }
+            }
+        }
+        "quickstart" => {
+            let endpoints = match cluster_endpoints(args) {
+                Ok(e) => e,
+                Err(why) => {
+                    eprintln!("cluster {mode}: {why}");
+                    return 2;
+                }
+            };
+            let ops = args.opt_usize("ops", 16);
+            match cluster_quickstart(&endpoints, params, cluster_options(args), ops) {
+                Ok(true) => 0,
+                Ok(false) => 1,
+                Err(e) => {
+                    eprintln!("cluster quickstart failed: {e}");
+                    1
+                }
+            }
+        }
+        "metrics" => {
+            let endpoints = match cluster_endpoints(args) {
+                Ok(e) => e,
+                Err(why) => {
+                    eprintln!("cluster {mode}: {why}");
+                    return 2;
+                }
+            };
+            match ClusterClient::connect(&endpoints, params, cluster_options(args)) {
+                Ok(cluster) => match cluster.metrics() {
+                    Ok(m) => {
+                        for (shard, s) in &m.shards {
+                            println!(
+                                "shard {shard}: served {} (fhec {} cuda {}), depths \
+                                 [{}, {}], rejected {}",
+                                s.served,
+                                s.fhec_served,
+                                s.cuda_served,
+                                s.fhec_depth,
+                                s.cuda_depth,
+                                s.rejected
+                            );
+                        }
+                        let t = m.total();
+                        println!(
+                            "cluster total: served {} (fhec {} cuda {}), depths [{}, {}], \
+                             rejected {}, mean service {:.1} us",
+                            t.served,
+                            t.fhec_served,
+                            t.cuda_served,
+                            t.fhec_depth,
+                            t.cuda_depth,
+                            t.rejected,
+                            t.mean_service_us
+                        );
+                        0
+                    }
+                    Err(e) => {
+                        eprintln!("cluster metrics failed: {e}");
+                        1
+                    }
+                },
+                Err(e) => {
+                    eprintln!("cluster connect failed: {e}");
+                    1
+                }
+            }
+        }
+        "shutdown" => {
+            let endpoints = match cluster_endpoints(args) {
+                Ok(e) => e,
+                Err(why) => {
+                    eprintln!("cluster {mode}: {why}");
+                    return 2;
+                }
+            };
+            match ClusterClient::connect(&endpoints, params, cluster_options(args))
+                .and_then(|c| c.shutdown())
+            {
+                Ok(()) => {
+                    println!("sent shutdown to {endpoints:?}");
+                    0
+                }
+                Err(e) => {
+                    eprintln!("cluster shutdown failed: {e}");
+                    1
+                }
+            }
+        }
+        other => {
+            eprintln!("unknown cluster mode '{other}' (serve|quickstart|metrics|shutdown)");
+            2
+        }
+    }
+}
+
+/// The cluster quickstart: push keys through the endpoint(s) — key
+/// replication with fingerprint verification — then run the mixed
+/// FHEC/CUDA demo workload twice, synchronously and pipelined
+/// (completions consumed out of admission order), requiring every
+/// result to match a local `Evaluator` **bit for bit**. Also measures
+/// both passes and dumps `BENCH_cluster.json` (`pipelined/opsN` vs
+/// `sync/opsN`) through the bench harness, so the bench-archive flow
+/// records the pipelining speedup.
+///
+/// Returns `Ok(true)` on PASS — the CI cluster smoke gates on it.
+pub fn cluster_quickstart(
+    endpoints: &[String],
+    params: CkksParams,
+    opts: ClusterOptions,
+    n_ops: usize,
+) -> Result<bool, ClusterError> {
+    // Client side: the only place secret material exists.
+    let ctx = CkksContext::new(params.clone());
+    let mut rng = Pcg64::new(42);
+    let keygen = KeyGen::new(&ctx, &mut rng);
+    let spec = EvalKeySpec::relin_only().with_rotations(&[3]);
+    let keys = Arc::new(keygen.eval_key_set(&ctx, &spec, &mut rng));
+    let dec = keygen.decryptor();
+
+    let cluster = ClusterClient::connect(endpoints, params.clone(), opts)?;
+    let pushed = cluster.push_keys(&keys)?;
+    println!(
+        "replicated {pushed} evaluation keys to {} endpoint(s) {endpoints:?} \
+         (fingerprint-verified)",
+        endpoints.len()
+    );
+
+    // Local reference over the identical key set — expectations are
+    // computed as the workload is built.
+    let ev = Evaluator::new(CkksContext::new(params), keys.clone());
+    let wl = demo_workload(&ev, &keygen.encryptor(), &mut rng, n_ops);
+
+    let sync_out = run_sync(&cluster, &wl)?;
+    let pipe_out = run_pipelined(&cluster, &wl)?;
+    let sync_exact = sync_out == wl.expected;
+    let pipe_exact = pipe_out == wl.expected;
+    println!(
+        "sync pass: {} | pipelined (out-of-order) pass: {}",
+        if sync_exact { "bit-exact" } else { "MISMATCH" },
+        if pipe_exact { "bit-exact" } else { "MISMATCH" },
+    );
+
+    // Decrypt one result as an end-to-end sanity check (op 0 is Square
+    // of the 0.01*((0+j)%20) ramp).
+    let back = dec.decrypt_to_slots(&ctx, &pipe_out[0]);
+    let slots = ctx.params.slots();
+    let worst = back
+        .iter()
+        .enumerate()
+        .map(|(j, c)| {
+            let x = 0.01 * (j % 20) as f64;
+            (c.re - x * x).abs()
+        })
+        .take(slots)
+        .fold(0.0f64, f64::max);
+    println!("decrypted max error vs plaintext: {worst:.2e}");
+
+    // Throughput: the pipelined window should beat one-at-a-time by
+    // keeping every shard's lanes fed.
+    let mut bench = crate::bench_harness::Bench::new("cluster");
+    let pipe_id = format!("pipelined/ops{n_ops}");
+    let sync_id = format!("sync/ops{n_ops}");
+    let sp = bench.run(&pipe_id, || {
+        run_pipelined(&cluster, &wl).expect("pipelined workload");
+    });
+    bench.throughput(&pipe_id, n_ops as f64);
+    let ss = bench.run(&sync_id, || {
+        run_sync(&cluster, &wl).expect("sync workload");
+    });
+    bench.throughput(&sync_id, n_ops as f64);
+    let speedup = ss.median_ns / sp.median_ns;
+    println!(
+        "pipelined {:.1} ops/s vs sync {:.1} ops/s — {speedup:.2}x",
+        n_ops as f64 / (sp.median_ns / 1e9),
+        n_ops as f64 / (ss.median_ns / 1e9),
+    );
+    if let Err(e) = bench.write_json() {
+        eprintln!("cluster quickstart: bench dump failed: {e}");
+    }
+
+    let pass = sync_exact && pipe_exact && worst < 1e-2;
+    println!("cluster quickstart: {}", if pass { "PASS" } else { "FAIL" });
+    Ok(pass)
 }
 
 /// Print the server's metrics snapshot (the `Metrics` RPC).

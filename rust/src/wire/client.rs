@@ -9,9 +9,12 @@
 //! over the same parameter set — they are deterministic, so local and
 //! server execution produce bit-identical ciphertexts.
 //!
-//! Backpressure: a server `Busy` frame is retried with a small backoff
-//! (`busy_retries` x `busy_backoff`) before surfacing as
-//! [`WireError::Busy`].
+//! Backpressure: a server `Busy` frame is retried on the capped
+//! exponential schedule [`super::busy_backoff_delay`] (attempt 0 sleeps
+//! `busy_backoff`, doubling up to `busy_backoff_cap`, at most
+//! `busy_retries` times) before surfacing as [`WireError::Busy`] — the
+//! same schedule the cluster's pipelined `ClusterClient` uses, so a
+//! saturated shard is never hammered at a constant rate.
 
 use std::io::{BufReader, Write};
 use std::net::TcpStream;
@@ -21,11 +24,58 @@ use std::time::{Duration, Instant};
 
 use super::codec::encode_eval_key_set;
 use super::protocol::{encode_op_request, Message, WireOp};
-use super::{params_fingerprint, Frame, WireError, WIRE_VERSION};
+use super::{busy_backoff_delay, fnv1a64, params_fingerprint, Frame, WireError, WIRE_VERSION};
 use crate::ckks::linear::SlotMatrix;
 use crate::ckks::params::{CkksContext, CkksParams};
 use crate::ckks::{Ciphertext, EvalKeySet, Evaluator};
 use crate::coordinator::MetricsSnapshot;
+
+/// Dial `addr`, retrying refused/unreachable sockets until `timeout`
+/// elapses, then run the `Hello`/`HelloAck` handshake. Fails fast on
+/// version or parameter mismatch (retrying cannot heal those). Returns
+/// the connected stream with nothing buffered past the ack — the peer
+/// stays silent until the next request — so callers can wrap their own
+/// reader/writer halves. Shared by [`RemoteEvaluator`] and the
+/// cluster's `ShardConn`.
+pub(crate) fn connect_handshake(
+    addr: &str,
+    fingerprint: u64,
+    timeout: Duration,
+) -> Result<TcpStream, WireError> {
+    let deadline = Instant::now() + timeout;
+    let stream = loop {
+        match TcpStream::connect(addr) {
+            Ok(s) => break s,
+            Err(e) => {
+                if Instant::now() >= deadline {
+                    return Err(WireError::Io(e));
+                }
+                std::thread::sleep(Duration::from_millis(100));
+            }
+        }
+    };
+    let _ = stream.set_nodelay(true);
+    let mut reader = BufReader::new(stream.try_clone()?);
+    let mut writer = stream.try_clone()?;
+    Message::hello(fingerprint).encode().write_to(&mut writer)?;
+    writer.flush()?;
+    match Message::decode(&Frame::read_from(&mut reader)?)? {
+        Message::HelloAck { version, fingerprint: fp } => {
+            if version != WIRE_VERSION {
+                return Err(WireError::Version { got: version, want: WIRE_VERSION });
+            }
+            if fp != fingerprint {
+                return Err(WireError::Params { got: fp, want: fingerprint });
+            }
+            Ok(stream)
+        }
+        Message::Error { code, detail, .. } => Err(WireError::Remote { code, detail }),
+        other => Err(WireError::Protocol(format!(
+            "expected HelloAck, got tag {:#04x}",
+            other.tag()
+        ))),
+    }
+}
 
 struct Channel {
     reader: BufReader<TcpStream>,
@@ -58,7 +108,10 @@ pub struct RemoteEvaluator {
     local: Evaluator,
     /// How many times a `Busy` response is retried before surfacing.
     pub busy_retries: u32,
+    /// First-retry sleep; attempt k sleeps `busy_backoff * 2^k`...
     pub busy_backoff: Duration,
+    /// ...saturating at this cap (see [`super::busy_backoff_delay`]).
+    pub busy_backoff_cap: Duration,
 }
 
 impl RemoteEvaluator {
@@ -77,49 +130,18 @@ impl RemoteEvaluator {
         params: CkksParams,
         timeout: Duration,
     ) -> Result<Self, WireError> {
-        let deadline = Instant::now() + timeout;
-        let stream = loop {
-            match TcpStream::connect(addr) {
-                Ok(s) => break s,
-                Err(e) => {
-                    if Instant::now() >= deadline {
-                        return Err(WireError::Io(e));
-                    }
-                    std::thread::sleep(Duration::from_millis(100));
-                }
-            }
-        };
-        let _ = stream.set_nodelay(true);
-        let reader = BufReader::new(stream.try_clone()?);
-        let mut ch = Channel { reader, writer: stream };
         let fingerprint = params_fingerprint(&params);
-        ch.send(&Message::hello(fingerprint))?;
-        match ch.recv()? {
-            Message::HelloAck { version, fingerprint: fp } => {
-                if version != WIRE_VERSION {
-                    return Err(WireError::Version { got: version, want: WIRE_VERSION });
-                }
-                if fp != fingerprint {
-                    return Err(WireError::Params { got: fp, want: fingerprint });
-                }
-            }
-            Message::Error { code, detail } => {
-                return Err(WireError::Remote { code, detail })
-            }
-            other => {
-                return Err(WireError::Protocol(format!(
-                    "expected HelloAck, got tag {:#04x}",
-                    other.tag()
-                )))
-            }
-        }
+        let stream = connect_handshake(addr, fingerprint, timeout)?;
+        let reader = BufReader::new(stream.try_clone()?);
+        let ch = Channel { reader, writer: stream };
         Ok(Self {
             io: Mutex::new(ch),
             next_id: AtomicU64::new(1),
             fingerprint,
             local: Evaluator::without_keys(CkksContext::new(params)),
             busy_retries: 50,
-            busy_backoff: Duration::from_millis(4),
+            busy_backoff: Duration::from_millis(1),
+            busy_backoff_cap: Duration::from_millis(50),
         })
     }
 
@@ -141,15 +163,25 @@ impl RemoteEvaluator {
     }
 
     /// Serialize (seed-compressed) and push the public key set; the
-    /// server builds its evaluator + coordinator from it. Returns the
-    /// server-confirmed key count.
+    /// server builds its evaluator + coordinator from it. The v2
+    /// `KeysAck` echoes the blob's FNV-1a fingerprint — verified here
+    /// against the bytes we sent. Returns the server-confirmed key count.
     pub fn push_keys(&self, keys: &EvalKeySet) -> Result<u32, WireError> {
         let blob = encode_eval_key_set(keys, self.fingerprint, true);
+        let want_fp = fnv1a64(&blob);
         let mut ch = self.io.lock().unwrap();
         ch.send(&Message::PushKeys { blob })?;
         match ch.recv()? {
-            Message::KeysAck { keys } => Ok(keys),
-            Message::Error { code, detail } => Err(WireError::Remote { code, detail }),
+            Message::KeysAck { keys, fingerprint } => {
+                if fingerprint != want_fp {
+                    return Err(WireError::Protocol(format!(
+                        "key blob fingerprint mismatch: sent {want_fp:#018x}, \
+                         server installed {fingerprint:#018x}"
+                    )));
+                }
+                Ok(keys)
+            }
+            Message::Error { code, detail, .. } => Err(WireError::Remote { code, detail }),
             other => Err(WireError::Protocol(format!(
                 "expected KeysAck, got tag {:#04x}",
                 other.tag()
@@ -163,7 +195,7 @@ impl RemoteEvaluator {
         ch.send(&Message::MetricsReq)?;
         match ch.recv()? {
             Message::MetricsResp(snap) => Ok(snap),
-            Message::Error { code, detail } => Err(WireError::Remote { code, detail }),
+            Message::Error { code, detail, .. } => Err(WireError::Remote { code, detail }),
             other => Err(WireError::Protocol(format!(
                 "expected MetricsResp, got tag {:#04x}",
                 other.tag()
@@ -221,9 +253,10 @@ impl RemoteEvaluator {
         self.call(WireOp::Rescale, a, None)
     }
 
-    /// One synchronous op round trip, retrying through `Busy` frames.
-    /// The request is serialized exactly once, straight from the borrowed
-    /// operands (no clone); retries resend the same frame bytes.
+    /// One synchronous op round trip, retrying through `Busy` frames on
+    /// the shared capped-exponential schedule. The request is serialized
+    /// exactly once, straight from the borrowed operands (no clone);
+    /// retries resend the same frame bytes.
     fn call(
         &self,
         op: WireOp,
@@ -249,10 +282,14 @@ impl RemoteEvaluator {
                     if attempt >= self.busy_retries {
                         return Err(WireError::Busy { depth });
                     }
+                    std::thread::sleep(busy_backoff_delay(
+                        attempt,
+                        self.busy_backoff,
+                        self.busy_backoff_cap,
+                    ));
                     attempt += 1;
-                    std::thread::sleep(self.busy_backoff);
                 }
-                Message::Error { code, detail } => {
+                Message::Error { code, detail, .. } => {
                     return Err(WireError::Remote { code, detail })
                 }
                 other => {

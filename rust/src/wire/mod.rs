@@ -23,7 +23,9 @@
 //!   `Metrics` and `Shutdown`.
 //! * [`server`] — a TCP front for the existing `Coordinator`: one
 //!   reader thread per connection feeds `submit`, a writer thread
-//!   streams responses back in admission order, and `QueueFull`
+//!   streams responses back in **completion order** (protocol v2:
+//!   responses are matched to requests by their `u64` id, so a slow op
+//!   never head-of-line-blocks the connection), and `QueueFull`
 //!   backpressure maps to a typed `Busy` frame instead of a stall.
 //! * [`client`] — [`client::RemoteEvaluator`], whose
 //!   `mul`/`rotate`/`conjugate`/`hom_linear` signatures mirror the
@@ -52,7 +54,27 @@ pub const WIRE_MAGIC: [u8; 4] = *b"FHEC";
 
 /// Wire format version. Bump on any incompatible layout change; readers
 /// reject mismatches with [`WireError::Version`].
-pub const WIRE_VERSION: u16 = 1;
+///
+/// v2 (the cluster protocol): `OpResponse`s may return **out of
+/// admission order** (id-matched, pipelined clients), `KeysAck` carries
+/// the FNV-1a fingerprint of the received key blob (per-shard
+/// replication verification), and `Error` frames are tagged with the
+/// request id they answer (0 = connection-level).
+pub const WIRE_VERSION: u16 = 2;
+
+/// Capped exponential backoff for `Busy` retries, shared by
+/// [`client::RemoteEvaluator`] and the cluster's pipelined
+/// `ClusterClient`: attempt 0 sleeps `base`, each further attempt
+/// doubles, saturating at `cap` — a saturated shard sees geometrically
+/// decaying retry pressure instead of a constant-rate hammer.
+pub fn busy_backoff_delay(
+    attempt: u32,
+    base: std::time::Duration,
+    cap: std::time::Duration,
+) -> std::time::Duration {
+    let mult = 1u32 << attempt.min(20);
+    base.saturating_mul(mult).min(cap)
+}
 
 /// Everything that can go wrong on the wire.
 #[derive(Debug)]
@@ -161,6 +183,19 @@ mod tests {
         assert_eq!(fnv1a64(b""), 0xcbf2_9ce4_8422_2325);
         assert_eq!(fnv1a64(b"a"), 0xaf63_dc4c_8601_ec8c);
         assert_eq!(fnv1a64(b"foobar"), 0x8594_4171_f739_67e8);
+    }
+
+    #[test]
+    fn busy_backoff_is_capped_exponential() {
+        use std::time::Duration;
+        let base = Duration::from_millis(1);
+        let cap = Duration::from_millis(50);
+        assert_eq!(busy_backoff_delay(0, base, cap), Duration::from_millis(1));
+        assert_eq!(busy_backoff_delay(1, base, cap), Duration::from_millis(2));
+        assert_eq!(busy_backoff_delay(5, base, cap), Duration::from_millis(32));
+        // Saturates at the cap, including absurd attempt counts.
+        assert_eq!(busy_backoff_delay(6, base, cap), cap);
+        assert_eq!(busy_backoff_delay(u32::MAX, base, cap), cap);
     }
 
     #[test]

@@ -7,18 +7,26 @@
 //! | 0x01 | `Hello`       | c -> s    | version u16, params fingerprint u64 |
 //! | 0x02 | `HelloAck`    | s -> c    | version u16, params fingerprint u64 |
 //! | 0x03 | `PushKeys`    | c -> s    | `EvalKeySet` blob (seed-compressed) |
-//! | 0x04 | `KeysAck`     | s -> c    | key count u32 |
+//! | 0x04 | `KeysAck`     | s -> c    | key count u32, blob fingerprint u64 |
 //! | 0x05 | `OpRequest`   | c -> s    | id u64, op, ct, optional ct2 |
 //! | 0x06 | `OpResponse`  | s -> c    | id u64, ok/err, ct or MissingKey, timings |
 //! | 0x07 | `Busy`        | s -> c    | id u64, lane depth u32 (backpressure) |
 //! | 0x08 | `MetricsReq`  | c -> s    | (empty) |
 //! | 0x09 | `MetricsResp` | s -> c    | `MetricsSnapshot` |
-//! | 0x0A | `Error`       | s -> c    | code u16, utf-8 detail |
+//! | 0x0A | `Error`       | s -> c    | id u64 (0 = connection), code u16, detail |
 //! | 0x0B | `Shutdown`    | c -> s    | (empty) |
 //!
 //! `WireOp` mirrors `coordinator::OpKind` one-for-one, carrying the
 //! matrix operand for `HomLinear` inline; the second ciphertext operand
 //! of the binary ops travels in the enclosing `OpRequest`.
+//!
+//! **Ordering (protocol v2).** Every op-scoped server message
+//! (`OpResponse`, `Busy`, op-level `Error`) carries the `u64` id of the
+//! request it answers, and the server streams them in **completion
+//! order**, not admission order. A client may keep any number of
+//! `OpRequest`s in flight and match responses by id; `KeysAck`'s blob
+//! fingerprint (FNV-1a over the pushed bytes) lets a replicating
+//! gateway verify every shard installed the identical key set.
 
 use super::codec::{put_bytes, put_f64, put_u16, put_u32, put_u64, put_u8, Reader};
 use super::codec::{WireRead, WireWrite};
@@ -112,7 +120,9 @@ pub enum Message {
     /// Body is a full `EvalKeySet` blob (header + payload); it is decoded
     /// lazily at the point where a context is available.
     PushKeys { blob: Vec<u8> },
-    KeysAck { keys: u32 },
+    /// `fingerprint` is FNV-1a 64 over the received blob bytes — the
+    /// replication check a cluster gateway compares across shards.
+    KeysAck { keys: u32, fingerprint: u64 },
     OpRequest {
         id: u64,
         op: WireOp,
@@ -130,7 +140,9 @@ pub enum Message {
     Busy { id: u64, depth: u32 },
     MetricsReq,
     MetricsResp(MetricsSnapshot),
-    Error { code: u16, detail: String },
+    /// `id` scopes the error to one in-flight request; 0 means the
+    /// error concerns the connection itself (handshake, framing...).
+    Error { id: u64, code: u16, detail: String },
     Shutdown,
 }
 
@@ -203,8 +215,9 @@ impl Message {
             Message::PushKeys { blob } => {
                 put_bytes(&mut body, blob);
             }
-            Message::KeysAck { keys } => {
+            Message::KeysAck { keys, fingerprint } => {
                 put_u32(&mut body, *keys);
+                put_u64(&mut body, *fingerprint);
             }
             Message::OpRequest { id, op, ct, ct2 } => {
                 return encode_op_request(*id, op, ct, ct2.as_ref());
@@ -241,7 +254,8 @@ impl Message {
             Message::MetricsResp(snap) => {
                 snap.wire_write(&mut body);
             }
-            Message::Error { code, detail } => {
+            Message::Error { id, code, detail } => {
+                put_u64(&mut body, *id);
                 put_u16(&mut body, *code);
                 put_bytes(&mut body, detail.as_bytes());
             }
@@ -257,7 +271,7 @@ impl Message {
                 Message::HelloAck { version: r.u16()?, fingerprint: r.u64()? }
             }
             TAG_PUSH_KEYS => Message::PushKeys { blob: r.bytes()?.to_vec() },
-            TAG_KEYS_ACK => Message::KeysAck { keys: r.u32()? },
+            TAG_KEYS_ACK => Message::KeysAck { keys: r.u32()?, fingerprint: r.u64()? },
             TAG_OP_REQUEST => {
                 let id = r.u64()?;
                 let op = WireOp::read(&mut r)?;
@@ -297,9 +311,10 @@ impl Message {
             TAG_METRICS_REQ => Message::MetricsReq,
             TAG_METRICS_RESP => Message::MetricsResp(MetricsSnapshot::wire_read(&mut r)?),
             TAG_ERROR => {
+                let id = r.u64()?;
                 let code = r.u16()?;
                 let detail = String::from_utf8_lossy(r.bytes()?).into_owned();
-                Message::Error { code, detail }
+                Message::Error { id, code, detail }
             }
             TAG_SHUTDOWN => Message::Shutdown,
             other => return Err(WireError::Corrupt(format!("unknown message tag {other}"))),
@@ -318,7 +333,7 @@ mod tests {
         let msgs = [
             Message::hello(0xABCD),
             Message::HelloAck { version: WIRE_VERSION, fingerprint: 7 },
-            Message::KeysAck { keys: 12 },
+            Message::KeysAck { keys: 12, fingerprint: 0xFEED },
             Message::Busy { id: 9, depth: 64 },
             Message::MetricsReq,
             Message::MetricsResp(MetricsSnapshot {
@@ -333,7 +348,7 @@ mod tests {
                 fhec_served: 8,
                 cuda_served: 2,
             }),
-            Message::Error { code: 2, detail: "no keys".into() },
+            Message::Error { id: 41, code: 2, detail: "no keys".into() },
             Message::Shutdown,
             Message::PushKeys { blob: vec![1, 2, 3] },
         ];
@@ -358,7 +373,7 @@ mod tests {
 
     #[test]
     fn trailing_bytes_are_rejected() {
-        let mut f = Message::KeysAck { keys: 1 }.encode();
+        let mut f = Message::KeysAck { keys: 1, fingerprint: 2 }.encode();
         f.body.push(0);
         assert!(matches!(Message::decode(&f), Err(WireError::Corrupt(_))));
     }

@@ -3,8 +3,10 @@
 //! Thread model: the accept loop spawns one **reader** thread per
 //! connection, which decodes frames and feeds `Coordinator::submit`
 //! directly, plus one **writer** thread that streams responses back in
-//! admission order (workers answer on per-request channels; the writer
-//! blocks on each in turn, so a slow op never reorders the stream).
+//! **completion order** (protocol v2): each admitted op gets a forwarder
+//! thread that blocks on its per-request channel and hands the finished
+//! `OpResponse` to the writer, so a slow op never head-of-line-blocks
+//! the ops admitted after it — pipelined clients match responses by id.
 //! `QueueFull` backpressure becomes a typed [`Message::Busy`] frame the
 //! client can retry on — the socket never stalls on an overloaded queue.
 //!
@@ -21,7 +23,7 @@ use std::sync::{Arc, Mutex};
 
 use super::codec::decode_eval_key_set;
 use super::protocol::{error_code, Message, WireOp};
-use super::{params_fingerprint, Frame, WireError, WIRE_VERSION};
+use super::{fnv1a64, params_fingerprint, Frame, WireError, WIRE_VERSION};
 use crate::ckks::encoding::Complex;
 use crate::ckks::params::{CkksContext, CkksParams};
 use crate::ckks::{Ciphertext, Evaluator, Format};
@@ -108,13 +110,6 @@ pub fn serve(listener: TcpListener, opts: ServeOptions) -> std::io::Result<()> {
     Ok(())
 }
 
-/// What the writer thread sends next: an immediate message, or a pending
-/// coordinator response to block on.
-enum WriterItem {
-    Now(Message),
-    Pending(u64, std::sync::mpsc::Receiver<Response>),
-}
-
 fn response_message(id: u64, resp: Response) -> Message {
     Message::OpResponse {
         id,
@@ -126,24 +121,85 @@ fn response_message(id: u64, resp: Response) -> Message {
     }
 }
 
-fn writer_loop(stream: TcpStream, rx: MpscReceiver<WriterItem>) {
+/// Drain the writer channel onto the socket. Senders are the reader loop
+/// (immediate messages) plus one forwarder thread per in-flight op, so
+/// frames leave in completion order; the loop ends when every sender
+/// clone is dropped — i.e. after the reader exits *and* all in-flight
+/// ops finished (graceful drain). Shared with the cluster gateway.
+pub(crate) fn writer_loop(stream: TcpStream, rx: MpscReceiver<Message>) {
     use std::io::Write;
     let mut w = std::io::BufWriter::new(stream);
-    while let Ok(item) = rx.recv() {
-        let msg = match item {
-            WriterItem::Now(m) => m,
-            WriterItem::Pending(id, rrx) => match rrx.recv() {
-                Ok(resp) => response_message(id, resp),
-                Err(_) => Message::Error {
-                    code: error_code::STOPPED,
-                    detail: "worker dropped the request".into(),
-                },
-            },
-        };
+    while let Ok(msg) = rx.recv() {
         if msg.encode().write_to(&mut w).is_err() || w.flush().is_err() {
             break;
         }
     }
+}
+
+/// Outcome of reading one inbound frame — the error-handling preamble
+/// every protocol front (single-node server, cluster gateway) shares.
+pub(crate) enum Inbound {
+    /// A decoded message to dispatch.
+    Msg(Message),
+    /// Peer closed the socket: stop reading, nothing to say.
+    Gone,
+    /// A well-framed but undecodable message: answer and keep reading.
+    Garbled(Message),
+    /// The stream itself is corrupt: answer and close.
+    Fatal(Message),
+}
+
+pub(crate) fn read_inbound<R: std::io::Read>(r: &mut R) -> Inbound {
+    let frame = match Frame::read_from(r) {
+        Ok(f) => f,
+        Err(WireError::Io(_)) => return Inbound::Gone,
+        Err(e) => {
+            return Inbound::Fatal(Message::Error {
+                id: 0,
+                code: error_code::DECODE,
+                detail: e.to_string(),
+            })
+        }
+    };
+    match Message::decode(&frame) {
+        Ok(m) => Inbound::Msg(m),
+        Err(e) => Inbound::Garbled(Message::Error {
+            id: 0,
+            code: error_code::DECODE,
+            detail: e.to_string(),
+        }),
+    }
+}
+
+/// Validate a client `Hello` against our version + params fingerprint.
+/// `Ok` is the `HelloAck` to send; `Err` is the typed handshake error
+/// (send, then close). `who` names the responder in the detail text.
+pub(crate) fn hello_reply(
+    version: u16,
+    fingerprint: u64,
+    ours: u64,
+    who: &str,
+) -> Result<Message, Message> {
+    if version != WIRE_VERSION {
+        return Err(Message::Error {
+            id: 0,
+            code: error_code::HANDSHAKE,
+            detail: format!(
+                "wire version mismatch: client {version}, {who} {WIRE_VERSION}"
+            ),
+        });
+    }
+    if fingerprint != ours {
+        return Err(Message::Error {
+            id: 0,
+            code: error_code::HANDSHAKE,
+            detail: format!(
+                "params fingerprint mismatch: client {fingerprint:#018x}, \
+                 {who} {ours:#018x}"
+            ),
+        });
+    }
+    Ok(Message::HelloAck { version: WIRE_VERSION, fingerprint: ours })
 }
 
 /// A ciphertext is only admissible if it lives on exactly the chain this
@@ -183,7 +239,7 @@ fn handle_conn(stream: TcpStream, shared: Arc<ServerShared>, listen_addr: Socket
             return;
         }
     };
-    let (tx, rx) = channel::<WriterItem>();
+    let (tx, rx) = channel::<Message>();
     let writer = std::thread::spawn(move || writer_loop(stream, rx));
     let shutdown = reader_loop(reader_stream, &shared, &tx);
     drop(tx);
@@ -202,59 +258,42 @@ fn handle_conn(stream: TcpStream, shared: Arc<ServerShared>, listen_addr: Socket
 fn reader_loop(
     stream: TcpStream,
     shared: &ServerShared,
-    tx: &MpscSender<WriterItem>,
+    tx: &MpscSender<Message>,
 ) -> bool {
     let mut r = std::io::BufReader::new(stream);
     let send = |m: Message| {
-        let _ = tx.send(WriterItem::Now(m));
+        let _ = tx.send(m);
     };
     loop {
-        let frame = match Frame::read_from(&mut r) {
-            Ok(f) => f,
-            Err(WireError::Io(_)) => return false, // EOF / peer gone
-            Err(e) => {
-                send(Message::Error { code: error_code::DECODE, detail: e.to_string() });
-                return false;
-            }
-        };
-        let msg = match Message::decode(&frame) {
-            Ok(m) => m,
-            Err(e) => {
-                send(Message::Error { code: error_code::DECODE, detail: e.to_string() });
+        let msg = match read_inbound(&mut r) {
+            Inbound::Msg(m) => m,
+            Inbound::Gone => return false, // EOF / peer gone
+            Inbound::Garbled(err) => {
+                send(err);
                 continue;
+            }
+            Inbound::Fatal(err) => {
+                send(err);
+                return false;
             }
         };
         match msg {
             Message::Hello { version, fingerprint } => {
-                if version != WIRE_VERSION {
-                    send(Message::Error {
-                        code: error_code::HANDSHAKE,
-                        detail: format!(
-                            "wire version mismatch: client {version}, server {WIRE_VERSION}"
-                        ),
-                    });
-                    return false;
+                match hello_reply(version, fingerprint, shared.fingerprint, "server") {
+                    Ok(ack) => send(ack),
+                    Err(err) => {
+                        send(err);
+                        return false;
+                    }
                 }
-                if fingerprint != shared.fingerprint {
-                    send(Message::Error {
-                        code: error_code::HANDSHAKE,
-                        detail: format!(
-                            "params fingerprint mismatch: client {fingerprint:#018x}, \
-                             server {:#018x}",
-                            shared.fingerprint
-                        ),
-                    });
-                    return false;
-                }
-                send(Message::HelloAck {
-                    version: WIRE_VERSION,
-                    fingerprint: shared.fingerprint,
-                });
             }
             Message::PushKeys { blob } => {
                 // Derive a fresh context deterministically from the
                 // configured params (identical tower by construction).
                 let ctx = CkksContext::new(shared.params.clone());
+                // Fingerprint of the bytes as received: what a
+                // replicating gateway compares across shards.
+                let blob_fp = fnv1a64(&blob);
                 match decode_eval_key_set(&ctx, &blob, shared.fingerprint) {
                     Ok(keys) => {
                         let nkeys = keys.len() as u32;
@@ -274,9 +313,10 @@ fn reader_loop(
                         if shared.verbose {
                             println!("fhecore-serve: installed key set ({nkeys} keys)");
                         }
-                        send(Message::KeysAck { keys: nkeys });
+                        send(Message::KeysAck { keys: nkeys, fingerprint: blob_fp });
                     }
                     Err(e) => send(Message::Error {
+                        id: 0,
                         code: error_code::DECODE,
                         detail: format!("bad key set: {e}"),
                     }),
@@ -286,6 +326,7 @@ fn reader_loop(
                 let guard = shared.engine.lock().unwrap();
                 let Some(engine) = guard.as_ref() else {
                     send(Message::Error {
+                        id,
                         code: error_code::NO_KEYS,
                         detail: "no evaluation keys pushed yet".into(),
                     });
@@ -298,7 +339,7 @@ fn reader_loop(
                     }
                 }
                 if let Some(why) = invalid {
-                    send(Message::Error { code: error_code::BAD_REQUEST, detail: why });
+                    send(Message::Error { id, code: error_code::BAD_REQUEST, detail: why });
                     continue;
                 }
                 let kind = op.kind();
@@ -315,16 +356,39 @@ fn reader_loop(
                 }
                 match engine.coord.submit(req) {
                     Ok(rrx) => {
-                        let _ = tx.send(WriterItem::Pending(id, rrx));
+                        // Completion-order forwarder: block on this op's
+                        // channel off the reader thread and hand the
+                        // finished response straight to the writer — ops
+                        // admitted later may overtake it (protocol v2).
+                        // One thread per in-flight op is deliberate: the
+                        // count is bounded by the per-lane max_queue
+                        // (Busy beyond that), and the per-op channel is
+                        // what turns a worker dropping a request (panic
+                        // containment path) into a typed error instead
+                        // of a silent client hang.
+                        let tx = tx.clone();
+                        std::thread::spawn(move || {
+                            let msg = match rrx.recv() {
+                                Ok(resp) => response_message(id, resp),
+                                Err(_) => Message::Error {
+                                    id,
+                                    code: error_code::STOPPED,
+                                    detail: "worker dropped the request".into(),
+                                },
+                            };
+                            let _ = tx.send(msg);
+                        });
                     }
                     Err((_, SubmitError::QueueFull { depth })) => {
                         send(Message::Busy { id, depth: depth as u32 })
                     }
                     Err((_, SubmitError::BadRequest(why))) => send(Message::Error {
+                        id,
                         code: error_code::BAD_REQUEST,
                         detail: why.to_string(),
                     }),
                     Err((_, SubmitError::Stopped)) => send(Message::Error {
+                        id,
                         code: error_code::STOPPED,
                         detail: "coordinator stopped".into(),
                     }),
@@ -346,6 +410,7 @@ fn reader_loop(
             }
             other => {
                 send(Message::Error {
+                    id: 0,
                     code: error_code::BAD_REQUEST,
                     detail: format!("unexpected message tag {:#04x}", other.tag()),
                 });

@@ -1,0 +1,182 @@
+//! Cluster integration over real loopback TCP: two `wire::serve` shards,
+//! key replication, pipelined out-of-order completion bit-exact against
+//! a local `Evaluator`, the gateway front, and ring failover when a
+//! shard goes away mid-stream.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::{Duration, Instant};
+
+use fhecore::ckks::params::{CkksContext, CkksParams};
+use fhecore::ckks::{EvalKeySpec, Evaluator, KeyGen};
+use fhecore::cluster::{
+    demo_workload, run_pipelined, run_sync, serve_gateway, ClusterClient, ClusterOptions,
+    GatewayOptions,
+};
+use fhecore::coordinator::ServeConfig;
+use fhecore::util::rng::Pcg64;
+use fhecore::wire::{serve, RemoteEvaluator, ServeOptions};
+
+fn spawn_shard(params: CkksParams) -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = ServeOptions {
+        params,
+        serve: ServeConfig {
+            fhec_workers: 2,
+            cuda_workers: 1,
+            max_batch: 4,
+            linger: Duration::from_millis(1),
+            max_queue: 64,
+        },
+        verbose: false,
+    };
+    let handle = std::thread::spawn(move || serve(listener, opts).expect("shard run"));
+    (addr, handle)
+}
+
+fn spawn_gateway(
+    params: CkksParams,
+    shards: Vec<String>,
+) -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind gateway port");
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = GatewayOptions {
+        params,
+        shards,
+        cluster: ClusterOptions::default(),
+        verbose: false,
+    };
+    let handle =
+        std::thread::spawn(move || serve_gateway(listener, opts).expect("gateway run"));
+    (addr, handle)
+}
+
+/// Acceptance-shaped test: keys pushed **through the gateway** replicate
+/// to both shards (fingerprint-verified acks), a 16-op pipelined
+/// mixed-class workload completes out of admission order bit-identical
+/// to a local `Evaluator`, the synchronous path agrees, metrics
+/// aggregate across shards, and the key replication is proven by
+/// running an op against each shard directly without pushing again.
+#[test]
+fn gateway_pipelined_out_of_order_matches_local_bit_for_bit() {
+    let params = CkksParams::toy();
+    let (addr_a, shard_a) = spawn_shard(params.clone());
+    let (addr_b, shard_b) = spawn_shard(params.clone());
+    let (gw_addr, gateway) =
+        spawn_gateway(params.clone(), vec![addr_a.clone(), addr_b.clone()]);
+
+    // Client half: the only holder of secret material.
+    let ctx = CkksContext::new(params.clone());
+    let mut rng = Pcg64::new(0xC1057E5);
+    let kg = KeyGen::new(&ctx, &mut rng);
+    let keys = Arc::new(kg.eval_key_set(
+        &ctx,
+        &EvalKeySpec::relin_only().with_rotations(&[3]),
+        &mut rng,
+    ));
+
+    let cluster =
+        ClusterClient::connect(&[gw_addr.clone()], params.clone(), ClusterOptions::default())
+            .expect("connect to gateway");
+    let pushed = cluster.push_keys(&keys).expect("replicate keys through gateway");
+    assert_eq!(pushed as usize, keys.len());
+
+    // Local reference + mixed FHEC/CUDA workload (>= 16 ops).
+    let ev = Evaluator::new(CkksContext::new(params.clone()), keys.clone());
+    let wl = demo_workload(&ev, &kg.encryptor(), &mut rng, 16);
+
+    let pipe = run_pipelined(&cluster, &wl).expect("pipelined workload");
+    assert_eq!(pipe, wl.expected, "out-of-order completions must be bit-exact");
+    let sync = run_sync(&cluster, &wl).expect("sync workload");
+    assert_eq!(sync, wl.expected, "sync completions must be bit-exact");
+
+    // Aggregated metrics: the gateway sums both shards' counters.
+    let total = cluster.metrics().expect("metrics through gateway").total();
+    assert!(total.served >= 32, "served {}", total.served);
+    assert!(total.fhec_served >= 16, "fhec lane {}", total.fhec_served);
+    assert!(total.cuda_served >= 16, "cuda lane {}", total.cuda_served);
+
+    // Replication proof: each shard answers a key-switch op directly,
+    // with no further PushKeys — and bit-identically to the local
+    // evaluator.
+    let want = ev.rotate(&wl.inputs[0], 3).expect("local rotate");
+    for shard in [&addr_a, &addr_b] {
+        let direct =
+            RemoteEvaluator::connect_retry(shard, params.clone(), Duration::from_secs(10))
+                .expect("direct shard connect");
+        let got = direct.rotate(&wl.inputs[0], 3).expect("shard holds replicated keys");
+        assert_eq!(got, want, "shard {shard} result must be bit-exact");
+    }
+
+    // Shutdown through the gateway fans out to both shards.
+    let gw_client =
+        RemoteEvaluator::connect_retry(&gw_addr, params, Duration::from_secs(10))
+            .expect("gateway client");
+    gw_client.shutdown().expect("shutdown via gateway");
+    gateway.join().expect("gateway exits");
+    shard_a.join().expect("shard a exits");
+    shard_b.join().expect("shard b exits");
+}
+
+/// Kill one shard mid-stream: ops keyed to it fail over to the ring's
+/// next replica (typed, observable events) and every retried result is
+/// still bit-exact — safe because the key set is replicated.
+#[test]
+fn failover_to_next_replica_stays_bit_exact() {
+    let params = CkksParams::toy();
+    let (addr_a, shard_a) = spawn_shard(params.clone());
+    let (addr_b, shard_b) = spawn_shard(params.clone());
+    let shards = vec![addr_a.clone(), addr_b.clone()];
+
+    let ctx = CkksContext::new(params.clone());
+    let mut rng = Pcg64::new(0xFA110);
+    let kg = KeyGen::new(&ctx, &mut rng);
+    let keys = Arc::new(kg.eval_key_set(
+        &ctx,
+        &EvalKeySpec::relin_only().with_rotations(&[3]),
+        &mut rng,
+    ));
+
+    let cluster = ClusterClient::connect(&shards, params.clone(), ClusterOptions::default())
+        .expect("connect to both shards");
+    cluster.push_keys(&keys).expect("replicate keys");
+
+    let ev = Evaluator::new(CkksContext::new(params.clone()), keys.clone());
+
+    // Warm stream across both shards.
+    let warm = demo_workload(&ev, &kg.encryptor(), &mut rng, 8);
+    assert_eq!(run_pipelined(&cluster, &warm).expect("warm stream"), warm.expected);
+
+    // Kill shard A (graceful wire shutdown -> its socket closes); wait
+    // until the cluster observes the death.
+    RemoteEvaluator::connect_retry(&addr_a, params.clone(), Duration::from_secs(10))
+        .expect("direct connect to shard a")
+        .shutdown()
+        .expect("shutdown shard a");
+    shard_a.join().expect("shard a exits");
+    let deadline = Instant::now() + Duration::from_secs(10);
+    while cluster.live_shards().len() != 1 {
+        assert!(Instant::now() < deadline, "cluster never noticed the dead shard");
+        std::thread::sleep(Duration::from_millis(20));
+    }
+    assert_eq!(cluster.live_shards(), vec![addr_b.clone()]);
+
+    // Mid-stream continuation: ~half of these route to the dead shard
+    // and must fail over to B, bit-exactly.
+    let cont = demo_workload(&ev, &kg.encryptor(), &mut rng, 32);
+    let got = run_pipelined(&cluster, &cont).expect("failover stream");
+    assert_eq!(got, cont.expected, "retried ops must stay bit-exact");
+    let events = cluster.failover_events();
+    assert!(
+        !events.is_empty(),
+        "32 ops over a half-dead 2-shard ring must surface failovers"
+    );
+    for event in &events {
+        assert_eq!(event.from, addr_a, "failover source is the dead shard");
+        assert_eq!(event.to, addr_b, "failover target is the surviving replica");
+    }
+
+    cluster.shutdown().expect("shutdown survivor");
+    shard_b.join().expect("shard b exits");
+}

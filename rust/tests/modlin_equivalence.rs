@@ -78,8 +78,11 @@ fn prop_four_step_cached_matches_reference_and_iterative() {
         let t = NttTable::new(n, q);
         let a: Vec<u64> = (0..n).map(|_| rng.below(q)).collect();
 
+        // The butterfly oracle — `forward` itself now rides the MLT
+        // batch path, so the independent reference is the explicit
+        // iterative entry point.
         let mut iterative = a.clone();
-        t.forward(&mut iterative);
+        t.forward_iterative(&mut iterative);
 
         // Every power-of-two factorization, including the degenerate
         // N1 = 1 and N1 = N splits.

@@ -185,7 +185,7 @@ fn corrupted_blob_is_rejected() {
 
 #[test]
 fn corrupted_frame_is_rejected() {
-    let msg = Message::KeysAck { keys: 42 };
+    let msg = Message::KeysAck { keys: 42, fingerprint: 0xF00D };
     let mut buf = Vec::new();
     msg.encode().write_to(&mut buf).unwrap();
     // Pristine bytes round trip.
