@@ -1,0 +1,182 @@
+//! Program-API benchmark: the hoisted BSGS matvec program vs the eager
+//! per-op loop, locally and across a loopback socket (whole program in
+//! one round trip vs one round trip per key-switch op). Dumps
+//! `BENCH_program.json` for the bench-archive trajectory.
+//!
+//! Outputs are asserted bit-identical across all four paths before any
+//! timing runs — the speedup must never come from computing something
+//! else.
+
+use std::hint::black_box;
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fhecore::bench_harness::Bench;
+use fhecore::ckks::encoding::Complex;
+use fhecore::ckks::linear::{hom_linear_eager, hom_linear_program, SlotMatrix};
+use fhecore::ckks::params::{CkksContext, CkksParams};
+use fhecore::ckks::{
+    bsgs_geometry, bsgs_steps, Ciphertext, EvalKeySpec, Evaluator, KeyGen,
+};
+use fhecore::coordinator::ServeConfig;
+use fhecore::util::rng::Pcg64;
+use fhecore::wire::{serve, RemoteEvaluator, ServeOptions};
+
+/// The eager wire strategy the program API replaces: every key-switch op
+/// is its own round trip (rotations remote), the key-free plaintext
+/// products and adds run client-side — deterministic, so the result is
+/// bit-identical to the fully server-side program.
+fn bsgs_eager_wire(
+    remote: &RemoteEvaluator,
+    ev: &Evaluator,
+    ct: &Ciphertext,
+    m: &SlotMatrix,
+) -> Ciphertext {
+    let s = ev.ctx.params.slots();
+    let (g, outer) = bsgs_geometry(s);
+    let rot_plain = |v: &[Complex], k: usize| -> Vec<Complex> {
+        (0..s).map(|j| v[(j + k) % s]).collect()
+    };
+    let mut baby: Vec<Option<Ciphertext>> = vec![None; g];
+    baby[0] = Some(ct.clone());
+    let mut total: Option<Ciphertext> = None;
+    for j in 0..outer {
+        let mut inner: Option<Ciphertext> = None;
+        for i in 0..g {
+            let d = i + j * g;
+            if d >= s {
+                break;
+            }
+            let diag = m.diagonal(d);
+            if diag.iter().all(|c| c.abs() < 1e-12) {
+                continue;
+            }
+            let shifted = rot_plain(&diag, s - (j * g) % s);
+            if baby[i].is_none() {
+                baby[i] = Some(remote.rotate(ct, i).expect("remote baby rotate"));
+            }
+            let b = baby[i].as_ref().unwrap();
+            let pt = ev.encode(&shifted, b.level);
+            let term = ev.mul_plain_raw(b, &pt);
+            inner = Some(match inner {
+                None => term,
+                Some(acc) => ev.add(&acc, &term),
+            });
+        }
+        if let Some(inner) = inner {
+            let rotated = if (j * g) % s == 0 {
+                inner
+            } else {
+                remote.rotate(&inner, (j * g) % s).expect("remote giant rotate")
+            };
+            total = Some(match total {
+                None => rotated,
+                Some(acc) => ev.add(&acc, &rotated),
+            });
+        }
+    }
+    ev.rescale(&total.expect("nonzero matrix"))
+}
+
+fn main() {
+    let mut bench = Bench::new("program");
+
+    let params = CkksParams::toy();
+    let ctx = CkksContext::new(params.clone());
+    let mut rng = Pcg64::new(0x9806);
+    let kg = KeyGen::new(&ctx, &mut rng);
+    let slots = ctx.params.slots();
+    let keys = Arc::new(kg.eval_key_set(
+        &ctx,
+        &EvalKeySpec::none().with_rotations(&bsgs_steps(slots)),
+        &mut rng,
+    ));
+    let enc = kg.encryptor();
+    let ev = Evaluator::new(CkksContext::new(params.clone()), keys.clone());
+
+    let mut m = SlotMatrix::zeros(slots);
+    for r in 0..slots {
+        for c in 0..slots {
+            m.set(
+                r,
+                c,
+                Complex::new(
+                    (rng.f64() - 0.5) / slots as f64,
+                    (rng.f64() - 0.5) / slots as f64,
+                ),
+            );
+        }
+    }
+    let z: Vec<Complex> = (0..slots)
+        .map(|i| Complex::new(0.3 * ((i % 9) as f64 / 9.0 - 0.5), 0.0))
+        .collect();
+    let ct = enc.encrypt_slots(&ctx, &z, ctx.max_level(), &mut rng);
+
+    // Build the BSGS program once (plaintext diagonals pre-encoded —
+    // that is part of the API's point: the DAG is the reusable artifact).
+    let prog = hom_linear_program(&ev, &m, ct.level);
+    let (g, outer) = bsgs_geometry(slots);
+    println!(
+        "bsgs matvec: slots {slots}, g {g}, outer {outer}, {} program ops",
+        prog.len()
+    );
+
+    // Local: hoisted program vs the eager per-op loop, bit-checked.
+    let hoisted = ev.run_program(&prog, std::slice::from_ref(&ct)).expect("program");
+    let eager = hom_linear_eager(&ev, &ct, &m).expect("eager");
+    assert_eq!(hoisted[0], eager, "hoisting must not change bits");
+
+    bench.run("bsgs_hoisted/local", || {
+        black_box(
+            ev.run_program(black_box(&prog), std::slice::from_ref(black_box(&ct)))
+                .expect("program"),
+        );
+    });
+    bench.run("bsgs_eager/local", || {
+        black_box(hom_linear_eager(&ev, black_box(&ct), black_box(&m)).expect("eager"));
+    });
+
+    // Wire: one ProgramRequest round trip vs one round trip per
+    // rotation (the pre-program client strategy).
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = ServeOptions {
+        params: params.clone(),
+        serve: ServeConfig {
+            fhec_workers: 2,
+            cuda_workers: 1,
+            max_batch: 1,
+            linger: Duration::from_micros(100),
+            max_queue: 64,
+        },
+        verbose: false,
+    };
+    let server = std::thread::spawn(move || serve(listener, opts));
+    let remote = RemoteEvaluator::connect_retry(&addr, params, Duration::from_secs(10))
+        .expect("loopback connect");
+    remote.push_keys(&keys).expect("push keys");
+
+    let wire_prog = remote
+        .run_program(&prog, std::slice::from_ref(&ct))
+        .expect("remote program");
+    let wire_eager = bsgs_eager_wire(&remote, &ev, &ct, &m);
+    assert_eq!(wire_prog[0], eager, "wire program must match local eager");
+    assert_eq!(wire_eager, eager, "wire eager must match local eager");
+
+    bench.run("bsgs_program/wire", || {
+        black_box(
+            remote
+                .run_program(black_box(&prog), std::slice::from_ref(black_box(&ct)))
+                .expect("remote program"),
+        );
+    });
+    bench.run("bsgs_eager/wire", || {
+        black_box(bsgs_eager_wire(&remote, &ev, black_box(&ct), &m));
+    });
+
+    remote.shutdown().expect("shutdown");
+    let _ = server.join();
+
+    bench.write_json().expect("bench json dump");
+}

@@ -26,6 +26,7 @@ use super::linear::{hom_linear, SlotMatrix};
 use super::ops::{Ciphertext, Evaluator};
 use super::params::CkksContext;
 use super::poly::{Format, RnsPoly};
+use super::program::{ProgramBuilder, ProgramError};
 
 /// Bootstrapping configuration.
 #[derive(Debug, Clone)]
@@ -113,13 +114,30 @@ pub fn mod_raise(ev: &Evaluator, ct: &Ciphertext) -> Ciphertext {
 /// Extract scaled (real, imag) carriers: `re2 = w + conj(w) = 2a` and
 /// `im2i = w - conj(w) = 2ib`. Level-neutral; the 1/2 (and the -i for the
 /// imaginary branch) are folded into EvalMod's seed constant.
+///
+/// Expressed as a two-output program — the bootstrap's rotate-and-sum
+/// stage in DAG form, riding the hoisted Galois path (the two hom_linear
+/// stages around it inherit full baby-step hoisting via
+/// `hom_linear_program`).
 fn split_real_imag(
     ev: &Evaluator,
     ct: &Ciphertext,
 ) -> Result<(Ciphertext, Ciphertext), MissingKey> {
-    let conj = ev.conjugate(ct)?;
-    let re2 = ev.add(ct, &conj);
-    let im2i = ev.sub(ct, &conj);
+    let mut b = ProgramBuilder::new();
+    let x = b.input("x");
+    let c = b.conjugate(x);
+    let re2 = b.add(x, c);
+    let im2i = b.sub(x, c);
+    b.output("re2", re2);
+    b.output("im2i", im2i);
+    let mut out = ev
+        .run_program(&b.finish(), std::slice::from_ref(ct))
+        .map_err(|e| match e {
+            ProgramError::MissingKey { key, .. } => key,
+            other => panic!("split program rejected: {other}"),
+        })?;
+    let im2i = out.pop().expect("two outputs");
+    let re2 = out.pop().expect("two outputs");
     Ok((re2, im2i))
 }
 

@@ -24,12 +24,27 @@
 
 use std::cell::RefCell;
 use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Arc;
 
+use super::ntt::bitrev_permute;
 use super::params::CkksContext;
 use super::poly::{Format, RnsPoly};
 use super::rns::{BaseConvScratch, BaseConvTable};
 use crate::util::rng::Pcg64;
+
+/// Process-wide count of digit-decomposition + ModUp passes (one per
+/// [`KsKey::apply`] / [`KsKey::hoist`] call). The decomposition is the
+/// dominant BConv (MLT) work of hybrid key switching, and *hoisting*
+/// exists to amortize it across a rotation fan-out — tests assert on
+/// deltas of this counter to prove a shared decomposition really was
+/// shared (serialize counter-sensitive tests; the counter is global).
+static DECOMPOSITIONS: AtomicU64 = AtomicU64::new(0);
+
+/// Snapshot of the global decomposition counter (see [`DECOMPOSITIONS`]).
+pub fn decomposition_count() -> u64 {
+    DECOMPOSITIONS.load(Ordering::Relaxed)
+}
 
 /// Ternary secret key, stored in Eval format over the full Q u P chain.
 pub struct SecretKey {
@@ -296,6 +311,40 @@ thread_local! {
     static KS_SCRATCH: RefCell<KeySwitchScratch> = RefCell::new(KeySwitchScratch::default());
 }
 
+/// The key-*independent* half of a hybrid key switch, computed once per
+/// source polynomial: the digit decomposition `[d * Q^_j^{-1}]_{Q~_j}`
+/// ModUp-lifted and assembled over the extended chain (Coeff format, one
+/// polynomial per digit).
+///
+/// This is the hoisting object of GME/Cheddar-style rotation batching:
+/// every Galois key applied to the same source reuses one decomposition
+/// ([`KsKey::apply_hoisted`] finishes it per key — automorphism on the
+/// lifted digits is a cheap coefficient permutation, and the automorphism
+/// commutes with the per-coefficient decomposition pipeline), so an
+/// `r`-rotation fan-out pays for one BConv/MLT pass instead of `r`.
+///
+/// The digit partition is a pure function of `(context, level)` shared by
+/// every key at that level, so a decomposition produced through one key's
+/// tables is valid for all of them.
+#[derive(Debug, Clone)]
+pub struct HoistedDecomp {
+    level: usize,
+    /// ModUp-lifted digits over the extended chain, Coeff format.
+    parts: Vec<RnsPoly>,
+}
+
+impl HoistedDecomp {
+    /// The level the source polynomial lived at.
+    pub fn level(&self) -> usize {
+        self.level
+    }
+
+    /// Number of digits in the partition.
+    pub fn digits(&self) -> usize {
+        self.parts.len()
+    }
+}
+
 impl KsKey {
     /// Generate a key switching `s_from -> sk.s` at `level`.
     ///
@@ -446,6 +495,7 @@ impl KsKey {
         let active = ctx.chain_at(self.level);
         let ext = ctx.extended_chain_at(self.level);
         assert_eq!(d.chain, active, "operand at wrong level");
+        DECOMPOSITIONS.fetch_add(1, Ordering::Relaxed);
         let n = d.n;
         scratch.d_coeff.copy_from(d);
         scratch.d_coeff.to_coeff(&ctx.tower);
@@ -502,6 +552,163 @@ impl KsKey {
             scratch.prod.mul_assign(&self.digits[j].0, &ctx.tower);
             acc0.add_assign(&scratch.prod, &ctx.tower);
             scratch.prod.copy_from(&scratch.full);
+            scratch.prod.mul_assign(&self.digits[j].1, &ctx.tower);
+            acc1.add_assign(&scratch.prod, &ctx.tower);
+        }
+
+        let nq = active.len();
+        self.mod_down_in_place(ctx, &mut acc0, nq, scratch);
+        self.mod_down_in_place(ctx, &mut acc1, nq, scratch);
+        (acc0, acc1)
+    }
+
+    /// Compute the shared half of a hoisted key switch: decompose `d`
+    /// (Eval, active chain at `self.level`) into digits, ModUp each and
+    /// assemble the extended-chain polynomials — everything `apply` does
+    /// *before* the key enters. The result is reusable across every key
+    /// at this level ([`Self::apply_hoisted`]); the per-stage arithmetic
+    /// is identical to [`Self::apply_with`]'s, so
+    /// `apply_hoisted(hoist(d), 1)` is bit-identical to `apply(d)`.
+    pub fn hoist(&self, ctx: &CkksContext, d: &RnsPoly) -> HoistedDecomp {
+        KS_SCRATCH.with(|s| self.hoist_with(ctx, d, &mut s.borrow_mut()))
+    }
+
+    /// [`Self::hoist`] with caller-provided scratch.
+    pub fn hoist_with(
+        &self,
+        ctx: &CkksContext,
+        d: &RnsPoly,
+        scratch: &mut KeySwitchScratch,
+    ) -> HoistedDecomp {
+        let active = ctx.chain_at(self.level);
+        let ext = ctx.extended_chain_at(self.level);
+        assert_eq!(d.chain, active, "operand at wrong level");
+        DECOMPOSITIONS.fetch_add(1, Ordering::Relaxed);
+        let n = d.n;
+        scratch.d_coeff.copy_from(d);
+        scratch.d_coeff.to_coeff(&ctx.tower);
+
+        let mut parts = Vec::with_capacity(self.digit_positions.len());
+        for (j, positions) in self.digit_positions.iter().enumerate() {
+            let digit_chain = &self.modup[j].src;
+            // [d * Q^_j^{-1}]_{Q~_j}: gather the digit limbs, pre-scale.
+            scratch.digit.n = n;
+            scratch.digit.format = Format::Coeff;
+            scratch.digit.chain.clear();
+            scratch.digit.chain.extend_from_slice(digit_chain);
+            if scratch.digit.limbs.len() != positions.len() {
+                scratch.digit.limbs.resize_with(positions.len(), Vec::new);
+            }
+            for (dst, &p) in scratch.digit.limbs.iter_mut().zip(positions) {
+                dst.clear();
+                dst.extend_from_slice(&scratch.d_coeff.limbs[p]);
+            }
+            scratch.digit.scale_assign(&self.qhat_inv[j], &ctx.tower);
+
+            // ModUp to the complement, assemble the full ext chain — into
+            // an owned polynomial this time: it outlives the call.
+            self.modup[j].convert_into(
+                &scratch.digit,
+                &ctx.tower,
+                &mut scratch.conv,
+                &mut scratch.lifted,
+            );
+            let mut full = RnsPoly {
+                n,
+                format: Format::Coeff,
+                limbs: Vec::with_capacity(ext.len()),
+                chain: ext.clone(),
+            };
+            for &ci in &ext {
+                let src: &[u64] = if let Some(k) = digit_chain.iter().position(|&c| c == ci) {
+                    &scratch.digit.limbs[k]
+                } else {
+                    let k = scratch.lifted.chain.iter().position(|&c| c == ci).unwrap();
+                    &scratch.lifted.limbs[k]
+                };
+                full.limbs.push(src.to_vec());
+            }
+            parts.push(full);
+        }
+        HoistedDecomp { level: self.level, parts }
+    }
+
+    /// Finish a hoisted key switch with *this* key: apply the Galois
+    /// automorphism `g` (1 = none) to each lifted digit — a coefficient
+    /// permutation, the step that makes the decomposition shareable
+    /// across rotations — NTT the digits (batched per modulus through
+    /// [`NttTable::forward_batch`](super::ntt::NttTable::forward_batch),
+    /// the MLT engine; a bit-reversal permutation lands exactly where
+    /// `to_eval`'s `forward_br` does), multiply with the digit key pairs
+    /// and ModDown.
+    pub fn apply_hoisted(
+        &self,
+        ctx: &CkksContext,
+        decomp: &HoistedDecomp,
+        g: usize,
+    ) -> (RnsPoly, RnsPoly) {
+        KS_SCRATCH.with(|s| self.apply_hoisted_with(ctx, decomp, g, &mut s.borrow_mut()))
+    }
+
+    /// [`Self::apply_hoisted`] with caller-provided scratch.
+    pub fn apply_hoisted_with(
+        &self,
+        ctx: &CkksContext,
+        decomp: &HoistedDecomp,
+        g: usize,
+        scratch: &mut KeySwitchScratch,
+    ) -> (RnsPoly, RnsPoly) {
+        assert_eq!(decomp.level, self.level, "decomposition at wrong level");
+        assert_eq!(
+            decomp.parts.len(),
+            self.digits.len(),
+            "decomposition digit count disagrees with the key"
+        );
+        let active = ctx.chain_at(self.level);
+        let ext = ctx.extended_chain_at(self.level);
+
+        let mut fulls: Vec<RnsPoly> = decomp
+            .parts
+            .iter()
+            .map(|p| {
+                if g == 1 {
+                    p.clone()
+                } else {
+                    p.automorphism(g, &ctx.tower)
+                }
+            })
+            .collect();
+        if fulls.len() >= 2 {
+            // One batched MLT forward pass per modulus over all digits'
+            // limbs; bitrev lands in the Eval (bit-reversed) convention,
+            // bit-identical to per-limb `forward_br`.
+            for (i, &ci) in ext.iter().enumerate() {
+                let table = &ctx.tower.contexts[ci].ntt;
+                let mut refs: Vec<&mut [u64]> = fulls
+                    .iter_mut()
+                    .map(|f| f.limbs[i].as_mut_slice())
+                    .collect();
+                table.forward_batch(&mut refs);
+                for f in fulls.iter_mut() {
+                    bitrev_permute(&mut f.limbs[i]);
+                }
+            }
+            for f in fulls.iter_mut() {
+                f.format = Format::Eval;
+            }
+        } else {
+            for f in fulls.iter_mut() {
+                f.to_eval(&ctx.tower);
+            }
+        }
+
+        let mut acc0 = RnsPoly::zero(&ctx.tower, &ext, Format::Eval);
+        let mut acc1 = RnsPoly::zero(&ctx.tower, &ext, Format::Eval);
+        for (j, full) in fulls.iter().enumerate() {
+            scratch.prod.copy_from(full);
+            scratch.prod.mul_assign(&self.digits[j].0, &ctx.tower);
+            acc0.add_assign(&scratch.prod, &ctx.tower);
+            scratch.prod.copy_from(full);
             scratch.prod.mul_assign(&self.digits[j].1, &ctx.tower);
             acc1.add_assign(&scratch.prod, &ctx.tower);
         }
@@ -931,6 +1138,74 @@ mod tests {
                 assert_eq!(f1.format, r1.format);
             }
         }
+    }
+
+    #[test]
+    fn hoisted_identity_is_bit_identical_to_apply() {
+        // apply_hoisted(hoist(d), g = 1) runs the exact same pipeline as
+        // apply(d) — the hoisting split must not change a single bit.
+        let ctx = CkksContext::new(CkksParams::toy());
+        let mut rng = Pcg64::new(0x401D);
+        let sk = SecretKey::generate(&ctx, &mut rng);
+        for level in [1usize, ctx.max_level()] {
+            let ksk = KsKey::generate_for(&ctx, &sk, KeyKind::Relin, level, &mut rng);
+            let active = ctx.chain_at(level);
+            let d = sample_uniform(&ctx, &active, &mut rng);
+            // (Only >= — lib tests share the process-global counter.)
+            let before = decomposition_count();
+            let decomp = ksk.hoist(&ctx, &d);
+            assert!(decomposition_count() >= before + 1, "hoist counts as a decomposition");
+            assert_eq!(decomp.level(), level);
+            assert_eq!(decomp.digits(), ksk.digits.len());
+            let (h0, h1) = ksk.apply_hoisted(&ctx, &decomp, 1);
+            let (a0, a1) = ksk.apply(&ctx, &d);
+            assert_eq!(h0.limbs, a0.limbs, "level {level} out0");
+            assert_eq!(h1.limbs, a1.limbs, "level {level} out1");
+            assert_eq!(h0.chain, a0.chain);
+            assert_eq!(h1.format, a1.format);
+        }
+    }
+
+    #[test]
+    fn hoisted_galois_keyswitch_identity() {
+        // apply_hoisted(hoist(d), g) with a Galois key (phi_g(s) -> s)
+        // must satisfy out0 + out1*s ~= phi_g(d) * phi_g(s) — the hoisted
+        // formulation of the rotation key switch (small noise).
+        let ctx = CkksContext::new(CkksParams::toy());
+        let mut rng = Pcg64::new(0x6A15);
+        let sk = SecretKey::generate(&ctx, &mut rng);
+        let level = ctx.max_level();
+        let g = galois_element(3, ctx.params.n);
+        let ksk = KsKey::generate_for(&ctx, &sk, KeyKind::Galois(g), level, &mut rng);
+
+        let active = ctx.chain_at(level);
+        let d = sample_uniform(&ctx, &active, &mut rng);
+        let decomp = ksk.hoist(&ctx, &d);
+        let (out0, out1) = ksk.apply_hoisted(&ctx, &decomp, g);
+
+        // want = phi_g(d) * phi_g(s); got = out0 + out1 * s.
+        let mut d_coeff = d.clone();
+        d_coeff.to_coeff(&ctx.tower);
+        let mut want = d_coeff.automorphism(g, &ctx.tower);
+        want.to_eval(&ctx.tower);
+        let gs = sk.automorphed(g, &active, &ctx);
+        want.mul_assign(&gs, &ctx.tower);
+
+        let s_active = sk.restrict(&active);
+        let mut got = out1.clone();
+        got.mul_assign(&s_active, &ctx.tower);
+        got.add_assign(&out0, &ctx.tower);
+
+        want.to_coeff(&ctx.tower);
+        got.to_coeff(&ctx.tower);
+        let m = ctx.tower.contexts[0].modulus;
+        let q = m.value();
+        let mut max_err = 0u64;
+        for (a, b) in got.limbs[0].iter().zip(&want.limbs[0]) {
+            let diff = m.sub(*a, *b);
+            max_err = max_err.max(diff.min(q - diff));
+        }
+        assert!(max_err < 1 << 30, "hoisted galois keyswitch noise: {max_err}");
     }
 
     #[test]

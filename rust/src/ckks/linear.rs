@@ -4,10 +4,19 @@
 //! encrypted vector using O(2*sqrt(s)) rotations instead of O(s) — the
 //! primitive behind CoeffToSlot / SlotToCoeff in bootstrapping and the
 //! JKLS-style matrix multiplications of the BERT-Tiny workload (SVI-A).
+//!
+//! The walk is expressed as a **program builder**
+//! ([`hom_linear_program`]): `hom_linear` builds the BSGS DAG and runs it
+//! through `Evaluator::run_program`, so the baby-step rotations — all
+//! reading the same input register — share **one** hoisted key-switch
+//! digit decomposition, and the per-digit NTTs batch through the MLT
+//! engine. [`hom_linear_eager`] keeps the original one-op-at-a-time walk
+//! as the bit-exactness oracle and benchmark baseline.
 
 use super::encoding::{encode_with, Complex};
 use super::keys::{bsgs_geometry, MissingKey};
 use super::ops::{Ciphertext, Evaluator};
+use super::program::{FheProgram, ProgramBuilder, ProgramError, Reg};
 
 /// A dense complex matrix acting on the slot vector.
 #[derive(Debug, Clone, PartialEq)]
@@ -82,6 +91,127 @@ fn rot_plain(v: &[Complex], k: usize) -> Vec<Complex> {
     (0..s).map(|j| v[(j + k) % s]).collect()
 }
 
+/// The BSGS walk for `m` with empty diagonals skipped: every giant step
+/// `j` that has at least one nonzero diagonal in its column group,
+/// paired with the baby indices `i` whose diagonal `d = i + j*g` is
+/// nonzero. `None` when the matrix has no nonzero diagonal at all.
+///
+/// The ONE place the skip logic lives: [`hom_linear_program`] executes
+/// this plan and [`bsgs_used_steps`] (the key check
+/// `FheProgram::validate` runs for `OpCode::HomLinear`) derives from
+/// it, so admission and execution cannot drift.
+fn bsgs_plan(m: &SlotMatrix) -> Option<Vec<(usize, Vec<usize>)>> {
+    let s = m.dim;
+    let (g, outer) = bsgs_geometry(s);
+    let mut plan = Vec::new();
+    for j in 0..outer {
+        let mut babies = Vec::new();
+        for i in 0..g {
+            let d = i + j * g;
+            if d >= s {
+                break;
+            }
+            if m.diagonal(d).iter().all(|c| c.abs() < 1e-12) {
+                continue; // sparse matrices skip empty diagonals entirely
+            }
+            babies.push(i);
+        }
+        if !babies.is_empty() {
+            plan.push((j, babies));
+        }
+    }
+    if plan.is_empty() {
+        None
+    } else {
+        Some(plan)
+    }
+}
+
+/// The rotation steps the BSGS walk actually performs for this matrix:
+/// the used baby steps `i` plus the nonzero giant steps `(j*g) % s`,
+/// derived from [`bsgs_plan`]. `None` when the matrix has no nonzero
+/// diagonal at all.
+pub(crate) fn bsgs_used_steps(m: &SlotMatrix) -> Option<Vec<usize>> {
+    let s = m.dim;
+    let (g, _) = bsgs_geometry(s);
+    let plan = bsgs_plan(m)?;
+    let mut steps = Vec::new();
+    for (j, babies) in &plan {
+        for &i in babies {
+            if i != 0 {
+                steps.push(i);
+            }
+        }
+        let r = (j * g) % s;
+        if r != 0 {
+            steps.push(r);
+        }
+    }
+    steps.sort_unstable();
+    steps.dedup();
+    Some(steps)
+}
+
+/// Build the BSGS walk for `m` as an [`FheProgram`] over one input
+/// register `"x"` at the given `level` (output `"y"`). Diagonal
+/// plaintexts are encoded at `level` so the raw products line up with
+/// the input's chain.
+///
+/// All baby-step rotations read the input register, so
+/// `Evaluator::run_program` shares **one** hoisted digit decomposition
+/// across every baby step — the GME/Cheddar rotation-batching win;
+/// each giant step rotates its own freshly accumulated register
+/// (inherently unsharable). Panics if the matrix has no nonzero
+/// diagonal — reject that at admission, as the coordinator does.
+pub fn hom_linear_program(ev: &Evaluator, m: &SlotMatrix, level: usize) -> FheProgram {
+    let s = ev.ctx.params.slots();
+    assert_eq!(m.dim, s, "matrix must match the slot count");
+    let (g, _) = bsgs_geometry(s);
+    let plan = bsgs_plan(m).expect("matrix had no nonzero diagonal");
+    let mut b = ProgramBuilder::new();
+    let x = b.input("x");
+    let mut baby: Vec<Option<Reg>> = vec![None; g];
+    baby[0] = Some(x);
+    let mut total: Option<Reg> = None;
+    for (j, babies) in &plan {
+        let mut inner: Option<Reg> = None;
+        for &i in babies {
+            let diag = m.diagonal(i + j * g);
+            // Pre-rotate the diagonal by -jg (i.e. right-rotate by jg).
+            let shifted = rot_plain(&diag, s - (j * g) % s);
+            let br = match baby[i] {
+                Some(r) => r,
+                None => {
+                    let r = b.rotate(x, i);
+                    baby[i] = Some(r);
+                    r
+                }
+            };
+            let pt = encode_with(&ev.ctx, &ev.encoder, &shifted, level, ev.ctx.scale);
+            // Multiply WITHOUT rescaling yet (sum first, rescale once).
+            let term = b.mul_plain_raw(br, pt);
+            inner = Some(match inner {
+                None => term,
+                Some(acc) => b.add(acc, term),
+            });
+        }
+        let inner = inner.expect("plan rows are non-empty");
+        let rotated = if (j * g) % s == 0 {
+            inner
+        } else {
+            b.rotate(inner, (j * g) % s)
+        };
+        total = Some(match total {
+            None => rotated,
+            Some(acc) => b.add(acc, rotated),
+        });
+    }
+    let total = total.expect("plan is non-empty");
+    let y = b.rescale(total);
+    b.output("y", y);
+    b.finish()
+}
+
 /// Evaluate `M . slots(ct)` homomorphically (baby-step giant-step).
 ///
 /// Identity: M.v = sum_d diag_d(M) o rot_d(v). With d = i + j*g,
@@ -90,7 +220,31 @@ fn rot_plain(v: &[Complex], k: usize) -> Vec<Complex> {
 /// Consumes one multiplicative level. Needs the BSGS Galois keys (see
 /// `keys::bsgs_steps`) in the evaluator's public key set; fails with the
 /// typed [`MissingKey`] error otherwise.
+///
+/// Runs as an [`FheProgram`] ([`hom_linear_program`]) so the baby-step
+/// rotation fan-out shares one hoisted key-switch decomposition —
+/// bit-identical to [`hom_linear_eager`], the retained one-op-at-a-time
+/// oracle.
 pub fn hom_linear(
+    ev: &Evaluator,
+    ct: &Ciphertext,
+    m: &SlotMatrix,
+) -> Result<Ciphertext, MissingKey> {
+    let prog = hom_linear_program(ev, m, ct.level);
+    match ev.run_program(&prog, std::slice::from_ref(ct)) {
+        Ok(mut out) => Ok(out.pop().expect("program declares one output")),
+        Err(ProgramError::MissingKey { key, .. }) => Err(key),
+        // The builder emits structurally valid programs; anything else
+        // indicates the same misuse the eager walk asserted on.
+        Err(other) => panic!("hom_linear program rejected: {other}"),
+    }
+}
+
+/// The original eager BSGS walk — one rotation at a time through
+/// [`Evaluator::rotate`], no decomposition sharing. Kept as the
+/// bit-exactness oracle for the program-backed [`hom_linear`] and as the
+/// "before" side of `benches/program.rs`.
+pub fn hom_linear_eager(
     ev: &Evaluator,
     ct: &Ciphertext,
     m: &SlotMatrix,
@@ -126,12 +280,7 @@ pub fn hom_linear(
             let b = get_baby(i, &mut baby)?;
             let pt = encode_with(&ev.ctx, &ev.encoder, &shifted, b.level, ev.ctx.scale);
             // Multiply WITHOUT rescaling yet (sum first, rescale once).
-            let mut term = b.clone();
-            let mut p = pt;
-            p.to_eval(&ev.ctx.tower);
-            term.c0.mul_assign(&p, &ev.ctx.tower);
-            term.c1.mul_assign(&p, &ev.ctx.tower);
-            term.scale *= ev.ctx.scale;
+            let term = ev.mul_plain_raw(&b, &pt);
             inner = Some(match inner {
                 None => term,
                 Some(acc) => ev.add(&acc, &term),
@@ -253,6 +402,54 @@ mod tests {
         let back = dec.decrypt_to_slots(&ev.ctx, &out);
         let want = m.matvec(&z);
         assert!(max_err(&want, &back) < 1e-3, "err={}", max_err(&want, &back));
+    }
+
+    #[test]
+    fn program_backed_hom_linear_is_bit_identical_to_eager() {
+        let (ev, enc, dec, mut rng) = fixture();
+        let s = ev.ctx.params.slots();
+        let z = ramp(s);
+        let mut m = SlotMatrix::zeros(s);
+        for r in 0..s {
+            for c in 0..s {
+                m.set(
+                    r,
+                    c,
+                    Complex::new((rng.f64() - 0.5) / s as f64, (rng.f64() - 0.5) / s as f64),
+                );
+            }
+        }
+        let ct = enc.encrypt_slots(&ev.ctx, &z, 3, &mut rng);
+        let hoisted = hom_linear(&ev, &ct, &m).unwrap();
+        let eager = hom_linear_eager(&ev, &ct, &m).unwrap();
+        assert_eq!(hoisted, eager, "hoisting must not change a single bit");
+        let back = dec.decrypt_to_slots(&ev.ctx, &hoisted);
+        let want = m.matvec(&z);
+        assert!(max_err(&want, &back) < 1e-3);
+    }
+
+    #[test]
+    fn used_steps_mirror_the_walk() {
+        // Dense matrix: every declared BSGS step is used.
+        let s = 16usize;
+        let mut dense = SlotMatrix::zeros(s);
+        for r in 0..s {
+            for c in 0..s {
+                dense.set(r, c, Complex::new(1.0, 0.0));
+            }
+        }
+        assert_eq!(
+            bsgs_used_steps(&dense).unwrap(),
+            crate::ckks::keys::bsgs_steps(s)
+        );
+        // A single-diagonal (permutation) matrix uses only its own steps.
+        let mut perm = SlotMatrix::zeros(s);
+        for r in 0..s {
+            perm.set(r, (r + 3) % s, Complex::new(1.0, 0.0));
+        }
+        assert_eq!(bsgs_used_steps(&perm).unwrap(), vec![3]);
+        // All-zero matrix: nothing to do.
+        assert!(bsgs_used_steps(&SlotMatrix::zeros(s)).is_none());
     }
 
     #[test]

@@ -13,14 +13,17 @@ pub mod ops;
 pub mod params;
 pub mod poly;
 pub mod prime;
+pub mod program;
 pub mod rns;
 
 pub use client::{Decryptor, Encryptor, KeyGen};
 pub use encoding::{decode, encode, Complex, Encoder};
 pub use keys::{
-    bsgs_geometry, bsgs_steps, galois_element, rotate_and_sum_steps, EvalKeySet, EvalKeySpec, KeyKind,
-    KeySwitchScratch, KsKey, MissingKey, SecretKey,
+    bsgs_geometry, bsgs_steps, decomposition_count, galois_element, rotate_and_sum_steps,
+    EvalKeySet, EvalKeySpec, HoistedDecomp, KeyKind, KeySwitchScratch, KsKey, MissingKey,
+    SecretKey,
 };
+pub use program::{FheProgram, OpCode, ProgramBuilder, ProgramError, Reg};
 pub use modarith::{Modulus, Modulus30};
 pub use modlin::{MltDims, ModLinKernel};
 pub use ntt::NttTable;

@@ -16,7 +16,7 @@ use std::sync::Arc;
 
 use super::encoding::{decode_with, encode_with, Complex, Encoder};
 pub use super::keys::galois_element;
-use super::keys::{EvalKeySet, KeyKind, MissingKey};
+use super::keys::{EvalKeySet, HoistedDecomp, KeyKind, KsKey, MissingKey};
 use super::params::CkksContext;
 use super::poly::{Format, RnsPoly};
 
@@ -117,13 +117,21 @@ impl Evaluator {
 
     /// PtMult(c, p): plaintext-ciphertext product followed by rescale.
     pub fn mul_plain(&self, a: &Ciphertext, pt: &RnsPoly) -> Ciphertext {
+        let raw = self.mul_plain_raw(a, pt);
+        self.rescale(&raw)
+    }
+
+    /// PtMult *without* the rescale: the scale grows by Delta and the
+    /// level is unchanged — the accumulate-then-rescale-once primitive
+    /// BSGS (`OpCode::MulPlainRaw`) is built from.
+    pub fn mul_plain_raw(&self, a: &Ciphertext, pt: &RnsPoly) -> Ciphertext {
         let mut p = pt.clone();
         p.to_eval(&self.ctx.tower);
         let mut out = a.clone();
         out.c0.mul_assign(&p, &self.ctx.tower);
         out.c1.mul_assign(&p, &self.ctx.tower);
         out.scale = a.scale * self.ctx.scale;
-        self.rescale(&out)
+        out
     }
 
     /// Multiply every slot by a scalar (burns one level, like PtMult).
@@ -213,32 +221,55 @@ impl Evaluator {
         self.apply_galois(a, 2 * self.ctx.params.n - 1)
     }
 
+    /// Decompose + ModUp `a.c1` once for hoisted Galois application: the
+    /// shared half of every rotation/conjugation of `a`. `run_program`
+    /// computes this once per source register and fans it out across the
+    /// register's whole rotation set via [`Self::galois_from_decomp`];
+    /// a single eager rotate is exactly `hoist_galois` + one finish, so
+    /// the two paths are bit-identical by construction.
+    ///
+    /// The decomposition's digit partition depends only on the level, so
+    /// any Galois key at `a.level` can produce it — `ksk` just supplies
+    /// the ModUp tables.
+    pub fn hoist_galois(&self, ksk: &KsKey, a: &Ciphertext) -> HoistedDecomp {
+        ksk.hoist(&self.ctx, &a.c1)
+    }
+
+    /// Finish a rotation/conjugation by Galois element `g` from a
+    /// precomputed decomposition of `a.c1`: automorph `c0` (coefficient
+    /// domain — SV-C address generation / data rearrangement), key-switch
+    /// the hoisted digits under `g` with `ksk`, and reassemble.
+    pub fn galois_from_decomp(
+        &self,
+        a: &Ciphertext,
+        g: usize,
+        ksk: &KsKey,
+        decomp: &HoistedDecomp,
+    ) -> Ciphertext {
+        let mut c0 = a.c0.clone();
+        c0.to_coeff(&self.ctx.tower);
+        let mut r0 = c0.automorphism(g, &self.ctx.tower);
+        r0.to_eval(&self.ctx.tower);
+
+        // KeySwitch phi_g(s) -> s on the hoisted, automorphed digits.
+        let (e0, e1) = ksk.apply_hoisted(&self.ctx, decomp, g);
+        r0.add_assign(&e0, &self.ctx.tower);
+        Ciphertext {
+            c0: r0,
+            c1: e1,
+            level: a.level,
+            scale: a.scale,
+        }
+    }
+
     fn apply_galois(&self, a: &Ciphertext, g: usize) -> Result<Ciphertext, MissingKey> {
         if g == 1 {
             return Ok(a.clone());
         }
         // Look the key up first: fail before doing any work.
-        let ksk = self.keys.get(KeyKind::Galois(g), a.level)?;
-        // Automorphism in coefficient domain (SV-C: address generation +
-        // data rearrangement on CUDA cores / LD-ST units).
-        let mut c0 = a.c0.clone();
-        let mut c1 = a.c1.clone();
-        c0.to_coeff(&self.ctx.tower);
-        c1.to_coeff(&self.ctx.tower);
-        let mut r0 = c0.automorphism(g, &self.ctx.tower);
-        let mut r1 = c1.automorphism(g, &self.ctx.tower);
-        r0.to_eval(&self.ctx.tower);
-        r1.to_eval(&self.ctx.tower);
-
-        // KeySwitch phi_g(s) -> s on the rotated c1.
-        let (e0, e1) = ksk.apply(&self.ctx, &r1);
-        r0.add_assign(&e0, &self.ctx.tower);
-        Ok(Ciphertext {
-            c0: r0,
-            c1: e1,
-            level: a.level,
-            scale: a.scale,
-        })
+        let ksk = self.keys.get(KeyKind::Galois(g), a.level)?.clone();
+        let decomp = self.hoist_galois(&ksk, a);
+        Ok(self.galois_from_decomp(a, g, &ksk, &decomp))
     }
 
     /// Bring two ciphertexts to a common level (and check scales match to

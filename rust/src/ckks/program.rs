@@ -1,0 +1,864 @@
+//! [`FheProgram`] — the ciphertext-DAG request unit.
+//!
+//! The one-op-at-a-time `Evaluator` surface fights the paper's core win:
+//! FHECore's instruction-count reductions come from *fusing* work into
+//! wide modulo-linear transforms, and the biggest serving-side constant
+//! factor (GME, Cheddar) is **hoisting** — sharing one key-switch digit
+//! decomposition across a rotation fan-out. Both need the request unit to
+//! be a *program*, not an op.
+//!
+//! * [`ProgramBuilder`] assembles a typed DAG of ops over virtual
+//!   ciphertext registers ([`Reg`]) with named inputs and outputs.
+//! * [`FheProgram::validate`] is the admission check: levels, scales, key
+//!   availability (via `EvalKeySet::contains`) and operand structure are
+//!   verified up front with a typed [`ProgramError`] — nothing reaches a
+//!   worker assert.
+//! * [`Evaluator::run_program`] executes the DAG stage by stage
+//!   (topological levels). Every multi-rotation fan-out shares **one**
+//!   hoisted digit decomposition per source register
+//!   (`KsKey::apply_hoisted` riding the existing `KeySwitchScratch`),
+//!   and the hoisted finish batches the per-digit NTTs through
+//!   `NttTable::forward_batch`. Execution is bit-identical to replaying
+//!   the same ops eagerly through the `Evaluator` — hoisting changes
+//!   *when* the decomposition runs, never what it computes.
+//!
+//! `linear::hom_linear` (BSGS) and `bootstrap`'s conjugation split are
+//! expressed as program builders, so they inherit both optimizations; the
+//! coordinator, wire protocol (v3 `ProgramRequest`), `RemoteEvaluator`
+//! and `ClusterClient` all accept whole programs as one request.
+
+use std::collections::HashMap;
+
+use super::keys::{galois_element, HoistedDecomp, KeyKind, MissingKey};
+use super::linear::{bsgs_used_steps, hom_linear, SlotMatrix};
+use super::ops::{Ciphertext, Evaluator, SCALE_RATIO_TOLERANCE};
+use super::params::CkksContext;
+use super::poly::RnsPoly;
+use super::EvalKeySet;
+
+/// A virtual ciphertext register: inputs occupy `0..n_inputs`, op `i`
+/// defines register `n_inputs + i` (SSA — every register is assigned
+/// exactly once).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct Reg(pub u32);
+
+impl Reg {
+    pub fn index(self) -> usize {
+        self.0 as usize
+    }
+}
+
+/// One DAG node. Payload-carrying ops own their operand (plaintext,
+/// constant, matrix) so a program is self-contained on the wire.
+#[derive(Debug, Clone, PartialEq)]
+pub enum OpCode {
+    /// HEAdd.
+    Add(Reg, Reg),
+    /// Ciphertext subtraction.
+    Sub(Reg, Reg),
+    /// Negation.
+    Negate(Reg),
+    /// PtMult with rescale (mirrors `Evaluator::mul_plain`).
+    MulPlain(Reg, RnsPoly),
+    /// Raw plaintext product — no rescale, scale grows by Delta. The
+    /// accumulate-then-rescale-once primitive BSGS is built from.
+    MulPlainRaw(Reg, RnsPoly),
+    /// Scalar product (burns one level, mirrors `mul_const`).
+    MulConst(Reg, f64),
+    /// Scalar addition (level-neutral).
+    AddConst(Reg, f64),
+    /// HEMult with relinearization + rescale.
+    Mul(Reg, Reg),
+    /// HEMult of a register with itself.
+    Square(Reg),
+    /// Slot rotation by k — fan-outs of one source share a hoisted
+    /// decomposition.
+    Rotate(Reg, usize),
+    /// Complex conjugation (Galois element 2N-1) — shares the same
+    /// hoisted decomposition as the source's rotations.
+    Conjugate(Reg),
+    /// Divide by the top prime, dropping one level.
+    Rescale(Reg),
+    /// Drop to the given level without dividing.
+    LevelReduce(Reg, usize),
+    /// BSGS dense linear transform (expands to the hoisted builder).
+    HomLinear(Reg, SlotMatrix),
+}
+
+impl OpCode {
+    /// Registers this op reads.
+    pub fn operands(&self) -> [Option<Reg>; 2] {
+        match *self {
+            OpCode::Add(a, b) | OpCode::Sub(a, b) | OpCode::Mul(a, b) => {
+                [Some(a), Some(b)]
+            }
+            OpCode::Negate(a)
+            | OpCode::MulPlain(a, _)
+            | OpCode::MulPlainRaw(a, _)
+            | OpCode::MulConst(a, _)
+            | OpCode::AddConst(a, _)
+            | OpCode::Square(a)
+            | OpCode::Rotate(a, _)
+            | OpCode::Conjugate(a)
+            | OpCode::Rescale(a)
+            | OpCode::LevelReduce(a, _)
+            | OpCode::HomLinear(a, _) => [Some(a), None],
+        }
+    }
+
+    /// Whether this op runs the key-switch pipeline (FHEC-class on the
+    /// paper's accelerator split; everything else is CUDA-class
+    /// elementwise work).
+    pub fn is_keyswitch(&self) -> bool {
+        matches!(
+            self,
+            OpCode::Mul(_, _)
+                | OpCode::Square(_)
+                | OpCode::Rotate(_, _)
+                | OpCode::Conjugate(_)
+                | OpCode::HomLinear(_, _)
+        )
+    }
+}
+
+/// Typed admission failure of a program. `op` indexes [`FheProgram::ops`].
+#[derive(Debug, Clone, PartialEq)]
+pub enum ProgramError {
+    /// A key-switch op needs a key the public set never declared.
+    MissingKey { op: usize, key: MissingKey },
+    /// Caller supplied the wrong number of input ciphertexts.
+    WrongInputCount { got: usize, want: usize },
+    /// An op reads a register that is not defined before it.
+    UnknownRegister { op: usize, reg: usize },
+    /// An output names a register the program never defines.
+    UnknownOutput { index: usize, reg: usize },
+    /// A rescaling op has no level left to rescale into.
+    LevelExhausted { op: usize },
+    /// Binary operands whose scales can never align.
+    ScaleMismatch { op: usize },
+    /// A structurally invalid operand (matrix, plaintext, target level).
+    BadOperand { op: usize, why: String },
+    /// The program declares no outputs — it can never produce anything.
+    NoOutput,
+}
+
+impl std::fmt::Display for ProgramError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProgramError::MissingKey { op, key } => write!(f, "op {op}: {key}"),
+            ProgramError::WrongInputCount { got, want } => {
+                write!(f, "program takes {want} inputs, got {got}")
+            }
+            ProgramError::UnknownRegister { op, reg } => {
+                write!(f, "op {op} reads undefined register r{reg}")
+            }
+            ProgramError::UnknownOutput { index, reg } => {
+                write!(f, "output {index} names undefined register r{reg}")
+            }
+            ProgramError::LevelExhausted { op } => {
+                write!(f, "op {op}: no level left to rescale into")
+            }
+            ProgramError::ScaleMismatch { op } => {
+                write!(f, "op {op}: operand scales cannot align")
+            }
+            ProgramError::BadOperand { op, why } => write!(f, "op {op}: {why}"),
+            ProgramError::NoOutput => write!(f, "program declares no outputs"),
+        }
+    }
+}
+
+impl std::error::Error for ProgramError {}
+
+/// A validated-on-admission ciphertext DAG: the request unit of the
+/// program API. Build with [`ProgramBuilder`]; execute with
+/// [`Evaluator::run_program`].
+#[derive(Debug, Clone, PartialEq)]
+pub struct FheProgram {
+    inputs: Vec<String>,
+    ops: Vec<OpCode>,
+    outputs: Vec<(String, Reg)>,
+}
+
+impl FheProgram {
+    /// Assemble from transported parts (wire decode, tests). The result
+    /// is *unvalidated* — run [`Self::validate`] (or let
+    /// `Evaluator::run_program` / the coordinator do it) before trusting
+    /// register references.
+    pub fn from_parts(
+        inputs: Vec<String>,
+        ops: Vec<OpCode>,
+        outputs: Vec<(String, Reg)>,
+    ) -> Self {
+        Self { inputs, ops, outputs }
+    }
+
+    pub fn inputs(&self) -> &[String] {
+        &self.inputs
+    }
+
+    pub fn ops(&self) -> &[OpCode] {
+        &self.ops
+    }
+
+    pub fn outputs(&self) -> &[(String, Reg)] {
+        &self.outputs
+    }
+
+    pub fn len(&self) -> usize {
+        self.ops.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ops.is_empty()
+    }
+
+    /// Whether any op runs the key-switch pipeline — the coordinator's
+    /// FHEC-vs-CUDA lane classification for whole programs.
+    pub fn has_keyswitch(&self) -> bool {
+        self.ops.iter().any(OpCode::is_keyswitch)
+    }
+
+    /// Topological stage per op: inputs are stage 0, an op runs one stage
+    /// after the latest of its operands. Execution walks stages in order
+    /// — the "level-by-level" schedule hoisting and NTT batching group
+    /// work by.
+    pub fn stages(&self) -> Vec<usize> {
+        let n_in = self.inputs.len();
+        let mut stage = vec![0usize; self.ops.len()];
+        for (i, op) in self.ops.iter().enumerate() {
+            let mut s = 0usize;
+            for r in op.operands().into_iter().flatten() {
+                let d = r.index();
+                if d >= n_in && d - n_in < i {
+                    // Operand defined by an earlier op. (Dangling or
+                    // forward references are validate()'s typed error;
+                    // here they just contribute no ordering edge.)
+                    s = s.max(stage[d - n_in].saturating_add(1));
+                } else {
+                    s = s.max(1);
+                }
+            }
+            stage[i] = s;
+        }
+        stage
+    }
+
+    /// Admission-time validation against a serving context and public key
+    /// set. `inputs` carries each input register's `(level, scale)`.
+    /// Returns the propagated `(level, scale)` of every register on
+    /// success; fails with the typed [`ProgramError`] otherwise — the
+    /// same simulation `run_program` trusts, so nothing reaches a worker
+    /// assert.
+    pub fn validate(
+        &self,
+        ctx: &CkksContext,
+        keys: &EvalKeySet,
+        inputs: &[(usize, f64)],
+    ) -> Result<Vec<(usize, f64)>, ProgramError> {
+        if inputs.len() != self.inputs.len() {
+            return Err(ProgramError::WrongInputCount {
+                got: inputs.len(),
+                want: self.inputs.len(),
+            });
+        }
+        if self.outputs.is_empty() {
+            return Err(ProgramError::NoOutput);
+        }
+        let n = ctx.params.n;
+        let slots = ctx.params.slots();
+        let q_at = |level: usize| ctx.tower.contexts[ctx.q_chain[level]].modulus.value() as f64;
+        let delta = ctx.scale;
+
+        let mut meta: Vec<(usize, f64)> = inputs.to_vec();
+        for (i, op) in self.ops.iter().enumerate() {
+            // Operand registers must already be defined (SSA order).
+            let get = |r: Reg| -> Result<(usize, f64), ProgramError> {
+                if r.index() < meta.len() {
+                    Ok(meta[r.index()])
+                } else {
+                    Err(ProgramError::UnknownRegister { op: i, reg: r.index() })
+                }
+            };
+            // The common alignment rule of the binary ops: minimum level,
+            // scales within the shared tolerance window.
+            let align = |a: (usize, f64), b: (usize, f64)| -> Result<(usize, f64), ProgramError> {
+                let ratio = a.1 / b.1;
+                if !SCALE_RATIO_TOLERANCE.contains(&ratio) {
+                    return Err(ProgramError::ScaleMismatch { op: i });
+                }
+                Ok((a.0.min(b.0), a.1))
+            };
+            let need_level = |m: (usize, f64)| -> Result<(), ProgramError> {
+                if m.0 == 0 {
+                    Err(ProgramError::LevelExhausted { op: i })
+                } else {
+                    Ok(())
+                }
+            };
+            let check_pt = |pt: &RnsPoly, level: usize| -> Result<(), ProgramError> {
+                if pt.n != n {
+                    return Err(ProgramError::BadOperand {
+                        op: i,
+                        why: format!("plaintext ring dim {} != {n}", pt.n),
+                    });
+                }
+                if pt.chain != ctx.chain_at(level) {
+                    return Err(ProgramError::BadOperand {
+                        op: i,
+                        why: format!(
+                            "plaintext chain does not match the operand's level {level}"
+                        ),
+                    });
+                }
+                Ok(())
+            };
+            let need_galois = |g: usize, level: usize| -> Result<(), ProgramError> {
+                if g != 1 && !keys.contains(KeyKind::Galois(g), level) {
+                    return Err(ProgramError::MissingKey {
+                        op: i,
+                        key: MissingKey { kind: KeyKind::Galois(g), level },
+                    });
+                }
+                Ok(())
+            };
+
+            let finite = |v: f64| -> Result<(), ProgramError> {
+                if v.is_finite() {
+                    Ok(())
+                } else {
+                    Err(ProgramError::BadOperand {
+                        op: i,
+                        why: format!("non-finite scalar operand {v}"),
+                    })
+                }
+            };
+
+            let out = match op {
+                OpCode::Add(a, b) | OpCode::Sub(a, b) => align(get(*a)?, get(*b)?)?,
+                OpCode::Negate(a) => get(*a)?,
+                OpCode::AddConst(a, v) => {
+                    finite(*v)?;
+                    get(*a)?
+                }
+                OpCode::MulPlain(a, pt) => {
+                    let m = get(*a)?;
+                    need_level(m)?;
+                    check_pt(pt, m.0)?;
+                    (m.0 - 1, m.1 * delta / q_at(m.0))
+                }
+                OpCode::MulPlainRaw(a, pt) => {
+                    let m = get(*a)?;
+                    check_pt(pt, m.0)?;
+                    (m.0, m.1 * delta)
+                }
+                OpCode::MulConst(a, v) => {
+                    finite(*v)?;
+                    let m = get(*a)?;
+                    need_level(m)?;
+                    (m.0 - 1, m.1 * delta / q_at(m.0))
+                }
+                OpCode::Mul(a, b) => {
+                    let (ma, mb) = (get(*a)?, get(*b)?);
+                    let common = align(ma, mb)?;
+                    need_level(common)?;
+                    if !keys.contains(KeyKind::Relin, common.0) {
+                        return Err(ProgramError::MissingKey {
+                            op: i,
+                            key: MissingKey { kind: KeyKind::Relin, level: common.0 },
+                        });
+                    }
+                    (common.0 - 1, ma.1 * mb.1 / q_at(common.0))
+                }
+                OpCode::Square(a) => {
+                    let m = get(*a)?;
+                    need_level(m)?;
+                    if !keys.contains(KeyKind::Relin, m.0) {
+                        return Err(ProgramError::MissingKey {
+                            op: i,
+                            key: MissingKey { kind: KeyKind::Relin, level: m.0 },
+                        });
+                    }
+                    (m.0 - 1, m.1 * m.1 / q_at(m.0))
+                }
+                OpCode::Rotate(a, k) => {
+                    let m = get(*a)?;
+                    need_galois(galois_element(k % slots, n), m.0)?;
+                    m
+                }
+                OpCode::Conjugate(a) => {
+                    let m = get(*a)?;
+                    need_galois(2 * n - 1, m.0)?;
+                    m
+                }
+                OpCode::Rescale(a) => {
+                    let m = get(*a)?;
+                    need_level(m)?;
+                    (m.0 - 1, m.1 / q_at(m.0))
+                }
+                OpCode::LevelReduce(a, target) => {
+                    let m = get(*a)?;
+                    if *target > m.0 {
+                        return Err(ProgramError::BadOperand {
+                            op: i,
+                            why: format!(
+                                "level_reduce target {target} above operand level {}",
+                                m.0
+                            ),
+                        });
+                    }
+                    (*target, m.1)
+                }
+                OpCode::HomLinear(a, mat) => {
+                    let m = get(*a)?;
+                    if mat.dim != slots {
+                        return Err(ProgramError::BadOperand {
+                            op: i,
+                            why: format!("matrix dim {} != slot count {slots}", mat.dim),
+                        });
+                    }
+                    let steps = bsgs_used_steps(mat);
+                    if steps.is_none() {
+                        return Err(ProgramError::BadOperand {
+                            op: i,
+                            why: "matrix has no nonzero entry".into(),
+                        });
+                    }
+                    need_level(m)?;
+                    for step in steps.unwrap() {
+                        need_galois(galois_element(step % slots, n), m.0)?;
+                    }
+                    (m.0 - 1, m.1 * delta / q_at(m.0))
+                }
+            };
+            meta.push(out);
+        }
+        for (idx, (_, reg)) in self.outputs.iter().enumerate() {
+            if reg.index() >= meta.len() {
+                return Err(ProgramError::UnknownOutput { index: idx, reg: reg.index() });
+            }
+        }
+        Ok(meta)
+    }
+}
+
+/// Builder for [`FheProgram`]: each method appends one op and returns the
+/// register it defines. Register references are checked on the spot —
+/// passing a register from another builder is a programming error and
+/// panics (wire-decoded programs go through [`FheProgram::validate`]
+/// instead, which returns typed errors).
+#[derive(Debug, Default)]
+pub struct ProgramBuilder {
+    inputs: Vec<String>,
+    ops: Vec<OpCode>,
+    outputs: Vec<(String, Reg)>,
+}
+
+impl ProgramBuilder {
+    pub fn new() -> Self {
+        Self::default()
+    }
+
+    /// Declare a named input ciphertext; inputs are bound positionally at
+    /// `run_program` time, in declaration order.
+    pub fn input(&mut self, name: &str) -> Reg {
+        assert!(self.ops.is_empty(), "declare inputs before ops");
+        self.inputs.push(name.to_string());
+        Reg((self.inputs.len() - 1) as u32)
+    }
+
+    fn defined(&self) -> usize {
+        self.inputs.len() + self.ops.len()
+    }
+
+    fn push(&mut self, op: OpCode) -> Reg {
+        for r in op.operands().into_iter().flatten() {
+            assert!(
+                r.index() < self.defined(),
+                "register r{} is not defined in this builder",
+                r.index()
+            );
+        }
+        self.ops.push(op);
+        Reg((self.defined() - 1) as u32)
+    }
+
+    pub fn add(&mut self, a: Reg, b: Reg) -> Reg {
+        self.push(OpCode::Add(a, b))
+    }
+
+    pub fn sub(&mut self, a: Reg, b: Reg) -> Reg {
+        self.push(OpCode::Sub(a, b))
+    }
+
+    pub fn negate(&mut self, a: Reg) -> Reg {
+        self.push(OpCode::Negate(a))
+    }
+
+    pub fn mul_plain(&mut self, a: Reg, pt: RnsPoly) -> Reg {
+        self.push(OpCode::MulPlain(a, pt))
+    }
+
+    /// Raw plaintext product (no rescale) — sum first, rescale once.
+    pub fn mul_plain_raw(&mut self, a: Reg, pt: RnsPoly) -> Reg {
+        self.push(OpCode::MulPlainRaw(a, pt))
+    }
+
+    pub fn mul_const(&mut self, a: Reg, value: f64) -> Reg {
+        self.push(OpCode::MulConst(a, value))
+    }
+
+    pub fn add_const(&mut self, a: Reg, value: f64) -> Reg {
+        self.push(OpCode::AddConst(a, value))
+    }
+
+    pub fn mul(&mut self, a: Reg, b: Reg) -> Reg {
+        self.push(OpCode::Mul(a, b))
+    }
+
+    pub fn square(&mut self, a: Reg) -> Reg {
+        self.push(OpCode::Square(a))
+    }
+
+    pub fn rotate(&mut self, a: Reg, k: usize) -> Reg {
+        self.push(OpCode::Rotate(a, k))
+    }
+
+    pub fn conjugate(&mut self, a: Reg) -> Reg {
+        self.push(OpCode::Conjugate(a))
+    }
+
+    pub fn rescale(&mut self, a: Reg) -> Reg {
+        self.push(OpCode::Rescale(a))
+    }
+
+    pub fn level_reduce(&mut self, a: Reg, level: usize) -> Reg {
+        self.push(OpCode::LevelReduce(a, level))
+    }
+
+    pub fn hom_linear(&mut self, a: Reg, m: SlotMatrix) -> Reg {
+        self.push(OpCode::HomLinear(a, m))
+    }
+
+    /// Declare a named output.
+    pub fn output(&mut self, name: &str, r: Reg) {
+        assert!(
+            r.index() < self.defined(),
+            "output register r{} is not defined",
+            r.index()
+        );
+        self.outputs.push((name.to_string(), r));
+    }
+
+    pub fn finish(self) -> FheProgram {
+        FheProgram {
+            inputs: self.inputs,
+            ops: self.ops,
+            outputs: self.outputs,
+        }
+    }
+}
+
+impl Evaluator {
+    /// Execute a [`FheProgram`] against this evaluator's public key set.
+    ///
+    /// `inputs` bind positionally to the program's declared inputs;
+    /// outputs return in declaration order. The program is validated
+    /// first (typed [`ProgramError`], nothing trips an assert), then
+    /// executed stage by stage with **hoisted** Galois fan-outs: every
+    /// register rotated/conjugated more than once gets one shared digit
+    /// decomposition (`KsKey::hoist`), reused across all its Galois keys
+    /// — bit-identical to eager per-op replay, minus the repeated BConv.
+    pub fn run_program(
+        &self,
+        prog: &FheProgram,
+        inputs: &[Ciphertext],
+    ) -> Result<Vec<Ciphertext>, ProgramError> {
+        let meta: Vec<(usize, f64)> = inputs.iter().map(|c| (c.level, c.scale)).collect();
+        prog.validate(&self.ctx, self.keys(), &meta)?;
+        self.run_program_prevalidated(prog, inputs)
+    }
+
+    /// [`Self::run_program`] minus the validation pass. The program MUST
+    /// already have passed [`FheProgram::validate`] against this
+    /// evaluator's context and key set with these inputs' (level, scale)
+    /// — the coordinator validates at admission and calls this from the
+    /// worker, so a served program is checked exactly once.
+    pub fn run_program_prevalidated(
+        &self,
+        prog: &FheProgram,
+        inputs: &[Ciphertext],
+    ) -> Result<Vec<Ciphertext>, ProgramError> {
+        // How many hoistable Galois ops read each register — a register
+        // with a fan-out (>= 2) gets its decomposition cached.
+        let n = self.ctx.params.n;
+        let slots = self.ctx.params.slots();
+        let mut galois_uses: HashMap<u32, u32> = HashMap::new();
+        for op in prog.ops() {
+            let (src, g) = match op {
+                OpCode::Rotate(a, k) => (a, galois_element(k % slots, n)),
+                OpCode::Conjugate(a) => (a, 2 * n - 1),
+                _ => continue,
+            };
+            if g != 1 {
+                *galois_uses.entry(src.0).or_insert(0) += 1;
+            }
+        }
+
+        // Stage-ordered execution (ops are SSA, so the stable stage sort
+        // is a valid topological order).
+        let stages = prog.stages();
+        let mut order: Vec<usize> = (0..prog.len()).collect();
+        order.sort_by_key(|&i| (stages[i], i));
+
+        let n_in = inputs.len();
+        let mut regs: Vec<Option<Ciphertext>> = inputs.iter().cloned().map(Some).collect();
+        regs.resize(n_in + prog.len(), None);
+        let mut decomps: HashMap<u32, HoistedDecomp> = HashMap::new();
+
+        for i in order {
+            let op = &prog.ops()[i];
+            let val = |r: Reg| regs[r.index()].as_ref().expect("validated SSA order");
+            let missing = |key: MissingKey| ProgramError::MissingKey { op: i, key };
+            let out = match op {
+                OpCode::Add(a, b) => self.add(val(*a), val(*b)),
+                OpCode::Sub(a, b) => self.sub(val(*a), val(*b)),
+                OpCode::Negate(a) => self.negate(val(*a)),
+                OpCode::MulPlain(a, pt) => self.mul_plain(val(*a), pt),
+                OpCode::MulPlainRaw(a, pt) => self.mul_plain_raw(val(*a), pt),
+                OpCode::MulConst(a, v) => self.mul_const(val(*a), *v),
+                OpCode::AddConst(a, v) => self.add_const(val(*a), *v),
+                OpCode::Mul(a, b) => self.mul(val(*a), val(*b)).map_err(missing)?,
+                OpCode::Square(a) => self.mul(val(*a), val(*a)).map_err(missing)?,
+                OpCode::Rotate(a, k) => {
+                    let g = galois_element(*k % slots, n);
+                    self.galois_hoisted(val(*a), a.0, g, &galois_uses, &mut decomps)
+                        .map_err(missing)?
+                }
+                OpCode::Conjugate(a) => {
+                    let g = 2 * n - 1;
+                    self.galois_hoisted(val(*a), a.0, g, &galois_uses, &mut decomps)
+                        .map_err(missing)?
+                }
+                OpCode::Rescale(a) => self.rescale(val(*a)),
+                OpCode::LevelReduce(a, l) => self.level_reduce(val(*a), *l),
+                OpCode::HomLinear(a, m) => hom_linear(self, val(*a), m).map_err(missing)?,
+            };
+            regs[n_in + i] = Some(out);
+        }
+
+        Ok(prog
+            .outputs()
+            .iter()
+            .map(|(_, r)| regs[r.index()].clone().expect("validated output register"))
+            .collect())
+    }
+
+    /// One Galois op inside `run_program`: reuse (or create) the source
+    /// register's shared decomposition when it has a fan-out, fall back
+    /// to the plain hoist-once path otherwise. Either way the arithmetic
+    /// is identical to `Evaluator::rotate`/`conjugate`.
+    fn galois_hoisted(
+        &self,
+        ct: &Ciphertext,
+        src: u32,
+        g: usize,
+        galois_uses: &HashMap<u32, u32>,
+        decomps: &mut HashMap<u32, HoistedDecomp>,
+    ) -> Result<Ciphertext, MissingKey> {
+        if g == 1 {
+            return Ok(ct.clone());
+        }
+        let ksk = self.keys().get(KeyKind::Galois(g), ct.level)?.clone();
+        if galois_uses.get(&src).copied().unwrap_or(0) >= 2 {
+            let decomp = decomps
+                .entry(src)
+                .or_insert_with(|| self.hoist_galois(&ksk, ct));
+            Ok(self.galois_from_decomp(ct, g, &ksk, decomp))
+        } else {
+            let decomp = self.hoist_galois(&ksk, ct);
+            Ok(self.galois_from_decomp(ct, g, &ksk, &decomp))
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::client::KeyGen;
+    use crate::ckks::encoding::Complex;
+    use crate::ckks::keys::EvalKeySpec;
+    use crate::ckks::params::CkksParams;
+    use crate::util::rng::Pcg64;
+    use std::sync::Arc;
+
+    fn fixture() -> (Evaluator, crate::ckks::Encryptor, crate::ckks::Decryptor, Pcg64) {
+        let ctx = CkksContext::new(CkksParams::toy());
+        let mut rng = Pcg64::new(0x9106);
+        let kg = KeyGen::new(&ctx, &mut rng);
+        let spec = EvalKeySpec::serving(ctx.params.slots()).with_rotations(&[3]);
+        let keys = kg.eval_key_set(&ctx, &spec, &mut rng);
+        let (enc, dec) = (kg.encryptor(), kg.decryptor());
+        (Evaluator::new(ctx, Arc::new(keys)), enc, dec, rng)
+    }
+
+    fn fanout_program() -> FheProgram {
+        let mut b = ProgramBuilder::new();
+        let x = b.input("x");
+        let sq = b.square(x);
+        let r1 = b.rotate(sq, 1);
+        let r2 = b.rotate(sq, 2);
+        let y = b.add(r1, r2);
+        b.output("y", y);
+        b.finish()
+    }
+
+    #[test]
+    fn builder_registers_and_stages() {
+        let prog = fanout_program();
+        assert_eq!(prog.inputs(), &["x".to_string()]);
+        assert_eq!(prog.len(), 4);
+        assert!(prog.has_keyswitch());
+        // square at stage 1, both rotations at 2, the add at 3.
+        assert_eq!(prog.stages(), vec![1, 2, 2, 3]);
+        assert_eq!(prog.outputs()[0].1, Reg(4));
+    }
+
+    #[test]
+    fn run_program_matches_eager_replay_bit_for_bit() {
+        let (ev, enc, dec, mut rng) = fixture();
+        let slots = ev.ctx.params.slots();
+        let z: Vec<Complex> = (0..slots)
+            .map(|i| Complex::new(0.05 * (i % 9) as f64, 0.0))
+            .collect();
+        let ct = enc.encrypt_slots(&ev.ctx, &z, 3, &mut rng);
+        let prog = fanout_program();
+        let got = ev.run_program(&prog, std::slice::from_ref(&ct)).unwrap();
+
+        // Eager replay: the same ops, one at a time.
+        let sq = ev.mul(&ct, &ct).unwrap();
+        let r1 = ev.rotate(&sq, 1).unwrap();
+        let r2 = ev.rotate(&sq, 2).unwrap();
+        let want = ev.add(&r1, &r2);
+        assert_eq!(got.len(), 1);
+        assert_eq!(got[0], want, "hoisted fan-out must be bit-identical to eager");
+
+        // And it decrypts to x^2 rotated-and-summed.
+        let back = dec.decrypt_to_slots(&ev.ctx, &got[0]);
+        for j in 0..slots {
+            let f = |k: usize| {
+                let x = 0.05 * (((j + k) % slots) % 9) as f64;
+                x * x
+            };
+            assert!((back[j].re - (f(1) + f(2))).abs() < 1e-2, "slot {j}");
+        }
+    }
+
+    #[test]
+    fn validate_typed_errors() {
+        let (ev, _enc, _dec, _rng) = fixture();
+        let top = ev.ctx.max_level();
+
+        // Wrong input count.
+        let prog = fanout_program();
+        assert_eq!(
+            prog.validate(&ev.ctx, ev.keys(), &[]),
+            Err(ProgramError::WrongInputCount { got: 0, want: 1 })
+        );
+
+        // Undeclared rotation step -> typed MissingKey at the right op.
+        let mut b = ProgramBuilder::new();
+        let x = b.input("x");
+        let r = b.rotate(x, 7);
+        b.output("y", r);
+        let prog = b.finish();
+        match prog.validate(&ev.ctx, ev.keys(), &[(top, ev.ctx.scale)]) {
+            Err(ProgramError::MissingKey { op: 0, key }) => {
+                assert_eq!(key.level, top);
+            }
+            other => panic!("expected MissingKey, got {other:?}"),
+        }
+
+        // Rescaling past the bottom of the chain.
+        let mut b = ProgramBuilder::new();
+        let x = b.input("x");
+        let r = b.rescale(x);
+        b.output("y", r);
+        let prog = b.finish();
+        assert_eq!(
+            prog.validate(&ev.ctx, ev.keys(), &[(0, ev.ctx.scale)]),
+            Err(ProgramError::LevelExhausted { op: 0 })
+        );
+
+        // Scales that can never align: a rescaled register (~Delta/q)
+        // added to a fresh one (~Delta).
+        let mut b = ProgramBuilder::new();
+        let x = b.input("x");
+        let y = b.input("y");
+        let m = b.rescale(x);
+        let s = b.add(m, y);
+        b.output("z", s);
+        let prog = b.finish();
+        match prog.validate(
+            &ev.ctx,
+            ev.keys(),
+            &[(top, ev.ctx.scale), (top, ev.ctx.scale)],
+        ) {
+            Err(ProgramError::ScaleMismatch { op: 1 }) => {}
+            other => panic!("expected ScaleMismatch at op 1, got {other:?}"),
+        }
+
+        // No outputs declared.
+        let mut b = ProgramBuilder::new();
+        let x = b.input("x");
+        let _ = b.negate(x);
+        let prog = b.finish();
+        assert_eq!(
+            prog.validate(&ev.ctx, ev.keys(), &[(top, ev.ctx.scale)]),
+            Err(ProgramError::NoOutput)
+        );
+
+        // A wire-style program with a dangling register reference.
+        let prog = FheProgram::from_parts(
+            vec!["x".into()],
+            vec![OpCode::Negate(Reg(5))],
+            vec![("y".into(), Reg(1))],
+        );
+        assert_eq!(
+            prog.validate(&ev.ctx, ev.keys(), &[(top, ev.ctx.scale)]),
+            Err(ProgramError::UnknownRegister { op: 0, reg: 5 })
+        );
+    }
+
+    #[test]
+    fn level_reduce_and_plaintext_ops_propagate() {
+        let (ev, enc, dec, mut rng) = fixture();
+        let slots = ev.ctx.params.slots();
+        let z: Vec<Complex> = (0..slots)
+            .map(|i| Complex::new(0.1 * (i % 5) as f64, 0.0))
+            .collect();
+        let ct = enc.encrypt_slots(&ev.ctx, &z, 3, &mut rng);
+        let pt = ev.encode(&(0..slots).map(|_| Complex::new(2.0, 0.0)).collect::<Vec<_>>(), 2);
+
+        let mut b = ProgramBuilder::new();
+        let x = b.input("x");
+        let low = b.level_reduce(x, 2);
+        let doubled = b.mul_plain(low, pt.clone());
+        let shifted = b.add_const(doubled, 0.5);
+        let neg = b.negate(shifted);
+        b.output("y", neg);
+        let prog = b.finish();
+
+        let got = ev.run_program(&prog, std::slice::from_ref(&ct)).unwrap();
+        // Eager replay.
+        let l = ev.level_reduce(&ct, 2);
+        let d = ev.mul_plain(&l, &pt);
+        let s = ev.add_const(&d, 0.5);
+        let want = ev.negate(&s);
+        assert_eq!(got[0], want);
+        let back = dec.decrypt_to_slots(&ev.ctx, &got[0]);
+        for j in 0..slots {
+            let w = -(0.1 * (j % 5) as f64 * 2.0 + 0.5);
+            assert!((back[j].re - w).abs() < 1e-2, "slot {j}: {} vs {w}", back[j].re);
+        }
+    }
+}

@@ -212,8 +212,50 @@ fn reader_loop(
                     Err(e) => send(cluster_error_message(id, e)),
                 }
             }
+            Message::ProgramRequest { id, program, inputs } => {
+                // Whole programs route like ops: by the upstream id, to
+                // one shard, in one downstream round trip.
+                match shared.cluster.submit_program_keyed(id, &program, &inputs) {
+                    Ok(ticket) => {
+                        let shared = shared.clone();
+                        let tx = tx.clone();
+                        std::thread::spawn(move || {
+                            let msg = match shared.cluster.wait_program(ticket) {
+                                Ok(o) => Message::ProgramResponse {
+                                    id,
+                                    result: o.result,
+                                    service_us: o.service_us,
+                                    sim_base_us: o.sim_base_us,
+                                    sim_fhec_us: o.sim_fhec_us,
+                                    batch_size: o.batch_size,
+                                },
+                                Err(ClusterError::Busy { depth, .. }) => {
+                                    Message::Busy { id, depth }
+                                }
+                                // (Typed program rejections arrive inside
+                                // Ok(o).result and pass through above —
+                                // wait_program never wraps them itself.)
+                                Err(e) => cluster_error_message(id, e),
+                            };
+                            let _ = tx.send(msg);
+                        });
+                    }
+                    Err(e) => send(cluster_error_message(id, e)),
+                }
+            }
             Message::MetricsReq => match shared.cluster.metrics() {
                 Ok(m) => send(Message::MetricsResp(m.total())),
+                Err(e) => send(Message::Error {
+                    id: 0,
+                    code: error_code::STOPPED,
+                    detail: e.to_string(),
+                }),
+            },
+            Message::ShardMetricsReq => match shared.cluster.metrics() {
+                // The per-shard breakdown the plain `MetricsReq` sums
+                // away — this is what makes shard state visible behind
+                // the gateway.
+                Ok(m) => send(Message::ShardMetricsResp(m.shards)),
                 Err(e) => send(Message::Error {
                     id: 0,
                     code: error_code::STOPPED,

@@ -38,6 +38,7 @@ pub mod ring;
 pub use gateway::{serve_gateway, GatewayOptions};
 pub use pool::{
     ClusterClient, ClusterError, ClusterMetrics, ClusterOptions, FailoverEvent, OpOutcome,
+    ProgramOutcome,
 };
 pub use ring::HashRing;
 

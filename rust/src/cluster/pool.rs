@@ -28,11 +28,12 @@ use std::time::{Duration, Instant};
 use super::ring::{HashRing, DEFAULT_VNODES};
 use crate::ckks::linear::SlotMatrix;
 use crate::ckks::params::{CkksContext, CkksParams};
-use crate::ckks::{Ciphertext, EvalKeySet, Evaluator, MissingKey};
+use crate::ckks::program::{FheProgram, ProgramError};
+use crate::ckks::{Ciphertext, EvalKeySet, Evaluator, MissingKey, RnsPoly};
 use crate::coordinator::MetricsSnapshot;
 use crate::wire::client::connect_handshake;
 use crate::wire::codec::encode_eval_key_set;
-use crate::wire::protocol::encode_op_request;
+use crate::wire::protocol::{encode_op_request, encode_program_request};
 use crate::wire::{
     busy_backoff_delay, fnv1a64, params_fingerprint, Frame, Message, WireError, WireOp,
 };
@@ -71,6 +72,8 @@ pub enum ClusterError {
     Wire(WireError),
     /// The op's key set lacks a key it needs (typed, from the shard).
     MissingKey(MissingKey),
+    /// A program failed the shard's typed admission/execution check.
+    Program(ProgramError),
     /// A shard answered with a typed error frame.
     Remote { shard: String, code: u16, detail: String },
     /// Every ring replica for the op is dead.
@@ -90,6 +93,7 @@ impl std::fmt::Display for ClusterError {
         match self {
             ClusterError::Wire(e) => write!(f, "{e}"),
             ClusterError::MissingKey(mk) => write!(f, "{mk}"),
+            ClusterError::Program(e) => write!(f, "program rejected: {e}"),
             ClusterError::Remote { shard, code, detail } => {
                 write!(f, "shard {shard} error {code}: {detail}")
             }
@@ -133,6 +137,17 @@ pub struct OpOutcome {
     pub batch_size: u32,
 }
 
+/// One completed program as the shard reported it (mirrors
+/// `ProgramResponse`).
+#[derive(Debug, Clone)]
+pub struct ProgramOutcome {
+    pub result: Result<Vec<Ciphertext>, ProgramError>,
+    pub service_us: u64,
+    pub sim_base_us: f64,
+    pub sim_fhec_us: f64,
+    pub batch_size: u32,
+}
+
 /// A surfaced failover: which op moved, from where, to where.
 #[derive(Debug, Clone, PartialEq, Eq)]
 pub struct FailoverEvent {
@@ -144,6 +159,8 @@ pub struct FailoverEvent {
 /// Terminal per-op outcomes recorded by the reader thread.
 enum OpResult {
     Done(OpOutcome),
+    /// A program ticket completed (whole DAG, one response).
+    Program(ProgramOutcome),
     /// Busy retries exhausted at this depth.
     BusyExhausted(u32),
     Remote { code: u16, detail: String },
@@ -161,7 +178,10 @@ struct ConnState {
     inflight: HashMap<u64, PendingOp>,
     done: HashMap<u64, OpResult>,
     keys_ack: Option<(u32, u64)>,
-    metrics: Option<MetricsSnapshot>,
+    /// Per-shard metrics breakdown (v3 `ShardMetricsResp` mailbox — the
+    /// cluster client always asks for the breakdown; a plain shard
+    /// answers with one entry named by its listen address).
+    shard_metrics: Option<Vec<(String, MetricsSnapshot)>>,
     /// An `Error{id: 0}` frame answering the in-progress RPC (bad key
     /// blob, unexpected message...). The shard keeps serving after
     /// sending these — they fail the RPC, not the connection.
@@ -278,11 +298,31 @@ impl ShardConn {
                         st.rpc_error = Some(format!("remote error {code}: {detail}"));
                     }
                 }
+                Message::ProgramResponse {
+                    id,
+                    result,
+                    service_us,
+                    sim_base_us,
+                    sim_fhec_us,
+                    batch_size,
+                } => {
+                    st.inflight.remove(&id);
+                    st.done.insert(
+                        id,
+                        OpResult::Program(ProgramOutcome {
+                            result,
+                            service_us,
+                            sim_base_us,
+                            sim_fhec_us,
+                            batch_size,
+                        }),
+                    );
+                }
                 Message::KeysAck { keys, fingerprint } => {
                     st.keys_ack = Some((keys, fingerprint));
                 }
-                Message::MetricsResp(snap) => {
-                    st.metrics = Some(snap);
+                Message::ShardMetricsResp(shards) => {
+                    st.shard_metrics = Some(shards);
                 }
                 // Anything else is noise at this layer.
                 _ => {}
@@ -411,17 +451,21 @@ impl ShardConn {
         self.await_mailbox(Duration::from_secs(120), "KeysAck", |st| st.keys_ack.take())
     }
 
-    /// Synchronous `Metrics` round trip (serialized via `self.rpc`).
-    fn fetch_metrics(&self) -> Result<MetricsSnapshot, String> {
+    /// Synchronous per-shard metrics round trip (serialized via
+    /// `self.rpc`). A plain shard answers with one entry; a gateway with
+    /// its whole downstream breakdown.
+    fn fetch_shard_metrics(&self) -> Result<Vec<(String, MetricsSnapshot)>, String> {
         let _rpc = self.rpc.lock().unwrap();
         {
             let mut st = self.state.lock().unwrap();
-            st.metrics = None;
+            st.shard_metrics = None;
             st.rpc_error = None;
         }
-        self.write_frame(&Message::MetricsReq.encode())
+        self.write_frame(&Message::ShardMetricsReq.encode())
             .inspect_err(|why| self.mark_dead(why.clone()))?;
-        self.await_mailbox(Duration::from_secs(15), "MetricsResp", |st| st.metrics.take())
+        self.await_mailbox(Duration::from_secs(15), "ShardMetricsResp", |st| {
+            st.shard_metrics.take()
+        })
     }
 
     /// Wait for a one-deep RPC mailbox to fill, with a deadline.
@@ -599,15 +643,18 @@ impl ClusterClient {
         Ok(counts[0].1)
     }
 
-    /// Aggregate metrics across all live shards.
+    /// Aggregate metrics across all live shards — per-shard entries, not
+    /// just the sum. Behind a gateway the entries are the gateway's
+    /// downstream shards (v3 `ShardMetricsResp`), so the breakdown
+    /// survives the extra hop.
     pub fn metrics(&self) -> Result<ClusterMetrics, ClusterError> {
         let mut shards = Vec::new();
         for conn in &self.conns {
             if conn.is_dead() {
                 continue;
             }
-            match conn.fetch_metrics() {
-                Ok(snap) => shards.push((conn.addr.clone(), snap)),
+            match conn.fetch_shard_metrics() {
+                Ok(list) => shards.extend(list),
                 Err(_) => continue, // died mid-request: skip, like dead
             }
         }
@@ -655,6 +702,31 @@ impl ClusterClient {
         self.submit_inner(route_key, id, op, ct, ct2)
     }
 
+    /// Pipelined whole-program submission, routed (like ops) by the
+    /// ticket id — the ring key of the program's input register stream.
+    /// One frame carries the DAG and every input; the shard answers with
+    /// one `ProgramResponse` matched by [`Self::wait_program`].
+    pub fn submit_program(
+        &self,
+        prog: &FheProgram,
+        inputs: &[Ciphertext],
+    ) -> Result<u64, ClusterError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.submit_frame(id, id, Arc::new(encode_program_request(id, prog, inputs)))
+    }
+
+    /// [`Self::submit_program`] with an explicit routing key (the
+    /// gateway passes the upstream request id).
+    pub fn submit_program_keyed(
+        &self,
+        route_key: u64,
+        prog: &FheProgram,
+        inputs: &[Ciphertext],
+    ) -> Result<u64, ClusterError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.submit_frame(route_key, id, Arc::new(encode_program_request(id, prog, inputs)))
+    }
+
     fn submit_inner(
         &self,
         route_key: u64,
@@ -663,7 +735,18 @@ impl ClusterClient {
         ct: &Ciphertext,
         ct2: Option<&Ciphertext>,
     ) -> Result<u64, ClusterError> {
-        let frame = Arc::new(encode_op_request(id, op, ct, ct2));
+        self.submit_frame(route_key, id, Arc::new(encode_op_request(id, op, ct, ct2)))
+    }
+
+    /// Place one already-encoded request frame on the ring: the owner
+    /// shard if live, else down the replica chain (recorded as a
+    /// failover).
+    fn submit_frame(
+        &self,
+        route_key: u64,
+        id: u64,
+        frame: Arc<Frame>,
+    ) -> Result<u64, ClusterError> {
         let owner = self.ring.route(route_key);
         let mut failed_over = false;
         for idx in self.ring.replicas(route_key) {
@@ -692,6 +775,61 @@ impl ClusterClient {
     /// replica if the owning shard dies mid-flight. Completion order is
     /// whatever the shards produce — ids, not admission order.
     pub fn wait(&self, id: u64) -> Result<OpOutcome, ClusterError> {
+        let (idx, r) = self.wait_result(id)?;
+        match r {
+            OpResult::Done(outcome) => Ok(outcome),
+            OpResult::Program(_) => Err(ClusterError::Protocol(format!(
+                "ticket {id} completed as a program; use wait_program"
+            ))),
+            OpResult::BusyExhausted(depth) => Err(ClusterError::Busy {
+                shard: self.conns[idx].addr.clone(),
+                depth,
+            }),
+            OpResult::Remote { code, detail } => Err(ClusterError::Remote {
+                shard: self.conns[idx].addr.clone(),
+                code,
+                detail,
+            }),
+        }
+    }
+
+    /// [`Self::wait`] for program tickets: one completion carries every
+    /// output of the DAG (or the typed [`ProgramError`]).
+    pub fn wait_program(&self, id: u64) -> Result<ProgramOutcome, ClusterError> {
+        let (idx, r) = self.wait_result(id)?;
+        match r {
+            OpResult::Program(outcome) => Ok(outcome),
+            OpResult::Done(_) => Err(ClusterError::Protocol(format!(
+                "ticket {id} completed as a single op; use wait"
+            ))),
+            OpResult::BusyExhausted(depth) => Err(ClusterError::Busy {
+                shard: self.conns[idx].addr.clone(),
+                depth,
+            }),
+            OpResult::Remote { code, detail } => Err(ClusterError::Remote {
+                shard: self.conns[idx].addr.clone(),
+                code,
+                detail,
+            }),
+        }
+    }
+
+    /// Submit + wait for a whole program — the synchronous whole-DAG
+    /// path (`RemoteEvaluator::run_program`'s cluster twin).
+    pub fn run_program(
+        &self,
+        prog: &FheProgram,
+        inputs: &[Ciphertext],
+    ) -> Result<Vec<Ciphertext>, ClusterError> {
+        let id = self.submit_program(prog, inputs)?;
+        let outcome = self.wait_program(id)?;
+        outcome.result.map_err(ClusterError::Program)
+    }
+
+    /// The shared completion/failover loop behind [`Self::wait`] and
+    /// [`Self::wait_program`]: returns the finishing connection's index
+    /// and the raw result.
+    fn wait_result(&self, id: u64) -> Result<(usize, OpResult), ClusterError> {
         loop {
             let (route_key, idx) = *self
                 .route
@@ -702,18 +840,7 @@ impl ClusterClient {
             match self.conns[idx].wait_op(id) {
                 WaitOutcome::Finished(r) => {
                     self.route.lock().unwrap().remove(&id);
-                    return match r {
-                        OpResult::Done(outcome) => Ok(outcome),
-                        OpResult::BusyExhausted(depth) => Err(ClusterError::Busy {
-                            shard: self.conns[idx].addr.clone(),
-                            depth,
-                        }),
-                        OpResult::Remote { code, detail } => Err(ClusterError::Remote {
-                            shard: self.conns[idx].addr.clone(),
-                            code,
-                            detail,
-                        }),
-                    };
+                    return Ok((idx, r));
                 }
                 WaitOutcome::Dead { frame } => {
                     let Some(frame) = frame else {
@@ -800,6 +927,36 @@ impl ClusterClient {
     /// HEAdd on the owning shard's CUDA-class lane.
     pub fn add(&self, a: &Ciphertext, b: &Ciphertext) -> Result<Ciphertext, ClusterError> {
         self.call(WireOp::Add, a, Some(b))
+    }
+
+    /// Ciphertext subtraction on the owning shard's CUDA-class lane.
+    pub fn sub(&self, a: &Ciphertext, b: &Ciphertext) -> Result<Ciphertext, ClusterError> {
+        self.call(WireOp::Sub, a, Some(b))
+    }
+
+    /// Negation on the owning shard.
+    pub fn negate(&self, a: &Ciphertext) -> Result<Ciphertext, ClusterError> {
+        self.call(WireOp::Negate, a, None)
+    }
+
+    /// Scalar slot product (burns one level).
+    pub fn mul_const(&self, a: &Ciphertext, value: f64) -> Result<Ciphertext, ClusterError> {
+        self.call(WireOp::MulConst(value), a, None)
+    }
+
+    /// Scalar slot addition.
+    pub fn add_const(&self, a: &Ciphertext, value: f64) -> Result<Ciphertext, ClusterError> {
+        self.call(WireOp::AddConst(value), a, None)
+    }
+
+    /// PtMult with rescale (the plaintext travels inline).
+    pub fn mul_plain(&self, a: &Ciphertext, pt: &RnsPoly) -> Result<Ciphertext, ClusterError> {
+        self.call(WireOp::MulPlain(pt.clone()), a, None)
+    }
+
+    /// Exact level drop.
+    pub fn level_reduce(&self, a: &Ciphertext, level: usize) -> Result<Ciphertext, ClusterError> {
+        self.call(WireOp::LevelReduce(level), a, None)
     }
 
     /// Rescale on the owning shard's CUDA-class lane.

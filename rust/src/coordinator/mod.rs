@@ -38,13 +38,15 @@ use std::sync::{Arc, Condvar, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::ckks::linear::{hom_linear, SlotMatrix};
+use crate::ckks::program::{FheProgram, OpCode, ProgramError};
 use crate::ckks::{bsgs_geometry, Ciphertext, Evaluator, MissingKey, RnsPoly};
 use crate::codegen::{Backend, Compiler, SimParams};
 use crate::gpusim::{simulate_trace, GpuConfig};
 use crate::isa::Trace;
 
-/// The homomorphic op sequences a request can ask for.
-#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+/// The homomorphic op sequences a single-op request can ask for. Whole
+/// ciphertext DAGs travel as [`ProgramRequest`] instead (`submit_program`).
+#[derive(Debug, Clone, Copy, PartialEq)]
 pub enum OpKind {
     /// dot(w, x) + b via rotate-and-sum — encrypted linear scoring
     /// against the server-side model weights.
@@ -59,6 +61,18 @@ pub enum OpKind {
     Mul,
     /// Ciphertext-ciphertext addition (binary: needs `Request::ct2`).
     Add,
+    /// Ciphertext-ciphertext subtraction (binary: needs `Request::ct2`).
+    Sub,
+    /// Negation of every slot.
+    Negate,
+    /// Scalar slot product (PtMult by a constant; burns one level).
+    MulConst(f64),
+    /// Scalar slot addition (level-neutral).
+    AddConst(f64),
+    /// Plaintext-ciphertext product with rescale (needs `Request::pt`).
+    MulPlain,
+    /// Drop to the given level without dividing (exact in RNS).
+    LevelReduce(usize),
     /// Drop one level by dividing out the top prime.
     Rescale,
     /// BSGS dense linear transform (needs `Request::matrix`).
@@ -94,22 +108,35 @@ impl OpClass {
 }
 
 impl OpKind {
-    /// Routing classification: everything that key-switches is FHEC-class.
+    /// Routing classification: everything that key-switches is FHEC-class;
+    /// the elementwise/plaintext ops ride the CUDA lane.
     pub fn class(self) -> OpClass {
         match self {
-            OpKind::Add | OpKind::Rescale => OpClass::Cuda,
+            OpKind::Add
+            | OpKind::Sub
+            | OpKind::Negate
+            | OpKind::MulConst(_)
+            | OpKind::AddConst(_)
+            | OpKind::MulPlain
+            | OpKind::LevelReduce(_)
+            | OpKind::Rescale => OpClass::Cuda,
             _ => OpClass::Fhec,
         }
     }
 
     /// Binary ops consume a second ciphertext operand.
     pub fn needs_ct2(self) -> bool {
-        matches!(self, OpKind::Mul | OpKind::Add)
+        matches!(self, OpKind::Mul | OpKind::Add | OpKind::Sub)
     }
 
     /// Matrix ops consume a slot matrix operand.
     pub fn needs_matrix(self) -> bool {
         matches!(self, OpKind::HomLinear)
+    }
+
+    /// Plaintext ops consume a plaintext polynomial operand.
+    pub fn needs_pt(self) -> bool {
+        matches!(self, OpKind::MulPlain)
     }
 
     /// Ops that rescale somewhere in their pipeline: they consume one
@@ -120,6 +147,8 @@ impl OpKind {
             OpKind::LinearScore
                 | OpKind::Square
                 | OpKind::Mul
+                | OpKind::MulConst(_)
+                | OpKind::MulPlain
                 | OpKind::Rescale
                 | OpKind::HomLinear
         )
@@ -131,15 +160,17 @@ pub struct Request {
     pub id: u64,
     pub op: OpKind,
     pub ct: Ciphertext,
-    /// Second operand for binary ops (`Mul`, `Add`).
+    /// Second operand for binary ops (`Mul`, `Add`, `Sub`).
     pub ct2: Option<Ciphertext>,
     /// Matrix operand for `HomLinear`.
     pub matrix: Option<SlotMatrix>,
+    /// Plaintext operand for `MulPlain`.
+    pub pt: Option<RnsPoly>,
 }
 
 impl Request {
     pub fn new(id: u64, op: OpKind, ct: Ciphertext) -> Self {
-        Self { id, op, ct, ct2: None, matrix: None }
+        Self { id, op, ct, ct2: None, matrix: None, pt: None }
     }
 
     pub fn with_ct2(mut self, ct2: Ciphertext) -> Self {
@@ -151,7 +182,68 @@ impl Request {
         self.matrix = Some(matrix);
         self
     }
+
+    pub fn with_pt(mut self, pt: RnsPoly) -> Self {
+        self.pt = Some(pt);
+        self
+    }
 }
+
+/// A whole-ciphertext-DAG request: the program API's serving unit. One
+/// admission, one lane dispatch, one response — however many ops the DAG
+/// fuses (and the rotation fan-outs inside share hoisted key-switch
+/// decompositions).
+#[derive(Debug)]
+pub struct ProgramRequest {
+    pub id: u64,
+    pub program: Arc<FheProgram>,
+    /// Bound positionally to the program's declared inputs.
+    pub inputs: Vec<Ciphertext>,
+}
+
+impl ProgramRequest {
+    pub fn new(id: u64, program: Arc<FheProgram>, inputs: Vec<Ciphertext>) -> Self {
+        Self { id, program, inputs }
+    }
+}
+
+pub struct ProgramResponse {
+    pub id: u64,
+    /// The program's outputs in declaration order — or the typed
+    /// [`ProgramError`] (key gaps surface here as `MissingKey`).
+    pub outputs: Result<Vec<Ciphertext>, ProgramError>,
+    /// Wall-clock service time of the whole program.
+    pub service: Duration,
+    /// Simulated A100 / A100+FHECore latency for the program's op mix.
+    pub sim_base_us: f64,
+    pub sim_fhec_us: f64,
+    pub batch_size: usize,
+}
+
+/// Why a program submission was not admitted.
+#[derive(Debug, Clone, PartialEq)]
+pub enum ProgramSubmitError {
+    /// Typed validation failure — retrying the same program cannot help.
+    Invalid(ProgramError),
+    /// The program's lane is at `max_queue`.
+    QueueFull { depth: usize },
+    /// The coordinator is shutting down.
+    Stopped,
+}
+
+impl std::fmt::Display for ProgramSubmitError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            ProgramSubmitError::Invalid(e) => write!(f, "invalid program: {e}"),
+            ProgramSubmitError::QueueFull { depth } => {
+                write!(f, "serving queue full ({depth} in flight)")
+            }
+            ProgramSubmitError::Stopped => write!(f, "coordinator stopped"),
+        }
+    }
+}
+
+impl std::error::Error for ProgramSubmitError {}
 
 pub struct Response {
     pub id: u64,
@@ -212,6 +304,9 @@ pub struct Metrics {
     /// Requests served per lane.
     pub fhec_served: AtomicU64,
     pub cuda_served: AtomicU64,
+    /// Whole-program requests served (each also counts once in `served`
+    /// and its lane counter).
+    pub programs: AtomicU64,
 }
 
 impl Metrics {
@@ -243,6 +338,8 @@ pub struct MetricsSnapshot {
     pub cuda_depth: u64,
     pub fhec_served: u64,
     pub cuda_served: u64,
+    /// Whole-program requests served.
+    pub programs: u64,
 }
 
 impl MetricsSnapshot {
@@ -267,6 +364,7 @@ impl MetricsSnapshot {
         self.cuda_depth += other.cuda_depth;
         self.fhec_served += other.fhec_served;
         self.cuda_served += other.cuda_served;
+        self.programs += other.programs;
     }
 }
 
@@ -296,14 +394,19 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
-type Item = (Request, Sender<Response>);
+/// One admitted unit of work: a single op or a whole program. Both count
+/// as one toward the lane's bounded depth.
+enum Job {
+    Op(Request, Sender<Response>),
+    Program(ProgramRequest, Sender<ProgramResponse>),
+}
 
 struct QueueState {
     /// The open linger window.
-    pending: Vec<Item>,
+    pending: Vec<Job>,
     window_start: Instant,
     /// Batches ready for a worker.
-    batches: VecDeque<Vec<Item>>,
+    batches: VecDeque<Vec<Job>>,
     /// pending.len() + sum of queued batch sizes (the bounded quantity).
     depth: usize,
     shutdown: bool,
@@ -337,6 +440,9 @@ pub struct Coordinator {
     cfg: ServeConfig,
     /// Slot count of the served context (admission checks on matrices).
     slots: usize,
+    /// The served evaluator — admission-time program validation runs
+    /// against its context + public key set.
+    ev: Arc<Evaluator>,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -370,6 +476,7 @@ impl Coordinator {
             metrics,
             cfg,
             slots,
+            ev,
             workers,
         }
     }
@@ -415,20 +522,96 @@ impl Coordinator {
                 return Err((req, SubmitError::BadRequest("matrix has no nonzero entry")));
             }
         }
-        let lane = &self.lanes[req.op.class().index()];
+        if req.op.needs_pt() {
+            if req.pt.is_none() {
+                return Err((req, SubmitError::BadRequest("MulPlain without plaintext")));
+            }
+            if req.ct.level >= self.ev.ctx.q_chain.len() {
+                return Err((req, SubmitError::BadRequest("operand level beyond chain depth")));
+            }
+            if let Some(pt) = &req.pt {
+                if pt.n != 2 * self.slots {
+                    return Err((req, SubmitError::BadRequest("plaintext ring dim mismatch")));
+                }
+                // Exact chain identity, not just length — the pointwise
+                // product's zip_check asserts on it (same rule as the
+                // program path's check_pt).
+                if pt.chain != self.ev.ctx.chain_at(req.ct.level) {
+                    return Err((
+                        req,
+                        SubmitError::BadRequest("plaintext chain does not match operand level"),
+                    ));
+                }
+            }
+        }
+        match req.op {
+            OpKind::MulConst(v) | OpKind::AddConst(v) if !v.is_finite() => {
+                return Err((req, SubmitError::BadRequest("non-finite scalar operand")));
+            }
+            OpKind::LevelReduce(target) if target > req.ct.level => {
+                return Err((
+                    req,
+                    SubmitError::BadRequest("level_reduce target above operand level"),
+                ));
+            }
+            _ => {}
+        }
+        let class = req.op.class();
         let (rtx, rrx) = channel();
+        match self.enqueue(class, Job::Op(req, rtx)) {
+            Ok(()) => Ok(rrx),
+            Err((Job::Op(req, _), rejection)) => Err((req, rejection)),
+            Err(_) => unreachable!("enqueue hands back the job it was given"),
+        }
+    }
+
+    /// Admit a whole-program request: full typed validation against the
+    /// serving context and public key set at admission ([`ProgramError`]
+    /// — nothing reaches a worker assert), then one slot in the lane the
+    /// program's op mix classifies into (FHEC if any op key-switches).
+    pub fn submit_program(
+        &self,
+        req: ProgramRequest,
+    ) -> Result<Receiver<ProgramResponse>, (ProgramRequest, ProgramSubmitError)> {
+        let meta: Vec<(usize, f64)> =
+            req.inputs.iter().map(|c| (c.level, c.scale)).collect();
+        if let Err(e) = req.program.validate(&self.ev.ctx, self.ev.keys(), &meta) {
+            return Err((req, ProgramSubmitError::Invalid(e)));
+        }
+        let class = if req.program.has_keyswitch() {
+            OpClass::Fhec
+        } else {
+            OpClass::Cuda
+        };
+        let (rtx, rrx) = channel();
+        match self.enqueue(class, Job::Program(req, rtx)) {
+            Ok(()) => Ok(rrx),
+            Err((Job::Program(req, _), SubmitError::QueueFull { depth })) => {
+                Err((req, ProgramSubmitError::QueueFull { depth }))
+            }
+            Err((Job::Program(req, _), SubmitError::Stopped)) => {
+                Err((req, ProgramSubmitError::Stopped))
+            }
+            Err(_) => unreachable!("enqueue hands back the job it was given"),
+        }
+    }
+
+    /// Push one admitted job into its lane's bounded queue (the shared
+    /// tail of `submit` / `submit_program`).
+    fn enqueue(&self, class: OpClass, job: Job) -> Result<(), (Job, SubmitError)> {
+        let lane = &self.lanes[class.index()];
         let mut st = lane.state.lock().unwrap();
         if st.shutdown {
-            return Err((req, SubmitError::Stopped));
+            return Err((job, SubmitError::Stopped));
         }
         if st.depth >= self.cfg.max_queue {
             self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
-            return Err((req, SubmitError::QueueFull { depth: st.depth }));
+            return Err((job, SubmitError::QueueFull { depth: st.depth }));
         }
         if st.pending.is_empty() {
             st.window_start = Instant::now();
         }
-        st.pending.push((req, rtx));
+        st.pending.push(job);
         st.depth += 1;
         self.metrics.queue_peak.fetch_max(st.depth, Ordering::Relaxed);
         if st.pending.len() >= self.cfg.max_batch {
@@ -440,7 +623,7 @@ impl Coordinator {
         // becomes the timed waiter that flushes the linger window.
         // (notify_all here would stampede every idle worker per request.)
         lane.cv.notify_one();
-        Ok(rrx)
+        Ok(())
     }
 
     /// Instantaneous queue depth per lane, `[fhec, cuda]`.
@@ -468,6 +651,7 @@ impl Coordinator {
             cuda_depth: depths[OpClass::Cuda.index()] as u64,
             fhec_served: m.fhec_served.load(Ordering::Relaxed),
             cuda_served: m.cuda_served.load(Ordering::Relaxed),
+            programs: m.programs.load(Ordering::Relaxed),
         }
     }
 }
@@ -495,7 +679,7 @@ impl Drop for Coordinator {
 /// Claim the next batch: a full/queued one immediately, the open linger
 /// window once it ages past `linger`, or `None` on shutdown with an empty
 /// queue. Blocks on the condvar — no sleep-polling.
-fn claim_batch(shared: &Shared, cfg: &ServeConfig) -> Option<Vec<Item>> {
+fn claim_batch(shared: &Shared, cfg: &ServeConfig) -> Option<Vec<Job>> {
     let mut st = shared.state.lock().unwrap();
     loop {
         if let Some(b) = st.batches.pop_front() {
@@ -555,7 +739,9 @@ fn request_trace(op: OpKind, level: usize, ev: &Evaluator, backend: Backend) -> 
         }
         OpKind::Square | OpKind::Mul => c.hemult(&p),
         OpKind::Rotate(_) | OpKind::Conjugate => c.rotate(&p),
-        OpKind::Add => c.headd(&p),
+        OpKind::Add | OpKind::Sub | OpKind::Negate | OpKind::AddConst(_)
+        | OpKind::LevelReduce(_) => c.headd(&p),
+        OpKind::MulConst(_) | OpKind::MulPlain => c.ptmult(&p),
         OpKind::Rescale => c.rescale(&p),
         OpKind::HomLinear => {
             // BSGS: g-1 baby + outer-1 giant rotations, one PtMult+HEAdd
@@ -572,6 +758,33 @@ fn request_trace(op: OpKind, level: usize, ev: &Evaluator, backend: Backend) -> 
             t
         }
     }
+}
+
+/// Build the timing-model trace for a whole program: the per-op traces
+/// summed over the DAG. (The hoisted fan-outs execute fewer BConv passes
+/// than this naive sum — the functional path is where that shows up; the
+/// trace keeps the paper's per-primitive instruction accounting.)
+fn program_trace(prog: &FheProgram, level: usize, ev: &Evaluator, backend: Backend) -> Trace {
+    let mut t = Trace::default();
+    for op in prog.ops() {
+        let kind = match op {
+            OpCode::Mul(_, _) => OpKind::Mul,
+            OpCode::Square(_) => OpKind::Square,
+            OpCode::Rotate(_, k) => OpKind::Rotate(*k),
+            OpCode::Conjugate(_) => OpKind::Conjugate,
+            OpCode::Add(_, _) => OpKind::Add,
+            OpCode::Sub(_, _) => OpKind::Sub,
+            OpCode::Negate(_) => OpKind::Negate,
+            OpCode::AddConst(_, v) => OpKind::AddConst(*v),
+            OpCode::MulConst(_, v) => OpKind::MulConst(*v),
+            OpCode::MulPlain(_, _) | OpCode::MulPlainRaw(_, _) => OpKind::MulPlain,
+            OpCode::Rescale(_) => OpKind::Rescale,
+            OpCode::LevelReduce(_, l) => OpKind::LevelReduce(*l),
+            OpCode::HomLinear(_, _) => OpKind::HomLinear,
+        };
+        t.extend(request_trace(kind, level, ev, backend));
+    }
+    t
 }
 
 /// Execute one request against the public key set.
@@ -604,6 +817,14 @@ fn execute(ev: &Evaluator, model: &ModelState, req: &Request) -> Result<Cipherte
         // Operand presence is validated at `submit` admission.
         OpKind::Mul => ev.mul(&req.ct, req.ct2.as_ref().expect("validated at submit")),
         OpKind::Add => Ok(ev.add(&req.ct, req.ct2.as_ref().expect("validated at submit"))),
+        OpKind::Sub => Ok(ev.sub(&req.ct, req.ct2.as_ref().expect("validated at submit"))),
+        OpKind::Negate => Ok(ev.negate(&req.ct)),
+        OpKind::MulConst(v) => Ok(ev.mul_const(&req.ct, v)),
+        OpKind::AddConst(v) => Ok(ev.add_const(&req.ct, v)),
+        OpKind::MulPlain => {
+            Ok(ev.mul_plain(&req.ct, req.pt.as_ref().expect("validated at submit")))
+        }
+        OpKind::LevelReduce(target) => Ok(ev.level_reduce(&req.ct, target)),
         OpKind::Rescale => Ok(ev.rescale(&req.ct)),
         OpKind::HomLinear => {
             hom_linear(ev, &req.ct, req.matrix.as_ref().expect("validated at submit"))
@@ -612,7 +833,7 @@ fn execute(ev: &Evaluator, model: &ModelState, req: &Request) -> Result<Cipherte
 }
 
 fn serve_batch(
-    batch: Vec<Item>,
+    batch: Vec<Job>,
     ev: &Evaluator,
     model: &ModelState,
     metrics: &Metrics,
@@ -621,29 +842,7 @@ fn serve_batch(
     let gpu = GpuConfig::default();
     let n = batch.len();
     metrics.batches.fetch_add(1, Ordering::Relaxed);
-    for (req, reply) in batch {
-        let t0 = Instant::now();
-        // Containment: admission validates everything we know can trip an
-        // assert, but a panic from a bug must cost one request, not the
-        // lane thread (a dead lane hangs every queued + future request).
-        // Dropping `reply` without sending surfaces as a typed
-        // "worker dropped the request" error on the wire path.
-        let out = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            execute(ev, model, &req)
-        })) {
-            Ok(r) => r,
-            Err(_) => {
-                eprintln!("coordinator: request {} ({:?}) panicked; dropped", req.id, req.op);
-                continue;
-            }
-        };
-        let service = t0.elapsed();
-        // Dual dispatch: the timing model for this op mix.
-        let level = out.as_ref().map(|c| c.level).unwrap_or(req.ct.level);
-        let base = request_trace(req.op, level, ev, Backend::A100);
-        let fhec = request_trace(req.op, level, ev, Backend::A100Fhec);
-        let sim_base_us = simulate_trace(&gpu, &base).latency_us(&gpu);
-        let sim_fhec_us = simulate_trace(&gpu, &fhec).latency_us(&gpu);
+    let count_served = |service: Duration| {
         metrics.served.fetch_add(1, Ordering::Relaxed);
         match class {
             OpClass::Fhec => metrics.fhec_served.fetch_add(1, Ordering::Relaxed),
@@ -652,14 +851,82 @@ fn serve_batch(
         metrics
             .total_service_us
             .fetch_add(service.as_micros() as u64, Ordering::Relaxed);
-        let _ = reply.send(Response {
-            id: req.id,
-            ct: out,
-            service,
-            sim_base_us,
-            sim_fhec_us,
-            batch_size: n,
-        });
+    };
+    for job in batch {
+        match job {
+            Job::Op(req, reply) => {
+                let t0 = Instant::now();
+                // Containment: admission validates everything we know can
+                // trip an assert, but a panic from a bug must cost one
+                // request, not the lane thread (a dead lane hangs every
+                // queued + future request). Dropping `reply` without
+                // sending surfaces as a typed "worker dropped the
+                // request" error on the wire path.
+                let out = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    execute(ev, model, &req)
+                })) {
+                    Ok(r) => r,
+                    Err(_) => {
+                        eprintln!(
+                            "coordinator: request {} ({:?}) panicked; dropped",
+                            req.id, req.op
+                        );
+                        continue;
+                    }
+                };
+                let service = t0.elapsed();
+                // Dual dispatch: the timing model for this op mix.
+                let level = out.as_ref().map(|c| c.level).unwrap_or(req.ct.level);
+                let base = request_trace(req.op, level, ev, Backend::A100);
+                let fhec = request_trace(req.op, level, ev, Backend::A100Fhec);
+                let sim_base_us = simulate_trace(&gpu, &base).latency_us(&gpu);
+                let sim_fhec_us = simulate_trace(&gpu, &fhec).latency_us(&gpu);
+                count_served(service);
+                let _ = reply.send(Response {
+                    id: req.id,
+                    ct: out,
+                    service,
+                    sim_base_us,
+                    sim_fhec_us,
+                    batch_size: n,
+                });
+            }
+            Job::Program(req, reply) => {
+                let t0 = Instant::now();
+                // Whole DAG as one unit: validated at admission (so the
+                // worker skips the second pass), executed with hoisted
+                // rotation fan-outs; same panic containment.
+                let out = match std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+                    ev.run_program_prevalidated(&req.program, &req.inputs)
+                })) {
+                    Ok(r) => r,
+                    Err(_) => {
+                        eprintln!(
+                            "coordinator: program request {} ({} ops) panicked; dropped",
+                            req.id,
+                            req.program.len()
+                        );
+                        continue;
+                    }
+                };
+                let service = t0.elapsed();
+                let level = req.inputs.iter().map(|c| c.level).min().unwrap_or(0);
+                let base = program_trace(&req.program, level, ev, Backend::A100);
+                let fhec = program_trace(&req.program, level, ev, Backend::A100Fhec);
+                let sim_base_us = simulate_trace(&gpu, &base).latency_us(&gpu);
+                let sim_fhec_us = simulate_trace(&gpu, &fhec).latency_us(&gpu);
+                count_served(service);
+                metrics.programs.fetch_add(1, Ordering::Relaxed);
+                let _ = reply.send(ProgramResponse {
+                    id: req.id,
+                    outputs: out,
+                    service,
+                    sim_base_us,
+                    sim_fhec_us,
+                    batch_size: n,
+                });
+            }
+        }
     }
 }
 
@@ -938,6 +1205,7 @@ mod tests {
             cuda_depth: 1,
             fhec_served: 8,
             cuda_served: 2,
+            programs: 1,
         };
         let b = MetricsSnapshot {
             served: 30,
@@ -950,6 +1218,7 @@ mod tests {
             cuda_depth: 0,
             fhec_served: 25,
             cuda_served: 5,
+            programs: 4,
         };
         a.absorb(&b);
         assert_eq!(a.served, 40);
@@ -963,6 +1232,7 @@ mod tests {
         assert_eq!(a.cuda_depth, 1);
         assert_eq!(a.fhec_served, 33);
         assert_eq!(a.cuda_served, 7);
+        assert_eq!(a.programs, 5);
         // Absorbing an empty (Default) snapshot is the identity on counters.
         let before = a;
         a.absorb(&MetricsSnapshot::default());
@@ -979,8 +1249,165 @@ mod tests {
         assert_eq!(OpKind::HomLinear.class(), OpClass::Fhec);
         assert_eq!(OpKind::Add.class(), OpClass::Cuda);
         assert_eq!(OpKind::Rescale.class(), OpClass::Cuda);
-        assert!(OpKind::Mul.needs_ct2() && OpKind::Add.needs_ct2());
+        // The wire/local op-gap closers are all key-free -> CUDA lane.
+        assert_eq!(OpKind::Sub.class(), OpClass::Cuda);
+        assert_eq!(OpKind::Negate.class(), OpClass::Cuda);
+        assert_eq!(OpKind::MulConst(2.0).class(), OpClass::Cuda);
+        assert_eq!(OpKind::AddConst(1.0).class(), OpClass::Cuda);
+        assert_eq!(OpKind::MulPlain.class(), OpClass::Cuda);
+        assert_eq!(OpKind::LevelReduce(1).class(), OpClass::Cuda);
+        assert!(OpKind::Mul.needs_ct2() && OpKind::Add.needs_ct2() && OpKind::Sub.needs_ct2());
         assert!(!OpKind::Square.needs_ct2());
         assert!(OpKind::HomLinear.needs_matrix());
+        assert!(OpKind::MulPlain.needs_pt() && !OpKind::Add.needs_pt());
+        assert!(OpKind::MulConst(2.0).consumes_level());
+        assert!(OpKind::MulPlain.consumes_level());
+        assert!(!OpKind::AddConst(1.0).consumes_level());
+        assert!(!OpKind::LevelReduce(0).consumes_level());
+    }
+
+    #[test]
+    fn extended_ops_serve_on_the_cuda_lane() {
+        let (ev, enc, dec, model, mut rng) = setup();
+        let coord = Coordinator::start(ev.clone(), model, ServeConfig::default());
+        let slots = ev.ctx.params.slots();
+        let z: Vec<Complex> = (0..slots)
+            .map(|i| Complex::new(0.1 * (i % 4) as f64, 0.0))
+            .collect();
+        let ct = enc.encrypt_slots(&ev.ctx, &z, ev.ctx.max_level(), &mut rng);
+        let ct2 = enc.encrypt_slots(&ev.ctx, &z, ev.ctx.max_level(), &mut rng);
+        let pt = ev.encode(&vec![Complex::new(2.0, 0.0); slots], ev.ctx.max_level());
+        let cases: Vec<(Request, Box<dyn Fn(&Ciphertext) -> Ciphertext>)> = vec![
+            (
+                Request::new(1, OpKind::Sub, ct.clone()).with_ct2(ct2.clone()),
+                Box::new({
+                    let (ev, ct2) = (ev.clone(), ct2.clone());
+                    move |c: &Ciphertext| ev.sub(c, &ct2)
+                }),
+            ),
+            (
+                Request::new(2, OpKind::Negate, ct.clone()),
+                Box::new({
+                    let ev = ev.clone();
+                    move |c: &Ciphertext| ev.negate(c)
+                }),
+            ),
+            (
+                Request::new(3, OpKind::MulConst(2.0), ct.clone()),
+                Box::new({
+                    let ev = ev.clone();
+                    move |c: &Ciphertext| ev.mul_const(c, 2.0)
+                }),
+            ),
+            (
+                Request::new(4, OpKind::AddConst(0.5), ct.clone()),
+                Box::new({
+                    let ev = ev.clone();
+                    move |c: &Ciphertext| ev.add_const(c, 0.5)
+                }),
+            ),
+            (
+                Request::new(5, OpKind::MulPlain, ct.clone()).with_pt(pt.clone()),
+                Box::new({
+                    let (ev, pt) = (ev.clone(), pt.clone());
+                    move |c: &Ciphertext| ev.mul_plain(c, &pt)
+                }),
+            ),
+            (
+                Request::new(6, OpKind::LevelReduce(1), ct.clone()),
+                Box::new({
+                    let ev = ev.clone();
+                    move |c: &Ciphertext| ev.level_reduce(c, 1)
+                }),
+            ),
+        ];
+        let n_cases = cases.len() as u64;
+        for (req, reference) in cases {
+            let id = req.id;
+            let rx = coord.submit(req).unwrap_or_else(|(_, e)| panic!("op {id}: {e}"));
+            let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+            let got = resp.ct.expect("all extended ops are key-free");
+            assert_eq!(got, reference(&ct), "op {id} must match the local evaluator");
+        }
+        let snap = coord.snapshot();
+        assert_eq!(snap.cuda_served, n_cases, "all extended ops ride the CUDA lane");
+        assert_eq!(snap.fhec_served, 0);
+        // Structural rejections: missing pt, bad level-reduce target.
+        let (_, err) = coord
+            .submit(Request::new(9, OpKind::MulPlain, ct.clone()))
+            .err()
+            .expect("MulPlain without pt must bounce");
+        assert!(matches!(err, SubmitError::BadRequest(_)));
+        let (_, err) = coord
+            .submit(Request::new(10, OpKind::LevelReduce(9), ct.clone()))
+            .err()
+            .expect("level_reduce above the operand level must bounce");
+        assert!(matches!(err, SubmitError::BadRequest(_)));
+        let _ = dec;
+    }
+
+    #[test]
+    fn program_requests_route_and_execute_as_one_batch() {
+        use crate::ckks::ProgramBuilder;
+        let (ev, enc, dec, model, mut rng) = setup();
+        let coord = Coordinator::start(ev.clone(), model, ServeConfig::default());
+        let slots = ev.ctx.params.slots();
+        let z: Vec<Complex> = (0..slots)
+            .map(|i| Complex::new(0.05 * (i % 6) as f64, 0.0))
+            .collect();
+        let ct = enc.encrypt_slots(&ev.ctx, &z, ev.ctx.max_level(), &mut rng);
+
+        // Square then a rotation fan-out, summed — FHEC-class program.
+        let mut b = ProgramBuilder::new();
+        let x = b.input("x");
+        let sq = b.square(x);
+        let r1 = b.rotate(sq, 1);
+        let r3 = b.rotate(sq, 3);
+        let y = b.add(r1, r3);
+        b.output("y", y);
+        let prog = Arc::new(b.finish());
+
+        let rx = coord
+            .submit_program(ProgramRequest::new(7, prog.clone(), vec![ct.clone()]))
+            .unwrap_or_else(|(_, e)| panic!("program admission: {e}"));
+        let resp = rx.recv_timeout(Duration::from_secs(120)).unwrap();
+        assert_eq!(resp.id, 7);
+        let outs = resp.outputs.expect("declared keys cover the program");
+        assert_eq!(outs.len(), 1);
+        // Bit-identical to running the same program locally.
+        let want = ev.run_program(&prog, std::slice::from_ref(&ct)).unwrap();
+        assert_eq!(outs, want);
+        assert!(resp.sim_base_us > resp.sim_fhec_us, "FHECore must be faster");
+        let snap = coord.snapshot();
+        assert_eq!(snap.programs, 1);
+        assert_eq!(snap.fhec_served, 1, "key-switching program rides the FHEC lane");
+
+        // An invalid program (undeclared rotation) bounces at admission,
+        // typed.
+        let mut b = ProgramBuilder::new();
+        let x = b.input("x");
+        let r = b.rotate(x, 7);
+        b.output("y", r);
+        let bad = Arc::new(b.finish());
+        let (_, err) = coord
+            .submit_program(ProgramRequest::new(8, bad, vec![ct]))
+            .err()
+            .expect("undeclared rotation must bounce at admission");
+        assert!(
+            matches!(
+                err,
+                ProgramSubmitError::Invalid(crate::ckks::ProgramError::MissingKey { .. })
+            ),
+            "{err:?}"
+        );
+
+        let back = dec.decrypt_to_slots(&ev.ctx, &outs[0]);
+        for j in 0..slots {
+            let f = |k: usize| {
+                let v = 0.05 * (((j + k) % slots) % 6) as f64;
+                v * v
+            };
+            assert!((back[j].re - (f(1) + f(3))).abs() < 1e-2, "slot {j}");
+        }
     }
 }

@@ -14,7 +14,7 @@ use super::server::{serve, ServeOptions};
 use super::WireError;
 use crate::ckks::encoding::Complex;
 use crate::ckks::params::{CkksContext, CkksParams};
-use crate::ckks::{EvalKeySpec, Evaluator, KeyGen};
+use crate::ckks::{EvalKeySpec, Evaluator, KeyGen, ProgramBuilder};
 use crate::cluster::{
     demo_workload, run_pipelined, run_sync, serve_gateway, ClusterClient, ClusterError,
     ClusterOptions, GatewayOptions,
@@ -274,13 +274,17 @@ pub fn run_cluster(args: &Args) -> i32 {
             match ClusterClient::connect(&endpoints, params, cluster_options(args)) {
                 Ok(cluster) => match cluster.metrics() {
                     Ok(m) => {
+                        // Per-shard breakdown (v3): behind a gateway these
+                        // are the gateway's downstream shards, not just
+                        // the single aggregated endpoint.
                         for (shard, s) in &m.shards {
                             println!(
-                                "shard {shard}: served {} (fhec {} cuda {}), depths \
-                                 [{}, {}], rejected {}",
+                                "shard {shard}: served {} (fhec {} cuda {}, programs {}), \
+                                 depths [{}, {}], rejected {}",
                                 s.served,
                                 s.fhec_served,
                                 s.cuda_served,
+                                s.programs,
                                 s.fhec_depth,
                                 s.cuda_depth,
                                 s.rejected
@@ -288,11 +292,13 @@ pub fn run_cluster(args: &Args) -> i32 {
                         }
                         let t = m.total();
                         println!(
-                            "cluster total: served {} (fhec {} cuda {}), depths [{}, {}], \
-                             rejected {}, mean service {:.1} us",
+                            "cluster total ({} shard(s)): served {} (fhec {} cuda {}, \
+                             programs {}), depths [{}, {}], rejected {}, mean service {:.1} us",
+                            m.shards.len(),
                             t.served,
                             t.fhec_served,
                             t.cuda_served,
+                            t.programs,
                             t.fhec_depth,
                             t.cuda_depth,
                             t.rejected,
@@ -359,7 +365,7 @@ pub fn cluster_quickstart(
     let ctx = CkksContext::new(params.clone());
     let mut rng = Pcg64::new(42);
     let keygen = KeyGen::new(&ctx, &mut rng);
-    let spec = EvalKeySpec::relin_only().with_rotations(&[3]);
+    let spec = EvalKeySpec::relin_only().with_rotations(&[1, 3]);
     let keys = Arc::new(keygen.eval_key_set(&ctx, &spec, &mut rng));
     let dec = keygen.decryptor();
 
@@ -384,6 +390,28 @@ pub fn cluster_quickstart(
         "sync pass: {} | pipelined (out-of-order) pass: {}",
         if sync_exact { "bit-exact" } else { "MISMATCH" },
         if pipe_exact { "bit-exact" } else { "MISMATCH" },
+    );
+
+    // Whole-program routing: the fan-out DAG rides to one shard in one
+    // round trip and must match the local program execution bit for bit.
+    let mut b = ProgramBuilder::new();
+    let x = b.input("x");
+    let sq = b.square(x);
+    let r1 = b.rotate(sq, 1);
+    let r3 = b.rotate(sq, 3);
+    let y = b.add(r1, r3);
+    b.output("y", y);
+    let prog = b.finish();
+    let prog_in = wl.inputs[0].clone();
+    let prog_out = cluster.run_program(&prog, std::slice::from_ref(&prog_in))?;
+    let prog_want = ev
+        .run_program(&prog, std::slice::from_ref(&prog_in))
+        .expect("local program over the same key set");
+    let prog_exact = prog_out == prog_want;
+    println!(
+        "program ({} ops, 1 RTT to the owning shard): {}",
+        prog.len(),
+        if prog_exact { "bit-exact" } else { "MISMATCH" }
     );
 
     // Decrypt one result as an end-to-end sanity check (op 0 is Square
@@ -424,7 +452,7 @@ pub fn cluster_quickstart(
         eprintln!("cluster quickstart: bench dump failed: {e}");
     }
 
-    let pass = sync_exact && pipe_exact && worst < 1e-2;
+    let pass = sync_exact && pipe_exact && prog_exact && worst < 1e-2;
     println!("cluster quickstart: {}", if pass { "PASS" } else { "FAIL" });
     Ok(pass)
 }
@@ -441,6 +469,7 @@ fn fetch_metrics(addr: &str, params: CkksParams, timeout: Duration) -> Result<()
     println!("  mean service   {:.1} us", m.mean_service_us);
     println!("  fhec lane      depth {}  served {}", m.fhec_depth, m.fhec_served);
     println!("  cuda lane      depth {}  served {}", m.cuda_depth, m.cuda_served);
+    println!("  programs       {}", m.programs);
     Ok(())
 }
 
@@ -461,7 +490,7 @@ pub fn quickstart(
     let ctx = CkksContext::new(params.clone());
     let mut rng = Pcg64::new(42);
     let keygen = KeyGen::new(&ctx, &mut rng);
-    let spec = EvalKeySpec::relin_only().with_rotations(&[3]);
+    let spec = EvalKeySpec::relin_only().with_rotations(&[1, 3]);
     let keys = Arc::new(keygen.eval_key_set(&ctx, &spec, &mut rng));
     let enc = keygen.encryptor();
     let dec = keygen.decryptor();
@@ -517,7 +546,30 @@ pub fn quickstart(
         .fold(0.0f64, f64::max);
     println!("decrypted max error vs plaintext: {worst:.2e}");
 
-    let pass = bit_exact && worst < 1e-2;
+    // Program API (wire v3): the same kind of computation as ONE DAG in
+    // ONE round trip — square, then a rotation fan-out whose two
+    // rotations share a single hoisted key-switch decomposition
+    // server-side — instead of three op round trips.
+    let mut b = ProgramBuilder::new();
+    let x = b.input("x");
+    let sq = b.square(x);
+    let r1 = b.rotate(sq, 1);
+    let r3 = b.rotate(sq, 3);
+    let y = b.add(r1, r3);
+    b.output("y", y);
+    let prog = b.finish();
+    let remote_out = remote.run_program(&prog, std::slice::from_ref(&shifted))?;
+    let local_out = ev
+        .run_program(&prog, std::slice::from_ref(&s))
+        .expect("local program over the same key set");
+    let program_exact = remote_out == local_out;
+    println!(
+        "program ({} ops, 1 RTT) remote vs local: {}",
+        prog.len(),
+        if program_exact { "bit-exact" } else { "MISMATCH" }
+    );
+
+    let pass = bit_exact && program_exact && worst < 1e-2;
     println!("loopback quickstart: {}", if pass { "PASS" } else { "FAIL" });
     Ok(pass)
 }

@@ -23,11 +23,12 @@ use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
 use super::codec::encode_eval_key_set;
-use super::protocol::{encode_op_request, Message, WireOp};
+use super::protocol::{encode_op_request, encode_program_request, Message, WireOp};
 use super::{busy_backoff_delay, fnv1a64, params_fingerprint, Frame, WireError, WIRE_VERSION};
 use crate::ckks::linear::SlotMatrix;
 use crate::ckks::params::{CkksContext, CkksParams};
-use crate::ckks::{Ciphertext, EvalKeySet, Evaluator};
+use crate::ckks::program::FheProgram;
+use crate::ckks::{Ciphertext, EvalKeySet, Evaluator, RnsPoly};
 use crate::coordinator::MetricsSnapshot;
 
 /// Dial `addr`, retrying refused/unreachable sockets until `timeout`
@@ -248,9 +249,89 @@ impl RemoteEvaluator {
         self.call(WireOp::Add, a, Some(b))
     }
 
+    /// Ciphertext subtraction on the server's CUDA-class lane.
+    pub fn sub(&self, a: &Ciphertext, b: &Ciphertext) -> Result<Ciphertext, WireError> {
+        self.call(WireOp::Sub, a, Some(b))
+    }
+
+    /// Negation, server-side.
+    pub fn negate(&self, a: &Ciphertext) -> Result<Ciphertext, WireError> {
+        self.call(WireOp::Negate, a, None)
+    }
+
+    /// Scalar slot product (burns one level), server-side.
+    pub fn mul_const(&self, a: &Ciphertext, value: f64) -> Result<Ciphertext, WireError> {
+        self.call(WireOp::MulConst(value), a, None)
+    }
+
+    /// Scalar slot addition, server-side.
+    pub fn add_const(&self, a: &Ciphertext, value: f64) -> Result<Ciphertext, WireError> {
+        self.call(WireOp::AddConst(value), a, None)
+    }
+
+    /// PtMult with rescale, server-side (the plaintext travels inline).
+    pub fn mul_plain(&self, a: &Ciphertext, pt: &RnsPoly) -> Result<Ciphertext, WireError> {
+        self.call(WireOp::MulPlain(pt.clone()), a, None)
+    }
+
+    /// Exact level drop, server-side.
+    pub fn level_reduce(&self, a: &Ciphertext, level: usize) -> Result<Ciphertext, WireError> {
+        self.call(WireOp::LevelReduce(level), a, None)
+    }
+
     /// Rescale on the server's CUDA-class lane.
     pub fn rescale(&self, a: &Ciphertext) -> Result<Ciphertext, WireError> {
         self.call(WireOp::Rescale, a, None)
+    }
+
+    /// Execute a whole [`FheProgram`] server-side in **one round trip**:
+    /// the DAG and its inputs go out as a single `ProgramRequest` frame,
+    /// every output comes back in the single `ProgramResponse` — and the
+    /// server shares hoisted key-switch decompositions across the
+    /// program's rotation fan-outs, which per-op round trips structurally
+    /// cannot. Busy responses retry on the shared backoff schedule.
+    pub fn run_program(
+        &self,
+        prog: &FheProgram,
+        inputs: &[Ciphertext],
+    ) -> Result<Vec<Ciphertext>, WireError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        let frame = encode_program_request(id, prog, inputs);
+        let mut ch = self.io.lock().unwrap();
+        let mut attempt = 0u32;
+        loop {
+            ch.send_frame(&frame)?;
+            match ch.recv()? {
+                Message::ProgramResponse { id: rid, result, .. } => {
+                    if rid != id {
+                        return Err(WireError::Protocol(format!(
+                            "response id {rid} for program request {id}"
+                        )));
+                    }
+                    return result.map_err(WireError::Program);
+                }
+                Message::Busy { depth, .. } => {
+                    if attempt >= self.busy_retries {
+                        return Err(WireError::Busy { depth });
+                    }
+                    std::thread::sleep(busy_backoff_delay(
+                        attempt,
+                        self.busy_backoff,
+                        self.busy_backoff_cap,
+                    ));
+                    attempt += 1;
+                }
+                Message::Error { code, detail, .. } => {
+                    return Err(WireError::Remote { code, detail })
+                }
+                other => {
+                    return Err(WireError::Protocol(format!(
+                        "expected ProgramResponse, got tag {:#04x}",
+                        other.tag()
+                    )))
+                }
+            }
+        }
     }
 
     /// One synchronous op round trip, retrying through `Busy` frames on

@@ -24,6 +24,7 @@ use super::{fnv1a64, key_kind_from_parts, key_kind_parts, WireError, WIRE_MAGIC,
 use crate::ckks::keys::{digit_count_at, expand_a};
 use crate::ckks::linear::SlotMatrix;
 use crate::ckks::params::{CkksContext, CkksParams, WidthProfile};
+use crate::ckks::program::{FheProgram, OpCode, ProgramError, Reg};
 use crate::ckks::{Ciphertext, EvalKeySet, Format, KeyKind, KsKey, MissingKey, RnsPoly};
 use crate::coordinator::MetricsSnapshot;
 
@@ -35,6 +36,12 @@ const MAX_KEYS: u32 = 1 << 16;
 const MAX_DIGITS: u16 = 256;
 const MAX_ROTATIONS: u32 = 1 << 20;
 const MAX_MATRIX_DIM: u32 = 1 << 16;
+/// Program decode ceilings: op count, declared inputs/outputs, name
+/// bytes. Generous for real DAGs, small enough that a hostile header
+/// cannot force large allocations before the payload is consumed.
+const MAX_PROGRAM_OPS: u32 = 1 << 14;
+const MAX_PROGRAM_IO: u16 = 1 << 10;
+const MAX_NAME_LEN: usize = 256;
 
 /// Object tag inside a blob header.
 #[derive(Debug, Clone, Copy, PartialEq, Eq)]
@@ -179,7 +186,8 @@ fn read_header(r: &mut Reader, want_tag: ObjTag) -> Result<u64, WireError> {
         return Err(WireError::Corrupt(format!("bad magic {magic:02x?}")));
     }
     let version = r.u16()?;
-    if version != WIRE_VERSION {
+    // v3 kept every blob layout of v2, so v2-era blobs still load.
+    if !super::version_accepted(version) {
         return Err(WireError::Version { got: version, want: WIRE_VERSION });
     }
     let tag = ObjTag::from_u8(r.u8()?)?;
@@ -668,6 +676,279 @@ impl WireRead for MissingKey {
     }
 }
 
+// ---------------------- program payloads (v3) ------------------------
+
+fn put_name(out: &mut Vec<u8>, name: &str) {
+    put_bytes(out, name.as_bytes());
+}
+
+fn read_name(r: &mut Reader) -> Result<String, WireError> {
+    let b = r.bytes()?;
+    if b.len() > MAX_NAME_LEN {
+        return Err(WireError::Corrupt(format!("name too long ({} bytes)", b.len())));
+    }
+    Ok(String::from_utf8_lossy(b).into_owned())
+}
+
+/// Op tags inside a program body (stable wire contract; append-only).
+mod op_tag {
+    pub const ADD: u8 = 0;
+    pub const SUB: u8 = 1;
+    pub const NEGATE: u8 = 2;
+    pub const MUL_PLAIN: u8 = 3;
+    pub const MUL_PLAIN_RAW: u8 = 4;
+    pub const MUL_CONST: u8 = 5;
+    pub const ADD_CONST: u8 = 6;
+    pub const MUL: u8 = 7;
+    pub const SQUARE: u8 = 8;
+    pub const ROTATE: u8 = 9;
+    pub const CONJUGATE: u8 = 10;
+    pub const RESCALE: u8 = 11;
+    pub const LEVEL_REDUCE: u8 = 12;
+    pub const HOM_LINEAR: u8 = 13;
+}
+
+impl WireWrite for OpCode {
+    fn wire_write(&self, out: &mut Vec<u8>) {
+        let reg = |out: &mut Vec<u8>, r: Reg| put_u32(out, r.0);
+        match self {
+            OpCode::Add(a, b) => {
+                put_u8(out, op_tag::ADD);
+                reg(out, *a);
+                reg(out, *b);
+            }
+            OpCode::Sub(a, b) => {
+                put_u8(out, op_tag::SUB);
+                reg(out, *a);
+                reg(out, *b);
+            }
+            OpCode::Negate(a) => {
+                put_u8(out, op_tag::NEGATE);
+                reg(out, *a);
+            }
+            OpCode::MulPlain(a, pt) => {
+                put_u8(out, op_tag::MUL_PLAIN);
+                reg(out, *a);
+                pt.wire_write(out);
+            }
+            OpCode::MulPlainRaw(a, pt) => {
+                put_u8(out, op_tag::MUL_PLAIN_RAW);
+                reg(out, *a);
+                pt.wire_write(out);
+            }
+            OpCode::MulConst(a, v) => {
+                put_u8(out, op_tag::MUL_CONST);
+                reg(out, *a);
+                put_f64(out, *v);
+            }
+            OpCode::AddConst(a, v) => {
+                put_u8(out, op_tag::ADD_CONST);
+                reg(out, *a);
+                put_f64(out, *v);
+            }
+            OpCode::Mul(a, b) => {
+                put_u8(out, op_tag::MUL);
+                reg(out, *a);
+                reg(out, *b);
+            }
+            OpCode::Square(a) => {
+                put_u8(out, op_tag::SQUARE);
+                reg(out, *a);
+            }
+            OpCode::Rotate(a, k) => {
+                put_u8(out, op_tag::ROTATE);
+                reg(out, *a);
+                put_u32(out, *k as u32);
+            }
+            OpCode::Conjugate(a) => {
+                put_u8(out, op_tag::CONJUGATE);
+                reg(out, *a);
+            }
+            OpCode::Rescale(a) => {
+                put_u8(out, op_tag::RESCALE);
+                reg(out, *a);
+            }
+            OpCode::LevelReduce(a, l) => {
+                put_u8(out, op_tag::LEVEL_REDUCE);
+                reg(out, *a);
+                put_u32(out, *l as u32);
+            }
+            OpCode::HomLinear(a, m) => {
+                put_u8(out, op_tag::HOM_LINEAR);
+                reg(out, *a);
+                m.wire_write(out);
+            }
+        }
+    }
+}
+
+impl WireRead for OpCode {
+    fn wire_read(r: &mut Reader) -> Result<Self, WireError> {
+        let tag = r.u8()?;
+        let reg = |r: &mut Reader| -> Result<Reg, WireError> { Ok(Reg(r.u32()?)) };
+        Ok(match tag {
+            op_tag::ADD => OpCode::Add(reg(r)?, reg(r)?),
+            op_tag::SUB => OpCode::Sub(reg(r)?, reg(r)?),
+            op_tag::NEGATE => OpCode::Negate(reg(r)?),
+            op_tag::MUL_PLAIN => OpCode::MulPlain(reg(r)?, RnsPoly::wire_read(r)?),
+            op_tag::MUL_PLAIN_RAW => OpCode::MulPlainRaw(reg(r)?, RnsPoly::wire_read(r)?),
+            op_tag::MUL_CONST => OpCode::MulConst(reg(r)?, r.f64()?),
+            op_tag::ADD_CONST => OpCode::AddConst(reg(r)?, r.f64()?),
+            op_tag::MUL => OpCode::Mul(reg(r)?, reg(r)?),
+            op_tag::SQUARE => OpCode::Square(reg(r)?),
+            op_tag::ROTATE => OpCode::Rotate(reg(r)?, r.u32()? as usize),
+            op_tag::CONJUGATE => OpCode::Conjugate(reg(r)?),
+            op_tag::RESCALE => OpCode::Rescale(reg(r)?),
+            op_tag::LEVEL_REDUCE => OpCode::LevelReduce(reg(r)?, r.u32()? as usize),
+            op_tag::HOM_LINEAR => OpCode::HomLinear(reg(r)?, SlotMatrix::wire_read(r)?),
+            other => {
+                return Err(WireError::Corrupt(format!("unknown program op tag {other}")))
+            }
+        })
+    }
+}
+
+impl WireWrite for FheProgram {
+    fn wire_write(&self, out: &mut Vec<u8>) {
+        put_u16(out, self.inputs().len() as u16);
+        for name in self.inputs() {
+            put_name(out, name);
+        }
+        put_u32(out, self.ops().len() as u32);
+        for op in self.ops() {
+            op.wire_write(out);
+        }
+        put_u16(out, self.outputs().len() as u16);
+        for (name, reg) in self.outputs() {
+            put_name(out, name);
+            put_u32(out, reg.0);
+        }
+    }
+}
+
+impl WireRead for FheProgram {
+    fn wire_read(r: &mut Reader) -> Result<Self, WireError> {
+        let n_inputs = r.u16()?;
+        if n_inputs > MAX_PROGRAM_IO {
+            return Err(WireError::Corrupt(format!("too many inputs ({n_inputs})")));
+        }
+        let mut inputs = Vec::with_capacity(n_inputs as usize);
+        for _ in 0..n_inputs {
+            inputs.push(read_name(r)?);
+        }
+        let n_ops = r.u32()?;
+        if n_ops > MAX_PROGRAM_OPS {
+            return Err(WireError::Corrupt(format!("too many ops ({n_ops})")));
+        }
+        let mut ops = Vec::with_capacity(n_ops as usize);
+        for _ in 0..n_ops {
+            ops.push(OpCode::wire_read(r)?);
+        }
+        let n_outputs = r.u16()?;
+        if n_outputs > MAX_PROGRAM_IO {
+            return Err(WireError::Corrupt(format!("too many outputs ({n_outputs})")));
+        }
+        let mut outputs = Vec::with_capacity(n_outputs as usize);
+        for _ in 0..n_outputs {
+            let name = read_name(r)?;
+            outputs.push((name, Reg(r.u32()?)));
+        }
+        // Register references are NOT trusted here — `validate()` (run at
+        // every admission point) turns dangling regs into typed errors.
+        Ok(FheProgram::from_parts(inputs, ops, outputs))
+    }
+}
+
+/// Error tags of the `ProgramError` wire encoding.
+mod perr_tag {
+    pub const MISSING_KEY: u8 = 0;
+    pub const WRONG_INPUT_COUNT: u8 = 1;
+    pub const UNKNOWN_REGISTER: u8 = 2;
+    pub const UNKNOWN_OUTPUT: u8 = 3;
+    pub const LEVEL_EXHAUSTED: u8 = 4;
+    pub const SCALE_MISMATCH: u8 = 5;
+    pub const BAD_OPERAND: u8 = 6;
+    pub const NO_OUTPUT: u8 = 7;
+}
+
+impl WireWrite for ProgramError {
+    fn wire_write(&self, out: &mut Vec<u8>) {
+        match self {
+            ProgramError::MissingKey { op, key } => {
+                put_u8(out, perr_tag::MISSING_KEY);
+                put_u32(out, *op as u32);
+                key.wire_write(out);
+            }
+            ProgramError::WrongInputCount { got, want } => {
+                put_u8(out, perr_tag::WRONG_INPUT_COUNT);
+                put_u32(out, *got as u32);
+                put_u32(out, *want as u32);
+            }
+            ProgramError::UnknownRegister { op, reg } => {
+                put_u8(out, perr_tag::UNKNOWN_REGISTER);
+                put_u32(out, *op as u32);
+                put_u32(out, *reg as u32);
+            }
+            ProgramError::UnknownOutput { index, reg } => {
+                put_u8(out, perr_tag::UNKNOWN_OUTPUT);
+                put_u32(out, *index as u32);
+                put_u32(out, *reg as u32);
+            }
+            ProgramError::LevelExhausted { op } => {
+                put_u8(out, perr_tag::LEVEL_EXHAUSTED);
+                put_u32(out, *op as u32);
+            }
+            ProgramError::ScaleMismatch { op } => {
+                put_u8(out, perr_tag::SCALE_MISMATCH);
+                put_u32(out, *op as u32);
+            }
+            ProgramError::BadOperand { op, why } => {
+                put_u8(out, perr_tag::BAD_OPERAND);
+                put_u32(out, *op as u32);
+                put_bytes(out, why.as_bytes());
+            }
+            ProgramError::NoOutput => put_u8(out, perr_tag::NO_OUTPUT),
+        }
+    }
+}
+
+impl WireRead for ProgramError {
+    fn wire_read(r: &mut Reader) -> Result<Self, WireError> {
+        Ok(match r.u8()? {
+            perr_tag::MISSING_KEY => ProgramError::MissingKey {
+                op: r.u32()? as usize,
+                key: MissingKey::wire_read(r)?,
+            },
+            perr_tag::WRONG_INPUT_COUNT => ProgramError::WrongInputCount {
+                got: r.u32()? as usize,
+                want: r.u32()? as usize,
+            },
+            perr_tag::UNKNOWN_REGISTER => ProgramError::UnknownRegister {
+                op: r.u32()? as usize,
+                reg: r.u32()? as usize,
+            },
+            perr_tag::UNKNOWN_OUTPUT => ProgramError::UnknownOutput {
+                index: r.u32()? as usize,
+                reg: r.u32()? as usize,
+            },
+            perr_tag::LEVEL_EXHAUSTED => {
+                ProgramError::LevelExhausted { op: r.u32()? as usize }
+            }
+            perr_tag::SCALE_MISMATCH => ProgramError::ScaleMismatch { op: r.u32()? as usize },
+            perr_tag::BAD_OPERAND => ProgramError::BadOperand {
+                op: r.u32()? as usize,
+                why: String::from_utf8_lossy(r.bytes()?).into_owned(),
+            },
+            perr_tag::NO_OUTPUT => ProgramError::NoOutput,
+            other => {
+                return Err(WireError::Corrupt(format!(
+                    "unknown program error tag {other}"
+                )))
+            }
+        })
+    }
+}
+
 impl WireWrite for MetricsSnapshot {
     fn wire_write(&self, out: &mut Vec<u8>) {
         put_u64(out, self.served);
@@ -680,6 +961,7 @@ impl WireWrite for MetricsSnapshot {
         put_u64(out, self.cuda_depth);
         put_u64(out, self.fhec_served);
         put_u64(out, self.cuda_served);
+        put_u64(out, self.programs);
     }
 }
 
@@ -696,6 +978,7 @@ impl WireRead for MetricsSnapshot {
             cuda_depth: r.u64()?,
             fhec_served: r.u64()?,
             cuda_served: r.u64()?,
+            programs: r.u64()?,
         })
     }
 }

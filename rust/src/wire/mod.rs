@@ -60,7 +60,24 @@ pub const WIRE_MAGIC: [u8; 4] = *b"FHEC";
 /// the FNV-1a fingerprint of the received key blob (per-shard
 /// replication verification), and `Error` frames are tagged with the
 /// request id they answer (0 = connection-level).
-pub const WIRE_VERSION: u16 = 2;
+///
+/// v3 (the program protocol): `ProgramRequest`/`ProgramResponse` carry a
+/// whole ciphertext DAG (`ckks::FheProgram`) and its outputs in **one**
+/// round trip, `ShardMetricsReq`/`ShardMetricsResp` expose the per-shard
+/// breakdown through a gateway, and `MetricsSnapshot` grows a `programs`
+/// counter. Every v2 single-op message is still accepted unchanged —
+/// servers answer v2 `Hello`s too ([`version_accepted`]).
+pub const WIRE_VERSION: u16 = 3;
+
+/// Peer versions this build serves. v3 keeps every v2 message kind and
+/// blob layout unchanged with one exception: the `MetricsResp` payload
+/// (`MetricsSnapshot`) gained a trailing `programs` counter, so a
+/// v2-era binary could decode everything except that one RPC. All
+/// single-op request/response traffic — the serving surface — is
+/// byte-compatible, which is what accepting v2 `Hello`s buys.
+pub fn version_accepted(v: u16) -> bool {
+    v == 2 || v == WIRE_VERSION
+}
 
 /// Capped exponential backoff for `Busy` retries, shared by
 /// [`client::RemoteEvaluator`] and the cluster's pipelined
@@ -95,6 +112,9 @@ pub enum WireError {
     Busy { depth: u32 },
     /// The server executed the op but the public key set lacks a key.
     MissingKey(MissingKey),
+    /// A program request failed admission or execution server-side
+    /// (typed — key gaps arrive as `ProgramError::MissingKey`).
+    Program(crate::ckks::ProgramError),
     /// A typed error frame from the peer.
     Remote { code: u16, detail: String },
 }
@@ -114,6 +134,7 @@ impl std::fmt::Display for WireError {
             WireError::Protocol(why) => write!(f, "protocol violation: {why}"),
             WireError::Busy { depth } => write!(f, "server busy ({depth} in flight)"),
             WireError::MissingKey(mk) => write!(f, "{mk}"),
+            WireError::Program(e) => write!(f, "program rejected: {e}"),
             WireError::Remote { code, detail } => {
                 write!(f, "remote error {code}: {detail}")
             }
@@ -132,6 +153,12 @@ impl From<std::io::Error> for WireError {
 impl From<MissingKey> for WireError {
     fn from(mk: MissingKey) -> Self {
         WireError::MissingKey(mk)
+    }
+}
+
+impl From<crate::ckks::ProgramError> for WireError {
+    fn from(e: crate::ckks::ProgramError) -> Self {
+        WireError::Program(e)
     }
 }
 

@@ -15,10 +15,15 @@
 //! | 0x09 | `MetricsResp` | s -> c    | `MetricsSnapshot` |
 //! | 0x0A | `Error`       | s -> c    | id u64 (0 = connection), code u16, detail |
 //! | 0x0B | `Shutdown`    | c -> s    | (empty) |
+//! | 0x0C | `ProgramRequest`  | c -> s | id u64, `FheProgram`, input ciphertexts |
+//! | 0x0D | `ProgramResponse` | s -> c | id u64, ok/err, outputs or `ProgramError`, timings |
+//! | 0x0E | `ShardMetricsReq`  | c -> s | (empty) |
+//! | 0x0F | `ShardMetricsResp` | s -> c | per-shard (name, `MetricsSnapshot`) list |
 //!
 //! `WireOp` mirrors `coordinator::OpKind` one-for-one, carrying the
-//! matrix operand for `HomLinear` inline; the second ciphertext operand
-//! of the binary ops travels in the enclosing `OpRequest`.
+//! matrix operand for `HomLinear` (and the plaintext for `MulPlain`)
+//! inline; the second ciphertext operand of the binary ops travels in
+//! the enclosing `OpRequest`.
 //!
 //! **Ordering (protocol v2).** Every op-scoped server message
 //! (`OpResponse`, `Busy`, op-level `Error`) carries the `u64` id of the
@@ -27,13 +32,26 @@
 //! `OpRequest`s in flight and match responses by id; `KeysAck`'s blob
 //! fingerprint (FNV-1a over the pushed bytes) lets a replicating
 //! gateway verify every shard installed the identical key set.
+//!
+//! **Programs (protocol v3).** A `ProgramRequest` ships a whole
+//! ciphertext DAG — named inputs, the op list, named outputs — as **one
+//! frame**, and the matching `ProgramResponse` returns every output in
+//! one frame: a whole computation per round trip instead of a round
+//! trip per op. Program ids share the op id space (`Busy`/`Error`
+//! answer them identically). `ShardMetricsReq` returns the per-shard
+//! metrics breakdown a plain `MetricsReq` sums away behind a gateway.
+//! v2 single-op messages remain accepted unchanged.
 
 use super::codec::{put_bytes, put_f64, put_u16, put_u32, put_u64, put_u8, Reader};
 use super::codec::{WireRead, WireWrite};
 use super::{Frame, WireError, WIRE_VERSION};
 use crate::ckks::linear::SlotMatrix;
-use crate::ckks::{Ciphertext, MissingKey};
+use crate::ckks::program::{FheProgram, ProgramError};
+use crate::ckks::{Ciphertext, MissingKey, RnsPoly};
 use crate::coordinator::{MetricsSnapshot, OpKind};
+
+/// Decode bound on per-shard metrics entries and program I/O lists.
+const MAX_LIST: usize = 4096;
 
 /// Error codes carried by `Message::Error`.
 pub mod error_code {
@@ -60,11 +78,17 @@ pub enum WireOp {
     Add,
     Rescale,
     HomLinear(SlotMatrix),
+    Sub,
+    Negate,
+    MulConst(f64),
+    AddConst(f64),
+    MulPlain(RnsPoly),
+    LevelReduce(usize),
 }
 
 impl WireOp {
-    /// The coordinator-side kind (the matrix payload is carried
-    /// separately into `Request::matrix`).
+    /// The coordinator-side kind (the matrix/plaintext payloads are
+    /// carried separately into `Request::matrix` / `Request::pt`).
     pub fn kind(&self) -> OpKind {
         match self {
             WireOp::LinearScore => OpKind::LinearScore,
@@ -75,6 +99,12 @@ impl WireOp {
             WireOp::Add => OpKind::Add,
             WireOp::Rescale => OpKind::Rescale,
             WireOp::HomLinear(_) => OpKind::HomLinear,
+            WireOp::Sub => OpKind::Sub,
+            WireOp::Negate => OpKind::Negate,
+            WireOp::MulConst(v) => OpKind::MulConst(*v),
+            WireOp::AddConst(v) => OpKind::AddConst(*v),
+            WireOp::MulPlain(_) => OpKind::MulPlain,
+            WireOp::LevelReduce(l) => OpKind::LevelReduce(*l),
         }
     }
 
@@ -94,6 +124,24 @@ impl WireOp {
                 put_u8(out, 7);
                 m.wire_write(out);
             }
+            WireOp::Sub => put_u8(out, 8),
+            WireOp::Negate => put_u8(out, 9),
+            WireOp::MulConst(v) => {
+                put_u8(out, 10);
+                put_f64(out, *v);
+            }
+            WireOp::AddConst(v) => {
+                put_u8(out, 11);
+                put_f64(out, *v);
+            }
+            WireOp::MulPlain(pt) => {
+                put_u8(out, 12);
+                pt.wire_write(out);
+            }
+            WireOp::LevelReduce(l) => {
+                put_u8(out, 13);
+                put_u32(out, *l as u32);
+            }
         }
     }
 
@@ -107,6 +155,12 @@ impl WireOp {
             5 => WireOp::Add,
             6 => WireOp::Rescale,
             7 => WireOp::HomLinear(SlotMatrix::wire_read(r)?),
+            8 => WireOp::Sub,
+            9 => WireOp::Negate,
+            10 => WireOp::MulConst(r.f64()?),
+            11 => WireOp::AddConst(r.f64()?),
+            12 => WireOp::MulPlain(RnsPoly::wire_read(r)?),
+            13 => WireOp::LevelReduce(r.u32()? as usize),
             other => return Err(WireError::Corrupt(format!("unknown op tag {other}"))),
         })
     }
@@ -144,6 +198,25 @@ pub enum Message {
     /// error concerns the connection itself (handshake, framing...).
     Error { id: u64, code: u16, detail: String },
     Shutdown,
+    /// A whole ciphertext DAG and its inputs — one frame, one round trip
+    /// for the entire computation (protocol v3).
+    ProgramRequest {
+        id: u64,
+        program: FheProgram,
+        inputs: Vec<Ciphertext>,
+    },
+    ProgramResponse {
+        id: u64,
+        result: Result<Vec<Ciphertext>, ProgramError>,
+        service_us: u64,
+        sim_base_us: f64,
+        sim_fhec_us: f64,
+        batch_size: u32,
+    },
+    /// Ask for the per-shard metrics breakdown (a single server answers
+    /// with one entry; a gateway answers with one entry per live shard).
+    ShardMetricsReq,
+    ShardMetricsResp(Vec<(String, MetricsSnapshot)>),
 }
 
 /// Encode an `OpRequest` frame directly from borrowed operands — the
@@ -170,6 +243,25 @@ pub fn encode_op_request(
     Frame::new(TAG_OP_REQUEST, body)
 }
 
+/// Encode a `ProgramRequest` frame directly from a borrowed program and
+/// input slice — the single source of the request layout
+/// (`Message::encode` delegates here); clients serialize straight from
+/// their operands, no clone into an owned [`Message`].
+pub fn encode_program_request(
+    id: u64,
+    program: &FheProgram,
+    inputs: &[Ciphertext],
+) -> Frame {
+    let mut body = Vec::new();
+    put_u64(&mut body, id);
+    program.wire_write(&mut body);
+    put_u16(&mut body, inputs.len() as u16);
+    for ct in inputs {
+        ct.wire_write(&mut body);
+    }
+    Frame::new(TAG_PROGRAM_REQUEST, body)
+}
+
 pub const TAG_HELLO: u8 = 0x01;
 pub const TAG_HELLO_ACK: u8 = 0x02;
 pub const TAG_PUSH_KEYS: u8 = 0x03;
@@ -181,6 +273,10 @@ pub const TAG_METRICS_REQ: u8 = 0x08;
 pub const TAG_METRICS_RESP: u8 = 0x09;
 pub const TAG_ERROR: u8 = 0x0A;
 pub const TAG_SHUTDOWN: u8 = 0x0B;
+pub const TAG_PROGRAM_REQUEST: u8 = 0x0C;
+pub const TAG_PROGRAM_RESPONSE: u8 = 0x0D;
+pub const TAG_SHARD_METRICS_REQ: u8 = 0x0E;
+pub const TAG_SHARD_METRICS_RESP: u8 = 0x0F;
 
 impl Message {
     /// The Hello this build sends.
@@ -201,6 +297,10 @@ impl Message {
             Message::MetricsResp(_) => TAG_METRICS_RESP,
             Message::Error { .. } => TAG_ERROR,
             Message::Shutdown => TAG_SHUTDOWN,
+            Message::ProgramRequest { .. } => TAG_PROGRAM_REQUEST,
+            Message::ProgramResponse { .. } => TAG_PROGRAM_RESPONSE,
+            Message::ShardMetricsReq => TAG_SHARD_METRICS_REQ,
+            Message::ShardMetricsResp(_) => TAG_SHARD_METRICS_RESP,
         }
     }
 
@@ -250,7 +350,7 @@ impl Message {
                 put_u64(&mut body, *id);
                 put_u32(&mut body, *depth);
             }
-            Message::MetricsReq | Message::Shutdown => {}
+            Message::MetricsReq | Message::Shutdown | Message::ShardMetricsReq => {}
             Message::MetricsResp(snap) => {
                 snap.wire_write(&mut body);
             }
@@ -258,6 +358,43 @@ impl Message {
                 put_u64(&mut body, *id);
                 put_u16(&mut body, *code);
                 put_bytes(&mut body, detail.as_bytes());
+            }
+            Message::ProgramRequest { id, program, inputs } => {
+                return encode_program_request(*id, program, inputs);
+            }
+            Message::ProgramResponse {
+                id,
+                result,
+                service_us,
+                sim_base_us,
+                sim_fhec_us,
+                batch_size,
+            } => {
+                put_u64(&mut body, *id);
+                match result {
+                    Ok(outputs) => {
+                        put_u8(&mut body, 1);
+                        put_u16(&mut body, outputs.len() as u16);
+                        for ct in outputs {
+                            ct.wire_write(&mut body);
+                        }
+                    }
+                    Err(e) => {
+                        put_u8(&mut body, 0);
+                        e.wire_write(&mut body);
+                    }
+                }
+                put_u64(&mut body, *service_us);
+                put_f64(&mut body, *sim_base_us);
+                put_f64(&mut body, *sim_fhec_us);
+                put_u32(&mut body, *batch_size);
+            }
+            Message::ShardMetricsResp(shards) => {
+                put_u16(&mut body, shards.len() as u16);
+                for (name, snap) in shards {
+                    put_bytes(&mut body, name.as_bytes());
+                    snap.wire_write(&mut body);
+                }
             }
         }
         Frame::new(self.tag(), body)
@@ -317,6 +454,64 @@ impl Message {
                 Message::Error { id, code, detail }
             }
             TAG_SHUTDOWN => Message::Shutdown,
+            TAG_PROGRAM_REQUEST => {
+                let id = r.u64()?;
+                let program = FheProgram::wire_read(&mut r)?;
+                let n = r.u16()? as usize;
+                if n > MAX_LIST {
+                    return Err(WireError::Corrupt(format!("too many inputs ({n})")));
+                }
+                let mut inputs = Vec::with_capacity(n);
+                for _ in 0..n {
+                    inputs.push(Ciphertext::wire_read(&mut r)?);
+                }
+                Message::ProgramRequest { id, program, inputs }
+            }
+            TAG_PROGRAM_RESPONSE => {
+                let id = r.u64()?;
+                let result = match r.u8()? {
+                    1 => {
+                        let n = r.u16()? as usize;
+                        if n > MAX_LIST {
+                            return Err(WireError::Corrupt(format!(
+                                "too many outputs ({n})"
+                            )));
+                        }
+                        let mut outputs = Vec::with_capacity(n);
+                        for _ in 0..n {
+                            outputs.push(Ciphertext::wire_read(&mut r)?);
+                        }
+                        Ok(outputs)
+                    }
+                    0 => Err(ProgramError::wire_read(&mut r)?),
+                    other => {
+                        return Err(WireError::Corrupt(format!(
+                            "bad program result flag {other}"
+                        )))
+                    }
+                };
+                Message::ProgramResponse {
+                    id,
+                    result,
+                    service_us: r.u64()?,
+                    sim_base_us: r.f64()?,
+                    sim_fhec_us: r.f64()?,
+                    batch_size: r.u32()?,
+                }
+            }
+            TAG_SHARD_METRICS_REQ => Message::ShardMetricsReq,
+            TAG_SHARD_METRICS_RESP => {
+                let n = r.u16()? as usize;
+                if n > MAX_LIST {
+                    return Err(WireError::Corrupt(format!("too many shards ({n})")));
+                }
+                let mut shards = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let name = String::from_utf8_lossy(r.bytes()?).into_owned();
+                    shards.push((name, MetricsSnapshot::wire_read(&mut r)?));
+                }
+                Message::ShardMetricsResp(shards)
+            }
             other => return Err(WireError::Corrupt(format!("unknown message tag {other}"))),
         };
         r.expect_done()?;
@@ -327,6 +522,36 @@ impl Message {
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::ckks::keys::KeyKind;
+    use crate::ckks::program::{OpCode, ProgramBuilder, Reg};
+    use crate::ckks::{Format, RnsPoly};
+
+    fn snapshot() -> MetricsSnapshot {
+        MetricsSnapshot {
+            served: 10,
+            batches: 3,
+            rejected: 1,
+            queue_peak: 5,
+            mean_service_us: 123.5,
+            mean_batch: 3.3,
+            fhec_depth: 2,
+            cuda_depth: 0,
+            fhec_served: 8,
+            cuda_served: 2,
+            programs: 4,
+        }
+    }
+
+    /// A structurally valid (tiny, fake-ring) ciphertext for frame tests.
+    fn tiny_ct(fill: u64) -> Ciphertext {
+        let limb = |f: u64| RnsPoly {
+            n: 4,
+            format: Format::Eval,
+            limbs: vec![vec![f, f + 1, f + 2, f + 3]],
+            chain: vec![0],
+        };
+        Ciphertext { c0: limb(fill), c1: limb(fill + 10), level: 0, scale: 1099511627776.0 }
+    }
 
     #[test]
     fn scalar_messages_roundtrip() {
@@ -336,21 +561,15 @@ mod tests {
             Message::KeysAck { keys: 12, fingerprint: 0xFEED },
             Message::Busy { id: 9, depth: 64 },
             Message::MetricsReq,
-            Message::MetricsResp(MetricsSnapshot {
-                served: 10,
-                batches: 3,
-                rejected: 1,
-                queue_peak: 5,
-                mean_service_us: 123.5,
-                mean_batch: 3.3,
-                fhec_depth: 2,
-                cuda_depth: 0,
-                fhec_served: 8,
-                cuda_served: 2,
-            }),
+            Message::MetricsResp(snapshot()),
             Message::Error { id: 41, code: 2, detail: "no keys".into() },
             Message::Shutdown,
             Message::PushKeys { blob: vec![1, 2, 3] },
+            Message::ShardMetricsReq,
+            Message::ShardMetricsResp(vec![
+                ("127.0.0.1:7051".into(), snapshot()),
+                ("127.0.0.1:7052".into(), MetricsSnapshot::default()),
+            ]),
         ];
         for m in msgs {
             let frame = m.encode();
@@ -359,6 +578,103 @@ mod tests {
             frame.write_to(&mut buf).unwrap();
             let back = Frame::read_from(&mut buf.as_slice()).unwrap();
             assert_eq!(Message::decode(&back).unwrap(), m);
+        }
+    }
+
+    #[test]
+    fn program_messages_roundtrip() {
+        let mut b = ProgramBuilder::new();
+        let x = b.input("x");
+        let sq = b.square(x);
+        let r1 = b.rotate(sq, 1);
+        let r3 = b.rotate(sq, 3);
+        let s = b.add(r1, r3);
+        let neg = b.negate(s);
+        let c = b.mul_const(neg, 0.5);
+        let d = b.add_const(c, 1.0);
+        let lr = b.level_reduce(d, 0);
+        b.output("y", lr);
+        let prog = b.finish();
+
+        let req = Message::ProgramRequest {
+            id: 77,
+            program: prog.clone(),
+            inputs: vec![tiny_ct(1), tiny_ct(5)],
+        };
+        let ok = Message::ProgramResponse {
+            id: 77,
+            result: Ok(vec![tiny_ct(9)]),
+            service_us: 1234,
+            sim_base_us: 9.5,
+            sim_fhec_us: 3.25,
+            batch_size: 2,
+        };
+        let err = Message::ProgramResponse {
+            id: 78,
+            result: Err(ProgramError::MissingKey {
+                op: 2,
+                key: MissingKey { kind: KeyKind::Galois(5), level: 3 },
+            }),
+            service_us: 0,
+            sim_base_us: 0.0,
+            sim_fhec_us: 0.0,
+            batch_size: 1,
+        };
+        for m in [req, ok, err] {
+            let frame = m.encode();
+            let mut buf = Vec::new();
+            frame.write_to(&mut buf).unwrap();
+            let back = Frame::read_from(&mut buf.as_slice()).unwrap();
+            assert_eq!(Message::decode(&back).unwrap(), m);
+        }
+        // The borrowed-operand encoder is the same layout Message uses.
+        let inputs = [tiny_ct(1), tiny_ct(5)];
+        let direct = encode_program_request(77, &prog, &inputs);
+        let via_msg = Message::ProgramRequest {
+            id: 77,
+            program: prog,
+            inputs: inputs.to_vec(),
+        }
+        .encode();
+        assert_eq!(direct.tag, via_msg.tag);
+        assert_eq!(direct.body, via_msg.body);
+    }
+
+    #[test]
+    fn every_program_opcode_roundtrips() {
+        let pt = RnsPoly {
+            n: 4,
+            format: Format::Coeff,
+            limbs: vec![vec![7, 8, 9, 10]],
+            chain: vec![0],
+        };
+        let m = {
+            let mut m = SlotMatrix::zeros(2);
+            m.set(0, 1, crate::ckks::Complex::new(1.5, -0.5));
+            m
+        };
+        let ops = vec![
+            OpCode::Add(Reg(0), Reg(1)),
+            OpCode::Sub(Reg(1), Reg(0)),
+            OpCode::Negate(Reg(2)),
+            OpCode::MulPlain(Reg(0), pt.clone()),
+            OpCode::MulPlainRaw(Reg(1), pt),
+            OpCode::MulConst(Reg(0), -2.5),
+            OpCode::AddConst(Reg(0), 0.25),
+            OpCode::Mul(Reg(0), Reg(1)),
+            OpCode::Square(Reg(3)),
+            OpCode::Rotate(Reg(0), 12),
+            OpCode::Conjugate(Reg(0)),
+            OpCode::Rescale(Reg(4)),
+            OpCode::LevelReduce(Reg(0), 2),
+            OpCode::HomLinear(Reg(0), m),
+        ];
+        for op in ops {
+            let mut buf = Vec::new();
+            op.wire_write(&mut buf);
+            let mut r = Reader::new(&buf);
+            assert_eq!(OpCode::wire_read(&mut r).unwrap(), op);
+            r.expect_done().unwrap();
         }
     }
 

@@ -23,12 +23,14 @@ use std::sync::{Arc, Mutex};
 
 use super::codec::decode_eval_key_set;
 use super::protocol::{error_code, Message, WireOp};
-use super::{fnv1a64, params_fingerprint, Frame, WireError, WIRE_VERSION};
+use super::{fnv1a64, params_fingerprint, version_accepted, Frame, WireError, WIRE_VERSION};
 use crate::ckks::encoding::Complex;
 use crate::ckks::params::{CkksContext, CkksParams};
-use crate::ckks::{Ciphertext, Evaluator, Format};
+use crate::ckks::program::{FheProgram, OpCode};
+use crate::ckks::{Ciphertext, Evaluator, Format, RnsPoly};
 use crate::coordinator::{
-    Coordinator, ModelState, Request, Response, ServeConfig, SubmitError,
+    Coordinator, ModelState, ProgramRequest, ProgramResponse, ProgramSubmitError, Request,
+    Response, ServeConfig, SubmitError,
 };
 
 #[derive(Debug, Clone)]
@@ -58,6 +60,9 @@ struct ServerShared {
     engine: Mutex<Option<Engine>>,
     stop: AtomicBool,
     verbose: bool,
+    /// How this node names itself in `ShardMetricsResp` (the listen
+    /// address — matches what a gateway calls it).
+    name: String,
 }
 
 /// The default server-side model for `LinearScore` requests: the same
@@ -83,6 +88,7 @@ pub fn serve(listener: TcpListener, opts: ServeOptions) -> std::io::Result<()> {
         engine: Mutex::new(None),
         stop: AtomicBool::new(false),
         verbose: opts.verbose,
+        name: addr.to_string(),
     });
     loop {
         let (stream, peer) = match listener.accept() {
@@ -114,6 +120,17 @@ fn response_message(id: u64, resp: Response) -> Message {
     Message::OpResponse {
         id,
         result: resp.ct,
+        service_us: resp.service.as_micros() as u64,
+        sim_base_us: resp.sim_base_us,
+        sim_fhec_us: resp.sim_fhec_us,
+        batch_size: resp.batch_size as u32,
+    }
+}
+
+fn program_response_message(id: u64, resp: ProgramResponse) -> Message {
+    Message::ProgramResponse {
+        id,
+        result: resp.outputs,
         service_us: resp.service.as_micros() as u64,
         sim_base_us: resp.sim_base_us,
         sim_fhec_us: resp.sim_fhec_us,
@@ -180,7 +197,9 @@ pub(crate) fn hello_reply(
     ours: u64,
     who: &str,
 ) -> Result<Message, Message> {
-    if version != WIRE_VERSION {
+    // v3 serves v2 clients too (the single-op surface is unchanged); the
+    // ack echoes the client's version so it knows what it negotiated.
+    if !version_accepted(version) {
         return Err(Message::Error {
             id: 0,
             code: error_code::HANDSHAKE,
@@ -199,7 +218,7 @@ pub(crate) fn hello_reply(
             ),
         });
     }
-    Ok(Message::HelloAck { version: WIRE_VERSION, fingerprint: ours })
+    Ok(Message::HelloAck { version, fingerprint: ours })
 }
 
 /// A ciphertext is only admissible if it lives on exactly the chain this
@@ -225,6 +244,41 @@ fn validate_ct(ctx: &CkksContext, ct: &Ciphertext) -> Result<(), String> {
             if half.limbs[i].iter().any(|&x| x >= q) {
                 return Err(format!("non-canonical residue in limb {i} (>= modulus)"));
             }
+        }
+    }
+    Ok(())
+}
+
+/// A plaintext operand must live on this context's ring with canonical
+/// residues over known tower primes — the level/chain match is the
+/// coordinator's typed validation; this guards the modular arithmetic.
+fn validate_pt(ctx: &CkksContext, pt: &RnsPoly) -> Result<(), String> {
+    if pt.n != ctx.params.n {
+        return Err(format!("plaintext ring dim {} != {}", pt.n, ctx.params.n));
+    }
+    if pt.limbs.len() != pt.chain.len() {
+        return Err("plaintext limb/chain count mismatch".into());
+    }
+    for (i, &ci) in pt.chain.iter().enumerate() {
+        let Some(limb_ctx) = ctx.tower.contexts.get(ci) else {
+            return Err(format!("plaintext chain index {ci} beyond the tower"));
+        };
+        let q = limb_ctx.modulus.value();
+        if pt.limbs[i].len() != pt.n || pt.limbs[i].iter().any(|&x| x >= q) {
+            return Err(format!("non-canonical plaintext residue in limb {i}"));
+        }
+    }
+    Ok(())
+}
+
+/// Untrusted-input checks the typed program validation does not cover:
+/// every embedded plaintext must carry canonical residues over known
+/// tower primes (non-canonical words would silently wrap inside the
+/// modular kernels instead of failing loudly).
+fn validate_program_operands(ctx: &CkksContext, prog: &FheProgram) -> Result<(), String> {
+    for (i, op) in prog.ops().iter().enumerate() {
+        if let OpCode::MulPlain(_, pt) | OpCode::MulPlainRaw(_, pt) = op {
+            validate_pt(ctx, pt).map_err(|e| format!("op {i}: {e}"))?;
         }
     }
     Ok(())
@@ -343,16 +397,26 @@ fn reader_loop(
                     continue;
                 }
                 let kind = op.kind();
-                let matrix = match op {
-                    WireOp::HomLinear(m) => Some(m),
-                    _ => None,
+                let (matrix, pt) = match op {
+                    WireOp::HomLinear(m) => (Some(m), None),
+                    WireOp::MulPlain(p) => (None, Some(p)),
+                    _ => (None, None),
                 };
+                if let Some(p) = &pt {
+                    if let Err(why) = validate_pt(&engine.ev.ctx, p) {
+                        send(Message::Error { id, code: error_code::BAD_REQUEST, detail: why });
+                        continue;
+                    }
+                }
                 let mut req = Request::new(id, kind, ct);
                 if let Some(c2) = ct2 {
                     req = req.with_ct2(c2);
                 }
                 if let Some(m) = matrix {
                     req = req.with_matrix(m);
+                }
+                if let Some(p) = pt {
+                    req = req.with_pt(p);
                 }
                 match engine.coord.submit(req) {
                     Ok(rrx) => {
@@ -394,6 +458,70 @@ fn reader_loop(
                     }),
                 }
             }
+            Message::ProgramRequest { id, program, inputs } => {
+                let guard = shared.engine.lock().unwrap();
+                let Some(engine) = guard.as_ref() else {
+                    send(Message::Error {
+                        id,
+                        code: error_code::NO_KEYS,
+                        detail: "no evaluation keys pushed yet".into(),
+                    });
+                    continue;
+                };
+                // Untrusted bytes: every input ciphertext and embedded
+                // plaintext must be canonical on this ring; the typed
+                // program validation (levels/scales/keys/registers) runs
+                // inside `submit_program`.
+                let mut invalid = inputs
+                    .iter()
+                    .find_map(|ct| validate_ct(&engine.ev.ctx, ct).err());
+                if invalid.is_none() {
+                    invalid = validate_program_operands(&engine.ev.ctx, &program).err();
+                }
+                if let Some(why) = invalid {
+                    send(Message::Error { id, code: error_code::BAD_REQUEST, detail: why });
+                    continue;
+                }
+                let req = ProgramRequest::new(id, Arc::new(program), inputs);
+                match engine.coord.submit_program(req) {
+                    Ok(rrx) => {
+                        // Same completion-order forwarder pattern as
+                        // single ops: programs interleave freely with
+                        // them on the connection.
+                        let tx = tx.clone();
+                        std::thread::spawn(move || {
+                            let msg = match rrx.recv() {
+                                Ok(resp) => program_response_message(id, resp),
+                                Err(_) => Message::Error {
+                                    id,
+                                    code: error_code::STOPPED,
+                                    detail: "worker dropped the program".into(),
+                                },
+                            };
+                            let _ = tx.send(msg);
+                        });
+                    }
+                    Err((_, ProgramSubmitError::QueueFull { depth })) => {
+                        send(Message::Busy { id, depth: depth as u32 })
+                    }
+                    Err((_, ProgramSubmitError::Invalid(e))) => {
+                        // The typed error crosses the wire intact.
+                        send(Message::ProgramResponse {
+                            id,
+                            result: Err(e),
+                            service_us: 0,
+                            sim_base_us: 0.0,
+                            sim_fhec_us: 0.0,
+                            batch_size: 0,
+                        })
+                    }
+                    Err((_, ProgramSubmitError::Stopped)) => send(Message::Error {
+                        id,
+                        code: error_code::STOPPED,
+                        detail: "coordinator stopped".into(),
+                    }),
+                }
+            }
             Message::MetricsReq => {
                 let snap = shared
                     .engine
@@ -403,6 +531,18 @@ fn reader_loop(
                     .map(|e| e.coord.snapshot())
                     .unwrap_or_default();
                 send(Message::MetricsResp(snap));
+            }
+            Message::ShardMetricsReq => {
+                // A single server is a one-shard "cluster" named by its
+                // listen address — what a fronting gateway calls it.
+                let snap = shared
+                    .engine
+                    .lock()
+                    .unwrap()
+                    .as_ref()
+                    .map(|e| e.coord.snapshot())
+                    .unwrap_or_default();
+                send(Message::ShardMetricsResp(vec![(shared.name.clone(), snap)]));
             }
             Message::Shutdown => {
                 shared.stop.store(true, Ordering::SeqCst);

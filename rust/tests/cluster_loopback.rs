@@ -91,11 +91,42 @@ fn gateway_pipelined_out_of_order_matches_local_bit_for_bit() {
     let sync = run_sync(&cluster, &wl).expect("sync workload");
     assert_eq!(sync, wl.expected, "sync completions must be bit-exact");
 
-    // Aggregated metrics: the gateway sums both shards' counters.
-    let total = cluster.metrics().expect("metrics through gateway").total();
+    // Whole-program request through the gateway: one round trip to the
+    // owning shard, bit-identical to local `run_program` (hoisted
+    // rotation fan-out server-side).
+    let prog = {
+        use fhecore::ckks::ProgramBuilder;
+        let mut b = ProgramBuilder::new();
+        let x = b.input("x");
+        let sq = b.square(x);
+        let r3 = b.rotate(sq, 3);
+        let y = b.add(sq, r3);
+        b.output("y", y);
+        b.finish()
+    };
+    let prog_got = cluster
+        .run_program(&prog, std::slice::from_ref(&wl.inputs[0]))
+        .expect("program through gateway");
+    let prog_want = ev
+        .run_program(&prog, std::slice::from_ref(&wl.inputs[0]))
+        .expect("local program");
+    assert_eq!(prog_got, prog_want, "gateway program must be bit-identical to local");
+
+    // Per-shard metrics survive the gateway hop (v3): one entry per
+    // downstream shard, named by its address — not just the sum.
+    let m = cluster.metrics().expect("metrics through gateway");
+    assert_eq!(m.shards.len(), 2, "gateway must expose both shards");
+    for (name, _) in &m.shards {
+        assert!(
+            name == &addr_a || name == &addr_b,
+            "shard entry {name} must be a real downstream address"
+        );
+    }
+    let total = m.total();
     assert!(total.served >= 32, "served {}", total.served);
     assert!(total.fhec_served >= 16, "fhec lane {}", total.fhec_served);
     assert!(total.cuda_served >= 16, "cuda lane {}", total.cuda_served);
+    assert_eq!(total.programs, 1, "the program request is counted");
 
     // Replication proof: each shard answers a key-switch op directly,
     // with no further PushKeys — and bit-identically to the local

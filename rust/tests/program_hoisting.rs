@@ -1,0 +1,357 @@
+//! Hoisting correctness: `Evaluator::run_program` must be **bit-exact**
+//! against eager per-op replay on randomized DAGs, and must pay exactly
+//! one key-switch digit decomposition per rotated source register — the
+//! property the whole program API exists for.
+//!
+//! The decomposition counter (`ckks::decomposition_count`) is process
+//! global, so every test here serializes on one mutex: this file is its
+//! own test binary, which keeps the rest of the suite's key switching
+//! out of the deltas.
+
+use std::sync::{Arc, Mutex};
+
+use fhecore::ckks::encoding::Complex;
+use fhecore::ckks::linear::{hom_linear, hom_linear_eager, hom_linear_program, SlotMatrix};
+use fhecore::ckks::params::{CkksContext, CkksParams};
+use fhecore::ckks::program::{FheProgram, OpCode, ProgramBuilder, Reg};
+use fhecore::ckks::{
+    bsgs_geometry, bsgs_steps, decomposition_count, Ciphertext, Decryptor, Encryptor,
+    EvalKeySpec, Evaluator, KeyGen,
+};
+use fhecore::util::rng::Pcg64;
+
+static SER: Mutex<()> = Mutex::new(());
+
+fn lock() -> std::sync::MutexGuard<'static, ()> {
+    SER.lock().unwrap_or_else(|e| e.into_inner())
+}
+
+struct Fixture {
+    ev: Evaluator,
+    enc: Encryptor,
+    dec: Decryptor,
+    rng: Pcg64,
+}
+
+fn fixture(seed: u64) -> Fixture {
+    let ctx = CkksContext::new(CkksParams::toy());
+    let mut rng = Pcg64::new(seed);
+    let kg = KeyGen::new(&ctx, &mut rng);
+    let slots = ctx.params.slots();
+    // Serving kit + the full BSGS step set: every rotation the tests use.
+    let spec = EvalKeySpec::serving(slots).with_rotations(&bsgs_steps(slots));
+    let keys = kg.eval_key_set(&ctx, &spec, &mut rng);
+    let enc = kg.encryptor();
+    let dec = kg.decryptor();
+    Fixture { ev: Evaluator::new(ctx, Arc::new(keys)), enc, dec, rng }
+}
+
+/// Independent interpreter: replay the program one op at a time through
+/// the plain `Evaluator` surface — no shared decompositions, no program
+/// machinery beyond reading the op list.
+fn eager_replay(ev: &Evaluator, prog: &FheProgram, inputs: &[Ciphertext]) -> Vec<Ciphertext> {
+    let mut regs: Vec<Ciphertext> = inputs.to_vec();
+    for op in prog.ops() {
+        let out = {
+            let v = |r: Reg| &regs[r.index()];
+            match op {
+                OpCode::Add(a, b) => ev.add(v(*a), v(*b)),
+                OpCode::Sub(a, b) => ev.sub(v(*a), v(*b)),
+                OpCode::Negate(a) => ev.negate(v(*a)),
+                OpCode::MulPlain(a, pt) => ev.mul_plain(v(*a), pt),
+                OpCode::MulPlainRaw(a, pt) => {
+                    // The raw (no-rescale) plaintext product, replicated.
+                    let ct = v(*a);
+                    let mut p = pt.clone();
+                    p.to_eval(&ev.ctx.tower);
+                    let mut out = ct.clone();
+                    out.c0.mul_assign(&p, &ev.ctx.tower);
+                    out.c1.mul_assign(&p, &ev.ctx.tower);
+                    out.scale = ct.scale * ev.ctx.scale;
+                    out
+                }
+                OpCode::MulConst(a, c) => ev.mul_const(v(*a), *c),
+                OpCode::AddConst(a, c) => ev.add_const(v(*a), *c),
+                OpCode::Mul(a, b) => ev.mul(v(*a), v(*b)).expect("declared keys"),
+                OpCode::Square(a) => ev.mul(v(*a), v(*a)).expect("declared keys"),
+                OpCode::Rotate(a, k) => ev.rotate(v(*a), *k).expect("declared keys"),
+                OpCode::Conjugate(a) => ev.conjugate(v(*a)).expect("declared keys"),
+                OpCode::Rescale(a) => ev.rescale(v(*a)),
+                OpCode::LevelReduce(a, l) => ev.level_reduce(v(*a), *l),
+                OpCode::HomLinear(a, m) => {
+                    hom_linear_eager(ev, v(*a), m).expect("declared keys")
+                }
+            }
+        };
+        regs.push(out);
+    }
+    prog.outputs()
+        .iter()
+        .map(|(_, r)| regs[r.index()].clone())
+        .collect()
+}
+
+/// Build a random, always-valid DAG over `n_inputs` level-3 inputs:
+/// rotations/conjugations (biased toward fan-outs on a shared source),
+/// adds/subs of scale-compatible registers, squares, plaintext products,
+/// rescales, level drops.
+fn random_program(rng: &mut Pcg64, ev: &Evaluator, n_inputs: usize, n_ops: usize) -> FheProgram {
+    let slots = ev.ctx.params.slots();
+    let delta = ev.ctx.scale;
+    let mut b = ProgramBuilder::new();
+    // Track (reg, level, scale) the same way validation propagates it.
+    let mut meta: Vec<(Reg, usize, f64)> = (0..n_inputs)
+        .map(|i| (b.input(&format!("in{i}")), 3usize, delta))
+        .collect();
+    let q_at = |level: usize| {
+        ev.ctx.tower.contexts[ev.ctx.q_chain[level]].modulus.value() as f64
+    };
+    let rot_steps = [1usize, 2, 3, 4, 5, 8];
+    let mut emitted = 0usize;
+    let mut guard = 0usize;
+    while emitted < n_ops && guard < n_ops * 30 {
+        guard += 1;
+        let pick = rng.below(10) as usize;
+        let (src_reg, src_level, src_scale) = meta[rng.below(meta.len() as u64) as usize];
+        let new = match pick {
+            // Rotation fan-out: 2-3 rotations of one source.
+            0 | 1 => {
+                let fan = 2 + (rng.below(2) as usize);
+                let mut last = None;
+                for _ in 0..fan.min(n_ops - emitted) {
+                    let k = rot_steps[rng.below(rot_steps.len() as u64) as usize];
+                    last = Some((b.rotate(src_reg, k), src_level, src_scale));
+                    emitted += 1;
+                }
+                match last {
+                    Some(x) => x,
+                    None => continue,
+                }
+            }
+            2 => (b.conjugate(src_reg), src_level, src_scale),
+            3 | 4 => {
+                // Add/Sub of two scale-compatible registers.
+                let candidates: Vec<&(Reg, usize, f64)> = meta
+                    .iter()
+                    .filter(|(_, _, s)| {
+                        let ratio = src_scale / s;
+                        (0.5..2.0).contains(&ratio)
+                    })
+                    .collect();
+                if candidates.is_empty() {
+                    continue;
+                }
+                let (other, other_level, _) =
+                    *candidates[rng.below(candidates.len() as u64) as usize];
+                let r = if pick == 3 {
+                    b.add(src_reg, other)
+                } else {
+                    b.sub(src_reg, other)
+                };
+                (r, src_level.min(other_level), src_scale)
+            }
+            5 => {
+                if src_level == 0 {
+                    continue;
+                }
+                (
+                    b.square(src_reg),
+                    src_level - 1,
+                    src_scale * src_scale / q_at(src_level),
+                )
+            }
+            6 => {
+                if src_level == 0 {
+                    continue;
+                }
+                (
+                    b.mul_const(src_reg, 0.5 + rng.f64()),
+                    src_level - 1,
+                    src_scale * delta / q_at(src_level),
+                )
+            }
+            7 => (b.add_const(src_reg, rng.f64() - 0.5), src_level, src_scale),
+            8 => (b.negate(src_reg), src_level, src_scale),
+            _ => {
+                if src_level == 0 {
+                    continue;
+                }
+                let z: Vec<Complex> = (0..slots)
+                    .map(|_| Complex::new(rng.f64() - 0.5, 0.0))
+                    .collect();
+                let pt = ev.encode(&z, src_level);
+                (
+                    b.mul_plain(src_reg, pt),
+                    src_level - 1,
+                    src_scale * delta / q_at(src_level),
+                )
+            }
+        };
+        if !matches!(pick, 0 | 1) {
+            emitted += 1;
+        }
+        meta.push(new);
+    }
+    // Every terminal register becomes an output, so the whole DAG is
+    // checked, not just one sink.
+    let (last, ..) = *meta.last().unwrap();
+    b.output("out", last);
+    if meta.len() >= 2 {
+        let (mid, ..) = meta[meta.len() / 2];
+        b.output("mid", mid);
+    }
+    b.finish()
+}
+
+#[test]
+fn randomized_dags_are_bit_exact_vs_eager_replay() {
+    let _g = lock();
+    let mut f = fixture(0xDA6);
+    let slots = f.ev.ctx.params.slots();
+    for trial in 0..6u64 {
+        let z: Vec<Complex> = (0..slots)
+            .map(|i| Complex::new(0.03 * ((i + trial as usize) % 11) as f64, 0.0))
+            .collect();
+        let inputs: Vec<Ciphertext> = (0..2)
+            .map(|_| f.enc.encrypt_slots(&f.ev.ctx, &z, 3, &mut f.rng))
+            .collect();
+        let prog = random_program(&mut f.rng, &f.ev, inputs.len(), 12);
+        let hoisted = f
+            .ev
+            .run_program(&prog, &inputs)
+            .unwrap_or_else(|e| panic!("trial {trial}: program rejected: {e}"));
+        let eager = eager_replay(&f.ev, &prog, &inputs);
+        assert_eq!(
+            hoisted, eager,
+            "trial {trial}: hoisted program diverged from eager replay ({} ops)",
+            prog.len()
+        );
+    }
+}
+
+#[test]
+fn rotation_fanout_shares_one_decomposition() {
+    let _g = lock();
+    let mut f = fixture(0xFA4);
+    let slots = f.ev.ctx.params.slots();
+    let z: Vec<Complex> = (0..slots)
+        .map(|i| Complex::new(0.05 * (i % 7) as f64, 0.0))
+        .collect();
+    let ct = f.enc.encrypt_slots(&f.ev.ctx, &z, 3, &mut f.rng);
+
+    // Three Galois ops on one source register: rotate 1, rotate 2,
+    // conjugate. Hoisted: ONE decomposition. Eager: three.
+    let mut b = ProgramBuilder::new();
+    let x = b.input("x");
+    let r1 = b.rotate(x, 1);
+    let r2 = b.rotate(x, 2);
+    let c = b.conjugate(x);
+    let s = b.add(r1, r2);
+    let y = b.add(s, c);
+    b.output("y", y);
+    let prog = b.finish();
+
+    let before = decomposition_count();
+    let hoisted = f.ev.run_program(&prog, std::slice::from_ref(&ct)).unwrap();
+    let hoisted_decomps = decomposition_count() - before;
+    assert_eq!(hoisted_decomps, 1, "fan-out must share one decomposition");
+
+    let before = decomposition_count();
+    let eager = eager_replay(&f.ev, &prog, std::slice::from_ref(&ct));
+    let eager_decomps = decomposition_count() - before;
+    assert_eq!(eager_decomps, 3, "eager replay decomposes per rotation");
+
+    assert_eq!(hoisted, eager, "shared decomposition must not change bits");
+}
+
+#[test]
+fn bsgs_program_pays_one_decomposition_per_source_register() {
+    let _g = lock();
+    let mut f = fixture(0xB565);
+    let slots = f.ev.ctx.params.slots();
+    let (g, outer) = bsgs_geometry(slots);
+    // Dense matrix: every baby and giant step is exercised.
+    let mut m = SlotMatrix::zeros(slots);
+    for r in 0..slots {
+        for c in 0..slots {
+            m.set(
+                r,
+                c,
+                Complex::new(
+                    (f.rng.f64() - 0.5) / slots as f64,
+                    (f.rng.f64() - 0.5) / slots as f64,
+                ),
+            );
+        }
+    }
+    let z: Vec<Complex> = (0..slots)
+        .map(|i| Complex::new(0.4 * ((i % 6) as f64 / 6.0 - 0.5), 0.0))
+        .collect();
+    let ct = f.enc.encrypt_slots(&f.ev.ctx, &z, 3, &mut f.rng);
+
+    let prog = hom_linear_program(&f.ev, &m, ct.level);
+
+    // Hoisted: ONE decomposition for all g-1 baby steps (they share the
+    // input register) + one per giant-step register (each giant rotation
+    // reads its own freshly accumulated source — unsharable).
+    let want_hoisted = 1 + (outer - 1) as u64;
+    let want_eager = (g - 1) as u64 + (outer - 1) as u64;
+
+    let before = decomposition_count();
+    let hoisted = f.ev.run_program(&prog, std::slice::from_ref(&ct)).unwrap();
+    assert_eq!(
+        decomposition_count() - before,
+        want_hoisted,
+        "BSGS must pay exactly one decomposition per source register"
+    );
+
+    let before = decomposition_count();
+    let eager = hom_linear_eager(&f.ev, &ct, &m).unwrap();
+    assert_eq!(
+        decomposition_count() - before,
+        want_eager,
+        "eager BSGS decomposes once per rotation"
+    );
+
+    // Bit-exact three ways: program execution, the hom_linear facade,
+    // and the eager oracle.
+    assert_eq!(hoisted[0], eager);
+    let facade = hom_linear(&f.ev, &ct, &m).unwrap();
+    assert_eq!(facade, eager);
+
+    // And the math is right.
+    let back = f.dec.decrypt_to_slots(&f.ev.ctx, &eager);
+    let want = m.matvec(&z);
+    let err = back
+        .iter()
+        .zip(&want)
+        .map(|(a, b)| Complex::new(a.re - b.re, a.im - b.im).abs())
+        .fold(0.0f64, f64::max);
+    assert!(err < 1e-3, "BSGS matvec error {err}");
+}
+
+#[test]
+fn program_validation_rejects_before_any_work() {
+    let _g = lock();
+    let mut f = fixture(0x7E57);
+    // An undeclared rotation step must be caught by validation with ZERO
+    // decompositions spent — even though an earlier op in the program
+    // uses a perfectly good key.
+    let mut b = ProgramBuilder::new();
+    let x = b.input("x");
+    let r1 = b.rotate(x, 1);
+    // Step 13 is outside serving(128) + bsgs_steps(128) (babies 1..11,
+    // giants 12,24,...,120, powers of two).
+    let bad = b.rotate(r1, 13);
+    b.output("y", bad);
+    let prog = b.finish();
+    let z = vec![Complex::new(0.1, 0.0); f.ev.ctx.params.slots()];
+    let ct = f.enc.encrypt_slots(&f.ev.ctx, &z, 3, &mut f.rng);
+    let before = decomposition_count();
+    let err = f.ev.run_program(&prog, std::slice::from_ref(&ct)).unwrap_err();
+    assert_eq!(decomposition_count(), before, "validation must not key-switch");
+    assert!(
+        matches!(err, fhecore::ckks::ProgramError::MissingKey { op: 1, .. }),
+        "{err:?}"
+    );
+}

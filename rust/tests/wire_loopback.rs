@@ -137,6 +137,147 @@ fn loopback_cuda_lane_and_missing_key_error() {
 }
 
 #[test]
+fn loopback_extended_ops_match_local_bit_for_bit() {
+    // The wire/local op-gap closers: Sub, Negate, MulConst, AddConst,
+    // MulPlain, LevelReduce — each exercised over a real socket and
+    // required to match the local evaluator exactly.
+    let params = CkksParams::toy();
+    let (addr, server) = spawn_server(params.clone());
+
+    let ctx = CkksContext::new(params.clone());
+    let mut rng = Pcg64::new(0xE57);
+    let kg = KeyGen::new(&ctx, &mut rng);
+    let keys = Arc::new(kg.eval_key_set(&ctx, &EvalKeySpec::relin_only(), &mut rng));
+    let enc = kg.encryptor();
+    let dec = kg.decryptor();
+
+    let remote = RemoteEvaluator::connect_retry(&addr, params.clone(), Duration::from_secs(10))
+        .expect("connect");
+    remote.push_keys(&keys).expect("push keys");
+
+    let slots = ctx.params.slots();
+    let za: Vec<Complex> = (0..slots)
+        .map(|i| Complex::new(0.04 * (i % 8) as f64, 0.0))
+        .collect();
+    let zb: Vec<Complex> = (0..slots)
+        .map(|i| Complex::new(0.02 * (i % 5) as f64, 0.0))
+        .collect();
+    let ca = enc.encrypt_slots(&ctx, &za, ctx.max_level(), &mut rng);
+    let cb = enc.encrypt_slots(&ctx, &zb, ctx.max_level(), &mut rng);
+
+    let ev = Evaluator::new(CkksContext::new(params), keys.clone());
+    let pt = ev.encode(&vec![Complex::new(3.0, 0.0); slots], ctx.max_level());
+
+    let diff = remote.sub(&ca, &cb).expect("remote sub");
+    assert_eq!(diff, ev.sub(&ca, &cb), "Sub");
+    let neg = remote.negate(&ca).expect("remote negate");
+    assert_eq!(neg, ev.negate(&ca), "Negate");
+    let scaled = remote.mul_const(&ca, 2.0).expect("remote mul_const");
+    assert_eq!(scaled, ev.mul_const(&ca, 2.0), "MulConst");
+    let shifted = remote.add_const(&ca, 0.25).expect("remote add_const");
+    assert_eq!(shifted, ev.add_const(&ca, 0.25), "AddConst");
+    let tripled = remote.mul_plain(&ca, &pt).expect("remote mul_plain");
+    assert_eq!(tripled, ev.mul_plain(&ca, &pt), "MulPlain");
+    let low = remote.level_reduce(&ca, 1).expect("remote level_reduce");
+    assert_eq!(low, ev.level_reduce(&ca, 1), "LevelReduce");
+
+    // Decrypt one end-to-end: (a - b) checks out.
+    let back = dec.decrypt_to_slots(&ctx, &diff);
+    for j in 0..slots {
+        let want = za[j].re - zb[j].re;
+        assert!((back[j].re - want).abs() < 1e-3, "slot {j}");
+    }
+
+    // All six ride the CUDA lane.
+    let m = remote.metrics().expect("metrics");
+    assert_eq!(m.cuda_served, 6);
+    assert_eq!(m.fhec_served, 0);
+
+    // Structurally invalid requests come back as typed remote errors,
+    // not hangs: LevelReduce above the operand's level.
+    match remote.level_reduce(&ca, 9) {
+        Err(WireError::Remote { code, .. }) => {
+            assert_eq!(code, fhecore::wire::protocol::error_code::BAD_REQUEST)
+        }
+        other => panic!("expected BAD_REQUEST, got {other:?}"),
+    }
+
+    remote.shutdown().expect("shutdown");
+    server.join().expect("server exits");
+}
+
+#[test]
+fn loopback_program_one_rtt_matches_local() {
+    use fhecore::ckks::ProgramBuilder;
+    let params = CkksParams::toy();
+    let (addr, server) = spawn_server(params.clone());
+
+    let ctx = CkksContext::new(params.clone());
+    let mut rng = Pcg64::new(0xF06);
+    let kg = KeyGen::new(&ctx, &mut rng);
+    let spec = EvalKeySpec::relin_only().with_rotations(&[1, 3]);
+    let keys = Arc::new(kg.eval_key_set(&ctx, &spec, &mut rng));
+    let enc = kg.encryptor();
+    let dec = kg.decryptor();
+
+    let remote = RemoteEvaluator::connect_retry(&addr, params.clone(), Duration::from_secs(10))
+        .expect("connect");
+    remote.push_keys(&keys).expect("push keys");
+
+    let slots = ctx.params.slots();
+    let z: Vec<Complex> = (0..slots)
+        .map(|i| Complex::new(0.05 * (i % 10) as f64, 0.0))
+        .collect();
+    let ct = enc.encrypt_slots(&ctx, &z, ctx.max_level(), &mut rng);
+
+    // The whole DAG — square, rotation fan-out, sum — in ONE round trip.
+    let mut b = ProgramBuilder::new();
+    let x = b.input("x");
+    let sq = b.square(x);
+    let r1 = b.rotate(sq, 1);
+    let r3 = b.rotate(sq, 3);
+    let y = b.add(r1, r3);
+    b.output("y", y);
+    let prog = b.finish();
+
+    let remote_out = remote
+        .run_program(&prog, std::slice::from_ref(&ct))
+        .expect("remote program");
+    let ev = Evaluator::new(CkksContext::new(params), keys.clone());
+    let local_out = ev.run_program(&prog, std::slice::from_ref(&ct)).expect("local program");
+    assert_eq!(remote_out, local_out, "program over the wire must be bit-identical");
+
+    let back = dec.decrypt_to_slots(&ctx, &remote_out[0]);
+    for j in 0..slots {
+        let f = |k: usize| {
+            let v = 0.05 * (((j + k) % slots) % 10) as f64;
+            v * v
+        };
+        assert!((back[j].re - (f(1) + f(3))).abs() < 1e-2, "slot {j}");
+    }
+
+    // The metrics snapshot counts the program.
+    let m = remote.metrics().expect("metrics");
+    assert_eq!(m.programs, 1);
+    assert!(m.fhec_served >= 1);
+
+    // An invalid program (undeclared rotation) surfaces as the typed
+    // ProgramError — admission-rejected server-side, zero work done.
+    let mut b = ProgramBuilder::new();
+    let x = b.input("x");
+    let r = b.rotate(x, 7);
+    b.output("y", r);
+    let bad = b.finish();
+    match remote.run_program(&bad, std::slice::from_ref(&ct)) {
+        Err(WireError::Program(fhecore::ckks::ProgramError::MissingKey { op: 0, .. })) => {}
+        other => panic!("expected typed ProgramError over the wire, got {other:?}"),
+    }
+
+    remote.shutdown().expect("shutdown");
+    server.join().expect("server exits");
+}
+
+#[test]
 fn handshake_rejects_params_mismatch() {
     let (addr, server) = spawn_server(CkksParams::toy());
     // A client configured for the medium preset must be turned away.
