@@ -1,7 +1,12 @@
 //! ModLinKernel micro-benchmarks: the unified modulo-linear transform
 //! engine in isolation — lazy u128 accumulation + tiling + (row, tile)
-//! parallelism vs a straight per-term reduce/multiply/add loop.
+//! parallelism vs a straight per-term reduce/multiply/add loop, plus the
+//! PR 6 scalar-vs-SIMD backend pair on the BConv acceptance shape
+//! (`apply/n4096_k27` vs `apply_simd/n4096_k27`, bar: SIMD median
+//! >= 1.5x faster on AVX2-capable runners, outputs asserted
+//! bit-identical before timing).
 use fhecore::bench_harness::Bench;
+use fhecore::ckks::mlt_backend;
 use fhecore::ckks::prime::ntt_primes;
 use fhecore::ckks::{ModLinKernel, Modulus};
 use std::hint::black_box;
@@ -65,6 +70,55 @@ fn main() {
             per_term_reference(&moduli, &rows, black_box(&x), &mut out);
             black_box(&out);
         });
+    }
+
+    // PR 6 acceptance pair: ModDown-direction BConv geometry (n = 2^12,
+    // k = 27 source limbs, 45-bit chain — the lane path engages) through
+    // the scalar oracle and the best SIMD backend, same kernel, same
+    // inputs (ids `apply/n4096_k27` vs `apply_simd/n4096_k27`). Off
+    // x86 (or pre-AVX2) the portable `lanes` formulation stands in so
+    // the id pair always exists in the dump; the dump's top-level
+    // `mlt_backend`/`cpu` fields say which machine produced the rows.
+    {
+        let (n, k, rows_out, bits) = (1usize << 12, 27usize, 9usize, 45u32);
+        let src = ntt_primes(16, bits, k);
+        let dstp = ntt_primes(16, bits + 2, rows_out);
+        let moduli: Vec<Modulus> = dstp.iter().map(|&q| Modulus::new(q)).collect();
+        let x_bound = *src.iter().max().unwrap();
+        let rows: Vec<Vec<u64>> = (0..rows_out)
+            .map(|i| (0..k).map(|j| (i as u64 * 77 + j as u64 * 131) % x_bound).collect())
+            .collect();
+        let x: Vec<Vec<u64>> = (0..k)
+            .map(|j| (0..n).map(|t| (t as u64 * 2654435761) % src[j]).collect())
+            .collect();
+        let kernel = ModLinKernel::from_rows(&moduli, &rows, x_bound);
+        assert!(kernel.lane_flush_bound() > 0, "45-bit chain must engage the lane path");
+        let scalar = mlt_backend::by_name("scalar").expect("scalar backend always exists");
+        let simd = mlt_backend::best_simd()
+            .unwrap_or_else(|| mlt_backend::by_name("lanes").expect("lanes backend always exists"));
+        println!("modlin backend pair: scalar vs {}", simd.name());
+
+        // Bit-equality before timing: the comparison is only meaningful
+        // if both backends compute the identical transform.
+        let mut out_scalar = vec![vec![0u64; n]; rows_out];
+        let mut out_simd = vec![vec![1u64; n]; rows_out];
+        kernel.apply_vecs_with(scalar, &x, &mut out_scalar);
+        kernel.apply_vecs_with(simd, &x, &mut out_simd);
+        assert_eq!(out_scalar, out_simd, "{} diverged from scalar", simd.name());
+
+        let mut out = vec![vec![0u64; n]; rows_out];
+        let id = format!("apply/n{n}_k{k}");
+        bench.run(&id, || {
+            kernel.apply_vecs_with(scalar, black_box(&x), &mut out);
+            black_box(&out);
+        });
+        bench.throughput(&id, (n * rows_out) as f64);
+        let id_simd = format!("apply_simd/n{n}_k{k}");
+        bench.run(&id_simd, || {
+            kernel.apply_vecs_with(simd, black_box(&x), &mut out);
+            black_box(&out);
+        });
+        bench.throughput(&id_simd, (n * rows_out) as f64);
     }
     bench.write_json().expect("bench json dump");
 }

@@ -128,6 +128,18 @@ impl Bench {
         let mut top = std::collections::BTreeMap::new();
         top.insert("name".to_string(), Json::Str(self.name.clone()));
         top.insert("results".to_string(), Json::Arr(results));
+        // Machine provenance (PR 6): which MLT backend `apply` dispatches
+        // to in this process and what the CPU reports, so trajectory rows
+        // are comparable across machines (bench_archive only reads
+        // name/results — extra keys ride along in the artifact).
+        top.insert(
+            "mlt_backend".to_string(),
+            Json::Str(crate::ckks::mlt_backend::active().name().to_string()),
+        );
+        top.insert(
+            "cpu".to_string(),
+            Json::Str(crate::ckks::mlt_backend::cpu_features()),
+        );
         Json::Obj(top)
     }
 
@@ -196,6 +208,12 @@ mod tests {
         assert_eq!(results.len(), 1);
         assert_eq!(results[0].get("id").unwrap().as_str(), Some("noop"));
         assert!(results[0].get("median_ns").unwrap().as_f64().unwrap() >= 0.0);
+        // Machine provenance: the dump names the active MLT backend and
+        // the detected CPU feature string.
+        let backend = j.get("mlt_backend").unwrap().as_str().unwrap();
+        assert_eq!(backend, crate::ckks::mlt_backend::active().name());
+        let cpu = j.get("cpu").unwrap().as_str().unwrap();
+        assert!(cpu.starts_with(std::env::consts::ARCH));
         // reparse what we print
         let printed = j.to_string_pretty();
         assert_eq!(Json::parse(&printed).unwrap(), j);

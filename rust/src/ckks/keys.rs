@@ -326,6 +326,12 @@ thread_local! {
 /// The digit partition is a pure function of `(context, level)` shared by
 /// every key at that level, so a decomposition produced through one key's
 /// tables is valid for all of them.
+///
+/// All of that BConv/MLT work — the decomposition here and the batched
+/// NTT passes over the lifted digits — executes on the process-wide
+/// [`super::mlt_backend`] (scalar oracle or a SIMD lane backend, PR 6);
+/// hoisting changes how *often* the kernel runs, the backend changes how
+/// *fast* each tile runs, and both are bit-exact by construction.
 #[derive(Debug, Clone)]
 pub struct HoistedDecomp {
     level: usize,

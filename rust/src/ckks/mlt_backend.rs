@@ -1,0 +1,696 @@
+//! Pluggable execution backends for the [`ModLinKernel`] tile loop.
+//!
+//! PR 6 (ROADMAP "Data-parallel backend for the MLT engine", Stage 1):
+//! every hot path in the repo — the 4-step NTT, base conversion, the
+//! hoisted key-switch digit batches — funnels through one kernel,
+//! `ModLinKernel::apply`, which executed scalar u128 multiply-accumulates
+//! on a single CPU feature level. GME and Cheddar (PAPERS.md) map the
+//! same modulo-linear formulation onto real GPU lanes with lazy
+//! Montgomery/Barrett reduction; this module is the CPU-SIMD mirror and
+//! the seam a Stage-2 GPU (wgpu/CUDA) backend will plug into.
+//!
+//! **Bit-exactness is structural, not incidental.** Every backend
+//! computes the exact canonical residue `out[i][t] = Σ_j M[i][j]·x[j][t]
+//! mod q_i` (a fully reduced value `< q_i`), so any backend that computes
+//! the sum exactly is automatically bit-identical to the scalar oracle —
+//! there is no "close enough" in modular arithmetic. The SIMD backends
+//! exploit that freedom with a different accumulation *shape* (radix-2^26
+//! limb planes) while landing on the same `Modulus::reduce_u128` exact
+//! Barrett reduction, one per output element.
+//!
+//! ## The lane formulation (radix-2^26 planes)
+//!
+//! AVX2 has no 64x64→128 multiply, and emulating one per term loses to
+//! scalar u128 math. Instead, for rows whose modulus and input bound fit
+//! in 52 bits (every production NTT/BConv chain; wider rows fall back to
+//! the scalar tile, still bit-exact), split both operands at bit 26:
+//!
+//! ```text
+//!   w = wh·2^26 + wl,  x = xh·2^26 + xl        (all parts < 2^26)
+//!   w·x = wl·xl + (wl·xh + wh·xl)·2^26 + wh·xh·2^52
+//! ```
+//!
+//! and accumulate the three *planes* in independent u64 lanes (`a0 +=
+//! wl·xl`, `a1 += wl·xh + wh·xl`, `a2 += wh·xh`) — exactly the 32-bit
+//! lane products (`vpmuludq`) AVX2 executes natively. The binding plane
+//! is `a1` (two products per term), giving a lane flush capacity of
+//! `⌊(2^64−1) / (2·(2^26−1)^2)⌋ = 2048` terms — far above every chain
+//! length in the codebase, so the mid-loop flush exists for correctness
+//! at extreme `k`, not for the common case. Reconstruction
+//! `a0 + a1·2^26 + a2·2^52 < 2^117` fits u128 and feeds the same
+//! `reduce_u128` the scalar path uses. See
+//! `ModLinKernel::lane_flush_bound` for the capacity proof obligations
+//! (tested below).
+//!
+//! ## Selection
+//!
+//! The backend is chosen once per process ([`active`]): the
+//! `FHECORE_MLT_BACKEND={scalar,lanes,avx2,avx512}` environment variable
+//! wins when it names a backend the CPU supports (otherwise a warning is
+//! printed and detection proceeds), then `is_x86_feature_detected!` picks
+//! avx512 → avx2 → scalar. `lanes` is the portable (autovectorizable)
+//! formulation of the same plane arithmetic — never auto-selected, but
+//! available everywhere so the equivalence suite exercises lane math on
+//! any architecture. The choice is surfaced through
+//! `coordinator::MetricsSnapshot::mlt_backend` (wire v4) and the
+//! `BENCH_*.json` dumps so trajectory rows are comparable across machines.
+
+use std::sync::OnceLock;
+
+use super::modarith::Modulus;
+use super::modlin::{ModLinKernel, COL_TILE};
+
+/// Largest exclusive input/modulus bound the lane decomposition accepts:
+/// both operands must split into two 26-bit parts.
+pub const LANE_BOUND: u64 = 1 << 52;
+
+/// Stable one-byte backend identifiers — what `MetricsSnapshot` carries
+/// over the wire (names would bloat the fixed-size snapshot).
+pub mod codes {
+    /// No information (e.g. a pre-v4 peer's snapshot).
+    pub const UNKNOWN: u8 = 0;
+    pub const SCALAR: u8 = 1;
+    pub const LANES: u8 = 2;
+    pub const AVX2: u8 = 3;
+    pub const AVX512: u8 = 4;
+    /// A cluster aggregate over shards running different backends.
+    pub const MIXED: u8 = 255;
+}
+
+/// Human name for a backend code (also covers the aggregate states a
+/// single node never reports).
+pub fn backend_code_name(code: u8) -> &'static str {
+    match code {
+        codes::SCALAR => "scalar",
+        codes::LANES => "lanes",
+        codes::AVX2 => "avx2",
+        codes::AVX512 => "avx512",
+        codes::MIXED => "mixed",
+        _ => "unknown",
+    }
+}
+
+/// One execution strategy for a `(output row, coefficient tile)` work
+/// item. Implementations must produce the exact canonical residues the
+/// scalar oracle produces — callers are free to mix backends per tile.
+pub trait MltBackend: Send + Sync {
+    /// Stable name (`scalar`, `lanes`, `avx2`, `avx512`), accepted by
+    /// `FHECORE_MLT_BACKEND` and recorded in bench dumps.
+    fn name(&self) -> &'static str;
+    /// Wire/metrics identifier (see [`codes`]).
+    fn code(&self) -> u8;
+    /// Compute `out[t] = Σ_j M[row][j]·x[j][col+t] mod q_row` for one
+    /// tile (`out.len() <= COL_TILE`).
+    fn compute_tile(&self, kernel: &ModLinKernel, row: usize, col: usize, x: &[&[u64]], out: &mut [u64]);
+}
+
+/// Today's code, kept verbatim as the oracle: Shoup short path for
+/// `k <= 2`, lazy u128 accumulation with exact flushing for `k > 2`.
+pub struct ScalarBackend;
+
+impl MltBackend for ScalarBackend {
+    fn name(&self) -> &'static str {
+        "scalar"
+    }
+    fn code(&self) -> u8 {
+        codes::SCALAR
+    }
+    fn compute_tile(&self, kernel: &ModLinKernel, row: usize, col: usize, x: &[&[u64]], out: &mut [u64]) {
+        scalar_tile(kernel, row, col, x, out);
+    }
+}
+
+/// The portable lane formulation: same radix-2^26 plane arithmetic as
+/// the AVX backends, expressed as plain u64 loops the autovectorizer can
+/// widen on any target. Never auto-selected (the scalar u128 path is the
+/// conservative default off x86); exists so lane math is testable — and
+/// force-selectable — everywhere.
+pub struct LanesBackend;
+
+impl MltBackend for LanesBackend {
+    fn name(&self) -> &'static str {
+        "lanes"
+    }
+    fn code(&self) -> u8 {
+        codes::LANES
+    }
+    fn compute_tile(&self, kernel: &ModLinKernel, row: usize, col: usize, x: &[&[u64]], out: &mut [u64]) {
+        if lane_applicable(kernel, row) {
+            lane_tile_body(
+                kernel.modulus(row),
+                kernel.mat_row(row),
+                x,
+                col,
+                out,
+                kernel.lane_flush_bound(),
+            );
+        } else {
+            scalar_tile(kernel, row, col, x, out);
+        }
+    }
+}
+
+/// Explicit AVX2 intrinsics: 4 coefficients per register, the three
+/// accumulator planes held in ymm registers across the whole `k` loop
+/// (t-outer / j-inner), `vpmuludq` lane products.
+#[cfg(target_arch = "x86_64")]
+pub struct Avx2Backend;
+
+#[cfg(target_arch = "x86_64")]
+impl MltBackend for Avx2Backend {
+    fn name(&self) -> &'static str {
+        "avx2"
+    }
+    fn code(&self) -> u8 {
+        codes::AVX2
+    }
+    fn compute_tile(&self, kernel: &ModLinKernel, row: usize, col: usize, x: &[&[u64]], out: &mut [u64]) {
+        if lane_applicable(kernel, row) {
+            // SAFETY: this backend is only handed out by `by_name`/
+            // `detect` after `is_x86_feature_detected!("avx2")`.
+            unsafe {
+                x86::tile_avx2(
+                    kernel.modulus(row),
+                    kernel.mat_row(row),
+                    x,
+                    col,
+                    out,
+                    kernel.lane_flush_bound(),
+                );
+            }
+        } else {
+            scalar_tile(kernel, row, col, x, out);
+        }
+    }
+}
+
+/// AVX-512 via function multiversioning: the portable lane body compiled
+/// under `#[target_feature(enable = "avx512f,...")]`, letting LLVM widen
+/// the masked 32-bit products to zmm `vpmuludq` (8 lanes) without
+/// hand-written 512-bit intrinsics.
+#[cfg(target_arch = "x86_64")]
+pub struct Avx512Backend;
+
+#[cfg(target_arch = "x86_64")]
+impl MltBackend for Avx512Backend {
+    fn name(&self) -> &'static str {
+        "avx512"
+    }
+    fn code(&self) -> u8 {
+        codes::AVX512
+    }
+    fn compute_tile(&self, kernel: &ModLinKernel, row: usize, col: usize, x: &[&[u64]], out: &mut [u64]) {
+        if lane_applicable(kernel, row) {
+            // SAFETY: handed out only after the avx512 feature set
+            // (f+dq+bw+vl) was detected at runtime.
+            unsafe {
+                x86::tile_avx512(
+                    kernel.modulus(row),
+                    kernel.mat_row(row),
+                    x,
+                    col,
+                    out,
+                    kernel.lane_flush_bound(),
+                );
+            }
+        } else {
+            scalar_tile(kernel, row, col, x, out);
+        }
+    }
+}
+
+/// Can this `(kernel, row)` take the lane path? Requires the kernel-wide
+/// input bound to fit the 52-bit split (`lane_flush_bound() > 0`), the
+/// row modulus to fit it too (entries are `< q_row`), and `k > 2` — the
+/// Shoup short path beats any accumulator setup below that.
+fn lane_applicable(kernel: &ModLinKernel, row: usize) -> bool {
+    kernel.k() > 2 && kernel.lane_flush_bound() > 0 && kernel.modulus(row).value() <= LANE_BOUND
+}
+
+/// The pre-PR-6 `ModLinKernel::compute_tile`, moved verbatim: this is
+/// the bit-exactness oracle every other backend is tested against.
+pub(crate) fn scalar_tile(kernel: &ModLinKernel, row: usize, col: usize, x: &[&[u64]], out: &mut [u64]) {
+    let m = kernel.modulus(row);
+    let len = out.len();
+    let mrow = kernel.mat_row(row);
+
+    if kernel.k() <= 2 {
+        // Short reductions: the Shoup path wins (no accumulator setup,
+        // one precomputed-operand multiply per term). Inputs may carry
+        // residues of foreign primes >= q_i, so reduce on entry —
+        // Harvey's multiply needs the variable operand below q.
+        let srow = kernel.shoup_row(row);
+        let x0 = &x[0][col..col + len];
+        if kernel.k() == 1 {
+            for (o, &v) in out.iter_mut().zip(x0) {
+                *o = m.mul_shoup(m.reduce_u64(v), mrow[0], srow[0]);
+            }
+        } else {
+            let x1 = &x[1][col..col + len];
+            for ((o, &v0), &v1) in out.iter_mut().zip(x0).zip(x1) {
+                let a = m.mul_shoup(m.reduce_u64(v0), mrow[0], srow[0]);
+                let b = m.mul_shoup(m.reduce_u64(v1), mrow[1], srow[1]);
+                *o = m.add(a, b);
+            }
+        }
+        return;
+    }
+
+    // Lazy accumulation: defer the Barrett reduction across the whole
+    // k-term dot product; each output coefficient pays one
+    // `reduce_u128` instead of k reductions. `flush` bounds how many
+    // raw products fit before an exact intermediate reduction.
+    let flush = kernel.flush_bound();
+    let mut acc_store = [0u128; COL_TILE];
+    let acc = &mut acc_store[..len];
+    let mut since_flush = 0usize;
+    for (j, &w) in mrow.iter().enumerate() {
+        if w == 0 {
+            continue; // zero rows/entries (padding) contribute nothing
+        }
+        // `>=`, not `==`: after a flush the counter restarts at 1 and
+        // is then incremented past it, so with flush == 1 an equality
+        // check would never fire again and the accumulator could wrap.
+        if since_flush >= flush {
+            for a in acc.iter_mut() {
+                *a = m.reduce_u128(*a) as u128;
+            }
+            since_flush = 1; // the reduced carry counts as one term
+        }
+        let w128 = w as u128;
+        let xr = &x[j][col..col + len];
+        for (a, &v) in acc.iter_mut().zip(xr) {
+            *a += w128 * v as u128;
+        }
+        since_flush += 1;
+    }
+    for (o, &a) in out.iter_mut().zip(acc.iter()) {
+        *o = m.reduce_u128(a);
+    }
+}
+
+/// The portable radix-2^26 plane accumulation (module docs). Written so
+/// every multiply has both operands provably `< 2^26` after masking —
+/// the shape LLVM turns into packed 32-bit lane products (`vpmuludq`)
+/// when this body is inlined into a `#[target_feature]` wrapper.
+///
+/// Overflow safety (per plane, `F = lane_flush = 2048`, parts `< 2^26`):
+/// `a1` takes two products per term, `F·2·(2^26−1)^2 <= 2^64−1` by
+/// construction of `F`; `a0` additionally carries the flush residue
+/// `r < q <= 2^52`, and `2^52 + (F−1)·(2^26−1)^2 < 2^63`; `a2 <=
+/// F·(2^26−1)^2 < 2^63`. All three hold with room, so debug-build
+/// overflow checks stay quiet (asserted in the tests below).
+#[inline(always)]
+pub(crate) fn lane_tile_body(
+    m: Modulus,
+    mrow: &[u64],
+    x: &[&[u64]],
+    col: usize,
+    out: &mut [u64],
+    lane_flush: usize,
+) {
+    const MASK: u64 = (1u64 << 26) - 1;
+    let len = out.len();
+    let mut s0 = [0u64; COL_TILE];
+    let mut s1 = [0u64; COL_TILE];
+    let mut s2 = [0u64; COL_TILE];
+    let a0 = &mut s0[..len];
+    let a1 = &mut s1[..len];
+    let a2 = &mut s2[..len];
+    let mut since_flush = 0usize;
+    for (j, &w) in mrow.iter().enumerate() {
+        if w == 0 {
+            continue;
+        }
+        if since_flush >= lane_flush {
+            for t in 0..len {
+                let v = a0[t] as u128 + ((a1[t] as u128) << 26) + ((a2[t] as u128) << 52);
+                a0[t] = m.reduce_u128(v);
+                a1[t] = 0;
+                a2[t] = 0;
+            }
+            since_flush = 1; // the reduced carry lands in plane 0
+        }
+        let wl = w & MASK;
+        let wh = (w >> 26) & MASK;
+        let xr = &x[j][col..col + len];
+        for t in 0..len {
+            let xv = xr[t];
+            debug_assert!(xv < LANE_BOUND, "caller overstated x_bound");
+            let xl = xv & MASK;
+            let xh = (xv >> 26) & MASK;
+            a0[t] += wl * xl;
+            a1[t] += wl * xh + wh * xl;
+            a2[t] += wh * xh;
+        }
+        since_flush += 1;
+    }
+    for t in 0..len {
+        let v = a0[t] as u128 + ((a1[t] as u128) << 26) + ((a2[t] as u128) << 52);
+        out[t] = m.reduce_u128(v);
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+mod x86 {
+    use core::arch::x86_64::*;
+
+    use super::super::modarith::Modulus;
+
+    const MASK: u64 = (1u64 << 26) - 1;
+
+    /// AVX2 tile kernel: 4 coefficients per ymm register, t-outer /
+    /// j-inner so the three accumulator planes live in registers across
+    /// the entire `k` loop (one load + five cheap vector ops per 4
+    /// elem-terms), tail coefficients (< 4) through the portable body.
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified AVX2 support at runtime
+    /// (`is_x86_feature_detected!("avx2")`), and `mrow`/`x[j]`/`out`
+    /// must satisfy the `ModLinKernel` tile contract (`x[j]` covers
+    /// `col..col+out.len()`, entries `< 2^52`, inputs `< 2^52`).
+    #[target_feature(enable = "avx2")]
+    pub(crate) unsafe fn tile_avx2(
+        m: Modulus,
+        mrow: &[u64],
+        x: &[&[u64]],
+        col: usize,
+        out: &mut [u64],
+        lane_flush: usize,
+    ) {
+        let len = out.len();
+        let maskv = _mm256_set1_epi64x(MASK as i64);
+        let mut t = 0usize;
+        while t + 4 <= len {
+            let mut a0 = _mm256_setzero_si256();
+            let mut a1 = _mm256_setzero_si256();
+            let mut a2 = _mm256_setzero_si256();
+            let mut since_flush = 0usize;
+            for (j, &w) in mrow.iter().enumerate() {
+                if w == 0 {
+                    continue;
+                }
+                if since_flush >= lane_flush {
+                    flush4(m, &mut a0, &mut a1, &mut a2);
+                    since_flush = 1;
+                }
+                let wl = _mm256_set1_epi64x((w & MASK) as i64);
+                let wh = _mm256_set1_epi64x(((w >> 26) & MASK) as i64);
+                let xv = _mm256_loadu_si256(x[j].as_ptr().add(col + t) as *const __m256i);
+                let xl = _mm256_and_si256(xv, maskv);
+                let xh = _mm256_and_si256(_mm256_srli_epi64::<26>(xv), maskv);
+                a0 = _mm256_add_epi64(a0, _mm256_mul_epu32(wl, xl));
+                a1 = _mm256_add_epi64(
+                    a1,
+                    _mm256_add_epi64(_mm256_mul_epu32(wl, xh), _mm256_mul_epu32(wh, xl)),
+                );
+                a2 = _mm256_add_epi64(a2, _mm256_mul_epu32(wh, xh));
+                since_flush += 1;
+            }
+            let mut b0 = [0u64; 4];
+            let mut b1 = [0u64; 4];
+            let mut b2 = [0u64; 4];
+            _mm256_storeu_si256(b0.as_mut_ptr() as *mut __m256i, a0);
+            _mm256_storeu_si256(b1.as_mut_ptr() as *mut __m256i, a1);
+            _mm256_storeu_si256(b2.as_mut_ptr() as *mut __m256i, a2);
+            for lane in 0..4 {
+                let v = b0[lane] as u128 + ((b1[lane] as u128) << 26) + ((b2[lane] as u128) << 52);
+                out[t + lane] = m.reduce_u128(v);
+            }
+            t += 4;
+        }
+        if t < len {
+            super::lane_tile_body(m, mrow, x, col + t, &mut out[t..], lane_flush);
+        }
+    }
+
+    /// Mid-loop exact flush of the three register planes (rare: fires
+    /// only for `k > 2048`, so a scalar spill/reload round trip is fine).
+    ///
+    /// # Safety
+    ///
+    /// AVX2 must be available (callers are themselves avx2-gated).
+    #[target_feature(enable = "avx2")]
+    unsafe fn flush4(m: Modulus, a0: &mut __m256i, a1: &mut __m256i, a2: &mut __m256i) {
+        let mut b0 = [0u64; 4];
+        let mut b1 = [0u64; 4];
+        let mut b2 = [0u64; 4];
+        _mm256_storeu_si256(b0.as_mut_ptr() as *mut __m256i, *a0);
+        _mm256_storeu_si256(b1.as_mut_ptr() as *mut __m256i, *a1);
+        _mm256_storeu_si256(b2.as_mut_ptr() as *mut __m256i, *a2);
+        for lane in 0..4 {
+            let v = b0[lane] as u128 + ((b1[lane] as u128) << 26) + ((b2[lane] as u128) << 52);
+            b0[lane] = m.reduce_u128(v);
+        }
+        *a0 = _mm256_loadu_si256(b0.as_ptr() as *const __m256i);
+        *a1 = _mm256_setzero_si256();
+        *a2 = _mm256_setzero_si256();
+    }
+
+    /// AVX-512 tile kernel by multiversioning: the portable plane body
+    /// inlined under the 512-bit feature set, so LLVM's autovectorizer
+    /// emits 8-lane zmm `vpmuludq` streams from the masked 32-bit
+    /// products — no hand-rolled 512-bit intrinsics to maintain.
+    ///
+    /// # Safety
+    ///
+    /// Caller must have verified avx512f+dq+bw+vl at runtime; slice
+    /// contract as for [`tile_avx2`].
+    #[target_feature(enable = "avx512f,avx512dq,avx512bw,avx512vl")]
+    pub(crate) unsafe fn tile_avx512(
+        m: Modulus,
+        mrow: &[u64],
+        x: &[&[u64]],
+        col: usize,
+        out: &mut [u64],
+        lane_flush: usize,
+    ) {
+        super::lane_tile_body(m, mrow, x, col, out, lane_flush);
+    }
+}
+
+static SCALAR_BACKEND: ScalarBackend = ScalarBackend;
+static LANES_BACKEND: LanesBackend = LanesBackend;
+#[cfg(target_arch = "x86_64")]
+static AVX2_BACKEND: Avx2Backend = Avx2Backend;
+#[cfg(target_arch = "x86_64")]
+static AVX512_BACKEND: Avx512Backend = Avx512Backend;
+
+static ACTIVE: OnceLock<&'static dyn MltBackend> = OnceLock::new();
+
+/// The process-wide backend `ModLinKernel::apply` dispatches to.
+/// Resolved once: `FHECORE_MLT_BACKEND` if it names a supported backend,
+/// else CPU feature detection (avx512 → avx2 → scalar).
+pub fn active() -> &'static dyn MltBackend {
+    *ACTIVE.get_or_init(|| select(std::env::var("FHECORE_MLT_BACKEND").ok().as_deref()))
+}
+
+/// Resolve an optional override against what the CPU supports — the
+/// pure core of [`active`], separated so tests can drive it without
+/// touching process environment (mutating env vars under the threaded
+/// test runner is UB-adjacent; a repo convention is to never do it).
+pub fn select(request: Option<&str>) -> &'static dyn MltBackend {
+    if let Some(name) = request {
+        match by_name(name) {
+            Some(b) => return b,
+            None => eprintln!(
+                "fhecore: FHECORE_MLT_BACKEND={name:?} is unknown or unsupported on this CPU; \
+                 auto-detecting"
+            ),
+        }
+    }
+    detect()
+}
+
+/// Look up a backend by its stable name, returning it only when this
+/// machine can actually run it (e.g. `avx2` on a non-AVX2 CPU → `None`).
+pub fn by_name(name: &str) -> Option<&'static dyn MltBackend> {
+    match name {
+        "scalar" => Some(&SCALAR_BACKEND),
+        "lanes" => Some(&LANES_BACKEND),
+        #[cfg(target_arch = "x86_64")]
+        "avx2" if is_x86_feature_detected!("avx2") => Some(&AVX2_BACKEND),
+        #[cfg(target_arch = "x86_64")]
+        "avx512" if avx512_supported() => Some(&AVX512_BACKEND),
+        _ => None,
+    }
+}
+
+/// Every backend this machine can run (scalar and lanes always; the
+/// AVX tiers when detected). The equivalence suite iterates this.
+pub fn available() -> Vec<&'static dyn MltBackend> {
+    let mut v: Vec<&'static dyn MltBackend> = vec![&SCALAR_BACKEND, &LANES_BACKEND];
+    #[cfg(target_arch = "x86_64")]
+    {
+        if is_x86_feature_detected!("avx2") {
+            v.push(&AVX2_BACKEND);
+        }
+        if avx512_supported() {
+            v.push(&AVX512_BACKEND);
+        }
+    }
+    v
+}
+
+/// The best detected hardware-SIMD backend, if any (`None` off x86 or on
+/// pre-AVX2 CPUs — benches fall back to `lanes` so comparison pairs
+/// always exist).
+pub fn best_simd() -> Option<&'static dyn MltBackend> {
+    #[cfg(target_arch = "x86_64")]
+    {
+        if avx512_supported() {
+            return Some(&AVX512_BACKEND);
+        }
+        if is_x86_feature_detected!("avx2") {
+            return Some(&AVX2_BACKEND);
+        }
+    }
+    None
+}
+
+fn detect() -> &'static dyn MltBackend {
+    match best_simd() {
+        Some(b) => b,
+        None => &SCALAR_BACKEND,
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn avx512_supported() -> bool {
+    is_x86_feature_detected!("avx512f")
+        && is_x86_feature_detected!("avx512dq")
+        && is_x86_feature_detected!("avx512bw")
+        && is_x86_feature_detected!("avx512vl")
+}
+
+/// `arch+feat+feat...` — the detected CPU feature string recorded in
+/// every bench dump so trajectory rows are comparable across machines.
+pub fn cpu_features() -> String {
+    let feats = detected_feature_list();
+    if feats.is_empty() {
+        std::env::consts::ARCH.to_string()
+    } else {
+        format!("{}+{}", std::env::consts::ARCH, feats.join("+"))
+    }
+}
+
+#[cfg(target_arch = "x86_64")]
+fn detected_feature_list() -> Vec<&'static str> {
+    let mut feats = Vec::new();
+    for (name, have) in [
+        ("sse4.2", is_x86_feature_detected!("sse4.2")),
+        ("avx", is_x86_feature_detected!("avx")),
+        ("avx2", is_x86_feature_detected!("avx2")),
+        ("avx512f", is_x86_feature_detected!("avx512f")),
+        ("avx512dq", is_x86_feature_detected!("avx512dq")),
+        ("avx512bw", is_x86_feature_detected!("avx512bw")),
+        ("avx512vl", is_x86_feature_detected!("avx512vl")),
+    ] {
+        if have {
+            feats.push(name);
+        }
+    }
+    feats
+}
+
+#[cfg(not(target_arch = "x86_64"))]
+fn detected_feature_list() -> Vec<&'static str> {
+    Vec::new()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::prime::ntt_primes;
+    use crate::util::rng::Pcg64;
+
+    #[test]
+    fn names_and_codes_are_stable_and_distinct() {
+        assert_eq!(backend_code_name(codes::SCALAR), "scalar");
+        assert_eq!(backend_code_name(codes::LANES), "lanes");
+        assert_eq!(backend_code_name(codes::AVX2), "avx2");
+        assert_eq!(backend_code_name(codes::AVX512), "avx512");
+        assert_eq!(backend_code_name(codes::MIXED), "mixed");
+        assert_eq!(backend_code_name(codes::UNKNOWN), "unknown");
+        assert_eq!(backend_code_name(77), "unknown");
+        let avail = available();
+        let mut codes_seen: Vec<u8> = avail.iter().map(|b| b.code()).collect();
+        codes_seen.sort_unstable();
+        codes_seen.dedup();
+        assert_eq!(codes_seen.len(), avail.len(), "duplicate backend codes");
+        // Every available backend round-trips through by_name.
+        for b in &avail {
+            let again = by_name(b.name()).expect("available backend must resolve by name");
+            assert_eq!(again.code(), b.code());
+            assert_eq!(backend_code_name(b.code()), b.name());
+        }
+    }
+
+    #[test]
+    fn select_falls_back_on_unknown_or_unsupported_names() {
+        assert_eq!(by_name("scalar").unwrap().code(), codes::SCALAR);
+        assert_eq!(by_name("lanes").unwrap().code(), codes::LANES);
+        assert!(by_name("neon").is_none());
+        assert!(by_name("").is_none());
+        assert!(by_name("AVX2").is_none(), "names are case-sensitive");
+        let detected = select(None).code();
+        assert_eq!(select(Some("definitely-not-a-backend")).code(), detected);
+        assert_eq!(select(Some("scalar")).code(), codes::SCALAR);
+        // The process-wide choice is one of the runnable backends.
+        assert!(available().iter().any(|b| b.code() == active().code()));
+    }
+
+    #[test]
+    fn cpu_feature_string_leads_with_arch() {
+        let s = cpu_features();
+        assert!(s.starts_with(std::env::consts::ARCH), "{s}");
+    }
+
+    #[test]
+    fn lane_capacity_overflow_invariants() {
+        // The capacity proof obligations from the lane_tile_body docs,
+        // written against the actual computed bound.
+        let q = ntt_primes(16, 45, 1)[0];
+        let m = Modulus::new(q);
+        let kernel = ModLinKernel::new(&[m], 4, q, |_, j| j as u64 + 1);
+        let f = kernel.lane_flush_bound() as u128;
+        assert!(f > 2000, "lane capacity unexpectedly small: {f}");
+        let part = (1u128 << 26) - 1;
+        // a1: two products per term, F of them.
+        assert!(f * 2 * part * part <= u64::MAX as u128);
+        // a0: flush residue (< 2^52) plus F-1 products.
+        assert!((1u128 << 52) + (f - 1) * part * part <= u64::MAX as u128);
+        // a2: F products.
+        assert!(f * part * part <= u64::MAX as u128);
+        // Reconstruction fits u128 with the margin the docs claim.
+        let vmax = (u64::MAX as u128) + ((u64::MAX as u128) << 26) + ((u64::MAX as u128) << 52);
+        assert!(vmax < 1u128 << 117);
+    }
+
+    #[test]
+    fn all_available_backends_match_scalar_on_a_smoke_kernel() {
+        // The full randomized suite lives in tests/modlin_equivalence.rs;
+        // this is the fast in-crate smoke over every runnable backend.
+        let mut rng = Pcg64::new(0xBAC2E2D);
+        let (k, rows_out, n) = (9usize, 6usize, 517usize);
+        let src = ntt_primes(16, 45, k);
+        let dst = ntt_primes(16, 47, rows_out);
+        let moduli: Vec<Modulus> = dst.iter().map(|&q| Modulus::new(q)).collect();
+        let x_bound = *src.iter().max().unwrap();
+        let kernel = ModLinKernel::new(&moduli, k, x_bound, |i, j| {
+            (i as u64).wrapping_mul(0x9E3779B97F4A7C15) ^ j as u64
+        });
+        assert!(kernel.lane_flush_bound() > 0, "45-bit chain must take the lane path");
+        let x: Vec<Vec<u64>> = (0..k)
+            .map(|j| (0..n).map(|_| rng.below(src[j])).collect())
+            .collect();
+        let mut want = vec![vec![0u64; n]; rows_out];
+        kernel.apply_vecs_with(&ScalarBackend, &x, &mut want);
+        for backend in available() {
+            let mut got = vec![vec![1u64; n]; rows_out];
+            kernel.apply_vecs_with(backend, &x, &mut got);
+            assert_eq!(got, want, "backend {}", backend.name());
+        }
+    }
+}

@@ -6,6 +6,7 @@ pub mod client;
 pub mod encoding;
 pub mod keys;
 pub mod linear;
+pub mod mlt_backend;
 pub mod modarith;
 pub mod modlin;
 pub mod ntt;
@@ -24,6 +25,7 @@ pub use keys::{
     SecretKey,
 };
 pub use program::{FheProgram, OpCode, ProgramBuilder, ProgramError, Reg};
+pub use mlt_backend::MltBackend;
 pub use modarith::{Modulus, Modulus30};
 pub use modlin::{MltDims, ModLinKernel};
 pub use ntt::NttTable;

@@ -37,7 +37,16 @@
 //! * **Two-level parallelism** — work items are `(output row, tile)`
 //!   pairs, so a BConv with few output limbs still fans out across the
 //!   whole thread pool via the coefficient axis.
+//! * **Pluggable tile backends** (PR 6) — the per-tile loop itself is a
+//!   [`MltBackend`] strategy: the scalar u128 path above stays as the
+//!   oracle, and lane-parallel SIMD backends (AVX2 intrinsics, AVX-512
+//!   multiversioning, a portable `lanes` twin) execute the same
+//!   transform bit-identically via a radix-2^26 plane decomposition.
+//!   Selection is per-process ([`super::mlt_backend::active`]) with a
+//!   `FHECORE_MLT_BACKEND` override; [`ModLinKernel::apply_with`] pins
+//!   a backend explicitly for equivalence tests and benches.
 
+use super::mlt_backend::{self, MltBackend};
 use super::modarith::{Modulus, Modulus30};
 use crate::util::threads::par_for_each_mut_hint;
 
@@ -98,6 +107,12 @@ pub struct ModLinKernel {
     /// flush reduction is required (conservative, derived from the input
     /// bound and the widest row modulus).
     flush: usize,
+    /// Flush capacity of the SIMD radix-2^26 plane accumulation
+    /// ([`mlt_backend`]): how many terms the binding u64 plane absorbs
+    /// before an exact reduction. `0` when the declared input bound
+    /// exceeds the 52-bit lane split — SIMD backends then fall back to
+    /// the scalar tile (still bit-exact).
+    lane_flush: usize,
 }
 
 impl ModLinKernel {
@@ -131,12 +146,23 @@ impl ModLinKernel {
         let max_q = moduli.iter().map(|m| m.value()).max().unwrap();
         let prod_max = (x_bound as u128 - 1) * (max_q as u128 - 1);
         let flush = ((u128::MAX >> 1) / prod_max.max(1)).min(usize::MAX as u128) as usize;
+        // Lane-plane capacity for the SIMD backends: inputs (and, per
+        // eligible row, entries) split into two 26-bit parts; the
+        // binding accumulator plane takes two sub-products per term.
+        // Row-modulus eligibility (q_i <= 2^52) is checked per tile.
+        let lane_flush = if x_bound <= mlt_backend::LANE_BOUND {
+            let part = (1u128 << 26) - 1;
+            ((u64::MAX as u128) / (2 * part * part)) as usize
+        } else {
+            0
+        };
         Self {
             k,
             moduli: moduli.to_vec(),
             mat,
             mat_shoup,
             flush: flush.max(1),
+            lane_flush,
         }
     }
 
@@ -172,12 +198,45 @@ impl ModLinKernel {
         self.mat_shoup[i * self.k + j]
     }
 
+    /// Shoup companion row (only materialized for `k <= 2`).
+    pub(crate) fn shoup_row(&self, row: usize) -> &[u64] {
+        debug_assert!(self.k <= 2, "Shoup companions are only kept for k <= 2");
+        &self.mat_shoup[row * self.k..(row + 1) * self.k]
+    }
+
+    /// Reduced matrix row (row-major slice of [`Self::entry`] values).
+    pub(crate) fn mat_row(&self, row: usize) -> &[u64] {
+        &self.mat[row * self.k..(row + 1) * self.k]
+    }
+
+    /// Scalar-path flush capacity (terms per exact u128 reduction).
+    pub(crate) fn flush_bound(&self) -> usize {
+        self.flush
+    }
+
+    /// SIMD lane-plane flush capacity; `0` means the lane decomposition
+    /// is inapplicable (input bound beyond 2^52) and SIMD backends take
+    /// the scalar tile instead. Public so callers and tests can check
+    /// whether a kernel's declared `x_bound` engages the lane path.
+    pub fn lane_flush_bound(&self) -> usize {
+        self.lane_flush
+    }
+
     /// Execute the transform: `out[i][t] = sum_j M[i][j]*x[j][t] mod q_i`.
     ///
     /// `x` holds the `k` input rows (each of length `n`), `out` the
     /// `out_rows()` output rows (each of length `n`). Work is tiled over
     /// the coefficient axis and parallelized over `(row, tile)` pairs.
+    /// Tiles execute on the process-wide [`mlt_backend::active`] backend
+    /// (CPU-feature-detected once, `FHECORE_MLT_BACKEND` override).
     pub fn apply(&self, x: &[&[u64]], out: &mut [&mut [u64]]) {
+        self.apply_with(mlt_backend::active(), x, out);
+    }
+
+    /// [`Self::apply`] on an explicit backend — how the equivalence
+    /// suite and the `modlin` bench compare implementations within one
+    /// process, independent of the global selection.
+    pub fn apply_with(&self, backend: &dyn MltBackend, x: &[&[u64]], out: &mut [&mut [u64]]) {
         assert_eq!(x.len(), self.k, "input row count");
         assert_eq!(out.len(), self.moduli.len(), "output row count");
         let n = out.first().map(|r| r.len()).unwrap_or(0);
@@ -206,75 +265,20 @@ impl ModLinKernel {
         // keeps tiny transforms (small n * small k) on the serial path.
         let hint = COL_TILE.min(n).saturating_mul(self.k);
         par_for_each_mut_hint(&mut tiles, hint, |_, tile| {
-            self.compute_tile(tile.row, tile.col, x, tile.buf);
+            backend.compute_tile(self, tile.row, tile.col, x, tile.buf);
         });
     }
 
     /// Convenience wrapper over owned row vectors.
     pub fn apply_vecs(&self, x: &[Vec<u64>], out: &mut [Vec<u64>]) {
-        let xr: Vec<&[u64]> = x.iter().map(|v| v.as_slice()).collect();
-        let mut or: Vec<&mut [u64]> = out.iter_mut().map(|v| v.as_mut_slice()).collect();
-        self.apply(&xr, &mut or);
+        self.apply_vecs_with(mlt_backend::active(), x, out);
     }
 
-    /// One `(output row, coefficient tile)` work item.
-    fn compute_tile(&self, row: usize, col: usize, x: &[&[u64]], out: &mut [u64]) {
-        let m = self.moduli[row];
-        let len = out.len();
-        let mrow = &self.mat[row * self.k..(row + 1) * self.k];
-
-        if self.k <= 2 {
-            // Short reductions: the Shoup path wins (no accumulator setup,
-            // one precomputed-operand multiply per term). Inputs may carry
-            // residues of foreign primes >= q_i, so reduce on entry —
-            // Harvey's multiply needs the variable operand below q.
-            let srow = &self.mat_shoup[row * self.k..(row + 1) * self.k];
-            let x0 = &x[0][col..col + len];
-            if self.k == 1 {
-                for (o, &v) in out.iter_mut().zip(x0) {
-                    *o = m.mul_shoup(m.reduce_u64(v), mrow[0], srow[0]);
-                }
-            } else {
-                let x1 = &x[1][col..col + len];
-                for ((o, &v0), &v1) in out.iter_mut().zip(x0).zip(x1) {
-                    let a = m.mul_shoup(m.reduce_u64(v0), mrow[0], srow[0]);
-                    let b = m.mul_shoup(m.reduce_u64(v1), mrow[1], srow[1]);
-                    *o = m.add(a, b);
-                }
-            }
-            return;
-        }
-
-        // Lazy accumulation: defer the Barrett reduction across the whole
-        // k-term dot product; each output coefficient pays one
-        // `reduce_u128` instead of k reductions. `flush` bounds how many
-        // raw products fit before an exact intermediate reduction.
-        let mut acc_store = [0u128; COL_TILE];
-        let acc = &mut acc_store[..len];
-        let mut since_flush = 0usize;
-        for (j, &w) in mrow.iter().enumerate() {
-            if w == 0 {
-                continue; // zero rows/entries (padding) contribute nothing
-            }
-            // `>=`, not `==`: after a flush the counter restarts at 1 and
-            // is then incremented past it, so with flush == 1 an equality
-            // check would never fire again and the accumulator could wrap.
-            if since_flush >= self.flush {
-                for a in acc.iter_mut() {
-                    *a = m.reduce_u128(*a) as u128;
-                }
-                since_flush = 1; // the reduced carry counts as one term
-            }
-            let w128 = w as u128;
-            let xr = &x[j][col..col + len];
-            for (a, &v) in acc.iter_mut().zip(xr) {
-                *a += w128 * v as u128;
-            }
-            since_flush += 1;
-        }
-        for (o, &a) in out.iter_mut().zip(acc.iter()) {
-            *o = m.reduce_u128(a);
-        }
+    /// [`Self::apply_vecs`] on an explicit backend.
+    pub fn apply_vecs_with(&self, backend: &dyn MltBackend, x: &[Vec<u64>], out: &mut [Vec<u64>]) {
+        let xr: Vec<&[u64]> = x.iter().map(|v| v.as_slice()).collect();
+        let mut or: Vec<&mut [u64]> = out.iter_mut().map(|v| v.as_mut_slice()).collect();
+        self.apply_with(backend, &xr, &mut or);
     }
 }
 
@@ -392,6 +396,20 @@ mod tests {
         let mut out = vec![vec![0u64; 37]; 2];
         kernel.apply_vecs(&x, &mut out);
         assert_eq!(out, reference(&moduli, &mat, &x));
+    }
+
+    #[test]
+    fn lane_capacity_tracks_declared_input_bound() {
+        let q = ntt_primes(16, 45, 1)[0];
+        let m = Modulus::new(q);
+        let tight = ModLinKernel::new(&[m], 4, q, |_, j| j as u64);
+        assert!(tight.lane_flush_bound() > 0, "45-bit bound engages the lane split");
+        let edge = ModLinKernel::new(&[m], 4, 1u64 << 52, |_, j| j as u64);
+        assert!(edge.lane_flush_bound() > 0, "2^52 (exclusive) still splits into 26-bit parts");
+        let over = ModLinKernel::new(&[m], 4, (1u64 << 52) + 1, |_, j| j as u64);
+        assert_eq!(over.lane_flush_bound(), 0, "inputs may reach 2^52: lane path off");
+        let loose = ModLinKernel::new(&[m], 4, u64::MAX, |_, j| j as u64);
+        assert_eq!(loose.lane_flush_bound(), 0, "worst-case bound disables the lane split");
     }
 
     #[test]

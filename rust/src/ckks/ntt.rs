@@ -322,6 +322,10 @@ impl NttTable {
             }
             rows
         };
+        // `x_bound = q` is tight: matrix-pass inputs are residues of this
+        // table's own modulus. For NTT-friendly chains (q < 2^52) that
+        // puts both plan kernels on the SIMD lane path (mlt_backend);
+        // wider tables fall back to the scalar tile, still bit-exact.
         let w1_kernel = ModLinKernel::from_rows(&vec![m; n1], &vand_rows(w1, n1), q);
         let w2_kernel = ModLinKernel::from_rows(&vec![m; n2], &vand_rows(w2, n2), q);
 
@@ -583,6 +587,21 @@ pub fn bitrev_permute(a: &mut [u64]) {
 mod tests {
     use super::*;
     use crate::ckks::prime::ntt_primes;
+
+    #[test]
+    fn four_step_plan_kernels_engage_the_simd_lane_path() {
+        // Plan kernels declare x_bound = q (inputs are own-modulus
+        // residues), so any NTT table over a < 2^52 prime — every
+        // production chain — hands its matrix passes to the mlt_backend
+        // lane path. A wide 58-bit table must fall back cleanly instead.
+        let q45 = ntt_primes(64, 45, 1)[0];
+        let plan = NttTable::new(64, q45).build_plan(8, 8, false);
+        assert!(plan.w1.lane_flush_bound() > 0, "45-bit plan kernel lane-eligible");
+        assert!(plan.w2.lane_flush_bound() > 0);
+        let q58 = ntt_primes(64, 58, 1)[0];
+        let wide = NttTable::new(64, q58).build_plan(8, 8, false);
+        assert_eq!(wide.w1.lane_flush_bound(), 0, "58-bit inputs exceed the lane split");
+    }
 
     fn naive_negacyclic(a: &[u64], psi: u64, q: u64) -> Vec<u64> {
         let m = Modulus::new(q);

@@ -75,7 +75,11 @@ impl BaseConvTable {
             })
             .collect();
         let dst_moduli: Vec<Modulus> = dst.iter().map(|&di| tower.contexts[di].modulus).collect();
-        // Inputs to the MLT are the pre-scaled residues y_j < p_j.
+        // Inputs to the MLT are the pre-scaled residues y_j < p_j. The
+        // tight bound matters twice: it sizes the scalar flush capacity,
+        // and (PR 6) it is what keeps the kernel on the SIMD lane path —
+        // mlt_backend's radix-2^26 split needs inputs below 2^52, which
+        // every production source base satisfies.
         let x_bound = src_primes.iter().copied().max().expect("empty source base");
         let kernel = ModLinKernel::from_rows(&dst_moduli, &conv, x_bound);
         Self {
@@ -378,6 +382,19 @@ mod tests {
         let q: Vec<usize> = (0..nq).collect();
         let p: Vec<usize> = (nq..nq + np).collect();
         (tower, q, p)
+    }
+
+    #[test]
+    fn baseconv_kernels_engage_the_simd_lane_path() {
+        // The tight x_bound (max source prime) is what keeps production
+        // conversions eligible for the mlt_backend lane decomposition;
+        // a regression to a loose bound would silently de-SIMD BConv.
+        let (tower, q, p) = setup(32, 3, 2);
+        let table = BaseConvTable::new(&tower, &q, &p);
+        assert!(
+            table.kernel.lane_flush_bound() > 0,
+            "45-bit source base must keep the BConv kernel lane-eligible"
+        );
     }
 
     fn rand_src_poly(tower: &Tower, chain: &[usize], seed: u64) -> RnsPoly {

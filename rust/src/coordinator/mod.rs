@@ -340,6 +340,11 @@ pub struct MetricsSnapshot {
     pub cuda_served: u64,
     /// Whole-program requests served.
     pub programs: u64,
+    /// Which [`crate::ckks::mlt_backend`] executes `ModLinKernel` tiles
+    /// on this node (wire v4): a [`crate::ckks::mlt_backend::codes`]
+    /// byte, `0` = unknown (pre-v4 peer), `255` = a cluster aggregate
+    /// over shards running different backends.
+    pub mlt_backend: u8,
 }
 
 impl MetricsSnapshot {
@@ -365,6 +370,14 @@ impl MetricsSnapshot {
         self.fhec_served += other.fhec_served;
         self.cuda_served += other.cuda_served;
         self.programs += other.programs;
+        // Backends don't sum: agree → keep, one side unknown → take the
+        // known one, genuine disagreement → flag the aggregate as mixed.
+        self.mlt_backend = match (self.mlt_backend, other.mlt_backend) {
+            (a, b) if a == b => a,
+            (crate::ckks::mlt_backend::codes::UNKNOWN, b) => b,
+            (a, crate::ckks::mlt_backend::codes::UNKNOWN) => a,
+            _ => crate::ckks::mlt_backend::codes::MIXED,
+        };
     }
 }
 
@@ -652,6 +665,7 @@ impl Coordinator {
             fhec_served: m.fhec_served.load(Ordering::Relaxed),
             cuda_served: m.cuda_served.load(Ordering::Relaxed),
             programs: m.programs.load(Ordering::Relaxed),
+            mlt_backend: crate::ckks::mlt_backend::active().code(),
         }
     }
 }
@@ -1206,6 +1220,7 @@ mod tests {
             fhec_served: 8,
             cuda_served: 2,
             programs: 1,
+            mlt_backend: crate::ckks::mlt_backend::codes::AVX2,
         };
         let b = MetricsSnapshot {
             served: 30,
@@ -1219,6 +1234,7 @@ mod tests {
             fhec_served: 25,
             cuda_served: 5,
             programs: 4,
+            mlt_backend: crate::ckks::mlt_backend::codes::AVX2,
         };
         a.absorb(&b);
         assert_eq!(a.served, 40);
@@ -1233,10 +1249,24 @@ mod tests {
         assert_eq!(a.fhec_served, 33);
         assert_eq!(a.cuda_served, 7);
         assert_eq!(a.programs, 5);
-        // Absorbing an empty (Default) snapshot is the identity on counters.
+        // Matching shard backends survive aggregation unchanged.
+        assert_eq!(a.mlt_backend, crate::ckks::mlt_backend::codes::AVX2);
+        // Absorbing an empty (Default) snapshot is the identity on counters
+        // — including the backend byte (Default = UNKNOWN never wins).
         let before = a;
         a.absorb(&MetricsSnapshot::default());
         assert_eq!(a, before);
+        // A shard on a different backend flags the aggregate as mixed.
+        let mut c = MetricsSnapshot {
+            mlt_backend: crate::ckks::mlt_backend::codes::SCALAR,
+            ..MetricsSnapshot::default()
+        };
+        c.absorb(&a);
+        assert_eq!(c.mlt_backend, crate::ckks::mlt_backend::codes::MIXED);
+        // Unknown (pre-v4) on the left adopts the known right-hand value.
+        let mut d = MetricsSnapshot::default();
+        d.absorb(&a);
+        assert_eq!(d.mlt_backend, crate::ckks::mlt_backend::codes::AVX2);
     }
 
     #[test]

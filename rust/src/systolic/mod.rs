@@ -54,6 +54,12 @@ pub fn fhec_16816_cycles() -> u64 {
 /// BaseConv mode of SV-B). Delegates to the shared MLT definition in
 /// [`crate::ckks::modlin::modmatmul_pe`], which the native artifact
 /// executor in [`crate::runtime`] also runs.
+///
+/// Deliberately *not* routed through the [`crate::ckks::mlt_backend`]
+/// dispatch: this path models the PE pipeline cycle-for-cycle (chained
+/// 30-bit Barrett MACs), so it stays on the one fixed formulation the
+/// hardware defines — `modlin.rs` tests pin it bit-equal to the
+/// lazy `ModLinKernel`, which *is* backend-dispatched.
 pub fn modmatmul(a: &[u32], b: &[u32], m: usize, k: usize, n: usize, q: &[u32]) -> Vec<u32> {
     modlin::modmatmul_pe(a, b, m, k, n, q)
 }

@@ -280,20 +280,22 @@ pub fn run_cluster(args: &Args) -> i32 {
                         for (shard, s) in &m.shards {
                             println!(
                                 "shard {shard}: served {} (fhec {} cuda {}, programs {}), \
-                                 depths [{}, {}], rejected {}",
+                                 depths [{}, {}], rejected {}, mlt {}",
                                 s.served,
                                 s.fhec_served,
                                 s.cuda_served,
                                 s.programs,
                                 s.fhec_depth,
                                 s.cuda_depth,
-                                s.rejected
+                                s.rejected,
+                                crate::ckks::mlt_backend::backend_code_name(s.mlt_backend)
                             );
                         }
                         let t = m.total();
                         println!(
                             "cluster total ({} shard(s)): served {} (fhec {} cuda {}, \
-                             programs {}), depths [{}, {}], rejected {}, mean service {:.1} us",
+                             programs {}), depths [{}, {}], rejected {}, mean service {:.1} us, \
+                             mlt {}",
                             m.shards.len(),
                             t.served,
                             t.fhec_served,
@@ -302,7 +304,8 @@ pub fn run_cluster(args: &Args) -> i32 {
                             t.fhec_depth,
                             t.cuda_depth,
                             t.rejected,
-                            t.mean_service_us
+                            t.mean_service_us,
+                            crate::ckks::mlt_backend::backend_code_name(t.mlt_backend)
                         );
                         0
                     }
@@ -470,6 +473,10 @@ fn fetch_metrics(addr: &str, params: CkksParams, timeout: Duration) -> Result<()
     println!("  fhec lane      depth {}  served {}", m.fhec_depth, m.fhec_served);
     println!("  cuda lane      depth {}  served {}", m.cuda_depth, m.cuda_served);
     println!("  programs       {}", m.programs);
+    println!(
+        "  mlt backend    {}",
+        crate::ckks::mlt_backend::backend_code_name(m.mlt_backend)
+    );
     Ok(())
 }
 

@@ -962,6 +962,7 @@ impl WireWrite for MetricsSnapshot {
         put_u64(out, self.fhec_served);
         put_u64(out, self.cuda_served);
         put_u64(out, self.programs);
+        put_u8(out, self.mlt_backend);
     }
 }
 
@@ -979,6 +980,7 @@ impl WireRead for MetricsSnapshot {
             fhec_served: r.u64()?,
             cuda_served: r.u64()?,
             programs: r.u64()?,
+            mlt_backend: r.u8()?,
         })
     }
 }

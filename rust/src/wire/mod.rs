@@ -67,16 +67,23 @@ pub const WIRE_MAGIC: [u8; 4] = *b"FHEC";
 /// breakdown through a gateway, and `MetricsSnapshot` grows a `programs`
 /// counter. Every v2 single-op message is still accepted unchanged —
 /// servers answer v2 `Hello`s too ([`version_accepted`]).
-pub const WIRE_VERSION: u16 = 3;
+///
+/// v4 (MLT backend telemetry): `MetricsSnapshot` grows a trailing
+/// `mlt_backend` byte — which `ckks::mlt_backend` implementation the
+/// node runs `ModLinKernel` tiles on — following the exact v3 precedent
+/// (the `programs` append). As then, the `MetricsResp` payload is the
+/// *only* incompatibility: frame decoding is strict (`expect_done`), so
+/// a v3 binary could decode everything except that one RPC, and all
+/// single-op and program traffic stays byte-compatible.
+pub const WIRE_VERSION: u16 = 4;
 
-/// Peer versions this build serves. v3 keeps every v2 message kind and
-/// blob layout unchanged with one exception: the `MetricsResp` payload
-/// (`MetricsSnapshot`) gained a trailing `programs` counter, so a
-/// v2-era binary could decode everything except that one RPC. All
-/// single-op request/response traffic — the serving surface — is
-/// byte-compatible, which is what accepting v2 `Hello`s buys.
+/// Peer versions this build serves. Each bump since v2 only appended a
+/// field to the `MetricsResp` payload (`programs` in v3, `mlt_backend`
+/// in v4), so v2/v3-era binaries decode the whole serving surface —
+/// single-op and (for v3) program traffic — except that one RPC. That
+/// is what accepting their `Hello`s buys.
 pub fn version_accepted(v: u16) -> bool {
-    v == 2 || v == WIRE_VERSION
+    v == 2 || v == 3 || v == WIRE_VERSION
 }
 
 /// Capped exponential backoff for `Busy` retries, shared by

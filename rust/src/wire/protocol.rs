@@ -539,6 +539,7 @@ mod tests {
             fhec_served: 8,
             cuda_served: 2,
             programs: 4,
+            mlt_backend: 3,
         }
     }
 

@@ -1,12 +1,21 @@
 //! Bit-exactness properties for the unified MLT engine: the modlin-backed
-//! base conversion must equal the Eq. 3 per-term reference, and the
+//! base conversion must equal the Eq. 3 per-term reference, the
 //! plan-cached 4-step NTT must equal both the uncached reference and the
 //! iterative transform — across ring sizes, prime widths (30/45/58 bits)
-//! and degenerate chains (alpha = 1, L = 1).
+//! and degenerate chains (alpha = 1, L = 1) — and (PR 6) every runnable
+//! [`mlt_backend`] must be bit-identical to the scalar oracle across
+//! ragged tile tails, all modulus widths up to 61 bits, and the lane
+//! flush boundary (`k >= lane_flush`).
+//!
+//! CI runs this suite twice — once under `FHECORE_MLT_BACKEND=scalar`
+//! and once on the best detected SIMD backend — so the cross-backend
+//! guarantee is enforced on both sides of the dispatch.
 
+use fhecore::ckks::mlt_backend;
+use fhecore::ckks::modlin::COL_TILE;
 use fhecore::ckks::poly::{Format, RnsPoly, Tower};
 use fhecore::ckks::prime::ntt_primes;
-use fhecore::ckks::{BaseConvScratch, BaseConvTable, NttTable};
+use fhecore::ckks::{BaseConvScratch, BaseConvTable, ModLinKernel, Modulus, NttTable};
 use fhecore::util::prop::check;
 use fhecore::util::rng::Pcg64;
 
@@ -133,4 +142,133 @@ fn prop_keyswitch_pipeline_unchanged_by_mlt_rewiring() {
             assert_eq!(down.limbs[i][7] as u128, x % m, "limb {i} bits={bits}");
         }
     });
+}
+
+/// Run one random kernel through every runnable backend and demand
+/// bit-identity with the scalar oracle. Inputs are drawn *below the
+/// declared bound* but above the destination moduli where the widths
+/// allow, so foreign-residue reduction paths are exercised too.
+fn assert_backends_agree(
+    src_bits: u32,
+    dst_bits: u32,
+    k: usize,
+    rows_out: usize,
+    n: usize,
+    rng: &mut Pcg64,
+) {
+    let src = ntt_primes(16, src_bits, k);
+    let dst = ntt_primes(16, dst_bits, rows_out);
+    let moduli: Vec<Modulus> = dst.iter().map(|&q| Modulus::new(q)).collect();
+    let x_bound = *src.iter().max().unwrap();
+    let mat: Vec<Vec<u64>> = (0..rows_out)
+        .map(|_| (0..k).map(|_| rng.below(x_bound)).collect())
+        .collect();
+    let x: Vec<Vec<u64>> = (0..k)
+        .map(|j| (0..n).map(|_| rng.below(src[j])).collect())
+        .collect();
+    let kernel = ModLinKernel::from_rows(&moduli, &mat, x_bound);
+    let scalar = mlt_backend::by_name("scalar").expect("scalar backend always exists");
+    let mut want = vec![vec![0u64; n]; rows_out];
+    kernel.apply_vecs_with(scalar, &x, &mut want);
+    for backend in mlt_backend::available() {
+        // Poison the buffer: equality must come from computation, not
+        // from a shared zero initialization.
+        let mut got = vec![vec![u64::MAX; n]; rows_out];
+        kernel.apply_vecs_with(backend, &x, &mut got);
+        assert_eq!(
+            got,
+            want,
+            "backend {} diverged: src_bits={src_bits} dst_bits={dst_bits} k={k} \
+             rows={rows_out} n={n} lane_flush={}",
+            backend.name(),
+            kernel.lane_flush_bound(),
+        );
+    }
+}
+
+#[test]
+fn prop_backends_bit_identical_across_widths_and_ragged_shapes() {
+    // Widths up to 61 bits (above 52 the SIMD backends must fall back to
+    // the scalar tile per row — still bit-exact), n deliberately ragged
+    // against both the 4-lane AVX2 block and COL_TILE.
+    check("mlt-backend-equiv", 20, |rng| {
+        let widths: [(u32, u32); 6] = [(30, 32), (45, 47), (50, 52), (45, 58), (58, 61), (61, 61)];
+        let (src_bits, dst_bits) = widths[rng.below(widths.len() as u64) as usize];
+        let k = 3 + rng.below(12) as usize;
+        let rows_out = 1 + rng.below(5) as usize;
+        // 1..~COL_TILE+40: covers n < 4 (pure SIMD tail), n % 4 != 0,
+        // and tiles straddling the COL_TILE boundary with ragged tails.
+        let n = 1 + rng.below(COL_TILE as u64 + 40) as usize;
+        assert_backends_agree(src_bits, dst_bits, k, rows_out, n, rng);
+    });
+}
+
+#[test]
+fn prop_backends_agree_on_short_reduction_kernels() {
+    // k <= 2 takes the Shoup short path on every backend — the dispatch
+    // must not disturb it, including through the trait object.
+    check("mlt-backend-shortk", 10, |rng| {
+        let (src_bits, dst_bits) = [(30u32, 32u32), (45, 47), (58, 61)][rng.below(3) as usize];
+        let k = 1 + rng.below(2) as usize;
+        let rows_out = 1 + rng.below(4) as usize;
+        let n = 1 + rng.below(300) as usize;
+        assert_backends_agree(src_bits, dst_bits, k, rows_out, n, rng);
+    });
+}
+
+#[test]
+fn backends_agree_across_the_lane_flush_boundary() {
+    // The lane planes flush after lane_flush (= 2048) terms; k = 2200
+    // forces the mid-loop exact reduction in every SIMD formulation
+    // (register flush in the AVX2 kernel, array flush in the portable
+    // body) while the scalar u128 path never flushes at these widths —
+    // maximal divergence in control flow, demanded-identical results.
+    let mut rng = Pcg64::new(0xF1A5);
+    let k = 2200usize;
+    let rows_out = 2usize;
+    let n = 21usize; // 5 AVX2 blocks + 1 tail coefficient
+    let src = ntt_primes(16, 45, 64);
+    let dst = ntt_primes(16, 47, rows_out);
+    let moduli: Vec<Modulus> = dst.iter().map(|&q| Modulus::new(q)).collect();
+    let x_bound = *src.iter().max().unwrap();
+    let mat: Vec<Vec<u64>> = (0..rows_out)
+        .map(|_| (0..k).map(|_| rng.below(x_bound)).collect())
+        .collect();
+    // Recycle the 64 primes across the 2200 input rows.
+    let x: Vec<Vec<u64>> = (0..k)
+        .map(|j| (0..n).map(|_| rng.below(src[j % src.len()])).collect())
+        .collect();
+    let kernel = ModLinKernel::from_rows(&moduli, &mat, x_bound);
+    let lane_flush = kernel.lane_flush_bound();
+    assert!(
+        0 < lane_flush && lane_flush < k,
+        "k={k} must exceed the lane flush capacity ({lane_flush}) for this test to bite"
+    );
+    let scalar = mlt_backend::by_name("scalar").unwrap();
+    let mut want = vec![vec![0u64; n]; rows_out];
+    kernel.apply_vecs_with(scalar, &x, &mut want);
+    for backend in mlt_backend::available() {
+        let mut got = vec![vec![u64::MAX; n]; rows_out];
+        kernel.apply_vecs_with(backend, &x, &mut got);
+        assert_eq!(got, want, "backend {} diverged across flush", backend.name());
+    }
+}
+
+#[test]
+fn active_backend_honors_forced_env_override() {
+    // CI runs the suite once per forced backend; when the variable is
+    // set (and supported) the process-wide dispatch must obey it.
+    let active = mlt_backend::active();
+    if let Ok(name) = std::env::var("FHECORE_MLT_BACKEND") {
+        if let Some(forced) = mlt_backend::by_name(&name) {
+            assert_eq!(
+                active.code(),
+                forced.code(),
+                "FHECORE_MLT_BACKEND={name} but active backend is {}",
+                active.name()
+            );
+        }
+    }
+    // Whatever was chosen must be one of the runnable backends.
+    assert!(mlt_backend::available().iter().any(|b| b.code() == active.code()));
 }
