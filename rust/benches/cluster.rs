@@ -31,6 +31,7 @@ fn spawn_shard(params: CkksParams) -> (String, std::thread::JoinHandle<()>) {
             linger: Duration::from_micros(200),
             max_queue: 64,
         },
+        registry: Default::default(),
         verbose: false,
     };
     let handle = std::thread::spawn(move || serve(listener, opts).expect("shard run"));

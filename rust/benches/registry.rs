@@ -1,0 +1,148 @@
+//! Tenancy benchmark: pooled vs per-call key-switch staging, and
+//! warm-hit vs cold-expand tenant registry lookups. Dumps
+//! `BENCH_registry.json` for the bench-archive trajectory, with the
+//! measured steady-state allocation rates attached as top-level notes.
+//!
+//! Outputs are asserted bit-identical before any timing runs — pooling
+//! and seed re-expansion must never change a single bit.
+
+use std::hint::black_box;
+use std::sync::Arc;
+
+use fhecore::bench_harness::Bench;
+use fhecore::ckks::encoding::Complex;
+use fhecore::ckks::params::{CkksContext, CkksParams};
+use fhecore::ckks::{EvalKeySet, EvalKeySpec, Evaluator, KeyGen};
+use fhecore::tenancy::{PoolStats, RegistryConfig, ScratchPool, TenantRegistry};
+use fhecore::util::json::Json;
+use fhecore::util::rng::Pcg64;
+use fhecore::wire::codec::{decode_eval_key_set, encode_eval_key_set};
+use fhecore::wire::{fnv1a64, params_fingerprint, WireError};
+
+fn main() {
+    let mut bench = Bench::new("registry");
+
+    let params = CkksParams::toy();
+    let fp = params_fingerprint(&params);
+    let ctx = CkksContext::new(params.clone());
+    let mut rng = Pcg64::new(0x2E61);
+    let kg = KeyGen::new(&ctx, &mut rng);
+    let keys = Arc::new(kg.eval_key_set(
+        &ctx,
+        &EvalKeySpec::relin_only().with_rotations(&[1]),
+        &mut rng,
+    ));
+    let enc = kg.encryptor();
+    let slots = ctx.params.slots();
+    let z: Vec<Complex> = (0..slots)
+        .map(|i| Complex::new(0.02 * (i % 7) as f64, 0.0))
+        .collect();
+    let ct = enc.encrypt_slots(&ctx, &z, ctx.max_level(), &mut rng);
+
+    // --- Pooled vs per-call staging -------------------------------------
+    // Identical Evaluator code path; the only difference is whether a
+    // returned scratch stays warm in the pool or is dropped straight back
+    // to the allocator (`max_idle 0` == per-call allocation).
+    let warm_pool = Arc::new(ScratchPool::new());
+    let cold_pool = Arc::new(ScratchPool::with_max_idle(0));
+    let ev_pooled = Evaluator::new(CkksContext::new(params.clone()), keys.clone())
+        .with_scratch_pool(warm_pool.clone());
+    let ev_percall = Evaluator::new(CkksContext::new(params.clone()), keys.clone())
+        .with_scratch_pool(cold_pool.clone());
+
+    let want_mul = ev_pooled.mul(&ct, &ct).expect("pooled mul");
+    assert_eq!(
+        want_mul,
+        ev_percall.mul(&ct, &ct).expect("per-call mul"),
+        "pooling must not change bits"
+    );
+    assert_eq!(
+        ev_pooled.rotate(&ct, 1).expect("pooled rotate"),
+        ev_percall.rotate(&ct, 1).expect("per-call rotate"),
+        "pooling must not change bits"
+    );
+
+    bench.run("keyswitch_pooled/mul+rotate", || {
+        black_box(ev_pooled.mul(black_box(&ct), &ct).expect("mul"));
+        black_box(ev_pooled.rotate(black_box(&ct), 1).expect("rotate"));
+    });
+    bench.run("keyswitch_percall/mul+rotate", || {
+        black_box(ev_percall.mul(black_box(&ct), &ct).expect("mul"));
+        black_box(ev_percall.rotate(black_box(&ct), 1).expect("rotate"));
+    });
+
+    let rate = |s: &PoolStats| s.misses as f64 / (s.hits + s.misses).max(1) as f64;
+    let (ws, cs) = (warm_pool.stats(), cold_pool.stats());
+    let (pooled_rate, percall_rate) = (rate(&ws), rate(&cs));
+    println!(
+        "steady-state alloc rate: pooled {:.4} ({} hits, {} misses, hwm {} B) vs per-call {:.4}",
+        pooled_rate, ws.hits, ws.misses, ws.bytes_hwm, percall_rate
+    );
+    assert!(
+        pooled_rate < percall_rate,
+        "the pool must allocate less than the per-call path"
+    );
+    bench.note("pooled_alloc_rate", Json::Num(pooled_rate));
+    bench.note("percall_alloc_rate", Json::Num(percall_rate));
+    bench.note("pool_bytes_hwm", Json::Num(ws.bytes_hwm as f64));
+
+    // --- Warm-hit vs cold-expand registry lookups -----------------------
+    let blob = encode_eval_key_set(&keys, fp, true);
+    let tenant = fnv1a64(&blob);
+    let registry: TenantRegistry<EvalKeySet> =
+        TenantRegistry::new(RegistryConfig::default());
+    registry.register(tenant, blob.clone(), keys.clone(), keys.resident_bytes() as u64);
+    let expand_ctx = CkksContext::new(params.clone());
+
+    // Bit-exact before timing: a full demote/re-expand round trip yields
+    // a key set whose canonical re-encode equals the original blob and
+    // whose evaluator reproduces the pooled result bit for bit.
+    registry.demote(tenant).expect("tenant resident");
+    let (re, _) = registry
+        .get(tenant, |b| {
+            let ks = decode_eval_key_set(&expand_ctx, b, fp)?;
+            let bytes = ks.resident_bytes() as u64;
+            Ok::<_, WireError>((Arc::new(ks), bytes))
+        })
+        .expect("cold expand");
+    assert_eq!(
+        encode_eval_key_set(&re, fp, true),
+        blob,
+        "re-expanded keys must re-encode to the identical blob"
+    );
+    let ev_re = Evaluator::new(CkksContext::new(params.clone()), re);
+    assert_eq!(
+        ev_re.mul(&ct, &ct).expect("re-expanded mul"),
+        want_mul,
+        "re-expanded keys must compute identical bits"
+    );
+
+    bench.run("registry_hit/lookup", || {
+        let (t, _) = registry
+            .get(tenant, |_: &[u8]| -> Result<(Arc<EvalKeySet>, u64), WireError> {
+                unreachable!("a warm hit never expands")
+            })
+            .expect("warm hit");
+        black_box(t);
+    });
+    bench.run("registry_cold_expand/lookup", || {
+        registry.demote(tenant).expect("tenant resident");
+        let (t, _) = registry
+            .get(tenant, |b| {
+                let ks = decode_eval_key_set(&expand_ctx, b, fp)?;
+                let bytes = ks.resident_bytes() as u64;
+                Ok::<_, WireError>((Arc::new(ks), bytes))
+            })
+            .expect("cold expand");
+        black_box(t);
+    });
+
+    let s = registry.stats();
+    println!(
+        "registry: {} hits, {} misses, {} expansions ({} us), {} evictions",
+        s.hits, s.misses, s.expansions, s.expansion_us, s.evictions
+    );
+    bench.note("registry_expansions", Json::Num(s.expansions as f64));
+
+    bench.write_json().expect("bench json dump");
+}

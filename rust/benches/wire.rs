@@ -76,6 +76,7 @@ fn main() {
             linger: Duration::from_micros(100),
             max_queue: 32,
         },
+        registry: Default::default(),
         verbose: false,
     };
     let server = std::thread::spawn(move || serve(listener, opts));

@@ -29,7 +29,7 @@ fn main() {
 
     // Client half: generate keys, push them, run the remote pipeline and
     // verify it is bit-identical to a local evaluator.
-    let pass = quickstart(&addr, params.clone(), Duration::from_secs(10))
+    let pass = quickstart(&addr, params.clone(), Duration::from_secs(10), 42)
         .expect("loopback quickstart run");
 
     // Server-side serving stats via the Metrics RPC, then shut down.

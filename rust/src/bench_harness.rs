@@ -15,6 +15,7 @@ pub struct Bench {
     pub measure_for: Duration,
     pub warmup_for: Duration,
     results: Vec<(String, Stats)>,
+    notes: Vec<(String, Json)>,
 }
 
 #[derive(Debug, Clone, Copy)]
@@ -36,7 +37,15 @@ impl Bench {
             measure_for: Duration::from_millis(if fast { 120 } else { 900 }),
             warmup_for: Duration::from_millis(if fast { 40 } else { 250 }),
             results: Vec::new(),
+            notes: Vec::new(),
         }
+    }
+
+    /// Attach an arbitrary top-level key to the JSON artifact — derived
+    /// evidence like allocation rates that a timing line cannot carry.
+    /// `bench_archive` only reads `name`/`results`; notes ride along.
+    pub fn note(&mut self, key: &str, value: Json) {
+        self.notes.push((key.to_string(), value));
     }
 
     /// Measure `f`, which must consume/produce real work (use
@@ -140,6 +149,9 @@ impl Bench {
             "cpu".to_string(),
             Json::Str(crate::ckks::mlt_backend::cpu_features()),
         );
+        for (k, v) in &self.notes {
+            top.insert(k.clone(), v.clone());
+        }
         Json::Obj(top)
     }
 
@@ -179,6 +191,7 @@ mod tests {
             measure_for: Duration::from_millis(30),
             warmup_for: Duration::from_millis(10),
             results: Vec::new(),
+            notes: Vec::new(),
         }
     }
 
@@ -202,7 +215,9 @@ mod tests {
         b.run("noop", || {
             std::hint::black_box(1 + 1);
         });
+        b.note("alloc_rate", Json::Num(0.25));
         let j = b.to_json();
+        assert_eq!(j.get("alloc_rate").unwrap().as_f64(), Some(0.25));
         assert_eq!(j.get("name").unwrap().as_str(), Some("json-self-test"));
         let results = j.get("results").unwrap().as_arr().unwrap();
         assert_eq!(results.len(), 1);

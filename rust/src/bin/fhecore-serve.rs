@@ -6,7 +6,8 @@
 //! ```text
 //! fhecore-serve --listen 127.0.0.1:7009 --params toy \
 //!     [--fhec-workers 2] [--cuda-workers 1] [--max-batch 8] \
-//!     [--max-queue 64] [--linger-ms 2] [--verbose]
+//!     [--max-queue 64] [--linger-ms 2] [--verbose] \
+//!     [--key-budget-mb 64] [--max-resident-tenants 2]
 //! ```
 //!
 //! Ops against a running server:

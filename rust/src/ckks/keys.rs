@@ -304,6 +304,27 @@ impl Default for KeySwitchScratch {
     }
 }
 
+impl KeySwitchScratch {
+    /// Heap bytes currently held across every stage buffer — the
+    /// accounting unit behind the tenancy scratch pool's high-water mark.
+    pub fn resident_bytes(&self) -> usize {
+        self.conv.resident_bytes()
+            + self.d_coeff.resident_bytes()
+            + self.digit.resident_bytes()
+            + self.lifted.resident_bytes()
+            + self.full.resident_bytes()
+            + self.prod.resident_bytes()
+            + self.p_part.resident_bytes()
+            + self.p_in_q.resident_bytes()
+    }
+
+    /// Pre-size the widest stage buffer from a representative polynomial
+    /// (pool warmup and accounting tests) without running a key switch.
+    pub fn warm_with(&mut self, src: &RnsPoly) {
+        self.d_coeff.copy_from(src);
+    }
+}
+
 thread_local! {
     /// Per-thread scratch backing [`KsKey::apply`]: buffers persist across
     /// calls, so steady-state key switching allocates only its two output
@@ -481,6 +502,22 @@ impl KsKey {
         Self::generate(ctx, sk, &s_from, level, rng)
     }
 
+    /// Approximate heap bytes this key holds expanded: the digit pairs,
+    /// the ModUp/ModDown conversion tables and the per-digit constants.
+    /// This is the registry's per-key memory-budget unit.
+    pub fn resident_bytes(&self) -> usize {
+        let w = std::mem::size_of::<u64>();
+        let digits: usize = self
+            .digits
+            .iter()
+            .map(|(b, a)| b.resident_bytes() + a.resident_bytes())
+            .sum();
+        let tables: usize = self.modup.iter().map(|t| t.resident_bytes()).sum();
+        let consts: usize = self.qhat_inv.iter().map(|v| v.len() * w).sum::<usize>()
+            + self.p_inv.len() * w;
+        digits + tables + self.p_to_active.resident_bytes() + consts
+    }
+
     /// Apply the key switch to a polynomial `d` (Eval, active chain at
     /// `self.level`): returns `(out0, out1)` such that
     /// `out0 + out1*s  ~=  d * s_from` (Eval, active chain).
@@ -489,6 +526,25 @@ impl KsKey {
     /// only the two output polynomials.
     pub fn apply(&self, ctx: &CkksContext, d: &RnsPoly) -> (RnsPoly, RnsPoly) {
         KS_SCRATCH.with(|s| self.apply_with(ctx, d, &mut s.borrow_mut()))
+    }
+
+    /// [`Self::apply`] against an optional cross-request scratch pool:
+    /// `Some` checks a size-classed scratch out of the pool for the call
+    /// (multi-tenant serving), `None` falls back to the per-thread
+    /// scratch. Bit-identical either way — only buffer ownership moves.
+    pub fn apply_pooled(
+        &self,
+        ctx: &CkksContext,
+        d: &RnsPoly,
+        pool: Option<&crate::tenancy::ScratchPool>,
+    ) -> (RnsPoly, RnsPoly) {
+        match pool {
+            Some(p) => {
+                let mut lease = p.checkout(ctx.params.n);
+                self.apply_with(ctx, d, &mut lease)
+            }
+            None => self.apply(ctx, d),
+        }
     }
 
     /// [`Self::apply`] with caller-provided scratch (hot-loop variant).
@@ -579,6 +635,23 @@ impl KsKey {
         KS_SCRATCH.with(|s| self.hoist_with(ctx, d, &mut s.borrow_mut()))
     }
 
+    /// [`Self::hoist`] against an optional cross-request scratch pool
+    /// (see [`Self::apply_pooled`]).
+    pub fn hoist_pooled(
+        &self,
+        ctx: &CkksContext,
+        d: &RnsPoly,
+        pool: Option<&crate::tenancy::ScratchPool>,
+    ) -> HoistedDecomp {
+        match pool {
+            Some(p) => {
+                let mut lease = p.checkout(ctx.params.n);
+                self.hoist_with(ctx, d, &mut lease)
+            }
+            None => self.hoist(ctx, d),
+        }
+    }
+
     /// [`Self::hoist`] with caller-provided scratch.
     pub fn hoist_with(
         &self,
@@ -654,6 +727,24 @@ impl KsKey {
         g: usize,
     ) -> (RnsPoly, RnsPoly) {
         KS_SCRATCH.with(|s| self.apply_hoisted_with(ctx, decomp, g, &mut s.borrow_mut()))
+    }
+
+    /// [`Self::apply_hoisted`] against an optional cross-request scratch
+    /// pool (see [`Self::apply_pooled`]).
+    pub fn apply_hoisted_pooled(
+        &self,
+        ctx: &CkksContext,
+        decomp: &HoistedDecomp,
+        g: usize,
+        pool: Option<&crate::tenancy::ScratchPool>,
+    ) -> (RnsPoly, RnsPoly) {
+        match pool {
+            Some(p) => {
+                let mut lease = p.checkout(ctx.params.n);
+                self.apply_hoisted_with(ctx, decomp, g, &mut lease)
+            }
+            None => self.apply_hoisted(ctx, decomp, g),
+        }
     }
 
     /// [`Self::apply_hoisted`] with caller-provided scratch.
@@ -1044,6 +1135,13 @@ impl EvalKeySet {
     /// Number of key-switching keys held.
     pub fn len(&self) -> usize {
         self.keys.len()
+    }
+
+    /// Approximate heap bytes the expanded set holds — the registry's
+    /// per-tenant memory-budget unit (cold tenants keep only their
+    /// seed-compressed wire blob, a small fraction of this).
+    pub fn resident_bytes(&self) -> usize {
+        self.keys.values().map(|k| k.resident_bytes()).sum()
     }
 
     pub fn is_empty(&self) -> bool {

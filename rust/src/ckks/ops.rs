@@ -40,12 +40,33 @@ pub struct Evaluator {
     pub ctx: CkksContext,
     pub encoder: Encoder,
     keys: Arc<EvalKeySet>,
+    /// Cross-request staging-buffer pool (multi-tenant serving). `None`
+    /// falls back to the per-thread scratch — bit-identical either way.
+    scratch_pool: Option<Arc<crate::tenancy::ScratchPool>>,
 }
 
 impl Evaluator {
     pub fn new(ctx: CkksContext, keys: Arc<EvalKeySet>) -> Self {
         let encoder = Encoder::new(ctx.params.n);
-        Self { ctx, encoder, keys }
+        Self {
+            ctx,
+            encoder,
+            keys,
+            scratch_pool: None,
+        }
+    }
+
+    /// Route every key-switch staging buffer through a shared
+    /// [`ScratchPool`](crate::tenancy::ScratchPool) instead of the
+    /// per-thread scratch. The server wires all tenants' evaluators to
+    /// one pool so staging memory is shared across requests and tenants.
+    pub fn with_scratch_pool(mut self, pool: Arc<crate::tenancy::ScratchPool>) -> Self {
+        self.scratch_pool = Some(pool);
+        self
+    }
+
+    fn pool(&self) -> Option<&crate::tenancy::ScratchPool> {
+        self.scratch_pool.as_deref()
     }
 
     /// An evaluator restricted to key-free ops (add, PtMult, rescale...).
@@ -161,7 +182,7 @@ impl Evaluator {
         d2.mul_assign(&b.c1, &self.ctx.tower);
 
         // Relinearize d2 (KeySwitch with evk_{s^2}).
-        let (e0, e1) = ksk.apply(&self.ctx, &d2);
+        let (e0, e1) = ksk.apply_pooled(&self.ctx, &d2, self.pool());
         d0.add_assign(&e0, &self.ctx.tower);
         d1.add_assign(&e1, &self.ctx.tower);
 
@@ -232,7 +253,7 @@ impl Evaluator {
     /// any Galois key at `a.level` can produce it — `ksk` just supplies
     /// the ModUp tables.
     pub fn hoist_galois(&self, ksk: &KsKey, a: &Ciphertext) -> HoistedDecomp {
-        ksk.hoist(&self.ctx, &a.c1)
+        ksk.hoist_pooled(&self.ctx, &a.c1, self.pool())
     }
 
     /// Finish a rotation/conjugation by Galois element `g` from a
@@ -252,7 +273,7 @@ impl Evaluator {
         r0.to_eval(&self.ctx.tower);
 
         // KeySwitch phi_g(s) -> s on the hoisted, automorphed digits.
-        let (e0, e1) = ksk.apply_hoisted(&self.ctx, decomp, g);
+        let (e0, e1) = ksk.apply_hoisted_pooled(&self.ctx, decomp, g, self.pool());
         r0.add_assign(&e0, &self.ctx.tower);
         Ciphertext {
             c0: r0,

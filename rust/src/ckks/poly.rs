@@ -102,6 +102,17 @@ impl RnsPoly {
         self.limbs.len()
     }
 
+    /// Heap bytes held by this polynomial's limb allocations (capacity,
+    /// not length — this is the memory-budget accounting unit for the
+    /// tenancy registry and scratch pool).
+    pub fn resident_bytes(&self) -> usize {
+        self.limbs
+            .iter()
+            .map(|l| l.capacity() * std::mem::size_of::<u64>())
+            .sum::<usize>()
+            + self.chain.capacity() * std::mem::size_of::<usize>()
+    }
+
     fn zip_check(&self, other: &Self) {
         assert_eq!(self.n, other.n);
         assert_eq!(self.format, other.format, "format mismatch");

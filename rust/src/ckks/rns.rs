@@ -40,6 +40,13 @@ pub struct BaseConvScratch {
     y: Vec<Vec<u64>>,
 }
 
+impl BaseConvScratch {
+    /// Heap bytes held by the staging buffers (memory-budget accounting).
+    pub fn resident_bytes(&self) -> usize {
+        self.y.iter().map(|v| v.capacity() * std::mem::size_of::<u64>()).sum()
+    }
+}
+
 impl BaseConvTable {
     pub fn new(tower: &Tower, src: &[usize], dst: &[usize]) -> Self {
         let src_primes: Vec<u64> = src.iter().map(|&i| tower.contexts[i].modulus.value()).collect();
@@ -90,6 +97,19 @@ impl BaseConvTable {
             conv,
             kernel,
         }
+    }
+
+    /// Approximate heap bytes held by the precomputed constants. The
+    /// compiled [`ModLinKernel`] keeps a reduced copy of the `conv`
+    /// matrix plus Shoup companions, so it is counted as two more
+    /// matrix-sized planes — an estimate, used only for memory-budget
+    /// accounting, not allocation.
+    pub fn resident_bytes(&self) -> usize {
+        let w = std::mem::size_of::<u64>();
+        let matrix: usize = self.conv.iter().map(|row| row.len() * w).sum();
+        matrix * 3
+            + (self.src.len() + self.dst.len()) * std::mem::size_of::<usize>()
+            + (self.phat_inv.len() + self.phat_inv_shoup.len()) * w
     }
 
     /// HPS fast base conversion of a coefficient-format polynomial

@@ -51,15 +51,19 @@ struct GatewayShared {
 }
 
 /// Map a cluster-level failure onto a wire error frame for `op_id` —
-/// shard-typed codes pass through, everything else (all replicas
-/// down...) is a serving failure. `ClusterError::Busy` is handled
-/// before this: it stays a typed `Message::Busy`, never an error.
+/// shard-typed codes pass through **with their detail verbatim** (an
+/// `OVERLOADED` detail is the retry-after-ms a downstream client
+/// parses; decorating it would break that), everything else (all
+/// replicas down...) is a serving failure. `ClusterError::Busy` is
+/// handled before this: it stays a typed `Message::Busy`, never an
+/// error.
 fn cluster_error_message(op_id: u64, e: ClusterError) -> Message {
-    let code = match &e {
-        ClusterError::Remote { code, .. } if *code != 0 => *code,
-        _ => error_code::STOPPED,
-    };
-    Message::Error { id: op_id, code, detail: e.to_string() }
+    match e {
+        ClusterError::Remote { code, detail, .. } if code != 0 => {
+            Message::Error { id: op_id, code, detail }
+        }
+        e => Message::Error { id: op_id, code: error_code::STOPPED, detail: e.to_string() },
+    }
 }
 
 /// Run the gateway on an already-bound listener until a client sends
@@ -178,11 +182,13 @@ fn reader_loop(
                     detail: format!("key replication failed: {e}"),
                 }),
             },
-            Message::OpRequest { id, op, ct, ct2 } => {
+            Message::OpRequest { id, op, ct, ct2, tenant } => {
                 // Route by the upstream id (deterministic placement);
                 // block here if the owner's window is full — that TCP
-                // pushback *is* the gateway's admission control.
-                match shared.cluster.submit_keyed(id, &op, &ct, ct2.as_ref()) {
+                // pushback *is* the gateway's admission control. The
+                // upstream tenant id rides through verbatim: one gateway
+                // connection can multiplex many tenants.
+                match shared.cluster.submit_keyed_as(id, tenant, &op, &ct, ct2.as_ref()) {
                     Ok(ticket) => {
                         let shared = shared.clone();
                         let tx = tx.clone();
@@ -212,10 +218,11 @@ fn reader_loop(
                     Err(e) => send(cluster_error_message(id, e)),
                 }
             }
-            Message::ProgramRequest { id, program, inputs } => {
+            Message::ProgramRequest { id, program, inputs, tenant } => {
                 // Whole programs route like ops: by the upstream id, to
-                // one shard, in one downstream round trip.
-                match shared.cluster.submit_program_keyed(id, &program, &inputs) {
+                // one shard, in one downstream round trip, under the
+                // upstream tenant.
+                match shared.cluster.submit_program_keyed_as(id, tenant, &program, &inputs) {
                     Ok(ticket) => {
                         let shared = shared.clone();
                         let tx = tx.clone();

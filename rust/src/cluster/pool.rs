@@ -5,12 +5,19 @@
 //! thread that matches protocol-v2 responses to in-flight requests by
 //! id, so any number of ops can be in flight per shard (bounded by
 //! [`ClusterOptions::window`]). Ops are routed over the consistent-hash
-//! [`HashRing`] by their routing key; `Busy` bounces are resent on the
-//! capped-exponential [`wire::busy_backoff_delay`] schedule shared with
-//! the synchronous client; a shard whose connection dies is marked dead
+//! [`HashRing`] by their routing key; `Busy` bounces — and v5
+//! `Overloaded` bounces from a shard whose tenant key budget is
+//! exhausted — are resent on the capped-exponential
+//! [`wire::busy_backoff_delay_jittered`] schedule (per-connection
+//! deterministic seed, so shards fronting many cluster clients see
+//! desynchronized retries); a shard whose connection dies is marked dead
 //! and its unfinished ops **fail over** to the next ring replica —
 //! correct because `PushKeys` replicates the evaluation keys to every
 //! shard, and bit-exact because CKKS evaluation is deterministic.
+//!
+//! Multi-tenancy: `push_keys`/`push_keys_blob` registers the blob as a
+//! tenant on every shard and pins this client to it; the `_as` submit
+//! variants carry an explicit per-request tenant id (the gateway path).
 //!
 //! The synchronous surface (`mul`/`rotate`/`conjugate`/`hom_linear`/
 //! `add`/`rescale`/...) mirrors the local `Evaluator`, so every example
@@ -33,9 +40,9 @@ use crate::ckks::{Ciphertext, EvalKeySet, Evaluator, MissingKey, RnsPoly};
 use crate::coordinator::MetricsSnapshot;
 use crate::wire::client::connect_handshake;
 use crate::wire::codec::encode_eval_key_set;
-use crate::wire::protocol::{encode_op_request, encode_program_request};
+use crate::wire::protocol::{encode_op_request, encode_program_request, error_code};
 use crate::wire::{
-    busy_backoff_delay, fnv1a64, params_fingerprint, Frame, Message, WireError, WireOp,
+    busy_backoff_delay_jittered, fnv1a64, params_fingerprint, Frame, Message, WireError, WireOp,
 };
 
 /// Tuning for the pipelined cluster client.
@@ -204,6 +211,9 @@ struct ShardConn {
     writer: Mutex<TcpStream>,
     state: Mutex<ConnState>,
     cv: Condvar,
+    /// Deterministic jitter seed (from this socket's ephemeral local
+    /// address) for the `Busy`/`Overloaded` resend schedule.
+    backoff_seed: u64,
     /// Serializes the single-slot RPCs (`PushKeys`, `Metrics`): the
     /// response lands in a one-deep mailbox, so a second concurrent
     /// caller would otherwise clear/steal the first caller's reply.
@@ -221,12 +231,17 @@ impl ShardConn {
         opts: ClusterOptions,
     ) -> Result<Arc<Self>, WireError> {
         let stream = connect_handshake(addr, fingerprint, opts.connect_timeout)?;
+        let backoff_seed = stream
+            .local_addr()
+            .map(|a| fnv1a64(a.to_string().as_bytes()))
+            .unwrap_or_else(|_| fnv1a64(addr.as_bytes()));
         let reader = BufReader::new(stream.try_clone()?);
         let conn = Arc::new(Self {
             addr: addr.to_string(),
             writer: Mutex::new(stream),
             state: Mutex::new(ConnState::default()),
             cv: Condvar::new(),
+            backoff_seed,
             rpc: Mutex::new(()),
             opts,
         });
@@ -269,14 +284,15 @@ impl ShardConn {
                 Message::Busy { id, depth } => {
                     // A bounced op stays in its window slot (it is still
                     // the client's to deliver) but is scheduled for a
-                    // capped-exponential resend, serviced by whichever
-                    // thread waits on this connection next.
+                    // jittered capped-exponential resend, serviced by
+                    // whichever thread waits on this connection next.
                     if let Some(p) = st.inflight.get_mut(&id) {
                         if p.attempts >= self.opts.busy_retries {
                             st.inflight.remove(&id);
                             st.done.insert(id, OpResult::BusyExhausted(depth));
                         } else {
-                            let delay = busy_backoff_delay(
+                            let delay = busy_backoff_delay_jittered(
+                                self.backoff_seed,
                                 p.attempts,
                                 self.opts.busy_backoff,
                                 self.opts.busy_backoff_cap,
@@ -287,7 +303,29 @@ impl ShardConn {
                     }
                 }
                 Message::Error { id, code, detail } => {
-                    if id != 0 && st.inflight.remove(&id).is_some() {
+                    if id != 0 && code == error_code::OVERLOADED && st.inflight.contains_key(&id)
+                    {
+                        // The shard's tenant key budget is transiently
+                        // exhausted: resend like a Busy bounce, floored
+                        // at the server-suggested retry-after.
+                        let p = st.inflight.get_mut(&id).unwrap();
+                        if p.attempts >= self.opts.busy_retries {
+                            st.inflight.remove(&id);
+                            st.done.insert(id, OpResult::Remote { code, detail });
+                        } else {
+                            let floor =
+                                Duration::from_millis(detail.parse::<u64>().unwrap_or(0));
+                            let delay = busy_backoff_delay_jittered(
+                                self.backoff_seed,
+                                p.attempts,
+                                self.opts.busy_backoff,
+                                self.opts.busy_backoff_cap,
+                            )
+                            .max(floor);
+                            p.attempts += 1;
+                            p.resend_at = Some(Instant::now() + delay);
+                        }
+                    } else if id != 0 && st.inflight.remove(&id).is_some() {
                         st.done.insert(id, OpResult::Remote { code, detail });
                     } else {
                         // id-0 errors answer an RPC (e.g. a bad PushKeys
@@ -524,6 +562,9 @@ pub struct ClusterClient {
     route: Mutex<HashMap<u64, (u64, usize)>>,
     next_id: AtomicU64,
     fingerprint: u64,
+    /// Tenant id this client's requests are issued under (set by
+    /// `push_keys`; 0 = each shard's most recently registered tenant).
+    tenant: AtomicU64,
     local: Evaluator,
     failovers: Mutex<Vec<FailoverEvent>>,
 }
@@ -549,6 +590,7 @@ impl ClusterClient {
             route: Mutex::new(HashMap::new()),
             next_id: AtomicU64::new(1),
             fingerprint,
+            tenant: AtomicU64::new(0),
             local: Evaluator::without_keys(CkksContext::new(params)),
             failovers: Mutex::new(Vec::new()),
         })
@@ -557,6 +599,18 @@ impl ClusterClient {
     /// The negotiated parameter-set fingerprint.
     pub fn fingerprint(&self) -> u64 {
         self.fingerprint
+    }
+
+    /// The tenant id this client's requests are issued under (0 until
+    /// the first `push_keys` or an explicit `set_tenant`).
+    pub fn tenant(&self) -> u64 {
+        self.tenant.load(Ordering::Relaxed)
+    }
+
+    /// Issue subsequent requests under this tenant id (a key-blob
+    /// fingerprint; 0 = each shard's most recently registered tenant).
+    pub fn set_tenant(&self, tenant: u64) {
+        self.tenant.store(tenant, Ordering::Relaxed);
     }
 
     /// The shared CKKS context.
@@ -607,10 +661,11 @@ impl ClusterClient {
         self.failovers.lock().unwrap().push(ev);
     }
 
-    /// Serialize the key set once and replicate it to **every** shard,
-    /// verifying each `KeysAck` echoes the identical blob fingerprint
-    /// and key count — after this, any shard can serve any op, which is
-    /// what makes failover safe.
+    /// Serialize the key set once and replicate it to **every** shard —
+    /// each registers it as the tenant `fnv1a64(blob)` — verifying each
+    /// `KeysAck` echoes the identical blob fingerprint and key count:
+    /// after this, any shard can serve any op for this tenant, which is
+    /// what makes failover safe. Pins this client to the new tenant.
     pub fn push_keys(&self, keys: &EvalKeySet) -> Result<u32, ClusterError> {
         self.push_keys_blob(&encode_eval_key_set(keys, self.fingerprint, true))
     }
@@ -640,6 +695,7 @@ impl ClusterClient {
         if counts.windows(2).any(|w| w[0].1 != w[1].1) {
             return Err(ClusterError::KeyCountSkew { counts });
         }
+        self.tenant.store(want, Ordering::Relaxed);
         Ok(counts[0].1)
     }
 
@@ -684,7 +740,7 @@ impl ClusterClient {
         ct2: Option<&Ciphertext>,
     ) -> Result<u64, ClusterError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.submit_inner(id, id, op, ct, ct2)
+        self.submit_inner(id, id, op, ct, ct2, self.tenant())
     }
 
     /// Pipelined submission with an explicit routing key (the gateway
@@ -699,7 +755,22 @@ impl ClusterClient {
         ct2: Option<&Ciphertext>,
     ) -> Result<u64, ClusterError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.submit_inner(route_key, id, op, ct, ct2)
+        self.submit_inner(route_key, id, op, ct, ct2, self.tenant())
+    }
+
+    /// [`Self::submit_keyed`] with an explicit per-request tenant id —
+    /// the gateway path, where one cluster client multiplexes requests
+    /// from many downstream tenants.
+    pub fn submit_keyed_as(
+        &self,
+        route_key: u64,
+        tenant: u64,
+        op: &WireOp,
+        ct: &Ciphertext,
+        ct2: Option<&Ciphertext>,
+    ) -> Result<u64, ClusterError> {
+        let id = self.next_id.fetch_add(1, Ordering::Relaxed);
+        self.submit_inner(route_key, id, op, ct, ct2, tenant)
     }
 
     /// Pipelined whole-program submission, routed (like ops) by the
@@ -712,7 +783,8 @@ impl ClusterClient {
         inputs: &[Ciphertext],
     ) -> Result<u64, ClusterError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.submit_frame(id, id, Arc::new(encode_program_request(id, prog, inputs)))
+        let frame = encode_program_request(id, prog, inputs, self.tenant());
+        self.submit_frame(id, id, Arc::new(frame))
     }
 
     /// [`Self::submit_program`] with an explicit routing key (the
@@ -723,8 +795,21 @@ impl ClusterClient {
         prog: &FheProgram,
         inputs: &[Ciphertext],
     ) -> Result<u64, ClusterError> {
+        self.submit_program_keyed_as(route_key, self.tenant(), prog, inputs)
+    }
+
+    /// [`Self::submit_program_keyed`] with an explicit per-request
+    /// tenant id (the gateway path).
+    pub fn submit_program_keyed_as(
+        &self,
+        route_key: u64,
+        tenant: u64,
+        prog: &FheProgram,
+        inputs: &[Ciphertext],
+    ) -> Result<u64, ClusterError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        self.submit_frame(route_key, id, Arc::new(encode_program_request(id, prog, inputs)))
+        let frame = encode_program_request(id, prog, inputs, tenant);
+        self.submit_frame(route_key, id, Arc::new(frame))
     }
 
     fn submit_inner(
@@ -734,8 +819,9 @@ impl ClusterClient {
         op: &WireOp,
         ct: &Ciphertext,
         ct2: Option<&Ciphertext>,
+        tenant: u64,
     ) -> Result<u64, ClusterError> {
-        self.submit_frame(route_key, id, Arc::new(encode_op_request(id, op, ct, ct2)))
+        self.submit_frame(route_key, id, Arc::new(encode_op_request(id, op, ct, ct2, tenant)))
     }
 
     /// Place one already-encoded request frame on the ring: the owner

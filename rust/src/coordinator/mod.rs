@@ -345,18 +345,48 @@ pub struct MetricsSnapshot {
     /// byte, `0` = unknown (pre-v4 peer), `255` = a cluster aggregate
     /// over shards running different backends.
     pub mlt_backend: u8,
+    // --- wire v5: the multi-tenant registry/pool block -------------------
+    /// Tenants whose `EvalKeySet` is expanded in memory right now.
+    pub tenants_resident: u32,
+    /// Tenants demoted to their seed-compressed cold blob.
+    pub tenants_cold: u32,
+    /// Tenant lookups answered from a resident key set.
+    pub registry_hits: u64,
+    /// Tenant lookups that found the tenant cold (each triggers one
+    /// re-expansion, however many requests piled up behind it).
+    pub registry_misses: u64,
+    /// Resident key sets demoted to cold blobs by the LRU budget.
+    pub key_evictions: u64,
+    /// Cold-blob re-expansions performed.
+    pub key_expansions: u64,
+    /// Total wall-clock µs spent re-expanding cold blobs.
+    pub expansion_us: u64,
+    /// Bytes held by resident (expanded) key sets.
+    pub resident_key_bytes: u64,
+    /// Key-switch staging buffers served from the shared pool.
+    pub pool_hits: u64,
+    /// Pool checkouts that had to allocate a fresh scratch.
+    pub pool_misses: u64,
+    /// High-water mark of bytes held by the pool (idle + leased).
+    pub pool_bytes_hwm: u64,
+    /// Requests bounced with `Overloaded` (key budget, not queue).
+    pub overloaded: u64,
 }
 
 impl MetricsSnapshot {
     /// Fold another node's snapshot into this one — the cluster view is
-    /// the sum of its shards: counters and lane depths add, the peak is
-    /// the max of peaks, and the means are re-derived served-weighted.
+    /// the sum of its shards: counters and lane depths add
+    /// (*saturating*: a long-lived gateway aggregating many shards must
+    /// pin at `u64::MAX` rather than wrap back to small numbers — a
+    /// wrapped counter reads as a healthy restart, a pinned one as the
+    /// overflow it is), the peaks are the max of peaks, and the means
+    /// are re-derived served-weighted.
     pub fn absorb(&mut self, other: &MetricsSnapshot) {
         let total_us = self.mean_service_us * self.served as f64
             + other.mean_service_us * other.served as f64;
-        self.served += other.served;
-        self.batches += other.batches;
-        self.rejected += other.rejected;
+        self.served = self.served.saturating_add(other.served);
+        self.batches = self.batches.saturating_add(other.batches);
+        self.rejected = self.rejected.saturating_add(other.rejected);
         self.queue_peak = self.queue_peak.max(other.queue_peak);
         self.mean_service_us =
             if self.served > 0 { total_us / self.served as f64 } else { 0.0 };
@@ -365,11 +395,25 @@ impl MetricsSnapshot {
         } else {
             0.0
         };
-        self.fhec_depth += other.fhec_depth;
-        self.cuda_depth += other.cuda_depth;
-        self.fhec_served += other.fhec_served;
-        self.cuda_served += other.cuda_served;
-        self.programs += other.programs;
+        self.fhec_depth = self.fhec_depth.saturating_add(other.fhec_depth);
+        self.cuda_depth = self.cuda_depth.saturating_add(other.cuda_depth);
+        self.fhec_served = self.fhec_served.saturating_add(other.fhec_served);
+        self.cuda_served = self.cuda_served.saturating_add(other.cuda_served);
+        self.programs = self.programs.saturating_add(other.programs);
+        self.tenants_resident = self.tenants_resident.saturating_add(other.tenants_resident);
+        self.tenants_cold = self.tenants_cold.saturating_add(other.tenants_cold);
+        self.registry_hits = self.registry_hits.saturating_add(other.registry_hits);
+        self.registry_misses = self.registry_misses.saturating_add(other.registry_misses);
+        self.key_evictions = self.key_evictions.saturating_add(other.key_evictions);
+        self.key_expansions = self.key_expansions.saturating_add(other.key_expansions);
+        self.expansion_us = self.expansion_us.saturating_add(other.expansion_us);
+        self.resident_key_bytes =
+            self.resident_key_bytes.saturating_add(other.resident_key_bytes);
+        self.pool_hits = self.pool_hits.saturating_add(other.pool_hits);
+        self.pool_misses = self.pool_misses.saturating_add(other.pool_misses);
+        // A high-water mark aggregates like the queue peak: max, not sum.
+        self.pool_bytes_hwm = self.pool_bytes_hwm.max(other.pool_bytes_hwm);
+        self.overloaded = self.overloaded.saturating_add(other.overloaded);
         // Backends don't sum: agree → keep, one side unknown → take the
         // known one, genuine disagreement → flag the aggregate as mixed.
         self.mlt_backend = match (self.mlt_backend, other.mlt_backend) {
@@ -666,6 +710,11 @@ impl Coordinator {
             cuda_served: m.cuda_served.load(Ordering::Relaxed),
             programs: m.programs.load(Ordering::Relaxed),
             mlt_backend: crate::ckks::mlt_backend::active().code(),
+            // The registry/pool block is zero here: a coordinator serves
+            // one tenant's keys and owns neither the registry nor the
+            // pool. The wire server injects those stats into the summed
+            // snapshot (`server::registry_snapshot`).
+            ..MetricsSnapshot::default()
         }
     }
 }
@@ -1221,6 +1270,18 @@ mod tests {
             cuda_served: 2,
             programs: 1,
             mlt_backend: crate::ckks::mlt_backend::codes::AVX2,
+            tenants_resident: 1,
+            tenants_cold: 0,
+            registry_hits: 5,
+            registry_misses: 1,
+            key_evictions: 0,
+            key_expansions: 1,
+            expansion_us: 100,
+            resident_key_bytes: 1000,
+            pool_hits: 7,
+            pool_misses: 2,
+            pool_bytes_hwm: 500,
+            overloaded: 0,
         };
         let b = MetricsSnapshot {
             served: 30,
@@ -1235,6 +1296,18 @@ mod tests {
             cuda_served: 5,
             programs: 4,
             mlt_backend: crate::ckks::mlt_backend::codes::AVX2,
+            tenants_resident: 2,
+            tenants_cold: 1,
+            registry_hits: 10,
+            registry_misses: 2,
+            key_evictions: 3,
+            key_expansions: 4,
+            expansion_us: 900,
+            resident_key_bytes: 2000,
+            pool_hits: 3,
+            pool_misses: 1,
+            pool_bytes_hwm: 300,
+            overloaded: 2,
         };
         a.absorb(&b);
         assert_eq!(a.served, 40);
@@ -1249,6 +1322,19 @@ mod tests {
         assert_eq!(a.fhec_served, 33);
         assert_eq!(a.cuda_served, 7);
         assert_eq!(a.programs, 5);
+        assert_eq!(a.tenants_resident, 3);
+        assert_eq!(a.tenants_cold, 1);
+        assert_eq!(a.registry_hits, 15);
+        assert_eq!(a.registry_misses, 3);
+        assert_eq!(a.key_evictions, 3);
+        assert_eq!(a.key_expansions, 5);
+        assert_eq!(a.expansion_us, 1000);
+        assert_eq!(a.resident_key_bytes, 3000);
+        assert_eq!(a.pool_hits, 10);
+        assert_eq!(a.pool_misses, 3);
+        // The pool high-water mark is a peak: max across shards, not sum.
+        assert_eq!(a.pool_bytes_hwm, 500);
+        assert_eq!(a.overloaded, 2);
         // Matching shard backends survive aggregation unchanged.
         assert_eq!(a.mlt_backend, crate::ckks::mlt_backend::codes::AVX2);
         // Absorbing an empty (Default) snapshot is the identity on counters
@@ -1267,6 +1353,31 @@ mod tests {
         let mut d = MetricsSnapshot::default();
         d.absorb(&a);
         assert_eq!(d.mlt_backend, crate::ckks::mlt_backend::codes::AVX2);
+    }
+
+    #[test]
+    fn absorb_saturates_instead_of_wrapping() {
+        // A gateway summing shard counters near u64::MAX must pin, not
+        // wrap: a wrapped counter looks like a healthy restart.
+        let mut a = MetricsSnapshot {
+            served: u64::MAX - 5,
+            registry_hits: u64::MAX,
+            pool_hits: u64::MAX - 1,
+            tenants_resident: u32::MAX,
+            ..MetricsSnapshot::default()
+        };
+        let b = MetricsSnapshot {
+            served: 10,
+            registry_hits: 3,
+            pool_hits: 7,
+            tenants_resident: 2,
+            ..MetricsSnapshot::default()
+        };
+        a.absorb(&b);
+        assert_eq!(a.served, u64::MAX);
+        assert_eq!(a.registry_hits, u64::MAX);
+        assert_eq!(a.pool_hits, u64::MAX);
+        assert_eq!(a.tenants_resident, u32::MAX);
     }
 
     #[test]

@@ -32,6 +32,10 @@
 //!   ciphertext routing, key replication with per-shard fingerprint
 //!   verification, the pipelined out-of-order `ClusterClient` with ring
 //!   failover, and the `fhecore-gateway` front.
+//! * [`tenancy`] — multi-tenant serving substrate: the keyed tenant
+//!   registry (LRU eviction to seed-compressed cold blobs under a memory
+//!   budget, exactly-once re-expansion) and the cross-request
+//!   size-classed `ScratchPool` for key-switch staging buffers.
 //! * [`workloads`] — Bootstrapping / LR / ResNet20 / BERT-Tiny op-graph
 //!   builders at the paper's Table V parameters.
 //! * [`tables`] — regenerators for every figure and table of SVI.
@@ -47,6 +51,7 @@ pub mod rtl;
 pub mod runtime;
 pub mod systolic;
 pub mod tables;
+pub mod tenancy;
 pub mod util;
 pub mod wire;
 pub mod workloads;

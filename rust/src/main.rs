@@ -91,7 +91,10 @@ fn main() {
             );
             println!("  table all | table t8 | simulate bert-tiny | serve --requests 32");
             println!("  serve --listen 127.0.0.1:7009 --params toy   (wire TCP server)");
+            println!("  serve --listen ... --key-budget-mb 64 --max-resident-tenants 2");
+            println!("                                               (multi-tenant key budget)");
             println!("  client quickstart --connect 127.0.0.1:7009   (remote pipeline)");
+            println!("  client quickstart --seed 7                   (push a distinct tenant)");
             println!("  client metrics | client shutdown             (ops RPCs)");
             println!("  cluster serve --listen 127.0.0.1:7050 --shards a,b  (gateway)");
             println!("  cluster quickstart --connect 127.0.0.1:7050  (pipelined, OOO)");

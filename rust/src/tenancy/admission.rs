@@ -1,0 +1,227 @@
+//! Memory-budget admission planning: the pure decision function behind
+//! [`TenantRegistry`](super::registry::TenantRegistry).
+//!
+//! Given the registry budget and a view of every tenant slot, decide
+//! whether expanding (or registering) one tenant fits — naming the LRU
+//! victims to demote first — or whether the request must be turned away
+//! with a typed `Overloaded`/retry-after. Keeping this a standalone
+//! function over plain data makes the budget arithmetic unit-testable
+//! without sockets, keys or threads.
+
+/// How long an `Overloaded` answer asks the client to wait before
+/// retrying. Long enough for an in-flight expansion or eviction to
+/// complete on toy parameters, short enough that a retrying client
+/// converges quickly.
+pub const DEFAULT_RETRY_AFTER_MS: u64 = 25;
+
+/// One tenant slot as the planner sees it.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SlotView {
+    pub id: u64,
+    /// Expanded size (bytes); 0 when never expanded.
+    pub bytes: u64,
+    /// LRU clock value of the last touch (higher = more recent).
+    pub last_used: u64,
+    pub resident: bool,
+}
+
+/// The planner's verdict.
+#[derive(Debug, Clone, PartialEq, Eq)]
+pub enum AdmissionPlan {
+    /// Admit after demoting these tenants (LRU-first; possibly empty).
+    Admit { evict: Vec<u64> },
+    /// Cannot fit even after evicting every other resident tenant.
+    Overloaded { retry_after_ms: u64 },
+}
+
+/// The registry budget. Zero means "unlimited" for either knob, so the
+/// default configuration preserves the pre-registry behavior exactly.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct RegistryConfig {
+    /// Total bytes of expanded key material allowed resident at once.
+    pub max_resident_bytes: u64,
+    /// Number of tenants allowed resident (expanded) at once.
+    pub max_resident_tenants: usize,
+}
+
+impl RegistryConfig {
+    pub fn unlimited() -> Self {
+        Self {
+            max_resident_bytes: 0,
+            max_resident_tenants: 0,
+        }
+    }
+
+    pub fn is_limited(&self) -> bool {
+        self.max_resident_bytes > 0 || self.max_resident_tenants > 0
+    }
+}
+
+impl Default for RegistryConfig {
+    fn default() -> Self {
+        Self::unlimited()
+    }
+}
+
+/// Plan admission of tenant `want_id` at `want_bytes` expanded bytes.
+///
+/// `slots` describes every known tenant, including (possibly) `want_id`
+/// itself — its own entry is ignored on the cost side, so re-admitting a
+/// tenant never evicts it. Victims come least-recently-used first and
+/// only as many as the budget requires.
+pub fn plan_admission(
+    cfg: &RegistryConfig,
+    slots: &[SlotView],
+    want_id: u64,
+    want_bytes: u64,
+) -> AdmissionPlan {
+    if !cfg.is_limited() {
+        return AdmissionPlan::Admit { evict: Vec::new() };
+    }
+    // The wanted tenant alone must fit, or no eviction schedule helps.
+    if cfg.max_resident_bytes > 0 && want_bytes > cfg.max_resident_bytes {
+        return AdmissionPlan::Overloaded {
+            retry_after_ms: DEFAULT_RETRY_AFTER_MS,
+        };
+    }
+
+    let mut residents: Vec<&SlotView> = slots
+        .iter()
+        .filter(|s| s.resident && s.id != want_id)
+        .collect();
+    // LRU first: smallest clock value evicts first.
+    residents.sort_by_key(|s| s.last_used);
+
+    let mut resident_bytes: u64 = residents.iter().map(|s| s.bytes).sum();
+    let mut resident_count = residents.len();
+    let over = |bytes: u64, count: usize| {
+        (cfg.max_resident_bytes > 0 && bytes.saturating_add(want_bytes) > cfg.max_resident_bytes)
+            || (cfg.max_resident_tenants > 0 && count + 1 > cfg.max_resident_tenants)
+    };
+
+    let mut evict = Vec::new();
+    let mut victims = residents.iter();
+    while over(resident_bytes, resident_count) {
+        match victims.next() {
+            Some(v) => {
+                evict.push(v.id);
+                resident_bytes -= v.bytes;
+                resident_count -= 1;
+            }
+            // Everything evictable is gone and it still does not fit.
+            None => {
+                return AdmissionPlan::Overloaded {
+                    retry_after_ms: DEFAULT_RETRY_AFTER_MS,
+                }
+            }
+        }
+    }
+    AdmissionPlan::Admit { evict }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn slot(id: u64, bytes: u64, last_used: u64, resident: bool) -> SlotView {
+        SlotView {
+            id,
+            bytes,
+            last_used,
+            resident,
+        }
+    }
+
+    #[test]
+    fn unlimited_always_admits_without_eviction() {
+        let cfg = RegistryConfig::unlimited();
+        let slots = vec![slot(1, 1 << 30, 1, true), slot(2, 1 << 30, 2, true)];
+        assert_eq!(
+            plan_admission(&cfg, &slots, 3, u64::MAX / 2),
+            AdmissionPlan::Admit { evict: vec![] }
+        );
+    }
+
+    #[test]
+    fn evicts_lru_first_and_only_as_needed() {
+        let cfg = RegistryConfig {
+            max_resident_bytes: 250,
+            max_resident_tenants: 0,
+        };
+        // Tenant 2 is the least recently used resident.
+        let slots = vec![
+            slot(1, 100, 9, true),
+            slot(2, 100, 3, true),
+            slot(3, 100, 7, true),
+            slot(4, 100, 1, false), // cold: never a victim
+        ];
+        match plan_admission(&cfg, &slots, 5, 100) {
+            AdmissionPlan::Admit { evict } => {
+                // 300 resident + 100 wanted > 250: evict LRU (id 2) then
+                // next-LRU (id 3) to reach 100 + 100 <= 250.
+                assert_eq!(evict, vec![2, 3]);
+            }
+            other => panic!("expected Admit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn tenant_count_budget_is_enforced() {
+        let cfg = RegistryConfig {
+            max_resident_bytes: 0,
+            max_resident_tenants: 2,
+        };
+        let slots = vec![slot(1, 10, 5, true), slot(2, 10, 6, true)];
+        match plan_admission(&cfg, &slots, 3, 10) {
+            AdmissionPlan::Admit { evict } => assert_eq!(evict, vec![1]),
+            other => panic!("expected Admit, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn readmitting_a_resident_tenant_never_evicts_itself() {
+        let cfg = RegistryConfig {
+            max_resident_bytes: 150,
+            max_resident_tenants: 1,
+        };
+        let slots = vec![slot(1, 100, 5, true)];
+        assert_eq!(
+            plan_admission(&cfg, &slots, 1, 100),
+            AdmissionPlan::Admit { evict: vec![] }
+        );
+    }
+
+    #[test]
+    fn single_tenant_over_budget_is_overloaded() {
+        let cfg = RegistryConfig {
+            max_resident_bytes: 100,
+            max_resident_tenants: 0,
+        };
+        match plan_admission(&cfg, &[], 1, 101) {
+            AdmissionPlan::Overloaded { retry_after_ms } => {
+                assert_eq!(retry_after_ms, DEFAULT_RETRY_AFTER_MS)
+            }
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn overloaded_when_nothing_left_to_evict() {
+        // Two tenants each fit alone, but the budget holds only one and
+        // the other is the requester itself (not evictable).
+        let cfg = RegistryConfig {
+            max_resident_bytes: 0,
+            max_resident_tenants: 0,
+        };
+        assert!(!cfg.is_limited());
+        let cfg = RegistryConfig {
+            max_resident_bytes: 100,
+            max_resident_tenants: 0,
+        };
+        let slots = vec![slot(1, 60, 1, true), slot(2, 60, 2, false)];
+        match plan_admission(&cfg, &slots, 2, 60) {
+            AdmissionPlan::Admit { evict } => assert_eq!(evict, vec![1]),
+            other => panic!("expected Admit-with-eviction, got {other:?}"),
+        }
+    }
+}

@@ -1,0 +1,36 @@
+//! Multi-tenant serving substrate: key registry + polynomial memory pool.
+//!
+//! The paper's cost argument (and Theodosian's) is that FHE serving is
+//! won or lost in the memory hierarchy: every tenant carries megabytes of
+//! rotation/relinearization keys and every key switch stages wide RNS
+//! polynomials. Until PR 7 the server held exactly **one** fully expanded
+//! `EvalKeySet` (PushKeys *replaced* it) and every worker thread grew its
+//! own private scratch — a hard cap of one tenant and an allocation rate
+//! proportional to thread count.
+//!
+//! This module generalizes both:
+//!
+//! * [`registry::TenantRegistry`] — a keyed map from tenant id (the
+//!   FNV-1a fingerprint of the seed-compressed key blob, which itself
+//!   binds the params fingerprint) to expanded per-tenant state, with LRU
+//!   eviction under a configurable memory budget. Cold tenants keep only
+//!   their ≤60% seed-compressed wire blob resident and are re-expanded
+//!   **bit-exactly** and **exactly once** on demand (concurrent requests
+//!   for the same cold tenant block on one expansion).
+//! * [`pool::ScratchPool`] — an RMM-style size-classed pool of
+//!   [`KeySwitchScratch`](crate::ckks::KeySwitchScratch) staging buffers
+//!   (each bundling the `BaseConvScratch` and every key-switch stage
+//!   buffer), shared across requests and worker threads with hit/miss and
+//!   high-water-mark accounting — the HEonGPU memory-pool discipline.
+//! * [`admission`] — the pure budget-planning function behind both
+//!   registration and cold-tenant expansion: admit (possibly naming LRU
+//!   victims) or answer a typed `Overloaded`/retry-after instead of
+//!   OOMing the server.
+
+pub mod admission;
+pub mod pool;
+pub mod registry;
+
+pub use admission::{plan_admission, AdmissionPlan, SlotView, DEFAULT_RETRY_AFTER_MS};
+pub use pool::{PoolStats, ScratchLease, ScratchPool};
+pub use registry::{RegistryConfig, RegistryError, RegistryStats, TenantRegistry};

@@ -1,0 +1,230 @@
+//! Cross-request pool of key-switch staging buffers — the RMM-style
+//! arena HEonGPU puts under every FHE primitive, in allocator-free Rust.
+//!
+//! PR 2's [`KeySwitchScratch`] removed per-digit allocation *within* one
+//! thread by parking one scratch per worker in a `thread_local!`. That
+//! discipline does not survive multi-tenancy: scratch warmed on one
+//! connection thread is invisible to the next, short-lived forwarder
+//! threads each grow (and leak to the allocator) their own copy, and
+//! nothing reports how much staging memory the process actually holds.
+//!
+//! [`ScratchPool`] generalizes the thread-local into a process-wide,
+//! size-classed free list: a worker checks a scratch out for one key
+//! switch ([`ScratchPool::checkout`]), the RAII [`ScratchLease`] returns
+//! it on drop, and steady state serves every request from warmed buffers
+//! — hit/miss counters make the steady-state allocation rate observable
+//! and the high-water mark bounds the staging footprint. Size classes are
+//! keyed by ring dimension `N`: buffers warmed at one `N` never mix with
+//! another parameter set's, so a pooled scratch is always
+//! correctly-sized after its first use.
+
+use std::collections::HashMap;
+use std::ops::{Deref, DerefMut};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::ckks::KeySwitchScratch;
+
+/// Idle scratches kept per size class; returns beyond this are dropped
+/// to the allocator so a burst cannot pin memory forever.
+const DEFAULT_MAX_IDLE_PER_CLASS: usize = 64;
+
+/// Pool counters (monotone) and gauges.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct PoolStats {
+    /// Checkouts served from a warmed buffer.
+    pub hits: u64,
+    /// Checkouts that had to construct a fresh scratch — the pooled
+    /// path's steady-state allocation rate is `misses / checkouts`.
+    pub misses: u64,
+    /// Scratches currently idle in the pool.
+    pub idle: u64,
+    /// Bytes held by idle scratches right now.
+    pub idle_bytes: u64,
+    /// High-water mark of bytes tracked by the pool (idle + leased).
+    pub bytes_hwm: u64,
+}
+
+struct Entry {
+    scratch: KeySwitchScratch,
+    bytes: u64,
+}
+
+pub struct ScratchPool {
+    /// Free lists keyed by ring dimension `N`.
+    classes: Mutex<HashMap<usize, Vec<Entry>>>,
+    max_idle_per_class: usize,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    idle_bytes: AtomicU64,
+    leased_bytes: AtomicU64,
+    bytes_hwm: AtomicU64,
+}
+
+impl ScratchPool {
+    pub fn new() -> Self {
+        Self::with_max_idle(DEFAULT_MAX_IDLE_PER_CLASS)
+    }
+
+    pub fn with_max_idle(max_idle_per_class: usize) -> Self {
+        Self {
+            classes: Mutex::new(HashMap::new()),
+            max_idle_per_class,
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            idle_bytes: AtomicU64::new(0),
+            leased_bytes: AtomicU64::new(0),
+            bytes_hwm: AtomicU64::new(0),
+        }
+    }
+
+    /// Check a scratch out of the `class` (ring dimension) free list,
+    /// constructing a fresh one on miss. The lease returns it on drop.
+    pub fn checkout(&self, class: usize) -> ScratchLease<'_> {
+        let popped = self.classes.lock().unwrap().get_mut(&class).and_then(Vec::pop);
+        let (scratch, bytes) = match popped {
+            Some(e) => {
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                self.idle_bytes.fetch_sub(e.bytes, Ordering::Relaxed);
+                (e.scratch, e.bytes)
+            }
+            None => {
+                self.misses.fetch_add(1, Ordering::Relaxed);
+                (KeySwitchScratch::default(), 0)
+            }
+        };
+        self.leased_bytes.fetch_add(bytes, Ordering::Relaxed);
+        ScratchLease {
+            pool: self,
+            class,
+            checked_out_bytes: bytes,
+            scratch: Some(scratch),
+        }
+    }
+
+    fn give_back(&self, class: usize, scratch: KeySwitchScratch, checked_out_bytes: u64) {
+        self.leased_bytes.fetch_sub(checked_out_bytes, Ordering::Relaxed);
+        let bytes = scratch.resident_bytes() as u64;
+        let mut classes = self.classes.lock().unwrap();
+        let list = classes.entry(class).or_default();
+        if list.len() >= self.max_idle_per_class {
+            return; // overflow: let the allocator have it
+        }
+        list.push(Entry { scratch, bytes });
+        drop(classes);
+        let idle = self.idle_bytes.fetch_add(bytes, Ordering::Relaxed) + bytes;
+        let total = idle.saturating_add(self.leased_bytes.load(Ordering::Relaxed));
+        self.bytes_hwm.fetch_max(total, Ordering::Relaxed);
+    }
+
+    pub fn stats(&self) -> PoolStats {
+        let classes = self.classes.lock().unwrap();
+        let idle = classes.values().map(Vec::len).sum::<usize>() as u64;
+        PoolStats {
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            idle,
+            idle_bytes: self.idle_bytes.load(Ordering::Relaxed),
+            bytes_hwm: self.bytes_hwm.load(Ordering::Relaxed),
+        }
+    }
+}
+
+impl Default for ScratchPool {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+/// RAII checkout of one [`KeySwitchScratch`]; derefs to the scratch and
+/// returns it to the pool on drop.
+pub struct ScratchLease<'a> {
+    pool: &'a ScratchPool,
+    class: usize,
+    checked_out_bytes: u64,
+    scratch: Option<KeySwitchScratch>,
+}
+
+impl Deref for ScratchLease<'_> {
+    type Target = KeySwitchScratch;
+    fn deref(&self) -> &KeySwitchScratch {
+        self.scratch.as_ref().expect("lease already returned")
+    }
+}
+
+impl DerefMut for ScratchLease<'_> {
+    fn deref_mut(&mut self) -> &mut KeySwitchScratch {
+        self.scratch.as_mut().expect("lease already returned")
+    }
+}
+
+impl Drop for ScratchLease<'_> {
+    fn drop(&mut self) {
+        if let Some(s) = self.scratch.take() {
+            self.pool.give_back(self.class, s, self.checked_out_bytes);
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn checkout_miss_then_hit() {
+        let pool = ScratchPool::new();
+        {
+            let _lease = pool.checkout(256);
+        }
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses, s.idle), (0, 1, 1));
+        {
+            let _lease = pool.checkout(256);
+            // While leased, the free list is empty again.
+            assert_eq!(pool.stats().idle, 0);
+        }
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses, s.idle), (1, 1, 1));
+    }
+
+    #[test]
+    fn size_classes_do_not_mix() {
+        let pool = ScratchPool::new();
+        drop(pool.checkout(256));
+        // A different ring dimension misses despite the idle 256-class
+        // scratch.
+        drop(pool.checkout(512));
+        let s = pool.stats();
+        assert_eq!((s.hits, s.misses, s.idle), (0, 2, 2));
+    }
+
+    #[test]
+    fn idle_cap_bounds_the_free_list() {
+        let pool = ScratchPool::with_max_idle(2);
+        let a = pool.checkout(64);
+        let b = pool.checkout(64);
+        let c = pool.checkout(64);
+        drop(a);
+        drop(b);
+        drop(c); // third return overflows the cap and is dropped
+        assert_eq!(pool.stats().idle, 2);
+    }
+
+    #[test]
+    fn hwm_tracks_warmed_bytes() {
+        let pool = ScratchPool::new();
+        {
+            let mut lease = pool.checkout(64);
+            // Warm the scratch so it carries real allocations back.
+            let tower = crate::ckks::Tower::new(64, &crate::ckks::prime::ntt_primes(64, 45, 2));
+            let p = crate::ckks::RnsPoly::zero(&tower, &[0, 1], crate::ckks::Format::Coeff);
+            lease.warm_with(&p);
+        }
+        let s = pool.stats();
+        assert!(s.idle_bytes > 0, "warmed scratch must report bytes");
+        assert!(s.bytes_hwm >= s.idle_bytes);
+        // A hit hands the warmed buffers back out.
+        drop(pool.checkout(64));
+        assert_eq!(pool.stats().hits, 1);
+    }
+}

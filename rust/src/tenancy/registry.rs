@@ -1,0 +1,495 @@
+//! The keyed tenant registry: tenant id → expanded per-tenant state, with
+//! LRU demotion to seed-compressed cold blobs under a memory budget.
+//!
+//! A tenant id is the FNV-1a 64 fingerprint of the tenant's canonical
+//! seed-compressed `EvalKeySet` wire blob (which itself binds the params
+//! fingerprint), so both ends of the wire derive the same id from the
+//! same bytes without coordination.
+//!
+//! The registry is generic over the expanded state `T` (the server stores
+//! a full engine — evaluator + coordinator —, tests and benches store a
+//! bare `EvalKeySet`), so eviction and exactly-once re-expansion are
+//! testable without sockets.
+//!
+//! **Exactly-once expansion.** A cold slot transitions Cold → Expanding →
+//! Resident under one mutex; the expensive decode runs *outside* the lock
+//! while concurrent requesters for the same tenant wait on a condvar.
+//! However many threads hammer one cold tenant, the expander closure runs
+//! once and every caller receives a clone of the same `Arc`.
+//!
+//! **Eviction is deferred-safe.** Demoting a tenant only drops the
+//! registry's `Arc`; requests already executing against that tenant hold
+//! their own clone and finish normally — the expanded memory is actually
+//! released when the last in-flight reference drops.
+
+use std::collections::HashMap;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::Instant;
+
+use super::admission::{plan_admission, AdmissionPlan, SlotView};
+pub use super::admission::RegistryConfig;
+
+/// Typed failure of a registry lookup.
+#[derive(Debug)]
+pub enum RegistryError<E> {
+    /// No tenant with this id was ever registered.
+    UnknownTenant(u64),
+    /// Expanding this tenant cannot fit in the memory budget right now.
+    Overloaded { retry_after_ms: u64 },
+    /// The expander itself failed (corrupt blob, wrong params, ...).
+    Expand(E),
+}
+
+impl<E: std::fmt::Display> std::fmt::Display for RegistryError<E> {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            RegistryError::UnknownTenant(id) => write!(f, "unknown tenant {id:#018x}"),
+            RegistryError::Overloaded { retry_after_ms } => {
+                write!(f, "registry overloaded, retry after {retry_after_ms} ms")
+            }
+            RegistryError::Expand(e) => write!(f, "tenant re-expansion failed: {e}"),
+        }
+    }
+}
+
+/// Counter snapshot + gauges, the registry's contribution to the server
+/// metrics surface.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct RegistryStats {
+    /// Tenants known (resident + cold).
+    pub tenants: u32,
+    /// Tenants currently expanded.
+    pub resident: u32,
+    /// Tenants currently demoted to their compressed blob.
+    pub cold: u32,
+    /// Bytes of expanded key material currently resident.
+    pub resident_bytes: u64,
+    /// Lookups served from an already-expanded tenant.
+    pub hits: u64,
+    /// Lookups that found the tenant cold (each triggers one expansion).
+    pub misses: u64,
+    /// Demotions to cold (budget pressure or explicit).
+    pub evictions: u64,
+    /// Completed re-expansions.
+    pub expansions: u64,
+    /// Cumulative wall time spent re-expanding, microseconds.
+    pub expansion_us: u64,
+    /// Requests answered `Overloaded` instead of expanded.
+    pub overloaded: u64,
+}
+
+enum SlotState<T> {
+    Resident(Arc<T>),
+    Cold,
+    /// One thread is expanding; everyone else waits on the condvar.
+    Expanding,
+}
+
+struct Slot<T> {
+    /// The seed-compressed wire blob — always kept; it IS the cold form.
+    blob: Arc<Vec<u8>>,
+    state: SlotState<T>,
+    /// Expanded size, recorded at registration / first expansion.
+    bytes: u64,
+    /// LRU clock value of the last touch.
+    last_used: u64,
+}
+
+struct Inner<T> {
+    slots: HashMap<u64, Slot<T>>,
+    /// Monotone LRU clock.
+    tick: u64,
+    /// Most recently registered tenant: the target of tenant-id 0
+    /// requests (wire ≤ v4 compatibility — matches the old semantics
+    /// where the last PushKeys owned the server).
+    last_registered: Option<u64>,
+}
+
+pub struct TenantRegistry<T> {
+    cfg: RegistryConfig,
+    inner: Mutex<Inner<T>>,
+    cv: Condvar,
+    hits: AtomicU64,
+    misses: AtomicU64,
+    evictions: AtomicU64,
+    expansions: AtomicU64,
+    expansion_us: AtomicU64,
+    overloaded: AtomicU64,
+}
+
+impl<T> TenantRegistry<T> {
+    pub fn new(cfg: RegistryConfig) -> Self {
+        Self {
+            cfg,
+            inner: Mutex::new(Inner {
+                slots: HashMap::new(),
+                tick: 0,
+                last_registered: None,
+            }),
+            cv: Condvar::new(),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+            evictions: AtomicU64::new(0),
+            expansions: AtomicU64::new(0),
+            expansion_us: AtomicU64::new(0),
+            overloaded: AtomicU64::new(0),
+        }
+    }
+
+    pub fn config(&self) -> &RegistryConfig {
+        &self.cfg
+    }
+
+    /// Register (or re-register) a tenant with its compressed blob and
+    /// already-expanded state. Applies the budget: LRU tenants may be
+    /// demoted to make room, and if the newcomer cannot fit at all it is
+    /// stored cold (blob only). Returns every `Arc` this call demoted —
+    /// including possibly `expanded` itself — so the caller can fold
+    /// final metrics out of retiring state before it drops.
+    pub fn register(
+        &self,
+        id: u64,
+        blob: Vec<u8>,
+        expanded: Arc<T>,
+        bytes: u64,
+    ) -> Vec<Arc<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        inner.tick += 1;
+        let tick = inner.tick;
+        let mut retired = Vec::new();
+
+        // Re-registration replaces the slot outright (key rotation).
+        if let Some(old) = inner.slots.remove(&id) {
+            if let SlotState::Resident(t) = old.state {
+                retired.push(t);
+            }
+        }
+
+        let views = slot_views(&inner.slots);
+        match plan_admission(&self.cfg, &views, id, bytes) {
+            AdmissionPlan::Admit { evict } => {
+                for eid in evict {
+                    if let Some(t) = demote_slot(&mut inner, eid) {
+                        self.evictions.fetch_add(1, Ordering::Relaxed);
+                        retired.push(t);
+                    }
+                }
+                inner.slots.insert(
+                    id,
+                    Slot {
+                        blob: Arc::new(blob),
+                        state: SlotState::Resident(expanded),
+                        bytes,
+                        last_used: tick,
+                    },
+                );
+            }
+            AdmissionPlan::Overloaded { .. } => {
+                // Keys are accepted — the compressed blob is the durable
+                // form — but the expansion is discarded: the tenant will
+                // answer `Overloaded` until the budget allows it.
+                inner.slots.insert(
+                    id,
+                    Slot {
+                        blob: Arc::new(blob),
+                        state: SlotState::Cold,
+                        bytes,
+                        last_used: tick,
+                    },
+                );
+                retired.push(expanded);
+            }
+        }
+        inner.last_registered = Some(id);
+        retired
+    }
+
+    /// Look up a tenant, re-expanding from the compressed blob when cold
+    /// (exactly once across concurrent callers). Returns the expanded
+    /// state plus every `Arc` demoted to make room for it.
+    pub fn get<E>(
+        &self,
+        id: u64,
+        expand: impl FnOnce(&[u8]) -> Result<(Arc<T>, u64), E>,
+    ) -> Result<(Arc<T>, Vec<Arc<T>>), RegistryError<E>> {
+        let mut inner = self.inner.lock().unwrap();
+        loop {
+            inner.tick += 1;
+            let tick = inner.tick;
+            enum Next<T> {
+                Hit(Arc<T>),
+                Wait,
+                Expand,
+            }
+            let next = match inner.slots.get_mut(&id) {
+                None => return Err(RegistryError::UnknownTenant(id)),
+                Some(slot) => {
+                    slot.last_used = tick;
+                    match &slot.state {
+                        SlotState::Resident(t) => Next::Hit(t.clone()),
+                        SlotState::Expanding => Next::Wait,
+                        SlotState::Cold => Next::Expand,
+                    }
+                }
+            };
+            match next {
+                Next::Hit(t) => {
+                    self.hits.fetch_add(1, Ordering::Relaxed);
+                    return Ok((t, Vec::new()));
+                }
+                Next::Wait => {
+                    inner = self.cv.wait(inner).unwrap();
+                    continue;
+                }
+                Next::Expand => {
+                    let views = slot_views(&inner.slots);
+                    let want_bytes = inner.slots[&id].bytes;
+                    let evict = match plan_admission(&self.cfg, &views, id, want_bytes) {
+                        AdmissionPlan::Admit { evict } => evict,
+                        AdmissionPlan::Overloaded { retry_after_ms } => {
+                            self.overloaded.fetch_add(1, Ordering::Relaxed);
+                            return Err(RegistryError::Overloaded { retry_after_ms });
+                        }
+                    };
+                    let mut retired = Vec::new();
+                    for eid in evict {
+                        if let Some(t) = demote_slot(&mut inner, eid) {
+                            self.evictions.fetch_add(1, Ordering::Relaxed);
+                            retired.push(t);
+                        }
+                    }
+                    let slot = inner.slots.get_mut(&id).unwrap();
+                    slot.state = SlotState::Expanding;
+                    let blob = slot.blob.clone();
+                    drop(inner);
+
+                    self.misses.fetch_add(1, Ordering::Relaxed);
+                    let t0 = Instant::now();
+                    let res = expand(&blob);
+                    let us = t0.elapsed().as_micros() as u64;
+
+                    let mut inner2 = self.inner.lock().unwrap();
+                    let slot = inner2.slots.get_mut(&id).expect("slot vanished mid-expansion");
+                    match res {
+                        Ok((t, bytes)) => {
+                            slot.state = SlotState::Resident(t.clone());
+                            slot.bytes = bytes;
+                            self.expansions.fetch_add(1, Ordering::Relaxed);
+                            self.expansion_us.fetch_add(us, Ordering::Relaxed);
+                            self.cv.notify_all();
+                            return Ok((t, retired));
+                        }
+                        Err(e) => {
+                            slot.state = SlotState::Cold;
+                            self.cv.notify_all();
+                            return Err(RegistryError::Expand(e));
+                        }
+                    }
+                }
+            }
+        }
+    }
+
+    /// Force-demote a tenant to its cold blob (tests, benches, admin).
+    /// Returns the dropped resident `Arc`, if it was resident.
+    pub fn demote(&self, id: u64) -> Option<Arc<T>> {
+        let mut inner = self.inner.lock().unwrap();
+        let t = demote_slot(&mut inner, id);
+        if t.is_some() {
+            self.evictions.fetch_add(1, Ordering::Relaxed);
+        }
+        t
+    }
+
+    /// Resolve a wire tenant id: 0 (the ≤ v4 single-tenant form) maps to
+    /// the most recently registered tenant.
+    pub fn resolve(&self, requested: u64) -> Option<u64> {
+        if requested != 0 {
+            return Some(requested);
+        }
+        self.inner.lock().unwrap().last_registered
+    }
+
+    /// The compressed blob of one tenant (replication, re-push).
+    pub fn blob(&self, id: u64) -> Option<Arc<Vec<u8>>> {
+        self.inner.lock().unwrap().slots.get(&id).map(|s| s.blob.clone())
+    }
+
+    /// Every currently resident tenant (metrics aggregation).
+    pub fn resident(&self) -> Vec<(u64, Arc<T>)> {
+        let inner = self.inner.lock().unwrap();
+        inner
+            .slots
+            .iter()
+            .filter_map(|(&id, s)| match &s.state {
+                SlotState::Resident(t) => Some((id, t.clone())),
+                _ => None,
+            })
+            .collect()
+    }
+
+    /// Number of tenants known (resident + cold).
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().slots.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn stats(&self) -> RegistryStats {
+        let inner = self.inner.lock().unwrap();
+        let mut resident = 0u32;
+        let mut resident_bytes = 0u64;
+        for s in inner.slots.values() {
+            if matches!(s.state, SlotState::Resident(_)) {
+                resident += 1;
+                resident_bytes = resident_bytes.saturating_add(s.bytes);
+            }
+        }
+        let tenants = inner.slots.len() as u32;
+        RegistryStats {
+            tenants,
+            resident,
+            cold: tenants - resident,
+            resident_bytes,
+            hits: self.hits.load(Ordering::Relaxed),
+            misses: self.misses.load(Ordering::Relaxed),
+            evictions: self.evictions.load(Ordering::Relaxed),
+            expansions: self.expansions.load(Ordering::Relaxed),
+            expansion_us: self.expansion_us.load(Ordering::Relaxed),
+            overloaded: self.overloaded.load(Ordering::Relaxed),
+        }
+    }
+}
+
+fn slot_views<T>(slots: &HashMap<u64, Slot<T>>) -> Vec<SlotView> {
+    slots
+        .iter()
+        .map(|(&id, s)| SlotView {
+            id,
+            bytes: s.bytes,
+            last_used: s.last_used,
+            resident: matches!(s.state, SlotState::Resident(_)),
+        })
+        .collect()
+}
+
+/// Demote one slot to cold if resident, returning the dropped `Arc`.
+/// A slot mid-expansion is never demoted (the expander owns it).
+fn demote_slot<T>(inner: &mut Inner<T>, id: u64) -> Option<Arc<T>> {
+    let slot = inner.slots.get_mut(&id)?;
+    match std::mem::replace(&mut slot.state, SlotState::Cold) {
+        SlotState::Resident(t) => Some(t),
+        SlotState::Expanding => {
+            slot.state = SlotState::Expanding;
+            None
+        }
+        SlotState::Cold => None,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn reg(max_tenants: usize) -> TenantRegistry<u64> {
+        TenantRegistry::new(RegistryConfig {
+            max_resident_bytes: 0,
+            max_resident_tenants: max_tenants,
+        })
+    }
+
+    #[test]
+    fn register_then_hit() {
+        let r = reg(0);
+        let retired = r.register(7, vec![1, 2, 3], Arc::new(42u64), 100);
+        assert!(retired.is_empty());
+        let (v, evicted) = r.get::<()>(7, |_| unreachable!("resident: no expansion")).unwrap();
+        assert_eq!(*v, 42);
+        assert!(evicted.is_empty());
+        let s = r.stats();
+        assert_eq!((s.hits, s.misses, s.tenants, s.resident), (1, 0, 1, 1));
+        assert_eq!(s.resident_bytes, 100);
+    }
+
+    #[test]
+    fn unknown_tenant_is_typed() {
+        let r = reg(0);
+        match r.get::<()>(9, |_| unreachable!()) {
+            Err(RegistryError::UnknownTenant(9)) => {}
+            other => panic!("expected UnknownTenant, got {other:?}"),
+        }
+    }
+
+    #[test]
+    fn lru_eviction_and_reexpansion() {
+        let r = reg(2);
+        r.register(1, vec![10], Arc::new(100u64), 8);
+        r.register(2, vec![20], Arc::new(200u64), 8);
+        // Touch 1 so 2 becomes the LRU resident.
+        r.get::<()>(1, |_| unreachable!()).unwrap();
+        // Registering 3 must evict tenant 2 (LRU).
+        let retired = r.register(3, vec![30], Arc::new(300u64), 8);
+        assert_eq!(retired.len(), 1);
+        assert_eq!(*retired[0], 200);
+        let s = r.stats();
+        assert_eq!((s.resident, s.cold, s.evictions), (2, 1, 1));
+
+        // Tenant 2 re-expands from its blob — evicting the new LRU (1).
+        let (v, evicted) = r
+            .get::<()>(2, |blob| {
+                assert_eq!(blob, [20]);
+                Ok((Arc::new(201u64), 8))
+            })
+            .unwrap();
+        assert_eq!(*v, 201);
+        assert_eq!(evicted.len(), 1);
+        assert_eq!(*evicted[0], 100);
+        let s = r.stats();
+        assert_eq!((s.misses, s.expansions, s.evictions), (1, 1, 2));
+    }
+
+    #[test]
+    fn byte_budget_overloaded_is_typed() {
+        let r = TenantRegistry::new(RegistryConfig {
+            max_resident_bytes: 100,
+            max_resident_tenants: 0,
+        });
+        let retired = r.register(1, vec![1], Arc::new(1u64), 150);
+        // Too big to ever load: registered cold, expansion discarded.
+        assert_eq!(retired.len(), 1);
+        let s = r.stats();
+        assert_eq!((s.resident, s.cold), (0, 1));
+        match r.get::<()>(1, |_| unreachable!("over budget: expander must not run")) {
+            Err(RegistryError::Overloaded { retry_after_ms }) => assert!(retry_after_ms > 0),
+            other => panic!("expected Overloaded, got {other:?}"),
+        }
+        assert_eq!(r.stats().overloaded, 1);
+    }
+
+    #[test]
+    fn expander_failure_resets_to_cold() {
+        let r = reg(1);
+        r.register(1, vec![1], Arc::new(1u64), 8);
+        r.demote(1);
+        match r.get(1, |_| Err::<(Arc<u64>, u64), &str>("corrupt")) {
+            Err(RegistryError::Expand("corrupt")) => {}
+            other => panic!("expected Expand, got {other:?}"),
+        }
+        // A later expansion still works (state went back to Cold).
+        let (v, _) = r.get::<()>(1, |_| Ok((Arc::new(5u64), 8))).unwrap();
+        assert_eq!(*v, 5);
+    }
+
+    #[test]
+    fn tenant_zero_resolves_to_last_registered() {
+        let r = reg(0);
+        assert_eq!(r.resolve(0), None);
+        r.register(11, vec![], Arc::new(1u64), 1);
+        r.register(22, vec![], Arc::new(2u64), 1);
+        assert_eq!(r.resolve(0), Some(22));
+        assert_eq!(r.resolve(11), Some(11));
+    }
+}

@@ -20,6 +20,7 @@ use crate::cluster::{
     ClusterOptions, GatewayOptions,
 };
 use crate::coordinator::ServeConfig;
+use crate::tenancy::RegistryConfig;
 use crate::util::cli::Args;
 use crate::util::rng::Pcg64;
 
@@ -46,8 +47,20 @@ fn serve_config(args: &Args) -> ServeConfig {
     }
 }
 
+fn registry_config(args: &Args) -> RegistryConfig {
+    RegistryConfig {
+        max_resident_bytes: args.opt_u64("key-budget-mb", 0) * 1024 * 1024,
+        max_resident_tenants: args.opt_usize("max-resident-tenants", 0),
+    }
+}
+
 /// `serve --listen <addr> [--params toy|medium] [--fhec-workers N]
-/// [--cuda-workers N] [--max-batch N] [--max-queue N] [--linger-ms N]`
+/// [--cuda-workers N] [--max-batch N] [--max-queue N] [--linger-ms N]
+/// [--key-budget-mb N] [--max-resident-tenants N]`
+///
+/// The two registry knobs bound expanded tenant key sets (0 = no
+/// limit): past the budget, cold tenants are demoted to their
+/// seed-compressed blobs and re-expanded on demand.
 pub fn run_serve(args: &Args) -> i32 {
     let listen = args.opt("listen").unwrap_or(DEFAULT_ADDR);
     let pname = args.opt("params").unwrap_or("toy");
@@ -72,6 +85,7 @@ pub fn run_serve(args: &Args) -> i32 {
     let opts = ServeOptions {
         params,
         serve: serve_config(args),
+        registry: registry_config(args),
         verbose: args.has_flag("verbose"),
     };
     match serve(listener, opts) {
@@ -86,7 +100,9 @@ pub fn run_serve(args: &Args) -> i32 {
     }
 }
 
-/// `client [quickstart|metrics|shutdown] --connect <addr> [--params ...]`
+/// `client [quickstart|metrics|shutdown] --connect <addr> [--params ...]
+/// [--seed N]` — `--seed` varies the quickstart's key material, so each
+/// distinct seed registers (and exercises) a distinct server tenant.
 pub fn run_client(args: &Args) -> i32 {
     let addr = args.opt("connect").unwrap_or(DEFAULT_ADDR).to_string();
     let pname = args.opt("params").unwrap_or("toy");
@@ -100,8 +116,9 @@ pub fn run_client(args: &Args) -> i32 {
         .map(String::as_str)
         .unwrap_or("quickstart");
     let timeout = Duration::from_secs(args.opt_u64("connect-timeout", 15));
+    let seed = args.opt_u64("seed", 42);
     match mode {
-        "quickstart" => match quickstart(&addr, params, timeout) {
+        "quickstart" => match quickstart(&addr, params, timeout, seed) {
             Ok(pass) => {
                 if pass {
                     0
@@ -307,6 +324,17 @@ pub fn run_cluster(args: &Args) -> i32 {
                             t.mean_service_us,
                             crate::ckks::mlt_backend::backend_code_name(t.mlt_backend)
                         );
+                        println!(
+                            "cluster tenants: resident {} cold {}, registry hits {} \
+                             misses {}, key evictions: {}, expansions {}, overloaded {}",
+                            t.tenants_resident,
+                            t.tenants_cold,
+                            t.registry_hits,
+                            t.registry_misses,
+                            t.key_evictions,
+                            t.key_expansions,
+                            t.overloaded
+                        );
                         0
                     }
                     Err(e) => {
@@ -477,6 +505,18 @@ fn fetch_metrics(addr: &str, params: CkksParams, timeout: Duration) -> Result<()
         "  mlt backend    {}",
         crate::ckks::mlt_backend::backend_code_name(m.mlt_backend)
     );
+    println!("  tenants        resident {}  cold {}", m.tenants_resident, m.tenants_cold);
+    println!(
+        "  registry       hits {}  misses {}  expansions {} ({} us)",
+        m.registry_hits, m.registry_misses, m.key_expansions, m.expansion_us
+    );
+    println!("  key evictions: {}", m.key_evictions);
+    println!("  resident keys  {} B", m.resident_key_bytes);
+    println!("  overloaded     {}", m.overloaded);
+    println!(
+        "  pool           hits {}  misses {}  hwm {} B",
+        m.pool_hits, m.pool_misses, m.pool_bytes_hwm
+    );
     Ok(())
 }
 
@@ -492,10 +532,12 @@ pub fn quickstart(
     addr: &str,
     params: CkksParams,
     timeout: Duration,
+    seed: u64,
 ) -> Result<bool, WireError> {
-    // Client side: the only place secret material exists.
+    // Client side: the only place secret material exists. Each seed
+    // derives a distinct key set, hence a distinct server tenant.
     let ctx = CkksContext::new(params.clone());
-    let mut rng = Pcg64::new(42);
+    let mut rng = Pcg64::new(seed);
     let keygen = KeyGen::new(&ctx, &mut rng);
     let spec = EvalKeySpec::relin_only().with_rotations(&[1, 3]);
     let keys = Arc::new(keygen.eval_key_set(&ctx, &spec, &mut rng));
@@ -513,7 +555,10 @@ pub fn quickstart(
 
     let remote = RemoteEvaluator::connect_retry(addr, params.clone(), timeout)?;
     let pushed = remote.push_keys(&keys)?;
-    println!("pushed {pushed} public evaluation keys to {addr}");
+    println!(
+        "pushed {pushed} public evaluation keys to {addr} (tenant {:#018x})",
+        remote.tenant()
+    );
 
     let slots = ctx.params.slots();
     let xs: Vec<Complex> = (0..slots)

@@ -10,11 +10,20 @@
 //! server execution produce bit-identical ciphertexts.
 //!
 //! Backpressure: a server `Busy` frame is retried on the capped
-//! exponential schedule [`super::busy_backoff_delay`] (attempt 0 sleeps
-//! `busy_backoff`, doubling up to `busy_backoff_cap`, at most
-//! `busy_retries` times) before surfacing as [`WireError::Busy`] — the
-//! same schedule the cluster's pipelined `ClusterClient` uses, so a
-//! saturated shard is never hammered at a constant rate.
+//! exponential schedule with deterministic per-client jitter
+//! ([`super::busy_backoff_delay_jittered`], seeded from this client's
+//! ephemeral local address — attempt 0 sleeps `busy_backoff`, the
+//! envelope doubles up to `busy_backoff_cap`, at most `busy_retries`
+//! times) before surfacing as [`WireError::Busy`] — the same schedule
+//! the cluster's pipelined `ClusterClient` uses, with distinct seeds,
+//! so synchronized clients desynchronize instead of hammering a
+//! saturated shard in lockstep. A v5 `OVERLOADED` error (tenant key
+//! budget) retries the same way, honoring the server's suggested delay.
+//!
+//! Multi-tenancy: `push_keys` registers this client's key set as a
+//! tenant (id = blob fingerprint) and pins every subsequent request to
+//! it; `set_tenant` switches explicitly (0 = the server's most recently
+//! pushed tenant, the pre-v5 behavior).
 
 use std::io::{BufReader, Write};
 use std::net::TcpStream;
@@ -24,7 +33,10 @@ use std::time::{Duration, Instant};
 
 use super::codec::encode_eval_key_set;
 use super::protocol::{encode_op_request, encode_program_request, Message, WireOp};
-use super::{busy_backoff_delay, fnv1a64, params_fingerprint, Frame, WireError, WIRE_VERSION};
+use super::protocol::error_code;
+use super::{
+    busy_backoff_delay_jittered, fnv1a64, params_fingerprint, Frame, WireError, WIRE_VERSION,
+};
 use crate::ckks::linear::SlotMatrix;
 use crate::ckks::params::{CkksContext, CkksParams};
 use crate::ckks::program::FheProgram;
@@ -104,14 +116,25 @@ pub struct RemoteEvaluator {
     io: Mutex<Channel>,
     next_id: AtomicU64,
     fingerprint: u64,
+    /// The tenant id every request is issued under (wire v5). Set by
+    /// `push_keys` to the pushed blob's fingerprint; 0 = the server's
+    /// most recently pushed tenant (pre-v5 single-tenant behavior).
+    tenant: AtomicU64,
+    /// Jitter seed for the backoff schedule — derived from this
+    /// connection's ephemeral local address, so concurrent clients get
+    /// distinct (but individually deterministic) retry schedules.
+    backoff_seed: u64,
     /// Key-less evaluator over the same params: encoding and plaintext
     /// ops stay client-side (`self.local().mul_const(..)` etc.).
     local: Evaluator,
-    /// How many times a `Busy` response is retried before surfacing.
+    /// How many times a `Busy`/`Overloaded` response is retried before
+    /// surfacing.
     pub busy_retries: u32,
-    /// First-retry sleep; attempt k sleeps `busy_backoff * 2^k`...
+    /// First-retry sleep; attempt k draws from `[busy_backoff,
+    /// busy_backoff * 2^k]`...
     pub busy_backoff: Duration,
-    /// ...saturating at this cap (see [`super::busy_backoff_delay`]).
+    /// ...with the envelope saturating at this cap (see
+    /// [`super::busy_backoff_delay_jittered`]).
     pub busy_backoff_cap: Duration,
 }
 
@@ -133,17 +156,42 @@ impl RemoteEvaluator {
     ) -> Result<Self, WireError> {
         let fingerprint = params_fingerprint(&params);
         let stream = connect_handshake(addr, fingerprint, timeout)?;
+        let backoff_seed = stream
+            .local_addr()
+            .map(|a| fnv1a64(a.to_string().as_bytes()))
+            .unwrap_or(fingerprint);
         let reader = BufReader::new(stream.try_clone()?);
         let ch = Channel { reader, writer: stream };
         Ok(Self {
             io: Mutex::new(ch),
             next_id: AtomicU64::new(1),
             fingerprint,
+            tenant: AtomicU64::new(0),
+            backoff_seed,
             local: Evaluator::without_keys(CkksContext::new(params)),
             busy_retries: 50,
             busy_backoff: Duration::from_millis(1),
             busy_backoff_cap: Duration::from_millis(50),
         })
+    }
+
+    /// The tenant id requests are currently issued under (0 until the
+    /// first `push_keys` or an explicit `set_tenant`).
+    pub fn tenant(&self) -> u64 {
+        self.tenant.load(Ordering::Relaxed)
+    }
+
+    /// Issue subsequent requests under this tenant id (a key-blob
+    /// fingerprint from `push_keys` / `KeysAck`; 0 = the server's most
+    /// recently pushed tenant). Lets one connection serve ops for a
+    /// tenant whose keys another client registered.
+    pub fn set_tenant(&self, tenant: u64) {
+        self.tenant.store(tenant, Ordering::Relaxed);
+    }
+
+    /// The deterministic jitter seed of this client's backoff schedule.
+    pub fn backoff_seed(&self) -> u64 {
+        self.backoff_seed
     }
 
     /// The negotiated parameter-set fingerprint.
@@ -164,9 +212,12 @@ impl RemoteEvaluator {
     }
 
     /// Serialize (seed-compressed) and push the public key set; the
-    /// server builds its evaluator + coordinator from it. The v2
-    /// `KeysAck` echoes the blob's FNV-1a fingerprint — verified here
-    /// against the bytes we sent. Returns the server-confirmed key count.
+    /// server registers it as a tenant (id = blob fingerprint) and
+    /// builds its evaluator + coordinator from it. The v2 `KeysAck`
+    /// echoes the blob's FNV-1a fingerprint — verified here against the
+    /// bytes we sent, then pinned as this client's tenant id so later
+    /// requests keep hitting these keys even after other tenants
+    /// register. Returns the server-confirmed key count.
     pub fn push_keys(&self, keys: &EvalKeySet) -> Result<u32, WireError> {
         let blob = encode_eval_key_set(keys, self.fingerprint, true);
         let want_fp = fnv1a64(&blob);
@@ -180,6 +231,7 @@ impl RemoteEvaluator {
                          server installed {fingerprint:#018x}"
                     )));
                 }
+                self.tenant.store(want_fp, Ordering::Relaxed);
                 Ok(keys)
             }
             Message::Error { code, detail, .. } => Err(WireError::Remote { code, detail }),
@@ -289,14 +341,14 @@ impl RemoteEvaluator {
     /// every output comes back in the single `ProgramResponse` — and the
     /// server shares hoisted key-switch decompositions across the
     /// program's rotation fan-outs, which per-op round trips structurally
-    /// cannot. Busy responses retry on the shared backoff schedule.
+    /// cannot. Busy/Overloaded responses retry on the jittered schedule.
     pub fn run_program(
         &self,
         prog: &FheProgram,
         inputs: &[Ciphertext],
     ) -> Result<Vec<Ciphertext>, WireError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let frame = encode_program_request(id, prog, inputs);
+        let frame = encode_program_request(id, prog, inputs, self.tenant.load(Ordering::Relaxed));
         let mut ch = self.io.lock().unwrap();
         let mut attempt = 0u32;
         loop {
@@ -314,11 +366,15 @@ impl RemoteEvaluator {
                     if attempt >= self.busy_retries {
                         return Err(WireError::Busy { depth });
                     }
-                    std::thread::sleep(busy_backoff_delay(
-                        attempt,
-                        self.busy_backoff,
-                        self.busy_backoff_cap,
-                    ));
+                    self.backoff_sleep(attempt, None);
+                    attempt += 1;
+                }
+                Message::Error { code, detail, .. } if code == error_code::OVERLOADED => {
+                    let retry_after_ms = detail.parse::<u64>().unwrap_or(0);
+                    if attempt >= self.busy_retries {
+                        return Err(WireError::Overloaded { retry_after_ms });
+                    }
+                    self.backoff_sleep(attempt, Some(retry_after_ms));
                     attempt += 1;
                 }
                 Message::Error { code, detail, .. } => {
@@ -334,10 +390,22 @@ impl RemoteEvaluator {
         }
     }
 
-    /// One synchronous op round trip, retrying through `Busy` frames on
-    /// the shared capped-exponential schedule. The request is serialized
-    /// exactly once, straight from the borrowed operands (no clone);
-    /// retries resend the same frame bytes.
+    /// Sleep before retry `attempt`: the deterministic-jitter draw from
+    /// this client's schedule, floored at any server-suggested
+    /// retry-after (Overloaded frames carry one).
+    fn backoff_sleep(&self, attempt: u32, retry_after_ms: Option<u64>) {
+        let mut delay =
+            busy_backoff_delay_jittered(self.backoff_seed, attempt, self.busy_backoff, self.busy_backoff_cap);
+        if let Some(ms) = retry_after_ms {
+            delay = delay.max(Duration::from_millis(ms));
+        }
+        std::thread::sleep(delay);
+    }
+
+    /// One synchronous op round trip, retrying through `Busy` and
+    /// `Overloaded` frames on the jittered capped-exponential schedule.
+    /// The request is serialized exactly once, straight from the
+    /// borrowed operands (no clone); retries resend the same frame bytes.
     fn call(
         &self,
         op: WireOp,
@@ -345,7 +413,7 @@ impl RemoteEvaluator {
         ct2: Option<&Ciphertext>,
     ) -> Result<Ciphertext, WireError> {
         let id = self.next_id.fetch_add(1, Ordering::Relaxed);
-        let frame = encode_op_request(id, &op, ct, ct2);
+        let frame = encode_op_request(id, &op, ct, ct2, self.tenant.load(Ordering::Relaxed));
         let mut ch = self.io.lock().unwrap();
         let mut attempt = 0u32;
         loop {
@@ -363,11 +431,15 @@ impl RemoteEvaluator {
                     if attempt >= self.busy_retries {
                         return Err(WireError::Busy { depth });
                     }
-                    std::thread::sleep(busy_backoff_delay(
-                        attempt,
-                        self.busy_backoff,
-                        self.busy_backoff_cap,
-                    ));
+                    self.backoff_sleep(attempt, None);
+                    attempt += 1;
+                }
+                Message::Error { code, detail, .. } if code == error_code::OVERLOADED => {
+                    let retry_after_ms = detail.parse::<u64>().unwrap_or(0);
+                    if attempt >= self.busy_retries {
+                        return Err(WireError::Overloaded { retry_after_ms });
+                    }
+                    self.backoff_sleep(attempt, Some(retry_after_ms));
                     attempt += 1;
                 }
                 Message::Error { code, detail, .. } => {

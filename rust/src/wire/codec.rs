@@ -963,6 +963,23 @@ impl WireWrite for MetricsSnapshot {
         put_u64(out, self.cuda_served);
         put_u64(out, self.programs);
         put_u8(out, self.mlt_backend);
+        // v5 registry/pool block. Written unconditionally (unlike the
+        // request-side tenant id, a trailing-optional trick cannot work
+        // here: `ShardMetricsResp` concatenates snapshots, so "bytes
+        // remain" would swallow the next shard's entry). The handshake
+        // pins both ends to one version, so both sides agree on layout.
+        put_u32(out, self.tenants_resident);
+        put_u32(out, self.tenants_cold);
+        put_u64(out, self.registry_hits);
+        put_u64(out, self.registry_misses);
+        put_u64(out, self.key_evictions);
+        put_u64(out, self.key_expansions);
+        put_u64(out, self.expansion_us);
+        put_u64(out, self.resident_key_bytes);
+        put_u64(out, self.pool_hits);
+        put_u64(out, self.pool_misses);
+        put_u64(out, self.pool_bytes_hwm);
+        put_u64(out, self.overloaded);
     }
 }
 
@@ -981,6 +998,18 @@ impl WireRead for MetricsSnapshot {
             cuda_served: r.u64()?,
             programs: r.u64()?,
             mlt_backend: r.u8()?,
+            tenants_resident: r.u32()?,
+            tenants_cold: r.u32()?,
+            registry_hits: r.u64()?,
+            registry_misses: r.u64()?,
+            key_evictions: r.u64()?,
+            key_expansions: r.u64()?,
+            expansion_us: r.u64()?,
+            resident_key_bytes: r.u64()?,
+            pool_hits: r.u64()?,
+            pool_misses: r.u64()?,
+            pool_bytes_hwm: r.u64()?,
+            overloaded: r.u64()?,
         })
     }
 }

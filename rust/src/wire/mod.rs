@@ -75,15 +75,26 @@ pub const WIRE_MAGIC: [u8; 4] = *b"FHEC";
 /// *only* incompatibility: frame decoding is strict (`expect_done`), so
 /// a v3 binary could decode everything except that one RPC, and all
 /// single-op and program traffic stays byte-compatible.
-pub const WIRE_VERSION: u16 = 4;
+///
+/// v5 (multi-tenancy): `OpRequest`/`ProgramRequest` may carry a trailing
+/// `u64` tenant id (the fingerprint of the tenant's key blob; 0 or
+/// absent = "the most recently pushed tenant", the old single-tenant
+/// replace semantics, so every v2–v4 request body decodes unchanged).
+/// `PushKeys` now *registers* a tenant instead of replacing the server's
+/// only key set, a new `Overloaded` error code signals that admitting a
+/// cold tenant would exceed the server's key-memory budget (retryable,
+/// with a server-suggested delay), and `MetricsSnapshot` grows the
+/// registry/pool counter block.
+pub const WIRE_VERSION: u16 = 5;
 
-/// Peer versions this build serves. Each bump since v2 only appended a
-/// field to the `MetricsResp` payload (`programs` in v3, `mlt_backend`
-/// in v4), so v2/v3-era binaries decode the whole serving surface —
-/// single-op and (for v3) program traffic — except that one RPC. That
-/// is what accepting their `Hello`s buys.
+/// Peer versions this build serves. Each bump since v2 only appended
+/// fields — to the `MetricsResp` payload (`programs` in v3,
+/// `mlt_backend` in v4, the registry/pool block in v5) and, in v5, an
+/// *optional* trailing tenant id on request bodies — so v2/v4-era
+/// binaries decode the whole serving surface except the metrics RPC.
+/// That is what accepting their `Hello`s buys.
 pub fn version_accepted(v: u16) -> bool {
-    v == 2 || v == 3 || v == WIRE_VERSION
+    v == 2 || v == 3 || v == 4 || v == WIRE_VERSION
 }
 
 /// Capped exponential backoff for `Busy` retries, shared by
@@ -98,6 +109,37 @@ pub fn busy_backoff_delay(
 ) -> std::time::Duration {
     let mult = 1u32 << attempt.min(20);
     base.saturating_mul(mult).min(cap)
+}
+
+/// [`busy_backoff_delay`] with deterministic *full jitter*: the delay
+/// for attempt `k` is drawn uniformly (by a seeded hash, no RNG state)
+/// from `[base, expo(k)]` where `expo(k)` is the capped-exponential
+/// envelope above. Synchronized clients that all saw `Busy` at the same
+/// instant therefore spread their retries across the window instead of
+/// stampeding back in lockstep — while any single client's schedule is
+/// a pure function of `(seed, attempt)`, so tests and reconnect replays
+/// stay reproducible. The jittered delay never exceeds
+/// `busy_backoff_delay(attempt, base, cap)` and never undershoots
+/// `base` (capped at `cap` when `base > cap`).
+pub fn busy_backoff_delay_jittered(
+    seed: u64,
+    attempt: u32,
+    base: std::time::Duration,
+    cap: std::time::Duration,
+) -> std::time::Duration {
+    let expo = busy_backoff_delay(attempt, base, cap);
+    let floor = base.min(cap);
+    let span = expo.saturating_sub(floor).as_nanos() as u64;
+    if span == 0 {
+        return expo;
+    }
+    let mut buf = [0u8; 12];
+    buf[..8].copy_from_slice(&seed.to_le_bytes());
+    buf[8..].copy_from_slice(&attempt.to_le_bytes());
+    let h = fnv1a64(&buf);
+    // span + 1 cannot overflow: span is a Duration difference in nanos,
+    // far below u64::MAX for any sane cap.
+    floor + std::time::Duration::from_nanos(h % (span + 1))
 }
 
 /// Everything that can go wrong on the wire.
@@ -117,6 +159,12 @@ pub enum WireError {
     Protocol(String),
     /// The server's queue is full; retry later (backpressure).
     Busy { depth: u32 },
+    /// Admitting the requested tenant's keys would exceed the server's
+    /// key-memory budget right now; retry after the suggested delay.
+    /// Unlike `Busy` (queue pressure, drains in microseconds) this is
+    /// memory pressure: it clears when some resident tenant goes idle
+    /// and is evicted.
+    Overloaded { retry_after_ms: u64 },
     /// The server executed the op but the public key set lacks a key.
     MissingKey(MissingKey),
     /// A program request failed admission or execution server-side
@@ -140,6 +188,10 @@ impl std::fmt::Display for WireError {
             ),
             WireError::Protocol(why) => write!(f, "protocol violation: {why}"),
             WireError::Busy { depth } => write!(f, "server busy ({depth} in flight)"),
+            WireError::Overloaded { retry_after_ms } => write!(
+                f,
+                "server key budget exhausted; retry after {retry_after_ms}ms"
+            ),
             WireError::MissingKey(mk) => write!(f, "{mk}"),
             WireError::Program(e) => write!(f, "program rejected: {e}"),
             WireError::Remote { code, detail } => {
@@ -230,6 +282,38 @@ mod tests {
         // Saturates at the cap, including absurd attempt counts.
         assert_eq!(busy_backoff_delay(6, base, cap), cap);
         assert_eq!(busy_backoff_delay(u32::MAX, base, cap), cap);
+    }
+
+    #[test]
+    fn jittered_backoff_stays_in_envelope_and_differs_by_seed() {
+        use std::time::Duration;
+        let base = Duration::from_millis(1);
+        let cap = Duration::from_millis(50);
+        let schedule = |seed: u64| -> Vec<Duration> {
+            (0..10)
+                .map(|k| busy_backoff_delay_jittered(seed, k, base, cap))
+                .collect()
+        };
+        let a = schedule(0x1111_2222_3333_4444);
+        let b = schedule(0x5555_6666_7777_8888);
+        // Deterministic per seed...
+        assert_eq!(a, schedule(0x1111_2222_3333_4444));
+        // ...but two clients with distinct seeds desynchronize.
+        assert_ne!(a, b);
+        // Every delay stays inside the existing envelope: at least the
+        // base, at most the capped-exponential for that attempt.
+        for sched in [&a, &b] {
+            for (k, &d) in sched.iter().enumerate() {
+                assert!(d >= base, "attempt {k}: {d:?} under base");
+                assert!(
+                    d <= busy_backoff_delay(k as u32, base, cap),
+                    "attempt {k}: {d:?} over envelope"
+                );
+                assert!(d <= cap, "attempt {k}: {d:?} over cap");
+            }
+        }
+        // Attempt 0 has a zero-width window: jitter degenerates to base.
+        assert_eq!(busy_backoff_delay_jittered(7, 0, base, cap), base);
     }
 
     #[test]

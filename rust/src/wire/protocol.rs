@@ -8,14 +8,14 @@
 //! | 0x02 | `HelloAck`    | s -> c    | version u16, params fingerprint u64 |
 //! | 0x03 | `PushKeys`    | c -> s    | `EvalKeySet` blob (seed-compressed) |
 //! | 0x04 | `KeysAck`     | s -> c    | key count u32, blob fingerprint u64 |
-//! | 0x05 | `OpRequest`   | c -> s    | id u64, op, ct, optional ct2 |
+//! | 0x05 | `OpRequest`   | c -> s    | id u64, op, ct, optional ct2, optional tenant u64 |
 //! | 0x06 | `OpResponse`  | s -> c    | id u64, ok/err, ct or MissingKey, timings |
 //! | 0x07 | `Busy`        | s -> c    | id u64, lane depth u32 (backpressure) |
 //! | 0x08 | `MetricsReq`  | c -> s    | (empty) |
 //! | 0x09 | `MetricsResp` | s -> c    | `MetricsSnapshot` |
 //! | 0x0A | `Error`       | s -> c    | id u64 (0 = connection), code u16, detail |
 //! | 0x0B | `Shutdown`    | c -> s    | (empty) |
-//! | 0x0C | `ProgramRequest`  | c -> s | id u64, `FheProgram`, input ciphertexts |
+//! | 0x0C | `ProgramRequest`  | c -> s | id u64, `FheProgram`, input ciphertexts, optional tenant u64 |
 //! | 0x0D | `ProgramResponse` | s -> c | id u64, ok/err, outputs or `ProgramError`, timings |
 //! | 0x0E | `ShardMetricsReq`  | c -> s | (empty) |
 //! | 0x0F | `ShardMetricsResp` | s -> c | per-shard (name, `MetricsSnapshot`) list |
@@ -41,6 +41,14 @@
 //! answer them identically). `ShardMetricsReq` returns the per-shard
 //! metrics breakdown a plain `MetricsReq` sums away behind a gateway.
 //! v2 single-op messages remain accepted unchanged.
+//!
+//! **Tenants (protocol v5).** `OpRequest` and `ProgramRequest` may end
+//! with a trailing `u64` tenant id — the FNV-1a fingerprint of the
+//! tenant's pushed key blob (the value `KeysAck` echoed). The field is
+//! written only when nonzero and read only when bytes remain after the
+//! v4 layout, so every v2–v4 request body decodes unchanged; tenant 0
+//! (or absent) means "the most recently pushed tenant", which is
+//! exactly the old single-tenant replace semantics.
 
 use super::codec::{put_bytes, put_f64, put_u16, put_u32, put_u64, put_u8, Reader};
 use super::codec::{WireRead, WireWrite};
@@ -65,6 +73,10 @@ pub mod error_code {
     pub const DECODE: u16 = 4;
     /// The coordinator is shutting down.
     pub const STOPPED: u16 = 5;
+    /// Admitting the requested tenant's keys would exceed the server's
+    /// key-memory budget; the detail field carries the suggested retry
+    /// delay in milliseconds (decimal). Retryable, unlike `NO_KEYS`.
+    pub const OVERLOADED: u16 = 6;
 }
 
 /// Wire-level op selector mirroring `coordinator::OpKind`.
@@ -182,6 +194,9 @@ pub enum Message {
         op: WireOp,
         ct: Ciphertext,
         ct2: Option<Ciphertext>,
+        /// Key-blob fingerprint of the tenant this op runs under; 0 =
+        /// the most recently pushed tenant (single-tenant default).
+        tenant: u64,
     },
     OpResponse {
         id: u64,
@@ -204,6 +219,8 @@ pub enum Message {
         id: u64,
         program: FheProgram,
         inputs: Vec<Ciphertext>,
+        /// Tenant key-blob fingerprint; 0 = most recently pushed tenant.
+        tenant: u64,
     },
     ProgramResponse {
         id: u64,
@@ -228,6 +245,7 @@ pub fn encode_op_request(
     op: &WireOp,
     ct: &Ciphertext,
     ct2: Option<&Ciphertext>,
+    tenant: u64,
 ) -> Frame {
     let mut body = Vec::new();
     put_u64(&mut body, id);
@@ -240,6 +258,11 @@ pub fn encode_op_request(
         }
         None => put_u8(&mut body, 0),
     }
+    // v5: trailing tenant id, only when explicit — a zero tenant keeps
+    // the body byte-identical to the v4 layout.
+    if tenant != 0 {
+        put_u64(&mut body, tenant);
+    }
     Frame::new(TAG_OP_REQUEST, body)
 }
 
@@ -251,6 +274,7 @@ pub fn encode_program_request(
     id: u64,
     program: &FheProgram,
     inputs: &[Ciphertext],
+    tenant: u64,
 ) -> Frame {
     let mut body = Vec::new();
     put_u64(&mut body, id);
@@ -258,6 +282,10 @@ pub fn encode_program_request(
     put_u16(&mut body, inputs.len() as u16);
     for ct in inputs {
         ct.wire_write(&mut body);
+    }
+    // v5: trailing tenant id, omitted when zero (v4-compatible body).
+    if tenant != 0 {
+        put_u64(&mut body, tenant);
     }
     Frame::new(TAG_PROGRAM_REQUEST, body)
 }
@@ -319,8 +347,8 @@ impl Message {
                 put_u32(&mut body, *keys);
                 put_u64(&mut body, *fingerprint);
             }
-            Message::OpRequest { id, op, ct, ct2 } => {
-                return encode_op_request(*id, op, ct, ct2.as_ref());
+            Message::OpRequest { id, op, ct, ct2, tenant } => {
+                return encode_op_request(*id, op, ct, ct2.as_ref(), *tenant);
             }
             Message::OpResponse {
                 id,
@@ -359,8 +387,8 @@ impl Message {
                 put_u16(&mut body, *code);
                 put_bytes(&mut body, detail.as_bytes());
             }
-            Message::ProgramRequest { id, program, inputs } => {
-                return encode_program_request(*id, program, inputs);
+            Message::ProgramRequest { id, program, inputs, tenant } => {
+                return encode_program_request(*id, program, inputs, *tenant);
             }
             Message::ProgramResponse {
                 id,
@@ -422,7 +450,8 @@ impl Message {
                         )))
                     }
                 };
-                Message::OpRequest { id, op, ct, ct2 }
+                let tenant = if r.remaining() > 0 { r.u64()? } else { 0 };
+                Message::OpRequest { id, op, ct, ct2, tenant }
             }
             TAG_OP_RESPONSE => {
                 let id = r.u64()?;
@@ -465,7 +494,8 @@ impl Message {
                 for _ in 0..n {
                     inputs.push(Ciphertext::wire_read(&mut r)?);
                 }
-                Message::ProgramRequest { id, program, inputs }
+                let tenant = if r.remaining() > 0 { r.u64()? } else { 0 };
+                Message::ProgramRequest { id, program, inputs, tenant }
             }
             TAG_PROGRAM_RESPONSE => {
                 let id = r.u64()?;
@@ -540,6 +570,18 @@ mod tests {
             cuda_served: 2,
             programs: 4,
             mlt_backend: 3,
+            tenants_resident: 2,
+            tenants_cold: 1,
+            registry_hits: 40,
+            registry_misses: 3,
+            key_evictions: 2,
+            key_expansions: 3,
+            expansion_us: 1500,
+            resident_key_bytes: 1 << 20,
+            pool_hits: 30,
+            pool_misses: 4,
+            pool_bytes_hwm: 1 << 16,
+            overloaded: 1,
         }
     }
 
@@ -601,6 +643,7 @@ mod tests {
             id: 77,
             program: prog.clone(),
             inputs: vec![tiny_ct(1), tiny_ct(5)],
+            tenant: 0,
         };
         let ok = Message::ProgramResponse {
             id: 77,
@@ -630,15 +673,57 @@ mod tests {
         }
         // The borrowed-operand encoder is the same layout Message uses.
         let inputs = [tiny_ct(1), tiny_ct(5)];
-        let direct = encode_program_request(77, &prog, &inputs);
+        let direct = encode_program_request(77, &prog, &inputs, 0);
         let via_msg = Message::ProgramRequest {
             id: 77,
             program: prog,
             inputs: inputs.to_vec(),
+            tenant: 0,
         }
         .encode();
         assert_eq!(direct.tag, via_msg.tag);
         assert_eq!(direct.body, via_msg.body);
+    }
+
+    #[test]
+    fn tenant_id_is_trailing_and_optional() {
+        // A nonzero tenant rides as a trailing u64 and roundtrips on both
+        // request kinds; a zero tenant produces a body byte-identical to
+        // the pre-v5 layout (backward/forward compatibility).
+        let op_with = Message::OpRequest {
+            id: 5,
+            op: WireOp::Square,
+            ct: tiny_ct(1),
+            ct2: None,
+            tenant: 0xDEAD_BEEF_CAFE_F00D,
+        };
+        let op_without = Message::OpRequest {
+            id: 5,
+            op: WireOp::Square,
+            ct: tiny_ct(1),
+            ct2: None,
+            tenant: 0,
+        };
+        let fw = op_with.encode();
+        let fo = op_without.encode();
+        assert_eq!(fw.body.len(), fo.body.len() + 8);
+        assert_eq!(&fw.body[..fo.body.len()], &fo.body[..]);
+        assert_eq!(Message::decode(&fw).unwrap(), op_with);
+        assert_eq!(Message::decode(&fo).unwrap(), op_without);
+
+        let mut b = ProgramBuilder::new();
+        let x = b.input("x");
+        let sq = b.square(x);
+        b.output("y", sq);
+        let prog = b.finish();
+        let pr = Message::ProgramRequest {
+            id: 6,
+            program: prog,
+            inputs: vec![tiny_ct(2)],
+            tenant: 42,
+        };
+        let f = pr.encode();
+        assert_eq!(Message::decode(&f).unwrap(), pr);
     }
 
     #[test]

@@ -11,10 +11,16 @@
 //! client can retry on — the socket never stalls on an overloaded queue.
 //!
 //! The server is **secret-key-free by construction**: it is configured
-//! with a parameter set only. The `Evaluator` + `Coordinator` pair is
-//! built the moment a client pushes its public `EvalKeySet` (replacing
-//! any previous engine); ops arriving before that get a typed
-//! `Error{NO_KEYS}`.
+//! with a parameter set only. Each client `PushKeys` *registers a
+//! tenant* in a [`TenantRegistry`] keyed by the blob's fingerprint: the
+//! pushed `EvalKeySet` expands into a per-tenant `Evaluator` +
+//! `Coordinator` engine, cold tenants are held as their seed-compressed
+//! wire blob under a configurable memory budget (LRU demotion,
+//! bit-exact re-expansion on demand), and requests name their tenant
+//! with the wire-v5 trailing id (0 = most recently pushed — the old
+//! single-tenant replace semantics). Ops arriving before any keys get a
+//! typed `Error{NO_KEYS}`; ops whose cold tenant cannot fit the budget
+//! get a retryable `Error{OVERLOADED}`.
 
 use std::net::{SocketAddr, TcpListener, TcpStream};
 use std::sync::atomic::{AtomicBool, Ordering};
@@ -29,25 +35,34 @@ use crate::ckks::params::{CkksContext, CkksParams};
 use crate::ckks::program::{FheProgram, OpCode};
 use crate::ckks::{Ciphertext, Evaluator, Format, RnsPoly};
 use crate::coordinator::{
-    Coordinator, ModelState, ProgramRequest, ProgramResponse, ProgramSubmitError, Request,
-    Response, ServeConfig, SubmitError,
+    Coordinator, MetricsSnapshot, ModelState, ProgramRequest, ProgramResponse,
+    ProgramSubmitError, Request, Response, ServeConfig, SubmitError,
 };
+use crate::tenancy::{RegistryConfig, RegistryError, ScratchPool, TenantRegistry};
 
 #[derive(Debug, Clone)]
 pub struct ServeOptions {
     pub params: CkksParams,
     pub serve: ServeConfig,
+    /// Memory budget for resident (expanded) tenant key sets; the
+    /// default is unlimited (every pushed tenant stays resident).
+    pub registry: RegistryConfig,
     /// Per-connection log lines on stdout.
     pub verbose: bool,
 }
 
 impl ServeOptions {
     pub fn new(params: CkksParams) -> Self {
-        Self { params, serve: ServeConfig::default(), verbose: false }
+        Self {
+            params,
+            serve: ServeConfig::default(),
+            registry: RegistryConfig::default(),
+            verbose: false,
+        }
     }
 }
 
-/// The installed serving engine (built on `PushKeys`).
+/// One tenant's serving engine (built at `PushKeys` / re-expansion).
 struct Engine {
     ev: Arc<Evaluator>,
     coord: Coordinator,
@@ -57,12 +72,101 @@ struct ServerShared {
     params: CkksParams,
     fingerprint: u64,
     serve: ServeConfig,
-    engine: Mutex<Option<Engine>>,
+    /// tenant id (key-blob fingerprint) → engine, with LRU demotion to
+    /// the seed-compressed blob under the configured budget.
+    registry: TenantRegistry<Engine>,
+    /// Cross-tenant pool of key-switch staging buffers; every tenant's
+    /// evaluator routes through it.
+    pool: Arc<ScratchPool>,
+    /// Final counters of demoted/replaced engines — evicting a tenant
+    /// must not erase what it served.
+    retired: Mutex<MetricsSnapshot>,
     stop: AtomicBool,
     verbose: bool,
     /// How this node names itself in `ShardMetricsResp` (the listen
     /// address — matches what a gateway calls it).
     name: String,
+}
+
+impl ServerShared {
+    /// Decode a tenant blob into a running engine (the registry's
+    /// expander) with its resident-byte estimate.
+    fn build_engine(&self, blob: &[u8]) -> Result<(Arc<Engine>, u64), WireError> {
+        let ctx = CkksContext::new(self.params.clone());
+        let keys = decode_eval_key_set(&ctx, blob, self.fingerprint)?;
+        let bytes = keys.resident_bytes() as u64;
+        let ev = Arc::new(
+            Evaluator::new(ctx, Arc::new(keys)).with_scratch_pool(self.pool.clone()),
+        );
+        let model = Arc::new(default_model(&ev));
+        let coord = Coordinator::start(ev.clone(), model, self.serve.clone());
+        Ok((Arc::new(Engine { ev, coord }), bytes))
+    }
+
+    /// Fold the final counters of retiring engines into the `retired`
+    /// accumulator. The engines may still be referenced by in-flight
+    /// requests; snapshotting at demotion time keeps everything they
+    /// have served so far.
+    fn retire(&self, engines: Vec<Arc<Engine>>) {
+        if engines.is_empty() {
+            return;
+        }
+        let mut acc = self.retired.lock().unwrap();
+        for e in engines {
+            acc.absorb(&e.coord.snapshot());
+        }
+    }
+
+    /// Resolve + fetch the engine for a request's tenant id, re-expanding
+    /// a cold tenant from its blob. `Err` is the `(code, detail)` of the
+    /// typed error frame to send.
+    fn lookup_engine(&self, requested: u64) -> Result<Arc<Engine>, (u16, String)> {
+        let Some(id) = self.registry.resolve(requested) else {
+            return Err((error_code::NO_KEYS, "no evaluation keys pushed yet".into()));
+        };
+        match self.registry.get(id, |blob| self.build_engine(blob)) {
+            Ok((engine, retired)) => {
+                self.retire(retired);
+                Ok(engine)
+            }
+            Err(RegistryError::UnknownTenant(t)) => Err((
+                error_code::NO_KEYS,
+                format!("unknown tenant {t:#018x}: push its keys first"),
+            )),
+            // The detail is the machine-readable retry delay: clients
+            // parse it back into a typed `WireError::Overloaded`.
+            Err(RegistryError::Overloaded { retry_after_ms }) => {
+                Err((error_code::OVERLOADED, retry_after_ms.to_string()))
+            }
+            Err(RegistryError::Expand(e)) => {
+                Err((error_code::DECODE, format!("tenant re-expansion failed: {e}")))
+            }
+        }
+    }
+
+    /// The node-wide metrics view: live engines + retired counters,
+    /// with the registry/pool gauge block injected.
+    fn metrics_snapshot(&self) -> MetricsSnapshot {
+        let mut snap = *self.retired.lock().unwrap();
+        for (_, engine) in self.registry.resident() {
+            snap.absorb(&engine.coord.snapshot());
+        }
+        let rs = self.registry.stats();
+        snap.tenants_resident = rs.resident;
+        snap.tenants_cold = rs.cold;
+        snap.registry_hits = rs.hits;
+        snap.registry_misses = rs.misses;
+        snap.key_evictions = rs.evictions;
+        snap.key_expansions = rs.expansions;
+        snap.expansion_us = rs.expansion_us;
+        snap.resident_key_bytes = rs.resident_bytes;
+        snap.overloaded = rs.overloaded;
+        let ps = self.pool.stats();
+        snap.pool_hits = ps.hits;
+        snap.pool_misses = ps.misses;
+        snap.pool_bytes_hwm = ps.bytes_hwm;
+        snap
+    }
 }
 
 /// The default server-side model for `LinearScore` requests: the same
@@ -85,7 +189,9 @@ pub fn serve(listener: TcpListener, opts: ServeOptions) -> std::io::Result<()> {
         fingerprint: params_fingerprint(&opts.params),
         params: opts.params,
         serve: opts.serve,
-        engine: Mutex::new(None),
+        registry: TenantRegistry::new(opts.registry),
+        pool: Arc::new(ScratchPool::new()),
+        retired: Mutex::new(MetricsSnapshot::default()),
         stop: AtomicBool::new(false),
         verbose: opts.verbose,
         name: addr.to_string(),
@@ -111,8 +217,12 @@ pub fn serve(listener: TcpListener, opts: ServeOptions) -> std::io::Result<()> {
         let shared = shared.clone();
         std::thread::spawn(move || handle_conn(stream, shared, addr));
     }
-    // Tear the engine down before returning so queued work drains.
-    shared.engine.lock().unwrap().take();
+    // Demote every resident tenant before returning so queued work
+    // drains (each dropped engine joins its coordinator's workers once
+    // the last in-flight reference goes).
+    for (id, _) in shared.registry.resident() {
+        drop(shared.registry.demote(id));
+    }
     Ok(())
 }
 
@@ -342,30 +452,24 @@ fn reader_loop(
                 }
             }
             Message::PushKeys { blob } => {
-                // Derive a fresh context deterministically from the
-                // configured params (identical tower by construction).
-                let ctx = CkksContext::new(shared.params.clone());
-                // Fingerprint of the bytes as received: what a
-                // replicating gateway compares across shards.
+                // The blob fingerprint is both the replication check a
+                // gateway compares across shards AND the tenant id —
+                // every holder of the same bytes derives the same id.
                 let blob_fp = fnv1a64(&blob);
-                match decode_eval_key_set(&ctx, &blob, shared.fingerprint) {
-                    Ok(keys) => {
-                        let nkeys = keys.len() as u32;
-                        let ev = Arc::new(Evaluator::new(ctx, Arc::new(keys)));
-                        let model = Arc::new(default_model(&ev));
-                        let coord =
-                            Coordinator::start(ev.clone(), model, shared.serve.clone());
-                        // Swap under the lock, but drop (drain + join) the
-                        // previous engine outside it so other connections
-                        // never block on the old coordinator's teardown.
-                        let old = shared
-                            .engine
-                            .lock()
-                            .unwrap()
-                            .replace(Engine { ev, coord });
-                        drop(old);
+                match shared.build_engine(&blob) {
+                    Ok((engine, bytes)) => {
+                        let nkeys = engine.ev.keys().len() as u32;
+                        // Register (not replace): other tenants keep
+                        // serving. Budget pressure may demote LRU
+                        // tenants — fold their final counters first.
+                        let retired =
+                            shared.registry.register(blob_fp, blob, engine, bytes);
+                        shared.retire(retired);
                         if shared.verbose {
-                            println!("fhecore-serve: installed key set ({nkeys} keys)");
+                            println!(
+                                "fhecore-serve: registered tenant {blob_fp:#018x} \
+                                 ({nkeys} keys, {bytes} B expanded)"
+                            );
                         }
                         send(Message::KeysAck { keys: nkeys, fingerprint: blob_fp });
                     }
@@ -376,15 +480,13 @@ fn reader_loop(
                     }),
                 }
             }
-            Message::OpRequest { id, op, ct, ct2 } => {
-                let guard = shared.engine.lock().unwrap();
-                let Some(engine) = guard.as_ref() else {
-                    send(Message::Error {
-                        id,
-                        code: error_code::NO_KEYS,
-                        detail: "no evaluation keys pushed yet".into(),
-                    });
-                    continue;
+            Message::OpRequest { id, op, ct, ct2, tenant } => {
+                let engine = match shared.lookup_engine(tenant) {
+                    Ok(e) => e,
+                    Err((code, detail)) => {
+                        send(Message::Error { id, code, detail });
+                        continue;
+                    }
                 };
                 let mut invalid = validate_ct(&engine.ev.ctx, &ct).err();
                 if invalid.is_none() {
@@ -458,15 +560,13 @@ fn reader_loop(
                     }),
                 }
             }
-            Message::ProgramRequest { id, program, inputs } => {
-                let guard = shared.engine.lock().unwrap();
-                let Some(engine) = guard.as_ref() else {
-                    send(Message::Error {
-                        id,
-                        code: error_code::NO_KEYS,
-                        detail: "no evaluation keys pushed yet".into(),
-                    });
-                    continue;
+            Message::ProgramRequest { id, program, inputs, tenant } => {
+                let engine = match shared.lookup_engine(tenant) {
+                    Ok(e) => e,
+                    Err((code, detail)) => {
+                        send(Message::Error { id, code, detail });
+                        continue;
+                    }
                 };
                 // Untrusted bytes: every input ciphertext and embedded
                 // plaintext must be canonical on this ring; the typed
@@ -523,26 +623,15 @@ fn reader_loop(
                 }
             }
             Message::MetricsReq => {
-                let snap = shared
-                    .engine
-                    .lock()
-                    .unwrap()
-                    .as_ref()
-                    .map(|e| e.coord.snapshot())
-                    .unwrap_or_default();
-                send(Message::MetricsResp(snap));
+                send(Message::MetricsResp(shared.metrics_snapshot()));
             }
             Message::ShardMetricsReq => {
                 // A single server is a one-shard "cluster" named by its
                 // listen address — what a fronting gateway calls it.
-                let snap = shared
-                    .engine
-                    .lock()
-                    .unwrap()
-                    .as_ref()
-                    .map(|e| e.coord.snapshot())
-                    .unwrap_or_default();
-                send(Message::ShardMetricsResp(vec![(shared.name.clone(), snap)]));
+                send(Message::ShardMetricsResp(vec![(
+                    shared.name.clone(),
+                    shared.metrics_snapshot(),
+                )]));
             }
             Message::Shutdown => {
                 shared.stop.store(true, Ordering::SeqCst);

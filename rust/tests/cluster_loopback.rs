@@ -29,6 +29,7 @@ fn spawn_shard(params: CkksParams) -> (String, std::thread::JoinHandle<()>) {
             linger: Duration::from_millis(1),
             max_queue: 64,
         },
+        registry: Default::default(),
         verbose: false,
     };
     let handle = std::thread::spawn(move || serve(listener, opts).expect("shard run"));

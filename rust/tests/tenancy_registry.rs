@@ -1,0 +1,92 @@
+//! Concurrency contract of the tenant registry: many threads hammering
+//! one cold tenant must trigger **exactly one** expansion (Cold →
+//! Expanding → Resident under the registry's condvar), every caller must
+//! receive the same `Arc`, and the re-expanded key set must be
+//! bit-identical to the original — proven by re-encoding it to the
+//! canonical seed-compressed wire blob and comparing bytes.
+
+use std::sync::atomic::{AtomicUsize, Ordering};
+use std::sync::{Arc, Barrier, Mutex};
+
+use fhecore::ckks::params::{CkksContext, CkksParams};
+use fhecore::ckks::{EvalKeySet, EvalKeySpec, KeyGen};
+use fhecore::tenancy::{RegistryConfig, TenantRegistry};
+use fhecore::util::rng::Pcg64;
+use fhecore::wire::codec::{decode_eval_key_set, encode_eval_key_set};
+use fhecore::wire::{fnv1a64, params_fingerprint, WireError};
+
+/// A real key set and its canonical seed-compressed wire blob.
+fn key_blob(params: &CkksParams) -> (Vec<u8>, Arc<EvalKeySet>, u64) {
+    let ctx = CkksContext::new(params.clone());
+    let mut rng = Pcg64::new(0x7E4A47);
+    let kg = KeyGen::new(&ctx, &mut rng);
+    let keys =
+        kg.eval_key_set(&ctx, &EvalKeySpec::relin_only().with_rotations(&[1]), &mut rng);
+    let fp = params_fingerprint(params);
+    let blob = encode_eval_key_set(&keys, fp, true);
+    (blob, Arc::new(keys), fp)
+}
+
+#[test]
+fn cold_tenant_hammered_expands_exactly_once_bit_exact() {
+    let params = CkksParams::toy();
+    let (blob, keys, fp) = key_blob(&params);
+    let tenant = fnv1a64(&blob);
+
+    let registry = Arc::new(TenantRegistry::new(RegistryConfig::default()));
+    let retired =
+        registry.register(tenant, blob.clone(), keys.clone(), keys.resident_bytes() as u64);
+    assert!(retired.is_empty(), "first registration demotes nothing");
+    assert!(registry.demote(tenant).is_some(), "tenant starts resident, goes cold");
+
+    const THREADS: usize = 16;
+    let expansions = Arc::new(AtomicUsize::new(0));
+    let barrier = Arc::new(Barrier::new(THREADS));
+    let got: Arc<Mutex<Vec<Arc<EvalKeySet>>>> = Arc::new(Mutex::new(Vec::new()));
+    let mut handles = Vec::new();
+    for _ in 0..THREADS {
+        let registry = registry.clone();
+        let expansions = expansions.clone();
+        let barrier = barrier.clone();
+        let got = got.clone();
+        let params = params.clone();
+        handles.push(std::thread::spawn(move || {
+            let ctx = CkksContext::new(params);
+            barrier.wait();
+            let (t, demoted) = registry
+                .get(tenant, |blob| {
+                    expansions.fetch_add(1, Ordering::SeqCst);
+                    let keys = decode_eval_key_set(&ctx, blob, fp)?;
+                    let bytes = keys.resident_bytes() as u64;
+                    Ok::<_, WireError>((Arc::new(keys), bytes))
+                })
+                .expect("expansion succeeds");
+            assert!(demoted.is_empty(), "no budget pressure, nothing demoted");
+            got.lock().unwrap().push(t);
+        }));
+    }
+    for h in handles {
+        h.join().expect("no hammering thread may panic");
+    }
+
+    // Exactly-once: however the 16 threads raced, the expander ran once.
+    assert_eq!(expansions.load(Ordering::SeqCst), 1, "expander must run exactly once");
+    let got = got.lock().unwrap();
+    assert_eq!(got.len(), THREADS);
+    for t in got.iter().skip(1) {
+        assert!(Arc::ptr_eq(&got[0], t), "every caller must receive the same Arc");
+    }
+
+    // Bit-exact: seed compression is lossless, so the re-expanded set
+    // re-encodes to the *identical* canonical blob (no torn key set).
+    let reencoded = encode_eval_key_set(&got[0], fp, true);
+    assert_eq!(reencoded, blob, "re-expanded keys must re-encode to the original blob");
+
+    let s = registry.stats();
+    assert_eq!(s.misses, 1, "one cold lookup");
+    assert_eq!(s.expansions, 1);
+    assert_eq!(s.hits as usize, THREADS - 1, "waiters resolve as hits");
+    assert_eq!((s.resident, s.cold), (1, 0));
+    assert_eq!(s.evictions, 1, "only the explicit demote");
+    assert!(s.expansion_us > 0 || s.expansions == 1, "expansion time is recorded");
+}

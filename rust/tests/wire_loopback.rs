@@ -13,11 +13,20 @@ use fhecore::ckks::encoding::Complex;
 use fhecore::ckks::params::{CkksContext, CkksParams};
 use fhecore::ckks::{EvalKeySpec, Evaluator, KeyGen};
 use fhecore::coordinator::ServeConfig;
+use fhecore::tenancy::RegistryConfig;
 use fhecore::util::rng::Pcg64;
 use fhecore::wire::{serve, RemoteEvaluator, ServeOptions, WireError};
 
 /// Bind an ephemeral loopback port and run the server on a thread.
 fn spawn_server(params: CkksParams) -> (String, std::thread::JoinHandle<()>) {
+    spawn_server_with(params, RegistryConfig::default())
+}
+
+/// `spawn_server` with an explicit tenant key budget.
+fn spawn_server_with(
+    params: CkksParams,
+    registry: RegistryConfig,
+) -> (String, std::thread::JoinHandle<()>) {
     let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
     let addr = listener.local_addr().unwrap().to_string();
     let opts = ServeOptions {
@@ -29,6 +38,7 @@ fn spawn_server(params: CkksParams) -> (String, std::thread::JoinHandle<()>) {
             linger: Duration::from_millis(1),
             max_queue: 32,
         },
+        registry,
         verbose: false,
     };
     let handle = std::thread::spawn(move || {
@@ -274,6 +284,112 @@ fn loopback_program_one_rtt_matches_local() {
     }
 
     remote.shutdown().expect("shutdown");
+    server.join().expect("server exits");
+}
+
+/// One tenant's client half: keygen from a seed, a fresh ciphertext,
+/// and a dedicated local reference evaluator over the same key set.
+fn tenant_half(params: &CkksParams, seed: u64) -> (Evaluator, fhecore::ckks::Ciphertext) {
+    let ctx = CkksContext::new(params.clone());
+    let mut rng = Pcg64::new(seed);
+    let kg = KeyGen::new(&ctx, &mut rng);
+    let spec = EvalKeySpec::relin_only().with_rotations(&[1]);
+    let keys = Arc::new(kg.eval_key_set(&ctx, &spec, &mut rng));
+    let enc = kg.encryptor();
+    let slots = ctx.params.slots();
+    let z: Vec<Complex> = (0..slots)
+        .map(|i| Complex::new(0.01 * ((i + seed as usize) % 11) as f64, 0.0))
+        .collect();
+    let ct = enc.encrypt_slots(&ctx, &z, ctx.max_level(), &mut rng);
+    let ev = Evaluator::new(CkksContext::new(params.clone()), keys);
+    (ev, ct)
+}
+
+#[test]
+fn loopback_two_tenants_interleaved_bit_exact() {
+    let params = CkksParams::toy();
+    let (addr, server) = spawn_server(params.clone());
+
+    let (ev_a, ca) = tenant_half(&params, 0xA001);
+    let (ev_b, cb) = tenant_half(&params, 0xB002);
+
+    let ra = RemoteEvaluator::connect_retry(&addr, params.clone(), Duration::from_secs(10))
+        .expect("connect tenant A");
+    let rb = RemoteEvaluator::connect_retry(&addr, params.clone(), Duration::from_secs(10))
+        .expect("connect tenant B");
+    ra.push_keys(ev_a.keys()).expect("push A");
+    rb.push_keys(ev_b.keys()).expect("push B");
+    assert_ne!(ra.tenant(), rb.tenant(), "distinct key sets must get distinct tenant ids");
+
+    // Interleave ops. B registered last, so legacy tenant-0 routing
+    // would aim everything at B's keys; A's requests stay correct only
+    // because they carry A's pinned tenant id.
+    for round in 0..2 {
+        let sa = ra.mul(&ca, &ca).expect("A remote mul");
+        assert_eq!(sa, ev_a.mul(&ca, &ca).expect("A local mul"), "round {round}: A mul");
+        let sb = rb.mul(&cb, &cb).expect("B remote mul");
+        assert_eq!(sb, ev_b.mul(&cb, &cb).expect("B local mul"), "round {round}: B mul");
+        let rot_a = ra.rotate(&sa, 1).expect("A remote rotate");
+        assert_eq!(
+            rot_a,
+            ev_a.rotate(&sa, 1).expect("A local rotate"),
+            "round {round}: A rotate"
+        );
+    }
+
+    let m = ra.metrics().expect("metrics");
+    assert_eq!(m.tenants_resident, 2, "both tenants stay resident with no budget");
+    assert_eq!(m.tenants_cold, 0);
+    assert_eq!(m.key_evictions, 0);
+    assert!(m.registry_hits >= 6, "every op is a registry hit, got {}", m.registry_hits);
+    assert!(
+        m.pool_hits + m.pool_misses > 0,
+        "key-switch ops must route through the scratch pool"
+    );
+
+    ra.shutdown().expect("shutdown");
+    server.join().expect("server exits");
+}
+
+#[test]
+fn loopback_eviction_reexpands_cold_tenant_bit_exact() {
+    let params = CkksParams::toy();
+    // Budget of ONE resident tenant: every tenant switch forces an LRU
+    // demotion + a bit-exact re-expansion from the seed-compressed blob.
+    let (addr, server) = spawn_server_with(
+        params.clone(),
+        RegistryConfig { max_resident_bytes: 0, max_resident_tenants: 1 },
+    );
+
+    let (ev_a, ca) = tenant_half(&params, 0xA003);
+    let (ev_b, cb) = tenant_half(&params, 0xB004);
+
+    let ra = RemoteEvaluator::connect_retry(&addr, params.clone(), Duration::from_secs(10))
+        .expect("connect tenant A");
+    let rb = RemoteEvaluator::connect_retry(&addr, params.clone(), Duration::from_secs(10))
+        .expect("connect tenant B");
+    ra.push_keys(ev_a.keys()).expect("push A");
+    rb.push_keys(ev_b.keys()).expect("push B"); // demotes A to cold
+
+    // A is cold: this op re-expands A's engine from the blob (demoting
+    // B) and must still be bit-identical to the dedicated evaluator.
+    let sa = ra.mul(&ca, &ca).expect("A remote mul after eviction");
+    assert_eq!(sa, ev_a.mul(&ca, &ca).expect("A local mul"), "A after re-expansion");
+    // And back: B re-expands, demoting A again.
+    let sb = rb.mul(&cb, &cb).expect("B remote mul after eviction");
+    assert_eq!(sb, ev_b.mul(&cb, &cb).expect("B local mul"), "B after re-expansion");
+
+    let m = ra.metrics().expect("metrics");
+    assert_eq!(m.tenants_resident, 1, "budget admits exactly one resident tenant");
+    assert_eq!(m.tenants_cold, 1);
+    assert!(m.key_evictions >= 2, "evictions {}", m.key_evictions);
+    assert!(m.key_expansions >= 2, "expansions {}", m.key_expansions);
+    assert!(m.registry_misses >= 2, "misses {}", m.registry_misses);
+    assert!(m.resident_key_bytes > 0);
+    // Ops served before a tenant was demoted survive in the totals.
+    assert!(m.served >= 2, "served {}", m.served);
+
+    ra.shutdown().expect("shutdown");
     server.join().expect("server exits");
 }
 
