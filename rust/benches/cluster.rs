@@ -32,6 +32,7 @@ fn spawn_shard(params: CkksParams) -> (String, std::thread::JoinHandle<()>) {
             max_queue: 64,
         },
         registry: Default::default(),
+        sched: Default::default(),
         verbose: false,
     };
     let handle = std::thread::spawn(move || serve(listener, opts).expect("shard run"));

@@ -151,6 +151,7 @@ fn main() {
             max_queue: 64,
         },
         registry: Default::default(),
+        sched: Default::default(),
         verbose: false,
     };
     let server = std::thread::spawn(move || serve(listener, opts));

@@ -1,0 +1,197 @@
+//! Cross-tenant batching benchmark: ops/sec under N concurrent
+//! pipelined clients with the batch former on (window 200 µs) vs off
+//! (`--batch-window-us 0`, the sequential per-request dispatch). Dumps
+//! `BENCH_batch.json` for the bench-archive trajectory.
+//!
+//! Outputs are asserted **bit-identical** to the sequential oracle
+//! before any timing runs — fusion must never change a single bit.
+//! Both configurations get the same total worker budget (4 execution
+//! threads) so the comparison isolates batching, not parallelism.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fhecore::bench_harness::Bench;
+use fhecore::ckks::encoding::Complex;
+use fhecore::ckks::params::{CkksContext, CkksParams};
+use fhecore::ckks::{Ciphertext, EvalKeySpec, Evaluator, KeyGen};
+use fhecore::coordinator::{
+    Coordinator, ModelState, OpKind, Request, ServeConfig, SubmitError,
+};
+use fhecore::sched::{BatchScheduler, SchedConfig};
+use fhecore::util::json::Json;
+use fhecore::util::rng::Pcg64;
+
+const CLIENTS: usize = 8;
+
+fn tenant(seed: u64) -> (Arc<Evaluator>, Ciphertext) {
+    let ctx = CkksContext::new(CkksParams::toy());
+    let mut rng = Pcg64::new(seed);
+    let kg = KeyGen::new(&ctx, &mut rng);
+    let slots = ctx.params.slots();
+    let keys = kg.eval_key_set(
+        &ctx,
+        &EvalKeySpec::relin_only().with_rotations(&[1]),
+        &mut rng,
+    );
+    let enc = kg.encryptor();
+    let z: Vec<Complex> = (0..slots)
+        .map(|i| Complex::new(0.01 * ((seed as usize + i) % 11) as f64, 0.0))
+        .collect();
+    let ev = Evaluator::new(ctx, Arc::new(keys));
+    let ct = enc.encrypt_slots(&ev.ctx, &z, ev.ctx.max_level(), &mut rng);
+    (Arc::new(ev), ct)
+}
+
+fn model(ev: &Evaluator) -> Arc<ModelState> {
+    let slots = ev.ctx.params.slots();
+    let w: Vec<Complex> = (0..slots).map(|_| Complex::new(0.01, 0.0)).collect();
+    Arc::new(ModelState { weights_pt: ev.encode(&w, ev.ctx.max_level()), rot_steps: slots })
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        fhec_workers: 1,
+        cuda_workers: 1,
+        max_batch: 8,
+        linger: Duration::from_micros(200),
+        max_queue: 64,
+    }
+}
+
+fn start_coords(
+    tenants: &[(Arc<Evaluator>, Ciphertext)],
+    sched: Option<Arc<BatchScheduler>>,
+) -> Vec<Coordinator> {
+    tenants
+        .iter()
+        .enumerate()
+        .map(|(i, (ev, _))| {
+            Coordinator::start_with_scheduler(
+                ev.clone(),
+                model(ev),
+                serve_cfg(),
+                sched.clone(),
+                i as u64 + 1,
+            )
+        })
+        .collect()
+}
+
+/// One measured pass: `CLIENTS` pipelined client threads (round-robin
+/// over the tenants), each admitting `per_client` rotations before
+/// draining its responses — the fan-in pattern the batch former exists
+/// for. `QueueFull` backpressure retries like a wire client would.
+fn run_pass(
+    coords: &[Coordinator],
+    tenants: &[(Arc<Evaluator>, Ciphertext)],
+    per_client: usize,
+) {
+    std::thread::scope(|s| {
+        for client in 0..CLIENTS {
+            let t = client % coords.len();
+            let coord = &coords[t];
+            let ct = &tenants[t].1;
+            s.spawn(move || {
+                let mut rxs = Vec::with_capacity(per_client);
+                for i in 0..per_client {
+                    let mut req = Request::new(i as u64, OpKind::Rotate(1), ct.clone());
+                    loop {
+                        match coord.submit(req) {
+                            Ok(rx) => {
+                                rxs.push(rx);
+                                break;
+                            }
+                            Err((r, SubmitError::QueueFull { .. })) => {
+                                req = r;
+                                std::thread::yield_now();
+                            }
+                            Err((_, e)) => panic!("admission: {e}"),
+                        }
+                    }
+                }
+                for rx in rxs {
+                    rx.recv_timeout(Duration::from_secs(120))
+                        .expect("response")
+                        .ct
+                        .expect("rotation key declared");
+                }
+            });
+        }
+    });
+}
+
+fn main() {
+    let mut bench = Bench::new("batch");
+    let fast = std::env::var("FHECORE_BENCH_FAST").is_ok();
+    let per_client = if fast { 6 } else { 16 };
+    let n_ops = (CLIENTS * per_client) as f64;
+
+    let tenants: Vec<_> = (0..4).map(|i| tenant(0xBA7C + i)).collect();
+
+    // Batching on: 200 µs window, shared across all 4 tenants' engines.
+    let sched = Arc::new(BatchScheduler::start(SchedConfig {
+        window: Duration::from_micros(200),
+        max_batch: 8,
+        max_queue: 256,
+        workers: 4,
+    }));
+    let fused = start_coords(&tenants, Some(sched.clone()));
+    // Batching off: the same engines with no batch former — the
+    // `--batch-window-us 0` degenerate case (4 fhec lane workers total,
+    // the same execution budget the scheduler gets).
+    let seq = start_coords(&tenants, None);
+
+    // Bit-exactness gate before any timing: every tenant's fused
+    // response must equal its own local sequential oracle.
+    for (i, (ev, ct)) in tenants.iter().enumerate() {
+        let rx = fused
+            .get(i)
+            .unwrap()
+            .submit(Request::new(900 + i as u64, OpKind::Rotate(1), ct.clone()))
+            .unwrap_or_else(|(_, e)| panic!("tenant {i} admission: {e}"));
+        let got = rx
+            .recv_timeout(Duration::from_secs(120))
+            .expect("fused response")
+            .ct
+            .expect("rotation key declared");
+        assert_eq!(
+            got,
+            ev.rotate(ct, 1).expect("oracle rotate"),
+            "tenant {i}: fused result must be bit-identical to the sequential path"
+        );
+    }
+
+    let fused_id = format!("fused/clients{CLIENTS}_window200us");
+    let fs = bench.run(&fused_id, || run_pass(&fused, &tenants, per_client));
+    bench.throughput(&fused_id, n_ops);
+
+    let seq_id = format!("per_request/clients{CLIENTS}_window0");
+    let ss = bench.run(&seq_id, || run_pass(&seq, &tenants, per_client));
+    bench.throughput(&seq_id, n_ops);
+
+    use std::sync::atomic::Ordering::Relaxed;
+    let m = sched.metrics();
+    let dispatches = m.fused_dispatches.load(Relaxed);
+    let members = m.fused_members.load(Relaxed);
+    let peak = m.occupancy_peak.load(Relaxed);
+    let speedup = ss.median_ns / fs.median_ns;
+    println!(
+        "batching {:.1} ops/s vs per-request {:.1} ops/s — {speedup:.2}x \
+         (fused {dispatches} dispatches / {members} members, occupancy peak {peak}, \
+         mean {:.2})",
+        n_ops / (fs.median_ns / 1e9),
+        n_ops / (ss.median_ns / 1e9),
+        m.mean_occupancy(),
+    );
+    assert!(peak > 1, "pipelined clients must actually fuse (occupancy peak {peak})");
+    bench.note("speedup_fused_vs_per_request", Json::Num(speedup));
+    bench.note("fused_dispatches", Json::Num(dispatches as f64));
+    bench.note("fused_members", Json::Num(members as f64));
+    bench.note("occupancy_peak", Json::Num(peak as f64));
+    bench.note("occupancy_mean", Json::Num(m.mean_occupancy()));
+    bench.note("clients", Json::Num(CLIENTS as f64));
+    bench.note("ops_per_client", Json::Num(per_client as f64));
+
+    bench.write_json().expect("bench json dump");
+}

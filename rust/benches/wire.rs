@@ -77,6 +77,7 @@ fn main() {
             max_queue: 32,
         },
         registry: Default::default(),
+        sched: Default::default(),
         verbose: false,
     };
     let server = std::thread::spawn(move || serve(listener, opts));

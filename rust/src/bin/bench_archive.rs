@@ -10,6 +10,12 @@
 //! Each row records (UTC date, commit, bench, case id, median, p05, p95),
 //! so successive runs of e.g. `keyswitch/scratch` vs
 //! `keyswitch/alloc_reference` build the HEMult before/after trajectory.
+//!
+//! `--dry-run` computes and prints the rows without touching the output
+//! file, and exits nonzero if the run would contribute nothing — PR CI
+//! uses it so a silently-empty bench pipeline fails before merge instead
+//! of being discovered on the next main push (how the trajectory table
+//! stayed empty through PR 5).
 
 use std::fmt::Write as _;
 use std::time::{SystemTime, UNIX_EPOCH};
@@ -25,6 +31,7 @@ fn main() {
     let args = Args::from_env();
     let dir = args.opt("dir").unwrap_or(".").to_string();
     let out_path = args.opt("out").unwrap_or("EXPERIMENTS.md").to_string();
+    let dry_run = args.has_flag("dry-run");
 
     let mut dumps: Vec<(String, Json)> = Vec::new();
     let entries = match std::fs::read_dir(&dir) {
@@ -86,6 +93,25 @@ fn main() {
             );
             count += 1;
         }
+    }
+
+    if dry_run {
+        // Report-only: same row computation, no write. Zero contribution
+        // (no fresh rows AND nothing already archived for this commit)
+        // is the loud failure PR CI gates on.
+        print!("{rows}");
+        if count == 0 && skipped == 0 {
+            eprintln!(
+                "bench_archive --dry-run: BENCH_*.json under {dir} would contribute ZERO \
+                 trajectory rows for commit {commit}"
+            );
+            std::process::exit(1);
+        }
+        println!(
+            "dry-run: would archive {count} bench rows ({skipped} already present) \
+             ({date}, {commit}) into {out_path}"
+        );
+        return;
     }
 
     let updated = match existing.find(HEADING) {

@@ -1,0 +1,194 @@
+//! Cross-request batched evaluator entry points: execute many compatible
+//! ops — from distinct owners (tenants/connections) — with the dominant
+//! NTT work fused into single MLT dispatches.
+//!
+//! These are the execution primitives behind `sched`'s batch former. Each
+//! function takes a slice of borrowed operands whose contexts share one
+//! parameter set and whose operands sit at one common level (the
+//! scheduler's compatibility key guarantees both; asserted here), hoists
+//! each member's digit decomposition, finishes *all* of them through
+//! [`apply_hoisted_fused`] — one `NttTable::forward_batch` per modulus
+//! over every member's lifted digits — and reassembles each member's
+//! result with its own key material.
+//!
+//! **Bit-exactness contract.** A batch of one is exactly the sequential
+//! path (`rotate` = hoist + finish; `mul`'s `apply` ≡ hoist + finish at
+//! `g = 1`, the identity `hoisted_identity_is_bit_identical_to_apply`
+//! pins), and `forward_batch` transforms each polynomial independently —
+//! so every member's output is bit-identical to `Evaluator::rotate` /
+//! `conjugate` / `mul` run alone, whatever else rides the batch. The
+//! tests in `tests/sched_batching.rs` assert this member by member.
+
+use super::keys::{apply_hoisted_fused, FusedKsFinish, HoistedDecomp, KeyKind, KsKey, MissingKey};
+use super::ops::{Ciphertext, Evaluator};
+
+/// One member of a fused Galois batch (rotation or conjugation).
+pub struct BatchedGalois<'a> {
+    /// The member's owning evaluator (its tenant's keys + pool).
+    pub ev: &'a Evaluator,
+    pub ct: &'a Ciphertext,
+    /// The Galois element (`galois_element(k, n)` for rotation by `k`,
+    /// `2n - 1` for conjugation). `1` short-circuits to a clone.
+    pub g: usize,
+}
+
+/// One member of a fused HEMult batch (`a == b` is Square).
+pub struct BatchedMul<'a> {
+    pub ev: &'a Evaluator,
+    pub a: &'a Ciphertext,
+    pub b: &'a Ciphertext,
+}
+
+/// Rotate/conjugate every member with the per-modulus NTT passes of all
+/// their key switches fused into single `forward_batch` dispatches.
+/// Members whose key set lacks the needed Galois key get their typed
+/// [`MissingKey`] and simply do not ride the fused dispatch.
+pub fn galois_many(items: &[BatchedGalois<'_>]) -> Vec<Result<Ciphertext, MissingKey>> {
+    let mut out: Vec<Option<Result<Ciphertext, MissingKey>>> =
+        items.iter().map(|_| None).collect();
+
+    struct Prep<'a> {
+        idx: usize,
+        ev: &'a Evaluator,
+        ct: &'a Ciphertext,
+        ksk: &'a KsKey,
+        g: usize,
+        decomp: HoistedDecomp,
+    }
+    let mut preps: Vec<Prep<'_>> = Vec::new();
+    for (i, it) in items.iter().enumerate() {
+        if it.g == 1 {
+            out[i] = Some(Ok(it.ct.clone()));
+            continue;
+        }
+        let ksk = match it.ev.keys().get(KeyKind::Galois(it.g), it.ct.level) {
+            Ok(k) => k,
+            Err(e) => {
+                out[i] = Some(Err(e));
+                continue;
+            }
+        };
+        // The per-member half: decompose + ModUp this member's c1.
+        let decomp = it.ev.hoist_galois(ksk, it.ct);
+        preps.push(Prep { idx: i, ev: it.ev, ct: it.ct, ksk, g: it.g, decomp });
+    }
+
+    if !preps.is_empty() {
+        let ev0 = preps[0].ev;
+        let fp0 = crate::wire::params_fingerprint(&ev0.ctx.params);
+        for p in &preps {
+            assert_eq!(
+                crate::wire::params_fingerprint(&p.ev.ctx.params),
+                fp0,
+                "fused members must share one parameter set"
+            );
+        }
+        let jobs: Vec<FusedKsFinish<'_>> = preps
+            .iter()
+            .map(|p| FusedKsFinish { key: p.ksk, decomp: &p.decomp, g: p.g })
+            .collect();
+        let finished = apply_hoisted_fused(&ev0.ctx, &jobs, ev0.pool());
+        drop(jobs);
+        for (p, (e0, e1)) in preps.into_iter().zip(finished) {
+            // Reassemble exactly like `Evaluator::galois_from_decomp`.
+            let mut c0 = p.ct.c0.clone();
+            c0.to_coeff(&ev0.ctx.tower);
+            let mut r0 = c0.automorphism(p.g, &ev0.ctx.tower);
+            r0.to_eval(&ev0.ctx.tower);
+            r0.add_assign(&e0, &ev0.ctx.tower);
+            out[p.idx] = Some(Ok(Ciphertext {
+                c0: r0,
+                c1: e1,
+                level: p.ct.level,
+                scale: p.ct.scale,
+            }));
+        }
+    }
+    out.into_iter()
+        .map(|o| o.expect("every member resolved"))
+        .collect()
+}
+
+/// HEMult every member pair with the relinearization NTT passes fused.
+/// Pass the same ciphertext as `a` and `b` for Square. Members missing
+/// their relin key get the typed [`MissingKey`].
+pub fn mul_many(items: &[BatchedMul<'_>]) -> Vec<Result<Ciphertext, MissingKey>> {
+    let mut out: Vec<Option<Result<Ciphertext, MissingKey>>> =
+        items.iter().map(|_| None).collect();
+
+    struct Prep<'a> {
+        idx: usize,
+        ev: &'a Evaluator,
+        ksk: &'a KsKey,
+        d0: crate::ckks::RnsPoly,
+        d1: crate::ckks::RnsPoly,
+        decomp: HoistedDecomp,
+        level: usize,
+        scale: f64,
+    }
+    let mut preps: Vec<Prep<'_>> = Vec::new();
+    for (i, it) in items.iter().enumerate() {
+        let level = it.a.level.min(it.b.level);
+        let ksk = match it.ev.keys().get(KeyKind::Relin, level) {
+            Ok(k) => k,
+            Err(e) => {
+                out[i] = Some(Err(e));
+                continue;
+            }
+        };
+        // Identical to `Evaluator::mul` up to the key product: align,
+        // tensor, then hoist d2 instead of `apply`ing it (bit-identical
+        // by the hoisted identity).
+        let (a, b) = it.ev.align(it.a, it.b);
+        let tower = &it.ev.ctx.tower;
+        let mut d0 = a.c0.clone();
+        d0.mul_assign(&b.c0, tower);
+        let mut d1 = a.c0.clone();
+        d1.mul_assign(&b.c1, tower);
+        let mut t = a.c1.clone();
+        t.mul_assign(&b.c0, tower);
+        d1.add_assign(&t, tower);
+        let mut d2 = a.c1.clone();
+        d2.mul_assign(&b.c1, tower);
+        let decomp = ksk.hoist_pooled(&it.ev.ctx, &d2, it.ev.pool());
+        preps.push(Prep {
+            idx: i,
+            ev: it.ev,
+            ksk,
+            d0,
+            d1,
+            decomp,
+            level: a.level,
+            scale: a.scale * b.scale,
+        });
+    }
+
+    if !preps.is_empty() {
+        let ev0 = preps[0].ev;
+        let fp0 = crate::wire::params_fingerprint(&ev0.ctx.params);
+        for p in &preps {
+            assert_eq!(
+                crate::wire::params_fingerprint(&p.ev.ctx.params),
+                fp0,
+                "fused members must share one parameter set"
+            );
+        }
+        let jobs: Vec<FusedKsFinish<'_>> = preps
+            .iter()
+            .map(|p| FusedKsFinish { key: p.ksk, decomp: &p.decomp, g: 1 })
+            .collect();
+        let finished = apply_hoisted_fused(&ev0.ctx, &jobs, ev0.pool());
+        drop(jobs);
+        for (p, (e0, e1)) in preps.into_iter().zip(finished) {
+            let mut d0 = p.d0;
+            d0.add_assign(&e0, &ev0.ctx.tower);
+            let mut d1 = p.d1;
+            d1.add_assign(&e1, &ev0.ctx.tower);
+            let raw = Ciphertext { c0: d0, c1: d1, level: p.level, scale: p.scale };
+            out[p.idx] = Some(Ok(p.ev.rescale(&raw)));
+        }
+    }
+    out.into_iter()
+        .map(|o| o.expect("every member resolved"))
+        .collect()
+}

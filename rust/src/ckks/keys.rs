@@ -921,6 +921,137 @@ impl KsKey {
     }
 }
 
+/// One member of a cross-request fused key-switch finish: the owning
+/// tenant's key, the member's hoisted decomposition, and its Galois
+/// element (`1` = relinearization, no automorphism).
+pub struct FusedKsFinish<'a> {
+    pub key: &'a KsKey,
+    pub decomp: &'a HoistedDecomp,
+    pub g: usize,
+}
+
+/// Finish many hoisted key switches — possibly under *different tenants'
+/// keys* — with the NTT stage fused: one batched MLT forward pass per
+/// extended-chain modulus over **every member's every lifted digit**,
+/// instead of one `forward_batch` call per member.
+///
+/// This is the cross-request analogue of [`KsKey::apply_hoisted_with`]'s
+/// within-request digit batching and the batch former's execution
+/// primitive. Correctness is structural: the NTT tables are a pure
+/// function of the parameter set (so equal params fingerprints mean
+/// bit-identical tables across tenants), `forward_batch` transforms each
+/// polynomial independently, and the bit-reversal lands exactly where
+/// `to_eval`'s `forward_br` does — so each member's result is
+/// bit-identical to finishing it alone, whatever else rides the batch.
+/// The per-member key product and ModDown stay tenant-private.
+///
+/// All members must sit at the same level over the same chain (the batch
+/// former's compatibility key guarantees it; asserted here).
+pub fn apply_hoisted_fused(
+    ctx: &CkksContext,
+    jobs: &[FusedKsFinish<'_>],
+    pool: Option<&crate::tenancy::ScratchPool>,
+) -> Vec<(RnsPoly, RnsPoly)> {
+    if jobs.is_empty() {
+        return Vec::new();
+    }
+    let level = jobs[0].decomp.level;
+    for job in jobs {
+        assert_eq!(job.decomp.level, level, "fused members at mixed levels");
+        assert_eq!(job.key.level, level, "key level disagrees with the members");
+        assert_eq!(
+            job.decomp.parts.len(),
+            job.key.digits.len(),
+            "decomposition digit count disagrees with the key"
+        );
+    }
+    let active = ctx.chain_at(level);
+    let ext = ctx.extended_chain_at(level);
+
+    // Per-member automorphism of the lifted digits: a coefficient-domain
+    // permutation — members keep their own Galois elements, which is why
+    // different rotation steps still share one fused dispatch.
+    let mut member_fulls: Vec<Vec<RnsPoly>> = jobs
+        .iter()
+        .map(|job| {
+            job.decomp
+                .parts
+                .iter()
+                .map(|p| {
+                    if job.g == 1 {
+                        p.clone()
+                    } else {
+                        p.automorphism(job.g, &ctx.tower)
+                    }
+                })
+                .collect()
+        })
+        .collect();
+
+    // The fused MLT dispatch: per modulus, ONE forward_batch over all
+    // members' digit limbs (same Eval/bit-reversed convention as
+    // `apply_hoisted_with` — bit-identical to per-limb `forward_br`).
+    let total: usize = member_fulls.iter().map(|f| f.len()).sum();
+    if total >= 2 {
+        for (i, &ci) in ext.iter().enumerate() {
+            let table = &ctx.tower.contexts[ci].ntt;
+            let mut refs: Vec<&mut [u64]> = member_fulls
+                .iter_mut()
+                .flat_map(|fulls| fulls.iter_mut().map(|f| f.limbs[i].as_mut_slice()))
+                .collect();
+            table.forward_batch(&mut refs);
+            for fulls in member_fulls.iter_mut() {
+                for f in fulls.iter_mut() {
+                    bitrev_permute(&mut f.limbs[i]);
+                }
+            }
+        }
+        for fulls in member_fulls.iter_mut() {
+            for f in fulls.iter_mut() {
+                f.format = Format::Eval;
+            }
+        }
+    } else {
+        for fulls in member_fulls.iter_mut() {
+            for f in fulls.iter_mut() {
+                f.to_eval(&ctx.tower);
+            }
+        }
+    }
+
+    // Per-member key product + ModDown — tenant-private key material,
+    // one shared scratch walked member by member.
+    let finish = |scratch: &mut KeySwitchScratch| -> Vec<(RnsPoly, RnsPoly)> {
+        member_fulls
+            .iter()
+            .zip(jobs)
+            .map(|(fulls, job)| {
+                let mut acc0 = RnsPoly::zero(&ctx.tower, &ext, Format::Eval);
+                let mut acc1 = RnsPoly::zero(&ctx.tower, &ext, Format::Eval);
+                for (j, full) in fulls.iter().enumerate() {
+                    scratch.prod.copy_from(full);
+                    scratch.prod.mul_assign(&job.key.digits[j].0, &ctx.tower);
+                    acc0.add_assign(&scratch.prod, &ctx.tower);
+                    scratch.prod.copy_from(full);
+                    scratch.prod.mul_assign(&job.key.digits[j].1, &ctx.tower);
+                    acc1.add_assign(&scratch.prod, &ctx.tower);
+                }
+                let nq = active.len();
+                job.key.mod_down_in_place(ctx, &mut acc0, nq, scratch);
+                job.key.mod_down_in_place(ctx, &mut acc1, nq, scratch);
+                (acc0, acc1)
+            })
+            .collect()
+    };
+    match pool {
+        Some(p) => {
+            let mut lease = p.checkout(ctx.params.n);
+            finish(&mut lease)
+        }
+        None => KS_SCRATCH.with(|s| finish(&mut s.borrow_mut())),
+    }
+}
+
 /// Which key an [`EvalKeySet`] entry switches from.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub enum KeyKind {

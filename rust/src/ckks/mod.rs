@@ -1,6 +1,7 @@
 //! CKKS-RNS substrate (the FIDESlib substitute): everything Table I/II
 //! describes, built from scratch on 64-bit words.
 
+pub mod batched;
 pub mod bootstrap;
 pub mod client;
 pub mod encoding;
@@ -17,12 +18,13 @@ pub mod prime;
 pub mod program;
 pub mod rns;
 
+pub use batched::{galois_many, mul_many, BatchedGalois, BatchedMul};
 pub use client::{Decryptor, Encryptor, KeyGen};
 pub use encoding::{decode, encode, Complex, Encoder};
 pub use keys::{
-    bsgs_geometry, bsgs_steps, decomposition_count, galois_element, rotate_and_sum_steps,
-    EvalKeySet, EvalKeySpec, HoistedDecomp, KeyKind, KeySwitchScratch, KsKey, MissingKey,
-    SecretKey,
+    apply_hoisted_fused, bsgs_geometry, bsgs_steps, decomposition_count, galois_element,
+    rotate_and_sum_steps, EvalKeySet, EvalKeySpec, FusedKsFinish, HoistedDecomp, KeyKind,
+    KeySwitchScratch, KsKey, MissingKey, SecretKey,
 };
 pub use program::{FheProgram, OpCode, ProgramBuilder, ProgramError, Reg};
 pub use mlt_backend::MltBackend;

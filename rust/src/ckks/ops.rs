@@ -65,7 +65,7 @@ impl Evaluator {
         self
     }
 
-    fn pool(&self) -> Option<&crate::tenancy::ScratchPool> {
+    pub(crate) fn pool(&self) -> Option<&crate::tenancy::ScratchPool> {
         self.scratch_pool.as_deref()
     }
 
@@ -294,8 +294,9 @@ impl Evaluator {
     }
 
     /// Bring two ciphertexts to a common level (and check scales match to
-    /// within floating slack).
-    fn align(&self, a: &Ciphertext, b: &Ciphertext) -> (Ciphertext, Ciphertext) {
+    /// within floating slack). `pub(crate)` so the cross-request batched
+    /// entry points ([`super::batched`]) run the identical alignment.
+    pub(crate) fn align(&self, a: &Ciphertext, b: &Ciphertext) -> (Ciphertext, Ciphertext) {
         let level = a.level.min(b.level);
         let a2 = self.level_reduce(a, level);
         let b2 = self.level_reduce(b, level);

@@ -371,9 +371,32 @@ pub struct MetricsSnapshot {
     pub pool_bytes_hwm: u64,
     /// Requests bounced with `Overloaded` (key budget, not queue).
     pub overloaded: u64,
+    // --- wire v6: the cross-tenant batch-former block --------------------
+    /// Fused dispatches the batch former executed (any occupancy).
+    pub fused_dispatches: u64,
+    /// Member ops carried by those fused dispatches.
+    pub fused_members: u64,
+    /// Highest occupancy any fused dispatch reached.
+    pub fused_occupancy_peak: u64,
+    /// Fused-dispatch count per occupancy bucket: 1, 2–3, 4–7, 8+.
+    pub fused_hist: [u64; 4],
+    /// Ops queued in the batch former right now.
+    pub sched_depth: u64,
+    /// Submissions bounced by the batch former's own queue bound.
+    pub sched_rejected: u64,
 }
 
 impl MetricsSnapshot {
+    /// Mean members per fused dispatch (0 when the batch former never
+    /// fired).
+    pub fn mean_fused_occupancy(&self) -> f64 {
+        if self.fused_dispatches == 0 {
+            0.0
+        } else {
+            self.fused_members as f64 / self.fused_dispatches as f64
+        }
+    }
+
     /// Fold another node's snapshot into this one — the cluster view is
     /// the sum of its shards: counters and lane depths add
     /// (*saturating*: a long-lived gateway aggregating many shards must
@@ -414,6 +437,15 @@ impl MetricsSnapshot {
         // A high-water mark aggregates like the queue peak: max, not sum.
         self.pool_bytes_hwm = self.pool_bytes_hwm.max(other.pool_bytes_hwm);
         self.overloaded = self.overloaded.saturating_add(other.overloaded);
+        self.fused_dispatches = self.fused_dispatches.saturating_add(other.fused_dispatches);
+        self.fused_members = self.fused_members.saturating_add(other.fused_members);
+        // An occupancy peak aggregates like the other peaks: max, not sum.
+        self.fused_occupancy_peak = self.fused_occupancy_peak.max(other.fused_occupancy_peak);
+        for (mine, theirs) in self.fused_hist.iter_mut().zip(other.fused_hist.iter()) {
+            *mine = mine.saturating_add(*theirs);
+        }
+        self.sched_depth = self.sched_depth.saturating_add(other.sched_depth);
+        self.sched_rejected = self.sched_rejected.saturating_add(other.sched_rejected);
         // Backends don't sum: agree → keep, one side unknown → take the
         // known one, genuine disagreement → flag the aggregate as mixed.
         self.mlt_backend = match (self.mlt_backend, other.mlt_backend) {
@@ -500,6 +532,13 @@ pub struct Coordinator {
     /// The served evaluator — admission-time program validation runs
     /// against its context + public key set.
     ev: Arc<Evaluator>,
+    /// The process-wide cross-tenant batch former, when one is attached
+    /// and enabled: fusable FHEC-class single ops drain into it instead
+    /// of this tenant's own lane.
+    sched: Option<Arc<crate::sched::BatchScheduler>>,
+    /// This coordinator's tenant identity in the batch former's fairness
+    /// accounting (the key-blob fingerprint on the wire path).
+    tenant: u64,
     workers: Vec<std::thread::JoinHandle<()>>,
 }
 
@@ -508,6 +547,23 @@ impl Coordinator {
     /// `EvalKeySet`) and `model` are shared read-only; no secret key is
     /// ever handed over.
     pub fn start(ev: Arc<Evaluator>, model: Arc<ModelState>, cfg: ServeConfig) -> Self {
+        Self::start_with_scheduler(ev, model, cfg, None, 0)
+    }
+
+    /// [`Coordinator::start`], plus a shared cross-tenant
+    /// [`BatchScheduler`](crate::sched::BatchScheduler): fusable ops
+    /// (rotate/conjugate/square/mul away from Galois identity — see
+    /// [`crate::sched::compat_key`]) are routed to it under `tenant`'s
+    /// identity. A scheduler whose window is zero is ignored — the
+    /// `--batch-window-us 0` degenerate case IS the sequential lane path.
+    pub fn start_with_scheduler(
+        ev: Arc<Evaluator>,
+        model: Arc<ModelState>,
+        cfg: ServeConfig,
+        sched: Option<Arc<crate::sched::BatchScheduler>>,
+        tenant: u64,
+    ) -> Self {
+        let sched = sched.filter(|s| s.config().enabled());
         let lanes = [new_shared(), new_shared()];
         let metrics = Arc::new(Metrics::default());
         let slots = ev.ctx.params.slots();
@@ -534,6 +590,8 @@ impl Coordinator {
             cfg,
             slots,
             ev,
+            sched,
+            tenant,
             workers,
         }
     }
@@ -612,6 +670,40 @@ impl Coordinator {
                 ));
             }
             _ => {}
+        }
+        // Cross-tenant batch former: fusable ops drain into the shared
+        // scheduler (same validation above — the scheduler trusts its
+        // submitters), everything else rides this tenant's own lanes.
+        if let Some(sched) = &self.sched {
+            if let Some(key) = crate::sched::compat_key(&self.ev, &req) {
+                let (rtx, rrx) = channel();
+                let job = crate::sched::SchedJob {
+                    tenant: self.tenant,
+                    ev: self.ev.clone(),
+                    metrics: self.metrics.clone(),
+                    key,
+                    req,
+                    reply: rtx,
+                };
+                return match sched.submit(job) {
+                    Ok(()) => Ok(rrx),
+                    Err((job, e)) => {
+                        let req = job.req;
+                        match e {
+                            crate::sched::SchedSubmitError::QueueFull { depth } => {
+                                // Backpressure is backpressure, whichever
+                                // queue bounced it: count it against this
+                                // tenant too.
+                                self.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+                                Err((req, SubmitError::QueueFull { depth }))
+                            }
+                            crate::sched::SchedSubmitError::Stopped => {
+                                Err((req, SubmitError::Stopped))
+                            }
+                        }
+                    }
+                };
+            }
         }
         let class = req.op.class();
         let (rtx, rrx) = channel();
@@ -781,8 +873,10 @@ fn worker_loop(
     }
 }
 
-/// Build the timing-model trace for one request's op mix.
-fn request_trace(op: OpKind, level: usize, ev: &Evaluator, backend: Backend) -> Trace {
+/// Build the timing-model trace for one request's op mix. `pub(crate)`
+/// so the batch former's fused dispatches carry the same dual-dispatch
+/// sim timings as the sequential lane path.
+pub(crate) fn request_trace(op: OpKind, level: usize, ev: &Evaluator, backend: Backend) -> Trace {
     let p = SimParams {
         n: ev.ctx.params.n.max(256),
         l: level + 1,
@@ -1282,6 +1376,12 @@ mod tests {
             pool_misses: 2,
             pool_bytes_hwm: 500,
             overloaded: 0,
+            fused_dispatches: 3,
+            fused_members: 9,
+            fused_occupancy_peak: 4,
+            fused_hist: [1, 1, 1, 0],
+            sched_depth: 2,
+            sched_rejected: 1,
         };
         let b = MetricsSnapshot {
             served: 30,
@@ -1308,6 +1408,12 @@ mod tests {
             pool_misses: 1,
             pool_bytes_hwm: 300,
             overloaded: 2,
+            fused_dispatches: 2,
+            fused_members: 12,
+            fused_occupancy_peak: 8,
+            fused_hist: [0, 0, 1, 1],
+            sched_depth: 1,
+            sched_rejected: 2,
         };
         a.absorb(&b);
         assert_eq!(a.served, 40);
@@ -1335,6 +1441,14 @@ mod tests {
         // The pool high-water mark is a peak: max across shards, not sum.
         assert_eq!(a.pool_bytes_hwm, 500);
         assert_eq!(a.overloaded, 2);
+        assert_eq!(a.fused_dispatches, 5);
+        assert_eq!(a.fused_members, 21);
+        // The occupancy peak is a peak: max across shards, not sum.
+        assert_eq!(a.fused_occupancy_peak, 8);
+        assert_eq!(a.fused_hist, [1, 1, 2, 1]);
+        assert_eq!(a.sched_depth, 3);
+        assert_eq!(a.sched_rejected, 3);
+        assert!((a.mean_fused_occupancy() - 21.0 / 5.0).abs() < 1e-9);
         // Matching shard backends survive aggregation unchanged.
         assert_eq!(a.mlt_backend, crate::ckks::mlt_backend::codes::AVX2);
         // Absorbing an empty (Default) snapshot is the identity on counters

@@ -36,6 +36,10 @@
 //!   registry (LRU eviction to seed-compressed cold blobs under a memory
 //!   budget, exactly-once re-expansion) and the cross-request
 //!   size-classed `ScratchPool` for key-switch staging buffers.
+//! * [`sched`] — the cross-tenant batch former: fuses compatible
+//!   key-switch ops from many connections into single MLT dispatches
+//!   under deadline/max-batch admission with deficit-round-robin tenant
+//!   fairness.
 //! * [`workloads`] — Bootstrapping / LR / ResNet20 / BERT-Tiny op-graph
 //!   builders at the paper's Table V parameters.
 //! * [`tables`] — regenerators for every figure and table of SVI.
@@ -49,6 +53,7 @@ pub mod gpusim;
 pub mod isa;
 pub mod rtl;
 pub mod runtime;
+pub mod sched;
 pub mod systolic;
 pub mod tables;
 pub mod tenancy;

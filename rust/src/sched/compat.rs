@@ -1,0 +1,163 @@
+//! Compatibility keys: which queued ops may share one fused MLT dispatch.
+//!
+//! Two ops can ride the same `NttTable::forward_batch` call only when the
+//! transform they need is *the same transform*: identical parameter set
+//! (the NTT tables are a pure function of the params, so equal
+//! fingerprints mean bit-identical twiddle tables even across tenants),
+//! identical level and identical modulus-chain position (the extended
+//! chain the key-switch runs over), and the same op shape (a Galois
+//! finish and a relinearization finish walk different key material even
+//! though the NTT passes match). The Galois element itself is *not* part
+//! of the key: each member finishes with its own `g` and its own tenant's
+//! key pair — the fused stage is the per-modulus NTT over everyone's
+//! lifted digits, which is element-independent.
+
+use crate::ckks::{galois_element, Evaluator};
+use crate::coordinator::{OpKind, Request};
+
+/// The op-shape half of a [`CompatKey`]: which key-switch finish the
+/// members share.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub enum FuseShape {
+    /// Rotation / conjugation: hoisted Galois finish (per-member `g`).
+    Galois,
+    /// HEMult / square: relinearization finish of the tensor's `d2`.
+    Relin,
+}
+
+/// Everything that must agree before two queued ops may fuse.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+pub struct CompatKey {
+    /// Parameter-set fingerprint (same hash the wire handshake pins).
+    pub fingerprint: u64,
+    /// Effective level the key switch runs at (binary ops: the post-align
+    /// common level).
+    pub level: usize,
+    /// FNV-1a over the active modulus-chain positions at `level` — the
+    /// chain *identity*, not just its length.
+    pub chain: u64,
+    pub shape: FuseShape,
+}
+
+/// FNV-1a 64 over the chain position indices (mirrors the wire hash so
+/// equal chains hash equal across processes).
+fn chain_hash(chain: &[usize]) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for &c in chain {
+        for b in (c as u64).to_le_bytes() {
+            h ^= b as u64;
+            h = h.wrapping_mul(0x0000_0100_0000_01b3);
+        }
+    }
+    h
+}
+
+/// Classify a validated request for the batch former. `None` means the
+/// op has no fusable key-switch stage (or is a Galois identity) and must
+/// stay on the sequential lane path.
+pub fn compat_key(ev: &Evaluator, req: &Request) -> Option<CompatKey> {
+    let shape = match req.op {
+        OpKind::Rotate(k) => {
+            let slots = ev.ctx.params.slots();
+            // Rotation by 0 (mod slots) is the identity: no key switch to
+            // fuse, and `apply_galois` short-circuits it anyway.
+            if galois_element(k % slots, ev.ctx.params.n) == 1 {
+                return None;
+            }
+            FuseShape::Galois
+        }
+        OpKind::Conjugate => FuseShape::Galois,
+        OpKind::Square | OpKind::Mul => FuseShape::Relin,
+        _ => return None,
+    };
+    let level = match &req.ct2 {
+        Some(ct2) => req.ct.level.min(ct2.level),
+        None => req.ct.level,
+    };
+    Some(CompatKey {
+        fingerprint: crate::wire::params_fingerprint(&ev.ctx.params),
+        level,
+        chain: chain_hash(&ev.ctx.chain_at(level)),
+        shape,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::params::{CkksContext, CkksParams};
+    use crate::ckks::Ciphertext;
+    use crate::ckks::{Encryptor, KeyGen};
+    use crate::util::rng::Pcg64;
+
+    fn sample_ct(ev: &Evaluator, level: usize) -> Ciphertext {
+        let ctx = CkksContext::new(ev.ctx.params.clone());
+        let mut rng = Pcg64::new(0xBA7C);
+        let kg = KeyGen::new(&ctx, &mut rng);
+        let enc: Encryptor = kg.encryptor();
+        let slots = ctx.params.slots();
+        let z = vec![crate::ckks::encoding::Complex::new(0.1, 0.0); slots];
+        enc.encrypt_slots(&ctx, &z, level, &mut rng)
+    }
+
+    fn bare_ev() -> Evaluator {
+        Evaluator::without_keys(CkksContext::new(CkksParams::toy()))
+    }
+
+    #[test]
+    fn same_shape_same_level_groups_together() {
+        let ev = bare_ev();
+        let ct = sample_ct(&ev, 2);
+        let a = compat_key(&ev, &Request::new(1, OpKind::Rotate(1), ct.clone())).unwrap();
+        let b = compat_key(&ev, &Request::new(2, OpKind::Rotate(5), ct.clone())).unwrap();
+        let c = compat_key(&ev, &Request::new(3, OpKind::Conjugate, ct)).unwrap();
+        // Different Galois elements still share the fused NTT stage.
+        assert_eq!(a, b);
+        assert_eq!(a, c);
+        assert_eq!(a.shape, FuseShape::Galois);
+        assert_eq!(a.level, 2);
+    }
+
+    #[test]
+    fn level_and_shape_split_groups() {
+        let ev = bare_ev();
+        let hi = sample_ct(&ev, 3);
+        let lo = sample_ct(&ev, 2);
+        let a = compat_key(&ev, &Request::new(1, OpKind::Rotate(1), hi.clone())).unwrap();
+        let b = compat_key(&ev, &Request::new(2, OpKind::Rotate(1), lo.clone())).unwrap();
+        assert_ne!(a, b, "different levels never fuse");
+        let sq = compat_key(&ev, &Request::new(3, OpKind::Square, hi.clone())).unwrap();
+        assert_ne!(a, sq, "Galois and Relin finishes never fuse");
+        assert_eq!(sq.shape, FuseShape::Relin);
+        // Mul keys off the post-align common level = the other operand's.
+        let mul =
+            compat_key(&ev, &Request::new(4, OpKind::Mul, hi).with_ct2(lo)).unwrap();
+        assert_eq!(mul.level, 2);
+    }
+
+    #[test]
+    fn non_fusable_ops_stay_sequential() {
+        let ev = bare_ev();
+        let ct = sample_ct(&ev, 2);
+        for op in [
+            OpKind::Add,
+            OpKind::Sub,
+            OpKind::Negate,
+            OpKind::Rescale,
+            OpKind::AddConst(1.0),
+            OpKind::MulConst(2.0),
+            OpKind::LevelReduce(1),
+            OpKind::LinearScore,
+            OpKind::HomLinear,
+            OpKind::MulPlain,
+        ] {
+            assert!(
+                compat_key(&ev, &Request::new(1, op, ct.clone())).is_none(),
+                "{op:?} must not enter the batch former"
+            );
+        }
+        // The rotation identity has no key switch to fuse.
+        let slots = ev.ctx.params.slots();
+        assert!(compat_key(&ev, &Request::new(2, OpKind::Rotate(slots), ct)).is_none());
+    }
+}

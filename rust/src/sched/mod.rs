@@ -1,0 +1,457 @@
+//! Cross-tenant batch former: fuse compatible key-switch work from many
+//! connections into single MLT dispatches.
+//!
+//! The paper's core argument is amortization — NTT and base conversion
+//! are modulo-linear transforms whose per-polynomial cost collapses when
+//! many polynomials ride one wide dispatch. PR 4/5 exploited this
+//! *within* a request (`forward_batch` over a polynomial's limbs, hoisted
+//! key-switching over a program's rotation fan-out); this subsystem
+//! batches *across* requests, connections and tenants: coordinator lanes
+//! stop dispatching fusable ops one at a time and instead drain them into
+//! a [`BatchScheduler`] that groups queued ops by compatibility key
+//! (params fingerprint, level, modulus-chain position, op shape — see
+//! [`CompatKey`]) and executes each group through the batched `ckks`
+//! entry points, one `NttTable::forward_batch` per modulus over *every
+//! member's* lifted digits.
+//!
+//! **Admission policy.** Two knobs bound the latency cost of waiting for
+//! company: `--batch-window-us` (a lone op is dispatched once it has
+//! waited the window, full batch or not) and `--max-batch` (a group at
+//! occupancy cap flushes immediately). `--batch-window-us 0` disables the
+//! former entirely — the sequential per-request lane path, kept verbatim,
+//! is both the bit-exactness oracle and the degenerate case.
+//!
+//! **Fairness.** Within a group, members are drawn by deficit
+//! round-robin over tenants ([`DrrQueue`]): a tenant that floods the
+//! queue gets the leftover slots, never the whole batch, so a light
+//! tenant's op always rides the next dispatch (the QoS sharpening folded
+//! out of the PR 7 tenancy work).
+//!
+//! **Bit-exactness.** Grouping never changes results: members only share
+//! the per-modulus NTT passes (`forward_batch` is per-polynomial
+//! independent, and equal params fingerprints guarantee bit-identical
+//! tables across tenants); key products and ModDown stay per-member with
+//! that member's own key material. `tests/sched_batching.rs` asserts
+//! every fused response bit-identical to the sequential oracle.
+
+mod compat;
+mod drr;
+
+pub use compat::{compat_key, CompatKey, FuseShape};
+pub use drr::DrrQueue;
+
+use std::collections::HashMap;
+use std::panic::{catch_unwind, AssertUnwindSafe};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc::Sender;
+use std::sync::{Arc, Condvar, Mutex};
+use std::time::{Duration, Instant};
+
+use crate::ckks::{
+    galois_element, galois_many, mul_many, BatchedGalois, BatchedMul, Ciphertext, Evaluator,
+    MissingKey,
+};
+use crate::codegen::Backend;
+use crate::coordinator::{request_trace, Metrics, OpKind, Request, Response};
+use crate::gpusim::{simulate_trace, GpuConfig};
+
+/// Batch-former knobs (the serve CLI's `--batch-window-us` /
+/// `--max-batch`).
+#[derive(Debug, Clone)]
+pub struct SchedConfig {
+    /// Deadline admission: a queued op waits at most this long for
+    /// company before its group is dispatched as-is. `Duration::ZERO`
+    /// disables cross-request batching (the per-request oracle path).
+    pub window: Duration,
+    /// Occupancy cap per fused dispatch; a group reaching it flushes
+    /// immediately, before the window.
+    pub max_batch: usize,
+    /// Bound on admitted-but-undispatched ops across all groups
+    /// (backpressure, not OOM).
+    pub max_queue: usize,
+    /// Worker threads executing fused dispatches.
+    pub workers: usize,
+}
+
+impl Default for SchedConfig {
+    fn default() -> Self {
+        Self {
+            window: Duration::ZERO,
+            max_batch: 8,
+            max_queue: 256,
+            workers: 2,
+        }
+    }
+}
+
+impl SchedConfig {
+    /// Whether the batch former is active (window > 0).
+    pub fn enabled(&self) -> bool {
+        self.window > Duration::ZERO
+    }
+}
+
+/// Counters the batch former exports (wire v6 metrics block).
+#[derive(Debug, Default)]
+pub struct SchedMetrics {
+    /// Fused dispatches executed (every group flush, any occupancy).
+    pub fused_dispatches: AtomicU64,
+    /// Member ops carried by those dispatches.
+    pub fused_members: AtomicU64,
+    /// Highest occupancy any dispatch reached.
+    pub occupancy_peak: AtomicU64,
+    /// Dispatch count per occupancy bucket: 1, 2–3, 4–7, 8+.
+    pub occupancy_hist: [AtomicU64; 4],
+    /// Submissions bounced by the scheduler's own queue bound.
+    pub rejected: AtomicU64,
+}
+
+/// Histogram bucket index for a dispatch of occupancy `n`.
+pub fn occupancy_bucket(n: usize) -> usize {
+    match n {
+        0 | 1 => 0,
+        2 | 3 => 1,
+        4..=7 => 2,
+        _ => 3,
+    }
+}
+
+impl SchedMetrics {
+    /// Mean members per fused dispatch.
+    pub fn mean_occupancy(&self) -> f64 {
+        let d = self.fused_dispatches.load(Ordering::Relaxed).max(1);
+        self.fused_members.load(Ordering::Relaxed) as f64 / d as f64
+    }
+}
+
+/// Why the scheduler did not admit a job.
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub enum SchedSubmitError {
+    /// The scheduler-wide queue bound is reached.
+    QueueFull { depth: usize },
+    /// The scheduler is shutting down.
+    Stopped,
+}
+
+/// One admitted fusable op: the submitting tenant's evaluator and
+/// serving counters ride along so the dispatch can execute with the right
+/// keys and account to the right tenant.
+pub struct SchedJob {
+    /// Tenant id (key-blob fingerprint) — the DRR fairness identity.
+    pub tenant: u64,
+    pub ev: Arc<Evaluator>,
+    /// The submitting coordinator's counters: fused members still count
+    /// as served ops of their own tenant.
+    pub metrics: Arc<Metrics>,
+    pub key: CompatKey,
+    pub req: Request,
+    pub reply: Sender<Response>,
+}
+
+struct Group {
+    jobs: DrrQueue<SchedJob>,
+    /// When the group's current window opened (the enqueue instant of
+    /// its oldest member; reset when leftovers survive a partial flush).
+    oldest: Instant,
+}
+
+struct State {
+    groups: HashMap<CompatKey, Group>,
+    /// Total queued jobs across groups (the bounded quantity).
+    depth: usize,
+    shutdown: bool,
+}
+
+struct Inner {
+    state: Mutex<State>,
+    cv: Condvar,
+    cfg: SchedConfig,
+    metrics: SchedMetrics,
+}
+
+/// The cross-tenant batch former. One per server process; every tenant's
+/// coordinator routes its fusable FHEC-class ops here (when the window is
+/// nonzero), and the worker threads flush compatibility groups under the
+/// deadline/max-batch policy. Dropping the last handle drains every
+/// queued group (responses are still delivered) and joins the workers.
+pub struct BatchScheduler {
+    inner: Arc<Inner>,
+    workers: Mutex<Vec<std::thread::JoinHandle<()>>>,
+}
+
+impl BatchScheduler {
+    pub fn start(cfg: SchedConfig) -> Self {
+        let inner = Arc::new(Inner {
+            state: Mutex::new(State {
+                groups: HashMap::new(),
+                depth: 0,
+                shutdown: false,
+            }),
+            cv: Condvar::new(),
+            cfg: cfg.clone(),
+            metrics: SchedMetrics::default(),
+        });
+        let mut workers = Vec::new();
+        for _ in 0..cfg.workers.max(1) {
+            let inner = inner.clone();
+            workers.push(std::thread::spawn(move || worker_loop(&inner)));
+        }
+        Self {
+            inner,
+            workers: Mutex::new(workers),
+        }
+    }
+
+    pub fn config(&self) -> &SchedConfig {
+        &self.inner.cfg
+    }
+
+    pub fn metrics(&self) -> &SchedMetrics {
+        &self.inner.metrics
+    }
+
+    /// Instantaneous queued-op count across all groups.
+    pub fn depth(&self) -> usize {
+        self.inner.state.lock().unwrap().depth
+    }
+
+    /// Admit a fusable op into its compatibility group. The caller
+    /// (coordinator `submit`) has already validated the request.
+    pub fn submit(&self, job: SchedJob) -> Result<(), (SchedJob, SchedSubmitError)> {
+        let inner = &self.inner;
+        let mut st = inner.state.lock().unwrap();
+        if st.shutdown {
+            return Err((job, SchedSubmitError::Stopped));
+        }
+        if st.depth >= inner.cfg.max_queue {
+            inner.metrics.rejected.fetch_add(1, Ordering::Relaxed);
+            return Err((job, SchedSubmitError::QueueFull { depth: st.depth }));
+        }
+        let now = Instant::now();
+        let key = job.key;
+        let tenant = job.tenant;
+        let group = st.groups.entry(key).or_insert_with(|| Group {
+            jobs: DrrQueue::default(),
+            oldest: now,
+        });
+        if group.jobs.is_empty() {
+            group.oldest = now;
+        }
+        group.jobs.push(tenant, job);
+        st.depth += 1;
+        drop(st);
+        // One worker suffices: it either flushes a full group or becomes
+        // the timed waiter for the earliest window deadline.
+        inner.cv.notify_one();
+        Ok(())
+    }
+}
+
+impl Drop for BatchScheduler {
+    fn drop(&mut self) {
+        {
+            let mut st = self.inner.state.lock().unwrap();
+            st.shutdown = true;
+        }
+        self.inner.cv.notify_all();
+        for h in self.workers.lock().unwrap().drain(..) {
+            let _ = h.join();
+        }
+    }
+}
+
+/// Claim the next group to flush: one at occupancy cap immediately, one
+/// whose window expired, or (on shutdown) any nonempty group — graceful
+/// drain. Blocks on the condvar until the earliest deadline; `None` only
+/// on shutdown with everything drained.
+fn claim_fused(inner: &Inner) -> Option<Vec<SchedJob>> {
+    let mut st = inner.state.lock().unwrap();
+    loop {
+        let now = Instant::now();
+        let mut ripe: Option<CompatKey> = None;
+        let mut next_deadline: Option<Duration> = None;
+        for (k, g) in st.groups.iter() {
+            if g.jobs.is_empty() {
+                continue;
+            }
+            let waited = now.duration_since(g.oldest);
+            if st.shutdown || g.jobs.len() >= inner.cfg.max_batch || waited >= inner.cfg.window {
+                ripe = Some(*k);
+                break;
+            }
+            let remain = inner.cfg.window - waited;
+            next_deadline = Some(next_deadline.map_or(remain, |d| d.min(remain)));
+        }
+        if let Some(k) = ripe {
+            let group = st.groups.get_mut(&k).expect("ripe key present");
+            let picked = group.jobs.pick(inner.cfg.max_batch);
+            st.depth -= picked.len();
+            if group.jobs.is_empty() {
+                st.groups.remove(&k);
+            } else {
+                // Leftovers beyond the occupancy cap open a fresh window:
+                // they ride the next dispatch at most one window later.
+                group.oldest = now;
+            }
+            return Some(picked);
+        }
+        if st.shutdown {
+            return None;
+        }
+        st = match next_deadline {
+            Some(d) => inner.cv.wait_timeout(st, d).unwrap().0,
+            None => inner.cv.wait(st).unwrap(),
+        };
+    }
+}
+
+fn worker_loop(inner: &Inner) {
+    let gpu = GpuConfig::default();
+    while let Some(batch) = claim_fused(inner) {
+        execute_fused(inner, batch, &gpu);
+    }
+}
+
+/// Execute one group's members through the fused `ckks` entry points.
+fn run_members(jobs: &[SchedJob]) -> Vec<Result<Ciphertext, MissingKey>> {
+    match jobs[0].key.shape {
+        FuseShape::Galois => {
+            let items: Vec<BatchedGalois<'_>> = jobs
+                .iter()
+                .map(|job| {
+                    let g = match job.req.op {
+                        OpKind::Rotate(k) => {
+                            let slots = job.ev.ctx.params.slots();
+                            galois_element(k % slots, job.ev.ctx.params.n)
+                        }
+                        OpKind::Conjugate => 2 * job.ev.ctx.params.n - 1,
+                        other => unreachable!("non-Galois op {other:?} in a Galois group"),
+                    };
+                    BatchedGalois { ev: &job.ev, ct: &job.req.ct, g }
+                })
+                .collect();
+            galois_many(&items)
+        }
+        FuseShape::Relin => {
+            let items: Vec<BatchedMul<'_>> = jobs
+                .iter()
+                .map(|job| BatchedMul {
+                    ev: &job.ev,
+                    a: &job.req.ct,
+                    // Square is `a == b`; Mul's ct2 is validated at submit.
+                    b: job.req.ct2.as_ref().unwrap_or(&job.req.ct),
+                })
+                .collect();
+            mul_many(&items)
+        }
+    }
+}
+
+/// The sequential fallback when a fused dispatch panics: serve each
+/// member alone so one poisoned operand costs one request, not the group.
+fn execute_one(job: &SchedJob) -> Result<Ciphertext, MissingKey> {
+    match job.req.op {
+        OpKind::Rotate(k) => job.ev.rotate(&job.req.ct, k),
+        OpKind::Conjugate => job.ev.conjugate(&job.req.ct),
+        OpKind::Square => job.ev.mul(&job.req.ct, &job.req.ct),
+        OpKind::Mul => job
+            .ev
+            .mul(&job.req.ct, job.req.ct2.as_ref().expect("validated at submit")),
+        other => unreachable!("non-fusable op {other:?} reached the batch former"),
+    }
+}
+
+fn execute_fused(inner: &Inner, jobs: Vec<SchedJob>, gpu: &GpuConfig) {
+    let n = jobs.len();
+    if n == 0 {
+        return;
+    }
+    let m = &inner.metrics;
+    m.fused_dispatches.fetch_add(1, Ordering::Relaxed);
+    m.fused_members.fetch_add(n as u64, Ordering::Relaxed);
+    m.occupancy_peak.fetch_max(n as u64, Ordering::Relaxed);
+    m.occupancy_hist[occupancy_bucket(n)].fetch_add(1, Ordering::Relaxed);
+
+    let t0 = Instant::now();
+    let results: Vec<Option<Result<Ciphertext, MissingKey>>> =
+        match catch_unwind(AssertUnwindSafe(|| run_members(&jobs))) {
+            Ok(r) => r.into_iter().map(Some).collect(),
+            Err(_) => jobs
+                .iter()
+                .map(|job| catch_unwind(AssertUnwindSafe(|| execute_one(job))).ok())
+                .collect(),
+        };
+    let service = t0.elapsed();
+
+    // Account + respond per member. Each involved tenant sees the fused
+    // dispatch as one batch of its own; `Response::batch_size` carries
+    // the *fused* occupancy so clients observe the cross-tenant sharing.
+    let mut counted: Vec<u64> = Vec::new();
+    for (job, result) in jobs.into_iter().zip(results) {
+        let Some(out) = result else {
+            eprintln!(
+                "sched: request {} ({:?}) panicked in a fused dispatch; dropped",
+                job.req.id, job.req.op
+            );
+            continue;
+        };
+        if !counted.contains(&job.tenant) {
+            counted.push(job.tenant);
+            job.metrics.batches.fetch_add(1, Ordering::Relaxed);
+        }
+        job.metrics.served.fetch_add(1, Ordering::Relaxed);
+        // Every fusable op is FHEC-class (key-switch pipelines).
+        job.metrics.fhec_served.fetch_add(1, Ordering::Relaxed);
+        job.metrics
+            .total_service_us
+            .fetch_add(service.as_micros() as u64, Ordering::Relaxed);
+        let level = out.as_ref().map(|c| c.level).unwrap_or(job.req.ct.level);
+        let base = request_trace(job.req.op, level, &job.ev, Backend::A100);
+        let fhec = request_trace(job.req.op, level, &job.ev, Backend::A100Fhec);
+        let _ = job.reply.send(Response {
+            id: job.req.id,
+            ct: out,
+            service,
+            sim_base_us: simulate_trace(gpu, &base).latency_us(gpu),
+            sim_fhec_us: simulate_trace(gpu, &fhec).latency_us(gpu),
+            batch_size: n,
+        });
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn occupancy_buckets() {
+        assert_eq!(occupancy_bucket(1), 0);
+        assert_eq!(occupancy_bucket(2), 1);
+        assert_eq!(occupancy_bucket(3), 1);
+        assert_eq!(occupancy_bucket(4), 2);
+        assert_eq!(occupancy_bucket(7), 2);
+        assert_eq!(occupancy_bucket(8), 3);
+        assert_eq!(occupancy_bucket(100), 3);
+    }
+
+    #[test]
+    fn config_enabled_iff_window_positive() {
+        assert!(!SchedConfig::default().enabled());
+        let on = SchedConfig {
+            window: Duration::from_micros(200),
+            ..SchedConfig::default()
+        };
+        assert!(on.enabled());
+    }
+
+    #[test]
+    fn empty_scheduler_starts_and_drains() {
+        let s = BatchScheduler::start(SchedConfig {
+            window: Duration::from_micros(100),
+            ..SchedConfig::default()
+        });
+        assert_eq!(s.depth(), 0);
+        assert_eq!(s.metrics().fused_dispatches.load(Ordering::Relaxed), 0);
+        drop(s); // joins workers without hanging
+    }
+}

@@ -54,13 +54,32 @@ fn registry_config(args: &Args) -> RegistryConfig {
     }
 }
 
+fn sched_config(args: &Args) -> crate::sched::SchedConfig {
+    let d = crate::sched::SchedConfig::default();
+    crate::sched::SchedConfig {
+        // Default 0 = disabled: the sequential per-request oracle path.
+        window: Duration::from_micros(args.opt_u64("batch-window-us", 0)),
+        // The fused occupancy cap tracks the lane batch cap.
+        max_batch: args.opt_usize("max-batch", d.max_batch),
+        max_queue: args.opt_usize("max-queue", d.max_queue),
+        workers: args.opt_usize("batch-workers", d.workers),
+    }
+}
+
 /// `serve --listen <addr> [--params toy|medium] [--fhec-workers N]
 /// [--cuda-workers N] [--max-batch N] [--max-queue N] [--linger-ms N]
-/// [--key-budget-mb N] [--max-resident-tenants N]`
+/// [--key-budget-mb N] [--max-resident-tenants N] [--batch-window-us N]
+/// [--batch-workers N]`
 ///
 /// The two registry knobs bound expanded tenant key sets (0 = no
 /// limit): past the budget, cold tenants are demoted to their
 /// seed-compressed blobs and re-expanded on demand.
+///
+/// `--batch-window-us N` (0 = off) turns on the cross-tenant batch
+/// former: compatible key-switch ops from *all* connections fuse into
+/// single MLT dispatches, each op waiting at most N µs for company,
+/// with `--max-batch` capping fused occupancy and deficit round-robin
+/// keeping tenants fair inside a batch.
 pub fn run_serve(args: &Args) -> i32 {
     let listen = args.opt("listen").unwrap_or(DEFAULT_ADDR);
     let pname = args.opt("params").unwrap_or("toy");
@@ -82,10 +101,21 @@ pub fn run_serve(args: &Args) -> i32 {
         params.depth,
         params_fingerprint(&params)
     );
+    let sched = sched_config(args);
+    if sched.enabled() {
+        println!(
+            "fhecore-serve: cross-tenant batching on (window {} us, max batch {}, \
+             {} worker(s))",
+            sched.window.as_micros(),
+            sched.max_batch,
+            sched.workers
+        );
+    }
     let opts = ServeOptions {
         params,
         serve: serve_config(args),
         registry: registry_config(args),
+        sched,
         verbose: args.has_flag("verbose"),
     };
     match serve(listener, opts) {
@@ -297,7 +327,8 @@ pub fn run_cluster(args: &Args) -> i32 {
                         for (shard, s) in &m.shards {
                             println!(
                                 "shard {shard}: served {} (fhec {} cuda {}, programs {}), \
-                                 depths [{}, {}], rejected {}, mlt {}",
+                                 depths [{}, {}], rejected {}, mlt {}, fused {} \
+                                 (occupancy peak {} mean {:.2})",
                                 s.served,
                                 s.fhec_served,
                                 s.cuda_served,
@@ -305,7 +336,10 @@ pub fn run_cluster(args: &Args) -> i32 {
                                 s.fhec_depth,
                                 s.cuda_depth,
                                 s.rejected,
-                                crate::ckks::mlt_backend::backend_code_name(s.mlt_backend)
+                                crate::ckks::mlt_backend::backend_code_name(s.mlt_backend),
+                                s.fused_dispatches,
+                                s.fused_occupancy_peak,
+                                s.mean_fused_occupancy()
                             );
                         }
                         let t = m.total();
@@ -334,6 +368,15 @@ pub fn run_cluster(args: &Args) -> i32 {
                             t.key_evictions,
                             t.key_expansions,
                             t.overloaded
+                        );
+                        println!(
+                            "cluster batching: fused dispatches {}, members {}, \
+                             occupancy peak {}, hist 1|2-3|4-7|8+ = {:?}, rejected {}",
+                            t.fused_dispatches,
+                            t.fused_members,
+                            t.fused_occupancy_peak,
+                            t.fused_hist,
+                            t.sched_rejected
                         );
                         0
                     }
@@ -516,6 +559,18 @@ fn fetch_metrics(addr: &str, params: CkksParams, timeout: Duration) -> Result<()
     println!(
         "  pool           hits {}  misses {}  hwm {} B",
         m.pool_hits, m.pool_misses, m.pool_bytes_hwm
+    );
+    // The CI batching smoke greps this line: "peak" is field 4.
+    println!(
+        "  batch occupancy  peak {}  mean {:.2}  (fused {} dispatches / {} members; \
+         hist 1|2-3|4-7|8+ = {:?}; depth {}, rejected {})",
+        m.fused_occupancy_peak,
+        m.mean_fused_occupancy(),
+        m.fused_dispatches,
+        m.fused_members,
+        m.fused_hist,
+        m.sched_depth,
+        m.sched_rejected
     );
     Ok(())
 }

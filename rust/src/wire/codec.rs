@@ -980,6 +980,15 @@ impl WireWrite for MetricsSnapshot {
         put_u64(out, self.pool_misses);
         put_u64(out, self.pool_bytes_hwm);
         put_u64(out, self.overloaded);
+        // v6 batch-former block, unconditional for the same reason.
+        put_u64(out, self.fused_dispatches);
+        put_u64(out, self.fused_members);
+        put_u64(out, self.fused_occupancy_peak);
+        for b in self.fused_hist {
+            put_u64(out, b);
+        }
+        put_u64(out, self.sched_depth);
+        put_u64(out, self.sched_rejected);
     }
 }
 
@@ -1010,6 +1019,12 @@ impl WireRead for MetricsSnapshot {
             pool_misses: r.u64()?,
             pool_bytes_hwm: r.u64()?,
             overloaded: r.u64()?,
+            fused_dispatches: r.u64()?,
+            fused_members: r.u64()?,
+            fused_occupancy_peak: r.u64()?,
+            fused_hist: [r.u64()?, r.u64()?, r.u64()?, r.u64()?],
+            sched_depth: r.u64()?,
+            sched_rejected: r.u64()?,
         })
     }
 }

@@ -85,16 +85,24 @@ pub const WIRE_MAGIC: [u8; 4] = *b"FHEC";
 /// cold tenant would exceed the server's key-memory budget (retryable,
 /// with a server-suggested delay), and `MetricsSnapshot` grows the
 /// registry/pool counter block.
-pub const WIRE_VERSION: u16 = 5;
+///
+/// v6 (cross-tenant batching telemetry): `MetricsSnapshot` grows the
+/// batch-former block — fused-dispatch/member counters, the occupancy
+/// peak and 4-bucket occupancy histogram, and the scheduler's queue
+/// depth/rejection counters — following the exact v3/v4/v5 append
+/// precedent. No request or response body changes: old clients serve
+/// unchanged, and as with every bump the `MetricsResp` payload is the
+/// only RPC a v5 binary can no longer decode (strict `expect_done`).
+pub const WIRE_VERSION: u16 = 6;
 
 /// Peer versions this build serves. Each bump since v2 only appended
 /// fields — to the `MetricsResp` payload (`programs` in v3,
-/// `mlt_backend` in v4, the registry/pool block in v5) and, in v5, an
-/// *optional* trailing tenant id on request bodies — so v2/v4-era
-/// binaries decode the whole serving surface except the metrics RPC.
-/// That is what accepting their `Hello`s buys.
+/// `mlt_backend` in v4, the registry/pool block in v5, the batch-former
+/// block in v6) and, in v5, an *optional* trailing tenant id on request
+/// bodies — so v2/v5-era binaries decode the whole serving surface
+/// except the metrics RPC. That is what accepting their `Hello`s buys.
 pub fn version_accepted(v: u16) -> bool {
-    v == 2 || v == 3 || v == 4 || v == WIRE_VERSION
+    v == 2 || v == 3 || v == 4 || v == 5 || v == WIRE_VERSION
 }
 
 /// Capped exponential backoff for `Busy` retries, shared by

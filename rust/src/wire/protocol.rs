@@ -582,6 +582,12 @@ mod tests {
             pool_misses: 4,
             pool_bytes_hwm: 1 << 16,
             overloaded: 1,
+            fused_dispatches: 6,
+            fused_members: 20,
+            fused_occupancy_peak: 7,
+            fused_hist: [1, 2, 3, 0],
+            sched_depth: 2,
+            sched_rejected: 1,
         }
     }
 

@@ -47,6 +47,10 @@ pub struct ServeOptions {
     /// Memory budget for resident (expanded) tenant key sets; the
     /// default is unlimited (every pushed tenant stays resident).
     pub registry: RegistryConfig,
+    /// Cross-tenant batch former knobs (`--batch-window-us`,
+    /// `--max-batch`); the default window of zero disables it — every
+    /// request rides its tenant's own sequential lanes.
+    pub sched: crate::sched::SchedConfig,
     /// Per-connection log lines on stdout.
     pub verbose: bool,
 }
@@ -57,6 +61,7 @@ impl ServeOptions {
             params,
             serve: ServeConfig::default(),
             registry: RegistryConfig::default(),
+            sched: crate::sched::SchedConfig::default(),
             verbose: false,
         }
     }
@@ -78,6 +83,10 @@ struct ServerShared {
     /// Cross-tenant pool of key-switch staging buffers; every tenant's
     /// evaluator routes through it.
     pool: Arc<ScratchPool>,
+    /// The process-wide batch former (when `--batch-window-us` > 0):
+    /// every tenant's coordinator drains its fusable ops here, so work
+    /// from different connections fuses into single MLT dispatches.
+    sched: Option<Arc<crate::sched::BatchScheduler>>,
     /// Final counters of demoted/replaced engines — evicting a tenant
     /// must not erase what it served.
     retired: Mutex<MetricsSnapshot>,
@@ -99,7 +108,15 @@ impl ServerShared {
             Evaluator::new(ctx, Arc::new(keys)).with_scratch_pool(self.pool.clone()),
         );
         let model = Arc::new(default_model(&ev));
-        let coord = Coordinator::start(ev.clone(), model, self.serve.clone());
+        // The tenant's fairness identity in the batch former is the same
+        // fingerprint the registry keys it by.
+        let coord = Coordinator::start_with_scheduler(
+            ev.clone(),
+            model,
+            self.serve.clone(),
+            self.sched.clone(),
+            fnv1a64(blob),
+        );
         Ok((Arc::new(Engine { ev, coord }), bytes))
     }
 
@@ -165,6 +182,18 @@ impl ServerShared {
         snap.pool_hits = ps.hits;
         snap.pool_misses = ps.misses;
         snap.pool_bytes_hwm = ps.bytes_hwm;
+        if let Some(sched) = &self.sched {
+            use std::sync::atomic::Ordering::Relaxed;
+            let sm = sched.metrics();
+            snap.fused_dispatches = sm.fused_dispatches.load(Relaxed);
+            snap.fused_members = sm.fused_members.load(Relaxed);
+            snap.fused_occupancy_peak = sm.occupancy_peak.load(Relaxed);
+            for (out, bucket) in snap.fused_hist.iter_mut().zip(sm.occupancy_hist.iter()) {
+                *out = bucket.load(Relaxed);
+            }
+            snap.sched_depth = sched.depth() as u64;
+            snap.sched_rejected = sm.rejected.load(Relaxed);
+        }
         snap
     }
 }
@@ -185,12 +214,17 @@ fn default_model(ev: &Evaluator) -> ModelState {
 /// drains the coordinator gracefully.
 pub fn serve(listener: TcpListener, opts: ServeOptions) -> std::io::Result<()> {
     let addr = listener.local_addr()?;
+    let sched = opts
+        .sched
+        .enabled()
+        .then(|| Arc::new(crate::sched::BatchScheduler::start(opts.sched.clone())));
     let shared = Arc::new(ServerShared {
         fingerprint: params_fingerprint(&opts.params),
         params: opts.params,
         serve: opts.serve,
         registry: TenantRegistry::new(opts.registry),
         pool: Arc::new(ScratchPool::new()),
+        sched,
         retired: Mutex::new(MetricsSnapshot::default()),
         stop: AtomicBool::new(false),
         verbose: opts.verbose,

@@ -1,0 +1,258 @@
+//! Cross-tenant batching: fused MLT dispatches must be **bit-identical**
+//! to the sequential per-request path.
+//!
+//! Three tenants with *distinct* key sets over one parameter set submit
+//! concurrently at mixed levels; every fused response must equal the
+//! same op run alone on that tenant's own evaluator (the oracle), and
+//! the batch former's metrics must show that fusion actually happened
+//! (occupancy > 1), not that everything quietly fell back to sequential.
+
+use std::sync::Arc;
+use std::time::Duration;
+
+use fhecore::ckks::encoding::Complex;
+use fhecore::ckks::params::{CkksContext, CkksParams};
+use fhecore::ckks::{
+    galois_element, galois_many, mul_many, BatchedGalois, BatchedMul, Ciphertext, EvalKeySpec,
+    Evaluator, KeyGen,
+};
+use fhecore::coordinator::{
+    Coordinator, ModelState, OpKind, Request, Response, ServeConfig,
+};
+use fhecore::sched::{BatchScheduler, SchedConfig};
+use fhecore::util::rng::Pcg64;
+
+/// One tenant: its own key material (seed-derived, so every tenant's
+/// keys differ) over the shared toy parameter set.
+fn tenant(seed: u64) -> (Arc<Evaluator>, Ciphertext) {
+    let ctx = CkksContext::new(CkksParams::toy());
+    let mut rng = Pcg64::new(seed);
+    let kg = KeyGen::new(&ctx, &mut rng);
+    let slots = ctx.params.slots();
+    let spec = EvalKeySpec::serving(slots).with_rotations(&[1, 3]);
+    let keys = kg.eval_key_set(&ctx, &spec, &mut rng);
+    let enc = kg.encryptor();
+    let z: Vec<Complex> = (0..slots)
+        .map(|i| Complex::new(0.01 * ((seed as usize + i) % 9) as f64, 0.0))
+        .collect();
+    let ev = Evaluator::new(ctx, Arc::new(keys));
+    let ct = enc.encrypt_slots(&ev.ctx, &z, ev.ctx.max_level(), &mut rng);
+    (Arc::new(ev), ct)
+}
+
+fn demo_model(ev: &Evaluator) -> Arc<ModelState> {
+    let slots = ev.ctx.params.slots();
+    let w: Vec<Complex> = (0..slots)
+        .map(|i| Complex::new(0.002 * (i % 50) as f64, 0.0))
+        .collect();
+    Arc::new(ModelState { weights_pt: ev.encode(&w, ev.ctx.max_level()), rot_steps: slots })
+}
+
+#[test]
+fn fused_galois_is_bit_identical_across_tenants() {
+    let tenants: Vec<_> = (0..3).map(|i| tenant(0xABC + i)).collect();
+    let n = tenants[0].0.ctx.params.n;
+    let slots = tenants[0].0.ctx.params.slots();
+    // A mixed group: rotate(1), rotate(3), conjugate — one per tenant —
+    // plus a second op from tenant 0 (two members of one owner fuse too).
+    let items = vec![
+        BatchedGalois { ev: &tenants[0].0, ct: &tenants[0].1, g: galois_element(1 % slots, n) },
+        BatchedGalois { ev: &tenants[1].0, ct: &tenants[1].1, g: galois_element(3 % slots, n) },
+        BatchedGalois { ev: &tenants[2].0, ct: &tenants[2].1, g: 2 * n - 1 },
+        BatchedGalois { ev: &tenants[0].0, ct: &tenants[0].1, g: galois_element(3 % slots, n) },
+    ];
+    let got = galois_many(&items);
+    let want = [
+        tenants[0].0.rotate(&tenants[0].1, 1).unwrap(),
+        tenants[1].0.rotate(&tenants[1].1, 3).unwrap(),
+        tenants[2].0.conjugate(&tenants[2].1).unwrap(),
+        tenants[0].0.rotate(&tenants[0].1, 3).unwrap(),
+    ];
+    assert_eq!(got.len(), want.len());
+    for (i, (g, w)) in got.into_iter().zip(want.iter()).enumerate() {
+        assert_eq!(&g.unwrap(), w, "member {i} must be bit-identical to the sequential path");
+    }
+}
+
+#[test]
+fn fused_mul_is_bit_identical_across_tenants() {
+    let tenants: Vec<_> = (0..3).map(|i| tenant(0xD00 + i)).collect();
+    // Squares plus a genuine binary mul (distinct operands) at one level.
+    let other = tenants[2].0.add(&tenants[2].1, &tenants[2].1);
+    let items = vec![
+        BatchedMul { ev: &tenants[0].0, a: &tenants[0].1, b: &tenants[0].1 },
+        BatchedMul { ev: &tenants[1].0, a: &tenants[1].1, b: &tenants[1].1 },
+        BatchedMul { ev: &tenants[2].0, a: &tenants[2].1, b: &other },
+    ];
+    let got = mul_many(&items);
+    let want = [
+        tenants[0].0.mul(&tenants[0].1, &tenants[0].1).unwrap(),
+        tenants[1].0.mul(&tenants[1].1, &tenants[1].1).unwrap(),
+        tenants[2].0.mul(&tenants[2].1, &other).unwrap(),
+    ];
+    for (i, (g, w)) in got.into_iter().zip(want.iter()).enumerate() {
+        assert_eq!(&g.unwrap(), w, "member {i} must be bit-identical to the sequential path");
+    }
+}
+
+#[test]
+fn missing_key_member_does_not_poison_the_batch() {
+    let (ev_ok, ct_ok) = tenant(0x111);
+    // A tenant whose key set has no rotation keys at all.
+    let ctx = CkksContext::new(CkksParams::toy());
+    let mut rng = Pcg64::new(0x222);
+    let kg = KeyGen::new(&ctx, &mut rng);
+    let keys = kg.eval_key_set(&ctx, &EvalKeySpec::relin_only(), &mut rng);
+    let enc = kg.encryptor();
+    let slots = ctx.params.slots();
+    let z = vec![Complex::new(0.3, 0.0); slots];
+    let ev_bare = Evaluator::new(ctx, Arc::new(keys));
+    let ct_bare = enc.encrypt_slots(&ev_bare.ctx, &z, ev_bare.ctx.max_level(), &mut rng);
+
+    let n = ev_ok.ctx.params.n;
+    let g = galois_element(1 % slots, n);
+    let items = vec![
+        BatchedGalois { ev: &ev_bare, ct: &ct_bare, g },
+        BatchedGalois { ev: &ev_ok, ct: &ct_ok, g },
+    ];
+    let mut got = galois_many(&items);
+    assert_eq!(got.len(), 2);
+    let ok = got.pop().unwrap().expect("declared key must serve");
+    assert_eq!(ok, ev_ok.rotate(&ct_ok, 1).unwrap());
+    got.pop()
+        .unwrap()
+        .expect_err("undeclared rotation key must surface as typed MissingKey");
+}
+
+/// The tentpole end-to-end: three tenants' coordinators share one batch
+/// former; concurrent submissions at mixed levels come back bit-exact
+/// against each tenant's local oracle, and the metrics prove at least
+/// one fused dispatch carried more than one member.
+#[test]
+fn scheduler_fuses_across_tenants_bit_exactly() {
+    let sched = Arc::new(BatchScheduler::start(SchedConfig {
+        window: Duration::from_millis(300),
+        max_batch: 8,
+        max_queue: 64,
+        workers: 2,
+    }));
+    let tenants: Vec<_> = (0..3).map(|i| tenant(0x600 + i)).collect();
+    let coords: Vec<Coordinator> = tenants
+        .iter()
+        .enumerate()
+        .map(|(i, (ev, _))| {
+            Coordinator::start_with_scheduler(
+                ev.clone(),
+                demo_model(ev),
+                ServeConfig {
+                    fhec_workers: 1,
+                    cuda_workers: 1,
+                    max_batch: 4,
+                    linger: Duration::from_millis(1),
+                    max_queue: 64,
+                },
+                Some(sched.clone()),
+                i as u64 + 1,
+            )
+        })
+        .collect();
+
+    // Mixed-level fan-in, all inside one 300 ms window: every tenant
+    // rotates at max level (one compat group, occupancy 3), tenant 0
+    // also rotates at a lower level (its own group), tenant 1 squares
+    // (Relin group), and tenant 2 adds (CUDA lane, never scheduled).
+    let mut pending: Vec<(usize, Box<dyn Fn(&Evaluator) -> Ciphertext>, std::sync::mpsc::Receiver<Response>)> =
+        Vec::new();
+    for (i, (ev, ct)) in tenants.iter().enumerate() {
+        let rx = coords[i]
+            .submit(Request::new(10 + i as u64, OpKind::Rotate(1), ct.clone()))
+            .unwrap_or_else(|(_, e)| panic!("tenant {i} rotate admission: {e}"));
+        let ct = ct.clone();
+        pending.push((i, Box::new(move |ev| ev.rotate(&ct, 1).unwrap()), rx));
+    }
+    {
+        let (ev, ct) = &tenants[0];
+        let low = ev.level_reduce(ct, ev.ctx.max_level() - 1);
+        let rx = coords[0]
+            .submit(Request::new(20, OpKind::Rotate(3), low.clone()))
+            .unwrap_or_else(|(_, e)| panic!("low-level rotate admission: {e}"));
+        pending.push((0, Box::new(move |ev| ev.rotate(&low, 3).unwrap()), rx));
+    }
+    {
+        let (_, ct) = &tenants[1];
+        let rx = coords[1]
+            .submit(Request::new(21, OpKind::Square, ct.clone()))
+            .unwrap_or_else(|(_, e)| panic!("square admission: {e}"));
+        let ct = ct.clone();
+        pending.push((1, Box::new(move |ev| ev.mul(&ct, &ct).unwrap()), rx));
+    }
+    {
+        let (_, ct) = &tenants[2];
+        let rx = coords[2]
+            .submit(Request::new(22, OpKind::Add, ct.clone()).with_ct2(ct.clone()))
+            .unwrap_or_else(|(_, e)| panic!("add admission: {e}"));
+        let ct = ct.clone();
+        pending.push((2, Box::new(move |ev| ev.add(&ct, &ct)), rx));
+    }
+
+    let mut fused_any = false;
+    for (i, oracle, rx) in pending {
+        let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+        let got = resp.ct.expect("all keys declared");
+        assert_eq!(
+            got,
+            oracle(&tenants[i].0),
+            "tenant {i}: fused result must be bit-identical to its own sequential oracle"
+        );
+        fused_any |= resp.batch_size > 1;
+    }
+    assert!(fused_any, "at least one response must have ridden a fused dispatch");
+
+    use std::sync::atomic::Ordering::Relaxed;
+    let m = sched.metrics();
+    assert!(m.fused_dispatches.load(Relaxed) >= 1, "the batch former must have fired");
+    assert!(
+        m.occupancy_peak.load(Relaxed) >= 2,
+        "the three same-level rotations must share one dispatch (peak {})",
+        m.occupancy_peak.load(Relaxed)
+    );
+    // The CUDA-class add never enters the batch former; the Galois
+    // members + the square all do.
+    assert_eq!(m.fused_members.load(Relaxed), 5);
+    // Per-tenant accounting still lands on each tenant's own counters.
+    for (i, c) in coords.iter().enumerate() {
+        assert!(
+            c.metrics.served.load(Relaxed) >= 1,
+            "tenant {i} must see its fused ops as served"
+        );
+    }
+    drop(coords);
+}
+
+/// `--batch-window-us 0` is the degenerate case: a disabled scheduler is
+/// ignored wholesale and every op rides the sequential lane path.
+#[test]
+fn window_zero_scheduler_is_the_sequential_path() {
+    let sched = Arc::new(BatchScheduler::start(SchedConfig::default()));
+    assert!(!sched.config().enabled());
+    let (ev, ct) = tenant(0x900);
+    let coord = Coordinator::start_with_scheduler(
+        ev.clone(),
+        demo_model(&ev),
+        ServeConfig::default(),
+        Some(sched.clone()),
+        7,
+    );
+    let rx = coord
+        .submit(Request::new(1, OpKind::Rotate(1), ct.clone()))
+        .expect("admission");
+    let resp = rx.recv_timeout(Duration::from_secs(60)).unwrap();
+    assert_eq!(resp.ct.unwrap(), ev.rotate(&ct, 1).unwrap());
+    use std::sync::atomic::Ordering::Relaxed;
+    assert_eq!(
+        sched.metrics().fused_dispatches.load(Relaxed),
+        0,
+        "a window-0 scheduler must never see a job"
+    );
+    assert_eq!(sched.depth(), 0);
+}

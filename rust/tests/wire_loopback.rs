@@ -39,6 +39,7 @@ fn spawn_server_with(
             max_queue: 32,
         },
         registry,
+        sched: Default::default(),
         verbose: false,
     };
     let handle = std::thread::spawn(move || {
