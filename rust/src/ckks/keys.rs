@@ -554,6 +554,9 @@ impl KsKey {
         d: &RnsPoly,
         scratch: &mut KeySwitchScratch,
     ) -> (RnsPoly, RnsPoly) {
+        let _span =
+            crate::telemetry::span_with(crate::telemetry::Stage::KeySwitch, self.digits.len() as u64);
+        let _prim = crate::telemetry::prim_scope(crate::telemetry::Primitive::KeySwitch);
         let active = ctx.chain_at(self.level);
         let ext = ctx.extended_chain_at(self.level);
         assert_eq!(d.chain, active, "operand at wrong level");
@@ -659,6 +662,9 @@ impl KsKey {
         d: &RnsPoly,
         scratch: &mut KeySwitchScratch,
     ) -> HoistedDecomp {
+        let _span =
+            crate::telemetry::span_with(crate::telemetry::Stage::KeySwitch, self.digits.len() as u64);
+        let _prim = crate::telemetry::prim_scope(crate::telemetry::Primitive::KeySwitch);
         let active = ctx.chain_at(self.level);
         let ext = ctx.extended_chain_at(self.level);
         assert_eq!(d.chain, active, "operand at wrong level");
@@ -755,6 +761,9 @@ impl KsKey {
         g: usize,
         scratch: &mut KeySwitchScratch,
     ) -> (RnsPoly, RnsPoly) {
+        let _span =
+            crate::telemetry::span_with(crate::telemetry::Stage::KeySwitch, self.digits.len() as u64);
+        let _prim = crate::telemetry::prim_scope(crate::telemetry::Primitive::KeySwitch);
         assert_eq!(decomp.level, self.level, "decomposition at wrong level");
         assert_eq!(
             decomp.parts.len(),
@@ -825,6 +834,8 @@ impl KsKey {
         nq: usize,
         scratch: &mut KeySwitchScratch,
     ) {
+        let _span = crate::telemetry::span(crate::telemetry::Stage::ModDown);
+        let _prim = crate::telemetry::prim_scope(crate::telemetry::Primitive::ModDown);
         acc.to_coeff(&ctx.tower);
         let np = acc.limbs.len() - nq;
         scratch.p_part.n = acc.n;
@@ -955,6 +966,9 @@ pub fn apply_hoisted_fused(
     if jobs.is_empty() {
         return Vec::new();
     }
+    let _span =
+        crate::telemetry::span_with(crate::telemetry::Stage::KeySwitch, jobs.len() as u64);
+    let _prim = crate::telemetry::prim_scope(crate::telemetry::Primitive::KeySwitch);
     let level = jobs[0].decomp.level;
     for job in jobs {
         assert_eq!(job.decomp.level, level, "fused members at mixed levels");

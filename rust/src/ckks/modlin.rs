@@ -243,6 +243,9 @@ impl ModLinKernel {
         if n == 0 {
             return;
         }
+        let _span = crate::telemetry::span_with(crate::telemetry::Stage::Mlt, out.len() as u64);
+        crate::telemetry::add_tile_ops(out.len() as u64 * n as u64 * self.k as u64);
+        crate::telemetry::add_barrett(out.len() as u64 * n as u64);
         assert!(x.iter().all(|r| r.len() == n), "ragged input rows");
         assert!(out.iter().all(|r| r.len() == n), "ragged output rows");
 

@@ -408,6 +408,11 @@ impl NttTable {
             return;
         }
         let n = self.n;
+        let _span = crate::telemetry::span_with(crate::telemetry::Stage::Ntt, polys.len() as u64);
+        let _prim = crate::telemetry::prim_scope(crate::telemetry::Primitive::Ntt);
+        crate::telemetry::add_butterfly_equiv(
+            polys.len() as u64 * (n as u64 / 2) * n.trailing_zeros() as u64,
+        );
         debug_assert!(polys.iter().all(|p| p.len() == n), "poly length != N");
         let plan = self.plan_dir(n1, inverse);
         let (n1, n2) = (plan.n1, plan.n2);

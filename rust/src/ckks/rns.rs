@@ -155,6 +155,8 @@ impl BaseConvTable {
         assert_eq!(poly.chain, self.src, "polynomial not on the source base");
         let n = poly.n;
         let alpha = self.src.len();
+        let _span = crate::telemetry::span_with(crate::telemetry::Stage::BaseConv, alpha as u64);
+        let _prim = crate::telemetry::prim_scope(crate::telemetry::Primitive::BaseConv);
 
         // Stage 1 — elementwise pre-scale: y[j] = [x_j * Phat_j^{-1}]_{p_j}
         // (Shoup pairs precomputed at table build).

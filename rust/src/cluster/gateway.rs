@@ -269,6 +269,18 @@ fn reader_loop(
                     detail: e.to_string(),
                 }),
             },
+            Message::TraceReq => match shared.cluster.trace() {
+                // Every shard's drained span window, concatenated, with
+                // the drop counters summed — the same fan-out shape as
+                // metrics. Each shard timestamps from its own process
+                // epoch; the per-event tid keeps the timelines apart.
+                Ok((events, dropped)) => send(Message::TraceResp { events, dropped }),
+                Err(e) => send(Message::Error {
+                    id: 0,
+                    code: error_code::STOPPED,
+                    detail: e.to_string(),
+                }),
+            },
             Message::Shutdown => {
                 shared.stop.store(true, Ordering::SeqCst);
                 return true;

@@ -38,6 +38,7 @@ use crate::ckks::params::{CkksContext, CkksParams};
 use crate::ckks::program::{FheProgram, ProgramError};
 use crate::ckks::{Ciphertext, EvalKeySet, Evaluator, MissingKey, RnsPoly};
 use crate::coordinator::MetricsSnapshot;
+use crate::telemetry::SpanEvent;
 use crate::wire::client::connect_handshake;
 use crate::wire::codec::encode_eval_key_set;
 use crate::wire::protocol::{encode_op_request, encode_program_request, error_code};
@@ -189,6 +190,8 @@ struct ConnState {
     /// cluster client always asks for the breakdown; a plain shard
     /// answers with one entry named by its listen address).
     shard_metrics: Option<Vec<(String, MetricsSnapshot)>>,
+    /// v7 `TraceResp` mailbox: one drained span window + drop counter.
+    trace: Option<(Vec<SpanEvent>, u64)>,
     /// An `Error{id: 0}` frame answering the in-progress RPC (bad key
     /// blob, unexpected message...). The shard keeps serving after
     /// sending these — they fail the RPC, not the connection.
@@ -362,6 +365,9 @@ impl ShardConn {
                 Message::ShardMetricsResp(shards) => {
                     st.shard_metrics = Some(shards);
                 }
+                Message::TraceResp { events, dropped } => {
+                    st.trace = Some((events, dropped));
+                }
                 // Anything else is noise at this layer.
                 _ => {}
             }
@@ -504,6 +510,19 @@ impl ShardConn {
         self.await_mailbox(Duration::from_secs(15), "ShardMetricsResp", |st| {
             st.shard_metrics.take()
         })
+    }
+
+    /// Synchronous v7 trace drain (serialized via `self.rpc`).
+    fn fetch_trace(&self) -> Result<(Vec<SpanEvent>, u64), String> {
+        let _rpc = self.rpc.lock().unwrap();
+        {
+            let mut st = self.state.lock().unwrap();
+            st.trace = None;
+            st.rpc_error = None;
+        }
+        self.write_frame(&Message::TraceReq.encode())
+            .inspect_err(|why| self.mark_dead(why.clone()))?;
+        self.await_mailbox(Duration::from_secs(15), "TraceResp", |st| st.trace.take())
     }
 
     /// Wait for a one-deep RPC mailbox to fill, with a deadline.
@@ -718,6 +737,35 @@ impl ClusterClient {
             return Err(ClusterError::AllShardsDown);
         }
         Ok(ClusterMetrics { shards })
+    }
+
+    /// Drain every live shard's span rings (v7 `TraceReq`) into one
+    /// event list, summing the per-shard drop counters. Shard span
+    /// timestamps share no epoch — each process measures from its own
+    /// start — so the merged list is a union of per-shard timelines, not
+    /// a globally ordered one; the per-event `tid` keeps them apart in a
+    /// Chrome trace rendering.
+    pub fn trace(&self) -> Result<(Vec<SpanEvent>, u64), ClusterError> {
+        let mut events = Vec::new();
+        let mut dropped = 0u64;
+        let mut live = 0usize;
+        for conn in &self.conns {
+            if conn.is_dead() {
+                continue;
+            }
+            match conn.fetch_trace() {
+                Ok((evs, d)) => {
+                    events.extend(evs);
+                    dropped = dropped.saturating_add(d);
+                    live += 1;
+                }
+                Err(_) => continue, // died mid-request: skip, like dead
+            }
+        }
+        if live == 0 {
+            return Err(ClusterError::AllShardsDown);
+        }
+        Ok((events, dropped))
     }
 
     /// Ask every shard process to stop accepting and drain.

@@ -43,6 +43,7 @@ use crate::ckks::{bsgs_geometry, Ciphertext, Evaluator, MissingKey, RnsPoly};
 use crate::codegen::{Backend, Compiler, SimParams};
 use crate::gpusim::{simulate_trace, GpuConfig};
 use crate::isa::Trace;
+use crate::telemetry::{self, LatencyHist, Stage, WorkSnapshot, OP_GROUPS, STAGE_COUNT};
 
 /// The homomorphic op sequences a single-op request can ask for. Whole
 /// ciphertext DAGs travel as [`ProgramRequest`] instead (`submit_program`).
@@ -384,6 +385,25 @@ pub struct MetricsSnapshot {
     pub sched_depth: u64,
     /// Submissions bounced by the batch former's own queue bound.
     pub sched_rejected: u64,
+    // --- wire v7: the telemetry block ------------------------------------
+    /// Queue-wait latency histogram (admission → claim), covering both
+    /// the coordinator lanes and the batch former's deadline window.
+    pub queue_wait_hist: LatencyHist,
+    /// Execute-time histograms per op-kind group, index-aligned with
+    /// [`telemetry::OP_GROUP_NAMES`] — the wait/execute split.
+    pub exec_hist: [LatencyHist; OP_GROUPS],
+    /// Per-stage latency histograms, [`Stage::ALL`] order.
+    pub stage_hist: [LatencyHist; STAGE_COUNT],
+    /// Total ns spent per stage, [`Stage::ALL`] order.
+    pub stage_ns: [u64; STAGE_COUNT],
+    /// Requests that exceeded `--slow-request-ms` (0 threshold = never).
+    pub slow_requests: u64,
+    /// Trace-ring overwrites: span events lost to overload before any
+    /// `client trace` drained them.
+    pub trace_dropped: u64,
+    /// Dynamic work accounting per primitive (calls, MLT tile-ops,
+    /// butterfly-equivalents, Barrett reductions).
+    pub work: WorkSnapshot,
 }
 
 impl MetricsSnapshot {
@@ -441,11 +461,28 @@ impl MetricsSnapshot {
         self.fused_members = self.fused_members.saturating_add(other.fused_members);
         // An occupancy peak aggregates like the other peaks: max, not sum.
         self.fused_occupancy_peak = self.fused_occupancy_peak.max(other.fused_occupancy_peak);
-        for (mine, theirs) in self.fused_hist.iter_mut().zip(other.fused_hist.iter()) {
-            *mine = mine.saturating_add(*theirs);
-        }
+        // Every histogram-shaped counter merges through the one shared
+        // bucket-wise helper — same edges on every producer, so a sum per
+        // bucket IS the union histogram (no rebinning).
+        telemetry::merge_buckets(&mut self.fused_hist, &other.fused_hist);
         self.sched_depth = self.sched_depth.saturating_add(other.sched_depth);
         self.sched_rejected = self.sched_rejected.saturating_add(other.sched_rejected);
+        self.queue_wait_hist.merge(&other.queue_wait_hist);
+        for (mine, theirs) in self.exec_hist.iter_mut().zip(other.exec_hist.iter()) {
+            mine.merge(theirs);
+        }
+        for (mine, theirs) in self.stage_hist.iter_mut().zip(other.stage_hist.iter()) {
+            mine.merge(theirs);
+        }
+        telemetry::merge_buckets(&mut self.stage_ns, &other.stage_ns);
+        self.slow_requests = self.slow_requests.saturating_add(other.slow_requests);
+        self.trace_dropped = self.trace_dropped.saturating_add(other.trace_dropped);
+        for (mine, theirs) in self.work.rows.iter_mut().zip(other.work.rows.iter()) {
+            mine.calls = mine.calls.saturating_add(theirs.calls);
+            mine.tile_ops = mine.tile_ops.saturating_add(theirs.tile_ops);
+            mine.butterflies = mine.butterflies.saturating_add(theirs.butterflies);
+            mine.barrett = mine.barrett.saturating_add(theirs.barrett);
+        }
         // Backends don't sum: agree → keep, one side unknown → take the
         // known one, genuine disagreement → flag the aggregate as mixed.
         self.mlt_backend = match (self.mlt_backend, other.mlt_backend) {
@@ -491,11 +528,12 @@ enum Job {
 }
 
 struct QueueState {
-    /// The open linger window.
-    pending: Vec<Job>,
+    /// The open linger window (each job with its admission instant, so
+    /// the claiming worker can attribute the queue wait).
+    pending: Vec<(Job, Instant)>,
     window_start: Instant,
     /// Batches ready for a worker.
-    batches: VecDeque<Vec<Job>>,
+    batches: VecDeque<Vec<(Job, Instant)>>,
     /// pending.len() + sum of queued batch sizes (the bounded quantity).
     depth: usize,
     shutdown: bool,
@@ -580,7 +618,7 @@ impl Coordinator {
                 let metrics = metrics.clone();
                 let cfg = cfg.clone();
                 workers.push(std::thread::spawn(move || {
-                    worker_loop(&shared, &ev, &model, &cfg, &metrics, class)
+                    worker_loop(&shared, &ev, &model, &cfg, &metrics, class, tenant)
                 }));
             }
         }
@@ -684,6 +722,7 @@ impl Coordinator {
                     key,
                     req,
                     reply: rtx,
+                    admitted: Instant::now(),
                 };
                 return match sched.submit(job) {
                     Ok(()) => Ok(rrx),
@@ -760,7 +799,7 @@ impl Coordinator {
         if st.pending.is_empty() {
             st.window_start = Instant::now();
         }
-        st.pending.push(job);
+        st.pending.push((job, Instant::now()));
         st.depth += 1;
         self.metrics.queue_peak.fetch_max(st.depth, Ordering::Relaxed);
         if st.pending.len() >= self.cfg.max_batch {
@@ -834,7 +873,7 @@ impl Drop for Coordinator {
 /// Claim the next batch: a full/queued one immediately, the open linger
 /// window once it ages past `linger`, or `None` on shutdown with an empty
 /// queue. Blocks on the condvar — no sleep-polling.
-fn claim_batch(shared: &Shared, cfg: &ServeConfig) -> Option<Vec<Job>> {
+fn claim_batch(shared: &Shared, cfg: &ServeConfig) -> Option<Vec<(Job, Instant)>> {
     let mut st = shared.state.lock().unwrap();
     loop {
         if let Some(b) = st.batches.pop_front() {
@@ -867,11 +906,27 @@ fn worker_loop(
     cfg: &ServeConfig,
     metrics: &Metrics,
     class: OpClass,
+    tenant: u64,
 ) {
     while let Some(batch) = claim_batch(shared, cfg) {
-        serve_batch(batch, ev, model, metrics, class);
+        serve_batch(batch, ev, model, metrics, class, tenant);
     }
 }
+
+/// Latency-histogram op-kind grouping, index-aligned with
+/// [`telemetry::OP_GROUP_NAMES`]: rotations, relinearizing products,
+/// elementwise, linear transforms — group 4 ([`PROGRAM_GROUP`]) is
+/// whole-program requests.
+pub(crate) fn op_group(op: OpKind) -> usize {
+    match op {
+        OpKind::Rotate(_) | OpKind::Conjugate => 0,
+        OpKind::Mul | OpKind::Square => 1,
+        OpKind::LinearScore | OpKind::HomLinear => 3,
+        _ => 2,
+    }
+}
+
+pub(crate) const PROGRAM_GROUP: usize = 4;
 
 /// Build the timing-model trace for one request's op mix. `pub(crate)`
 /// so the batch former's fused dispatches carry the same dual-dispatch
@@ -990,11 +1045,12 @@ fn execute(ev: &Evaluator, model: &ModelState, req: &Request) -> Result<Cipherte
 }
 
 fn serve_batch(
-    batch: Vec<Job>,
+    batch: Vec<(Job, Instant)>,
     ev: &Evaluator,
     model: &ModelState,
     metrics: &Metrics,
     class: OpClass,
+    tenant: u64,
 ) {
     let gpu = GpuConfig::default();
     let n = batch.len();
@@ -1009,10 +1065,18 @@ fn serve_batch(
             .total_service_us
             .fetch_add(service.as_micros() as u64, Ordering::Relaxed);
     };
-    for job in batch {
+    for (job, admitted) in batch {
         match job {
             Job::Op(req, reply) => {
                 let t0 = Instant::now();
+                // Attribution: every span the compute below records (NTT,
+                // base conversion, ModDown...) carries this request id and
+                // tenant fingerprint; the retro queue-wait span covers
+                // admission -> claim.
+                let scope = telemetry::request_scope(req.id, tenant);
+                telemetry::record_span_at(Stage::QueueWait, admitted, t0, 0);
+                telemetry::record_queue_wait(t0.saturating_duration_since(admitted));
+                let exec_span = telemetry::span_with(Stage::Execute, n as u64);
                 // Containment: admission validates everything we know can
                 // trip an assert, but a panic from a bug must cost one
                 // request, not the lane thread (a dead lane hangs every
@@ -1031,6 +1095,7 @@ fn serve_batch(
                         continue;
                     }
                 };
+                drop(exec_span);
                 let service = t0.elapsed();
                 // Dual dispatch: the timing model for this op mix.
                 let level = out.as_ref().map(|c| c.level).unwrap_or(req.ct.level);
@@ -1039,6 +1104,15 @@ fn serve_batch(
                 let sim_base_us = simulate_trace(&gpu, &base).latency_us(&gpu);
                 let sim_fhec_us = simulate_trace(&gpu, &fhec).latency_us(&gpu);
                 count_served(service);
+                telemetry::record_exec(op_group(req.op), service);
+                telemetry::maybe_log_slow(
+                    req.id,
+                    tenant,
+                    &format!("{:?}", req.op),
+                    n,
+                    admitted.elapsed(),
+                    &scope.breakdown(),
+                );
                 let _ = reply.send(Response {
                     id: req.id,
                     ct: out,
@@ -1050,6 +1124,10 @@ fn serve_batch(
             }
             Job::Program(req, reply) => {
                 let t0 = Instant::now();
+                let scope = telemetry::request_scope(req.id, tenant);
+                telemetry::record_span_at(Stage::QueueWait, admitted, t0, 0);
+                telemetry::record_queue_wait(t0.saturating_duration_since(admitted));
+                let prog_span = telemetry::span_with(Stage::Program, req.program.len() as u64);
                 // Whole DAG as one unit: validated at admission (so the
                 // worker skips the second pass), executed with hoisted
                 // rotation fan-outs; same panic containment.
@@ -1066,6 +1144,7 @@ fn serve_batch(
                         continue;
                     }
                 };
+                drop(prog_span);
                 let service = t0.elapsed();
                 let level = req.inputs.iter().map(|c| c.level).min().unwrap_or(0);
                 let base = program_trace(&req.program, level, ev, Backend::A100);
@@ -1074,6 +1153,15 @@ fn serve_batch(
                 let sim_fhec_us = simulate_trace(&gpu, &fhec).latency_us(&gpu);
                 count_served(service);
                 metrics.programs.fetch_add(1, Ordering::Relaxed);
+                telemetry::record_exec(PROGRAM_GROUP, service);
+                telemetry::maybe_log_slow(
+                    req.id,
+                    tenant,
+                    "Program",
+                    n,
+                    admitted.elapsed(),
+                    &scope.breakdown(),
+                );
                 let _ = reply.send(ProgramResponse {
                     id: req.id,
                     outputs: out,
@@ -1382,6 +1470,7 @@ mod tests {
             fused_hist: [1, 1, 1, 0],
             sched_depth: 2,
             sched_rejected: 1,
+            ..MetricsSnapshot::default()
         };
         let b = MetricsSnapshot {
             served: 30,
@@ -1414,6 +1503,7 @@ mod tests {
             fused_hist: [0, 0, 1, 1],
             sched_depth: 1,
             sched_rejected: 2,
+            ..MetricsSnapshot::default()
         };
         a.absorb(&b);
         assert_eq!(a.served, 40);
@@ -1492,6 +1582,50 @@ mod tests {
         assert_eq!(a.registry_hits, u64::MAX);
         assert_eq!(a.pool_hits, u64::MAX);
         assert_eq!(a.tenants_resident, u32::MAX);
+    }
+
+    #[test]
+    fn absorb_merges_telemetry_histograms_bucketwise() {
+        // A gateway summing shard latency histograms must add per-bucket:
+        // identical edges everywhere make the bucket sum exactly the
+        // union histogram (this rides the same shared `merge_buckets`
+        // helper as the occupancy histogram above).
+        let mut a = MetricsSnapshot::default();
+        let mut b = MetricsSnapshot::default();
+        let mut union = LatencyHist::default();
+        for ns in [800u64, 900, 40_000] {
+            a.queue_wait_hist.record(ns);
+            a.exec_hist[1].record(ns);
+            a.stage_hist[Stage::Ntt as usize].record(ns);
+            union.record(ns);
+        }
+        for ns in [1_000u64, 2_000_000] {
+            b.queue_wait_hist.record(ns);
+            b.exec_hist[1].record(ns);
+            b.stage_hist[Stage::Ntt as usize].record(ns);
+            union.record(ns);
+        }
+        a.stage_ns = [7; STAGE_COUNT];
+        b.stage_ns = [5; STAGE_COUNT];
+        a.slow_requests = 2;
+        b.slow_requests = 3;
+        a.trace_dropped = u64::MAX;
+        b.trace_dropped = 9;
+        a.work.rows[1].tile_ops = 100;
+        b.work.rows[1].tile_ops = 11;
+        b.work.rows[2].butterflies = 4;
+        a.absorb(&b);
+        assert_eq!(a.queue_wait_hist, union);
+        assert_eq!(a.exec_hist[1], union);
+        assert_eq!(a.exec_hist[0], LatencyHist::default());
+        assert_eq!(a.stage_hist[Stage::Ntt as usize], union);
+        assert_eq!(a.stage_ns, [12; STAGE_COUNT]);
+        assert_eq!(a.slow_requests, 5);
+        assert_eq!(a.trace_dropped, u64::MAX, "dropped count must saturate");
+        assert_eq!(a.work.rows[1].tile_ops, 111);
+        assert_eq!(a.work.rows[2].butterflies, 4);
+        // The merged p99 is readable off the union histogram.
+        assert!(a.queue_wait_hist.quantile_ns(0.99) >= 2_000_000);
     }
 
     #[test]

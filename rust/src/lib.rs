@@ -40,6 +40,10 @@
 //!   key-switch ops from many connections into single MLT dispatches
 //!   under deadline/max-batch admission with deficit-round-robin tenant
 //!   fairness.
+//! * [`telemetry`] — end-to-end latency tracing: lock-light per-thread
+//!   span rings (Chrome trace export via `client trace`), log-bucketed
+//!   p50/p95/p99 latency histograms per stage and op kind (wire v7
+//!   metrics), and per-primitive dynamic work accounting.
 //! * [`workloads`] — Bootstrapping / LR / ResNet20 / BERT-Tiny op-graph
 //!   builders at the paper's Table V parameters.
 //! * [`tables`] — regenerators for every figure and table of SVI.
@@ -56,6 +60,7 @@ pub mod runtime;
 pub mod sched;
 pub mod systolic;
 pub mod tables;
+pub mod telemetry;
 pub mod tenancy;
 pub mod util;
 pub mod wire;

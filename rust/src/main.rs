@@ -5,7 +5,7 @@
 //!   simulate <wl>      run a workload trace through the timing model
 //!   serve              demo serving loop (batched encrypted scoring);
 //!                      with --listen <addr> it becomes a wire TCP server
-//!   client <mode>      remote client: quickstart | metrics | shutdown
+//!   client <mode>      remote client: quickstart | metrics | trace | shutdown
 //!                      (--connect <addr>, --params toy|medium)
 //!   cluster <mode>     sharded serving: serve (gateway fronting
 //!                      --shards a,b,...) | quickstart (pipelined
@@ -93,9 +93,12 @@ fn main() {
             println!("  serve --listen 127.0.0.1:7009 --params toy   (wire TCP server)");
             println!("  serve --listen ... --key-budget-mb 64 --max-resident-tenants 2");
             println!("                                               (multi-tenant key budget)");
+            println!("  serve --listen ... --trace on --slow-request-ms 50");
+            println!("                                               (span tracer + slow log)");
             println!("  client quickstart --connect 127.0.0.1:7009   (remote pipeline)");
             println!("  client quickstart --seed 7                   (push a distinct tenant)");
             println!("  client metrics | client shutdown             (ops RPCs)");
+            println!("  client trace --out trace.json                (Chrome trace-event dump)");
             println!("  cluster serve --listen 127.0.0.1:7050 --shards a,b  (gateway)");
             println!("  cluster quickstart --connect 127.0.0.1:7050  (pipelined, OOO)");
             println!("  cluster metrics | cluster shutdown           (cluster ops)");

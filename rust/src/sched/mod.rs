@@ -146,6 +146,9 @@ pub struct SchedJob {
     pub key: CompatKey,
     pub req: Request,
     pub reply: Sender<Response>,
+    /// When the coordinator admitted this op — the deadline-window wait
+    /// (admission → fused claim) is attributed per member from here.
+    pub admitted: Instant,
 }
 
 struct Group {
@@ -373,6 +376,24 @@ fn execute_fused(inner: &Inner, jobs: Vec<SchedJob>, gpu: &GpuConfig) {
     m.occupancy_hist[occupancy_bucket(n)].fetch_add(1, Ordering::Relaxed);
 
     let t0 = Instant::now();
+    // One deadline-wait span per member (each under its own request id
+    // and tenant), then the fused compute under a shared scope: its
+    // request id is 0 because the spans inside belong to every member at
+    // once — the per-member ids live on the wait spans.
+    for job in &jobs {
+        crate::telemetry::record_span_for(
+            crate::telemetry::Stage::SchedWait,
+            job.admitted,
+            t0,
+            n as u64,
+            job.req.id,
+            job.tenant,
+        );
+        crate::telemetry::record_queue_wait(t0.saturating_duration_since(job.admitted));
+    }
+    let scope = crate::telemetry::request_scope(0, 0);
+    let fused_span =
+        crate::telemetry::span_with(crate::telemetry::Stage::FusedDispatch, n as u64);
     let results: Vec<Option<Result<Ciphertext, MissingKey>>> =
         match catch_unwind(AssertUnwindSafe(|| run_members(&jobs))) {
             Ok(r) => r.into_iter().map(Some).collect(),
@@ -381,7 +402,10 @@ fn execute_fused(inner: &Inner, jobs: Vec<SchedJob>, gpu: &GpuConfig) {
                 .map(|job| catch_unwind(AssertUnwindSafe(|| execute_one(job))).ok())
                 .collect(),
         };
+    drop(fused_span);
     let service = t0.elapsed();
+    let breakdown = scope.breakdown();
+    drop(scope);
 
     // Account + respond per member. Each involved tenant sees the fused
     // dispatch as one batch of its own; `Response::batch_size` carries
@@ -405,6 +429,15 @@ fn execute_fused(inner: &Inner, jobs: Vec<SchedJob>, gpu: &GpuConfig) {
         job.metrics
             .total_service_us
             .fetch_add(service.as_micros() as u64, Ordering::Relaxed);
+        crate::telemetry::record_exec(crate::coordinator::op_group(job.req.op), service);
+        crate::telemetry::maybe_log_slow(
+            job.req.id,
+            job.tenant,
+            &format!("{:?}", job.req.op),
+            n,
+            job.admitted.elapsed(),
+            &breakdown,
+        );
         let level = out.as_ref().map(|c| c.level).unwrap_or(job.req.ct.level);
         let base = request_trace(job.req.op, level, &job.ev, Backend::A100);
         let fhec = request_trace(job.req.op, level, &job.ev, Backend::A100Fhec);

@@ -1,0 +1,285 @@
+//! Log-bucketed latency histograms.
+//!
+//! One histogram is 32 power-of-two nanosecond buckets: bucket `i`
+//! counts durations in `[2^i, 2^(i+1))` ns (bucket 0 also absorbs 0 and
+//! 1 ns, bucket 31 is open-ended at ~2.1 s+). 32 buckets cover sub-ns
+//! to multi-second latencies, keep every histogram a fixed 256-byte
+//! `Copy` value that rides `MetricsSnapshot` over the wire, and merge
+//! across shards with one saturating add per bucket — no rebinning,
+//! because every producer uses the same bucket edges.
+//!
+//! [`merge_buckets`] is the single bucket-wise merge helper shared by
+//! every fixed-bucket counter in the tree: the latency histograms here
+//! *and* the batch-former occupancy histogram in
+//! `MetricsSnapshot::absorb` (which previously hand-rolled its own
+//! loop).
+//!
+//! Quantiles ([`LatencyHist::quantile_ns`]) are bucket-resolution
+//! approximations: the reported value is the inclusive upper edge of
+//! the bucket containing the requested rank, i.e. a conservative
+//! (never under-reported beyond bucket width) latency estimate.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+
+/// Bucket count. Exactly 32 — large enough for 1 ns..4 s at log2
+/// resolution, and the largest array length for which `[u64; N]` still
+/// derives `Default`.
+pub const BUCKETS: usize = 32;
+
+/// Saturating element-wise accumulate of `src` into `dst` — the one
+/// bucket-wise merge every histogram-shaped counter shares (latency
+/// histograms here, the fused-occupancy histogram in the coordinator).
+/// Length mismatches merge the common prefix; saturation (not wrap) on
+/// overflow keeps long-lived gateway aggregations monotone.
+pub fn merge_buckets(dst: &mut [u64], src: &[u64]) {
+    for (d, s) in dst.iter_mut().zip(src.iter()) {
+        *d = d.saturating_add(*s);
+    }
+}
+
+/// The bucket a duration of `ns` nanoseconds lands in: `floor(log2 ns)`
+/// clamped to `[0, BUCKETS)`.
+pub fn bucket_index(ns: u64) -> usize {
+    if ns < 2 {
+        0
+    } else {
+        ((63 - ns.leading_zeros()) as usize).min(BUCKETS - 1)
+    }
+}
+
+/// Inclusive lower edge of bucket `i` in ns.
+pub fn bucket_lower_ns(i: usize) -> u64 {
+    if i == 0 {
+        0
+    } else {
+        1u64 << i
+    }
+}
+
+/// Inclusive upper edge of bucket `i` in ns (the value quantiles
+/// report). The last bucket is open-ended; its nominal edge is
+/// `2^BUCKETS - 1`.
+pub fn bucket_upper_ns(i: usize) -> u64 {
+    (1u64 << (i + 1).min(63)) - 1
+}
+
+/// A plain (non-atomic) log-bucketed histogram — the snapshot/wire
+/// form. `Copy` so it can ride `MetricsSnapshot` by value.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct LatencyHist {
+    pub buckets: [u64; BUCKETS],
+}
+
+impl LatencyHist {
+    /// Count one duration.
+    pub fn record(&mut self, ns: u64) {
+        let i = bucket_index(ns);
+        self.buckets[i] = self.buckets[i].saturating_add(1);
+    }
+
+    /// Total recorded samples (saturating).
+    pub fn count(&self) -> u64 {
+        self.buckets.iter().fold(0u64, |a, &b| a.saturating_add(b))
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.buckets.iter().all(|&b| b == 0)
+    }
+
+    /// Bucket-wise merge of `other` into `self` (shared helper).
+    pub fn merge(&mut self, other: &LatencyHist) {
+        merge_buckets(&mut self.buckets, &other.buckets);
+    }
+
+    /// Approximate `q`-quantile in ns (`q` in `(0, 1]`): the upper edge
+    /// of the bucket containing rank `ceil(q * count)`. Empty
+    /// histograms report 0.
+    pub fn quantile_ns(&self, q: f64) -> u64 {
+        let total = self.count();
+        if total == 0 {
+            return 0;
+        }
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &c) in self.buckets.iter().enumerate() {
+            seen = seen.saturating_add(c);
+            if seen >= rank {
+                return bucket_upper_ns(i);
+            }
+        }
+        bucket_upper_ns(BUCKETS - 1)
+    }
+
+    /// `p50/p95/p99` in microseconds — the operator-facing summary line.
+    pub fn summary_us(&self) -> (f64, f64, f64) {
+        (
+            self.quantile_ns(0.50) as f64 / 1e3,
+            self.quantile_ns(0.95) as f64 / 1e3,
+            self.quantile_ns(0.99) as f64 / 1e3,
+        )
+    }
+}
+
+/// The live (recording) form: one relaxed `fetch_add` per sample, no
+/// locks — safe to hit from every worker thread concurrently.
+#[derive(Debug, Default)]
+pub struct AtomicHist {
+    buckets: [AtomicU64; BUCKETS],
+}
+
+impl AtomicHist {
+    pub fn record(&self, ns: u64) {
+        self.buckets[bucket_index(ns)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> LatencyHist {
+        let mut out = LatencyHist::default();
+        for (o, b) in out.buckets.iter_mut().zip(self.buckets.iter()) {
+            *o = b.load(Ordering::Relaxed);
+        }
+        out
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::prop::check;
+
+    #[test]
+    fn bucket_edges_are_consistent() {
+        for i in 0..BUCKETS {
+            assert_eq!(bucket_index(bucket_lower_ns(i)), i, "lower edge of {i}");
+            if i < BUCKETS - 1 {
+                assert_eq!(bucket_index(bucket_upper_ns(i)), i, "upper edge of {i}");
+                assert_eq!(bucket_upper_ns(i) + 1, bucket_lower_ns(i + 1));
+            }
+        }
+        assert_eq!(bucket_index(0), 0);
+        assert_eq!(bucket_index(1), 0);
+        assert_eq!(bucket_index(2), 1);
+        assert_eq!(bucket_index(u64::MAX), BUCKETS - 1);
+    }
+
+    #[test]
+    fn prop_every_sample_lands_in_its_bucket_range() {
+        check("sample-in-range", 500, |rng| {
+            let ns = rng.next_u64() >> (rng.below(64) as u32);
+            let i = bucket_index(ns);
+            assert!(ns >= bucket_lower_ns(i), "ns={ns} below bucket {i}");
+            if i < BUCKETS - 1 {
+                assert!(ns <= bucket_upper_ns(i), "ns={ns} above bucket {i}");
+            }
+        });
+    }
+
+    #[test]
+    fn prop_merge_is_bucketwise_saturating_add() {
+        check("merge-bucketwise", 300, |rng| {
+            let mut a = LatencyHist::default();
+            let mut b = LatencyHist::default();
+            for x in a.buckets.iter_mut() {
+                // Mix huge values in so saturation actually triggers.
+                *x = if rng.below(8) == 0 { u64::MAX - rng.below(3) } else { rng.below(1 << 40) };
+            }
+            for x in b.buckets.iter_mut() {
+                *x = if rng.below(8) == 0 { u64::MAX - rng.below(3) } else { rng.below(1 << 40) };
+            }
+            let mut merged = a;
+            merged.merge(&b);
+            for i in 0..BUCKETS {
+                assert_eq!(
+                    merged.buckets[i],
+                    a.buckets[i].saturating_add(b.buckets[i]),
+                    "bucket {i}"
+                );
+            }
+            // Merge must be commutative bucket-wise.
+            let mut flipped = b;
+            flipped.merge(&a);
+            assert_eq!(flipped, merged);
+        });
+    }
+
+    #[test]
+    fn prop_merged_count_matches_recording_into_one() {
+        check("merge-equals-single-recorder", 200, |rng| {
+            let mut a = LatencyHist::default();
+            let mut b = LatencyHist::default();
+            let mut all = LatencyHist::default();
+            for _ in 0..rng.below(200) {
+                let ns = rng.next_u64() >> (rng.below(64) as u32);
+                if rng.below(2) == 0 {
+                    a.record(ns);
+                } else {
+                    b.record(ns);
+                }
+                all.record(ns);
+            }
+            a.merge(&b);
+            assert_eq!(a, all, "split recording then merge != single recorder");
+        });
+    }
+
+    #[test]
+    fn prop_quantiles_are_monotone_and_bracket_samples() {
+        check("quantile-monotone", 200, |rng| {
+            let mut h = LatencyHist::default();
+            let n = 1 + rng.below(100);
+            let mut max_ns = 0u64;
+            for _ in 0..n {
+                let ns = rng.next_u64() >> (rng.below(64) as u32);
+                max_ns = max_ns.max(ns);
+                h.record(ns);
+            }
+            let (p50, p95, p99) = (h.quantile_ns(0.5), h.quantile_ns(0.95), h.quantile_ns(0.99));
+            assert!(p50 <= p95 && p95 <= p99, "quantiles not monotone");
+            // p100 upper edge must bracket the true maximum (within the
+            // open-ended last bucket).
+            let p100 = h.quantile_ns(1.0);
+            if bucket_index(max_ns) < BUCKETS - 1 {
+                assert!(p100 >= max_ns, "p100 {p100} < max sample {max_ns}");
+            }
+        });
+    }
+
+    #[test]
+    fn empty_histogram_reports_zero_quantiles() {
+        let h = LatencyHist::default();
+        assert_eq!(h.count(), 0);
+        assert!(h.is_empty());
+        assert_eq!(h.quantile_ns(0.5), 0);
+        assert_eq!(h.quantile_ns(0.99), 0);
+        assert_eq!(h.summary_us(), (0.0, 0.0, 0.0));
+    }
+
+    #[test]
+    fn single_sample_dominates_every_quantile() {
+        let mut h = LatencyHist::default();
+        h.record(1_500); // bucket 10: [1024, 2048)
+        for q in [0.01, 0.5, 0.99, 1.0] {
+            assert_eq!(h.quantile_ns(q), 2047, "q={q}");
+        }
+    }
+
+    #[test]
+    fn atomic_hist_snapshot_matches_plain_recording() {
+        let ah = AtomicHist::default();
+        let mut h = LatencyHist::default();
+        for ns in [0u64, 1, 7, 1000, 123_456, u64::MAX] {
+            ah.record(ns);
+            h.record(ns);
+        }
+        assert_eq!(ah.snapshot(), h);
+    }
+
+    #[test]
+    fn merge_buckets_handles_length_mismatch() {
+        let mut dst = [1u64, 2, 3];
+        merge_buckets(&mut dst, &[10, 20]);
+        assert_eq!(dst, [11, 22, 3]);
+        let mut dst2 = [u64::MAX, 1];
+        merge_buckets(&mut dst2, &[5, 5, 5]);
+        assert_eq!(dst2, [u64::MAX, 6]);
+    }
+}

@@ -1,0 +1,35 @@
+//! End-to-end latency tracing + per-stage time attribution.
+//!
+//! Three layers, all always-on by default and all reduced to a single
+//! relaxed atomic load when disabled (`--trace off` / `FHECORE_TRACE`):
+//!
+//! 1. **Span tracer** ([`span`]): per-thread ring buffers of
+//!    `{span id, parent, request id, tenant fp, stage, t_start, dur}`
+//!    events recorded at every seam a request crosses — NTT, base
+//!    conversion, ModDown, key-switch, MLT tile sweeps, coordinator
+//!    queue wait, the batch former's deadline wait + fused dispatch,
+//!    wire encode/decode. Drained over the wire by `fhecore client
+//!    trace` and rendered as Chrome trace-event JSON (Perfetto).
+//! 2. **Latency histograms** ([`hist`]): log2-ns bucketed p50/p95/p99
+//!    per stage and per op kind, queue-wait split from execute, rolled
+//!    into `MetricsSnapshot` (wire v7) and summed bucket-wise across
+//!    shards by the gateway.
+//! 3. **Work accounting** ([`work`]): MLT tile-ops / butterfly
+//!    equivalents / Barrett reductions attributed per primitive — the
+//!    dynamic-work breakdown the paper's table argues from.
+
+pub mod hist;
+pub mod span;
+pub mod work;
+
+pub use hist::{merge_buckets, AtomicHist, LatencyHist, BUCKETS};
+pub use span::{
+    chrome_trace_json, drain_events, enabled, init_from_env, maybe_log_slow, record_exec,
+    record_queue_wait, record_span_at, record_span_for, request_scope, set_enabled,
+    set_slow_request_ms, slow_request_us, span, span_with, stats_snapshot, RequestScope,
+    SpanEvent, SpanGuard, Stage, StatsSnapshot, OP_GROUPS, OP_GROUP_NAMES, STAGE_COUNT,
+};
+pub use work::{
+    add_barrett, add_butterfly_equiv, add_tile_ops, prim_scope, work_delta, work_snapshot,
+    PrimScope, Primitive, WorkRow, WorkSnapshot, PRIMITIVES,
+};

@@ -1,0 +1,729 @@
+//! The lock-light, always-on span tracer.
+//!
+//! Every instrumented seam (`NttTable::forward_batch`/`inverse_batch`,
+//! `BaseConvTable::convert_into`, `ModLinKernel::apply_with`,
+//! `KsKey::apply*`/ModDown, coordinator queue wait + execute, the batch
+//! former's deadline wait + fused dispatch, wire encode/decode) opens a
+//! [`SpanGuard`]; dropping it records one [`SpanEvent`] into a
+//! **per-thread ring buffer** and feeds the per-stage histogram
+//! aggregates. Cost when enabled: two `Instant::now()` calls plus one
+//! push under an uncontended per-thread mutex (that mutex exists only so
+//! a trace drain from another thread is safe — the owning thread never
+//! blocks on it in steady state). Cost when disabled (`--trace off` /
+//! `FHECORE_TRACE=off`): one relaxed atomic load, no clock reads, no
+//! allocation — the bit-exactness benches hold the disabled path to
+//! noise.
+//!
+//! Rings are bounded ([`RING_CAPACITY`] events/thread): under overload
+//! the oldest events are overwritten and counted in [`dropped_total`],
+//! never blocking the hot path. [`drain_events`] (the `TraceReq` RPC)
+//! consumes all rings; [`chrome_trace_json`] renders events as Chrome
+//! trace-event JSON (`chrome://tracing` / Perfetto: one row per worker
+//! thread, spans nested by the parent ids carried in `args`).
+//!
+//! Request attribution is thread-local: the coordinator/scheduler wraps
+//! each request's execution in a [`RequestScope`], so every span a
+//! worker records while serving that request carries its `(request id,
+//! tenant fingerprint)` — and the scope accumulates a per-stage time
+//! breakdown that powers the [`maybe_log_slow`] slow-request log.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicBool, AtomicU32, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::{Duration, Instant};
+
+use super::hist::{AtomicHist, LatencyHist};
+use crate::util::json::Json;
+
+/// Environment override honored by [`init_from_env`]:
+/// `FHECORE_TRACE=off|0` disables the tracer, `on|1` (or unset) keeps
+/// the default-on behavior.
+pub const TRACE_ENV: &str = "FHECORE_TRACE";
+
+/// Per-thread ring capacity, in span events (~70 B each).
+pub const RING_CAPACITY: usize = 8192;
+
+// ---------------------------------------------------------------------
+// Stages
+// ---------------------------------------------------------------------
+
+/// Where a span's time was spent. One fixed, wire-stable id per seam —
+/// the u8 discriminants ride `SpanEvent` over the wire and index the
+/// per-stage histogram/total arrays in `MetricsSnapshot`.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Stage {
+    /// Batched 4-step NTT (`NttTable::forward_batch`/`inverse_batch`).
+    Ntt = 0,
+    /// HPS fast base conversion (`BaseConvTable::convert_into`).
+    BaseConv = 1,
+    /// ModDown after key-switch accumulation.
+    ModDown = 2,
+    /// A whole key-switch application (hoisted, fused, or per-digit).
+    KeySwitch = 3,
+    /// One `ModLinKernel::apply` tile sweep (nested under Ntt/BaseConv).
+    Mlt = 4,
+    /// Coordinator lane queue wait (admission -> batch claim).
+    QueueWait = 5,
+    /// Batch-former deadline wait (sched admission -> fused claim).
+    SchedWait = 6,
+    /// One fused multi-tenant dispatch (detail = occupancy).
+    FusedDispatch = 7,
+    /// Serializing + writing one response frame.
+    WireEncode = 8,
+    /// Reading + decoding one request frame.
+    WireDecode = 9,
+    /// Executing one single-op request on a worker.
+    Execute = 10,
+    /// Executing one whole-program (DAG) request on a worker.
+    Program = 11,
+}
+
+pub const STAGE_COUNT: usize = 12;
+
+/// Latency-histogram op-kind groups for `MetricsSnapshot::exec_hist`.
+pub const OP_GROUPS: usize = 5;
+
+/// Printable names for the exec-histogram groups, index-aligned with
+/// `MetricsSnapshot::exec_hist` (see `coordinator::op_group`).
+pub const OP_GROUP_NAMES: [&str; OP_GROUPS] = ["rotate", "mul", "elementwise", "linear", "program"];
+
+impl Stage {
+    pub const ALL: [Stage; STAGE_COUNT] = [
+        Stage::Ntt,
+        Stage::BaseConv,
+        Stage::ModDown,
+        Stage::KeySwitch,
+        Stage::Mlt,
+        Stage::QueueWait,
+        Stage::SchedWait,
+        Stage::FusedDispatch,
+        Stage::WireEncode,
+        Stage::WireDecode,
+        Stage::Execute,
+        Stage::Program,
+    ];
+
+    /// Stable printable id (what the trace JSON and CI greps use).
+    pub fn name(self) -> &'static str {
+        match self {
+            Stage::Ntt => "ntt",
+            Stage::BaseConv => "baseconv",
+            Stage::ModDown => "moddown",
+            Stage::KeySwitch => "keyswitch",
+            Stage::Mlt => "mlt",
+            Stage::QueueWait => "queue-wait",
+            Stage::SchedWait => "sched-wait",
+            Stage::FusedDispatch => "fused-dispatch",
+            Stage::WireEncode => "wire-encode",
+            Stage::WireDecode => "wire-decode",
+            Stage::Execute => "execute",
+            Stage::Program => "program",
+        }
+    }
+
+    /// Wire decode of the u8 discriminant.
+    pub fn from_u8(v: u8) -> Option<Stage> {
+        Stage::ALL.get(v as usize).copied()
+    }
+}
+
+/// One completed span, as drained from the rings and shipped over the
+/// wire (`TraceResp`).
+#[derive(Debug, Clone, Copy, PartialEq, Eq)]
+pub struct SpanEvent {
+    /// Process-unique span id (monotone).
+    pub id: u64,
+    /// Enclosing span on the same thread (0 = root).
+    pub parent: u64,
+    /// Request id from the enclosing [`RequestScope`] (0 = none).
+    pub request: u64,
+    /// Tenant fingerprint from the enclosing scope (0 = none).
+    pub tenant: u64,
+    pub stage: Stage,
+    /// Start, ns since the process trace epoch.
+    pub t_start_ns: u64,
+    pub dur_ns: u64,
+    /// Stage-specific payload (batch size, fused occupancy, frame
+    /// bytes...; 0 = unused).
+    pub detail: u64,
+    /// Small dense per-thread id (trace rows), assigned on first span.
+    pub tid: u32,
+}
+
+// ---------------------------------------------------------------------
+// Global state
+// ---------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(true);
+static SLOW_REQUEST_US: AtomicU64 = AtomicU64::new(0);
+static NEXT_SPAN_ID: AtomicU64 = AtomicU64::new(1);
+static NEXT_TID: AtomicU32 = AtomicU32::new(1);
+static DROPPED: AtomicU64 = AtomicU64::new(0);
+
+/// Is the tracer recording? One relaxed load — the entire disabled-path
+/// cost of an instrumented seam.
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+pub fn set_enabled(on: bool) {
+    ENABLED.store(on, Ordering::Relaxed);
+}
+
+/// Apply the [`TRACE_ENV`] override (entry points call this once at
+/// startup; absent/unrecognized values keep the current setting).
+pub fn init_from_env() {
+    match std::env::var(TRACE_ENV).ok().as_deref() {
+        Some("off") | Some("0") | Some("false") => set_enabled(false),
+        Some("on") | Some("1") | Some("true") => set_enabled(true),
+        _ => {}
+    }
+}
+
+/// Slow-request threshold (`--slow-request-ms`); 0 disables the log.
+pub fn set_slow_request_ms(ms: u64) {
+    SLOW_REQUEST_US.store(ms.saturating_mul(1000), Ordering::Relaxed);
+}
+
+pub fn slow_request_us() -> u64 {
+    SLOW_REQUEST_US.load(Ordering::Relaxed)
+}
+
+/// Events overwritten before any drain could read them (cumulative).
+pub fn dropped_total() -> u64 {
+    DROPPED.load(Ordering::Relaxed)
+}
+
+fn epoch() -> Instant {
+    static EPOCH: OnceLock<Instant> = OnceLock::new();
+    *EPOCH.get_or_init(Instant::now)
+}
+
+fn now_ns() -> u64 {
+    epoch().elapsed().as_nanos() as u64
+}
+
+fn instant_ns(t: Instant) -> u64 {
+    t.checked_duration_since(epoch()).map(|d| d.as_nanos() as u64).unwrap_or(0)
+}
+
+/// Per-stage aggregates fed on every span drop, plus the queue-wait /
+/// per-op-group execute histograms the coordinator records directly.
+/// Process-global: the server folds one copy into its (already
+/// engine-folded) `MetricsSnapshot`.
+#[derive(Default)]
+struct GlobalStats {
+    stage_hist: [AtomicHist; STAGE_COUNT],
+    stage_ns: [AtomicU64; STAGE_COUNT],
+    queue_wait: AtomicHist,
+    exec: [AtomicHist; OP_GROUPS],
+    slow_requests: AtomicU64,
+}
+
+fn stats() -> &'static GlobalStats {
+    static STATS: OnceLock<GlobalStats> = OnceLock::new();
+    STATS.get_or_init(GlobalStats::default)
+}
+
+/// Plain-value copy of the process-wide aggregates, shaped to drop
+/// straight into `MetricsSnapshot`'s v7 fields.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub queue_wait: LatencyHist,
+    pub exec: [LatencyHist; OP_GROUPS],
+    pub stage_hist: [LatencyHist; STAGE_COUNT],
+    pub stage_ns: [u64; STAGE_COUNT],
+    pub slow_requests: u64,
+    pub trace_dropped: u64,
+}
+
+pub fn stats_snapshot() -> StatsSnapshot {
+    let s = stats();
+    let mut out = StatsSnapshot {
+        queue_wait: s.queue_wait.snapshot(),
+        slow_requests: s.slow_requests.load(Ordering::Relaxed),
+        trace_dropped: dropped_total(),
+        ..StatsSnapshot::default()
+    };
+    for (o, h) in out.exec.iter_mut().zip(s.exec.iter()) {
+        *o = h.snapshot();
+    }
+    for (o, h) in out.stage_hist.iter_mut().zip(s.stage_hist.iter()) {
+        *o = h.snapshot();
+    }
+    for (o, n) in out.stage_ns.iter_mut().zip(s.stage_ns.iter()) {
+        *o = n.load(Ordering::Relaxed);
+    }
+    out
+}
+
+/// Queue-wait sample (both the coordinator lanes and the batch former
+/// record here — the wait/execute split the histograms promise).
+pub fn record_queue_wait(wait: Duration) {
+    if !enabled() {
+        return;
+    }
+    stats().queue_wait.record(wait.as_nanos() as u64);
+}
+
+/// Execute-time sample for one op-kind group (`coordinator::op_group`).
+pub fn record_exec(group: usize, service: Duration) {
+    if !enabled() {
+        return;
+    }
+    stats().exec[group.min(OP_GROUPS - 1)].record(service.as_nanos() as u64);
+}
+
+// ---------------------------------------------------------------------
+// Per-thread rings
+// ---------------------------------------------------------------------
+
+struct Ring {
+    buf: Vec<SpanEvent>,
+    /// Next overwrite position once the ring is full.
+    head: usize,
+}
+
+struct ThreadLog {
+    ring: Mutex<Ring>,
+}
+
+impl ThreadLog {
+    fn push(&self, ev: SpanEvent) {
+        let mut ring = self.ring.lock().unwrap();
+        if ring.buf.len() < RING_CAPACITY {
+            ring.buf.push(ev);
+        } else {
+            let h = ring.head;
+            ring.buf[h] = ev;
+            ring.head = (h + 1) % RING_CAPACITY;
+            DROPPED.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+}
+
+fn registry() -> &'static Mutex<Vec<Arc<ThreadLog>>> {
+    static REGISTRY: OnceLock<Mutex<Vec<Arc<ThreadLog>>>> = OnceLock::new();
+    REGISTRY.get_or_init(|| Mutex::new(Vec::new()))
+}
+
+fn register_thread() -> Arc<ThreadLog> {
+    let log = Arc::new(ThreadLog {
+        ring: Mutex::new(Ring { buf: Vec::with_capacity(64), head: 0 }),
+    });
+    registry().lock().unwrap().push(log.clone());
+    log
+}
+
+thread_local! {
+    static LOG: Arc<ThreadLog> = register_thread();
+    static TID: Cell<u32> = const { Cell::new(0) };
+    static PARENT: Cell<u64> = const { Cell::new(0) };
+    static REQ_CTX: Cell<(u64, u64)> = const { Cell::new((0, 0)) };
+    static BREAKDOWN: Cell<[u64; STAGE_COUNT]> = const { Cell::new([0; STAGE_COUNT]) };
+}
+
+fn tid() -> u32 {
+    TID.try_with(|t| {
+        let v = t.get();
+        if v != 0 {
+            return v;
+        }
+        let v = NEXT_TID.fetch_add(1, Ordering::Relaxed);
+        t.set(v);
+        v
+    })
+    .unwrap_or(0)
+}
+
+fn commit(ev: SpanEvent) {
+    let si = ev.stage as usize;
+    let s = stats();
+    s.stage_hist[si].record(ev.dur_ns);
+    s.stage_ns[si].fetch_add(ev.dur_ns, Ordering::Relaxed);
+    let _ = BREAKDOWN.try_with(|b| {
+        let mut v = b.get();
+        v[si] = v[si].saturating_add(ev.dur_ns);
+        b.set(v);
+    });
+    let _ = LOG.try_with(|log| log.push(ev));
+}
+
+// ---------------------------------------------------------------------
+// Spans
+// ---------------------------------------------------------------------
+
+struct ActiveSpan {
+    id: u64,
+    parent: u64,
+    stage: Stage,
+    t_start_ns: u64,
+    detail: u64,
+}
+
+/// RAII span: created at a seam entry, records on drop. When the tracer
+/// is disabled this is a `None` and both ends are free of clock reads.
+pub struct SpanGuard {
+    active: Option<ActiveSpan>,
+}
+
+/// Open a span for `stage` on this thread.
+pub fn span(stage: Stage) -> SpanGuard {
+    span_with(stage, 0)
+}
+
+/// [`span`] with a stage-specific detail payload (batch size, bytes...).
+pub fn span_with(stage: Stage, detail: u64) -> SpanGuard {
+    if !enabled() {
+        return SpanGuard { active: None };
+    }
+    let id = NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed);
+    let Ok(parent) = PARENT.try_with(|p| p.replace(id)) else {
+        return SpanGuard { active: None };
+    };
+    SpanGuard {
+        active: Some(ActiveSpan { id, parent, stage, t_start_ns: now_ns(), detail }),
+    }
+}
+
+impl SpanGuard {
+    /// Update the detail payload before the span closes (e.g. a byte
+    /// count only known mid-seam).
+    pub fn set_detail(&mut self, detail: u64) {
+        if let Some(a) = &mut self.active {
+            a.detail = detail;
+        }
+    }
+}
+
+impl Drop for SpanGuard {
+    fn drop(&mut self) {
+        let Some(a) = self.active.take() else { return };
+        let dur_ns = now_ns().saturating_sub(a.t_start_ns);
+        let _ = PARENT.try_with(|p| p.set(a.parent));
+        let (request, tenant) = REQ_CTX.try_with(|c| c.get()).unwrap_or((0, 0));
+        commit(SpanEvent {
+            id: a.id,
+            parent: a.parent,
+            request,
+            tenant,
+            stage: a.stage,
+            t_start_ns: a.t_start_ns,
+            dur_ns,
+            detail: a.detail,
+            tid: tid(),
+        });
+    }
+}
+
+/// Record a span whose interval already elapsed (queue/deadline waits:
+/// the wait is only known once the work is claimed, so the span is
+/// emitted retroactively from the admission timestamp). Uses the
+/// calling thread's request context.
+pub fn record_span_at(stage: Stage, start: Instant, end: Instant, detail: u64) {
+    let (request, tenant) = REQ_CTX.try_with(|c| c.get()).unwrap_or((0, 0));
+    record_span_for(stage, start, end, detail, request, tenant);
+}
+
+/// [`record_span_at`] with explicit request/tenant attribution (the
+/// fused dispatcher emits one wait span per member, each under a
+/// different request id, from a single thread).
+pub fn record_span_for(
+    stage: Stage,
+    start: Instant,
+    end: Instant,
+    detail: u64,
+    request: u64,
+    tenant: u64,
+) {
+    if !enabled() {
+        return;
+    }
+    let t_start_ns = instant_ns(start);
+    let dur_ns = end.checked_duration_since(start).map(|d| d.as_nanos() as u64).unwrap_or(0);
+    commit(SpanEvent {
+        id: NEXT_SPAN_ID.fetch_add(1, Ordering::Relaxed),
+        parent: PARENT.try_with(|p| p.get()).unwrap_or(0),
+        request,
+        tenant,
+        stage,
+        t_start_ns,
+        dur_ns,
+        detail,
+        tid: tid(),
+    });
+}
+
+// ---------------------------------------------------------------------
+// Request attribution + slow-request log
+// ---------------------------------------------------------------------
+
+/// RAII request context: while alive, every span this thread records
+/// carries `(request, tenant)`, and per-stage time accumulates into a
+/// fresh breakdown readable via [`RequestScope::breakdown`]. Nesting
+/// restores the outer context on drop.
+pub struct RequestScope {
+    prev_ctx: (u64, u64),
+    prev_breakdown: [u64; STAGE_COUNT],
+}
+
+pub fn request_scope(request: u64, tenant: u64) -> RequestScope {
+    let prev_ctx = REQ_CTX.try_with(|c| c.replace((request, tenant))).unwrap_or((0, 0));
+    let prev_breakdown =
+        BREAKDOWN.try_with(|b| b.replace([0; STAGE_COUNT])).unwrap_or([0; STAGE_COUNT]);
+    RequestScope { prev_ctx, prev_breakdown }
+}
+
+impl RequestScope {
+    /// Per-stage ns accumulated on this thread since the scope opened.
+    pub fn breakdown(&self) -> [u64; STAGE_COUNT] {
+        BREAKDOWN.try_with(|b| b.get()).unwrap_or([0; STAGE_COUNT])
+    }
+}
+
+impl Drop for RequestScope {
+    fn drop(&mut self) {
+        let _ = REQ_CTX.try_with(|c| c.set(self.prev_ctx));
+        let _ = BREAKDOWN.try_with(|b| b.set(self.prev_breakdown));
+    }
+}
+
+/// If `total` exceeds the `--slow-request-ms` threshold, emit ONE
+/// structured stderr line — tenant fingerprint, op, batch occupancy,
+/// and the non-zero per-stage breakdown — and count it. No-op while the
+/// threshold is 0 (the default).
+pub fn maybe_log_slow(
+    request: u64,
+    tenant: u64,
+    op: &str,
+    occupancy: usize,
+    total: Duration,
+    breakdown: &[u64; STAGE_COUNT],
+) {
+    let thr_us = SLOW_REQUEST_US.load(Ordering::Relaxed);
+    if thr_us == 0 || total.as_micros() < thr_us as u128 {
+        return;
+    }
+    stats().slow_requests.fetch_add(1, Ordering::Relaxed);
+    let mut stages = String::new();
+    for (i, &ns) in breakdown.iter().enumerate() {
+        if ns == 0 {
+            continue;
+        }
+        use std::fmt::Write as _;
+        let _ = write!(stages, " {}={:.3}ms", Stage::ALL[i].name(), ns as f64 / 1e6);
+    }
+    eprintln!(
+        "fhecore-slow: request={request} tenant={tenant:#018x} op={op} batch={occupancy} \
+         total_ms={:.3} stages{stages}",
+        total.as_secs_f64() * 1e3
+    );
+}
+
+/// Slow requests logged so far (for `MetricsSnapshot`).
+pub fn slow_requests_total() -> u64 {
+    stats().slow_requests.load(Ordering::Relaxed)
+}
+
+// ---------------------------------------------------------------------
+// Drain + Chrome trace export
+// ---------------------------------------------------------------------
+
+/// Consume every thread's ring: all events recorded since the last
+/// drain (sorted by start time), plus the cumulative overwrite count.
+pub fn drain_events() -> (Vec<SpanEvent>, u64) {
+    let logs: Vec<Arc<ThreadLog>> = registry().lock().unwrap().clone();
+    let mut out = Vec::new();
+    for log in logs {
+        let mut ring = log.ring.lock().unwrap();
+        out.append(&mut ring.buf);
+        ring.head = 0;
+    }
+    out.sort_by_key(|e| (e.t_start_ns, e.id));
+    (out, dropped_total())
+}
+
+/// Render span events as Chrome trace-event JSON (the "X" complete-event
+/// form): load the output in `chrome://tracing` or
+/// <https://ui.perfetto.dev> to see one lane per worker thread with
+/// nested NTT/BaseConv/ModDown spans inside each key-switch. Request id
+/// and tenant fingerprint ride in `args` for grouping/filtering.
+pub fn chrome_trace_json(events: &[SpanEvent]) -> Json {
+    use std::collections::BTreeMap;
+    let obj = |pairs: Vec<(&str, Json)>| {
+        Json::Obj(pairs.into_iter().map(|(k, v)| (k.to_string(), v)).collect::<BTreeMap<_, _>>())
+    };
+    let evs: Vec<Json> = events
+        .iter()
+        .map(|e| {
+            obj(vec![
+                ("name", Json::Str(e.stage.name().to_string())),
+                ("cat", Json::Str("fhecore".to_string())),
+                ("ph", Json::Str("X".to_string())),
+                ("ts", Json::Num(e.t_start_ns as f64 / 1e3)),
+                ("dur", Json::Num(e.dur_ns as f64 / 1e3)),
+                ("pid", Json::Num(1.0)),
+                ("tid", Json::Num(e.tid as f64)),
+                (
+                    "args",
+                    obj(vec![
+                        ("span", Json::Num(e.id as f64)),
+                        ("parent", Json::Num(e.parent as f64)),
+                        ("request", Json::Num(e.request as f64)),
+                        ("tenant", Json::Str(format!("{:#018x}", e.tenant))),
+                        ("detail", Json::Num(e.detail as f64)),
+                    ]),
+                ),
+            ])
+        })
+        .collect();
+    obj(vec![
+        ("traceEvents", Json::Arr(evs)),
+        ("displayTimeUnit", Json::Str("ms".to_string())),
+    ])
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    /// The tracer is process-global; tests that flip it or drain rings
+    /// serialize here (and restore the enabled default on exit).
+    fn serialized() -> std::sync::MutexGuard<'static, ()> {
+        static GATE: Mutex<()> = Mutex::new(());
+        match GATE.lock() {
+            Ok(g) => g,
+            Err(poison) => poison.into_inner(),
+        }
+    }
+
+    #[test]
+    fn spans_nest_and_carry_request_context() {
+        let _gate = serialized();
+        set_enabled(true);
+        let _ = drain_events();
+        {
+            let _scope = request_scope(77, 0xFEED);
+            let outer = span(Stage::KeySwitch);
+            {
+                let _inner = span_with(Stage::Ntt, 4);
+            }
+            drop(outer);
+        }
+        let (events, _) = drain_events();
+        let ntt: Vec<_> = events.iter().filter(|e| e.stage == Stage::Ntt).collect();
+        let ks: Vec<_> = events.iter().filter(|e| e.stage == Stage::KeySwitch).collect();
+        assert_eq!(ntt.len(), 1);
+        assert_eq!(ks.len(), 1);
+        assert_eq!(ntt[0].parent, ks[0].id, "inner span must point at the outer");
+        assert_eq!(ks[0].parent, 0, "outer span is a root");
+        assert_eq!(ntt[0].request, 77);
+        assert_eq!(ntt[0].tenant, 0xFEED);
+        assert_eq!(ntt[0].detail, 4);
+        assert!(ks[0].dur_ns >= ntt[0].dur_ns, "outer covers inner");
+    }
+
+    #[test]
+    fn disabled_tracer_records_nothing() {
+        let _gate = serialized();
+        let _ = drain_events();
+        set_enabled(false);
+        {
+            let _s = span(Stage::BaseConv);
+            record_span_at(Stage::QueueWait, Instant::now(), Instant::now(), 0);
+            record_queue_wait(Duration::from_micros(5));
+        }
+        set_enabled(true);
+        let (events, _) = drain_events();
+        assert!(events.is_empty(), "disabled tracer must record nothing: {events:?}");
+    }
+
+    #[test]
+    fn ring_overflow_drops_oldest_and_counts() {
+        let _gate = serialized();
+        set_enabled(true);
+        let _ = drain_events();
+        let before = dropped_total();
+        for _ in 0..RING_CAPACITY + 10 {
+            let _s = span(Stage::Mlt);
+        }
+        let (events, dropped) = drain_events();
+        assert_eq!(events.len(), RING_CAPACITY);
+        assert!(dropped >= before + 10, "overwrites must be counted");
+    }
+
+    #[test]
+    fn request_scope_breakdown_accumulates_and_restores() {
+        let _gate = serialized();
+        set_enabled(true);
+        let outer = request_scope(1, 1);
+        {
+            let inner = request_scope(2, 2);
+            {
+                let _s = span(Stage::ModDown);
+            }
+            assert!(inner.breakdown()[Stage::ModDown as usize] > 0);
+        }
+        // The inner scope's time must not leak into the restored outer
+        // breakdown.
+        assert_eq!(outer.breakdown()[Stage::ModDown as usize], 0);
+        let _ = drain_events();
+    }
+
+    #[test]
+    fn chrome_json_shape_is_valid_and_reparses() {
+        let events = [SpanEvent {
+            id: 9,
+            parent: 3,
+            request: 12,
+            tenant: 0xABC,
+            stage: Stage::FusedDispatch,
+            t_start_ns: 2_500,
+            dur_ns: 1_000,
+            detail: 7,
+            tid: 2,
+        }];
+        let json = chrome_trace_json(&events);
+        let printed = json.to_string_pretty();
+        let back = Json::parse(&printed).expect("chrome trace JSON must parse");
+        let evs = back.get("traceEvents").unwrap().as_arr().unwrap();
+        assert_eq!(evs.len(), 1);
+        assert_eq!(evs[0].get("name").unwrap().as_str(), Some("fused-dispatch"));
+        assert_eq!(evs[0].get("ph").unwrap().as_str(), Some("X"));
+        assert_eq!(evs[0].get("ts").unwrap().as_f64(), Some(2.5));
+        assert_eq!(evs[0].get("dur").unwrap().as_f64(), Some(1.0));
+        let args = evs[0].get("args").unwrap();
+        assert_eq!(args.get("detail").unwrap().as_f64(), Some(7.0));
+        assert_eq!(args.get("tenant").unwrap().as_str(), Some("0x0000000000000abc"));
+    }
+
+    #[test]
+    fn stage_u8_roundtrip_is_total() {
+        for (i, s) in Stage::ALL.iter().enumerate() {
+            assert_eq!(*s as usize, i, "ALL must be discriminant-ordered");
+            assert_eq!(Stage::from_u8(i as u8), Some(*s));
+        }
+        assert_eq!(Stage::from_u8(STAGE_COUNT as u8), None);
+        // Names are unique (trace consumers key on them).
+        let mut names: Vec<_> = Stage::ALL.iter().map(|s| s.name()).collect();
+        names.sort_unstable();
+        names.dedup();
+        assert_eq!(names.len(), STAGE_COUNT);
+    }
+
+    #[test]
+    fn slow_request_log_counts_only_past_threshold() {
+        let _gate = serialized();
+        let before = slow_requests_total();
+        set_slow_request_ms(10);
+        let bd = [0u64; STAGE_COUNT];
+        maybe_log_slow(1, 2, "Mul", 1, Duration::from_millis(5), &bd);
+        assert_eq!(slow_requests_total(), before, "below threshold must not log");
+        maybe_log_slow(1, 2, "Mul", 1, Duration::from_millis(25), &bd);
+        assert_eq!(slow_requests_total(), before + 1);
+        set_slow_request_ms(0);
+        maybe_log_slow(1, 2, "Mul", 1, Duration::from_secs(60), &bd);
+        assert_eq!(slow_requests_total(), before + 1, "0 disables the log");
+    }
+}

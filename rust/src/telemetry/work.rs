@@ -1,0 +1,279 @@
+//! Dynamic work accounting per FHE primitive.
+//!
+//! The paper's argument is a *work breakdown*: NTT and base conversion
+//! dominate CKKS dynamic instructions, which is why one shared MLT unit
+//! wins. This module counts the three machine-level work units our MLT
+//! formulation actually executes — **tile-ops** (one `sum_k w[i][k] *
+//! x[k][j] mod q` MLT output element), **butterfly-equivalents** (the
+//! classical `(n/2) log2 n` per transformed polynomial, so the NTT
+//! numbers are comparable to the paper's table even though we execute
+//! them as MLT tiles), and **Barrett reductions** (one exact reduction
+//! per output element under the lazy-reduction backends) — attributed
+//! to the *primitive* that triggered them.
+//!
+//! Attribution is a thread-local [`Primitive`] set by the enclosing
+//! seam via [`prim_scope`]: `NttTable::dft4_batch` brackets itself with
+//! `Ntt`, `BaseConvTable::convert_into` with `BaseConv`, and so on —
+//! then the `ModLinKernel` hot path calls [`add_tile_ops`] /
+//! [`add_barrett`] without knowing who its caller is. Counters are
+//! global relaxed atomics; the snapshot rides `MetricsSnapshot` (wire
+//! v7) and the telemetry bench prints the breakdown table.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::OnceLock;
+
+use super::span::enabled;
+
+/// Which primitive triggered the work. `Other` (0) is the default when
+/// no scope is open (e.g. a bare `ModLinKernel::apply` from a test).
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
+#[repr(u8)]
+pub enum Primitive {
+    Other = 0,
+    Ntt = 1,
+    BaseConv = 2,
+    ModDown = 3,
+    KeySwitch = 4,
+}
+
+pub const PRIMITIVES: usize = 5;
+
+impl Primitive {
+    pub const ALL: [Primitive; PRIMITIVES] = [
+        Primitive::Other,
+        Primitive::Ntt,
+        Primitive::BaseConv,
+        Primitive::ModDown,
+        Primitive::KeySwitch,
+    ];
+
+    pub fn name(self) -> &'static str {
+        match self {
+            Primitive::Other => "other",
+            Primitive::Ntt => "ntt",
+            Primitive::BaseConv => "baseconv",
+            Primitive::ModDown => "moddown",
+            Primitive::KeySwitch => "keyswitch",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<Primitive> {
+        Primitive::ALL.get(v as usize).copied()
+    }
+}
+
+#[derive(Default)]
+struct Row {
+    calls: AtomicU64,
+    tile_ops: AtomicU64,
+    butterflies: AtomicU64,
+    barrett: AtomicU64,
+}
+
+#[derive(Default)]
+struct Counters {
+    rows: [Row; PRIMITIVES],
+}
+
+fn counters() -> &'static Counters {
+    static COUNTERS: OnceLock<Counters> = OnceLock::new();
+    COUNTERS.get_or_init(Counters::default)
+}
+
+thread_local! {
+    static CURRENT: Cell<u8> = const { Cell::new(0) };
+}
+
+fn current() -> usize {
+    CURRENT.try_with(|c| c.get() as usize).unwrap_or(0).min(PRIMITIVES - 1)
+}
+
+/// RAII attribution scope: work counted while alive is charged to
+/// `prim`. Nested scopes charge the innermost primitive (a base
+/// conversion inside a key-switch counts as base conversion — matching
+/// how the paper's table splits its rows).
+pub struct PrimScope {
+    prev: u8,
+}
+
+pub fn prim_scope(prim: Primitive) -> PrimScope {
+    let prev = CURRENT.try_with(|c| c.replace(prim as u8)).unwrap_or(0);
+    if enabled() {
+        counters().rows[prim as usize].calls.fetch_add(1, Ordering::Relaxed);
+    }
+    PrimScope { prev }
+}
+
+impl Drop for PrimScope {
+    fn drop(&mut self) {
+        let _ = CURRENT.try_with(|c| c.set(self.prev));
+    }
+}
+
+/// Count MLT output elements (`rows * n * k` per apply).
+pub fn add_tile_ops(n: u64) {
+    if enabled() {
+        counters().rows[current()].tile_ops.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Count classical butterfly-equivalents (`b * (n/2) * log2 n` per NTT
+/// batch) — kept separate from tile-ops so the MLT formulation stays
+/// comparable with butterfly-counting hardware papers.
+pub fn add_butterfly_equiv(n: u64) {
+    if enabled() {
+        counters().rows[current()].butterflies.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// Count exact Barrett reductions (one per MLT output element under the
+/// lazy-reduction backends).
+pub fn add_barrett(n: u64) {
+    if enabled() {
+        counters().rows[current()].barrett.fetch_add(n, Ordering::Relaxed);
+    }
+}
+
+/// One primitive's row in the dynamic-work breakdown.
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkRow {
+    pub calls: u64,
+    pub tile_ops: u64,
+    pub butterflies: u64,
+    pub barrett: u64,
+}
+
+/// The full breakdown, index-aligned with [`Primitive::ALL`].
+#[derive(Debug, Clone, Copy, Default, PartialEq, Eq)]
+pub struct WorkSnapshot {
+    pub rows: [WorkRow; PRIMITIVES],
+}
+
+impl WorkSnapshot {
+    pub fn total_tile_ops(&self) -> u64 {
+        self.rows.iter().fold(0u64, |a, r| a.saturating_add(r.tile_ops))
+    }
+
+    /// Fraction of total tile-ops charged to `prim` (0.0 when idle).
+    pub fn share(&self, prim: Primitive) -> f64 {
+        let total = self.total_tile_ops();
+        if total == 0 {
+            0.0
+        } else {
+            self.rows[prim as usize].tile_ops as f64 / total as f64
+        }
+    }
+}
+
+pub fn work_snapshot() -> WorkSnapshot {
+    let c = counters();
+    let mut out = WorkSnapshot::default();
+    for (o, r) in out.rows.iter_mut().zip(c.rows.iter()) {
+        *o = WorkRow {
+            calls: r.calls.load(Ordering::Relaxed),
+            tile_ops: r.tile_ops.load(Ordering::Relaxed),
+            butterflies: r.butterflies.load(Ordering::Relaxed),
+            barrett: r.barrett.load(Ordering::Relaxed),
+        };
+    }
+    out
+}
+
+/// Difference of two snapshots (for bracketing one workload).
+pub fn work_delta(after: &WorkSnapshot, before: &WorkSnapshot) -> WorkSnapshot {
+    let mut out = WorkSnapshot::default();
+    for i in 0..PRIMITIVES {
+        out.rows[i] = WorkRow {
+            calls: after.rows[i].calls.saturating_sub(before.rows[i].calls),
+            tile_ops: after.rows[i].tile_ops.saturating_sub(before.rows[i].tile_ops),
+            butterflies: after.rows[i].butterflies.saturating_sub(before.rows[i].butterflies),
+            barrett: after.rows[i].barrett.saturating_sub(before.rows[i].barrett),
+        };
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::telemetry::span::set_enabled;
+    use std::sync::Mutex;
+
+    fn serialized() -> std::sync::MutexGuard<'static, ()> {
+        static GATE: Mutex<()> = Mutex::new(());
+        match GATE.lock() {
+            Ok(g) => g,
+            Err(poison) => poison.into_inner(),
+        }
+    }
+
+    #[test]
+    fn scopes_attribute_to_innermost_primitive() {
+        let _gate = serialized();
+        set_enabled(true);
+        let before = work_snapshot();
+        {
+            let _ks = prim_scope(Primitive::KeySwitch);
+            add_tile_ops(10);
+            {
+                let _bc = prim_scope(Primitive::BaseConv);
+                add_tile_ops(100);
+                add_barrett(5);
+            }
+            add_tile_ops(1); // back to keyswitch after inner drop
+        }
+        add_butterfly_equiv(7); // no scope -> Other
+        let d = work_delta(&work_snapshot(), &before);
+        assert_eq!(d.rows[Primitive::KeySwitch as usize].tile_ops, 11);
+        assert_eq!(d.rows[Primitive::KeySwitch as usize].calls, 1);
+        assert_eq!(d.rows[Primitive::BaseConv as usize].tile_ops, 100);
+        assert_eq!(d.rows[Primitive::BaseConv as usize].barrett, 5);
+        assert_eq!(d.rows[Primitive::Other as usize].butterflies, 7);
+    }
+
+    #[test]
+    fn disabled_tracer_counts_nothing() {
+        let _gate = serialized();
+        set_enabled(false);
+        let before = work_snapshot();
+        {
+            let _s = prim_scope(Primitive::Ntt);
+            add_tile_ops(1000);
+            add_butterfly_equiv(1000);
+            add_barrett(1000);
+        }
+        set_enabled(true);
+        let d = work_delta(&work_snapshot(), &before);
+        assert_eq!(d, WorkSnapshot::default());
+    }
+
+    #[test]
+    fn shares_sum_to_one_when_busy() {
+        let _gate = serialized();
+        set_enabled(true);
+        let before = work_snapshot();
+        {
+            let _s = prim_scope(Primitive::Ntt);
+            add_tile_ops(300);
+        }
+        {
+            let _s = prim_scope(Primitive::BaseConv);
+            add_tile_ops(100);
+        }
+        let d = work_delta(&work_snapshot(), &before);
+        assert_eq!(d.total_tile_ops(), 400);
+        let sum: f64 = Primitive::ALL.iter().map(|&p| d.share(p)).sum();
+        assert!((sum - 1.0).abs() < 1e-12);
+        assert!((d.share(Primitive::Ntt) - 0.75).abs() < 1e-12);
+    }
+
+    #[test]
+    fn primitive_u8_roundtrip() {
+        for (i, p) in Primitive::ALL.iter().enumerate() {
+            assert_eq!(*p as usize, i);
+            assert_eq!(Primitive::from_u8(i as u8), Some(*p));
+        }
+        assert_eq!(Primitive::from_u8(PRIMITIVES as u8), None);
+    }
+}

@@ -69,7 +69,7 @@ fn sched_config(args: &Args) -> crate::sched::SchedConfig {
 /// `serve --listen <addr> [--params toy|medium] [--fhec-workers N]
 /// [--cuda-workers N] [--max-batch N] [--max-queue N] [--linger-ms N]
 /// [--key-budget-mb N] [--max-resident-tenants N] [--batch-window-us N]
-/// [--batch-workers N]`
+/// [--batch-workers N] [--trace on|off] [--slow-request-ms N]`
 ///
 /// The two registry knobs bound expanded tenant key sets (0 = no
 /// limit): past the budget, cold tenants are demoted to their
@@ -80,6 +80,11 @@ fn sched_config(args: &Args) -> crate::sched::SchedConfig {
 /// single MLT dispatches, each op waiting at most N µs for company,
 /// with `--max-batch` capping fused occupancy and deficit round-robin
 /// keeping tenants fair inside a batch.
+///
+/// `--trace on|off` overrides the `FHECORE_TRACE` env var (default on:
+/// the tracer's off-path is one atomic load). `--slow-request-ms N`
+/// (0 = off) logs one structured stderr line per request slower than N
+/// ms, with its per-stage breakdown.
 pub fn run_serve(args: &Args) -> i32 {
     let listen = args.opt("listen").unwrap_or(DEFAULT_ADDR);
     let pname = args.opt("params").unwrap_or("toy");
@@ -87,6 +92,17 @@ pub fn run_serve(args: &Args) -> i32 {
         eprintln!("unknown params preset '{pname}' (toy|medium)");
         return 2;
     };
+    crate::telemetry::init_from_env();
+    match args.opt("trace") {
+        Some("on") => crate::telemetry::set_enabled(true),
+        Some("off") => crate::telemetry::set_enabled(false),
+        Some(other) => {
+            eprintln!("unknown --trace mode '{other}' (on|off)");
+            return 2;
+        }
+        None => {}
+    }
+    crate::telemetry::set_slow_request_ms(args.opt_u64("slow-request-ms", 0));
     let listener = match TcpListener::bind(listen) {
         Ok(l) => l,
         Err(e) => {
@@ -111,6 +127,11 @@ pub fn run_serve(args: &Args) -> i32 {
             sched.workers
         );
     }
+    println!(
+        "fhecore-serve: span tracing {} (slow-request threshold {} ms)",
+        if crate::telemetry::enabled() { "on" } else { "off" },
+        crate::telemetry::slow_request_us() / 1000
+    );
     let opts = ServeOptions {
         params,
         serve: serve_config(args),
@@ -130,9 +151,11 @@ pub fn run_serve(args: &Args) -> i32 {
     }
 }
 
-/// `client [quickstart|metrics|shutdown] --connect <addr> [--params ...]
-/// [--seed N]` — `--seed` varies the quickstart's key material, so each
-/// distinct seed registers (and exercises) a distinct server tenant.
+/// `client [quickstart|metrics|trace|shutdown] --connect <addr>
+/// [--params ...] [--seed N]` — `--seed` varies the quickstart's key
+/// material, so each distinct seed registers (and exercises) a distinct
+/// server tenant. `trace [--out FILE]` drains the server's span rings
+/// and renders them as Chrome trace-event JSON (Perfetto-loadable).
 pub fn run_client(args: &Args) -> i32 {
     let addr = args.opt("connect").unwrap_or(DEFAULT_ADDR).to_string();
     let pname = args.opt("params").unwrap_or("toy");
@@ -168,6 +191,13 @@ pub fn run_client(args: &Args) -> i32 {
                 1
             }
         },
+        "trace" => match fetch_trace(&addr, params, timeout, args.opt("out")) {
+            Ok(()) => 0,
+            Err(e) => {
+                eprintln!("client trace failed: {e}");
+                1
+            }
+        },
         "shutdown" => {
             match RemoteEvaluator::connect_retry(&addr, params, timeout)
                 .and_then(|r| r.shutdown())
@@ -183,7 +213,7 @@ pub fn run_client(args: &Args) -> i32 {
             }
         }
         other => {
-            eprintln!("unknown client mode '{other}' (quickstart|metrics|shutdown)");
+            eprintln!("unknown client mode '{other}' (quickstart|metrics|trace|shutdown)");
             2
         }
     }
@@ -377,6 +407,15 @@ pub fn run_cluster(args: &Args) -> i32 {
                             t.fused_occupancy_peak,
                             t.fused_hist,
                             t.sched_rejected
+                        );
+                        // v7 histograms sum bucket-wise across shards, so
+                        // the cluster-wide quantiles are exact (within
+                        // log2 bucket resolution), not averaged averages.
+                        let (p50, p95, p99) = t.queue_wait_hist.summary_us();
+                        println!(
+                            "cluster latency: queue wait p50 {p50:.1} us  p95 {p95:.1} us  \
+                             p99 {p99:.1} us, slow requests {}, trace drops {}",
+                            t.slow_requests, t.trace_dropped
                         );
                         0
                     }
@@ -572,6 +611,83 @@ fn fetch_metrics(addr: &str, params: CkksParams, timeout: Duration) -> Result<()
         m.sched_depth,
         m.sched_rejected
     );
+    // Telemetry (wire v7): log-bucketed latency quantiles per op-kind
+    // group plus the queue-wait/execute split and the per-stage busy
+    // time. The CI telemetry smoke greps "p99" from these lines.
+    let (qp50, qp95, qp99) = m.queue_wait_hist.summary_us();
+    println!(
+        "  queue wait     p50 {qp50:.1} us  p95 {qp95:.1} us  p99 {qp99:.1} us  \
+         ({} samples)",
+        m.queue_wait_hist.count()
+    );
+    for (g, h) in m.exec_hist.iter().enumerate() {
+        if h.is_empty() {
+            continue;
+        }
+        let (p50, p95, p99) = h.summary_us();
+        println!(
+            "  exec {:<11} p50 {p50:.1} us  p95 {p95:.1} us  p99 {p99:.1} us  \
+             ({} samples)",
+            crate::telemetry::OP_GROUP_NAMES[g],
+            h.count()
+        );
+    }
+    for (i, st) in crate::telemetry::Stage::ALL.iter().enumerate() {
+        let h = &m.stage_hist[i];
+        if h.is_empty() {
+            continue;
+        }
+        let (p50, p95, p99) = h.summary_us();
+        println!(
+            "  stage {:<14} p50 {p50:.1} us  p95 {p95:.1} us  p99 {p99:.1} us  \
+             busy {} us",
+            st.name(),
+            m.stage_ns[i] / 1_000
+        );
+    }
+    println!("  slow requests  {}  (trace drops {})", m.slow_requests, m.trace_dropped);
+    for (p, row) in crate::telemetry::Primitive::ALL.iter().zip(m.work.rows.iter()) {
+        if row.calls == 0 && row.tile_ops == 0 && row.butterflies == 0 {
+            continue;
+        }
+        println!(
+            "  work {:<10}    calls {}  tile-ops {}  butterfly-equiv {}  barrett {}",
+            p.name(),
+            row.calls,
+            row.tile_ops,
+            row.butterflies,
+            row.barrett
+        );
+    }
+    Ok(())
+}
+
+/// Drain the server's span rings (v7 `TraceReq`) and render them as
+/// Chrome trace-event JSON — load the output into Perfetto or
+/// `chrome://tracing`. With `--out FILE` the JSON is written there
+/// (summary on stderr); without it the JSON goes to stdout.
+fn fetch_trace(
+    addr: &str,
+    params: CkksParams,
+    timeout: Duration,
+    out: Option<&str>,
+) -> Result<(), WireError> {
+    let remote = RemoteEvaluator::connect_retry(addr, params, timeout)?;
+    let (events, dropped) = remote.trace()?;
+    let json = crate::telemetry::chrome_trace_json(&events).to_string_pretty();
+    match out {
+        Some(path) => {
+            std::fs::write(path, &json).map_err(WireError::Io)?;
+            eprintln!(
+                "wrote {} span(s) to {path} ({dropped} dropped to ring overflow)",
+                events.len()
+            );
+        }
+        None => {
+            println!("{json}");
+            eprintln!("{} span(s); {dropped} dropped to ring overflow", events.len());
+        }
+    }
     Ok(())
 }
 

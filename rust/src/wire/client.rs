@@ -256,6 +256,23 @@ impl RemoteEvaluator {
         }
     }
 
+    /// Drain the server's span rings (v7 `TraceReq`): every buffered
+    /// [`crate::telemetry::SpanEvent`] plus the count of spans lost to
+    /// ring overflow. Destructive — a second call returns only spans
+    /// recorded since this one.
+    pub fn trace(&self) -> Result<(Vec<crate::telemetry::SpanEvent>, u64), WireError> {
+        let mut ch = self.io.lock().unwrap();
+        ch.send(&Message::TraceReq)?;
+        match ch.recv()? {
+            Message::TraceResp { events, dropped } => Ok((events, dropped)),
+            Message::Error { code, detail, .. } => Err(WireError::Remote { code, detail }),
+            other => Err(WireError::Protocol(format!(
+                "expected TraceResp, got tag {:#04x}",
+                other.tag()
+            ))),
+        }
+    }
+
     /// Ask the server process to stop accepting and drain (best-effort).
     pub fn shutdown(&self) -> Result<(), WireError> {
         let mut ch = self.io.lock().unwrap();

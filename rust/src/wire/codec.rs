@@ -27,6 +27,7 @@ use crate::ckks::params::{CkksContext, CkksParams, WidthProfile};
 use crate::ckks::program::{FheProgram, OpCode, ProgramError, Reg};
 use crate::ckks::{Ciphertext, EvalKeySet, Format, KeyKind, KsKey, MissingKey, RnsPoly};
 use crate::coordinator::MetricsSnapshot;
+use crate::telemetry::{LatencyHist, SpanEvent, Stage};
 
 /// Hard ceilings a reader enforces before allocating (corrupt or hostile
 /// lengths must not OOM the process).
@@ -949,6 +950,64 @@ impl WireRead for ProgramError {
     }
 }
 
+/// Sentinel prefixing the v7 telemetry block inside a
+/// [`MetricsSnapshot`] payload. Every earlier era's payload ended at a
+/// fixed byte boundary; the lenient reader stops there when the buffer
+/// runs out, and only consumes the telemetry tail when this sentinel is
+/// the next word. A v6 payload cannot collide with it: the bytes at that
+/// offset are the low half of `sched_depth`'s *successor* — i.e. the
+/// payload simply ends — so the peek is unambiguous.
+pub const TELEMETRY_MAGIC: u32 = 0x7E1E_33A7;
+
+fn put_hist(out: &mut Vec<u8>, h: &LatencyHist) {
+    for b in h.buckets {
+        put_u64(out, b);
+    }
+}
+
+fn read_hist(r: &mut Reader) -> Result<LatencyHist, WireError> {
+    let mut h = LatencyHist::default();
+    for b in h.buckets.iter_mut() {
+        *b = r.u64()?;
+    }
+    Ok(h)
+}
+
+impl WireWrite for SpanEvent {
+    fn wire_write(&self, out: &mut Vec<u8>) {
+        put_u64(out, self.id);
+        put_u64(out, self.parent);
+        put_u64(out, self.request);
+        put_u64(out, self.tenant);
+        put_u8(out, self.stage as u8);
+        put_u64(out, self.t_start_ns);
+        put_u64(out, self.dur_ns);
+        put_u64(out, self.detail);
+        put_u32(out, self.tid);
+    }
+}
+
+impl WireRead for SpanEvent {
+    fn wire_read(r: &mut Reader) -> Result<Self, WireError> {
+        Ok(SpanEvent {
+            id: r.u64()?,
+            parent: r.u64()?,
+            request: r.u64()?,
+            tenant: r.u64()?,
+            stage: {
+                let raw = r.u8()?;
+                Stage::from_u8(raw).ok_or_else(|| {
+                    WireError::Corrupt(format!("unknown span stage {raw}"))
+                })?
+            },
+            t_start_ns: r.u64()?,
+            dur_ns: r.u64()?,
+            detail: r.u64()?,
+            tid: r.u32()?,
+        })
+    }
+}
+
 impl WireWrite for MetricsSnapshot {
     fn wire_write(&self, out: &mut Vec<u8>) {
         put_u64(out, self.served);
@@ -989,12 +1048,41 @@ impl WireWrite for MetricsSnapshot {
         }
         put_u64(out, self.sched_depth);
         put_u64(out, self.sched_rejected);
+        // v7 telemetry block, prefixed with the sentinel so the lenient
+        // reader can tell "telemetry tail follows" from "payload ends
+        // here" without a length header.
+        put_u32(out, TELEMETRY_MAGIC);
+        put_hist(out, &self.queue_wait_hist);
+        for h in &self.exec_hist {
+            put_hist(out, h);
+        }
+        for h in &self.stage_hist {
+            put_hist(out, h);
+        }
+        for ns in self.stage_ns {
+            put_u64(out, ns);
+        }
+        put_u64(out, self.slow_requests);
+        put_u64(out, self.trace_dropped);
+        for row in &self.work.rows {
+            put_u64(out, row.calls);
+            put_u64(out, row.tile_ops);
+            put_u64(out, row.butterflies);
+            put_u64(out, row.barrett);
+        }
     }
 }
 
 impl WireRead for MetricsSnapshot {
     fn wire_read(r: &mut Reader) -> Result<Self, WireError> {
-        Ok(MetricsSnapshot {
+        // Era-by-era lenient read: every historical payload ended exactly
+        // where one of the `remaining() == 0` guards below checks, so a
+        // v2–v6 snapshot decodes into the current struct with the newer
+        // fields at their defaults. The guards cannot misfire inside a
+        // `ShardMetricsResp` concatenation: the handshake pins both ends
+        // to one version, so a current writer always emits full payloads
+        // and the reader only stops early on genuinely old-era bytes.
+        let mut s = MetricsSnapshot {
             served: r.u64()?,
             batches: r.u64()?,
             rejected: r.u64()?,
@@ -1006,26 +1094,63 @@ impl WireRead for MetricsSnapshot {
             fhec_served: r.u64()?,
             cuda_served: r.u64()?,
             programs: r.u64()?,
-            mlt_backend: r.u8()?,
-            tenants_resident: r.u32()?,
-            tenants_cold: r.u32()?,
-            registry_hits: r.u64()?,
-            registry_misses: r.u64()?,
-            key_evictions: r.u64()?,
-            key_expansions: r.u64()?,
-            expansion_us: r.u64()?,
-            resident_key_bytes: r.u64()?,
-            pool_hits: r.u64()?,
-            pool_misses: r.u64()?,
-            pool_bytes_hwm: r.u64()?,
-            overloaded: r.u64()?,
-            fused_dispatches: r.u64()?,
-            fused_members: r.u64()?,
-            fused_occupancy_peak: r.u64()?,
-            fused_hist: [r.u64()?, r.u64()?, r.u64()?, r.u64()?],
-            sched_depth: r.u64()?,
-            sched_rejected: r.u64()?,
-        })
+            ..MetricsSnapshot::default()
+        };
+        if r.remaining() == 0 {
+            return Ok(s); // v2/v3 payload (88 bytes)
+        }
+        s.mlt_backend = r.u8()?;
+        if r.remaining() == 0 {
+            return Ok(s); // v4 payload (89 bytes)
+        }
+        s.tenants_resident = r.u32()?;
+        s.tenants_cold = r.u32()?;
+        s.registry_hits = r.u64()?;
+        s.registry_misses = r.u64()?;
+        s.key_evictions = r.u64()?;
+        s.key_expansions = r.u64()?;
+        s.expansion_us = r.u64()?;
+        s.resident_key_bytes = r.u64()?;
+        s.pool_hits = r.u64()?;
+        s.pool_misses = r.u64()?;
+        s.pool_bytes_hwm = r.u64()?;
+        s.overloaded = r.u64()?;
+        if r.remaining() == 0 {
+            return Ok(s); // v5 payload (177 bytes)
+        }
+        s.fused_dispatches = r.u64()?;
+        s.fused_members = r.u64()?;
+        s.fused_occupancy_peak = r.u64()?;
+        s.fused_hist = [r.u64()?, r.u64()?, r.u64()?, r.u64()?];
+        s.sched_depth = r.u64()?;
+        s.sched_rejected = r.u64()?;
+        // v6 payloads (249 bytes) end here; the v7 tail announces itself
+        // with the sentinel.
+        let has_telemetry = r.remaining() >= 4
+            && u32::from_le_bytes(r.rest()[..4].try_into().unwrap()) == TELEMETRY_MAGIC;
+        if !has_telemetry {
+            return Ok(s);
+        }
+        r.u32()?; // consume the sentinel
+        s.queue_wait_hist = read_hist(r)?;
+        for h in s.exec_hist.iter_mut() {
+            *h = read_hist(r)?;
+        }
+        for h in s.stage_hist.iter_mut() {
+            *h = read_hist(r)?;
+        }
+        for ns in s.stage_ns.iter_mut() {
+            *ns = r.u64()?;
+        }
+        s.slow_requests = r.u64()?;
+        s.trace_dropped = r.u64()?;
+        for row in s.work.rows.iter_mut() {
+            row.calls = r.u64()?;
+            row.tile_ops = r.u64()?;
+            row.butterflies = r.u64()?;
+            row.barrett = r.u64()?;
+        }
+        Ok(s)
     }
 }
 
@@ -1073,6 +1198,139 @@ mod tests {
         };
         assert!(matches!(
             decode_params(&ct_hdr_as_params),
+            Err(WireError::Corrupt(_))
+        ));
+    }
+
+    /// A snapshot with every era's fields populated, including the v7
+    /// telemetry block.
+    fn v7_snapshot() -> MetricsSnapshot {
+        let mut s = MetricsSnapshot {
+            served: 10,
+            batches: 3,
+            rejected: 1,
+            queue_peak: 5,
+            mean_service_us: 123.5,
+            mean_batch: 3.3,
+            fhec_depth: 2,
+            cuda_depth: 1,
+            fhec_served: 8,
+            cuda_served: 2,
+            programs: 4,
+            mlt_backend: 3,
+            tenants_resident: 2,
+            tenants_cold: 1,
+            registry_hits: 40,
+            registry_misses: 3,
+            overloaded: 1,
+            fused_dispatches: 6,
+            fused_members: 20,
+            fused_occupancy_peak: 7,
+            fused_hist: [1, 2, 3, 0],
+            sched_depth: 2,
+            sched_rejected: 1,
+            slow_requests: 9,
+            trace_dropped: 11,
+            ..MetricsSnapshot::default()
+        };
+        s.queue_wait_hist.record(900);
+        s.exec_hist[1].record(40_000);
+        s.stage_hist[Stage::Ntt as usize].record(2_000);
+        s.stage_ns[Stage::BaseConv as usize] = 77;
+        s.work.rows[1].tile_ops = 1234;
+        s.work.rows[4].calls = 5;
+        s
+    }
+
+    #[test]
+    fn metrics_snapshot_v7_roundtrips_bit_exactly() {
+        // Both a fully populated snapshot and the all-default one (every
+        // histogram empty) must survive a write/read/write cycle with
+        // identical bytes — canonical encoding, one encoding per value.
+        for s in [v7_snapshot(), MetricsSnapshot::default()] {
+            let mut buf = Vec::new();
+            s.wire_write(&mut buf);
+            let mut r = Reader::new(&buf);
+            let back = MetricsSnapshot::wire_read(&mut r).unwrap();
+            r.expect_done().unwrap();
+            assert_eq!(back, s);
+            let mut again = Vec::new();
+            back.wire_write(&mut again);
+            assert_eq!(again, buf);
+        }
+    }
+
+    #[test]
+    fn metrics_snapshot_decodes_every_earlier_era() {
+        let s = v7_snapshot();
+        let mut buf = Vec::new();
+        s.wire_write(&mut buf);
+        // Historical payload sizes: v2/v3 ended after the 11 core fields
+        // (88 bytes), v4 appended the backend byte (89), v5 the
+        // registry/pool block (177), v6 the batch-former block (249).
+        // Truncating the current encoding at each boundary reproduces
+        // the exact bytes those binaries sent.
+        for (len, era) in [(88usize, 2u16), (89, 4), (177, 5), (249, 6)] {
+            let mut r = Reader::new(&buf[..len]);
+            let back = MetricsSnapshot::wire_read(&mut r)
+                .unwrap_or_else(|e| panic!("era v{era}: {e:?}"));
+            r.expect_done().unwrap_or_else(|e| panic!("era v{era}: {e:?}"));
+            // Core fields always survive.
+            assert_eq!(back.served, s.served, "era v{era}");
+            assert_eq!(back.programs, s.programs, "era v{era}");
+            assert_eq!(back.mean_batch, s.mean_batch, "era v{era}");
+            // Era-gated fields appear from their own era onward.
+            assert_eq!(
+                back.mlt_backend,
+                if era >= 4 { s.mlt_backend } else { 0 },
+                "era v{era}"
+            );
+            assert_eq!(
+                back.overloaded,
+                if era >= 5 { s.overloaded } else { 0 },
+                "era v{era}"
+            );
+            assert_eq!(
+                back.fused_hist,
+                if era >= 6 { s.fused_hist } else { [0; 4] },
+                "era v{era}"
+            );
+            // The telemetry block is v7-only: defaults for every older era.
+            assert!(back.queue_wait_hist.is_empty(), "era v{era}");
+            assert_eq!(back.slow_requests, 0, "era v{era}");
+            assert_eq!(
+                back.work,
+                crate::telemetry::WorkSnapshot::default(),
+                "era v{era}"
+            );
+        }
+    }
+
+    #[test]
+    fn span_event_roundtrips_and_rejects_unknown_stage() {
+        let ev = SpanEvent {
+            id: 7,
+            parent: 3,
+            request: 99,
+            tenant: 0xABCD,
+            stage: Stage::FusedDispatch,
+            t_start_ns: 1_000,
+            dur_ns: 250,
+            detail: 8,
+            tid: 4,
+        };
+        let mut buf = Vec::new();
+        ev.wire_write(&mut buf);
+        assert_eq!(buf.len(), 61);
+        let mut r = Reader::new(&buf);
+        assert_eq!(SpanEvent::wire_read(&mut r).unwrap(), ev);
+        r.expect_done().unwrap();
+        // The stage byte sits after the four leading u64 ids; an
+        // unassigned value must be rejected, not silently mapped.
+        buf[32] = 0xEE;
+        let mut r = Reader::new(&buf);
+        assert!(matches!(
+            SpanEvent::wire_read(&mut r),
             Err(WireError::Corrupt(_))
         ));
     }

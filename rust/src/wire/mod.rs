@@ -93,16 +93,32 @@ pub const WIRE_MAGIC: [u8; 4] = *b"FHEC";
 /// precedent. No request or response body changes: old clients serve
 /// unchanged, and as with every bump the `MetricsResp` payload is the
 /// only RPC a v5 binary can no longer decode (strict `expect_done`).
-pub const WIRE_VERSION: u16 = 6;
+///
+/// v7 (latency tracing): `MetricsSnapshot` grows the telemetry block —
+/// log-bucketed latency histograms per stage and per op group, a
+/// queue-wait histogram split from execute time, per-stage busy
+/// nanoseconds, slow-request / dropped-span counters, and the
+/// work-accounting rows (tile-ops, butterfly-equivalents, Barrett
+/// reductions per primitive). Unlike previous appends the block is
+/// prefixed with [`codec::TELEMETRY_MAGIC`] so the snapshot reader can
+/// decode *every* earlier era leniently: it stops at each historical
+/// payload boundary (v2/v3 = 88 bytes, v4 = 89, v5 = 177, v6 = 249)
+/// when the buffer runs out, and only consumes the v7 tail when the
+/// sentinel is present. Two new RPCs, `TraceReq`/`TraceResp`, drain the
+/// server's span rings as a list of [`codec`]-encoded span events the
+/// CLI renders as Chrome trace-event JSON.
+pub const WIRE_VERSION: u16 = 7;
 
 /// Peer versions this build serves. Each bump since v2 only appended
 /// fields — to the `MetricsResp` payload (`programs` in v3,
 /// `mlt_backend` in v4, the registry/pool block in v5, the batch-former
-/// block in v6) and, in v5, an *optional* trailing tenant id on request
-/// bodies — so v2/v5-era binaries decode the whole serving surface
-/// except the metrics RPC. That is what accepting their `Hello`s buys.
+/// block in v6, the magic-prefixed telemetry block in v7) and, in v5,
+/// an *optional* trailing tenant id on request bodies — so v2/v6-era
+/// binaries decode the whole serving surface except the metrics RPC
+/// (and, since v7, the trace RPC they never ask for). That is what
+/// accepting their `Hello`s buys.
 pub fn version_accepted(v: u16) -> bool {
-    v == 2 || v == 3 || v == 4 || v == 5 || v == WIRE_VERSION
+    v == 2 || v == 3 || v == 4 || v == 5 || v == 6 || v == WIRE_VERSION
 }
 
 /// Capped exponential backoff for `Busy` retries, shared by

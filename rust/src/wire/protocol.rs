@@ -19,6 +19,8 @@
 //! | 0x0D | `ProgramResponse` | s -> c | id u64, ok/err, outputs or `ProgramError`, timings |
 //! | 0x0E | `ShardMetricsReq`  | c -> s | (empty) |
 //! | 0x0F | `ShardMetricsResp` | s -> c | per-shard (name, `MetricsSnapshot`) list |
+//! | 0x10 | `TraceReq`  | c -> s | (empty) |
+//! | 0x11 | `TraceResp` | s -> c | span event count u32, `SpanEvent` list, dropped u64 |
 //!
 //! `WireOp` mirrors `coordinator::OpKind` one-for-one, carrying the
 //! matrix operand for `HomLinear` (and the plaintext for `MulPlain`)
@@ -49,6 +51,12 @@
 //! v4 layout, so every v2–v4 request body decodes unchanged; tenant 0
 //! (or absent) means "the most recently pushed tenant", which is
 //! exactly the old single-tenant replace semantics.
+//!
+//! **Tracing (protocol v7).** `TraceReq` drains the server's span rings;
+//! the `TraceResp` carries every buffered [`SpanEvent`] (and the count
+//! of spans dropped to ring overflow since start) for the CLI to render
+//! as Chrome trace-event JSON. Draining is destructive — each span is
+//! returned exactly once, so two trace clients see disjoint windows.
 
 use super::codec::{put_bytes, put_f64, put_u16, put_u32, put_u64, put_u8, Reader};
 use super::codec::{WireRead, WireWrite};
@@ -57,9 +65,16 @@ use crate::ckks::linear::SlotMatrix;
 use crate::ckks::program::{FheProgram, ProgramError};
 use crate::ckks::{Ciphertext, MissingKey, RnsPoly};
 use crate::coordinator::{MetricsSnapshot, OpKind};
+use crate::telemetry::SpanEvent;
 
 /// Decode bound on per-shard metrics entries and program I/O lists.
 const MAX_LIST: usize = 4096;
+
+/// Decode bound on `TraceResp` span lists: larger than `MAX_LIST`
+/// because every serving thread buffers up to 8192 spans, but still
+/// small enough (61 bytes/event) that a hostile header cannot force a
+/// runaway allocation.
+const MAX_TRACE_EVENTS: usize = 1 << 20;
 
 /// Error codes carried by `Message::Error`.
 pub mod error_code {
@@ -234,6 +249,14 @@ pub enum Message {
     /// with one entry; a gateway answers with one entry per live shard).
     ShardMetricsReq,
     ShardMetricsResp(Vec<(String, MetricsSnapshot)>),
+    /// Drain the server's span rings (protocol v7). Destructive: each
+    /// buffered span is returned exactly once.
+    TraceReq,
+    TraceResp {
+        events: Vec<SpanEvent>,
+        /// Spans lost to ring overflow since the server started.
+        dropped: u64,
+    },
 }
 
 /// Encode an `OpRequest` frame directly from borrowed operands — the
@@ -305,6 +328,8 @@ pub const TAG_PROGRAM_REQUEST: u8 = 0x0C;
 pub const TAG_PROGRAM_RESPONSE: u8 = 0x0D;
 pub const TAG_SHARD_METRICS_REQ: u8 = 0x0E;
 pub const TAG_SHARD_METRICS_RESP: u8 = 0x0F;
+pub const TAG_TRACE_REQ: u8 = 0x10;
+pub const TAG_TRACE_RESP: u8 = 0x11;
 
 impl Message {
     /// The Hello this build sends.
@@ -329,6 +354,8 @@ impl Message {
             Message::ProgramResponse { .. } => TAG_PROGRAM_RESPONSE,
             Message::ShardMetricsReq => TAG_SHARD_METRICS_REQ,
             Message::ShardMetricsResp(_) => TAG_SHARD_METRICS_RESP,
+            Message::TraceReq => TAG_TRACE_REQ,
+            Message::TraceResp { .. } => TAG_TRACE_RESP,
         }
     }
 
@@ -378,7 +405,10 @@ impl Message {
                 put_u64(&mut body, *id);
                 put_u32(&mut body, *depth);
             }
-            Message::MetricsReq | Message::Shutdown | Message::ShardMetricsReq => {}
+            Message::MetricsReq
+            | Message::Shutdown
+            | Message::ShardMetricsReq
+            | Message::TraceReq => {}
             Message::MetricsResp(snap) => {
                 snap.wire_write(&mut body);
             }
@@ -423,6 +453,13 @@ impl Message {
                     put_bytes(&mut body, name.as_bytes());
                     snap.wire_write(&mut body);
                 }
+            }
+            Message::TraceResp { events, dropped } => {
+                put_u32(&mut body, events.len() as u32);
+                for ev in events {
+                    ev.wire_write(&mut body);
+                }
+                put_u64(&mut body, *dropped);
             }
         }
         Frame::new(self.tag(), body)
@@ -542,6 +579,20 @@ impl Message {
                 }
                 Message::ShardMetricsResp(shards)
             }
+            TAG_TRACE_REQ => Message::TraceReq,
+            TAG_TRACE_RESP => {
+                let n = r.u32()? as usize;
+                if n > MAX_TRACE_EVENTS {
+                    return Err(WireError::Corrupt(format!(
+                        "too many span events ({n})"
+                    )));
+                }
+                let mut events = Vec::with_capacity(n);
+                for _ in 0..n {
+                    events.push(SpanEvent::wire_read(&mut r)?);
+                }
+                Message::TraceResp { events, dropped: r.u64()? }
+            }
             other => return Err(WireError::Corrupt(format!("unknown message tag {other}"))),
         };
         r.expect_done()?;
@@ -557,7 +608,7 @@ mod tests {
     use crate::ckks::{Format, RnsPoly};
 
     fn snapshot() -> MetricsSnapshot {
-        MetricsSnapshot {
+        let mut s = MetricsSnapshot {
             served: 10,
             batches: 3,
             rejected: 1,
@@ -588,7 +639,16 @@ mod tests {
             fused_hist: [1, 2, 3, 0],
             sched_depth: 2,
             sched_rejected: 1,
-        }
+            slow_requests: 1,
+            trace_dropped: 4,
+            ..MetricsSnapshot::default()
+        };
+        s.queue_wait_hist.record(1_500);
+        s.exec_hist[0].record(90_000);
+        s.stage_hist[crate::telemetry::Stage::KeySwitch as usize].record(30_000);
+        s.stage_ns[0] = 123;
+        s.work.rows[2].butterflies = 77;
+        s
     }
 
     /// A structurally valid (tiny, fake-ring) ciphertext for frame tests.
@@ -619,6 +679,35 @@ mod tests {
                 ("127.0.0.1:7051".into(), snapshot()),
                 ("127.0.0.1:7052".into(), MetricsSnapshot::default()),
             ]),
+            Message::TraceReq,
+            Message::TraceResp { events: Vec::new(), dropped: 0 },
+            Message::TraceResp {
+                events: vec![
+                    SpanEvent {
+                        id: 1,
+                        parent: 0,
+                        request: 42,
+                        tenant: 0xFEED,
+                        stage: crate::telemetry::Stage::Ntt,
+                        t_start_ns: 1_000,
+                        dur_ns: 500,
+                        detail: 8,
+                        tid: 1,
+                    },
+                    SpanEvent {
+                        id: 2,
+                        parent: 1,
+                        request: 42,
+                        tenant: 0xFEED,
+                        stage: crate::telemetry::Stage::QueueWait,
+                        t_start_ns: 1_200,
+                        dur_ns: 100,
+                        detail: 0,
+                        tid: 1,
+                    },
+                ],
+                dropped: 3,
+            },
         ];
         for m in msgs {
             let frame = m.encode();

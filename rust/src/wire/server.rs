@@ -194,6 +194,18 @@ impl ServerShared {
             snap.sched_depth = sched.depth() as u64;
             snap.sched_rejected = sm.rejected.load(Relaxed);
         }
+        // The telemetry aggregates are process-global (one tracer serves
+        // every engine), so they are injected exactly once here — never
+        // in per-coordinator snapshots, where the per-tenant sum above
+        // would multiply them.
+        let ts = crate::telemetry::stats_snapshot();
+        snap.queue_wait_hist = ts.queue_wait;
+        snap.exec_hist = ts.exec;
+        snap.stage_hist = ts.stage_hist;
+        snap.stage_ns = ts.stage_ns;
+        snap.slow_requests = ts.slow_requests;
+        snap.trace_dropped = ts.trace_dropped;
+        snap.work = crate::telemetry::work_snapshot();
         snap
     }
 }
@@ -291,6 +303,8 @@ pub(crate) fn writer_loop(stream: TcpStream, rx: MpscReceiver<Message>) {
     use std::io::Write;
     let mut w = std::io::BufWriter::new(stream);
     while let Ok(msg) = rx.recv() {
+        // Spans the serialize+flush, not the idle recv above it.
+        let _span = crate::telemetry::span(crate::telemetry::Stage::WireEncode);
         if msg.encode().write_to(&mut w).is_err() || w.flush().is_err() {
             break;
         }
@@ -322,6 +336,12 @@ pub(crate) fn read_inbound<R: std::io::Read>(r: &mut R) -> Inbound {
             })
         }
     };
+    // Spans the frame decode only — `Frame::read_from` above blocks on
+    // the socket, which would measure idle time, not work.
+    let _span = crate::telemetry::span_with(
+        crate::telemetry::Stage::WireDecode,
+        frame.body.len() as u64,
+    );
     match Message::decode(&frame) {
         Ok(m) => Inbound::Msg(m),
         Err(e) => Inbound::Garbled(Message::Error {
@@ -666,6 +686,13 @@ fn reader_loop(
                     shared.name.clone(),
                     shared.metrics_snapshot(),
                 )]));
+            }
+            Message::TraceReq => {
+                // Destructive drain: each buffered span crosses the wire
+                // exactly once, so concurrent trace clients see disjoint
+                // windows instead of duplicated timelines.
+                let (events, dropped) = crate::telemetry::drain_events();
+                send(Message::TraceResp { events, dropped });
             }
             Message::Shutdown => {
                 shared.stop.store(true, Ordering::SeqCst);

@@ -1,0 +1,241 @@
+//! Telemetry end-to-end: a traced in-process serving run must cover the
+//! pipeline's stages (NTT, base conversion, key-switch, queue wait,
+//! fused dispatch...), export valid Chrome trace-event JSON, and
+//! populate the latency histograms — while observing never changes a
+//! single bit of any ciphertext.
+
+use std::collections::BTreeSet;
+use std::sync::{Arc, Mutex, MutexGuard};
+use std::time::Duration;
+
+use fhecore::ckks::encoding::Complex;
+use fhecore::ckks::params::{CkksContext, CkksParams};
+use fhecore::ckks::{Ciphertext, EvalKeySpec, Evaluator, KeyGen};
+use fhecore::coordinator::{Coordinator, ModelState, OpKind, Request, ServeConfig};
+use fhecore::sched::{BatchScheduler, SchedConfig};
+use fhecore::telemetry::{self, Stage};
+use fhecore::util::json::Json;
+use fhecore::util::rng::Pcg64;
+
+/// The tracer is process-global (rings, histograms, the enabled flag);
+/// these tests serialize on one gate and leave tracing enabled (the
+/// default) on exit.
+fn gate() -> MutexGuard<'static, ()> {
+    static GATE: Mutex<()> = Mutex::new(());
+    match GATE.lock() {
+        Ok(g) => g,
+        Err(poison) => poison.into_inner(),
+    }
+}
+
+fn tenant(seed: u64) -> (Arc<Evaluator>, Ciphertext) {
+    let ctx = CkksContext::new(CkksParams::toy());
+    let mut rng = Pcg64::new(seed);
+    let kg = KeyGen::new(&ctx, &mut rng);
+    let slots = ctx.params.slots();
+    let keys = kg.eval_key_set(
+        &ctx,
+        &EvalKeySpec::relin_only().with_rotations(&[1]),
+        &mut rng,
+    );
+    let enc = kg.encryptor();
+    let z: Vec<Complex> = (0..slots)
+        .map(|i| Complex::new(0.01 * ((seed as usize + i) % 9) as f64, 0.0))
+        .collect();
+    let ev = Evaluator::new(ctx, Arc::new(keys));
+    let ct = enc.encrypt_slots(&ev.ctx, &z, ev.ctx.max_level(), &mut rng);
+    (Arc::new(ev), ct)
+}
+
+fn model(ev: &Evaluator) -> Arc<ModelState> {
+    let slots = ev.ctx.params.slots();
+    let w: Vec<Complex> = (0..slots).map(|_| Complex::new(0.01, 0.0)).collect();
+    Arc::new(ModelState { weights_pt: ev.encode(&w, ev.ctx.max_level()), rot_steps: slots })
+}
+
+fn serve_cfg() -> ServeConfig {
+    ServeConfig {
+        fhec_workers: 1,
+        cuda_workers: 1,
+        max_batch: 4,
+        linger: Duration::from_millis(1),
+        max_queue: 64,
+    }
+}
+
+/// The tentpole end-to-end: two tenants' rotations ride the batch former
+/// (sched-wait + fused-dispatch spans over the kernel seams) while an
+/// Add rides the plain CUDA lane (queue-wait + execute spans); the drain
+/// must cover all the pipeline stages, the Chrome export must reparse,
+/// and every response must match its tenant's oracle computed with the
+/// tracer OFF.
+#[test]
+fn traced_run_covers_stages_and_exports_chrome_json() {
+    let _g = gate();
+    telemetry::set_enabled(true);
+    let _ = telemetry::drain_events();
+    let before = telemetry::stats_snapshot();
+
+    let sched = Arc::new(BatchScheduler::start(SchedConfig {
+        window: Duration::from_millis(30),
+        max_batch: 4,
+        max_queue: 64,
+        workers: 2,
+    }));
+    let tenants: Vec<_> = (0..2).map(|i| tenant(0x7E00 + i)).collect();
+    let coords: Vec<Coordinator> = tenants
+        .iter()
+        .enumerate()
+        .map(|(i, (ev, _))| {
+            Coordinator::start_with_scheduler(
+                ev.clone(),
+                model(ev),
+                serve_cfg(),
+                Some(sched.clone()),
+                i as u64 + 1,
+            )
+        })
+        .collect();
+
+    let mut rot_rxs = Vec::new();
+    for (i, (_, ct)) in tenants.iter().enumerate() {
+        let rx = coords[i]
+            .submit(Request::new(40 + i as u64, OpKind::Rotate(1), ct.clone()))
+            .unwrap_or_else(|(_, e)| panic!("tenant {i} rotate admission: {e}"));
+        rot_rxs.push(rx);
+    }
+    let (ev0, ct0) = &tenants[0];
+    let add_rx = coords[0]
+        .submit(Request::new(50, OpKind::Add, ct0.clone()).with_ct2(ct0.clone()))
+        .unwrap_or_else(|(_, e)| panic!("add admission: {e}"));
+
+    let rotated: Vec<Ciphertext> = rot_rxs
+        .into_iter()
+        .map(|rx| {
+            rx.recv_timeout(Duration::from_secs(120))
+                .expect("rotate response")
+                .ct
+                .expect("rotation key declared")
+        })
+        .collect();
+    let added = add_rx
+        .recv_timeout(Duration::from_secs(120))
+        .expect("add response")
+        .ct
+        .expect("add needs no key");
+
+    // Oracle pass with the tracer disabled: observation must be pure.
+    telemetry::set_enabled(false);
+    for (i, got) in rotated.iter().enumerate() {
+        let (ev, ct) = &tenants[i];
+        assert_eq!(
+            got,
+            &ev.rotate(ct, 1).expect("oracle rotate"),
+            "tenant {i}: traced serving result must be bit-identical to the untraced oracle"
+        );
+    }
+    assert_eq!(added, ev0.add(ct0, ct0));
+    telemetry::set_enabled(true);
+
+    let (events, _dropped) = telemetry::drain_events();
+    let seen: BTreeSet<&str> = events.iter().map(|e| e.stage.name()).collect();
+    for required in
+        ["ntt", "baseconv", "keyswitch", "queue-wait", "sched-wait", "fused-dispatch"]
+    {
+        assert!(
+            seen.contains(required),
+            "stage '{required}' missing from the trace (saw {seen:?})"
+        );
+    }
+    assert!(seen.len() >= 6, "expected >= 6 distinct stages, saw {seen:?}");
+    assert!(
+        events.iter().any(|e| e.request >= 40 && e.tenant != 0),
+        "kernel spans must carry request/tenant attribution"
+    );
+
+    // The Chrome trace-event export reparses and carries the stage names.
+    let printed = telemetry::chrome_trace_json(&events).to_string_pretty();
+    let back = Json::parse(&printed).expect("chrome trace JSON must reparse");
+    let evs = back.get("traceEvents").expect("traceEvents").as_arr().expect("array");
+    assert_eq!(evs.len(), events.len());
+    let names: BTreeSet<&str> =
+        evs.iter().filter_map(|e| e.get("name")?.as_str()).collect();
+    assert!(names.contains("ntt") && names.contains("fused-dispatch"), "names: {names:?}");
+
+    // Histograms advanced: queue wait, the rotate op group, and the
+    // per-stage aggregates the v7 MetricsSnapshot ships.
+    let stats = telemetry::stats_snapshot();
+    assert!(stats.queue_wait.count() > before.queue_wait.count(), "queue-wait samples");
+    assert!(stats.exec[0].count() > before.exec[0].count(), "rotate-group exec samples");
+    assert!(
+        stats.stage_hist[Stage::Ntt as usize].count()
+            > before.stage_hist[Stage::Ntt as usize].count(),
+        "ntt stage histogram"
+    );
+    assert!(
+        stats.stage_ns[Stage::KeySwitch as usize] > before.stage_ns[Stage::KeySwitch as usize],
+        "key-switch busy time"
+    );
+    drop(coords);
+}
+
+/// `--slow-request-ms` on the fused path: a lone op waits the full batch
+/// window before dispatch, so a 5 ms threshold under a 50 ms window must
+/// log (and count) it as slow.
+#[test]
+fn slow_request_log_counts_on_the_fused_path() {
+    let _g = gate();
+    telemetry::set_enabled(true);
+    let before = telemetry::stats_snapshot().slow_requests;
+    telemetry::set_slow_request_ms(5);
+
+    let sched = Arc::new(BatchScheduler::start(SchedConfig {
+        window: Duration::from_millis(50),
+        max_batch: 4,
+        max_queue: 64,
+        workers: 1,
+    }));
+    let (ev, ct) = tenant(0x510);
+    let coord = Coordinator::start_with_scheduler(
+        ev.clone(),
+        model(&ev),
+        serve_cfg(),
+        Some(sched.clone()),
+        9,
+    );
+    let rx = coord
+        .submit(Request::new(1, OpKind::Rotate(1), ct.clone()))
+        .unwrap_or_else(|(_, e)| panic!("admission: {e}"));
+    let resp = rx.recv_timeout(Duration::from_secs(120)).expect("response");
+    assert_eq!(resp.ct.expect("rotation key declared"), ev.rotate(&ct, 1).unwrap());
+
+    telemetry::set_slow_request_ms(0);
+    let after = telemetry::stats_snapshot().slow_requests;
+    assert!(
+        after > before,
+        "a lone op waits the 50 ms window — far past the 5 ms slow threshold \
+         (before {before}, after {after})"
+    );
+    let _ = telemetry::drain_events();
+    drop(coord);
+}
+
+/// `--trace off` end to end: bit-identical results and a silent ring.
+#[test]
+fn trace_off_is_bit_identical_and_silent() {
+    let _g = gate();
+    let (ev, ct) = tenant(0x0FF);
+    telemetry::set_enabled(true);
+    let on = ev.rotate(&ct, 1).expect("rotation key declared");
+    let _ = telemetry::drain_events();
+    telemetry::set_enabled(false);
+    let off = ev.rotate(&ct, 1).expect("rotation key declared");
+    let (events, _) = telemetry::drain_events();
+    telemetry::set_enabled(true);
+    assert_eq!(on, off, "tracer on/off must be bit-identical");
+    assert!(
+        events.is_empty(),
+        "disabled tracer must record nothing ({} events)",
+        events.len()
+    );
+}
