@@ -1,0 +1,95 @@
+//! BFV vs CKKS multiply benchmarks at **matched ring dimensions** — the
+//! two schemes share the same N, the same prime chain (that is what
+//! `BfvParams::matching` means) and the same MLT kernel underneath, so
+//! the medians isolate the *scheme* cost: the BEHZ extended-base lift +
+//! tensor + exact `t/Q` rescale vs the CKKS tensor + rescale-by-prime.
+//! Relinearization (the stock key switch) is identical work in both.
+//!
+//! Every benched op is correctness-gated first: the BFV product must
+//! decrypt to the exact `Z_t` reference and the CKKS product must stay
+//! within float tolerance — a bench over wrong results is worse than no
+//! bench. `bench_archive` folds the medians into EXPERIMENTS.md from
+//! `BENCH_bfv.json`.
+
+use std::sync::Arc;
+
+use fhecore::bench_harness::Bench;
+use fhecore::bfv::{BfvContext, BfvEvaluator, BfvKeyGen, BfvParams};
+use fhecore::ckks::encoding::Complex;
+use fhecore::ckks::params::{CkksContext, CkksParams};
+use fhecore::ckks::{EvalKeySpec, Evaluator, KeyGen};
+use fhecore::util::rng::Pcg64;
+use std::hint::black_box;
+
+fn main() {
+    let mut bench = Bench::new("bfv");
+    let ckks_params = CkksParams::toy();
+    let n = ckks_params.n;
+
+    // --- BFV side: exact multiply over the matching parameter set.
+    let bctx = BfvContext::new(BfvParams::matching(&ckks_params));
+    let mut rng = Pcg64::new(0xBF_BE);
+    let bkg = BfvKeyGen::new(&bctx, &mut rng);
+    let bkeys = bkg.eval_key_set(&bctx, &EvalKeySpec::relin_only().at_levels(vec![bctx.level()]), &mut rng);
+    let bev = BfvEvaluator::new(&bctx, Arc::new(bkeys));
+    let benc = bkg.encryptor();
+    let t = bctx.t();
+    let slots = bctx.params.slots();
+    let va: Vec<i64> = (0..slots as i64).map(|i| (i * 7919 + 3) % t as i64).collect();
+    let vb: Vec<i64> = (0..slots as i64).map(|i| (i * 65537 + 1) % t as i64).collect();
+    let ba = benc.encrypt_slots(&bctx, &va, &mut rng);
+    let bb = benc.encrypt_slots(&bctx, &vb, &mut rng);
+
+    // Correctness gate: exact integer equality, every slot.
+    let prod = bev.mul(&ba, &bb).expect("relin key");
+    let back = bkg.decryptor().decrypt_slots(&bctx, &prod);
+    let mt = bctx.tables.mt;
+    for j in 0..slots {
+        assert_eq!(back[j], mt.mul(va[j] as u64, vb[j] as u64), "BFV gate: slot {j}");
+    }
+
+    // --- CKKS side: approximate multiply over the same ring + chain.
+    let cctx = CkksContext::new(ckks_params.clone());
+    let ckg = KeyGen::new(&cctx, &mut rng);
+    let level = cctx.max_level();
+    let ckeys = ckg.eval_key_set(
+        &cctx,
+        &EvalKeySpec::relin_only().at_levels(vec![level]),
+        &mut rng,
+    );
+    let cev = Evaluator::new(CkksContext::new(ckks_params), Arc::new(ckeys));
+    let cenc = ckg.encryptor();
+    let cslots = cev.ctx.params.slots();
+    let z: Vec<Complex> = (0..cslots).map(|i| Complex::new(0.01 * (i % 20) as f64, 0.0)).collect();
+    let ca = cenc.encrypt_slots(&cev.ctx, &z, level, &mut rng);
+
+    // Correctness gate: the square must decrypt within float tolerance.
+    let sq = cev.mul(&ca, &ca).expect("relin key");
+    let cback = ckg.decryptor().decrypt_to_slots(&cev.ctx, &sq);
+    for (j, c) in cback.iter().enumerate().take(cslots) {
+        let x = 0.01 * (j % 20) as f64;
+        assert!((c.re - x * x).abs() < 1e-2, "CKKS gate: slot {j} err {}", (c.re - x * x).abs());
+    }
+
+    // --- The matched pair the archive records: multiply + relin, same N,
+    // same chain, same kernel substrate.
+    let bfv_id = format!("mul_relin/bfv_n{n}");
+    let ckks_id = format!("mul_relin/ckks_n{n}");
+    bench.run(&bfv_id, || {
+        black_box(bev.mul(black_box(&ba), &bb).unwrap());
+    });
+    bench.run(&ckks_id, || {
+        black_box(cev.mul(black_box(&ca), &ca).unwrap());
+    });
+
+    // The scheme-agnostic ops for scale: additions are the same code path
+    // in both schemes (elementwise RNS), so their medians should track.
+    bench.run(&format!("add/bfv_n{n}"), || {
+        black_box(bev.add(black_box(&ba), &bb));
+    });
+    bench.run(&format!("add/ckks_n{n}"), || {
+        black_box(cev.add(black_box(&ca), &ca));
+    });
+
+    bench.write_json().expect("bench json dump");
+}

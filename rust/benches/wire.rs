@@ -68,6 +68,7 @@ fn main() {
     let listener = TcpListener::bind("127.0.0.1:0").expect("bind");
     let addr = listener.local_addr().unwrap().to_string();
     let opts = ServeOptions {
+        bfv: Some(fhecore::bfv::BfvParams::matching(&params)),
         params: params.clone(),
         serve: ServeConfig {
             fhec_workers: 2,

@@ -1,0 +1,184 @@
+//! CRT batch encoding for BFV: integer vectors in `Z_t^n` packed into
+//! one plaintext polynomial of `Z_t[x]/(x^n + 1)`.
+//!
+//! Because `t = 1 mod 2n`, the ring splits completely over `Z_t` and a
+//! plaintext polynomial is determined by its values at the `n` primitive
+//! 2n-th roots of unity — which is exactly what the shared
+//! [`NttTable`] computes: `forward` evaluates at `psi^(2k+1)` in natural
+//! order. The encoder is therefore one more NTT consumer (a `Z_t`-modulus
+//! table), not a new transform.
+//!
+//! ## Slot layout
+//!
+//! Slots form two rows of `n/2`, the standard BFV batching matrix: slot
+//! `(0, j)` sits at root exponent `5^j mod 2n`, slot `(1, j)` at
+//! `-5^j mod 2n`. This is the same `5^j` orbit CKKS rotation uses, so the
+//! existing Galois machinery acts exactly as expected:
+//!
+//! * `rotate(k)` (element `5^k`) rotates **both rows** left by `k`;
+//! * `conjugate` (element `2n - 1`) **swaps the rows**.
+//!
+//! Slots are exposed row-major: `values[j]` is row 0 column `j`,
+//! `values[n/2 + j]` is row 1 column `j`.
+
+use crate::ckks::modarith::Modulus;
+use crate::ckks::ntt::NttTable;
+
+/// Batch encoder over `Z_t`: value vectors of length `n` <-> plaintext
+/// polynomial coefficient vectors mod `t`.
+pub struct BfvEncoder {
+    pub n: usize,
+    pub t: u64,
+    mt: Modulus,
+    /// The `Z_t` NTT: evaluation/interpolation at the 2n-th roots.
+    ntt: NttTable,
+    /// Slot index (row-major) -> natural-order evaluation position
+    /// `(e - 1)/2` for root exponent `e`.
+    pos: Vec<usize>,
+}
+
+impl BfvEncoder {
+    pub fn new(n: usize, t: u64) -> Self {
+        assert!(n.is_power_of_two() && n >= 2);
+        assert_eq!((t - 1) % (2 * n as u64), 0, "t must split the ring");
+        let ntt = NttTable::new(n, t);
+        let two_n = 2 * n;
+        let half = n / 2;
+        let mut pos = vec![0usize; n];
+        let mut e = 1usize;
+        for j in 0..half {
+            pos[j] = (e - 1) / 2;
+            pos[half + j] = (two_n - e - 1) / 2;
+            e = (e * 5) % two_n;
+        }
+        debug_assert!({
+            let mut seen = pos.clone();
+            seen.sort_unstable();
+            seen.dedup();
+            seen.len() == n
+        });
+        Self {
+            n,
+            t,
+            mt: Modulus::new(t),
+            ntt,
+            pos,
+        }
+    }
+
+    /// Slot count: all `n` (two rows of `n/2`).
+    pub fn slots(&self) -> usize {
+        self.n
+    }
+
+    /// Row length: `n/2` columns per row; `rotate(k)` rotates within rows.
+    pub fn row_len(&self) -> usize {
+        self.n / 2
+    }
+
+    /// Map a signed integer to its `Z_t` representative (negative inputs
+    /// take the upper-half representative `t - |v| mod t`).
+    pub fn reduce_signed(&self, v: i64) -> u64 {
+        let m = (v % self.t as i64 + self.t as i64) as u64;
+        self.mt.reduce_u64(m)
+    }
+
+    /// Centered representative in `(-t/2, t/2]` of a `Z_t` value.
+    pub fn to_signed(&self, v: u64) -> i64 {
+        debug_assert!(v < self.t);
+        if v > self.t / 2 {
+            v as i64 - self.t as i64
+        } else {
+            v as i64
+        }
+    }
+
+    /// Encode up to `n` slot values (row-major) into plaintext polynomial
+    /// coefficients mod `t`. Unspecified slots are zero.
+    pub fn encode(&self, values: &[i64]) -> Vec<u64> {
+        assert!(values.len() <= self.n, "too many slots");
+        let mut buf = vec![0u64; self.n];
+        for (s, &v) in values.iter().enumerate() {
+            buf[self.pos[s]] = self.reduce_signed(v);
+        }
+        self.ntt.inverse(&mut buf);
+        buf
+    }
+
+    /// Decode plaintext polynomial coefficients mod `t` back to the `n`
+    /// slot values (row-major, canonical `[0, t)` representatives).
+    pub fn decode(&self, coeffs: &[u64]) -> Vec<u64> {
+        assert_eq!(coeffs.len(), self.n);
+        let mut buf = coeffs.to_vec();
+        self.ntt.forward(&mut buf);
+        (0..self.n).map(|s| buf[self.pos[s]]).collect()
+    }
+
+    /// [`Self::decode`] with centered representatives.
+    pub fn decode_signed(&self, coeffs: &[u64]) -> Vec<i64> {
+        self.decode(coeffs).iter().map(|&v| self.to_signed(v)).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::ckks::prime::ntt_primes;
+
+    fn encoder(n: usize) -> BfvEncoder {
+        BfvEncoder::new(n, ntt_primes(n, 20, 1)[0])
+    }
+
+    #[test]
+    fn roundtrip_small() {
+        let enc = encoder(16);
+        let vals: Vec<i64> = (0..16).map(|i| i * 31 % 97).collect();
+        let coeffs = enc.encode(&vals);
+        let back = enc.decode(&coeffs);
+        assert_eq!(back, vals.iter().map(|&v| v as u64).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn roundtrip_negative_representatives() {
+        let enc = encoder(16);
+        let vals: Vec<i64> = (0..16).map(|i| -(i as i64) * 5).collect();
+        let coeffs = enc.encode(&vals);
+        assert_eq!(enc.decode_signed(&coeffs), vals);
+    }
+
+    #[test]
+    fn coefficient_products_are_slotwise() {
+        // The whole point of CRT batching: negacyclic polynomial product
+        // = slot-wise integer product.
+        let n = 32;
+        let enc = encoder(n);
+        let a: Vec<i64> = (0..n as i64).collect();
+        let b: Vec<i64> = (0..n as i64).map(|i| 3 * i + 1).collect();
+        let mut fa = enc.encode(&a);
+        let mut fb = enc.encode(&b);
+        enc.ntt.forward(&mut fa);
+        enc.ntt.forward(&mut fb);
+        let prod_eval: Vec<u64> = fa
+            .iter()
+            .zip(&fb)
+            .map(|(&x, &y)| enc.mt.mul(x, y))
+            .collect();
+        let mut prod = prod_eval;
+        enc.ntt.inverse(&mut prod);
+        let got = enc.decode(&prod);
+        for (s, (&x, &y)) in a.iter().zip(&b).enumerate() {
+            assert_eq!(got[s], enc.mt.mul(x as u64, y as u64), "slot {s}");
+        }
+    }
+
+    #[test]
+    fn slot_positions_are_a_permutation() {
+        for n in [4usize, 16, 256] {
+            let enc = encoder(n);
+            let mut pos = enc.pos.clone();
+            pos.sort_unstable();
+            pos.dedup();
+            assert_eq!(pos.len(), n, "n={n}");
+        }
+    }
+}

@@ -1,0 +1,99 @@
+//! BFV: exact integer arithmetic on the shared MLT substrate.
+//!
+//! The paper's central claim is that NTT and base conversion are
+//! modulo-linear transformations, so one wide-precision MLT unit serves
+//! *any* RNS-based FHE scheme. This module is the proof by construction:
+//! a second scheme — BFV (Brakerski/Fan-Vercauteren), exact arithmetic
+//! over `Z_t` — built entirely out of the CKKS substrate's pieces:
+//!
+//! * polynomials are [`crate::ckks::RnsPoly`] over the same [`crate::ckks::Tower`];
+//! * every NTT rides [`crate::ckks::NttTable`] (including the batch
+//!   encoder, which evaluates over `Z_t` with a `t`-modulus table);
+//! * the BEHZ-style scale-and-round of ciphertext multiplication runs
+//!   through [`crate::ckks::BaseConvTable`], i.e. the [`crate::ckks::ModLinKernel`];
+//! * relinearization and rotation reuse [`crate::ckks::KsKey`] with its
+//!   hoisting and scratch-pool machinery verbatim.
+//!
+//! No new number-theory hot loops exist here — only precomputed scalar
+//! constants and small per-coefficient correction passes.
+//!
+//! ## Key model
+//!
+//! Identical to CKKS (see [`crate::ckks::client`]): [`BfvKeyGen`] owns the
+//! [`crate::ckks::SecretKey`] client-side and derives a complete public
+//! [`crate::ckks::EvalKeySet`] up front; the server-side evaluator holds
+//! no secret material. Because BFV is rescale-free, ciphertexts stay
+//! pinned at the top level, so key sets only need that one level
+//! ([`BfvContext::serving_spec`]).
+//!
+//! ## Noise budget semantics
+//!
+//! BFV has no rescale: instead of a level chain, each ciphertext carries
+//! an invariant *noise budget* — the bits of headroom before
+//! `round(t * (c0 + c1 s) / Q)` starts decoding to the wrong plaintext.
+//! [`BfvDecryptor::noise_budget`] measures it exactly from the decryption
+//! fraction; it only ever shrinks (adds cost ~1 bit, multiplies cost
+//! ~`log2(n * t)` bits) and decryption is exact while it stays positive.
+
+pub mod client;
+pub mod encoding;
+pub mod ops;
+pub mod params;
+
+pub use client::{BfvDecryptor, BfvEncryptor, BfvKeyGen};
+pub use encoding::BfvEncoder;
+pub use ops::BfvEvaluator;
+pub use params::{BfvContext, BfvParams, BfvTables};
+
+/// Which FHE scheme a wire object / engine / batch group belongs to.
+///
+/// Rides every v8+ wire blob header (one byte after the params
+/// fingerprint) and the scheduler's compatibility key, so cross-scheme
+/// key pushes are rejected at decode time and BFV/CKKS key-switch work is
+/// never fused into one batch group.
+#[derive(Debug, Clone, Copy, PartialEq, Eq, Hash, Default)]
+pub enum Scheme {
+    /// Approximate complex arithmetic (the original tenant).
+    #[default]
+    Ckks = 0,
+    /// Exact integer arithmetic mod a plaintext modulus `t`.
+    Bfv = 1,
+}
+
+impl Scheme {
+    /// Wire byte for blob headers.
+    pub fn to_byte(self) -> u8 {
+        self as u8
+    }
+
+    /// Parse a wire byte; `None` for unknown schemes.
+    pub fn from_byte(b: u8) -> Option<Self> {
+        match b {
+            0 => Some(Scheme::Ckks),
+            1 => Some(Scheme::Bfv),
+            _ => None,
+        }
+    }
+
+    /// Human-readable scheme name (metrics, logs).
+    pub fn name(self) -> &'static str {
+        match self {
+            Scheme::Ckks => "ckks",
+            Scheme::Bfv => "bfv",
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn scheme_bytes_roundtrip() {
+        for s in [Scheme::Ckks, Scheme::Bfv] {
+            assert_eq!(Scheme::from_byte(s.to_byte()), Some(s));
+        }
+        assert_eq!(Scheme::from_byte(7), None);
+        assert_eq!(Scheme::default(), Scheme::Ckks);
+    }
+}

@@ -1,0 +1,344 @@
+//! Server-side BFV evaluation: the [`BfvEvaluator`] facade and the
+//! BEHZ-style ciphertext-multiply core.
+//!
+//! A [`BfvEvaluator`] is a [`ckks::Evaluator`](crate::ckks::Evaluator)
+//! with BFV tables attached ([`Evaluator::with_bfv`]) — add, sub, negate,
+//! rotate and conjugate are literally the CKKS entry points (they are
+//! scheme-agnostic RNS/automorphism operations), and the scheduler's
+//! batched key-switch path serves both schemes unchanged. Only multiply
+//! is scheme-specific: the tensor product must be computed over an
+//! *extended* base Q·P (to hold the ~`n * t * Q^2 / 4`-sized integer
+//! coefficients) and scaled back by `t/Q` with exact rounding. Both base
+//! hops run through [`crate::ckks::BaseConvTable`] — i.e. the shared MLT
+//! kernel — and relinearization is the stock [`crate::ckks::KsKey`].
+
+use std::sync::Arc;
+
+use crate::ckks::keys::{KeyKind, MissingKey};
+use crate::ckks::ops::{Ciphertext, Evaluator};
+use crate::ckks::params::CkksContext;
+use crate::ckks::poly::{Format, RnsPoly};
+use crate::ckks::EvalKeySet;
+
+use super::params::{BfvContext, BfvTables};
+
+/// The server-side BFV evaluator: no secret material, exact results.
+///
+/// Thin facade over [`Evaluator`] so call sites read scheme-natively
+/// (`rotate_rows`, `swap_rows`, exact `mul`); the wire/coordinator layers
+/// hold the inner [`Evaluator`] directly and reach the same entry points.
+pub struct BfvEvaluator {
+    ev: Evaluator,
+}
+
+impl BfvEvaluator {
+    /// Build from a context and the client's public key set. The inner
+    /// CKKS context is rebuilt from the (deterministic) parameter set;
+    /// the scalar tables are shared with the caller's context.
+    pub fn new(ctx: &BfvContext, keys: Arc<EvalKeySet>) -> Self {
+        let inner = CkksContext::new(ctx.params.inner_params());
+        Self {
+            ev: Evaluator::new(inner, keys).with_bfv(ctx.tables.clone()),
+        }
+    }
+
+    /// Route key-switch staging buffers through a shared tenancy pool
+    /// (same contract as [`Evaluator::with_scratch_pool`]).
+    pub fn with_scratch_pool(mut self, pool: Arc<crate::tenancy::ScratchPool>) -> Self {
+        self.ev = self.ev.with_scratch_pool(pool);
+        self
+    }
+
+    /// The underlying scheme-tagged CKKS-substrate evaluator.
+    pub fn inner(&self) -> &Evaluator {
+        &self.ev
+    }
+
+    /// Unwrap to the inner evaluator (what the serving stack stores).
+    pub fn into_inner(self) -> Evaluator {
+        self.ev
+    }
+
+    /// Exact slot-wise addition mod `t`.
+    pub fn add(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        self.ev.add(a, b)
+    }
+
+    /// Exact slot-wise subtraction mod `t`.
+    pub fn sub(&self, a: &Ciphertext, b: &Ciphertext) -> Ciphertext {
+        self.ev.sub(a, b)
+    }
+
+    /// Exact slot-wise negation mod `t`.
+    pub fn negate(&self, a: &Ciphertext) -> Ciphertext {
+        self.ev.negate(a)
+    }
+
+    /// Exact slot-wise product mod `t` (BEHZ multiply + relinearization).
+    pub fn mul(&self, a: &Ciphertext, b: &Ciphertext) -> Result<Ciphertext, MissingKey> {
+        self.ev.bfv_mul(a, b)
+    }
+
+    /// Exact product with a centered-lift plaintext operand
+    /// ([`crate::bfv::BfvEncryptor::encode_mul_operand`]).
+    pub fn mul_plain(&self, a: &Ciphertext, pt: &RnsPoly) -> Ciphertext {
+        self.ev.bfv_mul_plain(a, pt)
+    }
+
+    /// Rotate both batching rows left by `k` columns (Galois element
+    /// `5^k`, identical machinery to CKKS slot rotation).
+    pub fn rotate_rows(&self, a: &Ciphertext, k: usize) -> Result<Ciphertext, MissingKey> {
+        self.ev.rotate(a, k)
+    }
+
+    /// Swap the two batching rows (Galois element `2n - 1`; the CKKS
+    /// conjugation key).
+    pub fn swap_rows(&self, a: &Ciphertext) -> Result<Ciphertext, MissingKey> {
+        self.ev.conjugate(a)
+    }
+}
+
+/// The BEHZ multiply: lift both ciphertexts to the extended base Q·P
+/// (centered fast base conversion), tensor there, scale each component by
+/// `t/Q` with exact rounding back to Q, then relinearize the degree-2
+/// term with the standard key switch.
+///
+/// Correctness condition `P > n * t * Q / 2` is asserted at table build
+/// ([`BfvTables`] `lift_margin_bits`): the scaled tensor coefficients
+/// `t * d` stay inside `(-QP/2, QP/2]`, so the extended base represents
+/// them exactly and `round(t*d/Q)` is computed with no precision loss.
+pub(crate) fn mul_impl(
+    ev: &Evaluator,
+    bt: &BfvTables,
+    a: &Ciphertext,
+    b: &Ciphertext,
+) -> Result<Ciphertext, MissingKey> {
+    let ctx = &ev.ctx;
+    let tower = &ctx.tower;
+    let level = ctx.max_level();
+    assert_eq!(a.level, level, "BFV ciphertexts live at the top level");
+    assert_eq!(b.level, level, "BFV ciphertexts live at the top level");
+    // Key lookup first: fail before any tensor work runs.
+    let ksk = ev.keys().get(KeyKind::Relin, level)?;
+
+    // Lift one Eval-format Q-chain component to Eval over Q||P: the P
+    // residues of the *centered* representative, via the shared MLT base
+    // conversion.
+    let lift = |c: &RnsPoly| -> RnsPoly {
+        let mut q = c.clone();
+        q.to_coeff(tower);
+        let p = bt.lift_q_to_p_centered(&q, tower);
+        let mut limbs = q.limbs;
+        limbs.extend(p.limbs);
+        let mut chain = q.chain;
+        chain.extend(p.chain);
+        let mut out = RnsPoly {
+            n: c.n,
+            format: Format::Coeff,
+            limbs,
+            chain,
+        };
+        out.to_eval(tower);
+        out
+    };
+    let a0 = lift(&a.c0);
+    let a1 = lift(&a.c1);
+    let b0 = lift(&b.c0);
+    let b1 = lift(&b.c1);
+
+    // Tensor over the extended base: (d0, d1, d2) = (a0b0, a0b1+a1b0, a1b1).
+    let mut d0 = a0.clone();
+    d0.mul_assign(&b0, tower);
+    let mut d1 = a0;
+    d1.mul_assign(&b1, tower);
+    let mut cross = a1.clone();
+    cross.mul_assign(&b0, tower);
+    d1.add_assign(&cross, tower);
+    let mut d2 = a1;
+    d2.mul_assign(&b1, tower);
+
+    // Scale each component by t/Q with exact rounding, back onto Q.
+    let mut r0 = bt.scale_round_to_q(d0, ctx);
+    let mut r1 = bt.scale_round_to_q(d1, ctx);
+    let mut r2 = bt.scale_round_to_q(d2, ctx);
+
+    // Relinearize the degree-2 term — the stock CKKS key switch.
+    r2.to_eval(tower);
+    let (e0, e1) = ksk.apply_pooled(ctx, &r2, ev.pool());
+    r0.to_eval(tower);
+    r1.to_eval(tower);
+    r0.add_assign(&e0, tower);
+    r1.add_assign(&e1, tower);
+
+    Ok(Ciphertext {
+        c0: r0,
+        c1: r1,
+        level,
+        scale: 1.0,
+    })
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfv::client::BfvKeyGen;
+    use crate::bfv::params::BfvParams;
+    use crate::util::rng::Pcg64;
+
+    struct Fixture {
+        ctx: BfvContext,
+        ev: BfvEvaluator,
+        kg: BfvKeyGen,
+        rng: Pcg64,
+    }
+
+    fn fixture() -> Fixture {
+        let ctx = BfvContext::new(BfvParams::toy());
+        let mut rng = Pcg64::new(0xBF10);
+        let kg = BfvKeyGen::new(&ctx, &mut rng);
+        let keys = kg.eval_key_set(&ctx, &ctx.serving_spec(), &mut rng);
+        let ev = BfvEvaluator::new(&ctx, Arc::new(keys));
+        Fixture { ctx, ev, kg, rng }
+    }
+
+    fn ramp(ctx: &BfvContext, mulr: i64, add: i64) -> Vec<i64> {
+        let t = ctx.t() as i64;
+        (0..ctx.params.slots() as i64)
+            .map(|i| (i * mulr + add).rem_euclid(t))
+            .collect()
+    }
+
+    #[test]
+    fn add_sub_negate_are_exact() {
+        let mut f = fixture();
+        let t = f.ctx.t();
+        let va = ramp(&f.ctx, 7919, 3);
+        let vb = ramp(&f.ctx, 104729, 11);
+        let enc = f.kg.encryptor();
+        let dec = f.kg.decryptor();
+        let ca = enc.encrypt_slots(&f.ctx, &va, &mut f.rng);
+        let cb = enc.encrypt_slots(&f.ctx, &vb, &mut f.rng);
+
+        let sum = dec.decrypt_slots(&f.ctx, &f.ev.add(&ca, &cb));
+        let dif = dec.decrypt_slots(&f.ctx, &f.ev.sub(&ca, &cb));
+        let neg = dec.decrypt_slots(&f.ctx, &f.ev.negate(&ca));
+        for j in 0..va.len() {
+            let (a, b) = (va[j] as u64, vb[j] as u64);
+            assert_eq!(sum[j], (a + b) % t, "add slot {j}");
+            assert_eq!(dif[j], (a + t - b) % t, "sub slot {j}");
+            assert_eq!(neg[j], (t - a) % t, "neg slot {j}");
+        }
+    }
+
+    #[test]
+    fn multiply_is_exact_full_range() {
+        let mut f = fixture();
+        let mt = f.ctx.tables.mt;
+        // Values spanning the full plaintext range, including t-1.
+        let t = f.ctx.t() as i64;
+        let va: Vec<i64> = (0..f.ctx.params.slots() as i64)
+            .map(|i| (t - 1 - i * 65537).rem_euclid(t))
+            .collect();
+        let vb = ramp(&f.ctx, 524287, 1);
+        let enc = f.kg.encryptor();
+        let ca = enc.encrypt_slots(&f.ctx, &va, &mut f.rng);
+        let cb = enc.encrypt_slots(&f.ctx, &vb, &mut f.rng);
+        let prod = f.ev.mul(&ca, &cb).unwrap();
+        assert_eq!(prod.level, f.ctx.level(), "no rescale in BFV");
+        let back = f.kg.decryptor().decrypt_slots(&f.ctx, &prod);
+        for j in 0..va.len() {
+            assert_eq!(back[j], mt.mul(va[j] as u64, vb[j] as u64), "slot {j}");
+        }
+    }
+
+    #[test]
+    fn multiply_chain_stays_exact() {
+        // Three chained products: exercises noise accumulation without
+        // any level drop.
+        let mut f = fixture();
+        let mt = f.ctx.tables.mt;
+        let va = ramp(&f.ctx, 31, 5);
+        let enc = f.kg.encryptor();
+        let ct = enc.encrypt_slots(&f.ctx, &va, &mut f.rng);
+        let sq = f.ev.mul(&ct, &ct).unwrap();
+        let cube = f.ev.mul(&sq, &ct).unwrap();
+        let back = f.kg.decryptor().decrypt_slots(&f.ctx, &cube);
+        for (j, &v) in va.iter().enumerate() {
+            let v = v as u64;
+            assert_eq!(back[j], mt.mul(mt.mul(v, v), v), "slot {j}");
+        }
+    }
+
+    #[test]
+    fn plain_multiply_is_exact() {
+        let mut f = fixture();
+        let mt = f.ctx.tables.mt;
+        let va = ramp(&f.ctx, 12345, 7);
+        // Signed plaintext operand: centered lift must handle negatives.
+        let vp: Vec<i64> = (0..f.ctx.params.slots() as i64)
+            .map(|i| if i % 2 == 0 { i } else { -i })
+            .collect();
+        let enc = f.kg.encryptor();
+        let ct = enc.encrypt_slots(&f.ctx, &va, &mut f.rng);
+        let pt = enc.encode_mul_operand(&f.ctx, &vp);
+        let out = f.ev.mul_plain(&ct, &pt);
+        let back = f.kg.decryptor().decrypt_slots(&f.ctx, &out);
+        let encdr = crate::bfv::BfvEncoder::new(f.ctx.params.n, f.ctx.t());
+        for j in 0..va.len() {
+            let want = mt.mul(va[j] as u64, encdr.reduce_signed(vp[j]));
+            assert_eq!(back[j], want, "slot {j}");
+        }
+    }
+
+    #[test]
+    fn rotation_rotates_rows_and_swap_swaps() {
+        let mut f = fixture();
+        let n = f.ctx.params.slots();
+        let half = n / 2;
+        let vals = ramp(&f.ctx, 97, 13);
+        let enc = f.kg.encryptor();
+        let dec = f.kg.decryptor();
+        let ct = enc.encrypt_slots(&f.ctx, &vals, &mut f.rng);
+        for k in [1usize, 2, 4] {
+            let rot = f.ev.rotate_rows(&ct, k).unwrap();
+            let back = dec.decrypt_slots(&f.ctx, &rot);
+            for j in 0..half {
+                assert_eq!(back[j], vals[(j + k) % half] as u64, "row0 k={k} col {j}");
+                assert_eq!(
+                    back[half + j],
+                    vals[half + (j + k) % half] as u64,
+                    "row1 k={k} col {j}"
+                );
+            }
+        }
+        let swapped = f.ev.swap_rows(&ct).unwrap();
+        let back = dec.decrypt_slots(&f.ctx, &swapped);
+        for j in 0..half {
+            assert_eq!(back[j], vals[half + j] as u64, "swap col {j}");
+            assert_eq!(back[half + j], vals[j] as u64, "swap col {j}");
+        }
+    }
+
+    #[test]
+    fn missing_relin_key_is_typed_error() {
+        let mut f = fixture();
+        let ct = f
+            .kg
+            .encryptor()
+            .encrypt_slots(&f.ctx, &[1, 2, 3], &mut f.rng);
+        let bare = BfvEvaluator::new(&f.ctx, Arc::new(EvalKeySet::empty()));
+        let err = bare.mul(&ct, &ct).unwrap_err();
+        assert_eq!(err.kind, KeyKind::Relin);
+        assert_eq!(err.level, f.ctx.level());
+    }
+
+    #[test]
+    fn evaluator_is_scheme_tagged() {
+        let f = fixture();
+        assert_eq!(f.ev.inner().scheme(), crate::bfv::Scheme::Bfv);
+        let ckks = Evaluator::without_keys(CkksContext::new(
+            crate::ckks::CkksParams::toy(),
+        ));
+        assert_eq!(ckks.scheme(), crate::bfv::Scheme::Ckks);
+    }
+}

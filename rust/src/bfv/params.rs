@@ -1,0 +1,451 @@
+//! BFV parameter sets, the evaluation context, and the precomputed
+//! scalar constants of exact encrypt / decrypt / multiply.
+//!
+//! A [`BfvContext`] is a thin shell around a [`CkksContext`] built with a
+//! BFV-shaped prime chain: the ciphertext modulus `Q` reuses the CKKS
+//! width profile (one 50-bit anchor + 40-bit primes), while the key-switch
+//! extension `P` is drawn with `dnum = 1` — a single digit whose `P`
+//! dominates `n * t * Q / 2`, which is exactly the headroom the BEHZ-style
+//! tensor lift needs (see [`BfvTables::scale_round_to_q`]). Everything
+//! heavy (NTT tables, base-conversion MLT kernels, key-switch structure)
+//! is the CKKS machinery verbatim.
+
+use std::sync::Arc;
+
+use crate::ckks::modarith::Modulus;
+use crate::ckks::params::{CkksContext, CkksParams, WidthProfile};
+use crate::ckks::poly::{Format, RnsPoly, Tower};
+use crate::ckks::prime::ntt_primes;
+use crate::ckks::rns::BaseConvTable;
+use crate::ckks::{rotate_and_sum_steps, EvalKeySpec};
+
+/// BFV parameter set: ring dimension, multiplicative depth (sizes `Q`),
+/// and the plaintext-modulus width.
+#[derive(Debug, Clone, PartialEq)]
+pub struct BfvParams {
+    /// Ring dimension N (power of two). Slot count is also N (two rows
+    /// of N/2, see [`super::BfvEncoder`]).
+    pub n: usize,
+    /// Multiplicative depth budget: `Q` has `depth + 1` primes, like the
+    /// CKKS chain — but BFV never rescales, the depth only sizes the
+    /// noise budget.
+    pub depth: usize,
+    /// Bit width of the plaintext modulus `t` (an NTT-friendly prime so
+    /// CRT batching has all `n` slots).
+    pub t_bits: u32,
+    /// Gaussian noise parameter for fresh encryptions.
+    pub sigma: f64,
+}
+
+impl BfvParams {
+    /// Small, fast set for tests (N=256, depth 3) — same ring as
+    /// [`CkksParams::toy`].
+    pub fn toy() -> Self {
+        Self {
+            n: 256,
+            depth: 3,
+            t_bits: 20,
+            sigma: 3.2,
+        }
+    }
+
+    /// Medium set (N=4096, depth 6) — same ring as [`CkksParams::medium`].
+    pub fn medium() -> Self {
+        Self {
+            n: 4096,
+            depth: 6,
+            t_bits: 20,
+            sigma: 3.2,
+        }
+    }
+
+    /// The BFV set a server pairs with a CKKS serving set: same ring
+    /// dimension and depth, so both schemes' ciphertexts share prime
+    /// widths and level shapes (and the server's shape validation).
+    pub fn matching(ckks: &CkksParams) -> Self {
+        Self {
+            n: ckks.n,
+            depth: ckks.depth,
+            t_bits: 20,
+            sigma: ckks.sigma,
+        }
+    }
+
+    /// Slot count of the CRT batch encoder: all `n` of them.
+    pub fn slots(&self) -> usize {
+        self.n
+    }
+
+    /// The synthetic CKKS parameter set whose context carries this BFV
+    /// set. `dnum = 1` makes the extension chain one prime per Q prime
+    /// (`alpha = depth + 1` wide primes), which is what gives the BEHZ
+    /// lift its `P > n * t * Q / 2` headroom.
+    pub fn inner_params(&self) -> CkksParams {
+        CkksParams {
+            n: self.n,
+            depth: self.depth,
+            scale_bits: 40,
+            dnum: 1,
+            profile: WidthProfile::Wide,
+            sigma: self.sigma,
+        }
+    }
+}
+
+/// All precomputed state shared by the BFV encoder, keys and evaluator:
+/// the inner CKKS context (tower, chains, MLT tables, key-switch
+/// structure) plus the BFV scalar constants.
+pub struct BfvContext {
+    pub params: BfvParams,
+    /// The shared substrate: tower, Q/P chains, NTT + base-conversion
+    /// tables, key-switch structure. BFV adds no machinery of its own.
+    pub inner: CkksContext,
+    /// The BFV-specific precomputed scalars (shared with server-side
+    /// evaluators via `Arc`).
+    pub tables: Arc<BfvTables>,
+}
+
+impl BfvContext {
+    pub fn new(params: BfvParams) -> Self {
+        let inner = CkksContext::new(params.inner_params());
+        let t = ntt_primes(params.n, params.t_bits, 1)[0];
+        let tables = Arc::new(BfvTables::new(&inner, t));
+        Self {
+            params,
+            inner,
+            tables,
+        }
+    }
+
+    /// The plaintext modulus.
+    pub fn t(&self) -> u64 {
+        self.tables.t
+    }
+
+    /// BFV ciphertexts are pinned at the top level (no rescale).
+    pub fn level(&self) -> usize {
+        self.inner.max_level()
+    }
+
+    /// The standard BFV serving key spec: relinearization, the row-swap
+    /// (conjugation) key and the power-of-two rotation steps — generated
+    /// only at the top level, since BFV never descends the chain.
+    pub fn serving_spec(&self) -> EvalKeySpec {
+        EvalKeySpec {
+            relin: true,
+            conjugation: true,
+            rotations: rotate_and_sum_steps(self.inner.params.slots()),
+            levels: None,
+        }
+        .at_levels(vec![self.level()])
+    }
+}
+
+/// Precomputed scalar constants for exact BFV arithmetic over the inner
+/// context's chains. Everything here is a handful of `u64`s per limb —
+/// the polynomial-sized work all runs through the shared
+/// [`BaseConvTable`]/[`crate::ckks::NttTable`] machinery.
+pub struct BfvTables {
+    /// Plaintext modulus `t` (NTT-friendly prime, `t = 1 mod 2n`).
+    pub t: u64,
+    /// Barrett context for `Z_t` arithmetic.
+    pub mt: Modulus,
+    /// `Delta mod q_i` where `Delta = floor(Q/t)` (encryption scaling).
+    pub delta_mod_q: Vec<u64>,
+    /// `(Q/q_i)^{-1} mod q_i` with Shoup companions (CRT interpolation
+    /// weights of exact decryption).
+    pub qhat_inv_q: Vec<u64>,
+    pub qhat_inv_q_shoup: Vec<u64>,
+    /// `(Q-1)/2 mod q_i` — the half-`Q` shift that turns the decryption
+    /// division into an exact floor (`= (q_i - 1)/2`).
+    pub half_mod_q: Vec<u64>,
+    /// `t mod q_i` per Q limb.
+    pub t_mod_q: Vec<u64>,
+    /// `(Q/q_i) mod t` per Q limb.
+    pub qhat_mod_t: Vec<u64>,
+    /// `Q mod t`.
+    pub r_t: u64,
+    /// `Q^{-1} mod t`.
+    pub q_inv_t: u64,
+    /// `(Q-1)/2 mod t`.
+    pub half_q_mod_t: u64,
+    /// `Q mod p_j` per P limb (centered-lift correction, Q -> P).
+    pub q_mod_p: Vec<u64>,
+    /// `P mod q_i` per Q limb (centered-lift correction, P -> Q).
+    pub p_mod_q: Vec<u64>,
+    /// `Q^{-1} mod p_j` per P limb (the exact division in scale-and-round).
+    pub q_inv_mod_p: Vec<u64>,
+    /// `t mod m` for every extended-chain modulus (Q then P order).
+    pub t_mod_ext: Vec<u64>,
+    /// Q -> P fast base conversion (the inner context already carries
+    /// P -> Q as `conv_p_to_q`). Compiled onto the shared MLT engine.
+    pub conv_q_to_p: BaseConvTable,
+    /// log2 of the noise headroom margin `P / (n * t * Q / 2)`, asserted
+    /// positive at build (the BEHZ lift's correctness condition).
+    pub lift_margin_bits: f64,
+}
+
+impl BfvTables {
+    pub fn new(inner: &CkksContext, t: u64) -> Self {
+        let tower = &inner.tower;
+        let mt = Modulus::new(t);
+        let q_moduli: Vec<Modulus> = inner
+            .q_chain
+            .iter()
+            .map(|&ci| tower.contexts[ci].modulus)
+            .collect();
+        let p_moduli: Vec<Modulus> = inner
+            .p_chain
+            .iter()
+            .map(|&ci| tower.contexts[ci].modulus)
+            .collect();
+
+        // prod mod m over an arbitrary prime list, without bignums.
+        let prod_mod = |m: Modulus, primes: &[Modulus], skip: Option<usize>| -> u64 {
+            let mut acc = 1u64;
+            for (k, p) in primes.iter().enumerate() {
+                if Some(k) != skip {
+                    acc = m.mul(acc, m.reduce_u64(p.value()));
+                }
+            }
+            acc
+        };
+
+        let qhat_inv_q: Vec<u64> = q_moduli
+            .iter()
+            .enumerate()
+            .map(|(i, &m)| m.inv(prod_mod(m, &q_moduli, Some(i))))
+            .collect();
+        let qhat_inv_q_shoup: Vec<u64> = q_moduli
+            .iter()
+            .zip(&qhat_inv_q)
+            .map(|(m, &v)| m.shoup(v))
+            .collect();
+        let half_mod_q: Vec<u64> = q_moduli.iter().map(|m| (m.value() - 1) / 2).collect();
+        let t_mod_q: Vec<u64> = q_moduli.iter().map(|m| m.reduce_u64(t)).collect();
+        let qhat_mod_t: Vec<u64> = (0..q_moduli.len())
+            .map(|i| prod_mod(mt, &q_moduli, Some(i)))
+            .collect();
+        let r_t = prod_mod(mt, &q_moduli, None);
+        let q_inv_t = mt.inv(r_t);
+        // (Q-1)/2 mod t = (Q-1) * 2^{-1} mod t (t odd).
+        let half_q_mod_t = mt.mul(mt.sub(r_t, 1), (t + 1) / 2);
+        // Delta = (Q - r_t)/t  =>  Delta = -r_t * t^{-1} mod q_i.
+        let delta_mod_q: Vec<u64> = q_moduli
+            .iter()
+            .zip(&t_mod_q)
+            .map(|(m, &tm)| m.mul(m.neg(m.reduce_u64(r_t)), m.inv(tm)))
+            .collect();
+
+        let q_mod_p: Vec<u64> = p_moduli.iter().map(|&m| prod_mod(m, &q_moduli, None)).collect();
+        let p_mod_q: Vec<u64> = q_moduli.iter().map(|&m| prod_mod(m, &p_moduli, None)).collect();
+        let q_inv_mod_p: Vec<u64> = p_moduli
+            .iter()
+            .zip(&q_mod_p)
+            .map(|(m, &v)| m.inv(v))
+            .collect();
+        let t_mod_ext: Vec<u64> = q_moduli
+            .iter()
+            .chain(p_moduli.iter())
+            .map(|m| m.reduce_u64(t))
+            .collect();
+        let conv_q_to_p = BaseConvTable::new(tower, &inner.q_chain, &inner.p_chain);
+
+        // The BEHZ lift needs |t * d| < Q*P/2 for tensor coefficients d
+        // with |d| <= n * (Q/2)^2 / Q * ...: the binding condition is
+        // P > n * t * Q / 2. Check it in log2 space.
+        let log2_q: f64 = q_moduli.iter().map(|m| (m.value() as f64).log2()).sum();
+        let log2_p: f64 = p_moduli.iter().map(|m| (m.value() as f64).log2()).sum();
+        let lift_margin_bits =
+            log2_p - ((inner.params.n as f64).log2() + (t as f64).log2() + log2_q - 1.0);
+        assert!(
+            lift_margin_bits > 2.0,
+            "P too small for the BEHZ lift: margin {lift_margin_bits:.1} bits"
+        );
+
+        Self {
+            t,
+            mt,
+            delta_mod_q,
+            qhat_inv_q,
+            qhat_inv_q_shoup,
+            half_mod_q,
+            t_mod_q,
+            qhat_mod_t,
+            r_t,
+            q_inv_t,
+            half_q_mod_t,
+            q_mod_p,
+            p_mod_q,
+            q_inv_mod_p,
+            t_mod_ext,
+            conv_q_to_p,
+            lift_margin_bits,
+        }
+    }
+
+    /// Lift a coefficient-format polynomial on the Q chain to centered
+    /// residues on the P chain: the output represents the *signed*
+    /// representative `x~ in (-Q/2, Q/2]` of each coefficient, mod P.
+    pub fn lift_q_to_p_centered(&self, poly: &RnsPoly, tower: &Tower) -> RnsPoly {
+        centered_convert(&self.conv_q_to_p, &self.q_mod_p, poly, tower)
+    }
+
+    /// Centered P -> Q conversion (signed representative mod P, reduced
+    /// into the Q chain) via the inner context's `conv_p_to_q` table.
+    pub fn lift_p_to_q_centered(&self, ctx: &CkksContext, poly: &RnsPoly) -> RnsPoly {
+        centered_convert(&ctx.conv_p_to_q, &self.p_mod_q, poly, &ctx.tower)
+    }
+
+    /// The BEHZ scale-and-round core: given a tensor component `d` in
+    /// Eval format over the extended chain Q||P (centered value
+    /// `|d| < Q*P/(2t)`), compute `round(t * d / Q) mod Q` in coefficient
+    /// format on the Q chain.
+    ///
+    /// `w = t*d` stays below `Q*P/2`; `(w - [w]_Q) / Q` is computed on
+    /// the P limbs alone (exact division once the centered residue of
+    /// `w mod Q` is subtracted) and converted back to Q centered. Both
+    /// conversions ride the shared MLT base-conversion kernels.
+    pub fn scale_round_to_q(&self, mut d: RnsPoly, ctx: &CkksContext) -> RnsPoly {
+        let tower = &ctx.tower;
+        d.scale_assign(&self.t_mod_ext, tower); // w = t * d (Eval-safe)
+        d.to_coeff(tower);
+        let nq = ctx.q_chain.len();
+        let w_q = RnsPoly {
+            n: d.n,
+            format: Format::Coeff,
+            limbs: d.limbs[..nq].to_vec(),
+            chain: d.chain[..nq].to_vec(),
+        };
+        let mut w_p = RnsPoly {
+            n: d.n,
+            format: Format::Coeff,
+            limbs: d.limbs[nq..].to_vec(),
+            chain: d.chain[nq..].to_vec(),
+        };
+        // s = centered representative of w mod Q, on the P limbs.
+        let s_p = self.lift_q_to_p_centered(&w_q, tower);
+        // r = (w - s)/Q mod P: exact division, |r| < P/2 by the margin.
+        w_p.sub_assign(&s_p, tower);
+        w_p.scale_assign(&self.q_inv_mod_p, tower);
+        // Back to the Q chain, centered.
+        self.lift_p_to_q_centered(ctx, &w_p)
+    }
+}
+
+/// Fast base conversion with the *centered* correction: where
+/// [`BaseConvTable::convert`] produces `(x + alpha * SRC) mod dst` with the
+/// HPS overshoot `alpha = floor(sum u_j / src_j)`, this subtracts
+/// `alpha_hat * SRC` for the *rounded* estimate — landing on the signed
+/// representative `x~ in (-SRC/2, SRC/2]` of the input. The estimate is
+/// 64-bit fixed point, so a misround needs the fraction within `~2^-60`
+/// of 1/2 — the standard BEHZ accepted failure probability.
+///
+/// The heavy sum still executes on the table's compiled MLT kernel; the
+/// correction is one scalar multiply-subtract per (limb, coefficient).
+pub fn centered_convert(
+    table: &BaseConvTable,
+    src_prod_mod_dst: &[u64],
+    poly: &RnsPoly,
+    tower: &Tower,
+) -> RnsPoly {
+    assert_eq!(poly.format, Format::Coeff, "centered conversion needs Coeff");
+    assert_eq!(poly.chain, table.src, "polynomial not on the source base");
+    assert_eq!(src_prod_mod_dst.len(), table.dst.len());
+    let n = poly.n;
+    let k = table.src.len();
+
+    // alpha_hat[c] = round(sum_j u_jc / src_j) in 64-bit fixed point,
+    // recomputing the stage-1 residues u = [x * SRChat^{-1}]_{src_j}
+    // from the table's public constants.
+    let mut frac = vec![0u128; n];
+    for j in 0..k {
+        let m = tower.contexts[table.src[j]].modulus;
+        let q = m.value() as u128;
+        let (v, vs) = (table.phat_inv[j], table.phat_inv_shoup[j]);
+        for (acc, &x) in frac.iter_mut().zip(&poly.limbs[j]) {
+            let u = m.mul_shoup(x, v, vs) as u128;
+            *acc += (u << 64) / q;
+        }
+    }
+    let alpha: Vec<u64> = frac
+        .iter()
+        .map(|&s| ((s + (1u128 << 63)) >> 64) as u64)
+        .collect();
+
+    let mut out = table.convert(poly, tower);
+    for (i, limb) in out.limbs.iter_mut().enumerate() {
+        let m = tower.contexts[table.dst[i]].modulus;
+        let corr = m.reduce_u64(src_prod_mod_dst[i]);
+        for (x, &a) in limb.iter_mut().zip(&alpha) {
+            *x = m.sub(*x, m.mul(a, corr));
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn toy_context_builds_with_margin() {
+        let ctx = BfvContext::new(BfvParams::toy());
+        assert_eq!(ctx.inner.q_chain.len(), 4);
+        // dnum = 1: one extension prime per Q prime.
+        assert_eq!(ctx.inner.p_chain.len(), 4);
+        assert!(ctx.tables.lift_margin_bits > 2.0);
+        // t is NTT-friendly for the full 2n-th roots (CRT batching).
+        assert_eq!((ctx.t() - 1) % (2 * ctx.params.n as u64), 0);
+    }
+
+    #[test]
+    fn delta_times_t_is_minus_rt() {
+        // Delta * t = Q - r_t  =>  Delta * t + r_t = 0 mod q_i.
+        let ctx = BfvContext::new(BfvParams::toy());
+        let bt = &ctx.tables;
+        for (i, &ci) in ctx.inner.q_chain.iter().enumerate() {
+            let m = ctx.inner.tower.contexts[ci].modulus;
+            let lhs = m.add(m.mul(bt.delta_mod_q[i], bt.t_mod_q[i]), m.reduce_u64(bt.r_t));
+            assert_eq!(lhs, 0, "limb {i}");
+        }
+    }
+
+    #[test]
+    fn centered_convert_small_values() {
+        // Small positive and small negative values must map to themselves
+        // (mod dst) rather than picking up a +Q overshoot.
+        let ctx = BfvContext::new(BfvParams::toy());
+        let tower = &ctx.inner.tower;
+        let bt = &ctx.tables;
+        let mut poly = RnsPoly::zero(tower, &ctx.inner.q_chain, Format::Coeff);
+        // coeff 0 = 12345, coeff 1 = -777 (as Q-residues).
+        for (i, &ci) in ctx.inner.q_chain.iter().enumerate() {
+            let m = tower.contexts[ci].modulus;
+            poly.limbs[i][0] = 12345;
+            poly.limbs[i][1] = m.value() - 777;
+        }
+        let out = bt.lift_q_to_p_centered(&poly, tower);
+        for (i, &ci) in ctx.inner.p_chain.iter().enumerate() {
+            let m = tower.contexts[ci].modulus;
+            assert_eq!(out.limbs[i][0], 12345, "p-limb {i} positive");
+            assert_eq!(out.limbs[i][1], m.value() - 777, "p-limb {i} negative");
+            assert!(out.limbs[i][2..].iter().all(|&x| x == 0));
+        }
+    }
+
+    #[test]
+    fn matching_keeps_ring_and_depth() {
+        let ck = CkksParams::toy();
+        let bp = BfvParams::matching(&ck);
+        assert_eq!(bp.n, ck.n);
+        assert_eq!(bp.depth, ck.depth);
+        // Same ring + same widths: the Q chains coincide prime-for-prime,
+        // which is what lets one server validate both schemes' shapes.
+        let bctx = BfvContext::new(bp);
+        let cctx = CkksContext::new(ck);
+        let bq: Vec<u64> = bctx.inner.q_chain.iter().map(|&i| bctx.inner.tower.contexts[i].modulus.value()).collect();
+        let cq: Vec<u64> = cctx.q_chain.iter().map(|&i| cctx.tower.contexts[i].modulus.value()).collect();
+        assert_eq!(bq, cq);
+    }
+}

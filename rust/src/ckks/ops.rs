@@ -43,6 +43,10 @@ pub struct Evaluator {
     /// Cross-request staging-buffer pool (multi-tenant serving). `None`
     /// falls back to the per-thread scratch — bit-identical either way.
     scratch_pool: Option<Arc<crate::tenancy::ScratchPool>>,
+    /// BFV scalar tables when this evaluator serves the BFV scheme
+    /// ([`Self::with_bfv`]). `None` means CKKS — the default, and what
+    /// every pre-v8 code path gets.
+    bfv: Option<Arc<crate::bfv::BfvTables>>,
 }
 
 impl Evaluator {
@@ -53,6 +57,7 @@ impl Evaluator {
             encoder,
             keys,
             scratch_pool: None,
+            bfv: None,
         }
     }
 
@@ -77,6 +82,54 @@ impl Evaluator {
     /// The public key set this evaluator serves with.
     pub fn keys(&self) -> &Arc<EvalKeySet> {
         &self.keys
+    }
+
+    /// Attach BFV scalar tables, turning this into a BFV-scheme engine:
+    /// same substrate (tower, NTT, base conversion, key switching), plus
+    /// the exact-arithmetic entry points [`Self::bfv_mul`] /
+    /// [`Self::bfv_mul_plain`].
+    pub fn with_bfv(mut self, tables: Arc<crate::bfv::BfvTables>) -> Self {
+        self.bfv = Some(tables);
+        self
+    }
+
+    /// The BFV tables, when this evaluator serves BFV.
+    pub fn bfv(&self) -> Option<&Arc<crate::bfv::BfvTables>> {
+        self.bfv.as_ref()
+    }
+
+    /// Which scheme this evaluator serves. Feeds the scheduler's
+    /// compatibility key and the coordinator's op admissibility.
+    pub fn scheme(&self) -> crate::bfv::Scheme {
+        if self.bfv.is_some() {
+            crate::bfv::Scheme::Bfv
+        } else {
+            crate::bfv::Scheme::Ckks
+        }
+    }
+
+    /// BFV HEMult: BEHZ-style tensor in the extended base, exact
+    /// scale-and-round back to Q, relinearization through the same
+    /// [`KsKey`] machinery as CKKS — and **no rescale** (the level is
+    /// pinned; only the noise budget shrinks). Requires
+    /// [`Self::with_bfv`]; the coordinator rejects `BfvMul` on CKKS
+    /// engines before reaching here.
+    pub fn bfv_mul(&self, a: &Ciphertext, b: &Ciphertext) -> Result<Ciphertext, MissingKey> {
+        let bt = self.bfv.as_ref().expect("bfv_mul on a CKKS evaluator");
+        crate::bfv::ops::mul_impl(self, bt, a, b)
+    }
+
+    /// BFV PtMult: pointwise product with a **centered-lift** plaintext
+    /// polynomial (a `Z_t` message lifted to the Q chain *without* the
+    /// `Delta` scale — [`crate::bfv::BfvEncryptor::encode_mul_operand`]).
+    /// Exact; scale and level are untouched, unlike CKKS `mul_plain`.
+    pub fn bfv_mul_plain(&self, a: &Ciphertext, pt: &RnsPoly) -> Ciphertext {
+        let mut p = pt.clone();
+        p.to_eval(&self.ctx.tower);
+        let mut out = a.clone();
+        out.c0.mul_assign(&p, &self.ctx.tower);
+        out.c1.mul_assign(&p, &self.ctx.tower);
+        out
     }
 
     // ------------------------------------------------------------------

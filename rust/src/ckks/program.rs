@@ -83,13 +83,17 @@ pub enum OpCode {
     LevelReduce(Reg, usize),
     /// BSGS dense linear transform (expands to the hoisted builder).
     HomLinear(Reg, SlotMatrix),
+    /// Exact BFV multiply (BEHZ tensor + relinearization, no rescale).
+    /// Only admissible on BFV-scheme engines — the coordinator rejects it
+    /// for CKKS tenants before execution.
+    BfvMul(Reg, Reg),
 }
 
 impl OpCode {
     /// Registers this op reads.
     pub fn operands(&self) -> [Option<Reg>; 2] {
         match *self {
-            OpCode::Add(a, b) | OpCode::Sub(a, b) | OpCode::Mul(a, b) => {
+            OpCode::Add(a, b) | OpCode::Sub(a, b) | OpCode::Mul(a, b) | OpCode::BfvMul(a, b) => {
                 [Some(a), Some(b)]
             }
             OpCode::Negate(a)
@@ -117,6 +121,7 @@ impl OpCode {
                 | OpCode::Rotate(_, _)
                 | OpCode::Conjugate(_)
                 | OpCode::HomLinear(_, _)
+                | OpCode::BfvMul(_, _)
         )
     }
 }
@@ -369,6 +374,18 @@ impl FheProgram {
                     }
                     (common.0 - 1, ma.1 * mb.1 / q_at(common.0))
                 }
+                OpCode::BfvMul(a, b) => {
+                    // Exact multiply: no rescale, level and scale (1.0)
+                    // pass through; only the relin key is needed.
+                    let common = align(get(*a)?, get(*b)?)?;
+                    if !keys.contains(KeyKind::Relin, common.0) {
+                        return Err(ProgramError::MissingKey {
+                            op: i,
+                            key: MissingKey { kind: KeyKind::Relin, level: common.0 },
+                        });
+                    }
+                    common
+                }
                 OpCode::Square(a) => {
                     let m = get(*a)?;
                     need_level(m)?;
@@ -515,6 +532,11 @@ impl ProgramBuilder {
         self.push(OpCode::Mul(a, b))
     }
 
+    /// Exact BFV multiply (no rescale — BFV-scheme engines only).
+    pub fn bfv_mul(&mut self, a: Reg, b: Reg) -> Reg {
+        self.push(OpCode::BfvMul(a, b))
+    }
+
     pub fn square(&mut self, a: Reg) -> Reg {
         self.push(OpCode::Square(a))
     }
@@ -628,6 +650,7 @@ impl Evaluator {
                 OpCode::MulConst(a, v) => self.mul_const(val(*a), *v),
                 OpCode::AddConst(a, v) => self.add_const(val(*a), *v),
                 OpCode::Mul(a, b) => self.mul(val(*a), val(*b)).map_err(missing)?,
+                OpCode::BfvMul(a, b) => self.bfv_mul(val(*a), val(*b)).map_err(missing)?,
                 OpCode::Square(a) => self.mul(val(*a), val(*a)).map_err(missing)?,
                 OpCode::Rotate(a, k) => {
                     let g = galois_element(*k % slots, n);

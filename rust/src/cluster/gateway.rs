@@ -28,7 +28,9 @@ use std::sync::mpsc::{channel, Sender as MpscSender};
 use std::sync::Arc;
 
 use super::pool::{ClusterClient, ClusterError, ClusterOptions};
+use crate::bfv::BfvParams;
 use crate::ckks::params::CkksParams;
+use crate::wire::codec::bfv_params_fingerprint;
 use crate::wire::protocol::error_code;
 use crate::wire::server::{hello_reply, read_inbound, writer_loop, Inbound};
 use crate::wire::{params_fingerprint, Message};
@@ -44,7 +46,11 @@ pub struct GatewayOptions {
 }
 
 struct GatewayShared {
-    fingerprint: u64,
+    /// Fingerprints the gateway handshakes for: the CKKS set plus the
+    /// matching BFV set (same ring, same chain — the shards behind the
+    /// gateway serve both by default, and `PushKeys` blobs replicate
+    /// verbatim regardless of scheme).
+    fingerprints: [u64; 2],
     cluster: ClusterClient,
     stop: AtomicBool,
     verbose: bool,
@@ -79,7 +85,10 @@ pub fn serve_gateway(listener: TcpListener, opts: GatewayOptions) -> std::io::Re
                 )
             })?;
     let shared = Arc::new(GatewayShared {
-        fingerprint: params_fingerprint(&opts.params),
+        fingerprints: [
+            params_fingerprint(&opts.params),
+            bfv_params_fingerprint(&BfvParams::matching(&opts.params)),
+        ],
         cluster,
         stop: AtomicBool::new(false),
         verbose: opts.verbose,
@@ -155,7 +164,7 @@ fn reader_loop(
         };
         match msg {
             Message::Hello { version, fingerprint } => {
-                match hello_reply(version, fingerprint, shared.fingerprint, "gateway") {
+                match hello_reply(version, fingerprint, &shared.fingerprints, "gateway") {
                     Ok(ack) => send(ack),
                     Err(err) => {
                         send(err);

@@ -78,6 +78,9 @@ pub enum OpKind {
     Rescale,
     /// BSGS dense linear transform (needs `Request::matrix`).
     HomLinear,
+    /// Exact BFV ciphertext-ciphertext product (binary: needs
+    /// `Request::ct2`; BFV-scheme engines only).
+    BfvMul,
 }
 
 /// Which hardware class an op exercises (the paper's split: key-switch
@@ -127,7 +130,7 @@ impl OpKind {
 
     /// Binary ops consume a second ciphertext operand.
     pub fn needs_ct2(self) -> bool {
-        matches!(self, OpKind::Mul | OpKind::Add | OpKind::Sub)
+        matches!(self, OpKind::Mul | OpKind::Add | OpKind::Sub | OpKind::BfvMul)
     }
 
     /// Matrix ops consume a slot matrix operand.
@@ -520,6 +523,51 @@ impl std::fmt::Display for SubmitError {
 
 impl std::error::Error for SubmitError {}
 
+/// Scheme admissibility of a single op: BFV engines serve only the exact
+/// subset (elementwise, Galois, and the BEHZ multiply), CKKS engines
+/// everything *except* the BEHZ multiply. Returns the rejection reason,
+/// or `None` when the op is admissible. Shared by the coordinator's
+/// `submit` and the wire server's request decode so both reject
+/// identically.
+pub fn scheme_rejects(scheme: crate::bfv::Scheme, op: OpKind) -> Option<&'static str> {
+    use crate::bfv::Scheme;
+    match scheme {
+        Scheme::Ckks => {
+            matches!(op, OpKind::BfvMul).then_some("BfvMul needs a BFV-scheme engine")
+        }
+        Scheme::Bfv => (!matches!(
+            op,
+            OpKind::Add
+                | OpKind::Sub
+                | OpKind::Negate
+                | OpKind::Rotate(_)
+                | OpKind::Conjugate
+                | OpKind::BfvMul
+        ))
+        .then_some("op not admissible on a BFV-scheme engine"),
+    }
+}
+
+/// [`scheme_rejects`] for one program op.
+pub fn scheme_rejects_opcode(scheme: crate::bfv::Scheme, op: &OpCode) -> Option<&'static str> {
+    use crate::bfv::Scheme;
+    match scheme {
+        Scheme::Ckks => {
+            matches!(op, OpCode::BfvMul(_, _)).then_some("BfvMul needs a BFV-scheme engine")
+        }
+        Scheme::Bfv => (!matches!(
+            op,
+            OpCode::Add(_, _)
+                | OpCode::Sub(_, _)
+                | OpCode::Negate(_)
+                | OpCode::Rotate(_, _)
+                | OpCode::Conjugate(_)
+                | OpCode::BfvMul(_, _)
+        ))
+        .then_some("op not admissible on a BFV-scheme engine"),
+    }
+}
+
 /// One admitted unit of work: a single op or a whole program. Both count
 /// as one toward the lane's bounded depth.
 enum Job {
@@ -642,6 +690,9 @@ impl Coordinator {
     /// would trip an assert deep inside a worker (and kill the lane
     /// thread) bounces as [`SubmitError::BadRequest`] instead.
     pub fn submit(&self, req: Request) -> Result<Receiver<Response>, (Request, SubmitError)> {
+        if let Some(why) = scheme_rejects(self.ev.scheme(), req.op) {
+            return Err((req, SubmitError::BadRequest(why)));
+        }
         if req.op.needs_ct2() && req.ct2.is_none() {
             return Err((req, SubmitError::BadRequest("binary op without ct2")));
         }
@@ -761,6 +812,12 @@ impl Coordinator {
         &self,
         req: ProgramRequest,
     ) -> Result<Receiver<ProgramResponse>, (ProgramRequest, ProgramSubmitError)> {
+        for (i, op) in req.program.ops().iter().enumerate() {
+            if let Some(why) = scheme_rejects_opcode(self.ev.scheme(), op) {
+                let e = ProgramError::BadOperand { op: i, why: why.into() };
+                return Err((req, ProgramSubmitError::Invalid(e)));
+            }
+        }
         let meta: Vec<(usize, f64)> =
             req.inputs.iter().map(|c| (c.level, c.scale)).collect();
         if let Err(e) = req.program.validate(&self.ev.ctx, self.ev.keys(), &meta) {
@@ -920,7 +977,7 @@ fn worker_loop(
 pub(crate) fn op_group(op: OpKind) -> usize {
     match op {
         OpKind::Rotate(_) | OpKind::Conjugate => 0,
-        OpKind::Mul | OpKind::Square => 1,
+        OpKind::Mul | OpKind::Square | OpKind::BfvMul => 1,
         OpKind::LinearScore | OpKind::HomLinear => 3,
         _ => 2,
     }
@@ -949,7 +1006,9 @@ pub(crate) fn request_trace(op: OpKind, level: usize, ev: &Evaluator, backend: B
             }
             t
         }
-        OpKind::Square | OpKind::Mul => c.hemult(&p),
+        // The BEHZ multiply runs the same tensor + key-switch pipeline
+        // shape as HEMult (extended-base work folds into the same trace).
+        OpKind::Square | OpKind::Mul | OpKind::BfvMul => c.hemult(&p),
         OpKind::Rotate(_) | OpKind::Conjugate => c.rotate(&p),
         OpKind::Add | OpKind::Sub | OpKind::Negate | OpKind::AddConst(_)
         | OpKind::LevelReduce(_) => c.headd(&p),
@@ -981,6 +1040,7 @@ fn program_trace(prog: &FheProgram, level: usize, ev: &Evaluator, backend: Backe
     for op in prog.ops() {
         let kind = match op {
             OpCode::Mul(_, _) => OpKind::Mul,
+            OpCode::BfvMul(_, _) => OpKind::BfvMul,
             OpCode::Square(_) => OpKind::Square,
             OpCode::Rotate(_, k) => OpKind::Rotate(*k),
             OpCode::Conjugate(_) => OpKind::Conjugate,
@@ -1028,6 +1088,7 @@ fn execute(ev: &Evaluator, model: &ModelState, req: &Request) -> Result<Cipherte
         OpKind::Conjugate => ev.conjugate(&req.ct),
         // Operand presence is validated at `submit` admission.
         OpKind::Mul => ev.mul(&req.ct, req.ct2.as_ref().expect("validated at submit")),
+        OpKind::BfvMul => ev.bfv_mul(&req.ct, req.ct2.as_ref().expect("validated at submit")),
         OpKind::Add => Ok(ev.add(&req.ct, req.ct2.as_ref().expect("validated at submit"))),
         OpKind::Sub => Ok(ev.sub(&req.ct, req.ct2.as_ref().expect("validated at submit"))),
         OpKind::Negate => Ok(ev.negate(&req.ct)),

@@ -8,6 +8,10 @@
 //!   modular arithmetic, negacyclic NTT, RNS base conversion, encoding,
 //!   encryption, homomorphic ops, hybrid key switching, rotation and
 //!   bootstrapping.
+//! * [`bfv`] — the second scheme on the same substrate: exact integer
+//!   arithmetic (BFV) with CRT batching, BEHZ-style multiply through the
+//!   shared base-conversion kernels, and rescale-free noise-budget
+//!   tracking — proof that the MLT seam is scheme-agnostic.
 //! * [`isa`] — the SASS-level instruction model, including the paper's
 //!   `FHEC.16816` ISA extension.
 //! * [`codegen`] — per-kernel instruction-stream generators (the NVBit
@@ -49,6 +53,7 @@
 //! * [`tables`] — regenerators for every figure and table of SVI.
 
 pub mod bench_harness;
+pub mod bfv;
 pub mod ckks;
 pub mod cluster;
 pub mod codegen;

@@ -28,6 +28,13 @@ pub enum FuseShape {
 /// Everything that must agree before two queued ops may fuse.
 #[derive(Debug, Clone, Copy, PartialEq, Eq, Hash)]
 pub struct CompatKey {
+    /// Which scheme's engine submitted the op. A BFV tenant's parameter
+    /// set can collide with a CKKS tenant's in *shape* (same ring, same
+    /// prime chain — that is exactly what `BfvParams::matching`
+    /// produces), so the scheme must split the groups explicitly: the
+    /// fused NTT passes would match, but the members' finishes assume
+    /// different ciphertext semantics.
+    pub scheme: crate::bfv::Scheme,
     /// Parameter-set fingerprint (same hash the wire handshake pins).
     pub fingerprint: u64,
     /// Effective level the key switch runs at (binary ops: the post-align
@@ -68,6 +75,10 @@ pub fn compat_key(ev: &Evaluator, req: &Request) -> Option<CompatKey> {
         }
         OpKind::Conjugate => FuseShape::Galois,
         OpKind::Square | OpKind::Mul => FuseShape::Relin,
+        // The BEHZ multiply's NTT work runs over the *extended* base
+        // (Q||P lifts), a different transform than the relin finish the
+        // Relin group fuses — keep it on the sequential lane.
+        OpKind::BfvMul => return None,
         _ => return None,
     };
     let level = match &req.ct2 {
@@ -75,6 +86,7 @@ pub fn compat_key(ev: &Evaluator, req: &Request) -> Option<CompatKey> {
         None => req.ct.level,
     };
     Some(CompatKey {
+        scheme: ev.scheme(),
         fingerprint: crate::wire::params_fingerprint(&ev.ctx.params),
         level,
         chain: chain_hash(&ev.ctx.chain_at(level)),
@@ -159,5 +171,28 @@ mod tests {
         // The rotation identity has no key switch to fuse.
         let slots = ev.ctx.params.slots();
         assert!(compat_key(&ev, &Request::new(2, OpKind::Rotate(slots), ct)).is_none());
+    }
+
+    #[test]
+    fn schemes_never_fuse_even_on_identical_shapes() {
+        // Two engines over the *same* synthetic parameter set (identical
+        // fingerprint, chain, level): one CKKS-tagged, one BFV-tagged.
+        // Shape-colliding Galois work must still land in separate groups.
+        let bfv_ctx = crate::bfv::BfvContext::new(crate::bfv::BfvParams::toy());
+        let params = bfv_ctx.params.inner_params();
+        let ev_ckks = Evaluator::without_keys(CkksContext::new(params.clone()));
+        let ev_bfv = Evaluator::without_keys(CkksContext::new(params))
+            .with_bfv(bfv_ctx.tables.clone());
+        let ct = sample_ct(&ev_ckks, ev_ckks.ctx.max_level());
+        let a = compat_key(&ev_ckks, &Request::new(1, OpKind::Rotate(1), ct.clone())).unwrap();
+        let b = compat_key(&ev_bfv, &Request::new(2, OpKind::Rotate(1), ct.clone())).unwrap();
+        assert_eq!(a.fingerprint, b.fingerprint, "shapes collide by construction");
+        assert_eq!(a.chain, b.chain);
+        assert_ne!(a, b, "scheme must split the groups");
+        assert_eq!(a.scheme, crate::bfv::Scheme::Ckks);
+        assert_eq!(b.scheme, crate::bfv::Scheme::Bfv);
+        // And the BEHZ multiply never enters the batch former at all.
+        let r = Request::new(3, OpKind::BfvMul, ct.clone()).with_ct2(ct);
+        assert!(compat_key(&ev_bfv, &r).is_none());
     }
 }

@@ -133,6 +133,7 @@ pub fn run_serve(args: &Args) -> i32 {
         crate::telemetry::slow_request_us() / 1000
     );
     let opts = ServeOptions {
+        bfv: Some(crate::bfv::BfvParams::matching(&params)),
         params,
         serve: serve_config(args),
         registry: registry_config(args),
@@ -151,11 +152,13 @@ pub fn run_serve(args: &Args) -> i32 {
     }
 }
 
-/// `client [quickstart|metrics|trace|shutdown] --connect <addr>
-/// [--params ...] [--seed N]` — `--seed` varies the quickstart's key
-/// material, so each distinct seed registers (and exercises) a distinct
-/// server tenant. `trace [--out FILE]` drains the server's span rings
-/// and renders them as Chrome trace-event JSON (Perfetto-loadable).
+/// `client [quickstart|bfv-quickstart|metrics|trace|shutdown]
+/// --connect <addr> [--params ...] [--seed N]` — `--seed` varies the
+/// quickstart's key material, so each distinct seed registers (and
+/// exercises) a distinct server tenant. `bfv-quickstart` runs the exact
+/// integer pipeline against the server's matching BFV parameter set
+/// (wire v8). `trace [--out FILE]` drains the server's span rings and
+/// renders them as Chrome trace-event JSON (Perfetto-loadable).
 pub fn run_client(args: &Args) -> i32 {
     let addr = args.opt("connect").unwrap_or(DEFAULT_ADDR).to_string();
     let pname = args.opt("params").unwrap_or("toy");
@@ -181,6 +184,14 @@ pub fn run_client(args: &Args) -> i32 {
             }
             Err(e) => {
                 eprintln!("client quickstart failed: {e}");
+                1
+            }
+        },
+        "bfv-quickstart" => match bfv_quickstart(&addr, params, timeout, seed) {
+            Ok(true) => 0,
+            Ok(false) => 1,
+            Err(e) => {
+                eprintln!("client bfv-quickstart failed: {e}");
                 1
             }
         },
@@ -213,7 +224,10 @@ pub fn run_client(args: &Args) -> i32 {
             }
         }
         other => {
-            eprintln!("unknown client mode '{other}' (quickstart|metrics|trace|shutdown)");
+            eprintln!(
+                "unknown client mode '{other}' \
+                 (quickstart|bfv-quickstart|metrics|trace|shutdown)"
+            );
             2
         }
     }
@@ -794,5 +808,103 @@ pub fn quickstart(
 
     let pass = bit_exact && program_exact && worst < 1e-2;
     println!("loopback quickstart: {}", if pass { "PASS" } else { "FAIL" });
+    Ok(pass)
+}
+
+/// The BFV loopback quickstart (wire v8): exact integer add / multiply /
+/// row-rotation against the server's **matching** BFV parameter set (same
+/// ring and prime chain as `--params`), compared bit for bit against a
+/// local [`BfvEvaluator`] over the identical key set, then decrypted and
+/// checked **exactly** against the `Z_t` integer reference — no error
+/// tolerance anywhere. PASS gates the CI BFV loopback smoke.
+pub fn bfv_quickstart(
+    addr: &str,
+    params: CkksParams,
+    timeout: Duration,
+    seed: u64,
+) -> Result<bool, WireError> {
+    use crate::bfv::{BfvContext, BfvEvaluator, BfvKeyGen, BfvParams};
+
+    // Client side: the only place secret material exists.
+    let ctx = BfvContext::new(BfvParams::matching(&params));
+    let mut rng = Pcg64::new(seed);
+    let kg = BfvKeyGen::new(&ctx, &mut rng);
+    let keys = Arc::new(kg.eval_key_set(&ctx, &ctx.serving_spec(), &mut rng));
+    let enc = kg.encryptor();
+    let dec = kg.decryptor();
+    let t = ctx.t();
+    println!(
+        "bfv: t = {t}, {} slots (2 rows of {}), fingerprint {:#018x}",
+        ctx.params.slots(),
+        ctx.params.slots() / 2,
+        super::codec::bfv_params_fingerprint(&ctx.params)
+    );
+
+    let remote = RemoteEvaluator::connect_bfv_retry(addr, ctx.params.clone(), timeout)?;
+    let pushed = remote.push_keys(&keys)?;
+    println!(
+        "pushed {pushed} public evaluation keys to {addr} (BFV tenant {:#018x})",
+        remote.tenant()
+    );
+
+    let slots = ctx.params.slots();
+    let half = slots / 2;
+    let va: Vec<i64> = (0..slots as i64)
+        .map(|i| (i * 7919 + 3).rem_euclid(t as i64))
+        .collect();
+    let vb: Vec<i64> = (0..slots as i64)
+        .map(|i| (t as i64 - 1 - i * 65537).rem_euclid(t as i64))
+        .collect();
+    let ca = enc.encrypt_slots(&ctx, &va, &mut rng);
+    let cb = enc.encrypt_slots(&ctx, &vb, &mut rng);
+    println!(
+        "fresh noise budget: {:.1} bits",
+        dec.noise_budget(&ctx, &ca)
+    );
+
+    // Remote: add on the CUDA-class lane, BEHZ multiply + relin on the
+    // FHEC lane, then a row rotation (the CKKS Galois machinery).
+    let sum = remote.add(&ca, &cb)?;
+    let prod = remote.bfv_mul(&ca, &cb)?;
+    let rot = remote.rotate(&prod, 1)?;
+
+    // Local reference over the identical key set.
+    let ev = BfvEvaluator::new(&ctx, keys.clone());
+    let want_sum = ev.add(&ca, &cb);
+    let want_prod = ev.mul(&ca, &cb).map_err(WireError::MissingKey)?;
+    let want_rot = ev.rotate_rows(&want_prod, 1).map_err(WireError::MissingKey)?;
+    let bit_exact = sum == want_sum && prod == want_prod && rot == want_rot;
+    println!(
+        "remote vs local ciphertexts: {}",
+        if bit_exact { "bit-exact" } else { "MISMATCH" }
+    );
+    println!(
+        "post-multiply noise budget: {:.1} bits",
+        dec.noise_budget(&ctx, &prod)
+    );
+
+    // Decrypt and require exact equality with the Z_t integer reference.
+    let mt = ctx.tables.mt;
+    let back_sum = dec.decrypt_slots(&ctx, &sum);
+    let back_rot = dec.decrypt_slots(&ctx, &rot);
+    let mut exact = true;
+    for j in 0..slots {
+        let (a, b) = (va[j] as u64, vb[j] as u64);
+        if back_sum[j] != mt.add(a, b) {
+            exact = false;
+        }
+        // rotate(1) shifts each batching row left by one column.
+        let src = if j < half { (j + 1) % half } else { half + (j + 1 - half) % half };
+        if back_rot[j] != mt.mul(va[src] as u64, vb[src] as u64) {
+            exact = false;
+        }
+    }
+    println!(
+        "decrypted integers vs Z_t reference: {}",
+        if exact { "exact" } else { "MISMATCH" }
+    );
+
+    let pass = bit_exact && exact;
+    println!("bfv loopback quickstart: {}", if pass { "PASS" } else { "FAIL" });
     Ok(pass)
 }

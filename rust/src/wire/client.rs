@@ -31,12 +31,13 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::{Duration, Instant};
 
-use super::codec::encode_eval_key_set;
+use super::codec::{bfv_params_fingerprint, encode_eval_key_set_for};
 use super::protocol::{encode_op_request, encode_program_request, Message, WireOp};
 use super::protocol::error_code;
 use super::{
     busy_backoff_delay_jittered, fnv1a64, params_fingerprint, Frame, WireError, WIRE_VERSION,
 };
+use crate::bfv::{BfvContext, BfvParams, Scheme};
 use crate::ckks::linear::SlotMatrix;
 use crate::ckks::params::{CkksContext, CkksParams};
 use crate::ckks::program::FheProgram;
@@ -116,6 +117,10 @@ pub struct RemoteEvaluator {
     io: Mutex<Channel>,
     next_id: AtomicU64,
     fingerprint: u64,
+    /// Which scheme this session negotiated (wire v8). Stamped into every
+    /// pushed key blob so the server builds the right engine kind; a CKKS
+    /// session (the `connect` family) never sends BFV ops and vice versa.
+    scheme: Scheme,
     /// The tenant id every request is issued under (wire v5). Set by
     /// `push_keys` to the pushed blob's fingerprint; 0 = the server's
     /// most recently pushed tenant (pre-v5 single-tenant behavior).
@@ -155,6 +160,42 @@ impl RemoteEvaluator {
         timeout: Duration,
     ) -> Result<Self, WireError> {
         let fingerprint = params_fingerprint(&params);
+        let local = Evaluator::without_keys(CkksContext::new(params));
+        Self::connect_inner(addr, fingerprint, Scheme::Ckks, local, timeout)
+    }
+
+    /// Connect a **BFV** session: the handshake pins the scheme-prefixed
+    /// BFV fingerprint (a dual-scheme server echoes whichever set
+    /// matched), key blobs go out scheme-tagged, and [`Self::bfv_mul`]
+    /// becomes the session's multiply. The embedded local evaluator runs
+    /// over the inner CKKS tower with the BFV tables attached, so
+    /// client-side shape checks see the same chain the server evaluates
+    /// on.
+    pub fn connect_bfv(addr: &str, params: BfvParams) -> Result<Self, WireError> {
+        Self::connect_bfv_retry(addr, params, Duration::ZERO)
+    }
+
+    /// [`Self::connect_bfv`] with the same socket-retry window as
+    /// [`Self::connect_retry`].
+    pub fn connect_bfv_retry(
+        addr: &str,
+        params: BfvParams,
+        timeout: Duration,
+    ) -> Result<Self, WireError> {
+        let fingerprint = bfv_params_fingerprint(&params);
+        let bfv = BfvContext::new(params);
+        let local = Evaluator::without_keys(CkksContext::new(bfv.params.inner_params()))
+            .with_bfv(bfv.tables.clone());
+        Self::connect_inner(addr, fingerprint, Scheme::Bfv, local, timeout)
+    }
+
+    fn connect_inner(
+        addr: &str,
+        fingerprint: u64,
+        scheme: Scheme,
+        local: Evaluator,
+        timeout: Duration,
+    ) -> Result<Self, WireError> {
         let stream = connect_handshake(addr, fingerprint, timeout)?;
         let backoff_seed = stream
             .local_addr()
@@ -166,9 +207,10 @@ impl RemoteEvaluator {
             io: Mutex::new(ch),
             next_id: AtomicU64::new(1),
             fingerprint,
+            scheme,
             tenant: AtomicU64::new(0),
             backoff_seed,
-            local: Evaluator::without_keys(CkksContext::new(params)),
+            local,
             busy_retries: 50,
             busy_backoff: Duration::from_millis(1),
             busy_backoff_cap: Duration::from_millis(50),
@@ -199,6 +241,11 @@ impl RemoteEvaluator {
         self.fingerprint
     }
 
+    /// Which scheme this session negotiated at `Hello`.
+    pub fn scheme(&self) -> Scheme {
+        self.scheme
+    }
+
     /// The shared CKKS context (same tower as the server's, by the
     /// fingerprint handshake).
     pub fn ctx(&self) -> &CkksContext {
@@ -219,7 +266,7 @@ impl RemoteEvaluator {
     /// requests keep hitting these keys even after other tenants
     /// register. Returns the server-confirmed key count.
     pub fn push_keys(&self, keys: &EvalKeySet) -> Result<u32, WireError> {
-        let blob = encode_eval_key_set(keys, self.fingerprint, true);
+        let blob = encode_eval_key_set_for(keys, self.fingerprint, true, self.scheme);
         let want_fp = fnv1a64(&blob);
         let mut ch = self.io.lock().unwrap();
         ch.send(&Message::PushKeys { blob })?;
@@ -286,6 +333,13 @@ impl RemoteEvaluator {
     /// HEMult (with relinearization + rescale), server-side.
     pub fn mul(&self, a: &Ciphertext, b: &Ciphertext) -> Result<Ciphertext, WireError> {
         self.call(WireOp::Mul, a, Some(b))
+    }
+
+    /// BEHZ BFV multiply with relinearization, server-side (wire v8).
+    /// Only meaningful on a session opened with [`Self::connect_bfv`] —
+    /// a CKKS engine rejects the op at admission.
+    pub fn bfv_mul(&self, a: &Ciphertext, b: &Ciphertext) -> Result<Ciphertext, WireError> {
+        self.call(WireOp::BfvMul, a, Some(b))
     }
 
     /// Slot rotation by `k`, server-side.

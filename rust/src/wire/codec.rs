@@ -1,11 +1,16 @@
 //! Canonical little-endian binary encoding of the CKKS types.
 //!
 //! Every top-level blob is `magic(4) | version(u16) | obj-tag(u8) |
-//! params-fingerprint(u64) | payload`. The fingerprint is the FNV-1a 64
-//! hash of the canonically encoded `CkksParams` — two peers agree on it
-//! iff they derive the identical prime tower, so every object is bound to
-//! the parameter set it was produced under. Readers reject unknown
-//! versions, wrong tags, wrong fingerprints and trailing bytes.
+//! params-fingerprint(u64) | scheme(u8, v8+) | payload`. The fingerprint
+//! is the FNV-1a 64 hash of the canonically encoded `CkksParams` — two
+//! peers agree on it iff they derive the identical prime tower, so every
+//! object is bound to the parameter set it was produced under. Since wire
+//! v8 the header also names the FHE scheme the object belongs to
+//! ([`crate::bfv::Scheme`], one byte, absent in v2–v7 blobs and defaulted
+//! to CKKS on read); key-set decoding enforces it, so a cross-scheme key
+//! push fails with the typed [`WireError::Scheme`] instead of building an
+//! engine over the wrong arithmetic. Readers reject unknown versions,
+//! wrong tags, wrong fingerprints and trailing bytes.
 //!
 //! **Canonical** means: one valid encoding per value. Integers are
 //! fixed-width little-endian, floats are IEEE-754 bit patterns,
@@ -21,6 +26,7 @@
 use std::sync::Arc;
 
 use super::{fnv1a64, key_kind_from_parts, key_kind_parts, WireError, WIRE_MAGIC, WIRE_VERSION};
+use crate::bfv::{BfvParams, Scheme};
 use crate::ckks::keys::{digit_count_at, expand_a};
 use crate::ckks::linear::SlotMatrix;
 use crate::ckks::params::{CkksContext, CkksParams, WidthProfile};
@@ -173,15 +179,20 @@ impl<'a> Reader<'a> {
 // Blob headers
 // ---------------------------------------------------------------------
 
-fn write_header(out: &mut Vec<u8>, tag: ObjTag, fingerprint: u64) {
+fn write_header(out: &mut Vec<u8>, tag: ObjTag, fingerprint: u64, scheme: Scheme) {
     out.extend_from_slice(&WIRE_MAGIC);
     put_u16(out, WIRE_VERSION);
     put_u8(out, tag as u8);
     put_u64(out, fingerprint);
+    // v8: the scheme byte. Old readers never see it (they reject the v8
+    // version word first); old blobs simply end the header here.
+    put_u8(out, scheme.to_byte());
 }
 
-/// Read and validate a blob header, returning the fingerprint it carries.
-fn read_header(r: &mut Reader, want_tag: ObjTag) -> Result<u64, WireError> {
+/// Read and validate a blob header, returning the fingerprint and scheme
+/// it carries. Blobs written before v8 have no scheme byte and default
+/// to CKKS — the only scheme that existed then.
+fn read_header(r: &mut Reader, want_tag: ObjTag) -> Result<(u64, Scheme), WireError> {
     let magic = r.take(4)?;
     if magic != WIRE_MAGIC {
         return Err(WireError::Corrupt(format!("bad magic {magic:02x?}")));
@@ -197,7 +208,15 @@ fn read_header(r: &mut Reader, want_tag: ObjTag) -> Result<u64, WireError> {
             "object tag mismatch: got {tag:?}, wanted {want_tag:?}"
         )));
     }
-    r.u64()
+    let fp = r.u64()?;
+    let scheme = if version >= 8 {
+        let b = r.u8()?;
+        Scheme::from_byte(b)
+            .ok_or_else(|| WireError::Corrupt(format!("unknown scheme byte {b}")))?
+    } else {
+        Scheme::Ckks
+    };
+    Ok((fp, scheme))
 }
 
 fn check_fingerprint(got: u64, want: u64) -> Result<(), WireError> {
@@ -279,22 +298,59 @@ pub fn params_fingerprint(p: &CkksParams) -> u64 {
     fnv1a64(&body)
 }
 
+/// The fingerprint a BFV peer handshakes and binds its blobs with:
+/// FNV-1a 64 over the scheme byte, the canonical body of the *inner*
+/// (synthetic CKKS) parameter set, and the plaintext-modulus width. The
+/// scheme prefix guarantees it can never collide with the CKKS
+/// fingerprint of the same ring — which is exactly how a dual-scheme
+/// server tells the two client populations apart at `Hello` time.
+pub fn bfv_params_fingerprint(p: &BfvParams) -> u64 {
+    let mut body = Vec::with_capacity(26);
+    put_u8(&mut body, Scheme::Bfv.to_byte());
+    p.inner_params().wire_write(&mut body);
+    put_u32(&mut body, p.t_bits);
+    fnv1a64(&body)
+}
+
 /// Full params blob (self-fingerprinting: the header fingerprint is the
 /// hash of the payload that follows).
 pub fn encode_params(p: &CkksParams) -> Vec<u8> {
     let mut out = Vec::new();
-    write_header(&mut out, ObjTag::Params, params_fingerprint(p));
+    write_header(&mut out, ObjTag::Params, params_fingerprint(p), Scheme::Ckks);
     p.wire_write(&mut out);
     out
 }
 
 pub fn decode_params(bytes: &[u8]) -> Result<CkksParams, WireError> {
     let mut r = Reader::new(bytes);
-    let fp = read_header(&mut r, ObjTag::Params)?;
+    let (fp, _scheme) = read_header(&mut r, ObjTag::Params)?;
     check_fingerprint(fnv1a64(r.rest()), fp)?;
     let p = CkksParams::wire_read(&mut r)?;
     r.expect_done()?;
     Ok(p)
+}
+
+/// Read just the header of any blob and report which scheme it belongs
+/// to (CKKS for every pre-v8 blob) — how a dual-scheme server dispatches
+/// a `PushKeys` blob to the right engine builder without decoding the
+/// payload.
+pub fn peek_blob_scheme(bytes: &[u8]) -> Result<Scheme, WireError> {
+    let mut r = Reader::new(bytes);
+    let magic = r.take(4)?;
+    if magic != WIRE_MAGIC {
+        return Err(WireError::Corrupt(format!("bad magic {magic:02x?}")));
+    }
+    let version = r.u16()?;
+    if !super::version_accepted(version) {
+        return Err(WireError::Version { got: version, want: WIRE_VERSION });
+    }
+    ObjTag::from_u8(r.u8()?)?;
+    r.u64()?; // fingerprint
+    if version < 8 {
+        return Ok(Scheme::Ckks);
+    }
+    let b = r.u8()?;
+    Scheme::from_byte(b).ok_or_else(|| WireError::Corrupt(format!("unknown scheme byte {b}")))
 }
 
 // ----------------------- RnsPoly (plaintexts) ------------------------
@@ -354,14 +410,14 @@ impl WireRead for RnsPoly {
 
 pub fn encode_plaintext(p: &RnsPoly, fingerprint: u64) -> Vec<u8> {
     let mut out = Vec::new();
-    write_header(&mut out, ObjTag::Plaintext, fingerprint);
+    write_header(&mut out, ObjTag::Plaintext, fingerprint, Scheme::Ckks);
     p.wire_write(&mut out);
     out
 }
 
 pub fn decode_plaintext(bytes: &[u8], fingerprint: u64) -> Result<RnsPoly, WireError> {
     let mut r = Reader::new(bytes);
-    check_fingerprint(read_header(&mut r, ObjTag::Plaintext)?, fingerprint)?;
+    check_fingerprint(read_header(&mut r, ObjTag::Plaintext)?.0, fingerprint)?;
     let p = RnsPoly::wire_read(&mut r)?;
     r.expect_done()?;
     Ok(p)
@@ -402,14 +458,14 @@ impl WireRead for Ciphertext {
 
 pub fn encode_ciphertext(ct: &Ciphertext, fingerprint: u64) -> Vec<u8> {
     let mut out = Vec::new();
-    write_header(&mut out, ObjTag::Ciphertext, fingerprint);
+    write_header(&mut out, ObjTag::Ciphertext, fingerprint, Scheme::Ckks);
     ct.wire_write(&mut out);
     out
 }
 
 pub fn decode_ciphertext(bytes: &[u8], fingerprint: u64) -> Result<Ciphertext, WireError> {
     let mut r = Reader::new(bytes);
-    check_fingerprint(read_header(&mut r, ObjTag::Ciphertext)?, fingerprint)?;
+    check_fingerprint(read_header(&mut r, ObjTag::Ciphertext)?.0, fingerprint)?;
     let ct = Ciphertext::wire_read(&mut r)?;
     r.expect_done()?;
     Ok(ct)
@@ -524,7 +580,7 @@ impl WireReadCtx for KsKey {
 /// tests and benchmarks compare against).
 pub fn encode_kskey(k: &KsKey, fingerprint: u64, compress: bool) -> Vec<u8> {
     let mut out = Vec::new();
-    write_header(&mut out, ObjTag::KsKey, fingerprint);
+    write_header(&mut out, ObjTag::KsKey, fingerprint, Scheme::Ckks);
     write_kskey_body(k, &mut out, compress);
     out
 }
@@ -535,7 +591,7 @@ pub fn decode_kskey(
     fingerprint: u64,
 ) -> Result<KsKey, WireError> {
     let mut r = Reader::new(bytes);
-    check_fingerprint(read_header(&mut r, ObjTag::KsKey)?, fingerprint)?;
+    check_fingerprint(read_header(&mut r, ObjTag::KsKey)?.0, fingerprint)?;
     let k = read_kskey_body(ctx, &mut r)?;
     r.expect_done()?;
     Ok(k)
@@ -609,20 +665,51 @@ impl WireReadCtx for EvalKeySet {
     }
 }
 
+/// CKKS key-set blob (the pre-v8 surface; see
+/// [`encode_eval_key_set_for`] for the scheme-tagged form).
 pub fn encode_eval_key_set(ks: &EvalKeySet, fingerprint: u64, compress: bool) -> Vec<u8> {
+    encode_eval_key_set_for(ks, fingerprint, compress, Scheme::Ckks)
+}
+
+/// Key-set blob tagged with the scheme whose engine may expand it.
+pub fn encode_eval_key_set_for(
+    ks: &EvalKeySet,
+    fingerprint: u64,
+    compress: bool,
+    scheme: Scheme,
+) -> Vec<u8> {
     let mut out = Vec::new();
-    write_header(&mut out, ObjTag::EvalKeySet, fingerprint);
+    write_header(&mut out, ObjTag::EvalKeySet, fingerprint, scheme);
     write_eval_key_set_body(ks, &mut out, compress);
     out
 }
 
+/// Decode a key set for a **CKKS** engine: a v8 blob carrying any other
+/// scheme byte is rejected with [`WireError::Scheme`].
 pub fn decode_eval_key_set(
     ctx: &CkksContext,
     bytes: &[u8],
     fingerprint: u64,
 ) -> Result<EvalKeySet, WireError> {
+    decode_eval_key_set_for(ctx, bytes, fingerprint, Scheme::Ckks)
+}
+
+/// Decode a key set for an engine of the given scheme. The scheme check
+/// runs *before* the payload decode: key material for the wrong scheme
+/// must never reach an engine builder, even when the polynomial shapes
+/// happen to collide (BFV's `matching` params share the CKKS ring).
+pub fn decode_eval_key_set_for(
+    ctx: &CkksContext,
+    bytes: &[u8],
+    fingerprint: u64,
+    want_scheme: Scheme,
+) -> Result<EvalKeySet, WireError> {
     let mut r = Reader::new(bytes);
-    check_fingerprint(read_header(&mut r, ObjTag::EvalKeySet)?, fingerprint)?;
+    let (fp, scheme) = read_header(&mut r, ObjTag::EvalKeySet)?;
+    if scheme != want_scheme {
+        return Err(WireError::Scheme { got: scheme, want: want_scheme });
+    }
+    check_fingerprint(fp, fingerprint)?;
     let ks = read_eval_key_set_body(ctx, &mut r)?;
     r.expect_done()?;
     Ok(ks)
@@ -707,6 +794,8 @@ mod op_tag {
     pub const RESCALE: u8 = 11;
     pub const LEVEL_REDUCE: u8 = 12;
     pub const HOM_LINEAR: u8 = 13;
+    /// v8: the BEHZ-style exact multiply (BFV engines only).
+    pub const BFV_MUL: u8 = 14;
 }
 
 impl WireWrite for OpCode {
@@ -779,6 +868,11 @@ impl WireWrite for OpCode {
                 reg(out, *a);
                 m.wire_write(out);
             }
+            OpCode::BfvMul(a, b) => {
+                put_u8(out, op_tag::BFV_MUL);
+                reg(out, *a);
+                reg(out, *b);
+            }
         }
     }
 }
@@ -802,6 +896,7 @@ impl WireRead for OpCode {
             op_tag::RESCALE => OpCode::Rescale(reg(r)?),
             op_tag::LEVEL_REDUCE => OpCode::LevelReduce(reg(r)?, r.u32()? as usize),
             op_tag::HOM_LINEAR => OpCode::HomLinear(reg(r)?, SlotMatrix::wire_read(r)?),
+            op_tag::BFV_MUL => OpCode::BfvMul(reg(r)?, reg(r)?),
             other => {
                 return Err(WireError::Corrupt(format!("unknown program op tag {other}")))
             }
@@ -1175,6 +1270,40 @@ mod tests {
             params_fingerprint(&CkksParams::toy()),
             params_fingerprint(&CkksParams::medium())
         );
+    }
+
+    #[test]
+    fn bfv_fingerprint_never_collides_with_ckks() {
+        // A BFV set over the *same ring* as its inner CKKS set must
+        // still handshake under a distinct fingerprint (scheme prefix).
+        let bp = BfvParams::toy();
+        let inner = bp.inner_params();
+        assert_ne!(bfv_params_fingerprint(&bp), params_fingerprint(&inner));
+        // And it is stable (a pure function of the params).
+        assert_eq!(bfv_params_fingerprint(&bp), bfv_params_fingerprint(&BfvParams::toy()));
+        assert_ne!(
+            bfv_params_fingerprint(&BfvParams::toy()),
+            bfv_params_fingerprint(&BfvParams::medium())
+        );
+    }
+
+    #[test]
+    fn blob_scheme_peeks_and_defaults() {
+        let p = CkksParams::toy();
+        let blob = encode_params(&p);
+        assert_eq!(peek_blob_scheme(&blob).unwrap(), Scheme::Ckks);
+        // A v7-era blob has no scheme byte: rewriting the version word
+        // (headers are unchecksummed) must yield the CKKS default.
+        let mut old = blob.clone();
+        old[4..6].copy_from_slice(&7u16.to_le_bytes());
+        // Drop the scheme byte the v8 writer appended after the
+        // fingerprint (offset 4+2+1+8 = 15).
+        old.remove(15);
+        assert_eq!(peek_blob_scheme(&old).unwrap(), Scheme::Ckks);
+        // Unknown scheme bytes are rejected, not silently mapped.
+        let mut bad = blob;
+        bad[15] = 0x7F;
+        assert!(matches!(peek_blob_scheme(&bad), Err(WireError::Corrupt(_))));
     }
 
     #[test]

@@ -42,7 +42,10 @@ pub mod protocol;
 pub mod server;
 
 pub use client::RemoteEvaluator;
-pub use codec::{params_fingerprint, ObjTag, Reader, WireRead, WireWrite};
+pub use codec::{
+    bfv_params_fingerprint, params_fingerprint, peek_blob_scheme, ObjTag, Reader,
+    WireRead, WireWrite,
+};
 pub use frame::Frame;
 pub use protocol::{Message, WireOp};
 pub use server::{serve, ServeOptions};
@@ -107,18 +110,33 @@ pub const WIRE_MAGIC: [u8; 4] = *b"FHEC";
 /// sentinel is present. Two new RPCs, `TraceReq`/`TraceResp`, drain the
 /// server's span rings as a list of [`codec`]-encoded span events the
 /// CLI renders as Chrome trace-event JSON.
-pub const WIRE_VERSION: u16 = 7;
+///
+/// v8 (the second scheme): every blob header gains a trailing **scheme
+/// byte** after the fingerprint (0 = CKKS, 1 = BFV — [`crate::bfv::Scheme`]).
+/// Writers always emit it; readers consume it only when the header's
+/// version is ≥ 8 and default to CKKS otherwise, so every v2–v7 blob
+/// decodes unchanged. Key-set decoding *enforces* the byte: pushing a
+/// BFV key blob at a CKKS engine (or vice versa) fails with the typed
+/// [`WireError::Scheme`] instead of building an engine that would
+/// execute the wrong arithmetic. BFV peers handshake with
+/// [`codec::bfv_params_fingerprint`], which is scheme-prefixed and can
+/// therefore never collide with a CKKS fingerprint over the same ring;
+/// [`codec::peek_blob_scheme`] lets a server dispatch `PushKeys` blobs
+/// to the right scheme's engine builder. One new program op tag,
+/// `BfvMul` (14), carries the BEHZ-style exact multiply.
+pub const WIRE_VERSION: u16 = 8;
 
 /// Peer versions this build serves. Each bump since v2 only appended
 /// fields — to the `MetricsResp` payload (`programs` in v3,
 /// `mlt_backend` in v4, the registry/pool block in v5, the batch-former
-/// block in v6, the magic-prefixed telemetry block in v7) and, in v5,
-/// an *optional* trailing tenant id on request bodies — so v2/v6-era
-/// binaries decode the whole serving surface except the metrics RPC
-/// (and, since v7, the trace RPC they never ask for). That is what
-/// accepting their `Hello`s buys.
+/// block in v6, the magic-prefixed telemetry block in v7), in v5 an
+/// *optional* trailing tenant id on request bodies, and in v8 a scheme
+/// byte on blob headers that old readers never see (their blobs simply
+/// omit it) — so v2/v7-era binaries decode the whole serving surface
+/// except the metrics RPC (and the trace RPC they never ask for). That
+/// is what accepting their `Hello`s buys.
 pub fn version_accepted(v: u16) -> bool {
-    v == 2 || v == 3 || v == 4 || v == 5 || v == 6 || v == WIRE_VERSION
+    v == 2 || v == 3 || v == 4 || v == 5 || v == 6 || v == 7 || v == WIRE_VERSION
 }
 
 /// Capped exponential backoff for `Busy` retries, shared by
@@ -178,6 +196,10 @@ pub enum WireError {
     Version { got: u16, want: u16 },
     /// The peer's parameter set differs from ours (fingerprints).
     Params { got: u64, want: u64 },
+    /// The blob belongs to a different FHE scheme than the engine it was
+    /// pushed at (a BFV key set at a CKKS engine or vice versa) — wire
+    /// v8's decode-time cross-scheme rejection.
+    Scheme { got: crate::bfv::Scheme, want: crate::bfv::Scheme },
     /// Structurally valid frames in an order or shape the protocol does
     /// not allow (e.g. an op before any keys were pushed).
     Protocol(String),
@@ -209,6 +231,12 @@ impl std::fmt::Display for WireError {
             WireError::Params { got, want } => write!(
                 f,
                 "parameter fingerprint mismatch: peer {got:#018x}, ours {want:#018x}"
+            ),
+            WireError::Scheme { got, want } => write!(
+                f,
+                "scheme mismatch: blob is {}, engine is {}",
+                got.name(),
+                want.name()
             ),
             WireError::Protocol(why) => write!(f, "protocol violation: {why}"),
             WireError::Busy { depth } => write!(f, "server busy ({depth} in flight)"),

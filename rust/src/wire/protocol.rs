@@ -111,6 +111,9 @@ pub enum WireOp {
     AddConst(f64),
     MulPlain(RnsPoly),
     LevelReduce(usize),
+    /// BEHZ-style exact multiply (wire v8; BFV-scheme engines only —
+    /// CKKS engines reject it at admission).
+    BfvMul,
 }
 
 impl WireOp {
@@ -132,6 +135,7 @@ impl WireOp {
             WireOp::AddConst(v) => OpKind::AddConst(*v),
             WireOp::MulPlain(_) => OpKind::MulPlain,
             WireOp::LevelReduce(l) => OpKind::LevelReduce(*l),
+            WireOp::BfvMul => OpKind::BfvMul,
         }
     }
 
@@ -169,6 +173,7 @@ impl WireOp {
                 put_u8(out, 13);
                 put_u32(out, *l as u32);
             }
+            WireOp::BfvMul => put_u8(out, 14),
         }
     }
 
@@ -188,6 +193,7 @@ impl WireOp {
             11 => WireOp::AddConst(r.f64()?),
             12 => WireOp::MulPlain(RnsPoly::wire_read(r)?),
             13 => WireOp::LevelReduce(r.u32()? as usize),
+            14 => WireOp::BfvMul,
             other => return Err(WireError::Corrupt(format!("unknown op tag {other}"))),
         })
     }
@@ -849,6 +855,7 @@ mod tests {
             OpCode::Rescale(Reg(4)),
             OpCode::LevelReduce(Reg(0), 2),
             OpCode::HomLinear(Reg(0), m),
+            OpCode::BfvMul(Reg(0), Reg(1)),
         ];
         for op in ops {
             let mut buf = Vec::new();

@@ -27,9 +27,10 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::mpsc::{channel, Receiver as MpscReceiver, Sender as MpscSender};
 use std::sync::{Arc, Mutex};
 
-use super::codec::decode_eval_key_set;
+use super::codec::{bfv_params_fingerprint, decode_eval_key_set_for, peek_blob_scheme};
 use super::protocol::{error_code, Message, WireOp};
 use super::{fnv1a64, params_fingerprint, version_accepted, Frame, WireError, WIRE_VERSION};
+use crate::bfv::{BfvContext, BfvParams, BfvTables, Scheme};
 use crate::ckks::encoding::Complex;
 use crate::ckks::params::{CkksContext, CkksParams};
 use crate::ckks::program::{FheProgram, OpCode};
@@ -43,6 +44,12 @@ use crate::tenancy::{RegistryConfig, RegistryError, ScratchPool, TenantRegistry}
 #[derive(Debug, Clone)]
 pub struct ServeOptions {
     pub params: CkksParams,
+    /// The BFV parameter set this node also serves (wire v8). The
+    /// default is the [`BfvParams::matching`] set of `params` — same
+    /// ring, same prime chain, so both schemes' ciphertexts pass the
+    /// same shape validation and share every MLT table. `None` makes
+    /// the node CKKS-only (BFV clients fail the handshake).
+    pub bfv: Option<BfvParams>,
     pub serve: ServeConfig,
     /// Memory budget for resident (expanded) tenant key sets; the
     /// default is unlimited (every pushed tenant stays resident).
@@ -58,6 +65,7 @@ pub struct ServeOptions {
 impl ServeOptions {
     pub fn new(params: CkksParams) -> Self {
         Self {
+            bfv: Some(BfvParams::matching(&params)),
             params,
             serve: ServeConfig::default(),
             registry: RegistryConfig::default(),
@@ -73,9 +81,21 @@ struct Engine {
     coord: Coordinator,
 }
 
+/// The server's BFV half: built once at startup so every BFV tenant
+/// shares one set of precomputed scalar tables (the polynomial-sized
+/// state — NTT/base-conversion tables — already lives in the per-engine
+/// `CkksContext`).
+struct BfvServing {
+    params: BfvParams,
+    fingerprint: u64,
+    tables: Arc<BfvTables>,
+}
+
 struct ServerShared {
     params: CkksParams,
     fingerprint: u64,
+    /// BFV serving half; `None` = CKKS-only node.
+    bfv: Option<BfvServing>,
     serve: ServeConfig,
     /// tenant id (key-blob fingerprint) → engine, with LRU demotion to
     /// the seed-compressed blob under the configured budget.
@@ -99,14 +119,37 @@ struct ServerShared {
 
 impl ServerShared {
     /// Decode a tenant blob into a running engine (the registry's
-    /// expander) with its resident-byte estimate.
+    /// expander) with its resident-byte estimate. The blob's v8 scheme
+    /// byte picks the engine flavor: a CKKS blob expands against the
+    /// serving params, a BFV blob against the matching BFV set (and its
+    /// evaluator carries the BFV tables, which is what admits `BfvMul`
+    /// and rejects rescale-class ops at the coordinator). Cross-scheme
+    /// fingerprints cannot mix: each scheme's decode checks its own.
     fn build_engine(&self, blob: &[u8]) -> Result<(Arc<Engine>, u64), WireError> {
-        let ctx = CkksContext::new(self.params.clone());
-        let keys = decode_eval_key_set(&ctx, blob, self.fingerprint)?;
+        let scheme = peek_blob_scheme(blob)?;
+        let (ctx, keys, bfv_tables) = match scheme {
+            Scheme::Ckks => {
+                let ctx = CkksContext::new(self.params.clone());
+                let keys = decode_eval_key_set_for(&ctx, blob, self.fingerprint, scheme)?;
+                (ctx, keys, None)
+            }
+            Scheme::Bfv => {
+                let Some(bfv) = &self.bfv else {
+                    return Err(WireError::Protocol(
+                        "this node serves CKKS only (no BFV params configured)".into(),
+                    ));
+                };
+                let ctx = CkksContext::new(bfv.params.inner_params());
+                let keys = decode_eval_key_set_for(&ctx, blob, bfv.fingerprint, scheme)?;
+                (ctx, keys, Some(bfv.tables.clone()))
+            }
+        };
         let bytes = keys.resident_bytes() as u64;
-        let ev = Arc::new(
-            Evaluator::new(ctx, Arc::new(keys)).with_scratch_pool(self.pool.clone()),
-        );
+        let mut ev = Evaluator::new(ctx, Arc::new(keys)).with_scratch_pool(self.pool.clone());
+        if let Some(tables) = bfv_tables {
+            ev = ev.with_bfv(tables);
+        }
+        let ev = Arc::new(ev);
         let model = Arc::new(default_model(&ev));
         // The tenant's fairness identity in the batch former is the same
         // fingerprint the registry keys it by.
@@ -232,6 +275,11 @@ pub fn serve(listener: TcpListener, opts: ServeOptions) -> std::io::Result<()> {
         .then(|| Arc::new(crate::sched::BatchScheduler::start(opts.sched.clone())));
     let shared = Arc::new(ServerShared {
         fingerprint: params_fingerprint(&opts.params),
+        bfv: opts.bfv.map(|params| BfvServing {
+            fingerprint: bfv_params_fingerprint(&params),
+            tables: BfvContext::new(params.clone()).tables,
+            params,
+        }),
         params: opts.params,
         serve: opts.serve,
         registry: TenantRegistry::new(opts.registry),
@@ -352,13 +400,17 @@ pub(crate) fn read_inbound<R: std::io::Read>(r: &mut R) -> Inbound {
     }
 }
 
-/// Validate a client `Hello` against our version + params fingerprint.
-/// `Ok` is the `HelloAck` to send; `Err` is the typed handshake error
-/// (send, then close). `who` names the responder in the detail text.
+/// Validate a client `Hello` against our version + the fingerprints of
+/// every parameter set this node serves (one per scheme — a BFV client
+/// handshakes with its scheme-prefixed fingerprint). `Ok` is the
+/// `HelloAck` to send, echoing the **matched** fingerprint so the client
+/// verifies it negotiated its own scheme's set; `Err` is the typed
+/// handshake error (send, then close). `who` names the responder in the
+/// detail text.
 pub(crate) fn hello_reply(
     version: u16,
     fingerprint: u64,
-    ours: u64,
+    ours: &[u64],
     who: &str,
 ) -> Result<Message, Message> {
     // v3 serves v2 clients too (the single-op surface is unchanged); the
@@ -372,17 +424,22 @@ pub(crate) fn hello_reply(
             ),
         });
     }
-    if fingerprint != ours {
+    if !ours.contains(&fingerprint) {
+        let served = ours
+            .iter()
+            .map(|fp| format!("{fp:#018x}"))
+            .collect::<Vec<_>>()
+            .join(", ");
         return Err(Message::Error {
             id: 0,
             code: error_code::HANDSHAKE,
             detail: format!(
                 "params fingerprint mismatch: client {fingerprint:#018x}, \
-                 {who} {ours:#018x}"
+                 {who} serves [{served}]"
             ),
         });
     }
-    Ok(Message::HelloAck { version, fingerprint: ours })
+    Ok(Message::HelloAck { version, fingerprint })
 }
 
 /// A ciphertext is only admissible if it lives on exactly the chain this
@@ -497,7 +554,11 @@ fn reader_loop(
         };
         match msg {
             Message::Hello { version, fingerprint } => {
-                match hello_reply(version, fingerprint, shared.fingerprint, "server") {
+                let mut ours = vec![shared.fingerprint];
+                if let Some(bfv) = &shared.bfv {
+                    ours.push(bfv.fingerprint);
+                }
+                match hello_reply(version, fingerprint, &ours, "server") {
                     Ok(ack) => send(ack),
                     Err(err) => {
                         send(err);

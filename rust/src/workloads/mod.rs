@@ -12,6 +12,8 @@
 use crate::codegen::{Backend, Compiler, SimParams};
 use crate::isa::Trace;
 
+pub mod pir;
+
 /// Table V rows.
 #[derive(Debug, Clone, Copy)]
 pub struct WorkloadParams {

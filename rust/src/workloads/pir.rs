@@ -1,0 +1,194 @@
+//! Encrypted-aggregation / PIR-style lookup over BFV (wire v8).
+//!
+//! The shape: a data owner uploads an **encrypted table** — one BFV
+//! ciphertext whose `n` slots hold the table entries mod `t`. A querying
+//! client encrypts a **one-hot selector** over the same slot layout and
+//! asks the server for the dot product. The server — holding only public
+//! evaluation keys — computes
+//!
+//! ```text
+//! acc = selector * table            (exact BEHZ multiply)
+//! acc += swap_rows(acc)             (fold the two batching rows)
+//! acc += rotate(acc, k)  for k = 1, 2, ..., n/4   (rotate-and-sum)
+//! ```
+//!
+//! after which **every** slot holds `table[index]` and the client
+//! decrypts any one of them. The server never learns the index (it is
+//! encrypted) nor the table values (they are encrypted too): this is the
+//! aggregation kernel of index-private retrieval, running entirely on
+//! ops a BFV engine admits over the wire (`BfvMul`, `Rotate`,
+//! `Conjugate`, `Add`) — so the same query runs against a local
+//! [`BfvEvaluator`], a single `fhecore-serve` node, or a sharded cluster
+//! behind the gateway, bit-identically.
+//!
+//! Everything is exact: the returned slot equals
+//! [`pir_reference`] — integer equality mod `t`, no tolerance.
+
+use crate::bfv::{BfvContext, BfvEncryptor, BfvEvaluator};
+use crate::ckks::{Ciphertext, MissingKey};
+use crate::util::rng::Pcg64;
+use crate::wire::{RemoteEvaluator, WireError};
+
+/// The op surface the rotate-and-sum lookup needs — implemented by the
+/// local [`BfvEvaluator`] and the wire [`RemoteEvaluator`], so one
+/// lookup routine serves both the reference path and the cluster path.
+pub trait PirEngine {
+    type Error: std::fmt::Debug;
+    /// Exact slot-wise product (BEHZ multiply + relinearization).
+    fn pir_mul(&self, a: &Ciphertext, b: &Ciphertext) -> Result<Ciphertext, Self::Error>;
+    /// Exact slot-wise sum.
+    fn pir_add(&self, a: &Ciphertext, b: &Ciphertext) -> Result<Ciphertext, Self::Error>;
+    /// Rotate both batching rows left by `k` columns.
+    fn pir_rotate(&self, a: &Ciphertext, k: usize) -> Result<Ciphertext, Self::Error>;
+    /// Swap the two batching rows.
+    fn pir_swap_rows(&self, a: &Ciphertext) -> Result<Ciphertext, Self::Error>;
+}
+
+impl PirEngine for BfvEvaluator {
+    type Error = MissingKey;
+    fn pir_mul(&self, a: &Ciphertext, b: &Ciphertext) -> Result<Ciphertext, MissingKey> {
+        self.mul(a, b)
+    }
+    fn pir_add(&self, a: &Ciphertext, b: &Ciphertext) -> Result<Ciphertext, MissingKey> {
+        Ok(self.add(a, b))
+    }
+    fn pir_rotate(&self, a: &Ciphertext, k: usize) -> Result<Ciphertext, MissingKey> {
+        self.rotate_rows(a, k)
+    }
+    fn pir_swap_rows(&self, a: &Ciphertext) -> Result<Ciphertext, MissingKey> {
+        self.swap_rows(a)
+    }
+}
+
+impl PirEngine for RemoteEvaluator {
+    type Error = WireError;
+    fn pir_mul(&self, a: &Ciphertext, b: &Ciphertext) -> Result<Ciphertext, WireError> {
+        self.bfv_mul(a, b)
+    }
+    fn pir_add(&self, a: &Ciphertext, b: &Ciphertext) -> Result<Ciphertext, WireError> {
+        self.add(a, b)
+    }
+    fn pir_rotate(&self, a: &Ciphertext, k: usize) -> Result<Ciphertext, WireError> {
+        self.rotate(a, k)
+    }
+    fn pir_swap_rows(&self, a: &Ciphertext) -> Result<Ciphertext, WireError> {
+        self.conjugate(a)
+    }
+}
+
+/// Encrypt a table of integers (one slot each, `values.len() <= n`) —
+/// the data-owner side of the workload. Unused slots are zero, which is
+/// absorbing under the selector product.
+pub fn encrypt_table(
+    ctx: &BfvContext,
+    enc: &BfvEncryptor,
+    values: &[i64],
+    rng: &mut Pcg64,
+) -> Ciphertext {
+    assert!(values.len() <= ctx.params.slots(), "table larger than the slot count");
+    enc.encrypt_slots(ctx, values, rng)
+}
+
+/// Encrypt the one-hot selector for `index` — the querying-client side.
+/// The index never leaves the client in the clear.
+pub fn encrypt_selector(
+    ctx: &BfvContext,
+    enc: &BfvEncryptor,
+    index: usize,
+    rng: &mut Pcg64,
+) -> Ciphertext {
+    let slots = ctx.params.slots();
+    assert!(index < slots, "selector index out of range");
+    let mut sel = vec![0i64; slots];
+    sel[index] = 1;
+    enc.encrypt_slots(ctx, &sel, rng)
+}
+
+/// The server-side lookup: selector–table product, then the full
+/// rotate-and-sum reduction (row swap + log2(n/2) rotations). Every slot
+/// of the result holds `table[index] mod t`, exactly. `slots` is the BFV
+/// slot count `n`.
+pub fn pir_lookup<E: PirEngine>(
+    engine: &E,
+    selector: &Ciphertext,
+    table: &Ciphertext,
+    slots: usize,
+) -> Result<Ciphertext, E::Error> {
+    assert!(slots.is_power_of_two() && slots >= 2);
+    let mut acc = engine.pir_mul(selector, table)?;
+    // Fold row 1 onto row 0 (and vice versa): after this, column j holds
+    // the sum of both rows' column j.
+    let swapped = engine.pir_swap_rows(&acc)?;
+    acc = engine.pir_add(&acc, &swapped)?;
+    // Rotate-and-sum within the rows: doubling strides cover all n/2
+    // columns in log2(n/2) rounds — the same power-of-two orbit
+    // `rotate_and_sum_steps` declares keys for.
+    let half = slots / 2;
+    let mut k = 1usize;
+    while k < half {
+        let rot = engine.pir_rotate(&acc, k)?;
+        acc = engine.pir_add(&acc, &rot)?;
+        k <<= 1;
+    }
+    Ok(acc)
+}
+
+/// The plaintext reference the encrypted lookup must match exactly:
+/// `table[index] mod t` (entries outside the table read as 0).
+pub fn pir_reference(table: &[i64], index: usize, t: u64) -> u64 {
+    table
+        .get(index)
+        .map(|&v| v.rem_euclid(t as i64) as u64)
+        .unwrap_or(0)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::bfv::{BfvKeyGen, BfvParams};
+    use std::sync::Arc;
+
+    #[test]
+    fn local_lookup_is_exact_at_every_index() {
+        let ctx = BfvContext::new(BfvParams::toy());
+        let mut rng = Pcg64::new(0x91B);
+        let kg = BfvKeyGen::new(&ctx, &mut rng);
+        let keys = Arc::new(kg.eval_key_set(&ctx, &ctx.serving_spec(), &mut rng));
+        let ev = BfvEvaluator::new(&ctx, keys);
+        let enc = kg.encryptor();
+        let dec = kg.decryptor();
+        let t = ctx.t();
+        let slots = ctx.params.slots();
+        let table: Vec<i64> = (0..slots as i64).map(|i| (i * 104729 + 17) % t as i64).collect();
+        let table_ct = encrypt_table(&ctx, &enc, &table, &mut rng);
+        // A spread of indices including both batching rows and the edges.
+        for index in [0usize, 1, slots / 2 - 1, slots / 2, slots - 1] {
+            let sel = encrypt_selector(&ctx, &enc, index, &mut rng);
+            let out = pir_lookup(&ev, &sel, &table_ct, slots).unwrap();
+            let back = dec.decrypt_slots(&ctx, &out);
+            let want = pir_reference(&table, index, t);
+            // Every slot carries the answer — check them all.
+            assert!(
+                back.iter().all(|&v| v == want),
+                "index {index}: got {:?}..., want {want}",
+                &back[..4]
+            );
+        }
+    }
+
+    #[test]
+    fn lookup_leaves_positive_noise_budget() {
+        let ctx = BfvContext::new(BfvParams::toy());
+        let mut rng = Pcg64::new(0x91C);
+        let kg = BfvKeyGen::new(&ctx, &mut rng);
+        let keys = Arc::new(kg.eval_key_set(&ctx, &ctx.serving_spec(), &mut rng));
+        let ev = BfvEvaluator::new(&ctx, keys);
+        let enc = kg.encryptor();
+        let table: Vec<i64> = (0..ctx.params.slots() as i64).collect();
+        let table_ct = encrypt_table(&ctx, &enc, &table, &mut rng);
+        let sel = encrypt_selector(&ctx, &enc, 3, &mut rng);
+        let out = pir_lookup(&ev, &sel, &table_ct, ctx.params.slots()).unwrap();
+        let budget = kg.decryptor().noise_budget(&ctx, &out);
+        assert!(budget > 10.0, "post-lookup budget {budget}");
+    }
+}

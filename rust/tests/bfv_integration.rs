@@ -1,0 +1,266 @@
+//! BFV end-to-end over real loopback TCP (wire v8): a BFV tenant against
+//! a single `wire::serve` node — bit-exact vs the local [`BfvEvaluator`]
+//! and **exactly** equal to the `Z_t` integer reference after decryption
+//! — then the PIR-style encrypted lookup through the 2-shard cluster
+//! gateway with a CKKS tenant resident on the same shards at the same
+//! time. Also pins the scheme-admission boundary: a CKKS session's
+//! `BfvMul` bounces with a typed error, never an engine assert.
+
+use std::net::TcpListener;
+use std::sync::Arc;
+use std::time::Duration;
+
+use fhecore::bfv::{BfvContext, BfvEvaluator, BfvKeyGen, BfvParams};
+use fhecore::ckks::params::{CkksContext, CkksParams};
+use fhecore::ckks::{EvalKeySpec, Evaluator, KeyGen};
+use fhecore::cluster::{
+    demo_workload, run_pipelined, serve_gateway, ClusterClient, ClusterOptions,
+    GatewayOptions,
+};
+use fhecore::coordinator::ServeConfig;
+use fhecore::util::rng::Pcg64;
+use fhecore::wire::{serve, RemoteEvaluator, ServeOptions, WireError};
+use fhecore::workloads::pir::{
+    encrypt_selector, encrypt_table, pir_lookup, pir_reference,
+};
+
+fn spawn_shard(params: CkksParams) -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = ServeOptions {
+        bfv: Some(BfvParams::matching(&params)),
+        params,
+        serve: ServeConfig {
+            fhec_workers: 2,
+            cuda_workers: 1,
+            max_batch: 4,
+            linger: Duration::from_millis(1),
+            max_queue: 64,
+        },
+        registry: Default::default(),
+        sched: Default::default(),
+        verbose: false,
+    };
+    let handle = std::thread::spawn(move || serve(listener, opts).expect("shard run"));
+    (addr, handle)
+}
+
+fn spawn_gateway(
+    params: CkksParams,
+    shards: Vec<String>,
+) -> (String, std::thread::JoinHandle<()>) {
+    let listener = TcpListener::bind("127.0.0.1:0").expect("bind gateway port");
+    let addr = listener.local_addr().unwrap().to_string();
+    let opts = GatewayOptions {
+        params,
+        shards,
+        cluster: ClusterOptions::default(),
+        verbose: false,
+    };
+    let handle =
+        std::thread::spawn(move || serve_gateway(listener, opts).expect("gateway run"));
+    (addr, handle)
+}
+
+struct BfvClient {
+    ctx: BfvContext,
+    kg: BfvKeyGen,
+    keys: Arc<fhecore::ckks::EvalKeySet>,
+    rng: Pcg64,
+}
+
+fn bfv_client(params: &CkksParams, seed: u64) -> BfvClient {
+    let ctx = BfvContext::new(BfvParams::matching(params));
+    let mut rng = Pcg64::new(seed);
+    let kg = BfvKeyGen::new(&ctx, &mut rng);
+    let keys = Arc::new(kg.eval_key_set(&ctx, &ctx.serving_spec(), &mut rng));
+    BfvClient { ctx, kg, keys, rng }
+}
+
+/// Single node: remote add / BEHZ multiply / row rotation bit-exact vs
+/// the local evaluator, exact integer decryption, and a strictly smaller
+/// noise budget after the multiply.
+#[test]
+fn bfv_single_node_ops_are_exact() {
+    let params = CkksParams::toy();
+    let (addr, shard) = spawn_shard(params.clone());
+    let mut c = bfv_client(&params, 0xBF_E2E);
+    let enc = c.kg.encryptor();
+    let dec = c.kg.decryptor();
+    let t = c.ctx.t();
+    let mt = c.ctx.tables.mt;
+    let slots = c.ctx.params.slots();
+
+    let remote =
+        RemoteEvaluator::connect_bfv_retry(&addr, c.ctx.params.clone(), Duration::from_secs(10))
+            .expect("BFV handshake against a dual-scheme node");
+    assert_eq!(remote.scheme(), fhecore::bfv::Scheme::Bfv);
+    let pushed = remote.push_keys(&c.keys).expect("push BFV keys");
+    assert_eq!(pushed as usize, c.keys.len());
+
+    let va: Vec<i64> = (0..slots as i64).map(|i| (i * 7919 + 3) % t as i64).collect();
+    let vb: Vec<i64> =
+        (0..slots as i64).map(|i| (t as i64 - 1 - i * 65537).rem_euclid(t as i64)).collect();
+    let ca = enc.encrypt_slots(&c.ctx, &va, &mut c.rng);
+    let cb = enc.encrypt_slots(&c.ctx, &vb, &mut c.rng);
+    let fresh_budget = dec.noise_budget(&c.ctx, &ca);
+
+    let sum = remote.add(&ca, &cb).expect("remote add");
+    let prod = remote.bfv_mul(&ca, &cb).expect("remote BEHZ multiply");
+    let rot = remote.rotate(&prod, 1).expect("remote row rotation");
+
+    // Bit-exact vs the local evaluator over the identical key set.
+    let ev = BfvEvaluator::new(&c.ctx, c.keys.clone());
+    assert_eq!(sum, ev.add(&ca, &cb), "add must be bit-exact");
+    let want_prod = ev.mul(&ca, &cb).expect("local multiply");
+    assert_eq!(prod, want_prod, "multiply must be bit-exact");
+    assert_eq!(
+        rot,
+        ev.rotate_rows(&want_prod, 1).expect("local rotation"),
+        "rotation must be bit-exact"
+    );
+
+    // Exact integer results — no tolerance.
+    let back_sum = dec.decrypt_slots(&c.ctx, &sum);
+    let back_prod = dec.decrypt_slots(&c.ctx, &prod);
+    for j in 0..slots {
+        let (a, b) = (va[j] as u64, vb[j] as u64);
+        assert_eq!(back_sum[j], mt.add(a, b), "sum slot {j}");
+        assert_eq!(back_prod[j], mt.mul(a, b), "prod slot {j}");
+    }
+
+    // The multiply consumed budget but decryption still succeeds.
+    let after = dec.noise_budget(&c.ctx, &prod);
+    assert!(after < fresh_budget, "multiply must consume budget ({fresh_budget} -> {after})");
+    assert!(after > 0.0, "budget exhausted at toy params");
+
+    remote.shutdown().expect("shutdown");
+    shard.join().expect("shard exits");
+}
+
+/// The scheme boundary over the wire: a CKKS session sending `BfvMul`
+/// gets the typed admission rejection, and the connection survives to
+/// serve the next (admissible) op.
+#[test]
+fn ckks_session_bfv_mul_is_rejected_typed() {
+    let params = CkksParams::toy();
+    let (addr, shard) = spawn_shard(params.clone());
+
+    let ctx = CkksContext::new(params.clone());
+    let mut rng = Pcg64::new(0x5C4E);
+    let kg = KeyGen::new(&ctx, &mut rng);
+    let keys = Arc::new(kg.eval_key_set(&ctx, &EvalKeySpec::relin_only(), &mut rng));
+    let remote = RemoteEvaluator::connect_retry(&addr, params.clone(), Duration::from_secs(10))
+        .expect("CKKS connect");
+    remote.push_keys(&keys).expect("push CKKS keys");
+
+    let z = vec![fhecore::ckks::encoding::Complex::new(0.25, 0.0); ctx.params.slots()];
+    let ct = kg.encryptor().encrypt_slots(&ctx, &z, ctx.max_level(), &mut rng);
+    let err = remote.bfv_mul(&ct, &ct).expect_err("CKKS engine must reject BfvMul");
+    match err {
+        WireError::Remote { detail, .. } => {
+            assert!(detail.contains("BFV"), "rejection names the scheme: {detail}")
+        }
+        other => panic!("expected a typed remote rejection, got {other:?}"),
+    }
+    // The session is still usable.
+    let sq = remote.mul(&ct, &ct).expect("admissible op after rejection");
+    assert_eq!(sq, Evaluator::new(CkksContext::new(params), keys).mul(&ct, &ct).unwrap());
+
+    remote.shutdown().expect("shutdown");
+    shard.join().expect("shard exits");
+}
+
+/// The tentpole acceptance path: a 2-shard cluster behind the gateway
+/// serving a CKKS tenant and a BFV tenant **simultaneously** — CKKS runs
+/// the pipelined demo workload bit-exact while the BFV tenant runs the
+/// PIR-style encrypted lookup through the same gateway, exact at every
+/// probed index, with key replication proven by direct shard queries.
+#[test]
+fn pir_over_two_shard_cluster_with_ckks_tenant_resident() {
+    let params = CkksParams::toy();
+    let (addr_a, shard_a) = spawn_shard(params.clone());
+    let (addr_b, shard_b) = spawn_shard(params.clone());
+    let (gw_addr, gateway) =
+        spawn_gateway(params.clone(), vec![addr_a.clone(), addr_b.clone()]);
+
+    // CKKS tenant through the gateway.
+    let ctx = CkksContext::new(params.clone());
+    let mut rng = Pcg64::new(0xC0FFEE);
+    let kg = KeyGen::new(&ctx, &mut rng);
+    let ckks_keys = Arc::new(kg.eval_key_set(
+        &ctx,
+        &EvalKeySpec::relin_only().with_rotations(&[3]),
+        &mut rng,
+    ));
+    let cluster =
+        ClusterClient::connect(&[gw_addr.clone()], params.clone(), ClusterOptions::default())
+            .expect("CKKS connect to gateway");
+    cluster.push_keys(&ckks_keys).expect("replicate CKKS keys");
+
+    // BFV tenant through the *same* gateway — different scheme, same
+    // ring shape, distinct fingerprint and tenant id.
+    let mut c = bfv_client(&params, 0xB1D);
+    let bfv_remote =
+        RemoteEvaluator::connect_bfv_retry(&gw_addr, c.ctx.params.clone(), Duration::from_secs(10))
+            .expect("BFV connect to gateway");
+    bfv_remote.push_keys(&c.keys).expect("replicate BFV keys through gateway");
+    assert_ne!(bfv_remote.tenant(), cluster.tenant(), "tenants must be distinct");
+
+    // CKKS workload first: pipelined, out of order, bit-exact.
+    let ev = Evaluator::new(CkksContext::new(params.clone()), ckks_keys.clone());
+    let wl = demo_workload(&ev, &kg.encryptor(), &mut rng, 12);
+    assert_eq!(
+        run_pipelined(&cluster, &wl).expect("CKKS workload"),
+        wl.expected,
+        "CKKS tenant must stay bit-exact with a BFV tenant resident"
+    );
+
+    // The encrypted lookup, served over the cluster: the gateway routes
+    // each op of the rotate-and-sum chain by request id, so both shards
+    // participate — correct only because the BFV keys replicated.
+    let enc = c.kg.encryptor();
+    let dec = c.kg.decryptor();
+    let t = c.ctx.t();
+    let slots = c.ctx.params.slots();
+    let table: Vec<i64> = (0..slots as i64).map(|i| (i * 104729 + 17) % t as i64).collect();
+    let table_ct = encrypt_table(&c.ctx, &enc, &table, &mut c.rng);
+    let local_ev = BfvEvaluator::new(&c.ctx, c.keys.clone());
+    for index in [0usize, 5, slots / 2, slots - 1] {
+        let sel = encrypt_selector(&c.ctx, &enc, index, &mut c.rng);
+        let got = pir_lookup(&bfv_remote, &sel, &table_ct, slots).expect("PIR via gateway");
+        let local = pir_lookup(&local_ev, &sel, &table_ct, slots).expect("PIR local");
+        assert_eq!(got, local, "index {index}: cluster PIR must be bit-exact vs local");
+        let back = dec.decrypt_slots(&c.ctx, &got);
+        let want = pir_reference(&table, index, t);
+        assert!(back.iter().all(|&v| v == want), "index {index}: every slot holds {want}");
+    }
+
+    // Both tenants keep working after the interleaving.
+    let again = demo_workload(&ev, &kg.encryptor(), &mut rng, 4);
+    assert_eq!(run_pipelined(&cluster, &again).expect("CKKS again"), again.expected);
+
+    // Replication proof: each shard serves the BFV tenant directly with
+    // no further PushKeys.
+    let sel = encrypt_selector(&c.ctx, &enc, 7, &mut c.rng);
+    let want = pir_lookup(&local_ev, &sel, &table_ct, slots).expect("PIR local");
+    for shard in [&addr_a, &addr_b] {
+        let direct = RemoteEvaluator::connect_bfv_retry(
+            shard,
+            c.ctx.params.clone(),
+            Duration::from_secs(10),
+        )
+        .expect("direct BFV shard connect");
+        direct.set_tenant(bfv_remote.tenant());
+        let got = pir_lookup(&direct, &sel, &table_ct, slots)
+            .expect("shard holds the replicated BFV keys");
+        assert_eq!(got, want, "shard {shard} PIR must be bit-exact");
+    }
+
+    let gw_client = RemoteEvaluator::connect_retry(&gw_addr, params, Duration::from_secs(10))
+        .expect("gateway client");
+    gw_client.shutdown().expect("shutdown via gateway");
+    gateway.join().expect("gateway exits");
+    shard_a.join().expect("shard a exits");
+    shard_b.join().expect("shard b exits");
+}

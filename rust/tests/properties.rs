@@ -134,6 +134,89 @@ fn prop_fhec_never_slower() {
 }
 
 #[test]
+fn prop_bfv_encoder_roundtrips_full_range() {
+    // CRT batching is a bijection Z_t^n <-> R_t: random slot vectors over
+    // the full plaintext range (including t-1 and negative
+    // representatives) survive encode/decode exactly, at every ring size
+    // the encoder serves.
+    use fhecore::bfv::BfvEncoder;
+    check("bfv-encoder-roundtrip", 24, |rng| {
+        let n = 1usize << (2 + rng.below(7)); // 4..256
+        let t = ntt_primes(n, 20, 1)[0];
+        let enc = BfvEncoder::new(n, t);
+        let vals: Vec<i64> = (0..n)
+            .map(|_| rng.below(2 * t) as i64 - t as i64) // [-t, t)
+            .collect();
+        let coeffs = enc.encode(&vals);
+        let back = enc.decode(&coeffs);
+        for (s, &v) in vals.iter().enumerate() {
+            assert_eq!(back[s], enc.reduce_signed(v), "n={n} slot {s}");
+        }
+        // Signed decode returns the centered representative of the same
+        // class.
+        let signed = enc.decode_signed(&coeffs);
+        for (s, &v) in signed.iter().enumerate() {
+            assert_eq!(enc.reduce_signed(v), back[s], "n={n} signed slot {s}");
+        }
+    });
+}
+
+#[test]
+fn prop_bfv_ops_exact_and_budget_monotone() {
+    // BFV's two core invariants at once: every homomorphic op decrypts to
+    // the exact Z_t reference on random slot vectors, and the measured
+    // invariant-noise budget never increases along an op chain (each op
+    // adds noise; none removes it).
+    use fhecore::bfv::{BfvContext, BfvEvaluator, BfvKeyGen, BfvParams};
+    use fhecore::util::rng::Pcg64;
+    use std::sync::Arc;
+
+    let ctx = BfvContext::new(BfvParams::toy());
+    let mut krng = Pcg64::new(0xB0D6E7);
+    let kg = BfvKeyGen::new(&ctx, &mut krng);
+    let keys = Arc::new(kg.eval_key_set(&ctx, &ctx.serving_spec(), &mut krng));
+    let ev = BfvEvaluator::new(&ctx, keys);
+    let enc = kg.encryptor();
+    let dec = kg.decryptor();
+    let t = ctx.t();
+    let mt = ctx.tables.mt;
+    let slots = ctx.params.slots();
+
+    check("bfv-exact-monotone", 6, |rng| {
+        let va: Vec<i64> = (0..slots).map(|_| rng.below(t) as i64).collect();
+        let vb: Vec<i64> = (0..slots).map(|_| rng.below(t) as i64).collect();
+        let mut crng = Pcg64::new(rng.below(u64::MAX));
+        let ca = enc.encrypt_slots(&ctx, &va, &mut crng);
+        let cb = enc.encrypt_slots(&ctx, &vb, &mut crng);
+        let fresh = dec.noise_budget(&ctx, &ca);
+
+        let sum = ev.add(&ca, &cb);
+        let prod = ev.mul(&ca, &cb).expect("relin key present");
+        let rot = ev.rotate_rows(&prod, 1).expect("rotation key present");
+        let back_sum = dec.decrypt_slots(&ctx, &sum);
+        let back_prod = dec.decrypt_slots(&ctx, &prod);
+        for j in 0..slots {
+            let (a, b) = (va[j] as u64, vb[j] as u64);
+            assert_eq!(back_sum[j], mt.add(a, b), "sum slot {j}");
+            assert_eq!(back_prod[j], mt.mul(a, b), "prod slot {j}");
+        }
+
+        // Budget ordering: fresh >= add >= mul >= mul-then-rotate > 0.
+        // Noise terms are signed, so the worst-coefficient measurement
+        // can cancel by a fraction of a bit — the half-bit slack absorbs
+        // that without weakening the trend; the multiply step must cost
+        // real bits (the tensor scales noise by ~ n*t).
+        let b_sum = dec.noise_budget(&ctx, &sum);
+        let b_prod = dec.noise_budget(&ctx, &prod);
+        let b_rot = dec.noise_budget(&ctx, &rot);
+        assert!(b_sum <= fresh + 0.5, "add must not gain budget ({fresh} -> {b_sum})");
+        assert!(b_prod < b_sum - 1.0, "mul must cost real bits ({b_sum} -> {b_prod})");
+        assert!(b_rot <= b_prod + 0.5, "key switch adds noise ({b_prod} -> {b_rot})");
+        assert!(b_rot > 0.0, "chain must stay decryptable at toy params");
+    });
+}
+
+#[test]
 fn prop_int8_segmentation_equivalence() {
     // Algorithm 1's Split/GEMM/Mid/GEMM/Merge == native modmatmul, for
     // random shapes and moduli.

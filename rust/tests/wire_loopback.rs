@@ -30,6 +30,7 @@ fn spawn_server_with(
     let listener = TcpListener::bind("127.0.0.1:0").expect("bind ephemeral port");
     let addr = listener.local_addr().unwrap().to_string();
     let opts = ServeOptions {
+        bfv: Some(fhecore::bfv::BfvParams::matching(&params)),
         params,
         serve: ServeConfig {
             fhec_workers: 2,

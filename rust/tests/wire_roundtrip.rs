@@ -236,6 +236,45 @@ fn fingerprint_mismatch_is_rejected() {
 }
 
 #[test]
+fn cross_scheme_key_blob_is_rejected_typed() {
+    // Wire v8: key blobs carry their scheme byte, and decoding enforces
+    // it *before* the fingerprint or payload — a CKKS engine handed a
+    // BFV-tagged blob (or vice versa) fails with the typed Scheme error,
+    // never a shape assert deeper in key expansion. This is the decode
+    // half of the server's cross-scheme PushKeys rejection.
+    use fhecore::bfv::Scheme;
+    use fhecore::wire::codec::{decode_eval_key_set_for, encode_eval_key_set_for};
+
+    let (ctx, kg, mut rng, fp) = toy_fixture();
+    let spec = EvalKeySpec::relin_only().at_levels(vec![ctx.max_level()]);
+    let keys = kg.eval_key_set(&ctx, &spec, &mut rng);
+
+    for (tag_as, decode_as) in [(Scheme::Bfv, Scheme::Ckks), (Scheme::Ckks, Scheme::Bfv)] {
+        let blob = encode_eval_key_set_for(&keys, fp, true, tag_as);
+        assert_eq!(fhecore::wire::peek_blob_scheme(&blob).unwrap(), tag_as);
+        match decode_eval_key_set_for(&ctx, &blob, fp, decode_as) {
+            Err(WireError::Scheme { got, want }) => {
+                assert_eq!(got, tag_as);
+                assert_eq!(want, decode_as);
+            }
+            other => panic!("{tag_as:?} blob on a {decode_as:?} engine: {other:?}"),
+        }
+    }
+
+    // The CKKS-default wrapper enforces the same boundary: a BFV-tagged
+    // blob never decodes through the legacy entry point.
+    let bfv_blob = encode_eval_key_set_for(&keys, fp, true, Scheme::Bfv);
+    assert!(matches!(
+        decode_eval_key_set(&ctx, &bfv_blob, fp),
+        Err(WireError::Scheme { got: Scheme::Bfv, want: Scheme::Ckks })
+    ));
+    // And a correctly-tagged blob still round-trips.
+    let ok = encode_eval_key_set_for(&keys, fp, true, Scheme::Bfv);
+    let back = decode_eval_key_set_for(&ctx, &ok, fp, Scheme::Bfv).unwrap();
+    assert_eq!(back.len(), keys.len());
+}
+
+#[test]
 fn eval_key_set_encoding_is_canonical() {
     // Same logical set -> same bytes, regardless of hash-map iteration
     // order (two independent generations with the same seed).
